@@ -1,0 +1,61 @@
+//! Adaptive window selection (paper §6 future work, implemented as an
+//! extension — `sketch::adaptive`): a bank of SW-AKDEs at geometric window
+//! sizes picks the largest window whose half-window density estimates
+//! agree, trading variance (long windows) against drift (short ones)
+//! automatically.
+//!
+//! The stream alternates long stationary phases with abrupt regime
+//! switches; we log which window the bank selects right after each switch
+//! and deep into each phase.
+//!
+//! ```bash
+//! cargo run --release --example adaptive_window
+//! ```
+
+use sublinear_sketch::lsh::srp::SrpLsh;
+use sublinear_sketch::sketch::adaptive::AdaptiveSwAkde;
+use sublinear_sketch::util::rng::Rng;
+
+fn main() {
+    let dim = 24;
+    let (rows, p) = (48, 4);
+    let mut rng = Rng::new(17);
+    let fam = SrpLsh::new(dim, rows * p, &mut rng);
+    let mut bank = AdaptiveSwAkde::new_srp(rows, p, 0.1, 128, 4, 0.3);
+    println!("window bank: {:?}", bank.windows());
+
+    // Four regimes of 1500 points each; centers far apart.
+    let centers: Vec<Vec<f32>> = (0..4)
+        .map(|_| (0..dim).map(|_| rng.gaussian_f32() * 6.0).collect())
+        .collect();
+    let mut probe: Vec<f32> = Vec::new();
+    let mut picks_early = Vec::new();
+    let mut picks_late = Vec::new();
+    for (r, c) in centers.iter().enumerate() {
+        for t in 0..1500 {
+            let x: Vec<f32> = c.iter().map(|v| v + 0.4 * rng.gaussian_f32()).collect();
+            if t == 10 {
+                probe = x.clone(); // a probe living in the CURRENT regime
+            }
+            bank.add(&fam, &x);
+            if t == 200 {
+                let (w, d) = bank.query(&fam, &probe);
+                println!("regime {r} t=200  (just after switch): window={w:<5} density={d:.3}");
+                picks_early.push(w);
+            }
+            if t == 1400 {
+                let (w, d) = bank.query(&fam, &probe);
+                println!("regime {r} t=1400 (deep in regime):    window={w:<5} density={d:.3}");
+                picks_late.push(w);
+            }
+        }
+    }
+    let early_avg: f64 = picks_early.iter().map(|&w| w as f64).sum::<f64>() / 4.0;
+    let late_avg: f64 = picks_late.iter().map(|&w| w as f64).sum::<f64>() / 4.0;
+    println!("\navg selected window: {early_avg:.0} after a switch vs {late_avg:.0} deep in a regime");
+    assert!(
+        late_avg >= early_avg,
+        "windows should lengthen as regimes stabilize"
+    );
+    println!("OK");
+}

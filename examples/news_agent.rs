@@ -1,0 +1,180 @@
+//! End-to-end driver: the paper's motivating "personalized news agent"
+//! (§1, Streaming Applications) on the full three-layer stack.
+//!
+//! A stream of 384-d news-like embeddings (topic mixtures with temporal
+//! drift) flows through the sharded coordinator. Concurrently, user
+//! interest profiles issue batched queries:
+//!   * S-ANN matches each profile to a relevant recent item — hashing and
+//!     re-ranking run through the AOT-compiled PJRT artifacts when
+//!     available (`--use-pjrt`, default on if artifacts exist);
+//!   * SW-AKDE tracks topical density over the sliding window so the
+//!     agent can detect when a user's topic is trending or fading.
+//!
+//! Reports ingest throughput, query latency percentiles, QPS, recall
+//! against brute force, and sketch memory vs raw stream size — the run
+//! recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```bash
+//! cargo run --release --example news_agent -- [--n 40000] [--no-pjrt]
+//! ```
+
+use std::time::Instant;
+
+use sublinear_sketch::baselines::ExactNn;
+use sublinear_sketch::cli::Args;
+use sublinear_sketch::coordinator::{
+    BatchPolicy, Batcher, KdeKernel, ServiceConfig, SketchService,
+};
+use sublinear_sketch::data::datasets;
+use sublinear_sketch::metrics::latency::{LatencyRecorder, Throughput};
+use sublinear_sketch::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let n = args.get_usize("n", 40_000)?;
+    let n_profiles = args.get_usize("profiles", 2_000)?;
+    let window = args.get_u64("window", 4_096)?;
+    let seed = args.get_u64("seed", 42)?;
+    let artifacts_exist = sublinear_sketch::runtime::Manifest::default_dir()
+        .join("manifest.json")
+        .exists();
+    let use_pjrt = !args.has("no-pjrt") && artifacts_exist;
+
+    println!("=== news agent: streaming ANN + sliding-window KDE ===");
+    let ds = datasets::news_like(n, seed);
+    let dim = ds.dim;
+    let stream = ds.points;
+
+    // User profiles: noisy copies of stream items (interests overlap news).
+    let mut rng = Rng::new(seed ^ 0xBEEF);
+    let profiles: Vec<Vec<f32>> = (0..n_profiles)
+        .map(|_| {
+            let base = &stream[rng.below(stream.len() as u64) as usize];
+            // 0.01/coord over 384 dims -> ~0.2 L2 perturbation: profiles sit
+            // inside the r = 0.6 ball of their anchor item.
+            let mut v: Vec<f32> = base.iter().map(|x| x + 0.01 * rng.gaussian_f32()).collect();
+            let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+            v.iter_mut().for_each(|x| *x /= norm);
+            v
+        })
+        .collect();
+
+    let mut cfg = ServiceConfig::default_for(dim, n);
+    cfg.shards = args.get_usize("shards", 4)?;
+    cfg.ann.eta = args.get_f64("eta", 0.35)?;
+    cfg.ann.r = 0.6; // L2 radius on the unit sphere (theta ~ 35 deg)
+    cfg.ann.c = 2.0;
+    cfg.ann.w = 2.4;
+    cfg.kde.kernel = KdeKernel::Angular;
+    cfg.kde.rows = 64;
+    cfg.kde.p = 4;
+    cfg.kde.window = window;
+    cfg.use_pjrt = use_pjrt;
+    println!(
+        "dim={dim} n={n} shards={} eta={} window={window} pjrt={use_pjrt}",
+        cfg.shards, cfg.ann.eta
+    );
+
+    let mut svc = SketchService::start(cfg)?;
+
+    // ---- Phase 1: ingest the stream, interleaving batched queries ------
+    let mut batcher: Batcher<Vec<f32>> = Batcher::new(BatchPolicy {
+        max_batch: args.get_usize("batch", 64)?,
+        max_wait: std::time::Duration::from_millis(5),
+    });
+    let mut ingest = Throughput::new();
+    let mut qlat = LatencyRecorder::new();
+    let mut qps = Throughput::new();
+    let mut answered = 0u64;
+    let mut issued = 0u64;
+    let t0 = Instant::now();
+    let mut profile_iter = profiles.iter().cycle();
+    let mut ingest_buf: Vec<Vec<f32>> = Vec::with_capacity(64);
+    for (i, item) in stream.iter().enumerate() {
+        // Inserts flow through the batched PJRT ingest (one projection
+        // GEMM per shard per flush) instead of per-item native hashing.
+        ingest_buf.push(item.clone());
+        if ingest_buf.len() >= 64 {
+            svc.insert_batch(std::mem::take(&mut ingest_buf));
+        }
+        ingest.add(1);
+        // Every ~8 items a user asks for a recommendation.
+        if i % 8 == 0 {
+            let q = profile_iter.next().unwrap().clone();
+            if let Some(batch) = batcher.push(q) {
+                issued += batch.len() as u64;
+                let ans = qlat.time(|| svc.query_batch(batch));
+                answered += ans.iter().filter(|a| a.is_some()).count() as u64;
+                qps.add(ans.len() as u64);
+            }
+        }
+        if batcher.deadline_due() {
+            let batch = batcher.flush();
+            issued += batch.len() as u64;
+            let ans = qlat.time(|| svc.query_batch(batch));
+            answered += ans.iter().filter(|a| a.is_some()).count() as u64;
+            qps.add(ans.len() as u64);
+        }
+    }
+    svc.insert_batch(std::mem::take(&mut ingest_buf));
+    let tail = batcher.flush();
+    if !tail.is_empty() {
+        issued += tail.len() as u64;
+        let ans = qlat.time(|| svc.query_batch(tail));
+        answered += ans.iter().filter(|a| a.is_some()).count() as u64;
+        qps.add(ans.len() as u64);
+    }
+    svc.flush();
+    println!("\n-- serving phase ({:.1}s wall) --", t0.elapsed().as_secs_f64());
+    println!("ingest:  {:.0} items/s ({} items)", ingest.per_second(), stream.len());
+    println!(
+        "queries: {issued} issued · {answered} matched ({:.1}%) · {:.0} q/s",
+        100.0 * answered as f64 / issued.max(1) as f64,
+        qps.per_second()
+    );
+    println!("latency: {}", qlat.summary());
+
+    // ---- Phase 2: recall vs brute force on the final state -------------
+    let sample: Vec<Vec<f32>> = profiles.iter().take(200).cloned().collect();
+    let answers = svc.query_batch(sample.clone());
+    let exact = ExactNn::from_points(dim, &stream);
+    let mut hits = 0;
+    let mut within = 0;
+    for (q, ans) in sample.iter().zip(&answers) {
+        let d_true = exact.nn_dist(q);
+        if let Some(a) = ans {
+            hits += 1;
+            if a.dist <= 2.0 * d_true.max(0.35) + 1e-6 {
+                within += 1;
+            }
+        }
+    }
+    println!("\n-- quality vs brute force (200 profiles) --");
+    println!(
+        "answered {hits}/200 · {within} within c*max(r, d_nn) of the true NN"
+    );
+
+    // ---- Phase 3: topical drift via sliding-window KDE ------------------
+    // Track one profile's topic density across the stream's drift.
+    let probe = profiles[0].clone();
+    let (sums, density) = svc.kde_batch(vec![probe]);
+    println!("\n-- topical density (window = last {window} items) --");
+    println!(
+        "profile[0]: windowed kernel-sum = {:.2}, density = {:.4}",
+        sums[0], density[0]
+    );
+
+    let stats = svc.stats();
+    let raw_mb = (stream.len() * dim * 4) as f64 / 1048576.0;
+    let sketch_mb = stats.sketch_bytes as f64 / 1048576.0;
+    println!("\n-- footprint --");
+    println!(
+        "stored {} of {} points · sketch {sketch_mb:.2} MB vs raw stream {raw_mb:.2} MB ({:.1}% compression)",
+        stats.stored_points,
+        stream.len(),
+        100.0 * sketch_mb / raw_mb
+    );
+    svc.shutdown();
+    println!("\nOK");
+    Ok(())
+}

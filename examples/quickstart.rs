@@ -1,0 +1,84 @@
+//! Quickstart: the two sketches in ~60 lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use sublinear_sketch::lsh::srp::SrpLsh;
+use sublinear_sketch::sketch::ann::{SAnn, SAnnConfig};
+use sublinear_sketch::sketch::SwAkde;
+use sublinear_sketch::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(7);
+    let dim = 16;
+
+    // ---------------------------------------------------------- S-ANN
+    // A streaming (c, r)-approximate near neighbor sketch that keeps only
+    // n^{1-eta} of the stream (Algorithm 1 / Theorem 3.1).
+    // Cluster noise is N(0, 0.2^2) per coordinate, so within-cluster
+    // distances concentrate near 0.2*sqrt(2*dim) ~ 1.1: set r above that.
+    let mut ann = SAnn::new(SAnnConfig {
+        dim,
+        n_max: 20_000, // stream upper bound
+        eta: 0.4,      // retention probability n^{-0.4}
+        r: 1.3,        // near radius
+        c: 2.0,        // approximation factor
+        w: 5.2,        // p-stable bucket width (4r)
+        l_cap: 64,
+        seed: 42,
+    });
+
+    // Stream: 20k points in loose clusters.
+    let centers: Vec<Vec<f32>> = (0..50)
+        .map(|_| (0..dim).map(|_| rng.gaussian_f32() * 4.0).collect())
+        .collect();
+    let stream: Vec<Vec<f32>> = (0..20_000)
+        .map(|_| {
+            let c = &centers[rng.below(50) as usize];
+            c.iter().map(|v| v + rng.gaussian_f32() * 0.2).collect()
+        })
+        .collect();
+    for p in &stream {
+        ann.insert(p); // the sketch samples internally
+    }
+    println!(
+        "S-ANN stored {} of {} points ({:.2}%), {} tables of k={} hashes",
+        ann.stored(),
+        stream.len(),
+        100.0 * ann.stored() as f64 / stream.len() as f64,
+        ann.params().l,
+        ann.params().k,
+    );
+
+    // Query near a cluster center: expect a hit within c*r.
+    let q: Vec<f32> = centers[0].iter().map(|v| v + 0.05).collect();
+    match ann.query(&q) {
+        Some((id, dist)) => println!("query -> point #{id} at distance {dist:.3} (<= c*r = 2.6)"),
+        None => println!("query -> NULL (no r-near neighbor survived sampling)"),
+    }
+
+    // ------------------------------------------------------- SW-AKDE
+    // Sliding-window KDE: RACE cells backed by exponential histograms
+    // (Algorithm 2 / Theorem 4.1). Window = last 1000 points.
+    let rows = 64;
+    let p = 8; // sharper kernel: background contributes (1/2)^8 per point
+    let fam = SrpLsh::new(dim, rows * p, &mut rng);
+    let mut kde = SwAkde::new_srp(rows, p, 0.1, 1000);
+    for x in &stream {
+        kde.add(&fam, x);
+    }
+    let dense_q = stream[stream.len() - 10].clone(); // recent: inside window
+    let sparse_q: Vec<f32> = dense_q.iter().map(|v| -v).collect(); // antipode
+    println!(
+        "SW-AKDE kernel-sum: near recent data = {:.1}, antipodal = {:.1} (window=1000)",
+        kde.query(&fam, &dense_q),
+        kde.query(&fam, &sparse_q),
+    );
+    println!(
+        "SW-AKDE memory: {:.1} KiB across {} occupied cells (vs {:.1} KiB raw window)",
+        kde.memory_bytes() as f64 / 1024.0,
+        kde.occupied_cells(),
+        (1000 * dim * 4) as f64 / 1024.0,
+    );
+}

@@ -1,0 +1,129 @@
+//! Turnstile-model demo (§3.4, Theorem 3.3): a dynamic catalog with
+//! insertions AND deletions, under the theorem's bounded-deletion
+//! assumption, audited by `DeletionBudget`.
+//!
+//! Scenario: an inventory of item embeddings; items churn (delisted and
+//! replaced). We verify that (c, r)-ANN accuracy survives as long as no
+//! r-ball loses more than d items, and show the audit flagging an
+//! adversarial hot-spot deletion burst.
+//!
+//! ```bash
+//! cargo run --release --example turnstile_churn
+//! ```
+
+use sublinear_sketch::baselines::ExactNn;
+use sublinear_sketch::metrics;
+use sublinear_sketch::sketch::ann::{SAnn, SAnnConfig};
+use sublinear_sketch::sketch::turnstile::DeletionBudget;
+use sublinear_sketch::util::rng::Rng;
+
+fn main() {
+    let dim = 24;
+    let n = 30_000;
+    // Cluster noise is 0.15/coord -> pairwise in-cluster distance ~1.04;
+    // r must cover it for the Poisson density assumption (m >= C n^eta).
+    let r = 1.2_f64;
+    let c = 2.0_f64;
+    let mut rng = Rng::new(11);
+
+    // Dense catalog: clusters so every query has r-near neighbors
+    // (m >= C n^eta in the theorem's terms).
+    let centers: Vec<Vec<f32>> = (0..80)
+        .map(|_| (0..dim).map(|_| rng.gaussian_f32() * 5.0).collect())
+        .collect();
+    let mut gen_item = |rng: &mut Rng| -> Vec<f32> {
+        let c = &centers[rng.below(80) as usize];
+        c.iter().map(|v| v + rng.gaussian_f32() * 0.15).collect()
+    };
+
+    let cfg = SAnnConfig { dim, n_max: n, eta: 0.3, r, c, w: 4.0 * r, l_cap: 32, seed: 5 };
+    let mut ann = SAnn::new(cfg.clone());
+    println!(
+        "turnstile S-ANN: n={n} eta={} keep-prob={:.4} (expected stored ~{:.0})",
+        cfg.eta,
+        ann.params().keep_prob,
+        ann.params().expected_stored()
+    );
+
+    // Phase 1: build the catalog, remembering what we inserted.
+    let mut live: Vec<Vec<f32>> = Vec::new();
+    for _ in 0..n {
+        let item = gen_item(&mut rng);
+        ann.insert(&item);
+        live.push(item);
+    }
+    println!("ingested {n} items, stored {}", ann.stored());
+
+    // Phase 2: churn under a per-ball deletion budget.
+    // mp = m * keep_prob; Theorem 3.3 needs d <= mp, and the churn volume
+    // must keep per-r-ball deletions under d — so we churn modestly.
+    let m_est = n as f64 / 80.0 * 0.9; // items per cluster within r
+    let mp = m_est * ann.params().keep_prob;
+    let d_max = (mp * 0.5).max(1.0) as u64;
+    let churn = 400usize;
+    println!("deletion budget per r-cell: d={d_max} (mp≈{mp:.1}), churning {churn}");
+    let mut budget = DeletionBudget::new(r, d_max);
+    let mut deleted_ok = 0u64;
+    for _ in 0..churn {
+        // delete a random live item and insert a fresh one (steady churn)
+        let idx = rng.below(live.len() as u64) as usize;
+        let victim = live.swap_remove(idx);
+        budget.record(&victim);
+        if ann.delete(&victim) {
+            deleted_ok += 1;
+        }
+        let item = gen_item(&mut rng);
+        ann.insert(&item);
+        live.push(item);
+    }
+    println!(
+        "churned {churn} items ({deleted_ok} hit stored copies) · worst r-cell lost {} · violations={}",
+        budget.worst_cell(),
+        budget.violations()
+    );
+
+    // Phase 3: accuracy after churn.
+    let exact = ExactNn::from_points(dim, &live);
+    let mut outcomes = Vec::new();
+    for _ in 0..500 {
+        let q = gen_item(&mut rng);
+        let ans = ann
+            .query(&q)
+            .map(|(id, _)| metrics::answer_distance(&q, ann.vector(id)));
+        outcomes.push(metrics::cr_outcome(&exact, &q, r as f32, c as f32, ans));
+    }
+    let acc = metrics::cr_accuracy(&outcomes);
+    println!("(c,r)-accuracy after churn: {acc:.3}");
+    let bound = ann
+        .params()
+        .failure_bound_turnstile(m_est, d_max as f64)
+        .min(1.0);
+    println!("Theorem 3.3 failure bound: {bound:.3} -> accuracy >= {:.3}", 1.0 - bound);
+
+    // Phase 4: adversarial burst — delete a whole cluster and watch the
+    // audit flag it (precondition of Theorem 3.3 violated).
+    let target = centers[0].clone();
+    let mut flagged = 0u64;
+    let mut i = 0;
+    while i < live.len() {
+        if sublinear_sketch::util::l2(&live[i], &target) <= r as f32 * 3.0 {
+            let victim = live.swap_remove(i);
+            if !budget.record(&victim) {
+                flagged += 1;
+            }
+            ann.delete(&victim);
+        } else {
+            i += 1;
+        }
+    }
+    println!(
+        "adversarial burst: audit flagged {flagged} over-budget deletions (violations={})",
+        budget.violations()
+    );
+    let q_hot: Vec<f32> = target.iter().map(|v| v + 0.05).collect();
+    match ann.query(&q_hot) {
+        Some((_, d)) => println!("query at emptied cluster -> point at {d:.2} (may exceed guarantees)"),
+        None => println!("query at emptied cluster -> NULL (as expected: its r-ball was emptied)"),
+    }
+    println!("OK");
+}

@@ -1,0 +1,115 @@
+"""AOT pipeline: lower every model variant to HLO *text* + manifest + goldens.
+
+HLO text (NOT ``lowered.compile()`` / ``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md and gen_hlo.py there.
+
+Outputs (under --out-dir, default ../artifacts):
+  <name>.hlo.txt   one per Variant in model.build_variants()
+  manifest.json    shape/dtype registry parsed by rust/src/runtime/manifest.rs
+  goldens.json     deterministic inputs + expected outputs for the tiny golden
+                   variants, checked by rust/tests/runtime_golden.rs
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+GOLDEN_SEED = 20260710
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def golden_inputs(variant, rng):
+    """Deterministic small inputs for a golden variant, shaped per its args."""
+    out = []
+    for a in variant.args:
+        if str(a.dtype) == "int32":
+            arr = rng.integers(-4, 5, size=a.shape).astype(np.int32)
+        else:
+            arr = rng.standard_normal(a.shape).astype(np.float32)
+            if a.shape == (1, 1):
+                # scalars (inv_w / w / p) must be positive and well-conditioned
+                arr = np.abs(arr) + np.float32(1.0)
+        out.append(arr)
+    # KDE data blocks: zero a couple of rows to exercise the padding mask.
+    if variant.kind.startswith("kde"):
+        out[1][-2:] = 0.0
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--only", default=None, help="comma-separated variant names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    variants = model.build_variants()
+    manifest = {"version": 1, "artifacts": []}
+    goldens = {"seed": GOLDEN_SEED, "cases": []}
+
+    for v in variants:
+        if only and v.name not in only:
+            continue
+        lowered = jax.jit(v.fn).lower(*v.args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{v.name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(v.manifest_entry())
+        print(f"lowered {v.name}: {len(text)} chars", file=sys.stderr)
+
+        if v.golden:
+            rng = np.random.default_rng(GOLDEN_SEED)
+            ins = golden_inputs(v, rng)
+            (out,) = jax.jit(v.fn)(*ins)
+            goldens["cases"].append(
+                {
+                    "name": v.name,
+                    "inputs": [
+                        {
+                            "shape": list(a.shape),
+                            "dtype": {"float32": "f32", "int32": "i32"}[str(a.dtype)],
+                            "data": np.asarray(a).reshape(-1).tolist(),
+                        }
+                        for a in ins
+                    ],
+                    "output": {
+                        "shape": list(out.shape),
+                        "dtype": {"float32": "f32", "int32": "i32"}[
+                            str(np.asarray(out).dtype)
+                        ],
+                        "data": np.asarray(out).reshape(-1).tolist(),
+                    },
+                }
+            )
+
+    if not only:
+        with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        with open(os.path.join(args.out_dir, "goldens.json"), "w") as f:
+            json.dump(goldens, f)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out_dir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

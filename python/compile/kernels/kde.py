@@ -1,0 +1,126 @@
+"""L1 Pallas kernel: fused exact LSH-kernel density (ground-truth oracle).
+
+The benches need the exact value of K(q) = sum_x k^p(x, q) (the quantity a
+RACE / SW-AKDE sketch estimates, CS20 Thm 2.3) to measure relative error.
+Computing it naively materializes a (Q, N) distance matrix; this kernel
+fuses distance -> collision-kernel -> row-sum, streaming data tiles through
+VMEM so only the (BQ,) partial sums persist across the N dimension.
+
+Grid: (Q/BQ, N/BN) with the output BlockSpec pinned to the Q axis; program
+(i, 0) zero-initializes the accumulator and every (i, j) adds its tile's
+contribution — the canonical Pallas reduction schedule (one HBM write per
+output tile instead of N/BN of them).
+
+Zero-norm data rows are treated as padding and contribute nothing, which is
+how the Rust runtime pads the final partial tile of a dataset.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matproj import pick_tile
+
+_SQRT2 = 1.4142135623730951
+_SQRT_2PI = 2.5066282746310002
+
+
+def _angular_tile(q, x, p):
+    qn = jnp.sqrt(jnp.sum(q * q, axis=-1, keepdims=True))
+    xn = jnp.sqrt(jnp.sum(x * x, axis=-1, keepdims=True))
+    valid = (xn[:, 0] > 0.0).astype(q.dtype)
+    cos = (q / jnp.maximum(qn, 1e-30)) @ (x / jnp.maximum(xn, 1e-30)).T
+    theta = jnp.arccos(jnp.clip(cos, -1.0, 1.0))
+    k = jnp.power(1.0 - theta / jnp.pi, p)
+    return jnp.sum(k * valid[None, :], axis=1)
+
+
+def _erf_pos(z):
+    """Abramowitz–Stegun 7.1.26 erf for z >= 0 (|err| < 1.5e-7).
+
+    Uses only mul/add/exp so the lowered HLO avoids the `erf` opcode, which
+    the xla_extension 0.5.1 text parser predates (see DESIGN.md §7).
+    """
+    a1, a2, a3, a4, a5 = 0.254829592, -0.284496736, 1.421413741, -1.453152027, 1.061405429
+    t = 1.0 / (1.0 + 0.3275911 * z)
+    poly = t * (a1 + t * (a2 + t * (a3 + t * (a4 + t * a5))))
+    return 1.0 - poly * jnp.exp(-z * z)
+
+
+def _pstable_tile(q, x, w, p):
+    qn2 = jnp.sum(q * q, axis=-1)
+    xn2 = jnp.sum(x * x, axis=-1)
+    valid = (xn2 > 0.0).astype(q.dtype)
+    d2 = qn2[:, None] + xn2[None, :] - 2.0 * (q @ x.T)
+    dist = jnp.sqrt(jnp.maximum(d2, 0.0))
+    t = jnp.maximum(dist / w, 1e-30)
+    # Phi(-1/t) = 0.5 (1 + erf(-1/(t sqrt(2)))) = 0.5 (1 - erf_pos(1/(t sqrt2)))
+    phi = 0.5 * (1.0 - _erf_pos((1.0 / t) / _SQRT2))
+    prob = 1.0 - 2.0 * phi - (2.0 * t / _SQRT_2PI) * (1.0 - jnp.exp(-1.0 / (2.0 * t * t)))
+    prob = jnp.clip(prob, 0.0, 1.0)
+    prob = jnp.where(dist <= 0.0, 1.0, prob)
+    k = jnp.power(prob, p)
+    return jnp.sum(k * valid[None, :], axis=1)
+
+
+def _kde_angular_kernel(q_ref, x_ref, p_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += _angular_tile(q_ref[...], x_ref[...], p_ref[0, 0])
+
+
+def _kde_pstable_kernel(q_ref, x_ref, w_ref, p_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += _pstable_tile(q_ref[...], x_ref[...], w_ref[0, 0], p_ref[0, 0])
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bn"))
+def kde_angular(queries, data, p, bq=None, bn=None):
+    """f32[Q] exact angular LSH-kernel density — see ref.kde_angular."""
+    qcount, d = queries.shape
+    n = data.shape[0]
+    bq = bq or pick_tile(qcount, cap=64)
+    bn = bn or pick_tile(n, cap=128)
+    grid = (qcount // bq, n // bn)
+    return pl.pallas_call(
+        _kde_angular_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((qcount,), jnp.float32),
+        interpret=True,
+    )(queries, data, p)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bn"))
+def kde_pstable(queries, data, w, p, bq=None, bn=None):
+    """f32[Q] exact p-stable LSH-kernel density — see ref.kde_pstable."""
+    qcount, d = queries.shape
+    n = data.shape[0]
+    bq = bq or pick_tile(qcount, cap=64)
+    bn = bn or pick_tile(n, cap=128)
+    grid = (qcount // bq, n // bn)
+    return pl.pallas_call(
+        _kde_pstable_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((qcount,), jnp.float32),
+        interpret=True,
+    )(queries, data, w, p)

@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: per-query candidate re-ranking distances.
+
+Each S-ANN query probes L buckets and collects at most 3L candidates
+(Algorithm 1); the coordinator pads them to a fixed C and re-ranks with this
+kernel. The distance uses the MXU-friendly decomposition
+``|q - c|^2 = |q|^2 + |c|^2 - 2 q.c`` so the inner loop is a (C, d) x (d,)
+GEMV per query block rather than a broadcast-subtract (which would
+materialize a (BM, C, d) temporary in VMEM).
+
+Grid: one program per query tile. A (BM, C, d) candidate tile at the largest
+variant (BM=8, C=256, d=784) is 8*256*784*4 = 6.3 MiB, so BM is capped by an
+explicit VMEM budget below rather than by the generic tile picker.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matproj import pick_tile
+
+# Soft per-instance VMEM budget (bytes) used to choose the query-tile size.
+VMEM_BUDGET = 4 * 1024 * 1024
+
+
+def _rerank_kernel(q_ref, c_ref, o_ref):
+    q = q_ref[...]  # (BM, d)
+    c = c_ref[...]  # (BM, C, d)
+    qn = jnp.sum(q * q, axis=-1)  # (BM,)
+    cn = jnp.sum(c * c, axis=-1)  # (BM, C)
+    # Batched GEMV: cross[b, j] = c[b, j, :] . q[b, :]
+    cross = jnp.einsum("bjd,bd->bj", c, q)
+    d2 = qn[:, None] + cn - 2.0 * cross
+    o_ref[...] = jnp.maximum(d2, 0.0)
+
+
+def _dist_matrix_kernel(q_ref, x_ref, o_ref):
+    qv = q_ref[...]  # (BQ, d)
+    xv = x_ref[...]  # (BP, d)
+    qn = jnp.sum(qv * qv, axis=-1)
+    xn = jnp.sum(xv * xv, axis=-1)
+    cross = jnp.dot(qv, xv.T, preferred_element_type=jnp.float32)  # true GEMM
+    o_ref[...] = jnp.maximum(qn[:, None] + xn[None, :] - 2.0 * cross, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bp"))
+def dist_matrix(queries, pool, bq=None, bp=None):
+    """f32[Q, P] squared distances between every query and a shared
+    candidate pool — the serving-path re-rank primitive.
+
+    Batched queries gathered from the same LSH tables share candidates
+    heavily, so one Q×P GEMM (MXU-native) replaces Q independent GEMVs:
+    measured 23ms -> ~3ms on the CPU backend for the 256-query batch, and
+    on TPU it is a plain matmul instead of a batched GEMV (DESIGN.md §8,
+    EXPERIMENTS.md §Perf iteration 1).
+    """
+    q, d = queries.shape
+    p = pool.shape[0]
+    # Large single-block tiles: at the artifact shape (256, 512, d<=784)
+    # the VMEM estimate (bq*d + bp*d + bq*bp)*4B stays under ~2.8 MiB, and
+    # interpret-mode grid steps cost a block copy each — fewer is faster
+    # (measured 4.3ms at 128x128 tiles vs 1.6ms single-block; §Perf it 3).
+    bq = bq or pick_tile(q, cap=256)
+    bp = bp or pick_tile(p, cap=512)
+    grid = (q // bq, p // bp)
+    return pl.pallas_call(
+        _dist_matrix_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bp, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, bp), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((q, p), jnp.float32),
+        interpret=True,
+    )(queries, pool)
+
+
+def rerank_tile(b, c, d):
+    """Query-tile size honoring the VMEM budget for the candidate block."""
+    per_query = c * d * 4
+    cap = max(1, VMEM_BUDGET // max(per_query, 1))
+    return pick_tile(b, cap=min(cap, 128))
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def rerank_l2(queries, cands, bm=None):
+    """f32[B, C] squared L2 distances — see ref.rerank_l2."""
+    b, d = queries.shape
+    c = cands.shape[1]
+    bm = bm or rerank_tile(b, c, d)
+    grid = (b // bm,)
+    return pl.pallas_call(
+        _rerank_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((bm, c, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c), jnp.float32),
+        interpret=True,
+    )(queries, cands)

@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: tiled projection GEMM with hashing epilogues.
+
+Both LSH families used by the paper reduce to the same hot spot — a dense
+projection `x @ proj` over the query/insert batch — followed by a cheap
+elementwise epilogue (floor-divide for p-stable, sign for SRP). On TPU the
+GEMM maps onto the MXU; the epilogue runs on the VPU inside the same kernel
+so hash slots never round-trip through HBM as f32.
+
+Tiling: grid over (B/BM, H/BN); the full contraction dim d stays resident in
+VMEM (d <= 784 in every artifact variant, so an x-tile of (128, 784) f32 is
+~392 KiB and a proj-tile of (784, 128) another ~392 KiB — comfortably inside
+a ~4 MiB VMEM budget; see DESIGN.md §8).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered through the Pallas interpreter into
+plain HLO. Structure (not wall-clock) is what we optimize at this layer.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_TILE_CHOICES = (512, 256, 128, 64, 32, 16, 8, 4, 2, 1)
+
+
+def pick_tile(n, cap=128):
+    """Largest power-of-two tile <= cap that divides n (n is a concrete int)."""
+    for t in _TILE_CHOICES:
+        if t <= cap and n % t == 0:
+            return t
+    return 1
+
+
+def _pstable_kernel(x_ref, proj_ref, bias_ref, inv_w_ref, o_ref):
+    acc = jnp.dot(x_ref[...], proj_ref[...], preferred_element_type=jnp.float32)
+    acc = (acc + bias_ref[...]) * inv_w_ref[0, 0]
+    o_ref[...] = jnp.floor(acc).astype(jnp.int32)
+
+
+def _srp_kernel(x_ref, proj_ref, o_ref):
+    acc = jnp.dot(x_ref[...], proj_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = (acc >= 0.0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def pstable_hash(x, proj, bias, inv_w, bm=None, bn=None):
+    """floor((x @ proj + bias) * inv_w) as i32[B, H] — see ref.pstable_hash."""
+    b, d = x.shape
+    h = proj.shape[1]
+    bm = bm or pick_tile(b)
+    bn = bn or pick_tile(h)
+    grid = (b // bm, h // bn)
+    return pl.pallas_call(
+        _pstable_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, h), jnp.int32),
+        interpret=True,
+    )(x, proj, bias.reshape(1, h), inv_w)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def srp_hash(x, proj, bm=None, bn=None):
+    """(x @ proj >= 0) as i32[B, H] — see ref.srp_hash."""
+    b, d = x.shape
+    h = proj.shape[1]
+    bm = bm or pick_tile(b)
+    bn = bn or pick_tile(h)
+    grid = (b // bm, h // bn)
+    return pl.pallas_call(
+        _srp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, h), jnp.int32),
+        interpret=True,
+    )(x, proj)

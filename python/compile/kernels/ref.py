@@ -1,0 +1,134 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: the Pallas kernels in this package
+must match them bit-for-bit (integer outputs) or to float tolerance under
+pytest + hypothesis sweeps (see python/tests/test_kernels.py).
+"""
+
+import jax.numpy as jnp
+from jax.scipy.special import erf
+
+_SQRT2 = 1.4142135623730951
+_SQRT_2PI = 2.5066282746310002
+
+
+def pstable_hash(x, proj, bias, inv_w):
+    """p-stable (Euclidean, DIIM04) hash slots: floor((x @ proj + b) * inv_w).
+
+    Args:
+      x:     f32[B, d]  input points.
+      proj:  f32[d, H]  gaussian projection directions (one column per hash).
+      bias:  f32[H]     uniform offsets in [0, w).
+      inv_w: f32[1, 1]  reciprocal bucket width.
+
+    Returns:
+      i32[B, H] raw (un-concatenated) hash slots; the coordinator packs k
+      consecutive slots into one table key.
+    """
+    return jnp.floor((x @ proj + bias[None, :]) * inv_w).astype(jnp.int32)
+
+
+def srp_hash(x, proj):
+    """Sign-random-projection (angular, Cha02) hash bits.
+
+    Returns i32[B, H] in {0, 1}; the coordinator packs k bits per table key.
+    """
+    return (x @ proj >= 0.0).astype(jnp.int32)
+
+
+def rerank_l2(queries, cands):
+    """Pairwise squared L2 between each query and its own candidate row.
+
+    Args:
+      queries: f32[B, d]
+      cands:   f32[B, C, d]  per-query candidate vectors (padded rows allowed;
+               the caller masks them out of the argmin).
+
+    Returns:
+      f32[B, C] squared distances.
+    """
+    diff = cands - queries[:, None, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def dist_matrix(queries, pool):
+    """Pairwise squared L2 between queries [Q, d] and a shared pool [P, d]."""
+    qn = jnp.sum(queries * queries, axis=1)
+    pn = jnp.sum(pool * pool, axis=1)
+    cross = queries @ pool.T
+    return jnp.maximum(qn[:, None] + pn[None, :] - 2.0 * cross, 0.0)
+
+
+def angular_collision_kernel(cos, p):
+    """SRP collision probability (1 - theta/pi)^p for cosine similarity cos."""
+    theta = jnp.arccos(jnp.clip(cos, -1.0, 1.0))
+    return jnp.power(1.0 - theta / jnp.pi, p)
+
+
+def kde_angular(queries, data, p):
+    """Exact LSH-kernel density for the angular (SRP) kernel.
+
+    K(q) = sum_x (1 - theta(q, x)/pi)^p — the quantity a RACE/SW-AKDE sketch
+    with p concatenated SRP hashes estimates (CS20 Thm 2.3).
+
+    Zero-norm rows of `data` are treated as padding and contribute 0.
+
+    Args:
+      queries: f32[Q, d]
+      data:    f32[N, d]
+      p:       f32[1, 1] concatenation count (integer-valued float).
+
+    Returns:
+      f32[Q] un-normalized kernel density (caller divides by live count).
+    """
+    qn = jnp.linalg.norm(queries, axis=1, keepdims=True)
+    xn = jnp.linalg.norm(data, axis=1, keepdims=True)
+    valid = (xn[:, 0] > 0.0).astype(queries.dtype)
+    cos = (queries / jnp.maximum(qn, 1e-30)) @ (data / jnp.maximum(xn, 1e-30)).T
+    k = angular_collision_kernel(cos, p[0, 0])
+    return jnp.sum(k * valid[None, :], axis=1)
+
+
+def _norm_cdf(z):
+    return 0.5 * (1.0 + erf(z / _SQRT2))
+
+
+def pstable_collision_kernel(dist, w, p):
+    """p-stable (gaussian) LSH collision probability at L2 distance `dist`.
+
+    For bucket width w and normalized distance t = dist / w (DIIM04):
+      P(t) = 1 - 2 Phi(-1/t) - (2 t / sqrt(2 pi)) (1 - exp(-1/(2 t^2)))
+    raised to the p-th power for p concatenated hashes. P(0) = 1.
+    """
+    t = jnp.maximum(dist / w, 1e-30)
+    prob = (
+        1.0
+        - 2.0 * _norm_cdf(-1.0 / t)
+        - (2.0 * t / _SQRT_2PI) * (1.0 - jnp.exp(-1.0 / (2.0 * t * t)))
+    )
+    prob = jnp.clip(prob, 0.0, 1.0)
+    prob = jnp.where(dist <= 0.0, 1.0, prob)
+    return jnp.power(prob, p)
+
+
+def kde_pstable(queries, data, w, p):
+    """Exact LSH-kernel density for the p-stable (Euclidean) kernel.
+
+    Zero-norm rows of `data` are padding and contribute 0.
+
+    Args:
+      queries: f32[Q, d]
+      data:    f32[N, d]
+      w:       f32[1, 1] bucket width.
+      p:       f32[1, 1] concatenation count.
+
+    Returns:
+      f32[Q]
+    """
+    xn2 = jnp.sum(data * data, axis=1)
+    valid = (xn2 > 0.0).astype(queries.dtype)
+    qn2 = jnp.sum(queries * queries, axis=1)
+    d2 = qn2[:, None] + xn2[None, :] - 2.0 * (queries @ data.T)
+    dist = jnp.sqrt(jnp.maximum(d2, 0.0))
+    k = pstable_collision_kernel(dist, w[0, 0], p[0, 0])
+    return jnp.sum(k * valid[None, :], axis=1)

@@ -1,0 +1,161 @@
+"""L2: the compute graphs the Rust coordinator calls through PJRT.
+
+Each entry in VARIANTS is one AOT artifact: a jitted function closed over
+concrete shapes, lowered once by aot.py to HLO text. The functions assemble
+the L1 Pallas kernels (python/compile/kernels/) and nothing else — no
+parameters are baked in; projection matrices, biases and scalars arrive as
+runtime inputs so the Rust native path and the artifact path share the exact
+same randomness (generated Rust-side, see rust/src/util/rng.rs).
+
+Shape conventions (see DESIGN.md §6):
+  B = insert/query batch (padded by the coordinator)   default 256
+  H = hash slots per call (k*L capped, coordinator loops)  default 512
+  C = candidate slots per query (3L padded)             default 256
+  Q = KDE query tile                                    default 64
+  N = KDE data tile (streamed by the coordinator)       default 4096
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import kde, l2dist, matproj
+
+# Dims used by the paper's experiments (originals in parentheses):
+#   32  syn-32            128 sift1m-like        784 fashion-mnist-like
+#   103 ROSIS-like        200 KDE Monte-Carlo    384 news/MiniLM-like
+ANN_DIMS = (32, 128, 384, 784)  # 384: news/MiniLM-like serving (news_agent)
+KDE_DIMS = (103, 200, 384)
+ALL_DIMS = tuple(sorted(set(ANN_DIMS + KDE_DIMS)))
+
+DEFAULT_B = 256
+DEFAULT_H = 512
+DEFAULT_C = 256
+DEFAULT_Q = 64
+DEFAULT_N = 4096
+
+F32 = jnp.float32
+
+
+def _spec(shape, dtype=F32):
+    return jnp.zeros(shape, dtype)  # concrete example arg for .lower()
+
+
+def make_pstable_hash(b, d, h):
+    def fn(x, proj, bias, inv_w):
+        return (matproj.pstable_hash(x, proj, bias, inv_w),)
+
+    args = (_spec((b, d)), _spec((d, h)), _spec((h,)), _spec((1, 1)))
+    return fn, args
+
+
+def make_srp_hash(b, d, h):
+    def fn(x, proj):
+        return (matproj.srp_hash(x, proj),)
+
+    args = (_spec((b, d)), _spec((d, h)))
+    return fn, args
+
+
+def make_rerank_l2(b, c, d):
+    def fn(queries, cands):
+        return (l2dist.rerank_l2(queries, cands),)
+
+    args = (_spec((b, d)), _spec((b, c, d)))
+    return fn, args
+
+
+def make_dist_matrix(q, p, d):
+    def fn(queries, pool):
+        return (l2dist.dist_matrix(queries, pool),)
+
+    args = (_spec((q, d)), _spec((p, d)))
+    return fn, args
+
+
+def make_kde_angular(q, n, d):
+    def fn(queries, data, p):
+        return (kde.kde_angular(queries, data, p),)
+
+    args = (_spec((q, d)), _spec((n, d)), _spec((1, 1)))
+    return fn, args
+
+
+def make_kde_pstable(q, n, d):
+    def fn(queries, data, w, p):
+        return (kde.kde_pstable(queries, data, w, p),)
+
+    args = (_spec((q, d)), _spec((n, d)), _spec((1, 1)), _spec((1, 1)))
+    return fn, args
+
+
+def _dt(a):
+    return {"float32": "f32", "int32": "i32"}[str(np.dtype(a.dtype))]
+
+
+class Variant:
+    """One AOT artifact: name, builder output, and manifest metadata."""
+
+    def __init__(self, name, kind, fn, args, out_shape, out_dtype, golden=False):
+        self.name = name
+        self.kind = kind
+        self.fn = fn
+        self.args = args
+        self.out_shape = out_shape
+        self.out_dtype = out_dtype
+        self.golden = golden
+
+    def manifest_entry(self):
+        return {
+            "name": self.name,
+            "kind": self.kind,
+            "file": f"{self.name}.hlo.txt",
+            "golden": self.golden,
+            "inputs": [
+                {"shape": list(a.shape), "dtype": _dt(a)} for a in self.args
+            ],
+            "output": {"shape": list(self.out_shape), "dtype": self.out_dtype},
+        }
+
+
+def build_variants(b=DEFAULT_B, h=DEFAULT_H, c=DEFAULT_C, q=DEFAULT_Q, n=DEFAULT_N):
+    """The full artifact registry: production variants + tiny golden variants."""
+    vs = []
+    for d in ALL_DIMS:
+        fn, args = make_pstable_hash(b, d, h)
+        vs.append(Variant(f"pstable_hash_{d}", "pstable_hash", fn, args, (b, h), "i32"))
+    for d in ANN_DIMS:
+        # Small-batch variant for the serving path: query batches are ~64
+        # rows, and padding them to 256 quadruples the hash GEMM (§Perf).
+        fn, args = make_pstable_hash(64, d, h)
+        vs.append(Variant(f"pstable_hash_{d}_b64", "pstable_hash", fn, args, (64, h), "i32"))
+    for d in KDE_DIMS:
+        fn, args = make_srp_hash(b, d, h)
+        vs.append(Variant(f"srp_hash_{d}", "srp_hash", fn, args, (b, h), "i32"))
+    for d in ANN_DIMS:
+        fn, args = make_rerank_l2(b, c, d)
+        vs.append(Variant(f"rerank_l2_{d}", "rerank_l2", fn, args, (b, c), "f32"))
+        # Shared-pool distance matrix: the serving-path re-rank primitive
+        # (one Q x P GEMM instead of Q batched GEMVs; EXPERIMENTS.md §Perf).
+        fn, args = make_dist_matrix(b, 2 * c, d)
+        vs.append(Variant(f"dist_matrix_{d}", "dist_matrix", fn, args, (b, 2 * c), "f32"))
+    for d in KDE_DIMS:
+        fn, args = make_kde_angular(q, n, d)
+        vs.append(Variant(f"kde_angular_{d}", "kde_angular", fn, args, (q,), "f32"))
+        fn, args = make_kde_pstable(q, n, d)
+        vs.append(Variant(f"kde_pstable_{d}", "kde_pstable", fn, args, (q,), "f32"))
+
+    # Tiny golden variants: cross-language numeric checks (rust/tests/runtime_golden.rs)
+    gb, gd, gh, gc, gq, gn = 8, 16, 32, 8, 4, 32
+    fn, args = make_pstable_hash(gb, gd, gh)
+    vs.append(Variant("pstable_hash_g", "pstable_hash", fn, args, (gb, gh), "i32", golden=True))
+    fn, args = make_srp_hash(gb, gd, gh)
+    vs.append(Variant("srp_hash_g", "srp_hash", fn, args, (gb, gh), "i32", golden=True))
+    fn, args = make_rerank_l2(gq, gc, gd)
+    vs.append(Variant("rerank_l2_g", "rerank_l2", fn, args, (gq, gc), "f32", golden=True))
+    fn, args = make_dist_matrix(gq, gn, gd)
+    vs.append(Variant("dist_matrix_g", "dist_matrix", fn, args, (gq, gn), "f32", golden=True))
+    fn, args = make_kde_angular(gq, gn, gd)
+    vs.append(Variant("kde_angular_g", "kde_angular", fn, args, (gq,), "f32", golden=True))
+    fn, args = make_kde_pstable(gq, gn, gd)
+    vs.append(Variant("kde_pstable_g", "kde_pstable", fn, args, (gq,), "f32", golden=True))
+    return vs

@@ -1,0 +1,244 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes and seeds; fixed regression cases pin the exact
+configurations the AOT artifacts use.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import kde, l2dist, matproj, ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- hashing
+
+dims = st.sampled_from([3, 8, 16, 24, 32, 103, 128])
+batches = st.sampled_from([1, 2, 4, 8, 16, 64])
+slots = st.sampled_from([1, 2, 8, 16, 32, 64])
+
+
+def _assert_slots_match(got, want, pre_floor_f64, boundary_tol=1e-4):
+    """Exact slot equality, EXCEPT entries whose pre-floor value straddles
+    an integer boundary within f32 reduction error: there the tiled kernel
+    and the flat reference may legitimately disagree by exactly 1 (f32
+    addition is non-associative; a boundary point is equidistant between
+    buckets, so LSH collision probabilities are unaffected)."""
+    got = np.asarray(got)
+    want = np.asarray(want)
+    diff = got != want
+    if not diff.any():
+        return
+    frac = (np.abs(pre_floor_f64 - np.round(pre_floor_f64)))[diff]
+    assert (np.abs(got[diff] - want[diff]) == 1).all(), "off by more than one bucket"
+    assert (frac < boundary_tol).all(), f"mismatch away from boundary: {frac}"
+    assert diff.mean() < 0.01, f"too many boundary cases: {diff.mean()}"
+
+
+@given(b=batches, d=dims, h=slots, seed=st.integers(0, 2**31 - 1))
+def test_pstable_hash_matches_ref(b, d, h, seed):
+    r = _rng(seed)
+    x = r.standard_normal((b, d)).astype(np.float32) * 10.0
+    proj = r.standard_normal((d, h)).astype(np.float32)
+    bias = (r.random(h) * 4.0).astype(np.float32)
+    inv_w = np.array([[1.0 / 4.0]], dtype=np.float32)
+    got = matproj.pstable_hash(x, proj, bias, inv_w)
+    want = ref.pstable_hash(x, proj, bias, inv_w)
+    pre = (x.astype(np.float64) @ proj.astype(np.float64) + bias) * 0.25
+    _assert_slots_match(got, want, pre)
+
+
+@given(b=batches, d=dims, h=slots, seed=st.integers(0, 2**31 - 1))
+def test_srp_hash_matches_ref(b, d, h, seed):
+    r = _rng(seed)
+    x = r.standard_normal((b, d)).astype(np.float32)
+    proj = r.standard_normal((d, h)).astype(np.float32)
+    got = np.asarray(matproj.srp_hash(x, proj))
+    want = np.asarray(ref.srp_hash(x, proj))
+    diff = got != want
+    if diff.any():
+        # sign boundary: |projection| within f32 reduction error of 0
+        pre = np.abs(x.astype(np.float64) @ proj.astype(np.float64))
+        assert (pre[diff] < 1e-3).all(), f"bit flip away from zero: {pre[diff]}"
+
+
+def test_pstable_hash_negative_floor():
+    """floor(-0.5) = -1, not truncation toward zero."""
+    x = np.array([[-1.0]], dtype=np.float32)
+    proj = np.array([[1.0]], dtype=np.float32)
+    bias = np.array([0.0], dtype=np.float32)
+    inv_w = np.array([[0.5]], dtype=np.float32)
+    got = np.asarray(matproj.pstable_hash(x, proj, bias, inv_w))
+    assert got[0, 0] == -1
+
+
+def test_srp_zero_projection_is_positive_side():
+    """x @ proj == 0 hashes to bit 1 (>= 0 convention, matches rust)."""
+    x = np.zeros((2, 4), dtype=np.float32)
+    proj = np.ones((4, 3), dtype=np.float32)
+    got = np.asarray(matproj.srp_hash(x, proj))
+    assert (got == 1).all()
+
+
+def test_pstable_hash_artifact_shape():
+    """The exact production variant shape (B=256, d=128, H=512)."""
+    r = _rng(7)
+    x = r.standard_normal((256, 128)).astype(np.float32)
+    proj = r.standard_normal((128, 512)).astype(np.float32)
+    bias = (r.random(512) * 4.0).astype(np.float32)
+    inv_w = np.array([[0.25]], dtype=np.float32)
+    got = matproj.pstable_hash(x, proj, bias, inv_w)
+    want = ref.pstable_hash(x, proj, bias, inv_w)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------- rerank
+
+
+@given(
+    b=st.sampled_from([1, 2, 4, 8, 32]),
+    c=st.sampled_from([1, 2, 8, 16, 64]),
+    d=dims,
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rerank_matches_ref(b, c, d, seed):
+    r = _rng(seed)
+    q = r.standard_normal((b, d)).astype(np.float32)
+    cands = r.standard_normal((b, c, d)).astype(np.float32)
+    got = np.asarray(l2dist.rerank_l2(q, cands))
+    want = np.asarray(ref.rerank_l2(q, cands))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_rerank_identical_point_is_zero():
+    q = _rng(3).standard_normal((4, 16)).astype(np.float32)
+    cands = np.repeat(q[:, None, :], 8, axis=1)
+    got = np.asarray(l2dist.rerank_l2(q, cands))
+    np.testing.assert_allclose(got, np.zeros((4, 8)), atol=1e-4)
+
+
+def test_rerank_nonnegative():
+    r = _rng(11)
+    q = (r.standard_normal((8, 32)) * 100).astype(np.float32)
+    cands = (r.standard_normal((8, 16, 32)) * 100).astype(np.float32)
+    got = np.asarray(l2dist.rerank_l2(q, cands))
+    assert (got >= 0).all()
+
+
+@given(
+    q=st.sampled_from([1, 2, 8, 32]),
+    p=st.sampled_from([1, 4, 16, 128]),
+    d=dims,
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dist_matrix_matches_ref(q, p, d, seed):
+    r = _rng(seed)
+    qs = r.standard_normal((q, d)).astype(np.float32)
+    pool = r.standard_normal((p, d)).astype(np.float32)
+    got = np.asarray(l2dist.dist_matrix(qs, pool))
+    want = np.asarray(ref.dist_matrix(qs, pool))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_dist_matrix_agrees_with_rerank():
+    """The pooled matrix and the per-query re-rank are the same geometry."""
+    r = _rng(21)
+    qs = r.standard_normal((8, 16)).astype(np.float32)
+    pool = r.standard_normal((32, 16)).astype(np.float32)
+    dm = np.asarray(l2dist.dist_matrix(qs, pool))
+    cands = np.broadcast_to(pool, (8, 32, 16))
+    rr = np.asarray(l2dist.rerank_l2(qs, np.ascontiguousarray(cands)))
+    np.testing.assert_allclose(dm, rr, rtol=1e-4, atol=1e-3)
+
+
+def test_rerank_tile_respects_vmem_budget():
+    bm = l2dist.rerank_tile(256, 256, 784)
+    assert bm * 256 * 784 * 4 <= l2dist.VMEM_BUDGET
+    assert 256 % bm == 0
+
+
+# ---------------------------------------------------------------- kde
+
+
+@given(
+    q=st.sampled_from([1, 2, 4, 8]),
+    n=st.sampled_from([4, 16, 64, 128]),
+    d=dims,
+    p=st.sampled_from([1.0, 2.0, 4.0, 8.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kde_angular_matches_ref(q, n, d, p, seed):
+    r = _rng(seed)
+    qs = r.standard_normal((q, d)).astype(np.float32)
+    data = r.standard_normal((n, d)).astype(np.float32)
+    pv = np.array([[p]], dtype=np.float32)
+    got = np.asarray(kde.kde_angular(qs, data, pv))
+    want = np.asarray(ref.kde_angular(qs, data, pv))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@given(
+    q=st.sampled_from([1, 2, 4, 8]),
+    n=st.sampled_from([4, 16, 64, 128]),
+    d=dims,
+    w=st.sampled_from([0.5, 1.0, 4.0]),
+    p=st.sampled_from([1.0, 2.0, 4.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kde_pstable_matches_ref(q, n, d, w, p, seed):
+    r = _rng(seed)
+    qs = r.standard_normal((q, d)).astype(np.float32)
+    data = r.standard_normal((n, d)).astype(np.float32)
+    wv = np.array([[w]], dtype=np.float32)
+    pv = np.array([[p]], dtype=np.float32)
+    got = np.asarray(kde.kde_pstable(qs, data, wv, pv))
+    want = np.asarray(ref.kde_pstable(qs, data, wv, pv))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_kde_padding_rows_contribute_zero():
+    r = _rng(5)
+    qs = r.standard_normal((4, 16)).astype(np.float32)
+    data = r.standard_normal((64, 16)).astype(np.float32)
+    padded = np.concatenate([data, np.zeros((64, 16), np.float32)])
+    pv = np.array([[4.0]], dtype=np.float32)
+    a = np.asarray(kde.kde_angular(qs, data, pv))
+    b = np.asarray(kde.kde_angular(qs, padded, pv))
+    np.testing.assert_allclose(a, b, rtol=1e-4)
+    wv = np.array([[2.0]], dtype=np.float32)
+    a = np.asarray(kde.kde_pstable(qs, data, wv, pv))
+    b = np.asarray(kde.kde_pstable(qs, padded, wv, pv))
+    np.testing.assert_allclose(a, b, rtol=1e-4)
+
+
+def test_kde_self_density_upper_bound():
+    """K(q) <= N and K(q) >= 1 when q itself is in the data (k(x,x)=1)."""
+    r = _rng(9)
+    data = r.standard_normal((32, 24)).astype(np.float32)
+    qs = data[:4]
+    pv = np.array([[4.0]], dtype=np.float32)
+    got = np.asarray(kde.kde_angular(qs, data, pv))
+    assert (got >= 1.0 - 1e-4).all() and (got <= 32.0 + 1e-4).all()
+
+
+def test_pstable_collision_kernel_monotone_decreasing():
+    d = np.linspace(0.0, 20.0, 100).astype(np.float32)
+    k = np.asarray(ref.pstable_collision_kernel(d, 4.0, 1.0))
+    assert k[0] == pytest.approx(1.0)
+    assert (np.diff(k) <= 1e-6).all()
+    assert (k >= 0).all() and (k <= 1).all()
+
+
+def test_angular_collision_kernel_bounds():
+    cos = np.linspace(-1, 1, 50).astype(np.float32)
+    k = np.asarray(ref.angular_collision_kernel(cos, 3.0))
+    assert k[0] == pytest.approx(0.0, abs=1e-6)  # antipodal
+    assert k[-1] == pytest.approx(1.0, abs=1e-6)  # identical
+    assert (np.diff(k) >= -1e-6).all()

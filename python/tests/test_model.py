@@ -1,0 +1,99 @@
+"""L2/AOT-level tests: variant registry integrity, lowering, determinism."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+def test_variant_registry_complete():
+    vs = model.build_variants()
+    names = [v.name for v in vs]
+    assert len(names) == len(set(names)), "duplicate artifact names"
+    for d in model.ALL_DIMS:
+        assert f"pstable_hash_{d}" in names
+    for d in model.KDE_DIMS:
+        assert f"srp_hash_{d}" in names
+        assert f"kde_angular_{d}" in names
+        assert f"kde_pstable_{d}" in names
+    for d in model.ANN_DIMS:
+        assert f"rerank_l2_{d}" in names
+    assert sum(1 for v in vs if v.golden) == 6
+
+
+def test_manifest_entry_schema():
+    v = model.build_variants()[0]
+    e = v.manifest_entry()
+    assert set(e) == {"name", "kind", "file", "golden", "inputs", "output"}
+    for inp in e["inputs"]:
+        assert inp["dtype"] in ("f32", "i32")
+        assert all(isinstance(s, int) for s in inp["shape"])
+
+
+def test_variant_shapes_divide_tiles():
+    """Every production shape must be tileable by the kernel tile pickers."""
+    from compile.kernels.matproj import pick_tile
+
+    for v in model.build_variants():
+        for a in v.args:
+            if len(a.shape) >= 1 and a.shape[0] > 1:
+                assert a.shape[0] % pick_tile(a.shape[0]) == 0
+
+
+def test_golden_inputs_deterministic():
+    vs = [v for v in model.build_variants() if v.golden]
+    v = vs[0]
+    a = aot.golden_inputs(v, np.random.default_rng(aot.GOLDEN_SEED))
+    b = aot.golden_inputs(v, np.random.default_rng(aot.GOLDEN_SEED))
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_lowering_produces_parseable_hlo():
+    """Lower one tiny variant and sanity-check the HLO text shape."""
+    vs = {v.name: v for v in model.build_variants()}
+    v = vs["pstable_hash_g"]
+    lowered = jax.jit(v.fn).lower(*v.args)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # return_tuple=True: the root computation must return a tuple
+    assert "(s32[8,32]" in text or "tuple" in text
+
+
+def test_golden_execution_matches_saved_artifacts():
+    """If `make artifacts` has run, goldens.json must match a fresh compute."""
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "goldens.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        saved = json.load(f)
+    vs = {v.name: v for v in model.build_variants() if v.golden}
+    assert len(saved["cases"]) == len(vs)
+    for case in saved["cases"]:
+        v = vs[case["name"]]
+        ins = aot.golden_inputs(v, np.random.default_rng(saved["seed"]))
+        (out,) = jax.jit(v.fn)(*ins)
+        got = np.asarray(out).reshape(-1)
+        want = np.array(case["output"]["data"], dtype=got.dtype)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_aot_only_flag():
+    """--only lowers exactly the requested artifact and skips the manifest."""
+    with tempfile.TemporaryDirectory() as td:
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", td, "--only", "srp_hash_g"],
+            cwd=os.path.join(os.path.dirname(__file__), ".."),
+            check=True,
+            capture_output=True,
+        )
+        files = os.listdir(td)
+        assert files == ["srp_hash_g.hlo.txt"]

@@ -1,0 +1,154 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! A1. Rehash debiasing (Race/SwAkde `query_debiased`) vs raw mean —
+//!     quantifies the spurious-collision bias the paper's "rehashing"
+//!     (§5.2) introduces for p-stable cells.
+//! A2. Mean vs median-of-means aggregation in RACE ([CS20] uses MoM).
+//! A3. EH ε' sweep: KDE error floor vs ε' at fixed (large) rows —
+//!     validates ε = 2ε' + ε'² (Lemma 4.3) as the binding constraint.
+//! A4. Candidate-cap (3L) ablation: query cost/recall at 1L/3L/10L caps
+//!     via probe statistics.
+
+use sublinear_sketch::bench_support::{banner, FigureOutput, Table};
+use sublinear_sketch::data::datasets;
+use sublinear_sketch::experiments::kde::{run_swakde, Kernel};
+use sublinear_sketch::lsh::pstable::PStableLsh;
+use sublinear_sketch::lsh::srp::SrpLsh;
+use sublinear_sketch::metrics;
+use sublinear_sketch::sketch::race::Race;
+use sublinear_sketch::util::rng::Rng;
+
+fn main() {
+    let mut fig = FigureOutput::new("ablations");
+
+    // ------------------------------------------------------------- A1
+    banner("A1", "rehash debias on/off (p-stable RACE, synthetic)");
+    {
+        let (stream, queries) = datasets::kde_synthetic(3_000, 7).split_queries(100);
+        let dim = 200;
+        let probe_d = sublinear_sketch::util::l2(&stream[0], &stream[1500]) as f64;
+        let width = (probe_d / 2.0) as f32;
+        let (rows, p, range) = (256usize, 2usize, 64usize);
+        let fam = PStableLsh::new(dim, rows * p, width, &mut Rng::new(8));
+        let mut race = Race::new(rows, range, p);
+        for x in &stream {
+            race.add(&fam, x);
+        }
+        let truth: Vec<f64> = queries
+            .iter()
+            .map(|q| sublinear_sketch::baselines::exact_kde_pstable(&stream, q, width as f64, p as u32))
+            .collect();
+        let raw: Vec<f64> = queries.iter().map(|q| race.query(&fam, q)).collect();
+        let debiased: Vec<f64> = queries.iter().map(|q| race.query_debiased(&fam, q)).collect();
+        let mre_raw = metrics::mean_relative_error(&raw, &truth);
+        let mre_db = metrics::mean_relative_error(&debiased, &truth);
+        let mut t = Table::new(&["estimator", "mean rel error"]);
+        t.row(vec!["raw mean (paper's rehashing)".into(), format!("{mre_raw:.4}")]);
+        t.row(vec!["debiased (ours)".into(), format!("{mre_db:.4}")]);
+        t.print();
+        fig.push("a1", 0.0, mre_raw);
+        fig.push("a1", 1.0, mre_db);
+        assert!(mre_db <= mre_raw, "debiasing must not hurt: {mre_db} vs {mre_raw}");
+    }
+
+    // ------------------------------------------------------------- A2
+    banner("A2", "mean vs median-of-means aggregation (angular RACE)");
+    {
+        let (stream, queries) = datasets::rosis_like(3_000, 9).split_queries(100);
+        let p = 3usize;
+        for rows in [32usize, 128] {
+            let fam = SrpLsh::new(103, rows * p, &mut Rng::new(10));
+            let mut race = Race::new_srp(rows, p);
+            for x in &stream {
+                race.add(&fam, x);
+            }
+            let truth: Vec<f64> = queries
+                .iter()
+                .map(|q| sublinear_sketch::baselines::exact_kde_angular(&stream, q, p as u32))
+                .collect();
+            let mean_est: Vec<f64> = queries.iter().map(|q| race.query(&fam, q)).collect();
+            let mom_est: Vec<f64> =
+                queries.iter().map(|q| race.query_mom(&fam, q, 8)).collect();
+            let m = metrics::mean_relative_error(&mean_est, &truth);
+            let mm = metrics::mean_relative_error(&mom_est, &truth);
+            println!("rows={rows}: mean-agg MRE={m:.4}  median-of-means MRE={mm:.4}");
+            fig.push("a2_mean", rows as f64, m);
+            fig.push("a2_mom", rows as f64, mm);
+        }
+    }
+
+    // ------------------------------------------------------------- A3
+    banner("A3", "EH eps' sweep at high rows (error floor, Lemma 4.3)");
+    {
+        let (stream, queries) = datasets::news_like(3_000, 11).split_queries(100);
+        let mut t = Table::new(&["eps'", "bound 2e'+e'^2", "measured MRE"]);
+        for eps in [0.4, 0.2, 0.1, 0.05] {
+            let res = run_swakde(
+                &stream,
+                &queries,
+                Kernel::Angular { p: 3 },
+                256,
+                300,
+                eps,
+                12,
+            );
+            let bound = 2.0 * eps + eps * eps;
+            t.row(vec![
+                format!("{eps}"),
+                format!("{bound:.3}"),
+                format!("{:.4}", res.mre),
+            ]);
+            fig.push("a3", eps, res.mre);
+            assert!(res.mre <= bound, "eps'={eps}: {:.4} > bound {bound:.3}", res.mre);
+        }
+        t.print();
+    }
+
+    // ------------------------------------------------------------- A4
+    banner("A4", "candidate cap: probe work vs hit rate (3L is Algorithm 1)");
+    {
+        use sublinear_sketch::sketch::ann::{SAnn, SAnnConfig};
+        let (stream, queries) = datasets::syn32(8_000, 13).split_queries(200);
+        let w = sublinear_sketch::experiments::AnnWorkload::new(stream, queries);
+        let sens = sublinear_sketch::lsh::params::default_width(w.r, 2.0);
+        let mut t = Table::new(&["l_cap", "k", "L", "hit rate", "avg scanned"]);
+        for l_cap in [4usize, 16, 32, 64] {
+            let mut ann = SAnn::new(SAnnConfig {
+                dim: 32,
+                n_max: w.stream.len(),
+                eta: 0.3,
+                r: w.r,
+                c: 2.0,
+                w: sens.w,
+                l_cap,
+                seed: 14,
+            });
+            for p in &w.stream {
+                ann.insert(p);
+            }
+            let mut hits = 0usize;
+            let mut scanned = 0usize;
+            for q in &w.queries {
+                let (ans, st) = ann.query_with_stats(q);
+                hits += ans.is_some() as usize;
+                scanned += st.scanned;
+            }
+            let rate = hits as f64 / w.queries.len() as f64;
+            t.row(vec![
+                l_cap.to_string(),
+                ann.params().k.to_string(),
+                ann.params().l.to_string(),
+                format!("{rate:.3}"),
+                format!("{:.1}", scanned as f64 / w.queries.len() as f64),
+            ]);
+            fig.push("a4_hit", l_cap as f64, rate);
+        }
+        t.print();
+        // More tables help up to the theory's L; hit rate must be monotone.
+        let s = fig.series("a4_hit").unwrap();
+        assert!(s.last().unwrap().1 >= s.first().unwrap().1 - 0.02);
+    }
+
+    let path = fig.save().unwrap();
+    println!("\nwrote {}", path.display());
+}

@@ -1,0 +1,62 @@
+//! Figure 10: effect of the sliding-window size {64..2048} on SW-AKDE
+//! mean relative error, for (a) news-like with Euclidean hash and
+//! (b) rosis-like with angular hash, across the row grid.
+//!
+//! Expected shape: error varies with window size — larger windows help
+//! when the live distribution is stable (news text in the paper), while
+//! image data showed a sweet spot (256). The invariant to check is that
+//! every (window, rows) point stays below the worst-case bound and that
+//! error still falls with rows at each window.
+
+use sublinear_sketch::bench_support::{banner, full_scale, FigureOutput, Table};
+use sublinear_sketch::data::datasets;
+use sublinear_sketch::experiments::kde::{rows_grid, run_swakde, window_grid, Kernel};
+
+fn main() {
+    let full = full_scale();
+    let (n_stream, n_queries) = if full { (10_000, 500) } else { (4_000, 120) };
+    let eps_eh = 0.1;
+    banner("Fig 10", "window-size effect on SW-AKDE error");
+    let mut fig = FigureOutput::new("fig10_window");
+
+    let cases: Vec<(&str, fn(usize, u64) -> datasets::Dataset, bool)> = vec![
+        ("news-like", datasets::news_like, true),   // euclidean
+        ("rosis-like", datasets::rosis_like, false), // angular
+    ];
+    for (label, maker, euclidean) in cases {
+        let ds = maker(n_stream + n_queries, 42);
+        let (stream, queries) = ds.split_queries(n_queries);
+        let probe_d = sublinear_sketch::util::l2(&stream[0], &stream[n_stream / 2]) as f64;
+        let width = (probe_d / 2.0).max(0.5) as f32;
+        let kernel = if euclidean {
+            Kernel::Euclidean { p: 2, width, range: 256 }
+        } else {
+            Kernel::Angular { p: 3 }
+        };
+        println!("\n[{label}] kernel={}", kernel.label());
+        let rows = rows_grid(full);
+        let mut headers: Vec<String> = vec!["window".into()];
+        headers.extend(rows.iter().map(|r| format!("rows={r}")));
+        let mut table = Table::new(&headers.iter().map(String::as_str).collect::<Vec<_>>());
+        for &window in &window_grid(full) {
+            let mut cells = vec![window.to_string()];
+            for &r in &rows {
+                let res = run_swakde(&stream, &queries, kernel, r, window, eps_eh, 13);
+                fig.push(&format!("{label}/w{window}"), r as f64, res.log10_mre);
+                cells.push(format!("{:.3}", res.log10_mre));
+            }
+            table.row(cells);
+        }
+        println!("log10(mean relative error):");
+        table.print();
+        // Shape check at the largest window: error falls with rows.
+        let wmax = *window_grid(full).last().unwrap();
+        let s = fig.series(&format!("{label}/w{wmax}")).unwrap();
+        assert!(
+            s.last().unwrap().1 <= s.first().unwrap().1 + 0.05,
+            "{label}: rows must reduce error at window {wmax}: {s:?}"
+        );
+    }
+    let path = fig.save().unwrap();
+    println!("\nwrote {}", path.display());
+}

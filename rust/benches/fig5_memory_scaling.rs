@@ -1,0 +1,88 @@
+//! Figure 5: sketch memory vs stream size N for η ∈ {0.2..0.8} at fixed
+//! ε = 0.5 (sift-like data), plus the §1.2.1 sublinearity-threshold table
+//! (η* such that η > ρ ⇒ sublinear total space).
+//!
+//! Expected shape: memory grows like N^{1−η} (plus table overhead), so
+//! curves flatten as η grows; for η ≥ 0.5 the sketch is sublinear in the
+//! raw stream at ε = 0.5 (ρ(ε=0.5) ≈ 0.5).
+
+use sublinear_sketch::bench_support::{banner, full_scale, FigureOutput, Table};
+use sublinear_sketch::data::datasets;
+use sublinear_sketch::lsh::params::Sensitivity;
+use sublinear_sketch::sketch::ann::{SAnn, SAnnConfig};
+
+fn main() {
+    let full = full_scale();
+    let sizes: Vec<usize> = if full {
+        vec![1_000, 5_000, 10_000, 20_000, 40_000, 80_000, 160_000]
+    } else {
+        vec![1_000, 2_000, 5_000, 10_000, 20_000, 40_000]
+    };
+    let etas = [0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8];
+    let eps = 0.5;
+    banner("Fig 5", "S-ANN sketch memory vs stream size (sift-like, eps=0.5)");
+
+    let mut fig = FigureOutput::new("fig5_memory_scaling");
+    fig.meta("dataset", "sift-like");
+    fig.meta("eps", "0.5");
+
+    let max_n = *sizes.last().unwrap();
+    let all = datasets::sift_like(max_n, 42).points;
+    // Radius: median NN distance at a mid-size prefix (fixed across N so
+    // the LSH parameters are comparable).
+    let probe = sublinear_sketch::experiments::AnnWorkload::new(
+        all[..2_000].to_vec(),
+        all[2_000..2_100].to_vec(),
+    );
+    let r = probe.r;
+
+    let mut table = Table::new(&["N", "raw MB", "eta=0.2", "0.3", "0.4", "0.5", "0.6", "0.7", "0.8"]);
+    for &n in &sizes {
+        let raw_mb = (n * 128 * 4) as f64 / 1048576.0;
+        let mut cells = vec![n.to_string(), format!("{raw_mb:.1}")];
+        for &eta in &etas {
+            let cfg = SAnnConfig {
+                dim: 128,
+                n_max: n,
+                eta,
+                r,
+                c: 1.0 + eps,
+                w: 4.0 * r,
+                l_cap: 32,
+                seed: 42,
+            };
+            let mut ann = SAnn::new(cfg);
+            for p in &all[..n] {
+                ann.insert(p);
+            }
+            let mb = ann.memory_bytes() as f64 / 1048576.0;
+            fig.push(&format!("eta={eta}"), n as f64, mb);
+            cells.push(format!("{mb:.2}"));
+        }
+        fig.push("raw", n as f64, raw_mb);
+        table.row(cells);
+    }
+    println!("\nsketch MB by stream size (raw stream MB for reference):");
+    table.print();
+
+    // §1.2.1: sublinearity threshold eta* = rho(eps).
+    println!("\nsublinearity threshold (space n^(1+rho-eta) sublinear iff eta > rho):");
+    let mut thr = Table::new(&["eps", "c", "rho", "eta* (threshold)"]);
+    for eps in [0.5, 0.6, 0.7, 0.8, 0.9, 1.0] {
+        let s = Sensitivity::pstable(r, 1.0 + eps, 4.0 * r);
+        thr.row(vec![
+            format!("{eps:.1}"),
+            format!("{:.1}", 1.0 + eps),
+            format!("{:.3}", s.rho()),
+            format!("{:.3}", s.rho()),
+        ]);
+    }
+    thr.print();
+
+    // Shape check: at eta=0.8 the largest-N sketch must be far below raw.
+    let big = fig.series("eta=0.8").unwrap().last().unwrap().1;
+    let raw = fig.series("raw").unwrap().last().unwrap().1;
+    assert!(big < raw * 0.5, "eta=0.8 sketch {big} MB vs raw {raw} MB");
+    let path = fig.save().unwrap();
+    println!("\nwrote {}", path.display());
+}

@@ -1,0 +1,85 @@
+//! Figure 6: median difference (S-ANN − JL) in approximate recall@50 and
+//! (c, r)-ANN accuracy as ε sweeps 0.5 → 1.0, on sift-like and
+//! fmnist-like. The difference is taken pointwise across the compression
+//! sweep (η for S-ANN, k for JL), then the median is reported — exactly
+//! the paper's aggregation (§5.1 footnote 5).
+//!
+//! Expected shape: the recall median-difference starts negative (JL wins
+//! at small ε) and crosses to positive as ε grows — beyond ε≈0.7–0.8 on
+//! sift-like and ε≈0.9 on fmnist-like in the paper; accuracy differences
+//! trend the same way.
+
+use sublinear_sketch::bench_support::{banner, full_scale, FigureOutput, Table};
+use sublinear_sketch::data::datasets;
+use sublinear_sketch::experiments::ann::{eta_grid, k_grid};
+use sublinear_sketch::experiments::AnnWorkload;
+use sublinear_sketch::metrics::median_difference;
+
+fn main() {
+    let full = full_scale();
+    let (n_store, n_queries) = if full { (50_000, 5_000) } else { (8_000, 400) };
+    banner("Fig 6", "median difference (S-ANN - JL) over eps");
+    let mut fig = FigureOutput::new("fig6_median_diff");
+    fig.meta("n_store", &n_store.to_string());
+
+    let eps_grid = [0.5, 0.6, 0.7, 0.8, 0.9, 1.0];
+    for maker in [datasets::sift_like as fn(usize, u64) -> _, datasets::fmnist_like] {
+        let ds = maker(n_store + n_queries, 42);
+        let name = ds.name;
+        let dim = ds.dim;
+        let (stream, queries) = ds.split_queries(n_queries);
+        let w = AnnWorkload::new(stream, queries);
+        println!("\n[{name}] dim={dim} n={n_store} queries={n_queries} r={:.3}", w.r);
+        let mut table = Table::new(&["eps", "median dRecall@50", "median dAccuracy"]);
+        for &eps in &eps_grid {
+            let ours: Vec<_> = eta_grid().iter().map(|&eta| w.run_sann(eps, eta, 7)).collect();
+            let jl: Vec<_> = k_grid(dim).iter().map(|&k| w.run_jl(eps, k, 7)).collect();
+            // Pair sweeps sorted by compression rate (both grids are
+            // ordered dense -> sparse already, but sort to be safe).
+            let mut o = ours.clone();
+            let mut j = jl.clone();
+            o.sort_by(|a, b| a.compression.partial_cmp(&b.compression).unwrap());
+            j.sort_by(|a, b| a.compression.partial_cmp(&b.compression).unwrap());
+            let n = o.len().min(j.len());
+            let d_recall = median_difference(
+                &o[..n].iter().map(|r| r.recall50).collect::<Vec<_>>(),
+                &j[..n].iter().map(|r| r.recall50).collect::<Vec<_>>(),
+            );
+            let d_acc = median_difference(
+                &o[..n].iter().map(|r| r.cr_accuracy).collect::<Vec<_>>(),
+                &j[..n].iter().map(|r| r.cr_accuracy).collect::<Vec<_>>(),
+            );
+            fig.push(&format!("{name}/recall"), eps, d_recall);
+            fig.push(&format!("{name}/accuracy"), eps, d_acc);
+            table.row(vec![
+                format!("{eps:.1}"),
+                format!("{d_recall:+.3}"),
+                format!("{d_acc:+.3}"),
+            ]);
+        }
+        table.print();
+        // Shape check: the accuracy median difference must not degrade as
+        // eps grows (S-ANN's contract loosens with c = 1 + eps).
+        let accs = fig.series(&format!("{name}/accuracy")).unwrap();
+        assert!(
+            accs.last().unwrap().1 >= accs.first().unwrap().1 - 0.05,
+            "{name}: accuracy diff should trend up: {accs:?}"
+        );
+        // Recall median difference: REPORTED, not asserted. On our
+        // substitute generators the approximate-recall threshold
+        // (1+eps)·d50 saturates JL's recall under high-dimensional
+        // distance concentration, so the paper's recall crossover
+        // (S-ANN overtaking beyond eps≈0.7–0.9) does not reproduce here —
+        // the accuracy and throughput crossovers do. Recorded as a
+        // deviation in EXPERIMENTS.md §Fig6.
+        let recs = fig.series(&format!("{name}/recall")).unwrap();
+        println!(
+            "recall-gap (ours - JL): {:+.3} (eps=0.5) -> {:+.3} (eps=1.0) [reported, see EXPERIMENTS.md]",
+            recs.first().unwrap().1,
+            recs.last().unwrap().1
+        );
+        assert!(recs.iter().all(|&(_, y)| (-1.0..=1.0).contains(&y)));
+    }
+    let path = fig.save().unwrap();
+    println!("\nwrote {}", path.display());
+}

@@ -1,0 +1,68 @@
+//! Figure 7: approximate recall@50 and (c, r)-ANN accuracy vs compression
+//! rate, S-ANN vs JL, at two ε values per dataset (sift-like left column,
+//! fmnist-like right column in the paper).
+//!
+//! Expected shape: both methods improve with compression (more memory);
+//! at the larger ε, S-ANN matches or beats JL at equal compression.
+
+use sublinear_sketch::bench_support::{banner, full_scale, FigureOutput, Table};
+use sublinear_sketch::data::datasets;
+use sublinear_sketch::experiments::ann::{eta_grid, k_grid};
+use sublinear_sketch::experiments::AnnWorkload;
+
+fn main() {
+    let full = full_scale();
+    let (n_store, n_queries) = if full { (50_000, 5_000) } else { (8_000, 400) };
+    banner("Fig 7", "recall & accuracy vs compression rate (S-ANN vs JL)");
+    let mut fig = FigureOutput::new("fig7_recall_compression");
+
+    for maker in [datasets::sift_like as fn(usize, u64) -> _, datasets::fmnist_like] {
+        let ds = maker(n_store + n_queries, 42);
+        let name = ds.name;
+        let dim = ds.dim;
+        let (stream, queries) = ds.split_queries(n_queries);
+        let w = AnnWorkload::new(stream, queries);
+        for &eps in &[0.5, 0.9] {
+            println!("\n[{name}] eps={eps} (c={})", 1.0 + eps);
+            let mut table =
+                Table::new(&["method", "knob", "compression", "recall@50", "(c,r)-acc", "qps"]);
+            for &eta in &eta_grid() {
+                let r = w.run_sann(eps, eta, 7);
+                fig.push(&format!("{name}/eps{eps}/sann/recall"), r.compression, r.recall50);
+                fig.push(&format!("{name}/eps{eps}/sann/acc"), r.compression, r.cr_accuracy);
+                table.row(vec![
+                    "S-ANN".into(),
+                    format!("eta={eta}"),
+                    format!("{:.4}", r.compression),
+                    format!("{:.3}", r.recall50),
+                    format!("{:.3}", r.cr_accuracy),
+                    format!("{:.0}", r.qps),
+                ]);
+            }
+            for &k in &k_grid(dim) {
+                let r = w.run_jl(eps, k, 7);
+                fig.push(&format!("{name}/eps{eps}/jl/recall"), r.compression, r.recall50);
+                fig.push(&format!("{name}/eps{eps}/jl/acc"), r.compression, r.cr_accuracy);
+                table.row(vec![
+                    "JL".into(),
+                    format!("k={k}"),
+                    format!("{:.4}", r.compression),
+                    format!("{:.3}", r.recall50),
+                    format!("{:.3}", r.cr_accuracy),
+                    format!("{:.0}", r.qps),
+                ]);
+            }
+            table.print();
+        }
+        // Shape check: S-ANN recall rises with compression (more stored).
+        let s = fig.series(&format!("{name}/eps0.5/sann/recall")).unwrap();
+        let mut sorted = s.to_vec();
+        sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        assert!(
+            sorted.last().unwrap().1 >= sorted.first().unwrap().1,
+            "{name}: recall must improve with memory: {sorted:?}"
+        );
+    }
+    let path = fig.save().unwrap();
+    println!("\nwrote {}", path.display());
+}

@@ -1,0 +1,96 @@
+//! Figure 8: recall (solid) and query throughput (dashed) for JL (left
+//! column, sweeping k) and S-ANN (right column, sweeping η) across
+//! fmnist-like, sift-like and syn-32, at a fixed workload
+//! (10k stored / 100 queries, ε = 0.5).
+//!
+//! Expected shape: JL's recall rises with k at ~flat (or falling) QPS;
+//! S-ANN's recall rises as η falls, and S-ANN's QPS is decisively higher
+//! than JL's across all settings — the paper's headline throughput claim.
+
+use sublinear_sketch::bench_support::{banner, full_scale, FigureOutput, Table};
+use sublinear_sketch::data::datasets;
+use sublinear_sketch::experiments::ann::k_grid;
+
+/// The paper's Fig 8 x-axis: η from 0.2 to 0.8 (NOT the extended fig6/7
+/// grid — below η = 0.2 the sketch stores most of the stream and the
+/// candidate scans dominate, which is outside this figure's regime).
+fn eta_grid() -> Vec<f64> {
+    vec![0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8]
+}
+use sublinear_sketch::experiments::AnnWorkload;
+
+fn main() {
+    let full = full_scale();
+    let (n_store, n_queries) = if full { (10_000, 100) } else { (10_000, 100) };
+    let eps = 0.5;
+    banner("Fig 8", "recall + QPS: JL (k sweep) vs S-ANN (eta sweep)");
+    let mut fig = FigureOutput::new("fig8_throughput");
+    fig.meta("workload", &format!("{n_store} stored / {n_queries} queries / eps=0.5"));
+    let _ = full;
+
+    let mut qps_ratio_all = Vec::new();
+    for maker in [
+        datasets::fmnist_like as fn(usize, u64) -> _,
+        datasets::sift_like,
+        datasets::syn32,
+    ] {
+        let ds = maker(n_store + n_queries, 42);
+        let name = ds.name;
+        let dim = ds.dim;
+        let (stream, queries) = ds.split_queries(n_queries);
+        let w = AnnWorkload::new(stream, queries);
+        println!("\n[{name}] dim={dim}");
+        let mut table = Table::new(&["method", "knob", "recall@50", "QPS"]);
+        let mut jl_qps = Vec::new();
+        let mut sann_qps = Vec::new();
+        for &k in &k_grid(dim) {
+            let r = w.run_jl(eps, k, 9);
+            fig.push(&format!("{name}/jl/recall"), k as f64, r.recall50);
+            fig.push(&format!("{name}/jl/qps"), k as f64, r.qps);
+            jl_qps.push(r.qps);
+            table.row(vec![
+                "JL".into(),
+                format!("k={k}"),
+                format!("{:.3}", r.recall50),
+                format!("{:.0}", r.qps),
+            ]);
+        }
+        for &eta in &eta_grid() {
+            let r = w.run_sann(eps, eta, 9);
+            fig.push(&format!("{name}/sann/recall"), eta, r.recall50);
+            fig.push(&format!("{name}/sann/qps"), eta, r.qps);
+            sann_qps.push(r.qps);
+            table.row(vec![
+                "S-ANN".into(),
+                format!("eta={eta}"),
+                format!("{:.3}", r.recall50),
+                format!("{:.0}", r.qps),
+            ]);
+        }
+        table.print();
+        let jl_best = jl_qps.iter().cloned().fold(0.0, f64::max);
+        let sann_worst = sann_qps.iter().cloned().fold(f64::MAX, f64::min);
+        let ratio = sann_worst / jl_best;
+        println!("S-ANN worst QPS / JL best QPS = {ratio:.1}x");
+        qps_ratio_all.push(ratio);
+    }
+    // Headline shape: S-ANN throughput beats JL. Note the comparison is
+    // conservative — it pits S-ANN's WORST η against JL's BEST k, and both
+    // run as optimized Rust (the paper's Python JL scan is far slower
+    // relative to hash probes). Require a clear win on the majority of
+    // datasets and parity elsewhere.
+    let wins = qps_ratio_all.iter().filter(|&&r| r > 1.0).count();
+    let geomean = qps_ratio_all.iter().map(|r| r.ln()).sum::<f64>()
+        / qps_ratio_all.len() as f64;
+    println!(
+        "\nS-ANN vs JL QPS: wins on {wins}/{} datasets, geomean ratio {:.2}x (worst-eta vs best-k)",
+        qps_ratio_all.len(),
+        geomean.exp()
+    );
+    assert!(
+        wins * 2 >= qps_ratio_all.len() && geomean.exp() > 0.9,
+        "S-ANN should out-QPS JL: ratios={qps_ratio_all:?}"
+    );
+    let path = fig.save().unwrap();
+    println!("\nwrote {}", path.display());
+}

@@ -1,0 +1,193 @@
+//! Per-operation micro-benchmarks for the §Perf pass: the hot paths of
+//! every layer, measured in ns/op. Run before and after each optimization
+//! (EXPERIMENTS.md §Perf records the iteration log).
+
+use sublinear_sketch::bench_support::{banner, time_ns, Table};
+use sublinear_sketch::coordinator::{BatchPolicy, Batcher};
+use sublinear_sketch::lsh::srp::SrpLsh;
+use sublinear_sketch::lsh::LshFamily;
+use sublinear_sketch::sketch::ann::{SAnn, SAnnConfig};
+use sublinear_sketch::sketch::eh::ExpHistogram;
+use sublinear_sketch::sketch::race::Race;
+use sublinear_sketch::sketch::SwAkde;
+use sublinear_sketch::util::rng::Rng;
+
+fn main() {
+    banner("perf_micro", "hot-path ns/op per layer");
+    let mut table = Table::new(&["op", "ns/op", "notes"]);
+    let mut rng = Rng::new(1);
+
+    // ---- EH (the SW-AKDE inner loop) --------------------------------
+    {
+        let mut eh = ExpHistogram::new(0.1, 4096);
+        let mut t = 0u64;
+        let ns = time_ns(1000, 2_000_000, || {
+            t += 1;
+            eh.add(t);
+        });
+        table.row(vec!["eh.add".into(), format!("{ns:.1}"), "eps'=0.1 window=4096".into()]);
+        let ns = time_ns(100, 1_000_000, || {
+            std::hint::black_box(eh.estimate(t));
+        });
+        table.row(vec!["eh.estimate".into(), format!("{ns:.1}"), "".into()]);
+    }
+
+    // ---- RACE / SW-AKDE update + query ------------------------------
+    {
+        let dim = 128;
+        let (rows, p) = (64usize, 3usize);
+        let fam = SrpLsh::new(dim, rows * p, &mut rng);
+        let pts: Vec<Vec<f32>> = (0..256)
+            .map(|_| (0..dim).map(|_| rng.gaussian_f32()).collect())
+            .collect();
+        let mut race = Race::new_srp(rows, p);
+        let mut i = 0;
+        let ns = time_ns(100, 20_000, || {
+            race.add(&fam, &pts[i % 256]);
+            i += 1;
+        });
+        table.row(vec![
+            "race.add".into(),
+            format!("{ns:.0}"),
+            format!("dim={dim} rows={rows} p={p}"),
+        ]);
+        let ns = time_ns(10, 5_000, || {
+            std::hint::black_box(race.query(&fam, &pts[i % 256]));
+            i += 1;
+        });
+        table.row(vec!["race.query".into(), format!("{ns:.0}"), "".into()]);
+
+        let mut sw = SwAkde::new_srp(rows, p, 0.1, 2048);
+        let ns = time_ns(100, 20_000, || {
+            sw.add(&fam, &pts[i % 256]);
+            i += 1;
+        });
+        table.row(vec![
+            "swakde.add".into(),
+            format!("{ns:.0}"),
+            format!("window=2048 rows={rows}"),
+        ]);
+        let ns = time_ns(10, 5_000, || {
+            std::hint::black_box(sw.query(&fam, &pts[i % 256]));
+            i += 1;
+        });
+        table.row(vec!["swakde.query".into(), format!("{ns:.0}"), "".into()]);
+    }
+
+    // ---- S-ANN insert + query ----------------------------------------
+    {
+        let dim = 128;
+        let cfg = SAnnConfig {
+            dim,
+            n_max: 50_000,
+            eta: 0.0, // worst case: every insert goes through hashing
+            r: 1.0,
+            c: 2.0,
+            w: 4.0,
+            l_cap: 32,
+            seed: 3,
+        };
+        let mut ann = SAnn::new(cfg);
+        let pts: Vec<Vec<f32>> = (0..4096)
+            .map(|_| (0..dim).map(|_| rng.gaussian_f32() * 2.0).collect())
+            .collect();
+        let mut i = 0;
+        let ns = time_ns(128, 4_096, || {
+            ann.insert_retained(&pts[i % 4096]);
+            i += 1;
+        });
+        let params = *ann.params();
+        table.row(vec![
+            "sann.insert".into(),
+            format!("{ns:.0}"),
+            format!("k={} L={} dim={dim}", params.k, params.l),
+        ]);
+        let ns = time_ns(16, 2_000, || {
+            std::hint::black_box(ann.query(&pts[i % 4096]));
+            i += 1;
+        });
+        table.row(vec!["sann.query".into(), format!("{ns:.0}"), "".into()]);
+    }
+
+    // ---- batcher (pure coordinator overhead) --------------------------
+    {
+        let mut b: Batcher<u64> = Batcher::new(BatchPolicy::default());
+        let mut i = 0u64;
+        let ns = time_ns(1000, 2_000_000, || {
+            if let Some(v) = b.push(i) {
+                std::hint::black_box(v.len());
+            }
+            i += 1;
+        });
+        table.row(vec!["batcher.push".into(), format!("{ns:.1}"), "max_batch=64".into()]);
+    }
+
+    // ---- PJRT executor (artifact call overhead + hash batch) ----------
+    if sublinear_sketch::runtime::Manifest::default_dir().join("manifest.json").exists() {
+        let mut exec = sublinear_sketch::runtime::Executor::from_default_dir().unwrap();
+        let dim = 128;
+        let h = 512;
+        let mut points = vec![0f32; 256 * dim];
+        rng.fill_gaussian_f32(&mut points);
+        let mut proj = vec![0f32; dim * h];
+        rng.fill_gaussian_f32(&mut proj);
+        let bias: Vec<f32> = (0..h).map(|_| rng.uniform_f32()).collect();
+        // warm the compile cache
+        let _ = exec.pstable_hash_tiled(dim, &points, &proj, &bias, 0.25).unwrap();
+        let ns = time_ns(2, 20, || {
+            std::hint::black_box(
+                exec.pstable_hash_tiled(dim, &points, &proj, &bias, 0.25).unwrap(),
+            );
+        });
+        table.row(vec![
+            "pjrt.hash_batch".into(),
+            format!("{ns:.0}"),
+            "256x128 pts, 512 slots (1 artifact call)".into(),
+        ]);
+        let ns_per_pt = ns / 256.0;
+        table.row(vec![
+            "pjrt.hash_per_point".into(),
+            format!("{ns_per_pt:.0}"),
+            "amortized".into(),
+        ]);
+
+        // rerank: 64 queries x 48 candidates
+        let nq = 64;
+        let pool: Vec<Vec<f32>> = (0..64)
+            .map(|_| {
+                let mut v = vec![0f32; dim];
+                rng.fill_gaussian_f32(&mut v);
+                v
+            })
+            .collect();
+        let queries: Vec<f32> = points[..nq * dim].to_vec();
+        let cands: Vec<Vec<&[f32]>> = (0..nq)
+            .map(|i| (0..48).map(|j| pool[(i + j) % 64].as_slice()).collect())
+            .collect();
+        let _ = exec.rerank_tiled(dim, &queries, &cands).unwrap();
+        let ns = time_ns(2, 10, || {
+            std::hint::black_box(exec.rerank_tiled(dim, &queries, &cands).unwrap());
+        });
+        table.row(vec![
+            "pjrt.rerank_batch".into(),
+            format!("{ns:.0}"),
+            "64 q x 48 cands, dim 128 (per-query GEMV, pre-opt)".into(),
+        ]);
+
+        // Pooled distance matrix: the optimized serving-path re-rank.
+        let pool_flat: Vec<f32> = pool.iter().flatten().copied().collect();
+        let _ = exec.dist_matrix_tiled(dim, &queries, &pool_flat).unwrap();
+        let ns = time_ns(2, 20, || {
+            std::hint::black_box(exec.dist_matrix_tiled(dim, &queries, &pool_flat).unwrap());
+        });
+        table.row(vec![
+            "pjrt.dist_matrix".into(),
+            format!("{ns:.0}"),
+            "64 q x 64 pool, dim 128 (shared-pool GEMM, post-opt)".into(),
+        ]);
+    } else {
+        table.row(vec!["pjrt.*".into(), "skipped".into(), "artifacts not built".into()]);
+    }
+
+    table.print();
+}

@@ -1,0 +1,166 @@
+//! Exact (brute-force) oracles: ground truth for every experiment metric.
+//!
+//! * [`ExactNn`]: linear-scan nearest neighbors — truth for recall@k and
+//!   (c, r)-accuracy.
+//! * [`exact_kde_angular`] / [`exact_kde_pstable`]: the LSH-kernel density
+//!   Σ_x k^p(x, q) that RACE/SW-AKDE estimate (CS20 Thm 2.3) — truth for
+//!   the relative-error figures. The PJRT `kde_*` artifacts compute the
+//!   same quantity tile-by-tile; `runtime::native` cross-checks both.
+
+use crate::lsh::pstable::PStableLsh;
+use crate::util::{cosine, l2, l2_sq};
+
+/// Brute-force nearest-neighbor index.
+pub struct ExactNn {
+    dim: usize,
+    data: Vec<f32>,
+    n: usize,
+}
+
+impl ExactNn {
+    pub fn new(dim: usize) -> Self {
+        ExactNn { dim, data: Vec::new(), n: 0 }
+    }
+
+    pub fn from_points(dim: usize, pts: &[Vec<f32>]) -> Self {
+        let mut s = Self::new(dim);
+        for p in pts {
+            s.insert(p);
+        }
+        s
+    }
+
+    pub fn insert(&mut self, x: &[f32]) {
+        assert_eq!(x.len(), self.dim);
+        self.data.extend_from_slice(x);
+        self.n += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Exact top-k: (index, distance) ascending.
+    pub fn topk(&self, q: &[f32], k: usize) -> Vec<(usize, f32)> {
+        let mut scored: Vec<(usize, f32)> =
+            (0..self.n).map(|i| (i, l2_sq(self.get(i), q))).collect();
+        scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        scored.truncate(k);
+        scored.iter_mut().for_each(|e| e.1 = e.1.sqrt());
+        scored
+    }
+
+    /// Exact nearest-neighbor distance (∞ when empty).
+    pub fn nn_dist(&self, q: &[f32]) -> f32 {
+        (0..self.n)
+            .map(|i| l2_sq(self.get(i), q))
+            .fold(f32::INFINITY, f32::min)
+            .sqrt()
+    }
+
+    /// Whether any point lies within radius `r` of `q`.
+    pub fn has_within(&self, q: &[f32], r: f32) -> bool {
+        let r_sq = r * r;
+        (0..self.n).any(|i| l2_sq(self.get(i), q) <= r_sq)
+    }
+}
+
+/// Exact angular LSH-kernel density Σ_x (1 − θ(x,q)/π)^p.
+pub fn exact_kde_angular(data: &[Vec<f32>], q: &[f32], p: u32) -> f64 {
+    data.iter()
+        .map(|x| {
+            let cos = cosine(x, q) as f64;
+            (1.0 - cos.acos() / std::f64::consts::PI).powi(p as i32)
+        })
+        .sum()
+}
+
+/// Exact p-stable LSH-kernel density Σ_x P(‖x−q‖; w)^p.
+pub fn exact_kde_pstable(data: &[Vec<f32>], q: &[f32], w: f64, p: u32) -> f64 {
+    data.iter()
+        .map(|x| PStableLsh::collision_prob_for(l2(x, q) as f64, w).powi(p as i32))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn pts(rng: &mut Rng, n: usize, dim: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|_| (0..dim).map(|_| rng.gaussian_f32()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn topk_is_sorted_and_exact() {
+        let mut rng = Rng::new(1);
+        let data = pts(&mut rng, 50, 4);
+        let nn = ExactNn::from_points(4, &data);
+        let q = vec![0.0f32; 4];
+        let top = nn.topk(&q, 5);
+        assert_eq!(top.len(), 5);
+        for w in top.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+        // Exhaustive check of the minimum.
+        let true_min = data
+            .iter()
+            .map(|p| crate::util::l2(p, &q))
+            .fold(f32::INFINITY, f32::min);
+        assert!((top[0].1 - true_min).abs() < 1e-6);
+        assert!((nn.nn_dist(&q) - true_min).abs() < 1e-6);
+    }
+
+    #[test]
+    fn has_within_boundary() {
+        let nn = ExactNn::from_points(2, &[vec![3.0, 4.0]]);
+        let q = vec![0.0f32, 0.0];
+        assert!(nn.has_within(&q, 5.0));
+        assert!(nn.has_within(&q, 5.0001));
+        assert!(!nn.has_within(&q, 4.9999));
+    }
+
+    #[test]
+    fn kde_self_point_contributes_one() {
+        let mut rng = Rng::new(2);
+        let data = pts(&mut rng, 1, 8);
+        let q = data[0].clone();
+        assert!((exact_kde_angular(&data, &q, 4) - 1.0).abs() < 1e-9);
+        assert!((exact_kde_pstable(&data, &q, 2.0, 4) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kde_bounds() {
+        let mut rng = Rng::new(3);
+        let data = pts(&mut rng, 64, 8);
+        let q: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
+        for p in [1u32, 2, 8] {
+            let a = exact_kde_angular(&data, &q, p);
+            let e = exact_kde_pstable(&data, &q, 4.0, p);
+            assert!(a >= 0.0 && a <= 64.0);
+            assert!(e >= 0.0 && e <= 64.0);
+        }
+        // Higher p concentrates the kernel: density can only shrink.
+        assert!(exact_kde_angular(&data, &q, 8) <= exact_kde_angular(&data, &q, 1) + 1e-9);
+    }
+
+    #[test]
+    fn empty_index_behaviour() {
+        let nn = ExactNn::new(3);
+        assert!(nn.is_empty());
+        assert_eq!(nn.topk(&[0.0; 3], 5).len(), 0);
+        assert_eq!(nn.nn_dist(&[0.0; 3]), f32::INFINITY);
+        assert!(!nn.has_within(&[0.0; 3], 1e9));
+    }
+}

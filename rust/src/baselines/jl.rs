@@ -1,0 +1,178 @@
+//! Johnson–Lindenstrauss projection baseline (§5.1).
+//!
+//! The paper's comparator: "the only known strict one-pass solution for
+//! (c, r)-ANN". Every stream point is projected to k dimensions with a
+//! gaussian matrix scaled by 1/√k and stored; queries brute-force scan the
+//! projected points. Compression rate is k/d (all N points are kept, each
+//! shrunk), versus S-ANN's n^{−η} point sampling at full dimensionality.
+
+use crate::storage::VecStore;
+use crate::util::{l2_sq, rng::Rng};
+
+/// One-pass JL sketch: projected points + exhaustive scan queries.
+pub struct JlBaseline {
+    dim: usize,
+    k: usize,
+    /// Row-major [k, dim] projection, scaled by 1/sqrt(k).
+    proj: Vec<f32>,
+    store: VecStore,
+    scratch: Vec<f32>,
+}
+
+impl JlBaseline {
+    pub fn new(dim: usize, k: usize, seed: u64) -> Self {
+        assert!(k >= 1);
+        let mut rng = Rng::new(seed);
+        let scale = 1.0 / (k as f32).sqrt();
+        let mut proj = vec![0.0f32; k * dim];
+        rng.fill_gaussian_f32(&mut proj);
+        proj.iter_mut().for_each(|v| *v *= scale);
+        JlBaseline { dim, k, proj, store: VecStore::new(k), scratch: vec![0.0; k] }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn stored(&self) -> usize {
+        self.store.live()
+    }
+
+    fn project_into(&self, x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.dim);
+        for (j, o) in out.iter_mut().enumerate() {
+            let row = &self.proj[j * self.dim..(j + 1) * self.dim];
+            *o = crate::util::dot(row, x);
+        }
+    }
+
+    /// Insert a stream point (projected; original is NOT kept).
+    pub fn insert(&mut self, x: &[f32]) -> u32 {
+        let mut p = vec![0.0f32; self.k];
+        self.project_into(x, &mut p);
+        self.store.push(&p)
+    }
+
+    /// Exhaustive top-k nearest ids in the projected space (partial
+    /// selection, not a full sort — the scan dominates, as it should).
+    pub fn query_topk(&mut self, q: &[f32], topk: usize) -> Vec<(u32, f32)> {
+        let mut qp = std::mem::take(&mut self.scratch);
+        self.project_into(q, &mut qp);
+        let mut scored: Vec<(u32, f32)> = self
+            .store
+            .live_ids()
+            .map(|id| (id, l2_sq(self.store.get(id), &qp)))
+            .collect();
+        let k = topk.min(scored.len());
+        if k > 0 && k < scored.len() {
+            scored.select_nth_unstable_by(k - 1, |a, b| a.1.partial_cmp(&b.1).unwrap());
+        }
+        scored.truncate(k);
+        scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        self.scratch = qp;
+        scored.iter_mut().for_each(|e| e.1 = e.1.sqrt());
+        scored
+    }
+
+    /// Nearest projected neighbor.
+    pub fn query(&mut self, q: &[f32]) -> Option<(u32, f32)> {
+        self.query_topk(q, 1).first().copied()
+    }
+
+    /// Sketch bytes: projected points plus the projection matrix.
+    pub fn memory_bytes(&self) -> usize {
+        self.store.payload_bytes() + self.proj.len() * 4 + std::mem::size_of::<Self>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pts(rng: &mut Rng, n: usize, dim: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|_| (0..dim).map(|_| rng.gaussian_f32()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn identity_query_finds_itself() {
+        let dim = 32;
+        let mut jl = JlBaseline::new(dim, 16, 1);
+        let mut rng = Rng::new(2);
+        let data = pts(&mut rng, 100, dim);
+        for p in &data {
+            jl.insert(p);
+        }
+        // Distances contract approximately; the stored copy of the query
+        // projects identically, so distance 0 is preserved exactly.
+        let (id, d) = jl.query(&data[7]).unwrap();
+        assert_eq!(id, 7);
+        assert!(d < 1e-5);
+    }
+
+    #[test]
+    fn k_equals_d_recovers_good_neighbors() {
+        // With k=d the projection is a random rotation-ish map: the true
+        // nearest neighbor should usually be ranked first.
+        let dim = 16;
+        let mut jl = JlBaseline::new(dim, dim, 3);
+        let mut rng = Rng::new(4);
+        let data = pts(&mut rng, 200, dim);
+        for p in &data {
+            jl.insert(p);
+        }
+        let mut agree = 0;
+        for qi in 0..30 {
+            let q: Vec<f32> = data[qi].iter().map(|v| v + 0.01 * rng.gaussian_f32()).collect();
+            let (id, _) = jl.query(&q).unwrap();
+            if id == qi as u32 {
+                agree += 1;
+            }
+        }
+        assert!(agree >= 27, "agree={agree}/30");
+    }
+
+    #[test]
+    fn distance_distortion_is_bounded() {
+        // JL lemma sanity: pairwise distances distort within ~(1±eps) for
+        // k = O(log n / eps^2); check empirically at k=64.
+        let dim = 128;
+        let k = 64;
+        let jl = JlBaseline::new(dim, k, 5);
+        let mut rng = Rng::new(6);
+        let data = pts(&mut rng, 40, dim);
+        let mut max_ratio: f32 = 0.0;
+        let mut min_ratio: f32 = f32::MAX;
+        for i in 0..data.len() {
+            for j in (i + 1)..data.len() {
+                let true_d = crate::util::l2(&data[i], &data[j]);
+                let mut pi = vec![0.0; k];
+                let mut pj = vec![0.0; k];
+                jl.project_into(&data[i], &mut pi);
+                jl.project_into(&data[j], &mut pj);
+                let proj_d = crate::util::l2(&pi, &pj);
+                let ratio = proj_d / true_d;
+                max_ratio = max_ratio.max(ratio);
+                min_ratio = min_ratio.min(ratio);
+            }
+        }
+        assert!(max_ratio < 1.6, "max={max_ratio}");
+        assert!(min_ratio > 0.5, "min={min_ratio}");
+    }
+
+    #[test]
+    fn memory_scales_with_k() {
+        let dim = 64;
+        let mut small = JlBaseline::new(dim, 8, 7);
+        let mut large = JlBaseline::new(dim, 32, 7);
+        let mut rng = Rng::new(8);
+        for p in pts(&mut rng, 500, dim) {
+            small.insert(&p);
+            large.insert(&p);
+        }
+        let s = small.memory_bytes() as f64;
+        let l = large.memory_bytes() as f64;
+        assert!(l / s > 3.0 && l / s < 5.0, "ratio={}", l / s);
+    }
+}

@@ -1,0 +1,8 @@
+//! Baselines the paper compares against: JL projection (§5.1) and exact
+//! brute-force oracles used as ground truth in every experiment.
+
+pub mod exact;
+pub mod jl;
+
+pub use exact::{exact_kde_angular, exact_kde_pstable, ExactNn};
+pub use jl::JlBaseline;

@@ -1,0 +1,158 @@
+//! Shared harness for the `benches/` targets (criterion is unavailable
+//! offline; this provides timing, aligned table printing and JSON dumps).
+//!
+//! Every figure bench prints the paper's rows/series as a table and writes
+//! the same data to `bench_out/<name>.json` for downstream plotting.
+
+use std::time::Instant;
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Time a closure: `warmup` throwaway calls then `iters` timed calls;
+/// returns mean nanoseconds per call.
+pub fn time_ns<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_nanos() as f64 / iters.max(1) as f64
+}
+
+/// Aligned-table printer for bench output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|h| h.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let joined: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect();
+            println!("  {}", joined.join("  "));
+        };
+        line(&self.headers);
+        let total: usize = widths.iter().sum::<usize>() + 2 * widths.len();
+        println!("  {}", "-".repeat(total));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Collects one figure's series and dumps them to bench_out/<name>.json.
+pub struct FigureOutput {
+    name: String,
+    series: Vec<(String, Vec<(f64, f64)>)>,
+    meta: Vec<(String, String)>,
+}
+
+impl FigureOutput {
+    pub fn new(name: &str) -> Self {
+        FigureOutput { name: name.to_string(), series: Vec::new(), meta: Vec::new() }
+    }
+
+    pub fn meta(&mut self, key: &str, value: &str) {
+        self.meta.push((key.to_string(), value.to_string()));
+    }
+
+    pub fn push(&mut self, series: &str, x: f64, y: f64) {
+        if let Some(e) = self.series.iter_mut().find(|(n, _)| n == series) {
+            e.1.push((x, y));
+        } else {
+            self.series.push((series.to_string(), vec![(x, y)]));
+        }
+    }
+
+    pub fn series(&self, name: &str) -> Option<&[(f64, f64)]> {
+        self.series.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_slice())
+    }
+
+    /// Write bench_out/<name>.json.
+    pub fn save(&self) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all("bench_out")?;
+        let path = std::path::PathBuf::from(format!("bench_out/{}.json", self.name));
+        let series_json: Vec<Json> = self
+            .series
+            .iter()
+            .map(|(name, pts)| {
+                obj(vec![
+                    ("name", s(name)),
+                    ("x", arr(pts.iter().map(|(x, _)| num(*x)))),
+                    ("y", arr(pts.iter().map(|(_, y)| num(*y)))),
+                ])
+            })
+            .collect();
+        let meta_json = obj(self.meta.iter().map(|(k, v)| (k.as_str(), s(v))).collect());
+        let root = obj(vec![
+            ("figure", s(&self.name)),
+            ("meta", meta_json),
+            ("series", Json::Arr(series_json)),
+        ]);
+        std::fs::write(&path, root.to_string())?;
+        Ok(path)
+    }
+}
+
+/// `--full` on the bench command line selects paper-scale parameters.
+pub fn full_scale() -> bool {
+    std::env::args().any(|a| a == "--full")
+}
+
+/// Standard bench banner.
+pub fn banner(fig: &str, what: &str) {
+    println!("\n=== {fig}: {what} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_ns_is_positive() {
+        let ns = time_ns(2, 10, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(ns > 0.0);
+    }
+
+    #[test]
+    fn figure_output_roundtrip() {
+        let mut f = FigureOutput::new("test_fig");
+        f.meta("dataset", "unit");
+        f.push("a", 1.0, 2.0);
+        f.push("a", 2.0, 3.0);
+        f.push("b", 1.0, 9.0);
+        assert_eq!(f.series("a").unwrap().len(), 2);
+        assert_eq!(f.series("b").unwrap(), &[(1.0, 9.0)]);
+        assert!(f.series("c").is_none());
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new(&["a", "long_header"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print();
+    }
+}

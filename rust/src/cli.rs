@@ -1,0 +1,147 @@
+//! Minimal CLI argument parser for the `sketchd` binary (no clap offline).
+//! Supports `subcommand --flag value --switch positional` grammars with
+//! typed accessors and an auto-generated usage block.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv\[0\]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> anyhow::Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    // `--` terminator: rest is positional
+                    out.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> anyhow::Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.flags
+            .get(name)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_flags_switches_positional() {
+        let a = parse("serve --shards 4 --use-pjrt --eta=0.5 input.toml");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get_usize("shards", 1).unwrap(), 4);
+        assert!(a.has("use-pjrt"));
+        assert_eq!(a.get_f64("eta", 0.0).unwrap(), 0.5);
+        assert_eq!(a.positional, vec!["input.toml"]);
+    }
+
+    #[test]
+    fn defaults_apply_when_absent() {
+        let a = parse("bench");
+        assert_eq!(a.get_usize("n", 1000).unwrap(), 1000);
+        assert_eq!(a.get_str("dataset", "sift"), "sift");
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse("x --n abc");
+        // "abc" consumed as value of --n
+        assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn double_dash_terminates_flags() {
+        let a = parse("run --k 2 -- --not-a-flag file");
+        assert_eq!(a.get_usize("k", 0).unwrap(), 2);
+        assert_eq!(a.positional, vec!["--not-a-flag", "file"]);
+    }
+
+    #[test]
+    fn no_subcommand_when_flags_first() {
+        let a = parse("--help");
+        assert!(a.subcommand.is_none());
+        assert!(a.has("help"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag_becomes_switch() {
+        let a = parse("s --verbose --n 3");
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 3);
+    }
+}

@@ -1,0 +1,117 @@
+//! TOML-subset parser: `[section]` headers and `key = value` scalar lines,
+//! `#` comments, quoted or bare values. Exactly what experiment configs
+//! need; arrays/tables are out of scope by design.
+
+use std::collections::BTreeMap;
+
+/// Parsed sections → key → raw value string.
+#[derive(Debug, Default)]
+pub struct ConfigFile {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl ConfigFile {
+    pub fn parse(src: &str) -> anyhow::Result<Self> {
+        let mut out = ConfigFile::default();
+        let mut current = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow::anyhow!("line {}: unclosed section", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    anyhow::bail!("line {}: empty section name", lineno + 1);
+                }
+                current = name.to_string();
+                out.sections.entry(current.clone()).or_default();
+            } else if let Some((k, v)) = line.split_once('=') {
+                let key = k.trim();
+                if key.is_empty() {
+                    anyhow::bail!("line {}: empty key", lineno + 1);
+                }
+                let val = unquote(v.trim());
+                out.sections
+                    .entry(current.clone())
+                    .or_default()
+                    .insert(key.to_string(), val);
+            } else {
+                anyhow::bail!("line {}: expected `key = value` or `[section]`", lineno + 1);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(String::as_str)
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(String::as_str)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside quotes.
+    let mut in_quote = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_quote = !in_quote,
+            '#' if !in_quote => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(v: &str) -> String {
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        v[1..v.len() - 1].to_string()
+    } else {
+        v.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_keys_comments() {
+        let f = ConfigFile::parse(
+            "# top comment\n[a]\nx = 1 # trailing\ny = \"hash # inside\"\n\n[b]\nz = true\n",
+        )
+        .unwrap();
+        assert_eq!(f.get("a", "x"), Some("1"));
+        assert_eq!(f.get("a", "y"), Some("hash # inside"));
+        assert_eq!(f.get("b", "z"), Some("true"));
+        assert_eq!(f.get("a", "missing"), None);
+        assert_eq!(f.get("missing", "x"), None);
+        assert_eq!(f.sections().count(), 2);
+    }
+
+    #[test]
+    fn top_level_keys_live_in_empty_section() {
+        let f = ConfigFile::parse("k = v\n[s]\nk = w\n").unwrap();
+        assert_eq!(f.get("", "k"), Some("v"));
+        assert_eq!(f.get("s", "k"), Some("w"));
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(ConfigFile::parse("[unclosed\n").is_err());
+        assert!(ConfigFile::parse("justaword\n").is_err());
+        assert!(ConfigFile::parse("= novalue\n").is_err());
+        assert!(ConfigFile::parse("[]\n").is_err());
+    }
+
+    #[test]
+    fn last_duplicate_wins() {
+        let f = ConfigFile::parse("[s]\nk = 1\nk = 2\n").unwrap();
+        assert_eq!(f.get("s", "k"), Some("2"));
+    }
+}

@@ -1,0 +1,190 @@
+//! Configuration system: typed experiment/service configs loadable from a
+//! TOML-subset file (sections, scalar keys; no serde offline — parser in
+//! `file.rs`). Every knob the paper's experiments sweep is expressible
+//! here, and the CLI maps flags onto the same structs.
+
+pub mod file;
+
+use crate::coordinator::{KdeKernel, KdeShardConfig, Overload, RoutePolicy, ServiceConfig};
+use crate::sketch::ann::SAnnConfig;
+
+use file::ConfigFile;
+
+/// Typed view over a parsed config file with defaulting.
+pub struct Config {
+    file: ConfigFile,
+}
+
+impl Config {
+    pub fn parse(src: &str) -> anyhow::Result<Self> {
+        Ok(Config { file: ConfigFile::parse(src)? })
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+        let src = std::fs::read_to_string(path)?;
+        Self::parse(&src)
+    }
+
+    pub fn empty() -> Self {
+        Config { file: ConfigFile::default() }
+    }
+
+    fn f64(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.file.get(section, key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn usize(&self, section: &str, key: &str, default: usize) -> usize {
+        self.file.get(section, key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn u64(&self, section: &str, key: &str, default: u64) -> u64 {
+        self.file.get(section, key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn str(&self, section: &str, key: &str, default: &str) -> String {
+        self.file.get(section, key).map(str::to_string).unwrap_or_else(|| default.into())
+    }
+
+    fn bool(&self, section: &str, key: &str, default: bool) -> bool {
+        self.file
+            .get(section, key)
+            .map(|v| v == "true" || v == "1")
+            .unwrap_or(default)
+    }
+
+    /// `[ann]` section → S-ANN sketch parameters.
+    pub fn ann(&self, dim: usize, n_max: usize) -> anyhow::Result<SAnnConfig> {
+        let cfg = SAnnConfig {
+            dim,
+            n_max: self.usize("ann", "n_max", n_max),
+            eta: self.f64("ann", "eta", 0.5),
+            r: self.f64("ann", "r", 1.0),
+            c: self.f64("ann", "c", 2.0),
+            w: self.f64("ann", "w", 4.0),
+            l_cap: self.usize("ann", "l_cap", 32),
+            seed: self.u64("ann", "seed", 42),
+        };
+        if !(0.0..=1.0).contains(&cfg.eta) {
+            anyhow::bail!("ann.eta must be in [0,1], got {}", cfg.eta);
+        }
+        if cfg.c <= 1.0 {
+            anyhow::bail!("ann.c must be > 1, got {}", cfg.c);
+        }
+        if cfg.r <= 0.0 || cfg.w <= 0.0 {
+            anyhow::bail!("ann.r and ann.w must be positive");
+        }
+        Ok(cfg)
+    }
+
+    /// `[kde]` section → SW-AKDE shard parameters.
+    pub fn kde(&self) -> anyhow::Result<KdeShardConfig> {
+        let kernel = match self.str("kde", "kernel", "angular").as_str() {
+            "angular" => KdeKernel::Angular,
+            "euclidean" => KdeKernel::Euclidean,
+            other => anyhow::bail!("kde.kernel must be angular|euclidean, got {other:?}"),
+        };
+        let cfg = KdeShardConfig {
+            kernel,
+            rows: self.usize("kde", "rows", 64),
+            p: self.usize("kde", "p", 3),
+            range: self.usize("kde", "range", 64),
+            width: self.f64("kde", "width", 4.0) as f32,
+            eps_eh: self.f64("kde", "eps_eh", 0.1),
+            window: self.u64("kde", "window", 1024),
+        };
+        if cfg.eps_eh <= 0.0 || cfg.eps_eh > 1.0 {
+            anyhow::bail!("kde.eps_eh must be in (0,1], got {}", cfg.eps_eh);
+        }
+        if cfg.rows == 0 || cfg.p == 0 || cfg.window == 0 {
+            anyhow::bail!("kde.rows, kde.p, kde.window must be positive");
+        }
+        Ok(cfg)
+    }
+
+    /// `[service]` section (+ `[ann]`/`[kde]`) → full service config.
+    pub fn service(&self, dim: usize, n_max: usize) -> anyhow::Result<ServiceConfig> {
+        let route = match self.str("service", "route", "hash").as_str() {
+            "hash" => RoutePolicy::HashVector,
+            "round_robin" => RoutePolicy::RoundRobin,
+            other => anyhow::bail!("service.route must be hash|round_robin, got {other:?}"),
+        };
+        let overload = match self.str("service", "overload", "block").as_str() {
+            "block" => Overload::Block,
+            "shed" => Overload::Shed,
+            other => anyhow::bail!("service.overload must be block|shed, got {other:?}"),
+        };
+        Ok(ServiceConfig {
+            dim,
+            shards: self.usize("service", "shards", 4).max(1),
+            route,
+            queue_cap: self.usize("service", "queue_cap", 1024).max(1),
+            overload,
+            ann: self.ann(dim, n_max)?,
+            kde: self.kde()?,
+            seed: self.u64("service", "seed", 42),
+            use_pjrt: self.bool("service", "use_pjrt", false),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+[ann]
+eta = 0.6
+r = 0.5
+c = 2.0
+w = 4.0
+
+[kde]
+kernel = euclidean
+rows = 128
+window = 450
+
+[service]
+shards = 2
+route = round_robin
+use_pjrt = true
+"#;
+
+    #[test]
+    fn parses_sections_with_defaults() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let ann = c.ann(32, 10_000).unwrap();
+        assert_eq!(ann.eta, 0.6);
+        assert_eq!(ann.r, 0.5);
+        assert_eq!(ann.l_cap, 32, "default applies");
+        let kde = c.kde().unwrap();
+        assert_eq!(kde.kernel, KdeKernel::Euclidean);
+        assert_eq!(kde.rows, 128);
+        assert_eq!(kde.window, 450);
+        assert_eq!(kde.p, 3, "default applies");
+        let svc = c.service(32, 10_000).unwrap();
+        assert_eq!(svc.shards, 2);
+        assert_eq!(svc.route, RoutePolicy::RoundRobin);
+        assert!(svc.use_pjrt);
+    }
+
+    #[test]
+    fn empty_config_is_all_defaults() {
+        let c = Config::empty();
+        assert!(c.service(16, 1000).is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_bad_values() {
+        let c = Config::parse("[ann]\neta = 1.5\n").unwrap();
+        assert!(c.ann(8, 100).is_err());
+        let c = Config::parse("[ann]\nc = 0.5\n").unwrap();
+        assert!(c.ann(8, 100).is_err());
+        let c = Config::parse("[kde]\nkernel = banana\n").unwrap();
+        assert!(c.kde().is_err());
+        let c = Config::parse("[kde]\neps_eh = 0\n").unwrap();
+        assert!(c.kde().is_err());
+        let c = Config::parse("[service]\nroute = nowhere\n").unwrap();
+        assert!(c.service(8, 100).is_err());
+    }
+}

@@ -1,0 +1,132 @@
+//! Dynamic query batcher (§3.3 batch queries): accumulate items until a
+//! size cap or a deadline, whichever fires first, then hand the batch to a
+//! processor. Both sketches answer batches far more efficiently than
+//! singles — hashing and re-ranking become one PJRT artifact call — so the
+//! batcher is the front door of the serving path.
+
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Flush when this many items are pending.
+    pub max_batch: usize,
+    /// Flush when the oldest pending item has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Accumulates items and reports when a flush is due.
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    pending: Vec<T>,
+    oldest: Option<Instant>,
+    pub batches_flushed: u64,
+    pub items_seen: u64,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch > 0);
+        Batcher { policy, pending: Vec::new(), oldest: None, batches_flushed: 0, items_seen: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Add an item; returns a full batch if the size cap fired.
+    pub fn push(&mut self, item: T) -> Option<Vec<T>> {
+        if self.pending.is_empty() {
+            self.oldest = Some(Instant::now());
+        }
+        self.pending.push(item);
+        self.items_seen += 1;
+        if self.pending.len() >= self.policy.max_batch {
+            return Some(self.flush());
+        }
+        None
+    }
+
+    /// Whether the deadline has expired for the oldest pending item.
+    pub fn deadline_due(&self) -> bool {
+        self.oldest
+            .map(|t| t.elapsed() >= self.policy.max_wait)
+            .unwrap_or(false)
+    }
+
+    /// Time until the deadline fires (None when empty).
+    pub fn time_to_deadline(&self) -> Option<Duration> {
+        self.oldest
+            .map(|t| self.policy.max_wait.saturating_sub(t.elapsed()))
+    }
+
+    /// Take the pending batch.
+    pub fn flush(&mut self) -> Vec<T> {
+        self.oldest = None;
+        if !self.pending.is_empty() {
+            self.batches_flushed += 1;
+        }
+        std::mem::take(&mut self.pending)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_cap_flushes() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(10) });
+        assert!(b.push(1).is_none());
+        assert!(b.push(2).is_none());
+        let batch = b.push(3).expect("size cap");
+        assert_eq!(batch, vec![1, 2, 3]);
+        assert!(b.is_empty());
+        assert_eq!(b.batches_flushed, 1);
+    }
+
+    #[test]
+    fn deadline_fires_for_partial_batch() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_millis(5),
+        });
+        b.push(42);
+        assert!(!b.deadline_due());
+        std::thread::sleep(Duration::from_millis(8));
+        assert!(b.deadline_due());
+        assert_eq!(b.flush(), vec![42]);
+        assert!(!b.deadline_due(), "empty batcher has no deadline");
+    }
+
+    #[test]
+    fn never_exceeds_max_batch() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(1) });
+        let mut sizes = Vec::new();
+        for i in 0..21 {
+            if let Some(batch) = b.push(i) {
+                sizes.push(batch.len());
+            }
+        }
+        sizes.push(b.flush().len());
+        assert!(sizes.iter().all(|&s| s <= 4), "sizes={sizes:?}");
+        assert_eq!(sizes.iter().sum::<usize>(), 21, "no item lost");
+    }
+
+    #[test]
+    fn flush_on_empty_is_empty_and_uncounted() {
+        let mut b = Batcher::<u8>::new(BatchPolicy::default());
+        assert!(b.flush().is_empty());
+        assert_eq!(b.batches_flushed, 0);
+    }
+}

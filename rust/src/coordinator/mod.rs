@@ -1,0 +1,17 @@
+//! The L3 coordinator: a thread-per-shard streaming sketch service with
+//! routing, bounded ingestion, dynamic query batching, and an optional
+//! PJRT re-rank stage. See DESIGN.md §1 for the layer diagram.
+
+pub mod backpressure;
+pub mod batcher;
+pub mod protocol;
+pub mod router;
+pub mod server;
+pub mod shard;
+
+pub use backpressure::{bounded, BoundedSender, Overload};
+pub use batcher::{BatchPolicy, Batcher};
+pub use protocol::{AnnAnswer, ServiceStats};
+pub use router::{RoutePolicy, Router};
+pub use server::{ServiceConfig, SketchService};
+pub use shard::{KdeKernel, KdeShardConfig};

@@ -1,0 +1,116 @@
+//! Wire types of the coordinator: commands shards accept and the replies
+//! they produce. Channels are attached at the server layer; these types
+//! stay plain data so they can be logged, tested and replayed.
+
+use std::sync::Arc;
+
+/// A batch of query vectors shared across shards without copying.
+pub type QueryBatch = Arc<Vec<Vec<f32>>>;
+
+/// One ANN answer: the returned point (its stored vector) and distance.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AnnAnswer {
+    /// Global point id: (shard, local id).
+    pub shard: usize,
+    pub id: u32,
+    pub dist: f32,
+}
+
+/// Per-shard partial result for one query batch.
+#[derive(Clone, Debug, Default)]
+pub struct ShardAnnResult {
+    /// One entry per query: best candidate on this shard, if any.
+    pub best: Vec<Option<AnnAnswer>>,
+    /// Candidates scanned (diagnostics).
+    pub scanned: usize,
+}
+
+/// Per-shard partial KDE result: un-normalized kernel sums per query plus
+/// the shard's live window population.
+#[derive(Clone, Debug, Default)]
+pub struct ShardKdeResult {
+    pub kernel_sums: Vec<f64>,
+    pub population: u64,
+}
+
+/// Aggregate service statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ServiceStats {
+    pub inserts: u64,
+    pub deletes: u64,
+    pub ann_queries: u64,
+    pub kde_queries: u64,
+    pub shed: u64,
+    pub stored_points: usize,
+    pub sketch_bytes: usize,
+}
+
+/// Merge ANN partials: per query, keep the globally nearest answer.
+pub fn merge_ann(partials: &[ShardAnnResult], n_queries: usize) -> Vec<Option<AnnAnswer>> {
+    let mut out: Vec<Option<AnnAnswer>> = vec![None; n_queries];
+    for part in partials {
+        for (i, ans) in part.best.iter().enumerate() {
+            if let Some(a) = ans {
+                if out[i].as_ref().map_or(true, |b| a.dist < b.dist) {
+                    out[i] = Some(a.clone());
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Merge KDE partials: kernel sums add across the partition.
+pub fn merge_kde(partials: &[ShardKdeResult], n_queries: usize) -> (Vec<f64>, u64) {
+    let mut sums = vec![0.0; n_queries];
+    let mut pop = 0u64;
+    for part in partials {
+        for (i, &s) in part.kernel_sums.iter().enumerate() {
+            sums[i] += s;
+        }
+        pop += part.population;
+    }
+    (sums, pop)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_ann_takes_global_min() {
+        let a = ShardAnnResult {
+            best: vec![
+                Some(AnnAnswer { shard: 0, id: 1, dist: 2.0 }),
+                None,
+            ],
+            scanned: 0,
+        };
+        let b = ShardAnnResult {
+            best: vec![
+                Some(AnnAnswer { shard: 1, id: 7, dist: 1.0 }),
+                Some(AnnAnswer { shard: 1, id: 8, dist: 3.0 }),
+            ],
+            scanned: 0,
+        };
+        let merged = merge_ann(&[a, b], 2);
+        assert_eq!(merged[0].as_ref().unwrap().id, 7);
+        assert_eq!(merged[1].as_ref().unwrap().id, 8);
+    }
+
+    #[test]
+    fn merge_ann_all_none() {
+        let a = ShardAnnResult { best: vec![None, None], scanned: 0 };
+        let merged = merge_ann(&[a], 2);
+        assert!(merged.iter().all(Option::is_none));
+    }
+
+    #[test]
+    fn merge_kde_sums_and_population() {
+        let a = ShardKdeResult { kernel_sums: vec![1.0, 2.0], population: 10 };
+        let b = ShardKdeResult { kernel_sums: vec![0.5, 0.5], population: 5 };
+        let (sums, pop) = merge_kde(&[a, b], 2);
+        assert_eq!(sums, vec![1.5, 2.5]);
+        assert_eq!(pop, 15);
+    }
+}

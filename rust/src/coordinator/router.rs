@@ -1,0 +1,121 @@
+//! Insert routing: which shard owns an arriving stream element.
+//!
+//! Routing must be a *partition* (each point to exactly one shard) and
+//! deterministic for the turnstile model — a deletion must route to the
+//! shard that holds the point, so hashing the vector's bytes is the
+//! default. Round-robin is available for pure insert-only workloads where
+//! per-shard balance matters more than delete-addressability.
+
+/// Routing policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// FNV-1a over the vector bytes mod shards (turnstile-safe).
+    HashVector,
+    /// Strict round-robin (insert-only streams).
+    RoundRobin,
+}
+
+/// The router state.
+pub struct Router {
+    policy: RoutePolicy,
+    shards: usize,
+    rr_next: usize,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy, shards: usize) -> Self {
+        assert!(shards > 0);
+        Router { policy, shards, rr_next: 0 }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Shard for an arriving vector.
+    pub fn route(&mut self, x: &[f32]) -> usize {
+        match self.policy {
+            RoutePolicy::HashVector => hash_vector(x) as usize % self.shards,
+            RoutePolicy::RoundRobin => {
+                let s = self.rr_next;
+                self.rr_next = (self.rr_next + 1) % self.shards;
+                s
+            }
+        }
+    }
+
+    /// Shard that holds `x` (deletes); only meaningful under HashVector.
+    pub fn route_delete(&self, x: &[f32]) -> Option<usize> {
+        match self.policy {
+            RoutePolicy::HashVector => Some(hash_vector(x) as usize % self.shards),
+            RoutePolicy::RoundRobin => None,
+        }
+    }
+}
+
+/// FNV-1a over the f32 bit patterns.
+pub fn hash_vector(x: &[f32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &v in x {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_routing_is_deterministic() {
+        let mut r = Router::new(RoutePolicy::HashVector, 4);
+        let x = vec![1.0f32, 2.0, 3.0];
+        let s = r.route(&x);
+        for _ in 0..10 {
+            assert_eq!(r.route(&x), s);
+        }
+        assert_eq!(r.route_delete(&x), Some(s), "delete must co-route");
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(RoutePolicy::RoundRobin, 3);
+        let x = vec![0.0f32];
+        assert_eq!(r.route(&x), 0);
+        assert_eq!(r.route(&x), 1);
+        assert_eq!(r.route(&x), 2);
+        assert_eq!(r.route(&x), 0);
+        assert_eq!(r.route_delete(&x), None);
+    }
+
+    #[test]
+    fn hash_routing_is_balanced() {
+        let mut r = Router::new(RoutePolicy::HashVector, 4);
+        let mut rng = crate::util::rng::Rng::new(1);
+        let mut counts = [0usize; 4];
+        for _ in 0..4000 {
+            let x: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
+            counts[r.route(&x)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 1000.0).abs() < 150.0, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn routing_is_a_partition() {
+        // The same vector can never land on two shards.
+        let mut r = Router::new(RoutePolicy::HashVector, 7);
+        let mut rng = crate::util::rng::Rng::new(2);
+        for _ in 0..100 {
+            let x: Vec<f32> = (0..4).map(|_| rng.gaussian_f32()).collect();
+            let a = r.route(&x);
+            let b = r.route(&x);
+            assert_eq!(a, b);
+            assert!(a < 7);
+        }
+    }
+}

@@ -1,0 +1,528 @@
+//! The sketch service: thread-per-shard coordinator with bounded
+//! ingestion, scatter/gather batch queries, and an optional PJRT re-rank
+//! stage (the L3 ↔ runtime seam).
+//!
+//! Data flow (serving path, Python nowhere):
+//!
+//! ```text
+//! inserts ─ router ─ bounded mailbox ─▶ shard threads (S-ANN + SW-AKDE)
+//! queries ─ batcher ─ scatter ────────▶ shards: probe buckets (3L cap)
+//!            ◀─ gather candidates ──── candidates (ids + vectors)
+//!            PJRT rerank_l2 artifact (or native fallback) → argmin → reply
+//! ```
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::runtime::Executor;
+use crate::sketch::ann::SAnnConfig;
+
+use super::backpressure::{bounded, BoundedSender, Overload};
+use super::protocol::{merge_ann, merge_kde, AnnAnswer, ServiceStats};
+use super::router::{RoutePolicy, Router};
+use super::shard::{KdeShardConfig, Shard, ShardCmd};
+
+/// Service construction parameters.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    pub dim: usize,
+    pub shards: usize,
+    pub route: RoutePolicy,
+    /// Per-shard mailbox depth.
+    pub queue_cap: usize,
+    /// Insert overload policy (queries always block).
+    pub overload: Overload,
+    pub ann: SAnnConfig,
+    pub kde: KdeShardConfig,
+    pub seed: u64,
+    /// Re-rank gathered candidates through the PJRT artifact when true;
+    /// pure-native otherwise.
+    pub use_pjrt: bool,
+}
+
+impl ServiceConfig {
+    /// Reasonable defaults for a dim-`d` stream of up to `n` points.
+    pub fn default_for(dim: usize, n: usize) -> Self {
+        ServiceConfig {
+            dim,
+            shards: 4,
+            route: RoutePolicy::HashVector,
+            queue_cap: 1024,
+            overload: Overload::Block,
+            ann: SAnnConfig {
+                dim,
+                n_max: n,
+                eta: 0.5,
+                r: 1.0,
+                c: 2.0,
+                w: 4.0,
+                l_cap: 32,
+                seed: 42,
+            },
+            kde: KdeShardConfig {
+                kernel: super::shard::KdeKernel::Angular,
+                rows: 32,
+                p: 3,
+                range: 0,
+                width: 4.0,
+                eps_eh: 0.1,
+                window: 1024,
+            },
+            seed: 42,
+            use_pjrt: false,
+        }
+    }
+}
+
+struct ShardHandle {
+    tx: BoundedSender<ShardCmd>,
+    join: Option<JoinHandle<()>>,
+    /// ANN hash params cloned before the shard moved to its thread:
+    /// (projection [dim, k*L], biases, width, k, L). Used by the server to
+    /// batch-hash queries through the PJRT artifact.
+    hash_params: (Vec<f32>, Vec<f32>, f32, usize, usize),
+    /// KDE hash params: (projection [dim, rows*p], biases, width, rows*p,
+    /// kernel) — drives the batched PJRT ingest path.
+    kde_params: (Vec<f32>, Vec<f32>, f32, usize, super::shard::KdeKernel),
+}
+
+/// The running service.
+pub struct SketchService {
+    cfg: ServiceConfig,
+    shards: Vec<ShardHandle>,
+    router: Router,
+    executor: Option<Executor>,
+    stats: ServiceStats,
+    /// Per-shard pending ingest (batched PJRT path): points accumulate
+    /// until a shard's buffer fills one artifact batch, so the hash GEMM
+    /// runs at full utilization instead of padding 16 rows to 256.
+    pending_ingest: Vec<Vec<Vec<f32>>>,
+}
+
+/// Rows per batched-ingest flush (the hash artifacts' batch dimension).
+const INGEST_FLUSH_ROWS: usize = 256;
+
+impl SketchService {
+    /// Spawn shard threads (and the PJRT executor when `use_pjrt`).
+    pub fn start(cfg: ServiceConfig) -> Result<Self> {
+        let per_shard_n = cfg.ann.n_max.div_ceil(cfg.shards).max(2);
+        let mut shards = Vec::with_capacity(cfg.shards);
+        for i in 0..cfg.shards {
+            let ann_cfg = SAnnConfig { n_max: per_shard_n, ..cfg.ann.clone() };
+            let kde_cfg = KdeShardConfig {
+                window: (cfg.kde.window / cfg.shards as u64).max(1),
+                ..cfg.kde.clone()
+            };
+            let shard = Shard::new(i, ann_cfg, &kde_cfg, cfg.seed ^ 0xD1E5 ^ i as u64);
+            let hash_params = shard.ann_hash_params();
+            let kde_params = shard.kde_hash_params();
+            let (tx, rx) = bounded(cfg.queue_cap, cfg.overload);
+            let join = std::thread::Builder::new()
+                .name(format!("shard-{i}"))
+                .spawn(move || shard.run(rx))?;
+            shards.push(ShardHandle { tx, join: Some(join), hash_params, kde_params });
+        }
+        let executor = if cfg.use_pjrt { Some(Executor::from_default_dir()?) } else { None };
+        let router = Router::new(cfg.route, cfg.shards);
+        let pending_ingest = vec![Vec::new(); cfg.shards];
+        Ok(SketchService {
+            cfg,
+            shards,
+            router,
+            executor,
+            stats: ServiceStats::default(),
+            pending_ingest,
+        })
+    }
+
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
+    /// Offer one stream element. Returns false if it was shed.
+    pub fn insert(&mut self, x: Vec<f32>) -> bool {
+        let shard = self.router.route(&x);
+        self.stats.inserts += 1;
+        let ok = self.shards[shard].tx.offer(ShardCmd::Insert(x));
+        if !ok {
+            self.stats.shed += 1;
+        }
+        ok
+    }
+
+    /// Batched ingest: routes the batch, hashes each shard's slice through
+    /// the PJRT artifacts (ANN p-stable + KDE family) in one GEMM each, and
+    /// ships precomputed slots so shard threads only touch tables/EHs.
+    /// Falls back to per-item native inserts without an executor.
+    pub fn insert_batch(&mut self, batch: Vec<Vec<f32>>) -> usize {
+        if self.executor.is_none() {
+            let mut ok = 0;
+            for x in batch {
+                ok += self.insert(x) as usize;
+            }
+            return ok;
+        }
+        // Route into per-shard pending buffers; flush a shard only when a
+        // full artifact batch has accumulated (utilization over latency —
+        // callers needing immediate visibility call `flush_ingest`).
+        for x in batch {
+            let s = self.router.route(&x);
+            self.pending_ingest[s].push(x);
+            if self.pending_ingest[s].len() >= INGEST_FLUSH_ROWS {
+                self.flush_shard_ingest(s);
+            }
+        }
+        0
+    }
+
+    /// Push all pending batched-ingest points to their shards.
+    pub fn flush_ingest(&mut self) {
+        for s in 0..self.shards.len() {
+            self.flush_shard_ingest(s);
+        }
+    }
+
+    fn flush_shard_ingest(&mut self, si: usize) {
+        let pts = std::mem::take(&mut self.pending_ingest[si]);
+        if pts.is_empty() {
+            return;
+        }
+        let dim = self.cfg.dim;
+        let m = pts.len();
+        self.stats.inserts += m as u64;
+        let flat: Vec<f32> = pts.iter().flatten().copied().collect();
+        let exec = self.executor.as_mut().unwrap();
+        let (proj, bias, w, k, l) = &self.shards[si].hash_params;
+        let ann_slots = exec.pstable_hash_tiled(dim, &flat, proj, bias, 1.0 / *w).ok();
+        let (kproj, kbias, kw, kh, kernel) = &self.shards[si].kde_params;
+        let kde_slots = match kernel {
+            super::shard::KdeKernel::Angular => exec.srp_hash_tiled(dim, &flat, kproj, *kh).ok(),
+            super::shard::KdeKernel::Euclidean => {
+                exec.pstable_hash_tiled(dim, &flat, kproj, kbias, 1.0 / *kw).ok()
+            }
+        };
+        match (ann_slots, kde_slots) {
+            (Some(a), Some(kd)) => {
+                let h = k * l;
+                let items: Vec<(Vec<f32>, Vec<i64>, Vec<i64>)> = pts
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, x)| {
+                        (
+                            x,
+                            a[i * h..(i + 1) * h].to_vec(),
+                            kd[i * kh..(i + 1) * kh].to_vec(),
+                        )
+                    })
+                    .collect();
+                if !self.shards[si].tx.offer(ShardCmd::InsertBatchSlots(items)) {
+                    self.stats.shed += m as u64;
+                }
+            }
+            _ => {
+                // artifact variant missing: native per-item path
+                for x in pts {
+                    if !self.shards[si].tx.offer(ShardCmd::Insert(x)) {
+                        self.stats.shed += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Turnstile deletion (HashVector routing only).
+    pub fn delete(&mut self, x: Vec<f32>) -> bool {
+        let Some(shard) = self.router.route_delete(&x) else {
+            return false;
+        };
+        self.stats.deletes += 1;
+        let (tx, rx) = channel();
+        if !self.shards[shard].tx.force(ShardCmd::Delete(x, tx)) {
+            return false;
+        }
+        rx.recv().unwrap_or(false)
+    }
+
+    /// Batched (c, r)-ANN: scatter to all shards, gather, and either merge
+    /// native per-shard bests or re-rank all candidates through PJRT.
+    pub fn query_batch(&mut self, queries: Vec<Vec<f32>>) -> Vec<Option<AnnAnswer>> {
+        let n = queries.len();
+        self.stats.ann_queries += n as u64;
+        if n == 0 {
+            return Vec::new();
+        }
+        let batch = Arc::new(queries);
+        if self.executor.is_some() {
+            self.query_batch_pjrt(batch)
+        } else {
+            let mut replies = Vec::with_capacity(self.shards.len());
+            for s in &self.shards {
+                let (tx, rx) = channel();
+                if s.tx.force(ShardCmd::AnnBatch(Arc::clone(&batch), tx)) {
+                    replies.push(rx);
+                }
+            }
+            let partials: Vec<_> = replies.into_iter().filter_map(|rx| rx.recv().ok()).collect();
+            merge_ann(&partials, n)
+        }
+    }
+
+    fn query_batch_pjrt(&mut self, batch: Arc<Vec<Vec<f32>>>) -> Vec<Option<AnnAnswer>> {
+        let n = batch.len();
+        let dim = self.cfg.dim;
+        let trace = std::env::var_os("SKETCH_TRACE").is_some();
+        let t0 = std::time::Instant::now();
+        // Hash the whole batch per shard through the PJRT artifact (one
+        // projection GEMM per shard, §Perf iteration 4), then scatter the
+        // precomputed table keys. Falls back to shard-side hashing when the
+        // artifact variant is missing.
+        let flat_q: Vec<f32> = batch.iter().flatten().copied().collect();
+        let mut replies = Vec::with_capacity(self.shards.len());
+        for s in &self.shards {
+            let (tx, rx) = channel();
+            let (proj, bias, w, k, l) = &s.hash_params;
+            let exec = self.executor.as_mut().unwrap();
+            let keys = exec
+                .pstable_hash_tiled(dim, &flat_q, proj, bias, 1.0 / *w)
+                .ok()
+                .map(|slots| {
+                    let hasher = crate::lsh::concat::TableHasher::new(*k, *l);
+                    let h = k * l;
+                    let mut all = Vec::with_capacity(n);
+                    let mut keybuf = Vec::new();
+                    for qi in 0..n {
+                        hasher.keys_from_slots(&slots[qi * h..(qi + 1) * h], &mut keybuf);
+                        all.push(std::mem::take(&mut keybuf));
+                    }
+                    all
+                });
+            let sent = match keys {
+                Some(all) => s.tx.force(ShardCmd::AnnCandidatesKeys(Arc::new(all), tx)),
+                None => s.tx.force(ShardCmd::AnnCandidates(Arc::clone(&batch), tx)),
+            };
+            if sent {
+                replies.push(rx);
+            }
+        }
+        // Batched queries share candidates heavily (they probe the same
+        // LSH tables), so shards reply with DEDUPLICATED pools; the server
+        // concatenates them and computes one Q×P distance matrix — a plain
+        // GEMM the MXU (and XLA:CPU) loves — instead of per-query GEMV
+        // re-ranks (EXPERIMENTS.md §Perf, iterations 1–2).
+        let mut pool_flat: Vec<f32> = Vec::new();
+        let mut pool_meta: Vec<(usize, u32)> = Vec::new(); // slot -> (shard, id)
+        let mut per_query: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (si, rx) in replies.into_iter().enumerate() {
+            if let Ok(cands) = rx.recv() {
+                let base = pool_meta.len();
+                pool_flat.extend_from_slice(&cands.pool);
+                pool_meta.extend(cands.ids.iter().map(|&id| (si, id)));
+                for (qi, idxs) in cands.per_query.into_iter().enumerate() {
+                    per_query[qi].extend(idxs.into_iter().map(|s| base + s as usize));
+                }
+            }
+        }
+        if pool_flat.is_empty() {
+            return vec![None; n];
+        }
+        let t_gather = t0.elapsed();
+        let exec = self.executor.as_mut().unwrap();
+        let flat_q: Vec<f32> = batch.iter().flatten().copied().collect();
+        let p = pool_flat.len() / dim;
+        let dists = match exec.dist_matrix_tiled(dim, &flat_q, &pool_flat) {
+            Ok(d) => d,
+            Err(_) => crate::runtime::native::dist_matrix(dim, &flat_q, &pool_flat),
+        };
+        if trace {
+            eprintln!(
+                "[trace] batch n={n} pool={p} gather={:.1}ms rerank={:.1}ms",
+                t_gather.as_secs_f64() * 1e3,
+                (t0.elapsed() - t_gather).as_secs_f64() * 1e3
+            );
+        }
+        let r2 = (self.cfg.ann.c * self.cfg.ann.r) as f32;
+        let r2_sq = r2 * r2;
+        per_query
+            .iter()
+            .enumerate()
+            .map(|(qi, slots)| {
+                let row = &dists[qi * p..(qi + 1) * p];
+                let mut best: Option<AnnAnswer> = None;
+                for &slot in slots {
+                    let d_sq = row[slot];
+                    if d_sq <= r2_sq
+                        && best.as_ref().map_or(true, |b| d_sq.sqrt() < b.dist)
+                    {
+                        let (shard, id) = pool_meta[slot];
+                        best = Some(AnnAnswer { shard, id, dist: d_sq.sqrt() });
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+
+    /// Batched sliding-window KDE: summed kernel estimates and density.
+    pub fn kde_batch(&mut self, queries: Vec<Vec<f32>>) -> (Vec<f64>, Vec<f64>) {
+        let n = queries.len();
+        self.stats.kde_queries += n as u64;
+        if n == 0 {
+            return (Vec::new(), Vec::new());
+        }
+        let batch = Arc::new(queries);
+        let mut replies = Vec::with_capacity(self.shards.len());
+        for s in &self.shards {
+            let (tx, rx) = channel();
+            if s.tx.force(ShardCmd::KdeBatch(Arc::clone(&batch), tx)) {
+                replies.push(rx);
+            }
+        }
+        let partials: Vec<_> = replies.into_iter().filter_map(|rx| rx.recv().ok()).collect();
+        let (sums, pop) = merge_kde(&partials, n);
+        let density = sums
+            .iter()
+            .map(|&s| if pop > 0 { s / pop as f64 } else { 0.0 })
+            .collect();
+        (sums, density)
+    }
+
+    /// Wait until every shard has drained its mailbox (barrier); pending
+    /// batched-ingest buffers are pushed first.
+    pub fn flush(&mut self) {
+        self.flush_ingest();
+        for s in &self.shards {
+            let (tx, rx) = channel();
+            if s.tx.force(ShardCmd::Stats(tx)) {
+                let _ = rx.recv();
+            }
+        }
+    }
+
+    /// Aggregate statistics (drains mailboxes first).
+    pub fn stats(&mut self) -> ServiceStats {
+        let mut out = self.stats.clone();
+        for s in &self.shards {
+            let (tx, rx) = channel();
+            if s.tx.force(ShardCmd::Stats(tx)) {
+                if let Ok(st) = rx.recv() {
+                    out.stored_points += st.stored;
+                    out.sketch_bytes += st.sketch_bytes;
+                }
+            }
+        }
+        out.shed = self.shards.iter().map(|s| s.tx.shed_count()).sum();
+        out
+    }
+
+    /// Graceful shutdown.
+    pub fn shutdown(mut self) {
+        for s in &self.shards {
+            let _ = s.tx.force(ShardCmd::Shutdown);
+        }
+        for s in &mut self.shards {
+            if let Some(j) = s.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn small_cfg() -> ServiceConfig {
+        let mut cfg = ServiceConfig::default_for(8, 1000);
+        cfg.shards = 2;
+        cfg.ann.eta = 0.0;
+        cfg.kde.rows = 8;
+        cfg.kde.window = 200;
+        cfg
+    }
+
+    #[test]
+    fn insert_query_shutdown() {
+        let mut svc = SketchService::start(small_cfg()).unwrap();
+        let mut rng = Rng::new(1);
+        let pts: Vec<Vec<f32>> = (0..100)
+            .map(|_| (0..8).map(|_| rng.gaussian_f32()).collect())
+            .collect();
+        for p in &pts {
+            assert!(svc.insert(p.clone()));
+        }
+        svc.flush();
+        let answers = svc.query_batch(pts[..10].to_vec());
+        let hits = answers.iter().filter(|a| a.is_some()).count();
+        assert!(hits >= 9, "hits={hits}/10");
+        for a in answers.into_iter().flatten() {
+            assert!(a.dist <= 2.0 + 1e-5);
+        }
+        let st = svc.stats();
+        assert_eq!(st.inserts, 100);
+        assert_eq!(st.stored_points, 100, "eta=0 stores all");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn kde_batch_counts_window_population() {
+        let mut svc = SketchService::start(small_cfg()).unwrap();
+        let mut rng = Rng::new(2);
+        for _ in 0..60 {
+            let p: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
+            svc.insert(p);
+        }
+        svc.flush();
+        let q: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
+        let (sums, density) = svc.kde_batch(vec![q]);
+        assert_eq!(sums.len(), 1);
+        assert!(sums[0] >= 0.0);
+        assert!(density[0] >= 0.0 && density[0] <= 1.0 + 1e-9);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn delete_routes_to_owning_shard() {
+        let mut svc = SketchService::start(small_cfg()).unwrap();
+        let p: Vec<f32> = (0..8).map(|i| i as f32 * 0.1).collect();
+        svc.insert(p.clone());
+        svc.flush();
+        assert!(svc.delete(p.clone()), "must delete the stored copy");
+        assert!(!svc.delete(p.clone()), "second delete no-op");
+        svc.flush();
+        let ans = svc.query_batch(vec![p]);
+        assert!(ans[0].is_none(), "deleted point must not answer");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let mut svc = SketchService::start(small_cfg()).unwrap();
+        assert!(svc.query_batch(vec![]).is_empty());
+        let (s, d) = svc.kde_batch(vec![]);
+        assert!(s.is_empty() && d.is_empty());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shed_policy_counts_drops_without_deadlock() {
+        let mut cfg = small_cfg();
+        cfg.queue_cap = 2;
+        cfg.overload = Overload::Shed;
+        let mut svc = SketchService::start(cfg).unwrap();
+        let mut rng = Rng::new(3);
+        for _ in 0..5000 {
+            let p: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
+            svc.insert(p); // may shed; must never block forever
+        }
+        svc.flush();
+        let st = svc.stats();
+        assert!(st.inserts == 5000);
+        // stored + shed accounting is consistent
+        assert!(st.stored_points as u64 + st.shed <= 5000);
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,363 @@
+//! Shard worker: owns one partition of the service state — an S-ANN
+//! sketch and an SW-AKDE sketch over the points routed to it — and
+//! processes commands from its mailbox on a dedicated thread.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+use crate::lsh::concat::BoundedHasher;
+use crate::lsh::pstable::PStableLsh;
+use crate::lsh::srp::SrpLsh;
+use crate::lsh::LshFamily;
+use crate::sketch::ann::{SAnn, SAnnConfig};
+use crate::sketch::swakde::SwAkde;
+use crate::util::rng::Rng;
+
+use super::protocol::{AnnAnswer, ShardAnnResult, ShardKdeResult};
+
+/// Which LSH kernel the KDE sketch runs (paper evaluates both).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KdeKernel {
+    /// SRP / angular with bit-packed cells (range 2^p).
+    Angular,
+    /// p-stable Euclidean, rehashed to `range` cells.
+    Euclidean,
+}
+
+/// KDE sketch parameters for a shard.
+#[derive(Clone, Debug)]
+pub struct KdeShardConfig {
+    pub kernel: KdeKernel,
+    pub rows: usize,
+    pub p: usize,
+    /// Cell range for Euclidean (ignored for Angular: 2^p).
+    pub range: usize,
+    /// p-stable bucket width (Euclidean only).
+    pub width: f32,
+    pub eps_eh: f64,
+    /// Per-shard window (global window / shards under round-robin).
+    pub window: u64,
+}
+
+/// Commands a shard accepts.
+pub enum ShardCmd {
+    Insert(Vec<f32>),
+    /// Insert with precomputed raw ANN hash slots (PJRT bulk-load path).
+    InsertWithSlots(Vec<f32>, Vec<i64>),
+    /// Batched inserts with precomputed ANN and KDE raw slots — the fully
+    /// AOT ingest path: the server hashes whole batches through the PJRT
+    /// artifacts, shard threads only update tables and EHs (§Perf it 5).
+    InsertBatchSlots(Vec<(Vec<f32>, Vec<i64>, Vec<i64>)>),
+    Delete(Vec<f32>, Sender<bool>),
+    /// Native ANN: per-query best candidate on this shard.
+    AnnBatch(super::protocol::QueryBatch, Sender<ShardAnnResult>),
+    /// PJRT ANN: shard-deduplicated candidate pool + per-query indices
+    /// into it (the server merges pools and re-ranks via one GEMM).
+    AnnCandidates(super::protocol::QueryBatch, Sender<ShardCandidates>),
+    /// Like AnnCandidates, but with table keys precomputed by the server
+    /// (batched through the PJRT hash artifact): \[query][L\] keys.
+    AnnCandidatesKeys(Arc<Vec<Vec<u64>>>, Sender<ShardCandidates>),
+    KdeBatch(super::protocol::QueryBatch, Sender<ShardKdeResult>),
+    Stats(Sender<ShardStats>),
+    Shutdown,
+}
+
+/// Deduplicated candidate reply: each candidate vector ships once per
+/// batch regardless of how many queries hit it.
+#[derive(Clone, Debug, Default)]
+pub struct ShardCandidates {
+    /// Unique candidate ids, aligned with `pool` rows.
+    pub ids: Vec<u32>,
+    /// Row-major [ids.len(), dim] vector payload.
+    pub pool: Vec<f32>,
+    /// Per query: indices into `ids`/`pool`.
+    pub per_query: Vec<Vec<u32>>,
+}
+
+/// Shard-level statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ShardStats {
+    pub stored: usize,
+    pub inserted: u64,
+    pub deleted: u64,
+    pub sketch_bytes: usize,
+    pub kde_occupied_cells: usize,
+}
+
+/// The state each shard thread owns.
+pub struct Shard {
+    pub index: usize,
+    ann: SAnn,
+    kde: SwAkde,
+    kde_family: Box<dyn LshFamily>,
+    stats: ShardStats,
+}
+
+impl Shard {
+    pub fn new(index: usize, ann_cfg: SAnnConfig, kde_cfg: &KdeShardConfig, seed: u64) -> Self {
+        let ann = SAnn::new(SAnnConfig { seed: seed ^ (index as u64) << 8, ..ann_cfg });
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E3779B97F4A7C15) ^ index as u64);
+        let (kde, kde_family): (SwAkde, Box<dyn LshFamily>) = match kde_cfg.kernel {
+            KdeKernel::Angular => {
+                let hasher = BoundedHasher::new_packed(kde_cfg.p, kde_cfg.rows);
+                let fam = SrpLsh::new(ann.config().dim, hasher.funcs_needed(), &mut rng);
+                (
+                    SwAkde::with_hasher(hasher, kde_cfg.eps_eh, kde_cfg.window),
+                    Box::new(fam),
+                )
+            }
+            KdeKernel::Euclidean => {
+                let hasher = BoundedHasher::new(kde_cfg.p, kde_cfg.rows, kde_cfg.range);
+                let fam =
+                    PStableLsh::new(ann.config().dim, hasher.funcs_needed(), kde_cfg.width, &mut rng);
+                (
+                    SwAkde::with_hasher(hasher, kde_cfg.eps_eh, kde_cfg.window),
+                    Box::new(fam),
+                )
+            }
+        };
+        Shard { index, ann, kde, kde_family, stats: ShardStats::default() }
+    }
+
+    /// ANN hashing parameters of this shard, cloned for the server's
+    /// batched PJRT hash path: (projection [dim, k*L], biases, width, k, L).
+    pub fn ann_hash_params(&self) -> (Vec<f32>, Vec<f32>, f32, usize, usize) {
+        (
+            self.ann.family().projection().to_vec(),
+            self.ann.family().biases().to_vec(),
+            self.ann.family().width(),
+            self.ann.params().k,
+            self.ann.params().l,
+        )
+    }
+
+    /// KDE hashing parameters for the server's batched PJRT ingest:
+    /// (projection [dim, rows*p], biases-or-empty, width, rows*p, kernel).
+    pub fn kde_hash_params(&self) -> (Vec<f32>, Vec<f32>, f32, usize, KdeKernel) {
+        let fam = self.kde_family.as_ref();
+        let kernel = if fam.as_any_pstable().is_some() {
+            KdeKernel::Euclidean
+        } else {
+            KdeKernel::Angular
+        };
+        let (bias, w) = match fam.as_any_pstable() {
+            Some(ps) => (ps.biases().to_vec(), ps.width()),
+            None => (Vec::new(), 0.0),
+        };
+        (fam.projection().to_vec(), bias, w, fam.n_funcs(), kernel)
+    }
+
+    fn intern(
+        ids: &mut Vec<u32>,
+        pool: &mut Vec<f32>,
+        slot_of: &mut std::collections::HashMap<u32, u32>,
+        ann: &SAnn,
+        cand_ids: Vec<u32>,
+    ) -> Vec<u32> {
+        let mut idxs = Vec::with_capacity(cand_ids.len());
+        for id in cand_ids {
+            let slot = *slot_of.entry(id).or_insert_with(|| {
+                ids.push(id);
+                pool.extend_from_slice(ann.vector(id));
+                (ids.len() - 1) as u32
+            });
+            idxs.push(slot);
+        }
+        idxs
+    }
+
+    pub fn handle(&mut self, cmd: ShardCmd) -> bool {
+        match cmd {
+            ShardCmd::Insert(x) => {
+                self.ann.insert(&x);
+                self.kde.add(self.kde_family.as_ref(), &x);
+                self.stats.inserted += 1;
+            }
+            ShardCmd::InsertWithSlots(x, slots) => {
+                // Sampler decision still applies; slots bypass only hashing.
+                if self.ann.sampler_keep() {
+                    self.ann.insert_retained_slots(&x, &slots);
+                }
+                self.kde.add(self.kde_family.as_ref(), &x);
+                self.stats.inserted += 1;
+            }
+            ShardCmd::InsertBatchSlots(batch) => {
+                for (x, ann_slots, kde_slots) in batch {
+                    if self.ann.sampler_keep() {
+                        self.ann.insert_retained_slots(&x, &ann_slots);
+                    }
+                    self.kde.add_slots(&kde_slots);
+                    self.stats.inserted += 1;
+                }
+            }
+            ShardCmd::Delete(x, reply) => {
+                let removed = self.ann.delete(&x);
+                if removed {
+                    self.stats.deleted += 1;
+                }
+                let _ = reply.send(removed);
+            }
+            ShardCmd::AnnBatch(batch, reply) => {
+                let mut out = ShardAnnResult::default();
+                for q in batch.iter() {
+                    let (ans, st) = self.ann.query_with_stats(q);
+                    out.scanned += st.scanned;
+                    out.best.push(ans.map(|(id, dist)| AnnAnswer {
+                        shard: self.index,
+                        id,
+                        dist,
+                    }));
+                }
+                let _ = reply.send(out);
+            }
+            ShardCmd::AnnCandidates(batch, reply) => {
+                let mut out = ShardCandidates::default();
+                let mut slot_of: std::collections::HashMap<u32, u32> = Default::default();
+                for q in batch.iter() {
+                    let ids = self.ann.candidates(q).to_vec();
+                    out.per_query.push(Self::intern(&mut out.ids, &mut out.pool, &mut slot_of, &self.ann, ids));
+                }
+                let _ = reply.send(out);
+            }
+            ShardCmd::AnnCandidatesKeys(keys, reply) => {
+                let mut out = ShardCandidates::default();
+                let mut slot_of: std::collections::HashMap<u32, u32> = Default::default();
+                for qkeys in keys.iter() {
+                    let ids = self.ann.candidates_by_keys(qkeys).to_vec();
+                    out.per_query.push(Self::intern(&mut out.ids, &mut out.pool, &mut slot_of, &self.ann, ids));
+                }
+                let _ = reply.send(out);
+            }
+            ShardCmd::KdeBatch(batch, reply) => {
+                let fam = self.kde_family.as_ref();
+                let sums: Vec<f64> = batch.iter().map(|q| self.kde.query(fam, q)).collect();
+                let _ = reply.send(ShardKdeResult {
+                    kernel_sums: sums,
+                    population: self.kde.now().min(self.kde.window()),
+                });
+            }
+            ShardCmd::Stats(reply) => {
+                self.stats.stored = self.ann.stored();
+                self.stats.sketch_bytes = self.ann.memory_bytes() + self.kde.memory_bytes();
+                self.stats.kde_occupied_cells = self.kde.occupied_cells();
+                let _ = reply.send(self.stats.clone());
+            }
+            ShardCmd::Shutdown => return false,
+        }
+        true
+    }
+
+    /// Run the mailbox loop until Shutdown or channel close.
+    pub fn run(mut self, rx: Receiver<ShardCmd>) {
+        while let Ok(cmd) = rx.recv() {
+            if !self.handle(cmd) {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::sync::Arc;
+
+    fn mk_shard() -> Shard {
+        let ann_cfg = SAnnConfig {
+            dim: 8,
+            n_max: 1000,
+            eta: 0.0,
+            r: 1.0,
+            c: 2.0,
+            w: 4.0,
+            l_cap: 16,
+            seed: 7,
+        };
+        let kde_cfg = KdeShardConfig {
+            kernel: KdeKernel::Angular,
+            rows: 8,
+            p: 3,
+            range: 0,
+            width: 0.0,
+            eps_eh: 0.1,
+            window: 100,
+        };
+        Shard::new(0, ann_cfg, &kde_cfg, 99)
+    }
+
+    #[test]
+    fn insert_then_query_roundtrip() {
+        let mut s = mk_shard();
+        let mut rng = Rng::new(1);
+        let pts: Vec<Vec<f32>> = (0..50)
+            .map(|_| (0..8).map(|_| rng.gaussian_f32()).collect())
+            .collect();
+        for p in &pts {
+            assert!(s.handle(ShardCmd::Insert(p.clone())));
+        }
+        let (tx, rx) = channel();
+        let batch = Arc::new(vec![pts[3].clone()]);
+        s.handle(ShardCmd::AnnBatch(batch, tx));
+        let res = rx.recv().unwrap();
+        assert_eq!(res.best.len(), 1);
+        let ans = res.best[0].as_ref().expect("stored point must be found");
+        assert!(ans.dist < 1e-5);
+        assert_eq!(ans.shard, 0);
+    }
+
+    #[test]
+    fn kde_batch_reports_population() {
+        let mut s = mk_shard();
+        let mut rng = Rng::new(2);
+        for _ in 0..30 {
+            let p: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
+            s.handle(ShardCmd::Insert(p));
+        }
+        let (tx, rx) = channel();
+        let q: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
+        s.handle(ShardCmd::KdeBatch(Arc::new(vec![q]), tx));
+        let res = rx.recv().unwrap();
+        assert_eq!(res.population, 30);
+        assert_eq!(res.kernel_sums.len(), 1);
+        assert!(res.kernel_sums[0] >= 0.0);
+    }
+
+    #[test]
+    fn delete_roundtrip() {
+        let mut s = mk_shard();
+        let p: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        s.handle(ShardCmd::Insert(p.clone()));
+        let (tx, rx) = channel();
+        s.handle(ShardCmd::Delete(p.clone(), tx));
+        assert!(rx.recv().unwrap());
+        let (tx, rx) = channel();
+        s.handle(ShardCmd::Delete(p, tx));
+        assert!(!rx.recv().unwrap(), "second delete no-op");
+    }
+
+    #[test]
+    fn shutdown_stops_loop() {
+        let s = mk_shard();
+        let (tx, rx) = channel();
+        let t = std::thread::spawn(move || s.run(rx));
+        tx.send(ShardCmd::Insert(vec![0.5; 8])).unwrap();
+        tx.send(ShardCmd::Shutdown).unwrap();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn stats_reflect_activity() {
+        let mut s = mk_shard();
+        for i in 0..10 {
+            s.handle(ShardCmd::Insert(vec![i as f32; 8]));
+        }
+        let (tx, rx) = channel();
+        s.handle(ShardCmd::Stats(tx));
+        let st = rx.recv().unwrap();
+        assert_eq!(st.inserted, 10);
+        assert_eq!(st.stored, 10, "eta=0 retains all");
+        assert!(st.sketch_bytes > 0);
+        assert!(st.kde_occupied_cells > 0);
+    }
+}

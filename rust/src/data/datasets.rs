@@ -1,0 +1,292 @@
+//! Synthetic stand-ins for the paper's real datasets (offline environment;
+//! substitution table in DESIGN.md §2). Each generator is deterministic in
+//! its seed and calibrated to the geometric property the corresponding
+//! experiment actually exercises:
+//!
+//! * `sift_like`  (128-d, sift1m):     clustered non-negative descriptors —
+//!    local density / recall-vs-compression trade-offs.
+//! * `fmnist_like` (784-d, fashion-mnist): 10 class prototypes + structured
+//!    pixel noise in \[0,1\] — low intrinsic dimension inside high ambient.
+//! * `news_like`  (384-d, MiniLM embeddings): unit-norm topic mixtures with
+//!    temporal topic drift — cosine geometry + sliding-window dynamics.
+//! * `rosis_like` (103-d, ROSIS hyperspectral): smooth per-material spectra
+//!    — correlated channels, material clusters.
+
+use crate::util::rng::Rng;
+
+/// A generated dataset with stream order and query split.
+pub struct Dataset {
+    pub name: &'static str,
+    pub dim: usize,
+    pub points: Vec<Vec<f32>>,
+}
+
+impl Dataset {
+    /// Split off the last `n_queries` points as queries (stream/query split
+    /// used by the ANN experiments).
+    pub fn split_queries(mut self, n_queries: usize) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        assert!(n_queries < self.points.len());
+        let queries = self.points.split_off(self.points.len() - n_queries);
+        (self.points, queries)
+    }
+}
+
+/// sift1m-like: `clusters` centers in the positive orthant, heavy-tailed
+/// cluster sizes, descriptor-ish coordinates (non-negative, bounded).
+pub fn sift_like(n: usize, seed: u64) -> Dataset {
+    let dim = 128;
+    let clusters = 64;
+    let mut rng = Rng::new(seed);
+    let centers: Vec<Vec<f32>> = (0..clusters)
+        .map(|_| (0..dim).map(|_| (rng.uniform() * 120.0) as f32).collect())
+        .collect();
+    let points = (0..n)
+        .map(|_| {
+            let c = &centers[rng.below(clusters as u64) as usize];
+            (0..dim)
+                .map(|i| (c[i] + rng.gaussian_f32() * 12.0).clamp(0.0, 255.0))
+                .collect()
+        })
+        .collect();
+    Dataset { name: "sift-like", dim, points }
+}
+
+/// fashion-mnist-like: 10 prototypes in \[0,1\]^784 with smooth "stroke"
+/// noise (neighboring pixels correlated), flattened 28×28.
+pub fn fmnist_like(n: usize, seed: u64) -> Dataset {
+    let dim = 784;
+    let classes = 10;
+    let mut rng = Rng::new(seed);
+    // Prototype = smoothed random mask (simulates garment silhouettes).
+    let protos: Vec<Vec<f32>> = (0..classes)
+        .map(|_| {
+            let mut raw: Vec<f32> = (0..dim).map(|_| rng.uniform_f32()).collect();
+            smooth_28x28(&mut raw);
+            raw
+        })
+        .collect();
+    let points = (0..n)
+        .map(|_| {
+            let p = &protos[rng.below(classes as u64) as usize];
+            let mut v: Vec<f32> = (0..dim)
+                .map(|i| (p[i] + rng.gaussian_f32() * 0.15).clamp(0.0, 1.0))
+                .collect();
+            smooth_28x28(&mut v);
+            v
+        })
+        .collect();
+    Dataset { name: "fmnist-like", dim, points }
+}
+
+fn smooth_28x28(img: &mut [f32]) {
+    debug_assert_eq!(img.len(), 784);
+    let src = img.to_vec();
+    for y in 0..28 {
+        for x in 0..28 {
+            let mut acc = 0.0;
+            let mut cnt = 0.0;
+            for (dy, dx) in [(0i32, 0i32), (0, 1), (1, 0), (0, -1), (-1, 0)] {
+                let (ny, nx) = (y as i32 + dy, x as i32 + dx);
+                if (0..28).contains(&ny) && (0..28).contains(&nx) {
+                    acc += src[(ny * 28 + nx) as usize];
+                    cnt += 1.0;
+                }
+            }
+            img[(y * 28 + x) as usize] = acc / cnt;
+        }
+    }
+}
+
+/// news-like: unit-norm 384-d "embeddings" as mixtures of `topics` topic
+/// vectors; the active topic distribution drifts along the stream
+/// (position-dependent), giving the sliding window something to track.
+pub fn news_like(n: usize, seed: u64) -> Dataset {
+    let dim = 384;
+    let topics = 24;
+    let mut rng = Rng::new(seed);
+    let topic_vecs: Vec<Vec<f32>> = (0..topics)
+        .map(|_| {
+            let mut v: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+            normalize(&mut v);
+            v
+        })
+        .collect();
+    let points = (0..n)
+        .map(|t| {
+            // Drift: the dominant topic rotates slowly with stream position.
+            let phase = t as f64 / n.max(1) as f64 * topics as f64;
+            let main = (phase as usize) % topics;
+            let second = rng.below(topics as u64) as usize;
+            let w = 0.6 + 0.3 * rng.uniform_f32();
+            let mut v: Vec<f32> = (0..dim)
+                .map(|i| {
+                    w * topic_vecs[main][i]
+                        + (1.0 - w) * topic_vecs[second][i]
+                        + 0.25 * rng.gaussian_f32() / (dim as f32).sqrt()
+                })
+                .collect();
+            normalize(&mut v);
+            v
+        })
+        .collect();
+    Dataset { name: "news-like", dim, points }
+}
+
+/// rosis-like: 103-channel spectra as smooth combinations of `materials`
+/// basis curves (gaussian bumps over the band axis) + sensor noise.
+pub fn rosis_like(n: usize, seed: u64) -> Dataset {
+    let dim = 103;
+    let materials = 9;
+    let mut rng = Rng::new(seed);
+    let bases: Vec<Vec<f32>> = (0..materials)
+        .map(|_| {
+            // Each material: 2-4 spectral bumps.
+            let bumps = 2 + rng.below(3) as usize;
+            let mut v = vec![0.0f32; dim];
+            for _ in 0..bumps {
+                let center = rng.uniform() * dim as f64;
+                let width = 4.0 + rng.uniform() * 16.0;
+                let amp = (0.3 + rng.uniform() * 0.7) as f32;
+                for (i, vi) in v.iter_mut().enumerate() {
+                    let z = (i as f64 - center) / width;
+                    *vi += amp * (-0.5 * z * z).exp() as f32;
+                }
+            }
+            v
+        })
+        .collect();
+    let points = (0..n)
+        .map(|_| {
+            let m = &bases[rng.below(materials as u64) as usize];
+            let gain = 0.7 + 0.6 * rng.uniform_f32();
+            (0..dim)
+                .map(|i| (m[i] * gain + rng.gaussian_f32() * 0.02).max(0.0))
+                .collect()
+        })
+        .collect();
+    Dataset { name: "rosis-like", dim, points }
+}
+
+/// syn-32: the paper's PPP dataset (delegates to `synthetic`).
+pub fn syn32(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let points = super::synthetic::uniform_cube(n, 32, 10.0, &mut rng);
+    Dataset { name: "syn-32", dim: 32, points }
+}
+
+/// KDE Monte-Carlo synthetic (10 gaussians × blocks, dim 200).
+pub fn kde_synthetic(n: usize, seed: u64) -> Dataset {
+    let per_block = n.div_ceil(10);
+    let mut rng = Rng::new(seed);
+    let mut points =
+        super::synthetic::gaussian_blocks(10, per_block, 200, 4.0, 1.0, &mut rng);
+    points.truncate(n);
+    Dataset { name: "kde-synthetic", dim: 200, points }
+}
+
+fn normalize(v: &mut [f32]) {
+    let n = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+    if n > 0.0 {
+        v.iter_mut().for_each(|x| *x /= n);
+    }
+}
+
+/// All ANN datasets at a given size (Fig 6–8 sweeps).
+pub fn ann_suite(n: usize, seed: u64) -> Vec<Dataset> {
+    vec![sift_like(n, seed), fmnist_like(n, seed ^ 1), syn32(n, seed ^ 2)]
+}
+
+/// All KDE datasets at a given size (Fig 9–11 sweeps).
+pub fn kde_suite(n: usize, seed: u64) -> Vec<Dataset> {
+    vec![news_like(n, seed), rosis_like(n, seed ^ 1), kde_synthetic(n, seed ^ 2)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_match_the_paper() {
+        assert_eq!(sift_like(10, 1).dim, 128);
+        assert_eq!(fmnist_like(10, 1).dim, 784);
+        assert_eq!(news_like(10, 1).dim, 384);
+        assert_eq!(rosis_like(10, 1).dim, 103);
+        assert_eq!(syn32(10, 1).dim, 32);
+        assert_eq!(kde_synthetic(10, 1).dim, 200);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = sift_like(50, 7).points;
+        let b = sift_like(50, 7).points;
+        let c = sift_like(50, 8).points;
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn news_vectors_are_unit_norm() {
+        for p in &news_like(100, 3).points {
+            let n: f32 = p.iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-4, "norm={n}");
+        }
+    }
+
+    #[test]
+    fn sift_values_in_descriptor_range() {
+        for p in &sift_like(100, 4).points {
+            assert!(p.iter().all(|&v| (0.0..=255.0).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn fmnist_values_in_unit_range() {
+        for p in &fmnist_like(20, 5).points {
+            assert!(p.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn rosis_spectra_nonnegative_and_smooth() {
+        for p in &rosis_like(50, 6).points {
+            assert!(p.iter().all(|&v| v >= 0.0));
+            // Smoothness: mean |channel diff| well below dynamic range.
+            let diffs: f32 =
+                p.windows(2).map(|w| (w[1] - w[0]).abs()).sum::<f32>() / (p.len() - 1) as f32;
+            let range = p.iter().cloned().fold(0.0f32, f32::max);
+            assert!(diffs < 0.3 * range.max(0.05), "diffs={diffs} range={range}");
+        }
+    }
+
+    #[test]
+    fn clustered_sets_have_structure() {
+        // Nearest-neighbor distance should be much smaller than the mean
+        // pairwise distance for clustered data.
+        let pts = sift_like(300, 9).points;
+        let nn = crate::baselines::ExactNn::from_points(128, &pts[1..].to_vec());
+        let d_nn = nn.nn_dist(&pts[0]);
+        let d_far = crate::util::l2(&pts[0], &pts[150]);
+        assert!(d_nn < d_far, "nn={d_nn} random-pair={d_far}");
+    }
+
+    #[test]
+    fn news_drift_separates_stream_ends() {
+        let pts = news_like(2000, 10).points;
+        // Average cosine between early-early pairs > early-late pairs.
+        let mut early = 0.0;
+        let mut cross = 0.0;
+        for i in 0..50 {
+            early += crate::util::cosine(&pts[i], &pts[i + 50]) as f64;
+            cross += crate::util::cosine(&pts[i], &pts[1900 + i]) as f64;
+        }
+        assert!(early > cross, "early={early} cross={cross}");
+    }
+
+    #[test]
+    fn split_queries_partitions() {
+        let ds = syn32(100, 11);
+        let (stream, queries) = ds.split_queries(20);
+        assert_eq!(stream.len(), 80);
+        assert_eq!(queries.len(), 20);
+    }
+}

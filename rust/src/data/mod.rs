@@ -1,0 +1,7 @@
+//! Workload data: the paper's synthetic processes and offline stand-ins
+//! for its real datasets (DESIGN.md §2).
+
+pub mod datasets;
+pub mod synthetic;
+
+pub use datasets::Dataset;

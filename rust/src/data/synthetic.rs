@@ -1,0 +1,167 @@
+//! The paper's own synthetic workloads.
+//!
+//! * [`poisson_process`] — syn-32 (§5.1): points drawn from a homogeneous
+//!   Poisson point process, the distributional assumption of Theorem 3.1
+//!   (ball occupancy ~ Poisson(m)).
+//! * [`gaussian_blocks`] — the A-KDE Monte-Carlo stream (§5.2): 10k points
+//!   of dimension 200, one multivariate gaussian per 1k-block, so the
+//!   density drifts exactly when a block boundary crosses the window.
+
+use crate::util::rng::Rng;
+
+/// Homogeneous Poisson point process on the cube \[0, side\]^dim.
+///
+/// The number of points is Poisson(intensity · side^dim) and positions are
+/// i.i.d. uniform — the standard construction. For the experiments we fix
+/// the expected count `n_expected` and solve for the intensity, so ball
+/// occupancy has Poisson mean m = n_expected · vol(B_r)/side^dim.
+pub fn poisson_process(n_expected: usize, dim: usize, side: f64, rng: &mut Rng) -> Vec<Vec<f32>> {
+    let n = rng.poisson(n_expected as f64) as usize;
+    (0..n)
+        .map(|_| (0..dim).map(|_| (rng.uniform() * side) as f32).collect())
+        .collect()
+}
+
+/// Exactly-n uniform points on \[0, side\]^dim (conditioned PPP — given the
+/// count, PPP positions are i.i.d. uniform; benches use this for fixed N).
+pub fn uniform_cube(n: usize, dim: usize, side: f64, rng: &mut Rng) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|_| (0..dim).map(|_| (rng.uniform() * side) as f32).collect())
+        .collect()
+}
+
+/// The A-KDE Monte-Carlo stream: `blocks` gaussians, `per_block` points
+/// each, means resampled per block (paper: 10 gaussians × 1000 points,
+/// dim 200). Returns points in stream order.
+pub fn gaussian_blocks(
+    blocks: usize,
+    per_block: usize,
+    dim: usize,
+    mean_scale: f64,
+    sigma: f64,
+    rng: &mut Rng,
+) -> Vec<Vec<f32>> {
+    let mut out = Vec::with_capacity(blocks * per_block);
+    for _ in 0..blocks {
+        let mean: Vec<f64> = (0..dim).map(|_| rng.gaussian() * mean_scale).collect();
+        for _ in 0..per_block {
+            out.push(
+                (0..dim)
+                    .map(|i| (mean[i] + rng.gaussian() * sigma) as f32)
+                    .collect(),
+            );
+        }
+    }
+    out
+}
+
+/// Mean r-ball occupancy of a PPP with `n` expected points on \[0,side\]^dim:
+/// m = n · vol(B_r) / side^dim (needed to instantiate Theorem 3.1's m).
+pub fn ppp_ball_mean(n: usize, dim: usize, side: f64, r: f64) -> f64 {
+    // vol(B_r) in d dims = pi^{d/2} r^d / Gamma(d/2 + 1); use ln-gamma via
+    // Stirling for stability at high d.
+    let d = dim as f64;
+    let ln_vol = (d / 2.0) * std::f64::consts::PI.ln() + d * r.ln() - ln_gamma(d / 2.0 + 1.0);
+    n as f64 * (ln_vol - d * side.ln()).exp()
+}
+
+/// Lanczos ln-gamma (g=7, n=9), |err| < 1e-10 for x > 0.
+pub fn ln_gamma(x: f64) -> f64 {
+    const COEF: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1_259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_572e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // reflection
+        return std::f64::consts::PI.ln()
+            - (std::f64::consts::PI * x).sin().ln()
+            - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + 7.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_gamma_reference_values() {
+        // Gamma(1)=1, Gamma(2)=1, Gamma(3)=2, Gamma(0.5)=sqrt(pi)
+        assert!(ln_gamma(1.0).abs() < 1e-9);
+        assert!(ln_gamma(2.0).abs() < 1e-9);
+        assert!((ln_gamma(3.0) - 2f64.ln()).abs() < 1e-9);
+        assert!((ln_gamma(0.5) - std::f64::consts::PI.sqrt().ln()).abs() < 1e-9);
+        assert!((ln_gamma(6.0) - 120f64.ln()).abs() < 1e-8);
+    }
+
+    #[test]
+    fn ppp_count_is_poisson_like() {
+        let mut rng = Rng::new(1);
+        let counts: Vec<f64> = (0..200)
+            .map(|_| poisson_process(1000, 4, 1.0, &mut rng).len() as f64)
+            .collect();
+        let mean = crate::util::stats::mean(&counts);
+        let var = crate::util::stats::variance(&counts);
+        assert!((mean - 1000.0).abs() < 15.0, "mean={mean}");
+        // Poisson: var == mean
+        assert!((var / mean - 1.0).abs() < 0.35, "var/mean={}", var / mean);
+    }
+
+    #[test]
+    fn ppp_ball_occupancy_matches_theory() {
+        // Empirical occupancy of r-balls around random interior anchors
+        // should match m = n vol(B_r)/side^d.
+        let (n, dim, side, r) = (20_000, 2, 10.0, 0.5);
+        let m_theory = ppp_ball_mean(n, dim, side, r);
+        let mut rng = Rng::new(2);
+        let pts = uniform_cube(n, dim, side, &mut rng);
+        let mut occ = Vec::new();
+        for _ in 0..300 {
+            let anchor: Vec<f32> = (0..dim)
+                .map(|_| (r + rng.uniform() * (side - 2.0 * r)) as f32)
+                .collect();
+            let c = pts
+                .iter()
+                .filter(|p| crate::util::l2(p, &anchor) <= r as f32)
+                .count();
+            occ.push(c as f64);
+        }
+        let emp = crate::util::stats::mean(&occ);
+        assert!(
+            (emp - m_theory).abs() < 0.15 * m_theory,
+            "emp={emp} theory={m_theory}"
+        );
+    }
+
+    #[test]
+    fn gaussian_blocks_shape_and_drift() {
+        let mut rng = Rng::new(3);
+        let pts = gaussian_blocks(10, 100, 20, 5.0, 1.0, &mut rng);
+        assert_eq!(pts.len(), 1000);
+        assert_eq!(pts[0].len(), 20);
+        // Within-block spread << between-block mean distance.
+        let d_within = crate::util::l2(&pts[0], &pts[50]);
+        let d_across = crate::util::l2(&pts[0], &pts[550]);
+        assert!(d_across > d_within, "within={d_within} across={d_across}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = gaussian_blocks(2, 10, 4, 1.0, 0.5, &mut Rng::new(9));
+        let b = gaussian_blocks(2, 10, 4, 1.0, 0.5, &mut Rng::new(9));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,202 @@
+//! Reusable KDE experiment runners behind the Fig 9–11 benches.
+//!
+//! Protocol (§5.2): stream the dataset through the sketch, then measure
+//! mean relative error of the windowed kernel-sum estimate against the
+//! exact LSH-kernel density over the live window (RACE is judged against
+//! the full stream, since it never expires data).
+
+use crate::lsh::pstable::PStableLsh;
+use crate::lsh::srp::SrpLsh;
+use crate::lsh::LshFamily;
+use crate::metrics;
+use crate::sketch::race::Race;
+use crate::sketch::SwAkde;
+use crate::util::rng::Rng;
+
+/// Which collision kernel a run uses (paper evaluates both).
+#[derive(Clone, Copy, Debug)]
+pub enum Kernel {
+    /// SRP, packed cells (range 2^p).
+    Angular { p: usize },
+    /// p-stable with rehash range and bucket width.
+    Euclidean { p: usize, width: f32, range: usize },
+}
+
+impl Kernel {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Kernel::Angular { .. } => "angular",
+            Kernel::Euclidean { .. } => "euclidean",
+        }
+    }
+
+    fn family(&self, dim: usize, rows: usize, rng: &mut Rng) -> Box<dyn LshFamily> {
+        match *self {
+            Kernel::Angular { p } => Box::new(SrpLsh::new(dim, rows * p, rng)),
+            Kernel::Euclidean { p, width, .. } => {
+                Box::new(PStableLsh::new(dim, rows * p, width, rng))
+            }
+        }
+    }
+
+    fn exact(&self, data: &[Vec<f32>], q: &[f32]) -> f64 {
+        match *self {
+            Kernel::Angular { p } => crate::baselines::exact_kde_angular(data, q, p as u32),
+            Kernel::Euclidean { p, width, .. } => {
+                crate::baselines::exact_kde_pstable(data, q, width as f64, p as u32)
+            }
+        }
+    }
+}
+
+/// One experimental point.
+#[derive(Clone, Debug)]
+pub struct KdeRunResult {
+    pub mre: f64,
+    pub log10_mre: f64,
+    pub sketch_bytes: usize,
+    pub theory_bits: usize,
+}
+
+/// SW-AKDE: error over the sliding window.
+pub fn run_swakde(
+    stream: &[Vec<f32>],
+    queries: &[Vec<f32>],
+    kernel: Kernel,
+    rows: usize,
+    window: u64,
+    eps_eh: f64,
+    seed: u64,
+) -> KdeRunResult {
+    let dim = stream[0].len();
+    let mut rng = Rng::new(seed);
+    let fam = kernel.family(dim, rows, &mut rng);
+    let mut sw = match kernel {
+        Kernel::Angular { p } => SwAkde::new_srp(rows, p, eps_eh, window),
+        Kernel::Euclidean { p, range, .. } => SwAkde::new(rows, range, p, eps_eh, window),
+    };
+    for x in stream {
+        sw.add(fam.as_ref(), x);
+    }
+    let live = &stream[stream.len().saturating_sub(window as usize)..];
+    let (mut est, mut truth) = (Vec::new(), Vec::new());
+    for q in queries {
+        est.push(sw.query_debiased(fam.as_ref(), q));
+        truth.push(kernel.exact(live, q));
+    }
+    let mre = metrics::mean_relative_error(&est, &truth);
+    KdeRunResult {
+        mre,
+        log10_mre: crate::util::stats::log10_floored(mre),
+        sketch_bytes: sw.memory_bytes(),
+        theory_bits: sw.theory_bits(),
+    }
+}
+
+/// RACE baseline: error over the whole stream (it never expires data).
+pub fn run_race(
+    stream: &[Vec<f32>],
+    queries: &[Vec<f32>],
+    kernel: Kernel,
+    rows: usize,
+    seed: u64,
+) -> KdeRunResult {
+    let dim = stream[0].len();
+    let mut rng = Rng::new(seed);
+    let fam = kernel.family(dim, rows, &mut rng);
+    let mut race = match kernel {
+        Kernel::Angular { p } => Race::new_srp(rows, p),
+        Kernel::Euclidean { p, range, .. } => Race::new(rows, range, p),
+    };
+    for x in stream {
+        race.add(fam.as_ref(), x);
+    }
+    let (mut est, mut truth) = (Vec::new(), Vec::new());
+    for q in queries {
+        est.push(race.query_debiased(fam.as_ref(), q));
+        truth.push(kernel.exact(stream, q));
+    }
+    let mre = metrics::mean_relative_error(&est, &truth);
+    KdeRunResult {
+        mre,
+        log10_mre: crate::util::stats::log10_floored(mre),
+        sketch_bytes: race.memory_bytes(),
+        theory_bits: race.memory_bytes() * 8,
+    }
+}
+
+/// Paper row-size grid (×/÷ by `scale` for CI-sized runs).
+pub fn rows_grid(full: bool) -> Vec<usize> {
+    if full {
+        vec![100, 200, 400, 800, 1600, 3200]
+    } else {
+        vec![25, 50, 100, 200, 400]
+    }
+}
+
+/// Paper window grid (Fig 10).
+pub fn window_grid(full: bool) -> Vec<u64> {
+    if full {
+        vec![64, 128, 256, 512, 1024, 2048]
+    } else {
+        vec![64, 128, 256, 512, 1024]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::datasets;
+
+    fn workload() -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        datasets::kde_synthetic(1_200, 5).split_queries(50)
+    }
+
+    #[test]
+    fn swakde_error_drops_with_rows() {
+        let (stream, queries) = workload();
+        let kernel = Kernel::Angular { p: 2 };
+        let small = run_swakde(&stream, &queries, kernel, 8, 300, 0.1, 1);
+        let large = run_swakde(&stream, &queries, kernel, 128, 300, 0.1, 1);
+        assert!(
+            large.mre < small.mre,
+            "rows=8 mre={} rows=128 mre={}",
+            small.mre,
+            large.mre
+        );
+        assert!(large.mre < 0.35, "mre={}", large.mre);
+    }
+
+    #[test]
+    fn euclidean_kernel_also_converges() {
+        let (stream, queries) = workload();
+        let kernel = Kernel::Euclidean { p: 2, width: 8.0, range: 128 };
+        let res = run_swakde(&stream, &queries, kernel, 128, 300, 0.1, 2);
+        assert!(res.mre < 0.5, "mre={}", res.mre);
+    }
+
+    #[test]
+    fn race_matches_swakde_scale_on_static_window() {
+        // When the window covers the whole stream, SW-AKDE and RACE see the
+        // same data; errors should be comparable (Fig 11's claim).
+        let (stream, queries) = workload();
+        let kernel = Kernel::Angular { p: 2 };
+        let sw = run_swakde(&stream, &queries, kernel, 64, stream.len() as u64, 0.1, 3);
+        let race = run_race(&stream, &queries, kernel, 64, 3);
+        assert!(
+            (sw.mre - race.mre).abs() < 0.15,
+            "sw={} race={}",
+            sw.mre,
+            race.mre
+        );
+    }
+
+    #[test]
+    fn sketch_memory_grows_with_rows() {
+        let (stream, queries) = workload();
+        let kernel = Kernel::Angular { p: 2 };
+        let a = run_swakde(&stream, &queries, kernel, 8, 300, 0.1, 4);
+        let b = run_swakde(&stream, &queries, kernel, 64, 300, 0.1, 4);
+        assert!(b.sketch_bytes > a.sketch_bytes);
+    }
+}

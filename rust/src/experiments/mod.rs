@@ -1,0 +1,7 @@
+//! Experiment runners shared by the figure benches (DESIGN.md §4).
+
+pub mod ann;
+pub mod kde;
+
+pub use ann::{AnnRunResult, AnnWorkload};
+pub use kde::{run_race, run_swakde, Kernel};

@@ -1,0 +1,23 @@
+//! # sublinear-sketch
+//!
+//! Production-grade reproduction of *Sublinear Sketches for Approximate
+//! Nearest Neighbor and Kernel Density Estimation* (Danait, Das, Bhore,
+//! CS.LG 2025): the S-ANN streaming near-neighbor sketch (§3) and the
+//! SW-AKDE sliding-window KDE sketch (§4), served by a Rust coordinator
+//! with the dense compute paths AOT-compiled from JAX/Pallas and executed
+//! through PJRT. See DESIGN.md for the system inventory and EXPERIMENTS.md
+//! for the paper-vs-measured record.
+
+pub mod baselines;
+pub mod bench_support;
+pub mod cli;
+pub mod experiments;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod lsh;
+pub mod metrics;
+pub mod runtime;
+pub mod sketch;
+pub mod storage;
+pub mod util;

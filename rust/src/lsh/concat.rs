@@ -1,0 +1,267 @@
+//! Concatenated (amplified) hash functions — §2.1 / §2.2.
+//!
+//! * [`TableHasher`]: g_j = (h_{jk+1}, …, h_{jk+k}) → an unbounded u64 key
+//!   for the S-ANN bucket tables (collision prob p^k). Keys are mixed from
+//!   the raw slot tuple; "standard hashing" keeps only non-empty buckets
+//!   (storage::hashtable).
+//! * [`BoundedHasher`]: the same concatenation rehashed to a finite range
+//!   [0, W) for RACE / SW-AKDE cells — the paper's "rehashing" of p-stable
+//!   functions with unbounded range (§5.2 Implementation).
+
+use super::LshFamily;
+
+/// 64-bit mix (splitmix64 finalizer) — avalanches the raw slot tuple.
+#[inline]
+pub fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Combine a tuple of raw slots into one key; order-sensitive.
+#[inline]
+pub fn combine_slots(slots: &[i64]) -> u64 {
+    let mut acc = 0x9E37_79B9_7F4A_7C15u64;
+    for &s in slots {
+        acc = mix64(acc ^ (s as u64).wrapping_mul(0xFF51_AFD7_ED55_8CCD));
+        acc = acc.rotate_left(23).wrapping_add(0x2545_F491_4F6C_DD1D);
+    }
+    mix64(acc)
+}
+
+/// L concatenated functions of k raw hashes each, keys in u64.
+pub struct TableHasher {
+    pub k: usize,
+    pub l: usize,
+}
+
+impl TableHasher {
+    pub fn new(k: usize, l: usize) -> Self {
+        assert!(k > 0 && l > 0);
+        TableHasher { k, l }
+    }
+
+    /// Raw functions consumed (the family must expose at least this many).
+    pub fn funcs_needed(&self) -> usize {
+        self.k * self.l
+    }
+
+    /// Key of table `j` for point `x`.
+    pub fn key<F: LshFamily + ?Sized>(&self, fam: &F, j: usize, x: &[f32], scratch: &mut Vec<i64>) -> u64 {
+        debug_assert!(j < self.l);
+        scratch.clear();
+        scratch.resize(self.k, 0);
+        fam.hash_range(j * self.k, x, scratch);
+        combine_slots(scratch)
+    }
+
+    /// All L keys for `x` into `out`.
+    pub fn keys<F: LshFamily + ?Sized>(&self, fam: &F, x: &[f32], out: &mut Vec<u64>) {
+        let mut scratch = Vec::with_capacity(self.k);
+        out.clear();
+        for j in 0..self.l {
+            out.push(self.key(fam, j, x, &mut scratch));
+        }
+    }
+
+    /// Combine a row of precomputed raw slots (from the PJRT hash artifact,
+    /// laid out [H = k*L] per point) into the L table keys.
+    pub fn keys_from_slots(&self, slots: &[i64], out: &mut Vec<u64>) {
+        debug_assert!(slots.len() >= self.k * self.l);
+        out.clear();
+        for j in 0..self.l {
+            out.push(combine_slots(&slots[j * self.k..(j + 1) * self.k]));
+        }
+    }
+}
+
+/// How a raw-slot tuple becomes a bounded cell index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CellMap {
+    /// Binary slots packed as bits — injective, range = 2^p. This is the
+    /// exact RACE cell structure for SRP (collision ⇔ all p hashes agree),
+    /// so the ACE unbiasedness theorem holds with no correction.
+    PackBits,
+    /// Mix-and-mod rehash — the paper's "rehashing" for unbounded p-stable
+    /// slots (§5.2). Distinct tuples spuriously collide w.p. ≈ 1/range;
+    /// see `Race::query_debiased` for the unbiased correction.
+    Rehash,
+}
+
+/// R concatenated functions of p raw hashes each, mapped into [0, range).
+pub struct BoundedHasher {
+    pub p: usize,
+    pub rows: usize,
+    pub range: usize,
+    pub map: CellMap,
+}
+
+impl BoundedHasher {
+    /// Rehash mode (p-stable and other unbounded-range families).
+    pub fn new(p: usize, rows: usize, range: usize) -> Self {
+        assert!(p > 0 && rows > 0 && range > 0);
+        BoundedHasher { p, rows, range, map: CellMap::Rehash }
+    }
+
+    /// Bit-packing mode for binary families (SRP): range is 2^p.
+    pub fn new_packed(p: usize, rows: usize) -> Self {
+        assert!(p > 0 && p < 32 && rows > 0);
+        BoundedHasher { p, rows, range: 1 << p, map: CellMap::PackBits }
+    }
+
+    pub fn funcs_needed(&self) -> usize {
+        self.p * self.rows
+    }
+
+    #[inline]
+    fn map_tuple(&self, slots: &[i64]) -> usize {
+        match self.map {
+            CellMap::PackBits => {
+                let mut cell = 0usize;
+                for (i, &s) in slots.iter().enumerate() {
+                    debug_assert!(s == 0 || s == 1, "PackBits needs binary slots");
+                    cell |= (s as usize & 1) << i;
+                }
+                cell
+            }
+            CellMap::Rehash => (combine_slots(slots) % self.range as u64) as usize,
+        }
+    }
+
+    /// Cell index of row `i` for point `x`.
+    pub fn cell<F: LshFamily + ?Sized>(&self, fam: &F, i: usize, x: &[f32], scratch: &mut Vec<i64>) -> usize {
+        debug_assert!(i < self.rows);
+        scratch.clear();
+        scratch.resize(self.p, 0);
+        fam.hash_range(i * self.p, x, scratch);
+        self.map_tuple(scratch)
+    }
+
+    /// Cell index from precomputed raw slots (PJRT artifact path).
+    pub fn cell_from_slots(&self, row: usize, slots: &[i64]) -> usize {
+        self.map_tuple(&slots[row * self.p..(row + 1) * self.p])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lsh::pstable::PStableLsh;
+    use crate::lsh::srp::SrpLsh;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn combine_is_order_sensitive() {
+        assert_ne!(combine_slots(&[1, 2]), combine_slots(&[2, 1]));
+        assert_ne!(combine_slots(&[0]), combine_slots(&[0, 0]));
+    }
+
+    #[test]
+    fn equal_tuples_equal_keys() {
+        assert_eq!(combine_slots(&[5, -3, 7]), combine_slots(&[5, -3, 7]));
+    }
+
+    #[test]
+    fn table_keys_deterministic_and_distinct_across_tables() {
+        let fam = PStableLsh::new(8, 4 * 6, 2.0, &mut Rng::new(1));
+        let th = TableHasher::new(4, 6);
+        let x: Vec<f32> = (0..8).map(|i| i as f32 * 0.3).collect();
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        th.keys(&fam, &x, &mut a);
+        th.keys(&fam, &x, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 6);
+        let distinct: std::collections::HashSet<_> = a.iter().collect();
+        assert!(distinct.len() >= 5, "tables should rarely share keys");
+    }
+
+    #[test]
+    fn keys_from_slots_matches_native_path() {
+        let fam = SrpLsh::new(10, 3 * 5, &mut Rng::new(2));
+        let th = TableHasher::new(3, 5);
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..10).map(|_| rng.gaussian_f32()).collect();
+        let mut native = Vec::new();
+        th.keys(&fam, &x, &mut native);
+        // emulate the artifact: all raw slots precomputed in a row
+        let mut slots = vec![0i64; 15];
+        fam.hash_range(0, &x, &mut slots);
+        let mut from_slots = Vec::new();
+        th.keys_from_slots(&slots, &mut from_slots);
+        assert_eq!(native, from_slots);
+    }
+
+    #[test]
+    fn bounded_cells_in_range_and_well_spread() {
+        // p-stable slots are unbounded, so the rehash should cover the range.
+        let fam = PStableLsh::new(16, 4 * 8, 0.5, &mut Rng::new(4));
+        let bh = BoundedHasher::new(4, 8, 64);
+        let mut rng = Rng::new(5);
+        let mut histogram = vec![0usize; 64];
+        let mut scratch = Vec::new();
+        for _ in 0..2000 {
+            let x: Vec<f32> = (0..16).map(|_| rng.gaussian_f32()).collect();
+            for i in 0..8 {
+                let c = bh.cell(&fam, i, &x, &mut scratch);
+                assert!(c < 64);
+                histogram[c] += 1;
+            }
+        }
+        let occupied = histogram.iter().filter(|&&c| c > 0).count();
+        assert!(occupied > 48, "occupied={occupied}");
+    }
+
+    #[test]
+    fn bounded_cells_srp_limited_alphabet() {
+        // k SRP bits give at most 2^k distinct tuples -> at most 2^k cells;
+        // all of them must land in range and identical tuples must agree.
+        let fam = SrpLsh::new(16, 4 * 2, &mut Rng::new(14));
+        let bh = BoundedHasher::new(4, 2, 64);
+        let mut rng = Rng::new(15);
+        let mut scratch = Vec::new();
+        let mut distinct = std::collections::HashSet::new();
+        for _ in 0..500 {
+            let x: Vec<f32> = (0..16).map(|_| rng.gaussian_f32()).collect();
+            for i in 0..2 {
+                let c = bh.cell(&fam, i, &x, &mut scratch);
+                assert!(c < 64);
+                distinct.insert(c);
+            }
+        }
+        assert!(distinct.len() <= 16, "distinct={}", distinct.len());
+    }
+
+    #[test]
+    fn bounded_cell_from_slots_matches_native() {
+        let fam = PStableLsh::new(6, 2 * 4, 1.5, &mut Rng::new(6));
+        let bh = BoundedHasher::new(2, 4, 32);
+        let mut rng = Rng::new(7);
+        let x: Vec<f32> = (0..6).map(|_| rng.gaussian_f32()).collect();
+        let mut slots = vec![0i64; 8];
+        fam.hash_range(0, &x, &mut slots);
+        let mut scratch = Vec::new();
+        for i in 0..4 {
+            assert_eq!(bh.cell(&fam, i, &x, &mut scratch), bh.cell_from_slots(i, &slots));
+        }
+    }
+
+    #[test]
+    fn nearby_points_share_more_table_keys_than_far_points() {
+        let dim = 16;
+        let fam = PStableLsh::new(dim, 2 * 32, 4.0, &mut Rng::new(8));
+        let th = TableHasher::new(2, 32);
+        let mut rng = Rng::new(9);
+        let x: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+        let near: Vec<f32> = x.iter().map(|v| v + 0.05).collect();
+        let far: Vec<f32> = x.iter().map(|v| v + 10.0).collect();
+        let (mut kx, mut kn, mut kf) = (Vec::new(), Vec::new(), Vec::new());
+        th.keys(&fam, &x, &mut kx);
+        th.keys(&fam, &near, &mut kn);
+        th.keys(&fam, &far, &mut kf);
+        let near_matches = kx.iter().zip(&kn).filter(|(a, b)| a == b).count();
+        let far_matches = kx.iter().zip(&kf).filter(|(a, b)| a == b).count();
+        assert!(near_matches > far_matches, "near={near_matches} far={far_matches}");
+        assert_eq!(far_matches, 0);
+    }
+}

@@ -1,0 +1,117 @@
+//! Locality-sensitive hashing substrate (paper §2.1).
+//!
+//! Two families, exactly the ones the paper evaluates: SRP/angular
+//! (\[Cha02\], `srp`) and p-stable Euclidean (\[DIIM04\], `pstable`).
+//! `concat` builds the amplified functions g = (h₁..h_k) used by S-ANN
+//! tables and the bounded-range concatenations used by RACE/SW-AKDE cells.
+//! `params` holds the ρ/k/L arithmetic from Lemmas 3.2/3.3.
+//!
+//! The raw projection matrices live here (generated from the experiment
+//! seed) and are the *same* buffers handed to the PJRT artifacts, so the
+//! native path and the AOT batch path hash identically.
+
+pub mod cauchy;
+pub mod concat;
+pub mod params;
+pub mod pstable;
+pub mod srp;
+
+/// A family of raw LSH functions h_j over f32 vectors.
+///
+/// Implementations expose `n_funcs` independent functions; callers group
+/// them into k-wise concatenations (see [`concat`]).
+pub trait LshFamily: Send + Sync {
+    /// Input dimensionality.
+    fn dim(&self) -> usize;
+    /// Number of independent raw functions available.
+    fn n_funcs(&self) -> usize;
+    /// Raw slot of function `j` on point `x`.
+    fn hash_one(&self, j: usize, x: &[f32]) -> i64;
+    /// Raw slots of functions [j0, j0+out.len()) on `x`.
+    fn hash_range(&self, j0: usize, x: &[f32], out: &mut [i64]) {
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self.hash_one(j0 + i, x);
+        }
+    }
+    /// Single-function collision probability at distance/similarity `d`
+    /// (metric interpretation is family-specific: L2 distance for p-stable,
+    /// cosine similarity for SRP).
+    fn collision_prob(&self, d: f64) -> f64;
+    /// The projection matrix as a flat [dim, n_funcs] column-major-by-slot
+    /// buffer for the PJRT artifacts (row i = input dim, col j = function).
+    fn projection(&self) -> &[f32];
+    /// Downcast hook: Some(self) when this is a p-stable family (callers
+    /// need its bias/width to drive the `pstable_hash` artifact).
+    fn as_any_pstable(&self) -> Option<&pstable::PStableLsh> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::pstable::PStableLsh;
+    use super::srp::SrpLsh;
+    use super::LshFamily;
+    use crate::util::rng::Rng;
+
+    /// Empirical single-function collision rate matches the analytic model —
+    /// the property every theorem in §3/§4 leans on.
+    #[test]
+    fn empirical_collision_matches_model_pstable() {
+        let dim = 16;
+        let fam = PStableLsh::new(dim, 256, 4.0, &mut Rng::new(9));
+        let mut rng = Rng::new(10);
+        for &dist in &[0.5f32, 2.0, 6.0] {
+            let x: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+            // y at exactly `dist` from x along a random direction
+            let mut dir: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+            let n = dir.iter().map(|v| v * v).sum::<f32>().sqrt();
+            dir.iter_mut().for_each(|v| *v *= dist / n);
+            let y: Vec<f32> = x.iter().zip(&dir).map(|(a, b)| a + b).collect();
+            let hits = (0..fam.n_funcs())
+                .filter(|&j| fam.hash_one(j, &x) == fam.hash_one(j, &y))
+                .count();
+            let emp = hits as f64 / fam.n_funcs() as f64;
+            let model = fam.collision_prob(dist as f64);
+            assert!(
+                (emp - model).abs() < 0.12,
+                "dist={dist} emp={emp} model={model}"
+            );
+        }
+    }
+
+    #[test]
+    fn empirical_collision_matches_model_srp() {
+        let dim = 24;
+        let fam = SrpLsh::new(dim, 512, &mut Rng::new(21));
+        let mut rng = Rng::new(22);
+        let x: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+        for &angle_frac in &[0.1f64, 0.3, 0.6] {
+            // construct y at angle theta = angle_frac * pi from x
+            let theta = angle_frac * std::f64::consts::PI;
+            let mut perp: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+            let xx = x.iter().map(|v| v * v).sum::<f32>();
+            let px = x.iter().zip(&perp).map(|(a, b)| a * b).sum::<f32>();
+            for i in 0..dim {
+                perp[i] -= px / xx * x[i];
+            }
+            let pn = perp.iter().map(|v| v * v).sum::<f32>().sqrt();
+            let xn = xx.sqrt();
+            let y: Vec<f32> = (0..dim)
+                .map(|i| {
+                    (theta.cos() as f32) * x[i] / xn + (theta.sin() as f32) * perp[i] / pn
+                })
+                .collect();
+            let hits = (0..fam.n_funcs())
+                .filter(|&j| fam.hash_one(j, &x) == fam.hash_one(j, &y))
+                .count();
+            let emp = hits as f64 / fam.n_funcs() as f64;
+            let cos = theta.cos();
+            let model = fam.collision_prob(cos);
+            assert!(
+                (emp - model).abs() < 0.08,
+                "angle={angle_frac}pi emp={emp} model={model}"
+            );
+        }
+    }
+}

@@ -1,0 +1,223 @@
+//! p-stable Euclidean LSH — Datar–Immorlica–Indyk–Mirrokni \[DIIM04\], §2.1.
+//!
+//! h_j(x) = ⌊(a_j · x + b_j) / w⌋ with a_j ~ N(0, I) (2-stable) and
+//! b_j ~ U[0, w). The collision probability at L2 distance s, with
+//! t = s/w, is
+//!
+//!   P(t) = 1 − 2Φ(−1/t) − (2t/√(2π)) (1 − e^{−1/(2t²)}),
+//!
+//! monotonically decreasing in s — the (r, cr, p₁, p₂)-sensitivity the
+//! S-ANN theorems instantiate, and the Euclidean collision kernel the KDE
+//! experiments estimate (Figs 9a/9c).
+
+use super::LshFamily;
+use crate::util::{dot, rng::Rng};
+
+/// A bank of independent p-stable functions with shared bucket width `w`.
+pub struct PStableLsh {
+    dim: usize,
+    n_funcs: usize,
+    w: f32,
+    /// Flat [dim, n_funcs] artifact layout (column per function).
+    proj: Vec<f32>,
+    /// Row-major [n_funcs, dim] for native hashing.
+    proj_rows: Vec<f32>,
+    biases: Vec<f32>,
+}
+
+/// Standard normal CDF via erf (Abramowitz–Stegun 7.1.26 rational approx
+/// is not enough for tail agreement with the jax oracle; use the same
+/// erf-based formula as ref.py with a high-accuracy erf).
+fn norm_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+/// erf with ~1e-12 absolute error (Numerical Recipes erfc expansion).
+pub fn erf(x: f64) -> f64 {
+    1.0 - erfc(x)
+}
+
+pub fn erfc(x: f64) -> f64 {
+    let z = x.abs();
+    let t = 2.0 / (2.0 + z);
+    let ty = 4.0 * t - 2.0;
+    const COF: [f64; 28] = [
+        -1.3026537197817094,
+        6.4196979235649026e-1,
+        1.9476473204185836e-2,
+        -9.561514786808631e-3,
+        -9.46595344482036e-4,
+        3.66839497852761e-4,
+        4.2523324806907e-5,
+        -2.0278578112534e-5,
+        -1.624290004647e-6,
+        1.303655835580e-6,
+        1.5626441722e-8,
+        -8.5238095915e-8,
+        6.529054439e-9,
+        5.059343495e-9,
+        -9.91364156e-10,
+        -2.27365122e-10,
+        9.6467911e-11,
+        2.394038e-12,
+        -6.886027e-12,
+        8.94487e-13,
+        3.13092e-13,
+        -1.12708e-13,
+        3.81e-16,
+        7.106e-15,
+        -1.523e-15,
+        -9.4e-17,
+        1.21e-16,
+        -2.8e-17,
+    ];
+    let mut d = 0.0;
+    let mut dd = 0.0;
+    for j in (1..COF.len()).rev() {
+        let tmp = d;
+        d = ty * d - dd + COF[j];
+        dd = tmp;
+    }
+    let ans = t * (-z * z + 0.5 * (COF[0] + ty * d) - dd).exp();
+    if x >= 0.0 {
+        ans
+    } else {
+        2.0 - ans
+    }
+}
+
+impl PStableLsh {
+    pub fn new(dim: usize, n_funcs: usize, w: f32, rng: &mut Rng) -> Self {
+        assert!(w > 0.0, "bucket width must be positive");
+        let mut proj_rows = vec![0.0f32; dim * n_funcs];
+        rng.fill_gaussian_f32(&mut proj_rows);
+        let mut proj = vec![0.0f32; dim * n_funcs];
+        for j in 0..n_funcs {
+            for i in 0..dim {
+                proj[i * n_funcs + j] = proj_rows[j * dim + i];
+            }
+        }
+        let biases = (0..n_funcs).map(|_| rng.uniform_f32() * w).collect();
+        PStableLsh { dim, n_funcs, w, proj, proj_rows, biases }
+    }
+
+    pub fn width(&self) -> f32 {
+        self.w
+    }
+
+    pub fn biases(&self) -> &[f32] {
+        &self.biases
+    }
+
+    #[inline]
+    fn row(&self, j: usize) -> &[f32] {
+        &self.proj_rows[j * self.dim..(j + 1) * self.dim]
+    }
+
+    /// Collision probability of one function at L2 distance `s` for bucket
+    /// width `w` (static so `params` can search over w before construction).
+    pub fn collision_prob_for(s: f64, w: f64) -> f64 {
+        if s <= 0.0 {
+            return 1.0;
+        }
+        let t = s / w;
+        let p = 1.0 - 2.0 * norm_cdf(-1.0 / t)
+            - (2.0 * t / (2.0 * std::f64::consts::PI).sqrt())
+                * (1.0 - (-1.0 / (2.0 * t * t)).exp());
+        p.clamp(0.0, 1.0)
+    }
+}
+
+impl LshFamily for PStableLsh {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn n_funcs(&self) -> usize {
+        self.n_funcs
+    }
+
+    #[inline]
+    fn hash_one(&self, j: usize, x: &[f32]) -> i64 {
+        // floor semantics must match jnp.floor in the Pallas kernel:
+        // compute in f32 like the artifact does, then floor.
+        (((dot(self.row(j), x) + self.biases[j]) / self.w).floor()) as i64
+    }
+
+    fn collision_prob(&self, d: f64) -> f64 {
+        Self::collision_prob_for(d, self.w as f64)
+    }
+
+    fn projection(&self) -> &[f32] {
+        &self.proj
+    }
+
+    fn as_any_pstable(&self) -> Option<&PStableLsh> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_reference_values() {
+        // against scipy.special.erf
+        assert!((erf(0.0)).abs() < 1e-14);
+        assert!((erf(0.5) - 0.5204998778130465).abs() < 1e-10);
+        assert!((erf(1.0) - 0.8427007929497149).abs() < 1e-10);
+        assert!((erf(2.0) - 0.9953222650189527).abs() < 1e-10);
+        assert!((erf(-1.0) + 0.8427007929497149).abs() < 1e-10);
+    }
+
+    #[test]
+    fn collision_prob_is_monotone_decreasing_in_distance() {
+        let mut prev = 1.0;
+        for i in 0..200 {
+            let s = i as f64 * 0.1;
+            let p = PStableLsh::collision_prob_for(s, 4.0);
+            assert!(p <= prev + 1e-12, "s={s} p={p} prev={prev}");
+            assert!((0.0..=1.0).contains(&p));
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn collision_prob_limits() {
+        assert_eq!(PStableLsh::collision_prob_for(0.0, 1.0), 1.0);
+        assert!(PStableLsh::collision_prob_for(1000.0, 1.0) < 0.01);
+        // wider buckets collide more at fixed distance
+        let narrow = PStableLsh::collision_prob_for(2.0, 1.0);
+        let wide = PStableLsh::collision_prob_for(2.0, 8.0);
+        assert!(wide > narrow);
+    }
+
+    #[test]
+    fn identical_points_collide_on_all_functions() {
+        let fam = PStableLsh::new(10, 32, 4.0, &mut Rng::new(7));
+        let x: Vec<f32> = (0..10).map(|i| (i as f32).sqrt()).collect();
+        for j in 0..32 {
+            assert_eq!(fam.hash_one(j, &x), fam.hash_one(j, &x.clone()));
+        }
+    }
+
+    #[test]
+    fn floor_handles_negative_projections() {
+        // A point far in the negative direction must get negative slots,
+        // not truncate toward zero.
+        let mut rng = Rng::new(8);
+        let fam = PStableLsh::new(2, 8, 1.0, &mut rng);
+        let x = [-100.0f32, -100.0];
+        let any_negative = (0..8).any(|j| fam.hash_one(j, &x) < 0);
+        assert!(any_negative);
+    }
+
+    #[test]
+    fn bias_in_range() {
+        let fam = PStableLsh::new(4, 64, 2.5, &mut Rng::new(9));
+        for &b in fam.biases() {
+            assert!((0.0..2.5).contains(&b));
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! Sign-random-projection (angular) LSH — Charikar \[Cha02\], paper §2.1.
+//!
+//! h_j(x) = [a_j · x >= 0] with a_j ~ N(0, I). Collision probability for
+//! points at angle θ is 1 − θ/π, so the collision *kernel* in terms of
+//! cosine similarity s is 1 − arccos(s)/π — the angular kernel the SW-AKDE
+//! experiments estimate (Figs 9b/9d/11).
+
+use super::LshFamily;
+use crate::util::{dot, rng::Rng};
+
+/// A bank of `n_funcs` independent SRP functions over `dim`-d vectors.
+pub struct SrpLsh {
+    dim: usize,
+    n_funcs: usize,
+    /// Flat [dim, n_funcs]: column j is direction a_j (artifact layout).
+    proj: Vec<f32>,
+    /// Row-major copy [n_funcs, dim] for fast native hashing.
+    proj_rows: Vec<f32>,
+}
+
+impl SrpLsh {
+    pub fn new(dim: usize, n_funcs: usize, rng: &mut Rng) -> Self {
+        let mut proj_rows = vec![0.0f32; dim * n_funcs];
+        rng.fill_gaussian_f32(&mut proj_rows);
+        let mut proj = vec![0.0f32; dim * n_funcs];
+        for j in 0..n_funcs {
+            for i in 0..dim {
+                proj[i * n_funcs + j] = proj_rows[j * dim + i];
+            }
+        }
+        SrpLsh { dim, n_funcs, proj, proj_rows }
+    }
+
+    #[inline]
+    fn row(&self, j: usize) -> &[f32] {
+        &self.proj_rows[j * self.dim..(j + 1) * self.dim]
+    }
+}
+
+impl LshFamily for SrpLsh {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn n_funcs(&self) -> usize {
+        self.n_funcs
+    }
+
+    #[inline]
+    fn hash_one(&self, j: usize, x: &[f32]) -> i64 {
+        // >= 0 convention matches the Pallas kernel (srp_hash) exactly.
+        (dot(self.row(j), x) >= 0.0) as i64
+    }
+
+    /// `d` is cosine similarity in [-1, 1].
+    fn collision_prob(&self, d: f64) -> f64 {
+        1.0 - d.clamp(-1.0, 1.0).acos() / std::f64::consts::PI
+    }
+
+    fn projection(&self) -> &[f32] {
+        &self.proj
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_is_binary_and_deterministic() {
+        let fam = SrpLsh::new(8, 16, &mut Rng::new(1));
+        let x: Vec<f32> = (0..8).map(|i| i as f32 - 3.5).collect();
+        for j in 0..16 {
+            let h = fam.hash_one(j, &x);
+            assert!(h == 0 || h == 1);
+            assert_eq!(h, fam.hash_one(j, &x));
+        }
+    }
+
+    #[test]
+    fn identical_points_always_collide() {
+        let fam = SrpLsh::new(12, 64, &mut Rng::new(2));
+        let x: Vec<f32> = (0..12).map(|i| (i as f32).sin()).collect();
+        for j in 0..64 {
+            assert_eq!(fam.hash_one(j, &x), fam.hash_one(j, &x.clone()));
+        }
+    }
+
+    #[test]
+    fn antipodal_points_never_collide() {
+        let fam = SrpLsh::new(12, 64, &mut Rng::new(3));
+        let x: Vec<f32> = (0..12).map(|i| (i as f32).cos() + 0.1).collect();
+        let neg: Vec<f32> = x.iter().map(|v| -v).collect();
+        let collisions = (0..64)
+            .filter(|&j| fam.hash_one(j, &x) == fam.hash_one(j, &neg))
+            .count();
+        // sign(a.x) != sign(-a.x) unless the dot is exactly 0 (prob ~0)
+        assert_eq!(collisions, 0);
+    }
+
+    #[test]
+    fn collision_prob_endpoints() {
+        let fam = SrpLsh::new(4, 4, &mut Rng::new(4));
+        assert!((fam.collision_prob(1.0) - 1.0).abs() < 1e-12);
+        assert!(fam.collision_prob(-1.0).abs() < 1e-12);
+        assert!((fam.collision_prob(0.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn projection_layout_is_column_per_function() {
+        let fam = SrpLsh::new(3, 2, &mut Rng::new(5));
+        let p = fam.projection();
+        // column j, entry i lives at p[i * n_funcs + j]
+        for j in 0..2 {
+            for i in 0..3 {
+                assert_eq!(p[i * 2 + j], fam.row(j)[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn scale_invariance() {
+        let fam = SrpLsh::new(6, 32, &mut Rng::new(6));
+        let x: Vec<f32> = (0..6).map(|i| i as f32 - 2.0).collect();
+        let x2: Vec<f32> = x.iter().map(|v| v * 7.5).collect();
+        for j in 0..32 {
+            assert_eq!(fam.hash_one(j, &x), fam.hash_one(j, &x2));
+        }
+    }
+}

@@ -1,0 +1,310 @@
+//! `sketchd` — the sublinear-sketch coordinator CLI.
+//!
+//! Subcommands:
+//!   info                         platform + artifact inventory
+//!   ann   [--dataset --n ...]    one streaming ANN run with metrics
+//!   kde   [--dataset --rows ...] one sliding-window KDE run with metrics
+//!   serve [--n --shards ...]     demo serving loop over a synthetic stream
+//!
+//! Every experiment-grade sweep lives in `cargo bench` targets (see
+//! DESIGN.md §4); these subcommands are the single-run operational surface.
+
+use anyhow::Result;
+use sublinear_sketch::baselines::{exact_kde_angular, exact_kde_pstable, ExactNn};
+use sublinear_sketch::cli::Args;
+use sublinear_sketch::config::Config;
+use sublinear_sketch::coordinator::{KdeKernel, SketchService};
+use sublinear_sketch::data::datasets;
+use sublinear_sketch::lsh::pstable::PStableLsh;
+use sublinear_sketch::lsh::srp::SrpLsh;
+use sublinear_sketch::metrics;
+use sublinear_sketch::metrics::latency::Throughput;
+use sublinear_sketch::sketch::ann::{SAnn, SAnnConfig};
+use sublinear_sketch::sketch::SwAkde;
+use sublinear_sketch::util::rng::Rng;
+
+const USAGE: &str = "\
+sketchd — sublinear sketches for streaming ANN and sliding-window KDE
+
+USAGE:
+  sketchd info
+  sketchd ann   [--dataset sift|fmnist|syn32] [--n 10000] [--queries 500]
+                [--eta 0.5] [--r auto] [--c 2.0] [--w 4.0] [--seed 42]
+  sketchd kde   [--dataset news|rosis|synthetic] [--n 10000] [--queries 200]
+                [--kernel angular|euclidean] [--rows 64] [--p 3]
+                [--window 450] [--eps 0.1] [--seed 42]
+  sketchd serve [--n 20000] [--shards 4] [--batch 64] [--config file.toml]
+                [--use-pjrt]
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    if args.has("help") {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    match args.subcommand.as_deref() {
+        Some("info") => cmd_info(),
+        Some("ann") => cmd_ann(&args),
+        Some("kde") => cmd_kde(&args),
+        Some("serve") => cmd_serve(&args),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    println!("platform: {}", sublinear_sketch::runtime::platform_name()?);
+    let dir = sublinear_sketch::runtime::Manifest::default_dir();
+    match sublinear_sketch::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts ({}): {}", m.artifacts.len(), dir.display());
+            for a in &m.artifacts {
+                let shapes: Vec<String> = a
+                    .inputs
+                    .iter()
+                    .map(|t| format!("{:?}", t.shape))
+                    .collect();
+                println!("  {:20} {:12} in={} out={:?}", a.name, a.kind, shapes.join(","), a.output.shape);
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    Ok(())
+}
+
+fn load_ann_dataset(name: &str, n: usize, seed: u64) -> datasets::Dataset {
+    match name {
+        "sift" => datasets::sift_like(n, seed),
+        "fmnist" => datasets::fmnist_like(n, seed),
+        _ => datasets::syn32(n, seed),
+    }
+}
+
+/// Median nearest-neighbor distance over a sample — the "auto" choice of r
+/// so that a meaningful fraction of queries have an r-near neighbor.
+fn auto_radius(points: &[Vec<f32>], queries: &[Vec<f32>]) -> f32 {
+    let dim = points[0].len();
+    let nn = ExactNn::from_points(dim, points);
+    let mut ds: Vec<f64> = queries.iter().take(100).map(|q| nn.nn_dist(q) as f64).collect();
+    ds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (ds[ds.len() / 2] * 1.2) as f32
+}
+
+fn cmd_ann(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 10_000)?;
+    let n_queries = args.get_usize("queries", 500)?;
+    let seed = args.get_u64("seed", 42)?;
+    let dataset = args.get_str("dataset", "syn32");
+    let ds = load_ann_dataset(&dataset, n + n_queries, seed);
+    let name = ds.name;
+    let dim = ds.dim;
+    let (stream, queries) = ds.split_queries(n_queries);
+
+    let r = if args.flag("r").map_or(true, |v| v == "auto") {
+        auto_radius(&stream, &queries)
+    } else {
+        args.get_f64("r", 1.0)? as f32
+    };
+    let cfg = SAnnConfig {
+        dim,
+        n_max: stream.len(),
+        eta: args.get_f64("eta", 0.5)?,
+        r: r as f64,
+        c: args.get_f64("c", 2.0)?,
+        w: args.get_f64("w", 4.0)? * r as f64,
+        l_cap: args.get_usize("l-cap", 32)?,
+        seed,
+    };
+    println!(
+        "[ann] dataset={name} dim={dim} n={} queries={} eta={} r={r:.3} c={} k={} L={} rho={:.3}",
+        stream.len(),
+        queries.len(),
+        cfg.eta,
+        cfg.c,
+        SAnn::new(cfg.clone()).params().k,
+        SAnn::new(cfg.clone()).params().l,
+        cfg.sensitivity().rho(),
+    );
+
+    let mut ann = SAnn::new(cfg.clone());
+    let mut ingest = Throughput::new();
+    for p in &stream {
+        ann.insert(p);
+        ingest.add(1);
+    }
+    println!(
+        "[ann] ingested {:.0} pts/s, stored {} ({:.2}% of stream)",
+        ingest.per_second(),
+        ann.stored(),
+        100.0 * ann.stored() as f64 / stream.len() as f64
+    );
+
+    let exact = ExactNn::from_points(dim, &stream);
+    let mut outcomes = Vec::new();
+    let mut qps = Throughput::new();
+    for q in &queries {
+        let ans = ann.query(q).map(|(id, _)| metrics::answer_distance(q, ann.vector(id)));
+        outcomes.push(metrics::cr_outcome(&exact, q, r, cfg.c as f32, ans));
+        qps.add(1);
+    }
+    let acc = metrics::cr_accuracy(&outcomes);
+    let mem = ann.memory_bytes();
+    println!(
+        "[ann] (c,r)-accuracy={acc:.3} qps={:.0} sketch={:.2}MB compression={:.4}",
+        qps.per_second(),
+        mem as f64 / 1048576.0,
+        metrics::compression_rate(mem, stream.len(), dim)
+    );
+    Ok(())
+}
+
+fn cmd_kde(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 10_000)?;
+    let n_queries = args.get_usize("queries", 200)?;
+    let seed = args.get_u64("seed", 42)?;
+    let rows = args.get_usize("rows", 64)?;
+    let p = args.get_usize("p", 3)?;
+    let window = args.get_u64("window", 450)?;
+    let eps = args.get_f64("eps", 0.1)?;
+    let kernel = args.get_str("kernel", "angular");
+    let dataset = args.get_str("dataset", "synthetic");
+    let ds = match dataset.as_str() {
+        "news" => datasets::news_like(n + n_queries, seed),
+        "rosis" => datasets::rosis_like(n + n_queries, seed),
+        _ => datasets::kde_synthetic(n + n_queries, seed),
+    };
+    let name = ds.name;
+    let dim = ds.dim;
+    let (stream, queries) = ds.split_queries(n_queries);
+    println!(
+        "[kde] dataset={name} dim={dim} n={} queries={} kernel={kernel} rows={rows} p={p} window={window} eps_eh={eps}",
+        stream.len(),
+        queries.len()
+    );
+
+    let mut rng = Rng::new(seed ^ 0xCDE5);
+    if kernel == "euclidean" {
+        let width = args.get_f64("width", 4.0)? as f32;
+        let range = args.get_usize("range", 64)?;
+        let fam = PStableLsh::new(dim, rows * p, width, &mut rng);
+        let sw = SwAkde::new(rows, range, p, eps, window);
+        run_kde_euclidean(sw, fam, stream, queries, window, width as f64, p)
+    } else {
+        let fam = SrpLsh::new(dim, rows * p, &mut rng);
+        let sw = SwAkde::new_srp(rows, p, eps, window);
+        run_kde_angular(sw, fam, stream, queries, window, p)
+    }
+}
+
+fn run_kde_angular(
+    mut sw: SwAkde,
+    fam: SrpLsh,
+    stream: Vec<Vec<f32>>,
+    queries: Vec<Vec<f32>>,
+    window: u64,
+    p: usize,
+) -> Result<()> {
+    for x in &stream {
+        sw.add(&fam, x);
+    }
+    let live = &stream[stream.len().saturating_sub(window as usize)..];
+    let (mut est, mut truth) = (Vec::new(), Vec::new());
+    for q in &queries {
+        est.push(sw.query(&fam, q));
+        truth.push(exact_kde_angular(live, q, p as u32));
+    }
+    report_kde(&est, &truth, sw.memory_bytes(), sw.theory_bits());
+    Ok(())
+}
+
+fn run_kde_euclidean(
+    mut sw: SwAkde,
+    fam: PStableLsh,
+    stream: Vec<Vec<f32>>,
+    queries: Vec<Vec<f32>>,
+    window: u64,
+    width: f64,
+    p: usize,
+) -> Result<()> {
+    for x in &stream {
+        sw.add(&fam, x);
+    }
+    let live = &stream[stream.len().saturating_sub(window as usize)..];
+    let (mut est, mut truth) = (Vec::new(), Vec::new());
+    for q in &queries {
+        est.push(sw.query(&fam, q));
+        truth.push(exact_kde_pstable(live, q, width, p as u32));
+    }
+    report_kde(&est, &truth, sw.memory_bytes(), sw.theory_bits());
+    Ok(())
+}
+
+fn report_kde(est: &[f64], truth: &[f64], mem_bytes: usize, theory_bits: usize) {
+    let mre = metrics::mean_relative_error(est, truth);
+    println!(
+        "[kde] mean-rel-error={mre:.4} log10={:.2} sketch={:.2}MB (theory {:.2}KB)",
+        sublinear_sketch::util::stats::log10_floored(mre),
+        mem_bytes as f64 / 1048576.0,
+        theory_bits as f64 / 8192.0
+    );
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 20_000)?;
+    let config = match args.flag("config") {
+        Some(path) => Config::load(std::path::Path::new(path))?,
+        None => Config::empty(),
+    };
+    let ds = datasets::news_like(n + 512, args.get_u64("seed", 42)?);
+    let dim = ds.dim;
+    let (stream, queries) = ds.split_queries(512);
+    let mut svc_cfg = config.service(dim, stream.len())?;
+    svc_cfg.shards = args.get_usize("shards", svc_cfg.shards)?;
+    svc_cfg.use_pjrt = svc_cfg.use_pjrt || args.has("use-pjrt");
+    svc_cfg.kde.kernel = KdeKernel::Angular;
+    let batch = args.get_usize("batch", 64)?;
+
+    println!(
+        "[serve] dim={dim} n={} shards={} pjrt={} batch={batch}",
+        stream.len(),
+        svc_cfg.shards,
+        svc_cfg.use_pjrt
+    );
+    let mut svc = SketchService::start(svc_cfg)?;
+    let mut ingest = Throughput::new();
+    for p in &stream {
+        svc.insert(p.clone());
+        ingest.add(1);
+    }
+    svc.flush();
+    println!("[serve] ingest {:.0} pts/s", ingest.per_second());
+
+    let mut lat = sublinear_sketch::metrics::latency::LatencyRecorder::new();
+    let mut answered = 0usize;
+    let mut qps = Throughput::new();
+    for chunk in queries.chunks(batch) {
+        let ans = lat.time(|| svc.query_batch(chunk.to_vec()));
+        answered += ans.iter().filter(|a| a.is_some()).count();
+        qps.add(chunk.len() as u64);
+    }
+    let stats = svc.stats();
+    println!(
+        "[serve] batches: {} · answered {}/{} · {:.0} q/s · batch latency {}",
+        queries.len().div_ceil(batch),
+        answered,
+        queries.len(),
+        qps.per_second(),
+        lat.summary()
+    );
+    println!(
+        "[serve] stored={} sketch={:.2}MB shed={}",
+        stats.stored_points,
+        stats.sketch_bytes as f64 / 1048576.0,
+        stats.shed
+    );
+    svc.shutdown();
+    Ok(())
+}

@@ -1,0 +1,128 @@
+//! Latency/throughput instrumentation for the serving path and the Fig 8
+//! QPS measurements.
+
+use std::time::{Duration, Instant};
+
+/// Fixed-capacity latency recorder with percentile reporting.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyRecorder {
+    samples_us: Vec<f64>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Default::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_secs_f64() * 1e6);
+    }
+
+    /// Time a closure and record it.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(t0.elapsed());
+        out
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        crate::util::stats::mean(&self.samples_us)
+    }
+
+    pub fn percentile_us(&self, q: f64) -> f64 {
+        crate::util::stats::percentile(&self.samples_us, q)
+    }
+
+    pub fn p50_us(&self) -> f64 {
+        self.percentile_us(50.0)
+    }
+
+    pub fn p99_us(&self) -> f64 {
+        self.percentile_us(99.0)
+    }
+
+    /// One-line summary for bench tables.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.1}us p50={:.1}us p99={:.1}us",
+            self.count(),
+            self.mean_us(),
+            self.p50_us(),
+            self.p99_us()
+        )
+    }
+}
+
+/// Throughput meter: events over a wall-clock span.
+pub struct Throughput {
+    start: Instant,
+    events: u64,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Throughput { start: Instant::now(), events: 0 }
+    }
+
+    pub fn add(&mut self, n: u64) {
+        self.events += n;
+    }
+
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    pub fn per_second(&self) -> f64 {
+        let secs = self.start.elapsed().as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.events as f64 / secs
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let mut r = LatencyRecorder::new();
+        r.record(Duration::from_micros(100));
+        r.record(Duration::from_micros(200));
+        r.record(Duration::from_micros(300));
+        assert_eq!(r.count(), 3);
+        assert!((r.mean_us() - 200.0).abs() < 1.0);
+        assert!(r.p50_us() >= 100.0 && r.p50_us() <= 300.0);
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut r = LatencyRecorder::new();
+        let v = r.time(|| 42);
+        assert_eq!(v, 42);
+        assert_eq!(r.count(), 1);
+    }
+
+    #[test]
+    fn throughput_counts() {
+        let mut t = Throughput::new();
+        t.add(10);
+        t.add(5);
+        assert_eq!(t.events(), 15);
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(t.per_second() > 0.0);
+    }
+}

@@ -1,0 +1,161 @@
+//! Experiment metrics (§5): recall@k, (c,r)-ANN accuracy, relative error,
+//! compression rate, and latency/throughput accounting.
+
+pub mod latency;
+
+use crate::baselines::ExactNn;
+use crate::util::{l2, stats};
+
+/// Approximate recall@k in the ANN-benchmarks \[ABF20\] sense the paper
+/// adopts (§5.1): retrieved points whose TRUE distance is within
+/// (1+ε)·d_k of the query count as hits, where d_k is the true k-th NN
+/// distance. This is the metric under which a sub-sampled sketch can score
+/// highly: its candidates need not be the exact top-k, just ε-close.
+pub fn approx_recall_at_k(retrieved_dists: &[f32], d_k: f32, eps: f32, k: usize) -> f64 {
+    if k == 0 {
+        return 1.0;
+    }
+    let thresh = (1.0 + eps) * d_k + 1e-12;
+    let hits = retrieved_dists.iter().take(k).filter(|&&d| d <= thresh).count();
+    hits as f64 / k as f64
+}
+
+/// |retrieved ∩ true top-k| / k — exact recall@k (reported alongside).
+pub fn recall_at_k(retrieved: &[usize], truth_topk: &[usize]) -> f64 {
+    if truth_topk.is_empty() {
+        return 1.0;
+    }
+    let truth: std::collections::HashSet<_> = truth_topk.iter().collect();
+    let hit = retrieved.iter().filter(|id| truth.contains(id)).count();
+    hit as f64 / truth_topk.len() as f64
+}
+
+/// One (c, r)-ANN query outcome per Problem 1.1's contract.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CrOutcome {
+    /// A point within r existed and the answer was within c·r: success.
+    Hit,
+    /// A point within r existed but the answer was absent or farther: failure.
+    Miss,
+    /// No point within r: any answer (incl. NULL) is vacuously correct.
+    Vacuous,
+}
+
+/// Judge one query against the exact index.
+/// `answer` is the returned point's true distance to q (None for NULL).
+pub fn cr_outcome(exact: &ExactNn, q: &[f32], r: f32, c: f32, answer: Option<f32>) -> CrOutcome {
+    if !exact.has_within(q, r) {
+        return CrOutcome::Vacuous;
+    }
+    match answer {
+        Some(d) if d <= c * r + 1e-6 => CrOutcome::Hit,
+        _ => CrOutcome::Miss,
+    }
+}
+
+/// Fraction of non-vacuous queries that succeeded ((c,r)-ANN accuracy).
+pub fn cr_accuracy(outcomes: &[CrOutcome]) -> f64 {
+    let relevant = outcomes.iter().filter(|o| **o != CrOutcome::Vacuous).count();
+    if relevant == 0 {
+        return 1.0;
+    }
+    let hits = outcomes.iter().filter(|o| **o == CrOutcome::Hit).count();
+    hits as f64 / relevant as f64
+}
+
+/// Distance from q to a returned point id under a vector accessor.
+pub fn answer_distance(q: &[f32], v: &[f32]) -> f32 {
+    l2(q, v)
+}
+
+/// Compression rate: sketch bytes / raw stream bytes (N·d·4, §5.1).
+pub fn compression_rate(sketch_bytes: usize, n: usize, dim: usize) -> f64 {
+    sketch_bytes as f64 / (n as f64 * dim as f64 * 4.0)
+}
+
+/// Mean relative error of estimates vs truths (pairs with truth ≤ 0 are
+/// skipped — the KDE figures plot log mean relative error over queries
+/// with positive density).
+pub fn mean_relative_error(estimates: &[f64], truths: &[f64]) -> f64 {
+    assert_eq!(estimates.len(), truths.len());
+    let errs: Vec<f64> = estimates
+        .iter()
+        .zip(truths)
+        .filter(|(_, &t)| t > 0.0)
+        .map(|(&e, &t)| (e - t).abs() / t)
+        .collect();
+    stats::mean(&errs)
+}
+
+/// Median of per-setting metric differences (ours − baseline), the Fig 6
+/// aggregation ("median difference ... as we vary compression rates").
+pub fn median_difference(ours: &[f64], baseline: &[f64]) -> f64 {
+    assert_eq!(ours.len(), baseline.len());
+    let diffs: Vec<f64> = ours.iter().zip(baseline).map(|(a, b)| a - b).collect();
+    stats::median(&diffs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn approx_recall_counts_eps_close_points() {
+        // d_k = 1.0, eps = 0.5 -> threshold 1.5
+        let dists = [0.5f32, 1.2, 1.5, 1.6];
+        assert_eq!(approx_recall_at_k(&dists, 1.0, 0.5, 4), 0.75);
+        assert_eq!(approx_recall_at_k(&dists, 1.0, 0.0, 4), 0.25);
+        // fewer retrieved than k: missing slots are misses
+        assert_eq!(approx_recall_at_k(&dists[..2], 1.0, 0.5, 4), 0.5);
+        assert_eq!(approx_recall_at_k(&[], 1.0, 0.5, 4), 0.0);
+    }
+
+    #[test]
+    fn recall_basics() {
+        assert_eq!(recall_at_k(&[1, 2, 3], &[1, 2, 3]), 1.0);
+        assert_eq!(recall_at_k(&[1, 9, 8], &[1, 2, 3]), 1.0 / 3.0);
+        assert_eq!(recall_at_k(&[], &[1, 2]), 0.0);
+        assert_eq!(recall_at_k(&[5], &[]), 1.0, "empty truth is vacuous");
+    }
+
+    #[test]
+    fn cr_outcomes() {
+        let exact = ExactNn::from_points(2, &[vec![1.0, 0.0]]);
+        let q = vec![0.0f32, 0.0];
+        // r=1.5: point within r exists
+        assert_eq!(cr_outcome(&exact, &q, 1.5, 2.0, Some(1.0)), CrOutcome::Hit);
+        assert_eq!(cr_outcome(&exact, &q, 1.5, 2.0, None), CrOutcome::Miss);
+        assert_eq!(cr_outcome(&exact, &q, 1.5, 2.0, Some(10.0)), CrOutcome::Miss);
+        // r=0.5: nothing within r -> vacuous regardless of answer
+        assert_eq!(cr_outcome(&exact, &q, 0.5, 2.0, None), CrOutcome::Vacuous);
+        assert_eq!(cr_outcome(&exact, &q, 0.5, 2.0, Some(99.0)), CrOutcome::Vacuous);
+    }
+
+    #[test]
+    fn cr_accuracy_ignores_vacuous() {
+        use CrOutcome::*;
+        assert_eq!(cr_accuracy(&[Hit, Miss, Vacuous, Hit]), 2.0 / 3.0);
+        assert_eq!(cr_accuracy(&[Vacuous, Vacuous]), 1.0);
+    }
+
+    #[test]
+    fn compression_rate_normalization() {
+        // storing half the points at full dim = 0.5 (+ table overhead)
+        assert!((compression_rate(5_000 * 128 * 4, 10_000, 128) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mre_skips_zero_truth() {
+        let est = [1.1, 5.0, 0.9];
+        let truth = [1.0, 0.0, 1.0];
+        let e = mean_relative_error(&est, &truth);
+        assert!((e - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_difference_sign() {
+        let ours = [0.9, 0.8, 0.7];
+        let base = [0.5, 0.9, 0.4];
+        assert!((median_difference(&ours, &base) - 0.3).abs() < 1e-12);
+    }
+}

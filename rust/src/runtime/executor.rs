@@ -1,0 +1,390 @@
+//! PJRT executor: compiles the HLO-text artifacts once and runs them from
+//! the serving hot path. Python never runs here — this is the AOT bridge
+//! (see /opt/xla-example/load_hlo and DESIGN.md §1).
+//!
+//! The raw entry point is [`Executor::execute`]; the `*_tiled` helpers pad
+//! and tile arbitrary batch sizes onto the fixed artifact shapes
+//! (DESIGN.md §6) and reassemble full-size outputs.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, DType, Manifest};
+
+/// A borrowed input tensor.
+pub enum Arg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl Arg<'_> {
+    fn len(&self) -> usize {
+        match self {
+            Arg::F32(v) => v.len(),
+            Arg::I32(v) => v.len(),
+        }
+    }
+    fn dtype(&self) -> DType {
+        match self {
+            Arg::F32(_) => DType::F32,
+            Arg::I32(_) => DType::I32,
+        }
+    }
+}
+
+/// An owned output tensor.
+#[derive(Clone, Debug)]
+pub enum Tensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            Tensor::F32(v) => v,
+            _ => panic!("expected f32 tensor"),
+        }
+    }
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            Tensor::I32(v) => v,
+            _ => panic!("expected i32 tensor"),
+        }
+    }
+}
+
+/// Compiled-artifact cache over one PJRT CPU client.
+pub struct Executor {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Executions per artifact (perf accounting).
+    pub exec_counts: HashMap<String, u64>,
+}
+
+impl Executor {
+    /// Load the manifest and create the PJRT CPU client. Artifacts compile
+    /// lazily on first use and stay cached.
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Executor { client, manifest, compiled: HashMap::new(), exec_counts: HashMap::new() })
+    }
+
+    /// Default artifact directory (env `SKETCH_ARTIFACTS` or ./artifacts).
+    pub fn from_default_dir() -> Result<Self> {
+        Self::new(&Manifest::default_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.compiled.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(&spec.file)
+            .map_err(|e| anyhow!("parsing {:?}: {e:?}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.compiled.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute artifact `name` with exactly the manifest shapes.
+    pub fn execute(&mut self, name: &str, args: &[Arg<'_>]) -> Result<Tensor> {
+        self.ensure_compiled(name)?;
+        let spec = self.manifest.find(name).unwrap().clone();
+        if args.len() != spec.inputs.len() {
+            bail!("{name}: expected {} inputs, got {}", spec.inputs.len(), args.len());
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (i, (a, t)) in args.iter().zip(&spec.inputs).enumerate() {
+            if a.len() != t.elements() {
+                bail!("{name} input {i}: expected {} elements, got {}", t.elements(), a.len());
+            }
+            if a.dtype() != t.dtype {
+                bail!("{name} input {i}: dtype mismatch");
+            }
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            let lit = match a {
+                Arg::F32(v) => xla::Literal::vec1(v),
+                Arg::I32(v) => xla::Literal::vec1(v),
+            };
+            literals.push(lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))?);
+        }
+        let exe = self.compiled.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        *self.exec_counts.entry(name.to_string()).or_insert(0) += 1;
+        match spec.output.dtype {
+            DType::F32 => Ok(Tensor::F32(
+                out.to_vec::<f32>().map_err(|e| anyhow!("read f32: {e:?}"))?,
+            )),
+            DType::I32 => Ok(Tensor::I32(
+                out.to_vec::<i32>().map_err(|e| anyhow!("read i32: {e:?}"))?,
+            )),
+        }
+    }
+
+    fn variant(&self, kind: &str, dim: usize) -> Result<ArtifactSpec> {
+        self.manifest
+            .find_variant(kind, dim)
+            .cloned()
+            .with_context(|| format!("no {kind} artifact for dim {dim}"))
+    }
+
+    /// Pick the variant whose batch dim wastes the least padding for `m`
+    /// rows: the smallest B >= m, else the largest available.
+    fn variant_for_rows(&self, kind: &str, dim: usize, m: usize) -> Result<ArtifactSpec> {
+        let vs = self.manifest.find_variants(kind, dim);
+        if vs.is_empty() {
+            anyhow::bail!("no {kind} artifact for dim {dim}");
+        }
+        Ok(vs
+            .iter()
+            .find(|a| a.inputs[0].shape[0] >= m)
+            .unwrap_or_else(|| vs.last().unwrap())
+            .to_owned()
+            .clone())
+    }
+
+    /// Batched p-stable hashing of `m` points (row-major \[m, dim\]) against
+    /// `h` hash slots (proj `\[dim, h\]`, bias `[h]`). Tiles over the artifact's
+    /// fixed (B, H) shape, zero-padding rows and columns, and returns
+    /// row-major i64 slots \[m, h\] ready for `TableHasher::keys_from_slots`.
+    pub fn pstable_hash_tiled(
+        &mut self,
+        dim: usize,
+        points: &[f32],
+        proj: &[f32],
+        bias: &[f32],
+        inv_w: f32,
+    ) -> Result<Vec<i64>> {
+        let m = points.len() / dim;
+        let spec = self.variant_for_rows("pstable_hash", dim, m)?;
+        let (bb, hh) = (spec.inputs[0].shape[0], spec.inputs[1].shape[1]);
+        let h = bias.len();
+        assert_eq!(proj.len(), dim * h, "proj must be [dim, h]");
+        let inv = [inv_w];
+        let mut out = vec![0i64; m * h];
+        let mut pts_tile = vec![0f32; bb * dim];
+        let mut proj_tile = vec![0f32; dim * hh];
+        let mut bias_tile = vec![0f32; hh];
+        for c0 in (0..h).step_by(hh) {
+            let cw = hh.min(h - c0);
+            // column block of proj/bias, zero-padded to hh
+            proj_tile.iter_mut().for_each(|v| *v = 0.0);
+            for r in 0..dim {
+                proj_tile[r * hh..r * hh + cw]
+                    .copy_from_slice(&proj[r * h + c0..r * h + c0 + cw]);
+            }
+            bias_tile.iter_mut().for_each(|v| *v = 0.0);
+            bias_tile[..cw].copy_from_slice(&bias[c0..c0 + cw]);
+            for r0 in (0..m).step_by(bb) {
+                let rw = bb.min(m - r0);
+                pts_tile.iter_mut().for_each(|v| *v = 0.0);
+                pts_tile[..rw * dim].copy_from_slice(&points[r0 * dim..(r0 + rw) * dim]);
+                let t = self.execute(
+                    &spec.name,
+                    &[
+                        Arg::F32(&pts_tile),
+                        Arg::F32(&proj_tile),
+                        Arg::F32(&bias_tile),
+                        Arg::F32(&inv),
+                    ],
+                )?;
+                let slots = t.as_i32();
+                for r in 0..rw {
+                    for c in 0..cw {
+                        out[(r0 + r) * h + c0 + c] = slots[r * hh + c] as i64;
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Batched SRP hashing; same tiling contract as `pstable_hash_tiled`.
+    pub fn srp_hash_tiled(
+        &mut self,
+        dim: usize,
+        points: &[f32],
+        proj: &[f32],
+        h: usize,
+    ) -> Result<Vec<i64>> {
+        let spec = self.variant("srp_hash", dim)?;
+        let (bb, hh) = (spec.inputs[0].shape[0], spec.inputs[1].shape[1]);
+        let m = points.len() / dim;
+        assert_eq!(proj.len(), dim * h, "proj must be [dim, h]");
+        let mut out = vec![0i64; m * h];
+        let mut pts_tile = vec![0f32; bb * dim];
+        let mut proj_tile = vec![0f32; dim * hh];
+        for c0 in (0..h).step_by(hh) {
+            let cw = hh.min(h - c0);
+            proj_tile.iter_mut().for_each(|v| *v = 0.0);
+            for r in 0..dim {
+                proj_tile[r * hh..r * hh + cw]
+                    .copy_from_slice(&proj[r * h + c0..r * h + c0 + cw]);
+            }
+            for r0 in (0..m).step_by(bb) {
+                let rw = bb.min(m - r0);
+                pts_tile.iter_mut().for_each(|v| *v = 0.0);
+                pts_tile[..rw * dim].copy_from_slice(&points[r0 * dim..(r0 + rw) * dim]);
+                let t = self.execute(&spec.name, &[Arg::F32(&pts_tile), Arg::F32(&proj_tile)])?;
+                let slots = t.as_i32();
+                for r in 0..rw {
+                    for c in 0..cw {
+                        out[(r0 + r) * h + c0 + c] = slots[r * hh + c] as i64;
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Batched re-rank: `queries` row-major \[m, dim\], `cands[i]` the i-th
+    /// query's candidate vectors (each `[dim]`); returns per-query squared
+    /// distances aligned with the candidate lists. Candidate slots beyond
+    /// each list are padding and are not returned.
+    pub fn rerank_tiled(
+        &mut self,
+        dim: usize,
+        queries: &[f32],
+        cands: &[Vec<&[f32]>],
+    ) -> Result<Vec<Vec<f32>>> {
+        let spec = self.variant("rerank_l2", dim)?;
+        let (bb, cc) = (spec.inputs[0].shape[0], spec.inputs[1].shape[1]);
+        let m = queries.len() / dim;
+        assert_eq!(cands.len(), m);
+        let mut out: Vec<Vec<f32>> = cands.iter().map(|c| vec![0.0; c.len()]).collect();
+        let mut q_tile = vec![0f32; bb * dim];
+        let mut c_tile = vec![0f32; bb * cc * dim];
+        for r0 in (0..m).step_by(bb) {
+            let rw = bb.min(m - r0);
+            q_tile.iter_mut().for_each(|v| *v = 0.0);
+            q_tile[..rw * dim].copy_from_slice(&queries[r0 * dim..(r0 + rw) * dim]);
+            c_tile.iter_mut().for_each(|v| *v = 0.0);
+            for r in 0..rw {
+                let list = &cands[r0 + r];
+                assert!(
+                    list.len() <= cc,
+                    "candidate list {} exceeds artifact capacity {}",
+                    list.len(),
+                    cc
+                );
+                for (j, cand) in list.iter().enumerate() {
+                    let off = (r * cc + j) * dim;
+                    c_tile[off..off + dim].copy_from_slice(cand);
+                }
+            }
+            let t = self.execute(&spec.name, &[Arg::F32(&q_tile), Arg::F32(&c_tile)])?;
+            let d = t.as_f32();
+            for r in 0..rw {
+                let list_len = cands[r0 + r].len();
+                out[r0 + r].copy_from_slice(&d[r * cc..r * cc + list_len]);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Shared-pool distance matrix: queries row-major [mq, dim] against a
+    /// pool [p, dim]; returns row-major [mq, p] squared distances. Tiles
+    /// over the artifact's fixed (Q, P) shape (zero rows in the padding
+    /// produce distances to the origin, which callers never index).
+    pub fn dist_matrix_tiled(
+        &mut self,
+        dim: usize,
+        queries: &[f32],
+        pool: &[f32],
+    ) -> Result<Vec<f32>> {
+        let spec = self.variant("dist_matrix", dim)?;
+        let (qq, pp) = (spec.inputs[0].shape[0], spec.inputs[1].shape[0]);
+        let mq = queries.len() / dim;
+        let p = pool.len() / dim;
+        let mut out = vec![0f32; mq * p];
+        let mut q_tile = vec![0f32; qq * dim];
+        let mut p_tile = vec![0f32; pp * dim];
+        for r0 in (0..mq).step_by(qq) {
+            let rw = qq.min(mq - r0);
+            q_tile.iter_mut().for_each(|v| *v = 0.0);
+            q_tile[..rw * dim].copy_from_slice(&queries[r0 * dim..(r0 + rw) * dim]);
+            for c0 in (0..p).step_by(pp) {
+                let cw = pp.min(p - c0);
+                p_tile.iter_mut().for_each(|v| *v = 0.0);
+                p_tile[..cw * dim].copy_from_slice(&pool[c0 * dim..(c0 + cw) * dim]);
+                let t = self.execute(&spec.name, &[Arg::F32(&q_tile), Arg::F32(&p_tile)])?;
+                let d = t.as_f32();
+                for r in 0..rw {
+                    out[(r0 + r) * p + c0..(r0 + r) * p + c0 + cw]
+                        .copy_from_slice(&d[r * pp..r * pp + cw]);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Exact KDE ground truth over a full dataset, streamed through the
+    /// fixed (Q, N) kde artifact tiles. `kind` is "kde_angular" or
+    /// "kde_pstable" (the latter takes the bucket width `w`).
+    pub fn kde_tiled(
+        &mut self,
+        kind: &str,
+        dim: usize,
+        queries: &[f32],
+        data: &[f32],
+        w: Option<f32>,
+        p: f32,
+    ) -> Result<Vec<f64>> {
+        let spec = self.variant(kind, dim)?;
+        let (qq, nn) = (spec.inputs[0].shape[0], spec.inputs[1].shape[0]);
+        let mq = queries.len() / dim;
+        let n = data.len() / dim;
+        let pv = [p];
+        let wv = [w.unwrap_or(1.0)];
+        let mut out = vec![0f64; mq];
+        let mut q_tile = vec![0f32; qq * dim];
+        let mut d_tile = vec![0f32; nn * dim];
+        for r0 in (0..mq).step_by(qq) {
+            let rw = qq.min(mq - r0);
+            q_tile.iter_mut().for_each(|v| *v = 0.0);
+            q_tile[..rw * dim].copy_from_slice(&queries[r0 * dim..(r0 + rw) * dim]);
+            for n0 in (0..n).step_by(nn) {
+                let nw = nn.min(n - n0);
+                d_tile.iter_mut().for_each(|v| *v = 0.0); // zero rows are masked by the kernel
+                d_tile[..nw * dim].copy_from_slice(&data[n0 * dim..(n0 + nw) * dim]);
+                let args: Vec<Arg> = if kind == "kde_pstable" {
+                    vec![Arg::F32(&q_tile), Arg::F32(&d_tile), Arg::F32(&wv), Arg::F32(&pv)]
+                } else {
+                    vec![Arg::F32(&q_tile), Arg::F32(&d_tile), Arg::F32(&pv)]
+                };
+                let t = self.execute(&spec.name, &args)?;
+                let partial = t.as_f32();
+                for r in 0..rw {
+                    out[r0 + r] += partial[r] as f64;
+                }
+            }
+        }
+        Ok(out)
+    }
+}

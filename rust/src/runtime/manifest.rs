@@ -1,0 +1,221 @@
+//! Artifact manifest: the shape/dtype registry `python/compile/aot.py`
+//! writes next to the HLO text files. Parsed with the in-repo JSON
+//! substrate (util::json).
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Element type of an artifact tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => anyhow::bail!("unknown dtype {other:?}"),
+        }
+    }
+}
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim")))
+            .collect::<Result<Vec<_>, _>>()?;
+        let dtype = DType::parse(
+            j.get("dtype")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("missing dtype"))?,
+        )?;
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One AOT artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// Function kind: pstable_hash | srp_hash | rerank_l2 | kde_angular | kde_pstable.
+    pub kind: String,
+    pub file: PathBuf,
+    pub golden: bool,
+    pub inputs: Vec<TensorSpec>,
+    pub output: TensorSpec,
+}
+
+/// The parsed manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {path:?}: {e} (run `make artifacts`)"))?;
+        let root = Json::parse(&src)?;
+        let arts = root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'artifacts'"))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("artifact missing name"))?
+                .to_string();
+            let kind = a
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("artifact missing kind"))?
+                .to_string();
+            let file = dir.join(
+                a.get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("artifact missing file"))?,
+            );
+            let golden = a.get("golden").and_then(Json::as_bool).unwrap_or(false);
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("artifact missing inputs"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>, _>>()?;
+            let output = TensorSpec::from_json(
+                a.get("output").ok_or_else(|| anyhow::anyhow!("missing output"))?,
+            )?;
+            artifacts.push(ArtifactSpec { name, kind, file, golden, inputs, output });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// The production (non-golden) artifact of `kind` whose first input's
+    /// trailing dim equals `dim` (the hash/kde variant lookup).
+    pub fn find_variant(&self, kind: &str, dim: usize) -> Option<&ArtifactSpec> {
+        self.find_variants(kind, dim).into_iter().next()
+    }
+
+    /// All production variants of `kind` at `dim`, sorted by batch size
+    /// ascending — the executor picks the smallest batch that fits.
+    pub fn find_variants(&self, kind: &str, dim: usize) -> Vec<&ArtifactSpec> {
+        let mut out: Vec<&ArtifactSpec> = self
+            .artifacts
+            .iter()
+            .filter(|a| {
+                !a.golden
+                    && a.kind == kind
+                    && a.inputs
+                        .first()
+                        .and_then(|t| t.shape.last())
+                        .is_some_and(|&d| d == dim)
+            })
+            .collect();
+        out.sort_by_key(|a| a.inputs[0].shape[0]);
+        out
+    }
+
+    /// Default artifact directory: `$SKETCH_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("SKETCH_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("ss_manifest_test1");
+        write_manifest(
+            &dir,
+            r#"{"version":1,"artifacts":[
+              {"name":"pstable_hash_8","kind":"pstable_hash","file":"x.hlo.txt",
+               "golden":false,
+               "inputs":[{"shape":[4,8],"dtype":"f32"},{"shape":[8,16],"dtype":"f32"}],
+               "output":{"shape":[4,16],"dtype":"i32"}}]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.find("pstable_hash_8").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![4, 8]);
+        assert_eq!(a.output.dtype, DType::I32);
+        assert_eq!(a.output.elements(), 64);
+        assert!(m.find_variant("pstable_hash", 8).is_some());
+        assert!(m.find_variant("pstable_hash", 99).is_none());
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let err = Manifest::load(Path::new("/nonexistent/dir")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn golden_variants_excluded_from_variant_lookup() {
+        let dir = std::env::temp_dir().join("ss_manifest_test2");
+        write_manifest(
+            &dir,
+            r#"{"artifacts":[
+              {"name":"srp_hash_g","kind":"srp_hash","file":"g.hlo.txt","golden":true,
+               "inputs":[{"shape":[8,16],"dtype":"f32"}],
+               "output":{"shape":[8,32],"dtype":"i32"}}]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.find_variant("srp_hash", 16).is_none());
+        assert!(m.find("srp_hash_g").unwrap().golden);
+    }
+
+    #[test]
+    fn real_manifest_parses_if_built() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.artifacts.len() >= 20);
+        for kind in ["pstable_hash", "rerank_l2", "kde_angular", "kde_pstable"] {
+            assert!(
+                m.artifacts.iter().any(|a| a.kind == kind),
+                "missing kind {kind}"
+            );
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! AOT runtime: loads `artifacts/*.hlo.txt` (lowered once by
+//! `python/compile/aot.py`) and executes them on the PJRT CPU client from
+//! the Rust hot path. `native` mirrors every artifact in pure Rust for
+//! cross-checking and artifact-less operation.
+
+pub mod executor;
+pub mod manifest;
+pub mod native;
+
+pub use executor::{Arg, Executor, Tensor};
+pub use manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
+
+/// PJRT platform smoke check.
+pub fn platform_name() -> anyhow::Result<String> {
+    let client = xla::PjRtClient::cpu()?;
+    Ok(client.platform_name())
+}

@@ -1,0 +1,183 @@
+//! Pure-Rust mirrors of every artifact function.
+//!
+//! Two jobs: (1) cross-check the PJRT path numerically (integration tests
+//! assert artifact ≡ native ≡ python-golden), and (2) keep the library
+//! fully functional when `artifacts/` has not been built.
+
+use crate::lsh::pstable::PStableLsh;
+use crate::util::l2;
+
+/// floor((x·proj_col + bias) * inv_w) per point per slot → \[m, h\] i64.
+pub fn pstable_hash(
+    dim: usize,
+    points: &[f32],
+    proj: &[f32], // [dim, h] column-per-slot
+    bias: &[f32],
+    inv_w: f32,
+) -> Vec<i64> {
+    let m = points.len() / dim;
+    let h = bias.len();
+    let mut out = vec![0i64; m * h];
+    for r in 0..m {
+        let x = &points[r * dim..(r + 1) * dim];
+        for c in 0..h {
+            let mut acc = 0.0f32;
+            for i in 0..dim {
+                acc += x[i] * proj[i * h + c];
+            }
+            out[r * h + c] = ((acc + bias[c]) * inv_w).floor() as i64;
+        }
+    }
+    out
+}
+
+/// (x·proj_col >= 0) per point per slot → \[m, h\] i64 in {0, 1}.
+pub fn srp_hash(dim: usize, points: &[f32], proj: &[f32], h: usize) -> Vec<i64> {
+    let m = points.len() / dim;
+    let mut out = vec![0i64; m * h];
+    for r in 0..m {
+        let x = &points[r * dim..(r + 1) * dim];
+        for c in 0..h {
+            let mut acc = 0.0f32;
+            for i in 0..dim {
+                acc += x[i] * proj[i * h + c];
+            }
+            out[r * h + c] = (acc >= 0.0) as i64;
+        }
+    }
+    out
+}
+
+/// Full Q×P squared-distance matrix against a shared candidate pool
+/// (mirror of the `dist_matrix_*` artifacts; row-major [mq, p]).
+pub fn dist_matrix(dim: usize, queries: &[f32], pool: &[f32]) -> Vec<f32> {
+    let mq = queries.len() / dim;
+    let p = pool.len() / dim;
+    let mut out = vec![0f32; mq * p];
+    for r in 0..mq {
+        let q = &queries[r * dim..(r + 1) * dim];
+        for j in 0..p {
+            let x = &pool[j * dim..(j + 1) * dim];
+            out[r * p + j] = crate::util::l2_sq(q, x);
+        }
+    }
+    out
+}
+
+/// Per-query squared distances to per-query candidate lists.
+pub fn rerank_l2(dim: usize, queries: &[f32], cands: &[Vec<&[f32]>]) -> Vec<Vec<f32>> {
+    let m = queries.len() / dim;
+    (0..m)
+        .map(|r| {
+            let q = &queries[r * dim..(r + 1) * dim];
+            cands[r].iter().map(|c| crate::util::l2_sq(q, c)).collect()
+        })
+        .collect()
+}
+
+/// Exact angular LSH-kernel density with zero-row masking (matches the
+/// Pallas kernel's padding semantics).
+pub fn kde_angular(dim: usize, queries: &[f32], data: &[f32], p: f32) -> Vec<f64> {
+    let mq = queries.len() / dim;
+    let n = data.len() / dim;
+    (0..mq)
+        .map(|r| {
+            let q = &queries[r * dim..(r + 1) * dim];
+            let mut acc = 0.0f64;
+            for i in 0..n {
+                let x = &data[i * dim..(i + 1) * dim];
+                let xn2: f32 = x.iter().map(|v| v * v).sum();
+                if xn2 == 0.0 {
+                    continue; // padding row
+                }
+                let cos = crate::util::cosine(q, x) as f64;
+                acc += (1.0 - cos.acos() / std::f64::consts::PI).powf(p as f64);
+            }
+            acc
+        })
+        .collect()
+}
+
+/// Exact p-stable LSH-kernel density with zero-row masking.
+pub fn kde_pstable(dim: usize, queries: &[f32], data: &[f32], w: f32, p: f32) -> Vec<f64> {
+    let mq = queries.len() / dim;
+    let n = data.len() / dim;
+    (0..mq)
+        .map(|r| {
+            let q = &queries[r * dim..(r + 1) * dim];
+            let mut acc = 0.0f64;
+            for i in 0..n {
+                let x = &data[i * dim..(i + 1) * dim];
+                let xn2: f32 = x.iter().map(|v| v * v).sum();
+                if xn2 == 0.0 {
+                    continue;
+                }
+                let d = l2(q, x) as f64;
+                acc += PStableLsh::collision_prob_for(d, w as f64).powf(p as f64);
+            }
+            acc
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lsh::srp::SrpLsh;
+    use crate::lsh::LshFamily;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pstable_native_matches_family_hashing() {
+        // The family's hash_one and the flat native path must agree exactly
+        // (both compute in f32 then floor).
+        let (dim, h) = (6, 8);
+        let mut rng = Rng::new(1);
+        let fam = crate::lsh::pstable::PStableLsh::new(dim, h, 2.0, &mut rng);
+        let mut rng2 = Rng::new(2);
+        let x: Vec<f32> = (0..dim).map(|_| rng2.gaussian_f32() * 3.0).collect();
+        let slots = pstable_hash(dim, &x, fam.projection(), fam.biases(), 1.0 / 2.0);
+        for j in 0..h {
+            assert_eq!(slots[j], fam.hash_one(j, &x), "slot {j}");
+        }
+    }
+
+    #[test]
+    fn srp_native_matches_family_hashing() {
+        let (dim, h) = (10, 16);
+        let fam = SrpLsh::new(dim, h, &mut Rng::new(3));
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+        let slots = srp_hash(dim, &x, fam.projection(), h);
+        for j in 0..h {
+            assert_eq!(slots[j], fam.hash_one(j, &x), "slot {j}");
+        }
+    }
+
+    #[test]
+    fn kde_matches_baseline_oracles() {
+        let dim = 8;
+        let mut rng = Rng::new(5);
+        let data: Vec<Vec<f32>> = (0..40)
+            .map(|_| (0..dim).map(|_| rng.gaussian_f32()).collect())
+            .collect();
+        let q: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+        let flat: Vec<f32> = data.iter().flatten().copied().collect();
+        let a = kde_angular(dim, &q, &flat, 4.0)[0];
+        let b = crate::baselines::exact_kde_angular(&data, &q, 4);
+        assert!((a - b).abs() < 1e-6 * b.max(1.0), "a={a} b={b}");
+        let c = kde_pstable(dim, &q, &flat, 2.0, 4.0)[0];
+        let d = crate::baselines::exact_kde_pstable(&data, &q, 2.0, 4);
+        assert!((c - d).abs() < 1e-6 * d.max(1.0), "c={c} d={d}");
+    }
+
+    #[test]
+    fn rerank_matches_l2() {
+        let dim = 4;
+        let q = vec![0.0f32; 4];
+        let c1 = [1.0f32, 0.0, 0.0, 0.0];
+        let c2 = [3.0f32, 4.0, 0.0, 0.0];
+        let out = rerank_l2(dim, &q, &[vec![&c1[..], &c2[..]]]);
+        assert_eq!(out[0], vec![1.0, 25.0]);
+    }
+}

@@ -1,0 +1,148 @@
+//! Adaptive window selection — the paper's §6 future-work direction:
+//! "adaptive mechanisms for adjusting the window size based on the
+//! evolving data distribution".
+//!
+//! [`AdaptiveSwAkde`] maintains a small bank of SW-AKDE sketches at
+//! geometrically spaced window sizes over the same stream (cost: a
+//! log-factor in space) and, at query time, scores each window by the
+//! *stability* of its density estimate: for each window W it compares the
+//! estimate at W against the estimate at W/2. A large discrepancy means
+//! the older half of the window disagrees with the newer half — the
+//! distribution drifted inside the window — so the smallest window whose
+//! halves agree (within `tolerance`) is selected. Under drift this picks
+//! short windows (fast adaptation); under stationarity it picks long ones
+//! (low variance) — exactly the trade-off Fig 10 exposes manually.
+
+use crate::lsh::LshFamily;
+use crate::sketch::SwAkde;
+
+/// A bank of SW-AKDE sketches with adaptive window selection.
+pub struct AdaptiveSwAkde {
+    /// Sketches at windows w₀, 2w₀, 4w₀, …, front = smallest.
+    bank: Vec<SwAkde>,
+    /// Relative half-window discrepancy below which a window is "stable".
+    tolerance: f64,
+}
+
+impl AdaptiveSwAkde {
+    /// Bank with `levels` windows: base, 2·base, …, 2^{levels−1}·base.
+    /// All sketches share the SRP cell structure (rows, p) and EH ε'.
+    pub fn new_srp(rows: usize, p: usize, eps_eh: f64, base_window: u64, levels: usize, tolerance: f64) -> Self {
+        assert!(levels >= 2);
+        let bank = (0..levels)
+            .map(|i| SwAkde::new_srp(rows, p, eps_eh, base_window << i))
+            .collect();
+        AdaptiveSwAkde { bank, tolerance }
+    }
+
+    pub fn levels(&self) -> usize {
+        self.bank.len()
+    }
+
+    pub fn windows(&self) -> Vec<u64> {
+        self.bank.iter().map(|s| s.window()).collect()
+    }
+
+    /// Ingest one element into every level.
+    pub fn add<F: LshFamily + ?Sized>(&mut self, fam: &F, x: &[f32]) {
+        for s in &mut self.bank {
+            s.add(fam, x);
+        }
+    }
+
+    /// Normalized density per level (index 0 = smallest window).
+    pub fn densities<F: LshFamily + ?Sized>(&mut self, fam: &F, q: &[f32]) -> Vec<f64> {
+        self.bank.iter_mut().map(|s| s.density(fam, q)).collect()
+    }
+
+    /// Pick the window: the LARGEST window whose density agrees with the
+    /// next-smaller window within `tolerance` (relative), scanning from
+    /// small to large and stopping at the first disagreement. Returns
+    /// (chosen window size, density estimate at it).
+    pub fn query<F: LshFamily + ?Sized>(&mut self, fam: &F, q: &[f32]) -> (u64, f64) {
+        let d = self.densities(fam, q);
+        let mut chosen = 0usize;
+        for i in 1..d.len() {
+            let scale = d[i - 1].abs().max(1e-12);
+            if (d[i] - d[i - 1]).abs() / scale <= self.tolerance {
+                chosen = i;
+            } else {
+                break; // the larger window mixes in drifted data
+            }
+        }
+        (self.bank[chosen].window(), d[chosen])
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.bank.iter().map(|s| s.memory_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lsh::srp::SrpLsh;
+    use crate::util::rng::Rng;
+
+    fn gaussian_cloud(rng: &mut Rng, center: f32, n: usize, dim: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|_| (0..dim).map(|_| center + 0.3 * rng.gaussian_f32()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn stationary_stream_prefers_large_windows() {
+        let dim = 12;
+        let (rows, p) = (32, 4);
+        let fam = SrpLsh::new(dim, rows * p, &mut Rng::new(1));
+        let mut ad = AdaptiveSwAkde::new_srp(rows, p, 0.1, 64, 4, 0.25);
+        let mut rng = Rng::new(2);
+        let pts = gaussian_cloud(&mut rng, 1.0, 2000, dim);
+        for x in &pts {
+            ad.add(&fam, x);
+        }
+        let q = pts[1500].clone();
+        let (w, _) = ad.query(&fam, &q);
+        assert!(
+            w >= 256,
+            "stationary data should pick a large window, got {w}"
+        );
+    }
+
+    #[test]
+    fn drifted_stream_prefers_small_windows() {
+        let dim = 12;
+        let (rows, p) = (32, 4);
+        let fam = SrpLsh::new(dim, rows * p, &mut Rng::new(3));
+        let mut ad = AdaptiveSwAkde::new_srp(rows, p, 0.1, 64, 4, 0.25);
+        let mut rng = Rng::new(4);
+        // Old regime far from the new one; drift 100 steps ago.
+        for x in gaussian_cloud(&mut rng, -3.0, 2000, dim) {
+            ad.add(&fam, &x);
+        }
+        let recent = gaussian_cloud(&mut rng, 3.0, 100, dim);
+        for x in &recent {
+            ad.add(&fam, x);
+        }
+        // Query in the NEW regime: big windows mix in the old regime's
+        // (near-zero density) mass, so their estimates disagree.
+        let q = recent[50].clone();
+        let (w, dens) = ad.query(&fam, &q);
+        assert!(w <= 128, "post-drift query should pick a small window, got {w}");
+        assert!(dens > 0.1, "density in the live regime should be high: {dens}");
+    }
+
+    #[test]
+    fn densities_are_per_level_and_bank_grows_geometric() {
+        let fam = SrpLsh::new(8, 32 * 3, &mut Rng::new(5));
+        let mut ad = AdaptiveSwAkde::new_srp(32, 3, 0.1, 16, 3, 0.3);
+        assert_eq!(ad.windows(), vec![16, 32, 64]);
+        let mut rng = Rng::new(6);
+        for x in gaussian_cloud(&mut rng, 0.0, 100, 8) {
+            ad.add(&fam, &x);
+        }
+        let q: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
+        assert_eq!(ad.densities(&fam, &q).len(), 3);
+        assert!(ad.memory_bytes() > 0);
+    }
+}

@@ -1,0 +1,481 @@
+//! S-ANN — the paper's streaming (c, r)-Approximate Near Neighbor sketch
+//! (Algorithm 1, Theorem 3.1).
+//!
+//! Insert path: each arriving point is retained with probability n^{−η}
+//! (the sublinear sample); a retained point is stored in the arena and
+//! inserted into L bucket tables under g_j = (h_{jk+1}…h_{jk+k}).
+//!
+//! Query path: probe g_j(q) for j = 1…L, collecting candidates until the
+//! 3L cap (event E₂'s budget), dedupe, re-rank by true distance, and
+//! return the best candidate iff it lies within r₂ = c·r — otherwise NULL,
+//! exactly as Algorithm 1 specifies.
+//!
+//! Deletions (turnstile model, §3.4) tombstone the arena entry and remove
+//! postings; guarantees hold while ≤ d deletions hit any r-ball
+//! (Theorem 3.3) — see `turnstile.rs` for budget accounting.
+
+use crate::lsh::concat::TableHasher;
+use crate::lsh::params::{AnnParams, Sensitivity};
+use crate::lsh::pstable::PStableLsh;
+use crate::sketch::sampler::BernoulliSampler;
+use crate::storage::{TableSet, VecStore};
+use crate::util::l2_sq;
+
+/// Construction parameters for an S-ANN sketch.
+#[derive(Clone, Debug)]
+pub struct SAnnConfig {
+    pub dim: usize,
+    /// Stream-size upper bound n.
+    pub n_max: usize,
+    /// Sampling exponent η ∈ \[0, 1\]; retention probability is n^{−η}.
+    pub eta: f64,
+    /// Near radius r.
+    pub r: f64,
+    /// Approximation factor c > 1 (r₂ = c·r).
+    pub c: f64,
+    /// p-stable bucket width w.
+    pub w: f64,
+    /// Practical cap on L (Lemma 3.3 can demand large L at big n).
+    pub l_cap: usize,
+    pub seed: u64,
+}
+
+impl SAnnConfig {
+    pub fn sensitivity(&self) -> Sensitivity {
+        Sensitivity::pstable(self.r, self.c, self.w)
+    }
+}
+
+/// Per-query diagnostics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QueryStats {
+    /// Bucket postings scanned (before dedupe).
+    pub scanned: usize,
+    /// Distinct candidates re-ranked.
+    pub candidates: usize,
+    /// Tables probed before the 3L cap fired.
+    pub tables_probed: usize,
+}
+
+/// The streaming sketch.
+pub struct SAnn {
+    cfg: SAnnConfig,
+    params: AnnParams,
+    family: PStableLsh,
+    hasher: TableHasher,
+    tables: TableSet,
+    store: VecStore,
+    sampler: BernoulliSampler,
+    /// Scratch reused across inserts/queries (hot path: no allocation).
+    key_scratch: Vec<u64>,
+    seen_scratch: std::collections::HashSet<u32>,
+    cand_scratch: Vec<u32>,
+}
+
+impl SAnn {
+    pub fn new(cfg: SAnnConfig) -> Self {
+        let sens = cfg.sensitivity();
+        let params = AnnParams::derive(&sens, cfg.n_max, cfg.eta, cfg.l_cap);
+        let mut rng = crate::util::rng::Rng::new(cfg.seed);
+        let family = PStableLsh::new(cfg.dim, params.k * params.l, cfg.w as f32, &mut rng);
+        let hasher = TableHasher::new(params.k, params.l);
+        let tables = TableSet::new(params.l);
+        let store = VecStore::new(cfg.dim);
+        let sampler = BernoulliSampler::with_prob(params.keep_prob, cfg.seed ^ 0xA5A5);
+        SAnn {
+            cfg,
+            params,
+            family,
+            hasher,
+            tables,
+            store,
+            sampler,
+            key_scratch: Vec::new(),
+            seen_scratch: Default::default(),
+            cand_scratch: Vec::new(),
+        }
+    }
+
+    pub fn params(&self) -> &AnnParams {
+        &self.params
+    }
+
+    pub fn config(&self) -> &SAnnConfig {
+        &self.cfg
+    }
+
+    pub fn family(&self) -> &PStableLsh {
+        &self.family
+    }
+
+    pub fn hasher(&self) -> &TableHasher {
+        &self.hasher
+    }
+
+    /// Points currently stored (retained and not deleted).
+    pub fn stored(&self) -> usize {
+        self.store.live()
+    }
+
+    /// Draw the next sampler decision (exposed for insert paths where the
+    /// hashing was done externally, e.g. the PJRT bulk-load).
+    pub fn sampler_keep(&mut self) -> bool {
+        self.sampler.keep()
+    }
+
+    /// Offer a stream element; returns the id if it was retained.
+    pub fn insert(&mut self, x: &[f32]) -> Option<u32> {
+        if !self.sampler.keep() {
+            return None;
+        }
+        Some(self.insert_retained(x))
+    }
+
+    /// Insert bypassing the sampler (bulk loads where sampling was already
+    /// applied upstream, and η = 0 contract tests).
+    pub fn insert_retained(&mut self, x: &[f32]) -> u32 {
+        let id = self.store.push(x);
+        let (hasher, family) = (&self.hasher, &self.family);
+        hasher.keys(family, x, &mut self.key_scratch);
+        self.tables.insert(&self.key_scratch, id);
+        id
+    }
+
+    /// Insert with externally precomputed raw hash slots (PJRT batch path;
+    /// slots laid out `\[k*L\]` exactly as the `pstable_hash_*` artifact emits).
+    pub fn insert_retained_slots(&mut self, x: &[f32], slots: &[i64]) -> u32 {
+        let id = self.store.push(x);
+        self.hasher.keys_from_slots(slots, &mut self.key_scratch);
+        self.tables.insert(&self.key_scratch, id);
+        id
+    }
+
+    /// Turnstile deletion of a point equal to `x` (no-op if no stored copy;
+    /// the sampler may have dropped it). Returns whether a copy was removed.
+    pub fn delete(&mut self, x: &[f32]) -> bool {
+        let (hasher, family) = (&self.hasher, &self.family);
+        hasher.keys(family, x, &mut self.key_scratch);
+        // Find a live stored copy via table 0's bucket.
+        let bucket = self.tables.probe(0, self.key_scratch[0]);
+        let mut found: Option<u32> = None;
+        for &id in bucket {
+            if self.store.is_live(id) && self.store.get(id) == x {
+                found = Some(id);
+                break;
+            }
+        }
+        match found {
+            Some(id) => {
+                self.tables.remove(&self.key_scratch, id);
+                self.store.delete(id);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Algorithm 1 query: nearest candidate within r₂ = c·r, else None.
+    pub fn query(&mut self, q: &[f32]) -> Option<(u32, f32)> {
+        let (best, _) = self.query_with_stats(q);
+        best
+    }
+
+    /// Query returning diagnostics (bench instrumentation).
+    pub fn query_with_stats(&mut self, q: &[f32]) -> (Option<(u32, f32)>, QueryStats) {
+        let mut stats = QueryStats::default();
+        self.collect_candidates(q, &mut stats);
+        let r2_sq = (self.cfg.c * self.cfg.r) as f32 * (self.cfg.c * self.cfg.r) as f32;
+        let mut best: Option<(u32, f32)> = None;
+        for &id in &self.cand_scratch {
+            let d = l2_sq(self.store.get(id), q);
+            if best.map_or(true, |(_, bd)| d < bd) {
+                best = Some((id, d));
+            }
+        }
+        stats.candidates = self.cand_scratch.len();
+        let ans = match best {
+            Some((id, d_sq)) if d_sq <= r2_sq => Some((id, d_sq.sqrt())),
+            _ => None,
+        };
+        (ans, stats)
+    }
+
+    /// Top-k candidates by true distance (for recall@k metrics); returns
+    /// (id, distance) sorted ascending, at most k entries, from the same
+    /// 3L-capped candidate set Algorithm 1 scans.
+    pub fn query_topk(&mut self, q: &[f32], k: usize) -> Vec<(u32, f32)> {
+        let mut stats = QueryStats::default();
+        self.collect_candidates(q, &mut stats);
+        let mut scored: Vec<(u32, f32)> = self
+            .cand_scratch
+            .iter()
+            .map(|&id| (id, l2_sq(self.store.get(id), q).sqrt()))
+            .collect();
+        scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        scored.truncate(k);
+        scored
+    }
+
+    /// Candidate ids for `q` under the 3L cap (exposed for the coordinator's
+    /// batched rerank path, which re-ranks via the PJRT artifact instead).
+    pub fn candidates(&mut self, q: &[f32]) -> &[u32] {
+        let mut stats = QueryStats::default();
+        self.collect_candidates(q, &mut stats);
+        &self.cand_scratch
+    }
+
+    /// Candidates from PRECOMPUTED table keys (len = L) — the batched
+    /// serving path hashes whole query batches through the PJRT
+    /// `pstable_hash` artifact and probes with the resulting keys, so the
+    /// shard thread never touches the projection matrix.
+    pub fn candidates_by_keys(&mut self, keys: &[u64]) -> &[u32] {
+        debug_assert_eq!(keys.len(), self.params.l);
+        let cap = self.params.candidate_cap();
+        self.seen_scratch.clear();
+        self.cand_scratch.clear();
+        'outer: for (j, &key) in keys.iter().enumerate() {
+            for &id in self.tables.probe(j, key) {
+                if self.store.is_live(id) && self.seen_scratch.insert(id) {
+                    self.cand_scratch.push(id);
+                }
+                if self.cand_scratch.len() >= cap {
+                    break 'outer;
+                }
+            }
+        }
+        &self.cand_scratch
+    }
+
+    fn collect_candidates(&mut self, q: &[f32], stats: &mut QueryStats) {
+        let cap = self.params.candidate_cap();
+        let (hasher, family) = (&self.hasher, &self.family);
+        self.seen_scratch.clear();
+        self.cand_scratch.clear();
+        // Lazily hash one table at a time (Algorithm 1 probes g_j(q) in
+        // sequence and stops at 3L candidates): when early buckets fill the
+        // budget, the remaining (L - j)·k hash evaluations are never paid.
+        let mut slot_scratch: Vec<i64> = Vec::with_capacity(self.params.k);
+        'outer: for j in 0..self.params.l {
+            stats.tables_probed = j + 1;
+            let key = hasher.key(family, j, q, &mut slot_scratch);
+            for &id in self.tables.probe(j, key) {
+                stats.scanned += 1;
+                if self.store.is_live(id) && self.seen_scratch.insert(id) {
+                    self.cand_scratch.push(id);
+                }
+                // Algorithm 1: stop once 3L candidates are gathered.
+                if self.cand_scratch.len() >= cap {
+                    break 'outer;
+                }
+            }
+        }
+    }
+
+    /// Sketch memory: stored vectors + bucket tables (+ fixed overhead).
+    /// The paper's compression metric divides this by N·d·4 bytes.
+    pub fn memory_bytes(&self) -> usize {
+        self.store.payload_bytes() + self.tables.memory_bytes() + std::mem::size_of::<Self>()
+    }
+
+    /// The raw stream footprint the paper normalizes against (bytes).
+    pub fn raw_stream_bytes(&self) -> usize {
+        self.cfg.n_max * self.cfg.dim * 4
+    }
+
+    /// Direct access to a stored vector (metric evaluation).
+    pub fn vector(&self, id: u32) -> &[f32] {
+        self.store.get(id)
+    }
+
+    /// Live (retained, undeleted) point ids (snapshot/persistence).
+    pub fn live_ids(&self) -> impl Iterator<Item = u32> + '_ {
+        self.store.live_ids()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lsh::LshFamily;
+    use crate::util::rng::Rng;
+
+    fn cfg(n: usize, eta: f64, dim: usize, seed: u64) -> SAnnConfig {
+        SAnnConfig {
+            dim,
+            n_max: n,
+            eta,
+            r: 1.0,
+            c: 2.0,
+            w: 4.0,
+            l_cap: 32,
+            seed,
+        }
+    }
+
+    fn random_point(rng: &mut Rng, dim: usize, scale: f32) -> Vec<f32> {
+        (0..dim).map(|_| rng.gaussian_f32() * scale).collect()
+    }
+
+    #[test]
+    fn eta_zero_stores_everything_and_finds_exact_duplicates() {
+        let mut ann = SAnn::new(cfg(1000, 0.0, 8, 1));
+        let mut rng = Rng::new(2);
+        let pts: Vec<Vec<f32>> = (0..200).map(|_| random_point(&mut rng, 8, 5.0)).collect();
+        for p in &pts {
+            assert!(ann.insert(p).is_some(), "eta=0 must retain all");
+        }
+        assert_eq!(ann.stored(), 200);
+        // Querying a stored point must find something within c*r = 2
+        // (the point itself collides in every table).
+        let mut hits = 0;
+        for p in pts.iter().take(50) {
+            if let Some((_, d)) = ann.query(p) {
+                assert!(d <= 2.0 + 1e-5);
+                hits += 1;
+            }
+        }
+        assert!(hits >= 48, "hits={hits}/50");
+    }
+
+    #[test]
+    fn query_returns_none_when_nothing_is_near() {
+        let mut ann = SAnn::new(cfg(1000, 0.0, 8, 3));
+        let mut rng = Rng::new(4);
+        for _ in 0..100 {
+            let mut p = random_point(&mut rng, 8, 1.0);
+            p[0] += 100.0; // cluster far away
+            ann.insert(&p);
+        }
+        let q = vec![0.0f32; 8];
+        assert!(ann.query(&q).is_none());
+    }
+
+    #[test]
+    fn sampling_rate_is_sublinear() {
+        let n = 10_000;
+        let mut ann = SAnn::new(cfg(n, 0.5, 4, 5));
+        let mut rng = Rng::new(6);
+        for _ in 0..n {
+            ann.insert(&random_point(&mut rng, 4, 1.0));
+        }
+        let expect = (n as f64).powf(0.5);
+        assert!(
+            (ann.stored() as f64) < 3.0 * expect,
+            "stored={} expect~{expect}",
+            ann.stored()
+        );
+        assert!((ann.stored() as f64) > expect / 3.0);
+    }
+
+    #[test]
+    fn candidate_cap_is_3l() {
+        // Flood one location so every bucket is huge; candidates must cap.
+        let mut ann = SAnn::new(cfg(1000, 0.0, 4, 7));
+        let mut rng = Rng::new(8);
+        for _ in 0..500 {
+            let p: Vec<f32> = (0..4).map(|_| rng.gaussian_f32() * 0.01).collect();
+            ann.insert(&p);
+        }
+        let q = vec![0.0f32; 4];
+        let (ans, stats) = ann.query_with_stats(&q);
+        assert!(ans.is_some());
+        assert!(
+            stats.candidates <= ann.params().candidate_cap(),
+            "candidates={} cap={}",
+            stats.candidates,
+            ann.params().candidate_cap()
+        );
+    }
+
+    #[test]
+    fn delete_removes_the_point() {
+        let mut ann = SAnn::new(cfg(100, 0.0, 6, 9));
+        let mut rng = Rng::new(10);
+        let p = random_point(&mut rng, 6, 1.0);
+        ann.insert(&p);
+        assert_eq!(ann.stored(), 1);
+        assert!(ann.delete(&p));
+        assert_eq!(ann.stored(), 0);
+        assert!(ann.query(&p).is_none(), "deleted point must not be returned");
+        assert!(!ann.delete(&p), "double delete is a no-op");
+    }
+
+    #[test]
+    fn delete_unstored_point_is_noop() {
+        let mut ann = SAnn::new(cfg(100, 1.0, 6, 11)); // eta=1: keeps ~nothing
+        let mut rng = Rng::new(12);
+        let p = random_point(&mut rng, 6, 1.0);
+        ann.insert(&p); // almost surely dropped
+        let removed = ann.delete(&p);
+        // Either it was retained (and removed) or the delete is a no-op.
+        assert_eq!(removed, ann.store.len() > ann.stored());
+    }
+
+    #[test]
+    fn duplicate_inserts_delete_one_copy_at_a_time() {
+        let mut ann = SAnn::new(cfg(100, 0.0, 4, 13));
+        let p = vec![1.0f32, 2.0, 3.0, 4.0];
+        ann.insert(&p);
+        ann.insert(&p);
+        assert_eq!(ann.stored(), 2);
+        assert!(ann.delete(&p));
+        assert_eq!(ann.stored(), 1);
+        assert!(ann.query(&p).is_some(), "second copy still answers");
+        assert!(ann.delete(&p));
+        assert_eq!(ann.stored(), 0);
+    }
+
+    #[test]
+    fn topk_is_sorted_and_bounded() {
+        let mut ann = SAnn::new(cfg(1000, 0.0, 8, 15));
+        let mut rng = Rng::new(16);
+        for _ in 0..300 {
+            ann.insert(&random_point(&mut rng, 8, 2.0));
+        }
+        let q = random_point(&mut rng, 8, 2.0);
+        let top = ann.query_topk(&q, 10);
+        assert!(top.len() <= 10);
+        for w in top.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+    }
+
+    #[test]
+    fn insert_retained_slots_matches_native_hashing() {
+        let mut a = SAnn::new(cfg(100, 0.0, 6, 17));
+        let mut b = SAnn::new(cfg(100, 0.0, 6, 17));
+        let mut rng = Rng::new(18);
+        let funcs = a.params().k * a.params().l;
+        for _ in 0..50 {
+            let p = random_point(&mut rng, 6, 1.0);
+            a.insert_retained(&p);
+            let mut slots = vec![0i64; funcs];
+            b.family.hash_range(0, &p, &mut slots);
+            b.insert_retained_slots(&p, &slots);
+        }
+        // identical structures => identical query behavior
+        for _ in 0..20 {
+            let q = random_point(&mut rng, 6, 1.0);
+            assert_eq!(a.query(&q), b.query(&q));
+        }
+    }
+
+    #[test]
+    fn memory_accounting_sublinear_in_eta() {
+        let n = 20_000;
+        let build = |eta: f64| {
+            let mut ann = SAnn::new(cfg(n, eta, 16, 19));
+            let mut rng = Rng::new(20);
+            for _ in 0..n {
+                ann.insert(&random_point(&mut rng, 16, 1.0));
+            }
+            ann.memory_bytes()
+        };
+        let dense = build(0.0);
+        let sparse = build(0.7);
+        assert!(
+            (sparse as f64) < dense as f64 / 10.0,
+            "sparse={sparse} dense={dense}"
+        );
+    }
+}

@@ -1,0 +1,16 @@
+//! The paper's sketches: S-ANN (§3), RACE/ACE (§2.3), the exponential
+//! histogram (§2.4) and SW-AKDE (§4), plus the sampling substrate.
+
+pub mod adaptive;
+pub mod ann;
+pub mod eh;
+pub mod race;
+pub mod sampler;
+pub mod snapshot;
+pub mod swakde;
+pub mod turnstile;
+
+pub use ann::{SAnn, SAnnConfig};
+pub use eh::ExpHistogram;
+pub use race::{Ace, Race};
+pub use swakde::SwAkde;

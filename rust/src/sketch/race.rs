@@ -1,0 +1,309 @@
+//! RACE — Repeated Array-of-Counts Estimator \[CS20\], paper §2.3 — and the
+//! single-row ACE estimator \[LS18\] it repeats.
+//!
+//! An ACE array indexed by a p-wise concatenated LSH function is an
+//! unbiased estimator of the LSH-kernel density Σ_x k^p(x, q)
+//! (Theorem 2.3) with variance ≤ (Σ_x k^{p/2})² (Theorem 2.4). RACE
+//! repeats R independent rows and aggregates — mean or median-of-means.
+//! Counters are i64, so the turnstile model (insert = +1, delete = −1) is
+//! native. This is also the baseline SW-AKDE is compared against (Fig 11).
+
+use crate::lsh::concat::BoundedHasher;
+use crate::lsh::LshFamily;
+use crate::util::stats;
+
+/// A single Array-of-Counts Estimator row.
+pub struct Ace {
+    counts: Vec<i64>,
+}
+
+impl Ace {
+    pub fn new(range: usize) -> Self {
+        Ace { counts: vec![0; range] }
+    }
+
+    #[inline]
+    pub fn add(&mut self, cell: usize, delta: i64) {
+        self.counts[cell] += delta;
+    }
+
+    #[inline]
+    pub fn get(&self, cell: usize) -> i64 {
+        self.counts[cell]
+    }
+
+    pub fn range(&self) -> usize {
+        self.counts.len()
+    }
+}
+
+/// The R×W counter grid with its bounded concatenated hasher.
+pub struct Race {
+    rows: Vec<Ace>,
+    hasher: BoundedHasher,
+    /// Net insertions (for density normalization).
+    population: i64,
+    scratch: Vec<i64>,
+}
+
+impl Race {
+    /// `rows` independent repetitions, each hashing with `p` concatenated
+    /// raw functions rehashed into [0, range) (p-stable style).
+    pub fn new(rows: usize, range: usize, p: usize) -> Self {
+        Self::with_hasher(BoundedHasher::new(p, rows, range))
+    }
+
+    /// SRP variant: cells are the packed p hash bits (range 2^p) — the
+    /// exact ACE cell structure, with no rehash bias.
+    pub fn new_srp(rows: usize, p: usize) -> Self {
+        Self::with_hasher(BoundedHasher::new_packed(p, rows))
+    }
+
+    pub fn with_hasher(hasher: BoundedHasher) -> Self {
+        let (rows, range) = (hasher.rows, hasher.range);
+        Race {
+            rows: (0..rows).map(|_| Ace::new(range)).collect(),
+            hasher,
+            population: 0,
+            scratch: Vec::new(),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn range(&self) -> usize {
+        self.hasher.range
+    }
+
+    pub fn p(&self) -> usize {
+        self.hasher.p
+    }
+
+    /// Raw LSH functions required of the family.
+    pub fn funcs_needed(&self) -> usize {
+        self.hasher.funcs_needed()
+    }
+
+    pub fn population(&self) -> i64 {
+        self.population
+    }
+
+    /// Insert `x` (turnstile: `delta = -1` deletes).
+    pub fn update<F: LshFamily + ?Sized>(&mut self, fam: &F, x: &[f32], delta: i64) {
+        for i in 0..self.rows.len() {
+            let cell = self.hasher.cell(fam, i, x, &mut self.scratch);
+            self.rows[i].add(cell, delta);
+        }
+        self.population += delta;
+    }
+
+    pub fn add<F: LshFamily + ?Sized>(&mut self, fam: &F, x: &[f32]) {
+        self.update(fam, x, 1);
+    }
+
+    pub fn remove<F: LshFamily + ?Sized>(&mut self, fam: &F, x: &[f32]) {
+        self.update(fam, x, -1);
+    }
+
+    /// Update from precomputed raw slots (PJRT batch path; layout `\[rows*p\]`).
+    pub fn update_slots(&mut self, slots: &[i64], delta: i64) {
+        for i in 0..self.rows.len() {
+            let cell = self.hasher.cell_from_slots(i, slots);
+            self.rows[i].add(cell, delta);
+        }
+        self.population += delta;
+    }
+
+    /// Per-row counts at the query's cells.
+    pub fn row_counts<F: LshFamily + ?Sized>(&mut self, fam: &F, q: &[f32]) -> Vec<f64> {
+        (0..self.rows.len())
+            .map(|i| {
+                let cell = self.hasher.cell(fam, i, q, &mut self.scratch);
+                self.rows[i].get(cell) as f64
+            })
+            .collect()
+    }
+
+    /// Mean estimator (1/R)Σ A[i, h_i(q)] — the un-normalized kernel sum.
+    pub fn query<F: LshFamily + ?Sized>(&mut self, fam: &F, q: &[f32]) -> f64 {
+        let counts = self.row_counts(fam, q);
+        stats::mean(&counts)
+    }
+
+    /// Median-of-means estimator (the robust aggregation CS20 uses).
+    pub fn query_mom<F: LshFamily + ?Sized>(&mut self, fam: &F, q: &[f32], groups: usize) -> f64 {
+        let counts = self.row_counts(fam, q);
+        stats::median_of_means(&counts, groups)
+    }
+
+    /// Rehash-debiased estimator: under `CellMap::Rehash`, distinct tuples
+    /// collide spuriously w.p. ≈ 1/range, so E\[count\] = (1−1/W)·KDE + n/W;
+    /// inverting restores ACE unbiasedness. Under `PackBits` this is the
+    /// plain mean (no bias to remove).
+    pub fn query_debiased<F: LshFamily + ?Sized>(&mut self, fam: &F, q: &[f32]) -> f64 {
+        let raw = self.query(fam, q);
+        match self.hasher.map {
+            crate::lsh::concat::CellMap::PackBits => raw,
+            crate::lsh::concat::CellMap::Rehash => {
+                let w = self.hasher.range as f64;
+                ((raw - self.population as f64 / w) / (1.0 - 1.0 / w)).max(0.0)
+            }
+        }
+    }
+
+    /// Counter-grid bytes.
+    pub fn memory_bytes(&self) -> usize {
+        std::mem::size_of::<Self>() + self.rows.len() * self.range() * std::mem::size_of::<i64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lsh::srp::SrpLsh;
+    use crate::util::rng::Rng;
+
+    fn random_points(rng: &mut Rng, n: usize, dim: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|_| (0..dim).map(|_| rng.gaussian_f32()).collect())
+            .collect()
+    }
+
+    /// Exact LSH-kernel density Σ k^p(x, q) for the angular kernel.
+    fn exact_angular_kde(data: &[Vec<f32>], q: &[f32], p: usize) -> f64 {
+        data.iter()
+            .map(|x| {
+                let cos = crate::util::cosine(x, q) as f64;
+                (1.0 - cos.acos() / std::f64::consts::PI).powi(p as i32)
+            })
+            .sum()
+    }
+
+    #[test]
+    fn ace_unbiasedness_monte_carlo() {
+        // E[A[h(q)]] = sum_x k^p(x, q): average many independent ACEs.
+        let dim = 8;
+        let p = 2;
+        let trials = 400;
+        let mut rng = Rng::new(42);
+        let data = random_points(&mut rng, 30, dim);
+        let q: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+        let truth = exact_angular_kde(&data, &q, p);
+        let mut sum = 0.0;
+        for t in 0..trials {
+            let fam = SrpLsh::new(dim, p, &mut Rng::new(1000 + t));
+            let mut race = Race::new_srp(1, p);
+            for x in &data {
+                race.add(&fam, x);
+            }
+            sum += race.query(&fam, &q);
+        }
+        let est = sum / trials as f64;
+        // MC error ~ sqrt(var/trials); truth is O(10) here.
+        assert!(
+            (est - truth).abs() < 0.15 * truth,
+            "est={est} truth={truth}"
+        );
+    }
+
+    #[test]
+    fn more_rows_reduce_error() {
+        let dim = 16;
+        let p = 3;
+        let mut rng = Rng::new(7);
+        let data = random_points(&mut rng, 200, dim);
+        let queries = random_points(&mut rng, 20, dim);
+        let mut err_for = |rows: usize| {
+            let fam = SrpLsh::new(dim, rows * p, &mut Rng::new(9));
+            let mut race = Race::new_srp(rows, p);
+            for x in &data {
+                race.add(&fam, x);
+            }
+            let mut errs = Vec::new();
+            for q in &queries {
+                let truth = exact_angular_kde(&data, q, p);
+                let est = race.query(&fam, q);
+                errs.push((est - truth).abs() / truth);
+            }
+            crate::util::stats::mean(&errs)
+        };
+        let few = err_for(4);
+        let many = err_for(256);
+        assert!(many < few, "few-rows err {few} vs many-rows err {many}");
+        assert!(many < 0.2, "256-row error should be small: {many}");
+    }
+
+    #[test]
+    fn turnstile_insert_then_delete_is_identity() {
+        let dim = 8;
+        let fam = SrpLsh::new(dim, 8 * 2, &mut Rng::new(3));
+        let mut race = Race::new(8, 4, 2);
+        let mut rng = Rng::new(4);
+        let keep = random_points(&mut rng, 20, dim);
+        let churn = random_points(&mut rng, 20, dim);
+        for x in &keep {
+            race.add(&fam, x);
+        }
+        let q: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+        let before = race.query(&fam, &q);
+        for x in &churn {
+            race.add(&fam, x);
+        }
+        for x in &churn {
+            race.remove(&fam, x);
+        }
+        let after = race.query(&fam, &q);
+        assert_eq!(before, after);
+        assert_eq!(race.population(), 20);
+    }
+
+    #[test]
+    fn update_slots_matches_native() {
+        let dim = 8;
+        let rows = 4;
+        let p = 2;
+        let fam = SrpLsh::new(dim, rows * p, &mut Rng::new(5));
+        let mut a = Race::new(rows, 16, p);
+        let mut b = Race::new(rows, 16, p);
+        let mut rng = Rng::new(6);
+        let pts = random_points(&mut rng, 30, dim);
+        for x in &pts {
+            a.add(&fam, x);
+            let mut slots = vec![0i64; rows * p];
+            fam.hash_range(0, x, &mut slots);
+            b.update_slots(&slots, 1);
+        }
+        let q: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+        assert_eq!(a.query(&fam, &q), b.query(&fam, &q));
+    }
+
+    #[test]
+    fn self_density_dominates_far_query() {
+        // A query sitting on a dense cluster must see a larger estimate
+        // than one far from everything (on the sphere: opposite direction).
+        let dim = 12;
+        let p = 4;
+        let rows = 64;
+        let fam = SrpLsh::new(dim, rows * p, &mut Rng::new(8));
+        let mut race = Race::new_srp(rows, p);
+        let mut rng = Rng::new(9);
+        let center: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+        for _ in 0..100 {
+            let x: Vec<f32> = center.iter().map(|v| v + 0.05 * rng.gaussian_f32()).collect();
+            race.add(&fam, &x);
+        }
+        let near = race.query(&fam, &center);
+        let anti: Vec<f32> = center.iter().map(|v| -v).collect();
+        let far = race.query(&fam, &anti);
+        assert!(near > 10.0 * far.max(0.1), "near={near} far={far}");
+    }
+
+    #[test]
+    fn memory_is_rows_times_range() {
+        let race = Race::new(10, 32, 2);
+        assert!(race.memory_bytes() >= 10 * 32 * 8);
+        assert!(race.memory_bytes() < 10 * 32 * 8 + 1024);
+    }
+}

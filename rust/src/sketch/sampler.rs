@@ -1,0 +1,116 @@
+//! The uniform retention sampler of Algorithm 1: each stream element is
+//! kept independently with probability p = n^{−η} (Lemma 3.3's "uniform
+//! sampling"). Seeded, so a run is reproducible, and stateless per element,
+//! so shards can sample independently without coordination.
+
+use crate::util::rng::Rng;
+
+/// Bernoulli(n^{−η}) retention decisions.
+pub struct BernoulliSampler {
+    keep_prob: f64,
+    rng: Rng,
+    seen: u64,
+    kept: u64,
+}
+
+impl BernoulliSampler {
+    /// `n` is the stream-size upper bound N, `eta` the sampling exponent.
+    pub fn new(n: usize, eta: f64, seed: u64) -> Self {
+        assert!(n > 0);
+        assert!((0.0..=1.0).contains(&eta));
+        BernoulliSampler {
+            keep_prob: (n as f64).powf(-eta),
+            rng: Rng::new(seed),
+            seen: 0,
+            kept: 0,
+        }
+    }
+
+    /// Explicit probability constructor (tests, η-sweeps).
+    pub fn with_prob(keep_prob: f64, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&keep_prob));
+        BernoulliSampler { keep_prob, rng: Rng::new(seed), seen: 0, kept: 0 }
+    }
+
+    pub fn keep_prob(&self) -> f64 {
+        self.keep_prob
+    }
+
+    /// Decide whether to retain the next stream element.
+    pub fn keep(&mut self) -> bool {
+        self.seen += 1;
+        let k = self.rng.bernoulli(self.keep_prob);
+        self.kept += k as u64;
+        k
+    }
+
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    pub fn kept(&self) -> u64 {
+        self.kept
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn eta_zero_keeps_everything() {
+        let mut s = BernoulliSampler::new(1000, 0.0, 1);
+        assert!((0..500).all(|_| s.keep()));
+        assert_eq!(s.kept(), 500);
+    }
+
+    #[test]
+    fn eta_one_keeps_one_over_n() {
+        let mut s = BernoulliSampler::new(1000, 1.0, 2);
+        let kept = (0..100_000).filter(|_| s.keep()).count();
+        // E[kept] = 100. Allow 5 sigma.
+        assert!((kept as f64 - 100.0).abs() < 50.0, "kept={kept}");
+    }
+
+    #[test]
+    fn retention_rate_matches_n_pow_minus_eta() {
+        let n = 10_000usize;
+        let eta = 0.5;
+        let mut s = BernoulliSampler::new(n, eta, 3);
+        let trials = 200_000;
+        let kept = (0..trials).filter(|_| s.keep()).count();
+        let expect = trials as f64 * (n as f64).powf(-eta);
+        assert!(
+            (kept as f64 - expect).abs() < 5.0 * expect.sqrt() + 5.0,
+            "kept={kept} expect={expect}"
+        );
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = BernoulliSampler::new(100, 0.5, 9);
+        let mut b = BernoulliSampler::new(100, 0.5, 9);
+        for _ in 0..1000 {
+            assert_eq!(a.keep(), b.keep());
+        }
+    }
+
+    #[test]
+    fn property_binomial_concentration() {
+        // Retention counts concentrate like Binomial(n, p) — the premise of
+        // Lemma 3.3's thinning argument.
+        check("sampler_binomial", 20, |g| {
+            let p = g.f64_in(0.01, 0.9);
+            let n = g.size(1000, 20_000);
+            let mut s = BernoulliSampler::with_prob(p, g.seed);
+            let kept = (0..n).filter(|_| s.keep()).count() as f64;
+            let mean = n as f64 * p;
+            let sd = (n as f64 * p * (1.0 - p)).sqrt();
+            if (kept - mean).abs() > 6.0 * sd + 1.0 {
+                return Err(format!("n={n} p={p} kept={kept} mean={mean} sd={sd}"));
+            }
+            Ok(())
+        });
+    }
+}

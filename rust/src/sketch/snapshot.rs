@@ -1,0 +1,204 @@
+//! Sketch persistence: save/restore S-ANN state across process restarts
+//! (a serving system must not need a full stream replay to come back).
+//!
+//! Format (little-endian, versioned): the sketch CONFIG plus the retained
+//! live vectors. Hash tables are rebuilt on load by re-hashing — the LSH
+//! family is a deterministic function of the config seed, so the restored
+//! structure is bit-identical to the saved one; the file stays small
+//! (O(stored · dim) instead of O(tables)). Post-restore ingestion draws
+//! fresh sampler randomness: Bernoulli retention is i.i.d., so the
+//! distributional guarantees (Theorem 3.1) are unaffected.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use super::ann::{SAnn, SAnnConfig};
+
+const MAGIC: &[u8; 8] = b"SANNSNP1";
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("snapshot truncated at byte {}", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+/// Serialize an S-ANN sketch (config + live vectors).
+pub fn save_sann(ann: &SAnn) -> Vec<u8> {
+    let cfg = ann.config();
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    put_u64(&mut out, cfg.dim as u64);
+    put_u64(&mut out, cfg.n_max as u64);
+    put_f64(&mut out, cfg.eta);
+    put_f64(&mut out, cfg.r);
+    put_f64(&mut out, cfg.c);
+    put_f64(&mut out, cfg.w);
+    put_u64(&mut out, cfg.l_cap as u64);
+    put_u64(&mut out, cfg.seed);
+    let live: Vec<u32> = ann.live_ids().collect();
+    put_u64(&mut out, live.len() as u64);
+    for id in live {
+        for &v in ann.vector(id) {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Restore an S-ANN sketch from [`save_sann`] bytes.
+pub fn load_sann(bytes: &[u8]) -> Result<SAnn> {
+    let mut r = Reader { b: bytes, i: 0 };
+    if r.take(8)? != MAGIC {
+        bail!("not an S-ANN snapshot (bad magic)");
+    }
+    let dim = r.u64()? as usize;
+    let n_max = r.u64()? as usize;
+    let eta = r.f64()?;
+    let cfg = SAnnConfig {
+        dim,
+        n_max,
+        eta,
+        r: r.f64()?,
+        c: r.f64()?,
+        w: r.f64()?,
+        l_cap: r.u64()? as usize,
+        seed: r.u64()?,
+    };
+    let n_live = r.u64()? as usize;
+    let mut ann = SAnn::new(cfg);
+    let mut buf = vec![0f32; dim];
+    for _ in 0..n_live {
+        let raw = r.take(dim * 4)?;
+        for (j, c) in raw.chunks_exact(4).enumerate() {
+            buf[j] = f32::from_le_bytes(c.try_into().unwrap());
+        }
+        ann.insert_retained(&buf);
+    }
+    if r.i != bytes.len() {
+        bail!("snapshot has {} trailing bytes", bytes.len() - r.i);
+    }
+    Ok(ann)
+}
+
+/// Save to a file.
+pub fn save_sann_file(ann: &SAnn, path: &std::path::Path) -> Result<()> {
+    let bytes = save_sann(ann);
+    std::fs::File::create(path)
+        .and_then(|mut f| f.write_all(&bytes))
+        .with_context(|| format!("writing snapshot {path:?}"))
+}
+
+/// Load from a file.
+pub fn load_sann_file(path: &std::path::Path) -> Result<SAnn> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)
+        .and_then(|mut f| f.read_to_end(&mut bytes))
+        .with_context(|| format!("reading snapshot {path:?}"))?;
+    load_sann(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn build(n: usize) -> SAnn {
+        let mut ann = SAnn::new(SAnnConfig {
+            dim: 8,
+            n_max: 1000,
+            eta: 0.0,
+            r: 1.0,
+            c: 2.0,
+            w: 4.0,
+            l_cap: 16,
+            seed: 77,
+        });
+        let mut rng = Rng::new(5);
+        for _ in 0..n {
+            let p: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
+            ann.insert(&p);
+        }
+        ann
+    }
+
+    #[test]
+    fn roundtrip_preserves_queries() {
+        let mut ann = build(120);
+        let bytes = save_sann(&ann);
+        let mut restored = load_sann(&bytes).unwrap();
+        assert_eq!(restored.stored(), ann.stored());
+        let mut rng = Rng::new(6);
+        for _ in 0..40 {
+            let q: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
+            assert_eq!(ann.query(&q), restored.query(&q), "restored sketch must answer identically");
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_deletions() {
+        let mut ann = build(50);
+        // delete some points, snapshot, restore: tombstoned points gone
+        let victim = ann.vector(3).to_vec();
+        assert!(ann.delete(&victim));
+        let before = ann.stored();
+        let restored = load_sann(&save_sann(&ann)).unwrap();
+        assert_eq!(restored.stored(), before);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let ann = build(30);
+        let path = std::env::temp_dir().join("sann_snapshot_test.bin");
+        save_sann_file(&ann, &path).unwrap();
+        let restored = load_sann_file(&path).unwrap();
+        assert_eq!(restored.stored(), ann.stored());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_snapshots_are_rejected() {
+        let ann = build(10);
+        let mut bytes = save_sann(&ann);
+        assert!(load_sann(&bytes[..bytes.len() - 3]).is_err(), "truncated");
+        bytes[0] = b'X';
+        assert!(load_sann(&bytes).is_err(), "bad magic");
+        let mut extra = save_sann(&ann);
+        extra.push(0);
+        assert!(load_sann(&extra).is_err(), "trailing bytes");
+    }
+
+    #[test]
+    fn restored_sketch_accepts_new_inserts() {
+        let ann = build(40);
+        let mut restored = load_sann(&save_sann(&ann)).unwrap();
+        let p = vec![9.0f32; 8];
+        restored.insert(&p);
+        assert_eq!(restored.stored(), 41);
+        assert!(restored.query(&p).is_some());
+    }
+}

@@ -1,0 +1,377 @@
+//! SW-AKDE — Sliding-Window Approximate KDE (Algorithm 2, Theorem 4.1).
+//!
+//! The paper's second contribution: a RACE grid whose integer counters are
+//! replaced by Exponential Histograms, so each cell answers "how many
+//! elements of the last N updates hashed here" with relative error ε'
+//! (the EH guarantee), yielding a (1±ε) KDE approximation with
+//! ε = 2ε' + ε'² (Lemma 4.3) in space O(RW · (1/ε')·log²N) (Lemma 4.4).
+//!
+//! Cells are created lazily ("if A\[i,j\] is empty, create an EH" —
+//! Algorithm 2), so the resident footprint tracks occupied cells.
+//! Batch updates (Corollary 4.2) add `count` 1s per cell per tick.
+
+use crate::lsh::concat::BoundedHasher;
+use crate::lsh::LshFamily;
+use crate::sketch::eh::ExpHistogram;
+use crate::util::stats;
+
+/// Sliding-window KDE sketch: R rows × W cells of lazily-built EHs.
+pub struct SwAkde {
+    cells: Vec<Option<Box<ExpHistogram>>>,
+    hasher: BoundedHasher,
+    /// EH relative error ε' (KDE error ε = 2ε' + ε'²).
+    eps_eh: f64,
+    /// Window size N (stream positions or batches).
+    window: u64,
+    /// Current stream time (monotone).
+    now: u64,
+    scratch: Vec<i64>,
+}
+
+impl SwAkde {
+    /// Rehash-mode constructor (p-stable style cells).
+    pub fn new(rows: usize, range: usize, p: usize, eps_eh: f64, window: u64) -> Self {
+        Self::with_hasher(BoundedHasher::new(p, rows, range), eps_eh, window)
+    }
+
+    /// SRP variant: bit-packed cells, range 2^p (exact ACE structure).
+    pub fn new_srp(rows: usize, p: usize, eps_eh: f64, window: u64) -> Self {
+        Self::with_hasher(BoundedHasher::new_packed(p, rows), eps_eh, window)
+    }
+
+    pub fn with_hasher(hasher: BoundedHasher, eps_eh: f64, window: u64) -> Self {
+        SwAkde {
+            cells: (0..hasher.rows * hasher.range).map(|_| None).collect(),
+            hasher,
+            eps_eh,
+            window,
+            now: 0,
+            scratch: Vec::new(),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.hasher.rows
+    }
+
+    pub fn range(&self) -> usize {
+        self.hasher.range
+    }
+
+    pub fn p(&self) -> usize {
+        self.hasher.p
+    }
+
+    pub fn window(&self) -> u64 {
+        self.window
+    }
+
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    pub fn funcs_needed(&self) -> usize {
+        self.hasher.funcs_needed()
+    }
+
+    /// KDE relative error ε = 2ε' + ε'² implied by the EH error (Lemma 4.3).
+    pub fn kde_eps(&self) -> f64 {
+        2.0 * self.eps_eh + self.eps_eh * self.eps_eh
+    }
+
+    #[inline]
+    fn cell_mut(&mut self, row: usize, idx: usize) -> &mut ExpHistogram {
+        let flat = row * self.hasher.range + idx;
+        let (eps, window) = (self.eps_eh, self.window);
+        self.cells[flat]
+            .get_or_insert_with(|| Box::new(ExpHistogram::new(eps, window)))
+    }
+
+    /// Ingest one stream element at the next time step.
+    pub fn add<F: LshFamily + ?Sized>(&mut self, fam: &F, x: &[f32]) {
+        self.now += 1;
+        let t = self.now;
+        for i in 0..self.hasher.rows {
+            let mut scratch = std::mem::take(&mut self.scratch);
+            let idx = self.hasher.cell(fam, i, x, &mut scratch);
+            self.scratch = scratch;
+            self.cell_mut(i, idx).add(t);
+        }
+    }
+
+    /// Ingest a batch of elements sharing one time step (Corollary 4.2:
+    /// the window is then measured in batches).
+    pub fn add_batch<F: LshFamily + ?Sized>(&mut self, fam: &F, batch: &[&[f32]]) {
+        self.now += 1;
+        let t = self.now;
+        // Aggregate per-cell increments first so each touched EH gets one
+        // add_count call (R elements hashing to one cell is the worst case
+        // the corollary's space bound covers).
+        let rows = self.hasher.rows;
+        let mut incs: std::collections::HashMap<(usize, usize), u64> = Default::default();
+        for x in batch {
+            for i in 0..rows {
+                let mut scratch = std::mem::take(&mut self.scratch);
+                let idx = self.hasher.cell(fam, i, x, &mut scratch);
+                self.scratch = scratch;
+                *incs.entry((i, idx)).or_insert(0) += 1;
+            }
+        }
+        for ((i, idx), c) in incs {
+            self.cell_mut(i, idx).add_count(t, c);
+        }
+    }
+
+    /// Ingest from precomputed raw slots (PJRT batch path, layout `\[rows*p\]`).
+    pub fn add_slots(&mut self, slots: &[i64]) {
+        self.now += 1;
+        let t = self.now;
+        for i in 0..self.hasher.rows {
+            let idx = self.hasher.cell_from_slots(i, slots);
+            self.cell_mut(i, idx).add(t);
+        }
+    }
+
+    /// Per-row windowed count estimates at the query's cells.
+    pub fn row_estimates<F: LshFamily + ?Sized>(&mut self, fam: &F, q: &[f32]) -> Vec<f64> {
+        let now = self.now;
+        (0..self.hasher.rows)
+            .map(|i| {
+                let mut scratch = std::mem::take(&mut self.scratch);
+                let idx = self.hasher.cell(fam, i, q, &mut scratch);
+                self.scratch = scratch;
+                let flat = i * self.hasher.range + idx;
+                match &mut self.cells[flat] {
+                    Some(eh) => eh.estimate(now),
+                    None => 0.0,
+                }
+            })
+            .collect()
+    }
+
+    /// Algorithm 2 query: average of per-row EH estimates — the
+    /// un-normalized windowed kernel sum Σ_{x∈window} k^p(x, q).
+    pub fn query<F: LshFamily + ?Sized>(&mut self, fam: &F, q: &[f32]) -> f64 {
+        let est = self.row_estimates(fam, q);
+        stats::mean(&est)
+    }
+
+    /// Rehash-debiased estimator (mirror of `Race::query_debiased`): under
+    /// rehash cells, distinct tuples collide spuriously w.p. ≈ 1/range, so
+    /// E\[estimate\] = (1−1/W)·KDE + pop/W over the live window; inverting
+    /// removes the bias. PackBits cells are exact and pass through.
+    pub fn query_debiased<F: LshFamily + ?Sized>(&mut self, fam: &F, q: &[f32]) -> f64 {
+        let raw = self.query(fam, q);
+        match self.hasher.map {
+            crate::lsh::concat::CellMap::PackBits => raw,
+            crate::lsh::concat::CellMap::Rehash => {
+                let w = self.hasher.range as f64;
+                let pop = self.now.min(self.window) as f64;
+                ((raw - pop / w) / (1.0 - 1.0 / w)).max(0.0)
+            }
+        }
+    }
+
+    /// Normalized density: kernel sum / window population.
+    pub fn density<F: LshFamily + ?Sized>(&mut self, fam: &F, q: &[f32]) -> f64 {
+        let live = self.now.min(self.window);
+        if live == 0 {
+            return 0.0;
+        }
+        self.query(fam, q) / live as f64
+    }
+
+    /// Occupied (materialized) cells.
+    pub fn occupied_cells(&self) -> usize {
+        self.cells.iter().filter(|c| c.is_some()).count()
+    }
+
+    /// Resident bytes: grid slots + live EH structures.
+    pub fn memory_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self.cells.len() * std::mem::size_of::<Option<Box<ExpHistogram>>>()
+            + self
+                .cells
+                .iter()
+                .filter_map(|c| c.as_ref().map(|eh| eh.memory_bytes()))
+                .sum::<usize>()
+    }
+
+    /// Theoretical bits per Lemma 4.4 accounting (Σ over live EHs).
+    pub fn theory_bits(&self) -> usize {
+        self.cells
+            .iter()
+            .filter_map(|c| c.as_ref().map(|eh| eh.theory_bits()))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lsh::srp::SrpLsh;
+    use crate::sketch::race::Race;
+    use crate::util::rng::Rng;
+
+    fn random_points(rng: &mut Rng, n: usize, dim: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|_| (0..dim).map(|_| rng.gaussian_f32()).collect())
+            .collect()
+    }
+
+    /// Brute-force windowed kernel sum with the same hashes (the quantity
+    /// SW-AKDE estimates before EH error).
+    fn windowed_race_truth(
+        fam: &SrpLsh,
+        rows: usize,
+        range: usize,
+        p: usize,
+        window_pts: &[Vec<f32>],
+        q: &[f32],
+    ) -> f64 {
+        let mut race = Race::new(rows, range, p);
+        for x in window_pts {
+            race.add(fam, x);
+        }
+        race.query(fam, q)
+    }
+
+    #[test]
+    fn matches_race_on_window_within_eh_error() {
+        // With everything inside the window, SW-AKDE must equal RACE
+        // restricted to the window up to the EH estimate error.
+        let (dim, rows, range, p) = (8, 16, 16, 2);
+        let eps = 0.1;
+        let window = 64u64;
+        let fam = SrpLsh::new(dim, rows * p, &mut Rng::new(1));
+        let mut rng = Rng::new(2);
+        let stream = random_points(&mut rng, 200, dim);
+        let mut sw = SwAkde::new(rows, range, p, eps, window);
+        for x in &stream {
+            sw.add(&fam, x);
+        }
+        let live = &stream[stream.len() - window as usize..];
+        let q: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+        let truth = windowed_race_truth(&fam, rows, range, p, live, &q);
+        let est = sw.query(&fam, &q);
+        assert!(
+            (est - truth).abs() <= eps * truth + 1e-9,
+            "est={est} truth={truth}"
+        );
+    }
+
+    #[test]
+    fn expired_data_stops_counting() {
+        let (dim, rows, range, p) = (6, 8, 8, 2);
+        let fam = SrpLsh::new(dim, rows * p, &mut Rng::new(3));
+        let mut sw = SwAkde::new(rows, range, p, 0.1, 10);
+        let mut rng = Rng::new(4);
+        let q: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+        // Fill with points identical to q (max kernel value), then push
+        // unrelated points until the window rolls past them.
+        for _ in 0..10 {
+            sw.add(&fam, &q);
+        }
+        let peak = sw.query(&fam, &q);
+        assert!(peak > 5.0, "peak={peak}");
+        let far: Vec<f32> = q.iter().map(|v| -v).collect();
+        for _ in 0..20 {
+            sw.add(&fam, &far);
+        }
+        let after = sw.query(&fam, &q);
+        assert!(after < peak / 2.0, "peak={peak} after={after}");
+    }
+
+    #[test]
+    fn batch_updates_match_sequential_window_of_batches() {
+        // Cor 4.2: window counts batches; a batch of size B at one tick is
+        // B same-timestamp increments.
+        let (dim, rows, range, p) = (6, 8, 8, 2);
+        let fam = SrpLsh::new(dim, rows * p, &mut Rng::new(5));
+        let mut rng = Rng::new(6);
+        let mut sw = SwAkde::new(rows, range, p, 0.1, 4); // window: 4 batches
+        let batches: Vec<Vec<Vec<f32>>> =
+            (0..8).map(|_| random_points(&mut rng, 5, dim)).collect();
+        for b in &batches {
+            let refs: Vec<&[f32]> = b.iter().map(|v| v.as_slice()).collect();
+            sw.add_batch(&fam, &refs);
+        }
+        // Truth: RACE over the last 4 batches.
+        let live: Vec<Vec<f32>> =
+            batches[4..].iter().flatten().cloned().collect();
+        let q: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+        let truth = windowed_race_truth(&fam, rows, range, p, &live, &q);
+        let est = sw.query(&fam, &q);
+        assert!(
+            (est - truth).abs() <= 0.1 * truth + 1e-9,
+            "est={est} truth={truth}"
+        );
+    }
+
+    #[test]
+    fn add_slots_matches_native() {
+        let (dim, rows, range, p) = (8, 4, 16, 2);
+        let fam = SrpLsh::new(dim, rows * p, &mut Rng::new(7));
+        let mut a = SwAkde::new(rows, range, p, 0.1, 32);
+        let mut b = SwAkde::new(rows, range, p, 0.1, 32);
+        let mut rng = Rng::new(8);
+        for x in random_points(&mut rng, 50, dim) {
+            a.add(&fam, &x);
+            let mut slots = vec![0i64; rows * p];
+            fam.hash_range(0, &x, &mut slots);
+            b.add_slots(&slots);
+        }
+        let q: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+        assert_eq!(a.query(&fam, &q), b.query(&fam, &q));
+    }
+
+    #[test]
+    fn lazy_cells_track_occupancy() {
+        let (dim, rows, range, p) = (6, 4, 64, 3);
+        let fam = SrpLsh::new(dim, rows * p, &mut Rng::new(9));
+        let mut sw = SwAkde::new(rows, range, p, 0.1, 100);
+        assert_eq!(sw.occupied_cells(), 0);
+        let mut rng = Rng::new(10);
+        // One point -> exactly `rows` occupied cells.
+        sw.add(&fam, &random_points(&mut rng, 1, dim)[0]);
+        assert_eq!(sw.occupied_cells(), rows);
+        for x in random_points(&mut rng, 100, dim) {
+            sw.add(&fam, &x);
+        }
+        assert!(sw.occupied_cells() <= rows * (1 << p));
+    }
+
+    #[test]
+    fn density_normalizes_by_live_window() {
+        let (dim, rows, range, p) = (6, 8, 8, 1);
+        let fam = SrpLsh::new(dim, rows * p, &mut Rng::new(11));
+        let mut sw = SwAkde::new(rows, range, p, 0.1, 50);
+        let mut rng = Rng::new(12);
+        let q: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+        assert_eq!(sw.density(&fam, &q), 0.0, "empty sketch -> 0 density");
+        for _ in 0..10 {
+            sw.add(&fam, &q);
+        }
+        // All 10 points are q itself: kernel sum = 10, density = 1.
+        let d = sw.density(&fam, &q);
+        assert!((d - 1.0).abs() < 0.15, "density={d}");
+    }
+
+    #[test]
+    fn memory_grows_with_log_window_not_window() {
+        let (dim, rows, range, p) = (8, 8, 16, 2);
+        let fam = SrpLsh::new(dim, rows * p, &mut Rng::new(13));
+        let mut rng = Rng::new(14);
+        let build = |window: u64, rng: &mut Rng| {
+            let mut sw = SwAkde::new(rows, range, p, 0.1, window);
+            for x in random_points(rng, 4 * window as usize, dim) {
+                sw.add(&fam, &x);
+            }
+            sw.theory_bits() as f64
+        };
+        let small = build(64, &mut rng);
+        let large = build(4096, &mut rng);
+        // 64x window must cost far less than 64x bits (log² scaling).
+        assert!(large / small < 8.0, "small={small} large={large}");
+    }
+}

@@ -1,0 +1,112 @@
+//! Turnstile-model support for S-ANN (§3.4, Theorem 3.3).
+//!
+//! The theorem's assumption is that an adversary deletes at most d points
+//! from any r-ball. [`DeletionBudget`] audits that assumption over a run:
+//! it coarsens space into r-sized grid cells (a ball of radius r touches at
+//! most 2^dim' cells of side r on its own axes — we track per-cell totals,
+//! which upper-bound per-ball deletions within a constant) and reports the
+//! worst cell. Experiments use it to *verify* the precondition of
+//! Theorem 3.3 rather than trust it.
+
+use std::collections::HashMap;
+
+/// Tracks deletions per r-grid cell and flags budget violations.
+pub struct DeletionBudget {
+    r: f64,
+    d_max: u64,
+    counts: HashMap<Vec<i32>, u64>,
+    /// Dimensions used for the grid key (high dims are truncated: grid
+    /// occupancy in the first `key_dims` coordinates upper-bounds ball
+    /// deletion counts more loosely but stays tractable).
+    key_dims: usize,
+    violations: u64,
+}
+
+impl DeletionBudget {
+    pub fn new(r: f64, d_max: u64) -> Self {
+        assert!(r > 0.0);
+        DeletionBudget { r, d_max, counts: HashMap::new(), key_dims: 8, violations: 0 }
+    }
+
+    fn key(&self, x: &[f32]) -> Vec<i32> {
+        x.iter()
+            .take(self.key_dims)
+            .map(|&v| (v as f64 / self.r).floor() as i32)
+            .collect()
+    }
+
+    /// Record a deletion at `x`; returns false if the cell exceeded d_max.
+    pub fn record(&mut self, x: &[f32]) -> bool {
+        let k = self.key(x);
+        let c = self.counts.entry(k).or_insert(0);
+        *c += 1;
+        if *c > self.d_max {
+            self.violations += 1;
+            false
+        } else {
+            true
+        }
+    }
+
+    /// Largest per-cell deletion count seen.
+    pub fn worst_cell(&self) -> u64 {
+        self.counts.values().copied().max().unwrap_or(0)
+    }
+
+    pub fn violations(&self) -> u64 {
+        self.violations
+    }
+
+    pub fn d_max(&self) -> u64 {
+        self.d_max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn within_budget_passes() {
+        let mut b = DeletionBudget::new(1.0, 3);
+        let p = [0.5f32, 0.5];
+        assert!(b.record(&p));
+        assert!(b.record(&p));
+        assert!(b.record(&p));
+        assert_eq!(b.violations(), 0);
+        assert_eq!(b.worst_cell(), 3);
+    }
+
+    #[test]
+    fn exceeding_budget_flags() {
+        let mut b = DeletionBudget::new(1.0, 2);
+        let p = [0.1f32, 0.1];
+        b.record(&p);
+        b.record(&p);
+        assert!(!b.record(&p), "third delete in one cell must flag");
+        assert_eq!(b.violations(), 1);
+    }
+
+    #[test]
+    fn distant_points_use_separate_cells() {
+        let mut b = DeletionBudget::new(1.0, 1);
+        assert!(b.record(&[0.0f32, 0.0]));
+        assert!(b.record(&[10.0f32, 10.0]));
+        assert!(b.record(&[-10.0f32, 3.0]));
+        assert_eq!(b.violations(), 0);
+        assert_eq!(b.worst_cell(), 1);
+    }
+
+    #[test]
+    fn grid_scales_with_r() {
+        // Same two points: one cell under a coarse grid, two under a fine one.
+        let a = [0.2f32, 0.2];
+        let b_ = [0.8f32, 0.8];
+        let mut coarse = DeletionBudget::new(1.0, 1);
+        coarse.record(&a);
+        assert!(!coarse.record(&b_), "both in the unit cell");
+        let mut fine = DeletionBudget::new(0.5, 1);
+        fine.record(&a);
+        assert!(fine.record(&b_), "separate cells at r=0.5");
+    }
+}

@@ -1,0 +1,174 @@
+//! Bucket tables for the S-ANN sketch (§2.2): only non-empty buckets are
+//! materialized ("standard hashing" in \[HPIM12\]); each bucket is a posting
+//! list of point ids.
+//!
+//! One `BucketTable` per amplified function g_j; `TableSet` owns the L of
+//! them and provides the probe/insert/delete surface the sketch uses.
+
+use std::collections::HashMap;
+
+/// A single LSH table: u64 key → posting list of ids.
+#[derive(Default)]
+pub struct BucketTable {
+    buckets: HashMap<u64, Vec<u32>>,
+    entries: usize,
+}
+
+impl BucketTable {
+    pub fn new() -> Self {
+        Default::default()
+    }
+
+    pub fn insert(&mut self, key: u64, id: u32) {
+        self.buckets.entry(key).or_default().push(id);
+        self.entries += 1;
+    }
+
+    /// Remove one occurrence of `id` under `key`; true if found.
+    pub fn remove(&mut self, key: u64, id: u32) -> bool {
+        if let Some(list) = self.buckets.get_mut(&key) {
+            if let Some(pos) = list.iter().position(|&x| x == id) {
+                list.swap_remove(pos);
+                self.entries -= 1;
+                if list.is_empty() {
+                    self.buckets.remove(&key);
+                }
+                return true;
+            }
+        }
+        false
+    }
+
+    pub fn get(&self, key: u64) -> &[u32] {
+        self.buckets.get(&key).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    pub fn num_buckets(&self) -> usize {
+        self.buckets.len()
+    }
+
+    pub fn num_entries(&self) -> usize {
+        self.entries
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        // HashMap bookkeeping approximated at 1.5x the entry array; posting
+        // lists counted at capacity.
+        let map_overhead =
+            (self.buckets.capacity() as f64 * 1.5) as usize * (8 + std::mem::size_of::<Vec<u32>>());
+        let postings: usize = self.buckets.values().map(|v| v.capacity() * 4).sum();
+        std::mem::size_of::<Self>() + map_overhead + postings
+    }
+}
+
+/// The L tables of an S-ANN sketch.
+pub struct TableSet {
+    tables: Vec<BucketTable>,
+}
+
+impl TableSet {
+    pub fn new(l: usize) -> Self {
+        assert!(l > 0);
+        TableSet { tables: (0..l).map(|_| BucketTable::new()).collect() }
+    }
+
+    pub fn l(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// Insert `id` under the per-table `keys` (len = L).
+    pub fn insert(&mut self, keys: &[u64], id: u32) {
+        debug_assert_eq!(keys.len(), self.tables.len());
+        for (t, &k) in self.tables.iter_mut().zip(keys) {
+            t.insert(k, id);
+        }
+    }
+
+    /// Remove `id` from every table; returns how many tables held it.
+    pub fn remove(&mut self, keys: &[u64], id: u32) -> usize {
+        debug_assert_eq!(keys.len(), self.tables.len());
+        self.tables
+            .iter_mut()
+            .zip(keys)
+            .map(|(t, &k)| t.remove(k, id) as usize)
+            .sum()
+    }
+
+    /// Posting list of table `j` under key `k`.
+    pub fn probe(&self, j: usize, key: u64) -> &[u32] {
+        self.tables[j].get(key)
+    }
+
+    pub fn num_entries(&self) -> usize {
+        self.tables.iter().map(|t| t.num_entries()).sum()
+    }
+
+    pub fn num_buckets(&self) -> usize {
+        self.tables.iter().map(|t| t.num_buckets()).sum()
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.tables.iter().map(|t| t.memory_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_probe_roundtrip() {
+        let mut ts = TableSet::new(3);
+        ts.insert(&[10, 20, 30], 7);
+        ts.insert(&[10, 21, 30], 8);
+        assert_eq!(ts.probe(0, 10), &[7, 8]);
+        assert_eq!(ts.probe(1, 20), &[7]);
+        assert_eq!(ts.probe(1, 21), &[8]);
+        assert_eq!(ts.probe(2, 30), &[7, 8]);
+        assert_eq!(ts.probe(0, 99), &[] as &[u32]);
+        assert_eq!(ts.num_entries(), 6);
+    }
+
+    #[test]
+    fn remove_clears_empty_buckets() {
+        let mut t = BucketTable::new();
+        t.insert(5, 1);
+        t.insert(5, 2);
+        assert!(t.remove(5, 1));
+        assert_eq!(t.get(5), &[2]);
+        assert!(t.remove(5, 2));
+        assert_eq!(t.num_buckets(), 0, "empty bucket must be dropped");
+        assert!(!t.remove(5, 2), "double remove is false");
+    }
+
+    #[test]
+    fn tableset_remove_counts_tables() {
+        let mut ts = TableSet::new(2);
+        ts.insert(&[1, 2], 42);
+        assert_eq!(ts.remove(&[1, 2], 42), 2);
+        assert_eq!(ts.remove(&[1, 2], 42), 0);
+        assert_eq!(ts.num_entries(), 0);
+    }
+
+    #[test]
+    fn duplicate_ids_in_one_bucket_are_allowed() {
+        // The same point inserted twice (turnstile re-insert) keeps both
+        // postings; remove deletes one occurrence at a time.
+        let mut t = BucketTable::new();
+        t.insert(9, 4);
+        t.insert(9, 4);
+        assert_eq!(t.get(9).len(), 2);
+        t.remove(9, 4);
+        assert_eq!(t.get(9).len(), 1);
+    }
+
+    #[test]
+    fn memory_grows_with_entries() {
+        let mut t = BucketTable::new();
+        let m0 = t.memory_bytes();
+        for i in 0..1000 {
+            t.insert(i % 50, i as u32);
+        }
+        assert!(t.memory_bytes() > m0);
+    }
+}

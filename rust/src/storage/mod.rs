@@ -1,0 +1,7 @@
+//! Storage substrates: the point arena and the LSH bucket tables.
+
+pub mod hashtable;
+pub mod vecstore;
+
+pub use hashtable::{BucketTable, TableSet};
+pub use vecstore::VecStore;

@@ -1,0 +1,145 @@
+//! Point storage: a contiguous f32 arena with stable u32 ids and
+//! tombstoned deletion (turnstile model support).
+//!
+//! The S-ANN sketch stores "a pointer to each p" in its buckets (§2.2);
+//! the arena is where those pointers resolve. Memory accounting here feeds
+//! the compression-rate metric (paper §5.1: relative to N·d·4/1024² MB).
+
+/// Arena of fixed-dimension f32 vectors.
+pub struct VecStore {
+    dim: usize,
+    data: Vec<f32>,
+    /// Tombstone bitmap (true = deleted).
+    dead: Vec<bool>,
+    live: usize,
+}
+
+impl VecStore {
+    pub fn new(dim: usize) -> Self {
+        assert!(dim > 0);
+        VecStore { dim, data: Vec::new(), dead: Vec::new(), live: 0 }
+    }
+
+    pub fn with_capacity(dim: usize, points: usize) -> Self {
+        let mut s = Self::new(dim);
+        s.data.reserve(points * dim);
+        s.dead.reserve(points);
+        s
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Total slots ever allocated (live + tombstoned).
+    pub fn len(&self) -> usize {
+        self.dead.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    /// Append a vector, returning its id.
+    pub fn push(&mut self, x: &[f32]) -> u32 {
+        assert_eq!(x.len(), self.dim, "dimension mismatch");
+        let id = self.dead.len() as u32;
+        self.data.extend_from_slice(x);
+        self.dead.push(false);
+        self.live += 1;
+        id
+    }
+
+    /// The vector for `id` (valid even if tombstoned; callers check `is_live`).
+    #[inline]
+    pub fn get(&self, id: u32) -> &[f32] {
+        let i = id as usize * self.dim;
+        &self.data[i..i + self.dim]
+    }
+
+    #[inline]
+    pub fn is_live(&self, id: u32) -> bool {
+        !self.dead[id as usize]
+    }
+
+    /// Tombstone a point (idempotent). Returns whether it was live.
+    pub fn delete(&mut self, id: u32) -> bool {
+        let slot = &mut self.dead[id as usize];
+        if *slot {
+            false
+        } else {
+            *slot = true;
+            self.live -= 1;
+            true
+        }
+    }
+
+    /// Iterate live ids.
+    pub fn live_ids(&self) -> impl Iterator<Item = u32> + '_ {
+        (0..self.dead.len() as u32).filter(move |&id| !self.dead[id as usize])
+    }
+
+    /// Resident bytes of vector payload (the paper's sketch-size metric
+    /// counts stored vectors at 4 bytes/component).
+    pub fn payload_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Full resident bytes including tombstones and headers.
+    pub fn memory_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self.data.capacity() * std::mem::size_of::<f32>()
+            + self.dead.capacity()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_get_roundtrip() {
+        let mut s = VecStore::new(3);
+        let a = s.push(&[1.0, 2.0, 3.0]);
+        let b = s.push(&[4.0, 5.0, 6.0]);
+        assert_eq!(s.get(a), &[1.0, 2.0, 3.0]);
+        assert_eq!(s.get(b), &[4.0, 5.0, 6.0]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.live(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "dimension mismatch")]
+    fn wrong_dim_panics() {
+        let mut s = VecStore::new(3);
+        s.push(&[1.0]);
+    }
+
+    #[test]
+    fn delete_is_tombstone_and_idempotent() {
+        let mut s = VecStore::new(2);
+        let a = s.push(&[1.0, 1.0]);
+        let b = s.push(&[2.0, 2.0]);
+        assert!(s.delete(a));
+        assert!(!s.delete(a), "second delete is a no-op");
+        assert!(!s.is_live(a));
+        assert!(s.is_live(b));
+        assert_eq!(s.live(), 1);
+        assert_eq!(s.live_ids().collect::<Vec<_>>(), vec![b]);
+        // payload still readable (bucket scans skip via is_live)
+        assert_eq!(s.get(a), &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn payload_bytes_counts_vectors() {
+        let mut s = VecStore::new(4);
+        for i in 0..10 {
+            s.push(&[i as f32; 4]);
+        }
+        assert_eq!(s.payload_bytes(), 10 * 4 * 4);
+    }
+}

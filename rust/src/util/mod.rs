@@ -1,0 +1,66 @@
+//! Substrate utilities built in-repo (offline environment; see DESIGN.md §2).
+
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+/// Squared L2 distance between two equal-length f32 slices.
+#[inline]
+pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        acc += d * d;
+    }
+    acc
+}
+
+/// L2 distance.
+#[inline]
+pub fn l2(a: &[f32], b: &[f32]) -> f32 {
+    l2_sq(a, b).sqrt()
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// Cosine similarity (0 when either vector is zero).
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    let na = dot(a, a).sqrt();
+    let nb = dot(b, b).sqrt();
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    (dot(a, b) / (na * nb)).clamp(-1.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distances() {
+        let a = [0.0f32, 0.0];
+        let b = [3.0f32, 4.0];
+        assert_eq!(l2_sq(&a, &b), 25.0);
+        assert_eq!(l2(&a, &b), 5.0);
+    }
+
+    #[test]
+    fn cosine_bounds_and_zero() {
+        let a = [1.0f32, 0.0];
+        assert_eq!(cosine(&a, &a), 1.0);
+        assert_eq!(cosine(&a, &[-1.0, 0.0]), -1.0);
+        assert_eq!(cosine(&a, &[0.0, 0.0]), 0.0);
+    }
+}

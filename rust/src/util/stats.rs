@@ -1,0 +1,104 @@
+//! Small statistics helpers shared by metrics, benches and tests.
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population variance.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Exact percentile (nearest-rank on a sorted copy), q in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((q / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Median of means over `groups` equal chunks (RACE-style robust estimator).
+pub fn median_of_means(xs: &[f64], groups: usize) -> f64 {
+    if xs.is_empty() || groups == 0 {
+        return 0.0;
+    }
+    let g = groups.min(xs.len());
+    let per = xs.len() / g;
+    let means: Vec<f64> = (0..g)
+        .map(|i| mean(&xs[i * per..((i + 1) * per).min(xs.len())]))
+        .collect();
+    median(&means)
+}
+
+/// Relative error |est - truth| / truth (truth must be > 0).
+pub fn relative_error(est: f64, truth: f64) -> f64 {
+    debug_assert!(truth > 0.0);
+    (est - truth).abs() / truth
+}
+
+/// log10 with a floor to keep plots finite when error hits zero.
+pub fn log10_floored(x: f64) -> f64 {
+    x.max(1e-12).log10()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_variance() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+        assert!((stddev(&xs) - 1.25f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_basics() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(median(&xs), 3.0);
+    }
+
+    #[test]
+    fn empty_slices_do_not_panic() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(median_of_means(&[], 4), 0.0);
+    }
+
+    #[test]
+    fn median_of_means_resists_outliers() {
+        let mut xs = vec![1.0; 30];
+        xs.push(1000.0);
+        let mom = median_of_means(&xs, 5);
+        assert!(mom < 10.0, "mom={mom}");
+    }
+
+    #[test]
+    fn relative_error_symmetric_in_magnitude() {
+        assert!((relative_error(1.2, 1.0) - 0.2).abs() < 1e-12);
+        assert!((relative_error(0.8, 1.0) - 0.2).abs() < 1e-12);
+    }
+}

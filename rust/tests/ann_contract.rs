@@ -1,0 +1,199 @@
+//! Theory-contract integration tests: the empirical behaviour of S-ANN on
+//! Poisson-process data must respect the bounds of Theorems 3.1 and 3.3
+//! and Corollary 3.2.
+
+use sublinear_sketch::data::synthetic;
+use sublinear_sketch::lsh::params::poisson_lower_tail_bound;
+use sublinear_sketch::sketch::ann::{SAnn, SAnnConfig};
+use sublinear_sketch::util::rng::Rng;
+
+/// Build a PPP workload where every r-ball is dense (m >= C n^eta).
+struct PppWorkload {
+    points: Vec<Vec<f32>>,
+    queries: Vec<Vec<f32>>,
+    r: f64,
+    m: f64,
+}
+
+fn ppp_workload(n: usize, dim: usize, seed: u64) -> PppWorkload {
+    let side = 10.0;
+    let mut rng = Rng::new(seed);
+    let points = synthetic::uniform_cube(n, dim, side, &mut rng);
+    // Interior queries (avoid boundary-clipped balls).
+    let queries: Vec<Vec<f32>> = (0..200)
+        .map(|_| {
+            (0..dim)
+                .map(|_| (1.0 + rng.uniform() * (side - 2.0)) as f32)
+                .collect()
+        })
+        .collect();
+    // Choose r so the expected ball occupancy m ~ 4 * n^0.5.
+    // m = n * vol(B_r)/side^dim  =>  solve for r via the ln-gamma volume.
+    let target_m = 4.0 * (n as f64).sqrt();
+    let d = dim as f64;
+    // vol(B_r) = pi^{d/2} r^d / Gamma(d/2+1)
+    let ln_vol_needed = (target_m / n as f64).ln() + d * side.ln();
+    let ln_r = (ln_vol_needed - (d / 2.0) * std::f64::consts::PI.ln()
+        + synthetic::ln_gamma(d / 2.0 + 1.0))
+        / d;
+    let r = ln_r.exp();
+    PppWorkload { points, queries, r, m: target_m }
+}
+
+fn streaming_success_rate(w: &PppWorkload, eta: f64, seed: u64) -> (f64, f64) {
+    let n = w.points.len();
+    let sens = sublinear_sketch::lsh::params::default_width(w.r, 2.0);
+    let cfg = SAnnConfig {
+        dim: w.points[0].len(),
+        n_max: n,
+        eta,
+        r: w.r,
+        c: 2.0,
+        w: sens.w,
+        l_cap: 64,
+        seed,
+    };
+    let mut ann = SAnn::new(cfg);
+    for p in &w.points {
+        ann.insert(p);
+    }
+    let mut success = 0usize;
+    for q in &w.queries {
+        // Every interior query has points within r (dense PPP), so the
+        // contract demands an answer within c*r w.p. >= 1 - bound.
+        if ann.query(q).is_some() {
+            success += 1;
+        }
+    }
+    let bound = ann.params().failure_bound_streaming(w.m).min(1.0);
+    (success as f64 / w.queries.len() as f64, 1.0 - bound)
+}
+
+#[test]
+fn theorem_3_1_streaming_success_rate() {
+    let w = ppp_workload(20_000, 4, 1);
+    for eta in [0.3, 0.5] {
+        let (rate, theory_floor) = streaming_success_rate(&w, eta, 7);
+        assert!(
+            rate >= theory_floor,
+            "eta={eta}: empirical {rate:.3} < theoretical floor {theory_floor:.3}"
+        );
+        // And the success should be non-trivial in absolute terms.
+        assert!(rate > 0.5, "eta={eta}: rate={rate}");
+    }
+}
+
+#[test]
+fn sublinear_storage_matches_n_pow_1_minus_eta() {
+    let w = ppp_workload(20_000, 4, 2);
+    let sens = sublinear_sketch::lsh::params::default_width(w.r, 2.0);
+    for eta in [0.4, 0.6] {
+        let cfg = SAnnConfig {
+            dim: 4,
+            n_max: w.points.len(),
+            eta,
+            r: w.r,
+            c: 2.0,
+            w: sens.w,
+            l_cap: 32,
+            seed: 9,
+        };
+        let mut ann = SAnn::new(cfg);
+        for p in &w.points {
+            ann.insert(p);
+        }
+        let expect = (w.points.len() as f64).powf(1.0 - eta);
+        let got = ann.stored() as f64;
+        assert!(
+            got > expect / 2.0 && got < expect * 2.0,
+            "eta={eta}: stored {got} vs n^(1-eta) = {expect:.0}"
+        );
+    }
+}
+
+#[test]
+fn corollary_3_2_batch_queries_are_independent_singles() {
+    // A batch must answer exactly as the same queries issued singly.
+    let w = ppp_workload(5_000, 4, 3);
+    let sens = sublinear_sketch::lsh::params::default_width(w.r, 2.0);
+    let cfg = SAnnConfig {
+        dim: 4,
+        n_max: w.points.len(),
+        eta: 0.3,
+        r: w.r,
+        c: 2.0,
+        w: sens.w,
+        l_cap: 32,
+        seed: 11,
+    };
+    let mut ann = SAnn::new(cfg);
+    for p in &w.points {
+        ann.insert(p);
+    }
+    let singles: Vec<_> = w.queries.iter().map(|q| ann.query(q)).collect();
+    let batch: Vec<_> = w.queries.iter().map(|q| ann.query(q)).collect();
+    assert_eq!(singles, batch, "query must be deterministic & state-free");
+}
+
+#[test]
+fn theorem_3_3_turnstile_survives_budgeted_deletions() {
+    let w = ppp_workload(20_000, 4, 4);
+    let sens = sublinear_sketch::lsh::params::default_width(w.r, 2.0);
+    let eta = 0.4;
+    let cfg = SAnnConfig {
+        dim: 4,
+        n_max: w.points.len(),
+        eta,
+        r: w.r,
+        c: 2.0,
+        w: sens.w,
+        l_cap: 64,
+        seed: 13,
+    };
+    let mut ann = SAnn::new(cfg);
+    for p in &w.points {
+        ann.insert(p);
+    }
+    // Delete d random points per query ball with d << mp.
+    let mp = w.m * ann.params().keep_prob;
+    let d = (mp / 4.0).floor().max(1.0);
+    let mut rng = Rng::new(14);
+    let mut deleted = 0usize;
+    for q in w.queries.iter().take(50) {
+        let mut in_ball: Vec<&Vec<f32>> = w
+            .points
+            .iter()
+            .filter(|p| sublinear_sketch::util::l2(p, q) as f64 <= w.r)
+            .collect();
+        rng.shuffle(&mut in_ball);
+        for p in in_ball.into_iter().take(d as usize) {
+            if ann.delete(p) {
+                deleted += 1;
+            }
+        }
+    }
+    let mut success = 0usize;
+    for q in &w.queries {
+        if ann.query(q).is_some() {
+            success += 1;
+        }
+    }
+    let rate = success as f64 / w.queries.len() as f64;
+    let bound = ann.params().failure_bound_turnstile(w.m, d).min(1.0);
+    assert!(
+        rate >= 1.0 - bound,
+        "turnstile: rate {rate:.3} < floor {:.3} (deleted {deleted})",
+        1.0 - bound
+    );
+    // Tail-bound sanity: the Poisson deletion tail must be < 1.
+    assert!(poisson_lower_tail_bound(mp, d) < 1.0);
+}
+
+#[test]
+fn eta_zero_contract_is_near_perfect() {
+    // With no sampling the structure is the classical [HPIM12] scheme: on
+    // dense PPP data the empirical success should be near 1.
+    let w = ppp_workload(10_000, 4, 5);
+    let (rate, _) = streaming_success_rate(&w, 0.0, 15);
+    assert!(rate > 0.95, "rate={rate}");
+}

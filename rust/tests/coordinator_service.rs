@@ -1,0 +1,220 @@
+//! Coordinator integration: concurrency, consistency across shards,
+//! PJRT-vs-native serving equivalence, and failure injection.
+
+use sublinear_sketch::coordinator::{
+    KdeKernel, Overload, RoutePolicy, ServiceConfig, SketchService,
+};
+use sublinear_sketch::util::rng::Rng;
+
+fn base_cfg(dim: usize, n: usize) -> ServiceConfig {
+    let mut cfg = ServiceConfig::default_for(dim, n);
+    cfg.shards = 3;
+    cfg.ann.eta = 0.0;
+    cfg.ann.r = 1.0;
+    cfg.ann.c = 2.0;
+    cfg.ann.w = 4.0;
+    cfg.kde.rows = 16;
+    cfg.kde.p = 3;
+    cfg.kde.kernel = KdeKernel::Angular;
+    cfg.kde.window = 300;
+    cfg
+}
+
+fn cluster_points(rng: &mut Rng, n: usize, dim: usize) -> Vec<Vec<f32>> {
+    let centers: Vec<Vec<f32>> = (0..20)
+        .map(|_| (0..dim).map(|_| rng.gaussian_f32() * 3.0).collect())
+        .collect();
+    (0..n)
+        .map(|_| {
+            let c = &centers[rng.below(20) as usize];
+            c.iter().map(|v| v + rng.gaussian_f32() * 0.1).collect()
+        })
+        .collect()
+}
+
+#[test]
+fn sharded_service_equals_single_shard_semantics() {
+    // Every stored point must be findable regardless of shard count: the
+    // partition must not lose or duplicate anything.
+    let dim = 8;
+    let mut rng = Rng::new(1);
+    let pts = cluster_points(&mut rng, 300, dim);
+    for shards in [1usize, 2, 5] {
+        let mut cfg = base_cfg(dim, pts.len());
+        cfg.shards = shards;
+        let mut svc = SketchService::start(cfg).unwrap();
+        for p in &pts {
+            svc.insert(p.clone());
+        }
+        svc.flush();
+        let st = svc.stats();
+        assert_eq!(st.stored_points, 300, "shards={shards} must store all (eta=0)");
+        let answers = svc.query_batch(pts[..40].to_vec());
+        let hits = answers.iter().filter(|a| a.is_some()).count();
+        assert!(hits >= 38, "shards={shards} hits={hits}/40");
+        svc.shutdown();
+    }
+}
+
+#[test]
+fn pjrt_and_native_serving_agree() {
+    if !sublinear_sketch::runtime::Manifest::default_dir()
+        .join("manifest.json")
+        .exists()
+    {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dim = 32; // artifact variant exists for 32
+    let mut rng = Rng::new(2);
+    let pts = cluster_points(&mut rng, 400, dim);
+    let queries = pts[..32].to_vec();
+
+    let mut native_cfg = base_cfg(dim, pts.len());
+    native_cfg.use_pjrt = false;
+    let mut pjrt_cfg = base_cfg(dim, pts.len());
+    pjrt_cfg.use_pjrt = true;
+
+    let run = |mut svc: SketchService, pts: &[Vec<f32>], queries: &[Vec<f32>]| {
+        for p in pts {
+            svc.insert(p.clone());
+        }
+        svc.flush();
+        let ans = svc.query_batch(queries.to_vec());
+        svc.shutdown();
+        ans
+    };
+    let a = run(SketchService::start(native_cfg).unwrap(), &pts, &queries);
+    let b = run(SketchService::start(pjrt_cfg).unwrap(), &pts, &queries);
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        match (x, y) {
+            (Some(p), Some(q)) => {
+                // Same shard partition & hashing -> identical candidate
+                // sets. Distances: the PJRT kernel uses the MXU-friendly
+                // |q|^2+|c|^2-2qc decomposition, which loses ABSOLUTE
+                // precision near zero (cancellation of ~|q|^2-sized
+                // terms), so the contract is additive-relative.
+                assert!(
+                    (p.dist - q.dist).abs() < 0.05 * (1.0 + p.dist),
+                    "query {i}: native {p:?} vs pjrt {q:?}"
+                );
+            }
+            (None, None) => {}
+            other => panic!("query {i}: divergent answers {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn concurrent_producers_do_not_lose_queries() {
+    // Three producer threads feed the ingestion front-end via a channel
+    // (the service's owning thread is the only PJRT-adjacent one — the
+    // executor is deliberately not Send); queries interleave with the
+    // insert firehose and every batch must come back complete.
+    let dim = 8;
+    let mut cfg = base_cfg(dim, 20_000);
+    cfg.queue_cap = 64;
+    cfg.overload = Overload::Block;
+    let mut svc = SketchService::start(cfg).unwrap();
+    let (tx, rx) = std::sync::mpsc::sync_channel::<Vec<f32>>(256);
+    let producers: Vec<_> = (0..3)
+        .map(|t| {
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + t);
+                for _ in 0..2_000 {
+                    let p: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
+                    tx.send(p).unwrap();
+                }
+            })
+        })
+        .collect();
+    drop(tx);
+    let mut rng = Rng::new(55);
+    let mut inserted = 0u64;
+    while let Ok(p) = rx.recv() {
+        svc.insert(p);
+        inserted += 1;
+        if inserted % 500 == 0 {
+            let qs: Vec<Vec<f32>> = (0..16)
+                .map(|_| (0..8).map(|_| rng.gaussian_f32()).collect())
+                .collect();
+            let ans = svc.query_batch(qs);
+            assert_eq!(ans.len(), 16, "every query must be answered");
+        }
+    }
+    for p in producers {
+        p.join().unwrap();
+    }
+    svc.flush();
+    let st = svc.stats();
+    assert_eq!(st.inserts, 6_000);
+    assert_eq!(st.shed, 0, "Block policy never sheds");
+    svc.shutdown();
+}
+
+#[test]
+fn shed_overload_degrades_gracefully() {
+    // Failure injection: a tiny queue + shed policy under a burst. The
+    // service must stay responsive and report the shed count; the KDE
+    // population must equal inserts - shed.
+    let dim = 8;
+    let mut cfg = base_cfg(dim, 50_000);
+    cfg.shards = 1;
+    cfg.queue_cap = 4;
+    cfg.overload = Overload::Shed;
+    let mut svc = SketchService::start(cfg).unwrap();
+    let mut rng = Rng::new(3);
+    for _ in 0..20_000 {
+        let p: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
+        svc.insert(p);
+    }
+    svc.flush();
+    let st = svc.stats();
+    assert_eq!(st.inserts, 20_000);
+    // Under a hot loop with a 4-deep queue, shedding is expected...
+    assert!(st.stored_points as u64 + st.shed == 20_000, "accounting: {st:?}");
+    // ...but the service must still answer queries.
+    let q: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
+    let ans = svc.query_batch(vec![q]);
+    assert_eq!(ans.len(), 1);
+    svc.shutdown();
+}
+
+#[test]
+fn turnstile_delete_then_reinsert_roundtrip() {
+    let dim = 8;
+    let cfg = base_cfg(dim, 1000);
+    let mut svc = SketchService::start(cfg).unwrap();
+    let p: Vec<f32> = (0..8).map(|i| i as f32 * 0.25).collect();
+    svc.insert(p.clone());
+    svc.flush();
+    assert!(svc.delete(p.clone()));
+    svc.flush();
+    assert!(svc.query_batch(vec![p.clone()])[0].is_none());
+    svc.insert(p.clone());
+    svc.flush();
+    let ans = svc.query_batch(vec![p.clone()]);
+    assert!(ans[0].is_some(), "reinserted point must be found again");
+    assert!(ans[0].as_ref().unwrap().dist < 1e-5);
+    svc.shutdown();
+}
+
+#[test]
+fn round_robin_rejects_deletes_but_balances() {
+    let dim = 8;
+    let mut cfg = base_cfg(dim, 1000);
+    cfg.route = RoutePolicy::RoundRobin;
+    let mut svc = SketchService::start(cfg).unwrap();
+    let mut rng = Rng::new(4);
+    for _ in 0..99 {
+        let p: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
+        svc.insert(p);
+    }
+    svc.flush();
+    let p: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
+    assert!(!svc.delete(p), "round-robin cannot address deletes");
+    assert_eq!(svc.stats().stored_points, 99);
+    svc.shutdown();
+}

@@ -1,0 +1,156 @@
+//! Sliding-window correctness integration tests: SW-AKDE against
+//! brute-force windowed truth across window boundaries, batch updates
+//! (Corollary 4.2), and the ε = 2ε' + ε'² error law (Lemma 4.3).
+
+use sublinear_sketch::baselines::exact_kde_angular;
+use sublinear_sketch::lsh::srp::SrpLsh;
+use sublinear_sketch::sketch::race::Race;
+use sublinear_sketch::sketch::SwAkde;
+use sublinear_sketch::util::rng::Rng;
+
+fn points(rng: &mut Rng, n: usize, dim: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|_| (0..dim).map(|_| rng.gaussian_f32()).collect())
+        .collect()
+}
+
+/// SW-AKDE vs a RACE rebuilt on exactly the live window, at every prefix
+/// of the stream — the strongest structural check: the EH layer must
+/// track the true windowed counts within ε' everywhere, including while
+/// the window is still filling and right at expiry boundaries.
+#[test]
+fn tracks_windowed_race_at_every_prefix() {
+    let (dim, rows, p) = (8, 16, 2);
+    let eps = 0.1;
+    let window = 50u64;
+    let fam = SrpLsh::new(dim, rows * p, &mut Rng::new(1));
+    let mut rng = Rng::new(2);
+    let stream = points(&mut rng, 300, dim);
+    let queries = points(&mut rng, 5, dim);
+    let mut sw = SwAkde::new_srp(rows, p, eps, window);
+    for (t, x) in stream.iter().enumerate() {
+        sw.add(&fam, x);
+        if (t + 1) % 13 == 0 {
+            let start = (t + 1).saturating_sub(window as usize);
+            let mut race = Race::new_srp(rows, p);
+            for y in &stream[start..=t] {
+                race.add(&fam, y);
+            }
+            for q in &queries {
+                let est = sw.query(&fam, q);
+                let truth = race.query(&fam, q);
+                assert!(
+                    (est - truth).abs() <= eps * truth + 1e-9,
+                    "t={t}: est={est} truth={truth}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn corollary_4_2_batch_window_counts_batches() {
+    // With batch updates the window is measured in BATCHES: after W+k
+    // batches, the first k must have fully expired. p = 6 (64 cells/row)
+    // keeps cross-collision mass from unrelated points well below the
+    // marker's own mass, so expiry is visible through the estimate.
+    let (dim, rows, p) = (16, 8, 6);
+    let window = 3u64; // 3 batches
+    let fam = SrpLsh::new(dim, rows * p, &mut Rng::new(3));
+    let mut rng = Rng::new(4);
+    let mut sw = SwAkde::new_srp(rows, p, 0.05, window);
+    let marker = points(&mut rng, 1, dim).pop().unwrap();
+    // Batch 1: 10 copies of the marker. Batches 2..=5: unrelated points.
+    let refs: Vec<&[f32]> = (0..10).map(|_| marker.as_slice()).collect();
+    sw.add_batch(&fam, &refs);
+    let after_insert = sw.query(&fam, &marker);
+    assert!(after_insert >= 9.0, "marker mass missing: {after_insert}");
+    for _ in 0..2 {
+        let batch = points(&mut rng, 10, dim);
+        let refs: Vec<&[f32]> = batch.iter().map(|v| v.as_slice()).collect();
+        sw.add_batch(&fam, &refs);
+    }
+    // Marker batch is still the oldest of the 3 in-window batches.
+    assert!(sw.query(&fam, &marker) >= 8.0);
+    // One more batch pushes it out.
+    let batch = points(&mut rng, 10, dim);
+    let refs: Vec<&[f32]> = batch.iter().map(|v| v.as_slice()).collect();
+    sw.add_batch(&fam, &refs);
+    let after_expiry = sw.query(&fam, &marker);
+    // Only cross-collision mass from 30 unrelated points may remain
+    // (expected ~30/64 per row at p=6).
+    assert!(
+        after_expiry < 3.0,
+        "marker failed to expire: {after_expiry} vs {after_insert}"
+    );
+}
+
+#[test]
+fn lemma_4_3_error_law_tightens_with_eps() {
+    // Smaller EH eps' must give smaller worst-case observed error against
+    // exact windowed KDE (rows high enough that EH error dominates).
+    let (dim, rows, p) = (12, 256, 2);
+    let window = 120u64;
+    let fam = SrpLsh::new(dim, rows * p, &mut Rng::new(5));
+    let mut rng = Rng::new(6);
+    let stream = points(&mut rng, 600, dim);
+    let queries = points(&mut rng, 20, dim);
+    let live = &stream[stream.len() - window as usize..];
+    let mut worst = Vec::new();
+    for eps in [0.5, 0.05] {
+        let mut sw = SwAkde::new_srp(rows, p, eps, window);
+        for x in &stream {
+            sw.add(&fam, x);
+        }
+        let mut max_err = 0.0f64;
+        for q in &queries {
+            let est = sw.query(&fam, q);
+            let truth = exact_kde_angular(live, q, p as u32);
+            if truth > 1.0 {
+                max_err = max_err.max((est - truth).abs() / truth);
+            }
+        }
+        worst.push(max_err);
+    }
+    assert!(
+        worst[1] <= worst[0] + 0.02,
+        "eps'=0.05 worst {:.4} should beat eps'=0.5 worst {:.4}",
+        worst[1],
+        worst[0]
+    );
+}
+
+#[test]
+fn kde_eps_formula() {
+    let sw = SwAkde::new_srp(4, 2, 0.1, 10);
+    assert!((sw.kde_eps() - 0.21).abs() < 1e-12, "2e'+e'^2 at 0.1 = 0.21");
+}
+
+#[test]
+fn turnstile_race_vs_window_swakde_semantics() {
+    // RACE deletes explicitly; SW-AKDE expires implicitly. After the same
+    // logical window, both should estimate the same windowed density.
+    let (dim, rows, p) = (8, 32, 2);
+    let window = 40u64;
+    let fam = SrpLsh::new(dim, rows * p, &mut Rng::new(7));
+    let mut rng = Rng::new(8);
+    let stream = points(&mut rng, 200, dim);
+    let mut sw = SwAkde::new_srp(rows, p, 0.05, window);
+    let mut race = Race::new_srp(rows, p);
+    for (t, x) in stream.iter().enumerate() {
+        sw.add(&fam, x);
+        race.add(&fam, x);
+        if t >= window as usize {
+            race.remove(&fam, &stream[t - window as usize]); // manual expiry
+        }
+    }
+    let queries = points(&mut rng, 10, dim);
+    for q in &queries {
+        let a = sw.query(&fam, q);
+        let b = race.query(&fam, q);
+        assert!(
+            (a - b).abs() <= 0.05 * b + 1e-9,
+            "sw={a} race-with-deletes={b}"
+        );
+    }
+}

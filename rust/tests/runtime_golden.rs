@@ -1,0 +1,263 @@
+//! Cross-language numeric contract: every golden artifact, executed through
+//! the PJRT runtime, must reproduce the outputs python computed at AOT time
+//! (artifacts/goldens.json), and the pure-Rust native mirrors must agree.
+
+use std::path::Path;
+
+use sublinear_sketch::runtime::{native, Arg, Executor};
+use sublinear_sketch::util::json::Json;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = sublinear_sketch::runtime::Manifest::default_dir();
+    if dir.join("manifest.json").exists() && dir.join("goldens.json").exists() {
+        Some(dir)
+    } else {
+        None
+    }
+}
+
+struct GoldenCase {
+    name: String,
+    inputs: Vec<(Vec<usize>, String, Vec<f64>)>,
+    output: Vec<f64>,
+}
+
+fn load_goldens(dir: &Path) -> Vec<GoldenCase> {
+    let src = std::fs::read_to_string(dir.join("goldens.json")).unwrap();
+    let root = Json::parse(&src).unwrap();
+    root.get("cases")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|c| GoldenCase {
+            name: c.get("name").and_then(Json::as_str).unwrap().to_string(),
+            inputs: c
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .unwrap()
+                .iter()
+                .map(|i| {
+                    (
+                        i.get("shape")
+                            .and_then(Json::as_arr)
+                            .unwrap()
+                            .iter()
+                            .map(|d| d.as_usize().unwrap())
+                            .collect(),
+                        i.get("dtype").and_then(Json::as_str).unwrap().to_string(),
+                        i.get("data")
+                            .and_then(Json::as_arr)
+                            .unwrap()
+                            .iter()
+                            .map(|v| v.as_f64().unwrap())
+                            .collect(),
+                    )
+                })
+                .collect(),
+            output: c
+                .at(&["output", "data"])
+                .and_then(Json::as_arr)
+                .unwrap()
+                .iter()
+                .map(|v| v.as_f64().unwrap())
+                .collect(),
+        })
+        .collect()
+}
+
+#[test]
+fn golden_artifacts_match_python_outputs() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let mut exec = Executor::new(&dir).unwrap();
+    let cases = load_goldens(&dir);
+    assert_eq!(cases.len(), 6, "expected 6 golden cases");
+    for case in &cases {
+        let f32_bufs: Vec<Vec<f32>> = case
+            .inputs
+            .iter()
+            .map(|(_, _, d)| d.iter().map(|&v| v as f32).collect())
+            .collect();
+        let i32_bufs: Vec<Vec<i32>> = case
+            .inputs
+            .iter()
+            .map(|(_, _, d)| d.iter().map(|&v| v as i32).collect())
+            .collect();
+        let args: Vec<Arg> = case
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, (_, dt, _))| match dt.as_str() {
+                "f32" => Arg::F32(&f32_bufs[i]),
+                "i32" => Arg::I32(&i32_bufs[i]),
+                _ => panic!("bad dtype"),
+            })
+            .collect();
+        let out = exec.execute(&case.name, &args).unwrap();
+        match out {
+            sublinear_sketch::runtime::Tensor::F32(v) => {
+                assert_eq!(v.len(), case.output.len(), "{}", case.name);
+                for (i, (&got, &want)) in v.iter().zip(&case.output).enumerate() {
+                    assert!(
+                        (got as f64 - want).abs() <= 1e-4 * want.abs().max(1.0),
+                        "{}[{}]: got {} want {}",
+                        case.name,
+                        i,
+                        got,
+                        want
+                    );
+                }
+            }
+            sublinear_sketch::runtime::Tensor::I32(v) => {
+                assert_eq!(v.len(), case.output.len(), "{}", case.name);
+                for (i, (&got, &want)) in v.iter().zip(&case.output).enumerate() {
+                    assert_eq!(got as f64, want, "{}[{}]", case.name, i);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn native_mirrors_match_goldens() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    for case in load_goldens(&dir) {
+        let f: Vec<Vec<f32>> = case
+            .inputs
+            .iter()
+            .map(|(_, _, d)| d.iter().map(|&v| v as f32).collect())
+            .collect();
+        match case.name.as_str() {
+            "pstable_hash_g" => {
+                let (b, d) = (case.inputs[0].0[0], case.inputs[0].0[1]);
+                let h = case.inputs[2].0[0];
+                assert_eq!(case.output.len(), b * h);
+                let got = native::pstable_hash(d, &f[0], &f[1], &f[2], f[3][0]);
+                for (i, (&g, &w)) in got.iter().zip(&case.output).enumerate() {
+                    assert_eq!(g as f64, w, "pstable_hash_g[{i}]");
+                }
+            }
+            "srp_hash_g" => {
+                let d = case.inputs[0].0[1];
+                let h = case.inputs[1].0[1];
+                let got = native::srp_hash(d, &f[0], &f[1], h);
+                for (i, (&g, &w)) in got.iter().zip(&case.output).enumerate() {
+                    assert_eq!(g as f64, w, "srp_hash_g[{i}]");
+                }
+            }
+            "rerank_l2_g" => {
+                let (b, d) = (case.inputs[0].0[0], case.inputs[0].0[1]);
+                let c = case.inputs[1].0[1];
+                let cands: Vec<Vec<&[f32]>> = (0..b)
+                    .map(|r| (0..c).map(|j| &f[1][(r * c + j) * d..(r * c + j + 1) * d]).collect())
+                    .collect();
+                let got = native::rerank_l2(d, &f[0], &cands);
+                let flat: Vec<f32> = got.into_iter().flatten().collect();
+                for (i, (&g, &w)) in flat.iter().zip(&case.output).enumerate() {
+                    assert!(
+                        (g as f64 - w).abs() <= 1e-3 * w.abs().max(1.0),
+                        "rerank_l2_g[{i}]: {g} vs {w}"
+                    );
+                }
+            }
+            "dist_matrix_g" => {
+                let d = case.inputs[0].0[1];
+                let got = native::dist_matrix(d, &f[0], &f[1]);
+                for (i, (&g, &w)) in got.iter().zip(&case.output).enumerate() {
+                    assert!(
+                        (g as f64 - w).abs() <= 1e-3 * w.abs().max(1.0),
+                        "dist_matrix_g[{i}]: {g} vs {w}"
+                    );
+                }
+            }
+            "kde_angular_g" => {
+                let d = case.inputs[0].0[1];
+                let got = native::kde_angular(d, &f[0], &f[1], f[2][0]);
+                for (i, (&g, &w)) in got.iter().zip(&case.output).enumerate() {
+                    assert!(
+                        (g - w).abs() <= 1e-3 * w.abs().max(1.0),
+                        "kde_angular_g[{i}]: {g} vs {w}"
+                    );
+                }
+            }
+            "kde_pstable_g" => {
+                let d = case.inputs[0].0[1];
+                let got = native::kde_pstable(d, &f[0], &f[1], f[2][0], f[3][0]);
+                for (i, (&g, &w)) in got.iter().zip(&case.output).enumerate() {
+                    assert!(
+                        (g - w).abs() <= 1e-3 * w.abs().max(1.0),
+                        "kde_pstable_g[{i}]: {g} vs {w}"
+                    );
+                }
+            }
+            other => panic!("unknown golden case {other}"),
+        }
+    }
+}
+
+#[test]
+fn tiled_helpers_match_native_on_ragged_sizes() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut exec = Executor::new(&dir).unwrap();
+    let mut rng = sublinear_sketch::util::rng::Rng::new(99);
+    let dim = 32; // syn-32 variant exists for hash + rerank
+    // ragged sizes: not multiples of the artifact tiles
+    let m = 301;
+    let h = 70;
+    let mut points = vec![0f32; m * dim];
+    rng.fill_gaussian_f32(&mut points);
+    let mut proj = vec![0f32; dim * h];
+    rng.fill_gaussian_f32(&mut proj);
+    let bias: Vec<f32> = (0..h).map(|_| rng.uniform_f32() * 4.0).collect();
+
+    let got = exec.pstable_hash_tiled(dim, &points, &proj, &bias, 0.25).unwrap();
+    let want = native::pstable_hash(dim, &points, &proj, &bias, 0.25);
+    assert_eq!(got, want, "pstable tiled vs native");
+
+    // rerank with ragged candidate lists
+    let nq = 37;
+    let mut queries = vec![0f32; nq * dim];
+    rng.fill_gaussian_f32(&mut queries);
+    let pool: Vec<Vec<f32>> = (0..50)
+        .map(|_| {
+            let mut v = vec![0f32; dim];
+            rng.fill_gaussian_f32(&mut v);
+            v
+        })
+        .collect();
+    let cands: Vec<Vec<&[f32]>> = (0..nq)
+        .map(|i| (0..(i % 7)).map(|j| pool[(i + j) % 50].as_slice()).collect())
+        .collect();
+    let got = exec.rerank_tiled(dim, &queries, &cands).unwrap();
+    let want = native::rerank_l2(dim, &queries, &cands);
+    for (a, b) in got.iter().flatten().zip(want.iter().flatten()) {
+        assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0), "{a} vs {b}");
+    }
+
+    // kde tiled on a ragged dataset
+    let dimk = 103;
+    let n = 513;
+    let nqk = 9;
+    let mut data = vec![0f32; n * dimk];
+    rng.fill_gaussian_f32(&mut data);
+    let mut qk = vec![0f32; nqk * dimk];
+    rng.fill_gaussian_f32(&mut qk);
+    let got = exec.kde_tiled("kde_angular", dimk, &qk, &data, None, 3.0).unwrap();
+    let want = native::kde_angular(dimk, &qk, &data, 3.0);
+    for (a, b) in got.iter().zip(&want) {
+        assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0), "{a} vs {b}");
+    }
+    let got = exec.kde_tiled("kde_pstable", dimk, &qk, &data, Some(4.0), 2.0).unwrap();
+    let want = native::kde_pstable(dimk, &qk, &data, 4.0, 2.0);
+    for (a, b) in got.iter().zip(&want) {
+        assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0), "{a} vs {b}");
+    }
+}
