@@ -1,20 +1,59 @@
 //! Per-operation micro-benchmarks for the §Perf pass: the hot paths of
 //! every layer, measured in ns/op. Run before and after each optimization
-//! (EXPERIMENTS.md §Perf records the iteration log).
+//! (EXPERIMENTS.md §Perf records the iteration log) — the "after" numbers
+//! are also dumped as BENCH_perf_micro.json at the repo root so the perf
+//! trajectory is machine-readable.
 
 use sublinear_sketch::bench_support::{banner, time_ns, Table};
 use sublinear_sketch::coordinator::{BatchPolicy, Batcher};
 use sublinear_sketch::lsh::srp::SrpLsh;
-use sublinear_sketch::lsh::LshFamily;
 use sublinear_sketch::sketch::ann::{SAnn, SAnnConfig};
 use sublinear_sketch::sketch::eh::ExpHistogram;
 use sublinear_sketch::sketch::race::Race;
 use sublinear_sketch::sketch::SwAkde;
 use sublinear_sketch::util::rng::Rng;
 
+/// Size at which the `*_batch` entry points are measured (the Batcher's
+/// default flush size, §3.3).
+const BATCH: usize = 64;
+
+fn record(table: &mut Table, json: &mut Vec<(String, f64)>, op: &str, ns: f64, note: &str) {
+    table.row(vec![op.into(), format!("{ns:.1}"), note.into()]);
+    json.push((op.to_string(), ns));
+}
+
+/// Dump `ops` (ns/op) and `ratios` (dimensionless speedups, keys ending
+/// in `.speedup_vs_singles`) as separate JSON objects so trajectory
+/// tooling never mixes units.
+fn dump_json(rows: &[(String, f64)]) {
+    use sublinear_sketch::util::json::{num, obj, s, Json};
+    let (ratios, ops): (Vec<_>, Vec<_>) =
+        rows.iter().partition(|(op, _)| op.ends_with(".speedup_vs_singles"));
+    let ops: Vec<(&str, Json)> = ops.iter().map(|(op, v)| (op.as_str(), num(*v))).collect();
+    let ratios: Vec<(&str, Json)> =
+        ratios.iter().map(|(op, v)| (op.as_str(), num(*v))).collect();
+    let root = obj(vec![
+        ("bench", s("perf_micro")),
+        ("unit", s("ns_per_op")),
+        ("ops", obj(ops)),
+        ("ratios", obj(ratios)),
+    ]);
+    // Repo root when invoked from rust/ (the cargo bench cwd), else cwd.
+    let path = if std::path::Path::new("../ROADMAP.md").exists() {
+        "../BENCH_perf_micro.json"
+    } else {
+        "BENCH_perf_micro.json"
+    };
+    match std::fs::write(path, root.to_string()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}
+
 fn main() {
     banner("perf_micro", "hot-path ns/op per layer");
     let mut table = Table::new(&["op", "ns/op", "notes"]);
+    let mut json: Vec<(String, f64)> = Vec::new();
     let mut rng = Rng::new(1);
 
     // ---- EH (the SW-AKDE inner loop) --------------------------------
@@ -25,11 +64,11 @@ fn main() {
             t += 1;
             eh.add(t);
         });
-        table.row(vec!["eh.add".into(), format!("{ns:.1}"), "eps'=0.1 window=4096".into()]);
+        record(&mut table, &mut json, "eh.add", ns, "eps'=0.1 window=4096");
         let ns = time_ns(100, 1_000_000, || {
             std::hint::black_box(eh.estimate(t));
         });
-        table.row(vec!["eh.estimate".into(), format!("{ns:.1}"), "".into()]);
+        record(&mut table, &mut json, "eh.estimate", ns, "");
     }
 
     // ---- RACE / SW-AKDE update + query ------------------------------
@@ -40,38 +79,51 @@ fn main() {
         let pts: Vec<Vec<f32>> = (0..256)
             .map(|_| (0..dim).map(|_| rng.gaussian_f32()).collect())
             .collect();
+        let flat: Vec<f32> = pts.iter().take(BATCH).flatten().copied().collect();
         let mut race = Race::new_srp(rows, p);
         let mut i = 0;
-        let ns = time_ns(100, 20_000, || {
+        let ns_add = time_ns(100, 20_000, || {
             race.add(&fam, &pts[i % 256]);
             i += 1;
         });
-        table.row(vec![
-            "race.add".into(),
-            format!("{ns:.0}"),
-            format!("dim={dim} rows={rows} p={p}"),
-        ]);
-        let ns = time_ns(10, 5_000, || {
+        record(
+            &mut table,
+            &mut json,
+            "race.add",
+            ns_add,
+            &format!("dim={dim} rows={rows} p={p}"),
+        );
+        let ns_query = time_ns(10, 5_000, || {
             std::hint::black_box(race.query(&fam, &pts[i % 256]));
             i += 1;
         });
-        table.row(vec!["race.query".into(), format!("{ns:.0}"), "".into()]);
+        record(&mut table, &mut json, "race.query", ns_query, "");
+
+        // Batched entry points: one GEMM-shaped kernel per 64-point flush.
+        let ns = time_ns(10, 500, || race.add_batch(&fam, &flat)) / BATCH as f64;
+        record(&mut table, &mut json, "race.add_batch64", ns, "amortized per point");
+        record(&mut table, &mut json, "race.add_batch64.speedup_vs_singles", ns_add / ns, "x");
+        let ns = time_ns(5, 200, || {
+            std::hint::black_box(race.query_batch(&fam, &flat));
+        }) / BATCH as f64;
+        record(&mut table, &mut json, "race.query_batch64", ns, "amortized per query");
+        record(&mut table, &mut json, "race.query_batch64.speedup_vs_singles", ns_query / ns, "x");
 
         let mut sw = SwAkde::new_srp(rows, p, 0.1, 2048);
         let ns = time_ns(100, 20_000, || {
             sw.add(&fam, &pts[i % 256]);
             i += 1;
         });
-        table.row(vec![
-            "swakde.add".into(),
-            format!("{ns:.0}"),
-            format!("window=2048 rows={rows}"),
-        ]);
-        let ns = time_ns(10, 5_000, || {
+        record(&mut table, &mut json, "swakde.add", ns, &format!("window=2048 rows={rows}"));
+        let ns_swq = time_ns(10, 5_000, || {
             std::hint::black_box(sw.query(&fam, &pts[i % 256]));
             i += 1;
         });
-        table.row(vec!["swakde.query".into(), format!("{ns:.0}"), "".into()]);
+        record(&mut table, &mut json, "swakde.query", ns_swq, "");
+        let ns = time_ns(5, 200, || {
+            std::hint::black_box(sw.query_batch(&fam, &flat));
+        }) / BATCH as f64;
+        record(&mut table, &mut json, "swakde.query_batch64", ns, "amortized per query");
     }
 
     // ---- S-ANN insert + query ----------------------------------------
@@ -87,26 +139,45 @@ fn main() {
             l_cap: 32,
             seed: 3,
         };
-        let mut ann = SAnn::new(cfg);
+        let mut ann = SAnn::new(cfg.clone());
         let pts: Vec<Vec<f32>> = (0..4096)
             .map(|_| (0..dim).map(|_| rng.gaussian_f32() * 2.0).collect())
             .collect();
         let mut i = 0;
-        let ns = time_ns(128, 4_096, || {
+        let ns_insert = time_ns(128, 4_096, || {
             ann.insert_retained(&pts[i % 4096]);
             i += 1;
         });
         let params = *ann.params();
-        table.row(vec![
-            "sann.insert".into(),
-            format!("{ns:.0}"),
-            format!("k={} L={} dim={dim}", params.k, params.l),
-        ]);
-        let ns = time_ns(16, 2_000, || {
+        record(
+            &mut table,
+            &mut json,
+            "sann.insert",
+            ns_insert,
+            &format!("k={} L={} dim={dim}", params.k, params.l),
+        );
+        let ns_query = time_ns(16, 2_000, || {
             std::hint::black_box(ann.query(&pts[i % 4096]));
             i += 1;
         });
-        table.row(vec!["sann.query".into(), format!("{ns:.0}"), "".into()]);
+        record(&mut table, &mut json, "sann.query", ns_query, "");
+
+        // Batched entry points against a fresh sketch (same params).
+        let mut ann_b = SAnn::new(cfg);
+        let mut off = 0;
+        let ns = time_ns(2, 64, || {
+            let start = off % (4096 - BATCH);
+            ann_b.insert_batch(&pts[start..start + BATCH]);
+            off += BATCH;
+        }) / BATCH as f64;
+        record(&mut table, &mut json, "sann.insert_batch64", ns, "amortized per point");
+        record(&mut table, &mut json, "sann.insert_batch64.speedup_vs_singles", ns_insert / ns, "x");
+        let qs: Vec<Vec<f32>> = pts[..BATCH].to_vec();
+        let ns = time_ns(2, 64, || {
+            std::hint::black_box(ann_b.query_batch(&qs));
+        }) / BATCH as f64;
+        record(&mut table, &mut json, "sann.query_batch64", ns, "amortized per query");
+        record(&mut table, &mut json, "sann.query_batch64.speedup_vs_singles", ns_query / ns, "x");
     }
 
     // ---- batcher (pure coordinator overhead) --------------------------
@@ -119,75 +190,83 @@ fn main() {
             }
             i += 1;
         });
-        table.row(vec!["batcher.push".into(), format!("{ns:.1}"), "max_batch=64".into()]);
+        record(&mut table, &mut json, "batcher.push", ns, "max_batch=64");
     }
 
     // ---- PJRT executor (artifact call overhead + hash batch) ----------
     if sublinear_sketch::runtime::Manifest::default_dir().join("manifest.json").exists() {
-        let mut exec = sublinear_sketch::runtime::Executor::from_default_dir().unwrap();
-        let dim = 128;
-        let h = 512;
-        let mut points = vec![0f32; 256 * dim];
-        rng.fill_gaussian_f32(&mut points);
-        let mut proj = vec![0f32; dim * h];
-        rng.fill_gaussian_f32(&mut proj);
-        let bias: Vec<f32> = (0..h).map(|_| rng.uniform_f32()).collect();
-        // warm the compile cache
-        let _ = exec.pstable_hash_tiled(dim, &points, &proj, &bias, 0.25).unwrap();
-        let ns = time_ns(2, 20, || {
-            std::hint::black_box(
-                exec.pstable_hash_tiled(dim, &points, &proj, &bias, 0.25).unwrap(),
-            );
-        });
-        table.row(vec![
-            "pjrt.hash_batch".into(),
-            format!("{ns:.0}"),
-            "256x128 pts, 512 slots (1 artifact call)".into(),
-        ]);
-        let ns_per_pt = ns / 256.0;
-        table.row(vec![
-            "pjrt.hash_per_point".into(),
-            format!("{ns_per_pt:.0}"),
-            "amortized".into(),
-        ]);
+        match sublinear_sketch::runtime::Executor::from_default_dir() {
+            Ok(mut exec) => {
+                let dim = 128;
+                let h = 512;
+                let mut points = vec![0f32; 256 * dim];
+                rng.fill_gaussian_f32(&mut points);
+                let mut proj = vec![0f32; dim * h];
+                rng.fill_gaussian_f32(&mut proj);
+                let bias: Vec<f32> = (0..h).map(|_| rng.uniform_f32()).collect();
+                // warm the compile cache
+                let _ = exec.pstable_hash_tiled(dim, &points, &proj, &bias, 0.25).unwrap();
+                let ns = time_ns(2, 20, || {
+                    std::hint::black_box(
+                        exec.pstable_hash_tiled(dim, &points, &proj, &bias, 0.25).unwrap(),
+                    );
+                });
+                record(
+                    &mut table,
+                    &mut json,
+                    "pjrt.hash_batch",
+                    ns,
+                    "256x128 pts, 512 slots (1 artifact call)",
+                );
+                record(&mut table, &mut json, "pjrt.hash_per_point", ns / 256.0, "amortized");
 
-        // rerank: 64 queries x 48 candidates
-        let nq = 64;
-        let pool: Vec<Vec<f32>> = (0..64)
-            .map(|_| {
-                let mut v = vec![0f32; dim];
-                rng.fill_gaussian_f32(&mut v);
-                v
-            })
-            .collect();
-        let queries: Vec<f32> = points[..nq * dim].to_vec();
-        let cands: Vec<Vec<&[f32]>> = (0..nq)
-            .map(|i| (0..48).map(|j| pool[(i + j) % 64].as_slice()).collect())
-            .collect();
-        let _ = exec.rerank_tiled(dim, &queries, &cands).unwrap();
-        let ns = time_ns(2, 10, || {
-            std::hint::black_box(exec.rerank_tiled(dim, &queries, &cands).unwrap());
-        });
-        table.row(vec![
-            "pjrt.rerank_batch".into(),
-            format!("{ns:.0}"),
-            "64 q x 48 cands, dim 128 (per-query GEMV, pre-opt)".into(),
-        ]);
+                // rerank: 64 queries x 48 candidates
+                let nq = 64;
+                let pool: Vec<Vec<f32>> = (0..64)
+                    .map(|_| {
+                        let mut v = vec![0f32; dim];
+                        rng.fill_gaussian_f32(&mut v);
+                        v
+                    })
+                    .collect();
+                let queries: Vec<f32> = points[..nq * dim].to_vec();
+                let cands: Vec<Vec<&[f32]>> = (0..nq)
+                    .map(|i| (0..48).map(|j| pool[(i + j) % 64].as_slice()).collect())
+                    .collect();
+                let _ = exec.rerank_tiled(dim, &queries, &cands).unwrap();
+                let ns = time_ns(2, 10, || {
+                    std::hint::black_box(exec.rerank_tiled(dim, &queries, &cands).unwrap());
+                });
+                record(
+                    &mut table,
+                    &mut json,
+                    "pjrt.rerank_batch",
+                    ns,
+                    "64 q x 48 cands, dim 128 (per-query GEMV, pre-opt)",
+                );
 
-        // Pooled distance matrix: the optimized serving-path re-rank.
-        let pool_flat: Vec<f32> = pool.iter().flatten().copied().collect();
-        let _ = exec.dist_matrix_tiled(dim, &queries, &pool_flat).unwrap();
-        let ns = time_ns(2, 20, || {
-            std::hint::black_box(exec.dist_matrix_tiled(dim, &queries, &pool_flat).unwrap());
-        });
-        table.row(vec![
-            "pjrt.dist_matrix".into(),
-            format!("{ns:.0}"),
-            "64 q x 64 pool, dim 128 (shared-pool GEMM, post-opt)".into(),
-        ]);
+                // Pooled distance matrix: the optimized serving-path re-rank.
+                let pool_flat: Vec<f32> = pool.iter().flatten().copied().collect();
+                let _ = exec.dist_matrix_tiled(dim, &queries, &pool_flat).unwrap();
+                let ns = time_ns(2, 20, || {
+                    std::hint::black_box(exec.dist_matrix_tiled(dim, &queries, &pool_flat).unwrap());
+                });
+                record(
+                    &mut table,
+                    &mut json,
+                    "pjrt.dist_matrix",
+                    ns,
+                    "64 q x 64 pool, dim 128 (shared-pool GEMM, post-opt)",
+                );
+            }
+            Err(e) => {
+                table.row(vec!["pjrt.*".into(), "skipped".into(), format!("executor: {e}")]);
+            }
+        }
     } else {
         table.row(vec!["pjrt.*".into(), "skipped".into(), "artifacts not built".into()]);
     }
 
     table.print();
+    dump_json(&json);
 }

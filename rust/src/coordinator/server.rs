@@ -156,12 +156,33 @@ impl SketchService {
     /// Batched ingest: routes the batch, hashes each shard's slice through
     /// the PJRT artifacts (ANN p-stable + KDE family) in one GEMM each, and
     /// ships precomputed slots so shard threads only touch tables/EHs.
-    /// Falls back to per-item native inserts without an executor.
+    /// Without an executor, each shard's slice ships as `InsertBatch`
+    /// commands (chunked to the front-door batch size) so the shard thread
+    /// hashes a whole chunk with one native batched kernel call instead of
+    /// a loop of singles.
     pub fn insert_batch(&mut self, batch: Vec<Vec<f32>>) -> usize {
         if self.executor.is_none() {
-            let mut ok = 0;
+            let mut per_shard: Vec<Vec<Vec<f32>>> = vec![Vec::new(); self.shards.len()];
             for x in batch {
-                ok += self.insert(x) as usize;
+                per_shard[self.router.route(&x)].push(x);
+            }
+            // Chunk so a shed under overload drops at most one kernel-batch
+            // worth of points, and queue_cap keeps its per-point meaning
+            // within a factor of the batch size.
+            const NATIVE_BATCH_ROWS: usize = 64;
+            let mut ok = 0;
+            for (s, mut pts) in per_shard.into_iter().enumerate() {
+                while !pts.is_empty() {
+                    let tail = pts.split_off(pts.len().min(NATIVE_BATCH_ROWS));
+                    let chunk = std::mem::replace(&mut pts, tail);
+                    let m = chunk.len();
+                    self.stats.inserts += m as u64;
+                    if self.shards[s].tx.offer(ShardCmd::InsertBatch(chunk)) {
+                        ok += m;
+                    } else {
+                        self.stats.shed += m as u64;
+                    }
+                }
             }
             return ok;
         }
@@ -465,6 +486,29 @@ mod tests {
         assert_eq!(st.inserts, 100);
         assert_eq!(st.stored_points, 100, "eta=0 stores all");
         svc.shutdown();
+    }
+
+    #[test]
+    fn native_insert_batch_matches_single_inserts() {
+        let mut rng = Rng::new(9);
+        let pts: Vec<Vec<f32>> = (0..120)
+            .map(|_| (0..8).map(|_| rng.gaussian_f32()).collect())
+            .collect();
+        let mut singles = SketchService::start(small_cfg()).unwrap();
+        for p in &pts {
+            singles.insert(p.clone());
+        }
+        singles.flush();
+        let mut batched = SketchService::start(small_cfg()).unwrap();
+        let ok = batched.insert_batch(pts.clone());
+        assert_eq!(ok, 120);
+        batched.flush();
+        let a = singles.query_batch(pts[..20].to_vec());
+        let b = batched.query_batch(pts[..20].to_vec());
+        assert_eq!(a, b, "batched ingest must build the same sketch state");
+        assert_eq!(batched.stats().stored_points, 120, "eta=0 stores all");
+        singles.shutdown();
+        batched.shutdown();
     }
 
     #[test]

@@ -42,6 +42,10 @@ pub struct KdeShardConfig {
 /// Commands a shard accepts.
 pub enum ShardCmd {
     Insert(Vec<f32>),
+    /// Batched native inserts: the shard hashes the whole batch for both
+    /// sketches with one GEMM-shaped kernel call each, instead of a loop
+    /// of per-point hashing (state-identical to a loop of `Insert`s).
+    InsertBatch(Vec<Vec<f32>>),
     /// Insert with precomputed raw ANN hash slots (PJRT bulk-load path).
     InsertWithSlots(Vec<f32>, Vec<i64>),
     /// Batched inserts with precomputed ANN and KDE raw slots — the fully
@@ -173,6 +177,12 @@ impl Shard {
                 self.kde.add(self.kde_family.as_ref(), &x);
                 self.stats.inserted += 1;
             }
+            ShardCmd::InsertBatch(batch) => {
+                self.stats.inserted += batch.len() as u64;
+                self.ann.insert_batch(&batch);
+                let flat: Vec<f32> = batch.iter().flatten().copied().collect();
+                self.kde.add_each(self.kde_family.as_ref(), &flat);
+            }
             ShardCmd::InsertWithSlots(x, slots) => {
                 // Sampler decision still applies; slots bypass only hashing.
                 if self.ann.sampler_keep() {
@@ -198,16 +208,17 @@ impl Shard {
                 let _ = reply.send(removed);
             }
             ShardCmd::AnnBatch(batch, reply) => {
-                let mut out = ShardAnnResult::default();
-                for q in batch.iter() {
-                    let (ans, st) = self.ann.query_with_stats(q);
-                    out.scanned += st.scanned;
-                    out.best.push(ans.map(|(id, dist)| AnnAnswer {
-                        shard: self.index,
-                        id,
-                        dist,
-                    }));
-                }
+                // One batched hashing kernel for the whole query batch.
+                let (answers, stats) = self.ann.query_batch_with_stats(&batch);
+                let out = ShardAnnResult {
+                    best: answers
+                        .into_iter()
+                        .map(|ans| {
+                            ans.map(|(id, dist)| AnnAnswer { shard: self.index, id, dist })
+                        })
+                        .collect(),
+                    scanned: stats.scanned,
+                };
                 let _ = reply.send(out);
             }
             ShardCmd::AnnCandidates(batch, reply) => {
@@ -229,8 +240,9 @@ impl Shard {
                 let _ = reply.send(out);
             }
             ShardCmd::KdeBatch(batch, reply) => {
-                let fam = self.kde_family.as_ref();
-                let sums: Vec<f64> = batch.iter().map(|q| self.kde.query(fam, q)).collect();
+                // Flatten once, hash the whole batch with one kernel call.
+                let flat: Vec<f32> = batch.iter().flatten().copied().collect();
+                let sums = self.kde.query_batch(self.kde_family.as_ref(), &flat);
                 let _ = reply.send(ShardKdeResult {
                     kernel_sums: sums,
                     population: self.kde.now().min(self.kde.window()),
@@ -304,6 +316,35 @@ mod tests {
         let ans = res.best[0].as_ref().expect("stored point must be found");
         assert!(ans.dist < 1e-5);
         assert_eq!(ans.shard, 0);
+    }
+
+    #[test]
+    fn insert_batch_cmd_matches_single_inserts() {
+        let mut singles = mk_shard();
+        let mut batched = mk_shard();
+        let mut rng = Rng::new(77);
+        let pts: Vec<Vec<f32>> = (0..60)
+            .map(|_| (0..8).map(|_| rng.gaussian_f32()).collect())
+            .collect();
+        for p in &pts {
+            singles.handle(ShardCmd::Insert(p.clone()));
+        }
+        batched.handle(ShardCmd::InsertBatch(pts.clone()));
+        let (tx, rx) = channel();
+        batched.handle(ShardCmd::Stats(tx));
+        assert_eq!(rx.recv().unwrap().inserted, 60);
+        // identical state => identical answers on both paths
+        let qb = Arc::new(pts[..10].to_vec());
+        let (tx_a, rx_a) = channel();
+        singles.handle(ShardCmd::AnnBatch(Arc::clone(&qb), tx_a));
+        let (tx_b, rx_b) = channel();
+        batched.handle(ShardCmd::AnnBatch(Arc::clone(&qb), tx_b));
+        assert_eq!(rx_a.recv().unwrap().best, rx_b.recv().unwrap().best);
+        let (tx_a, rx_a) = channel();
+        singles.handle(ShardCmd::KdeBatch(Arc::clone(&qb), tx_a));
+        let (tx_b, rx_b) = channel();
+        batched.handle(ShardCmd::KdeBatch(qb, tx_b));
+        assert_eq!(rx_a.recv().unwrap().kernel_sums, rx_b.recv().unwrap().kernel_sums);
     }
 
     #[test]

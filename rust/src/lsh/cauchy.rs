@@ -77,6 +77,17 @@ impl LshFamily for CauchyLsh {
         (((dot(row, x) + self.biases[j]) / self.w).floor()) as i64
     }
 
+    fn hash_range(&self, j0: usize, x: &[f32], out: &mut [i64]) {
+        self.hash_batch(j0, x, out);
+    }
+
+    fn hash_batch(&self, j0: usize, xs: &[f32], out: &mut [i64]) {
+        let (biases, w) = (&self.biases, self.w);
+        super::hash_batch_rows(&self.proj_rows, self.dim, j0, xs, out, |j, y| {
+            ((y + biases[j]) / w).floor() as i64
+        });
+    }
+
     /// `d` is L1 distance.
     fn collision_prob(&self, d: f64) -> f64 {
         Self::collision_prob_for(d, self.w as f64)

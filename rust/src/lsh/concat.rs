@@ -55,12 +55,44 @@ impl TableHasher {
         combine_slots(scratch)
     }
 
-    /// All L keys for `x` into `out`.
-    pub fn keys<F: LshFamily + ?Sized>(&self, fam: &F, x: &[f32], out: &mut Vec<u64>) {
-        let mut scratch = Vec::with_capacity(self.k);
+    /// All L keys for `x` into `out`. One batched-kernel pass over the full
+    /// [k·L, dim] projection block; `scratch` comes from the caller so the
+    /// hot insert/query paths never allocate.
+    pub fn keys<F: LshFamily + ?Sized>(
+        &self,
+        fam: &F,
+        x: &[f32],
+        out: &mut Vec<u64>,
+        scratch: &mut Vec<i64>,
+    ) {
+        scratch.clear();
+        scratch.resize(self.k * self.l, 0);
+        fam.hash_range(0, x, scratch);
+        self.keys_from_slots(scratch, out);
+    }
+
+    /// All L keys for each of the points in `xs` (row-major [n, dim]) via
+    /// one GEMM-shaped `hash_batch` call; `out` becomes [n, L] row-major.
+    pub fn keys_batch<F: LshFamily + ?Sized>(
+        &self,
+        fam: &F,
+        xs: &[f32],
+        out: &mut Vec<u64>,
+        scratch: &mut Vec<i64>,
+    ) {
+        let d = fam.dim();
+        debug_assert!(d > 0 && xs.len() % d == 0);
+        let n = xs.len() / d;
+        let h = self.k * self.l;
+        scratch.clear();
+        scratch.resize(n * h, 0);
+        fam.hash_batch(0, xs, scratch);
         out.clear();
-        for j in 0..self.l {
-            out.push(self.key(fam, j, x, &mut scratch));
+        out.reserve(n * self.l);
+        for row in scratch.chunks_exact(h) {
+            for j in 0..self.l {
+                out.push(combine_slots(&row[j * self.k..(j + 1) * self.k]));
+            }
         }
     }
 
@@ -137,6 +169,50 @@ impl BoundedHasher {
         self.map_tuple(scratch)
     }
 
+    /// All `rows` cell indices for `x` in one kernel pass over the full
+    /// [rows·p, dim] projection block (instead of `rows` strided `cell`
+    /// calls). `out` must have length `rows`.
+    pub fn cells<F: LshFamily + ?Sized>(
+        &self,
+        fam: &F,
+        x: &[f32],
+        out: &mut [usize],
+        scratch: &mut Vec<i64>,
+    ) {
+        debug_assert_eq!(out.len(), self.rows);
+        scratch.clear();
+        scratch.resize(self.rows * self.p, 0);
+        fam.hash_range(0, x, scratch);
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self.cell_from_slots(i, scratch);
+        }
+    }
+
+    /// Cell indices for a whole batch (xs row-major [n, dim]) via one
+    /// GEMM-shaped `hash_batch` call; `out` becomes [n, rows] row-major.
+    pub fn cells_batch<F: LshFamily + ?Sized>(
+        &self,
+        fam: &F,
+        xs: &[f32],
+        out: &mut Vec<usize>,
+        scratch: &mut Vec<i64>,
+    ) {
+        let d = fam.dim();
+        debug_assert!(d > 0 && xs.len() % d == 0);
+        let n = xs.len() / d;
+        let h = self.rows * self.p;
+        scratch.clear();
+        scratch.resize(n * h, 0);
+        fam.hash_batch(0, xs, scratch);
+        out.clear();
+        out.reserve(n * self.rows);
+        for row in scratch.chunks_exact(h) {
+            for i in 0..self.rows {
+                out.push(self.cell_from_slots(i, row));
+            }
+        }
+    }
+
     /// Cell index from precomputed raw slots (PJRT artifact path).
     pub fn cell_from_slots(&self, row: usize, slots: &[i64]) -> usize {
         self.map_tuple(&slots[row * self.p..(row + 1) * self.p])
@@ -168,8 +244,9 @@ mod tests {
         let x: Vec<f32> = (0..8).map(|i| i as f32 * 0.3).collect();
         let mut a = Vec::new();
         let mut b = Vec::new();
-        th.keys(&fam, &x, &mut a);
-        th.keys(&fam, &x, &mut b);
+        let mut scratch = Vec::new();
+        th.keys(&fam, &x, &mut a, &mut scratch);
+        th.keys(&fam, &x, &mut b, &mut scratch);
         assert_eq!(a, b);
         assert_eq!(a.len(), 6);
         let distinct: std::collections::HashSet<_> = a.iter().collect();
@@ -183,7 +260,8 @@ mod tests {
         let mut rng = Rng::new(3);
         let x: Vec<f32> = (0..10).map(|_| rng.gaussian_f32()).collect();
         let mut native = Vec::new();
-        th.keys(&fam, &x, &mut native);
+        let mut scratch = Vec::new();
+        th.keys(&fam, &x, &mut native, &mut scratch);
         // emulate the artifact: all raw slots precomputed in a row
         let mut slots = vec![0i64; 15];
         fam.hash_range(0, &x, &mut slots);
@@ -233,6 +311,44 @@ mod tests {
     }
 
     #[test]
+    fn keys_batch_matches_per_point_keys() {
+        let fam = PStableLsh::new(9, 3 * 7, 2.0, &mut Rng::new(40));
+        let th = TableHasher::new(3, 7);
+        let mut rng = Rng::new(41);
+        let mut xs = vec![0.0f32; 11 * 9];
+        rng.fill_gaussian_f32(&mut xs);
+        let (mut batch, mut scratch) = (Vec::new(), Vec::new());
+        th.keys_batch(&fam, &xs, &mut batch, &mut scratch);
+        assert_eq!(batch.len(), 11 * 7);
+        let mut single = Vec::new();
+        for (pi, x) in xs.chunks_exact(9).enumerate() {
+            th.keys(&fam, x, &mut single, &mut scratch);
+            assert_eq!(&batch[pi * 7..(pi + 1) * 7], single.as_slice(), "point {pi}");
+        }
+    }
+
+    #[test]
+    fn cells_and_cells_batch_match_per_row_cell() {
+        let fam = PStableLsh::new(12, 3 * 6, 1.0, &mut Rng::new(42));
+        let bh = BoundedHasher::new(3, 6, 32);
+        let mut rng = Rng::new(43);
+        let mut xs = vec![0.0f32; 5 * 12];
+        rng.fill_gaussian_f32(&mut xs);
+        let mut scratch = Vec::new();
+        let (mut batch, mut bscratch) = (Vec::new(), Vec::new());
+        bh.cells_batch(&fam, &xs, &mut batch, &mut bscratch);
+        assert_eq!(batch.len(), 5 * 6);
+        let mut one = vec![0usize; 6];
+        for (pi, x) in xs.chunks_exact(12).enumerate() {
+            bh.cells(&fam, x, &mut one, &mut bscratch);
+            for i in 0..6 {
+                assert_eq!(bh.cell(&fam, i, x, &mut scratch), one[i]);
+                assert_eq!(batch[pi * 6 + i], one[i]);
+            }
+        }
+    }
+
+    #[test]
     fn bounded_cell_from_slots_matches_native() {
         let fam = PStableLsh::new(6, 2 * 4, 1.5, &mut Rng::new(6));
         let bh = BoundedHasher::new(2, 4, 32);
@@ -256,9 +372,10 @@ mod tests {
         let near: Vec<f32> = x.iter().map(|v| v + 0.05).collect();
         let far: Vec<f32> = x.iter().map(|v| v + 10.0).collect();
         let (mut kx, mut kn, mut kf) = (Vec::new(), Vec::new(), Vec::new());
-        th.keys(&fam, &x, &mut kx);
-        th.keys(&fam, &near, &mut kn);
-        th.keys(&fam, &far, &mut kf);
+        let mut scratch = Vec::new();
+        th.keys(&fam, &x, &mut kx, &mut scratch);
+        th.keys(&fam, &near, &mut kn, &mut scratch);
+        th.keys(&fam, &far, &mut kf, &mut scratch);
         let near_matches = kx.iter().zip(&kn).filter(|(a, b)| a == b).count();
         let far_matches = kx.iter().zip(&kf).filter(|(a, b)| a == b).count();
         assert!(near_matches > far_matches, "near={near_matches} far={far_matches}");

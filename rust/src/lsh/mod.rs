@@ -33,6 +33,29 @@ pub trait LshFamily: Send + Sync {
             *o = self.hash_one(j0 + i, x);
         }
     }
+    /// Batched hashing kernel: raw slots of functions [j0, j0+m) for each
+    /// of the n points in `xs` (row-major [n, dim]), written to `out`
+    /// (row-major [n, m], so m = out.len() / n). This is the GEMM shape of
+    /// the sketch update (RACE's "one matrix–vector product" view): every
+    /// implementor overrides it with a single blocked pass over the
+    /// projection matrix instead of n·m strided dots, and the output must
+    /// be bit-for-bit identical to the `hash_one` double loop.
+    fn hash_batch(&self, j0: usize, xs: &[f32], out: &mut [i64]) {
+        let d = self.dim();
+        debug_assert!(d > 0 && xs.len() % d == 0);
+        let n = xs.len() / d;
+        if n == 0 {
+            return;
+        }
+        debug_assert_eq!(out.len() % n, 0);
+        let m = out.len() / n;
+        if m == 0 {
+            return;
+        }
+        for (x, o) in xs.chunks_exact(d).zip(out.chunks_exact_mut(m)) {
+            self.hash_range(j0, x, o);
+        }
+    }
     /// Single-function collision probability at distance/similarity `d`
     /// (metric interpretation is family-specific: L2 distance for p-stable,
     /// cosine similarity for SRP).
@@ -47,12 +70,76 @@ pub trait LshFamily: Send + Sync {
     }
 }
 
+/// Shared blocked GEMV/GEMM core behind every family's `hash_batch`
+/// override: one pass over the row-major projection block
+/// `proj_rows[j0*d .. (j0+m)*d]`, row-blocked so a block of projection
+/// rows stays cache-hot across all n points, with the 8-wide unrolled
+/// [`crate::util::dot`] as the inner loop. `map(j, y)` converts function
+/// j's raw projection y into its integer slot (sign for SRP, floored
+/// bucket for the p-stable families) — monomorphized and inlined, so the
+/// whole kernel autovectorizes.
+#[inline]
+pub(crate) fn hash_batch_rows<M: Fn(usize, f32) -> i64>(
+    proj_rows: &[f32],
+    d: usize,
+    j0: usize,
+    xs: &[f32],
+    out: &mut [i64],
+    map: M,
+) {
+    debug_assert!(d > 0 && xs.len() % d == 0);
+    let n = xs.len() / d;
+    if n == 0 || out.is_empty() {
+        return;
+    }
+    debug_assert_eq!(out.len() % n, 0);
+    let m = out.len() / n;
+    debug_assert!((j0 + m) * d <= proj_rows.len());
+    let rows = &proj_rows[j0 * d..(j0 + m) * d];
+    // 16 rows of f32 at typical dims fit comfortably in L1 alongside x.
+    const ROW_BLOCK: usize = 16;
+    let mut j = 0;
+    while j < m {
+        let jb = ROW_BLOCK.min(m - j);
+        let blk = &rows[j * d..(j + jb) * d];
+        for (pi, x) in xs.chunks_exact(d).enumerate() {
+            let orow = &mut out[pi * m + j..pi * m + j + jb];
+            for (jj, row) in blk.chunks_exact(d).enumerate() {
+                orow[jj] = map(j0 + j + jj, crate::util::dot(row, x));
+            }
+        }
+        j += jb;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::pstable::PStableLsh;
     use super::srp::SrpLsh;
     use super::LshFamily;
     use crate::util::rng::Rng;
+
+    /// The batched kernel must agree bit-for-bit with the scalar loop,
+    /// including at sub-ranges (j0 > 0) and across the row-block boundary.
+    #[test]
+    fn hash_batch_matches_hash_one_grid() {
+        let dim = 19; // off the 8-lane grid on purpose
+        let n_funcs = 40; // crosses the 16-row block boundary
+        let fam = PStableLsh::new(dim, n_funcs, 3.0, &mut Rng::new(31));
+        let mut rng = Rng::new(32);
+        for &(n, j0, m) in &[(1usize, 0usize, 40usize), (5, 0, 40), (7, 8, 17), (3, 39, 1)] {
+            let mut xs = vec![0.0f32; n * dim];
+            rng.fill_gaussian_f32(&mut xs);
+            let mut got = vec![0i64; n * m];
+            fam.hash_batch(j0, &xs, &mut got);
+            for pi in 0..n {
+                for jj in 0..m {
+                    let want = fam.hash_one(j0 + jj, &xs[pi * dim..(pi + 1) * dim]);
+                    assert_eq!(got[pi * m + jj], want, "n={n} j0={j0} pi={pi} jj={jj}");
+                }
+            }
+        }
+    }
 
     /// Empirical single-function collision rate matches the analytic model —
     /// the property every theorem in §3/§4 leans on.

@@ -52,6 +52,14 @@ impl LshFamily for SrpLsh {
         (dot(self.row(j), x) >= 0.0) as i64
     }
 
+    fn hash_range(&self, j0: usize, x: &[f32], out: &mut [i64]) {
+        self.hash_batch(j0, x, out);
+    }
+
+    fn hash_batch(&self, j0: usize, xs: &[f32], out: &mut [i64]) {
+        super::hash_batch_rows(&self.proj_rows, self.dim, j0, xs, out, |_, y| (y >= 0.0) as i64);
+    }
+
     /// `d` is cosine similarity in [-1, 1].
     fn collision_prob(&self, d: f64) -> f64 {
         1.0 - d.clamp(-1.0, 1.0).acos() / std::f64::consts::PI

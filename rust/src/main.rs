@@ -275,10 +275,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let mut svc = SketchService::start(svc_cfg)?;
     let mut ingest = Throughput::new();
+    // Front-door batching (§3.3): the Batcher accumulates the stream and
+    // every flushed batch is processed as one batched-kernel call per
+    // shard (`insert_batch`) instead of a loop of singles.
+    let mut ingest_batcher: sublinear_sketch::coordinator::Batcher<Vec<f32>> =
+        sublinear_sketch::coordinator::Batcher::new(sublinear_sketch::coordinator::BatchPolicy {
+            max_batch: batch.max(1),
+            max_wait: std::time::Duration::from_millis(2),
+        });
     for p in &stream {
-        svc.insert(p.clone());
+        if let Some(full) = ingest_batcher.push(p.clone()) {
+            svc.insert_batch(full);
+        } else if ingest_batcher.deadline_due() {
+            let due = ingest_batcher.flush();
+            svc.insert_batch(due);
+        }
         ingest.add(1);
     }
+    svc.insert_batch(ingest_batcher.flush());
     svc.flush();
     println!("[serve] ingest {:.0} pts/s", ingest.per_second());
 

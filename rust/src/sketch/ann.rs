@@ -17,6 +17,7 @@
 use crate::lsh::concat::TableHasher;
 use crate::lsh::params::{AnnParams, Sensitivity};
 use crate::lsh::pstable::PStableLsh;
+use crate::lsh::LshFamily;
 use crate::sketch::sampler::BernoulliSampler;
 use crate::storage::{TableSet, VecStore};
 use crate::util::l2_sq;
@@ -68,8 +69,15 @@ pub struct SAnn {
     sampler: BernoulliSampler,
     /// Scratch reused across inserts/queries (hot path: no allocation).
     key_scratch: Vec<u64>,
-    seen_scratch: std::collections::HashSet<u32>,
+    slot_scratch: Vec<i64>,
+    flat_scratch: Vec<f32>,
     cand_scratch: Vec<u32>,
+    /// Generation-stamped seen-bitmap keyed by arena id: `seen_stamp[id] ==
+    /// seen_gen` means id was already collected this query. Replaces the
+    /// per-query `HashSet<u32>` — dedupe becomes one indexed load/store
+    /// with no hashing and no rehash growth on the query path.
+    seen_stamp: Vec<u32>,
+    seen_gen: u32,
 }
 
 impl SAnn {
@@ -91,8 +99,11 @@ impl SAnn {
             store,
             sampler,
             key_scratch: Vec::new(),
-            seen_scratch: Default::default(),
+            slot_scratch: Vec::new(),
+            flat_scratch: Vec::new(),
             cand_scratch: Vec::new(),
+            seen_stamp: Vec::new(),
+            seen_gen: 0,
         }
     }
 
@@ -136,9 +147,42 @@ impl SAnn {
     pub fn insert_retained(&mut self, x: &[f32]) -> u32 {
         let id = self.store.push(x);
         let (hasher, family) = (&self.hasher, &self.family);
-        hasher.keys(family, x, &mut self.key_scratch);
+        hasher.keys(family, x, &mut self.key_scratch, &mut self.slot_scratch);
         self.tables.insert(&self.key_scratch, id);
         id
+    }
+
+    /// Batched stream offer: sampler decisions are drawn in stream order,
+    /// then every retained point hashes through one GEMM-shaped kernel
+    /// call. State-identical to a loop of `insert`.
+    pub fn insert_batch(&mut self, xs: &[Vec<f32>]) -> Vec<Option<u32>> {
+        let mut out = vec![None; xs.len()];
+        let mut kept: Vec<usize> = Vec::with_capacity(xs.len());
+        for i in 0..xs.len() {
+            if self.sampler.keep() {
+                kept.push(i);
+            }
+        }
+        if kept.is_empty() {
+            return out;
+        }
+        let mut flat = std::mem::take(&mut self.flat_scratch);
+        flat.clear();
+        for &i in &kept {
+            debug_assert_eq!(xs[i].len(), self.cfg.dim);
+            flat.extend_from_slice(&xs[i]);
+        }
+        let h = self.params.k * self.params.l;
+        let mut slots = std::mem::take(&mut self.slot_scratch);
+        slots.clear();
+        slots.resize(kept.len() * h, 0);
+        self.family.hash_batch(0, &flat, &mut slots);
+        for (bi, &i) in kept.iter().enumerate() {
+            out[i] = Some(self.insert_retained_slots(&xs[i], &slots[bi * h..(bi + 1) * h]));
+        }
+        self.slot_scratch = slots;
+        self.flat_scratch = flat;
+        out
     }
 
     /// Insert with externally precomputed raw hash slots (PJRT batch path;
@@ -154,7 +198,7 @@ impl SAnn {
     /// the sampler may have dropped it). Returns whether a copy was removed.
     pub fn delete(&mut self, x: &[f32]) -> bool {
         let (hasher, family) = (&self.hasher, &self.family);
-        hasher.keys(family, x, &mut self.key_scratch);
+        hasher.keys(family, x, &mut self.key_scratch, &mut self.slot_scratch);
         // Find a live stored copy via table 0's bucket.
         let bucket = self.tables.probe(0, self.key_scratch[0]);
         let mut found: Option<u32> = None;
@@ -200,6 +244,60 @@ impl SAnn {
         (ans, stats)
     }
 
+    /// Batched Algorithm 1 query: hash all queries' k·L raw functions with
+    /// one GEMM-shaped kernel call, then probe/re-rank per query. Returns
+    /// exactly the same answers as N sequential `query` calls.
+    pub fn query_batch(&mut self, qs: &[Vec<f32>]) -> Vec<Option<(u32, f32)>> {
+        let (answers, _) = self.query_batch_with_stats(qs);
+        answers
+    }
+
+    /// Batched query returning aggregated diagnostics across the batch.
+    pub fn query_batch_with_stats(
+        &mut self,
+        qs: &[Vec<f32>],
+    ) -> (Vec<Option<(u32, f32)>>, QueryStats) {
+        let mut agg = QueryStats::default();
+        if qs.is_empty() {
+            return (Vec::new(), agg);
+        }
+        let l = self.params.l;
+        let mut flat = std::mem::take(&mut self.flat_scratch);
+        flat.clear();
+        for q in qs {
+            debug_assert_eq!(q.len(), self.cfg.dim);
+            flat.extend_from_slice(q);
+        }
+        let mut keys = std::mem::take(&mut self.key_scratch);
+        {
+            let (hasher, family) = (&self.hasher, &self.family);
+            hasher.keys_batch(family, &flat, &mut keys, &mut self.slot_scratch);
+        }
+        let r2_sq = (self.cfg.c * self.cfg.r) as f32 * (self.cfg.c * self.cfg.r) as f32;
+        let mut out = Vec::with_capacity(qs.len());
+        for (qi, q) in qs.iter().enumerate() {
+            let mut stats = QueryStats::default();
+            self.probe_candidates(&keys[qi * l..(qi + 1) * l], &mut stats);
+            let mut best: Option<(u32, f32)> = None;
+            for &id in &self.cand_scratch {
+                let d = l2_sq(self.store.get(id), q);
+                if best.map_or(true, |(_, bd)| d < bd) {
+                    best = Some((id, d));
+                }
+            }
+            agg.scanned += stats.scanned;
+            agg.candidates += self.cand_scratch.len();
+            agg.tables_probed = agg.tables_probed.max(stats.tables_probed);
+            out.push(match best {
+                Some((id, d_sq)) if d_sq <= r2_sq => Some((id, d_sq.sqrt())),
+                _ => None,
+            });
+        }
+        self.key_scratch = keys;
+        self.flat_scratch = flat;
+        (out, agg)
+    }
+
     /// Top-k candidates by true distance (for recall@k metrics); returns
     /// (id, distance) sorted ascending, at most k entries, from the same
     /// 3L-capped candidate set Algorithm 1 scans.
@@ -225,43 +323,47 @@ impl SAnn {
     }
 
     /// Candidates from PRECOMPUTED table keys (len = L) — the batched
-    /// serving path hashes whole query batches through the PJRT
-    /// `pstable_hash` artifact and probes with the resulting keys, so the
-    /// shard thread never touches the projection matrix.
+    /// serving path hashes whole query batches through the batched kernel
+    /// (or the PJRT `pstable_hash` artifact) and probes with the resulting
+    /// keys, so the probe loop never touches the projection matrix.
     pub fn candidates_by_keys(&mut self, keys: &[u64]) -> &[u32] {
         debug_assert_eq!(keys.len(), self.params.l);
-        let cap = self.params.candidate_cap();
-        self.seen_scratch.clear();
-        self.cand_scratch.clear();
-        'outer: for (j, &key) in keys.iter().enumerate() {
-            for &id in self.tables.probe(j, key) {
-                if self.store.is_live(id) && self.seen_scratch.insert(id) {
-                    self.cand_scratch.push(id);
-                }
-                if self.cand_scratch.len() >= cap {
-                    break 'outer;
-                }
-            }
-        }
+        let mut stats = QueryStats::default();
+        self.probe_candidates(keys, &mut stats);
         &self.cand_scratch
     }
 
-    fn collect_candidates(&mut self, q: &[f32], stats: &mut QueryStats) {
+    /// Start a fresh seen-generation; stamps from earlier queries become
+    /// stale automatically (one u32 compare instead of a hash probe).
+    fn reset_seen(&mut self) {
+        self.seen_gen = self.seen_gen.wrapping_add(1);
+        if self.seen_gen == 0 {
+            // u32 wrap: old stamps could alias the restarted generation.
+            self.seen_stamp.clear();
+            self.seen_gen = 1;
+        }
+        self.seen_stamp.resize(self.store.len(), 0);
+    }
+
+    /// Probe tables j = 1…L with precomputed keys, collecting deduped live
+    /// candidates under the 3L cap (Algorithm 1's budget) into
+    /// `cand_scratch`. Allocation-free: dedupe is the generation-stamped
+    /// seen-bitmap keyed by arena id.
+    fn probe_candidates(&mut self, keys: &[u64], stats: &mut QueryStats) {
         let cap = self.params.candidate_cap();
-        let (hasher, family) = (&self.hasher, &self.family);
-        self.seen_scratch.clear();
+        self.reset_seen();
         self.cand_scratch.clear();
-        // Lazily hash one table at a time (Algorithm 1 probes g_j(q) in
-        // sequence and stops at 3L candidates): when early buckets fill the
-        // budget, the remaining (L - j)·k hash evaluations are never paid.
-        let mut slot_scratch: Vec<i64> = Vec::with_capacity(self.params.k);
-        'outer: for j in 0..self.params.l {
+        let gen = self.seen_gen;
+        'outer: for (j, &key) in keys.iter().enumerate() {
             stats.tables_probed = j + 1;
-            let key = hasher.key(family, j, q, &mut slot_scratch);
             for &id in self.tables.probe(j, key) {
                 stats.scanned += 1;
-                if self.store.is_live(id) && self.seen_scratch.insert(id) {
-                    self.cand_scratch.push(id);
+                if self.store.is_live(id) {
+                    let stamp = &mut self.seen_stamp[id as usize];
+                    if *stamp != gen {
+                        *stamp = gen;
+                        self.cand_scratch.push(id);
+                    }
                 }
                 // Algorithm 1: stop once 3L candidates are gathered.
                 if self.cand_scratch.len() >= cap {
@@ -269,6 +371,17 @@ impl SAnn {
                 }
             }
         }
+    }
+
+    fn collect_candidates(&mut self, q: &[f32], stats: &mut QueryStats) {
+        // One blocked kernel pass over the full [k·L, dim] projection block
+        // computes every table key (instead of k·L separate strided dots),
+        // then the probe loop walks buckets with zero further hashing.
+        let mut keys = std::mem::take(&mut self.key_scratch);
+        let (hasher, family) = (&self.hasher, &self.family);
+        hasher.keys(family, q, &mut keys, &mut self.slot_scratch);
+        self.probe_candidates(&keys, stats);
+        self.key_scratch = keys;
     }
 
     /// Sketch memory: stored vectors + bucket tables (+ fixed overhead).
@@ -457,6 +570,59 @@ mod tests {
         for _ in 0..20 {
             let q = random_point(&mut rng, 6, 1.0);
             assert_eq!(a.query(&q), b.query(&q));
+        }
+    }
+
+    #[test]
+    fn insert_batch_matches_sequential_inserts() {
+        // Same seed -> same sampler stream, so a batched insert must build
+        // the exact same sketch as the sequential loop.
+        let mut a = SAnn::new(cfg(1000, 0.4, 8, 21));
+        let mut b = SAnn::new(cfg(1000, 0.4, 8, 21));
+        let mut rng = Rng::new(22);
+        let pts: Vec<Vec<f32>> = (0..120).map(|_| random_point(&mut rng, 8, 2.0)).collect();
+        let seq: Vec<Option<u32>> = pts.iter().map(|p| a.insert(p)).collect();
+        let bat = b.insert_batch(&pts);
+        assert_eq!(seq, bat);
+        assert_eq!(a.stored(), b.stored());
+        for _ in 0..30 {
+            let q = random_point(&mut rng, 8, 2.0);
+            assert_eq!(a.query(&q), b.query(&q));
+        }
+    }
+
+    #[test]
+    fn query_batch_matches_sequential_queries() {
+        let mut ann = SAnn::new(cfg(1000, 0.0, 8, 23));
+        let mut rng = Rng::new(24);
+        for _ in 0..200 {
+            ann.insert(&random_point(&mut rng, 8, 2.0));
+        }
+        let qs: Vec<Vec<f32>> = (0..40).map(|_| random_point(&mut rng, 8, 2.0)).collect();
+        let seq: Vec<_> = qs.iter().map(|q| ann.query(q)).collect();
+        let bat = ann.query_batch(&qs);
+        assert_eq!(seq, bat);
+        assert!(ann.query_batch(&[]).is_empty());
+    }
+
+    #[test]
+    fn seen_bitmap_survives_interleaved_inserts_and_queries() {
+        // Inserts grow the arena between queries; the stamp vector must
+        // track it and never double-count or panic.
+        let mut ann = SAnn::new(cfg(1000, 0.0, 4, 25));
+        let mut rng = Rng::new(26);
+        for round in 0..8 {
+            for _ in 0..40 {
+                let p: Vec<f32> = (0..4).map(|_| rng.gaussian_f32() * 0.01).collect();
+                ann.insert(&p);
+            }
+            let q = vec![0.0f32; 4];
+            let (ans, stats) = ann.query_with_stats(&q);
+            assert!(ans.is_some(), "round {round}");
+            assert!(stats.candidates <= ann.params().candidate_cap());
+            let cands = ann.candidates(&q).to_vec();
+            let dedup: std::collections::HashSet<_> = cands.iter().collect();
+            assert_eq!(dedup.len(), cands.len(), "no duplicate candidates");
         }
     }
 

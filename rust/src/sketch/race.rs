@@ -43,7 +43,12 @@ pub struct Race {
     hasher: BoundedHasher,
     /// Net insertions (for density normalization).
     population: i64,
+    /// Raw-slot scratch reused across updates/queries (no per-op alloc).
     scratch: Vec<i64>,
+    /// Cell-index scratch for the single-point kernel path.
+    cells_scratch: Vec<usize>,
+    /// Per-row count scratch for the query read path.
+    counts_scratch: Vec<f64>,
 }
 
 impl Race {
@@ -66,6 +71,8 @@ impl Race {
             hasher,
             population: 0,
             scratch: Vec::new(),
+            cells_scratch: Vec::new(),
+            counts_scratch: Vec::new(),
         }
     }
 
@@ -90,12 +97,17 @@ impl Race {
         self.population
     }
 
-    /// Insert `x` (turnstile: `delta = -1` deletes).
+    /// Insert `x` (turnstile: `delta = -1` deletes). All R·p raw hashes run
+    /// as one blocked kernel pass over the projection matrix (the RACE
+    /// update IS a matrix–vector product) instead of R strided `cell` calls.
     pub fn update<F: LshFamily + ?Sized>(&mut self, fam: &F, x: &[f32], delta: i64) {
-        for i in 0..self.rows.len() {
-            let cell = self.hasher.cell(fam, i, x, &mut self.scratch);
-            self.rows[i].add(cell, delta);
+        let mut cells = std::mem::take(&mut self.cells_scratch);
+        cells.resize(self.rows.len(), 0);
+        self.hasher.cells(fam, x, &mut cells, &mut self.scratch);
+        for (row, &cell) in self.rows.iter_mut().zip(&cells) {
+            row.add(cell, delta);
         }
+        self.cells_scratch = cells;
         self.population += delta;
     }
 
@@ -107,6 +119,35 @@ impl Race {
         self.update(fam, x, -1);
     }
 
+    /// Batched turnstile update: hash every point of `xs` (row-major
+    /// [n, dim]) through one GEMM-shaped kernel call, then scatter the
+    /// counter deltas. Identical end state to n sequential `update`s.
+    pub fn update_batch<F: LshFamily + ?Sized>(&mut self, fam: &F, xs: &[f32], delta: i64) {
+        let d = fam.dim();
+        debug_assert!(d > 0 && xs.len() % d == 0);
+        let n = xs.len() / d;
+        if n == 0 {
+            return;
+        }
+        let rows = self.rows.len();
+        let mut cells = std::mem::take(&mut self.cells_scratch);
+        let mut slots = std::mem::take(&mut self.scratch);
+        self.hasher.cells_batch(fam, xs, &mut cells, &mut slots);
+        for row_cells in cells.chunks_exact(rows) {
+            for (row, &cell) in self.rows.iter_mut().zip(row_cells) {
+                row.add(cell, delta);
+            }
+        }
+        self.scratch = slots;
+        self.cells_scratch = cells;
+        self.population += delta * n as i64;
+    }
+
+    /// Batched insert (`update_batch` with delta = +1).
+    pub fn add_batch<F: LshFamily + ?Sized>(&mut self, fam: &F, xs: &[f32]) {
+        self.update_batch(fam, xs, 1);
+    }
+
     /// Update from precomputed raw slots (PJRT batch path; layout `\[rows*p\]`).
     pub fn update_slots(&mut self, slots: &[i64], delta: i64) {
         for i in 0..self.rows.len() {
@@ -116,26 +157,74 @@ impl Race {
         self.population += delta;
     }
 
-    /// Per-row counts at the query's cells.
+    /// Per-row counts at the query's cells, written into caller storage —
+    /// the allocation-free RACE read path (`out.len()` must equal R). One
+    /// kernel pass hashes all R·p functions.
+    pub fn row_counts_into<F: LshFamily + ?Sized>(&mut self, fam: &F, q: &[f32], out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.rows.len());
+        let mut cells = std::mem::take(&mut self.cells_scratch);
+        cells.resize(self.rows.len(), 0);
+        self.hasher.cells(fam, q, &mut cells, &mut self.scratch);
+        for ((o, &cell), row) in out.iter_mut().zip(&cells).zip(&self.rows) {
+            *o = row.get(cell) as f64;
+        }
+        self.cells_scratch = cells;
+    }
+
+    /// Per-row counts at the query's cells (allocating convenience).
     pub fn row_counts<F: LshFamily + ?Sized>(&mut self, fam: &F, q: &[f32]) -> Vec<f64> {
-        (0..self.rows.len())
-            .map(|i| {
-                let cell = self.hasher.cell(fam, i, q, &mut self.scratch);
-                self.rows[i].get(cell) as f64
-            })
-            .collect()
+        let mut out = vec![0.0; self.rows.len()];
+        self.row_counts_into(fam, q, &mut out);
+        out
     }
 
     /// Mean estimator (1/R)Σ A[i, h_i(q)] — the un-normalized kernel sum.
     pub fn query<F: LshFamily + ?Sized>(&mut self, fam: &F, q: &[f32]) -> f64 {
-        let counts = self.row_counts(fam, q);
-        stats::mean(&counts)
+        let mut counts = std::mem::take(&mut self.counts_scratch);
+        counts.resize(self.rows.len(), 0.0);
+        self.row_counts_into(fam, q, &mut counts);
+        let est = stats::mean(&counts);
+        self.counts_scratch = counts;
+        est
     }
 
     /// Median-of-means estimator (the robust aggregation CS20 uses).
     pub fn query_mom<F: LshFamily + ?Sized>(&mut self, fam: &F, q: &[f32], groups: usize) -> f64 {
-        let counts = self.row_counts(fam, q);
-        stats::median_of_means(&counts, groups)
+        let mut counts = std::mem::take(&mut self.counts_scratch);
+        counts.resize(self.rows.len(), 0.0);
+        self.row_counts_into(fam, q, &mut counts);
+        let est = stats::median_of_means(&counts, groups);
+        self.counts_scratch = counts;
+        est
+    }
+
+    /// Batched mean estimator: hash all queries (row-major [n, dim]) with
+    /// one GEMM-shaped kernel call, then read each query's R cells.
+    /// Identical values to n sequential `query` calls.
+    pub fn query_batch<F: LshFamily + ?Sized>(&mut self, fam: &F, qs: &[f32]) -> Vec<f64> {
+        let d = fam.dim();
+        debug_assert!(d > 0 && qs.len() % d == 0);
+        let n = qs.len() / d;
+        if n == 0 {
+            return Vec::new();
+        }
+        let rows = self.rows.len();
+        let mut cells = std::mem::take(&mut self.cells_scratch);
+        let mut slots = std::mem::take(&mut self.scratch);
+        self.hasher.cells_batch(fam, qs, &mut cells, &mut slots);
+        let mut counts = std::mem::take(&mut self.counts_scratch);
+        counts.resize(rows, 0.0);
+        let mut out = Vec::with_capacity(n);
+        for row_cells in cells.chunks_exact(rows) {
+            for (i, c) in counts.iter_mut().enumerate() {
+                *c = self.rows[i].get(row_cells[i]) as f64;
+            }
+            out.push(stats::mean(&counts));
+        }
+        self.counts_scratch = counts;
+        self.scratch = slots;
+        self.cells_scratch = cells;
+        out
     }
 
     /// Rehash-debiased estimator: under `CellMap::Rehash`, distinct tuples
@@ -277,6 +366,47 @@ mod tests {
         }
         let q: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
         assert_eq!(a.query(&fam, &q), b.query(&fam, &q));
+    }
+
+    #[test]
+    fn batch_paths_match_sequential() {
+        let dim = 8;
+        let (rows, p) = (16, 2);
+        let fam = SrpLsh::new(dim, rows * p, &mut Rng::new(50));
+        let mut seq = Race::new(rows, 32, p);
+        let mut bat = Race::new(rows, 32, p);
+        let mut rng = Rng::new(51);
+        let pts = random_points(&mut rng, 40, dim);
+        let flat: Vec<f32> = pts.iter().flatten().copied().collect();
+        for x in &pts {
+            seq.add(&fam, x);
+        }
+        bat.add_batch(&fam, &flat);
+        assert_eq!(seq.population(), bat.population());
+        let qs = random_points(&mut rng, 7, dim);
+        let qflat: Vec<f32> = qs.iter().flatten().copied().collect();
+        let batch_est = bat.query_batch(&fam, &qflat);
+        for (q, &be) in qs.iter().zip(&batch_est) {
+            assert_eq!(seq.query(&fam, q), be);
+            assert_eq!(bat.query(&fam, q), be);
+        }
+    }
+
+    #[test]
+    fn row_counts_into_matches_allocating_variant() {
+        let dim = 6;
+        let (rows, p) = (8, 2);
+        let fam = SrpLsh::new(dim, rows * p, &mut Rng::new(52));
+        let mut race = Race::new_srp(rows, p);
+        let mut rng = Rng::new(53);
+        for x in random_points(&mut rng, 25, dim) {
+            race.add(&fam, &x);
+        }
+        let q: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+        let alloc = race.row_counts(&fam, &q);
+        let mut into = vec![0.0; rows];
+        race.row_counts_into(&fam, &q, &mut into);
+        assert_eq!(alloc, into);
     }
 
     #[test]

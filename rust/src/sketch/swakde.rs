@@ -25,7 +25,14 @@ pub struct SwAkde {
     window: u64,
     /// Current stream time (monotone).
     now: u64,
+    /// Raw-slot scratch reused across updates/queries (no per-op alloc).
     scratch: Vec<i64>,
+    /// Cell-index scratch for the single-point kernel path.
+    cells_scratch: Vec<usize>,
+    /// Per-row estimate scratch for the query read path.
+    est_scratch: Vec<f64>,
+    /// Flattened-batch scratch for `add_batch` over non-contiguous points.
+    flat_scratch: Vec<f32>,
 }
 
 impl SwAkde {
@@ -47,6 +54,9 @@ impl SwAkde {
             window,
             now: 0,
             scratch: Vec::new(),
+            cells_scratch: Vec::new(),
+            est_scratch: Vec::new(),
+            flat_scratch: Vec::new(),
         }
     }
 
@@ -87,39 +97,77 @@ impl SwAkde {
             .get_or_insert_with(|| Box::new(ExpHistogram::new(eps, window)))
     }
 
-    /// Ingest one stream element at the next time step.
+    /// Ingest one stream element at the next time step. All R·p raw hashes
+    /// run as one blocked kernel pass over the projection matrix.
     pub fn add<F: LshFamily + ?Sized>(&mut self, fam: &F, x: &[f32]) {
         self.now += 1;
         let t = self.now;
-        for i in 0..self.hasher.rows {
-            let mut scratch = std::mem::take(&mut self.scratch);
-            let idx = self.hasher.cell(fam, i, x, &mut scratch);
-            self.scratch = scratch;
+        let mut idxs = std::mem::take(&mut self.cells_scratch);
+        let mut scratch = std::mem::take(&mut self.scratch);
+        idxs.resize(self.hasher.rows, 0);
+        self.hasher.cells(fam, x, &mut idxs, &mut scratch);
+        for (i, &idx) in idxs.iter().enumerate() {
             self.cell_mut(i, idx).add(t);
         }
+        self.scratch = scratch;
+        self.cells_scratch = idxs;
     }
 
     /// Ingest a batch of elements sharing one time step (Corollary 4.2:
-    /// the window is then measured in batches).
+    /// the window is then measured in batches). The whole batch hashes
+    /// through one GEMM-shaped kernel call.
     pub fn add_batch<F: LshFamily + ?Sized>(&mut self, fam: &F, batch: &[&[f32]]) {
         self.now += 1;
         let t = self.now;
+        let rows = self.hasher.rows;
+        let mut flat = std::mem::take(&mut self.flat_scratch);
+        flat.clear();
+        for x in batch {
+            flat.extend_from_slice(x);
+        }
+        let mut idxs = std::mem::take(&mut self.cells_scratch);
+        let mut slots = std::mem::take(&mut self.scratch);
+        self.hasher.cells_batch(fam, &flat, &mut idxs, &mut slots);
         // Aggregate per-cell increments first so each touched EH gets one
         // add_count call (R elements hashing to one cell is the worst case
         // the corollary's space bound covers).
-        let rows = self.hasher.rows;
         let mut incs: std::collections::HashMap<(usize, usize), u64> = Default::default();
-        for x in batch {
-            for i in 0..rows {
-                let mut scratch = std::mem::take(&mut self.scratch);
-                let idx = self.hasher.cell(fam, i, x, &mut scratch);
-                self.scratch = scratch;
+        for row_cells in idxs.chunks_exact(rows) {
+            for (i, &idx) in row_cells.iter().enumerate() {
                 *incs.entry((i, idx)).or_insert(0) += 1;
             }
         }
         for ((i, idx), c) in incs {
             self.cell_mut(i, idx).add_count(t, c);
         }
+        self.scratch = slots;
+        self.cells_scratch = idxs;
+        self.flat_scratch = flat;
+    }
+
+    /// Batched ingest where each point advances the stream clock by one
+    /// tick — state-identical to a loop of `add`, but the whole batch
+    /// (row-major [n, dim]) hashes through one GEMM-shaped kernel call.
+    /// This is the coordinator's native batched-insert path.
+    pub fn add_each<F: LshFamily + ?Sized>(&mut self, fam: &F, xs: &[f32]) {
+        let d = fam.dim();
+        debug_assert!(d > 0 && xs.len() % d == 0);
+        if xs.is_empty() {
+            return;
+        }
+        let rows = self.hasher.rows;
+        let mut idxs = std::mem::take(&mut self.cells_scratch);
+        let mut slots = std::mem::take(&mut self.scratch);
+        self.hasher.cells_batch(fam, xs, &mut idxs, &mut slots);
+        for row_cells in idxs.chunks_exact(rows) {
+            self.now += 1;
+            let t = self.now;
+            for (i, &idx) in row_cells.iter().enumerate() {
+                self.cell_mut(i, idx).add(t);
+            }
+        }
+        self.scratch = slots;
+        self.cells_scratch = idxs;
     }
 
     /// Ingest from precomputed raw slots (PJRT batch path, layout `\[rows*p\]`).
@@ -132,28 +180,83 @@ impl SwAkde {
         }
     }
 
-    /// Per-row windowed count estimates at the query's cells.
-    pub fn row_estimates<F: LshFamily + ?Sized>(&mut self, fam: &F, q: &[f32]) -> Vec<f64> {
+    /// Per-row windowed count estimates at the query's cells, written into
+    /// caller storage (`out.len()` must equal R) — the allocation-free
+    /// SW-AKDE read path, mirroring `Race::row_counts_into`. One kernel
+    /// pass hashes all R·p functions.
+    pub fn row_estimates_into<F: LshFamily + ?Sized>(
+        &mut self,
+        fam: &F,
+        q: &[f32],
+        out: &mut [f64],
+    ) {
+        debug_assert_eq!(out.len(), self.hasher.rows);
         let now = self.now;
-        (0..self.hasher.rows)
-            .map(|i| {
-                let mut scratch = std::mem::take(&mut self.scratch);
-                let idx = self.hasher.cell(fam, i, q, &mut scratch);
-                self.scratch = scratch;
-                let flat = i * self.hasher.range + idx;
-                match &mut self.cells[flat] {
-                    Some(eh) => eh.estimate(now),
-                    None => 0.0,
-                }
-            })
-            .collect()
+        let mut idxs = std::mem::take(&mut self.cells_scratch);
+        let mut scratch = std::mem::take(&mut self.scratch);
+        idxs.resize(self.hasher.rows, 0);
+        self.hasher.cells(fam, q, &mut idxs, &mut scratch);
+        for (i, o) in out.iter_mut().enumerate() {
+            let flat = i * self.hasher.range + idxs[i];
+            *o = match &mut self.cells[flat] {
+                Some(eh) => eh.estimate(now),
+                None => 0.0,
+            };
+        }
+        self.scratch = scratch;
+        self.cells_scratch = idxs;
+    }
+
+    /// Per-row windowed count estimates (allocating convenience).
+    pub fn row_estimates<F: LshFamily + ?Sized>(&mut self, fam: &F, q: &[f32]) -> Vec<f64> {
+        let mut out = vec![0.0; self.hasher.rows];
+        self.row_estimates_into(fam, q, &mut out);
+        out
     }
 
     /// Algorithm 2 query: average of per-row EH estimates — the
     /// un-normalized windowed kernel sum Σ_{x∈window} k^p(x, q).
     pub fn query<F: LshFamily + ?Sized>(&mut self, fam: &F, q: &[f32]) -> f64 {
-        let est = self.row_estimates(fam, q);
-        stats::mean(&est)
+        let mut est = std::mem::take(&mut self.est_scratch);
+        est.resize(self.hasher.rows, 0.0);
+        self.row_estimates_into(fam, q, &mut est);
+        let out = stats::mean(&est);
+        self.est_scratch = est;
+        out
+    }
+
+    /// Batched Algorithm 2 query: hash all queries (row-major [n, dim])
+    /// with one GEMM-shaped kernel call, then read each query's R cells.
+    /// Identical values to n sequential `query` calls.
+    pub fn query_batch<F: LshFamily + ?Sized>(&mut self, fam: &F, qs: &[f32]) -> Vec<f64> {
+        let d = fam.dim();
+        debug_assert!(d > 0 && qs.len() % d == 0);
+        let n = qs.len() / d;
+        if n == 0 {
+            return Vec::new();
+        }
+        let now = self.now;
+        let rows = self.hasher.rows;
+        let mut idxs = std::mem::take(&mut self.cells_scratch);
+        let mut slots = std::mem::take(&mut self.scratch);
+        self.hasher.cells_batch(fam, qs, &mut idxs, &mut slots);
+        let mut est = std::mem::take(&mut self.est_scratch);
+        est.resize(rows, 0.0);
+        let mut out = Vec::with_capacity(n);
+        for row_cells in idxs.chunks_exact(rows) {
+            for (i, e) in est.iter_mut().enumerate() {
+                let flat = i * self.hasher.range + row_cells[i];
+                *e = match &mut self.cells[flat] {
+                    Some(eh) => eh.estimate(now),
+                    None => 0.0,
+                };
+            }
+            out.push(stats::mean(&est));
+        }
+        self.est_scratch = est;
+        self.scratch = slots;
+        self.cells_scratch = idxs;
+        out
     }
 
     /// Rehash-debiased estimator (mirror of `Race::query_debiased`): under
@@ -323,6 +426,29 @@ mod tests {
         }
         let q: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
         assert_eq!(a.query(&fam, &q), b.query(&fam, &q));
+    }
+
+    #[test]
+    fn add_each_and_query_batch_match_sequential() {
+        let (dim, rows, range, p) = (8, 8, 16, 2);
+        let fam = SrpLsh::new(dim, rows * p, &mut Rng::new(60));
+        let mut seq = SwAkde::new(rows, range, p, 0.1, 40);
+        let mut bat = SwAkde::new(rows, range, p, 0.1, 40);
+        let mut rng = Rng::new(61);
+        let pts = random_points(&mut rng, 30, dim);
+        let flat: Vec<f32> = pts.iter().flatten().copied().collect();
+        for x in &pts {
+            seq.add(&fam, x);
+        }
+        bat.add_each(&fam, &flat);
+        assert_eq!(seq.now(), bat.now());
+        let qs = random_points(&mut rng, 6, dim);
+        let qflat: Vec<f32> = qs.iter().flatten().copied().collect();
+        let batch_est = bat.query_batch(&fam, &qflat);
+        for (q, &be) in qs.iter().zip(&batch_est) {
+            assert_eq!(seq.query(&fam, q), be);
+            assert_eq!(bat.query(&fam, q), be);
+        }
     }
 
     #[test]

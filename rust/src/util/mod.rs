@@ -5,16 +5,38 @@ pub mod proptest;
 pub mod rng;
 pub mod stats;
 
+/// Lanes of the unrolled reductions below. Eight f32 accumulators break
+/// the sequential-FMA dependency chain so LLVM can keep the loop in SIMD
+/// registers; every batched hashing kernel funnels through these, so the
+/// accumulation order here IS the crate's hashing semantics (batch and
+/// single-point paths must agree bit-for-bit).
+const LANES: usize = 8;
+
+#[inline]
+fn reduce(acc: [f32; LANES], tail: f32) -> f32 {
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7])) + tail
+}
+
 /// Squared L2 distance between two equal-length f32 slices.
 #[inline]
 pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0f32;
-    for i in 0..a.len() {
-        let d = a[i] - b[i];
-        acc += d * d;
+    let ca = a.chunks_exact(LANES);
+    let cb = b.chunks_exact(LANES);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    let mut acc = [0.0f32; LANES];
+    for (xa, xb) in ca.zip(cb) {
+        for i in 0..LANES {
+            let d = xa[i] - xb[i];
+            acc[i] += d * d;
+        }
     }
-    acc
+    let mut tail = 0.0f32;
+    for (x, y) in ra.iter().zip(rb) {
+        let d = x - y;
+        tail += d * d;
+    }
+    reduce(acc, tail)
 }
 
 /// L2 distance.
@@ -27,11 +49,20 @@ pub fn l2(a: &[f32], b: &[f32]) -> f32 {
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0f32;
-    for i in 0..a.len() {
-        acc += a[i] * b[i];
+    let ca = a.chunks_exact(LANES);
+    let cb = b.chunks_exact(LANES);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    let mut acc = [0.0f32; LANES];
+    for (xa, xb) in ca.zip(cb) {
+        for i in 0..LANES {
+            acc[i] += xa[i] * xb[i];
+        }
     }
-    acc
+    let mut tail = 0.0f32;
+    for (x, y) in ra.iter().zip(rb) {
+        tail += x * y;
+    }
+    reduce(acc, tail)
 }
 
 /// Cosine similarity (0 when either vector is zero).
@@ -54,6 +85,20 @@ mod tests {
         let b = [3.0f32, 4.0];
         assert_eq!(l2_sq(&a, &b), 25.0);
         assert_eq!(l2(&a, &b), 5.0);
+    }
+
+    #[test]
+    fn unrolled_reductions_cover_all_lengths() {
+        // Lengths straddling the 8-lane boundary: the lane + tail split must
+        // see every element exactly once.
+        for len in 0..=33usize {
+            let a: Vec<f32> = (0..len).map(|i| (i as f32 + 1.0) * 0.5).collect();
+            let b: Vec<f32> = (0..len).map(|i| (i as f32) - 3.0).collect();
+            let want_dot: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let want_sq: f32 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+            assert!((dot(&a, &b) - want_dot).abs() <= 1e-3 * want_dot.abs().max(1.0), "len={len}");
+            assert!((l2_sq(&a, &b) - want_sq).abs() <= 1e-3 * want_sq.max(1.0), "len={len}");
+        }
     }
 
     #[test]

@@ -1,0 +1,223 @@
+//! Batch/single equivalence contract for the batched GEMV/GEMM hashing
+//! kernels: `hash_batch` must be bit-for-bit identical to the `hash_one`
+//! loop for every family, and every `*_batch` sketch entry point must
+//! return exactly what the equivalent loop of singles returns. Property
+//! tests over random dims/batch sizes via `util::proptest`.
+
+use sublinear_sketch::lsh::cauchy::CauchyLsh;
+use sublinear_sketch::lsh::pstable::PStableLsh;
+use sublinear_sketch::lsh::srp::SrpLsh;
+use sublinear_sketch::lsh::LshFamily;
+use sublinear_sketch::sketch::ann::{SAnn, SAnnConfig};
+use sublinear_sketch::sketch::race::Race;
+use sublinear_sketch::sketch::SwAkde;
+use sublinear_sketch::util::proptest::{check, Gen};
+use sublinear_sketch::util::rng::Rng;
+
+/// Random row-major [n, dim] batch.
+fn batch(g: &mut Gen, n: usize, dim: usize) -> Vec<f32> {
+    let mut xs = vec![0.0f32; n * dim];
+    g.rng.fill_gaussian_f32(&mut xs);
+    // Occasional exact duplicates and scaled copies: boundary cases for
+    // dedupe and the floor() bucketing.
+    if n >= 2 && g.bool() {
+        let (a, b) = (0, n - 1);
+        let row: Vec<f32> = xs[a * dim..(a + 1) * dim].to_vec();
+        xs[b * dim..(b + 1) * dim].copy_from_slice(&row);
+    }
+    xs
+}
+
+fn assert_family_batch_matches_loop<F: LshFamily>(
+    name: &str,
+    fam: &F,
+    g: &mut Gen,
+) -> Result<(), String> {
+    let dim = fam.dim();
+    let n = g.size(1, 17);
+    let xs = batch(g, n, dim);
+    // whole-range batch
+    let m = fam.n_funcs();
+    let mut got = vec![0i64; n * m];
+    fam.hash_batch(0, &xs, &mut got);
+    for pi in 0..n {
+        let x = &xs[pi * dim..(pi + 1) * dim];
+        for j in 0..m {
+            let want = fam.hash_one(j, x);
+            if got[pi * m + j] != want {
+                return Err(format!(
+                    "{name}: dim={dim} n={n} point {pi} func {j}: batch {} != single {want}",
+                    got[pi * m + j]
+                ));
+            }
+        }
+    }
+    // random sub-range (j0 > 0 exercises the blocked offsets)
+    let j0 = g.usize_in(0, m - 1);
+    let sub = g.usize_in(1, m - j0);
+    let mut got = vec![0i64; n * sub];
+    fam.hash_batch(j0, &xs, &mut got);
+    for pi in 0..n {
+        let x = &xs[pi * dim..(pi + 1) * dim];
+        for (jj, &s) in got[pi * sub..(pi + 1) * sub].iter().enumerate() {
+            let want = fam.hash_one(j0 + jj, x);
+            if s != want {
+                return Err(format!(
+                    "{name}: subrange j0={j0} m={sub} point {pi} func {jj}: {s} != {want}"
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn hash_batch_equals_hash_one_loop_srp() {
+    check("srp hash_batch == hash_one loop", 40, |g| {
+        let dim = g.size(1, 40);
+        let funcs = g.size(1, 70);
+        let fam = SrpLsh::new(dim, funcs, &mut Rng::new(g.seed));
+        assert_family_batch_matches_loop("srp", &fam, g)
+    });
+}
+
+#[test]
+fn hash_batch_equals_hash_one_loop_pstable() {
+    check("pstable hash_batch == hash_one loop", 40, |g| {
+        let dim = g.size(1, 40);
+        let funcs = g.size(1, 70);
+        let w = g.f64_in(0.25, 8.0) as f32;
+        let fam = PStableLsh::new(dim, funcs, w, &mut Rng::new(g.seed));
+        assert_family_batch_matches_loop("pstable", &fam, g)
+    });
+}
+
+#[test]
+fn hash_batch_equals_hash_one_loop_cauchy() {
+    check("cauchy hash_batch == hash_one loop", 40, |g| {
+        let dim = g.size(1, 40);
+        let funcs = g.size(1, 70);
+        let w = g.f64_in(0.25, 8.0) as f32;
+        let fam = CauchyLsh::new(dim, funcs, w, &mut Rng::new(g.seed));
+        assert_family_batch_matches_loop("cauchy", &fam, g)
+    });
+}
+
+#[test]
+fn sann_query_batch_equals_sequential_queries() {
+    check("SAnn::query_batch == N sequential queries", 12, |g| {
+        let dim = g.size(2, 12);
+        let cfg = SAnnConfig {
+            dim,
+            n_max: 600,
+            eta: 0.0,
+            r: 1.0,
+            c: 2.0,
+            w: g.f64_in(1.0, 6.0),
+            l_cap: g.usize_in(4, 24),
+            seed: g.seed,
+        };
+        let mut ann = SAnn::new(cfg);
+        let n_pts = g.size(1, 300);
+        for _ in 0..n_pts {
+            let p = g.vector(dim, 2.0);
+            ann.insert(&p);
+        }
+        let n_q = g.size(1, 40);
+        let qs: Vec<Vec<f32>> = (0..n_q).map(|_| g.vector(dim, 2.0)).collect();
+        let seq: Vec<_> = qs.iter().map(|q| ann.query(q)).collect();
+        let bat = ann.query_batch(&qs);
+        if seq != bat {
+            return Err(format!("dim={dim} n={n_pts} q={n_q}: batch answers diverge"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sann_insert_batch_equals_sequential_inserts() {
+    check("SAnn::insert_batch == N sequential inserts", 10, |g| {
+        let dim = g.size(2, 10);
+        let cfg = SAnnConfig {
+            dim,
+            n_max: 500,
+            eta: g.f64_in(0.0, 0.6),
+            r: 1.0,
+            c: 2.0,
+            w: 4.0,
+            l_cap: 8,
+            seed: g.seed,
+        };
+        let mut a = SAnn::new(cfg.clone());
+        let mut b = SAnn::new(cfg);
+        let n = g.size(1, 150);
+        let pts: Vec<Vec<f32>> = (0..n).map(|_| g.vector(dim, 2.0)).collect();
+        let seq: Vec<_> = pts.iter().map(|p| a.insert(p)).collect();
+        let bat = b.insert_batch(&pts);
+        if seq != bat {
+            return Err("retained-id streams diverge".into());
+        }
+        for q in pts.iter().take(20) {
+            if a.query(q) != b.query(q) {
+                return Err("query answers diverge after batched insert".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn race_batch_paths_equal_sequential() {
+    check("Race add_batch/query_batch == singles", 20, |g| {
+        let dim = g.size(2, 16);
+        let rows = g.size(1, 24);
+        let p = g.usize_in(1, 3);
+        let range = 1 << g.usize_in(2, 6);
+        let fam = PStableLsh::new(dim, rows * p, 2.0, &mut Rng::new(g.seed));
+        let mut seq = Race::new(rows, range, p);
+        let mut bat = Race::new(rows, range, p);
+        let n = g.size(1, 60);
+        let xs = batch(g, n, dim);
+        for x in xs.chunks_exact(dim) {
+            seq.add(&fam, x);
+        }
+        bat.add_batch(&fam, &xs);
+        let nq = g.size(1, 10);
+        let qs = batch(g, nq, dim);
+        let bq = bat.query_batch(&fam, &qs);
+        for (qi, q) in qs.chunks_exact(dim).enumerate() {
+            if seq.query(&fam, q) != bq[qi] {
+                return Err(format!("query {qi} diverges"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn swakde_batch_paths_equal_sequential() {
+    check("SwAkde add_each/query_batch == singles", 15, |g| {
+        let dim = g.size(2, 12);
+        let rows = g.size(1, 12);
+        let p = g.usize_in(1, 3);
+        let fam = SrpLsh::new(dim, rows * p, &mut Rng::new(g.seed));
+        let window = g.size(4, 64) as u64;
+        let mut seq = SwAkde::new_srp(rows, p, 0.1, window);
+        let mut bat = SwAkde::new_srp(rows, p, 0.1, window);
+        let n = g.size(1, 80);
+        let xs = batch(g, n, dim);
+        for x in xs.chunks_exact(dim) {
+            seq.add(&fam, x);
+        }
+        bat.add_each(&fam, &xs);
+        let nq = g.size(1, 8);
+        let qs = batch(g, nq, dim);
+        let bq = bat.query_batch(&fam, &qs);
+        for (qi, q) in qs.chunks_exact(dim).enumerate() {
+            if seq.query(&fam, q) != bq[qi] {
+                return Err(format!("query {qi} diverges"));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,134 @@
+//! Offline stub of the `xla-rs` PJRT bindings.
+//!
+//! The real crate links the PJRT C API and executes the AOT artifacts
+//! under `artifacts/`; this stub exposes the same API surface but every
+//! entry point returns [`Error::Unavailable`], so `Executor::new` fails
+//! cleanly and every caller falls back to the pure-Rust native mirrors
+//! (`runtime::native`). Swap this path dependency for the real bindings
+//! in `rust/Cargo.toml` on an image with the PJRT toolchain baked in —
+//! no source change needed in `runtime::executor`.
+
+use std::path::Path;
+
+/// The stub's only error: PJRT is not linked into this build.
+#[derive(Debug, Clone)]
+pub enum Error {
+    Unavailable(&'static str),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Unavailable(what) => {
+                write!(f, "{what}: built against the offline xla stub (no PJRT runtime linked)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(Error::Unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Parsed HLO module (stub: parsing always fails).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<Self> {
+        Err(Error::Unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Host literal (stub: carries no data; conversions fail).
+#[derive(Clone)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Self {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::Unavailable("Literal::reshape"))
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(Error::Unavailable("Literal::to_tuple1"))
+    }
+
+    pub fn to_vec<T: Copy>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable("Literal::to_vec"))
+    }
+}
+
+/// Device buffer produced by an execution.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable (stub: unobtainable, methods exist for typeck).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[2]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(format!("{err}").contains("offline xla stub"));
+    }
+}
