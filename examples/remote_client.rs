@@ -1,0 +1,76 @@
+//! Remote serving in ~50 lines: boot a wire server in-process, then talk
+//! to it over real TCP exactly like a network client would. (Like the
+//! other files in this directory, this is a reference listing outside the
+//! Cargo package — the same flow is compiled and executed end-to-end by
+//! `rust/tests/net_wire.rs` and the `sketchd serve/client` CLI.)
+//!
+//! In production the two halves live in different processes (or hosts):
+//!
+//! ```bash
+//! sketchd serve --listen 0.0.0.0:7171 --dim 16          # on the server
+//! sketchd client --connect host:7171 --n 100000         # anywhere else
+//! ```
+
+use sublinear_sketch::coordinator::{ServiceConfig, SketchService};
+use sublinear_sketch::net::{SketchClient, WireServer};
+use sublinear_sketch::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let dim = 16;
+
+    // ------------------------------------------------------- server side
+    // The service runs on its own thread (SketchService::spawn); the
+    // wire server accepts connections and feeds it through a handle.
+    let mut cfg = ServiceConfig::default_for(dim, 100_000);
+    cfg.ann.eta = 0.0; // serving default: store everything
+    let (handle, svc_join) = SketchService::spawn(cfg)?;
+    let server = WireServer::bind("127.0.0.1:0", handle.clone())?;
+    let addr = server.local_addr()?;
+    let srv_join = std::thread::spawn(move || server.run());
+    println!("serving on {addr}");
+
+    // ------------------------------------------------------- client side
+    let mut client = SketchClient::connect(addr)?;
+    println!("handshake: dim={} shards={}", client.dim(), client.shards());
+
+    // Stream a clustered dataset over the wire in batches.
+    let mut rng = Rng::new(7);
+    let center: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+    let pts: Vec<Vec<f32>> = (0..5_000)
+        .map(|_| center.iter().map(|c| c + 0.1 * rng.gaussian_f32()).collect())
+        .collect();
+    let mut accepted = 0;
+    for chunk in pts.chunks(64) {
+        accepted += client.insert_batch(chunk)?;
+    }
+    client.flush()?; // barrier: everything above is applied
+    println!("accepted {accepted}/{} points", pts.len());
+
+    // Batched ANN + sliding-window KDE, answered by the remote sketches.
+    let queries = &pts[..8];
+    for (i, ans) in client.ann_query(queries)?.iter().enumerate() {
+        match ans {
+            Some(a) => println!("q{i}: shard {} id {} dist {:.4}", a.shard, a.id, a.dist),
+            None => println!("q{i}: no r-near neighbor"),
+        }
+    }
+    let (sums, densities) = client.kde_query(queries)?;
+    println!("kde sums[0]={:.2} density[0]={:.4}", sums[0], densities[0]);
+
+    let st = client.stats()?;
+    println!(
+        "server: inserts={} stored={} shed={} sketch={:.2}MB",
+        st.inserts,
+        st.stored_points,
+        st.shed,
+        st.sketch_bytes as f64 / 1048576.0
+    );
+
+    // ------------------------------------------------------- teardown
+    client.shutdown_server()?;
+    drop(client);
+    srv_join.join().unwrap()?;
+    handle.shutdown();
+    svc_join.join().unwrap();
+    Ok(())
+}

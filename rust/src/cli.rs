@@ -52,6 +52,12 @@ impl Args {
         self.flags.get(name).map(String::as_str)
     }
 
+    /// Flag that must be present (no sensible default exists).
+    pub fn require(&self, name: &str) -> anyhow::Result<&str> {
+        self.flag(name)
+            .ok_or_else(|| anyhow::anyhow!("--{name} VALUE is required"))
+    }
+
     pub fn has(&self, name: &str) -> bool {
         self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
     }
@@ -115,6 +121,14 @@ mod tests {
         assert_eq!(a.get_usize("n", 1000).unwrap(), 1000);
         assert_eq!(a.get_str("dataset", "sift"), "sift");
         assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn require_reports_missing_flags() {
+        let a = parse("client --connect 127.0.0.1:4000");
+        assert_eq!(a.require("connect").unwrap(), "127.0.0.1:4000");
+        let err = a.require("listen").unwrap_err().to_string();
+        assert!(err.contains("--listen"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,305 @@
+//! `ServiceHandle` — the concurrency seam between connection threads and
+//! the owning [`SketchService`] thread.
+//!
+//! The service itself is `&mut self` everywhere and its PJRT executor is
+//! pinned to one thread, so N connection threads cannot call it directly.
+//! Instead a handle splits the API by what it needs:
+//!
+//! - **Ingest / deletes** touch only the router policy and the shard
+//!   mailboxes, both cloneable — so they run ON the calling thread and go
+//!   straight into the per-shard bounded queues (inserts under the
+//!   configured [`Overload`] policy, deletes `force`d). A query can
+//!   therefore never sit behind a backlog of queued inserts: backpressure
+//!   lives in the shard mailboxes, not in a service-wide command queue.
+//! - **Queries, stats, flush** need the service's own state (scatter/
+//!   gather, PJRT re-rank, pending-ingest buffers), so they ship over an
+//!   unbounded control channel to the owning thread
+//!   ([`SketchService::run_cmd_loop`]) and block on a per-request reply.
+//!
+//! All counting is shared through [`ServiceCounters`], point-denominated.
+//!
+//! [`SketchService`]: super::server::SketchService
+//! [`Overload`]: super::backpressure::Overload
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::backpressure::BoundedSender;
+use super::protocol::{AnnAnswer, ServiceCounters, ServiceStats};
+use super::router::{hash_vector, RoutePolicy};
+use super::shard::ShardCmd;
+use super::NATIVE_BATCH_ROWS;
+
+/// The ONE native batched-ingest core, shared by `SketchService`'s batch
+/// path and [`ServiceHandle::insert_batch`] so the wire ⇔ in-process
+/// state-parity guarantee is structural, not copy-maintained: identical
+/// chunking ([`NATIVE_BATCH_ROWS`]), identical point-denominated
+/// counting. `offer(shard, chunk)` returns false iff the chunk was shed.
+pub(super) fn ship_native_batch(
+    counters: &ServiceCounters,
+    per_shard: Vec<Vec<Vec<f32>>>,
+    mut offer: impl FnMut(usize, Vec<Vec<f32>>) -> bool,
+) -> usize {
+    let mut ok = 0;
+    for (s, mut pts) in per_shard.into_iter().enumerate() {
+        while !pts.is_empty() {
+            let tail = pts.split_off(pts.len().min(NATIVE_BATCH_ROWS));
+            let chunk = std::mem::replace(&mut pts, tail);
+            let m = chunk.len();
+            ServiceCounters::add(&counters.inserts, m as u64);
+            if offer(s, chunk) {
+                ok += m;
+            } else {
+                ServiceCounters::add(&counters.shed_points, m as u64);
+            }
+        }
+    }
+    ok
+}
+
+/// Control-plane commands a handle sends to the service-owning thread.
+pub enum ServiceCmd {
+    Ann(Vec<Vec<f32>>, Sender<Vec<Option<AnnAnswer>>>),
+    Kde(Vec<Vec<f32>>, Sender<(Vec<f64>, Vec<f64>)>),
+    Stats(Sender<ServiceStats>),
+    Flush(Sender<()>),
+    Shutdown,
+}
+
+/// Cloneable, `Send` front to one running [`SketchService`].
+///
+/// Routing caveat: under `RoutePolicy::RoundRobin` the handle's shared
+/// cursor is independent of the service's own `Router` cursor, so mixing
+/// direct service ingest with handle ingest round-robins each stream
+/// separately (`HashVector`, the default, is stateless and unaffected).
+/// The wire-vs-in-process parity tests pin `HashVector`.
+///
+/// PJRT caveat: handle ingest always ships native `InsertBatch` commands
+/// (shard-side batched hashing) — the executor is pinned to the owning
+/// thread, so its buffered GEMM-ingest path (`flush_shard_ingest`) only
+/// serves direct `SketchService::insert_batch` callers. On a `use_pjrt`
+/// service, the artifact accelerates the QUERY path for wire traffic.
+///
+/// [`SketchService`]: super::server::SketchService
+pub struct ServiceHandle {
+    shard_txs: Vec<BoundedSender<ShardCmd>>,
+    route: RoutePolicy,
+    /// Round-robin cursor shared across clones so the partition stays
+    /// balanced no matter which connection inserts.
+    rr_next: Arc<AtomicUsize>,
+    counters: Arc<ServiceCounters>,
+    cmd_tx: Sender<ServiceCmd>,
+    dim: usize,
+    shards: usize,
+}
+
+impl Clone for ServiceHandle {
+    fn clone(&self) -> Self {
+        ServiceHandle {
+            shard_txs: self.shard_txs.clone(),
+            route: self.route,
+            rr_next: Arc::clone(&self.rr_next),
+            counters: Arc::clone(&self.counters),
+            cmd_tx: self.cmd_tx.clone(),
+            dim: self.dim,
+            shards: self.shards,
+        }
+    }
+}
+
+impl ServiceHandle {
+    pub(super) fn new(
+        shard_txs: Vec<BoundedSender<ShardCmd>>,
+        route: RoutePolicy,
+        dim: usize,
+        shards: usize,
+        counters: Arc<ServiceCounters>,
+        cmd_tx: Sender<ServiceCmd>,
+    ) -> Self {
+        ServiceHandle {
+            shard_txs,
+            route,
+            rr_next: Arc::new(AtomicUsize::new(0)),
+            counters,
+            cmd_tx,
+            dim,
+            shards,
+        }
+    }
+
+    /// Vector dimensionality the service was configured with.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    fn route(&self, x: &[f32]) -> usize {
+        match self.route {
+            RoutePolicy::HashVector => hash_vector(x) as usize % self.shard_txs.len(),
+            RoutePolicy::RoundRobin => {
+                self.rr_next.fetch_add(1, Ordering::Relaxed) % self.shard_txs.len()
+            }
+        }
+    }
+
+    /// Offer one stream element under the overload policy. Returns false
+    /// if it was shed.
+    pub fn insert(&self, x: Vec<f32>) -> bool {
+        let s = self.route(&x);
+        ServiceCounters::add(&self.counters.inserts, 1);
+        let ok = self.shard_txs[s].offer(ShardCmd::Insert(x));
+        if !ok {
+            ServiceCounters::add(&self.counters.shed_points, 1);
+        }
+        ok
+    }
+
+    /// Batched ingest through [`ship_native_batch`] — the same core the
+    /// service's native `insert_batch` path runs, so chunk boundaries and
+    /// accounting are identical by construction. Returns accepted points.
+    pub fn insert_batch(&self, batch: Vec<Vec<f32>>) -> usize {
+        let mut per_shard: Vec<Vec<Vec<f32>>> = vec![Vec::new(); self.shard_txs.len()];
+        for x in batch {
+            per_shard[self.route(&x)].push(x);
+        }
+        ship_native_batch(&self.counters, per_shard, |s, chunk| {
+            self.shard_txs[s].offer(ShardCmd::InsertBatch(chunk))
+        })
+    }
+
+    /// Turnstile deletion (HashVector routing only); forced past the
+    /// overload policy like every command carrying a reply channel.
+    pub fn delete(&self, x: Vec<f32>) -> bool {
+        let Some(s) = (match self.route {
+            RoutePolicy::HashVector => Some(hash_vector(&x) as usize % self.shard_txs.len()),
+            RoutePolicy::RoundRobin => None,
+        }) else {
+            return false;
+        };
+        ServiceCounters::add(&self.counters.deletes, 1);
+        let (tx, rx) = channel();
+        if !self.shard_txs[s].force(ShardCmd::Delete(x, tx)) {
+            return false;
+        }
+        rx.recv().unwrap_or(false)
+    }
+
+    fn call<T>(&self, make: impl FnOnce(Sender<T>) -> ServiceCmd) -> Result<T> {
+        let (tx, rx) = channel();
+        self.cmd_tx
+            .send(make(tx))
+            .map_err(|_| anyhow!("service thread is gone"))?;
+        rx.recv()
+            .map_err(|_| anyhow!("service thread dropped the reply"))
+    }
+
+    /// Batched (c, r)-ANN through the owning thread.
+    pub fn query_batch(&self, queries: Vec<Vec<f32>>) -> Result<Vec<Option<AnnAnswer>>> {
+        self.call(|tx| ServiceCmd::Ann(queries, tx))
+    }
+
+    /// Batched sliding-window KDE (kernel sums, densities).
+    pub fn kde_batch(&self, queries: Vec<Vec<f32>>) -> Result<(Vec<f64>, Vec<f64>)> {
+        self.call(|tx| ServiceCmd::Kde(queries, tx))
+    }
+
+    /// Aggregate statistics (drains shard mailboxes first).
+    pub fn stats(&self) -> Result<ServiceStats> {
+        self.call(ServiceCmd::Stats)
+    }
+
+    /// Barrier: all inserts offered BEFORE this call (from this thread)
+    /// are applied when it returns.
+    pub fn flush(&self) -> Result<()> {
+        self.call(ServiceCmd::Flush)
+    }
+
+    /// Ask the owning thread to shut the service down (idempotent,
+    /// best-effort: a missing service thread is already shut down).
+    pub fn shutdown(&self) {
+        let _ = self.cmd_tx.send(ServiceCmd::Shutdown);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::server::{ServiceConfig, SketchService};
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn cfg() -> ServiceConfig {
+        let mut cfg = ServiceConfig::default_for(6, 500);
+        cfg.shards = 2;
+        cfg.ann.eta = 0.0;
+        cfg.kde.rows = 8;
+        cfg
+    }
+
+    #[test]
+    fn concurrent_handles_do_not_lose_points() {
+        let (handle, join) = SketchService::spawn(cfg()).unwrap();
+        let writers: Vec<_> = (0..4)
+            .map(|t| {
+                let h = handle.clone();
+                std::thread::spawn(move || {
+                    let mut rng = Rng::new(100 + t);
+                    for _ in 0..250 {
+                        let p: Vec<f32> = (0..6).map(|_| rng.gaussian_f32()).collect();
+                        assert!(h.insert(p), "Block policy never sheds");
+                    }
+                })
+            })
+            .collect();
+        for w in writers {
+            w.join().unwrap();
+        }
+        handle.flush().unwrap();
+        let st = handle.stats().unwrap();
+        assert_eq!(st.inserts, 1000);
+        assert_eq!(st.shed, 0);
+        assert_eq!(st.stored_points, 1000, "eta=0 stores all");
+        handle.shutdown();
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn queries_interleave_with_ingest() {
+        let (handle, join) = SketchService::spawn(cfg()).unwrap();
+        let h = handle.clone();
+        let writer = std::thread::spawn(move || {
+            let mut rng = Rng::new(9);
+            for _ in 0..2000 {
+                let p: Vec<f32> = (0..6).map(|_| rng.gaussian_f32()).collect();
+                h.insert(p);
+            }
+        });
+        let mut rng = Rng::new(10);
+        for _ in 0..20 {
+            let qs: Vec<Vec<f32>> = (0..8)
+                .map(|_| (0..6).map(|_| rng.gaussian_f32()).collect())
+                .collect();
+            let ans = handle.query_batch(qs).unwrap();
+            assert_eq!(ans.len(), 8, "every query answered mid-ingest");
+        }
+        writer.join().unwrap();
+        handle.shutdown();
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn handle_calls_fail_cleanly_after_shutdown() {
+        let (handle, join) = SketchService::spawn(cfg()).unwrap();
+        handle.shutdown();
+        join.join().unwrap();
+        assert!(handle.query_batch(vec![vec![0.0; 6]]).is_err());
+        assert!(handle.stats().is_err());
+        // Direct ingest into dead shards reports failure, no panic.
+        assert!(!handle.insert(vec![0.0; 6]));
+    }
+}

@@ -4,14 +4,21 @@
 
 pub mod backpressure;
 pub mod batcher;
+pub mod handle;
 pub mod protocol;
 pub mod router;
 pub mod server;
 pub mod shard;
 
+/// Points per native `InsertBatch` command. One definition shared by the
+/// service's batch path and `ServiceHandle` ingest: identical chunking is
+/// part of the wire ⇔ in-process state-parity guarantee.
+pub(crate) const NATIVE_BATCH_ROWS: usize = 64;
+
 pub use backpressure::{bounded, BoundedSender, Overload};
 pub use batcher::{BatchPolicy, Batcher};
-pub use protocol::{AnnAnswer, ServiceStats};
+pub use handle::{ServiceCmd, ServiceHandle};
+pub use protocol::{AnnAnswer, ServiceCounters, ServiceStats};
 pub use router::{RoutePolicy, Router};
 pub use server::{ServiceConfig, SketchService};
 pub use shard::{KdeKernel, KdeShardConfig};

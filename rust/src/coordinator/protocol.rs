@@ -2,6 +2,7 @@
 //! they produce. Channels are attached at the server layer; these types
 //! stay plain data so they can be logged, tested and replayed.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// A batch of query vectors shared across shards without copying.
@@ -34,7 +35,13 @@ pub struct ShardKdeResult {
 }
 
 /// Aggregate service statistics.
-#[derive(Clone, Debug, Default)]
+///
+/// `shed` is POINT-denominated: an `InsertBatch` of 64 points that gets
+/// dropped under `Overload::Shed` counts as 64, so
+/// `inserts == stored_points + shed` reconciles exactly for η = 0 (the
+/// command-denominated `BoundedSender::shed_count()` stays available as a
+/// queue-level diagnostic but never feeds these stats).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct ServiceStats {
     pub inserts: u64,
     pub deletes: u64,
@@ -43,6 +50,47 @@ pub struct ServiceStats {
     pub shed: u64,
     pub stored_points: usize,
     pub sketch_bytes: usize,
+}
+
+/// Live service counters, shared between the owning [`SketchService`] and
+/// every [`ServiceHandle`] clone (connection threads ingest directly into
+/// shard mailboxes, so the counts must live behind an `Arc`, not behind
+/// `&mut self`). All counters are point-denominated.
+///
+/// [`SketchService`]: super::server::SketchService
+/// [`ServiceHandle`]: super::handle::ServiceHandle
+#[derive(Debug, Default)]
+pub struct ServiceCounters {
+    pub inserts: AtomicU64,
+    pub deletes: AtomicU64,
+    pub ann_queries: AtomicU64,
+    pub kde_queries: AtomicU64,
+    /// Points dropped by `Overload::Shed` (never commands).
+    pub shed_points: AtomicU64,
+}
+
+impl ServiceCounters {
+    pub fn add(counter: &AtomicU64, n: u64) {
+        counter.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn shed(&self) -> u64 {
+        self.shed_points.load(Ordering::Relaxed)
+    }
+
+    /// Stats snapshot of the counters alone (shard-resident fields —
+    /// `stored_points`, `sketch_bytes` — are filled in by the service).
+    pub fn snapshot(&self) -> ServiceStats {
+        ServiceStats {
+            inserts: self.inserts.load(Ordering::Relaxed),
+            deletes: self.deletes.load(Ordering::Relaxed),
+            ann_queries: self.ann_queries.load(Ordering::Relaxed),
+            kde_queries: self.kde_queries.load(Ordering::Relaxed),
+            shed: self.shed_points.load(Ordering::Relaxed),
+            stored_points: 0,
+            sketch_bytes: 0,
+        }
+    }
 }
 
 /// Merge ANN partials: per query, keep the globally nearest answer.
@@ -103,6 +151,21 @@ mod tests {
         let a = ShardAnnResult { best: vec![None, None], scanned: 0 };
         let merged = merge_ann(&[a], 2);
         assert!(merged.iter().all(Option::is_none));
+    }
+
+    #[test]
+    fn counters_snapshot_reads_all_fields() {
+        let c = ServiceCounters::default();
+        ServiceCounters::add(&c.inserts, 100);
+        ServiceCounters::add(&c.shed_points, 7);
+        ServiceCounters::add(&c.ann_queries, 3);
+        let st = c.snapshot();
+        assert_eq!(st.inserts, 100);
+        assert_eq!(st.shed, 7);
+        assert_eq!(st.ann_queries, 3);
+        assert_eq!(st.deletes, 0);
+        assert_eq!(st.stored_points, 0, "shard fields left for the service");
+        assert_eq!(c.shed(), 7);
     }
 
     #[test]

@@ -11,17 +11,18 @@
 //!            PJRT rerank_l2 artifact (or native fallback) → argmin → reply
 //! ```
 
-use std::sync::mpsc::channel;
+use std::sync::mpsc::{channel, Receiver};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::runtime::Executor;
 use crate::sketch::ann::SAnnConfig;
 
 use super::backpressure::{bounded, BoundedSender, Overload};
-use super::protocol::{merge_ann, merge_kde, AnnAnswer, ServiceStats};
+use super::handle::{ServiceCmd, ServiceHandle};
+use super::protocol::{merge_ann, merge_kde, AnnAnswer, ServiceCounters, ServiceStats};
 use super::router::{RoutePolicy, Router};
 use super::shard::{KdeShardConfig, Shard, ShardCmd};
 
@@ -95,7 +96,10 @@ pub struct SketchService {
     shards: Vec<ShardHandle>,
     router: Router,
     executor: Option<Executor>,
-    stats: ServiceStats,
+    /// Point-denominated live counters, shared with every
+    /// [`ServiceHandle`] so connection threads and the owning thread
+    /// account into one place.
+    counters: Arc<ServiceCounters>,
     /// Per-shard pending ingest (batched PJRT path): points accumulate
     /// until a shard's buffer fills one artifact batch, so the hash GEMM
     /// runs at full utilization instead of padding 16 rows to 256.
@@ -133,7 +137,7 @@ impl SketchService {
             shards,
             router,
             executor,
-            stats: ServiceStats::default(),
+            counters: Arc::new(ServiceCounters::default()),
             pending_ingest,
         })
     }
@@ -145,10 +149,10 @@ impl SketchService {
     /// Offer one stream element. Returns false if it was shed.
     pub fn insert(&mut self, x: Vec<f32>) -> bool {
         let shard = self.router.route(&x);
-        self.stats.inserts += 1;
+        ServiceCounters::add(&self.counters.inserts, 1);
         let ok = self.shards[shard].tx.offer(ShardCmd::Insert(x));
         if !ok {
-            self.stats.shed += 1;
+            ServiceCounters::add(&self.counters.shed_points, 1);
         }
         ok
     }
@@ -160,35 +164,33 @@ impl SketchService {
     /// commands (chunked to the front-door batch size) so the shard thread
     /// hashes a whole chunk with one native batched kernel call instead of
     /// a loop of singles.
+    ///
+    /// Returns the number of points ACCEPTED (offered minus points shed
+    /// at flush time) on both paths. On the PJRT path points may sit in
+    /// pending buffers past this call; they count as accepted here and any
+    /// later shed is visible in `stats().shed`.
     pub fn insert_batch(&mut self, batch: Vec<Vec<f32>>) -> usize {
         if self.executor.is_none() {
             let mut per_shard: Vec<Vec<Vec<f32>>> = vec![Vec::new(); self.shards.len()];
             for x in batch {
                 per_shard[self.router.route(&x)].push(x);
             }
-            // Chunk so a shed under overload drops at most one kernel-batch
-            // worth of points, and queue_cap keeps its per-point meaning
-            // within a factor of the batch size.
-            const NATIVE_BATCH_ROWS: usize = 64;
-            let mut ok = 0;
-            for (s, mut pts) in per_shard.into_iter().enumerate() {
-                while !pts.is_empty() {
-                    let tail = pts.split_off(pts.len().min(NATIVE_BATCH_ROWS));
-                    let chunk = std::mem::replace(&mut pts, tail);
-                    let m = chunk.len();
-                    self.stats.inserts += m as u64;
-                    if self.shards[s].tx.offer(ShardCmd::InsertBatch(chunk)) {
-                        ok += m;
-                    } else {
-                        self.stats.shed += m as u64;
-                    }
-                }
-            }
-            return ok;
+            // Chunk (shared core, NATIVE_BATCH_ROWS) so a shed under
+            // overload drops at most one kernel-batch worth of points, and
+            // queue_cap keeps its per-point meaning within a factor of the
+            // batch size.
+            return super::handle::ship_native_batch(&self.counters, per_shard, |s, chunk| {
+                self.shards[s].tx.offer(ShardCmd::InsertBatch(chunk))
+            });
         }
         // Route into per-shard pending buffers; flush a shard only when a
         // full artifact batch has accumulated (utilization over latency —
         // callers needing immediate visibility call `flush_ingest`).
+        // Accepted points are counted at flush time via the shed counter
+        // delta, so `ok == batch.len()` holds exactly as on the native
+        // path whenever nothing sheds.
+        let offered = batch.len();
+        let shed_before = self.counters.shed();
         for x in batch {
             let s = self.router.route(&x);
             self.pending_ingest[s].push(x);
@@ -196,7 +198,8 @@ impl SketchService {
                 self.flush_shard_ingest(s);
             }
         }
-        0
+        let shed_during = self.counters.shed() - shed_before;
+        offered.saturating_sub(shed_during as usize)
     }
 
     /// Push all pending batched-ingest points to their shards.
@@ -213,7 +216,7 @@ impl SketchService {
         }
         let dim = self.cfg.dim;
         let m = pts.len();
-        self.stats.inserts += m as u64;
+        ServiceCounters::add(&self.counters.inserts, m as u64);
         let flat: Vec<f32> = pts.iter().flatten().copied().collect();
         let exec = self.executor.as_mut().unwrap();
         let (proj, bias, w, k, l) = &self.shards[si].hash_params;
@@ -240,14 +243,14 @@ impl SketchService {
                     })
                     .collect();
                 if !self.shards[si].tx.offer(ShardCmd::InsertBatchSlots(items)) {
-                    self.stats.shed += m as u64;
+                    ServiceCounters::add(&self.counters.shed_points, m as u64);
                 }
             }
             _ => {
                 // artifact variant missing: native per-item path
                 for x in pts {
                     if !self.shards[si].tx.offer(ShardCmd::Insert(x)) {
-                        self.stats.shed += 1;
+                        ServiceCounters::add(&self.counters.shed_points, 1);
                     }
                 }
             }
@@ -259,7 +262,7 @@ impl SketchService {
         let Some(shard) = self.router.route_delete(&x) else {
             return false;
         };
-        self.stats.deletes += 1;
+        ServiceCounters::add(&self.counters.deletes, 1);
         let (tx, rx) = channel();
         if !self.shards[shard].tx.force(ShardCmd::Delete(x, tx)) {
             return false;
@@ -271,7 +274,7 @@ impl SketchService {
     /// native per-shard bests or re-rank all candidates through PJRT.
     pub fn query_batch(&mut self, queries: Vec<Vec<f32>>) -> Vec<Option<AnnAnswer>> {
         let n = queries.len();
-        self.stats.ann_queries += n as u64;
+        ServiceCounters::add(&self.counters.ann_queries, n as u64);
         if n == 0 {
             return Vec::new();
         }
@@ -299,7 +302,8 @@ impl SketchService {
         // Hash the whole batch per shard through the PJRT artifact (one
         // projection GEMM per shard, §Perf iteration 4), then scatter the
         // precomputed table keys. Falls back to shard-side hashing when the
-        // artifact variant is missing.
+        // artifact variant is missing. Materialized once: the re-rank GEMM
+        // below reuses the same flattened queries.
         let flat_q: Vec<f32> = batch.iter().flatten().copied().collect();
         let mut replies = Vec::with_capacity(self.shards.len());
         for s in &self.shards {
@@ -351,7 +355,6 @@ impl SketchService {
         }
         let t_gather = t0.elapsed();
         let exec = self.executor.as_mut().unwrap();
-        let flat_q: Vec<f32> = batch.iter().flatten().copied().collect();
         let p = pool_flat.len() / dim;
         let dists = match exec.dist_matrix_tiled(dim, &flat_q, &pool_flat) {
             Ok(d) => d,
@@ -389,7 +392,7 @@ impl SketchService {
     /// Batched sliding-window KDE: summed kernel estimates and density.
     pub fn kde_batch(&mut self, queries: Vec<Vec<f32>>) -> (Vec<f64>, Vec<f64>) {
         let n = queries.len();
-        self.stats.kde_queries += n as u64;
+        ServiceCounters::add(&self.counters.kde_queries, n as u64);
         if n == 0 {
             return (Vec::new(), Vec::new());
         }
@@ -422,20 +425,112 @@ impl SketchService {
         }
     }
 
-    /// Aggregate statistics (drains mailboxes first).
+    /// Aggregate statistics (drains mailboxes first). `shed` comes from
+    /// the point-denominated counters — NOT from the command-denominated
+    /// `BoundedSender::shed_count()`, which would undercount every shed
+    /// `InsertBatch` as 1 regardless of its size.
+    ///
+    /// Shards are drained BEFORE the counters are read: a point is
+    /// counted in `inserts` before it is offered, so concurrent wire
+    /// ingest can only make `inserts >= stored_points + shed` (in-flight
+    /// points); the equality is exact once ingest quiesces.
     pub fn stats(&mut self) -> ServiceStats {
-        let mut out = self.stats.clone();
+        let (mut stored, mut bytes) = (0usize, 0usize);
         for s in &self.shards {
             let (tx, rx) = channel();
             if s.tx.force(ShardCmd::Stats(tx)) {
                 if let Ok(st) = rx.recv() {
-                    out.stored_points += st.stored;
-                    out.sketch_bytes += st.sketch_bytes;
+                    stored += st.stored;
+                    bytes += st.sketch_bytes;
                 }
             }
         }
-        out.shed = self.shards.iter().map(|s| s.tx.shed_count()).sum();
+        let mut out = self.counters.snapshot();
+        out.stored_points = stored;
+        out.sketch_bytes = bytes;
         out
+    }
+
+    /// Commands shed at the QUEUE level, in commands (diagnostics only —
+    /// see [`SketchService::stats`] for the point-denominated number).
+    pub fn shed_commands(&self) -> u64 {
+        self.shards.iter().map(|s| s.tx.shed_count()).sum()
+    }
+
+    /// Cloneable ingest/query front for connection threads. Inserts and
+    /// deletes go straight to shard mailboxes from the calling thread;
+    /// anything that needs the service's own state (queries, stats, flush)
+    /// travels over `cmd_tx` and must be drained by [`Self::run_cmd_loop`]
+    /// on the thread that owns the service.
+    pub fn handle(&self, cmd_tx: std::sync::mpsc::Sender<ServiceCmd>) -> ServiceHandle {
+        ServiceHandle::new(
+            self.shards.iter().map(|s| s.tx.clone()).collect(),
+            self.cfg.route,
+            self.cfg.dim,
+            self.cfg.shards,
+            Arc::clone(&self.counters),
+            cmd_tx,
+        )
+    }
+
+    /// Drain handle commands until `Shutdown` arrives or every handle is
+    /// dropped, then shut the shards down. Queries never wait behind
+    /// ingest here: handles push inserts directly into the bounded shard
+    /// mailboxes, so this loop only ever sees control-plane commands.
+    pub fn run_cmd_loop(mut self, rx: Receiver<ServiceCmd>) {
+        while let Ok(cmd) = rx.recv() {
+            match cmd {
+                ServiceCmd::Ann(qs, reply) => {
+                    let _ = reply.send(self.query_batch(qs));
+                }
+                ServiceCmd::Kde(qs, reply) => {
+                    let _ = reply.send(self.kde_batch(qs));
+                }
+                ServiceCmd::Stats(reply) => {
+                    let _ = reply.send(self.stats());
+                }
+                ServiceCmd::Flush(reply) => {
+                    self.flush();
+                    let _ = reply.send(());
+                }
+                ServiceCmd::Shutdown => break,
+            }
+        }
+        self.shutdown();
+    }
+
+    /// Start a service on a dedicated owning thread and return a cloneable
+    /// [`ServiceHandle`] plus the thread's join handle. The service is
+    /// constructed INSIDE the thread because the PJRT executor must stay
+    /// on its owning thread (it is deliberately not `Send`). Call
+    /// `handle.shutdown()` and then join to stop it.
+    pub fn spawn(cfg: ServiceConfig) -> Result<(ServiceHandle, JoinHandle<()>)> {
+        let (htx, hrx) = channel();
+        let join = std::thread::Builder::new()
+            .name("sketch-service".into())
+            .spawn(move || {
+                let svc = match SketchService::start(cfg) {
+                    Ok(svc) => svc,
+                    Err(e) => {
+                        let _ = htx.send(Err(e));
+                        return;
+                    }
+                };
+                let (cmd_tx, cmd_rx) = channel();
+                let _ = htx.send(Ok(svc.handle(cmd_tx)));
+                svc.run_cmd_loop(cmd_rx);
+            })?;
+        match hrx.recv() {
+            Ok(Ok(handle)) => Ok((handle, join)),
+            Ok(Err(e)) => {
+                let _ = join.join();
+                Err(e)
+            }
+            Err(_) => {
+                let _ = join.join();
+                Err(anyhow!("service thread died during startup"))
+            }
+        }
     }
 
     /// Graceful shutdown.
@@ -564,9 +659,98 @@ mod tests {
         }
         svc.flush();
         let st = svc.stats();
-        assert!(st.inserts == 5000);
-        // stored + shed accounting is consistent
-        assert!(st.stored_points as u64 + st.shed <= 5000);
+        assert_eq!(st.inserts, 5000);
+        // Point-denominated shed accounting must reconcile EXACTLY: with
+        // eta = 0 every offered point is either stored or counted shed.
+        assert_eq!(
+            st.stored_points as u64 + st.shed,
+            5000,
+            "shed must be point-denominated: {st:?}"
+        );
         svc.shutdown();
+    }
+
+    #[test]
+    fn batched_shed_accounting_is_point_denominated() {
+        // InsertBatch commands carry up to 64 points each; a shed command
+        // must count all of its points, not 1. The queue-level command
+        // counter stays available as a diagnostic and is necessarily <=
+        // the point count whenever batches shed.
+        let mut cfg = small_cfg();
+        cfg.queue_cap = 1;
+        cfg.overload = Overload::Shed;
+        let mut svc = SketchService::start(cfg).unwrap();
+        let mut rng = Rng::new(7);
+        let pts: Vec<Vec<f32>> = (0..4096)
+            .map(|_| (0..8).map(|_| rng.gaussian_f32()).collect())
+            .collect();
+        let ok = svc.insert_batch(pts);
+        svc.flush();
+        let st = svc.stats();
+        assert_eq!(st.inserts, 4096);
+        assert_eq!(
+            st.stored_points as u64 + st.shed,
+            4096,
+            "point accounting: {st:?}"
+        );
+        assert_eq!(ok as u64, 4096 - st.shed, "accepted = offered - shed");
+        assert!(
+            svc.shed_commands() <= st.shed,
+            "commands ({}) can never exceed points ({})",
+            svc.shed_commands(),
+            st.shed
+        );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn handle_parity_and_shared_counters() {
+        // The same stream through a ServiceHandle must build the same
+        // sketch state as driving the service directly, and every handle
+        // operation must land in the shared counters.
+        let mut rng = Rng::new(11);
+        let pts: Vec<Vec<f32>> = (0..150)
+            .map(|_| (0..8).map(|_| rng.gaussian_f32()).collect())
+            .collect();
+        let mut direct = SketchService::start(small_cfg()).unwrap();
+        direct.insert_batch(pts.clone());
+        direct.flush();
+        let want = direct.query_batch(pts[..20].to_vec());
+        let (want_sums, want_dens) = direct.kde_batch(pts[..20].to_vec());
+        direct.shutdown();
+
+        let (handle, join) = SketchService::spawn(small_cfg()).unwrap();
+        let h2 = handle.clone();
+        assert_eq!(handle.insert_batch(pts[..75].to_vec()), 75);
+        assert_eq!(h2.insert_batch(pts[75..].to_vec()), 75);
+        handle.flush().unwrap();
+        let got = handle.query_batch(pts[..20].to_vec()).unwrap();
+        assert_eq!(got, want, "handle ingest must build identical state");
+        let (sums, dens) = h2.kde_batch(pts[..20].to_vec()).unwrap();
+        assert_eq!(sums, want_sums);
+        assert_eq!(dens, want_dens);
+        let st = handle.stats().unwrap();
+        assert_eq!(st.inserts, 150, "clones share one counter set");
+        assert_eq!(st.ann_queries, 20);
+        assert_eq!(st.kde_queries, 20);
+        assert_eq!(st.stored_points as u64 + st.shed, 150);
+        handle.shutdown();
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn handle_delete_routes_like_service() {
+        let (handle, join) = SketchService::spawn(small_cfg()).unwrap();
+        let p: Vec<f32> = (0..8).map(|i| i as f32 * 0.1).collect();
+        assert!(handle.insert(p.clone()));
+        handle.flush().unwrap();
+        assert!(handle.delete(p.clone()), "must delete the stored copy");
+        assert!(!handle.delete(p.clone()), "second delete no-op");
+        handle.flush().unwrap();
+        let ans = handle.query_batch(vec![p]).unwrap();
+        assert!(ans[0].is_none(), "deleted point must not answer");
+        assert_eq!(handle.stats().unwrap().deletes, 2);
+        handle.shutdown();
+        join.join().unwrap();
     }
 }

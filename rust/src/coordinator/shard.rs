@@ -245,7 +245,10 @@ impl Shard {
                 let sums = self.kde.query_batch(self.kde_family.as_ref(), &flat);
                 let _ = reply.send(ShardKdeResult {
                     kernel_sums: sums,
-                    population: self.kde.now().min(self.kde.window()),
+                    // Point-denominated live population (exact for the
+                    // coordinator's per-point ticks; EH-estimated under
+                    // add_batch ingest).
+                    population: self.kde.population().round() as u64,
                 });
             }
             ShardCmd::Stats(reply) => {

@@ -17,6 +17,7 @@ pub mod coordinator;
 pub mod data;
 pub mod lsh;
 pub mod metrics;
+pub mod net;
 pub mod runtime;
 pub mod sketch;
 pub mod storage;

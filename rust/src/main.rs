@@ -5,6 +5,8 @@
 //!   ann   [--dataset --n ...]    one streaming ANN run with metrics
 //!   kde   [--dataset --rows ...] one sliding-window KDE run with metrics
 //!   serve [--n --shards ...]     demo serving loop over a synthetic stream
+//!   serve --listen ADDR          TCP wire server (net::frame protocol)
+//!   client --connect ADDR        wire client + load generator
 //!
 //! Every experiment-grade sweep lives in `cargo bench` targets (see
 //! DESIGN.md §4); these subcommands are the single-run operational surface.
@@ -18,7 +20,8 @@ use sublinear_sketch::data::datasets;
 use sublinear_sketch::lsh::pstable::PStableLsh;
 use sublinear_sketch::lsh::srp::SrpLsh;
 use sublinear_sketch::metrics;
-use sublinear_sketch::metrics::latency::Throughput;
+use sublinear_sketch::metrics::latency::{LatencyRecorder, Throughput};
+use sublinear_sketch::net::{SketchClient, WireServer};
 use sublinear_sketch::sketch::ann::{SAnn, SAnnConfig};
 use sublinear_sketch::sketch::SwAkde;
 use sublinear_sketch::util::rng::Rng;
@@ -35,6 +38,19 @@ USAGE:
                 [--window 450] [--eps 0.1] [--seed 42]
   sketchd serve [--n 20000] [--shards 4] [--batch 64] [--config file.toml]
                 [--use-pjrt]
+  sketchd serve --listen HOST:PORT [--dim 32] [--n 100000] [--shards 4]
+                [--eta 0.0] [--config file.toml] [--addr-file PATH]
+                [--use-pjrt]
+      Serve the coordinator over TCP (length-prefixed binary protocol,
+      see rust/src/net/frame.rs). --listen 127.0.0.1:0 picks a free
+      port; the bound address is printed and, with --addr-file, written
+      to PATH for scripts. A client Shutdown frame stops the server.
+  sketchd client --connect HOST:PORT [--n 10000] [--queries 256]
+                 [--batch 64] [--connections 1] [--seed 42] [--shutdown]
+      Load generator: streams --n random inserts in --batch-sized
+      batches over --connections sockets, then issues batched ANN + KDE
+      queries (drawn from the inserted points) and reports throughput
+      and p50/p99 latency. --shutdown stops the server afterwards.
 ";
 
 fn main() -> Result<()> {
@@ -47,7 +63,9 @@ fn main() -> Result<()> {
         Some("info") => cmd_info(),
         Some("ann") => cmd_ann(&args),
         Some("kde") => cmd_kde(&args),
+        Some("serve") if args.has("listen") => cmd_serve_wire(&args),
         Some("serve") => cmd_serve(&args),
+        Some("client") => cmd_client(&args),
         _ => {
             print!("{USAGE}");
             Ok(())
@@ -320,5 +338,194 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stats.shed
     );
     svc.shutdown();
+    Ok(())
+}
+
+/// `serve --listen`: the TCP wire server. The service runs on its own
+/// owning thread (PJRT executor pinned there); this thread accepts
+/// connections until a client sends a Shutdown frame.
+fn cmd_serve_wire(args: &Args) -> Result<()> {
+    let listen = args.require("listen")?;
+    let dim = args.get_usize("dim", 32)?;
+    let n = args.get_usize("n", 100_000)?;
+    let config = match args.flag("config") {
+        Some(path) => Config::load(std::path::Path::new(path))?,
+        None => Config::empty(),
+    };
+    let mut svc_cfg = config.service(dim, n)?;
+    svc_cfg.shards = args.get_usize("shards", svc_cfg.shards)?;
+    svc_cfg.use_pjrt = svc_cfg.use_pjrt || args.has("use-pjrt");
+    if args.has("eta") {
+        svc_cfg.ann.eta = args.get_f64("eta", svc_cfg.ann.eta)?;
+    } else if args.flag("config").is_none() {
+        // Serving default: store everything (η = 0) so remote inserts are
+        // queryable; opt into sublinear sampling with --eta or [ann] eta.
+        svc_cfg.ann.eta = 0.0;
+    }
+
+    let (handle, join) = SketchService::spawn(svc_cfg.clone())?;
+    let server = WireServer::bind(listen, handle.clone())?;
+    let addr = server.local_addr()?;
+    // Wire ingest hashes shard-side (native batched kernels) — a PJRT
+    // executor on the owning thread accelerates the query path only.
+    println!(
+        "[serve] listening on {addr} dim={dim} shards={} eta={} pjrt_queries={}",
+        svc_cfg.shards, svc_cfg.ann.eta, svc_cfg.use_pjrt
+    );
+    if let Some(path) = args.flag("addr-file") {
+        std::fs::write(path, addr.to_string())?;
+    }
+    server.run()?;
+    println!("[serve] shutdown requested, draining");
+    let stats = handle.stats().unwrap_or_default();
+    handle.shutdown();
+    join.join()
+        .map_err(|_| anyhow::anyhow!("service thread panicked"))?;
+    println!(
+        "[serve] shutdown complete: inserts={} shed={} stored={} ann_q={} kde_q={}",
+        stats.inserts, stats.shed, stats.stored_points, stats.ann_queries, stats.kde_queries
+    );
+    Ok(())
+}
+
+/// Per-connection load-generator result: counts plus latency records.
+struct LoadResult {
+    offered: u64,
+    accepted: u64,
+    answered: usize,
+    queries: usize,
+    kde_density_sum: f64,
+    ann_lat: LatencyRecorder,
+    kde_lat: LatencyRecorder,
+}
+
+fn run_load(
+    addr: &str,
+    n: usize,
+    n_queries: usize,
+    batch: usize,
+    seed: u64,
+) -> Result<LoadResult> {
+    let mut client = SketchClient::connect(addr)?;
+    let dim = client.dim();
+    let mut rng = Rng::new(seed);
+    let mut queries: Vec<Vec<f32>> = Vec::with_capacity(n_queries);
+    let mut accepted = 0u64;
+    let mut offered = 0u64;
+    let mut left = n;
+    while left > 0 {
+        let m = left.min(batch);
+        let pts: Vec<Vec<f32>> = (0..m)
+            .map(|_| (0..dim).map(|_| rng.gaussian_f32()).collect())
+            .collect();
+        for p in &pts {
+            if queries.len() < n_queries {
+                queries.push(p.clone());
+            }
+        }
+        offered += m as u64;
+        accepted += client.insert_batch(&pts)?;
+        left -= m;
+    }
+    client.flush()?;
+    let mut out = LoadResult {
+        offered,
+        accepted,
+        answered: 0,
+        queries: queries.len(),
+        kde_density_sum: 0.0,
+        ann_lat: LatencyRecorder::new(),
+        kde_lat: LatencyRecorder::new(),
+    };
+    for chunk in queries.chunks(batch.max(1)) {
+        let answers = {
+            let t0 = std::time::Instant::now();
+            let a = client.ann_query(chunk)?;
+            out.ann_lat.record(t0.elapsed());
+            a
+        };
+        out.answered += answers.iter().filter(|a| a.is_some()).count();
+        let t0 = std::time::Instant::now();
+        let (_sums, densities) = client.kde_query(chunk)?;
+        out.kde_lat.record(t0.elapsed());
+        out.kde_density_sum += densities.iter().sum::<f64>();
+    }
+    Ok(out)
+}
+
+/// `client`: wire client + load generator (one thread per connection).
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.require("connect")?.to_string();
+    let n = args.get_usize("n", 10_000)?;
+    let n_queries = args.get_usize("queries", 256)?;
+    let batch = args.get_usize("batch", 64)?.max(1);
+    let conns = args.get_usize("connections", 1)?.max(1);
+    let seed = args.get_u64("seed", 42)?;
+
+    // Probe connection: validates the handshake and reports the shape.
+    let probe = SketchClient::connect(&addr)?;
+    println!(
+        "[client] connected to {addr} dim={} shards={} (protocol v{})",
+        probe.dim(),
+        probe.shards(),
+        sublinear_sketch::net::PROTOCOL_VERSION
+    );
+    drop(probe);
+
+    let mut wall = Throughput::new();
+    let workers: Vec<_> = (0..conns)
+        .map(|t| {
+            let addr = addr.clone();
+            let per = n / conns + usize::from(t < n % conns);
+            let q_per = n_queries / conns + usize::from(t < n_queries % conns);
+            std::thread::spawn(move || {
+                run_load(&addr, per, q_per, batch, seed ^ (0x9E37 * (t as u64 + 1)))
+            })
+        })
+        .collect();
+    let mut ann_lat = LatencyRecorder::new();
+    let mut kde_lat = LatencyRecorder::new();
+    let (mut offered, mut accepted, mut answered, mut queries) = (0u64, 0u64, 0usize, 0usize);
+    let mut density_sum = 0.0;
+    for w in workers {
+        let r = w.join().map_err(|_| anyhow::anyhow!("load thread panicked"))??;
+        offered += r.offered;
+        accepted += r.accepted;
+        answered += r.answered;
+        queries += r.queries;
+        density_sum += r.kde_density_sum;
+        ann_lat.merge(&r.ann_lat);
+        kde_lat.merge(&r.kde_lat);
+    }
+    wall.add(offered + 2 * queries as u64);
+    println!(
+        "[client] ingest: offered={offered} accepted={accepted} over {conns} connection(s)"
+    );
+    println!(
+        "[client] ann: answered {answered}/{queries} · batch latency {}",
+        ann_lat.summary()
+    );
+    println!(
+        "[client] kde: mean density {:.4} · batch latency {}",
+        if queries > 0 { density_sum / queries as f64 } else { 0.0 },
+        kde_lat.summary()
+    );
+    println!("[client] total {:.0} ops/s wall", wall.per_second());
+
+    let mut c = SketchClient::connect(&addr)?;
+    let st = c.stats()?;
+    println!(
+        "[client] server stats: inserts={} shed={} stored={} ann_q={} kde_q={} sketch={:.2}MB",
+        st.inserts,
+        st.shed,
+        st.stored_points,
+        st.ann_queries,
+        st.kde_queries,
+        st.sketch_bytes as f64 / 1048576.0
+    );
+    if args.has("shutdown") {
+        c.shutdown_server()?;
+        println!("[client] server shutdown requested");
+    }
     Ok(())
 }

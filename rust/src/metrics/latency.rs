@@ -46,6 +46,12 @@ impl LatencyRecorder {
         self.percentile_us(99.0)
     }
 
+    /// Fold another recorder's samples in — the multi-connection load
+    /// generator records per-thread and merges for one percentile report.
+    pub fn merge(&mut self, other: &LatencyRecorder) {
+        self.samples_us.extend_from_slice(&other.samples_us);
+    }
+
     /// One-line summary for bench tables.
     pub fn summary(&self) -> String {
         format!(
@@ -114,6 +120,17 @@ mod tests {
         let v = r.time(|| 42);
         assert_eq!(v, 42);
         assert_eq!(r.count(), 1);
+    }
+
+    #[test]
+    fn merge_combines_samples() {
+        let mut a = LatencyRecorder::new();
+        let mut b = LatencyRecorder::new();
+        a.record(Duration::from_micros(100));
+        b.record(Duration::from_micros(300));
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!((a.mean_us() - 200.0).abs() < 1.0);
     }
 
     #[test]

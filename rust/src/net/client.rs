@@ -1,0 +1,142 @@
+//! Blocking client for the sketchd wire protocol.
+//!
+//! One request in flight per connection (the server answers in order);
+//! for pipelined load, open several clients — the server runs one reader
+//! thread per connection and the shard mailboxes do the fan-in.
+
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{AnnAnswer, ServiceStats};
+
+use super::frame::{
+    encode_ann_query, encode_delete, encode_insert, encode_insert_batch, encode_kde_query,
+    read_frame, write_frame, Request, Response, PROTOCOL_VERSION,
+};
+
+/// A connected sketchd client (handshake done, dim known).
+pub struct SketchClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    buf: Vec<u8>,
+    dim: usize,
+    shards: usize,
+}
+
+impl SketchClient {
+    /// Connect and handshake; fails on a protocol-version mismatch.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        let mut client = SketchClient {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+            buf: Vec::new(),
+            dim: 0,
+            shards: 0,
+        };
+        match client.call(&Request::Hello)? {
+            Response::Hello { version, dim, shards } => {
+                if version != PROTOCOL_VERSION {
+                    bail!("server speaks protocol {version}, this build {PROTOCOL_VERSION}");
+                }
+                client.dim = dim as usize;
+                client.shards = shards as usize;
+            }
+            other => bail!("handshake got {other:?}"),
+        }
+        Ok(client)
+    }
+
+    /// Vector dimensionality of the remote service.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    fn call(&mut self, req: &Request) -> Result<Response> {
+        self.call_raw(&req.encode())
+    }
+
+    /// One request/response exchange from an already-encoded payload
+    /// (the borrowed-encoder hot path: no owned `Request` clone).
+    fn call_raw(&mut self, payload: &[u8]) -> Result<Response> {
+        write_frame(&mut self.writer, payload)?;
+        if !read_frame(&mut self.reader, &mut self.buf)? {
+            bail!("server closed the connection");
+        }
+        match Response::decode(&self.buf)? {
+            Response::Error(msg) => bail!("server error: {msg}"),
+            resp => Ok(resp),
+        }
+    }
+
+    /// Offer one point; true iff it was accepted (not shed).
+    pub fn insert(&mut self, x: &[f32]) -> Result<bool> {
+        match self.call_raw(&encode_insert(x))? {
+            Response::Ack { accepted } => Ok(accepted == 1),
+            other => bail!("insert got {other:?}"),
+        }
+    }
+
+    /// Offer a batch; returns the number of points accepted.
+    pub fn insert_batch(&mut self, batch: &[Vec<f32>]) -> Result<u64> {
+        match self.call_raw(&encode_insert_batch(batch))? {
+            Response::Ack { accepted } => Ok(accepted),
+            other => bail!("insert_batch got {other:?}"),
+        }
+    }
+
+    /// Turnstile delete; true iff a stored copy was removed.
+    pub fn delete(&mut self, x: &[f32]) -> Result<bool> {
+        match self.call_raw(&encode_delete(x))? {
+            Response::Deleted { removed } => Ok(removed),
+            other => bail!("delete got {other:?}"),
+        }
+    }
+
+    /// Batched (c, r)-ANN; answers align with `queries`.
+    pub fn ann_query(&mut self, queries: &[Vec<f32>]) -> Result<Vec<Option<AnnAnswer>>> {
+        match self.call_raw(&encode_ann_query(queries))? {
+            Response::AnnAnswers(answers) => Ok(answers),
+            other => bail!("ann_query got {other:?}"),
+        }
+    }
+
+    /// Batched sliding-window KDE: (kernel sums, densities).
+    pub fn kde_query(&mut self, queries: &[Vec<f32>]) -> Result<(Vec<f64>, Vec<f64>)> {
+        match self.call_raw(&encode_kde_query(queries))? {
+            Response::KdeAnswers { sums, densities } => Ok((sums, densities)),
+            other => bail!("kde_query got {other:?}"),
+        }
+    }
+
+    /// Aggregate service statistics (drains mailboxes server-side).
+    pub fn stats(&mut self) -> Result<ServiceStats> {
+        match self.call(&Request::Stats)? {
+            Response::Stats(st) => Ok(st),
+            other => bail!("stats got {other:?}"),
+        }
+    }
+
+    /// Barrier: everything this connection inserted is applied on return.
+    pub fn flush(&mut self) -> Result<()> {
+        match self.call(&Request::Flush)? {
+            Response::Ack { .. } => Ok(()),
+            other => bail!("flush got {other:?}"),
+        }
+    }
+
+    /// Ask the server process to stop accepting and shut down.
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        match self.call(&Request::Shutdown)? {
+            Response::Ack { .. } => Ok(()),
+            other => bail!("shutdown got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,622 @@
+//! The sketchd wire protocol: versioned, length-prefixed binary frames.
+//!
+//! ```text
+//! frame   := u32 LE payload length | payload
+//! payload := u8 version (=1) | u8 opcode | body
+//! ```
+//!
+//! All integers are little-endian; floats are IEEE-754 bit patterns, so a
+//! round trip is bit-exact and a remote query returns answers identical to
+//! an in-process call. Vectors are `u32 len | len × f32` (length ≥ 1 —
+//! zero-dimensional vectors are rejected); lists are `u32 count | items`.
+//! Frames are capped at [`MAX_FRAME_BYTES`], every decoded count is
+//! validated against the bytes actually present, and pre-allocations are
+//! capped so a hostile length can never reserve more than the data it
+//! ships — the decoder runs against untrusted peers.
+//!
+//! One request frame begets exactly one response frame, in order, per
+//! connection; the length prefix keeps the stream aligned even when a
+//! request body is rejected, so a malformed body costs an [`Response::Error`]
+//! reply, not the connection.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{AnnAnswer, ServiceStats};
+
+/// Protocol version (first payload byte of every frame).
+pub const PROTOCOL_VERSION: u8 = 1;
+
+/// Hard cap on one frame's payload (64 MiB).
+pub const MAX_FRAME_BYTES: usize = 1 << 26;
+
+/// Cap on any single `Vec::with_capacity` the decoder performs from a
+/// claimed count — growth beyond this is paid for by bytes actually
+/// decoded, never by the claim alone.
+const DECODE_PREALLOC_CAP: usize = 4096;
+
+mod op {
+    pub const HELLO: u8 = 1;
+    pub const INSERT: u8 = 2;
+    pub const INSERT_BATCH: u8 = 3;
+    pub const DELETE: u8 = 4;
+    pub const ANN_QUERY: u8 = 5;
+    pub const KDE_QUERY: u8 = 6;
+    pub const STATS: u8 = 7;
+    pub const FLUSH: u8 = 8;
+    pub const SHUTDOWN: u8 = 9;
+
+    pub const R_HELLO: u8 = 128;
+    pub const R_ACK: u8 = 129;
+    pub const R_DELETED: u8 = 130;
+    pub const R_ANN: u8 = 131;
+    pub const R_KDE: u8 = 132;
+    pub const R_STATS: u8 = 133;
+    pub const R_ERROR: u8 = 134;
+}
+
+/// Client → server frames.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Handshake: the reply carries protocol version + service shape.
+    Hello,
+    Insert(Vec<f32>),
+    InsertBatch(Vec<Vec<f32>>),
+    Delete(Vec<f32>),
+    AnnQuery(Vec<Vec<f32>>),
+    KdeQuery(Vec<Vec<f32>>),
+    Stats,
+    Flush,
+    Shutdown,
+}
+
+/// Server → client frames.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Hello { version: u8, dim: u32, shards: u32 },
+    /// Insert/InsertBatch/Flush/Shutdown: points accepted (0 for the
+    /// control frames).
+    Ack { accepted: u64 },
+    Deleted { removed: bool },
+    AnnAnswers(Vec<Option<AnnAnswer>>),
+    KdeAnswers { sums: Vec<f64>, densities: Vec<f64> },
+    Stats(ServiceStats),
+    Error(String),
+}
+
+// ---------------------------------------------------------------- encode
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_vec_f32(out: &mut Vec<u8>, v: &[f32]) {
+    put_u32(out, v.len() as u32);
+    for &x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_vecs(out: &mut Vec<u8>, vs: &[Vec<f32>]) {
+    put_u32(out, vs.len() as u32);
+    for v in vs {
+        put_vec_f32(out, v);
+    }
+}
+
+fn payload(opcode: u8) -> Vec<u8> {
+    vec![PROTOCOL_VERSION, opcode]
+}
+
+fn encode_vec_req(opcode: u8, v: &[f32]) -> Vec<u8> {
+    let mut out = payload(opcode);
+    put_vec_f32(&mut out, v);
+    out
+}
+
+fn encode_vecs_req(opcode: u8, vs: &[Vec<f32>]) -> Vec<u8> {
+    let mut out = payload(opcode);
+    put_vecs(&mut out, vs);
+    out
+}
+
+/// Borrowed request encoders — the client hot path frames payloads
+/// without first cloning them into an owned [`Request`].
+pub fn encode_insert(v: &[f32]) -> Vec<u8> {
+    encode_vec_req(op::INSERT, v)
+}
+
+pub fn encode_insert_batch(vs: &[Vec<f32>]) -> Vec<u8> {
+    encode_vecs_req(op::INSERT_BATCH, vs)
+}
+
+pub fn encode_delete(v: &[f32]) -> Vec<u8> {
+    encode_vec_req(op::DELETE, v)
+}
+
+pub fn encode_ann_query(vs: &[Vec<f32>]) -> Vec<u8> {
+    encode_vecs_req(op::ANN_QUERY, vs)
+}
+
+pub fn encode_kde_query(vs: &[Vec<f32>]) -> Vec<u8> {
+    encode_vecs_req(op::KDE_QUERY, vs)
+}
+
+impl Request {
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            Request::Hello => payload(op::HELLO),
+            Request::Insert(v) => encode_insert(v),
+            Request::InsertBatch(vs) => encode_insert_batch(vs),
+            Request::Delete(v) => encode_delete(v),
+            Request::AnnQuery(vs) => encode_ann_query(vs),
+            Request::KdeQuery(vs) => encode_kde_query(vs),
+            Request::Stats => payload(op::STATS),
+            Request::Flush => payload(op::FLUSH),
+            Request::Shutdown => payload(op::SHUTDOWN),
+        }
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Request> {
+        let mut c = Cursor::new(bytes)?;
+        let opcode = c.u8()?;
+        let req = match opcode {
+            op::HELLO => Request::Hello,
+            op::INSERT => Request::Insert(c.vec_f32()?),
+            op::INSERT_BATCH => Request::InsertBatch(c.vecs()?),
+            op::DELETE => Request::Delete(c.vec_f32()?),
+            op::ANN_QUERY => Request::AnnQuery(c.vecs()?),
+            op::KDE_QUERY => Request::KdeQuery(c.vecs()?),
+            op::STATS => Request::Stats,
+            op::FLUSH => Request::Flush,
+            op::SHUTDOWN => Request::Shutdown,
+            other => bail!("unknown request opcode {other}"),
+        };
+        c.finish()?;
+        Ok(req)
+    }
+}
+
+impl Response {
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            Response::Hello { version, dim, shards } => {
+                let mut out = payload(op::R_HELLO);
+                out.push(*version);
+                put_u32(&mut out, *dim);
+                put_u32(&mut out, *shards);
+                out
+            }
+            Response::Ack { accepted } => {
+                let mut out = payload(op::R_ACK);
+                put_u64(&mut out, *accepted);
+                out
+            }
+            Response::Deleted { removed } => {
+                let mut out = payload(op::R_DELETED);
+                out.push(u8::from(*removed));
+                out
+            }
+            Response::AnnAnswers(answers) => {
+                let mut out = payload(op::R_ANN);
+                put_u32(&mut out, answers.len() as u32);
+                for a in answers {
+                    match a {
+                        None => out.push(0),
+                        Some(a) => {
+                            out.push(1);
+                            put_u32(&mut out, a.shard as u32);
+                            put_u32(&mut out, a.id);
+                            out.extend_from_slice(&a.dist.to_le_bytes());
+                        }
+                    }
+                }
+                out
+            }
+            Response::KdeAnswers { sums, densities } => {
+                // One count covers both arrays; they are parallel by
+                // construction (kde_batch) — fail at the source, not with
+                // a trailing-bytes decode error on the client.
+                debug_assert_eq!(sums.len(), densities.len());
+                let mut out = payload(op::R_KDE);
+                put_u32(&mut out, sums.len() as u32);
+                for &s in sums {
+                    out.extend_from_slice(&s.to_le_bytes());
+                }
+                for &d in densities {
+                    out.extend_from_slice(&d.to_le_bytes());
+                }
+                out
+            }
+            Response::Stats(st) => {
+                let mut out = payload(op::R_STATS);
+                put_u64(&mut out, st.inserts);
+                put_u64(&mut out, st.deletes);
+                put_u64(&mut out, st.ann_queries);
+                put_u64(&mut out, st.kde_queries);
+                put_u64(&mut out, st.shed);
+                put_u64(&mut out, st.stored_points as u64);
+                put_u64(&mut out, st.sketch_bytes as u64);
+                out
+            }
+            Response::Error(msg) => {
+                let mut out = payload(op::R_ERROR);
+                let b = msg.as_bytes();
+                put_u32(&mut out, b.len() as u32);
+                out.extend_from_slice(b);
+                out
+            }
+        }
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Response> {
+        let mut c = Cursor::new(bytes)?;
+        let opcode = c.u8()?;
+        let resp = match opcode {
+            op::R_HELLO => Response::Hello {
+                version: c.u8()?,
+                dim: c.u32()?,
+                shards: c.u32()?,
+            },
+            op::R_ACK => Response::Ack { accepted: c.u64()? },
+            op::R_DELETED => Response::Deleted { removed: c.u8()? != 0 },
+            op::R_ANN => {
+                let n = c.count(1)?;
+                let mut answers = Vec::with_capacity(n.min(DECODE_PREALLOC_CAP));
+                for _ in 0..n {
+                    answers.push(match c.u8()? {
+                        0 => None,
+                        1 => Some(AnnAnswer {
+                            shard: c.u32()? as usize,
+                            id: c.u32()?,
+                            dist: c.f32()?,
+                        }),
+                        t => bail!("bad ANN answer tag {t}"),
+                    });
+                }
+                Response::AnnAnswers(answers)
+            }
+            op::R_KDE => {
+                let n = c.count(16)?;
+                let mut sums = Vec::with_capacity(n.min(DECODE_PREALLOC_CAP));
+                for _ in 0..n {
+                    sums.push(c.f64()?);
+                }
+                let mut densities = Vec::with_capacity(n.min(DECODE_PREALLOC_CAP));
+                for _ in 0..n {
+                    densities.push(c.f64()?);
+                }
+                Response::KdeAnswers { sums, densities }
+            }
+            op::R_STATS => Response::Stats(ServiceStats {
+                inserts: c.u64()?,
+                deletes: c.u64()?,
+                ann_queries: c.u64()?,
+                kde_queries: c.u64()?,
+                shed: c.u64()?,
+                stored_points: c.u64()? as usize,
+                sketch_bytes: c.u64()? as usize,
+            }),
+            op::R_ERROR => {
+                let n = c.count(1)?;
+                let raw = c.take(n)?;
+                Response::Error(String::from_utf8_lossy(raw).into_owned())
+            }
+            other => bail!("unknown response opcode {other}"),
+        };
+        c.finish()?;
+        Ok(resp)
+    }
+}
+
+// ---------------------------------------------------------------- decode
+
+/// Bounds-checked reader over one frame payload. Verifies the version
+/// byte up front and (via [`Cursor::count`]) that any decoded count fits
+/// in the bytes that are actually present, so a hostile length can never
+/// drive a large allocation.
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(b: &'a [u8]) -> Result<Self> {
+        let mut c = Cursor { b, i: 0 };
+        let v = c.u8()?;
+        if v != PROTOCOL_VERSION {
+            bail!("protocol version {v} (this build speaks {PROTOCOL_VERSION})");
+        }
+        Ok(c)
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            bail!("frame truncated at byte {} (need {n} more)", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A count whose items occupy at least `min_item_bytes` each: rejected
+    /// unless that many bytes are actually present.
+    fn count(&mut self, min_item_bytes: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(min_item_bytes) > self.remaining() {
+            bail!(
+                "count {n} (x{min_item_bytes}B) exceeds the {} bytes present",
+                self.remaining()
+            );
+        }
+        Ok(n)
+    }
+
+    fn vec_f32(&mut self) -> Result<Vec<f32>> {
+        let n = self.count(4)?;
+        if n == 0 {
+            // No service accepts dim-0 vectors, and rejecting them bounds
+            // list amplification: every list item costs ≥ 8 wire bytes.
+            bail!("zero-dimensional vector");
+        }
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn vecs(&mut self) -> Result<Vec<Vec<f32>>> {
+        let n = self.count(8)?;
+        let mut out = Vec::with_capacity(n.min(DECODE_PREALLOC_CAP));
+        for _ in 0..n {
+            out.push(self.vec_f32()?);
+        }
+        Ok(out)
+    }
+
+    fn finish(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            bail!("frame has {} trailing bytes", self.remaining());
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------- framing
+
+/// Write one frame (length prefix + payload) and flush.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME_BYTES {
+        bail!("frame of {} bytes exceeds cap {MAX_FRAME_BYTES}", payload.len());
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame's payload into `buf`. Returns `Ok(false)` on a clean
+/// EOF at a frame boundary (peer closed), `Err` on oversized/short frames.
+pub fn read_frame<R: Read>(r: &mut R, buf: &mut Vec<u8>) -> Result<bool> {
+    let mut lenb = [0u8; 4];
+    if let Err(e) = r.read_exact(&mut lenb) {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            return Ok(false);
+        }
+        return Err(e.into());
+    }
+    let len = u32::from_le_bytes(lenb) as usize;
+    if len == 0 {
+        bail!("empty frame");
+    }
+    if len > MAX_FRAME_BYTES {
+        bail!("frame of {len} bytes exceeds cap {MAX_FRAME_BYTES}");
+    }
+    buf.clear();
+    buf.resize(len, 0);
+    r.read_exact(buf)?;
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Gen};
+
+    fn gen_vec(g: &mut Gen, dim: usize) -> Vec<f32> {
+        g.vector(dim, 2.0)
+    }
+
+    fn gen_vecs(g: &mut Gen) -> Vec<Vec<f32>> {
+        let dim = g.usize_in(1, 16);
+        (0..g.size(0, 20)).map(|_| gen_vec(g, dim)).collect()
+    }
+
+    fn gen_request(g: &mut Gen) -> Request {
+        let pick = g.usize_in(0, 8);
+        let dim = g.usize_in(1, 64);
+        match pick {
+            0 => Request::Hello,
+            1 => Request::Insert(gen_vec(g, dim)),
+            2 => Request::InsertBatch(gen_vecs(g)),
+            3 => Request::Delete(gen_vec(g, dim)),
+            4 => Request::AnnQuery(gen_vecs(g)),
+            5 => Request::KdeQuery(gen_vecs(g)),
+            6 => Request::Stats,
+            7 => Request::Flush,
+            _ => Request::Shutdown,
+        }
+    }
+
+    fn gen_response(g: &mut Gen) -> Response {
+        match g.usize_in(0, 6) {
+            0 => Response::Hello {
+                version: PROTOCOL_VERSION,
+                dim: g.usize_in(1, 1024) as u32,
+                shards: g.usize_in(1, 64) as u32,
+            },
+            1 => Response::Ack { accepted: g.usize_in(0, 1 << 20) as u64 },
+            2 => Response::Deleted { removed: g.bool() },
+            3 => Response::AnnAnswers(
+                (0..g.size(0, 20))
+                    .map(|_| {
+                        if g.bool() {
+                            Some(crate::coordinator::AnnAnswer {
+                                shard: g.usize_in(0, 63),
+                                id: g.usize_in(0, 1 << 20) as u32,
+                                dist: g.f64_in(0.0, 100.0) as f32,
+                            })
+                        } else {
+                            None
+                        }
+                    })
+                    .collect(),
+            ),
+            4 => {
+                let n = g.size(0, 20);
+                Response::KdeAnswers {
+                    sums: (0..n).map(|_| g.f64_in(0.0, 1e6)).collect(),
+                    densities: (0..n).map(|_| g.f64_in(0.0, 1.0)).collect(),
+                }
+            }
+            5 => Response::Stats(crate::coordinator::ServiceStats {
+                inserts: g.usize_in(0, 1 << 30) as u64,
+                deletes: g.usize_in(0, 1 << 20) as u64,
+                ann_queries: g.usize_in(0, 1 << 20) as u64,
+                kde_queries: g.usize_in(0, 1 << 20) as u64,
+                shed: g.usize_in(0, 1 << 20) as u64,
+                stored_points: g.usize_in(0, 1 << 20),
+                sketch_bytes: g.usize_in(0, 1 << 30),
+            }),
+            _ => Response::Error("frame \u{1F980} error".to_string()),
+        }
+    }
+
+    #[test]
+    fn property_request_roundtrip() {
+        check("request_roundtrip", 200, |g| {
+            let req = gen_request(g);
+            let back = Request::decode(&req.encode()).map_err(|e| e.to_string())?;
+            if back != req {
+                return Err(format!("{req:?} != {back:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_response_roundtrip() {
+        check("response_roundtrip", 200, |g| {
+            let resp = gen_response(g);
+            let back = Response::decode(&resp.encode()).map_err(|e| e.to_string())?;
+            if back != resp {
+                return Err(format!("{resp:?} != {back:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_truncation_never_panics() {
+        // Any prefix of a valid payload must decode to a clean error (or,
+        // for request prefixes that happen to be valid frames, an Ok).
+        check("truncation_safe", 100, |g| {
+            let full = gen_request(g).encode();
+            let cut = g.usize_in(0, full.len());
+            let _ = Request::decode(&full[..cut]);
+            let _ = Response::decode(&full[..cut]);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn wrong_version_is_rejected() {
+        let mut bytes = Request::Stats.encode();
+        bytes[0] = 42;
+        let err = Request::decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn unknown_opcode_is_rejected() {
+        let bytes = vec![PROTOCOL_VERSION, 200];
+        assert!(Request::decode(&bytes).is_err());
+        let bytes = vec![PROTOCOL_VERSION, 3];
+        assert!(Response::decode(&bytes).is_err(), "request op as response");
+    }
+
+    #[test]
+    fn hostile_counts_are_rejected_before_allocation() {
+        // Claim 2^32-1 vectors with a 12-byte body.
+        let mut bytes = vec![PROTOCOL_VERSION, super::op::INSERT_BATCH];
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 8]);
+        let err = Request::decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("exceeds"), "{err}");
+        // Same for a single vector length.
+        let mut bytes = vec![PROTOCOL_VERSION, super::op::INSERT];
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Request::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let mut bytes = Request::Flush.encode();
+        bytes.push(0);
+        assert!(Request::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn frame_io_roundtrip_and_eof() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &Request::Hello.encode()).unwrap();
+        write_frame(&mut wire, &Request::Stats.encode()).unwrap();
+        let mut r = &wire[..];
+        let mut buf = Vec::new();
+        assert!(read_frame(&mut r, &mut buf).unwrap());
+        assert_eq!(Request::decode(&buf).unwrap(), Request::Hello);
+        assert!(read_frame(&mut r, &mut buf).unwrap());
+        assert_eq!(Request::decode(&buf).unwrap(), Request::Stats);
+        assert!(!read_frame(&mut r, &mut buf).unwrap(), "clean EOF");
+    }
+
+    #[test]
+    fn oversized_frame_header_is_rejected() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&(u32::MAX).to_le_bytes());
+        wire.extend_from_slice(&[0u8; 16]);
+        let mut r = &wire[..];
+        let mut buf = Vec::new();
+        assert!(read_frame(&mut r, &mut buf).is_err());
+    }
+}

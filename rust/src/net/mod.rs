@@ -1,0 +1,24 @@
+//! L4 — the wire-serving layer: a versioned length-prefixed binary
+//! protocol (`frame`), a thread-per-connection TCP server feeding the
+//! coordinator through its [`ServiceHandle`] seam (`server`), and a
+//! blocking client library (`client`) that doubles as the `sketchd
+//! client` load generator.
+//!
+//! The sketches are exactly the kind of state that belongs behind a
+//! network endpoint: RACE-style summaries are a few KB–MB for arbitrarily
+//! long streams, so one process can absorb a firehose of remote inserts
+//! while answering ANN/KDE queries with in-process semantics — the wire
+//! encodes float bits verbatim, and the integration tests pin
+//! byte-identical answers between a remote client and a local
+//! [`SketchService`] fed the same stream.
+//!
+//! [`ServiceHandle`]: crate::coordinator::ServiceHandle
+//! [`SketchService`]: crate::coordinator::SketchService
+
+pub mod client;
+pub mod frame;
+pub mod server;
+
+pub use client::SketchClient;
+pub use frame::{Request, Response, MAX_FRAME_BYTES, PROTOCOL_VERSION};
+pub use server::WireServer;

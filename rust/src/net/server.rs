@@ -1,0 +1,205 @@
+//! TCP front-end for a running [`SketchService`].
+//!
+//! One reader thread per connection, each holding a [`ServiceHandle`]
+//! clone: inserts stream straight into the per-shard bounded mailboxes
+//! (subject to the service's `Overload` policy), queries are `force`d to
+//! the owning thread and answered in request order. Responses are framed
+//! by `net::frame`, so a malformed request body costs one `Error` reply
+//! and the connection survives.
+//!
+//! [`SketchService`]: crate::coordinator::SketchService
+//! [`ServiceHandle`]: crate::coordinator::ServiceHandle
+
+use std::io::{BufReader, BufWriter};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::ServiceHandle;
+
+use super::frame::{read_frame, write_frame, Request, Response, PROTOCOL_VERSION};
+
+/// A bound listener serving one `SketchService` over TCP.
+pub struct WireServer {
+    listener: TcpListener,
+    handle: ServiceHandle,
+    stop: Arc<AtomicBool>,
+}
+
+impl WireServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port).
+    pub fn bind<A: ToSocketAddrs + std::fmt::Debug>(
+        addr: A,
+        handle: ServiceHandle,
+    ) -> Result<Self> {
+        let listener =
+            TcpListener::bind(&addr).with_context(|| format!("binding {addr:?}"))?;
+        Ok(WireServer {
+            listener,
+            handle,
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// The actually-bound address (resolves `:0` ephemeral ports).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Accept and serve connections until a client sends `Shutdown`.
+    /// Returns cleanly after the shutdown request; the caller still owns
+    /// the service lifecycle (`handle.shutdown()` + join).
+    pub fn run(self) -> Result<()> {
+        let addr = self.local_addr()?;
+        let mut conn_id = 0usize;
+        for stream in self.listener.incoming() {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match stream {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            conn_id += 1;
+            let handle = self.handle.clone();
+            let stop = Arc::clone(&self.stop);
+            // Reader threads detach: they exit on peer close, and after
+            // shutdown the service-side channels report errors instead of
+            // hanging them.
+            let _ = std::thread::Builder::new()
+                .name(format!("wire-conn-{conn_id}"))
+                .spawn(move || {
+                    let _ = serve_conn(stream, handle, stop, addr);
+                });
+        }
+        Ok(())
+    }
+}
+
+fn serve_conn(
+    stream: TcpStream,
+    handle: ServiceHandle,
+    stop: Arc<AtomicBool>,
+    server_addr: SocketAddr,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    let mut buf = Vec::new();
+    loop {
+        if !read_frame(&mut reader, &mut buf)? {
+            return Ok(()); // peer closed
+        }
+        match Request::decode(&buf) {
+            Ok(req) => {
+                let is_shutdown = matches!(req, Request::Shutdown);
+                let resp = dispatch(req, &handle);
+                write_frame(&mut writer, &resp.encode())?;
+                if is_shutdown {
+                    stop.store(true, Ordering::SeqCst);
+                    // Poke the blocking accept() so run() observes `stop`.
+                    // A wildcard bind (0.0.0.0/::) is not connectable on
+                    // every platform — poke via the matching loopback.
+                    let mut poke = server_addr;
+                    if poke.ip().is_unspecified() {
+                        poke.set_ip(match poke.ip() {
+                            std::net::IpAddr::V4(_) => {
+                                std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
+                            }
+                            std::net::IpAddr::V6(_) => {
+                                std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
+                            }
+                        });
+                    }
+                    let _ = TcpStream::connect(poke);
+                    return Ok(());
+                }
+            }
+            // Framing stays aligned (length prefix), so a bad body is an
+            // application-level error, not a connection error.
+            Err(e) => {
+                let resp = Response::Error(format!("bad request: {e}"));
+                write_frame(&mut writer, &resp.encode())?;
+            }
+        }
+    }
+}
+
+/// Validate remote vectors: right dimension, finite coordinates. A NaN
+/// slipped into the pool would be unanswerable AND undeletable (NaN
+/// compares unequal to itself), i.e. unreclaimable memory from untrusted
+/// input — reject it at the edge.
+fn check_vectors(handle: &ServiceHandle, vs: &[Vec<f32>]) -> Result<(), Response> {
+    let dim = handle.dim();
+    for v in vs {
+        if v.len() != dim {
+            return Err(Response::Error(format!(
+                "vector of dim {} against a dim-{dim} service",
+                v.len()
+            )));
+        }
+        if !v.iter().all(|x| x.is_finite()) {
+            return Err(Response::Error(
+                "vector has non-finite coordinates".to_string(),
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn dispatch(req: Request, handle: &ServiceHandle) -> Response {
+    match req {
+        Request::Hello => Response::Hello {
+            version: PROTOCOL_VERSION,
+            dim: handle.dim() as u32,
+            shards: handle.shards() as u32,
+        },
+        Request::Insert(x) => {
+            if let Err(resp) = check_vectors(handle, std::slice::from_ref(&x)) {
+                return resp;
+            }
+            Response::Ack { accepted: u64::from(handle.insert(x)) }
+        }
+        Request::InsertBatch(vs) => {
+            if let Err(resp) = check_vectors(handle, &vs) {
+                return resp;
+            }
+            Response::Ack { accepted: handle.insert_batch(vs) as u64 }
+        }
+        Request::Delete(x) => {
+            if let Err(resp) = check_vectors(handle, std::slice::from_ref(&x)) {
+                return resp;
+            }
+            Response::Deleted { removed: handle.delete(x) }
+        }
+        Request::AnnQuery(qs) => {
+            if let Err(resp) = check_vectors(handle, &qs) {
+                return resp;
+            }
+            match handle.query_batch(qs) {
+                Ok(answers) => Response::AnnAnswers(answers),
+                Err(e) => Response::Error(e.to_string()),
+            }
+        }
+        Request::KdeQuery(qs) => {
+            if let Err(resp) = check_vectors(handle, &qs) {
+                return resp;
+            }
+            match handle.kde_batch(qs) {
+                Ok((sums, densities)) => Response::KdeAnswers { sums, densities },
+                Err(e) => Response::Error(e.to_string()),
+            }
+        }
+        Request::Stats => match handle.stats() {
+            Ok(st) => Response::Stats(st),
+            Err(e) => Response::Error(e.to_string()),
+        },
+        Request::Flush => match handle.flush() {
+            Ok(()) => Response::Ack { accepted: 0 },
+            Err(e) => Response::Error(e.to_string()),
+        },
+        Request::Shutdown => Response::Ack { accepted: 0 },
+    }
+}

@@ -70,26 +70,120 @@ pub fn save_sann(ann: &SAnn) -> Vec<u8> {
     out
 }
 
-/// Restore an S-ANN sketch from [`save_sann`] bytes.
+/// Caps on header-controlled sizes. Snapshots are restored from files a
+/// serving process did not necessarily write itself, so every allocation
+/// the header implies must be bounded BEFORE it happens: a hostile u64
+/// `dim` would otherwise overflow `dim * 4` or drive `vec![0f32; dim]` /
+/// `SAnn::new` (projection is `dim · k · L` floats) into absurd requests.
+const MAX_DIM: u64 = 1 << 20;
+const MAX_N_MAX: u64 = 1 << 44;
+const MAX_L_CAP: u64 = 1 << 16;
+/// Projection-matrix elements (`dim · k · L`) the derived params may imply
+/// (1 GiB of f32 — far above any legitimate config, far below a DoS).
+const MAX_PROJ_ELEMS: u64 = 1 << 28;
+
+/// Raw (untrusted) header fields as read off the wire.
+struct RawHeader {
+    dim: u64,
+    n_max: u64,
+    eta: f64,
+    r: f64,
+    c: f64,
+    w: f64,
+    l_cap: u64,
+    seed: u64,
+}
+
+/// Reject headers whose config cannot have come from [`save_sann`] (which
+/// serializes an `SAnn` that was constructed, i.e. passed the library's
+/// own asserts) or whose derived table parameters imply absurd
+/// allocations. Returns the validated config.
+fn validate_header(h: &RawHeader) -> Result<SAnnConfig> {
+    if h.dim == 0 || h.dim > MAX_DIM {
+        bail!("snapshot dim {} outside (0, {MAX_DIM}]", h.dim);
+    }
+    if h.n_max < 2 || h.n_max > MAX_N_MAX {
+        bail!("snapshot n_max {} outside [2, {MAX_N_MAX}]", h.n_max);
+    }
+    if h.l_cap == 0 || h.l_cap > MAX_L_CAP {
+        bail!("snapshot l_cap {} outside (0, {MAX_L_CAP}]", h.l_cap);
+    }
+    for (name, v) in [("eta", h.eta), ("r", h.r), ("c", h.c), ("w", h.w)] {
+        if !v.is_finite() {
+            bail!("snapshot {name} is not finite");
+        }
+    }
+    if !(0.0..=1.0).contains(&h.eta) {
+        bail!("snapshot eta {} outside [0, 1]", h.eta);
+    }
+    if h.r <= 0.0 || h.w <= 0.0 {
+        bail!("snapshot r/w must be positive (r={}, w={})", h.r, h.w);
+    }
+    if h.c <= 1.0 {
+        bail!("snapshot c {} must be > 1", h.c);
+    }
+    let cfg = SAnnConfig {
+        dim: h.dim as usize,
+        n_max: h.n_max as usize,
+        eta: h.eta,
+        r: h.r,
+        c: h.c,
+        w: h.w,
+        l_cap: h.l_cap as usize,
+        seed: h.seed,
+    };
+    // Derive the table parameters the constructor would (cheap, no
+    // allocation) and bound the projection they imply: a near-1 p₂ (e.g. a
+    // huge w relative to c·r) drives k → enormous even with sane fields.
+    let params = crate::lsh::params::AnnParams::derive(
+        &cfg.sensitivity(),
+        cfg.n_max,
+        cfg.eta,
+        cfg.l_cap,
+    );
+    let proj = (params.k as u64)
+        .checked_mul(params.l as u64)
+        .and_then(|f| f.checked_mul(h.dim));
+    match proj {
+        Some(p) if p <= MAX_PROJ_ELEMS => Ok(cfg),
+        _ => bail!(
+            "snapshot config implies a {}x{} hash projection over dim {} (> {MAX_PROJ_ELEMS} elements)",
+            params.k,
+            params.l,
+            h.dim
+        ),
+    }
+}
+
+/// Restore an S-ANN sketch from [`save_sann`] bytes. Headers are
+/// untrusted: sizes use checked arithmetic and the implied payload must
+/// match the snapshot length exactly before anything is allocated.
 pub fn load_sann(bytes: &[u8]) -> Result<SAnn> {
     let mut r = Reader { b: bytes, i: 0 };
     if r.take(8)? != MAGIC {
         bail!("not an S-ANN snapshot (bad magic)");
     }
-    let dim = r.u64()? as usize;
-    let n_max = r.u64()? as usize;
-    let eta = r.f64()?;
-    let cfg = SAnnConfig {
-        dim,
-        n_max,
-        eta,
+    let header = RawHeader {
+        dim: r.u64()?,
+        n_max: r.u64()?,
+        eta: r.f64()?,
         r: r.f64()?,
         c: r.f64()?,
         w: r.f64()?,
-        l_cap: r.u64()? as usize,
+        l_cap: r.u64()?,
         seed: r.u64()?,
     };
-    let n_live = r.u64()? as usize;
+    let cfg = validate_header(&header)?;
+    let n_live = r.u64()?;
+    let implied = n_live
+        .checked_mul(header.dim)
+        .and_then(|v| v.checked_mul(4))
+        .with_context(|| format!("snapshot payload size overflows (n_live={n_live})"))?;
+    let present = (bytes.len() - r.i) as u64;
+    if implied != present {
+        bail!("snapshot header implies {implied} payload bytes, {present} present");
+    }
+    let dim = cfg.dim;
     let mut ann = SAnn::new(cfg);
     let mut buf = vec![0f32; dim];
     for _ in 0..n_live {
@@ -190,6 +284,77 @@ mod tests {
         let mut extra = save_sann(&ann);
         extra.push(0);
         assert!(load_sann(&extra).is_err(), "trailing bytes");
+    }
+
+    // Header byte offsets (after the 8-byte magic).
+    const OFF_DIM: usize = 8;
+    const OFF_ETA: usize = 24;
+    const OFF_R: usize = 32;
+    const OFF_C: usize = 40;
+    const OFF_W: usize = 48;
+    const OFF_L_CAP: usize = 56;
+    const OFF_N_LIVE: usize = 72;
+
+    fn patch_u64(bytes: &mut [u8], off: usize, v: u64) {
+        bytes[off..off + 8].copy_from_slice(&v.to_le_bytes());
+    }
+
+    fn patch_f64(bytes: &mut [u8], off: usize, v: f64) {
+        bytes[off..off + 8].copy_from_slice(&v.to_le_bytes());
+    }
+
+    #[test]
+    fn hostile_dim_is_rejected_before_allocation() {
+        let ann = build(5);
+        // dim * 4 overflows u64; naive code would wrap, slice garbage, or
+        // try a monstrous vec![0f32; dim].
+        for dim in [u64::MAX, u64::MAX / 4 + 1, 1 << 32, 0] {
+            let mut bytes = save_sann(&ann);
+            patch_u64(&mut bytes, OFF_DIM, dim);
+            assert!(load_sann(&bytes).is_err(), "dim={dim} must be rejected");
+        }
+    }
+
+    #[test]
+    fn hostile_n_live_is_rejected_by_payload_check() {
+        let ann = build(5);
+        for n_live in [u64::MAX, u64::MAX / 4, 1 << 40, 6, 4] {
+            let mut bytes = save_sann(&ann);
+            patch_u64(&mut bytes, OFF_N_LIVE, n_live);
+            assert!(
+                load_sann(&bytes).is_err(),
+                "n_live={n_live} disagrees with the 5-vector payload"
+            );
+        }
+    }
+
+    #[test]
+    fn hostile_config_fields_are_rejected() {
+        let ann = build(3);
+        let cases: [fn(&mut [u8]); 9] = [
+            |b| patch_u64(b, OFF_L_CAP, u64::MAX),
+            |b| patch_u64(b, OFF_L_CAP, 0),
+            |b| patch_f64(b, OFF_ETA, f64::NAN),
+            |b| patch_f64(b, OFF_ETA, 2.0),
+            |b| patch_f64(b, OFF_R, -1.0),
+            |b| patch_f64(b, OFF_R, f64::INFINITY),
+            |b| patch_f64(b, OFF_C, 0.5),
+            |b| patch_f64(b, OFF_W, 0.0),
+            // Near-1 p2: w >> c*r explodes k; must trip the projection cap.
+            |b| patch_f64(b, OFF_W, 1e9),
+        ];
+        for (i, patch) in cases.iter().enumerate() {
+            let mut bytes = save_sann(&ann);
+            patch(&mut bytes);
+            assert!(load_sann(&bytes).is_err(), "case {i} must be rejected");
+        }
+    }
+
+    #[test]
+    fn legitimate_snapshots_still_load_after_hardening() {
+        let ann = build(80);
+        let restored = load_sann(&save_sann(&ann)).unwrap();
+        assert_eq!(restored.stored(), ann.stored());
     }
 
     #[test]

@@ -25,6 +25,14 @@ pub struct SwAkde {
     window: u64,
     /// Current stream time (monotone).
     now: u64,
+    /// Live window POPULATION in points (not ticks): one more EH counting
+    /// every ingested element, so batch ticks (Corollary 4.2, B points at
+    /// one timestamp) debias and normalize correctly. `now.min(window)`
+    /// would undercount by the batch size B.
+    pop: ExpHistogram,
+    /// True once any tick carried ≠ 1 point. While false, the population
+    /// is exactly `now.min(window)` and the EH estimate (±ε') is skipped.
+    had_batch_tick: bool,
     /// Raw-slot scratch reused across updates/queries (no per-op alloc).
     scratch: Vec<i64>,
     /// Cell-index scratch for the single-point kernel path.
@@ -53,6 +61,8 @@ impl SwAkde {
             eps_eh,
             window,
             now: 0,
+            pop: ExpHistogram::new(eps_eh, window),
+            had_batch_tick: false,
             scratch: Vec::new(),
             cells_scratch: Vec::new(),
             est_scratch: Vec::new(),
@@ -102,6 +112,7 @@ impl SwAkde {
     pub fn add<F: LshFamily + ?Sized>(&mut self, fam: &F, x: &[f32]) {
         self.now += 1;
         let t = self.now;
+        self.pop.add(t);
         let mut idxs = std::mem::take(&mut self.cells_scratch);
         let mut scratch = std::mem::take(&mut self.scratch);
         idxs.resize(self.hasher.rows, 0);
@@ -117,8 +128,15 @@ impl SwAkde {
     /// the window is then measured in batches). The whole batch hashes
     /// through one GEMM-shaped kernel call.
     pub fn add_batch<F: LshFamily + ?Sized>(&mut self, fam: &F, batch: &[&[f32]]) {
+        if batch.is_empty() {
+            return; // an empty flush is not a window tick
+        }
         self.now += 1;
         let t = self.now;
+        self.pop.add_count(t, batch.len() as u64);
+        if batch.len() > 1 {
+            self.had_batch_tick = true;
+        }
         let rows = self.hasher.rows;
         let mut flat = std::mem::take(&mut self.flat_scratch);
         flat.clear();
@@ -162,6 +180,7 @@ impl SwAkde {
         for row_cells in idxs.chunks_exact(rows) {
             self.now += 1;
             let t = self.now;
+            self.pop.add(t);
             for (i, &idx) in row_cells.iter().enumerate() {
                 self.cell_mut(i, idx).add(t);
             }
@@ -174,6 +193,7 @@ impl SwAkde {
     pub fn add_slots(&mut self, slots: &[i64]) {
         self.now += 1;
         let t = self.now;
+        self.pop.add(t);
         for i in 0..self.hasher.rows {
             let idx = self.hasher.cell_from_slots(i, slots);
             self.cell_mut(i, idx).add(t);
@@ -259,29 +279,42 @@ impl SwAkde {
         out
     }
 
+    /// Number of POINTS in the live window: exact (`now.min(window)`)
+    /// while every tick has carried exactly one point, a (1±ε') EH
+    /// estimate once `add_batch` has put B > 1 points on one tick.
+    pub fn population(&mut self) -> f64 {
+        if self.had_batch_tick {
+            self.pop.estimate(self.now)
+        } else {
+            self.now.min(self.window) as f64
+        }
+    }
+
     /// Rehash-debiased estimator (mirror of `Race::query_debiased`): under
     /// rehash cells, distinct tuples collide spuriously w.p. ≈ 1/range, so
     /// E\[estimate\] = (1−1/W)·KDE + pop/W over the live window; inverting
-    /// removes the bias. PackBits cells are exact and pass through.
+    /// removes the bias. `pop` is the window population in POINTS
+    /// ([`Self::population`]) — ticks would undercount batch ingest by the
+    /// batch size. PackBits cells are exact and pass through.
     pub fn query_debiased<F: LshFamily + ?Sized>(&mut self, fam: &F, q: &[f32]) -> f64 {
         let raw = self.query(fam, q);
         match self.hasher.map {
             crate::lsh::concat::CellMap::PackBits => raw,
             crate::lsh::concat::CellMap::Rehash => {
                 let w = self.hasher.range as f64;
-                let pop = self.now.min(self.window) as f64;
+                let pop = self.population();
                 ((raw - pop / w) / (1.0 - 1.0 / w)).max(0.0)
             }
         }
     }
 
-    /// Normalized density: kernel sum / window population.
+    /// Normalized density: kernel sum / window population (in points).
     pub fn density<F: LshFamily + ?Sized>(&mut self, fam: &F, q: &[f32]) -> f64 {
-        let live = self.now.min(self.window);
-        if live == 0 {
+        let live = self.population();
+        if live <= 0.0 {
             return 0.0;
         }
-        self.query(fam, q) / live as f64
+        self.query(fam, q) / live
     }
 
     /// Occupied (materialized) cells.
@@ -289,10 +322,11 @@ impl SwAkde {
         self.cells.iter().filter(|c| c.is_some()).count()
     }
 
-    /// Resident bytes: grid slots + live EH structures.
+    /// Resident bytes: grid slots + live EH structures (+ population EH).
     pub fn memory_bytes(&self) -> usize {
         std::mem::size_of::<Self>()
             + self.cells.len() * std::mem::size_of::<Option<Box<ExpHistogram>>>()
+            + self.pop.memory_bytes()
             + self
                 .cells
                 .iter()
@@ -481,6 +515,79 @@ mod tests {
         // All 10 points are q itself: kernel sum = 10, density = 1.
         let d = sw.density(&fam, &q);
         assert!((d - 1.0).abs() < 0.15, "density={d}");
+    }
+
+    #[test]
+    fn population_counts_points_not_ticks_under_batches() {
+        let (dim, rows, range, p) = (6, 8, 8, 2);
+        let fam = SrpLsh::new(dim, rows * p, &mut Rng::new(40));
+        let mut rng = Rng::new(41);
+        // window = 4 ticks, batches of 5 points: live population is 20
+        // points even though only 4 ticks are live.
+        let mut sw = SwAkde::new(rows, range, p, 0.1, 4);
+        for _ in 0..8 {
+            let b = random_points(&mut rng, 5, dim);
+            let refs: Vec<&[f32]> = b.iter().map(|v| v.as_slice()).collect();
+            sw.add_batch(&fam, &refs);
+        }
+        let pop = sw.population();
+        assert!(
+            (pop - 20.0).abs() <= 0.1 * 20.0 + 1e-9,
+            "pop={pop}, want ~20 points (not 4 ticks)"
+        );
+        // Single-point ticks: population is exactly min(now, window).
+        let mut single = SwAkde::new(rows, range, p, 0.1, 100);
+        for x in random_points(&mut rng, 50, dim) {
+            single.add(&fam, &x);
+        }
+        assert_eq!(single.population(), 50.0);
+    }
+
+    #[test]
+    fn density_with_batches_normalizes_by_points() {
+        // 8 batches x 5 copies of q, window = 4 batches: the live window
+        // holds 20 points all equal to q, so density(q) ~ 1. Normalizing
+        // by ticks would report ~5.
+        let (dim, rows, p) = (6, 8, 1);
+        let fam = SrpLsh::new(dim, rows * p, &mut Rng::new(42));
+        let mut rng = Rng::new(43);
+        let q: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+        let mut sw = SwAkde::new_srp(rows, p, 0.1, 4);
+        for _ in 0..8 {
+            let refs: Vec<&[f32]> = (0..5).map(|_| q.as_slice()).collect();
+            sw.add_batch(&fam, &refs);
+        }
+        let d = sw.density(&fam, &q);
+        assert!((d - 1.0).abs() < 0.25, "density={d}, want ~1");
+    }
+
+    #[test]
+    fn debias_uses_point_population_under_batches() {
+        // Rehash cells, batch ingest: 32 batches x 16 points, all far from
+        // the query, window covers everything (512 live points). Spurious
+        // rehash collisions put ~pop/W mass at the query's cells; the
+        // debiased estimate must subtract the POINT population (~512/W =
+        // 32) and land near the truth (~0). Subtracting ticks (32/W = 2)
+        // would leave a residual of ~30.
+        use crate::lsh::pstable::PStableLsh;
+        let (dim, rows, range, p) = (8, 64, 16, 2);
+        let fam = PStableLsh::new(dim, rows * p, 4.0, &mut Rng::new(44));
+        let mut rng = Rng::new(45);
+        let mut sw = SwAkde::new(rows, range, p, 0.05, 32);
+        for _ in 0..32 {
+            // Scattered far-away points: mutually distant AND far from q,
+            // so true kernel mass at q is ~0 and hash tuples are distinct.
+            let b: Vec<Vec<f32>> = (0..16)
+                .map(|_| (0..dim).map(|_| rng.gaussian_f32() * 50.0).collect())
+                .collect();
+            let refs: Vec<&[f32]> = b.iter().map(|v| v.as_slice()).collect();
+            sw.add_batch(&fam, &refs);
+        }
+        let q: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+        let raw = sw.query(&fam, &q);
+        assert!(raw > 20.0, "spurious mass must be visible: raw={raw}");
+        let deb = sw.query_debiased(&fam, &q);
+        assert!(deb < 10.0, "debias must remove ~pop/W: raw={raw} deb={deb}");
     }
 
     #[test]

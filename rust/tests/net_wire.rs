@@ -1,0 +1,246 @@
+//! Full wire-path integration: a TCP client streaming into `sketchd`'s
+//! serving layer must be indistinguishable from calling `SketchService`
+//! in-process with the same seed — identical ANN answers, identical KDE
+//! sums, and point-denominated stats that reconcile with the stream.
+
+use std::thread;
+
+use sublinear_sketch::coordinator::{
+    KdeKernel, Overload, ServiceConfig, SketchService,
+};
+use sublinear_sketch::net::{SketchClient, WireServer};
+use sublinear_sketch::util::rng::Rng;
+
+fn wire_cfg(dim: usize, n: usize) -> ServiceConfig {
+    let mut cfg = ServiceConfig::default_for(dim, n);
+    cfg.shards = 3;
+    cfg.ann.eta = 0.0;
+    cfg.kde.rows = 16;
+    cfg.kde.p = 3;
+    cfg.kde.kernel = KdeKernel::Angular;
+    cfg.kde.window = 600;
+    cfg
+}
+
+fn cluster_points(rng: &mut Rng, n: usize, dim: usize) -> Vec<Vec<f32>> {
+    let centers: Vec<Vec<f32>> = (0..16)
+        .map(|_| (0..dim).map(|_| rng.gaussian_f32() * 3.0).collect())
+        .collect();
+    (0..n)
+        .map(|_| {
+            let c = &centers[rng.below(16) as usize];
+            c.iter().map(|v| v + rng.gaussian_f32() * 0.1).collect()
+        })
+        .collect()
+}
+
+/// One running server stack (service thread + accept thread + a client).
+struct Stack {
+    client: SketchClient,
+    addr: std::net::SocketAddr,
+    srv_join: thread::JoinHandle<anyhow::Result<()>>,
+    handle: sublinear_sketch::coordinator::ServiceHandle,
+    svc_join: thread::JoinHandle<()>,
+}
+
+fn start_stack(cfg: ServiceConfig) -> Stack {
+    let (handle, svc_join) = SketchService::spawn(cfg).unwrap();
+    let server = WireServer::bind("127.0.0.1:0", handle.clone()).unwrap();
+    let addr = server.local_addr().unwrap();
+    let srv_join = thread::spawn(move || server.run());
+    let client = SketchClient::connect(addr).unwrap();
+    Stack { client, addr, srv_join, handle, svc_join }
+}
+
+impl Stack {
+    /// Shut the server and service down, asserting clean exits.
+    fn teardown(mut self) {
+        self.client.shutdown_server().unwrap();
+        drop(self.client);
+        self.srv_join.join().unwrap().unwrap();
+        self.handle.shutdown();
+        self.svc_join.join().unwrap();
+    }
+}
+
+fn run_wire_vs_local(cfg: ServiceConfig) {
+    let dim = cfg.dim;
+    let mut rng = Rng::new(4242);
+    let pts = cluster_points(&mut rng, 1200, dim);
+    let queries = pts[..64].to_vec();
+
+    // Satellite check first: the service's own batched entry point must
+    // report accepted POINTS on this configuration (the PJRT path used to
+    // return 0; `ok == batch.len()` is the contract callers rely on).
+    let mut direct = SketchService::start(cfg.clone()).unwrap();
+    let ok = direct.insert_batch(pts.clone());
+    direct.flush();
+    assert_eq!(ok, 1200, "insert_batch must report accepted points");
+    let dst = direct.stats();
+    assert_eq!(dst.stored_points as u64 + dst.shed, 1200, "{dst:?}");
+    direct.shutdown();
+
+    // In-process reference for the wire comparison: same seed/config, fed
+    // through a ServiceHandle exactly like a connection thread, so the
+    // wire path must reproduce it bit-for-bit in both native and PJRT
+    // configurations.
+    let (local, local_join) = SketchService::spawn(cfg.clone()).unwrap();
+    for chunk in pts.chunks(100) {
+        assert_eq!(local.insert_batch(chunk.to_vec()), chunk.len());
+    }
+    local.flush().unwrap();
+    let local_ann = local.query_batch(queries.clone()).unwrap();
+    let (local_sums, local_dens) = local.kde_batch(queries.clone()).unwrap();
+    local.shutdown();
+    local_join.join().unwrap();
+
+    // Wire path: ≥1k inserts streamed over TCP in batches.
+    let mut stack = start_stack(cfg);
+    assert_eq!(stack.client.dim(), dim);
+    let mut accepted = 0u64;
+    for chunk in pts.chunks(100) {
+        accepted += stack.client.insert_batch(chunk).unwrap();
+    }
+    stack.client.flush().unwrap();
+    assert_eq!(accepted, 1200);
+
+    let wire_ann = stack.client.ann_query(&queries).unwrap();
+    assert_eq!(
+        wire_ann, local_ann,
+        "remote ANN answers must be identical to in-process"
+    );
+    let hits = wire_ann.iter().filter(|a| a.is_some()).count();
+    assert!(hits >= 60, "sanity: clustered queries must hit ({hits}/64)");
+
+    let (wire_sums, wire_dens) = stack.client.kde_query(&queries).unwrap();
+    assert_eq!(wire_sums, local_sums, "KDE sums bit-identical over the wire");
+    assert_eq!(wire_dens, local_dens);
+
+    // Stats over the wire: point-denominated accounting reconciles.
+    let st = stack.client.stats().unwrap();
+    assert_eq!(st.inserts, 1200);
+    assert_eq!(st.ann_queries, 64);
+    assert_eq!(st.kde_queries, 64);
+    assert_eq!(
+        st.stored_points as u64 + st.shed,
+        1200,
+        "inserts must equal stored + shed (points): {st:?}"
+    );
+    assert_eq!(accepted, 1200 - st.shed, "acks reconcile with shed");
+
+    stack.teardown();
+}
+
+#[test]
+fn wire_path_matches_in_process_native() {
+    run_wire_vs_local(wire_cfg(8, 2_000));
+}
+
+#[test]
+fn wire_path_matches_in_process_pjrt() {
+    // Satellite: accepted counts and stats must also reconcile when an
+    // executor is configured (PJRT buffered-ingest path). Gated on built
+    // artifacts, like the other PJRT integration tests.
+    if !sublinear_sketch::runtime::Manifest::default_dir()
+        .join("manifest.json")
+        .exists()
+    {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut cfg = wire_cfg(32, 2_000); // artifact variants exist for 32
+    cfg.use_pjrt = true;
+    run_wire_vs_local(cfg);
+}
+
+#[test]
+fn wire_shed_accounting_is_point_denominated() {
+    let mut cfg = wire_cfg(8, 50_000);
+    cfg.shards = 1;
+    cfg.queue_cap = 2;
+    cfg.overload = Overload::Shed;
+    let mut stack = start_stack(cfg);
+    let mut rng = Rng::new(7);
+    let pts = cluster_points(&mut rng, 4_000, 8);
+    let mut accepted = 0u64;
+    for chunk in pts.chunks(250) {
+        accepted += stack.client.insert_batch(chunk).unwrap();
+    }
+    stack.client.flush().unwrap();
+    let st = stack.client.stats().unwrap();
+    assert_eq!(st.inserts, 4_000);
+    assert_eq!(
+        st.stored_points as u64 + st.shed,
+        4_000,
+        "a shed InsertBatch must count all its points: {st:?}"
+    );
+    assert_eq!(accepted, 4_000 - st.shed);
+    stack.teardown();
+}
+
+#[test]
+fn wire_delete_and_reinsert() {
+    let mut stack = start_stack(wire_cfg(8, 1_000));
+    let c = &mut stack.client;
+    let p: Vec<f32> = (0..8).map(|i| i as f32 * 0.25).collect();
+    assert!(c.insert(&p).unwrap());
+    c.flush().unwrap();
+    assert!(c.delete(&p).unwrap());
+    assert!(!c.delete(&p).unwrap(), "second delete no-op");
+    c.flush().unwrap();
+    assert!(c.ann_query(std::slice::from_ref(&p)).unwrap()[0].is_none());
+    assert!(c.insert(&p).unwrap());
+    c.flush().unwrap();
+    let ans = c.ann_query(std::slice::from_ref(&p)).unwrap();
+    assert!(ans[0].as_ref().unwrap().dist < 1e-5);
+    stack.teardown();
+}
+
+#[test]
+fn wire_rejects_garbage_but_keeps_serving() {
+    let mut stack = start_stack(wire_cfg(8, 1_000));
+    // Dimension mismatch → application error, connection stays usable.
+    assert!(stack.client.insert(&[1.0, 2.0]).is_err());
+    // Non-finite coordinates would be unanswerable AND undeletable (NaN
+    // never equals itself) — rejected at the edge.
+    assert!(stack.client.insert(&[f32::NAN; 8]).is_err());
+    assert!(stack.client.insert(&[f32::INFINITY; 8]).is_err());
+    assert!(stack.client.insert(&[0.5; 8]).unwrap());
+    stack.client.flush().unwrap();
+    assert_eq!(stack.client.stats().unwrap().inserts, 1);
+    stack.teardown();
+}
+
+#[test]
+fn concurrent_wire_clients_share_one_service() {
+    let mut stack = start_stack(wire_cfg(8, 10_000));
+    assert_eq!(stack.client.stats().unwrap().inserts, 0);
+    // Four TCP clients insert concurrently; totals must add up.
+    let writers: Vec<_> = (0..4)
+        .map(|t| {
+            let addr = stack.addr;
+            thread::spawn(move || {
+                let mut c = SketchClient::connect(addr).unwrap();
+                let mut rng = Rng::new(900 + t);
+                let pts: Vec<Vec<f32>> = (0..500)
+                    .map(|_| (0..8).map(|_| rng.gaussian_f32()).collect())
+                    .collect();
+                let mut acc = 0u64;
+                for chunk in pts.chunks(64) {
+                    acc += c.insert_batch(chunk).unwrap();
+                }
+                acc
+            })
+        })
+        .collect();
+    let mut accepted = 0u64;
+    for w in writers {
+        accepted += w.join().unwrap();
+    }
+    stack.client.flush().unwrap();
+    let st = stack.client.stats().unwrap();
+    assert_eq!(st.inserts, 2_000);
+    assert_eq!(st.stored_points as u64 + st.shed, 2_000);
+    assert_eq!(accepted, 2_000 - st.shed);
+    stack.teardown();
+}
