@@ -4,11 +4,14 @@
 //! Cargo package — the same flow is compiled and executed end-to-end by
 //! `rust/tests/net_wire.rs` and the `sketchd serve/client` CLI.)
 //!
-//! In production the two halves live in different processes (or hosts):
+//! In production the two halves live in different processes (or hosts),
+//! and `--data-dir` makes the server durable — a crash (`kill -9`
+//! included) recovers checkpoint + WAL instead of replaying the stream:
 //!
 //! ```bash
-//! sketchd serve --listen 0.0.0.0:7171 --dim 16          # on the server
-//! sketchd client --connect host:7171 --n 100000         # anywhere else
+//! sketchd serve --listen 0.0.0.0:7171 --dim 16 \
+//!               --data-dir /var/lib/sketchd --checkpoint-every 100000
+//! sketchd client --connect host:7171 --n 100000 --checkpoint
 //! ```
 
 use sublinear_sketch::coordinator::{ServiceConfig, SketchService};
@@ -23,6 +26,10 @@ fn main() -> anyhow::Result<()> {
     // wire server accepts connections and feeds it through a handle.
     let mut cfg = ServiceConfig::default_for(dim, 100_000);
     cfg.ann.eta = 0.0; // serving default: store everything
+    // Durable serving: WAL + checkpoints under data_dir. On a restart
+    // with the same directory, spawn() recovers the sketch state instead
+    // of needing the stream again.
+    cfg.data_dir = Some(std::env::temp_dir().join("sketchd_example"));
     let (handle, svc_join) = SketchService::spawn(cfg)?;
     let server = WireServer::bind("127.0.0.1:0", handle.clone())?;
     let addr = server.local_addr()?;
@@ -65,6 +72,11 @@ fn main() -> anyhow::Result<()> {
         st.shed,
         st.sketch_bytes as f64 / 1048576.0
     );
+
+    // Cut a durable checkpoint over the wire: after this, a server crash
+    // recovers everything above from data_dir (checkpoint + WAL replay).
+    let covered = client.checkpoint()?;
+    println!("checkpoint cut, covering {covered} points");
 
     // ------------------------------------------------------- teardown
     client.shutdown_server()?;

@@ -180,6 +180,34 @@ fn main() {
         record(&mut table, &mut json, "sann.query_batch64.speedup_vs_singles", ns_query / ns, "x");
     }
 
+    // ---- WAL append throughput per fsync mode -------------------------
+    // The durability tax on the ingest path: encode + buffered write
+    // (off), plus an fsync every N records (every:256), plus an fsync per
+    // record (always — the durable-acks ceiling).
+    {
+        use sublinear_sketch::durability::{wal::WalOp, wal::WalWriter, FsyncPolicy};
+        let dim = 128;
+        let pts: Vec<Vec<f32>> = (0..256)
+            .map(|_| (0..dim).map(|_| rng.gaussian_f32()).collect())
+            .collect();
+        let dir = std::env::temp_dir().join(format!("sketchd_bench_wal_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).ok();
+        for (policy, label, iters) in [
+            (FsyncPolicy::Off, "wal.append.off", 200_000usize),
+            (FsyncPolicy::EveryN(256), "wal.append.every256", 100_000),
+            (FsyncPolicy::Always, "wal.append.always", 300),
+        ] {
+            let mut w = WalWriter::open(&dir, 0, 1, policy, 256 << 20).unwrap();
+            let mut i = 0;
+            let ns = time_ns(iters / 20 + 1, iters, || {
+                w.append(WalOp::Insert { retained: true }, &pts[i % 256]).unwrap();
+                i += 1;
+            });
+            record(&mut table, &mut json, label, ns, &format!("dim={dim} record"));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
     // ---- batcher (pure coordinator overhead) --------------------------
     {
         let mut b: Batcher<u64> = Batcher::new(BatchPolicy::default());

@@ -113,6 +113,12 @@ impl Config {
             "shed" => Overload::Shed,
             other => anyhow::bail!("service.overload must be block|shed, got {other:?}"),
         };
+        let fsync = match self.file.get("service", "fsync") {
+            Some(v) => crate::durability::FsyncPolicy::parse(v)?,
+            None => crate::durability::FsyncPolicy::default(),
+        };
+        let every_points = self.u64("service", "checkpoint_every_points", 0);
+        let every_secs = self.u64("service", "checkpoint_every_secs", 0);
         Ok(ServiceConfig {
             dim,
             shards: self.usize("service", "shards", 4).max(1),
@@ -123,6 +129,13 @@ impl Config {
             kde: self.kde()?,
             seed: self.u64("service", "seed", 42),
             use_pjrt: self.bool("service", "use_pjrt", false),
+            data_dir: self
+                .file
+                .get("service", "data_dir")
+                .map(std::path::PathBuf::from),
+            fsync,
+            checkpoint_every_points: (every_points > 0).then_some(every_points),
+            checkpoint_every_secs: (every_secs > 0).then_some(every_secs),
         })
     }
 }
@@ -171,7 +184,24 @@ use_pjrt = true
     #[test]
     fn empty_config_is_all_defaults() {
         let c = Config::empty();
-        assert!(c.service(16, 1000).is_ok());
+        let svc = c.service(16, 1000).unwrap();
+        assert!(svc.data_dir.is_none(), "durability defaults off");
+        assert!(svc.checkpoint_every_points.is_none());
+    }
+
+    #[test]
+    fn durability_section_parses() {
+        let c = Config::parse(
+            "[service]\ndata_dir = \"/tmp/sk\"\nfsync = always\ncheckpoint_every_points = 5000\n",
+        )
+        .unwrap();
+        let svc = c.service(8, 100).unwrap();
+        assert_eq!(svc.data_dir.as_deref(), Some(std::path::Path::new("/tmp/sk")));
+        assert_eq!(svc.fsync, crate::durability::FsyncPolicy::Always);
+        assert_eq!(svc.checkpoint_every_points, Some(5000));
+        assert_eq!(svc.checkpoint_every_secs, None);
+        let bad = Config::parse("[service]\nfsync = banana\n").unwrap();
+        assert!(bad.service(8, 100).is_err());
     }
 
     #[test]

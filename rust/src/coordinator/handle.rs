@@ -65,7 +65,13 @@ pub enum ServiceCmd {
     Ann(Vec<Vec<f32>>, Sender<Vec<Option<AnnAnswer>>>),
     Kde(Vec<Vec<f32>>, Sender<(Vec<f64>, Vec<f64>)>),
     Stats(Sender<ServiceStats>),
-    Flush(Sender<()>),
+    /// Barrier; the reply carries the WAL-sync outcome on durable
+    /// services (a flush ack must not claim durability the disk refused).
+    Flush(Sender<Result<(), String>>),
+    /// Cut a whole-service checkpoint; replies with the number of points
+    /// it covers (the inserts counter at checkpoint time). Errors travel
+    /// as strings so the reply stays plain data.
+    Checkpoint(Sender<Result<u64, String>>),
     Shutdown,
 }
 
@@ -215,9 +221,18 @@ impl ServiceHandle {
     }
 
     /// Barrier: all inserts offered BEFORE this call (from this thread)
-    /// are applied when it returns.
+    /// are applied when it returns Ok — and, on a durable service, synced
+    /// to the WAL (a sync failure surfaces here, never as a silent ack).
     pub fn flush(&self) -> Result<()> {
-        self.call(ServiceCmd::Flush)
+        self.call(ServiceCmd::Flush)?
+            .map_err(|e| anyhow!("flush failed: {e}"))
+    }
+
+    /// Cut a whole-service checkpoint (durable services only). Returns
+    /// the number of points the checkpoint covers.
+    pub fn checkpoint(&self) -> Result<u64> {
+        self.call(ServiceCmd::Checkpoint)?
+            .map_err(|e| anyhow!("checkpoint failed: {e}"))
     }
 
     /// Ask the owning thread to shut the service down (idempotent,

@@ -78,6 +78,16 @@ impl ServiceCounters {
         self.shed_points.load(Ordering::Relaxed)
     }
 
+    /// Overwrite every counter (recovery restore: checkpoint-resident
+    /// values plus whatever WAL replay re-applied on top).
+    pub fn restore(&self, inserts: u64, deletes: u64, ann_queries: u64, kde_queries: u64, shed: u64) {
+        self.inserts.store(inserts, Ordering::Relaxed);
+        self.deletes.store(deletes, Ordering::Relaxed);
+        self.ann_queries.store(ann_queries, Ordering::Relaxed);
+        self.kde_queries.store(kde_queries, Ordering::Relaxed);
+        self.shed_points.store(shed, Ordering::Relaxed);
+    }
+
     /// Stats snapshot of the counters alone (shard-resident fields —
     /// `stored_points`, `sketch_bytes` — are filled in by the service).
     pub fn snapshot(&self) -> ServiceStats {

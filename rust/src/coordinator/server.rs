@@ -11,12 +11,15 @@
 //!            PJRT rerank_l2 artifact (or native fallback) → argmin → reply
 //! ```
 
-use std::sync::mpsc::{channel, Receiver};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
+use crate::durability::{checkpoint, recovery, wal, FsyncPolicy};
 use crate::runtime::Executor;
 use crate::sketch::ann::SAnnConfig;
 
@@ -42,6 +45,18 @@ pub struct ServiceConfig {
     /// Re-rank gathered candidates through the PJRT artifact when true;
     /// pure-native otherwise.
     pub use_pjrt: bool,
+    /// Durability root (WAL segments + checkpoints). `None` = in-memory
+    /// only; `Some` makes startup recover the newest checkpoint + WAL and
+    /// every applied mutation append to the log.
+    pub data_dir: Option<PathBuf>,
+    /// WAL fsync policy (ignored without `data_dir`).
+    pub fsync: FsyncPolicy,
+    /// Background checkpoint trigger: cut one after this many points
+    /// since the last checkpoint (needs `data_dir`).
+    pub checkpoint_every_points: Option<u64>,
+    /// Background checkpoint trigger: cut one after this many seconds,
+    /// if any new points arrived (needs `data_dir`).
+    pub checkpoint_every_secs: Option<u64>,
 }
 
 impl ServiceConfig {
@@ -74,6 +89,10 @@ impl ServiceConfig {
             },
             seed: 42,
             use_pjrt: false,
+            data_dir: None,
+            fsync: FsyncPolicy::default(),
+            checkpoint_every_points: None,
+            checkpoint_every_secs: None,
         }
     }
 }
@@ -104,6 +123,12 @@ pub struct SketchService {
     /// until a shard's buffer fills one artifact batch, so the hash GEMM
     /// runs at full utilization instead of padding 16 rows to 256.
     pending_ingest: Vec<Vec<Vec<f32>>>,
+    /// Epoch of the newest checkpoint (recovered or cut by this process).
+    ckpt_epoch: u64,
+    /// `counters.inserts` at the last checkpoint (points-based trigger).
+    inserts_at_ckpt: u64,
+    /// When the last checkpoint was cut (time-based trigger).
+    last_ckpt_time: Instant,
 }
 
 /// Rows per batched-ingest flush (the hash artifacts' batch dimension).
@@ -111,8 +136,21 @@ const INGEST_FLUSH_ROWS: usize = 256;
 
 impl SketchService {
     /// Spawn shard threads (and the PJRT executor when `use_pjrt`).
+    ///
+    /// With `data_dir` set this is also the recovery path: the newest
+    /// valid checkpoint restores every shard's S-ANN + SW-AKDE state and
+    /// the service counters, then each shard replays its WAL records past
+    /// the checkpoint's high-water mark BEFORE its thread spawns — so by
+    /// the time the service accepts traffic, it answers exactly like the
+    /// uninterrupted process would have.
     pub fn start(cfg: ServiceConfig) -> Result<Self> {
         let per_shard_n = cfg.ann.n_max.div_ceil(cfg.shards).max(2);
+        let mut recovered = match &cfg.data_dir {
+            Some(dir) => Some(recovery::recover(dir, cfg.dim, cfg.shards)?),
+            None => None,
+        };
+        let counters = Arc::new(ServiceCounters::default());
+        let (mut replayed_inserts, mut replayed_deletes) = (0u64, 0u64);
         let mut shards = Vec::with_capacity(cfg.shards);
         for i in 0..cfg.shards {
             let ann_cfg = SAnnConfig { n_max: per_shard_n, ..cfg.ann.clone() };
@@ -120,7 +158,55 @@ impl SketchService {
                 window: (cfg.kde.window / cfg.shards as u64).max(1),
                 ..cfg.kde.clone()
             };
-            let shard = Shard::new(i, ann_cfg, &kde_cfg, cfg.seed ^ 0xD1E5 ^ i as u64);
+            let mut shard = Shard::new(i, ann_cfg, &kde_cfg, cfg.seed ^ 0xD1E5 ^ i as u64);
+            if let (Some(dir), Some(rec)) = (&cfg.data_dir, recovered.as_mut()) {
+                let rs = std::mem::take(&mut rec.shards[i]);
+                let hwm = rs.hwm;
+                if let (Some(ann), Some(kde)) = (rs.sann, rs.swakde) {
+                    shard.restore_state(ann, kde, rs.applied_inserts, rs.applied_deletes)?;
+                }
+                let report = wal::replay(dir, i, hwm, |r| {
+                    match r.op {
+                        wal::WalOp::Insert { .. } => replayed_inserts += 1,
+                        wal::WalOp::Delete => replayed_deletes += 1,
+                    }
+                    shard.replay(r)
+                })?;
+                if let Some((path, off)) = &report.corrupt_at {
+                    // A torn tail from the crash being recovered can only
+                    // sit in the FINAL segment (append-only, one writer):
+                    // truncate it so the next recovery replays cleanly.
+                    // Corruption anywhere else means later segments hold
+                    // records whose preceding mutations were lost —
+                    // recovering past that hole would silently diverge.
+                    let is_final = wal::list_segments(dir, i)?
+                        .last()
+                        .is_some_and(|(_, last)| last == path);
+                    if !is_final {
+                        bail!(
+                            "shard {i}: WAL corruption in non-final segment {} — \
+                             refusing to recover past a hole",
+                            path.display()
+                        );
+                    }
+                    eprintln!(
+                        "[shard-{i}] torn WAL tail after seq {} ({} replayed) — \
+                         truncating {} at byte {off}",
+                        report.last_seq,
+                        report.applied,
+                        path.display()
+                    );
+                    wal::truncate_segment(path, *off)?;
+                }
+                let writer = wal::WalWriter::open(
+                    dir,
+                    i,
+                    report.last_seq.max(rs.hwm) + 1,
+                    cfg.fsync,
+                    wal::DEFAULT_SEGMENT_BYTES,
+                )?;
+                shard.attach_wal(writer);
+            }
             let hash_params = shard.ann_hash_params();
             let kde_params = shard.kde_hash_params();
             let (tx, rx) = bounded(cfg.queue_cap, cfg.overload);
@@ -129,16 +215,30 @@ impl SketchService {
                 .spawn(move || shard.run(rx))?;
             shards.push(ShardHandle { tx, join: Some(join), hash_params, kde_params });
         }
+        let ckpt_epoch = recovered.as_ref().map_or(0, |r| r.epoch);
+        if let Some(rec) = &recovered {
+            counters.restore(
+                rec.counters[0] + replayed_inserts,
+                rec.counters[1] + replayed_deletes,
+                rec.counters[2],
+                rec.counters[3],
+                rec.counters[4],
+            );
+        }
         let executor = if cfg.use_pjrt { Some(Executor::from_default_dir()?) } else { None };
         let router = Router::new(cfg.route, cfg.shards);
         let pending_ingest = vec![Vec::new(); cfg.shards];
+        let inserts_at_ckpt = counters.snapshot().inserts;
         Ok(SketchService {
             cfg,
             shards,
             router,
             executor,
-            counters: Arc::new(ServiceCounters::default()),
+            counters,
             pending_ingest,
+            ckpt_epoch,
+            inserts_at_ckpt,
+            last_ckpt_time: Instant::now(),
         })
     }
 
@@ -414,14 +514,31 @@ impl SketchService {
     }
 
     /// Wait until every shard has drained its mailbox (barrier); pending
-    /// batched-ingest buffers are pushed first.
-    pub fn flush(&mut self) {
+    /// batched-ingest buffers are pushed first. On a durable service the
+    /// barrier also fsyncs each shard's WAL — and a sync failure is
+    /// returned, never swallowed: "flush returned Ok" means "applied AND
+    /// on disk" under every fsync policy.
+    pub fn flush(&mut self) -> Result<()> {
         self.flush_ingest();
+        let mut first_err: Option<String> = None;
         for s in &self.shards {
             let (tx, rx) = channel();
-            if s.tx.force(ShardCmd::Stats(tx)) {
-                let _ = rx.recv();
+            if !s.tx.force(ShardCmd::SyncWal(tx)) {
+                continue; // already shut down: nothing left to sync
             }
+            match rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    first_err.get_or_insert("shard died during flush".to_string());
+                }
+            }
+        }
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(anyhow!("flush barrier failed: {e}")),
         }
     }
 
@@ -457,6 +574,97 @@ impl SketchService {
         self.shards.iter().map(|s| s.tx.shed_count()).sum()
     }
 
+    /// Cut a whole-service checkpoint: flush pending ingest, have every
+    /// shard seal its WAL and serialize its sketches (in mailbox order,
+    /// so each shard's image is consistent with its own high-water mark),
+    /// write the checkpoint file atomically, then GC the sealed WAL
+    /// segments it covers. Returns the number of points covered.
+    pub fn checkpoint(&mut self) -> Result<u64> {
+        let Some(dir) = self.cfg.data_dir.clone() else {
+            bail!("durability is disabled (start the service with a data_dir)");
+        };
+        self.flush_ingest();
+        let mut shard_ckpts = Vec::with_capacity(self.shards.len());
+        for (i, s) in self.shards.iter().enumerate() {
+            let (tx, rx) = channel();
+            if !s.tx.force(ShardCmd::Snapshot(tx)) {
+                bail!("shard {i} mailbox is closed");
+            }
+            let snap = rx
+                .recv()
+                .map_err(|_| anyhow!("shard {i} died during snapshot"))?
+                .map_err(|e| anyhow!("{e}"))?;
+            shard_ckpts.push(checkpoint::ShardCheckpoint {
+                hwm: snap.hwm,
+                applied_inserts: snap.applied_inserts,
+                applied_deletes: snap.applied_deletes,
+                sann: snap.sann,
+                swakde: snap.swakde,
+            });
+        }
+        let counters = self.counters.snapshot();
+        // The stored insert/delete counters derive from the per-shard
+        // APPLIED counts (captured in the same instant as each shard's
+        // hwm), not the global offer-time counters — connection threads
+        // keep offering while the checkpoint is cut, and recovery adds
+        // replayed records on top, so offer-time values would double-count
+        // everything applied between the seal and this snapshot.
+        let applied_inserts: u64 = shard_ckpts.iter().map(|s| s.applied_inserts).sum();
+        let applied_deletes: u64 = shard_ckpts.iter().map(|s| s.applied_deletes).sum();
+        let data = checkpoint::CheckpointData {
+            epoch: self.ckpt_epoch + 1,
+            dim: self.cfg.dim as u64,
+            counters: [
+                applied_inserts + counters.shed,
+                applied_deletes,
+                counters.ann_queries,
+                counters.kde_queries,
+                counters.shed,
+            ],
+            shards: shard_ckpts,
+        };
+        checkpoint::write_atomic(&dir, &data)?;
+        // Only after the rename is durable do the sealed segments die.
+        for (i, sc) in data.shards.iter().enumerate() {
+            if let Err(e) = wal::gc_segments(&dir, i, sc.hwm) {
+                eprintln!("[service] WAL GC for shard {i} failed (will retry next checkpoint): {e}");
+            }
+        }
+        self.ckpt_epoch = data.epoch;
+        // Trigger bookkeeping and the reported coverage both use the
+        // hwm-consistent value (what the checkpoint actually contains),
+        // not the still-moving offer-time counter: points that landed
+        // after the seal count toward the NEXT checkpoint.
+        let covered = data.counters[0];
+        self.inserts_at_ckpt = covered;
+        self.last_ckpt_time = Instant::now();
+        Ok(covered)
+    }
+
+    /// Fire the background checkpoint when either configured trigger is
+    /// due. Time-based triggers only fire if new points arrived — an idle
+    /// service must not rewrite identical checkpoints forever.
+    fn maybe_background_checkpoint(&mut self) {
+        let inserts = self.counters.snapshot().inserts;
+        let new_points = inserts.saturating_sub(self.inserts_at_ckpt);
+        let due_points = self
+            .cfg
+            .checkpoint_every_points
+            .map_or(false, |n| new_points >= n);
+        let due_time = self.cfg.checkpoint_every_secs.map_or(false, |t| {
+            new_points > 0 && self.last_ckpt_time.elapsed().as_secs() >= t
+        });
+        if due_points || due_time {
+            if let Err(e) = self.checkpoint() {
+                eprintln!("[service] background checkpoint failed: {e}");
+                // Push the next attempt a full interval out instead of
+                // hot-looping on a persistent error.
+                self.last_ckpt_time = Instant::now();
+                self.inserts_at_ckpt = inserts;
+            }
+        }
+    }
+
     /// Cloneable ingest/query front for connection threads. Inserts and
     /// deletes go straight to shard mailboxes from the calling thread;
     /// anything that needs the service's own state (queries, stats, flush)
@@ -477,23 +685,51 @@ impl SketchService {
     /// dropped, then shut the shards down. Queries never wait behind
     /// ingest here: handles push inserts directly into the bounded shard
     /// mailboxes, so this loop only ever sees control-plane commands.
+    ///
+    /// With a background checkpoint trigger configured, the loop wakes on
+    /// a short timeout so checkpoints fire on a durable-but-idle control
+    /// plane too (wire ingest flows through shard mailboxes, never
+    /// through this channel). Checkpoints run HERE, on the owning thread,
+    /// so the PJRT executor stays thread-pinned.
     pub fn run_cmd_loop(mut self, rx: Receiver<ServiceCmd>) {
-        while let Ok(cmd) = rx.recv() {
-            match cmd {
-                ServiceCmd::Ann(qs, reply) => {
-                    let _ = reply.send(self.query_batch(qs));
+        let background = self.cfg.data_dir.is_some()
+            && (self.cfg.checkpoint_every_points.is_some()
+                || self.cfg.checkpoint_every_secs.is_some());
+        loop {
+            let cmd = if background {
+                match rx.recv_timeout(Duration::from_millis(200)) {
+                    Ok(cmd) => Some(cmd),
+                    Err(RecvTimeoutError::Timeout) => None,
+                    Err(RecvTimeoutError::Disconnected) => break,
                 }
-                ServiceCmd::Kde(qs, reply) => {
-                    let _ = reply.send(self.kde_batch(qs));
+            } else {
+                match rx.recv() {
+                    Ok(cmd) => Some(cmd),
+                    Err(_) => break,
                 }
-                ServiceCmd::Stats(reply) => {
-                    let _ = reply.send(self.stats());
+            };
+            if let Some(cmd) = cmd {
+                match cmd {
+                    ServiceCmd::Ann(qs, reply) => {
+                        let _ = reply.send(self.query_batch(qs));
+                    }
+                    ServiceCmd::Kde(qs, reply) => {
+                        let _ = reply.send(self.kde_batch(qs));
+                    }
+                    ServiceCmd::Stats(reply) => {
+                        let _ = reply.send(self.stats());
+                    }
+                    ServiceCmd::Flush(reply) => {
+                        let _ = reply.send(self.flush().map_err(|e| e.to_string()));
+                    }
+                    ServiceCmd::Checkpoint(reply) => {
+                        let _ = reply.send(self.checkpoint().map_err(|e| e.to_string()));
+                    }
+                    ServiceCmd::Shutdown => break,
                 }
-                ServiceCmd::Flush(reply) => {
-                    self.flush();
-                    let _ = reply.send(());
-                }
-                ServiceCmd::Shutdown => break,
+            }
+            if background {
+                self.maybe_background_checkpoint();
             }
         }
         self.shutdown();
@@ -570,7 +806,7 @@ mod tests {
         for p in &pts {
             assert!(svc.insert(p.clone()));
         }
-        svc.flush();
+        svc.flush().unwrap();
         let answers = svc.query_batch(pts[..10].to_vec());
         let hits = answers.iter().filter(|a| a.is_some()).count();
         assert!(hits >= 9, "hits={hits}/10");
@@ -593,11 +829,11 @@ mod tests {
         for p in &pts {
             singles.insert(p.clone());
         }
-        singles.flush();
+        singles.flush().unwrap();
         let mut batched = SketchService::start(small_cfg()).unwrap();
         let ok = batched.insert_batch(pts.clone());
         assert_eq!(ok, 120);
-        batched.flush();
+        batched.flush().unwrap();
         let a = singles.query_batch(pts[..20].to_vec());
         let b = batched.query_batch(pts[..20].to_vec());
         assert_eq!(a, b, "batched ingest must build the same sketch state");
@@ -614,7 +850,7 @@ mod tests {
             let p: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
             svc.insert(p);
         }
-        svc.flush();
+        svc.flush().unwrap();
         let q: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
         let (sums, density) = svc.kde_batch(vec![q]);
         assert_eq!(sums.len(), 1);
@@ -628,10 +864,10 @@ mod tests {
         let mut svc = SketchService::start(small_cfg()).unwrap();
         let p: Vec<f32> = (0..8).map(|i| i as f32 * 0.1).collect();
         svc.insert(p.clone());
-        svc.flush();
+        svc.flush().unwrap();
         assert!(svc.delete(p.clone()), "must delete the stored copy");
         assert!(!svc.delete(p.clone()), "second delete no-op");
-        svc.flush();
+        svc.flush().unwrap();
         let ans = svc.query_batch(vec![p]);
         assert!(ans[0].is_none(), "deleted point must not answer");
         svc.shutdown();
@@ -657,7 +893,7 @@ mod tests {
             let p: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
             svc.insert(p); // may shed; must never block forever
         }
-        svc.flush();
+        svc.flush().unwrap();
         let st = svc.stats();
         assert_eq!(st.inserts, 5000);
         // Point-denominated shed accounting must reconcile EXACTLY: with
@@ -685,7 +921,7 @@ mod tests {
             .map(|_| (0..8).map(|_| rng.gaussian_f32()).collect())
             .collect();
         let ok = svc.insert_batch(pts);
-        svc.flush();
+        svc.flush().unwrap();
         let st = svc.stats();
         assert_eq!(st.inserts, 4096);
         assert_eq!(
@@ -704,6 +940,56 @@ mod tests {
     }
 
     #[test]
+    fn checkpoint_requires_data_dir() {
+        let mut svc = SketchService::start(small_cfg()).unwrap();
+        let err = svc.checkpoint().unwrap_err().to_string();
+        assert!(err.contains("durability"), "{err}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn durable_service_checkpoints_and_recovers_counters() {
+        let dir = std::env::temp_dir().join(format!(
+            "sketchd_svc_ckpt_{}_{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        let mut cfg = small_cfg();
+        cfg.data_dir = Some(dir.clone());
+        let mut rng = Rng::new(404);
+        let pts: Vec<Vec<f32>> = (0..120)
+            .map(|_| (0..8).map(|_| rng.gaussian_f32()).collect())
+            .collect();
+        let mut svc = SketchService::start(cfg.clone()).unwrap();
+        for p in &pts[..80] {
+            svc.insert(p.clone());
+        }
+        svc.flush().unwrap();
+        assert_eq!(svc.checkpoint().unwrap(), 80, "covers all 80 points");
+        for p in &pts[80..] {
+            svc.insert(p.clone());
+        }
+        svc.flush().unwrap(); // barrier also syncs the WAL tail
+        svc.shutdown();
+
+        // Restart from the same data_dir: checkpoint + WAL replay.
+        let mut back = SketchService::start(cfg).unwrap();
+        let st = back.stats();
+        assert_eq!(st.inserts, 120, "80 from checkpoint + 40 replayed");
+        assert_eq!(st.stored_points, 120, "eta=0 stores all");
+        assert_eq!(st.shed, 0);
+        // The recovered service keeps serving and checkpointing.
+        let ans = back.query_batch(pts[..10].to_vec());
+        assert!(ans.iter().filter(|a| a.is_some()).count() >= 9);
+        assert_eq!(back.checkpoint().unwrap(), 120);
+        back.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn handle_parity_and_shared_counters() {
         // The same stream through a ServiceHandle must build the same
         // sketch state as driving the service directly, and every handle
@@ -714,7 +1000,7 @@ mod tests {
             .collect();
         let mut direct = SketchService::start(small_cfg()).unwrap();
         direct.insert_batch(pts.clone());
-        direct.flush();
+        direct.flush().unwrap();
         let want = direct.query_batch(pts[..20].to_vec());
         let (want_sums, want_dens) = direct.kde_batch(pts[..20].to_vec());
         direct.shutdown();

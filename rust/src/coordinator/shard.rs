@@ -1,15 +1,22 @@
 //! Shard worker: owns one partition of the service state — an S-ANN
 //! sketch and an SW-AKDE sketch over the points routed to it — and
 //! processes commands from its mailbox on a dedicated thread.
+//!
+//! Durability: the shard thread that APPLIES a mutation also appends its
+//! WAL record, so log order equals apply order by construction (no
+//! cross-thread sequencing), points shed at the mailbox never reach the
+//! log, and the recorded sampler decision makes replay deterministic.
 
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
+use crate::durability::wal::{WalOp, WalRecord, WalWriter};
 use crate::lsh::concat::BoundedHasher;
 use crate::lsh::pstable::PStableLsh;
 use crate::lsh::srp::SrpLsh;
 use crate::lsh::LshFamily;
 use crate::sketch::ann::{SAnn, SAnnConfig};
+use crate::sketch::snapshot;
 use crate::sketch::swakde::SwAkde;
 use crate::util::rng::Rng;
 
@@ -63,7 +70,36 @@ pub enum ShardCmd {
     AnnCandidatesKeys(Arc<Vec<Vec<u64>>>, Sender<ShardCandidates>),
     KdeBatch(super::protocol::QueryBatch, Sender<ShardKdeResult>),
     Stats(Sender<ShardStats>),
+    /// Durability barrier: flush + fsync the WAL, then reply. Kept
+    /// separate from `Stats` so a read-only observability poll never pays
+    /// an fsync or mutates WAL state. The reply carries the sync outcome:
+    /// a flush ack must never claim durability the disk refused.
+    SyncWal(Sender<Result<(), String>>),
+    /// Serialize this shard's full sketch state for a checkpoint. The
+    /// shard seals (syncs + rotates) its WAL first, so the reply's
+    /// high-water mark covers exactly the sealed segments and the
+    /// checkpoint coordinator can GC them after a successful write.
+    Snapshot(Sender<Result<ShardSnapshot, String>>),
     Shutdown,
+}
+
+/// One shard's serialized state, cut at a quiesced point in its mailbox
+/// order (the snapshot command is processed like any other command, so it
+/// reflects exactly the mutations applied — and logged — before it).
+pub struct ShardSnapshot {
+    /// Every WAL record with `seq <= hwm` is captured by this snapshot.
+    pub hwm: u64,
+    /// Points applied by this shard at the same instant as `hwm` —
+    /// consistent with the sealed log by construction, unlike the global
+    /// offer-time counters, which other threads keep incrementing while
+    /// the checkpoint is cut.
+    pub applied_inserts: u64,
+    /// Successful deletes applied at the same instant as `hwm`.
+    pub applied_deletes: u64,
+    /// `sketch::snapshot::save_sann` image.
+    pub sann: Vec<u8>,
+    /// `sketch::snapshot::save_swakde` image.
+    pub swakde: Vec<u8>,
 }
 
 /// Deduplicated candidate reply: each candidate vector ships once per
@@ -95,6 +131,12 @@ pub struct Shard {
     kde: SwAkde,
     kde_family: Box<dyn LshFamily>,
     stats: ShardStats,
+    /// Write-ahead log of applied mutations (None = durability off).
+    wal: Option<WalWriter>,
+    /// A WAL I/O error leaves a hole in the log: further appends are
+    /// pointless and a checkpoint cut past the hole would be wrong, so
+    /// both are refused once this is set.
+    wal_failed: bool,
 }
 
 impl Shard {
@@ -120,7 +162,134 @@ impl Shard {
                 )
             }
         };
-        Shard { index, ann, kde, kde_family, stats: ShardStats::default() }
+        Shard {
+            index,
+            ann,
+            kde,
+            kde_family,
+            stats: ShardStats::default(),
+            wal: None,
+            wal_failed: false,
+        }
+    }
+
+    /// Attach the shard's write-ahead log (recovery/startup only, before
+    /// the shard moves to its thread).
+    pub fn attach_wal(&mut self, wal: WalWriter) {
+        self.wal = Some(wal);
+        self.wal_failed = false;
+    }
+
+    /// Replace the sketch state with checkpoint-restored images, and the
+    /// applied-mutation counts with the checkpoint's (so the NEXT
+    /// checkpoint's counts stay correct). The images must have been saved
+    /// under the SAME config this shard was constructed with — the S-ANN
+    /// family and the KDE family are re-derived from the config seed, so
+    /// a shape mismatch means the data_dir belongs to a
+    /// differently-configured service.
+    pub fn restore_state(
+        &mut self,
+        ann: SAnn,
+        kde: SwAkde,
+        applied_inserts: u64,
+        applied_deletes: u64,
+    ) -> anyhow::Result<()> {
+        if ann.config() != self.ann.config() {
+            anyhow::bail!(
+                "shard {}: checkpoint S-ANN config {:?} does not match the running config {:?}",
+                self.index,
+                ann.config(),
+                self.ann.config()
+            );
+        }
+        let (theirs, mine) = (kde.hasher(), self.kde.hasher());
+        if theirs.p != mine.p
+            || theirs.rows != mine.rows
+            || theirs.range != mine.range
+            || theirs.map != mine.map
+            || kde.window() != self.kde.window()
+            || kde.eps_eh() != self.kde.eps_eh()
+        {
+            anyhow::bail!(
+                "shard {}: checkpoint SW-AKDE shape does not match the running config",
+                self.index
+            );
+        }
+        self.ann = ann;
+        self.kde = kde;
+        self.stats.inserted = applied_inserts;
+        self.stats.deleted = applied_deletes;
+        Ok(())
+    }
+
+    /// Apply one recovered WAL record — the exact code path that applied
+    /// it originally, minus randomness: the logged sampler decision is
+    /// honored instead of re-drawn, so replay is deterministic.
+    pub fn replay(&mut self, rec: &WalRecord) -> anyhow::Result<()> {
+        if rec.vec.len() != self.ann.config().dim {
+            anyhow::bail!(
+                "shard {}: WAL record seq {} has dim {} against a dim-{} shard",
+                self.index,
+                rec.seq,
+                rec.vec.len(),
+                self.ann.config().dim
+            );
+        }
+        match rec.op {
+            WalOp::Insert { retained } => {
+                if retained {
+                    self.ann.insert_retained(&rec.vec);
+                }
+                self.kde.add(self.kde_family.as_ref(), &rec.vec);
+                self.stats.inserted += 1;
+            }
+            WalOp::Delete => {
+                if self.ann.delete(&rec.vec) {
+                    self.stats.deleted += 1;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Append one applied mutation to the WAL (no-op with durability off;
+    /// an I/O failure disables the log — see [`Self::snapshot`]).
+    fn log_wal(&mut self, op: WalOp, x: &[f32]) {
+        if let Some(w) = self.wal.as_mut() {
+            if let Err(e) = w.append(op, x) {
+                eprintln!(
+                    "[shard-{}] WAL append failed, durability disabled: {e}",
+                    self.index
+                );
+                self.wal = None;
+                self.wal_failed = true;
+            }
+        }
+    }
+
+    /// Seal the WAL and serialize the sketch state for a checkpoint.
+    fn snapshot(&mut self) -> Result<ShardSnapshot, String> {
+        if self.wal_failed {
+            return Err(format!(
+                "shard {}: WAL disabled after a write failure; refusing to checkpoint past a hole",
+                self.index
+            ));
+        }
+        if let Some(w) = self.wal.as_mut() {
+            if let Err(e) = w.sync() {
+                return Err(format!("shard {}: syncing WAL: {e}", self.index));
+            }
+            if let Err(e) = w.rotate() {
+                return Err(format!("shard {}: sealing WAL segment: {e}", self.index));
+            }
+        }
+        Ok(ShardSnapshot {
+            hwm: self.wal.as_ref().map_or(0, |w| w.last_seq()),
+            applied_inserts: self.stats.inserted,
+            applied_deletes: self.stats.deleted,
+            sann: snapshot::save_sann(&self.ann),
+            swakde: snapshot::save_swakde(&self.kde),
+        })
     }
 
     /// ANN hashing parameters of this shard, cloned for the server's
@@ -173,37 +342,49 @@ impl Shard {
     pub fn handle(&mut self, cmd: ShardCmd) -> bool {
         match cmd {
             ShardCmd::Insert(x) => {
-                self.ann.insert(&x);
+                let retained = self.ann.insert(&x).is_some();
                 self.kde.add(self.kde_family.as_ref(), &x);
                 self.stats.inserted += 1;
+                self.log_wal(WalOp::Insert { retained }, &x);
             }
             ShardCmd::InsertBatch(batch) => {
                 self.stats.inserted += batch.len() as u64;
-                self.ann.insert_batch(&batch);
+                let kept = self.ann.insert_batch(&batch);
                 let flat: Vec<f32> = batch.iter().flatten().copied().collect();
                 self.kde.add_each(self.kde_family.as_ref(), &flat);
+                if self.wal.is_some() {
+                    for (x, k) in batch.iter().zip(&kept) {
+                        self.log_wal(WalOp::Insert { retained: k.is_some() }, x);
+                    }
+                }
             }
             ShardCmd::InsertWithSlots(x, slots) => {
                 // Sampler decision still applies; slots bypass only hashing.
-                if self.ann.sampler_keep() {
+                let retained = self.ann.sampler_keep();
+                if retained {
                     self.ann.insert_retained_slots(&x, &slots);
                 }
                 self.kde.add(self.kde_family.as_ref(), &x);
                 self.stats.inserted += 1;
+                self.log_wal(WalOp::Insert { retained }, &x);
             }
             ShardCmd::InsertBatchSlots(batch) => {
                 for (x, ann_slots, kde_slots) in batch {
-                    if self.ann.sampler_keep() {
+                    let retained = self.ann.sampler_keep();
+                    if retained {
                         self.ann.insert_retained_slots(&x, &ann_slots);
                     }
                     self.kde.add_slots(&kde_slots);
                     self.stats.inserted += 1;
+                    self.log_wal(WalOp::Insert { retained }, &x);
                 }
             }
             ShardCmd::Delete(x, reply) => {
                 let removed = self.ann.delete(&x);
                 if removed {
                     self.stats.deleted += 1;
+                    // Logged before the ack travels back to the caller.
+                    self.log_wal(WalOp::Delete, &x);
                 }
                 let _ = reply.send(removed);
             }
@@ -256,6 +437,35 @@ impl Shard {
                 self.stats.sketch_bytes = self.ann.memory_bytes() + self.kde.memory_bytes();
                 self.stats.kde_occupied_cells = self.kde.occupied_cells();
                 let _ = reply.send(self.stats.clone());
+            }
+            ShardCmd::SyncWal(reply) => {
+                // The service's flush barrier: make every applied record
+                // durable, so "flush returned Ok" means "applied AND on
+                // disk" under every fsync policy — and a failure reaches
+                // the caller instead of being swallowed.
+                let res = if self.wal_failed {
+                    Err(format!(
+                        "shard {}: durability disabled after an earlier WAL failure",
+                        self.index
+                    ))
+                } else {
+                    match self.wal.as_mut().map(|w| w.sync()) {
+                        None | Some(Ok(())) => Ok(()),
+                        Some(Err(e)) => {
+                            eprintln!(
+                                "[shard-{}] WAL sync failed, durability disabled: {e}",
+                                self.index
+                            );
+                            self.wal = None;
+                            self.wal_failed = true;
+                            Err(format!("shard {}: WAL sync failed: {e}", self.index))
+                        }
+                    }
+                };
+                let _ = reply.send(res);
+            }
+            ShardCmd::Snapshot(reply) => {
+                let _ = reply.send(self.snapshot());
             }
             ShardCmd::Shutdown => return false,
         }
@@ -388,6 +598,97 @@ mod tests {
         tx.send(ShardCmd::Insert(vec![0.5; 8])).unwrap();
         tx.send(ShardCmd::Shutdown).unwrap();
         t.join().unwrap();
+    }
+
+    #[test]
+    fn wal_replay_rebuilds_identical_shard_state() {
+        use crate::durability::{wal, FsyncPolicy};
+        let dir = std::env::temp_dir().join(format!(
+            "sketchd_shard_wal_{}_{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut live = mk_shard();
+        live.attach_wal(
+            wal::WalWriter::open(&dir, 0, 1, FsyncPolicy::Off, u64::MAX).unwrap(),
+        );
+        let mut rng = Rng::new(5150);
+        let pts: Vec<Vec<f32>> = (0..60)
+            .map(|_| (0..8).map(|_| rng.gaussian_f32()).collect())
+            .collect();
+        // Mixed ingest through every mutation path the WAL covers.
+        for p in &pts[..20] {
+            live.handle(ShardCmd::Insert(p.clone()));
+        }
+        live.handle(ShardCmd::InsertBatch(pts[20..55].to_vec()));
+        let (dtx, drx) = channel();
+        live.handle(ShardCmd::Delete(pts[3].clone(), dtx));
+        assert!(drx.recv().unwrap());
+        for p in &pts[55..] {
+            live.handle(ShardCmd::Insert(p.clone()));
+        }
+        // SyncWal is the durability barrier (Stats stays side-effect free).
+        let (wtx, wrx) = channel();
+        live.handle(ShardCmd::SyncWal(wtx));
+        wrx.recv().unwrap().unwrap();
+        let (stx, srx) = channel();
+        live.handle(ShardCmd::Stats(stx));
+        let st = srx.recv().unwrap();
+        assert_eq!(st.inserted, 60);
+        assert_eq!(st.deleted, 1);
+
+        // A fresh shard + full replay must answer identically.
+        let mut rec = mk_shard();
+        let report = wal::replay(&dir, 0, 0, |r| rec.replay(r)).unwrap();
+        assert_eq!(report.applied, 61, "60 inserts + 1 delete");
+        assert!(!report.corrupt_tail);
+        let qb = Arc::new(pts[..12].to_vec());
+        let (tx_a, rx_a) = channel();
+        live.handle(ShardCmd::AnnBatch(Arc::clone(&qb), tx_a));
+        let (tx_b, rx_b) = channel();
+        rec.handle(ShardCmd::AnnBatch(Arc::clone(&qb), tx_b));
+        assert_eq!(rx_a.recv().unwrap().best, rx_b.recv().unwrap().best);
+        let (tx_a, rx_a) = channel();
+        live.handle(ShardCmd::KdeBatch(Arc::clone(&qb), tx_a));
+        let (tx_b, rx_b) = channel();
+        rec.handle(ShardCmd::KdeBatch(qb, tx_b));
+        let (ka, kb) = (rx_a.recv().unwrap(), rx_b.recv().unwrap());
+        assert_eq!(ka.kernel_sums, kb.kernel_sums);
+        assert_eq!(ka.population, kb.population);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_snapshot_seals_wal_and_serializes_state() {
+        use crate::durability::{wal, FsyncPolicy};
+        use crate::sketch::snapshot::{load_sann, load_swakde};
+        let dir = std::env::temp_dir().join(format!(
+            "sketchd_shard_snap_{}_{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut s = mk_shard();
+        s.attach_wal(wal::WalWriter::open(&dir, 0, 1, FsyncPolicy::Off, u64::MAX).unwrap());
+        for i in 0..10 {
+            s.handle(ShardCmd::Insert(vec![i as f32; 8]));
+        }
+        let (tx, rx) = channel();
+        s.handle(ShardCmd::Snapshot(tx));
+        let snap = rx.recv().unwrap().expect("snapshot must succeed");
+        assert_eq!(snap.hwm, 10);
+        assert_eq!(load_sann(&snap.sann).unwrap().stored(), 10);
+        assert!(load_swakde(&snap.swakde).is_ok());
+        // Post-rotation, all sealed segments are ≤ hwm and GC-able.
+        assert_eq!(wal::gc_segments(&dir, 0, snap.hwm).unwrap(), 1);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,0 +1,359 @@
+//! Atomic whole-service checkpoints.
+//!
+//! File layout (little-endian), CRC32-framed like the WAL:
+//!
+//! ```text
+//! checkpoint := magic "SKCKPT01" | u64 epoch | u64 dim | u64 shards
+//!             | 5 × u64 counters (inserts, deletes, ann_q, kde_q, shed)
+//!             | shards × shard | u32 crc32(everything before)
+//! shard      := u64 wal_hwm | u64 applied_inserts | u64 applied_deletes
+//!             | u64 sann_len | sann bytes | u64 swakde_len | swakde bytes
+//! ```
+//!
+//! The per-shard applied counts are captured by the shard thread in the
+//! same instant as its `wal_hwm` (one mailbox command), so they are
+//! exactly consistent with the sealed log — unlike the global counters,
+//! which connection threads keep incrementing while the checkpoint is
+//! being cut and which therefore only carry the query/shed fields
+//! authoritatively.
+//!
+//! The sann/swakde byte blocks are `sketch::snapshot` images and carry
+//! their own magic + hostile-header validation; this layer only checks
+//! framing (lengths against bytes present, whole-file CRC) and identity
+//! (dim / shard count against the running config).
+//!
+//! Atomicity: the file is written to `checkpoint-<epoch>.ckpt.tmp` and
+//! renamed into place — a crash mid-write leaves a `.tmp` that recovery
+//! ignores, never a half-valid checkpoint. The newest previous checkpoint
+//! is kept as a safety margin; anything older is pruned.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::{crc32, sync_dir};
+use crate::util::bytes::{put_u32, put_u64, Reader};
+
+const MAGIC: &[u8; 8] = b"SKCKPT01";
+
+/// Shards a checkpoint may claim (framing sanity; real services run a
+/// handful).
+const MAX_SHARDS: u64 = 1 << 12;
+
+/// One shard's serialized state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardCheckpoint {
+    /// WAL high-water mark: every record with `seq <= hwm` is inside this
+    /// checkpoint; replay starts after it.
+    pub hwm: u64,
+    /// Points this shard had APPLIED at the hwm instant (including
+    /// sampler-dropped ones — they tick the KDE window and are logged).
+    pub applied_inserts: u64,
+    /// Successful turnstile deletes applied at the hwm instant.
+    pub applied_deletes: u64,
+    /// `sketch::snapshot::save_sann` image.
+    pub sann: Vec<u8>,
+    /// `sketch::snapshot::save_swakde` image.
+    pub swakde: Vec<u8>,
+}
+
+/// A decoded (but not yet sketch-validated) checkpoint.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointData {
+    pub epoch: u64,
+    pub dim: u64,
+    /// inserts, deletes, ann_queries, kde_queries, shed — the service's
+    /// point-denominated counters at checkpoint time.
+    pub counters: [u64; 5],
+    pub shards: Vec<ShardCheckpoint>,
+}
+
+impl CheckpointData {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        put_u64(&mut out, self.epoch);
+        put_u64(&mut out, self.dim);
+        put_u64(&mut out, self.shards.len() as u64);
+        for c in self.counters {
+            put_u64(&mut out, c);
+        }
+        for s in &self.shards {
+            put_u64(&mut out, s.hwm);
+            put_u64(&mut out, s.applied_inserts);
+            put_u64(&mut out, s.applied_deletes);
+            put_u64(&mut out, s.sann.len() as u64);
+            out.extend_from_slice(&s.sann);
+            put_u64(&mut out, s.swakde.len() as u64);
+            out.extend_from_slice(&s.swakde);
+        }
+        let crc = crc32(&out);
+        put_u32(&mut out, crc);
+        out
+    }
+
+    /// Decode + validate framing. Untrusted input: lengths are checked
+    /// against the bytes present before anything is sliced, and the
+    /// whole-file CRC must match.
+    pub fn decode(bytes: &[u8]) -> Result<CheckpointData> {
+        if bytes.len() < MAGIC.len() + 4 || &bytes[..8] != MAGIC {
+            bail!("not a checkpoint file (bad magic)");
+        }
+        let body = &bytes[..bytes.len() - 4];
+        let want_crc =
+            u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+        if crc32(body) != want_crc {
+            bail!("checkpoint CRC mismatch");
+        }
+        let mut r = Reader::new(&body[8..]);
+        let epoch = r.u64()?;
+        let dim = r.u64()?;
+        let n_shards = r.u64()?;
+        if n_shards == 0 || n_shards > MAX_SHARDS {
+            bail!("checkpoint claims {n_shards} shards (cap {MAX_SHARDS})");
+        }
+        let counters = [r.u64()?, r.u64()?, r.u64()?, r.u64()?, r.u64()?];
+        let mut shards = Vec::with_capacity(n_shards.min(64) as usize);
+        for _ in 0..n_shards {
+            let hwm = r.u64()?;
+            let applied_inserts = r.u64()?;
+            let applied_deletes = r.u64()?;
+            let sann_len = r.u64()?;
+            let sann = r.take_len(sann_len)?.to_vec();
+            let swakde_len = r.u64()?;
+            let swakde = r.take_len(swakde_len)?.to_vec();
+            shards.push(ShardCheckpoint {
+                hwm,
+                applied_inserts,
+                applied_deletes,
+                sann,
+                swakde,
+            });
+        }
+        r.finish()?;
+        Ok(CheckpointData { epoch, dim, counters, shards })
+    }
+}
+
+fn path_for(data_dir: &Path, epoch: u64) -> PathBuf {
+    data_dir.join(format!("checkpoint-{epoch:020}.ckpt"))
+}
+
+/// All checkpoint files, sorted ascending by epoch.
+pub fn list(data_dir: &Path) -> Result<Vec<(u64, PathBuf)>> {
+    let mut out = Vec::new();
+    let entries = match std::fs::read_dir(data_dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(out),
+    };
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if let Some(rest) = name.strip_prefix("checkpoint-") {
+            if let Some(epoch_str) = rest.strip_suffix(".ckpt") {
+                if let Ok(epoch) = epoch_str.parse::<u64>() {
+                    out.push((epoch, entry.path()));
+                }
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Write atomically: temp file, fsync its contents, rename into place,
+/// then fsync the directory — the rename itself is not durable until the
+/// directory entry is, and WAL GC runs right after this returns, so a
+/// power loss must never persist the unlinks without the rename. Finally
+/// prune all but the newest previous checkpoint.
+pub fn write_atomic(data_dir: &Path, data: &CheckpointData) -> Result<PathBuf> {
+    std::fs::create_dir_all(data_dir)
+        .with_context(|| format!("creating data dir {data_dir:?}"))?;
+    let final_path = path_for(data_dir, data.epoch);
+    let tmp_path = final_path.with_extension("ckpt.tmp");
+    let bytes = data.encode();
+    {
+        let mut f = std::fs::File::create(&tmp_path)
+            .with_context(|| format!("creating {tmp_path:?}"))?;
+        f.write_all(&bytes)?;
+        f.sync_data()?;
+    }
+    std::fs::rename(&tmp_path, &final_path)
+        .with_context(|| format!("renaming checkpoint into place at {final_path:?}"))?;
+    sync_dir(data_dir)?;
+    // Prune: keep this one and the newest predecessor (safety margin —
+    // WAL GC only ever trusts the newest, so older files are dead weight).
+    let all = list(data_dir)?;
+    if all.len() > 2 {
+        for (_, path) in &all[..all.len() - 2] {
+            let _ = std::fs::remove_file(path);
+        }
+        let _ = sync_dir(data_dir);
+    }
+    Ok(final_path)
+}
+
+/// Load the newest checkpoint that decodes cleanly; invalid files are
+/// skipped with a warning (rename atomicity means this only happens under
+/// real disk corruption).
+pub fn load_latest(data_dir: &Path) -> Result<Option<CheckpointData>> {
+    let mut all = list(data_dir)?;
+    all.reverse();
+    for (epoch, path) in all {
+        let bytes =
+            std::fs::read(&path).with_context(|| format!("reading checkpoint {path:?}"))?;
+        match CheckpointData::decode(&bytes) {
+            Ok(data) => return Ok(Some(data)),
+            Err(e) => {
+                eprintln!("[durability] skipping invalid checkpoint epoch {epoch}: {e}");
+            }
+        }
+    }
+    Ok(None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "sketchd_ckpt_{tag}_{}_{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample(epoch: u64) -> CheckpointData {
+        CheckpointData {
+            epoch,
+            dim: 8,
+            counters: [100, 2, 30, 40, 5],
+            shards: vec![
+                ShardCheckpoint {
+                    hwm: 50,
+                    applied_inserts: 49,
+                    applied_deletes: 1,
+                    sann: vec![1, 2, 3],
+                    swakde: vec![9; 10],
+                },
+                ShardCheckpoint {
+                    hwm: 48,
+                    applied_inserts: 48,
+                    applied_deletes: 0,
+                    sann: vec![],
+                    swakde: vec![7],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let data = sample(3);
+        let back = CheckpointData::decode(&data.encode()).unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn corruption_and_truncation_are_rejected() {
+        let bytes = sample(1).encode();
+        for cut in 0..bytes.len() {
+            assert!(CheckpointData::decode(&bytes[..cut]).is_err(), "prefix {cut}");
+        }
+        for i in 0..bytes.len() {
+            let mut m = bytes.clone();
+            m[i] ^= 0x40;
+            assert!(
+                CheckpointData::decode(&m).is_err(),
+                "whole-file CRC must catch a flip at byte {i}"
+            );
+        }
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(CheckpointData::decode(&extra).is_err(), "CRC covers length too");
+    }
+
+    #[test]
+    fn hostile_lengths_are_rejected_before_allocation() {
+        // Hand-build a frame claiming a huge shard count / block length
+        // with a VALID CRC, so the length checks themselves are exercised.
+        let mut body = Vec::new();
+        body.extend_from_slice(MAGIC);
+        body.extend_from_slice(&1u64.to_le_bytes()); // epoch
+        body.extend_from_slice(&8u64.to_le_bytes()); // dim
+        body.extend_from_slice(&u64::MAX.to_le_bytes()); // shards
+        for _ in 0..5 {
+            body.extend_from_slice(&0u64.to_le_bytes());
+        }
+        let crc = crc32(&body);
+        body.extend_from_slice(&crc.to_le_bytes());
+        let err = CheckpointData::decode(&body).unwrap_err().to_string();
+        assert!(err.contains("shards"), "{err}");
+
+        let mut body = Vec::new();
+        body.extend_from_slice(MAGIC);
+        body.extend_from_slice(&1u64.to_le_bytes());
+        body.extend_from_slice(&8u64.to_le_bytes());
+        body.extend_from_slice(&1u64.to_le_bytes()); // one shard
+        for _ in 0..5 {
+            body.extend_from_slice(&0u64.to_le_bytes());
+        }
+        body.extend_from_slice(&0u64.to_le_bytes()); // hwm
+        body.extend_from_slice(&0u64.to_le_bytes()); // applied_inserts
+        body.extend_from_slice(&0u64.to_le_bytes()); // applied_deletes
+        body.extend_from_slice(&u64::MAX.to_le_bytes()); // sann_len: hostile
+        let crc = crc32(&body);
+        body.extend_from_slice(&crc.to_le_bytes());
+        let err = CheckpointData::decode(&body).unwrap_err().to_string();
+        assert!(err.contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn write_load_prune_cycle() {
+        let dir = tmp_dir("cycle");
+        assert!(load_latest(&dir).unwrap().is_none());
+        for epoch in 1..=4 {
+            write_atomic(&dir, &sample(epoch)).unwrap();
+        }
+        let latest = load_latest(&dir).unwrap().unwrap();
+        assert_eq!(latest.epoch, 4);
+        let files = list(&dir).unwrap();
+        assert_eq!(files.len(), 2, "older checkpoints pruned: {files:?}");
+        assert_eq!(files[0].0, 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_newest_falls_back_to_predecessor() {
+        let dir = tmp_dir("fallback");
+        write_atomic(&dir, &sample(1)).unwrap();
+        write_atomic(&dir, &sample(2)).unwrap();
+        // Corrupt epoch 2 on disk.
+        let (_, newest) = list(&dir).unwrap().pop().unwrap();
+        let mut bytes = std::fs::read(&newest).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&newest, &bytes).unwrap();
+        let got = load_latest(&dir).unwrap().unwrap();
+        assert_eq!(got.epoch, 1, "newest is corrupt, predecessor wins");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tmp_files_are_ignored() {
+        let dir = tmp_dir("tmp");
+        write_atomic(&dir, &sample(5)).unwrap();
+        std::fs::write(dir.join("checkpoint-00000000000000000009.ckpt.tmp"), b"junk")
+            .unwrap();
+        assert_eq!(load_latest(&dir).unwrap().unwrap().epoch, 5);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

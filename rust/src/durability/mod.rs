@@ -1,0 +1,175 @@
+//! L5 — the durability engine: the paper's whole premise is that the
+//! sketch, not the stream, is the state worth keeping (O(n^{1+ρ−η})
+//! memory, Thm 3.1) — so a serving process must be able to crash and come
+//! back with the same sketch instead of replaying the full stream.
+//!
+//! Three cooperating pieces:
+//!
+//! * [`wal`] — a per-shard write-ahead log of applied insert/delete
+//!   records (length-prefixed, CRC32-framed, versioned) with segment
+//!   rotation and a configurable [`FsyncPolicy`]. The shard thread that
+//!   applies a mutation also appends its record, so WAL order equals
+//!   apply order by construction — no cross-thread sequencing.
+//! * [`checkpoint`] — atomic whole-service snapshots (write-temp +
+//!   rename) serializing every shard's S-ANN and SW-AKDE state (via
+//!   `sketch::snapshot`) plus the service counters and each shard's WAL
+//!   high-water mark.
+//! * [`recovery`] — on startup, load the newest valid checkpoint and
+//!   replay WAL records past its high-water mark; record sequence
+//!   numbers make replay idempotent. Sealed segments are GC'd after the
+//!   next successful checkpoint.
+//!
+//! Durability points: with `FsyncPolicy::Always` every applied record is
+//! synced before the next command; otherwise flush barriers and every
+//! checkpoint sync the WAL, so "flush returned" means "applied AND
+//! durable" under every policy. Directory entries are fsynced alongside
+//! the files ([`sync_dir`]) — a checkpoint rename or fresh WAL segment
+//! that survives only in a lost directory entry saved nothing.
+
+pub mod checkpoint;
+pub mod recovery;
+pub mod wal;
+
+pub use checkpoint::CheckpointData;
+pub use recovery::Recovered;
+pub use wal::{WalOp, WalRecord, WalWriter};
+
+use anyhow::{bail, Result};
+
+/// Fsync a directory, making the renames/creates/unlinks inside it
+/// durable — file-content fsync alone does not persist the directory
+/// entry, so a checkpoint rename or a fresh WAL segment could vanish on
+/// power loss without this. No-op on platforms where directories cannot
+/// be opened for syncing (non-unix).
+pub fn sync_dir(dir: &std::path::Path) -> Result<()> {
+    #[cfg(unix)]
+    {
+        use anyhow::Context;
+        let f = std::fs::File::open(dir)
+            .with_context(|| format!("opening directory {dir:?} for fsync"))?;
+        f.sync_all()
+            .with_context(|| format!("fsyncing directory {dir:?}"))?;
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = dir;
+    }
+    Ok(())
+}
+
+/// When the WAL fsyncs (buffered bytes always reach the OS at record
+/// granularity under `Always`, and at sync barriers otherwise; fsync is
+/// what survives power loss, the OS page cache is what survives SIGKILL).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// fsync after every appended record (durable acks, slowest).
+    Always,
+    /// fsync every N appended records (bounded loss window).
+    EveryN(u32),
+    /// Never fsync on append; only explicit barriers (flush, checkpoint)
+    /// flush + sync.
+    Off,
+}
+
+impl FsyncPolicy {
+    /// Parse a CLI/config spelling: `always`, `off`, `every`,
+    /// `every:N` / `every=N`, or a bare integer N (= every N records).
+    pub fn parse(s: &str) -> Result<Self> {
+        let s = s.trim();
+        match s {
+            "always" => return Ok(FsyncPolicy::Always),
+            "off" => return Ok(FsyncPolicy::Off),
+            "every" => return Ok(FsyncPolicy::EveryN(256)),
+            _ => {}
+        }
+        let n = s
+            .strip_prefix("every:")
+            .or_else(|| s.strip_prefix("every="))
+            .unwrap_or(s);
+        match n.parse::<u32>() {
+            Ok(n) if n > 0 => Ok(FsyncPolicy::EveryN(n)),
+            _ => bail!("--fsync expects always|off|every:N, got {s:?}"),
+        }
+    }
+}
+
+impl Default for FsyncPolicy {
+    fn default() -> Self {
+        FsyncPolicy::EveryN(256)
+    }
+}
+
+impl std::fmt::Display for FsyncPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FsyncPolicy::Always => write!(f, "always"),
+            FsyncPolicy::EveryN(n) => write!(f, "every:{n}"),
+            FsyncPolicy::Off => write!(f, "off"),
+        }
+    }
+}
+
+/// CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320) — table-driven,
+/// dependency-free. Frames every WAL record and the checkpoint file.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+static CRC32_TABLE: [u32; 256] = make_crc32_table();
+
+const fn make_crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut j = 0;
+        while j < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            j += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // The canonical CRC-32/IEEE check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_ne!(crc32(b"a"), crc32(b"b"));
+    }
+
+    #[test]
+    fn crc32_detects_single_byte_flips() {
+        let base = b"the sketch is the state worth keeping".to_vec();
+        let want = crc32(&base);
+        for i in 0..base.len() {
+            let mut m = base.clone();
+            m[i] ^= 0x01;
+            assert_ne!(crc32(&m), want, "flip at byte {i} must change the crc");
+        }
+    }
+
+    #[test]
+    fn fsync_policy_parses_all_spellings() {
+        assert_eq!(FsyncPolicy::parse("always").unwrap(), FsyncPolicy::Always);
+        assert_eq!(FsyncPolicy::parse("off").unwrap(), FsyncPolicy::Off);
+        assert_eq!(FsyncPolicy::parse("every").unwrap(), FsyncPolicy::EveryN(256));
+        assert_eq!(FsyncPolicy::parse("every:64").unwrap(), FsyncPolicy::EveryN(64));
+        assert_eq!(FsyncPolicy::parse("every=8").unwrap(), FsyncPolicy::EveryN(8));
+        assert_eq!(FsyncPolicy::parse("512").unwrap(), FsyncPolicy::EveryN(512));
+        assert!(FsyncPolicy::parse("sometimes").is_err());
+        assert!(FsyncPolicy::parse("every:0").is_err());
+        assert_eq!(FsyncPolicy::parse("every:64").unwrap().to_string(), "every:64");
+    }
+}

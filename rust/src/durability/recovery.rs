@@ -1,0 +1,92 @@
+//! Startup recovery: newest valid checkpoint + WAL replay past its
+//! high-water mark.
+//!
+//! The split of labor with the coordinator: this module turns on-disk
+//! state into validated in-memory sketch states (`load_sann` /
+//! `load_swakde` images per shard, counters, per-shard hwm); the
+//! coordinator (`SketchService::start`) owns the shards and drives
+//! `wal::replay` with each shard's own apply callback, so replayed
+//! records run through exactly the code path that applied them
+//! originally (S-ANN re-insert of retained points, SW-AKDE window tick
+//! for every point, turnstile delete).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::sketch::snapshot::{load_sann, load_swakde};
+use crate::sketch::{SAnn, SwAkde};
+
+use super::checkpoint;
+
+/// One shard's recovered (checkpoint-resident) state. `None` sketches
+/// mean "no checkpoint yet — start empty and replay the whole WAL".
+#[derive(Default)]
+pub struct RecoveredShard {
+    pub sann: Option<SAnn>,
+    pub swakde: Option<SwAkde>,
+    /// Replay starts after this sequence number.
+    pub hwm: u64,
+    /// Applied mutation counts at the hwm instant (restored into the
+    /// shard so its NEXT checkpoint stays consistent).
+    pub applied_inserts: u64,
+    pub applied_deletes: u64,
+}
+
+/// Whole-service recovered state.
+pub struct Recovered {
+    /// Checkpoint epoch the state came from (0 = no checkpoint found).
+    pub epoch: u64,
+    /// inserts, deletes, ann_queries, kde_queries, shed at checkpoint
+    /// time (WAL replay adds on top).
+    pub counters: [u64; 5],
+    pub shards: Vec<RecoveredShard>,
+}
+
+/// Load the newest valid checkpoint under `data_dir` and decode every
+/// shard's sketch images. `dim`/`shards` are the RUNNING config — a
+/// checkpoint written under a different shape is an operator error, not
+/// something to silently reinterpret.
+pub fn recover(data_dir: &Path, dim: usize, shards: usize) -> Result<Recovered> {
+    std::fs::create_dir_all(data_dir)
+        .with_context(|| format!("creating data dir {data_dir:?}"))?;
+    let Some(data) = checkpoint::load_latest(data_dir)? else {
+        return Ok(Recovered {
+            epoch: 0,
+            counters: [0; 5],
+            shards: (0..shards).map(|_| RecoveredShard::default()).collect(),
+        });
+    };
+    if data.dim != dim as u64 {
+        bail!(
+            "checkpoint epoch {} is for dim {}, service configured with dim {dim}",
+            data.epoch,
+            data.dim
+        );
+    }
+    if data.shards.len() != shards {
+        bail!(
+            "checkpoint epoch {} has {} shards, service configured with {shards} \
+             (resharding a data_dir is not supported)",
+            data.epoch,
+            data.shards.len()
+        );
+    }
+    let mut out = Vec::with_capacity(shards);
+    for (i, sc) in data.shards.iter().enumerate() {
+        let sann = load_sann(&sc.sann).map_err(|e| {
+            e.context(format!("shard {i}: S-ANN image in checkpoint {}", data.epoch))
+        })?;
+        let swakde = load_swakde(&sc.swakde).map_err(|e| {
+            e.context(format!("shard {i}: SW-AKDE image in checkpoint {}", data.epoch))
+        })?;
+        out.push(RecoveredShard {
+            sann: Some(sann),
+            swakde: Some(swakde),
+            hwm: sc.hwm,
+            applied_inserts: sc.applied_inserts,
+            applied_deletes: sc.applied_deletes,
+        });
+    }
+    Ok(Recovered { epoch: data.epoch, counters: data.counters, shards: out })
+}

@@ -15,6 +15,7 @@ pub mod experiments;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod durability;
 pub mod lsh;
 pub mod metrics;
 pub mod net;

@@ -40,17 +40,27 @@ USAGE:
                 [--use-pjrt]
   sketchd serve --listen HOST:PORT [--dim 32] [--n 100000] [--shards 4]
                 [--eta 0.0] [--config file.toml] [--addr-file PATH]
-                [--use-pjrt]
+                [--use-pjrt] [--data-dir DIR] [--fsync always|off|every:N]
+                [--checkpoint-every N] [--checkpoint-secs T]
       Serve the coordinator over TCP (length-prefixed binary protocol,
       see rust/src/net/frame.rs). --listen 127.0.0.1:0 picks a free
       port; the bound address is printed and, with --addr-file, written
       to PATH for scripts. A client Shutdown frame stops the server.
+      With --data-dir the service is DURABLE: every applied insert or
+      delete lands in a per-shard CRC32-framed write-ahead log (fsync
+      per --fsync, default every:256), checkpoints serialize the whole
+      sketch state atomically (--checkpoint-every points and/or
+      --checkpoint-secs seconds, or on a client Checkpoint frame), and
+      a restart on the same --data-dir recovers checkpoint + WAL replay
+      instead of needing the stream again.
   sketchd client --connect HOST:PORT [--n 10000] [--queries 256]
-                 [--batch 64] [--connections 1] [--seed 42] [--shutdown]
+                 [--batch 64] [--connections 1] [--seed 42]
+                 [--checkpoint] [--shutdown]
       Load generator: streams --n random inserts in --batch-sized
       batches over --connections sockets, then issues batched ANN + KDE
       queries (drawn from the inserted points) and reports throughput
-      and p50/p99 latency. --shutdown stops the server afterwards.
+      and p50/p99 latency. --checkpoint cuts a durable checkpoint after
+      the load; --shutdown stops the server afterwards.
 ";
 
 fn main() -> Result<()> {
@@ -311,7 +321,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ingest.add(1);
     }
     svc.insert_batch(ingest_batcher.flush());
-    svc.flush();
+    svc.flush()?;
     println!("[serve] ingest {:.0} pts/s", ingest.per_second());
 
     let mut lat = sublinear_sketch::metrics::latency::LatencyRecorder::new();
@@ -362,6 +372,20 @@ fn cmd_serve_wire(args: &Args) -> Result<()> {
         // queryable; opt into sublinear sampling with --eta or [ann] eta.
         svc_cfg.ann.eta = 0.0;
     }
+    if let Some(dir) = args.flag("data-dir") {
+        svc_cfg.data_dir = Some(std::path::PathBuf::from(dir));
+    }
+    if let Some(mode) = args.flag("fsync") {
+        svc_cfg.fsync = sublinear_sketch::durability::FsyncPolicy::parse(mode)?;
+    }
+    if args.has("checkpoint-every") {
+        let n = args.get_u64("checkpoint-every", 0)?;
+        svc_cfg.checkpoint_every_points = (n > 0).then_some(n);
+    }
+    if args.has("checkpoint-secs") {
+        let t = args.get_u64("checkpoint-secs", 0)?;
+        svc_cfg.checkpoint_every_secs = (t > 0).then_some(t);
+    }
 
     let (handle, join) = SketchService::spawn(svc_cfg.clone())?;
     let server = WireServer::bind(listen, handle.clone())?;
@@ -372,6 +396,17 @@ fn cmd_serve_wire(args: &Args) -> Result<()> {
         "[serve] listening on {addr} dim={dim} shards={} eta={} pjrt_queries={}",
         svc_cfg.shards, svc_cfg.ann.eta, svc_cfg.use_pjrt
     );
+    if let Some(dir) = &svc_cfg.data_dir {
+        // Recovery already ran inside spawn; report what came back.
+        let st = handle.stats().unwrap_or_default();
+        println!(
+            "[serve] durable data_dir={} fsync={} recovered: inserts={} stored={}",
+            dir.display(),
+            svc_cfg.fsync,
+            st.inserts,
+            st.stored_points
+        );
+    }
     if let Some(path) = args.flag("addr-file") {
         std::fs::write(path, addr.to_string())?;
     }
@@ -523,6 +558,10 @@ fn cmd_client(args: &Args) -> Result<()> {
         st.kde_queries,
         st.sketch_bytes as f64 / 1048576.0
     );
+    if args.has("checkpoint") {
+        let points = c.checkpoint()?;
+        println!("[client] checkpoint cut, covering {points} points");
+    }
     if args.has("shutdown") {
         c.shutdown_server()?;
         println!("[client] server shutdown requested");

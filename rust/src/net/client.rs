@@ -132,6 +132,15 @@ impl SketchClient {
         }
     }
 
+    /// Cut a durable whole-service checkpoint on the server (requires it
+    /// to run with `--data-dir`). Returns the points it covers.
+    pub fn checkpoint(&mut self) -> Result<u64> {
+        match self.call(&Request::Checkpoint)? {
+            Response::Checkpointed { points } => Ok(points),
+            other => bail!("checkpoint got {other:?}"),
+        }
+    }
+
     /// Ask the server process to stop accepting and shut down.
     pub fn shutdown_server(&mut self) -> Result<()> {
         match self.call(&Request::Shutdown)? {

@@ -200,6 +200,10 @@ fn dispatch(req: Request, handle: &ServiceHandle) -> Response {
             Ok(()) => Response::Ack { accepted: 0 },
             Err(e) => Response::Error(e.to_string()),
         },
+        Request::Checkpoint => match handle.checkpoint() {
+            Ok(points) => Response::Checkpointed { points },
+            Err(e) => Response::Error(e.to_string()),
+        },
         Request::Shutdown => Response::Ack { accepted: 0 },
     }
 }

@@ -23,7 +23,7 @@ use crate::storage::{TableSet, VecStore};
 use crate::util::l2_sq;
 
 /// Construction parameters for an S-ANN sketch.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SAnnConfig {
     pub dim: usize,
     /// Stream-size upper bound n.

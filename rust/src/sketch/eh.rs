@@ -169,6 +169,66 @@ impl ExpHistogram {
         }
     }
 
+    /// Bucket levels — `levels()[e]` holds the timestamps of the size-2ᵉ
+    /// buckets, front = newest (snapshot/persistence access).
+    pub fn levels(&self) -> &[std::collections::VecDeque<u64>] {
+        &self.buckets
+    }
+
+    /// Most recent timestamp seen (snapshot/persistence access).
+    pub fn last_ts(&self) -> u64 {
+        self.last_ts
+    }
+
+    /// Rebuild from serialized parts (the snapshot restore path). Unlike
+    /// [`ExpHistogram::new`] this never panics: every structural invariant
+    /// a hostile image could violate is validated — level count, per-level
+    /// bucket caps, intra-level timestamp ordering, timestamps vs
+    /// `last_ts` — and TOTAL is recomputed with checked arithmetic.
+    pub fn from_parts(
+        eps: f64,
+        window: u64,
+        levels: Vec<Vec<u64>>,
+        last_ts: u64,
+    ) -> Result<Self, String> {
+        if !(eps > 0.0 && eps <= 1.0) || !eps.is_finite() {
+            return Err(format!("eps {eps} outside (0, 1]"));
+        }
+        if window == 0 {
+            return Err("window must be >= 1".into());
+        }
+        let k = (1.0 / eps).ceil() as usize;
+        let cap = k + 1;
+        if levels.len() > 63 {
+            return Err(format!("{} bucket levels (max 63)", levels.len()));
+        }
+        let mut total: u64 = 0;
+        let mut buckets = Vec::with_capacity(levels.len());
+        for (e, level) in levels.into_iter().enumerate() {
+            if level.len() > cap {
+                return Err(format!("level {e}: {} buckets > cap {cap}", level.len()));
+            }
+            let mut prev = u64::MAX;
+            for &ts in &level {
+                if ts > prev {
+                    return Err(format!("level {e}: timestamps out of order"));
+                }
+                if ts > last_ts {
+                    return Err(format!("level {e}: timestamp {ts} after last_ts {last_ts}"));
+                }
+                prev = ts;
+            }
+            let size = (level.len() as u64)
+                .checked_mul(1u64 << e)
+                .ok_or_else(|| format!("level {e}: bucket mass overflows"))?;
+            total = total
+                .checked_add(size)
+                .ok_or_else(|| format!("level {e}: TOTAL overflows"))?;
+            buckets.push(std::collections::VecDeque::from(level));
+        }
+        Ok(ExpHistogram { k, cap, window, buckets, total, last_ts })
+    }
+
     /// Check invariants 1 & 2 (test/debug hook; O(buckets)).
     pub fn check_invariants(&self) -> Result<(), String> {
         // sizes non-decreasing with age + per-size counts
@@ -412,6 +472,47 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn from_parts_roundtrips_live_state() {
+        let mut eh = ExpHistogram::new(0.1, 128);
+        for t in 1..=1000u64 {
+            if t % 3 != 0 {
+                eh.add(t);
+            }
+        }
+        let levels: Vec<Vec<u64>> =
+            eh.levels().iter().map(|q| q.iter().copied().collect()).collect();
+        let mut back = ExpHistogram::from_parts(0.1, 128, levels, eh.last_ts()).unwrap();
+        assert_eq!(back.total(), eh.total());
+        assert_eq!(back.num_buckets(), eh.num_buckets());
+        for now in [1000u64, 1040, 1100, 1500] {
+            assert_eq!(back.estimate(now), eh.estimate(now), "now={now}");
+        }
+    }
+
+    #[test]
+    fn from_parts_rejects_malformed_levels() {
+        assert!(ExpHistogram::from_parts(0.0, 10, vec![], 0).is_err(), "eps 0");
+        assert!(ExpHistogram::from_parts(1.5, 10, vec![], 0).is_err(), "eps > 1");
+        assert!(ExpHistogram::from_parts(0.1, 0, vec![], 0).is_err(), "window 0");
+        assert!(
+            ExpHistogram::from_parts(0.1, 10, vec![vec![1, 5]], 5).is_err(),
+            "timestamps out of order"
+        );
+        assert!(
+            ExpHistogram::from_parts(0.1, 10, vec![vec![9]], 5).is_err(),
+            "timestamp after last_ts"
+        );
+        assert!(
+            ExpHistogram::from_parts(0.5, 10, vec![vec![5; 50]], 5).is_err(),
+            "overfull level"
+        );
+        assert!(
+            ExpHistogram::from_parts(0.1, 10, vec![Vec::new(); 64], 5).is_err(),
+            "too many levels"
+        );
     }
 
     #[test]

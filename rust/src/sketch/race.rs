@@ -35,6 +35,11 @@ impl Ace {
     pub fn range(&self) -> usize {
         self.counts.len()
     }
+
+    /// The raw counter array (snapshot/persistence access).
+    pub fn counts(&self) -> &[i64] {
+        &self.counts
+    }
 }
 
 /// The R×W counter grid with its bounded concatenated hasher.
@@ -76,8 +81,34 @@ impl Race {
         }
     }
 
+    /// Rebuild from snapshot parts: `counts` is the row-major
+    /// [rows, range] counter grid. The caller (snapshot restore) has
+    /// already validated that `counts.len() == rows * range`.
+    pub fn from_parts(hasher: BoundedHasher, counts: &[i64], population: i64) -> Self {
+        assert_eq!(counts.len(), hasher.rows * hasher.range);
+        let range = hasher.range;
+        Race {
+            rows: counts.chunks_exact(range).map(|c| Ace { counts: c.to_vec() }).collect(),
+            hasher,
+            population,
+            scratch: Vec::new(),
+            cells_scratch: Vec::new(),
+            counts_scratch: Vec::new(),
+        }
+    }
+
     pub fn rows(&self) -> usize {
         self.rows.len()
+    }
+
+    /// The concatenated-hash configuration (snapshot/persistence access).
+    pub fn hasher(&self) -> &BoundedHasher {
+        &self.hasher
+    }
+
+    /// The per-row ACE arrays (snapshot/persistence access).
+    pub fn aces(&self) -> &[Ace] {
+        &self.rows
     }
 
     pub fn range(&self) -> usize {

@@ -1,51 +1,36 @@
-//! Sketch persistence: save/restore S-ANN state across process restarts
+//! Sketch persistence: save/restore sketch state across process restarts
 //! (a serving system must not need a full stream replay to come back).
+//! Three image formats, all little-endian, all magic-versioned, all
+//! validated against hostile headers before any allocation:
 //!
-//! Format (little-endian, versioned): the sketch CONFIG plus the retained
-//! live vectors. Hash tables are rebuilt on load by re-hashing — the LSH
-//! family is a deterministic function of the config seed, so the restored
-//! structure is bit-identical to the saved one; the file stays small
-//! (O(stored · dim) instead of O(tables)). Post-restore ingestion draws
-//! fresh sampler randomness: Bernoulli retention is i.i.d., so the
-//! distributional guarantees (Theorem 3.1) are unaffected.
+//! * **S-ANN** (`save_sann`/`load_sann`): the sketch CONFIG plus the
+//!   retained live vectors. Hash tables are rebuilt on load by re-hashing
+//!   — the LSH family is a deterministic function of the config seed, so
+//!   the restored structure is bit-identical to the saved one; the file
+//!   stays small (O(stored · dim) instead of O(tables)). Post-restore
+//!   ingestion draws fresh sampler randomness: Bernoulli retention is
+//!   i.i.d., so the distributional guarantees (Theorem 3.1) are
+//!   unaffected.
+//! * **RACE** (`save_race`/`load_race`): the bounded-hasher shape plus
+//!   the raw R×W counter grid and net population — RACE's mergeable
+//!   compact state is exactly what makes it worth persisting (CS20).
+//! * **SW-AKDE** (`save_swakde`/`load_swakde`): hasher shape, ε'/window/
+//!   clock, and every occupied cell's Exponential Histogram buckets
+//!   verbatim, so a restored sketch answers windowed queries (and keeps
+//!   expiring) bit-identically to the saved one.
 
 use std::io::{Read, Write};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use super::ann::{SAnn, SAnnConfig};
+use super::eh::ExpHistogram;
+use super::race::Race;
+use super::swakde::SwAkde;
+use crate::lsh::concat::{BoundedHasher, CellMap};
+use crate::util::bytes::{put_f64, put_i64, put_u32, put_u64, put_u8, Reader};
 
 const MAGIC: &[u8; 8] = b"SANNSNP1";
-
-fn put_u64(out: &mut Vec<u8>, v: u64) {
-    out.extend_from_slice(&v.to_le_bytes());
-}
-
-fn put_f64(out: &mut Vec<u8>, v: f64) {
-    out.extend_from_slice(&v.to_le_bytes());
-}
-
-struct Reader<'a> {
-    b: &'a [u8],
-    i: usize,
-}
-
-impl<'a> Reader<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.i + n > self.b.len() {
-            bail!("snapshot truncated at byte {}", self.i);
-        }
-        let s = &self.b[self.i..self.i + n];
-        self.i += n;
-        Ok(s)
-    }
-    fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
-    }
-    fn f64(&mut self) -> Result<f64> {
-        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
-    }
-}
 
 /// Serialize an S-ANN sketch (config + live vectors).
 pub fn save_sann(ann: &SAnn) -> Vec<u8> {
@@ -159,7 +144,7 @@ fn validate_header(h: &RawHeader) -> Result<SAnnConfig> {
 /// untrusted: sizes use checked arithmetic and the implied payload must
 /// match the snapshot length exactly before anything is allocated.
 pub fn load_sann(bytes: &[u8]) -> Result<SAnn> {
-    let mut r = Reader { b: bytes, i: 0 };
+    let mut r = Reader::new(bytes);
     if r.take(8)? != MAGIC {
         bail!("not an S-ANN snapshot (bad magic)");
     }
@@ -179,7 +164,7 @@ pub fn load_sann(bytes: &[u8]) -> Result<SAnn> {
         .checked_mul(header.dim)
         .and_then(|v| v.checked_mul(4))
         .with_context(|| format!("snapshot payload size overflows (n_live={n_live})"))?;
-    let present = (bytes.len() - r.i) as u64;
+    let present = r.remaining() as u64;
     if implied != present {
         bail!("snapshot header implies {implied} payload bytes, {present} present");
     }
@@ -193,9 +178,7 @@ pub fn load_sann(bytes: &[u8]) -> Result<SAnn> {
         }
         ann.insert_retained(&buf);
     }
-    if r.i != bytes.len() {
-        bail!("snapshot has {} trailing bytes", bytes.len() - r.i);
-    }
+    r.finish()?;
     Ok(ann)
 }
 
@@ -214,6 +197,234 @@ pub fn load_sann_file(path: &std::path::Path) -> Result<SAnn> {
         .and_then(|mut f| f.read_to_end(&mut bytes))
         .with_context(|| format!("reading snapshot {path:?}"))?;
     load_sann(&bytes)
+}
+
+// --------------------------------------------------------- RACE / SW-AKDE
+
+const RACE_MAGIC: &[u8; 8] = b"RACESNP1";
+const SWAKDE_MAGIC: &[u8; 8] = b"SWAKSNP1";
+
+/// Bounded-hasher shape caps (shared by the RACE and SW-AKDE images):
+/// generous versus any legitimate config, far below a DoS allocation.
+const MAX_BH_P: u64 = 64;
+const MAX_BH_ROWS: u64 = 1 << 16;
+const MAX_BH_RANGE: u64 = 1 << 26;
+/// Grid cap rows·range (4M cells: 32 MB of RACE counters, 64 MB of
+/// SW-AKDE cell slots).
+const MAX_BH_CELLS: u64 = 1 << 22;
+
+fn save_bounded_hasher(out: &mut Vec<u8>, h: &BoundedHasher) {
+    put_u8(
+        out,
+        match h.map {
+            CellMap::PackBits => 0,
+            CellMap::Rehash => 1,
+        },
+    );
+    put_u64(out, h.p as u64);
+    put_u64(out, h.rows as u64);
+    put_u64(out, h.range as u64);
+}
+
+/// Read + validate a bounded-hasher shape. Returns a hasher whose
+/// constructor asserts are all guaranteed to hold (the validation here is
+/// strictly stronger), so hostile headers error instead of panicking.
+fn load_bounded_hasher(r: &mut Reader) -> Result<BoundedHasher> {
+    let map = r.u8()?;
+    let p = r.u64()?;
+    let rows = r.u64()?;
+    let range = r.u64()?;
+    if p == 0 || p > MAX_BH_P {
+        bail!("snapshot hasher p {p} outside (0, {MAX_BH_P}]");
+    }
+    if rows == 0 || rows > MAX_BH_ROWS {
+        bail!("snapshot hasher rows {rows} outside (0, {MAX_BH_ROWS}]");
+    }
+    if range == 0 || range > MAX_BH_RANGE {
+        bail!("snapshot hasher range {range} outside (0, {MAX_BH_RANGE}]");
+    }
+    match rows.checked_mul(range) {
+        Some(c) if c <= MAX_BH_CELLS => {}
+        _ => bail!("snapshot grid {rows}x{range} exceeds {MAX_BH_CELLS} cells"),
+    }
+    match map {
+        0 => {
+            if p >= 32 || range != 1u64 << p {
+                bail!("packed-cell snapshot has range {range}, want 2^{p}");
+            }
+            Ok(BoundedHasher::new_packed(p as usize, rows as usize))
+        }
+        1 => Ok(BoundedHasher::new(p as usize, rows as usize, range as usize)),
+        other => bail!("unknown cell-map tag {other}"),
+    }
+}
+
+/// Serialize a RACE sketch (hasher shape + counter grid + population).
+/// The LSH family is externally owned (callers pass it to every RACE
+/// call), so — like `save_sann` — only the shape needed to re-attach to
+/// the same family is stored.
+pub fn save_race(race: &Race) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(RACE_MAGIC);
+    save_bounded_hasher(&mut out, race.hasher());
+    put_i64(&mut out, race.population());
+    for ace in race.aces() {
+        for &c in ace.counts() {
+            put_i64(&mut out, c);
+        }
+    }
+    out
+}
+
+/// Restore a RACE sketch from [`save_race`] bytes. Headers are untrusted:
+/// the shape is capped and the counter payload must match it exactly
+/// before anything is allocated.
+pub fn load_race(bytes: &[u8]) -> Result<Race> {
+    let mut r = Reader::new(bytes);
+    if r.take(8)? != RACE_MAGIC {
+        bail!("not a RACE snapshot (bad magic)");
+    }
+    let hasher = load_bounded_hasher(&mut r)?;
+    let population = r.i64()?;
+    let cells = hasher.rows * hasher.range;
+    let implied = (cells as u64) * 8; // cells ≤ MAX_BH_CELLS: no overflow
+    let present = r.remaining() as u64;
+    if implied != present {
+        bail!("RACE snapshot implies {implied} counter bytes, {present} present");
+    }
+    let mut counts = Vec::with_capacity(cells);
+    for _ in 0..cells {
+        counts.push(r.i64()?);
+    }
+    Ok(Race::from_parts(hasher, &counts, population))
+}
+
+/// One Exponential Histogram: `u64 last_ts | u32 n_levels | n_levels ×
+/// (u32 count | count × u64 ts)` — bucket timestamps verbatim, front
+/// (newest) first, so the restored EH expires identically.
+fn save_eh(out: &mut Vec<u8>, eh: &ExpHistogram) {
+    put_u64(out, eh.last_ts());
+    put_u32(out, eh.levels().len() as u32);
+    for level in eh.levels() {
+        put_u32(out, level.len() as u32);
+        for &ts in level {
+            put_u64(out, ts);
+        }
+    }
+}
+
+fn load_eh(r: &mut Reader, eps: f64, window: u64) -> Result<ExpHistogram> {
+    let last_ts = r.u64()?;
+    let n_levels = r.u32()? as usize;
+    if n_levels > 63 {
+        bail!("EH image claims {n_levels} bucket levels (max 63)");
+    }
+    let mut levels = Vec::with_capacity(n_levels);
+    for _ in 0..n_levels {
+        let count = r.u32()? as usize;
+        if count.saturating_mul(8) > r.remaining() {
+            bail!(
+                "EH level of {count} buckets exceeds the {} bytes present",
+                r.remaining()
+            );
+        }
+        let mut level = Vec::with_capacity(count);
+        for _ in 0..count {
+            level.push(r.u64()?);
+        }
+        levels.push(level);
+    }
+    ExpHistogram::from_parts(eps, window, levels, last_ts)
+        .map_err(|e| anyhow!("EH image invalid: {e}"))
+}
+
+/// Serialize an SW-AKDE sketch: hasher shape, ε'/window/stream clock, the
+/// population EH, and every occupied cell's EH (index + buckets).
+pub fn save_swakde(sw: &SwAkde) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(SWAKDE_MAGIC);
+    save_bounded_hasher(&mut out, sw.hasher());
+    put_f64(&mut out, sw.eps_eh());
+    put_u64(&mut out, sw.window());
+    put_u64(&mut out, sw.now());
+    put_u8(&mut out, u8::from(sw.had_batch_tick()));
+    save_eh(&mut out, sw.pop_eh());
+    let occupied: Vec<(usize, &ExpHistogram)> = sw
+        .cells_raw()
+        .iter()
+        .enumerate()
+        .filter_map(|(i, c)| c.as_deref().map(|eh| (i, eh)))
+        .collect();
+    put_u64(&mut out, occupied.len() as u64);
+    for (idx, eh) in occupied {
+        put_u64(&mut out, idx as u64);
+        save_eh(&mut out, eh);
+    }
+    out
+}
+
+/// Restore an SW-AKDE sketch from [`save_swakde`] bytes. Untrusted input:
+/// shape caps, per-level byte accounting, EH structural validation
+/// ([`ExpHistogram::from_parts`]), strictly-increasing cell indices, and
+/// an exact trailing-bytes check.
+pub fn load_swakde(bytes: &[u8]) -> Result<SwAkde> {
+    let mut r = Reader::new(bytes);
+    if r.take(8)? != SWAKDE_MAGIC {
+        bail!("not an SW-AKDE snapshot (bad magic)");
+    }
+    let hasher = load_bounded_hasher(&mut r)?;
+    let eps = r.f64()?;
+    if !eps.is_finite() || !(eps > 0.0 && eps <= 1.0) {
+        bail!("SW-AKDE snapshot eps {eps} outside (0, 1]");
+    }
+    let window = r.u64()?;
+    if window == 0 {
+        bail!("SW-AKDE snapshot window must be >= 1");
+    }
+    let now = r.u64()?;
+    let had_batch_tick = match r.u8()? {
+        0 => false,
+        1 => true,
+        other => bail!("bad batch-tick flag {other}"),
+    };
+    let pop = load_eh(&mut r, eps, window)?;
+    // Every EH must sit at or behind the stream clock, or the first
+    // post-restore add (now + 1) would violate the EH's monotonic-
+    // timestamp invariant — a debug panic and silent estimate corruption
+    // a CRC-valid hostile image could otherwise smuggle in.
+    if pop.last_ts() > now {
+        bail!(
+            "SW-AKDE snapshot population EH is ahead of the stream clock ({} > {now})",
+            pop.last_ts()
+        );
+    }
+    let n_cells = hasher.rows * hasher.range;
+    let n_occ = r.u64()?;
+    if n_occ > n_cells as u64 {
+        bail!("SW-AKDE snapshot claims {n_occ} occupied cells of a {n_cells}-cell grid");
+    }
+    let mut cells: Vec<Option<Box<ExpHistogram>>> = (0..n_cells).map(|_| None).collect();
+    let mut next_min = 0u64;
+    for _ in 0..n_occ {
+        let idx = r.u64()?;
+        if idx >= n_cells as u64 {
+            bail!("cell index {idx} outside the {n_cells}-cell grid");
+        }
+        if idx < next_min {
+            bail!("cell indices must be strictly increasing (saw {idx} after {next_min})");
+        }
+        next_min = idx + 1;
+        let eh = load_eh(&mut r, eps, window)?;
+        if eh.last_ts() > now {
+            bail!(
+                "SW-AKDE snapshot cell {idx} EH is ahead of the stream clock ({} > {now})",
+                eh.last_ts()
+            );
+        }
+        cells[idx as usize] = Some(Box::new(eh));
+    }
+    r.finish()?;
+    Ok(SwAkde::from_parts(hasher, eps, window, now, pop, had_batch_tick, cells))
 }
 
 #[cfg(test)]
@@ -365,5 +576,296 @@ mod tests {
         restored.insert(&p);
         assert_eq!(restored.stored(), 41);
         assert!(restored.query(&p).is_some());
+    }
+
+    // ------------------------------------------------- RACE / SW-AKDE
+
+    use crate::lsh::pstable::PStableLsh;
+    use crate::lsh::srp::SrpLsh;
+    use crate::lsh::LshFamily;
+    use crate::util::proptest::{check, Gen};
+
+    /// Random family matching a bounded hasher's mode/shape.
+    fn gen_family(
+        g: &mut Gen,
+        dim: usize,
+        funcs: usize,
+        packed: bool,
+    ) -> Box<dyn LshFamily> {
+        let mut rng = Rng::new(g.seed ^ 0xFA111);
+        if packed {
+            Box::new(SrpLsh::new(dim, funcs, &mut rng))
+        } else {
+            Box::new(PStableLsh::new(dim, funcs, 2.0, &mut rng))
+        }
+    }
+
+    #[test]
+    fn property_race_roundtrip_is_bit_identical() {
+        check("race_snapshot_roundtrip", 30, |g| {
+            let dim = g.usize_in(2, 12);
+            let rows = g.usize_in(1, 12);
+            let p = g.usize_in(1, 4);
+            let packed = g.bool();
+            let mut race = if packed {
+                Race::new_srp(rows, p)
+            } else {
+                Race::new(rows, g.usize_in(2, 32), p)
+            };
+            let fam = gen_family(g, dim, rows * p, packed);
+            for _ in 0..g.size(0, 120) {
+                let x = g.vector(dim, 2.0);
+                let delta = if g.bool() { 1 } else { -1 };
+                race.update(fam.as_ref(), &x, delta);
+            }
+            let bytes = save_race(&race);
+            let mut back = load_race(&bytes).map_err(|e| e.to_string())?;
+            if back.population() != race.population() {
+                return Err(format!(
+                    "population {} != {}",
+                    back.population(),
+                    race.population()
+                ));
+            }
+            let (mut a, mut b) = (vec![0.0; rows], vec![0.0; rows]);
+            for _ in 0..8 {
+                let q = g.vector(dim, 2.0);
+                race.row_counts_into(fam.as_ref(), &q, &mut a);
+                back.row_counts_into(fam.as_ref(), &q, &mut b);
+                if a != b {
+                    return Err(format!("row counts diverge: {a:?} vs {b:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_swakde_roundtrip_is_bit_identical() {
+        check("swakde_snapshot_roundtrip", 25, |g| {
+            let dim = g.usize_in(2, 10);
+            let rows = g.usize_in(1, 8);
+            let p = g.usize_in(1, 3);
+            let window = [8u64, 32, 100][g.usize_in(0, 2)];
+            let eps = [0.1, 0.25, 0.5][g.usize_in(0, 2)];
+            let packed = g.bool();
+            let mut sw = if packed {
+                SwAkde::new_srp(rows, p, eps, window)
+            } else {
+                SwAkde::new(rows, g.usize_in(2, 16), p, eps, window)
+            };
+            let fam = gen_family(g, dim, rows * p, packed);
+            // Mixed ingest: per-point ticks AND shared-timestamp batches,
+            // so both population paths (exact and EH) get serialized.
+            for _ in 0..g.size(0, 100) {
+                if g.bool() {
+                    sw.add(fam.as_ref(), &g.vector(dim, 2.0));
+                } else {
+                    let batch: Vec<Vec<f32>> =
+                        (0..g.usize_in(1, 4)).map(|_| g.vector(dim, 2.0)).collect();
+                    let refs: Vec<&[f32]> = batch.iter().map(|v| v.as_slice()).collect();
+                    sw.add_batch(fam.as_ref(), &refs);
+                }
+            }
+            let mut back = load_swakde(&save_swakde(&sw)).map_err(|e| e.to_string())?;
+            if back.now() != sw.now() {
+                return Err(format!("clock {} != {}", back.now(), sw.now()));
+            }
+            if back.population() != sw.population() {
+                return Err(format!(
+                    "population {} != {}",
+                    back.population(),
+                    sw.population()
+                ));
+            }
+            let (mut a, mut b) = (vec![0.0; rows], vec![0.0; rows]);
+            let mut compare = |sw: &mut SwAkde, back: &mut SwAkde, g: &mut Gen| {
+                for _ in 0..6 {
+                    let q = g.vector(dim, 2.0);
+                    sw.row_estimates_into(fam.as_ref(), &q, &mut a);
+                    back.row_estimates_into(fam.as_ref(), &q, &mut b);
+                    if a != b {
+                        return Err(format!("row estimates diverge: {a:?} vs {b:?}"));
+                    }
+                }
+                Ok(())
+            };
+            compare(&mut sw, &mut back, g)?;
+            // A restored sketch must keep ingesting and expiring in
+            // lockstep with the original (the crash-recovery contract).
+            for _ in 0..(2 * window as usize).min(80) {
+                let x = g.vector(dim, 2.0);
+                sw.add(fam.as_ref(), &x);
+                back.add(fam.as_ref(), &x);
+            }
+            compare(&mut sw, &mut back, g)?;
+            Ok(())
+        });
+    }
+
+    // RACE header byte offsets (after the 8-byte magic).
+    const ROFF_MAP: usize = 8;
+    const ROFF_P: usize = 9;
+    const ROFF_ROWS: usize = 17;
+    const ROFF_RANGE: usize = 25;
+
+    fn build_race() -> (Race, SrpLsh) {
+        let (rows, p, dim) = (4, 3, 6);
+        let fam = SrpLsh::new(dim, rows * p, &mut Rng::new(31));
+        let mut race = Race::new_srp(rows, p);
+        let mut rng = Rng::new(32);
+        for _ in 0..25 {
+            let x: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+            race.add(&fam, &x);
+        }
+        (race, fam)
+    }
+
+    #[test]
+    fn race_corrupt_snapshots_are_rejected() {
+        let (race, _) = build_race();
+        let bytes = save_race(&race);
+        for cut in 0..bytes.len() {
+            assert!(load_race(&bytes[..cut]).is_err(), "prefix {cut} must fail");
+        }
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(load_race(&bad).is_err(), "bad magic");
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(load_race(&extra).is_err(), "trailing bytes");
+    }
+
+    #[test]
+    fn race_hostile_headers_are_rejected_before_allocation() {
+        let (race, _) = build_race();
+        let cases: [fn(&mut [u8]); 8] = [
+            |b| b[ROFF_MAP] = 9,
+            |b| patch_u64(b, ROFF_P, 0),
+            |b| patch_u64(b, ROFF_P, u64::MAX),
+            |b| patch_u64(b, ROFF_ROWS, 0),
+            |b| patch_u64(b, ROFF_ROWS, u64::MAX),
+            |b| patch_u64(b, ROFF_RANGE, 0),
+            // rows*range overflow / grid cap
+            |b| {
+                patch_u64(b, ROFF_ROWS, 1 << 15);
+                patch_u64(b, ROFF_RANGE, 1 << 25);
+            },
+            // packed-cell range must equal 2^p
+            |b| patch_u64(b, ROFF_RANGE, 7),
+        ];
+        for (i, patch) in cases.iter().enumerate() {
+            let mut bytes = save_race(&race);
+            patch(&mut bytes);
+            assert!(load_race(&bytes).is_err(), "case {i} must be rejected");
+        }
+    }
+
+    // SW-AKDE header byte offsets (after the 8-byte magic).
+    const SOFF_MAP: usize = 8;
+    const SOFF_P: usize = 9;
+    const SOFF_ROWS: usize = 17;
+    const SOFF_RANGE: usize = 25;
+    const SOFF_EPS: usize = 33;
+    const SOFF_WINDOW: usize = 41;
+    const SOFF_NOW: usize = 49;
+    const SOFF_FLAG: usize = 57;
+
+    fn build_swakde() -> (SwAkde, SrpLsh) {
+        let (rows, p, dim) = (4, 3, 6);
+        let fam = SrpLsh::new(dim, rows * p, &mut Rng::new(33));
+        let mut sw = SwAkde::new_srp(rows, p, 0.2, 40);
+        let mut rng = Rng::new(34);
+        for _ in 0..60 {
+            let x: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+            sw.add(&fam, &x);
+        }
+        (sw, fam)
+    }
+
+    #[test]
+    fn swakde_corrupt_snapshots_are_rejected() {
+        let (sw, _) = build_swakde();
+        let bytes = save_swakde(&sw);
+        for cut in 0..bytes.len() {
+            assert!(load_swakde(&bytes[..cut]).is_err(), "prefix {cut} must fail");
+        }
+        let mut bad = bytes.clone();
+        bad[3] = b'?';
+        assert!(load_swakde(&bad).is_err(), "bad magic");
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(load_swakde(&extra).is_err(), "trailing bytes");
+    }
+
+    #[test]
+    fn swakde_hostile_headers_are_rejected() {
+        let (sw, _) = build_swakde();
+        let cases: [fn(&mut [u8]); 10] = [
+            |b| b[SOFF_MAP] = 3,
+            |b| patch_u64(b, SOFF_P, 0),
+            |b| patch_u64(b, SOFF_ROWS, u64::MAX),
+            |b| patch_u64(b, SOFF_RANGE, 0),
+            |b| patch_u64(b, SOFF_RANGE, 9), // packed: range != 2^p
+            |b| patch_f64(b, SOFF_EPS, f64::NAN),
+            |b| patch_f64(b, SOFF_EPS, 0.0),
+            |b| patch_u64(b, SOFF_WINDOW, 0),
+            // Clock rewound behind the EH timestamps: the first
+            // post-restore add would violate EH monotonicity.
+            |b| patch_u64(b, SOFF_NOW, 0),
+            |b| b[SOFF_FLAG] = 2,
+        ];
+        for (i, patch) in cases.iter().enumerate() {
+            let mut bytes = save_swakde(&sw);
+            patch(&mut bytes);
+            assert!(load_swakde(&bytes).is_err(), "case {i} must be rejected");
+        }
+    }
+
+    #[test]
+    fn swakde_hostile_cell_directory_is_rejected() {
+        let (sw, _) = build_swakde();
+        let base = save_swakde(&sw);
+        assert!(sw.occupied_cells() > 0, "fixture must have occupied cells");
+        // The occupied-cell count sits right after the population EH;
+        // locate it by re-encoding the prefix.
+        let mut prefix = Vec::new();
+        prefix.extend_from_slice(SWAKDE_MAGIC);
+        save_bounded_hasher(&mut prefix, sw.hasher());
+        put_f64(&mut prefix, sw.eps_eh());
+        put_u64(&mut prefix, sw.window());
+        put_u64(&mut prefix, sw.now());
+        put_u8(&mut prefix, u8::from(sw.had_batch_tick()));
+        save_eh(&mut prefix, sw.pop_eh());
+        let off_nocc = prefix.len();
+        // Claimed occupied count above the grid size.
+        let mut bytes = base.clone();
+        patch_u64(&mut bytes, off_nocc, u64::MAX);
+        assert!(load_swakde(&bytes).is_err(), "hostile occupied count");
+        // First cell index out of range / not increasing.
+        let off_idx0 = off_nocc + 8;
+        let mut bytes = base.clone();
+        patch_u64(&mut bytes, off_idx0, u64::MAX);
+        assert!(load_swakde(&bytes).is_err(), "out-of-grid cell index");
+    }
+
+    #[test]
+    fn loaders_never_panic_on_garbage() {
+        check("snapshot_loaders_garbage", 200, |g| {
+            let n = g.size(0, 240);
+            let junk: Vec<u8> = (0..n).map(|_| g.rng.next_u64() as u8).collect();
+            let _ = load_sann(&junk);
+            let _ = load_race(&junk);
+            let _ = load_swakde(&junk);
+            // Valid magics with garbage bodies must also fail cleanly.
+            for magic in [MAGIC, RACE_MAGIC, SWAKDE_MAGIC] {
+                let mut framed = magic.to_vec();
+                framed.extend_from_slice(&junk);
+                let _ = load_sann(&framed);
+                let _ = load_race(&framed);
+                let _ = load_swakde(&framed);
+            }
+            Ok(())
+        });
     }
 }

@@ -94,6 +94,60 @@ impl SwAkde {
         self.hasher.funcs_needed()
     }
 
+    /// The concatenated-hash configuration (snapshot/persistence access).
+    pub fn hasher(&self) -> &BoundedHasher {
+        &self.hasher
+    }
+
+    /// The per-cell EH relative error ε' (snapshot/persistence access).
+    pub fn eps_eh(&self) -> f64 {
+        self.eps_eh
+    }
+
+    /// Whether any tick has carried more than one point (persistence:
+    /// governs the exact-vs-EH population fast path, see [`Self::population`]).
+    pub fn had_batch_tick(&self) -> bool {
+        self.had_batch_tick
+    }
+
+    /// The window-population EH (snapshot/persistence access).
+    pub(crate) fn pop_eh(&self) -> &ExpHistogram {
+        &self.pop
+    }
+
+    /// The flat [rows × range] cell grid (snapshot/persistence access).
+    pub(crate) fn cells_raw(&self) -> &[Option<Box<ExpHistogram>>] {
+        &self.cells
+    }
+
+    /// Rebuild from snapshot parts. The caller (snapshot restore) has
+    /// already validated the hasher shape and that
+    /// `cells.len() == rows * range`.
+    pub(crate) fn from_parts(
+        hasher: BoundedHasher,
+        eps_eh: f64,
+        window: u64,
+        now: u64,
+        pop: ExpHistogram,
+        had_batch_tick: bool,
+        cells: Vec<Option<Box<ExpHistogram>>>,
+    ) -> Self {
+        assert_eq!(cells.len(), hasher.rows * hasher.range);
+        SwAkde {
+            cells,
+            hasher,
+            eps_eh,
+            window,
+            now,
+            pop,
+            had_batch_tick,
+            scratch: Vec::new(),
+            cells_scratch: Vec::new(),
+            est_scratch: Vec::new(),
+            flat_scratch: Vec::new(),
+        }
+    }
+
     /// KDE relative error ε = 2ε' + ε'² implied by the EH error (Lemma 4.3).
     pub fn kde_eps(&self) -> f64 {
         2.0 * self.eps_eh + self.eps_eh * self.eps_eh

@@ -1,0 +1,138 @@
+//! Bounds-checked little-endian byte reading, shared by every on-disk
+//! decoder (sketch snapshots, durability checkpoints). One implementation
+//! of "claimed length vs bytes actually present" so a hardening fix in
+//! one format reaches all of them. (The wire protocol keeps its own
+//! cursor in `net/frame.rs` — it additionally owns the protocol-version
+//! byte and count-amplification rules.)
+
+use anyhow::{bail, Result};
+
+/// Little-endian write helpers — the one implementation every on-disk
+/// encoder uses, mirroring [`Reader`] on the write side so a format
+/// change cannot drift between writers.
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_i64(out: &mut Vec<u8>, v: i64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Cursor over untrusted input: every read is validated against the
+/// bytes present BEFORE any slicing or allocation.
+pub struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(b: &'a [u8]) -> Self {
+        Reader { b, i: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
+    /// Current position (error reporting / exact-consumption checks).
+    pub fn pos(&self) -> usize {
+        self.i
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            bail!("input truncated at byte {}", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    /// A length-prefixed block: the claimed length must fit in the bytes
+    /// actually present (no allocation from the claim alone).
+    pub fn take_len(&mut self, len: u64) -> Result<&'a [u8]> {
+        if len > self.remaining() as u64 {
+            bail!(
+                "claimed block of {len} bytes exceeds the {} present",
+                self.remaining()
+            );
+        }
+        self.take(len as usize)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Error unless every byte was consumed (formats are exact: trailing
+    /// garbage means a corrupt or hostile image).
+    pub fn finish(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            bail!("input has {} trailing bytes", self.remaining());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reads_are_bounds_checked() {
+        let bytes = 7u64.to_le_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.u64().unwrap(), 7);
+        assert!(r.u8().is_err(), "past the end");
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn hostile_block_length_is_rejected() {
+        let mut r = Reader::new(&[1, 2, 3]);
+        assert!(r.take_len(u64::MAX).is_err());
+        assert_eq!(r.take_len(3).unwrap(), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn finish_rejects_trailing_bytes() {
+        let mut r = Reader::new(&[0; 9]);
+        let _ = r.u64().unwrap();
+        assert!(r.finish().is_err());
+        let _ = r.u8().unwrap();
+        r.finish().unwrap();
+    }
+}

@@ -1,5 +1,6 @@
 //! Substrate utilities built in-repo (offline environment; see DESIGN.md §2).
 
+pub mod bytes;
 pub mod json;
 pub mod proptest;
 pub mod rng;

@@ -46,7 +46,7 @@ fn sharded_service_equals_single_shard_semantics() {
         for p in &pts {
             svc.insert(p.clone());
         }
-        svc.flush();
+        svc.flush().unwrap();
         let st = svc.stats();
         assert_eq!(st.stored_points, 300, "shards={shards} must store all (eta=0)");
         let answers = svc.query_batch(pts[..40].to_vec());
@@ -79,7 +79,7 @@ fn pjrt_and_native_serving_agree() {
         for p in pts {
             svc.insert(p.clone());
         }
-        svc.flush();
+        svc.flush().unwrap();
         let ans = svc.query_batch(queries.to_vec());
         svc.shutdown();
         ans
@@ -147,7 +147,7 @@ fn concurrent_producers_do_not_lose_queries() {
     for p in producers {
         p.join().unwrap();
     }
-    svc.flush();
+    svc.flush().unwrap();
     let st = svc.stats();
     assert_eq!(st.inserts, 6_000);
     assert_eq!(st.shed, 0, "Block policy never sheds");
@@ -170,7 +170,7 @@ fn shed_overload_degrades_gracefully() {
         let p: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
         svc.insert(p);
     }
-    svc.flush();
+    svc.flush().unwrap();
     let st = svc.stats();
     assert_eq!(st.inserts, 20_000);
     // Under a hot loop with a 4-deep queue, shedding is expected...
@@ -189,12 +189,12 @@ fn turnstile_delete_then_reinsert_roundtrip() {
     let mut svc = SketchService::start(cfg).unwrap();
     let p: Vec<f32> = (0..8).map(|i| i as f32 * 0.25).collect();
     svc.insert(p.clone());
-    svc.flush();
+    svc.flush().unwrap();
     assert!(svc.delete(p.clone()));
-    svc.flush();
+    svc.flush().unwrap();
     assert!(svc.query_batch(vec![p.clone()])[0].is_none());
     svc.insert(p.clone());
-    svc.flush();
+    svc.flush().unwrap();
     let ans = svc.query_batch(vec![p.clone()]);
     assert!(ans[0].is_some(), "reinserted point must be found again");
     assert!(ans[0].as_ref().unwrap().dist < 1e-5);
@@ -212,7 +212,7 @@ fn round_robin_rejects_deletes_but_balances() {
         let p: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
         svc.insert(p);
     }
-    svc.flush();
+    svc.flush().unwrap();
     let p: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
     assert!(!svc.delete(p), "round-robin cannot address deletes");
     assert_eq!(svc.stats().stored_points, 99);

@@ -74,7 +74,7 @@ fn run_wire_vs_local(cfg: ServiceConfig) {
     // return 0; `ok == batch.len()` is the contract callers rely on).
     let mut direct = SketchService::start(cfg.clone()).unwrap();
     let ok = direct.insert_batch(pts.clone());
-    direct.flush();
+    direct.flush().unwrap();
     assert_eq!(ok, 1200, "insert_batch must report accepted points");
     let dst = direct.stats();
     assert_eq!(dst.stored_points as u64 + dst.shed, 1200, "{dst:?}");

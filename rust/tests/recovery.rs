@@ -1,0 +1,307 @@
+//! Crash-recovery integration: a service killed WITHOUT shutdown and
+//! restarted on the same data_dir must answer ANN/KDE queries identically
+//! to an uninterrupted twin fed the same stream — the durability engine's
+//! whole contract. Checkpoint + WAL replay, torn tails, garbage
+//! checkpoint files, and the background trigger are all exercised through
+//! the public `ServiceHandle` surface.
+
+use std::path::PathBuf;
+
+use sublinear_sketch::coordinator::{ServiceConfig, ServiceHandle, SketchService};
+use sublinear_sketch::durability::{checkpoint, wal};
+use sublinear_sketch::util::rng::Rng;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "sketchd_recovery_{tag}_{}_{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// η = 0 (serving default: store everything), 2 shards, hash routing —
+/// the same stream through two services builds bit-identical state.
+fn base_cfg(data_dir: Option<PathBuf>) -> ServiceConfig {
+    let mut cfg = ServiceConfig::default_for(8, 4_000);
+    cfg.shards = 2;
+    cfg.ann.eta = 0.0;
+    cfg.kde.rows = 8;
+    cfg.kde.window = 400;
+    cfg.data_dir = data_dir;
+    cfg
+}
+
+fn points(n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    let centers: Vec<Vec<f32>> = (0..8)
+        .map(|_| (0..8).map(|_| rng.gaussian_f32() * 2.0).collect())
+        .collect();
+    (0..n)
+        .map(|_| {
+            let c = &centers[rng.below(8) as usize];
+            c.iter().map(|v| v + rng.gaussian_f32() * 0.1).collect()
+        })
+        .collect()
+}
+
+/// "Crash": drop every handle without a shutdown command. The service
+/// never cuts a final checkpoint on this path, so recovery must lean on
+/// the WAL tail past the last (possibly absent) checkpoint.
+fn crash(handle: ServiceHandle, join: std::thread::JoinHandle<()>) {
+    drop(handle);
+    join.join().unwrap();
+}
+
+/// Assert twin/recovered parity on answers AND point-denominated stats.
+fn assert_parity(twin: &ServiceHandle, recovered: &ServiceHandle, queries: &[Vec<f32>]) {
+    let want_ann = twin.query_batch(queries.to_vec()).unwrap();
+    let got_ann = recovered.query_batch(queries.to_vec()).unwrap();
+    assert_eq!(got_ann, want_ann, "recovered ANN answers must be identical");
+    assert!(
+        want_ann.iter().filter(|a| a.is_some()).count() >= queries.len() / 2,
+        "sanity: clustered queries must mostly hit"
+    );
+    let (want_sums, want_dens) = twin.kde_batch(queries.to_vec()).unwrap();
+    let (got_sums, got_dens) = recovered.kde_batch(queries.to_vec()).unwrap();
+    assert_eq!(got_sums, want_sums, "recovered KDE sums must be identical");
+    assert_eq!(got_dens, want_dens);
+
+    let want = twin.stats().unwrap();
+    let got = recovered.stats().unwrap();
+    assert_eq!(got.inserts, want.inserts, "inserts counter must survive");
+    assert_eq!(got.deletes, want.deletes);
+    assert_eq!(got.stored_points, want.stored_points);
+    assert_eq!(
+        got.stored_points as u64 + got.shed,
+        got.inserts,
+        "point accounting must reconcile after recovery: {got:?}"
+    );
+}
+
+#[test]
+fn kill_and_restore_matches_uninterrupted_twin() {
+    let dir = tmp_dir("kill_restore");
+    let pts = points(300, 91);
+    let queries = pts[..32].to_vec();
+
+    // Uninterrupted twin: the whole stream, one process.
+    let (twin, twin_join) = SketchService::spawn(base_cfg(None)).unwrap();
+    assert_eq!(twin.insert_batch(pts.clone()), 300);
+    twin.flush().unwrap();
+
+    // Durable service: half the stream, a checkpoint mid-stream, the
+    // rest, then a crash (no shutdown, no final checkpoint).
+    let (dur, dur_join) = SketchService::spawn(base_cfg(Some(dir.clone()))).unwrap();
+    assert_eq!(dur.insert_batch(pts[..150].to_vec()), 150);
+    dur.flush().unwrap();
+    let covered = dur.checkpoint().unwrap();
+    assert_eq!(covered, 150, "checkpoint covers the first half");
+    assert_eq!(dur.insert_batch(pts[150..].to_vec()), 150);
+    dur.flush().unwrap(); // applied + WAL-synced; nothing else persisted
+    crash(dur, dur_join);
+
+    // Recover: checkpoint restores the first 150, WAL replay the rest.
+    let (rec, rec_join) = SketchService::spawn(base_cfg(Some(dir.clone()))).unwrap();
+    assert_parity(&twin, &rec, &queries);
+
+    // The recovered service is live: continued ingest stays in lockstep
+    // with the twin (η = 0: no sampler divergence).
+    let more = points(60, 92);
+    assert_eq!(twin.insert_batch(more.clone()), 60);
+    assert_eq!(rec.insert_batch(more), 60);
+    twin.flush().unwrap();
+    rec.flush().unwrap();
+    assert_parity(&twin, &rec, &queries);
+
+    rec.shutdown();
+    rec_join.join().unwrap();
+    twin.shutdown();
+    twin_join.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn recovery_without_any_checkpoint_replays_the_full_wal() {
+    let dir = tmp_dir("wal_only");
+    let pts = points(220, 93);
+    let queries = pts[..24].to_vec();
+
+    let (twin, twin_join) = SketchService::spawn(base_cfg(None)).unwrap();
+    twin.insert_batch(pts.clone());
+    twin.flush().unwrap();
+
+    let (dur, dur_join) = SketchService::spawn(base_cfg(Some(dir.clone()))).unwrap();
+    dur.insert_batch(pts.clone());
+    dur.flush().unwrap();
+    crash(dur, dur_join); // no checkpoint was ever cut
+
+    let (rec, rec_join) = SketchService::spawn(base_cfg(Some(dir.clone()))).unwrap();
+    assert_parity(&twin, &rec, &queries);
+    rec.shutdown();
+    rec_join.join().unwrap();
+    twin.shutdown();
+    twin_join.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn replayed_deletes_apply_after_the_checkpoint() {
+    let dir = tmp_dir("deletes");
+    let pts = points(160, 94);
+    let victim = pts[5].clone();
+
+    let (twin, twin_join) = SketchService::spawn(base_cfg(None)).unwrap();
+    twin.insert_batch(pts.clone());
+    twin.flush().unwrap();
+    assert!(twin.delete(victim.clone()));
+    twin.flush().unwrap();
+
+    let (dur, dur_join) = SketchService::spawn(base_cfg(Some(dir.clone()))).unwrap();
+    dur.insert_batch(pts.clone());
+    dur.flush().unwrap();
+    dur.checkpoint().unwrap();
+    assert!(dur.delete(victim.clone()), "post-checkpoint delete");
+    dur.flush().unwrap();
+    crash(dur, dur_join);
+
+    let (rec, rec_join) = SketchService::spawn(base_cfg(Some(dir.clone()))).unwrap();
+    // The deleted point must be gone on both sides, identically.
+    let ans = rec.query_batch(vec![victim.clone()]).unwrap();
+    let twin_ans = twin.query_batch(vec![victim]).unwrap();
+    assert_eq!(ans, twin_ans, "replayed delete must match the twin");
+    assert_parity(&twin, &rec, &pts[..24].to_vec());
+    rec.shutdown();
+    rec_join.join().unwrap();
+    twin.shutdown();
+    twin_join.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn background_checkpoint_trigger_fires_and_recovers() {
+    let dir = tmp_dir("background");
+    let pts = points(250, 95);
+
+    let mut cfg = base_cfg(Some(dir.clone()));
+    cfg.checkpoint_every_points = Some(100);
+    let (dur, dur_join) = SketchService::spawn(cfg).unwrap();
+    dur.insert_batch(pts.clone());
+    dur.flush().unwrap();
+    // The trigger runs on the owning thread's 200ms tick; wait for it.
+    let mut saw_checkpoint = false;
+    for _ in 0..100 {
+        if !checkpoint::list(&dir).unwrap().is_empty() {
+            saw_checkpoint = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    assert!(saw_checkpoint, "background trigger must cut a checkpoint");
+    crash(dur, dur_join);
+
+    let (twin, twin_join) = SketchService::spawn(base_cfg(None)).unwrap();
+    twin.insert_batch(pts.clone());
+    twin.flush().unwrap();
+    let (rec, rec_join) = SketchService::spawn(base_cfg(Some(dir.clone()))).unwrap();
+    assert_parity(&twin, &rec, &pts[..24].to_vec());
+    rec.shutdown();
+    rec_join.join().unwrap();
+    twin.shutdown();
+    twin_join.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn garbage_checkpoint_files_are_skipped() {
+    let dir = tmp_dir("garbage_ckpt");
+    let pts = points(180, 96);
+
+    let (twin, twin_join) = SketchService::spawn(base_cfg(None)).unwrap();
+    twin.insert_batch(pts.clone());
+    twin.flush().unwrap();
+
+    let (dur, dur_join) = SketchService::spawn(base_cfg(Some(dir.clone()))).unwrap();
+    dur.insert_batch(pts.clone());
+    dur.flush().unwrap();
+    crash(dur, dur_join);
+
+    // A corrupt checkpoint file (disk damage, partial copy, tampering)
+    // must be skipped, with the full WAL carrying recovery.
+    std::fs::write(
+        dir.join("checkpoint-00000000000000000099.ckpt"),
+        b"not a checkpoint at all",
+    )
+    .unwrap();
+    let (rec, rec_join) = SketchService::spawn(base_cfg(Some(dir.clone()))).unwrap();
+    assert_parity(&twin, &rec, &pts[..24].to_vec());
+    rec.shutdown();
+    rec_join.join().unwrap();
+    twin.shutdown();
+    twin_join.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn torn_wal_tail_recovers_every_valid_record() {
+    let dir = tmp_dir("torn_tail");
+    let pts = points(140, 97);
+
+    let (twin, twin_join) = SketchService::spawn(base_cfg(None)).unwrap();
+    twin.insert_batch(pts.clone());
+    twin.flush().unwrap();
+
+    let (dur, dur_join) = SketchService::spawn(base_cfg(Some(dir.clone()))).unwrap();
+    dur.insert_batch(pts.clone());
+    dur.flush().unwrap();
+    crash(dur, dur_join);
+
+    // Simulate the torn write of a crash mid-append on both shards.
+    use std::io::Write;
+    for shard in 0..2 {
+        if let Some((_, path)) = wal::list_segments(&dir, shard).unwrap().pop() {
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(&[0xBA, 0xD0]).unwrap();
+        }
+    }
+    let (rec, rec_join) = SketchService::spawn(base_cfg(Some(dir.clone()))).unwrap();
+    assert_parity(&twin, &rec, &pts[..24].to_vec());
+    rec.shutdown();
+    rec_join.join().unwrap();
+    twin.shutdown();
+    twin_join.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn handle_checkpoint_errors_without_data_dir() {
+    let (handle, join) = SketchService::spawn(base_cfg(None)).unwrap();
+    let err = handle.checkpoint().unwrap_err().to_string();
+    assert!(err.contains("durability"), "{err}");
+    handle.shutdown();
+    join.join().unwrap();
+}
+
+#[test]
+fn mismatched_config_is_rejected_on_recovery() {
+    let dir = tmp_dir("mismatch");
+    let (dur, dur_join) = SketchService::spawn(base_cfg(Some(dir.clone()))).unwrap();
+    dur.insert_batch(points(50, 98));
+    dur.flush().unwrap();
+    dur.checkpoint().unwrap();
+    crash(dur, dur_join);
+
+    // Resharding a data_dir is an operator error, not a silent remap.
+    let mut cfg = base_cfg(Some(dir.clone()));
+    cfg.shards = 4;
+    assert!(SketchService::spawn(cfg).is_err(), "shard-count mismatch must fail");
+    let mut cfg = ServiceConfig::default_for(16, 4_000);
+    cfg.shards = 2;
+    cfg.data_dir = Some(dir.clone());
+    assert!(SketchService::spawn(cfg).is_err(), "dim mismatch must fail");
+    std::fs::remove_dir_all(&dir).ok();
+}
