@@ -103,7 +103,7 @@ fn main() -> anyhow::Result<()> {
             let q = profile_iter.next().unwrap().clone();
             if let Some(batch) = batcher.push(q) {
                 issued += batch.len() as u64;
-                let ans = qlat.time(|| svc.query_batch(batch));
+                let ans = qlat.time(|| svc.query_batch(batch)).expect("query plane");
                 answered += ans.iter().filter(|a| a.is_some()).count() as u64;
                 qps.add(ans.len() as u64);
             }
@@ -111,7 +111,7 @@ fn main() -> anyhow::Result<()> {
         if batcher.deadline_due() {
             let batch = batcher.flush();
             issued += batch.len() as u64;
-            let ans = qlat.time(|| svc.query_batch(batch));
+            let ans = qlat.time(|| svc.query_batch(batch)).expect("query plane");
             answered += ans.iter().filter(|a| a.is_some()).count() as u64;
             qps.add(ans.len() as u64);
         }
@@ -120,7 +120,7 @@ fn main() -> anyhow::Result<()> {
     let tail = batcher.flush();
     if !tail.is_empty() {
         issued += tail.len() as u64;
-        let ans = qlat.time(|| svc.query_batch(tail));
+        let ans = qlat.time(|| svc.query_batch(tail)).expect("query plane");
         answered += ans.iter().filter(|a| a.is_some()).count() as u64;
         qps.add(ans.len() as u64);
     }
@@ -136,7 +136,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---- Phase 2: recall vs brute force on the final state -------------
     let sample: Vec<Vec<f32>> = profiles.iter().take(200).cloned().collect();
-    let answers = svc.query_batch(sample.clone());
+    let answers = svc.query_batch(sample.clone()).expect("query plane");
     let exact = ExactNn::from_points(dim, &stream);
     let mut hits = 0;
     let mut within = 0;
@@ -157,7 +157,7 @@ fn main() -> anyhow::Result<()> {
     // ---- Phase 3: topical drift via sliding-window KDE ------------------
     // Track one profile's topic density across the stream's drift.
     let probe = profiles[0].clone();
-    let (sums, density) = svc.kde_batch(vec![probe]);
+    let (sums, density) = svc.kde_batch(vec![probe]).expect("query plane");
     println!("\n-- topical density (window = last {window} items) --");
     println!(
         "profile[0]: windowed kernel-sum = {:.2}, density = {:.4}",

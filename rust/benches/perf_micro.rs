@@ -180,6 +180,83 @@ fn main() {
         record(&mut table, &mut json, "sann.query_batch64.speedup_vs_singles", ns_query / ns, "x");
     }
 
+    // ---- query plane (concurrent native reads over shard threads) ----
+    // The serving-path claim of this layer: ANN/KDE reads execute on the
+    // CALLING thread (scatter/gather via QueryPlane), so K connection
+    // threads add throughput instead of queueing behind one owning
+    // thread. Measured as singleton queries — the wire coalescer's
+    // worst-case shape — from 1 thread vs 4 concurrent threads.
+    {
+        use sublinear_sketch::coordinator::{ServiceConfig, SketchService};
+        let dim = 32;
+        let mut cfg = ServiceConfig::default_for(dim, 8_192);
+        cfg.shards = 4;
+        cfg.ann.eta = 0.0;
+        cfg.kde.rows = 16;
+        cfg.kde.window = 4_096;
+        let (handle, join) = SketchService::spawn(cfg).expect("service spawns");
+        let pts: Vec<Vec<f32>> = (0..4_096)
+            .map(|_| (0..dim).map(|_| rng.gaussian_f32()).collect())
+            .collect();
+        for chunk in pts.chunks(256) {
+            handle.insert_batch(chunk.to_vec());
+        }
+        handle.flush().expect("flush");
+
+        let mut i = 0usize;
+        let ns1 = time_ns(20, 400, || {
+            std::hint::black_box(
+                handle.query_batch(vec![pts[i % 4_096].clone()]).expect("query"),
+            );
+            i += 1;
+        });
+        record(
+            &mut table,
+            &mut json,
+            "qplane.ann_single.1conn",
+            ns1,
+            &format!("dim={dim} shards=4 singleton scatter"),
+        );
+
+        const THREADS: usize = 4;
+        const PER_THREAD: usize = 400;
+        let t0 = std::time::Instant::now();
+        let workers: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let h = handle.clone();
+                let pts = pts.clone();
+                std::thread::spawn(move || {
+                    for k in 0..PER_THREAD {
+                        std::hint::black_box(
+                            h.query_batch(vec![pts[(t * 1_000 + k) % 4_096].clone()])
+                                .expect("query"),
+                        );
+                    }
+                })
+            })
+            .collect();
+        for w in workers {
+            w.join().expect("query thread");
+        }
+        let ns4 = t0.elapsed().as_nanos() as f64 / (THREADS * PER_THREAD) as f64;
+        record(
+            &mut table,
+            &mut json,
+            "qplane.ann_single.4conn",
+            ns4,
+            "aggregate ns/query, 4 concurrent reader threads",
+        );
+        record(
+            &mut table,
+            &mut json,
+            "qplane.ann_single.4conn.speedup_vs_singles",
+            ns1 / ns4,
+            "x (vs 1 reader thread)",
+        );
+        handle.shutdown();
+        join.join().expect("service thread");
+    }
+
     // ---- WAL append throughput per fsync mode -------------------------
     // The durability tax on the ingest path: encode + buffered write
     // (off), plus an fsync every N records (every:256), plus an fsync per

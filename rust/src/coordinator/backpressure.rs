@@ -19,6 +19,20 @@ pub enum Overload {
     Shed,
 }
 
+/// What happened to an offered element. `Shed` (queue full under the
+/// `Shed` policy) is overload and counts toward shedding statistics;
+/// `Disconnected` (receiver gone — the shard is shutting down or dead)
+/// is NOT overload and must never be accounted as a shed point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OfferOutcome {
+    /// Delivered into the queue.
+    Sent,
+    /// Dropped by the `Shed` policy (queue full); counted in `shed_count`.
+    Shed,
+    /// The receiver is gone; nothing was counted.
+    Disconnected,
+}
+
 /// Sender side of a bounded queue with shedding statistics.
 pub struct BoundedSender<T> {
     tx: SyncSender<T>,
@@ -56,25 +70,32 @@ impl<T> BoundedSender<T> {
     /// Offer an element under the configured policy. Returns false iff the
     /// element was shed (or the receiver is gone).
     pub fn offer(&self, item: T) -> bool {
+        self.offer_outcome(item) == OfferOutcome::Sent
+    }
+
+    /// Like [`Self::offer`], but reports WHY an element was not
+    /// delivered, so callers doing point-denominated accounting can
+    /// distinguish overload (`Shed`) from shutdown (`Disconnected`).
+    pub fn offer_outcome(&self, item: T) -> OfferOutcome {
         match self.policy {
             Overload::Block => {
                 if self.tx.send(item).is_ok() {
                     self.sent.fetch_add(1, Ordering::Relaxed);
-                    true
+                    OfferOutcome::Sent
                 } else {
-                    false
+                    OfferOutcome::Disconnected
                 }
             }
             Overload::Shed => match self.tx.try_send(item) {
                 Ok(()) => {
                     self.sent.fetch_add(1, Ordering::Relaxed);
-                    true
+                    OfferOutcome::Sent
                 }
                 Err(TrySendError::Full(_)) => {
                     self.shed.fetch_add(1, Ordering::Relaxed);
-                    false
+                    OfferOutcome::Shed
                 }
-                Err(TrySendError::Disconnected(_)) => false,
+                Err(TrySendError::Disconnected(_)) => OfferOutcome::Disconnected,
             },
         }
     }
@@ -137,6 +158,23 @@ mod tests {
         let (tx, rx) = bounded::<u32>(1, Overload::Shed);
         drop(rx);
         assert!(!tx.offer(1));
+    }
+
+    #[test]
+    fn offer_outcome_distinguishes_shed_from_disconnect() {
+        let (tx, rx) = bounded::<u32>(1, Overload::Shed);
+        assert_eq!(tx.offer_outcome(1), OfferOutcome::Sent);
+        assert_eq!(tx.offer_outcome(2), OfferOutcome::Shed);
+        assert_eq!(tx.shed_count(), 1);
+        drop(rx);
+        assert_eq!(tx.offer_outcome(3), OfferOutcome::Disconnected);
+        assert_eq!(tx.shed_count(), 1, "a dead receiver is not overload");
+
+        let (tx, rx) = bounded::<u32>(1, Overload::Block);
+        assert_eq!(tx.offer_outcome(1), OfferOutcome::Sent);
+        drop(rx);
+        assert_eq!(tx.offer_outcome(2), OfferOutcome::Disconnected);
+        assert_eq!(tx.shed_count(), 0, "Block never sheds");
     }
 
     #[test]

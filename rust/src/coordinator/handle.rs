@@ -11,12 +11,19 @@
 //!   configured [`Overload`] policy, deletes `force`d). A query can
 //!   therefore never sit behind a backlog of queued inserts: backpressure
 //!   lives in the shard mailboxes, not in a service-wide command queue.
-//! - **Queries, stats, flush** need the service's own state (scatter/
-//!   gather, PJRT re-rank, pending-ingest buffers), so they ship over an
-//!   unbounded control channel to the owning thread
+//! - **Native ANN/KDE queries** run ON the calling thread too, through a
+//!   [`QueryPlane`] clone (scatter to shard mailboxes, gather, merge) —
+//!   K connection threads read concurrently, limited by the shard
+//!   threads, not by a single service-wide reader.
+//! - **PJRT queries, stats, flush, checkpoint** need the service's own
+//!   state (the thread-pinned executor, pending-ingest buffers), so they
+//!   ship over an unbounded control channel to the owning thread
 //!   ([`SketchService::run_cmd_loop`]) and block on a per-request reply.
 //!
 //! All counting is shared through [`ServiceCounters`], point-denominated.
+//! Only genuine overload ([`OfferOutcome::Shed`]) counts as shed; a
+//! disconnected mailbox (service shutting down) is a failed offer but
+//! never a shed point.
 //!
 //! [`SketchService`]: super::server::SketchService
 //! [`Overload`]: super::backpressure::Overload
@@ -27,8 +34,9 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use super::backpressure::BoundedSender;
+use super::backpressure::{BoundedSender, OfferOutcome};
 use super::protocol::{AnnAnswer, ServiceCounters, ServiceStats};
+use super::query::QueryPlane;
 use super::router::{hash_vector, RoutePolicy};
 use super::shard::ShardCmd;
 use super::NATIVE_BATCH_ROWS;
@@ -37,11 +45,15 @@ use super::NATIVE_BATCH_ROWS;
 /// path and [`ServiceHandle::insert_batch`] so the wire ⇔ in-process
 /// state-parity guarantee is structural, not copy-maintained: identical
 /// chunking ([`NATIVE_BATCH_ROWS`]), identical point-denominated
-/// counting. `offer(shard, chunk)` returns false iff the chunk was shed.
+/// counting. `offer(shard, chunk)` reports the chunk's fate: only a
+/// genuine `Shed` counts as shed points — a `Disconnected` mailbox
+/// (service shutting down) is neither accepted nor shed, and its points
+/// are un-counted from `inserts` so `inserts == stored + shed` stays
+/// exact even when shards die.
 pub(super) fn ship_native_batch(
     counters: &ServiceCounters,
     per_shard: Vec<Vec<Vec<f32>>>,
-    mut offer: impl FnMut(usize, Vec<Vec<f32>>) -> bool,
+    mut offer: impl FnMut(usize, Vec<Vec<f32>>) -> OfferOutcome,
 ) -> usize {
     let mut ok = 0;
     for (s, mut pts) in per_shard.into_iter().enumerate() {
@@ -50,10 +62,16 @@ pub(super) fn ship_native_batch(
             let chunk = std::mem::replace(&mut pts, tail);
             let m = chunk.len();
             ServiceCounters::add(&counters.inserts, m as u64);
-            if offer(s, chunk) {
-                ok += m;
-            } else {
-                ServiceCounters::add(&counters.shed_points, m as u64);
+            match offer(s, chunk) {
+                OfferOutcome::Sent => ok += m,
+                OfferOutcome::Shed => {
+                    ServiceCounters::add(&counters.shed_points, m as u64)
+                }
+                // Not overload: the points never entered the service —
+                // un-count them so inserts == stored + shed stays exact.
+                OfferOutcome::Disconnected => {
+                    ServiceCounters::sub(&counters.inserts, m as u64)
+                }
             }
         }
     }
@@ -61,9 +79,14 @@ pub(super) fn ship_native_batch(
 }
 
 /// Control-plane commands a handle sends to the service-owning thread.
+/// Native reads never travel here anymore (they execute on the calling
+/// thread via [`QueryPlane`]); `Ann` remains for PJRT services, whose
+/// re-rank needs the thread-pinned executor. KDE never does — there is
+/// no `Kde` command. The `Ann` reply carries a `Result` so a degraded
+/// scatter (dead shard) surfaces as an error instead of a silently
+/// partial answer.
 pub enum ServiceCmd {
-    Ann(Vec<Vec<f32>>, Sender<Vec<Option<AnnAnswer>>>),
-    Kde(Vec<Vec<f32>>, Sender<(Vec<f64>, Vec<f64>)>),
+    Ann(Vec<Vec<f32>>, Sender<Result<Vec<Option<AnnAnswer>>, String>>),
     Stats(Sender<ServiceStats>),
     /// Barrier; the reply carries the WAL-sync outcome on durable
     /// services (a flush ack must not claim durability the disk refused).
@@ -98,6 +121,11 @@ pub struct ServiceHandle {
     rr_next: Arc<AtomicUsize>,
     counters: Arc<ServiceCounters>,
     cmd_tx: Sender<ServiceCmd>,
+    /// Calling-thread native read path (scatter/gather/merge).
+    plane: QueryPlane,
+    /// When true, queries must run on the owning thread (the PJRT
+    /// executor is pinned there), so they travel over `cmd_tx`.
+    use_pjrt: bool,
     dim: usize,
     shards: usize,
 }
@@ -110,6 +138,8 @@ impl Clone for ServiceHandle {
             rr_next: Arc::clone(&self.rr_next),
             counters: Arc::clone(&self.counters),
             cmd_tx: self.cmd_tx.clone(),
+            plane: self.plane.clone(),
+            use_pjrt: self.use_pjrt,
             dim: self.dim,
             shards: self.shards,
         }
@@ -124,13 +154,17 @@ impl ServiceHandle {
         shards: usize,
         counters: Arc<ServiceCounters>,
         cmd_tx: Sender<ServiceCmd>,
+        use_pjrt: bool,
     ) -> Self {
+        let plane = QueryPlane::new(shard_txs.clone(), Arc::clone(&counters));
         ServiceHandle {
             shard_txs,
             route,
             rr_next: Arc::new(AtomicUsize::new(0)),
             counters,
             cmd_tx,
+            plane,
+            use_pjrt,
             dim,
             shards,
         }
@@ -155,15 +189,24 @@ impl ServiceHandle {
     }
 
     /// Offer one stream element under the overload policy. Returns false
-    /// if it was shed.
+    /// if it was not delivered. Only a genuine shed (queue full) counts
+    /// toward the shed statistic — a disconnected mailbox (service
+    /// shutting down) fails the offer and rolls back its insert count
+    /// instead of inventing overload.
     pub fn insert(&self, x: Vec<f32>) -> bool {
         let s = self.route(&x);
         ServiceCounters::add(&self.counters.inserts, 1);
-        let ok = self.shard_txs[s].offer(ShardCmd::Insert(x));
-        if !ok {
-            ServiceCounters::add(&self.counters.shed_points, 1);
+        match self.shard_txs[s].offer_outcome(ShardCmd::Insert(x)) {
+            OfferOutcome::Sent => true,
+            OfferOutcome::Shed => {
+                ServiceCounters::add(&self.counters.shed_points, 1);
+                false
+            }
+            OfferOutcome::Disconnected => {
+                ServiceCounters::sub(&self.counters.inserts, 1);
+                false
+            }
         }
-        ok
     }
 
     /// Batched ingest through [`ship_native_batch`] — the same core the
@@ -175,12 +218,17 @@ impl ServiceHandle {
             per_shard[self.route(&x)].push(x);
         }
         ship_native_batch(&self.counters, per_shard, |s, chunk| {
-            self.shard_txs[s].offer(ShardCmd::InsertBatch(chunk))
+            self.shard_txs[s].offer_outcome(ShardCmd::InsertBatch(chunk))
         })
     }
 
     /// Turnstile deletion (HashVector routing only); forced past the
     /// overload policy like every command carrying a reply channel.
+    ///
+    /// The `deletes` counter tracks commands the owning shard actually
+    /// ACKNOWLEDGED: a force into a dead mailbox, or a shard dying before
+    /// the ack, does not count — otherwise the counter drifts above the
+    /// applied work and never reconciles with recovered state.
     pub fn delete(&self, x: Vec<f32>) -> bool {
         let Some(s) = (match self.route {
             RoutePolicy::HashVector => Some(hash_vector(&x) as usize % self.shard_txs.len()),
@@ -188,12 +236,17 @@ impl ServiceHandle {
         }) else {
             return false;
         };
-        ServiceCounters::add(&self.counters.deletes, 1);
         let (tx, rx) = channel();
         if !self.shard_txs[s].force(ShardCmd::Delete(x, tx)) {
             return false;
         }
-        rx.recv().unwrap_or(false)
+        match rx.recv() {
+            Ok(removed) => {
+                ServiceCounters::add(&self.counters.deletes, 1);
+                removed
+            }
+            Err(_) => false,
+        }
     }
 
     fn call<T>(&self, make: impl FnOnce(Sender<T>) -> ServiceCmd) -> Result<T> {
@@ -205,14 +258,26 @@ impl ServiceHandle {
             .map_err(|_| anyhow!("service thread dropped the reply"))
     }
 
-    /// Batched (c, r)-ANN through the owning thread.
+    /// Batched (c, r)-ANN. On a native service this executes the whole
+    /// scatter/gather/merge ON the calling thread via the [`QueryPlane`]
+    /// — concurrent across handles/connections, never serialized through
+    /// the owning thread. On a PJRT service the batch travels to the
+    /// owning thread, where the executor lives. Either way a dead shard
+    /// is an error, never a silently partial answer.
     pub fn query_batch(&self, queries: Vec<Vec<f32>>) -> Result<Vec<Option<AnnAnswer>>> {
-        self.call(|tx| ServiceCmd::Ann(queries, tx))
+        if self.use_pjrt {
+            self.call(|tx| ServiceCmd::Ann(queries, tx))?
+                .map_err(|e| anyhow!("ANN query failed: {e}"))
+        } else {
+            self.plane.ann_batch(queries)
+        }
     }
 
-    /// Batched sliding-window KDE (kernel sums, densities).
+    /// Batched sliding-window KDE (kernel sums, densities), always on
+    /// the calling thread: KDE reads never touch the PJRT executor, so
+    /// even on a PJRT service they scatter straight from here.
     pub fn kde_batch(&self, queries: Vec<Vec<f32>>) -> Result<(Vec<f64>, Vec<f64>)> {
-        self.call(|tx| ServiceCmd::Kde(queries, tx))
+        self.plane.kde_batch(queries)
     }
 
     /// Aggregate statistics (drains shard mailboxes first).
@@ -313,8 +378,138 @@ mod tests {
         handle.shutdown();
         join.join().unwrap();
         assert!(handle.query_batch(vec![vec![0.0; 6]]).is_err());
+        assert!(handle.kde_batch(vec![vec![0.0; 6]]).is_err());
         assert!(handle.stats().is_err());
         // Direct ingest into dead shards reports failure, no panic.
         assert!(!handle.insert(vec![0.0; 6]));
+    }
+
+    /// Build a handle over hand-made shard mailboxes, with the control
+    /// channel's receiving end DROPPED: if any native read were still
+    /// routed through the owning thread, it would error immediately
+    /// instead of reaching the fake shard.
+    fn bare_handle(
+        shard_txs: Vec<BoundedSender<ShardCmd>>,
+        counters: Arc<ServiceCounters>,
+    ) -> ServiceHandle {
+        let (cmd_tx, cmd_rx) = channel::<ServiceCmd>();
+        drop(cmd_rx);
+        let shards = shard_txs.len();
+        ServiceHandle::new(
+            shard_txs,
+            RoutePolicy::HashVector,
+            4,
+            shards,
+            counters,
+            cmd_tx,
+            false,
+        )
+    }
+
+    #[test]
+    fn native_query_batches_overlap_not_serialized() {
+        use super::super::backpressure::{bounded, Overload};
+        use super::super::protocol::ShardAnnResult;
+        use std::time::Duration;
+
+        // The instrumented "shard" refuses to answer the FIRST batch
+        // until the SECOND has arrived in its mailbox. Two handle
+        // threads each issue one batch: this only completes if the
+        // second scatter happens while the first is still in flight —
+        // i.e. reads run on the calling threads, concurrently. A
+        // serialized read path (the old owning-thread loop) would never
+        // deliver batch 2 before batch 1's reply, and the recv_timeout
+        // below turns that into a clean failure instead of a hang.
+        let (tx, rx) = bounded::<ShardCmd>(16, Overload::Block);
+        let counters = Arc::new(ServiceCounters::default());
+        let handle = bare_handle(vec![tx], Arc::clone(&counters));
+
+        let shard = std::thread::spawn(move || {
+            let mut pending = Vec::new();
+            for _ in 0..2 {
+                match rx.recv_timeout(Duration::from_secs(10)) {
+                    Ok(ShardCmd::AnnBatch(batch, reply)) => pending.push((batch.len(), reply)),
+                    Ok(_) => panic!("unexpected shard command"),
+                    Err(_) => return false, // batch 2 never scattered: serialized
+                }
+            }
+            for (n, reply) in pending {
+                let _ = reply.send(ShardAnnResult { best: vec![None; n], scanned: 0 });
+            }
+            true
+        });
+
+        let h2 = handle.clone();
+        let q1 = std::thread::spawn(move || handle.query_batch(vec![vec![0.25; 4]]).unwrap());
+        let q2 = std::thread::spawn(move || h2.query_batch(vec![vec![0.75; 4]]).unwrap());
+        assert!(
+            shard.join().unwrap(),
+            "second batch must reach the shard while the first is unanswered"
+        );
+        assert_eq!(q1.join().unwrap(), vec![None]);
+        assert_eq!(q2.join().unwrap(), vec![None]);
+        assert_eq!(counters.snapshot().ann_queries, 2);
+    }
+
+    #[test]
+    fn dead_shard_query_errors_instead_of_degrading() {
+        use super::super::backpressure::{bounded, Overload};
+        use super::super::protocol::{AnnAnswer, ShardAnnResult, ShardKdeResult};
+
+        // Shard 0 is healthy and answers with a real hit; shard 1's
+        // mailbox is closed. The old path skipped shard 1 and returned
+        // shard 0's merge as a healthy answer — now the caller must see
+        // an error naming the dead shard.
+        let (tx0, rx0) = bounded::<ShardCmd>(16, Overload::Block);
+        let (tx1, rx1) = bounded::<ShardCmd>(16, Overload::Block);
+        drop(rx1);
+        let responder = std::thread::spawn(move || {
+            while let Ok(cmd) = rx0.recv() {
+                match cmd {
+                    ShardCmd::AnnBatch(batch, reply) => {
+                        let best = (0..batch.len())
+                            .map(|_| Some(AnnAnswer { shard: 0, id: 1, dist: 0.1 }))
+                            .collect();
+                        let _ = reply.send(ShardAnnResult { best, scanned: 1 });
+                    }
+                    ShardCmd::KdeBatch(batch, reply) => {
+                        let _ = reply.send(ShardKdeResult {
+                            kernel_sums: vec![1.0; batch.len()],
+                            population: 5,
+                        });
+                    }
+                    _ => break,
+                }
+            }
+        });
+        let handle = bare_handle(vec![tx0, tx1], Arc::new(ServiceCounters::default()));
+        let err = handle.query_batch(vec![vec![0.0; 4]]).unwrap_err().to_string();
+        assert!(err.contains("shard 1"), "{err}");
+        let err = handle.kde_batch(vec![vec![0.0; 4]]).unwrap_err().to_string();
+        assert!(err.contains("shard 1"), "{err}");
+        drop(handle); // closes shard 0's mailbox; responder exits
+        responder.join().unwrap();
+    }
+
+    #[test]
+    fn failed_ops_do_not_inflate_counters() {
+        use super::super::backpressure::{bounded, Overload};
+
+        // Every mailbox is dead: inserts fail WITHOUT counting as shed
+        // (a disconnect is not overload) and roll back their provisional
+        // insert count, and deletes that never reach a shard must not
+        // bump the deletes counter — so inserts == stored + shed (all
+        // zero here) reconciles even with dead shards.
+        let (tx, rx) = bounded::<ShardCmd>(4, Overload::Shed);
+        drop(rx);
+        let counters = Arc::new(ServiceCounters::default());
+        let handle = bare_handle(vec![tx], Arc::clone(&counters));
+        assert!(!handle.insert(vec![0.5; 4]));
+        assert_eq!(handle.insert_batch(vec![vec![0.5; 4]; 10]), 0);
+        assert!(!handle.delete(vec![0.5; 4]));
+        let st = counters.snapshot();
+        assert_eq!(st.inserts, 0, "disconnected offers roll back their count");
+        assert_eq!(st.shed, 0, "a dead mailbox must not masquerade as overload");
+        assert_eq!(st.deletes, 0, "unacknowledged deletes must not count");
     }
 }

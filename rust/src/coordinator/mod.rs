@@ -1,11 +1,13 @@
 //! The L3 coordinator: a thread-per-shard streaming sketch service with
-//! routing, bounded ingestion, dynamic query batching, and an optional
+//! routing, bounded ingestion, dynamic query batching, a cloneable
+//! calling-thread read path ([`query::QueryPlane`]), and an optional
 //! PJRT re-rank stage. See DESIGN.md §1 for the layer diagram.
 
 pub mod backpressure;
 pub mod batcher;
 pub mod handle;
 pub mod protocol;
+pub mod query;
 pub mod router;
 pub mod server;
 pub mod shard;
@@ -15,10 +17,11 @@ pub mod shard;
 /// part of the wire ⇔ in-process state-parity guarantee.
 pub(crate) const NATIVE_BATCH_ROWS: usize = 64;
 
-pub use backpressure::{bounded, BoundedSender, Overload};
+pub use backpressure::{bounded, BoundedSender, OfferOutcome, Overload};
 pub use batcher::{BatchPolicy, Batcher};
 pub use handle::{ServiceCmd, ServiceHandle};
 pub use protocol::{AnnAnswer, ServiceCounters, ServiceStats};
+pub use query::QueryPlane;
 pub use router::{RoutePolicy, Router};
 pub use server::{ServiceConfig, SketchService};
 pub use shard::{KdeKernel, KdeShardConfig};

@@ -74,6 +74,15 @@ impl ServiceCounters {
         counter.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Roll back a provisional count (a point is counted in `inserts`
+    /// BEFORE it is offered; an offer that fails because the mailbox is
+    /// disconnected — not overload — un-counts it, so
+    /// `inserts == stored + shed` reconciles exactly even when shards
+    /// die while the service is up).
+    pub fn sub(counter: &AtomicU64, n: u64) {
+        counter.fetch_sub(n, Ordering::Relaxed);
+    }
+
     pub fn shed(&self) -> u64 {
         self.shed_points.load(Ordering::Relaxed)
     }
@@ -131,6 +140,18 @@ pub fn merge_kde(partials: &[ShardKdeResult], n_queries: usize) -> (Vec<f64>, u6
     (sums, pop)
 }
 
+/// Normalize merged kernel sums into densities over the live window
+/// population (0.0 on an empty window). One definition shared by the
+/// [`QueryPlane`] and the service so the estimate can't drift between
+/// the owning-thread and calling-thread read paths.
+///
+/// [`QueryPlane`]: super::query::QueryPlane
+pub fn kde_densities(sums: &[f64], pop: u64) -> Vec<f64> {
+    sums.iter()
+        .map(|&s| if pop > 0 { s / pop as f64 } else { 0.0 })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -185,5 +206,7 @@ mod tests {
         let (sums, pop) = merge_kde(&[a, b], 2);
         assert_eq!(sums, vec![1.5, 2.5]);
         assert_eq!(pop, 15);
+        assert_eq!(kde_densities(&sums, pop), vec![1.5 / 15.0, 2.5 / 15.0]);
+        assert_eq!(kde_densities(&sums, 0), vec![0.0, 0.0], "empty window");
     }
 }

@@ -1,0 +1,226 @@
+//! `QueryPlane` — the cloneable native read path of the service.
+//!
+//! Shards answer `AnnBatch`/`KdeBatch` independently; the only thing the
+//! native read path ever needed from the owning thread was the scatter/
+//! gather/merge glue. This type IS that glue, detached: it holds clones
+//! of the shard mailbox senders plus the shared counters, so any thread
+//! (every wire connection, every `ServiceHandle` clone) can execute a
+//! whole ANN or KDE batch on the calling thread — concurrently with
+//! every other reader, without a hop through the service-owning thread.
+//! The owning thread keeps only what genuinely must stay pinned there:
+//! the PJRT executor (re-rank path) and control ops (stats, flush,
+//! checkpoint).
+//!
+//! Degradation contract: a partial answer is an ERROR, never a result.
+//! If any shard's mailbox is closed (scatter fails) or its thread dies
+//! before replying (gather fails), the batch returns `Err` — merging the
+//! surviving shards would silently drop every point the dead shard owns,
+//! which is indistinguishable from "no near neighbor" to the caller.
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::backpressure::BoundedSender;
+use super::protocol::{
+    kde_densities, merge_ann, merge_kde, AnnAnswer, ServiceCounters,
+};
+use super::shard::ShardCmd;
+
+/// Cloneable, `Send` scatter/gather front over the shard mailboxes.
+pub struct QueryPlane {
+    shard_txs: Vec<BoundedSender<ShardCmd>>,
+    counters: Arc<ServiceCounters>,
+}
+
+impl Clone for QueryPlane {
+    fn clone(&self) -> Self {
+        QueryPlane {
+            shard_txs: self.shard_txs.clone(),
+            counters: Arc::clone(&self.counters),
+        }
+    }
+}
+
+impl QueryPlane {
+    pub(super) fn new(
+        shard_txs: Vec<BoundedSender<ShardCmd>>,
+        counters: Arc<ServiceCounters>,
+    ) -> Self {
+        QueryPlane { shard_txs, counters }
+    }
+
+    /// Number of shards this plane scatters over.
+    pub fn shards(&self) -> usize {
+        self.shard_txs.len()
+    }
+
+    /// Batched (c, r)-ANN, executed entirely on the calling thread:
+    /// scatter `AnnBatch` to every shard, gather the per-shard bests,
+    /// keep the global minimum per query. Answers are bit-identical to
+    /// the pre-extraction `SketchService::query_batch` native path.
+    ///
+    /// Errors iff any shard is unreachable or dies mid-query — see the
+    /// module docs for why a partial merge is never returned.
+    pub fn ann_batch(&self, queries: Vec<Vec<f32>>) -> Result<Vec<Option<AnnAnswer>>> {
+        let n = queries.len();
+        ServiceCounters::add(&self.counters.ann_queries, n as u64);
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let batch = Arc::new(queries);
+        // Scatter to ALL shards before gathering anything, so every shard
+        // works the batch at the same time.
+        let mut replies = Vec::with_capacity(self.shard_txs.len());
+        for (si, tx) in self.shard_txs.iter().enumerate() {
+            let (rtx, rrx) = channel();
+            if !tx.force(ShardCmd::AnnBatch(Arc::clone(&batch), rtx)) {
+                bail!("ANN query failed: shard {si} is down (refusing a partial answer)");
+            }
+            replies.push(rrx);
+        }
+        let mut partials = Vec::with_capacity(replies.len());
+        for (si, rrx) in replies.into_iter().enumerate() {
+            match rrx.recv() {
+                Ok(part) => partials.push(part),
+                Err(_) => bail!("ANN query failed: shard {si} died mid-query"),
+            }
+        }
+        Ok(merge_ann(&partials, n))
+    }
+
+    /// Batched sliding-window KDE (summed kernel estimates, densities),
+    /// executed entirely on the calling thread. Same degradation
+    /// contract as [`Self::ann_batch`]: a missing shard's kernel mass
+    /// would silently bias every estimate low, so it is an error.
+    pub fn kde_batch(&self, queries: Vec<Vec<f32>>) -> Result<(Vec<f64>, Vec<f64>)> {
+        let n = queries.len();
+        ServiceCounters::add(&self.counters.kde_queries, n as u64);
+        if n == 0 {
+            return Ok((Vec::new(), Vec::new()));
+        }
+        let batch = Arc::new(queries);
+        let mut replies = Vec::with_capacity(self.shard_txs.len());
+        for (si, tx) in self.shard_txs.iter().enumerate() {
+            let (rtx, rrx) = channel();
+            if !tx.force(ShardCmd::KdeBatch(Arc::clone(&batch), rtx)) {
+                bail!("KDE query failed: shard {si} is down (refusing a partial answer)");
+            }
+            replies.push(rrx);
+        }
+        let mut partials = Vec::with_capacity(replies.len());
+        for (si, rrx) in replies.into_iter().enumerate() {
+            match rrx.recv() {
+                Ok(part) => partials.push(part),
+                Err(_) => bail!("KDE query failed: shard {si} died mid-query"),
+            }
+        }
+        let (sums, pop) = merge_kde(&partials, n);
+        let density = kde_densities(&sums, pop);
+        Ok((sums, density))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::backpressure::{bounded, Overload};
+    use super::super::protocol::{ShardAnnResult, ShardKdeResult};
+    use super::*;
+    use std::time::Duration;
+
+    fn fake_shard(
+        rx: std::sync::mpsc::Receiver<ShardCmd>,
+    ) -> std::thread::JoinHandle<()> {
+        std::thread::spawn(move || {
+            while let Ok(cmd) = rx.recv() {
+                match cmd {
+                    ShardCmd::AnnBatch(batch, reply) => {
+                        let _ = reply.send(ShardAnnResult {
+                            best: vec![None; batch.len()],
+                            scanned: 0,
+                        });
+                    }
+                    ShardCmd::KdeBatch(batch, reply) => {
+                        let _ = reply.send(ShardKdeResult {
+                            kernel_sums: vec![1.0; batch.len()],
+                            population: 10,
+                        });
+                    }
+                    ShardCmd::Shutdown => break,
+                    _ => {}
+                }
+            }
+        })
+    }
+
+    #[test]
+    fn empty_batches_short_circuit() {
+        let (tx, _rx) = bounded(4, Overload::Block);
+        let plane = QueryPlane::new(vec![tx], Arc::new(ServiceCounters::default()));
+        assert!(plane.ann_batch(Vec::new()).unwrap().is_empty());
+        let (s, d) = plane.kde_batch(Vec::new()).unwrap();
+        assert!(s.is_empty() && d.is_empty());
+    }
+
+    #[test]
+    fn healthy_shards_answer_and_count() {
+        let (tx0, rx0) = bounded(4, Overload::Block);
+        let (tx1, rx1) = bounded(4, Overload::Block);
+        let (j0, j1) = (fake_shard(rx0), fake_shard(rx1));
+        let counters = Arc::new(ServiceCounters::default());
+        let plane = QueryPlane::new(vec![tx0.clone(), tx1.clone()], Arc::clone(&counters));
+        let ans = plane.ann_batch(vec![vec![0.0; 4], vec![1.0; 4]]).unwrap();
+        assert_eq!(ans, vec![None, None]);
+        let (sums, dens) = plane.kde_batch(vec![vec![0.0; 4]]).unwrap();
+        assert_eq!(sums, vec![2.0], "kernel sums add across the partition");
+        assert_eq!(dens, vec![2.0 / 20.0]);
+        let st = counters.snapshot();
+        assert_eq!(st.ann_queries, 2);
+        assert_eq!(st.kde_queries, 1);
+        assert!(tx0.force(ShardCmd::Shutdown));
+        assert!(tx1.force(ShardCmd::Shutdown));
+        j0.join().unwrap();
+        j1.join().unwrap();
+    }
+
+    #[test]
+    fn dead_shard_is_an_error_not_a_partial_answer() {
+        // Shard 0 is healthy and WOULD answer; shard 1's mailbox is
+        // closed. The pre-fix behavior merged shard 0 alone and returned
+        // it as a complete answer — now the whole batch must error.
+        let (tx0, rx0) = bounded(4, Overload::Block);
+        let (tx1, rx1) = bounded::<ShardCmd>(4, Overload::Block);
+        drop(rx1);
+        let j0 = fake_shard(rx0);
+        let counters = Arc::new(ServiceCounters::default());
+        let plane = QueryPlane::new(vec![tx0.clone(), tx1], counters);
+        let err = plane.ann_batch(vec![vec![0.0; 4]]).unwrap_err().to_string();
+        assert!(err.contains("shard 1"), "{err}");
+        let err = plane.kde_batch(vec![vec![0.0; 4]]).unwrap_err().to_string();
+        assert!(err.contains("shard 1"), "{err}");
+        assert!(tx0.force(ShardCmd::Shutdown));
+        j0.join().unwrap();
+    }
+
+    #[test]
+    fn shard_dying_mid_query_is_an_error() {
+        // The shard accepts the scatter, then drops the reply channel
+        // without answering (thread death between recv and send).
+        let (tx, rx) = bounded(4, Overload::Block);
+        let j = std::thread::spawn(move || {
+            while let Ok(cmd) = rx.recv_timeout(Duration::from_secs(10)) {
+                match cmd {
+                    ShardCmd::AnnBatch(_, reply) => drop(reply),
+                    ShardCmd::Shutdown => break,
+                    _ => {}
+                }
+            }
+        });
+        let plane = QueryPlane::new(vec![tx.clone()], Arc::new(ServiceCounters::default()));
+        let err = plane.ann_batch(vec![vec![0.0; 4]]).unwrap_err().to_string();
+        assert!(err.contains("died mid-query"), "{err}");
+        assert!(tx.force(ShardCmd::Shutdown));
+        j.join().unwrap();
+    }
+}

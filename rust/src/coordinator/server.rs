@@ -23,9 +23,10 @@ use crate::durability::{checkpoint, recovery, wal, FsyncPolicy};
 use crate::runtime::Executor;
 use crate::sketch::ann::SAnnConfig;
 
-use super::backpressure::{bounded, BoundedSender, Overload};
+use super::backpressure::{bounded, BoundedSender, OfferOutcome, Overload};
 use super::handle::{ServiceCmd, ServiceHandle};
-use super::protocol::{merge_ann, merge_kde, AnnAnswer, ServiceCounters, ServiceStats};
+use super::protocol::{AnnAnswer, ServiceCounters, ServiceStats};
+use super::query::QueryPlane;
 use super::router::{RoutePolicy, Router};
 use super::shard::{KdeShardConfig, Shard, ShardCmd};
 
@@ -115,6 +116,11 @@ pub struct SketchService {
     shards: Vec<ShardHandle>,
     router: Router,
     executor: Option<Executor>,
+    /// The native read path (scatter/gather/merge over the shard
+    /// mailboxes). Held here so the service's own query calls share the
+    /// exact code every `ServiceHandle` clone runs — including the
+    /// no-partial-answers degradation contract.
+    plane: QueryPlane,
     /// Point-denominated live counters, shared with every
     /// [`ServiceHandle`] so connection threads and the owning thread
     /// account into one place.
@@ -229,11 +235,16 @@ impl SketchService {
         let router = Router::new(cfg.route, cfg.shards);
         let pending_ingest = vec![Vec::new(); cfg.shards];
         let inserts_at_ckpt = counters.snapshot().inserts;
+        let plane = QueryPlane::new(
+            shards.iter().map(|s| s.tx.clone()).collect(),
+            Arc::clone(&counters),
+        );
         Ok(SketchService {
             cfg,
             shards,
             router,
             executor,
+            plane,
             counters,
             pending_ingest,
             ckpt_epoch,
@@ -246,15 +257,23 @@ impl SketchService {
         &self.cfg
     }
 
-    /// Offer one stream element. Returns false if it was shed.
+    /// Offer one stream element. Returns false if it was not delivered;
+    /// only a genuine shed (queue full) counts toward the shed statistic
+    /// — a disconnected mailbox rolls back its insert count instead.
     pub fn insert(&mut self, x: Vec<f32>) -> bool {
         let shard = self.router.route(&x);
         ServiceCounters::add(&self.counters.inserts, 1);
-        let ok = self.shards[shard].tx.offer(ShardCmd::Insert(x));
-        if !ok {
-            ServiceCounters::add(&self.counters.shed_points, 1);
+        match self.shards[shard].tx.offer_outcome(ShardCmd::Insert(x)) {
+            OfferOutcome::Sent => true,
+            OfferOutcome::Shed => {
+                ServiceCounters::add(&self.counters.shed_points, 1);
+                false
+            }
+            OfferOutcome::Disconnected => {
+                ServiceCounters::sub(&self.counters.inserts, 1);
+                false
+            }
         }
-        ok
     }
 
     /// Batched ingest: routes the batch, hashes each shard's slice through
@@ -280,7 +299,7 @@ impl SketchService {
             // queue_cap keeps its per-point meaning within a factor of the
             // batch size.
             return super::handle::ship_native_batch(&self.counters, per_shard, |s, chunk| {
-                self.shards[s].tx.offer(ShardCmd::InsertBatch(chunk))
+                self.shards[s].tx.offer_outcome(ShardCmd::InsertBatch(chunk))
             });
         }
         // Route into per-shard pending buffers; flush a shard only when a
@@ -342,59 +361,71 @@ impl SketchService {
                         )
                     })
                     .collect();
-                if !self.shards[si].tx.offer(ShardCmd::InsertBatchSlots(items)) {
-                    ServiceCounters::add(&self.counters.shed_points, m as u64);
+                match self.shards[si].tx.offer_outcome(ShardCmd::InsertBatchSlots(items)) {
+                    OfferOutcome::Sent => {}
+                    OfferOutcome::Shed => {
+                        ServiceCounters::add(&self.counters.shed_points, m as u64)
+                    }
+                    OfferOutcome::Disconnected => {
+                        ServiceCounters::sub(&self.counters.inserts, m as u64)
+                    }
                 }
             }
             _ => {
                 // artifact variant missing: native per-item path
                 for x in pts {
-                    if !self.shards[si].tx.offer(ShardCmd::Insert(x)) {
-                        ServiceCounters::add(&self.counters.shed_points, 1);
+                    match self.shards[si].tx.offer_outcome(ShardCmd::Insert(x)) {
+                        OfferOutcome::Sent => {}
+                        OfferOutcome::Shed => {
+                            ServiceCounters::add(&self.counters.shed_points, 1)
+                        }
+                        OfferOutcome::Disconnected => {
+                            ServiceCounters::sub(&self.counters.inserts, 1)
+                        }
                     }
                 }
             }
         }
     }
 
-    /// Turnstile deletion (HashVector routing only).
+    /// Turnstile deletion (HashVector routing only). The `deletes`
+    /// counter tracks ACKNOWLEDGED commands only — a dead mailbox or a
+    /// shard dying before the ack must not drift the counter above the
+    /// applied work (same point-denominated discipline as `shed`).
     pub fn delete(&mut self, x: Vec<f32>) -> bool {
         let Some(shard) = self.router.route_delete(&x) else {
             return false;
         };
-        ServiceCounters::add(&self.counters.deletes, 1);
         let (tx, rx) = channel();
         if !self.shards[shard].tx.force(ShardCmd::Delete(x, tx)) {
             return false;
         }
-        rx.recv().unwrap_or(false)
+        match rx.recv() {
+            Ok(removed) => {
+                ServiceCounters::add(&self.counters.deletes, 1);
+                removed
+            }
+            Err(_) => false,
+        }
     }
 
     /// Batched (c, r)-ANN: scatter to all shards, gather, and either merge
-    /// native per-shard bests or re-rank all candidates through PJRT.
-    pub fn query_batch(&mut self, queries: Vec<Vec<f32>>) -> Vec<Option<AnnAnswer>> {
+    /// native per-shard bests (via the [`QueryPlane`], on this thread) or
+    /// re-rank all candidates through PJRT. A dead shard is an `Err`,
+    /// never a silently partial merge.
+    pub fn query_batch(&mut self, queries: Vec<Vec<f32>>) -> Result<Vec<Option<AnnAnswer>>> {
+        if self.executor.is_none() {
+            return self.plane.ann_batch(queries);
+        }
         let n = queries.len();
         ServiceCounters::add(&self.counters.ann_queries, n as u64);
         if n == 0 {
-            return Vec::new();
+            return Ok(Vec::new());
         }
-        let batch = Arc::new(queries);
-        if self.executor.is_some() {
-            self.query_batch_pjrt(batch)
-        } else {
-            let mut replies = Vec::with_capacity(self.shards.len());
-            for s in &self.shards {
-                let (tx, rx) = channel();
-                if s.tx.force(ShardCmd::AnnBatch(Arc::clone(&batch), tx)) {
-                    replies.push(rx);
-                }
-            }
-            let partials: Vec<_> = replies.into_iter().filter_map(|rx| rx.recv().ok()).collect();
-            merge_ann(&partials, n)
-        }
+        self.query_batch_pjrt(Arc::new(queries))
     }
 
-    fn query_batch_pjrt(&mut self, batch: Arc<Vec<Vec<f32>>>) -> Vec<Option<AnnAnswer>> {
+    fn query_batch_pjrt(&mut self, batch: Arc<Vec<Vec<f32>>>) -> Result<Vec<Option<AnnAnswer>>> {
         let n = batch.len();
         let dim = self.cfg.dim;
         let trace = std::env::var_os("SKETCH_TRACE").is_some();
@@ -406,7 +437,7 @@ impl SketchService {
         // below reuses the same flattened queries.
         let flat_q: Vec<f32> = batch.iter().flatten().copied().collect();
         let mut replies = Vec::with_capacity(self.shards.len());
-        for s in &self.shards {
+        for (si, s) in self.shards.iter().enumerate() {
             let (tx, rx) = channel();
             let (proj, bias, w, k, l) = &s.hash_params;
             let exec = self.executor.as_mut().unwrap();
@@ -428,9 +459,14 @@ impl SketchService {
                 Some(all) => s.tx.force(ShardCmd::AnnCandidatesKeys(Arc::new(all), tx)),
                 None => s.tx.force(ShardCmd::AnnCandidates(Arc::clone(&batch), tx)),
             };
-            if sent {
-                replies.push(rx);
+            // A dead shard's candidates are gone with it — returning the
+            // surviving shards' merge would silently declare its points
+            // "no near neighbor" (the bug this path shared with the old
+            // native loop).
+            if !sent {
+                bail!("ANN query failed: shard {si} is down (refusing a partial answer)");
             }
+            replies.push(rx);
         }
         // Batched queries share candidates heavily (they probe the same
         // LSH tables), so shards reply with DEDUPLICATED pools; the server
@@ -441,17 +477,20 @@ impl SketchService {
         let mut pool_meta: Vec<(usize, u32)> = Vec::new(); // slot -> (shard, id)
         let mut per_query: Vec<Vec<usize>> = vec![Vec::new(); n];
         for (si, rx) in replies.into_iter().enumerate() {
-            if let Ok(cands) = rx.recv() {
-                let base = pool_meta.len();
-                pool_flat.extend_from_slice(&cands.pool);
-                pool_meta.extend(cands.ids.iter().map(|&id| (si, id)));
-                for (qi, idxs) in cands.per_query.into_iter().enumerate() {
-                    per_query[qi].extend(idxs.into_iter().map(|s| base + s as usize));
+            match rx.recv() {
+                Ok(cands) => {
+                    let base = pool_meta.len();
+                    pool_flat.extend_from_slice(&cands.pool);
+                    pool_meta.extend(cands.ids.iter().map(|&id| (si, id)));
+                    for (qi, idxs) in cands.per_query.into_iter().enumerate() {
+                        per_query[qi].extend(idxs.into_iter().map(|s| base + s as usize));
+                    }
                 }
+                Err(_) => bail!("ANN query failed: shard {si} died mid-query"),
             }
         }
         if pool_flat.is_empty() {
-            return vec![None; n];
+            return Ok(vec![None; n]);
         }
         let t_gather = t0.elapsed();
         let exec = self.executor.as_mut().unwrap();
@@ -469,7 +508,7 @@ impl SketchService {
         }
         let r2 = (self.cfg.ann.c * self.cfg.ann.r) as f32;
         let r2_sq = r2 * r2;
-        per_query
+        Ok(per_query
             .iter()
             .enumerate()
             .map(|(qi, slots)| {
@@ -486,31 +525,14 @@ impl SketchService {
                 }
                 best
             })
-            .collect()
+            .collect())
     }
 
     /// Batched sliding-window KDE: summed kernel estimates and density.
-    pub fn kde_batch(&mut self, queries: Vec<Vec<f32>>) -> (Vec<f64>, Vec<f64>) {
-        let n = queries.len();
-        ServiceCounters::add(&self.counters.kde_queries, n as u64);
-        if n == 0 {
-            return (Vec::new(), Vec::new());
-        }
-        let batch = Arc::new(queries);
-        let mut replies = Vec::with_capacity(self.shards.len());
-        for s in &self.shards {
-            let (tx, rx) = channel();
-            if s.tx.force(ShardCmd::KdeBatch(Arc::clone(&batch), tx)) {
-                replies.push(rx);
-            }
-        }
-        let partials: Vec<_> = replies.into_iter().filter_map(|rx| rx.recv().ok()).collect();
-        let (sums, pop) = merge_kde(&partials, n);
-        let density = sums
-            .iter()
-            .map(|&s| if pop > 0 { s / pop as f64 } else { 0.0 })
-            .collect();
-        (sums, density)
+    /// Pure scatter/gather — delegated to the [`QueryPlane`] (KDE never
+    /// touches the executor), so the degradation contract is inherited.
+    pub fn kde_batch(&mut self, queries: Vec<Vec<f32>>) -> Result<(Vec<f64>, Vec<f64>)> {
+        self.plane.kde_batch(queries)
     }
 
     /// Wait until every shard has drained its mailbox (barrier); pending
@@ -665,11 +687,12 @@ impl SketchService {
         }
     }
 
-    /// Cloneable ingest/query front for connection threads. Inserts and
-    /// deletes go straight to shard mailboxes from the calling thread;
-    /// anything that needs the service's own state (queries, stats, flush)
-    /// travels over `cmd_tx` and must be drained by [`Self::run_cmd_loop`]
-    /// on the thread that owns the service.
+    /// Cloneable ingest/query front for connection threads. Inserts,
+    /// deletes, and native ANN/KDE reads run straight against the shard
+    /// mailboxes from the calling thread; only what needs the service's
+    /// own state (PJRT queries, stats, flush, checkpoint) travels over
+    /// `cmd_tx` and must be drained by [`Self::run_cmd_loop`] on the
+    /// thread that owns the service.
     pub fn handle(&self, cmd_tx: std::sync::mpsc::Sender<ServiceCmd>) -> ServiceHandle {
         ServiceHandle::new(
             self.shards.iter().map(|s| s.tx.clone()).collect(),
@@ -678,13 +701,17 @@ impl SketchService {
             self.cfg.shards,
             Arc::clone(&self.counters),
             cmd_tx,
+            self.cfg.use_pjrt,
         )
     }
 
     /// Drain handle commands until `Shutdown` arrives or every handle is
-    /// dropped, then shut the shards down. Queries never wait behind
-    /// ingest here: handles push inserts directly into the bounded shard
-    /// mailboxes, so this loop only ever sees control-plane commands.
+    /// dropped, then shut the shards down. Neither ingest nor native
+    /// reads ever wait here: handles push inserts into the bounded shard
+    /// mailboxes and execute native ANN/KDE through their own
+    /// [`QueryPlane`], so this loop only sees control-plane commands
+    /// (plus `Ann` on PJRT services, where the re-rank needs the
+    /// thread-pinned executor).
     ///
     /// With a background checkpoint trigger configured, the loop wakes on
     /// a short timeout so checkpoints fire on a durable-but-idle control
@@ -711,10 +738,7 @@ impl SketchService {
             if let Some(cmd) = cmd {
                 match cmd {
                     ServiceCmd::Ann(qs, reply) => {
-                        let _ = reply.send(self.query_batch(qs));
-                    }
-                    ServiceCmd::Kde(qs, reply) => {
-                        let _ = reply.send(self.kde_batch(qs));
+                        let _ = reply.send(self.query_batch(qs).map_err(|e| e.to_string()));
                     }
                     ServiceCmd::Stats(reply) => {
                         let _ = reply.send(self.stats());
@@ -807,7 +831,7 @@ mod tests {
             assert!(svc.insert(p.clone()));
         }
         svc.flush().unwrap();
-        let answers = svc.query_batch(pts[..10].to_vec());
+        let answers = svc.query_batch(pts[..10].to_vec()).unwrap();
         let hits = answers.iter().filter(|a| a.is_some()).count();
         assert!(hits >= 9, "hits={hits}/10");
         for a in answers.into_iter().flatten() {
@@ -834,8 +858,8 @@ mod tests {
         let ok = batched.insert_batch(pts.clone());
         assert_eq!(ok, 120);
         batched.flush().unwrap();
-        let a = singles.query_batch(pts[..20].to_vec());
-        let b = batched.query_batch(pts[..20].to_vec());
+        let a = singles.query_batch(pts[..20].to_vec()).unwrap();
+        let b = batched.query_batch(pts[..20].to_vec()).unwrap();
         assert_eq!(a, b, "batched ingest must build the same sketch state");
         assert_eq!(batched.stats().stored_points, 120, "eta=0 stores all");
         singles.shutdown();
@@ -852,7 +876,7 @@ mod tests {
         }
         svc.flush().unwrap();
         let q: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
-        let (sums, density) = svc.kde_batch(vec![q]);
+        let (sums, density) = svc.kde_batch(vec![q]).unwrap();
         assert_eq!(sums.len(), 1);
         assert!(sums[0] >= 0.0);
         assert!(density[0] >= 0.0 && density[0] <= 1.0 + 1e-9);
@@ -868,7 +892,7 @@ mod tests {
         assert!(svc.delete(p.clone()), "must delete the stored copy");
         assert!(!svc.delete(p.clone()), "second delete no-op");
         svc.flush().unwrap();
-        let ans = svc.query_batch(vec![p]);
+        let ans = svc.query_batch(vec![p]).unwrap();
         assert!(ans[0].is_none(), "deleted point must not answer");
         svc.shutdown();
     }
@@ -876,8 +900,8 @@ mod tests {
     #[test]
     fn empty_batch_is_fine() {
         let mut svc = SketchService::start(small_cfg()).unwrap();
-        assert!(svc.query_batch(vec![]).is_empty());
-        let (s, d) = svc.kde_batch(vec![]);
+        assert!(svc.query_batch(vec![]).unwrap().is_empty());
+        let (s, d) = svc.kde_batch(vec![]).unwrap();
         assert!(s.is_empty() && d.is_empty());
         svc.shutdown();
     }
@@ -982,7 +1006,7 @@ mod tests {
         assert_eq!(st.stored_points, 120, "eta=0 stores all");
         assert_eq!(st.shed, 0);
         // The recovered service keeps serving and checkpointing.
-        let ans = back.query_batch(pts[..10].to_vec());
+        let ans = back.query_batch(pts[..10].to_vec()).unwrap();
         assert!(ans.iter().filter(|a| a.is_some()).count() >= 9);
         assert_eq!(back.checkpoint().unwrap(), 120);
         back.shutdown();
@@ -1001,8 +1025,8 @@ mod tests {
         let mut direct = SketchService::start(small_cfg()).unwrap();
         direct.insert_batch(pts.clone());
         direct.flush().unwrap();
-        let want = direct.query_batch(pts[..20].to_vec());
-        let (want_sums, want_dens) = direct.kde_batch(pts[..20].to_vec());
+        let want = direct.query_batch(pts[..20].to_vec()).unwrap();
+        let (want_sums, want_dens) = direct.kde_batch(pts[..20].to_vec()).unwrap();
         direct.shutdown();
 
         let (handle, join) = SketchService::spawn(small_cfg()).unwrap();

@@ -61,6 +61,14 @@ USAGE:
       queries (drawn from the inserted points) and reports throughput
       and p50/p99 latency. --checkpoint cuts a durable checkpoint after
       the load; --shutdown stops the server afterwards.
+  sketchd client --connect HOST:PORT --query-load [--n 10000]
+                 [--queries 2048] [--batch 1] [--connections 8]
+                 [--seed 42] [--shutdown]
+      Query-plane load: seed --n points over one connection, then drive
+      --queries ANN + KDE queries split across --connections concurrent
+      sockets (batch size --batch; the default 1 exercises the server's
+      cross-connection query coalescer). Per-call latencies merge into
+      one QPS/p50/p99 report across all connections.
 ";
 
 fn main() -> Result<()> {
@@ -328,7 +336,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut answered = 0usize;
     let mut qps = Throughput::new();
     for chunk in queries.chunks(batch) {
-        let ans = lat.time(|| svc.query_batch(chunk.to_vec()));
+        let ans = lat.time(|| svc.query_batch(chunk.to_vec()))?;
         answered += ans.iter().filter(|a| a.is_some()).count();
         qps.add(chunk.len() as u64);
     }
@@ -488,14 +496,99 @@ fn run_load(
     Ok(out)
 }
 
+/// `client --query-load`: saturate the READ path. One connection seeds
+/// the service with `--n` points, then `--connections` sockets each
+/// issue their share of `--queries` ANN + KDE queries (batch size
+/// `--batch`; the default of 1 drives the server's cross-connection
+/// coalescer) and the per-thread `LatencyRecorder`s merge into one
+/// QPS/p50/p99 report.
+fn run_query_load(args: &Args, addr: &str) -> Result<()> {
+    let n = args.get_usize("n", 10_000)?.max(1);
+    let n_queries = args.get_usize("queries", 2_048)?;
+    let batch = args.get_usize("batch", 1)?.max(1);
+    let conns = args.get_usize("connections", 8)?.max(1);
+    let seed = args.get_u64("seed", 42)?;
+
+    // Seed the sketch so the query phase has answers to find; queries
+    // are drawn from the inserted points.
+    let mut feeder = SketchClient::connect(addr)?;
+    let dim = feeder.dim();
+    let mut rng = Rng::new(seed);
+    let pts: Vec<Vec<f32>> = (0..n)
+        .map(|_| (0..dim).map(|_| rng.gaussian_f32()).collect())
+        .collect();
+    for chunk in pts.chunks(256) {
+        feeder.insert_batch(chunk)?;
+    }
+    feeder.flush()?;
+    drop(feeder);
+    println!(
+        "[client] query-load: seeded {n} pts; {conns} connection(s) sharing {n_queries} queries (batch={batch})"
+    );
+
+    let pts = std::sync::Arc::new(pts);
+    let mut wall = Throughput::new();
+    let workers: Vec<_> = (0..conns)
+        .map(|t| {
+            let addr = addr.to_string();
+            let pts = std::sync::Arc::clone(&pts);
+            let q_per = n_queries / conns + usize::from(t < n_queries % conns);
+            std::thread::spawn(move || -> Result<(usize, usize, LatencyRecorder, LatencyRecorder)> {
+                let mut c = SketchClient::connect(&addr)?;
+                let mut ann_lat = LatencyRecorder::new();
+                let mut kde_lat = LatencyRecorder::new();
+                let (mut answered, mut issued) = (0usize, 0usize);
+                let mut i = t; // staggered walk over the shared point pool
+                while issued < q_per {
+                    let m = batch.min(q_per - issued);
+                    if m == 1 {
+                        let q = &pts[i % pts.len()];
+                        let ans = ann_lat.time(|| c.ann_query_one(q))?;
+                        answered += usize::from(ans.is_some());
+                        kde_lat.time(|| c.kde_query_one(q))?;
+                    } else {
+                        let chunk: Vec<Vec<f32>> =
+                            (0..m).map(|j| pts[(i + j) % pts.len()].clone()).collect();
+                        let ans = ann_lat.time(|| c.ann_query(&chunk))?;
+                        answered += ans.iter().filter(|a| a.is_some()).count();
+                        kde_lat.time(|| c.kde_query(&chunk))?;
+                    }
+                    issued += m;
+                    i = i.wrapping_add(m * 37 + 1);
+                }
+                Ok((answered, issued, ann_lat, kde_lat))
+            })
+        })
+        .collect();
+    let mut ann_lat = LatencyRecorder::new();
+    let mut kde_lat = LatencyRecorder::new();
+    let (mut answered, mut issued) = (0usize, 0usize);
+    for w in workers {
+        let (a, q, al, kl) =
+            w.join().map_err(|_| anyhow::anyhow!("query-load thread panicked"))??;
+        answered += a;
+        issued += q;
+        ann_lat.merge(&al);
+        kde_lat.merge(&kl);
+    }
+    wall.add(2 * issued as u64); // one ANN + one KDE call per issued query
+    println!(
+        "[client] ann: answered {answered}/{issued} · per-call latency {}",
+        ann_lat.summary()
+    );
+    println!("[client] kde: per-call latency {}", kde_lat.summary());
+    println!(
+        "[client] query-load {:.0} q/s aggregate ({:.0} ANN/s + {:.0} KDE/s)",
+        wall.per_second(),
+        wall.per_second() / 2.0,
+        wall.per_second() / 2.0
+    );
+    Ok(())
+}
+
 /// `client`: wire client + load generator (one thread per connection).
 fn cmd_client(args: &Args) -> Result<()> {
     let addr = args.require("connect")?.to_string();
-    let n = args.get_usize("n", 10_000)?;
-    let n_queries = args.get_usize("queries", 256)?;
-    let batch = args.get_usize("batch", 64)?.max(1);
-    let conns = args.get_usize("connections", 1)?.max(1);
-    let seed = args.get_u64("seed", 42)?;
 
     // Probe connection: validates the handshake and reports the shape.
     let probe = SketchClient::connect(&addr)?;
@@ -507,45 +600,54 @@ fn cmd_client(args: &Args) -> Result<()> {
     );
     drop(probe);
 
-    let mut wall = Throughput::new();
-    let workers: Vec<_> = (0..conns)
-        .map(|t| {
-            let addr = addr.clone();
-            let per = n / conns + usize::from(t < n % conns);
-            let q_per = n_queries / conns + usize::from(t < n_queries % conns);
-            std::thread::spawn(move || {
-                run_load(&addr, per, q_per, batch, seed ^ (0x9E37 * (t as u64 + 1)))
+    if args.has("query-load") {
+        run_query_load(args, &addr)?;
+    } else {
+        let n = args.get_usize("n", 10_000)?;
+        let n_queries = args.get_usize("queries", 256)?;
+        let batch = args.get_usize("batch", 64)?.max(1);
+        let conns = args.get_usize("connections", 1)?.max(1);
+        let seed = args.get_u64("seed", 42)?;
+        let mut wall = Throughput::new();
+        let workers: Vec<_> = (0..conns)
+            .map(|t| {
+                let addr = addr.clone();
+                let per = n / conns + usize::from(t < n % conns);
+                let q_per = n_queries / conns + usize::from(t < n_queries % conns);
+                std::thread::spawn(move || {
+                    run_load(&addr, per, q_per, batch, seed ^ (0x9E37 * (t as u64 + 1)))
+                })
             })
-        })
-        .collect();
-    let mut ann_lat = LatencyRecorder::new();
-    let mut kde_lat = LatencyRecorder::new();
-    let (mut offered, mut accepted, mut answered, mut queries) = (0u64, 0u64, 0usize, 0usize);
-    let mut density_sum = 0.0;
-    for w in workers {
-        let r = w.join().map_err(|_| anyhow::anyhow!("load thread panicked"))??;
-        offered += r.offered;
-        accepted += r.accepted;
-        answered += r.answered;
-        queries += r.queries;
-        density_sum += r.kde_density_sum;
-        ann_lat.merge(&r.ann_lat);
-        kde_lat.merge(&r.kde_lat);
+            .collect();
+        let mut ann_lat = LatencyRecorder::new();
+        let mut kde_lat = LatencyRecorder::new();
+        let (mut offered, mut accepted, mut answered, mut queries) = (0u64, 0u64, 0usize, 0usize);
+        let mut density_sum = 0.0;
+        for w in workers {
+            let r = w.join().map_err(|_| anyhow::anyhow!("load thread panicked"))??;
+            offered += r.offered;
+            accepted += r.accepted;
+            answered += r.answered;
+            queries += r.queries;
+            density_sum += r.kde_density_sum;
+            ann_lat.merge(&r.ann_lat);
+            kde_lat.merge(&r.kde_lat);
+        }
+        wall.add(offered + 2 * queries as u64);
+        println!(
+            "[client] ingest: offered={offered} accepted={accepted} over {conns} connection(s)"
+        );
+        println!(
+            "[client] ann: answered {answered}/{queries} · batch latency {}",
+            ann_lat.summary()
+        );
+        println!(
+            "[client] kde: mean density {:.4} · batch latency {}",
+            if queries > 0 { density_sum / queries as f64 } else { 0.0 },
+            kde_lat.summary()
+        );
+        println!("[client] total {:.0} ops/s wall", wall.per_second());
     }
-    wall.add(offered + 2 * queries as u64);
-    println!(
-        "[client] ingest: offered={offered} accepted={accepted} over {conns} connection(s)"
-    );
-    println!(
-        "[client] ann: answered {answered}/{queries} · batch latency {}",
-        ann_lat.summary()
-    );
-    println!(
-        "[client] kde: mean density {:.4} · batch latency {}",
-        if queries > 0 { density_sum / queries as f64 } else { 0.0 },
-        kde_lat.summary()
-    );
-    println!("[client] total {:.0} ops/s wall", wall.per_second());
 
     let mut c = SketchClient::connect(&addr)?;
     let st = c.stats()?;

@@ -3,10 +3,37 @@
 
 use std::time::{Duration, Instant};
 
+use crate::util::rng::Rng;
+
+/// Reservoir capacity that keeps percentile estimates tight (a 4096-way
+/// uniform sample pins p99 well) while bounding a recorder to ~32KB no
+/// matter how long the load run is.
+const DEFAULT_CAP: usize = 4096;
+
 /// Fixed-capacity latency recorder with percentile reporting.
-#[derive(Clone, Debug, Default)]
+///
+/// Genuinely fixed-capacity: memory is bounded by the reservoir size, so
+/// an arbitrarily long `sketchd client` run records forever without
+/// growing. The first `cap` samples are kept exactly; beyond that,
+/// Vitter's Algorithm R maintains a uniform sample of everything seen.
+/// `count`/`mean_us` stay exact at any length (running total + sum);
+/// percentiles are exact below `cap` and reservoir estimates beyond it.
+#[derive(Clone, Debug)]
 pub struct LatencyRecorder {
     samples_us: Vec<f64>,
+    /// Total samples recorded (exact; `samples_us.len() <= cap`).
+    count: u64,
+    /// Running sum of everything recorded (exact mean at any length).
+    sum_us: f64,
+    cap: usize,
+    /// Deterministic reservoir choices (fixed seed: runs reproduce).
+    rng: Rng,
+}
+
+impl Default for LatencyRecorder {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_CAP)
+    }
 }
 
 impl LatencyRecorder {
@@ -14,8 +41,31 @@ impl LatencyRecorder {
         Default::default()
     }
 
+    /// Recorder bounded to at most `cap` retained samples (`cap >= 1`).
+    pub fn with_capacity(cap: usize) -> Self {
+        LatencyRecorder {
+            samples_us: Vec::new(),
+            count: 0,
+            sum_us: 0.0,
+            cap: cap.max(1),
+            rng: Rng::new(0x1A7E_5EED),
+        }
+    }
+
     pub fn record(&mut self, d: Duration) {
-        self.samples_us.push(d.as_secs_f64() * 1e6);
+        let us = d.as_secs_f64() * 1e6;
+        self.count += 1;
+        self.sum_us += us;
+        if self.samples_us.len() < self.cap {
+            self.samples_us.push(us);
+        } else {
+            // Algorithm R: keep each of the `count` samples seen so far
+            // in the reservoir with equal probability cap/count.
+            let j = self.rng.below(self.count);
+            if (j as usize) < self.cap {
+                self.samples_us[j as usize] = us;
+            }
+        }
     }
 
     /// Time a closure and record it.
@@ -26,12 +76,22 @@ impl LatencyRecorder {
         out
     }
 
+    /// Total samples recorded (exact, not the retained reservoir size).
     pub fn count(&self) -> usize {
+        self.count as usize
+    }
+
+    /// Samples currently retained for percentiles (`<= cap`).
+    pub fn reservoir_len(&self) -> usize {
         self.samples_us.len()
     }
 
     pub fn mean_us(&self) -> f64 {
-        crate::util::stats::mean(&self.samples_us)
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us / self.count as f64
+        }
     }
 
     pub fn percentile_us(&self, q: f64) -> f64 {
@@ -48,8 +108,44 @@ impl LatencyRecorder {
 
     /// Fold another recorder's samples in — the multi-connection load
     /// generator records per-thread and merges for one percentile report.
+    ///
+    /// Count and mean merge exactly. For percentiles: while both sides
+    /// are below capacity the samples concatenate (still exact);
+    /// otherwise the merged reservoir is rebuilt by sampling each side
+    /// proportionally to its true count, so every recorded measurement
+    /// keeps equal representation and a capped 1M-sample worker doesn't
+    /// get outvoted by an uncapped 1k-sample one.
     pub fn merge(&mut self, other: &LatencyRecorder) {
-        self.samples_us.extend_from_slice(&other.samples_us);
+        if other.count == 0 {
+            return;
+        }
+        let self_exact = self.count as usize == self.samples_us.len();
+        let other_exact = other.count as usize == other.samples_us.len();
+        if self_exact
+            && other_exact
+            && self.samples_us.len() + other.samples_us.len() <= self.cap
+        {
+            self.samples_us.extend_from_slice(&other.samples_us);
+            self.count += other.count;
+            self.sum_us += other.sum_us;
+            return;
+        }
+        // Refill to FULL capacity (not to the sum of retained lengths):
+        // `record` relies on a full reservoir for its Algorithm-R branch
+        // — a short reservoir with a huge count would retain every
+        // subsequent sample with probability 1 and let the post-merge
+        // tail outvote the stream it summarizes.
+        let k = self.cap;
+        let (na, nb) = (self.count as f64, other.count as f64);
+        let mut merged = Vec::with_capacity(k);
+        for _ in 0..k {
+            let from_self = self.rng.uniform() * (na + nb) < na;
+            let src = if from_self { &self.samples_us } else { &other.samples_us };
+            merged.push(src[self.rng.below(src.len() as u64) as usize]);
+        }
+        self.samples_us = merged;
+        self.count += other.count;
+        self.sum_us += other.sum_us;
     }
 
     /// One-line summary for bench tables.
@@ -131,6 +227,44 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.count(), 2);
         assert!((a.mean_us() - 200.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn capacity_stays_bounded_on_long_runs() {
+        // The old recorder grew one f64 per record — a long load run
+        // leaked linearly. Memory must now stay at the cap while count,
+        // mean, and percentiles keep tracking the full stream.
+        let mut r = LatencyRecorder::with_capacity(256);
+        for i in 0..100_000u64 {
+            // Uniform 0..1000us ramp, repeated: true p50 ~ 500us.
+            r.record(Duration::from_micros(i % 1000));
+        }
+        assert_eq!(r.count(), 100_000);
+        assert_eq!(r.reservoir_len(), 256, "retained samples bounded");
+        assert!((r.mean_us() - 499.5).abs() < 1.0, "mean exact: {}", r.mean_us());
+        let p50 = r.p50_us();
+        assert!((400.0..600.0).contains(&p50), "reservoir p50={p50}");
+    }
+
+    #[test]
+    fn merge_weights_capped_recorders_by_true_count() {
+        // a: 10k samples at ~100us (capped); b: 10 samples at 900us.
+        // The merged p50 must stay near 100us — b's handful of samples
+        // must not get reservoir representation beyond its true share.
+        let mut a = LatencyRecorder::with_capacity(128);
+        for _ in 0..10_000 {
+            a.record(Duration::from_micros(100));
+        }
+        let mut b = LatencyRecorder::new();
+        for _ in 0..10 {
+            b.record(Duration::from_micros(900));
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 10_010);
+        assert!(a.reservoir_len() <= 128);
+        assert!((a.p50_us() - 100.0).abs() < 1.0, "p50={}", a.p50_us());
+        let want_mean = (10_000.0 * 100.0 + 10.0 * 900.0) / 10_010.0;
+        assert!((a.mean_us() - want_mean).abs() < 1e-6, "mean exact under merge");
     }
 
     #[test]

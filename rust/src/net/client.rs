@@ -116,6 +116,26 @@ impl SketchClient {
         }
     }
 
+    /// One ANN query. Server-side, singletons from concurrent
+    /// connections coalesce into shared scatters — this is the request
+    /// shape the query-load generator drives.
+    pub fn ann_query_one(&mut self, q: &[f32]) -> Result<Option<AnnAnswer>> {
+        let mut answers = self.ann_query(&[q.to_vec()])?;
+        match answers.pop() {
+            Some(a) if answers.is_empty() => Ok(a),
+            _ => bail!("ann_query_one expected exactly one answer"),
+        }
+    }
+
+    /// One KDE query → (kernel sum, density).
+    pub fn kde_query_one(&mut self, q: &[f32]) -> Result<(f64, f64)> {
+        let (sums, dens) = self.kde_query(&[q.to_vec()])?;
+        match (sums.as_slice(), dens.as_slice()) {
+            (&[s], &[d]) => Ok((s, d)),
+            _ => bail!("kde_query_one expected exactly one answer"),
+        }
+    }
+
     /// Aggregate service statistics (drains mailboxes server-side).
     pub fn stats(&mut self) -> Result<ServiceStats> {
         match self.call(&Request::Stats)? {

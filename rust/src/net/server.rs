@@ -2,10 +2,15 @@
 //!
 //! One reader thread per connection, each holding a [`ServiceHandle`]
 //! clone: inserts stream straight into the per-shard bounded mailboxes
-//! (subject to the service's `Overload` policy), queries are `force`d to
-//! the owning thread and answered in request order. Responses are framed
-//! by `net::frame`, so a malformed request body costs one `Error` reply
-//! and the connection survives.
+//! (subject to the service's `Overload` policy), and ANN/KDE reads
+//! execute ON the connection thread through the handle's `QueryPlane`
+//! (native services), so K connections query concurrently. Singleton
+//! queries additionally pass through a cross-connection
+//! [`QueryCoalescer`]: wire clients that send one query per request get
+//! their queries merged into one scatter across the shard set, the same
+//! §3.3 batch amortization the ingest path gets from its `Batcher`.
+//! Responses are framed by `net::frame`, so a malformed request body
+//! costs one `Error` reply and the connection survives.
 //!
 //! [`SketchService`]: crate::coordinator::SketchService
 //! [`ServiceHandle`]: crate::coordinator::ServiceHandle
@@ -13,32 +18,231 @@
 use std::io::{BufReader, BufWriter};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::ServiceHandle;
+use crate::coordinator::{AnnAnswer, BatchPolicy, Batcher, ServiceHandle};
 
 use super::frame::{read_frame, write_frame, Request, Response, PROTOCOL_VERSION};
+
+/// Default coalescing policy for singleton wire queries: a batch flushes
+/// at 64 pending queries, and a straggler whose leader never came back
+/// for it self-flushes after 500µs. Neither bound is a latency floor —
+/// a query with no scatter in flight executes immediately (see
+/// [`QueryCoalescer`]).
+pub fn default_query_policy() -> BatchPolicy {
+    BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(500) }
+}
+
+struct PendingAnn {
+    q: Vec<f32>,
+    reply: Sender<Result<Option<AnnAnswer>, String>>,
+}
+
+struct PendingKde {
+    q: Vec<f32>,
+    reply: Sender<Result<(f64, f64), String>>,
+}
+
+/// What a lane decides for an arriving query (decided under the lock,
+/// executed outside it).
+enum Admission<T> {
+    /// Run this batch now (it contains the caller's own entry). `lead`
+    /// records whether this thread took the lane's in-flight slot and
+    /// must release it afterwards (a size-capped overflow batch runs
+    /// concurrently without holding the slot — the plane is concurrent).
+    Run { batch: Vec<T>, lead: bool },
+    /// A scatter is already in flight; wait — the next leader (or the
+    /// deadline fallback) takes the pending set, ours included.
+    Wait,
+}
+
+/// One coalescing lane: pending queries + whether a scatter led from
+/// this lane is currently in flight.
+struct Lane<T> {
+    pending: Batcher<T>,
+    in_flight: bool,
+}
+
+impl<T> Lane<T> {
+    /// Admit one query. No scatter in flight → lead immediately with
+    /// everything pending (zero added latency — coalescing is never a
+    /// delay, only a pickup of what accumulated during a scatter). A
+    /// full batch runs regardless (bounded batches even under a pileup).
+    fn admit(&mut self, item: T) -> Admission<T> {
+        if let Some(full) = self.pending.push(item) {
+            return Admission::Run { batch: full, lead: false };
+        }
+        if self.in_flight {
+            Admission::Wait
+        } else {
+            self.in_flight = true;
+            Admission::Run { batch: self.pending.flush(), lead: true }
+        }
+    }
+}
+
+/// Cross-connection query coalescing: singleton ANN/KDE queries from
+/// independent wire connections share scatters over the shard set.
+///
+/// Group-commit model (no dedicated flusher thread, no latency floor):
+/// a query arriving with NO scatter in flight leads immediately — it
+/// takes everything pending (at least itself) and runs the scatter on
+/// its own connection thread. Queries arriving WHILE a scatter runs
+/// park in the lane; the next arrival after the leader finishes picks
+/// them all up, so batch size adapts to scatter duration. A straggler
+/// with no successor self-flushes after `max_wait` — the only case
+/// that ever waits. Every flush takes the whole pending set, so no
+/// query can be stranded.
+///
+/// Correctness: per-query answers from a coalesced batch are
+/// bit-identical to singleton execution (the shard `query_batch` paths
+/// are batch/single equivalent, property-tested in
+/// `tests/batch_equivalence.rs`), and a degraded scatter (dead shard)
+/// errors every query in the batch rather than answering partially.
+pub struct QueryCoalescer {
+    handle: ServiceHandle,
+    policy: BatchPolicy,
+    ann: Mutex<Lane<PendingAnn>>,
+    kde: Mutex<Lane<PendingKde>>,
+}
+
+impl QueryCoalescer {
+    pub fn new(handle: ServiceHandle, policy: BatchPolicy) -> Self {
+        QueryCoalescer {
+            handle,
+            policy,
+            ann: Mutex::new(Lane { pending: Batcher::new(policy), in_flight: false }),
+            kde: Mutex::new(Lane { pending: Batcher::new(policy), in_flight: false }),
+        }
+    }
+
+    /// One ANN query, possibly answered as part of a coalesced batch.
+    pub fn ann_one(&self, q: Vec<f32>) -> Result<Option<AnnAnswer>, String> {
+        self.one_shot(&self.ann, |reply| PendingAnn { q, reply }, Self::run_ann)
+    }
+
+    /// One KDE query → (kernel sum, density), possibly coalesced.
+    pub fn kde_one(&self, q: Vec<f32>) -> Result<(f64, f64), String> {
+        self.one_shot(&self.kde, |reply| PendingKde { q, reply }, Self::run_kde)
+    }
+
+    /// The ONE admission/wait/self-flush protocol, shared by both lanes
+    /// so a future change to the coalescing rules can't diverge them.
+    fn one_shot<T, R>(
+        &self,
+        lane: &Mutex<Lane<T>>,
+        make: impl FnOnce(Sender<Result<R, String>>) -> T,
+        run: impl Fn(&Self, Vec<T>),
+    ) -> Result<R, String> {
+        let (tx, rx) = channel();
+        let admission = lane.lock().unwrap().admit(make(tx));
+        if let Admission::Run { batch, lead } = admission {
+            run(self, batch);
+            if lead {
+                lane.lock().unwrap().in_flight = false;
+            }
+            // Our reply was sent by the runner; fall through to collect it.
+        }
+        loop {
+            match rx.recv_timeout(self.policy.max_wait) {
+                Ok(res) => return res,
+                Err(RecvTimeoutError::Timeout) => {
+                    // Parked past the deadline with no successor to lead:
+                    // take whatever accumulated (ours included) ourselves.
+                    let due = {
+                        let mut l = lane.lock().unwrap();
+                        if l.pending.deadline_due() {
+                            l.pending.flush()
+                        } else {
+                            Vec::new()
+                        }
+                    };
+                    if !due.is_empty() {
+                        run(self, due);
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err("query dropped: coalescer batch was lost".into());
+                }
+            }
+        }
+    }
+
+    fn run_ann(&self, batch: Vec<PendingAnn>) {
+        let (qs, replies): (Vec<_>, Vec<_>) =
+            batch.into_iter().map(|p| (p.q, p.reply)).unzip();
+        match self.handle.query_batch(qs) {
+            Ok(answers) => {
+                for (reply, ans) in replies.into_iter().zip(answers) {
+                    let _ = reply.send(Ok(ans));
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                for reply in replies {
+                    let _ = reply.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+
+    fn run_kde(&self, batch: Vec<PendingKde>) {
+        let (qs, replies): (Vec<_>, Vec<_>) =
+            batch.into_iter().map(|p| (p.q, p.reply)).unzip();
+        match self.handle.kde_batch(qs) {
+            Ok((sums, densities)) => {
+                for (reply, (s, d)) in
+                    replies.into_iter().zip(sums.into_iter().zip(densities))
+                {
+                    let _ = reply.send(Ok((s, d)));
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                for reply in replies {
+                    let _ = reply.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
 
 /// A bound listener serving one `SketchService` over TCP.
 pub struct WireServer {
     listener: TcpListener,
     handle: ServiceHandle,
+    coalescer: Arc<QueryCoalescer>,
     stop: Arc<AtomicBool>,
 }
 
 impl WireServer {
-    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port).
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) with the
+    /// default singleton-query coalescing policy.
     pub fn bind<A: ToSocketAddrs + std::fmt::Debug>(
         addr: A,
         handle: ServiceHandle,
     ) -> Result<Self> {
+        Self::bind_with(addr, handle, default_query_policy())
+    }
+
+    /// Bind with an explicit coalescing policy (tests pin small batches
+    /// and long deadlines to force coalescing deterministically).
+    pub fn bind_with<A: ToSocketAddrs + std::fmt::Debug>(
+        addr: A,
+        handle: ServiceHandle,
+        query_policy: BatchPolicy,
+    ) -> Result<Self> {
         let listener =
             TcpListener::bind(&addr).with_context(|| format!("binding {addr:?}"))?;
+        let coalescer = Arc::new(QueryCoalescer::new(handle.clone(), query_policy));
         Ok(WireServer {
             listener,
             handle,
+            coalescer,
             stop: Arc::new(AtomicBool::new(false)),
         })
     }
@@ -64,6 +268,7 @@ impl WireServer {
             };
             conn_id += 1;
             let handle = self.handle.clone();
+            let coalescer = Arc::clone(&self.coalescer);
             let stop = Arc::clone(&self.stop);
             // Reader threads detach: they exit on peer close, and after
             // shutdown the service-side channels report errors instead of
@@ -71,7 +276,7 @@ impl WireServer {
             let _ = std::thread::Builder::new()
                 .name(format!("wire-conn-{conn_id}"))
                 .spawn(move || {
-                    let _ = serve_conn(stream, handle, stop, addr);
+                    let _ = serve_conn(stream, handle, coalescer, stop, addr);
                 });
         }
         Ok(())
@@ -81,6 +286,7 @@ impl WireServer {
 fn serve_conn(
     stream: TcpStream,
     handle: ServiceHandle,
+    coalescer: Arc<QueryCoalescer>,
     stop: Arc<AtomicBool>,
     server_addr: SocketAddr,
 ) -> Result<()> {
@@ -95,7 +301,7 @@ fn serve_conn(
         match Request::decode(&buf) {
             Ok(req) => {
                 let is_shutdown = matches!(req, Request::Shutdown);
-                let resp = dispatch(req, &handle);
+                let resp = dispatch(req, &handle, &coalescer);
                 write_frame(&mut writer, &resp.encode())?;
                 if is_shutdown {
                     stop.store(true, Ordering::SeqCst);
@@ -149,7 +355,7 @@ fn check_vectors(handle: &ServiceHandle, vs: &[Vec<f32>]) -> Result<(), Response
     Ok(())
 }
 
-fn dispatch(req: Request, handle: &ServiceHandle) -> Response {
+fn dispatch(req: Request, handle: &ServiceHandle, coalescer: &QueryCoalescer) -> Response {
     match req {
         Request::Hello => Response::Hello {
             version: PROTOCOL_VERSION,
@@ -174,22 +380,40 @@ fn dispatch(req: Request, handle: &ServiceHandle) -> Response {
             }
             Response::Deleted { removed: handle.delete(x) }
         }
-        Request::AnnQuery(qs) => {
+        Request::AnnQuery(mut qs) => {
             if let Err(resp) = check_vectors(handle, &qs) {
                 return resp;
             }
-            match handle.query_batch(qs) {
-                Ok(answers) => Response::AnnAnswers(answers),
-                Err(e) => Response::Error(e.to_string()),
+            // Singletons coalesce across connections; real batches are
+            // already amortized and scatter directly from this thread.
+            if qs.len() == 1 {
+                match coalescer.ann_one(qs.pop().expect("len checked")) {
+                    Ok(ans) => Response::AnnAnswers(vec![ans]),
+                    Err(e) => Response::Error(e),
+                }
+            } else {
+                match handle.query_batch(qs) {
+                    Ok(answers) => Response::AnnAnswers(answers),
+                    Err(e) => Response::Error(e.to_string()),
+                }
             }
         }
-        Request::KdeQuery(qs) => {
+        Request::KdeQuery(mut qs) => {
             if let Err(resp) = check_vectors(handle, &qs) {
                 return resp;
             }
-            match handle.kde_batch(qs) {
-                Ok((sums, densities)) => Response::KdeAnswers { sums, densities },
-                Err(e) => Response::Error(e.to_string()),
+            if qs.len() == 1 {
+                match coalescer.kde_one(qs.pop().expect("len checked")) {
+                    Ok((s, d)) => {
+                        Response::KdeAnswers { sums: vec![s], densities: vec![d] }
+                    }
+                    Err(e) => Response::Error(e),
+                }
+            } else {
+                match handle.kde_batch(qs) {
+                    Ok((sums, densities)) => Response::KdeAnswers { sums, densities },
+                    Err(e) => Response::Error(e.to_string()),
+                }
             }
         }
         Request::Stats => match handle.stats() {

@@ -37,7 +37,12 @@ pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }
 
-/// Median of means over `groups` equal chunks (RACE-style robust estimator).
+/// Median of means over `groups` near-equal chunks (RACE-style robust
+/// estimator). When `len % groups != 0` the remainder folds into the
+/// FINAL group — every sample participates. (The old exact-`per` chunking
+/// silently dropped the last `len % groups` samples, biasing the
+/// estimator whenever the row count wasn't a multiple of the group
+/// count.)
 pub fn median_of_means(xs: &[f64], groups: usize) -> f64 {
     if xs.is_empty() || groups == 0 {
         return 0.0;
@@ -45,7 +50,11 @@ pub fn median_of_means(xs: &[f64], groups: usize) -> f64 {
     let g = groups.min(xs.len());
     let per = xs.len() / g;
     let means: Vec<f64> = (0..g)
-        .map(|i| mean(&xs[i * per..((i + 1) * per).min(xs.len())]))
+        .map(|i| {
+            let start = i * per;
+            let end = if i + 1 == g { xs.len() } else { start + per };
+            mean(&xs[start..end])
+        })
         .collect();
     median(&means)
 }
@@ -94,6 +103,24 @@ mod tests {
         xs.push(1000.0);
         let mom = median_of_means(&xs, 5);
         assert!(mom < 10.0, "mom={mom}");
+    }
+
+    #[test]
+    fn median_of_means_uses_every_sample() {
+        // len=7, groups=3 → chunks [0,0], [10,10], [0,0,100]: the tail
+        // sample (100) must fold into the final group. The old exact-
+        // `per` chunking dropped it, producing group means [0, 10, 0]
+        // and a median of 0 — an estimator that never saw the heaviest
+        // sample.
+        let xs = [0.0, 0.0, 10.0, 10.0, 0.0, 0.0, 100.0];
+        let mom = median_of_means(&xs, 3);
+        assert!((mom - 10.0).abs() < 1e-12, "mom={mom}");
+        // Exact division is unchanged: [1,2],[3,4],[5,6] → median 3.5.
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        assert!((median_of_means(&xs, 3) - 3.5).abs() < 1e-12);
+        // groups > len degenerates to one sample per group, all used.
+        let xs = [7.0, 9.0];
+        assert_eq!(median_of_means(&xs, 10), median(&xs));
     }
 
     #[test]

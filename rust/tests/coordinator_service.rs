@@ -49,7 +49,7 @@ fn sharded_service_equals_single_shard_semantics() {
         svc.flush().unwrap();
         let st = svc.stats();
         assert_eq!(st.stored_points, 300, "shards={shards} must store all (eta=0)");
-        let answers = svc.query_batch(pts[..40].to_vec());
+        let answers = svc.query_batch(pts[..40].to_vec()).unwrap();
         let hits = answers.iter().filter(|a| a.is_some()).count();
         assert!(hits >= 38, "shards={shards} hits={hits}/40");
         svc.shutdown();
@@ -80,7 +80,7 @@ fn pjrt_and_native_serving_agree() {
             svc.insert(p.clone());
         }
         svc.flush().unwrap();
-        let ans = svc.query_batch(queries.to_vec());
+        let ans = svc.query_batch(queries.to_vec()).unwrap();
         svc.shutdown();
         ans
     };
@@ -140,7 +140,7 @@ fn concurrent_producers_do_not_lose_queries() {
             let qs: Vec<Vec<f32>> = (0..16)
                 .map(|_| (0..8).map(|_| rng.gaussian_f32()).collect())
                 .collect();
-            let ans = svc.query_batch(qs);
+            let ans = svc.query_batch(qs).unwrap();
             assert_eq!(ans.len(), 16, "every query must be answered");
         }
     }
@@ -177,7 +177,7 @@ fn shed_overload_degrades_gracefully() {
     assert!(st.stored_points as u64 + st.shed == 20_000, "accounting: {st:?}");
     // ...but the service must still answer queries.
     let q: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
-    let ans = svc.query_batch(vec![q]);
+    let ans = svc.query_batch(vec![q]).unwrap();
     assert_eq!(ans.len(), 1);
     svc.shutdown();
 }
@@ -192,10 +192,10 @@ fn turnstile_delete_then_reinsert_roundtrip() {
     svc.flush().unwrap();
     assert!(svc.delete(p.clone()));
     svc.flush().unwrap();
-    assert!(svc.query_batch(vec![p.clone()])[0].is_none());
+    assert!(svc.query_batch(vec![p.clone()]).unwrap()[0].is_none());
     svc.insert(p.clone());
     svc.flush().unwrap();
-    let ans = svc.query_batch(vec![p.clone()]);
+    let ans = svc.query_batch(vec![p.clone()]).unwrap();
     assert!(ans[0].is_some(), "reinserted point must be found again");
     assert!(ans[0].as_ref().unwrap().dist < 1e-5);
     svc.shutdown();

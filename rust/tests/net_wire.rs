@@ -212,6 +212,88 @@ fn wire_rejects_garbage_but_keeps_serving() {
 }
 
 #[test]
+fn coalesced_singleton_queries_match_in_process() {
+    // Singleton wire queries pass through the cross-connection
+    // QueryCoalescer: concurrent connections' queries merge into shared
+    // scatters. Every answer must still be bit-identical to the
+    // in-process batch path, and every query must be counted exactly
+    // once.
+    let cfg = wire_cfg(8, 2_000);
+    let mut rng = Rng::new(777);
+    let pts = cluster_points(&mut rng, 800, 8);
+    let queries: Vec<Vec<f32>> = pts[..32].to_vec();
+
+    // In-process reference (same seed/config, same chunking).
+    let (local, local_join) = SketchService::spawn(cfg.clone()).unwrap();
+    for chunk in pts.chunks(100) {
+        assert_eq!(local.insert_batch(chunk.to_vec()), chunk.len());
+    }
+    local.flush().unwrap();
+    let want_ann = local.query_batch(queries.clone()).unwrap();
+    let (want_sums, want_dens) = local.kde_batch(queries.clone()).unwrap();
+    local.shutdown();
+    local_join.join().unwrap();
+
+    // Wire stack with a policy that makes coalesced batches certain to
+    // form under the 4 concurrent clients below (small cap, deadline
+    // long enough that batches usually fill rather than time out).
+    let (handle, svc_join) = SketchService::spawn(cfg).unwrap();
+    let server = WireServer::bind_with(
+        "127.0.0.1:0",
+        handle.clone(),
+        sublinear_sketch::coordinator::BatchPolicy {
+            max_batch: 4,
+            max_wait: std::time::Duration::from_millis(5),
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap();
+    let srv_join = thread::spawn(move || server.run());
+    let mut c0 = SketchClient::connect(addr).unwrap();
+    for chunk in pts.chunks(100) {
+        c0.insert_batch(chunk).unwrap();
+    }
+    c0.flush().unwrap();
+
+    let workers: Vec<_> = (0..4)
+        .map(|t| {
+            let queries = queries.clone();
+            thread::spawn(move || {
+                let mut c = SketchClient::connect(addr).unwrap();
+                let mut out = Vec::new();
+                for qi in (t..queries.len()).step_by(4) {
+                    let ans = c.ann_query_one(&queries[qi]).unwrap();
+                    let (s, d) = c.kde_query_one(&queries[qi]).unwrap();
+                    out.push((qi, ans, s, d));
+                }
+                out
+            })
+        })
+        .collect();
+    for w in workers {
+        for (qi, ans, s, d) in w.join().unwrap() {
+            assert_eq!(ans, want_ann[qi], "query {qi}: coalesced answer must match");
+            assert_eq!(s, want_sums[qi], "query {qi}: KDE sum must match");
+            assert_eq!(d, want_dens[qi], "query {qi}: KDE density must match");
+        }
+    }
+    let hits = want_ann.iter().filter(|a| a.is_some()).count();
+    assert!(hits >= 28, "sanity: clustered queries must hit ({hits}/32)");
+
+    // Accounting: a coalesced batch of k singletons counts k queries —
+    // exactly once each, no matter how the batches formed.
+    let st = c0.stats().unwrap();
+    assert_eq!(st.ann_queries, 32);
+    assert_eq!(st.kde_queries, 32);
+
+    c0.shutdown_server().unwrap();
+    drop(c0);
+    srv_join.join().unwrap().unwrap();
+    handle.shutdown();
+    svc_join.join().unwrap();
+}
+
+#[test]
 fn concurrent_wire_clients_share_one_service() {
     let mut stack = start_stack(wire_cfg(8, 10_000));
     assert_eq!(stack.client.stats().unwrap().inserts, 0);
