@@ -1,0 +1,129 @@
+#!/usr/bin/env bash
+# Shared harness for the sketchd CI smokes. Factors the serve-boot /
+# poll-addr-file / assert / clean-shutdown choreography that used to be
+# copy-pasted per workflow step into one place, and dispatches the
+# scenarios:
+#
+#   smoke.sh wire        insert+query load over TCP, clean shutdown
+#   smoke.sh qplane      8 concurrent singleton-query connections (coalescer)
+#   smoke.sh replica     --replicas 2 vs --replicas 1: bit-identical answers
+#   smoke.sh durability  checkpoint, kill -9, recover, keep serving
+#
+# Run from the rust/ directory (or set BIN). Fails fast; server logs are
+# dumped on any boot failure.
+
+set -euo pipefail
+
+BIN=${BIN:-./target/release/sketchd}
+TMP=${TMP:-/tmp}
+
+SERVE_PID=""
+SERVE_LOG=""
+ADDR=""
+
+# serve_bg NAME [serve args...] — boot a server on an ephemeral port in
+# the background; sets ADDR / SERVE_PID / SERVE_LOG or dies with the log.
+serve_bg() {
+  local name=$1
+  shift
+  local addr_file="$TMP/sketchd_${name}.addr"
+  SERVE_LOG="$TMP/sketchd_${name}.serve.log"
+  rm -f "$addr_file"
+  "$BIN" serve --listen 127.0.0.1:0 --addr-file "$addr_file" "$@" \
+    > "$SERVE_LOG" 2>&1 &
+  SERVE_PID=$!
+  for _ in $(seq 1 100); do
+    [ -s "$addr_file" ] && break
+    sleep 0.2
+  done
+  if ! [ -s "$addr_file" ]; then
+    echo "::error::server '$name' never wrote its address file"
+    cat "$SERVE_LOG"
+    exit 1
+  fi
+  ADDR=$(cat "$addr_file")
+}
+
+# await_clean_shutdown — the server must exit by itself (client sent
+# Shutdown) and report a clean drain.
+await_clean_shutdown() {
+  wait "$SERVE_PID"
+  cat "$SERVE_LOG"
+  grep -q 'shutdown complete' "$SERVE_LOG"
+}
+
+smoke_wire() {
+  serve_bg wire --dim 16 --n 50000 --shards 2
+  "$BIN" client --connect "$ADDR" --n 2000 \
+    --queries 128 --batch 64 --connections 2 --shutdown \
+    | tee "$TMP/client_wire.log"
+  grep -E 'ann: answered [1-9][0-9]*/' "$TMP/client_wire.log"
+  grep -E 'inserts=2000' "$TMP/client_wire.log"
+  await_clean_shutdown
+}
+
+smoke_qplane() {
+  serve_bg qplane --dim 16 --n 50000 --shards 4
+  "$BIN" client --connect "$ADDR" --query-load \
+    --n 4000 --queries 1024 --batch 1 --connections 8 --shutdown \
+    | tee "$TMP/client_qplane.log"
+  grep -E 'ann: answered [1-9][0-9]*/1024' "$TMP/client_qplane.log"
+  grep -E 'query-load [0-9]+ q/s' "$TMP/client_qplane.log"
+  await_clean_shutdown
+}
+
+# Replica smoke: the SAME seeded load against --replicas 1 and
+# --replicas 2 must produce the SAME order-independent answer checksum
+# (replicated reads are bit-identical to single-copy reads), with 8
+# concurrent query connections exercising the least-loaded picker, and
+# both servers shutting down cleanly.
+smoke_replica() {
+  local sums=()
+  for r in 1 2; do
+    serve_bg "replica_r${r}" --dim 16 --n 50000 --shards 4 --replicas "$r"
+    grep -Eq "replicas=${r}" "$SERVE_LOG" \
+      || { echo "::error::server did not report replicas=${r}"; cat "$SERVE_LOG"; exit 1; }
+    "$BIN" client --connect "$ADDR" --query-load --seed 77 \
+      --n 4000 --queries 1024 --batch 1 --connections 8 --shutdown \
+      | tee "$TMP/client_replica_r${r}.log"
+    grep -E 'ann: answered [1-9][0-9]*/1024' "$TMP/client_replica_r${r}.log"
+    sums+=("$(grep -oE 'ann checksum=[0-9a-f]+' "$TMP/client_replica_r${r}.log")")
+    await_clean_shutdown
+  done
+  echo "replicas=1 ${sums[0]} | replicas=2 ${sums[1]}"
+  if [ "${sums[0]}" != "${sums[1]}" ] || [ -z "${sums[0]}" ]; then
+    echo "::error::replicated answers diverged from single-copy answers"
+    exit 1
+  fi
+}
+
+smoke_durability() {
+  local data
+  data=$(mktemp -d)
+  serve_bg durability1 --dim 16 --n 50000 --shards 2 \
+    --data-dir "$data" --fsync every:64
+  "$BIN" client --connect "$ADDR" --n 2000 \
+    --queries 64 --batch 64 --checkpoint | tee "$TMP/client_dur1.log"
+  grep -E 'checkpoint cut, covering 2000 points' "$TMP/client_dur1.log"
+  kill -9 "$SERVE_PID"
+  wait "$SERVE_PID" || true
+
+  serve_bg durability2 --dim 16 --n 50000 --shards 2 --data-dir "$data"
+  grep -E 'recovered: inserts=2000 stored=2000' "$SERVE_LOG"
+  "$BIN" client --connect "$ADDR" --n 1000 \
+    --queries 64 --batch 64 --shutdown | tee "$TMP/client_dur2.log"
+  grep -E 'ann: answered [1-9][0-9]*/' "$TMP/client_dur2.log"
+  grep -E 'inserts=3000' "$TMP/client_dur2.log"
+  await_clean_shutdown
+}
+
+case "${1:-}" in
+  wire)       smoke_wire ;;
+  qplane)     smoke_qplane ;;
+  replica)    smoke_replica ;;
+  durability) smoke_durability ;;
+  *)
+    echo "usage: smoke.sh wire|qplane|replica|durability" >&2
+    exit 2
+    ;;
+esac

@@ -25,6 +25,13 @@ fn record(table: &mut Table, json: &mut Vec<(String, f64)>, op: &str, ns: f64, n
 /// Dump `ops` (ns/op) and `ratios` (dimensionless speedups, keys ending
 /// in `.speedup_vs_singles`) as separate JSON objects so trajectory
 /// tooling never mixes units.
+///
+/// Stable schema (consumed by `scripts/bench_gate.py`, the CI
+/// perf-regression gate — bump `schema` if a field changes meaning):
+/// `{bench, schema, measured, unit, ops: {op: ns}, ratios: {op: x}}`.
+/// `measured: true` marks numbers from a real run; hand-written
+/// PROJECTED files carry a `status` note instead and the gate skips
+/// them.
 fn dump_json(rows: &[(String, f64)]) {
     use sublinear_sketch::util::json::{num, obj, s, Json};
     let (ratios, ops): (Vec<_>, Vec<_>) =
@@ -34,6 +41,8 @@ fn dump_json(rows: &[(String, f64)]) {
         ratios.iter().map(|(op, v)| (op.as_str(), num(*v))).collect();
     let root = obj(vec![
         ("bench", s("perf_micro")),
+        ("schema", num(1.0)),
+        ("measured", Json::Bool(true)),
         ("unit", s("ns_per_op")),
         ("ops", obj(ops)),
         ("ratios", obj(ratios)),
@@ -185,31 +194,64 @@ fn main() {
     // CALLING thread (scatter/gather via QueryPlane), so K connection
     // threads add throughput instead of queueing behind one owning
     // thread. Measured as singleton queries — the wire coalescer's
-    // worst-case shape — from 1 thread vs 4 concurrent threads.
+    // worst-case shape — from 1 thread vs 4 concurrent threads, then
+    // again with 2 read replicas per shard: the replica layer's whole
+    // claim is that the 4-reader aggregate keeps scaling once the single
+    // copy's shard threads saturate.
     {
         use sublinear_sketch::coordinator::{ServiceConfig, SketchService};
         let dim = 32;
-        let mut cfg = ServiceConfig::default_for(dim, 8_192);
-        cfg.shards = 4;
-        cfg.ann.eta = 0.0;
-        cfg.kde.rows = 16;
-        cfg.kde.window = 4_096;
-        let (handle, join) = SketchService::spawn(cfg).expect("service spawns");
         let pts: Vec<Vec<f32>> = (0..4_096)
             .map(|_| (0..dim).map(|_| rng.gaussian_f32()).collect())
             .collect();
-        for chunk in pts.chunks(256) {
-            handle.insert_batch(chunk.to_vec());
-        }
-        handle.flush().expect("flush");
+        let run_plane = |replicas: usize, pts: &[Vec<f32>]| -> (f64, f64) {
+            let mut cfg = ServiceConfig::default_for(dim, 8_192);
+            cfg.shards = 4;
+            cfg.replicas = replicas;
+            cfg.ann.eta = 0.0;
+            cfg.kde.rows = 16;
+            cfg.kde.window = 4_096;
+            let (handle, join) = SketchService::spawn(cfg).expect("service spawns");
+            for chunk in pts.chunks(256) {
+                handle.insert_batch(chunk.to_vec());
+            }
+            handle.flush().expect("flush");
 
-        let mut i = 0usize;
-        let ns1 = time_ns(20, 400, || {
-            std::hint::black_box(
-                handle.query_batch(vec![pts[i % 4_096].clone()]).expect("query"),
-            );
-            i += 1;
-        });
+            let mut i = 0usize;
+            let ns1 = time_ns(20, 400, || {
+                std::hint::black_box(
+                    handle.query_batch(vec![pts[i % 4_096].clone()]).expect("query"),
+                );
+                i += 1;
+            });
+
+            const THREADS: usize = 4;
+            const PER_THREAD: usize = 400;
+            let t0 = std::time::Instant::now();
+            let workers: Vec<_> = (0..THREADS)
+                .map(|t| {
+                    let h = handle.clone();
+                    let pts = pts.to_vec();
+                    std::thread::spawn(move || {
+                        for k in 0..PER_THREAD {
+                            std::hint::black_box(
+                                h.query_batch(vec![pts[(t * 1_000 + k) % 4_096].clone()])
+                                    .expect("query"),
+                            );
+                        }
+                    })
+                })
+                .collect();
+            for w in workers {
+                w.join().expect("query thread");
+            }
+            let ns4 = t0.elapsed().as_nanos() as f64 / (THREADS * PER_THREAD) as f64;
+            handle.shutdown();
+            join.join().expect("service thread");
+            (ns1, ns4)
+        };
+
+        let (ns1, ns4_r1) = run_plane(1, &pts);
         record(
             &mut table,
             &mut json,
@@ -217,44 +259,42 @@ fn main() {
             ns1,
             &format!("dim={dim} shards=4 singleton scatter"),
         );
-
-        const THREADS: usize = 4;
-        const PER_THREAD: usize = 400;
-        let t0 = std::time::Instant::now();
-        let workers: Vec<_> = (0..THREADS)
-            .map(|t| {
-                let h = handle.clone();
-                let pts = pts.clone();
-                std::thread::spawn(move || {
-                    for k in 0..PER_THREAD {
-                        std::hint::black_box(
-                            h.query_batch(vec![pts[(t * 1_000 + k) % 4_096].clone()])
-                                .expect("query"),
-                        );
-                    }
-                })
-            })
-            .collect();
-        for w in workers {
-            w.join().expect("query thread");
-        }
-        let ns4 = t0.elapsed().as_nanos() as f64 / (THREADS * PER_THREAD) as f64;
         record(
             &mut table,
             &mut json,
             "qplane.ann_single.4conn",
-            ns4,
+            ns4_r1,
             "aggregate ns/query, 4 concurrent reader threads",
         );
         record(
             &mut table,
             &mut json,
             "qplane.ann_single.4conn.speedup_vs_singles",
-            ns1 / ns4,
+            ns1 / ns4_r1,
             "x (vs 1 reader thread)",
         );
-        handle.shutdown();
-        join.join().expect("service thread");
+        record(
+            &mut table,
+            &mut json,
+            "qplane.ann_single.replicas1",
+            ns4_r1,
+            "4 readers, 1 replica/shard (alias of 4conn)",
+        );
+        let (_, ns4_r2) = run_plane(2, &pts);
+        record(
+            &mut table,
+            &mut json,
+            "qplane.ann_single.replicas2",
+            ns4_r2,
+            "4 readers, 2 replicas/shard (least-loaded picks)",
+        );
+        record(
+            &mut table,
+            &mut json,
+            "qplane.ann_single.replicas2.speedup_vs_singles",
+            ns4_r1 / ns4_r2,
+            "x (vs 1 replica, same 4 readers)",
+        );
     }
 
     // ---- WAL append throughput per fsync mode -------------------------

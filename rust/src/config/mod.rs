@@ -122,6 +122,7 @@ impl Config {
         Ok(ServiceConfig {
             dim,
             shards: self.usize("service", "shards", 4).max(1),
+            replicas: self.usize("service", "replicas", 1).max(1),
             route,
             queue_cap: self.usize("service", "queue_cap", 1024).max(1),
             overload,
@@ -159,6 +160,7 @@ window = 450
 
 [service]
 shards = 2
+replicas = 3
 route = round_robin
 use_pjrt = true
 "#;
@@ -177,6 +179,7 @@ use_pjrt = true
         assert_eq!(kde.p, 3, "default applies");
         let svc = c.service(32, 10_000).unwrap();
         assert_eq!(svc.shards, 2);
+        assert_eq!(svc.replicas, 3);
         assert_eq!(svc.route, RoutePolicy::RoundRobin);
         assert!(svc.use_pjrt);
     }
@@ -187,6 +190,13 @@ use_pjrt = true
         let svc = c.service(16, 1000).unwrap();
         assert!(svc.data_dir.is_none(), "durability defaults off");
         assert!(svc.checkpoint_every_points.is_none());
+        assert_eq!(svc.replicas, 1, "un-replicated by default");
+    }
+
+    #[test]
+    fn replicas_zero_clamps_to_one() {
+        let c = Config::parse("[service]\nreplicas = 0\n").unwrap();
+        assert_eq!(c.service(8, 100).unwrap().replicas, 1);
     }
 
     #[test]

@@ -57,6 +57,19 @@ impl<T> Batcher<T> {
         None
     }
 
+    /// Retarget the flush deadline (load-aware coalescing: the caller
+    /// scales `max_wait` with observed load). Applies to the CURRENT
+    /// pending set too — `deadline_due` always compares against the live
+    /// policy, so lowering the wait can make a parked batch due at once.
+    pub fn set_max_wait(&mut self, d: Duration) {
+        self.policy.max_wait = d;
+    }
+
+    /// The currently configured flush deadline.
+    pub fn max_wait(&self) -> Duration {
+        self.policy.max_wait
+    }
+
     /// Whether the deadline has expired for the oldest pending item.
     pub fn deadline_due(&self) -> bool {
         self.oldest
@@ -121,6 +134,20 @@ mod tests {
         sizes.push(b.flush().len());
         assert!(sizes.iter().all(|&s| s <= 4), "sizes={sizes:?}");
         assert_eq!(sizes.iter().sum::<usize>(), 21, "no item lost");
+    }
+
+    #[test]
+    fn set_max_wait_retargets_the_pending_deadline() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_secs(60),
+        });
+        b.push(1);
+        assert!(!b.deadline_due(), "a minute out");
+        b.set_max_wait(Duration::ZERO);
+        assert!(b.deadline_due(), "zero wait makes the pending item due now");
+        assert_eq!(b.max_wait(), Duration::ZERO);
+        assert_eq!(b.flush(), vec![1]);
     }
 
     #[test]

@@ -5,12 +5,16 @@
 //! pinned to one thread, so N connection threads cannot call it directly.
 //! Instead a handle splits the API by what it needs:
 //!
-//! - **Ingest / deletes** touch only the router policy and the shard
-//!   mailboxes, both cloneable — so they run ON the calling thread and go
-//!   straight into the per-shard bounded queues (inserts under the
-//!   configured [`Overload`] policy, deletes `force`d). A query can
-//!   therefore never sit behind a backlog of queued inserts: backpressure
-//!   lives in the shard mailboxes, not in a service-wide command queue.
+//! - **Ingest / deletes** touch only the router policy and the per-shard
+//!   [`ReplicaSet`]s, both cloneable — so they run ON the calling thread
+//!   and go straight into the per-shard bounded queues (inserts under the
+//!   configured [`Overload`] policy, fanned out to every replica;
+//!   deletes `force`d to all replicas and counted on the primary's
+//!   acknowledgement — the copy that applies and WAL-logs the delete
+//!   is the one whose ack means it happened). A query can therefore
+//!   never sit behind a backlog of
+//!   queued inserts: backpressure lives in the shard mailboxes, not in a
+//!   service-wide command queue.
 //! - **Native ANN/KDE queries** run ON the calling thread too, through a
 //!   [`QueryPlane`] clone (scatter to shard mailboxes, gather, merge) —
 //!   K connection threads read concurrently, limited by the shard
@@ -34,9 +38,10 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use super::backpressure::{BoundedSender, OfferOutcome};
+use super::backpressure::OfferOutcome;
 use super::protocol::{AnnAnswer, ServiceCounters, ServiceStats};
 use super::query::QueryPlane;
+use super::replica::ReplicaSet;
 use super::router::{hash_vector, RoutePolicy};
 use super::shard::ShardCmd;
 use super::NATIVE_BATCH_ROWS;
@@ -114,7 +119,7 @@ pub enum ServiceCmd {
 ///
 /// [`SketchService`]: super::server::SketchService
 pub struct ServiceHandle {
-    shard_txs: Vec<BoundedSender<ShardCmd>>,
+    sets: Vec<ReplicaSet>,
     route: RoutePolicy,
     /// Round-robin cursor shared across clones so the partition stays
     /// balanced no matter which connection inserts.
@@ -133,7 +138,7 @@ pub struct ServiceHandle {
 impl Clone for ServiceHandle {
     fn clone(&self) -> Self {
         ServiceHandle {
-            shard_txs: self.shard_txs.clone(),
+            sets: self.sets.clone(),
             route: self.route,
             rr_next: Arc::clone(&self.rr_next),
             counters: Arc::clone(&self.counters),
@@ -148,7 +153,7 @@ impl Clone for ServiceHandle {
 
 impl ServiceHandle {
     pub(super) fn new(
-        shard_txs: Vec<BoundedSender<ShardCmd>>,
+        sets: Vec<ReplicaSet>,
         route: RoutePolicy,
         dim: usize,
         shards: usize,
@@ -156,9 +161,9 @@ impl ServiceHandle {
         cmd_tx: Sender<ServiceCmd>,
         use_pjrt: bool,
     ) -> Self {
-        let plane = QueryPlane::new(shard_txs.clone(), Arc::clone(&counters));
+        let plane = QueryPlane::new(sets.clone(), Arc::clone(&counters));
         ServiceHandle {
-            shard_txs,
+            sets,
             route,
             rr_next: Arc::new(AtomicUsize::new(0)),
             counters,
@@ -179,11 +184,16 @@ impl ServiceHandle {
         self.shards
     }
 
+    /// Replicas per shard (R) the service was configured with.
+    pub fn replicas(&self) -> usize {
+        self.sets.first().map_or(1, ReplicaSet::replicas)
+    }
+
     fn route(&self, x: &[f32]) -> usize {
         match self.route {
-            RoutePolicy::HashVector => hash_vector(x) as usize % self.shard_txs.len(),
+            RoutePolicy::HashVector => hash_vector(x) as usize % self.sets.len(),
             RoutePolicy::RoundRobin => {
-                self.rr_next.fetch_add(1, Ordering::Relaxed) % self.shard_txs.len()
+                self.rr_next.fetch_add(1, Ordering::Relaxed) % self.sets.len()
             }
         }
     }
@@ -196,7 +206,7 @@ impl ServiceHandle {
     pub fn insert(&self, x: Vec<f32>) -> bool {
         let s = self.route(&x);
         ServiceCounters::add(&self.counters.inserts, 1);
-        match self.shard_txs[s].offer_outcome(ShardCmd::Insert(x)) {
+        match self.sets[s].offer_write(ShardCmd::Insert(x)) {
             OfferOutcome::Sent => true,
             OfferOutcome::Shed => {
                 ServiceCounters::add(&self.counters.shed_points, 1);
@@ -213,12 +223,12 @@ impl ServiceHandle {
     /// service's native `insert_batch` path runs, so chunk boundaries and
     /// accounting are identical by construction. Returns accepted points.
     pub fn insert_batch(&self, batch: Vec<Vec<f32>>) -> usize {
-        let mut per_shard: Vec<Vec<Vec<f32>>> = vec![Vec::new(); self.shard_txs.len()];
+        let mut per_shard: Vec<Vec<Vec<f32>>> = vec![Vec::new(); self.sets.len()];
         for x in batch {
             per_shard[self.route(&x)].push(x);
         }
         ship_native_batch(&self.counters, per_shard, |s, chunk| {
-            self.shard_txs[s].offer_outcome(ShardCmd::InsertBatch(chunk))
+            self.sets[s].offer_write(ShardCmd::InsertBatch(chunk))
         })
     }
 
@@ -231,21 +241,17 @@ impl ServiceHandle {
     /// applied work and never reconciles with recovered state.
     pub fn delete(&self, x: Vec<f32>) -> bool {
         let Some(s) = (match self.route {
-            RoutePolicy::HashVector => Some(hash_vector(&x) as usize % self.shard_txs.len()),
+            RoutePolicy::HashVector => Some(hash_vector(&x) as usize % self.sets.len()),
             RoutePolicy::RoundRobin => None,
         }) else {
             return false;
         };
-        let (tx, rx) = channel();
-        if !self.shard_txs[s].force(ShardCmd::Delete(x, tx)) {
-            return false;
-        }
-        match rx.recv() {
-            Ok(removed) => {
+        match self.sets[s].delete(x) {
+            Some(removed) => {
                 ServiceCounters::add(&self.counters.deletes, 1);
                 removed
             }
-            Err(_) => false,
+            None => false,
         }
     }
 
@@ -384,19 +390,19 @@ mod tests {
         assert!(!handle.insert(vec![0.0; 6]));
     }
 
-    /// Build a handle over hand-made shard mailboxes, with the control
-    /// channel's receiving end DROPPED: if any native read were still
-    /// routed through the owning thread, it would error immediately
-    /// instead of reaching the fake shard.
+    /// Build a handle over hand-made shard mailboxes (one replica per
+    /// shard), with the control channel's receiving end DROPPED: if any
+    /// native read were still routed through the owning thread, it would
+    /// error immediately instead of reaching the fake shard.
     fn bare_handle(
-        shard_txs: Vec<BoundedSender<ShardCmd>>,
+        shard_txs: Vec<super::super::backpressure::BoundedSender<ShardCmd>>,
         counters: Arc<ServiceCounters>,
     ) -> ServiceHandle {
         let (cmd_tx, cmd_rx) = channel::<ServiceCmd>();
         drop(cmd_rx);
         let shards = shard_txs.len();
         ServiceHandle::new(
-            shard_txs,
+            shard_txs.into_iter().map(|tx| ReplicaSet::new(vec![tx])).collect(),
             RoutePolicy::HashVector,
             4,
             shards,

@@ -8,6 +8,7 @@ pub mod batcher;
 pub mod handle;
 pub mod protocol;
 pub mod query;
+pub mod replica;
 pub mod router;
 pub mod server;
 pub mod shard;
@@ -22,6 +23,7 @@ pub use batcher::{BatchPolicy, Batcher};
 pub use handle::{ServiceCmd, ServiceHandle};
 pub use protocol::{AnnAnswer, ServiceCounters, ServiceStats};
 pub use query::QueryPlane;
+pub use replica::{ReadGuard, ReplicaSet};
 pub use router::{RoutePolicy, Router};
 pub use server::{ServiceConfig, SketchService};
 pub use shard::{KdeKernel, KdeShardConfig};

@@ -48,8 +48,18 @@ pub struct ServiceStats {
     pub ann_queries: u64,
     pub kde_queries: u64,
     pub shed: u64,
+    /// Points stored in ONE copy of the partition (replicas hold the
+    /// same points, so this never multiplies with R).
     pub stored_points: usize,
+    /// One copy's sketch footprint; total resident ≈ `replicas` × this.
     pub sketch_bytes: usize,
+    /// Read replicas per shard (R ≥ 1; 0 only in partial snapshots that
+    /// a service hasn't filled in yet).
+    pub replicas: u32,
+    /// In-flight read depth per replica at snapshot time, shard-major
+    /// (`[shard * replicas + r]`) — the gauge the least-loaded picker
+    /// steers by.
+    pub replica_depths: Vec<u32>,
 }
 
 /// Live service counters, shared between the owning [`SketchService`] and
@@ -98,7 +108,8 @@ impl ServiceCounters {
     }
 
     /// Stats snapshot of the counters alone (shard-resident fields —
-    /// `stored_points`, `sketch_bytes` — are filled in by the service).
+    /// `stored_points`, `sketch_bytes`, `replicas`, `replica_depths` —
+    /// are filled in by the service).
     pub fn snapshot(&self) -> ServiceStats {
         ServiceStats {
             inserts: self.inserts.load(Ordering::Relaxed),
@@ -108,6 +119,8 @@ impl ServiceCounters {
             shed: self.shed_points.load(Ordering::Relaxed),
             stored_points: 0,
             sketch_bytes: 0,
+            replicas: 0,
+            replica_depths: Vec::new(),
         }
     }
 }

@@ -3,16 +3,21 @@
 //! Shards answer `AnnBatch`/`KdeBatch` independently; the only thing the
 //! native read path ever needed from the owning thread was the scatter/
 //! gather/merge glue. This type IS that glue, detached: it holds clones
-//! of the shard mailbox senders plus the shared counters, so any thread
-//! (every wire connection, every `ServiceHandle` clone) can execute a
-//! whole ANN or KDE batch on the calling thread — concurrently with
-//! every other reader, without a hop through the service-owning thread.
-//! The owning thread keeps only what genuinely must stay pinned there:
-//! the PJRT executor (re-rank path) and control ops (stats, flush,
-//! checkpoint).
+//! of the per-shard [`ReplicaSet`]s plus the shared counters, so any
+//! thread (every wire connection, every `ServiceHandle` clone) can
+//! execute a whole ANN or KDE batch on the calling thread — concurrently
+//! with every other reader, without a hop through the service-owning
+//! thread. The owning thread keeps only what genuinely must stay pinned
+//! there: the PJRT executor (re-rank path) and control ops (stats,
+//! flush, checkpoint).
+//!
+//! With replicas (`R > 1`) each shard's scatter lands on that shard's
+//! least-loaded replica (in-flight read depth, ties round-robin) — the
+//! replicas hold bit-identical state, so WHICH copy answers never
+//! changes the answer, only who pays for it.
 //!
 //! Degradation contract: a partial answer is an ERROR, never a result.
-//! If any shard's mailbox is closed (scatter fails) or its thread dies
+//! If any shard's picked replica is unreachable (scatter fails) or dies
 //! before replying (gather fails), the batch returns `Err` — merging the
 //! surviving shards would silently drop every point the dead shard owns,
 //! which is indistinguishable from "no near neighbor" to the caller.
@@ -22,44 +27,45 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use super::backpressure::BoundedSender;
-use super::protocol::{
-    kde_densities, merge_ann, merge_kde, AnnAnswer, ServiceCounters,
-};
+use super::protocol::{kde_densities, merge_ann, merge_kde, AnnAnswer, ServiceCounters};
+use super::replica::ReplicaSet;
 use super::shard::ShardCmd;
 
-/// Cloneable, `Send` scatter/gather front over the shard mailboxes.
+/// Cloneable, `Send` scatter/gather front over the shard replica sets.
 pub struct QueryPlane {
-    shard_txs: Vec<BoundedSender<ShardCmd>>,
+    sets: Vec<ReplicaSet>,
     counters: Arc<ServiceCounters>,
 }
 
 impl Clone for QueryPlane {
     fn clone(&self) -> Self {
         QueryPlane {
-            shard_txs: self.shard_txs.clone(),
+            sets: self.sets.clone(),
             counters: Arc::clone(&self.counters),
         }
     }
 }
 
 impl QueryPlane {
-    pub(super) fn new(
-        shard_txs: Vec<BoundedSender<ShardCmd>>,
-        counters: Arc<ServiceCounters>,
-    ) -> Self {
-        QueryPlane { shard_txs, counters }
+    pub(super) fn new(sets: Vec<ReplicaSet>, counters: Arc<ServiceCounters>) -> Self {
+        QueryPlane { sets, counters }
     }
 
     /// Number of shards this plane scatters over.
     pub fn shards(&self) -> usize {
-        self.shard_txs.len()
+        self.sets.len()
+    }
+
+    /// Replicas per shard (R).
+    pub fn replicas(&self) -> usize {
+        self.sets.first().map_or(1, ReplicaSet::replicas)
     }
 
     /// Batched (c, r)-ANN, executed entirely on the calling thread:
-    /// scatter `AnnBatch` to every shard, gather the per-shard bests,
-    /// keep the global minimum per query. Answers are bit-identical to
-    /// the pre-extraction `SketchService::query_batch` native path.
+    /// scatter `AnnBatch` to one replica of every shard, gather the
+    /// per-shard bests, keep the global minimum per query. Answers are
+    /// bit-identical to the pre-extraction `SketchService::query_batch`
+    /// native path — and to any other replica choice.
     ///
     /// Errors iff any shard is unreachable or dies mid-query — see the
     /// module docs for why a partial merge is never returned.
@@ -71,19 +77,23 @@ impl QueryPlane {
         }
         let batch = Arc::new(queries);
         // Scatter to ALL shards before gathering anything, so every shard
-        // works the batch at the same time.
-        let mut replies = Vec::with_capacity(self.shard_txs.len());
-        for (si, tx) in self.shard_txs.iter().enumerate() {
+        // works the batch at the same time. The read guards keep the
+        // picked replicas' depth gauges raised until their replies land.
+        let mut pending = Vec::with_capacity(self.sets.len());
+        for (si, set) in self.sets.iter().enumerate() {
             let (rtx, rrx) = channel();
-            if !tx.force(ShardCmd::AnnBatch(Arc::clone(&batch), rtx)) {
+            let Some(guard) = set.read(ShardCmd::AnnBatch(Arc::clone(&batch), rtx)) else {
                 bail!("ANN query failed: shard {si} is down (refusing a partial answer)");
-            }
-            replies.push(rrx);
+            };
+            pending.push((rrx, guard));
         }
-        let mut partials = Vec::with_capacity(replies.len());
-        for (si, rrx) in replies.into_iter().enumerate() {
+        let mut partials = Vec::with_capacity(pending.len());
+        for (si, (rrx, guard)) in pending.into_iter().enumerate() {
             match rrx.recv() {
-                Ok(part) => partials.push(part),
+                Ok(part) => {
+                    drop(guard);
+                    partials.push(part);
+                }
                 Err(_) => bail!("ANN query failed: shard {si} died mid-query"),
             }
         }
@@ -101,18 +111,21 @@ impl QueryPlane {
             return Ok((Vec::new(), Vec::new()));
         }
         let batch = Arc::new(queries);
-        let mut replies = Vec::with_capacity(self.shard_txs.len());
-        for (si, tx) in self.shard_txs.iter().enumerate() {
+        let mut pending = Vec::with_capacity(self.sets.len());
+        for (si, set) in self.sets.iter().enumerate() {
             let (rtx, rrx) = channel();
-            if !tx.force(ShardCmd::KdeBatch(Arc::clone(&batch), rtx)) {
+            let Some(guard) = set.read(ShardCmd::KdeBatch(Arc::clone(&batch), rtx)) else {
                 bail!("KDE query failed: shard {si} is down (refusing a partial answer)");
-            }
-            replies.push(rrx);
+            };
+            pending.push((rrx, guard));
         }
-        let mut partials = Vec::with_capacity(replies.len());
-        for (si, rrx) in replies.into_iter().enumerate() {
+        let mut partials = Vec::with_capacity(pending.len());
+        for (si, (rrx, guard)) in pending.into_iter().enumerate() {
             match rrx.recv() {
-                Ok(part) => partials.push(part),
+                Ok(part) => {
+                    drop(guard);
+                    partials.push(part);
+                }
                 Err(_) => bail!("KDE query failed: shard {si} died mid-query"),
             }
         }
@@ -124,14 +137,12 @@ impl QueryPlane {
 
 #[cfg(test)]
 mod tests {
-    use super::super::backpressure::{bounded, Overload};
+    use super::super::backpressure::{bounded, BoundedSender, Overload};
     use super::super::protocol::{ShardAnnResult, ShardKdeResult};
     use super::*;
     use std::time::Duration;
 
-    fn fake_shard(
-        rx: std::sync::mpsc::Receiver<ShardCmd>,
-    ) -> std::thread::JoinHandle<()> {
+    fn fake_shard(rx: std::sync::mpsc::Receiver<ShardCmd>) -> std::thread::JoinHandle<()> {
         std::thread::spawn(move || {
             while let Ok(cmd) = rx.recv() {
                 match cmd {
@@ -154,10 +165,14 @@ mod tests {
         })
     }
 
+    fn single(tx: BoundedSender<ShardCmd>) -> ReplicaSet {
+        ReplicaSet::new(vec![tx])
+    }
+
     #[test]
     fn empty_batches_short_circuit() {
         let (tx, _rx) = bounded(4, Overload::Block);
-        let plane = QueryPlane::new(vec![tx], Arc::new(ServiceCounters::default()));
+        let plane = QueryPlane::new(vec![single(tx)], Arc::new(ServiceCounters::default()));
         assert!(plane.ann_batch(Vec::new()).unwrap().is_empty());
         let (s, d) = plane.kde_batch(Vec::new()).unwrap();
         assert!(s.is_empty() && d.is_empty());
@@ -169,7 +184,10 @@ mod tests {
         let (tx1, rx1) = bounded(4, Overload::Block);
         let (j0, j1) = (fake_shard(rx0), fake_shard(rx1));
         let counters = Arc::new(ServiceCounters::default());
-        let plane = QueryPlane::new(vec![tx0.clone(), tx1.clone()], Arc::clone(&counters));
+        let plane = QueryPlane::new(
+            vec![single(tx0.clone()), single(tx1.clone())],
+            Arc::clone(&counters),
+        );
         let ans = plane.ann_batch(vec![vec![0.0; 4], vec![1.0; 4]]).unwrap();
         assert_eq!(ans, vec![None, None]);
         let (sums, dens) = plane.kde_batch(vec![vec![0.0; 4]]).unwrap();
@@ -178,6 +196,28 @@ mod tests {
         let st = counters.snapshot();
         assert_eq!(st.ann_queries, 2);
         assert_eq!(st.kde_queries, 1);
+        assert!(tx0.force(ShardCmd::Shutdown));
+        assert!(tx1.force(ShardCmd::Shutdown));
+        j0.join().unwrap();
+        j1.join().unwrap();
+    }
+
+    #[test]
+    fn replicated_shard_spreads_reads_and_answers_identically() {
+        // One shard, two replicas: sequential singleton batches must
+        // round-robin across the copies (equal depth) and answer the
+        // same regardless of which replica served.
+        let (tx0, rx0) = bounded(8, Overload::Block);
+        let (tx1, rx1) = bounded(8, Overload::Block);
+        let (j0, j1) = (fake_shard(rx0), fake_shard(rx1));
+        let set = ReplicaSet::new(vec![tx0.clone(), tx1.clone()]);
+        let plane = QueryPlane::new(vec![set.clone()], Arc::new(ServiceCounters::default()));
+        for _ in 0..4 {
+            let ans = plane.ann_batch(vec![vec![0.0; 4]]).unwrap();
+            assert_eq!(ans, vec![None]);
+        }
+        assert_eq!(set.reads_served(), vec![2, 2], "reads alternate on ties");
+        assert_eq!(set.depths(), vec![0, 0], "guards released after gather");
         assert!(tx0.force(ShardCmd::Shutdown));
         assert!(tx1.force(ShardCmd::Shutdown));
         j0.join().unwrap();
@@ -194,7 +234,7 @@ mod tests {
         drop(rx1);
         let j0 = fake_shard(rx0);
         let counters = Arc::new(ServiceCounters::default());
-        let plane = QueryPlane::new(vec![tx0.clone(), tx1], counters);
+        let plane = QueryPlane::new(vec![single(tx0.clone()), single(tx1)], counters);
         let err = plane.ann_batch(vec![vec![0.0; 4]]).unwrap_err().to_string();
         assert!(err.contains("shard 1"), "{err}");
         let err = plane.kde_batch(vec![vec![0.0; 4]]).unwrap_err().to_string();
@@ -217,7 +257,7 @@ mod tests {
                 }
             }
         });
-        let plane = QueryPlane::new(vec![tx.clone()], Arc::new(ServiceCounters::default()));
+        let plane = QueryPlane::new(vec![single(tx.clone())], Arc::new(ServiceCounters::default()));
         let err = plane.ann_batch(vec![vec![0.0; 4]]).unwrap_err().to_string();
         assert!(err.contains("died mid-query"), "{err}");
         assert!(tx.force(ShardCmd::Shutdown));

@@ -1,0 +1,421 @@
+//! Shard-level read replicas: `ReplicaSet` fronts `R ≥ 1` copies of one
+//! shard's state (each a full [`Shard`] on its own thread) so read-heavy
+//! workloads scale past the single-copy shard-thread ceiling — the
+//! natural next lever after the calling-thread `QueryPlane`, because the
+//! paper's sketches are cheap enough to duplicate (sublinear memory) and
+//! reads dominate the serving mix.
+//!
+//! Contract: every replica of a shard holds **bit-identical** state.
+//! Replicas are constructed with the same seed (the S-ANN sampler Rng and
+//! the SW-AKDE window clock are functions of the mutation *sequence*
+//! alone), so identity holds as long as every replica's mailbox receives
+//! the same write commands in the same order. `offer_write`/`delete`
+//! therefore serialize their fan-out through a per-shard order lock when
+//! `R > 1`: without it, two connection threads could interleave
+//! differently across the mailboxes and the copies would drift apart
+//! permanently. With `R = 1` the lock is skipped — a single mailbox
+//! already linearizes — so the replica layer costs nothing on the
+//! un-replicated path.
+//!
+//! Overload is decided ONCE per shard: the primary's mailbox runs the
+//! configured policy, and only if the primary accepts do the secondaries
+//! receive the point (`force`d — they can never shed what the primary
+//! kept, which would desynchronize the copies). Deliberate trade-off
+//! under `Overload::Shed` with `R > 1`: a secondary whose mailbox is
+//! momentarily full (e.g. it is mid-way through a long read batch)
+//! back-pressures the writer until it drains — replication bounds
+//! DIVERGENCE at the cost of the pure non-blocking shed guarantee,
+//! which only the primary's queue still provides. The stall is bounded
+//! by the secondary's drain rate, and the least-loaded picker stops
+//! routing new reads at a backed-up copy, which is what lets it drain.
+//!
+//! Reads go to the least-loaded replica: the picker scans in-flight read
+//! depth per replica (a gauge held while a scatter's reply is pending)
+//! and breaks ties round-robin, so a replica stuck on a slow query stops
+//! receiving new ones until it drains.
+//!
+//! Durability stays per-SHARD, not per-replica: the primary alone logs
+//! to the WAL and serializes checkpoints; recovery rehydrates all `R`
+//! copies from that one image + log (see `SketchService::start`).
+//!
+//! [`Shard`]: super::shard::Shard
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+
+use super::backpressure::{BoundedSender, OfferOutcome};
+use super::shard::ShardCmd;
+
+/// Decrements its replica's in-flight read gauge on drop. Hold it until
+/// the read's reply has been received (or abandoned).
+pub struct ReadGuard {
+    depth: Arc<AtomicUsize>,
+}
+
+impl Drop for ReadGuard {
+    fn drop(&mut self) {
+        self.depth.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Cloneable front over one shard's replica mailboxes.
+pub struct ReplicaSet {
+    txs: Vec<BoundedSender<ShardCmd>>,
+    /// In-flight reads per replica (gauge; see [`ReadGuard`]).
+    depth: Vec<Arc<AtomicUsize>>,
+    /// Cumulative reads routed per replica (diagnostics + picker tests).
+    reads: Vec<Arc<AtomicU64>>,
+    /// Round-robin cursor for tie-breaks, shared across clones.
+    rr: Arc<AtomicUsize>,
+    /// Serializes write fan-out so every replica applies the same order.
+    write_order: Arc<Mutex<()>>,
+}
+
+impl Clone for ReplicaSet {
+    fn clone(&self) -> Self {
+        ReplicaSet {
+            txs: self.txs.clone(),
+            depth: self.depth.iter().map(Arc::clone).collect(),
+            reads: self.reads.iter().map(Arc::clone).collect(),
+            rr: Arc::clone(&self.rr),
+            write_order: Arc::clone(&self.write_order),
+        }
+    }
+}
+
+impl ReplicaSet {
+    /// Wrap one shard's replica mailboxes; `txs[0]` is the primary (WAL
+    /// owner, snapshot/stats source).
+    pub fn new(txs: Vec<BoundedSender<ShardCmd>>) -> Self {
+        assert!(!txs.is_empty(), "a shard needs at least one replica");
+        let n = txs.len();
+        ReplicaSet {
+            txs,
+            depth: (0..n).map(|_| Arc::new(AtomicUsize::new(0))).collect(),
+            reads: (0..n).map(|_| Arc::new(AtomicU64::new(0))).collect(),
+            rr: Arc::new(AtomicUsize::new(0)),
+            write_order: Arc::new(Mutex::new(())),
+        }
+    }
+
+    /// Number of replicas (R) in this set.
+    pub fn replicas(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// The primary replica's mailbox: control ops that must run exactly
+    /// once per shard (stats, WAL sync ordering, snapshots) target this.
+    pub fn primary(&self) -> &BoundedSender<ShardCmd> {
+        &self.txs[0]
+    }
+
+    /// Every replica's mailbox (barriers and shutdown fan out to all).
+    pub fn txs(&self) -> &[BoundedSender<ShardCmd>] {
+        &self.txs
+    }
+
+    /// Current in-flight read depth per replica.
+    pub fn depths(&self) -> Vec<usize> {
+        self.depth.iter().map(|d| d.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Cumulative reads routed per replica.
+    pub fn reads_served(&self) -> Vec<u64> {
+        self.reads.iter().map(|r| r.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Least-loaded replica, ties broken round-robin: the scan starts at
+    /// the rotating cursor and takes a strictly smaller depth to move,
+    /// so equal-depth replicas share reads evenly and a backed-up one is
+    /// skipped entirely.
+    fn pick(&self) -> usize {
+        let n = self.txs.len();
+        if n == 1 {
+            return 0;
+        }
+        let start = self.rr.fetch_add(1, Ordering::Relaxed);
+        let mut best = start % n;
+        let mut best_depth = self.depth[best].load(Ordering::Relaxed);
+        for k in 1..n {
+            let i = (start + k) % n;
+            let d = self.depth[i].load(Ordering::Relaxed);
+            if d < best_depth {
+                best = i;
+                best_depth = d;
+            }
+        }
+        best
+    }
+
+    /// Route one read command (it carries its own reply channel) to the
+    /// least-loaded replica. Returns `None` if that replica's mailbox is
+    /// closed — the caller treats the shard as down. Hold the guard until
+    /// the reply arrives: it is the load signal the picker steers by.
+    pub fn read(&self, cmd: ShardCmd) -> Option<ReadGuard> {
+        let i = self.pick();
+        let depth = Arc::clone(&self.depth[i]);
+        depth.fetch_add(1, Ordering::Relaxed);
+        if self.txs[i].force(cmd) {
+            self.reads[i].fetch_add(1, Ordering::Relaxed);
+            Some(ReadGuard { depth })
+        } else {
+            depth.fetch_sub(1, Ordering::Relaxed);
+            None
+        }
+    }
+
+    /// Offer one write under the shard's overload policy, fanned out to
+    /// every replica. The primary decides the point's fate exactly once;
+    /// secondaries then receive the same data unconditionally (forced —
+    /// blocking while a copy's queue is full, see the module docs for
+    /// this trade-off and for why the fan-out is serialized), so the
+    /// copies cannot diverge by shedding differently.
+    pub fn offer_write(&self, cmd: ShardCmd) -> OfferOutcome {
+        if self.txs.len() == 1 {
+            return self.txs[0].offer_outcome(cmd);
+        }
+        let _order = self.write_order.lock().unwrap();
+        let copies: Vec<ShardCmd> = (1..self.txs.len())
+            .map(|_| {
+                cmd.clone_write()
+                    .expect("replica fan-out requires a data-only write command")
+            })
+            .collect();
+        match self.txs[0].offer_outcome(cmd) {
+            OfferOutcome::Sent => {
+                for (tx, c) in self.txs[1..].iter().zip(copies) {
+                    // A dead secondary mid-shutdown is not recoverable
+                    // here; reads against it will error at their own
+                    // call sites.
+                    let _ = tx.force(c);
+                }
+                OfferOutcome::Sent
+            }
+            other => other,
+        }
+    }
+
+    /// Turnstile delete, applied on every replica (a delete is a write:
+    /// all copies must drop the point). The PRIMARY's acknowledgement is
+    /// authoritative — it applies (and, on durable services, WAL-logs)
+    /// the delete, so once it has acked, the delete HAPPENED and must be
+    /// reported/counted; `None` means the primary never acknowledged and
+    /// nothing durable can have been recorded. Secondary acks are still
+    /// awaited so a returned delete is visible from every live copy, but
+    /// a dead secondary (shutdown race — reads against it already error)
+    /// cannot retract an applied delete.
+    pub fn delete(&self, x: Vec<f32>) -> Option<bool> {
+        let order = (self.txs.len() > 1).then(|| self.write_order.lock().unwrap());
+        let (ptx, prx) = channel();
+        if !self.txs[0].force(ShardCmd::Delete(x.clone(), ptx)) {
+            return None;
+        }
+        let mut secondary_acks = Vec::with_capacity(self.txs.len().saturating_sub(1));
+        for tx in &self.txs[1..] {
+            let (rtx, rrx) = channel();
+            if tx.force(ShardCmd::Delete(x.clone(), rtx)) {
+                secondary_acks.push(rrx);
+            }
+        }
+        // Enqueue order is fixed once every mailbox holds the command;
+        // the acks can be awaited without stalling other writers.
+        drop(order);
+        let removed = prx.recv().ok()?;
+        for rrx in secondary_acks {
+            let _ = rrx.recv();
+        }
+        Some(removed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::backpressure::{bounded, Overload};
+    use super::super::protocol::ShardAnnResult;
+    use super::*;
+    use std::sync::mpsc::Receiver;
+    use std::sync::Arc;
+
+    fn set_of(caps: &[(usize, Overload)]) -> (ReplicaSet, Vec<Receiver<ShardCmd>>) {
+        let (txs, rxs): (Vec<_>, Vec<_>) =
+            caps.iter().map(|&(cap, pol)| bounded(cap, pol)).unzip();
+        (ReplicaSet::new(txs), rxs)
+    }
+
+    fn ann_read(set: &ReplicaSet) -> Option<ReadGuard> {
+        let (tx, _rx) = std::sync::mpsc::channel();
+        set.read(ShardCmd::AnnBatch(Arc::new(Vec::new()), tx))
+    }
+
+    #[test]
+    fn equal_depth_reads_round_robin() {
+        let (set, rxs) = set_of(&[(16, Overload::Block), (16, Overload::Block)]);
+        for _ in 0..4 {
+            drop(ann_read(&set).unwrap()); // completes immediately
+        }
+        assert_eq!(set.reads_served(), vec![2, 2], "ties rotate");
+        drop(rxs);
+    }
+
+    #[test]
+    fn picker_avoids_replica_with_reads_in_flight() {
+        let (set, rxs) = set_of(&[(16, Overload::Block), (16, Overload::Block)]);
+        // A slow replica: its first read never completes (guard held).
+        let slow = ann_read(&set).unwrap();
+        assert_eq!(set.depths(), vec![1, 0]);
+        for _ in 0..3 {
+            drop(ann_read(&set).unwrap());
+        }
+        assert_eq!(
+            set.reads_served(),
+            vec![1, 3],
+            "all subsequent reads dodge the stuck replica"
+        );
+        drop(slow);
+        assert_eq!(set.depths(), vec![0, 0], "guard releases the gauge");
+        drop(rxs);
+    }
+
+    #[test]
+    fn dead_replica_read_reports_none_and_releases_gauge() {
+        let (tx, rx) = bounded::<ShardCmd>(4, Overload::Block);
+        drop(rx);
+        let set = ReplicaSet::new(vec![tx]);
+        assert!(ann_read(&set).is_none());
+        assert_eq!(set.depths(), vec![0]);
+    }
+
+    #[test]
+    fn writes_fan_out_to_every_replica() {
+        let (set, rxs) = set_of(&[(16, Overload::Block), (16, Overload::Block)]);
+        assert_eq!(
+            set.offer_write(ShardCmd::Insert(vec![1.0, 2.0])),
+            OfferOutcome::Sent
+        );
+        assert_eq!(
+            set.offer_write(ShardCmd::InsertBatch(vec![vec![3.0], vec![4.0]])),
+            OfferOutcome::Sent
+        );
+        for rx in &rxs {
+            match rx.try_recv().unwrap() {
+                ShardCmd::Insert(x) => assert_eq!(x, vec![1.0, 2.0]),
+                other => panic!("expected Insert, got {}", cmd_name(&other)),
+            }
+            match rx.try_recv().unwrap() {
+                ShardCmd::InsertBatch(b) => assert_eq!(b, vec![vec![3.0], vec![4.0]]),
+                other => panic!("expected InsertBatch, got {}", cmd_name(&other)),
+            }
+        }
+    }
+
+    fn cmd_name(cmd: &ShardCmd) -> &'static str {
+        match cmd {
+            ShardCmd::Insert(_) => "Insert",
+            ShardCmd::InsertBatch(_) => "InsertBatch",
+            ShardCmd::InsertWithSlots(..) => "InsertWithSlots",
+            ShardCmd::InsertBatchSlots(_) => "InsertBatchSlots",
+            ShardCmd::Delete(..) => "Delete",
+            ShardCmd::AnnBatch(..) => "AnnBatch",
+            ShardCmd::AnnCandidates(..) => "AnnCandidates",
+            ShardCmd::AnnCandidatesKeys(..) => "AnnCandidatesKeys",
+            ShardCmd::KdeBatch(..) => "KdeBatch",
+            ShardCmd::Stats(_) => "Stats",
+            ShardCmd::SyncWal(_) => "SyncWal",
+            ShardCmd::Snapshot(_) => "Snapshot",
+            ShardCmd::Shutdown => "Shutdown",
+        }
+    }
+
+    #[test]
+    fn shed_is_decided_once_by_the_primary() {
+        // Primary queue holds 1 command; the second offer sheds — and the
+        // secondary must NOT receive the shed point (copies stay equal).
+        let (set, rxs) = set_of(&[(1, Overload::Shed), (16, Overload::Shed)]);
+        assert_eq!(set.offer_write(ShardCmd::Insert(vec![1.0])), OfferOutcome::Sent);
+        assert_eq!(set.offer_write(ShardCmd::Insert(vec![2.0])), OfferOutcome::Shed);
+        let drained: Vec<usize> = rxs
+            .iter()
+            .map(|rx| std::iter::from_fn(|| rx.try_recv().ok()).count())
+            .collect();
+        assert_eq!(drained, vec![1, 1], "both replicas saw exactly the kept point");
+    }
+
+    #[test]
+    fn delete_waits_for_all_replicas() {
+        let (set, rxs) = set_of(&[(16, Overload::Block), (16, Overload::Block)]);
+        let ackers: Vec<_> = rxs
+            .into_iter()
+            .map(|rx| {
+                std::thread::spawn(move || {
+                    match rx.recv().unwrap() {
+                        ShardCmd::Delete(x, reply) => {
+                            assert_eq!(x, vec![7.0]);
+                            reply.send(true).unwrap();
+                        }
+                        _ => panic!("expected Delete"),
+                    }
+                })
+            })
+            .collect();
+        assert_eq!(set.delete(vec![7.0]), Some(true));
+        for a in ackers {
+            a.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn delete_ack_follows_the_primary() {
+        // Dead PRIMARY: nothing was applied or logged — unacknowledged.
+        let (tx0, rx0) = bounded::<ShardCmd>(16, Overload::Block);
+        drop(rx0);
+        let (tx1, _rx1) = bounded::<ShardCmd>(16, Overload::Block);
+        let set = ReplicaSet::new(vec![tx0, tx1]);
+        assert_eq!(set.delete(vec![1.0]), None, "no primary ack, no delete");
+
+        // Dead SECONDARY: the primary applied (and would have WAL-logged)
+        // the delete, so it HAPPENED — a shutdown-racing copy must not
+        // retract it into a miscount.
+        let (tx0, rx0) = bounded::<ShardCmd>(16, Overload::Block);
+        let (tx1, rx1) = bounded::<ShardCmd>(16, Overload::Block);
+        drop(rx1);
+        let primary = std::thread::spawn(move || match rx0.recv().unwrap() {
+            ShardCmd::Delete(_, reply) => reply.send(true).unwrap(),
+            _ => panic!("expected Delete"),
+        });
+        let set = ReplicaSet::new(vec![tx0, tx1]);
+        assert_eq!(set.delete(vec![1.0]), Some(true), "primary ack is authoritative");
+        primary.join().unwrap();
+    }
+
+    #[test]
+    fn fake_shard_read_roundtrip() {
+        let (tx, rx) = bounded::<ShardCmd>(16, Overload::Block);
+        let join = std::thread::spawn(move || {
+            while let Ok(cmd) = rx.recv() {
+                match cmd {
+                    ShardCmd::AnnBatch(batch, reply) => {
+                        let _ = reply.send(ShardAnnResult {
+                            best: vec![None; batch.len()],
+                            scanned: 0,
+                        });
+                    }
+                    ShardCmd::Shutdown => break,
+                    _ => {}
+                }
+            }
+        });
+        let set = ReplicaSet::new(vec![tx]);
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        let guard = set
+            .read(ShardCmd::AnnBatch(Arc::new(vec![vec![0.0; 4]]), rtx))
+            .unwrap();
+        assert_eq!(set.depths(), vec![1]);
+        let ans = rrx.recv().unwrap();
+        drop(guard);
+        assert_eq!(ans.best.len(), 1);
+        assert_eq!(set.depths(), vec![0]);
+        assert!(set.primary().force(ShardCmd::Shutdown));
+        join.join().unwrap();
+    }
+}

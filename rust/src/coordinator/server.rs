@@ -23,10 +23,11 @@ use crate::durability::{checkpoint, recovery, wal, FsyncPolicy};
 use crate::runtime::Executor;
 use crate::sketch::ann::SAnnConfig;
 
-use super::backpressure::{bounded, BoundedSender, OfferOutcome, Overload};
+use super::backpressure::{bounded, OfferOutcome, Overload};
 use super::handle::{ServiceCmd, ServiceHandle};
 use super::protocol::{AnnAnswer, ServiceCounters, ServiceStats};
 use super::query::QueryPlane;
+use super::replica::ReplicaSet;
 use super::router::{RoutePolicy, Router};
 use super::shard::{KdeShardConfig, Shard, ShardCmd};
 
@@ -35,6 +36,11 @@ use super::shard::{KdeShardConfig, Shard, ShardCmd};
 pub struct ServiceConfig {
     pub dim: usize,
     pub shards: usize,
+    /// Read replicas per shard (R ≥ 1). Writes fan out to every replica
+    /// (identical state by construction); reads go to the least-loaded
+    /// copy. Durability is per-shard: one WAL + one checkpoint image
+    /// regardless of R.
+    pub replicas: usize,
     pub route: RoutePolicy,
     /// Per-shard mailbox depth.
     pub queue_cap: usize,
@@ -66,6 +72,7 @@ impl ServiceConfig {
         ServiceConfig {
             dim,
             shards: 4,
+            replicas: 1,
             route: RoutePolicy::HashVector,
             queue_cap: 1024,
             overload: Overload::Block,
@@ -99,11 +106,14 @@ impl ServiceConfig {
 }
 
 struct ShardHandle {
-    tx: BoundedSender<ShardCmd>,
-    join: Option<JoinHandle<()>>,
+    /// One shard's replica mailboxes (R ≥ 1; `set.primary()` owns the
+    /// WAL and answers stats/snapshots).
+    set: ReplicaSet,
+    joins: Vec<JoinHandle<()>>,
     /// ANN hash params cloned before the shard moved to its thread:
     /// (projection [dim, k*L], biases, width, k, L). Used by the server to
-    /// batch-hash queries through the PJRT artifact.
+    /// batch-hash queries through the PJRT artifact. Identical on every
+    /// replica (same seed), so one copy per shard suffices.
     hash_params: (Vec<f32>, Vec<f32>, f32, usize, usize),
     /// KDE hash params: (projection [dim, rows*p], biases, width, rows*p,
     /// kernel) — drives the batched PJRT ingest path.
@@ -141,15 +151,20 @@ pub struct SketchService {
 const INGEST_FLUSH_ROWS: usize = 256;
 
 impl SketchService {
-    /// Spawn shard threads (and the PJRT executor when `use_pjrt`).
+    /// Spawn shard threads — `replicas` per shard — and the PJRT executor
+    /// when `use_pjrt`.
     ///
     /// With `data_dir` set this is also the recovery path: the newest
-    /// valid checkpoint restores every shard's S-ANN + SW-AKDE state and
-    /// the service counters, then each shard replays its WAL records past
-    /// the checkpoint's high-water mark BEFORE its thread spawns — so by
-    /// the time the service accepts traffic, it answers exactly like the
-    /// uninterrupted process would have.
+    /// valid checkpoint restores every shard's S-ANN + SW-AKDE state
+    /// (ONE image per shard, decoded once per replica — so any R
+    /// rehydrates from the same bytes) and the service counters, then
+    /// each shard replays its WAL records past the checkpoint's
+    /// high-water mark into every replica BEFORE their threads spawn —
+    /// so by the time the service accepts traffic, it answers exactly
+    /// like the uninterrupted process would have, from any copy.
     pub fn start(cfg: ServiceConfig) -> Result<Self> {
+        let mut cfg = cfg;
+        cfg.replicas = cfg.replicas.max(1);
         let per_shard_n = cfg.ann.n_max.div_ceil(cfg.shards).max(2);
         let mut recovered = match &cfg.data_dir {
             Some(dir) => Some(recovery::recover(dir, cfg.dim, cfg.shards)?),
@@ -159,24 +174,41 @@ impl SketchService {
         let (mut replayed_inserts, mut replayed_deletes) = (0u64, 0u64);
         let mut shards = Vec::with_capacity(cfg.shards);
         for i in 0..cfg.shards {
-            let ann_cfg = SAnnConfig { n_max: per_shard_n, ..cfg.ann.clone() };
             let kde_cfg = KdeShardConfig {
                 window: (cfg.kde.window / cfg.shards as u64).max(1),
                 ..cfg.kde.clone()
             };
-            let mut shard = Shard::new(i, ann_cfg, &kde_cfg, cfg.seed ^ 0xD1E5 ^ i as u64);
+            // Every replica is built with the SAME seed: replica state is
+            // a function of the mutation sequence alone, so R copies fed
+            // identical mailbox orders answer bit-identically — and
+            // identically to an R=1 shard.
+            let mut members: Vec<Shard> = (0..cfg.replicas)
+                .map(|_| {
+                    let ann_cfg = SAnnConfig { n_max: per_shard_n, ..cfg.ann.clone() };
+                    Shard::new(i, ann_cfg, &kde_cfg, cfg.seed ^ 0xD1E5 ^ i as u64)
+                })
+                .collect();
             if let (Some(dir), Some(rec)) = (&cfg.data_dir, recovered.as_mut()) {
                 let rs = std::mem::take(&mut rec.shards[i]);
                 let hwm = rs.hwm;
-                if let (Some(ann), Some(kde)) = (rs.sann, rs.swakde) {
-                    shard.restore_state(ann, kde, rs.applied_inserts, rs.applied_deletes)?;
+                for (r, shard) in members.iter_mut().enumerate() {
+                    if let Some((ann, kde)) = rs.decode_images().map_err(|e| {
+                        e.context(format!("shard {i} replica {r}: decoding checkpoint image"))
+                    })? {
+                        shard.restore_state(ann, kde, rs.applied_inserts, rs.applied_deletes)?;
+                    }
                 }
                 let report = wal::replay(dir, i, hwm, |r| {
                     match r.op {
                         wal::WalOp::Insert { .. } => replayed_inserts += 1,
                         wal::WalOp::Delete => replayed_deletes += 1,
                     }
-                    shard.replay(r)
+                    // The logged sampler decision is honored by every
+                    // replica, so replay cannot diverge the copies.
+                    for shard in members.iter_mut() {
+                        shard.replay(r)?;
+                    }
+                    Ok(())
                 })?;
                 if let Some((path, off)) = &report.corrupt_at {
                     // A torn tail from the crash being recovered can only
@@ -211,15 +243,32 @@ impl SketchService {
                     cfg.fsync,
                     wal::DEFAULT_SEGMENT_BYTES,
                 )?;
-                shard.attach_wal(writer);
+                // The WAL logs once per SHARD: only the primary appends.
+                members[0].attach_wal(writer);
             }
-            let hash_params = shard.ann_hash_params();
-            let kde_params = shard.kde_hash_params();
-            let (tx, rx) = bounded(cfg.queue_cap, cfg.overload);
-            let join = std::thread::Builder::new()
-                .name(format!("shard-{i}"))
-                .spawn(move || shard.run(rx))?;
-            shards.push(ShardHandle { tx, join: Some(join), hash_params, kde_params });
+            let hash_params = members[0].ann_hash_params();
+            let kde_params = members[0].kde_hash_params();
+            let mut txs = Vec::with_capacity(cfg.replicas);
+            let mut joins = Vec::with_capacity(cfg.replicas);
+            for (r, shard) in members.into_iter().enumerate() {
+                let (tx, rx) = bounded(cfg.queue_cap, cfg.overload);
+                let name = if cfg.replicas == 1 {
+                    format!("shard-{i}")
+                } else {
+                    format!("shard-{i}r{r}")
+                };
+                let join = std::thread::Builder::new()
+                    .name(name)
+                    .spawn(move || shard.run(rx))?;
+                txs.push(tx);
+                joins.push(join);
+            }
+            shards.push(ShardHandle {
+                set: ReplicaSet::new(txs),
+                joins,
+                hash_params,
+                kde_params,
+            });
         }
         let ckpt_epoch = recovered.as_ref().map_or(0, |r| r.epoch);
         if let Some(rec) = &recovered {
@@ -236,7 +285,7 @@ impl SketchService {
         let pending_ingest = vec![Vec::new(); cfg.shards];
         let inserts_at_ckpt = counters.snapshot().inserts;
         let plane = QueryPlane::new(
-            shards.iter().map(|s| s.tx.clone()).collect(),
+            shards.iter().map(|s| s.set.clone()).collect(),
             Arc::clone(&counters),
         );
         Ok(SketchService {
@@ -263,7 +312,7 @@ impl SketchService {
     pub fn insert(&mut self, x: Vec<f32>) -> bool {
         let shard = self.router.route(&x);
         ServiceCounters::add(&self.counters.inserts, 1);
-        match self.shards[shard].tx.offer_outcome(ShardCmd::Insert(x)) {
+        match self.shards[shard].set.offer_write(ShardCmd::Insert(x)) {
             OfferOutcome::Sent => true,
             OfferOutcome::Shed => {
                 ServiceCounters::add(&self.counters.shed_points, 1);
@@ -299,7 +348,7 @@ impl SketchService {
             // queue_cap keeps its per-point meaning within a factor of the
             // batch size.
             return super::handle::ship_native_batch(&self.counters, per_shard, |s, chunk| {
-                self.shards[s].tx.offer_outcome(ShardCmd::InsertBatch(chunk))
+                self.shards[s].set.offer_write(ShardCmd::InsertBatch(chunk))
             });
         }
         // Route into per-shard pending buffers; flush a shard only when a
@@ -361,7 +410,7 @@ impl SketchService {
                         )
                     })
                     .collect();
-                match self.shards[si].tx.offer_outcome(ShardCmd::InsertBatchSlots(items)) {
+                match self.shards[si].set.offer_write(ShardCmd::InsertBatchSlots(items)) {
                     OfferOutcome::Sent => {}
                     OfferOutcome::Shed => {
                         ServiceCounters::add(&self.counters.shed_points, m as u64)
@@ -374,7 +423,7 @@ impl SketchService {
             _ => {
                 // artifact variant missing: native per-item path
                 for x in pts {
-                    match self.shards[si].tx.offer_outcome(ShardCmd::Insert(x)) {
+                    match self.shards[si].set.offer_write(ShardCmd::Insert(x)) {
                         OfferOutcome::Sent => {}
                         OfferOutcome::Shed => {
                             ServiceCounters::add(&self.counters.shed_points, 1)
@@ -396,16 +445,12 @@ impl SketchService {
         let Some(shard) = self.router.route_delete(&x) else {
             return false;
         };
-        let (tx, rx) = channel();
-        if !self.shards[shard].tx.force(ShardCmd::Delete(x, tx)) {
-            return false;
-        }
-        match rx.recv() {
-            Ok(removed) => {
+        match self.shards[shard].set.delete(x) {
+            Some(removed) => {
                 ServiceCounters::add(&self.counters.deletes, 1);
                 removed
             }
-            Err(_) => false,
+            None => false,
         }
     }
 
@@ -455,18 +500,19 @@ impl SketchService {
                     }
                     all
                 });
-            let sent = match keys {
-                Some(all) => s.tx.force(ShardCmd::AnnCandidatesKeys(Arc::new(all), tx)),
-                None => s.tx.force(ShardCmd::AnnCandidates(Arc::clone(&batch), tx)),
+            let cmd = match keys {
+                Some(all) => ShardCmd::AnnCandidatesKeys(Arc::new(all), tx),
+                None => ShardCmd::AnnCandidates(Arc::clone(&batch), tx),
             };
             // A dead shard's candidates are gone with it — returning the
             // surviving shards' merge would silently declare its points
             // "no near neighbor" (the bug this path shared with the old
-            // native loop).
-            if !sent {
+            // native loop). Candidate reads pick a replica like every
+            // other read, so PJRT queries share the replica scaling.
+            let Some(guard) = s.set.read(cmd) else {
                 bail!("ANN query failed: shard {si} is down (refusing a partial answer)");
-            }
-            replies.push(rx);
+            };
+            replies.push((rx, guard));
         }
         // Batched queries share candidates heavily (they probe the same
         // LSH tables), so shards reply with DEDUPLICATED pools; the server
@@ -476,9 +522,10 @@ impl SketchService {
         let mut pool_flat: Vec<f32> = Vec::new();
         let mut pool_meta: Vec<(usize, u32)> = Vec::new(); // slot -> (shard, id)
         let mut per_query: Vec<Vec<usize>> = vec![Vec::new(); n];
-        for (si, rx) in replies.into_iter().enumerate() {
+        for (si, (rx, guard)) in replies.into_iter().enumerate() {
             match rx.recv() {
                 Ok(cands) => {
+                    drop(guard);
                     let base = pool_meta.len();
                     pool_flat.extend_from_slice(&cands.pool);
                     pool_meta.extend(cands.ids.iter().map(|&id| (si, id)));
@@ -543,18 +590,23 @@ impl SketchService {
     pub fn flush(&mut self) -> Result<()> {
         self.flush_ingest();
         let mut first_err: Option<String> = None;
+        // Barrier EVERY replica: reads may land on any copy, so "flush
+        // returned Ok" must mean every copy has applied the stream (the
+        // WAL sync itself is a no-op on non-primary replicas).
         for s in &self.shards {
-            let (tx, rx) = channel();
-            if !s.tx.force(ShardCmd::SyncWal(tx)) {
-                continue; // already shut down: nothing left to sync
-            }
-            match rx.recv() {
-                Ok(Ok(())) => {}
-                Ok(Err(e)) => {
-                    first_err.get_or_insert(e);
+            for tx in s.set.txs() {
+                let (rtx, rrx) = channel();
+                if !tx.force(ShardCmd::SyncWal(rtx)) {
+                    continue; // already shut down: nothing left to sync
                 }
-                Err(_) => {
-                    first_err.get_or_insert("shard died during flush".to_string());
+                match rrx.recv() {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => {
+                        first_err.get_or_insert(e);
+                    }
+                    Err(_) => {
+                        first_err.get_or_insert("shard died during flush".to_string());
+                    }
                 }
             }
         }
@@ -575,9 +627,13 @@ impl SketchService {
     /// points); the equality is exact once ingest quiesces.
     pub fn stats(&mut self) -> ServiceStats {
         let (mut stored, mut bytes) = (0usize, 0usize);
+        // Primary replicas only: every copy holds the same points, so
+        // summing across replicas would double-count the partition
+        // (sketch_bytes deliberately reports ONE copy's footprint; the
+        // replica multiplier is visible in `replicas`).
         for s in &self.shards {
             let (tx, rx) = channel();
-            if s.tx.force(ShardCmd::Stats(tx)) {
+            if s.set.primary().force(ShardCmd::Stats(tx)) {
                 if let Ok(st) = rx.recv() {
                     stored += st.stored;
                     bytes += st.sketch_bytes;
@@ -587,13 +643,22 @@ impl SketchService {
         let mut out = self.counters.snapshot();
         out.stored_points = stored;
         out.sketch_bytes = bytes;
+        out.replicas = self.cfg.replicas as u32;
+        out.replica_depths = self
+            .shards
+            .iter()
+            .flat_map(|s| s.set.depths())
+            .map(|d| d as u32)
+            .collect();
         out
     }
 
     /// Commands shed at the QUEUE level, in commands (diagnostics only —
     /// see [`SketchService::stats`] for the point-denominated number).
     pub fn shed_commands(&self) -> u64 {
-        self.shards.iter().map(|s| s.tx.shed_count()).sum()
+        // Sheds are decided by the primary alone (see ReplicaSet), so
+        // its queue counter is the whole story.
+        self.shards.iter().map(|s| s.set.primary().shed_count()).sum()
     }
 
     /// Cut a whole-service checkpoint: flush pending ingest, have every
@@ -608,8 +673,11 @@ impl SketchService {
         self.flush_ingest();
         let mut shard_ckpts = Vec::with_capacity(self.shards.len());
         for (i, s) in self.shards.iter().enumerate() {
+            // The primary owns the WAL, so its snapshot is the one whose
+            // image is consistent with the sealed log — and one image per
+            // shard is all recovery needs to rehydrate any replica count.
             let (tx, rx) = channel();
-            if !s.tx.force(ShardCmd::Snapshot(tx)) {
+            if !s.set.primary().force(ShardCmd::Snapshot(tx)) {
                 bail!("shard {i} mailbox is closed");
             }
             let snap = rx
@@ -695,7 +763,7 @@ impl SketchService {
     /// thread that owns the service.
     pub fn handle(&self, cmd_tx: std::sync::mpsc::Sender<ServiceCmd>) -> ServiceHandle {
         ServiceHandle::new(
-            self.shards.iter().map(|s| s.tx.clone()).collect(),
+            self.shards.iter().map(|s| s.set.clone()).collect(),
             self.cfg.route,
             self.cfg.dim,
             self.cfg.shards,
@@ -793,13 +861,15 @@ impl SketchService {
         }
     }
 
-    /// Graceful shutdown.
+    /// Graceful shutdown (every replica of every shard).
     pub fn shutdown(mut self) {
         for s in &self.shards {
-            let _ = s.tx.force(ShardCmd::Shutdown);
+            for tx in s.set.txs() {
+                let _ = tx.force(ShardCmd::Shutdown);
+            }
         }
         for s in &mut self.shards {
-            if let Some(j) = s.join.take() {
+            for j in s.joins.drain(..) {
                 let _ = j.join();
             }
         }
@@ -960,6 +1030,28 @@ mod tests {
             svc.shed_commands(),
             st.shed
         );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn replicated_service_serves_and_counts_one_copy() {
+        let mut cfg = small_cfg();
+        cfg.replicas = 2;
+        let mut svc = SketchService::start(cfg).unwrap();
+        let mut rng = Rng::new(21);
+        let pts: Vec<Vec<f32>> = (0..100)
+            .map(|_| (0..8).map(|_| rng.gaussian_f32()).collect())
+            .collect();
+        assert_eq!(svc.insert_batch(pts.clone()), 100);
+        svc.flush().unwrap();
+        let ans = svc.query_batch(pts[..10].to_vec()).unwrap();
+        assert!(ans.iter().filter(|a| a.is_some()).count() >= 9);
+        let st = svc.stats();
+        assert_eq!(st.inserts, 100);
+        assert_eq!(st.stored_points, 100, "replicas must not double-count");
+        assert_eq!(st.replicas, 2);
+        assert_eq!(st.replica_depths.len(), 2 * 2, "shards x replicas gauges");
+        assert!(st.replica_depths.iter().all(|&d| d == 0), "idle service");
         svc.shutdown();
     }
 

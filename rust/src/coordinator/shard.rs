@@ -83,6 +83,23 @@ pub enum ShardCmd {
     Shutdown,
 }
 
+impl ShardCmd {
+    /// Duplicate a data-only write command for replica fan-out. Commands
+    /// carrying reply channels (or control commands) have no meaningful
+    /// copy and return `None` — the replica layer handles them per-copy.
+    pub(crate) fn clone_write(&self) -> Option<ShardCmd> {
+        match self {
+            ShardCmd::Insert(x) => Some(ShardCmd::Insert(x.clone())),
+            ShardCmd::InsertBatch(b) => Some(ShardCmd::InsertBatch(b.clone())),
+            ShardCmd::InsertWithSlots(x, s) => {
+                Some(ShardCmd::InsertWithSlots(x.clone(), s.clone()))
+            }
+            ShardCmd::InsertBatchSlots(b) => Some(ShardCmd::InsertBatchSlots(b.clone())),
+            _ => None,
+        }
+    }
+}
+
 /// One shard's serialized state, cut at a quiesced point in its mailbox
 /// order (the snapshot command is processed like any other command, so it
 /// reflects exactly the mutations applied — and logged — before it).

@@ -2,13 +2,15 @@
 //! high-water mark.
 //!
 //! The split of labor with the coordinator: this module turns on-disk
-//! state into validated in-memory sketch states (`load_sann` /
-//! `load_swakde` images per shard, counters, per-shard hwm); the
-//! coordinator (`SketchService::start`) owns the shards and drives
-//! `wal::replay` with each shard's own apply callback, so replayed
-//! records run through exactly the code path that applied them
-//! originally (S-ANN re-insert of retained points, SW-AKDE window tick
-//! for every point, turnstile delete).
+//! state into validated per-shard checkpoint images (raw `save_sann` /
+//! `save_swakde` bytes, counters, per-shard hwm); the coordinator
+//! (`SketchService::start`) decodes each image once PER REPLICA — the
+//! checkpoint stores exactly one image per shard regardless of the
+//! replica count, and rehydration fans it out into `R` bit-identical
+//! copies — and drives `wal::replay` with each replica's own apply
+//! callback, so replayed records run through exactly the code path that
+//! applied them originally (S-ANN re-insert of retained points, SW-AKDE
+//! window tick for every point, turnstile delete).
 
 use std::path::Path;
 
@@ -19,18 +21,34 @@ use crate::sketch::{SAnn, SwAkde};
 
 use super::checkpoint;
 
-/// One shard's recovered (checkpoint-resident) state. `None` sketches
-/// mean "no checkpoint yet — start empty and replay the whole WAL".
+/// One shard's recovered (checkpoint-resident) state: the raw sketch
+/// images, kept serialized so the coordinator can decode one copy per
+/// replica. `None` images mean "no checkpoint yet — start empty and
+/// replay the whole WAL".
 #[derive(Default)]
 pub struct RecoveredShard {
-    pub sann: Option<SAnn>,
-    pub swakde: Option<SwAkde>,
+    /// `(save_sann, save_swakde)` image bytes, covered by the
+    /// checkpoint's whole-file CRC; [`Self::decode_images`] runs the
+    /// sketch-level validation when a replica is built from them.
+    pub images: Option<(Vec<u8>, Vec<u8>)>,
     /// Replay starts after this sequence number.
     pub hwm: u64,
     /// Applied mutation counts at the hwm instant (restored into the
     /// shard so its NEXT checkpoint stays consistent).
     pub applied_inserts: u64,
     pub applied_deletes: u64,
+}
+
+impl RecoveredShard {
+    /// Decode one fresh `(S-ANN, SW-AKDE)` pair from the checkpoint
+    /// images — called once per replica, so every copy rehydrates from
+    /// the same bytes.
+    pub fn decode_images(&self) -> Result<Option<(SAnn, SwAkde)>> {
+        let Some((sann_img, swakde_img)) = &self.images else {
+            return Ok(None);
+        };
+        Ok(Some((load_sann(sann_img)?, load_swakde(swakde_img)?)))
+    }
 }
 
 /// Whole-service recovered state.
@@ -43,10 +61,15 @@ pub struct Recovered {
     pub shards: Vec<RecoveredShard>,
 }
 
-/// Load the newest valid checkpoint under `data_dir` and decode every
-/// shard's sketch images. `dim`/`shards` are the RUNNING config — a
+/// Load the newest valid checkpoint under `data_dir` (whole-file CRC
+/// and shape validated by `checkpoint::load_latest`) and hand the shard
+/// images out serialized; the sketch-level decode — and its hostile-
+/// header validation — happens exactly once per replica in
+/// [`RecoveredShard::decode_images`], so recovery never deserializes an
+/// image it won't use. `dim`/`shards` are the RUNNING config — a
 /// checkpoint written under a different shape is an operator error, not
-/// something to silently reinterpret.
+/// something to silently reinterpret. The replica count is deliberately
+/// NOT part of the on-disk shape: one image per shard rehydrates any R.
 pub fn recover(data_dir: &Path, dim: usize, shards: usize) -> Result<Recovered> {
     std::fs::create_dir_all(data_dir)
         .with_context(|| format!("creating data dir {data_dir:?}"))?;
@@ -73,16 +96,9 @@ pub fn recover(data_dir: &Path, dim: usize, shards: usize) -> Result<Recovered> 
         );
     }
     let mut out = Vec::with_capacity(shards);
-    for (i, sc) in data.shards.iter().enumerate() {
-        let sann = load_sann(&sc.sann).map_err(|e| {
-            e.context(format!("shard {i}: S-ANN image in checkpoint {}", data.epoch))
-        })?;
-        let swakde = load_swakde(&sc.swakde).map_err(|e| {
-            e.context(format!("shard {i}: SW-AKDE image in checkpoint {}", data.epoch))
-        })?;
+    for sc in data.shards {
         out.push(RecoveredShard {
-            sann: Some(sann),
-            swakde: Some(swakde),
+            images: Some((sc.sann, sc.swakde)),
             hwm: sc.hwm,
             applied_inserts: sc.applied_inserts,
             applied_deletes: sc.applied_deletes,

@@ -15,7 +15,7 @@ use anyhow::Result;
 use sublinear_sketch::baselines::{exact_kde_angular, exact_kde_pstable, ExactNn};
 use sublinear_sketch::cli::Args;
 use sublinear_sketch::config::Config;
-use sublinear_sketch::coordinator::{KdeKernel, SketchService};
+use sublinear_sketch::coordinator::{AnnAnswer, KdeKernel, SketchService};
 use sublinear_sketch::data::datasets;
 use sublinear_sketch::lsh::pstable::PStableLsh;
 use sublinear_sketch::lsh::srp::SrpLsh;
@@ -39,13 +39,18 @@ USAGE:
   sketchd serve [--n 20000] [--shards 4] [--batch 64] [--config file.toml]
                 [--use-pjrt]
   sketchd serve --listen HOST:PORT [--dim 32] [--n 100000] [--shards 4]
-                [--eta 0.0] [--config file.toml] [--addr-file PATH]
-                [--use-pjrt] [--data-dir DIR] [--fsync always|off|every:N]
-                [--checkpoint-every N] [--checkpoint-secs T]
+                [--replicas 1] [--eta 0.0] [--config file.toml]
+                [--addr-file PATH] [--use-pjrt] [--data-dir DIR]
+                [--fsync always|off|every:N] [--checkpoint-every N]
+                [--checkpoint-secs T]
       Serve the coordinator over TCP (length-prefixed binary protocol,
       see rust/src/net/frame.rs). --listen 127.0.0.1:0 picks a free
       port; the bound address is printed and, with --addr-file, written
       to PATH for scripts. A client Shutdown frame stops the server.
+      --replicas R (or [service] replicas) keeps R copies of every
+      shard's sketches: writes fan out to all copies, reads go to the
+      least-loaded one — read throughput scales past the single
+      shard-thread ceiling while answers stay bit-identical to R=1.
       With --data-dir the service is DURABLE: every applied insert or
       delete lands in a per-shard CRC32-framed write-ahead log (fsync
       per --fsync, default every:256), checkpoints serialize the whole
@@ -372,6 +377,7 @@ fn cmd_serve_wire(args: &Args) -> Result<()> {
     };
     let mut svc_cfg = config.service(dim, n)?;
     svc_cfg.shards = args.get_usize("shards", svc_cfg.shards)?;
+    svc_cfg.replicas = args.get_usize("replicas", svc_cfg.replicas)?.max(1);
     svc_cfg.use_pjrt = svc_cfg.use_pjrt || args.has("use-pjrt");
     if args.has("eta") {
         svc_cfg.ann.eta = args.get_f64("eta", svc_cfg.ann.eta)?;
@@ -401,8 +407,8 @@ fn cmd_serve_wire(args: &Args) -> Result<()> {
     // Wire ingest hashes shard-side (native batched kernels) — a PJRT
     // executor on the owning thread accelerates the query path only.
     println!(
-        "[serve] listening on {addr} dim={dim} shards={} eta={} pjrt_queries={}",
-        svc_cfg.shards, svc_cfg.ann.eta, svc_cfg.use_pjrt
+        "[serve] listening on {addr} dim={dim} shards={} replicas={} eta={} pjrt_queries={}",
+        svc_cfg.shards, svc_cfg.replicas, svc_cfg.ann.eta, svc_cfg.use_pjrt
     );
     if let Some(dir) = &svc_cfg.data_dir {
         // Recovery already ran inside spawn; report what came back.
@@ -496,12 +502,32 @@ fn run_load(
     Ok(out)
 }
 
+/// Order-independent digest of one ANN answer, folded with wrapping
+/// addition across threads: the same seed against the same service state
+/// always prints the same checksum, no matter how the queries were split
+/// across connections — the CI replica smoke compares it between
+/// `--replicas 1` and `--replicas 2` runs to pin bit-identical answers.
+fn fold_ann_checksum(acc: &mut u64, ans: &Option<AnnAnswer>) {
+    let h = match ans {
+        None => 0x9E37_79B9_7F4A_7C15,
+        Some(a) => {
+            let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+            for v in [a.shard as u64, u64::from(a.id), u64::from(a.dist.to_bits())] {
+                h ^= v;
+                h = h.wrapping_mul(0x100_0000_01b3);
+            }
+            h
+        }
+    };
+    *acc = acc.wrapping_add(h);
+}
+
 /// `client --query-load`: saturate the READ path. One connection seeds
 /// the service with `--n` points, then `--connections` sockets each
 /// issue their share of `--queries` ANN + KDE queries (batch size
 /// `--batch`; the default of 1 drives the server's cross-connection
 /// coalescer) and the per-thread `LatencyRecorder`s merge into one
-/// QPS/p50/p99 report.
+/// QPS/p50/p99 report plus an order-independent answer checksum.
 fn run_query_load(args: &Args, addr: &str) -> Result<()> {
     let n = args.get_usize("n", 10_000)?.max(1);
     let n_queries = args.get_usize("queries", 2_048)?;
@@ -533,41 +559,50 @@ fn run_query_load(args: &Args, addr: &str) -> Result<()> {
             let addr = addr.to_string();
             let pts = std::sync::Arc::clone(&pts);
             let q_per = n_queries / conns + usize::from(t < n_queries % conns);
-            std::thread::spawn(move || -> Result<(usize, usize, LatencyRecorder, LatencyRecorder)> {
-                let mut c = SketchClient::connect(&addr)?;
-                let mut ann_lat = LatencyRecorder::new();
-                let mut kde_lat = LatencyRecorder::new();
-                let (mut answered, mut issued) = (0usize, 0usize);
-                let mut i = t; // staggered walk over the shared point pool
-                while issued < q_per {
-                    let m = batch.min(q_per - issued);
-                    if m == 1 {
-                        let q = &pts[i % pts.len()];
-                        let ans = ann_lat.time(|| c.ann_query_one(q))?;
-                        answered += usize::from(ans.is_some());
-                        kde_lat.time(|| c.kde_query_one(q))?;
-                    } else {
-                        let chunk: Vec<Vec<f32>> =
-                            (0..m).map(|j| pts[(i + j) % pts.len()].clone()).collect();
-                        let ans = ann_lat.time(|| c.ann_query(&chunk))?;
-                        answered += ans.iter().filter(|a| a.is_some()).count();
-                        kde_lat.time(|| c.kde_query(&chunk))?;
+            std::thread::spawn(
+                move || -> Result<(usize, usize, u64, LatencyRecorder, LatencyRecorder)> {
+                    let mut c = SketchClient::connect(&addr)?;
+                    let mut ann_lat = LatencyRecorder::new();
+                    let mut kde_lat = LatencyRecorder::new();
+                    let (mut answered, mut issued) = (0usize, 0usize);
+                    let mut checksum = 0u64;
+                    let mut i = t; // staggered walk over the shared point pool
+                    while issued < q_per {
+                        let m = batch.min(q_per - issued);
+                        if m == 1 {
+                            let q = &pts[i % pts.len()];
+                            let ans = ann_lat.time(|| c.ann_query_one(q))?;
+                            answered += usize::from(ans.is_some());
+                            fold_ann_checksum(&mut checksum, &ans);
+                            kde_lat.time(|| c.kde_query_one(q))?;
+                        } else {
+                            let chunk: Vec<Vec<f32>> =
+                                (0..m).map(|j| pts[(i + j) % pts.len()].clone()).collect();
+                            let ans = ann_lat.time(|| c.ann_query(&chunk))?;
+                            answered += ans.iter().filter(|a| a.is_some()).count();
+                            for a in &ans {
+                                fold_ann_checksum(&mut checksum, a);
+                            }
+                            kde_lat.time(|| c.kde_query(&chunk))?;
+                        }
+                        issued += m;
+                        i = i.wrapping_add(m * 37 + 1);
                     }
-                    issued += m;
-                    i = i.wrapping_add(m * 37 + 1);
-                }
-                Ok((answered, issued, ann_lat, kde_lat))
-            })
+                    Ok((answered, issued, checksum, ann_lat, kde_lat))
+                },
+            )
         })
         .collect();
     let mut ann_lat = LatencyRecorder::new();
     let mut kde_lat = LatencyRecorder::new();
     let (mut answered, mut issued) = (0usize, 0usize);
+    let mut checksum = 0u64;
     for w in workers {
-        let (a, q, al, kl) =
+        let (a, q, sum, al, kl) =
             w.join().map_err(|_| anyhow::anyhow!("query-load thread panicked"))??;
         answered += a;
         issued += q;
+        checksum = checksum.wrapping_add(sum);
         ann_lat.merge(&al);
         kde_lat.merge(&kl);
     }
@@ -576,6 +611,7 @@ fn run_query_load(args: &Args, addr: &str) -> Result<()> {
         "[client] ann: answered {answered}/{issued} · per-call latency {}",
         ann_lat.summary()
     );
+    println!("[client] ann checksum={checksum:016x}");
     println!("[client] kde: per-call latency {}", kde_lat.summary());
     println!(
         "[client] query-load {:.0} q/s aggregate ({:.0} ANN/s + {:.0} KDE/s)",
@@ -593,9 +629,10 @@ fn cmd_client(args: &Args) -> Result<()> {
     // Probe connection: validates the handshake and reports the shape.
     let probe = SketchClient::connect(&addr)?;
     println!(
-        "[client] connected to {addr} dim={} shards={} (protocol v{})",
+        "[client] connected to {addr} dim={} shards={} replicas={} (protocol v{})",
         probe.dim(),
         probe.shards(),
+        probe.replicas(),
         sublinear_sketch::net::PROTOCOL_VERSION
     );
     drop(probe);

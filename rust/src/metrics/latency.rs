@@ -3,37 +3,25 @@
 
 use std::time::{Duration, Instant};
 
-use crate::util::rng::Rng;
-
-/// Reservoir capacity that keeps percentile estimates tight (a 4096-way
-/// uniform sample pins p99 well) while bounding a recorder to ~32KB no
-/// matter how long the load run is.
-const DEFAULT_CAP: usize = 4096;
+use super::tdigest::TDigest;
 
 /// Fixed-capacity latency recorder with percentile reporting.
 ///
-/// Genuinely fixed-capacity: memory is bounded by the reservoir size, so
-/// an arbitrarily long `sketchd client` run records forever without
-/// growing. The first `cap` samples are kept exactly; beyond that,
-/// Vitter's Algorithm R maintains a uniform sample of everything seen.
-/// `count`/`mean_us` stay exact at any length (running total + sum);
-/// percentiles are exact below `cap` and reservoir estimates beyond it.
-#[derive(Clone, Debug)]
+/// Count and mean are EXACT at any length (running total + sum).
+/// Percentiles come from a mergeable t-digest ([`TDigest`]): memory is
+/// bounded (~2δ centroids, δ = 200) no matter how long a `sketchd
+/// client` load run records, accuracy concentrates at the tails (p99),
+/// and — unlike the reservoir this replaced — merging per-connection
+/// recorders is the digest's native operation, so the multi-connection
+/// load generator's merged p99 estimates the union stream
+/// deterministically instead of re-sampling it.
+#[derive(Clone, Debug, Default)]
 pub struct LatencyRecorder {
-    samples_us: Vec<f64>,
-    /// Total samples recorded (exact; `samples_us.len() <= cap`).
+    digest: TDigest,
+    /// Total samples recorded (exact).
     count: u64,
     /// Running sum of everything recorded (exact mean at any length).
     sum_us: f64,
-    cap: usize,
-    /// Deterministic reservoir choices (fixed seed: runs reproduce).
-    rng: Rng,
-}
-
-impl Default for LatencyRecorder {
-    fn default() -> Self {
-        Self::with_capacity(DEFAULT_CAP)
-    }
 }
 
 impl LatencyRecorder {
@@ -41,14 +29,13 @@ impl LatencyRecorder {
         Default::default()
     }
 
-    /// Recorder bounded to at most `cap` retained samples (`cap >= 1`).
-    pub fn with_capacity(cap: usize) -> Self {
+    /// Recorder with an explicit t-digest compression (δ): higher = more
+    /// centroids = tighter percentiles; memory is ~2δ centroids.
+    pub fn with_compression(delta: f64) -> Self {
         LatencyRecorder {
-            samples_us: Vec::new(),
+            digest: TDigest::new(delta),
             count: 0,
             sum_us: 0.0,
-            cap: cap.max(1),
-            rng: Rng::new(0x1A7E_5EED),
         }
     }
 
@@ -56,16 +43,7 @@ impl LatencyRecorder {
         let us = d.as_secs_f64() * 1e6;
         self.count += 1;
         self.sum_us += us;
-        if self.samples_us.len() < self.cap {
-            self.samples_us.push(us);
-        } else {
-            // Algorithm R: keep each of the `count` samples seen so far
-            // in the reservoir with equal probability cap/count.
-            let j = self.rng.below(self.count);
-            if (j as usize) < self.cap {
-                self.samples_us[j as usize] = us;
-            }
-        }
+        self.digest.add(us);
     }
 
     /// Time a closure and record it.
@@ -76,14 +54,15 @@ impl LatencyRecorder {
         out
     }
 
-    /// Total samples recorded (exact, not the retained reservoir size).
+    /// Total samples recorded (exact).
     pub fn count(&self) -> usize {
         self.count as usize
     }
 
-    /// Samples currently retained for percentiles (`<= cap`).
-    pub fn reservoir_len(&self) -> usize {
-        self.samples_us.len()
+    /// Centroids currently retained by the digest (`O(δ)` — the memory
+    /// bound, independent of `count`).
+    pub fn retained(&self) -> usize {
+        self.digest.centroid_count()
     }
 
     pub fn mean_us(&self) -> f64 {
@@ -94,62 +73,39 @@ impl LatencyRecorder {
         }
     }
 
-    pub fn percentile_us(&self, q: f64) -> f64 {
-        crate::util::stats::percentile(&self.samples_us, q)
+    /// Percentile estimate in \[0, 100\] (t-digest; exact-ish tails).
+    pub fn percentile_us(&mut self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.digest.quantile(q / 100.0)
     }
 
-    pub fn p50_us(&self) -> f64 {
+    pub fn p50_us(&mut self) -> f64 {
         self.percentile_us(50.0)
     }
 
-    pub fn p99_us(&self) -> f64 {
+    pub fn p99_us(&mut self) -> f64 {
         self.percentile_us(99.0)
     }
 
     /// Fold another recorder's samples in — the multi-connection load
-    /// generator records per-thread and merges for one percentile report.
-    ///
-    /// Count and mean merge exactly. For percentiles: while both sides
-    /// are below capacity the samples concatenate (still exact);
-    /// otherwise the merged reservoir is rebuilt by sampling each side
-    /// proportionally to its true count, so every recorded measurement
-    /// keeps equal representation and a capped 1M-sample worker doesn't
-    /// get outvoted by an uncapped 1k-sample one.
+    /// generator records per-thread and merges for one percentile
+    /// report. Count and mean merge exactly; the digests merge by
+    /// centroid concatenation + recompression, so every recorded
+    /// measurement keeps exactly its true weight (a capped reservoir
+    /// used to need a weighted resample here).
     pub fn merge(&mut self, other: &LatencyRecorder) {
         if other.count == 0 {
             return;
         }
-        let self_exact = self.count as usize == self.samples_us.len();
-        let other_exact = other.count as usize == other.samples_us.len();
-        if self_exact
-            && other_exact
-            && self.samples_us.len() + other.samples_us.len() <= self.cap
-        {
-            self.samples_us.extend_from_slice(&other.samples_us);
-            self.count += other.count;
-            self.sum_us += other.sum_us;
-            return;
-        }
-        // Refill to FULL capacity (not to the sum of retained lengths):
-        // `record` relies on a full reservoir for its Algorithm-R branch
-        // — a short reservoir with a huge count would retain every
-        // subsequent sample with probability 1 and let the post-merge
-        // tail outvote the stream it summarizes.
-        let k = self.cap;
-        let (na, nb) = (self.count as f64, other.count as f64);
-        let mut merged = Vec::with_capacity(k);
-        for _ in 0..k {
-            let from_self = self.rng.uniform() * (na + nb) < na;
-            let src = if from_self { &self.samples_us } else { &other.samples_us };
-            merged.push(src[self.rng.below(src.len() as u64) as usize]);
-        }
-        self.samples_us = merged;
+        self.digest.merge(&other.digest);
         self.count += other.count;
         self.sum_us += other.sum_us;
     }
 
     /// One-line summary for bench tables.
-    pub fn summary(&self) -> String {
+    pub fn summary(&mut self) -> String {
         format!(
             "n={} mean={:.1}us p50={:.1}us p99={:.1}us",
             self.count(),
@@ -208,6 +164,7 @@ mod tests {
         assert_eq!(r.count(), 3);
         assert!((r.mean_us() - 200.0).abs() < 1.0);
         assert!(r.p50_us() >= 100.0 && r.p50_us() <= 300.0);
+        assert!(r.percentile_us(0.0) >= 99.0 && r.percentile_us(100.0) <= 301.0);
     }
 
     #[test]
@@ -231,27 +188,62 @@ mod tests {
 
     #[test]
     fn capacity_stays_bounded_on_long_runs() {
-        // The old recorder grew one f64 per record — a long load run
-        // leaked linearly. Memory must now stay at the cap while count,
-        // mean, and percentiles keep tracking the full stream.
-        let mut r = LatencyRecorder::with_capacity(256);
+        // Memory must stay O(δ) while count, mean, and percentiles keep
+        // tracking the full stream.
+        let mut r = LatencyRecorder::new();
         for i in 0..100_000u64 {
             // Uniform 0..1000us ramp, repeated: true p50 ~ 500us.
             r.record(Duration::from_micros(i % 1000));
         }
         assert_eq!(r.count(), 100_000);
-        assert_eq!(r.reservoir_len(), 256, "retained samples bounded");
         assert!((r.mean_us() - 499.5).abs() < 1.0, "mean exact: {}", r.mean_us());
         let p50 = r.p50_us();
-        assert!((400.0..600.0).contains(&p50), "reservoir p50={p50}");
+        assert!((480.0..520.0).contains(&p50), "digest p50={p50}");
+        let p99 = r.p99_us();
+        assert!((980.0..1000.1).contains(&p99), "digest p99={p99}");
+        assert!(r.retained() <= 512, "retained {} centroids", r.retained());
     }
 
     #[test]
-    fn merge_weights_capped_recorders_by_true_count() {
-        // a: 10k samples at ~100us (capped); b: 10 samples at 900us.
-        // The merged p50 must stay near 100us — b's handful of samples
-        // must not get reservoir representation beyond its true share.
-        let mut a = LatencyRecorder::with_capacity(128);
+    fn merge_is_equivalent_to_direct_ingest() {
+        // THE property the t-digest buys over the old reservoir: a p99
+        // computed from merged per-thread recorders must match (within
+        // digest tolerance) the p99 of one recorder that saw the whole
+        // stream — count and mean exactly, percentiles tightly.
+        let mut parts: Vec<LatencyRecorder> = (0..4).map(|_| LatencyRecorder::new()).collect();
+        let mut whole = LatencyRecorder::new();
+        for i in 0..80_000u64 {
+            // Bimodal: fast path ~100µs, every 50th call a ~5000µs tail.
+            let us = if i % 50 == 0 { 5_000 + (i % 7) * 10 } else { 100 + (i % 13) };
+            let d = Duration::from_micros(us);
+            parts[(i % 4) as usize].record(d);
+            whole.record(d);
+        }
+        let mut merged = LatencyRecorder::new();
+        for p in &parts {
+            merged.merge(p);
+        }
+        assert_eq!(merged.count(), whole.count(), "count merges exactly");
+        assert!(
+            (merged.mean_us() - whole.mean_us()).abs() < 1e-6,
+            "mean merges exactly"
+        );
+        for q in [50.0, 90.0, 99.0, 99.9] {
+            let (m, w) = (merged.percentile_us(q), whole.percentile_us(q));
+            let rel = (m - w).abs() / w.max(1.0);
+            assert!(rel < 0.05, "q={q}: merged {m} vs direct {w} (rel {rel:.4})");
+        }
+        // The tail mode is 2% of calls, so p99 must land in it for both.
+        assert!(merged.p99_us() > 4_000.0, "merged p99={}", merged.p99_us());
+        assert!(whole.p99_us() > 4_000.0);
+    }
+
+    #[test]
+    fn merge_weights_by_true_count() {
+        // 10k samples at ~100us merged with 10 samples at 900us: the
+        // merged p50 must stay near 100us — the small side keeps exactly
+        // its true share of the mass.
+        let mut a = LatencyRecorder::new();
         for _ in 0..10_000 {
             a.record(Duration::from_micros(100));
         }
@@ -261,7 +253,6 @@ mod tests {
         }
         a.merge(&b);
         assert_eq!(a.count(), 10_010);
-        assert!(a.reservoir_len() <= 128);
         assert!((a.p50_us() - 100.0).abs() < 1.0, "p50={}", a.p50_us());
         let want_mean = (10_000.0 * 100.0 + 10.0 * 900.0) / 10_010.0;
         assert!((a.mean_us() - want_mean).abs() < 1e-6, "mean exact under merge");

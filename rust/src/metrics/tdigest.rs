@@ -1,0 +1,278 @@
+//! Mergeable t-digest (Dunning's merging variant, k₁ scale function):
+//! bounded-memory quantile sketch whose accuracy concentrates at the
+//! tails — exactly where the serving path reports (p99). Replaces the
+//! `LatencyRecorder`'s 4096-sample reservoir: a reservoir's p99 under
+//! merge is a resample (noisy, seed-dependent), while t-digests merge by
+//! concatenating centroids and recompressing, so the multi-connection
+//! load generator's merged p99 tracks the union stream deterministically.
+//!
+//! Memory: at most ~2δ centroids after compression plus a fixed ingest
+//! buffer — ~10 KB at the default δ = 200, independent of stream length.
+//! Fully deterministic: no randomness anywhere, so equal inputs (in any
+//! per-thread split) give equal merged digests up to centroid ordering.
+
+use std::f64::consts::PI;
+
+/// One cluster: running mean and total weight.
+#[derive(Clone, Copy, Debug)]
+struct Centroid {
+    mean: f64,
+    weight: f64,
+}
+
+/// Ingest buffer size: amortizes the sort+merge pass over many `add`s.
+const BUFFER_CAP: usize = 512;
+
+/// Default compression (δ). ~2δ centroids bound the memory; relative
+/// quantile error scales as O(q(1−q)/δ) — tight tails at 200.
+pub const DEFAULT_COMPRESSION: f64 = 200.0;
+
+#[derive(Clone, Debug)]
+pub struct TDigest {
+    compression: f64,
+    /// Compressed clusters, sorted by mean.
+    centroids: Vec<Centroid>,
+    /// Raw points not yet folded in.
+    buffer: Vec<Centroid>,
+    /// Total weight across centroids + buffer.
+    total: f64,
+    min: f64,
+    max: f64,
+}
+
+impl TDigest {
+    pub fn new(compression: f64) -> Self {
+        TDigest {
+            compression: compression.max(20.0),
+            centroids: Vec::new(),
+            buffer: Vec::with_capacity(BUFFER_CAP),
+            total: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Total weight recorded (= number of `add` calls when unweighted).
+    pub fn count(&self) -> f64 {
+        self.total
+    }
+
+    /// Centroids retained after the last compression (diagnostics; the
+    /// memory bound is this plus the ingest buffer).
+    pub fn centroid_count(&self) -> usize {
+        self.centroids.len()
+    }
+
+    pub fn add(&mut self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        self.total += 1.0;
+        self.buffer.push(Centroid { mean: x, weight: 1.0 });
+        if self.buffer.len() >= BUFFER_CAP {
+            self.compress();
+        }
+    }
+
+    /// Fold another digest in: its centroids join this one's buffer as
+    /// weighted points and recompress — the t-digest merge operation.
+    pub fn merge(&mut self, other: &TDigest) {
+        if other.total <= 0.0 {
+            return;
+        }
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        for c in other.centroids.iter().chain(other.buffer.iter()) {
+            self.total += c.weight;
+            self.buffer.push(*c);
+            if self.buffer.len() >= BUFFER_CAP {
+                self.compress();
+            }
+        }
+    }
+
+    /// k₁ scale function: k(q) = δ/(2π)·asin(2q−1). Its steep slope near
+    /// q ∈ {0, 1} forces small clusters at the tails (accurate p99) and
+    /// allows big ones in the middle (small memory).
+    fn k(&self, q: f64) -> f64 {
+        self.compression / (2.0 * PI) * (2.0 * q.clamp(0.0, 1.0) - 1.0).asin()
+    }
+
+    /// Sort centroids + buffer by mean and greedily merge neighbors while
+    /// the merged cluster spans ≤ 1 unit of k-space.
+    fn compress(&mut self) {
+        if self.buffer.is_empty() {
+            return;
+        }
+        let mut all = std::mem::take(&mut self.centroids);
+        all.append(&mut self.buffer);
+        all.sort_by(|a, b| a.mean.partial_cmp(&b.mean).expect("finite means"));
+        let total: f64 = self.total;
+        let mut out: Vec<Centroid> = Vec::new();
+        let mut iter = all.into_iter();
+        let mut acc = iter.next().expect("non-empty");
+        let mut q0 = 0.0; // weight fraction strictly before `acc`
+        for c in iter {
+            let q2 = q0 + (acc.weight + c.weight) / total;
+            if self.k(q2) - self.k(q0) <= 1.0 {
+                let w = acc.weight + c.weight;
+                acc.mean += (c.mean - acc.mean) * (c.weight / w);
+                acc.weight = w;
+            } else {
+                q0 += acc.weight / total;
+                out.push(acc);
+                acc = c;
+            }
+        }
+        out.push(acc);
+        self.centroids = out;
+    }
+
+    /// Estimate the q-quantile (q ∈ \[0, 1\]), interpolating between
+    /// centroid means with the half-weight convention and clamping the
+    /// extremes to the exact observed min/max.
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        self.compress();
+        if self.centroids.is_empty() {
+            return 0.0;
+        }
+        if self.centroids.len() == 1 {
+            return self.centroids[0].mean;
+        }
+        let target = q.clamp(0.0, 1.0) * self.total;
+        let mut cum = 0.0;
+        let mut prev_mid = 0.0;
+        let mut prev_mean = self.min;
+        for c in &self.centroids {
+            let mid = cum + c.weight / 2.0;
+            if target <= mid {
+                let t = if mid > prev_mid {
+                    (target - prev_mid) / (mid - prev_mid)
+                } else {
+                    0.0
+                };
+                return prev_mean + t * (c.mean - prev_mean);
+            }
+            cum += c.weight;
+            prev_mid = mid;
+            prev_mean = c.mean;
+        }
+        let t = if self.total > prev_mid {
+            ((target - prev_mid) / (self.total - prev_mid)).clamp(0.0, 1.0)
+        } else {
+            1.0
+        };
+        prev_mean + t * (self.max - prev_mean)
+    }
+}
+
+impl Default for TDigest {
+    fn default() -> Self {
+        Self::new(DEFAULT_COMPRESSION)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform_digest(n: usize) -> TDigest {
+        let mut d = TDigest::default();
+        for i in 0..n {
+            d.add(i as f64);
+        }
+        d
+    }
+
+    #[test]
+    fn small_streams_are_near_exact() {
+        let mut d = uniform_digest(100); // 0..=99
+        assert_eq!(d.count(), 100.0);
+        assert!((d.quantile(0.5) - 49.5).abs() < 2.0, "p50={}", d.quantile(0.5));
+        assert_eq!(d.quantile(0.0), 0.0, "q=0 pins the observed min");
+        assert_eq!(d.quantile(1.0), 99.0, "q=1 pins the observed max");
+    }
+
+    #[test]
+    fn large_uniform_stream_quantiles_are_tight() {
+        let mut d = uniform_digest(100_000);
+        for (q, want) in [(0.5, 50_000.0), (0.9, 90_000.0), (0.99, 99_000.0)] {
+            let got = d.quantile(q);
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.01, "q={q}: got {got}, want ~{want} (rel {rel:.4})");
+        }
+    }
+
+    #[test]
+    fn memory_stays_bounded() {
+        let mut d = uniform_digest(500_000);
+        d.compress();
+        assert!(
+            d.centroid_count() <= 2 * DEFAULT_COMPRESSION as usize,
+            "{} centroids",
+            d.centroid_count()
+        );
+    }
+
+    #[test]
+    fn merge_equals_direct_ingest_within_tolerance() {
+        // The pinned merge-equivalence property: digest(A) ∪ digest(B)
+        // must estimate the same quantiles as digest(A ++ B).
+        let mut a = TDigest::default();
+        let mut b = TDigest::default();
+        let mut whole = TDigest::default();
+        for i in 0..50_000 {
+            let x = (i % 1_000) as f64; // uniform ramp
+            a.add(x);
+            whole.add(x);
+        }
+        for i in 0..5_000 {
+            let x = 2_000.0 + (i % 500) as f64; // a far tail mode
+            b.add(x);
+            whole.add(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            let (m, w) = (a.quantile(q), whole.quantile(q));
+            let rel = (m - w).abs() / w.abs().max(1.0);
+            assert!(rel < 0.05, "q={q}: merged {m} vs direct {w} (rel {rel:.4})");
+        }
+        // The tail mode is 1/11 of the mass, so p99 must land in it.
+        assert!(a.quantile(0.99) > 1_900.0, "p99={}", a.quantile(0.99));
+    }
+
+    #[test]
+    fn merge_is_weight_faithful() {
+        // 10k samples at 100 merged with 10 samples at 900: the median
+        // must stay at 100 — the small side gets its true share of the
+        // distribution, no more.
+        let mut a = TDigest::default();
+        for _ in 0..10_000 {
+            a.add(100.0);
+        }
+        let mut b = TDigest::default();
+        for _ in 0..10 {
+            b.add(900.0);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 10_010.0);
+        assert!((a.quantile(0.5) - 100.0).abs() < 1.0, "p50={}", a.quantile(0.5));
+    }
+
+    #[test]
+    fn empty_and_degenerate_digests() {
+        let mut d = TDigest::default();
+        assert_eq!(d.quantile(0.5), 0.0, "empty digest reports 0");
+        let mut e = TDigest::default();
+        e.merge(&d);
+        assert_eq!(e.count(), 0.0, "merging empty is a no-op");
+        d.add(42.0);
+        assert_eq!(d.quantile(0.5), 42.0, "single sample answers itself");
+        assert_eq!(d.quantile(0.99), 42.0);
+        d.add(f64::NAN);
+        assert_eq!(d.count(), 1.0, "non-finite samples are dropped");
+    }
+}

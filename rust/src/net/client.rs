@@ -23,6 +23,7 @@ pub struct SketchClient {
     buf: Vec<u8>,
     dim: usize,
     shards: usize,
+    replicas: usize,
 }
 
 impl SketchClient {
@@ -36,14 +37,16 @@ impl SketchClient {
             buf: Vec::new(),
             dim: 0,
             shards: 0,
+            replicas: 1,
         };
         match client.call(&Request::Hello)? {
-            Response::Hello { version, dim, shards } => {
+            Response::Hello { version, dim, shards, replicas } => {
                 if version != PROTOCOL_VERSION {
                     bail!("server speaks protocol {version}, this build {PROTOCOL_VERSION}");
                 }
                 client.dim = dim as usize;
                 client.shards = shards as usize;
+                client.replicas = (replicas as usize).max(1);
             }
             other => bail!("handshake got {other:?}"),
         }
@@ -57,6 +60,11 @@ impl SketchClient {
 
     pub fn shards(&self) -> usize {
         self.shards
+    }
+
+    /// Read replicas per shard on the remote service.
+    pub fn replicas(&self) -> usize {
+        self.replicas
     }
 
     fn call(&mut self, req: &Request) -> Result<Response> {

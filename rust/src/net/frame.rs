@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! frame   := u32 LE payload length | payload
-//! payload := u8 version (=1) | u8 opcode | body
+//! payload := u8 version (=2) | u8 opcode | body
 //! ```
 //!
 //! All integers are little-endian; floats are IEEE-754 bit patterns, so a
@@ -25,8 +25,9 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::{AnnAnswer, ServiceStats};
 
-/// Protocol version (first payload byte of every frame).
-pub const PROTOCOL_VERSION: u8 = 1;
+/// Protocol version (first payload byte of every frame). v2 added the
+/// replica count to `Hello` and per-replica read depths to `Stats`.
+pub const PROTOCOL_VERSION: u8 = 2;
 
 /// Hard cap on one frame's payload (64 MiB).
 pub const MAX_FRAME_BYTES: usize = 1 << 26;
@@ -78,7 +79,7 @@ pub enum Request {
 /// Server → client frames.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Response {
-    Hello { version: u8, dim: u32, shards: u32 },
+    Hello { version: u8, dim: u32, shards: u32, replicas: u32 },
     /// Insert/InsertBatch/Flush/Shutdown: points accepted (0 for the
     /// control frames).
     Ack { accepted: u64 },
@@ -103,10 +104,15 @@ fn put_stats(out: &mut Vec<u8>, st: &ServiceStats) {
     put_u64(out, st.shed);
     put_u64(out, st.stored_points as u64);
     put_u64(out, st.sketch_bytes as u64);
+    put_u32(out, st.replicas);
+    put_u32(out, st.replica_depths.len() as u32);
+    for &d in &st.replica_depths {
+        put_u32(out, d);
+    }
 }
 
 fn read_stats(c: &mut Cursor) -> Result<ServiceStats> {
-    Ok(ServiceStats {
+    let mut st = ServiceStats {
         inserts: c.u64()?,
         deletes: c.u64()?,
         ann_queries: c.u64()?,
@@ -114,7 +120,15 @@ fn read_stats(c: &mut Cursor) -> Result<ServiceStats> {
         shed: c.u64()?,
         stored_points: c.u64()? as usize,
         sketch_bytes: c.u64()? as usize,
-    })
+        replicas: c.u32()?,
+        replica_depths: Vec::new(),
+    };
+    let n = c.count(4)?;
+    st.replica_depths.reserve(n.min(DECODE_PREALLOC_CAP));
+    for _ in 0..n {
+        st.replica_depths.push(c.u32()?);
+    }
+    Ok(st)
 }
 
 // ---------------------------------------------------------------- encode
@@ -219,11 +233,12 @@ impl Request {
 impl Response {
     pub fn encode(&self) -> Vec<u8> {
         match self {
-            Response::Hello { version, dim, shards } => {
+            Response::Hello { version, dim, shards, replicas } => {
                 let mut out = payload(op::R_HELLO);
                 out.push(*version);
                 put_u32(&mut out, *dim);
                 put_u32(&mut out, *shards);
+                put_u32(&mut out, *replicas);
                 out
             }
             Response::Ack { accepted } => {
@@ -295,6 +310,7 @@ impl Response {
                 version: c.u8()?,
                 dim: c.u32()?,
                 shards: c.u32()?,
+                replicas: c.u32()?,
             },
             op::R_ACK => Response::Ack { accepted: c.u64()? },
             op::R_DELETED => Response::Deleted { removed: c.u8()? != 0 },
@@ -511,6 +527,7 @@ mod tests {
                 version: PROTOCOL_VERSION,
                 dim: g.usize_in(1, 1024) as u32,
                 shards: g.usize_in(1, 64) as u32,
+                replicas: g.usize_in(1, 8) as u32,
             },
             1 => Response::Ack { accepted: g.usize_in(0, 1 << 20) as u64 },
             2 => Response::Deleted { removed: g.bool() },
@@ -544,6 +561,10 @@ mod tests {
                 shed: g.usize_in(0, 1 << 20) as u64,
                 stored_points: g.usize_in(0, 1 << 20),
                 sketch_bytes: g.usize_in(0, 1 << 30),
+                replicas: g.usize_in(1, 4) as u32,
+                replica_depths: (0..g.size(0, 16))
+                    .map(|_| g.usize_in(0, 1 << 10) as u32)
+                    .collect(),
             }),
             6 => Response::Checkpointed { points: g.usize_in(0, 1 << 40) as u64 },
             _ => Response::Error("frame \u{1F980} error".to_string()),

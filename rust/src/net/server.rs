@@ -17,10 +17,10 @@
 
 use std::io::{BufReader, BufWriter};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -29,12 +29,104 @@ use crate::coordinator::{AnnAnswer, BatchPolicy, Batcher, ServiceHandle};
 use super::frame::{read_frame, write_frame, Request, Response, PROTOCOL_VERSION};
 
 /// Default coalescing policy for singleton wire queries: a batch flushes
-/// at 64 pending queries, and a straggler whose leader never came back
-/// for it self-flushes after 500µs. Neither bound is a latency floor —
-/// a query with no scatter in flight executes immediately (see
-/// [`QueryCoalescer`]).
+/// at 64 pending queries, and `max_wait` CAPS the straggler self-flush
+/// deadline — the live deadline is load-aware (see [`LoadAwareWait`]),
+/// scaling between 0 when idle and this cap under sustained load.
+/// Neither bound is a latency floor — a query with no scatter in flight
+/// executes immediately (see [`QueryCoalescer`]).
 pub fn default_query_policy() -> BatchPolicy {
     BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(500) }
+}
+
+/// Cadence at which a parked query re-checks its lane (deadline expiry,
+/// idle fallback) instead of trusting a successor wakeup that might
+/// never come. Bounded polling: at most `cap / PARK_POLL` wakeups per
+/// parked query.
+const PARK_POLL: Duration = Duration::from_micros(100);
+
+/// Load-aware coalescing deadline: scales the straggler self-flush wait
+/// between **0 (idle)** and the configured cap (saturated) from two live
+/// signals — the number of scatters currently in flight and an EWMA of
+/// the recent query arrival rate.
+///
+/// Rationale: waiting only pays off if other queries arrive DURING the
+/// wait (they join the next batch). The expected pickup from waiting a
+/// full cap is `rate × cap`; when that is ≥ 1 the wait earns its
+/// latency, when it is ~0 waiting is pure loss. Pileup (several scatters
+/// already in flight) pushes the deadline to the cap directly — batches
+/// should grow when the shard threads are the bottleneck. With nothing
+/// in flight the deadline is 0: a parked query self-flushes immediately
+/// instead of stranding, preserving the zero-added-latency floor for
+/// idle traffic.
+pub struct LoadAwareWait {
+    cap: Duration,
+    in_flight: AtomicUsize,
+    /// EWMA of the arrival rate (arrivals/sec; f64 bits).
+    rate_bits: AtomicU64,
+    /// Nanos since `base` of the most recent arrival.
+    last_arrival_ns: AtomicU64,
+    base: Instant,
+}
+
+impl LoadAwareWait {
+    pub fn new(cap: Duration) -> Self {
+        LoadAwareWait {
+            cap,
+            in_flight: AtomicUsize::new(0),
+            rate_bits: AtomicU64::new(0f64.to_bits()),
+            last_arrival_ns: AtomicU64::new(0),
+            base: Instant::now(),
+        }
+    }
+
+    /// Record one query arrival (call on every admission).
+    pub fn note_arrival(&self) {
+        self.arrival_at(self.base.elapsed().as_nanos() as u64);
+    }
+
+    fn arrival_at(&self, now_ns: u64) {
+        let prev = self.last_arrival_ns.swap(now_ns, Ordering::Relaxed);
+        let dt = now_ns.saturating_sub(prev).max(1);
+        let inst = 1e9 / dt as f64;
+        // EWMA, λ = 1/8: smooth enough to ride out a burst, fast enough
+        // to decay back toward idle within a few arrivals. The racy
+        // read-modify-write is deliberate — this is a heuristic gauge,
+        // not an invariant.
+        let old = f64::from_bits(self.rate_bits.load(Ordering::Relaxed));
+        let new = old + (inst - old) * 0.125;
+        self.rate_bits.store(new.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn scatter_started(&self) {
+        self.in_flight.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn scatter_finished(&self) {
+        self.in_flight.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// True when no scatter is in flight anywhere — a parked query has
+    /// no leader coming back for it.
+    pub fn idle(&self) -> bool {
+        self.in_flight.load(Ordering::Relaxed) == 0
+    }
+
+    /// The deadline THIS moment's load justifies: `cap × factor` with
+    /// `factor = clamp(rate × cap + (in_flight − 1), 0, 1)`, and a hard
+    /// 0 when nothing is in flight.
+    pub fn current(&self) -> Duration {
+        let in_flight = self.in_flight.load(Ordering::Relaxed);
+        if in_flight == 0 {
+            return Duration::ZERO;
+        }
+        let rate = f64::from_bits(self.rate_bits.load(Ordering::Relaxed));
+        let cap_s = self.cap.as_secs_f64();
+        let factor = (rate * cap_s + (in_flight as f64 - 1.0)).clamp(0.0, 1.0);
+        if factor >= 1.0 {
+            return self.cap; // exact at saturation (no float round-trip)
+        }
+        self.cap.mul_f64(factor)
+    }
 }
 
 struct PendingAnn {
@@ -72,7 +164,10 @@ impl<T> Lane<T> {
     /// everything pending (zero added latency — coalescing is never a
     /// delay, only a pickup of what accumulated during a scatter). A
     /// full batch runs regardless (bounded batches even under a pileup).
-    fn admit(&mut self, item: T) -> Admission<T> {
+    /// `wait` is the load-scaled straggler deadline for anything that
+    /// parks behind an in-flight scatter.
+    fn admit(&mut self, item: T, wait: Duration) -> Admission<T> {
+        self.pending.set_max_wait(wait);
         if let Some(full) = self.pending.push(item) {
             return Admission::Run { batch: full, lead: false };
         }
@@ -94,9 +189,12 @@ impl<T> Lane<T> {
 /// its own connection thread. Queries arriving WHILE a scatter runs
 /// park in the lane; the next arrival after the leader finishes picks
 /// them all up, so batch size adapts to scatter duration. A straggler
-/// with no successor self-flushes after `max_wait` — the only case
-/// that ever waits. Every flush takes the whole pending set, so no
-/// query can be stranded.
+/// with no successor self-flushes on a **load-aware deadline**
+/// ([`LoadAwareWait`]): 0 when the plane goes idle (no leader is coming
+/// back — waiting buys nothing), scaling up to `policy.max_wait` under
+/// sustained load where waiting demonstrably grows the next batch.
+/// Every flush takes the whole pending set, so no query can be
+/// stranded.
 ///
 /// Correctness: per-query answers from a coalesced batch are
 /// bit-identical to singleton execution (the shard `query_batch` paths
@@ -106,6 +204,7 @@ impl<T> Lane<T> {
 pub struct QueryCoalescer {
     handle: ServiceHandle,
     policy: BatchPolicy,
+    load: LoadAwareWait,
     ann: Mutex<Lane<PendingAnn>>,
     kde: Mutex<Lane<PendingKde>>,
 }
@@ -115,9 +214,23 @@ impl QueryCoalescer {
         QueryCoalescer {
             handle,
             policy,
+            load: LoadAwareWait::new(policy.max_wait),
             ann: Mutex::new(Lane { pending: Batcher::new(policy), in_flight: false }),
             kde: Mutex::new(Lane { pending: Batcher::new(policy), in_flight: false }),
         }
+    }
+
+    /// Live load signals (observability + tests).
+    pub fn load(&self) -> &LoadAwareWait {
+        &self.load
+    }
+
+    /// Run one batch with the in-flight scatter gauge held — the gauge
+    /// is what scales every parked query's deadline.
+    fn run_tracked<T>(&self, batch: Vec<T>, run: &impl Fn(&Self, Vec<T>)) {
+        self.load.scatter_started();
+        run(self, batch);
+        self.load.scatter_finished();
     }
 
     /// One ANN query, possibly answered as part of a coalesced batch.
@@ -138,31 +251,40 @@ impl QueryCoalescer {
         make: impl FnOnce(Sender<Result<R, String>>) -> T,
         run: impl Fn(&Self, Vec<T>),
     ) -> Result<R, String> {
+        self.load.note_arrival();
         let (tx, rx) = channel();
-        let admission = lane.lock().unwrap().admit(make(tx));
+        let admission = {
+            let mut l = lane.lock().unwrap();
+            // The straggler deadline is pinned at admission from the
+            // CURRENT load — under pileup it stretches toward the cap
+            // (bigger pickups), when traffic thins it collapses to ~0.
+            l.admit(make(tx), self.load.current())
+        };
         if let Admission::Run { batch, lead } = admission {
-            run(self, batch);
+            self.run_tracked(batch, &run);
             if lead {
                 lane.lock().unwrap().in_flight = false;
             }
             // Our reply was sent by the runner; fall through to collect it.
         }
         loop {
-            match rx.recv_timeout(self.policy.max_wait) {
+            match rx.recv_timeout(self.policy.max_wait.min(PARK_POLL)) {
                 Ok(res) => return res,
                 Err(RecvTimeoutError::Timeout) => {
-                    // Parked past the deadline with no successor to lead:
-                    // take whatever accumulated (ours included) ourselves.
+                    // Parked with the deadline expired — or with the
+                    // plane gone idle, where no successor will ever
+                    // lead: take whatever accumulated (ours included)
+                    // ourselves.
                     let due = {
                         let mut l = lane.lock().unwrap();
-                        if l.pending.deadline_due() {
+                        if l.pending.deadline_due() || self.load.idle() {
                             l.pending.flush()
                         } else {
                             Vec::new()
                         }
                     };
                     if !due.is_empty() {
-                        run(self, due);
+                        self.run_tracked(due, &run);
                     }
                 }
                 Err(RecvTimeoutError::Disconnected) => {
@@ -361,6 +483,7 @@ fn dispatch(req: Request, handle: &ServiceHandle, coalescer: &QueryCoalescer) ->
             version: PROTOCOL_VERSION,
             dim: handle.dim() as u32,
             shards: handle.shards() as u32,
+            replicas: handle.replicas() as u32,
         },
         Request::Insert(x) => {
             if let Err(resp) = check_vectors(handle, std::slice::from_ref(&x)) {
@@ -429,5 +552,80 @@ fn dispatch(req: Request, handle: &ServiceHandle, coalescer: &QueryCoalescer) ->
             Err(e) => Response::Error(e.to_string()),
         },
         Request::Shutdown => Response::Ack { accepted: 0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CAP: Duration = Duration::from_micros(500);
+
+    #[test]
+    fn idle_plane_has_zero_deadline() {
+        let w = LoadAwareWait::new(CAP);
+        assert_eq!(w.current(), Duration::ZERO, "no scatter in flight");
+        // Even a hot arrival rate must not create a wait while idle:
+        // the leader path runs immediately, waiting would be pure loss.
+        for i in 1..100u64 {
+            w.arrival_at(i * 1_000); // 1µs apart = 1M arrivals/s
+        }
+        assert_eq!(w.current(), Duration::ZERO);
+        assert!(w.idle());
+    }
+
+    #[test]
+    fn hot_arrivals_with_a_scatter_in_flight_reach_the_cap() {
+        let w = LoadAwareWait::new(CAP);
+        for i in 1..100u64 {
+            w.arrival_at(i * 1_000); // 1M/s: rate × cap = 500 ≫ 1
+        }
+        w.scatter_started();
+        assert_eq!(w.current(), CAP, "saturated load earns the full wait");
+        w.scatter_finished();
+        assert_eq!(w.current(), Duration::ZERO);
+    }
+
+    #[test]
+    fn sparse_arrivals_earn_only_a_sliver_of_the_cap() {
+        let w = LoadAwareWait::new(CAP);
+        for i in 1..100u64 {
+            w.arrival_at(i * 10_000_000); // 10ms apart = 100/s
+        }
+        w.scatter_started();
+        let d = w.current();
+        // rate × cap = 100/s × 500µs = 0.05 → ~25µs: waiting longer
+        // would almost never pick up a second query.
+        assert!(d > Duration::ZERO && d < CAP / 4, "got {d:?}");
+        w.scatter_finished();
+    }
+
+    #[test]
+    fn pileup_alone_forces_the_cap() {
+        let w = LoadAwareWait::new(CAP);
+        w.scatter_started();
+        w.scatter_started(); // 2 in flight, rate ~0
+        assert_eq!(w.current(), CAP, "pileup pressure saturates the factor");
+        w.scatter_finished();
+        w.scatter_finished();
+        assert!(w.idle());
+    }
+
+    #[test]
+    fn rate_ewma_decays_when_traffic_thins() {
+        let w = LoadAwareWait::new(CAP);
+        for i in 1..200u64 {
+            w.arrival_at(i * 1_000); // hot burst
+        }
+        w.scatter_started();
+        assert_eq!(w.current(), CAP);
+        // Traffic thins to one arrival per 100ms; the EWMA must decay
+        // the deadline well below the cap within a handful of arrivals.
+        for i in 1..60u64 {
+            w.arrival_at(200_000 + i * 100_000_000);
+        }
+        let d = w.current();
+        assert!(d < CAP / 4, "decayed deadline, got {d:?}");
+        w.scatter_finished();
     }
 }

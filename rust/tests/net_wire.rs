@@ -154,6 +154,49 @@ fn wire_path_matches_in_process_pjrt() {
 }
 
 #[test]
+fn wire_replicated_service_matches_single_copy() {
+    // A replicated server (R=2) must be indistinguishable over the wire
+    // from an un-replicated in-process service fed the same stream:
+    // identical ANN answers and KDE sums, replica shape in the
+    // handshake, and per-replica depth gauges in Stats.
+    let mut rng = Rng::new(515);
+    let pts = cluster_points(&mut rng, 900, 8);
+    let queries: Vec<Vec<f32>> = pts[..40].to_vec();
+
+    let (local, local_join) = SketchService::spawn(wire_cfg(8, 2_000)).unwrap();
+    for chunk in pts.chunks(100) {
+        assert_eq!(local.insert_batch(chunk.to_vec()), chunk.len());
+    }
+    local.flush().unwrap();
+    let local_ann = local.query_batch(queries.clone()).unwrap();
+    let (local_sums, local_dens) = local.kde_batch(queries.clone()).unwrap();
+    local.shutdown();
+    local_join.join().unwrap();
+
+    let mut cfg = wire_cfg(8, 2_000);
+    cfg.replicas = 2;
+    let mut stack = start_stack(cfg);
+    assert_eq!(stack.client.replicas(), 2, "handshake carries R");
+    for chunk in pts.chunks(100) {
+        stack.client.insert_batch(chunk).unwrap();
+    }
+    stack.client.flush().unwrap();
+    // Several passes so reads hit both copies of each shard.
+    for _ in 0..3 {
+        let wire_ann = stack.client.ann_query(&queries).unwrap();
+        assert_eq!(wire_ann, local_ann, "replicated answers must match R=1");
+        let (wire_sums, wire_dens) = stack.client.kde_query(&queries).unwrap();
+        assert_eq!(wire_sums, local_sums);
+        assert_eq!(wire_dens, local_dens);
+    }
+    let st = stack.client.stats().unwrap();
+    assert_eq!(st.replicas, 2);
+    assert_eq!(st.replica_depths.len(), 3 * 2, "shards x replicas over the wire");
+    assert_eq!(st.stored_points as u64 + st.shed, 900, "single-copy accounting");
+    stack.teardown();
+}
+
+#[test]
 fn wire_shed_accounting_is_point_denominated() {
     let mut cfg = wire_cfg(8, 50_000);
     cfg.shards = 1;

@@ -1,0 +1,242 @@
+//! Shard-level read-replica integration: a service with `R = 2` replicas
+//! per shard must be observably indistinguishable from `R = 1` on the
+//! same stream — bit-identical ANN answers and KDE sums no matter which
+//! copy serves each read — while checkpoint/recovery rehydrates all R
+//! copies from the single per-shard image the durability engine writes.
+
+use std::path::PathBuf;
+
+use sublinear_sketch::coordinator::{ServiceConfig, ServiceHandle, SketchService};
+use sublinear_sketch::util::rng::Rng;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "sketchd_replica_{tag}_{}_{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// η = 0 (store everything), hash routing: the same stream through two
+/// services builds bit-identical state regardless of replica count.
+fn cfg(replicas: usize, data_dir: Option<PathBuf>) -> ServiceConfig {
+    let mut cfg = ServiceConfig::default_for(8, 4_000);
+    cfg.shards = 4;
+    cfg.replicas = replicas;
+    cfg.ann.eta = 0.0;
+    cfg.kde.rows = 8;
+    cfg.kde.window = 400;
+    cfg.data_dir = data_dir;
+    cfg
+}
+
+fn points(n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    let centers: Vec<Vec<f32>> = (0..8)
+        .map(|_| (0..8).map(|_| rng.gaussian_f32() * 2.0).collect())
+        .collect();
+    (0..n)
+        .map(|_| {
+            let c = &centers[rng.below(8) as usize];
+            c.iter().map(|v| v + rng.gaussian_f32() * 0.1).collect()
+        })
+        .collect()
+}
+
+/// Answers (ANN + KDE) from `got` must be bit-identical to `want`'s.
+fn assert_answer_parity(want: &ServiceHandle, got: &ServiceHandle, queries: &[Vec<f32>]) {
+    let want_ann = want.query_batch(queries.to_vec()).unwrap();
+    let got_ann = got.query_batch(queries.to_vec()).unwrap();
+    assert_eq!(got_ann, want_ann, "ANN answers must be bit-identical");
+    assert!(
+        want_ann.iter().filter(|a| a.is_some()).count() >= queries.len() / 2,
+        "sanity: clustered queries must mostly hit"
+    );
+    let (want_sums, want_dens) = want.kde_batch(queries.to_vec()).unwrap();
+    let (got_sums, got_dens) = got.kde_batch(queries.to_vec()).unwrap();
+    assert_eq!(got_sums, want_sums, "KDE sums must be bit-identical");
+    assert_eq!(got_dens, want_dens);
+}
+
+#[test]
+fn two_replicas_answer_bit_identically_to_one() {
+    let pts = points(600, 31);
+    let queries = pts[..48].to_vec();
+
+    let (single, single_join) = SketchService::spawn(cfg(1, None)).unwrap();
+    assert_eq!(single.insert_batch(pts.clone()), 600);
+    single.flush().unwrap();
+
+    let (duo, duo_join) = SketchService::spawn(cfg(2, None)).unwrap();
+    assert_eq!(duo.replicas(), 2);
+    assert_eq!(duo.insert_batch(pts.clone()), 600);
+    duo.flush().unwrap();
+
+    // Repeat the comparison so reads land on BOTH copies of each shard
+    // (the picker round-robins on ties): if any replica diverged from
+    // the single-copy state, some repetition would catch it.
+    for _ in 0..4 {
+        assert_answer_parity(&single, &duo, &queries);
+    }
+
+    // Deletes are writes: they must apply to every replica, and the
+    // deleted point must stop answering from ALL copies.
+    assert!(duo.delete(pts[5].clone()), "stored point deletes");
+    assert!(single.delete(pts[5].clone()));
+    duo.flush().unwrap();
+    single.flush().unwrap();
+    for _ in 0..4 {
+        assert_answer_parity(&single, &duo, &queries);
+    }
+
+    // Accounting is single-copy denominated: replicas never multiply
+    // the public counters.
+    let (st1, st2) = (single.stats().unwrap(), duo.stats().unwrap());
+    assert_eq!(st2.inserts, st1.inserts);
+    assert_eq!(st2.stored_points, st1.stored_points, "no double counting");
+    assert_eq!(st2.deletes, st1.deletes);
+    assert_eq!(st2.replicas, 2);
+    assert_eq!(st2.replica_depths.len(), 4 * 2, "shards × replicas gauges");
+    assert_eq!(st1.replicas, 1);
+    assert_eq!(st1.replica_depths.len(), 4);
+
+    single.shutdown();
+    single_join.join().unwrap();
+    duo.shutdown();
+    duo_join.join().unwrap();
+}
+
+#[test]
+fn concurrent_readers_on_replicas_match_single_copy() {
+    // 8 reader threads against R=2: every answer must equal the R=1
+    // reference, under genuine concurrency (the least-loaded picker is
+    // actually exercised because reads overlap).
+    let pts = points(500, 77);
+    let queries: Vec<Vec<f32>> = pts[..32].to_vec();
+
+    let (single, single_join) = SketchService::spawn(cfg(1, None)).unwrap();
+    single.insert_batch(pts.clone());
+    single.flush().unwrap();
+    let want: Vec<_> = queries
+        .iter()
+        .map(|q| single.query_batch(vec![q.clone()]).unwrap())
+        .collect();
+    single.shutdown();
+    single_join.join().unwrap();
+
+    let (duo, duo_join) = SketchService::spawn(cfg(2, None)).unwrap();
+    duo.insert_batch(pts.clone());
+    duo.flush().unwrap();
+    let workers: Vec<_> = (0..8)
+        .map(|t| {
+            let h = duo.clone();
+            let queries = queries.clone();
+            let want = want.clone();
+            std::thread::spawn(move || {
+                for (qi, q) in queries.iter().enumerate() {
+                    if qi % 8 == t % 8 || (qi + t) % 3 == 0 {
+                        let got = h.query_batch(vec![q.clone()]).unwrap();
+                        assert_eq!(got, want[qi], "query {qi} from thread {t}");
+                    }
+                }
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+    duo.shutdown();
+    duo_join.join().unwrap();
+}
+
+#[test]
+fn kill_and_restore_rehydrates_all_replicas_from_one_image() {
+    let dir = tmp_dir("rehydrate");
+    let pts = points(300, 91);
+    let queries = pts[..32].to_vec();
+
+    // Uninterrupted twin (replicated): the whole stream, one process.
+    let (twin, twin_join) = SketchService::spawn(cfg(2, None)).unwrap();
+    assert_eq!(twin.insert_batch(pts.clone()), 300);
+    twin.flush().unwrap();
+
+    // Durable replicated service: half the stream, a checkpoint (ONE
+    // image per shard), the rest, then a crash without shutdown.
+    let (dur, dur_join) = SketchService::spawn(cfg(2, Some(dir.clone()))).unwrap();
+    assert_eq!(dur.insert_batch(pts[..150].to_vec()), 150);
+    dur.flush().unwrap();
+    assert_eq!(dur.checkpoint().unwrap(), 150);
+    assert_eq!(dur.insert_batch(pts[150..].to_vec()), 150);
+    dur.flush().unwrap();
+    drop(dur);
+    dur_join.join().unwrap();
+
+    // Recover with R=2: checkpoint + WAL replay fan out into both
+    // copies; answers must match the uninterrupted replicated twin from
+    // every replica (repeat to hit both).
+    let (rec, rec_join) = SketchService::spawn(cfg(2, Some(dir.clone()))).unwrap();
+    let st = rec.stats().unwrap();
+    assert_eq!(st.inserts, 300, "150 from checkpoint + 150 replayed");
+    assert_eq!(st.replicas, 2);
+    for _ in 0..4 {
+        assert_answer_parity(&twin, &rec, &queries);
+    }
+    drop(rec);
+    rec_join.join().unwrap();
+
+    // The image count is per SHARD, not per replica: the same data_dir
+    // (written under R=2) must also rehydrate an R=3 service, and it
+    // must still answer identically.
+    let (wide, wide_join) = SketchService::spawn(cfg(3, Some(dir.clone()))).unwrap();
+    assert_eq!(wide.stats().unwrap().replicas, 3);
+    for _ in 0..6 {
+        assert_answer_parity(&twin, &wide, &queries);
+    }
+    drop(wide);
+    wide_join.join().unwrap();
+
+    twin.shutdown();
+    twin_join.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn replicated_service_keeps_checkpointing_after_recovery() {
+    // Recovery → new checkpoint → recovery again, all under R=2: the
+    // primary's WAL hwm and the rehydrated counters must stay coherent
+    // across generations.
+    let dir = tmp_dir("generations");
+    let pts = points(240, 13);
+    let queries = pts[..24].to_vec();
+
+    let (a, a_join) = SketchService::spawn(cfg(2, Some(dir.clone()))).unwrap();
+    assert_eq!(a.insert_batch(pts[..120].to_vec()), 120);
+    a.flush().unwrap();
+    assert_eq!(a.checkpoint().unwrap(), 120);
+    drop(a);
+    a_join.join().unwrap();
+
+    let (b, b_join) = SketchService::spawn(cfg(2, Some(dir.clone()))).unwrap();
+    assert_eq!(b.insert_batch(pts[120..].to_vec()), 120);
+    b.flush().unwrap();
+    assert_eq!(b.checkpoint().unwrap(), 240, "second generation covers all");
+    drop(b);
+    b_join.join().unwrap();
+
+    let (twin, twin_join) = SketchService::spawn(cfg(2, None)).unwrap();
+    assert_eq!(twin.insert_batch(pts.clone()), 240);
+    twin.flush().unwrap();
+    let (c, c_join) = SketchService::spawn(cfg(2, Some(dir.clone()))).unwrap();
+    assert_eq!(c.stats().unwrap().inserts, 240);
+    assert_answer_parity(&twin, &c, &queries);
+    drop(c);
+    c_join.join().unwrap();
+    twin.shutdown();
+    twin_join.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,165 @@
+#!/usr/bin/env python3
+"""CI perf-regression gate over perf_micro's JSON dump.
+
+Compares the ns/op of every tracked op in the committed baseline
+(BENCH_baseline.json) against a fresh run (BENCH_perf_micro.json) and
+fails the job when any op regresses beyond the threshold (default +30%).
+Ratios (`*.speedup_vs_singles`) are informational and never gate.
+
+Skip semantics (exit 0 with a NOTICE, never a silent pass): the gate
+skips when either file is missing, unparsable, schema-incompatible, or
+marked PROJECTED (a hand-written `status` note / `measured: false`) —
+projected numbers are estimates, not measurements, and must not fail
+real runs. Commit a measured baseline to arm the gate.
+
+Self-test: `bench_gate.py --self-test` builds fixtures (a doctored
+baseline that must FAIL the gate, an equal pair that must PASS, and a
+projected baseline that must SKIP) and exits non-zero if any behaves
+wrongly — CI runs it before the real gate so the gate's failure path is
+itself exercised on every build.
+"""
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+EXPECTED_SCHEMA = 1
+EXPECTED_BENCH = "perf_micro"
+EXPECTED_UNIT = "ns_per_op"
+
+PASS, FAIL, SKIP = 0, 1, 0  # skip exits 0, loudly
+
+
+def _notice(msg):
+    print(f"::notice::bench gate: {msg}")
+
+
+def _load(path, role):
+    """Returns (ops_dict, skip_reason). ops_dict is None when skipping."""
+    if not os.path.exists(path):
+        return None, f"{role} {path} is missing"
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return None, f"{role} {path} is unreadable: {e}"
+    if data.get("bench") != EXPECTED_BENCH:
+        return None, f"{role} {path} is not a {EXPECTED_BENCH} dump"
+    if data.get("unit") != EXPECTED_UNIT:
+        return None, f"{role} {path} has unit {data.get('unit')!r}, want {EXPECTED_UNIT!r}"
+    schema = data.get("schema")
+    if schema is not None and schema != EXPECTED_SCHEMA:
+        return None, f"{role} {path} has schema {schema}, this gate speaks {EXPECTED_SCHEMA}"
+    status = str(data.get("status", ""))
+    if "projected" in status.lower():
+        return None, f"{role} {path} is PROJECTED ({status.strip()[:80]}…)"
+    if data.get("measured") is False:
+        return None, f"{role} {path} is marked measured: false"
+    ops = data.get("ops")
+    if not isinstance(ops, dict) or not ops:
+        return None, f"{role} {path} has no ops table"
+    return {k: v for k, v in ops.items() if isinstance(v, (int, float)) and v > 0}, None
+
+
+def gate(baseline_path, current_path, threshold):
+    base, skip = _load(baseline_path, "baseline")
+    if skip:
+        _notice(f"SKIPPED — {skip}")
+        return SKIP
+    cur, skip = _load(current_path, "current run")
+    if skip:
+        _notice(f"SKIPPED — {skip}")
+        return SKIP
+
+    tracked = sorted(set(base) & set(cur))
+    if not tracked:
+        _notice("SKIPPED — baseline and current run share no ops")
+        return SKIP
+    only_base = sorted(set(base) - set(cur))
+    if only_base:
+        _notice(f"ops in baseline but not in this run (renamed/removed?): {', '.join(only_base)}")
+
+    regressions, improved = [], 0
+    for op in tracked:
+        ratio = cur[op] / base[op]
+        if ratio > threshold:
+            regressions.append((op, base[op], cur[op], ratio))
+        elif ratio < 1.0:
+            improved += 1
+
+    print(f"bench gate: {len(tracked)} tracked ops, threshold +{(threshold - 1) * 100:.0f}%")
+    print(f"  improved or flat: {len(tracked) - len(regressions)} ({improved} faster)")
+    if regressions:
+        print(f"  REGRESSED ({len(regressions)}):")
+        for op, b, c, r in sorted(regressions, key=lambda x: -x[3]):
+            print(f"    {op}: {b:.1f} -> {c:.1f} ns/op ({(r - 1) * 100:+.0f}%)")
+        print("bench gate: FAIL (update BENCH_baseline.json only with a justified, "
+              "measured run)")
+        return FAIL
+    print("bench gate: PASS")
+    return PASS
+
+
+def self_test(threshold):
+    """Exercise the gate's pass/fail/skip paths against fixtures."""
+    measured = {
+        "bench": EXPECTED_BENCH, "schema": EXPECTED_SCHEMA, "measured": True,
+        "unit": EXPECTED_UNIT,
+        "ops": {"sann.query": 2000.0, "race.add": 1000.0},
+        "ratios": {"sann.query_batch64.speedup_vs_singles": 3.0},
+    }
+    doctored = dict(measured, ops={"sann.query": 100.0, "race.add": 1000.0})
+    # The projected fixture ALSO carries doctored ops: if the PROJECTED
+    # detection ever breaks, the comparison runs and returns FAIL, which
+    # differs from SKIP's exit code — the self-test case stays meaningful
+    # instead of passing vacuously.
+    projected = dict(doctored, status="projected (no local toolchain)")
+    failures = []
+    with tempfile.TemporaryDirectory() as tmp:
+        def write(name, obj):
+            path = os.path.join(tmp, name)
+            with open(path, "w") as f:
+                json.dump(obj, f)
+            return path
+
+        cases = [
+            ("equal baseline PASSES", write("b1.json", measured),
+             write("c1.json", measured), PASS),
+            ("doctored (tiny) baseline FAILS on the 20x regression",
+             write("b2.json", doctored), write("c2.json", measured), FAIL),
+            ("projected baseline SKIPS", write("b3.json", projected),
+             write("c3.json", measured), SKIP),
+            ("missing current SKIPS", write("b4.json", measured),
+             os.path.join(tmp, "nope.json"), SKIP),
+        ]
+        for desc, b, c, want in cases:
+            got = gate(b, c, threshold)
+            ok = got == want
+            print(f"self-test: {'ok' if ok else 'WRONG'} — {desc}")
+            if not ok:
+                failures.append(desc)
+    if failures:
+        print(f"bench gate self-test: {len(failures)} case(s) misbehaved", file=sys.stderr)
+        return 1
+    print("bench gate self-test: all cases behaved")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--current", default="BENCH_perf_micro.json")
+    ap.add_argument("--threshold", type=float, default=1.30,
+                    help="fail when current > baseline * threshold (default 1.30)")
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the gate's own pass/fail/skip behavior and exit")
+    args = ap.parse_args()
+    if args.self_test:
+        sys.exit(self_test(args.threshold))
+    sys.exit(gate(args.baseline, args.current, args.threshold))
+
+
+if __name__ == "__main__":
+    main()
