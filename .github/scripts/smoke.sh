@@ -8,6 +8,7 @@
 #   smoke.sh qplane      8 concurrent singleton-query connections (coalescer)
 #   smoke.sh replica     --replicas 2 vs --replicas 1: bit-identical answers
 #   smoke.sh durability  checkpoint, kill -9, recover, keep serving
+#   smoke.sh chaos       kill -9 mid-ingest x3 rounds, recover every time
 #
 # Run from the rust/ directory (or set BIN). Fails fast; server logs are
 # dumped on any boot failure.
@@ -117,13 +118,49 @@ smoke_durability() {
   await_clean_shutdown
 }
 
+# Chaos smoke: three rounds of SIGKILL landing mid-ingest (no shutdown,
+# no checkpoint — the WAL tail is all there is), each restart on the same
+# data dir. Every restart must report recovered state, torn tails and
+# all, and the final recovery must carry a full clean client run. The
+# client rounds run with explicit deadlines/retries, so a killed server
+# costs the load generator a timely error, never a hang.
+smoke_chaos() {
+  local data round cpid
+  data=$(mktemp -d)
+  for round in 1 2 3; do
+    serve_bg "chaos${round}" --dim 16 --n 200000 --shards 2 \
+      --data-dir "$data" --fsync every:16
+    if [ "$round" -gt 1 ]; then
+      grep -E 'recovered: inserts=[0-9]+' "$SERVE_LOG" \
+        || { echo "::error::round ${round} booted without recovering"; cat "$SERVE_LOG"; exit 1; }
+    fi
+    "$BIN" client --connect "$ADDR" --n 20000 --queries 32 --batch 32 \
+      --timeout-ms 2000 --retries 1 > "$TMP/client_chaos${round}.log" 2>&1 &
+    cpid=$!
+    sleep 0.4
+    kill -9 "$SERVE_PID"
+    wait "$SERVE_PID" 2>/dev/null || true
+    # The client may (and usually does) die on the cut socket — the point
+    # is that it errors within its deadline instead of hanging the job.
+    wait "$cpid" || true
+  done
+  serve_bg chaos_final --dim 16 --n 200000 --shards 2 --data-dir "$data"
+  grep -E 'recovered: inserts=[1-9][0-9]*' "$SERVE_LOG" \
+    || { echo "::error::final restart recovered nothing"; cat "$SERVE_LOG"; exit 1; }
+  "$BIN" client --connect "$ADDR" --n 1000 --queries 64 --batch 64 \
+    --timeout-ms 5000 --retries 2 --shutdown | tee "$TMP/client_chaos_final.log"
+  grep -E 'ann: answered [1-9][0-9]*/' "$TMP/client_chaos_final.log"
+  await_clean_shutdown
+}
+
 case "${1:-}" in
   wire)       smoke_wire ;;
   qplane)     smoke_qplane ;;
   replica)    smoke_replica ;;
   durability) smoke_durability ;;
+  chaos)      smoke_chaos ;;
   *)
-    echo "usage: smoke.sh wire|qplane|replica|durability" >&2
+    echo "usage: smoke.sh wire|qplane|replica|durability|chaos" >&2
     exit 2
     ;;
 esac

@@ -117,6 +117,10 @@ impl Config {
             Some(v) => crate::durability::FsyncPolicy::parse(v)?,
             None => crate::durability::FsyncPolicy::default(),
         };
+        let on_durability_loss = match self.file.get("service", "on_durability_loss") {
+            Some(v) => crate::coordinator::DurabilityLossPolicy::parse(v)?,
+            None => crate::coordinator::DurabilityLossPolicy::default(),
+        };
         let every_points = self.u64("service", "checkpoint_every_points", 0);
         let every_secs = self.u64("service", "checkpoint_every_secs", 0);
         Ok(ServiceConfig {
@@ -137,6 +141,7 @@ impl Config {
             fsync,
             checkpoint_every_points: (every_points > 0).then_some(every_points),
             checkpoint_every_secs: (every_secs > 0).then_some(every_secs),
+            on_durability_loss,
         })
     }
 }
@@ -211,6 +216,29 @@ use_pjrt = true
         assert_eq!(svc.checkpoint_every_points, Some(5000));
         assert_eq!(svc.checkpoint_every_secs, None);
         let bad = Config::parse("[service]\nfsync = banana\n").unwrap();
+        assert!(bad.service(8, 100).is_err());
+    }
+
+    #[test]
+    fn on_durability_loss_parses_and_defaults() {
+        use crate::coordinator::DurabilityLossPolicy;
+        let c = Config::empty();
+        assert_eq!(
+            c.service(8, 100).unwrap().on_durability_loss,
+            DurabilityLossPolicy::Degrade,
+            "degrade by default"
+        );
+        for (txt, want) in [
+            ("degrade", DurabilityLossPolicy::Degrade),
+            ("read_only", DurabilityLossPolicy::ReadOnly),
+            ("read-only", DurabilityLossPolicy::ReadOnly),
+            ("abort", DurabilityLossPolicy::Abort),
+        ] {
+            let c =
+                Config::parse(&format!("[service]\non_durability_loss = {txt}\n")).unwrap();
+            assert_eq!(c.service(8, 100).unwrap().on_durability_loss, want, "{txt}");
+        }
+        let bad = Config::parse("[service]\non_durability_loss = banana\n").unwrap();
         assert!(bad.service(8, 100).is_err());
     }
 

@@ -104,11 +104,19 @@ impl<T> BoundedSender<T> {
     /// stats, shutdown — these carry reply channels and must not be shed).
     /// Returns false only if the receiver is gone.
     pub fn force(&self, item: T) -> bool {
-        if self.tx.send(item).is_ok() {
-            self.sent.fetch_add(1, Ordering::Relaxed);
-            true
-        } else {
-            false
+        self.force_or_return(item).is_ok()
+    }
+
+    /// Like [`Self::force`], but hands the item back when the receiver is
+    /// gone — so a caller with somewhere else to send it (a read against
+    /// a dead replica retrying a live one) doesn't lose the command.
+    pub fn force_or_return(&self, item: T) -> Result<(), T> {
+        match self.tx.send(item) {
+            Ok(()) => {
+                self.sent.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(e) => Err(e.0),
         }
     }
 

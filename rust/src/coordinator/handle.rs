@@ -39,6 +39,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use super::backpressure::OfferOutcome;
+use super::health::{HealthBoard, ShardHealth};
 use super::protocol::{AnnAnswer, ServiceCounters, ServiceStats};
 use super::query::QueryPlane;
 use super::replica::ReplicaSet;
@@ -125,6 +126,9 @@ pub struct ServiceHandle {
     /// balanced no matter which connection inserts.
     rr_next: Arc<AtomicUsize>,
     counters: Arc<ServiceCounters>,
+    /// Per-shard durability health, read lock-free (no service-thread
+    /// round-trip) for Hello and degraded-mode serving decisions.
+    board: Arc<HealthBoard>,
     cmd_tx: Sender<ServiceCmd>,
     /// Calling-thread native read path (scatter/gather/merge).
     plane: QueryPlane,
@@ -142,6 +146,7 @@ impl Clone for ServiceHandle {
             route: self.route,
             rr_next: Arc::clone(&self.rr_next),
             counters: Arc::clone(&self.counters),
+            board: Arc::clone(&self.board),
             cmd_tx: self.cmd_tx.clone(),
             plane: self.plane.clone(),
             use_pjrt: self.use_pjrt,
@@ -152,12 +157,14 @@ impl Clone for ServiceHandle {
 }
 
 impl ServiceHandle {
+    #[allow(clippy::too_many_arguments)]
     pub(super) fn new(
         sets: Vec<ReplicaSet>,
         route: RoutePolicy,
         dim: usize,
         shards: usize,
         counters: Arc<ServiceCounters>,
+        board: Arc<HealthBoard>,
         cmd_tx: Sender<ServiceCmd>,
         use_pjrt: bool,
     ) -> Self {
@@ -167,6 +174,7 @@ impl ServiceHandle {
             route,
             rr_next: Arc::new(AtomicUsize::new(0)),
             counters,
+            board,
             cmd_tx,
             plane,
             use_pjrt,
@@ -180,6 +188,17 @@ impl ServiceHandle {
         self.dim
     }
 
+    /// Per-shard durability health vector (`ShardHealth as u8` each),
+    /// read lock-free off the shared board.
+    pub fn health_vector(&self) -> Vec<u8> {
+        self.board.vector()
+    }
+
+    /// Worst shard health across the service (what `Hello` summarizes).
+    pub fn health_worst(&self) -> ShardHealth {
+        self.board.worst()
+    }
+
     pub fn shards(&self) -> usize {
         self.shards
     }
@@ -187,6 +206,22 @@ impl ServiceHandle {
     /// Replicas per shard (R) the service was configured with.
     pub fn replicas(&self) -> usize {
         self.sets.first().map_or(1, ReplicaSet::replicas)
+    }
+
+    /// Fault-injection hook: panic one replica thread of one shard via
+    /// the injected-crash command, simulating a replica death for the
+    /// supervisor to detect and heal. Returns false if the mailbox was
+    /// already closed (replica already dead).
+    #[cfg(feature = "fault-injection")]
+    pub fn crash_replica(&self, shard: usize, replica: usize) -> bool {
+        self.sets[shard].crash_replica(replica)
+    }
+
+    /// Cumulative reads served per replica of one shard (diagnostics;
+    /// the fault suite uses it to see reads land on a healed copy).
+    #[cfg(feature = "fault-injection")]
+    pub fn replica_reads(&self, shard: usize) -> Vec<u64> {
+        self.sets[shard].reads_served()
     }
 
     fn route(&self, x: &[f32]) -> usize {
@@ -407,6 +442,7 @@ mod tests {
             4,
             shards,
             counters,
+            Arc::new(super::super::health::HealthBoard::new(shards)),
             cmd_tx,
             false,
         )

@@ -1,0 +1,222 @@
+//! Per-shard durability health: the state machine that replaces the old
+//! silent `wal_failed` flag. A shard starts `Healthy`; the first WAL or
+//! checkpoint failure moves it to `DurabilityDegraded` (still serving,
+//! loudly undurable) or — under the `read_only` policy — straight to
+//! `ReadOnly` (writes refused, reads keep serving). Health only ever
+//! escalates; the way back to `Healthy` is a restart that recovers from
+//! disk.
+//!
+//! The [`HealthBoard`] is the lock-free publication side: one atomic cell
+//! per shard, written by the shard thread that owns the failure and read
+//! by stats/Hello/checkpoint paths on other threads without a mailbox
+//! round-trip. Replicas of one shard share the shard's cell — only the
+//! primary owns the WAL, so only the primary publishes.
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+
+use anyhow::{bail, Result};
+
+/// One shard's durability state, ordered by severity. The `u8` values
+/// are the wire encoding (protocol v3 Stats carries one per shard).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum ShardHealth {
+    /// WAL attached (or durability not configured) and appending cleanly.
+    #[default]
+    Healthy = 0,
+    /// A WAL/checkpoint failure was observed: the shard still applies
+    /// writes but they are NOT durable, and its snapshots are refused.
+    DurabilityDegraded = 1,
+    /// Writes are refused (dropped and counted); reads keep serving.
+    ReadOnly = 2,
+}
+
+impl ShardHealth {
+    pub fn from_u8(v: u8) -> ShardHealth {
+        match v {
+            2 => ShardHealth::ReadOnly,
+            1 => ShardHealth::DurabilityDegraded,
+            _ => ShardHealth::Healthy,
+        }
+    }
+
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+}
+
+impl std::fmt::Display for ShardHealth {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardHealth::Healthy => write!(f, "healthy"),
+            ShardHealth::DurabilityDegraded => write!(f, "durability-degraded"),
+            ShardHealth::ReadOnly => write!(f, "read-only"),
+        }
+    }
+}
+
+/// What a shard does when its durability fails mid-stream
+/// (`[service] on_durability_loss`, `--on-durability-loss`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DurabilityLossPolicy {
+    /// Keep serving reads AND writes, loudly undurable (the pre-health
+    /// behavior, minus the silence).
+    #[default]
+    Degrade,
+    /// Refuse further writes on the failed shard; reads keep serving.
+    ReadOnly,
+    /// Panic the shard thread: the operator asked for fail-stop.
+    Abort,
+}
+
+impl DurabilityLossPolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.trim() {
+            "degrade" => Ok(DurabilityLossPolicy::Degrade),
+            "read_only" | "read-only" => Ok(DurabilityLossPolicy::ReadOnly),
+            "abort" => Ok(DurabilityLossPolicy::Abort),
+            other => bail!("on_durability_loss must be degrade|read_only|abort, got {other:?}"),
+        }
+    }
+}
+
+impl std::fmt::Display for DurabilityLossPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DurabilityLossPolicy::Degrade => write!(f, "degrade"),
+            DurabilityLossPolicy::ReadOnly => write!(f, "read_only"),
+            DurabilityLossPolicy::Abort => write!(f, "abort"),
+        }
+    }
+}
+
+/// Lock-free per-shard health vector plus failure counters, shared as an
+/// `Arc` between the shard primaries (writers) and every stats/serving
+/// path (readers).
+#[derive(Debug)]
+pub struct HealthBoard {
+    cells: Vec<AtomicU8>,
+    wal_errors: AtomicU64,
+    refused_writes: AtomicU64,
+}
+
+impl HealthBoard {
+    pub fn new(shards: usize) -> HealthBoard {
+        HealthBoard {
+            cells: (0..shards.max(1)).map(|_| AtomicU8::new(0)).collect(),
+            wal_errors: AtomicU64::new(0),
+            refused_writes: AtomicU64::new(0),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn get(&self, shard: usize) -> ShardHealth {
+        ShardHealth::from_u8(self.cells[shard].load(Ordering::Acquire))
+    }
+
+    /// Move `shard` to `to` if that is strictly worse than its current
+    /// state (health never improves in place). Returns true when the
+    /// transition happened — callers log exactly on that edge.
+    pub fn escalate(&self, shard: usize, to: ShardHealth) -> bool {
+        self.cells[shard].fetch_max(to.as_u8(), Ordering::AcqRel) < to.as_u8()
+    }
+
+    /// Count one WAL/checkpoint durability failure.
+    pub fn record_wal_error(&self) {
+        self.wal_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn wal_errors(&self) -> u64 {
+        self.wal_errors.load(Ordering::Relaxed)
+    }
+
+    /// Count writes dropped by a `ReadOnly` shard (point-denominated).
+    pub fn record_refused_writes(&self, points: u64) {
+        self.refused_writes.fetch_add(points, Ordering::Relaxed);
+    }
+
+    pub fn refused_writes(&self) -> u64 {
+        self.refused_writes.load(Ordering::Relaxed)
+    }
+
+    /// Wire-shaped snapshot: one `ShardHealth as u8` per shard.
+    pub fn vector(&self) -> Vec<u8> {
+        self.cells.iter().map(|c| c.load(Ordering::Acquire)).collect()
+    }
+
+    /// Worst health across all shards (what `Hello` summarizes).
+    pub fn worst(&self) -> ShardHealth {
+        self.cells
+            .iter()
+            .map(|c| ShardHealth::from_u8(c.load(Ordering::Acquire)))
+            .max()
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn health_orders_by_severity_and_roundtrips() {
+        assert!(ShardHealth::Healthy < ShardHealth::DurabilityDegraded);
+        assert!(ShardHealth::DurabilityDegraded < ShardHealth::ReadOnly);
+        for h in [
+            ShardHealth::Healthy,
+            ShardHealth::DurabilityDegraded,
+            ShardHealth::ReadOnly,
+        ] {
+            assert_eq!(ShardHealth::from_u8(h.as_u8()), h);
+        }
+        assert_eq!(ShardHealth::from_u8(250), ShardHealth::Healthy, "unknown maps to default");
+    }
+
+    #[test]
+    fn board_escalates_monotonically() {
+        let b = HealthBoard::new(3);
+        assert_eq!(b.worst(), ShardHealth::Healthy);
+        assert!(b.escalate(1, ShardHealth::DurabilityDegraded), "first transition fires");
+        assert!(
+            !b.escalate(1, ShardHealth::DurabilityDegraded),
+            "repeat is not a transition (log-once)"
+        );
+        assert!(b.escalate(1, ShardHealth::ReadOnly));
+        assert!(!b.escalate(1, ShardHealth::DurabilityDegraded), "never downgrades");
+        assert_eq!(b.get(1), ShardHealth::ReadOnly);
+        assert_eq!(b.vector(), vec![0, 2, 0]);
+        assert_eq!(b.worst(), ShardHealth::ReadOnly);
+    }
+
+    #[test]
+    fn policy_parses_and_displays() {
+        assert_eq!(
+            DurabilityLossPolicy::parse("degrade").unwrap(),
+            DurabilityLossPolicy::Degrade
+        );
+        assert_eq!(
+            DurabilityLossPolicy::parse("read_only").unwrap(),
+            DurabilityLossPolicy::ReadOnly
+        );
+        assert_eq!(
+            DurabilityLossPolicy::parse("read-only").unwrap(),
+            DurabilityLossPolicy::ReadOnly
+        );
+        assert_eq!(DurabilityLossPolicy::parse("abort").unwrap(), DurabilityLossPolicy::Abort);
+        assert!(DurabilityLossPolicy::parse("banana").is_err());
+        assert_eq!(DurabilityLossPolicy::ReadOnly.to_string(), "read_only");
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let b = HealthBoard::new(1);
+        b.record_wal_error();
+        b.record_wal_error();
+        b.record_refused_writes(64);
+        assert_eq!(b.wal_errors(), 2);
+        assert_eq!(b.refused_writes(), 64);
+    }
+}

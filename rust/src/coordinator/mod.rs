@@ -6,6 +6,7 @@
 pub mod backpressure;
 pub mod batcher;
 pub mod handle;
+pub mod health;
 pub mod protocol;
 pub mod query;
 pub mod replica;
@@ -21,6 +22,7 @@ pub(crate) const NATIVE_BATCH_ROWS: usize = 64;
 pub use backpressure::{bounded, BoundedSender, OfferOutcome, Overload};
 pub use batcher::{BatchPolicy, Batcher};
 pub use handle::{ServiceCmd, ServiceHandle};
+pub use health::{DurabilityLossPolicy, HealthBoard, ShardHealth};
 pub use protocol::{AnnAnswer, ServiceCounters, ServiceStats};
 pub use query::QueryPlane;
 pub use replica::{ReadGuard, ReplicaSet};

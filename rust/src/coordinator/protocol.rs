@@ -60,6 +60,15 @@ pub struct ServiceStats {
     /// (`[shard * replicas + r]`) — the gauge the least-loaded picker
     /// steers by.
     pub replica_depths: Vec<u32>,
+    /// Per-shard durability health (`ShardHealth as u8`: 0 healthy,
+    /// 1 durability-degraded, 2 read-only). Empty only in partial
+    /// snapshots a service hasn't filled in yet. Protocol v3.
+    pub health: Vec<u8>,
+    /// WAL/checkpoint I/O failures observed since startup.
+    pub wal_errors: u64,
+    /// Points refused by `ReadOnly` shards (also counted in `shed`, so
+    /// point accounting keeps reconciling; this is the breakdown).
+    pub refused_writes: u64,
 }
 
 /// Live service counters, shared between the owning [`SketchService`] and
@@ -121,6 +130,9 @@ impl ServiceCounters {
             sketch_bytes: 0,
             replicas: 0,
             replica_depths: Vec::new(),
+            health: Vec::new(),
+            wal_errors: 0,
+            refused_writes: 0,
         }
     }
 }

@@ -42,9 +42,10 @@
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::channel;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 
 use super::backpressure::{BoundedSender, OfferOutcome};
+use super::health::{HealthBoard, ShardHealth};
 use super::shard::ShardCmd;
 
 /// Decrements its replica's in-flight read gauge on drop. Hold it until
@@ -60,8 +61,14 @@ impl Drop for ReadGuard {
 }
 
 /// Cloneable front over one shard's replica mailboxes.
+///
+/// Each mailbox sits in a shared swappable slot: the supervisor heals a
+/// dead replica by installing a fresh sender into the SAME slot every
+/// clone of this set reads through (`Arc<RwLock<_>>`), so query planes
+/// and handles cloned before the crash route to the healed copy without
+/// being rebuilt.
 pub struct ReplicaSet {
-    txs: Vec<BoundedSender<ShardCmd>>,
+    slots: Vec<Arc<RwLock<BoundedSender<ShardCmd>>>>,
     /// In-flight reads per replica (gauge; see [`ReadGuard`]).
     depth: Vec<Arc<AtomicUsize>>,
     /// Cumulative reads routed per replica (diagnostics + picker tests).
@@ -70,16 +77,22 @@ pub struct ReplicaSet {
     rr: Arc<AtomicUsize>,
     /// Serializes write fan-out so every replica applies the same order.
     write_order: Arc<Mutex<()>>,
+    /// `(shard index, shared board)`: writes are refused at THIS
+    /// admission point — not inside the shard threads — when the shard
+    /// is `ReadOnly`, so all R copies see identical command streams and
+    /// stay bit-identical even while refusing.
+    health: Option<(usize, Arc<HealthBoard>)>,
 }
 
 impl Clone for ReplicaSet {
     fn clone(&self) -> Self {
         ReplicaSet {
-            txs: self.txs.clone(),
+            slots: self.slots.clone(),
             depth: self.depth.iter().map(Arc::clone).collect(),
             reads: self.reads.iter().map(Arc::clone).collect(),
             rr: Arc::clone(&self.rr),
             write_order: Arc::clone(&self.write_order),
+            health: self.health.clone(),
         }
     }
 }
@@ -91,28 +104,75 @@ impl ReplicaSet {
         assert!(!txs.is_empty(), "a shard needs at least one replica");
         let n = txs.len();
         ReplicaSet {
-            txs,
+            slots: txs.into_iter().map(|tx| Arc::new(RwLock::new(tx))).collect(),
             depth: (0..n).map(|_| Arc::new(AtomicUsize::new(0))).collect(),
             reads: (0..n).map(|_| Arc::new(AtomicU64::new(0))).collect(),
             rr: Arc::new(AtomicUsize::new(0)),
             write_order: Arc::new(Mutex::new(())),
+            health: None,
         }
+    }
+
+    /// Wire this set to the service's shared health board (startup only,
+    /// before the set is cloned into planes/handles): `shard` is this
+    /// set's index into the board.
+    pub fn set_health(&mut self, shard: usize, board: Arc<HealthBoard>) {
+        self.health = Some((shard, board));
+    }
+
+    /// True when the shard is refusing writes (`ReadOnly` health).
+    fn read_only(&self) -> bool {
+        self.health
+            .as_ref()
+            .is_some_and(|(s, b)| b.get(*s) == ShardHealth::ReadOnly)
     }
 
     /// Number of replicas (R) in this set.
     pub fn replicas(&self) -> usize {
-        self.txs.len()
+        self.slots.len()
     }
 
     /// The primary replica's mailbox: control ops that must run exactly
     /// once per shard (stats, WAL sync ordering, snapshots) target this.
-    pub fn primary(&self) -> &BoundedSender<ShardCmd> {
-        &self.txs[0]
+    /// Cloned out of its slot so the caller never holds the slot lock
+    /// across a blocking send.
+    pub fn primary(&self) -> BoundedSender<ShardCmd> {
+        self.slots[0].read().unwrap().clone()
     }
 
-    /// Every replica's mailbox (barriers and shutdown fan out to all).
-    pub fn txs(&self) -> &[BoundedSender<ShardCmd>] {
-        &self.txs
+    /// Every replica's mailbox (barriers and shutdown fan out to all),
+    /// cloned out of their slots.
+    pub fn txs(&self) -> Vec<BoundedSender<ShardCmd>> {
+        self.slots.iter().map(|s| s.read().unwrap().clone()).collect()
+    }
+
+    /// Swap replica `r`'s mailbox for a freshly healed copy's and reset
+    /// its read gauge (in-flight reads against the dead copy already
+    /// released their guards when their `force` failed). Every clone of
+    /// this set routes through the shared slot, so the healed replica
+    /// serves planes and handles built before the crash.
+    pub fn install(&self, r: usize, tx: BoundedSender<ShardCmd>) {
+        *self.slots[r].write().unwrap() = tx;
+        self.depth[r].store(0, Ordering::Relaxed);
+    }
+
+    /// Run `f` with write fan-out blocked. Replica healing wraps its
+    /// whole clone-cut → rehydrate → [`Self::install`] sequence in this,
+    /// so no write can land between the image and the installed mailbox
+    /// — the one interleaving that would diverge the healed copy.
+    pub fn with_writes_blocked<T>(&self, f: impl FnOnce() -> T) -> T {
+        let _order = self.write_order.lock().unwrap();
+        f()
+    }
+
+    /// Fault-injection hook: deliver the injected-crash command straight
+    /// into replica `r`'s mailbox (forced past the overload policy), as
+    /// if its thread had died in the field. Returns false if the mailbox
+    /// is already closed. Test-only by construction — the command it
+    /// ships exists only under this feature.
+    #[cfg(feature = "fault-injection")]
+    pub fn crash_replica(&self, r: usize) -> bool {
+        self.slots[r].read().unwrap().force(ShardCmd::Crash)
     }
 
     /// Current in-flight read depth per replica.
@@ -130,7 +190,7 @@ impl ReplicaSet {
     /// so equal-depth replicas share reads evenly and a backed-up one is
     /// skipped entirely.
     fn pick(&self) -> usize {
-        let n = self.txs.len();
+        let n = self.slots.len();
         if n == 1 {
             return 0;
         }
@@ -149,20 +209,33 @@ impl ReplicaSet {
     }
 
     /// Route one read command (it carries its own reply channel) to the
-    /// least-loaded replica. Returns `None` if that replica's mailbox is
-    /// closed — the caller treats the shard as down. Hold the guard until
-    /// the reply arrives: it is the load signal the picker steers by.
+    /// least-loaded replica; a dead replica (crashed, awaiting heal)
+    /// fails over to the next live copy, so reads keep serving through
+    /// the detection-to-heal window. Returns `None` only when EVERY
+    /// replica's mailbox is closed — the caller treats the shard as
+    /// down. Hold the guard until the reply arrives: it is the load
+    /// signal the picker steers by.
     pub fn read(&self, cmd: ShardCmd) -> Option<ReadGuard> {
-        let i = self.pick();
-        let depth = Arc::clone(&self.depth[i]);
-        depth.fetch_add(1, Ordering::Relaxed);
-        if self.txs[i].force(cmd) {
-            self.reads[i].fetch_add(1, Ordering::Relaxed);
-            Some(ReadGuard { depth })
-        } else {
-            depth.fetch_sub(1, Ordering::Relaxed);
-            None
+        let n = self.slots.len();
+        let first = self.pick();
+        let mut cmd = cmd;
+        for k in 0..n {
+            let i = (first + k) % n;
+            let depth = Arc::clone(&self.depth[i]);
+            depth.fetch_add(1, Ordering::Relaxed);
+            let sent = self.slots[i].read().unwrap().force_or_return(cmd);
+            match sent {
+                Ok(()) => {
+                    self.reads[i].fetch_add(1, Ordering::Relaxed);
+                    return Some(ReadGuard { depth });
+                }
+                Err(back) => {
+                    depth.fetch_sub(1, Ordering::Relaxed);
+                    cmd = back;
+                }
+            }
         }
+        None
     }
 
     /// Offer one write under the shard's overload policy, fanned out to
@@ -172,23 +245,37 @@ impl ReplicaSet {
     /// this trade-off and for why the fan-out is serialized), so the
     /// copies cannot diverge by shedding differently.
     pub fn offer_write(&self, cmd: ShardCmd) -> OfferOutcome {
-        if self.txs.len() == 1 {
-            return self.txs[0].offer_outcome(cmd);
+        if self.read_only() {
+            // Refused at the admission door, BEFORE any mailbox: every
+            // replica sees the identical (truncated) command stream, so
+            // the copies stay bit-identical while the shard refuses.
+            // Reported as `Shed` so point accounting keeps reconciling
+            // (inserts == stored + shed); the refused breakdown is on
+            // the board.
+            if let Some((_, b)) = &self.health {
+                b.record_refused_writes(cmd.write_points());
+            }
+            return OfferOutcome::Shed;
+        }
+        if self.slots.len() == 1 {
+            let primary = self.primary();
+            return primary.offer_outcome(cmd);
         }
         let _order = self.write_order.lock().unwrap();
-        let copies: Vec<ShardCmd> = (1..self.txs.len())
+        let copies: Vec<ShardCmd> = (1..self.slots.len())
             .map(|_| {
                 cmd.clone_write()
                     .expect("replica fan-out requires a data-only write command")
             })
             .collect();
-        match self.txs[0].offer_outcome(cmd) {
+        match self.primary().offer_outcome(cmd) {
             OfferOutcome::Sent => {
-                for (tx, c) in self.txs[1..].iter().zip(copies) {
-                    // A dead secondary mid-shutdown is not recoverable
-                    // here; reads against it will error at their own
-                    // call sites.
-                    let _ = tx.force(c);
+                for (slot, c) in self.slots[1..].iter().zip(copies) {
+                    // A dead secondary (crashed, awaiting heal or
+                    // mid-shutdown) simply misses the write: the healer
+                    // rebuilds it from the primary's live state, which
+                    // includes this command.
+                    let _ = slot.read().unwrap().force(c);
                 }
                 OfferOutcome::Sent
             }
@@ -205,16 +292,25 @@ impl ReplicaSet {
     /// awaited so a returned delete is visible from every live copy, but
     /// a dead secondary (shutdown race — reads against it already error)
     /// cannot retract an applied delete.
+    ///
+    /// A `ReadOnly` shard refuses the delete (a delete is a write):
+    /// `None`, counted on the board — nothing was applied or logged.
     pub fn delete(&self, x: Vec<f32>) -> Option<bool> {
-        let order = (self.txs.len() > 1).then(|| self.write_order.lock().unwrap());
-        let (ptx, prx) = channel();
-        if !self.txs[0].force(ShardCmd::Delete(x.clone(), ptx)) {
+        if self.read_only() {
+            if let Some((_, b)) = &self.health {
+                b.record_refused_writes(1);
+            }
             return None;
         }
-        let mut secondary_acks = Vec::with_capacity(self.txs.len().saturating_sub(1));
-        for tx in &self.txs[1..] {
+        let order = (self.slots.len() > 1).then(|| self.write_order.lock().unwrap());
+        let (ptx, prx) = channel();
+        if !self.primary().force(ShardCmd::Delete(x.clone(), ptx)) {
+            return None;
+        }
+        let mut secondary_acks = Vec::with_capacity(self.slots.len().saturating_sub(1));
+        for slot in &self.slots[1..] {
             let (rtx, rrx) = channel();
-            if tx.force(ShardCmd::Delete(x.clone(), rtx)) {
+            if slot.read().unwrap().force(ShardCmd::Delete(x.clone(), rtx)) {
                 secondary_acks.push(rrx);
             }
         }
@@ -287,6 +383,71 @@ mod tests {
     }
 
     #[test]
+    fn reads_fail_over_past_a_dead_replica() {
+        // Replica 1's thread is gone; every read must land on the live
+        // copy instead of erroring for the callers the picker routed at
+        // the corpse.
+        let (tx0, rx0) = bounded::<ShardCmd>(16, Overload::Block);
+        let (tx1, rx1) = bounded::<ShardCmd>(16, Overload::Block);
+        drop(rx1);
+        let set = ReplicaSet::new(vec![tx0, tx1]);
+        for _ in 0..4 {
+            drop(ann_read(&set).expect("a live replica must answer"));
+        }
+        assert_eq!(set.reads_served(), vec![4, 0], "all reads failed over");
+        assert_eq!(set.depths(), vec![0, 0], "failed attempts release gauges");
+        drop(rx0);
+    }
+
+    #[test]
+    fn install_swaps_the_slot_for_every_clone() {
+        let (tx0, rx0) = bounded::<ShardCmd>(16, Overload::Block);
+        let (tx1, rx1) = bounded::<ShardCmd>(16, Overload::Block);
+        drop(rx1); // replica 1 "crashed"
+        let set = ReplicaSet::new(vec![tx0, tx1]);
+        let clone_made_before_heal = set.clone();
+        let (fresh_tx, fresh_rx) = bounded::<ShardCmd>(16, Overload::Block);
+        set.install(1, fresh_tx);
+        // Writes fan out to the healed mailbox through the OLD clone.
+        assert_eq!(
+            clone_made_before_heal.offer_write(ShardCmd::Insert(vec![1.0])),
+            OfferOutcome::Sent
+        );
+        match fresh_rx.try_recv().unwrap() {
+            ShardCmd::Insert(x) => assert_eq!(x, vec![1.0]),
+            other => panic!("expected Insert, got {}", cmd_name(&other)),
+        }
+        drop(rx0);
+    }
+
+    #[test]
+    fn read_only_board_refuses_writes_and_deletes() {
+        use super::super::health::{HealthBoard, ShardHealth};
+        let (mut set, rxs) = set_of(&[(16, Overload::Block), (16, Overload::Block)]);
+        let board = Arc::new(HealthBoard::new(1));
+        set.set_health(0, Arc::clone(&board));
+        assert_eq!(
+            set.offer_write(ShardCmd::Insert(vec![1.0])),
+            OfferOutcome::Sent,
+            "healthy shard accepts"
+        );
+        board.escalate(0, ShardHealth::ReadOnly);
+        assert_eq!(
+            set.offer_write(ShardCmd::InsertBatch(vec![vec![2.0], vec![3.0]])),
+            OfferOutcome::Shed,
+            "read-only shard refuses at the door"
+        );
+        assert_eq!(set.delete(vec![1.0]), None, "a delete is a write");
+        assert_eq!(board.refused_writes(), 3, "2 batch points + 1 delete");
+        // Reads are untouched; neither mailbox saw the refused commands.
+        let drained: Vec<usize> = rxs
+            .iter()
+            .map(|rx| std::iter::from_fn(|| rx.try_recv().ok()).count())
+            .collect();
+        assert_eq!(drained, vec![1, 1], "only the healthy-era insert landed");
+    }
+
+    #[test]
     fn writes_fan_out_to_every_replica() {
         let (set, rxs) = set_of(&[(16, Overload::Block), (16, Overload::Block)]);
         assert_eq!(
@@ -323,6 +484,8 @@ mod tests {
             ShardCmd::Stats(_) => "Stats",
             ShardCmd::SyncWal(_) => "SyncWal",
             ShardCmd::Snapshot(_) => "Snapshot",
+            ShardCmd::CloneState(_) => "CloneState",
+            ShardCmd::Crash => "Crash",
             ShardCmd::Shutdown => "Shutdown",
         }
     }

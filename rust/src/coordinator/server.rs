@@ -25,6 +25,7 @@ use crate::sketch::ann::SAnnConfig;
 
 use super::backpressure::{bounded, OfferOutcome, Overload};
 use super::handle::{ServiceCmd, ServiceHandle};
+use super::health::{DurabilityLossPolicy, HealthBoard};
 use super::protocol::{AnnAnswer, ServiceCounters, ServiceStats};
 use super::query::QueryPlane;
 use super::replica::ReplicaSet;
@@ -64,6 +65,10 @@ pub struct ServiceConfig {
     /// Background checkpoint trigger: cut one after this many seconds,
     /// if any new points arrived (needs `data_dir`).
     pub checkpoint_every_secs: Option<u64>,
+    /// What a shard does when its WAL/checkpoint I/O fails mid-stream:
+    /// keep serving undurably (`Degrade`, loud), refuse further writes
+    /// (`ReadOnly`), or panic the shard thread (`Abort`).
+    pub on_durability_loss: DurabilityLossPolicy,
 }
 
 impl ServiceConfig {
@@ -101,6 +106,7 @@ impl ServiceConfig {
             fsync: FsyncPolicy::default(),
             checkpoint_every_points: None,
             checkpoint_every_secs: None,
+            on_durability_loss: DurabilityLossPolicy::default(),
         }
     }
 }
@@ -145,6 +151,9 @@ pub struct SketchService {
     inserts_at_ckpt: u64,
     /// When the last checkpoint was cut (time-based trigger).
     last_ckpt_time: Instant,
+    /// Per-shard durability health, written by shard primaries and read
+    /// by stats/Hello/admission paths (see [`HealthBoard`]).
+    board: Arc<HealthBoard>,
 }
 
 /// Rows per batched-ingest flush (the hash artifacts' batch dimension).
@@ -171,6 +180,7 @@ impl SketchService {
             None => None,
         };
         let counters = Arc::new(ServiceCounters::default());
+        let board = Arc::new(HealthBoard::new(cfg.shards));
         let (mut replayed_inserts, mut replayed_deletes) = (0u64, 0u64);
         let mut shards = Vec::with_capacity(cfg.shards);
         for i in 0..cfg.shards {
@@ -246,6 +256,10 @@ impl SketchService {
                 // The WAL logs once per SHARD: only the primary appends.
                 members[0].attach_wal(writer);
             }
+            // Only the primary owns durability, so only it publishes
+            // health — but every shard gets wired so a policy applies
+            // even to non-durable configurations' future failure modes.
+            members[0].set_health_reporting(Arc::clone(&board), cfg.on_durability_loss);
             let hash_params = members[0].ann_hash_params();
             let kde_params = members[0].kde_hash_params();
             let mut txs = Vec::with_capacity(cfg.replicas);
@@ -263,12 +277,9 @@ impl SketchService {
                 txs.push(tx);
                 joins.push(join);
             }
-            shards.push(ShardHandle {
-                set: ReplicaSet::new(txs),
-                joins,
-                hash_params,
-                kde_params,
-            });
+            let mut set = ReplicaSet::new(txs);
+            set.set_health(i, Arc::clone(&board));
+            shards.push(ShardHandle { set, joins, hash_params, kde_params });
         }
         let ckpt_epoch = recovered.as_ref().map_or(0, |r| r.epoch);
         if let Some(rec) = &recovered {
@@ -299,6 +310,7 @@ impl SketchService {
             ckpt_epoch,
             inserts_at_ckpt,
             last_ckpt_time: Instant::now(),
+            board,
         })
     }
 
@@ -650,6 +662,9 @@ impl SketchService {
             .flat_map(|s| s.set.depths())
             .map(|d| d as u32)
             .collect();
+        out.health = self.board.vector();
+        out.wal_errors = self.board.wal_errors();
+        out.refused_writes = self.board.refused_writes();
         out
     }
 
@@ -755,6 +770,77 @@ impl SketchService {
         }
     }
 
+    /// Detect dead SECONDARY replicas (`JoinHandle::is_finished`) and
+    /// heal each one from the primary's live state. The primary is never
+    /// auto-restarted: it owns the WAL, so its death (e.g. the `abort`
+    /// durability policy doing its job) is fail-stop by design — reads
+    /// fail over to the surviving copies and writes start failing loudly.
+    fn supervise_replicas(&mut self) {
+        for i in 0..self.shards.len() {
+            for r in 1..self.cfg.replicas {
+                let dead = self.shards[i]
+                    .joins
+                    .get(r)
+                    .is_some_and(|j| j.is_finished());
+                if dead {
+                    if let Err(e) = self.heal_replica(i, r) {
+                        eprintln!(
+                            "[service] shard {i} replica {r} died and could not be healed \
+                             (will retry): {e}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Rebuild one dead replica from the primary's live state: cut a
+    /// `CloneState` image (sketches + applied counts, WAL untouched),
+    /// rehydrate a fresh `Shard` built with the replica's original
+    /// constructor arguments, and install its mailbox into the shared
+    /// slot. The whole sequence runs with write fan-out blocked, so the
+    /// image and the installed mailbox see no interleaved write — the
+    /// healed copy is bit-identical to the primary by the replica-state
+    /// determinism argument (state is a function of the mutation
+    /// sequence, which the image captures in full).
+    fn heal_replica(&mut self, i: usize, r: usize) -> Result<()> {
+        use crate::sketch::snapshot::{load_sann, load_swakde};
+        let per_shard_n = self.cfg.ann.n_max.div_ceil(self.cfg.shards).max(2);
+        let ann_cfg = SAnnConfig { n_max: per_shard_n, ..self.cfg.ann.clone() };
+        let kde_cfg = KdeShardConfig {
+            window: (self.cfg.kde.window / self.cfg.shards as u64).max(1),
+            ..self.cfg.kde.clone()
+        };
+        let set = self.shards[i].set.clone();
+        let (queue_cap, overload, seed) = (self.cfg.queue_cap, self.cfg.overload, self.cfg.seed);
+        let new_join = set.with_writes_blocked(|| -> Result<JoinHandle<()>> {
+            let (ctx, crx) = channel();
+            if !set.primary().force(ShardCmd::CloneState(ctx)) {
+                bail!("shard {i} primary is down; nothing to heal from");
+            }
+            let img = crx
+                .recv()
+                .map_err(|_| anyhow!("shard {i} primary died during the clone cut"))?;
+            let mut shard = Shard::new(i, ann_cfg, &kde_cfg, seed ^ 0xD1E5 ^ i as u64);
+            shard.restore_state(
+                load_sann(&img.sann)?,
+                load_swakde(&img.swakde)?,
+                img.applied_inserts,
+                img.applied_deletes,
+            )?;
+            let (tx, rx) = bounded(queue_cap, overload);
+            let join = std::thread::Builder::new()
+                .name(format!("shard-{i}r{r}"))
+                .spawn(move || shard.run(rx))?;
+            set.install(r, tx);
+            Ok(join)
+        })?;
+        let old = std::mem::replace(&mut self.shards[i].joins[r], new_join);
+        let _ = old.join(); // reap the panicked thread (Err is expected)
+        eprintln!("[service] healed shard {i} replica {r} from the primary's live state");
+        Ok(())
+    }
+
     /// Cloneable ingest/query front for connection threads. Inserts,
     /// deletes, and native ANN/KDE reads run straight against the shard
     /// mailboxes from the calling thread; only what needs the service's
@@ -768,6 +854,7 @@ impl SketchService {
             self.cfg.dim,
             self.cfg.shards,
             Arc::clone(&self.counters),
+            Arc::clone(&self.board),
             cmd_tx,
             self.cfg.use_pjrt,
         )
@@ -790,8 +877,14 @@ impl SketchService {
         let background = self.cfg.data_dir.is_some()
             && (self.cfg.checkpoint_every_points.is_some()
                 || self.cfg.checkpoint_every_secs.is_some());
+        // Replica supervision shares the same periodic tick: with R > 1
+        // the loop must wake even when no command (and no checkpoint
+        // trigger) is flowing, or a crashed replica would sit dead until
+        // the next control-plane call.
+        let supervise = self.cfg.replicas > 1;
+        let tick = background || supervise;
         loop {
-            let cmd = if background {
+            let cmd = if tick {
                 match rx.recv_timeout(Duration::from_millis(200)) {
                     Ok(cmd) => Some(cmd),
                     Err(RecvTimeoutError::Timeout) => None,
@@ -819,6 +912,9 @@ impl SketchService {
                     }
                     ServiceCmd::Shutdown => break,
                 }
+            }
+            if supervise {
+                self.supervise_replicas();
             }
             if background {
                 self.maybe_background_checkpoint();

@@ -10,6 +10,7 @@
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
+use crate::coordinator::health::{DurabilityLossPolicy, HealthBoard, ShardHealth};
 use crate::durability::wal::{WalOp, WalRecord, WalWriter};
 use crate::lsh::concat::BoundedHasher;
 use crate::lsh::pstable::PStableLsh;
@@ -80,6 +81,16 @@ pub enum ShardCmd {
     /// high-water mark covers exactly the sealed segments and the
     /// checkpoint coordinator can GC them after a successful write.
     Snapshot(Sender<Result<ShardSnapshot, String>>),
+    /// Serialize the LIVE sketch state for replica healing. Unlike
+    /// `Snapshot` this never touches the WAL and works in any health
+    /// state: a healed copy must converge to the primary's current
+    /// state, durable or not, so it cannot be gated on durability.
+    CloneState(Sender<CloneImage>),
+    /// Test-only: panic the shard thread, simulating a replica crash so
+    /// the supervisor's detect-and-heal path can be exercised without
+    /// reaching into thread internals.
+    #[cfg(any(test, feature = "fault-injection"))]
+    Crash,
     Shutdown,
 }
 
@@ -98,6 +109,17 @@ impl ShardCmd {
             _ => None,
         }
     }
+
+    /// Point count carried by a data write command (0 for reads/control)
+    /// — refused-write accounting is point-denominated like `shed`.
+    pub(crate) fn write_points(&self) -> u64 {
+        match self {
+            ShardCmd::Insert(_) | ShardCmd::InsertWithSlots(..) => 1,
+            ShardCmd::InsertBatch(b) => b.len() as u64,
+            ShardCmd::InsertBatchSlots(b) => b.len() as u64,
+            _ => 0,
+        }
+    }
 }
 
 /// One shard's serialized state, cut at a quiesced point in its mailbox
@@ -112,6 +134,20 @@ pub struct ShardSnapshot {
     /// the checkpoint is cut.
     pub applied_inserts: u64,
     /// Successful deletes applied at the same instant as `hwm`.
+    pub applied_deletes: u64,
+    /// `sketch::snapshot::save_sann` image.
+    pub sann: Vec<u8>,
+    /// `sketch::snapshot::save_swakde` image.
+    pub swakde: Vec<u8>,
+}
+
+/// A live-state image for replica healing: the same serialized sketches
+/// a [`ShardSnapshot`] carries, minus any WAL bookkeeping — rehydrating
+/// from it reproduces the source replica's state bit-identically (the
+/// sampler Rng and window clock are functions of the mutation sequence,
+/// which the image captures in full).
+pub struct CloneImage {
+    pub applied_inserts: u64,
     pub applied_deletes: u64,
     /// `sketch::snapshot::save_sann` image.
     pub sann: Vec<u8>,
@@ -150,10 +186,18 @@ pub struct Shard {
     stats: ShardStats,
     /// Write-ahead log of applied mutations (None = durability off).
     wal: Option<WalWriter>,
-    /// A WAL I/O error leaves a hole in the log: further appends are
-    /// pointless and a checkpoint cut past the hole would be wrong, so
-    /// both are refused once this is set.
-    wal_failed: bool,
+    /// This shard's durability state. A WAL I/O error leaves a hole in
+    /// the log: further appends are pointless and a checkpoint cut past
+    /// the hole would lie, so the first failure escalates this (per the
+    /// policy) and [`Self::snapshot`] refuses while it is not `Healthy`.
+    health: ShardHealth,
+    /// What a durability failure does to this shard (degrade / refuse
+    /// writes / abort).
+    policy: DurabilityLossPolicy,
+    /// Shared publication side of `health` (primaries only): stats,
+    /// Hello, and the write-admission path read it without a mailbox
+    /// round-trip.
+    board: Option<Arc<HealthBoard>>,
 }
 
 impl Shard {
@@ -186,7 +230,9 @@ impl Shard {
             kde_family,
             stats: ShardStats::default(),
             wal: None,
-            wal_failed: false,
+            health: ShardHealth::Healthy,
+            policy: DurabilityLossPolicy::default(),
+            board: None,
         }
     }
 
@@ -194,7 +240,49 @@ impl Shard {
     /// the shard moves to its thread).
     pub fn attach_wal(&mut self, wal: WalWriter) {
         self.wal = Some(wal);
-        self.wal_failed = false;
+        self.health = ShardHealth::Healthy;
+    }
+
+    /// Wire this shard (primaries only) to the service's shared health
+    /// board and durability-loss policy (startup only, before the shard
+    /// moves to its thread).
+    pub fn set_health_reporting(&mut self, board: Arc<HealthBoard>, policy: DurabilityLossPolicy) {
+        self.board = Some(board);
+        self.policy = policy;
+    }
+
+    /// This shard's current durability health.
+    pub fn health(&self) -> ShardHealth {
+        self.health
+    }
+
+    /// React to a durability failure: drop the (now holed) WAL, count
+    /// the error, escalate health per the configured policy, and log
+    /// exactly once per transition. Under `abort` the shard thread
+    /// panics — the operator asked for fail-stop over silent data loss.
+    fn durability_lost(&mut self, what: &str, err: &str) {
+        self.wal = None;
+        if let Some(b) = &self.board {
+            b.record_wal_error();
+        }
+        let to = match self.policy {
+            DurabilityLossPolicy::Abort => panic!(
+                "[shard-{}] {what} failed with on_durability_loss=abort: {err}",
+                self.index
+            ),
+            DurabilityLossPolicy::Degrade => ShardHealth::DurabilityDegraded,
+            DurabilityLossPolicy::ReadOnly => ShardHealth::ReadOnly,
+        };
+        if self.health < to {
+            self.health = to;
+            eprintln!(
+                "[shard-{}] {what} failed; shard is now {} (policy {}): {err}",
+                self.index, self.health, self.policy
+            );
+        }
+        if let Some(b) = &self.board {
+            b.escalate(self.index, to);
+        }
     }
 
     /// Replace the sketch state with checkpoint-restored images, and the
@@ -270,35 +358,35 @@ impl Shard {
     }
 
     /// Append one applied mutation to the WAL (no-op with durability off;
-    /// an I/O failure disables the log — see [`Self::snapshot`]).
+    /// an I/O failure escalates health per the policy — see
+    /// [`Self::durability_lost`] and [`Self::snapshot`]).
     fn log_wal(&mut self, op: WalOp, x: &[f32]) {
-        if let Some(w) = self.wal.as_mut() {
-            if let Err(e) = w.append(op, x) {
-                eprintln!(
-                    "[shard-{}] WAL append failed, durability disabled: {e}",
-                    self.index
-                );
-                self.wal = None;
-                self.wal_failed = true;
-            }
-        }
+        let err = match self.wal.as_mut() {
+            Some(w) => match w.append(op, x) {
+                Ok(_) => return,
+                Err(e) => e.to_string(),
+            },
+            None => return,
+        };
+        self.durability_lost("WAL append", &err);
     }
 
     /// Seal the WAL and serialize the sketch state for a checkpoint.
     fn snapshot(&mut self) -> Result<ShardSnapshot, String> {
-        if self.wal_failed {
+        if self.health != ShardHealth::Healthy {
             return Err(format!(
-                "shard {}: WAL disabled after a write failure; refusing to checkpoint past a hole",
-                self.index
+                "shard {}: {} after a durability failure; refusing to checkpoint past a hole",
+                self.index, self.health
             ));
         }
-        if let Some(w) = self.wal.as_mut() {
-            if let Err(e) = w.sync() {
-                return Err(format!("shard {}: syncing WAL: {e}", self.index));
-            }
-            if let Err(e) = w.rotate() {
-                return Err(format!("shard {}: sealing WAL segment: {e}", self.index));
-            }
+        let seal_err = match self.wal.as_mut() {
+            Some(w) => w.sync().and_then(|()| w.rotate()).err(),
+            None => None,
+        };
+        if let Some(e) = seal_err {
+            let msg = format!("shard {}: sealing WAL for checkpoint: {e}", self.index);
+            self.durability_lost("WAL seal", &e.to_string());
+            return Err(msg);
         }
         Ok(ShardSnapshot {
             hwm: self.wal.as_ref().map_or(0, |w| w.last_seq()),
@@ -460,21 +548,16 @@ impl Shard {
                 // durable, so "flush returned Ok" means "applied AND on
                 // disk" under every fsync policy — and a failure reaches
                 // the caller instead of being swallowed.
-                let res = if self.wal_failed {
+                let res = if self.health != ShardHealth::Healthy {
                     Err(format!(
-                        "shard {}: durability disabled after an earlier WAL failure",
-                        self.index
+                        "shard {}: {} after an earlier durability failure",
+                        self.index, self.health
                     ))
                 } else {
                     match self.wal.as_mut().map(|w| w.sync()) {
                         None | Some(Ok(())) => Ok(()),
                         Some(Err(e)) => {
-                            eprintln!(
-                                "[shard-{}] WAL sync failed, durability disabled: {e}",
-                                self.index
-                            );
-                            self.wal = None;
-                            self.wal_failed = true;
+                            self.durability_lost("WAL sync", &e.to_string());
                             Err(format!("shard {}: WAL sync failed: {e}", self.index))
                         }
                     }
@@ -484,6 +567,16 @@ impl Shard {
             ShardCmd::Snapshot(reply) => {
                 let _ = reply.send(self.snapshot());
             }
+            ShardCmd::CloneState(reply) => {
+                let _ = reply.send(CloneImage {
+                    applied_inserts: self.stats.inserted,
+                    applied_deletes: self.stats.deleted,
+                    sann: snapshot::save_sann(&self.ann),
+                    swakde: snapshot::save_swakde(&self.kde),
+                });
+            }
+            #[cfg(any(test, feature = "fault-injection"))]
+            ShardCmd::Crash => panic!("[shard-{}] injected crash (test command)", self.index),
             ShardCmd::Shutdown => return false,
         }
         true

@@ -27,12 +27,11 @@
 //! ignores, never a half-valid checkpoint. The newest previous checkpoint
 //! is kept as a safety margin; anything older is pruned.
 
-use std::io::Write;
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use super::{crc32, sync_dir};
+use super::{crc32, io, sync_dir};
 use crate::util::bytes::{put_u32, put_u64, Reader};
 
 const MAGIC: &[u8; 8] = b"SKCKPT01";
@@ -175,12 +174,14 @@ pub fn write_atomic(data_dir: &Path, data: &CheckpointData) -> Result<PathBuf> {
     let tmp_path = final_path.with_extension("ckpt.tmp");
     let bytes = data.encode();
     {
-        let mut f = std::fs::File::create(&tmp_path)
+        let mut opts = std::fs::OpenOptions::new();
+        opts.write(true).create(true).truncate(true);
+        let mut f = io::open(&opts, &tmp_path)
             .with_context(|| format!("creating {tmp_path:?}"))?;
-        f.write_all(&bytes)?;
-        f.sync_data()?;
+        io::write_all(&mut f, &bytes)?;
+        io::sync_data(&f)?;
     }
-    std::fs::rename(&tmp_path, &final_path)
+    io::rename(&tmp_path, &final_path)
         .with_context(|| format!("renaming checkpoint into place at {final_path:?}"))?;
     sync_dir(data_dir)?;
     // Prune: keep this one and the newest predecessor (safety margin —

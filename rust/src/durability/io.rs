@@ -1,0 +1,316 @@
+//! The durability engine's fault seam: every fallible filesystem call the
+//! WAL and checkpoint writers make (open, write, fsync, rename, directory
+//! sync) goes through the free functions here. In a normal build they are
+//! direct passthroughs with no state and no branching beyond what the call
+//! itself does. Under the `fault-injection` cargo feature a process-global
+//! [`Io`] implementation can be installed, and the bundled deterministic
+//! [`FaultInjector`] scripts disk failures for tests and the CI chaos job:
+//! fail the Nth fsync, return ENOSPC once a byte budget is spent (with a
+//! seeded torn prefix at the boundary), fail the Nth rename or open.
+//!
+//! The seam deliberately sits ABOVE the `BufWriter` (appends are
+//! intercepted as whole framed records, not as whatever flush pattern the
+//! buffer produces), so an injected tear lands on a record boundary the
+//! way a real torn append does after a crash — the same torn-tail shape
+//! `wal::replay` already knows how to stop at.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Error, ErrorKind, Result, Write};
+use std::path::Path;
+
+/// What an intercepted write should do.
+pub enum WriteDecision {
+    /// Perform the write normally.
+    Pass,
+    /// Write only the first `n` bytes, then fail: a torn write.
+    TornAfter(usize),
+    /// Write nothing and fail with this error.
+    Fail(Error),
+}
+
+/// Interception points, one per fallible filesystem call in the
+/// durability engine. Every hook defaults to "no fault" so an injector
+/// only overrides the calls it wants to break.
+pub trait Io: Send {
+    /// Before `OpenOptions::open` / `File::create` (WAL segment create,
+    /// rotation, checkpoint temp file).
+    fn before_open(&mut self, path: &Path) -> Result<()> {
+        let _ = path;
+        Ok(())
+    }
+    /// Before a content write of `len` bytes (WAL record frame,
+    /// checkpoint image).
+    fn before_write(&mut self, len: usize) -> WriteDecision {
+        let _ = len;
+        WriteDecision::Pass
+    }
+    /// Before a file or directory fsync.
+    fn before_sync(&mut self) -> Result<()> {
+        Ok(())
+    }
+    /// Before the checkpoint's atomic temp → final rename.
+    fn before_rename(&mut self, from: &Path, to: &Path) -> Result<()> {
+        let _ = (from, to);
+        Ok(())
+    }
+}
+
+#[cfg(feature = "fault-injection")]
+static INJECTOR: std::sync::Mutex<Option<Box<dyn Io>>> = std::sync::Mutex::new(None);
+
+/// Install a process-global injector; returns the one it replaced.
+/// Faults are process-global state — tests that install one must
+/// serialize on their own lock and [`clear`] when done.
+#[cfg(feature = "fault-injection")]
+pub fn install(io: Box<dyn Io>) -> Option<Box<dyn Io>> {
+    INJECTOR.lock().unwrap().replace(io)
+}
+
+/// Remove the installed injector (subsequent calls pass through).
+#[cfg(feature = "fault-injection")]
+pub fn clear() -> Option<Box<dyn Io>> {
+    INJECTOR.lock().unwrap().take()
+}
+
+#[cfg(feature = "fault-injection")]
+fn with_injector<T>(default: T, f: impl FnOnce(&mut dyn Io) -> T) -> T {
+    match INJECTOR.lock().unwrap().as_mut() {
+        Some(io) => f(io.as_mut()),
+        None => default,
+    }
+}
+
+/// Seam over `opts.open(path)`.
+pub fn open(opts: &OpenOptions, path: &Path) -> Result<File> {
+    #[cfg(feature = "fault-injection")]
+    with_injector(Ok(()), |io| io.before_open(path))?;
+    opts.open(path)
+}
+
+/// Seam over `writer.write_all(bytes)`. Generic over the writer so the
+/// WAL's `BufWriter` path stays buffered and allocation-free.
+pub fn write_all<W: Write>(w: &mut W, bytes: &[u8]) -> Result<()> {
+    #[cfg(feature = "fault-injection")]
+    match with_injector(WriteDecision::Pass, |io| io.before_write(bytes.len())) {
+        WriteDecision::Pass => {}
+        WriteDecision::TornAfter(n) => {
+            w.write_all(&bytes[..n.min(bytes.len())])?;
+            return Err(Error::new(ErrorKind::WriteZero, "injected torn write"));
+        }
+        WriteDecision::Fail(e) => return Err(e),
+    }
+    w.write_all(bytes)
+}
+
+/// Seam over `file.sync_data()`.
+pub fn sync_data(f: &File) -> Result<()> {
+    #[cfg(feature = "fault-injection")]
+    with_injector(Ok(()), |io| io.before_sync())?;
+    f.sync_data()
+}
+
+/// Seam over `file.sync_all()` (directory fsyncs).
+pub fn sync_all(f: &File) -> Result<()> {
+    #[cfg(feature = "fault-injection")]
+    with_injector(Ok(()), |io| io.before_sync())?;
+    f.sync_all()
+}
+
+/// Seam over `std::fs::rename`.
+pub fn rename(from: &Path, to: &Path) -> Result<()> {
+    #[cfg(feature = "fault-injection")]
+    with_injector(Ok(()), |io| io.before_rename(from, to))?;
+    std::fs::rename(from, to)
+}
+
+/// An ENOSPC-shaped error, shared by the injector and its tests.
+pub fn disk_full() -> Error {
+    Error::other("injected fault: no space left on device")
+}
+
+/// One scripted failure. Counts are 1-based and each rule fires from its
+/// trigger point onward (a full disk stays full; a dying device keeps
+/// failing fsync), which is how the real faults they model behave.
+#[cfg(feature = "fault-injection")]
+#[derive(Clone, Copy, Debug)]
+pub enum FaultRule {
+    /// Fail the Nth and every later fsync (file or directory).
+    FailNthSync(u64),
+    /// After this many content bytes have been written, every further
+    /// write fails with ENOSPC; the write that crosses the boundary is
+    /// torn at a seeded offset inside the remaining budget.
+    DiskFullAfter(u64),
+    /// Fail the Nth and every later rename.
+    FailNthRename(u64),
+    /// Fail the Nth and every later open/create.
+    FailNthOpen(u64),
+}
+
+/// Live counters shared with the installing test via `Arc`, so
+/// assertions can see how far the script ran after the injector itself
+/// was moved into [`install`].
+#[cfg(feature = "fault-injection")]
+#[derive(Debug, Default)]
+pub struct FaultStats {
+    pub syncs: std::sync::atomic::AtomicU64,
+    pub writes: std::sync::atomic::AtomicU64,
+    pub bytes_written: std::sync::atomic::AtomicU64,
+    pub renames: std::sync::atomic::AtomicU64,
+    pub opens: std::sync::atomic::AtomicU64,
+    pub injected: std::sync::atomic::AtomicU64,
+}
+
+/// Deterministic, rule-driven [`Io`]: replays the same failures for the
+/// same seed and call sequence. The seed only feeds the torn-write
+/// offset; everything else is exact counting.
+#[cfg(feature = "fault-injection")]
+pub struct FaultInjector {
+    rules: Vec<FaultRule>,
+    stats: std::sync::Arc<FaultStats>,
+    rng_state: u64,
+}
+
+#[cfg(feature = "fault-injection")]
+impl FaultInjector {
+    pub fn new(seed: u64, rules: Vec<FaultRule>) -> Self {
+        FaultInjector {
+            rules,
+            stats: std::sync::Arc::new(FaultStats::default()),
+            rng_state: seed | 1,
+        }
+    }
+
+    /// Handle onto the live counters (clone before [`install`]).
+    pub fn stats(&self) -> std::sync::Arc<FaultStats> {
+        std::sync::Arc::clone(&self.stats)
+    }
+
+    fn next_rand(&mut self) -> u64 {
+        // xorshift64* — deterministic, dependency-free.
+        let mut x = self.rng_state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.rng_state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    fn hit(&self) {
+        use std::sync::atomic::Ordering;
+        self.stats.injected.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(feature = "fault-injection")]
+impl Io for FaultInjector {
+    fn before_open(&mut self, _path: &Path) -> Result<()> {
+        use std::sync::atomic::Ordering;
+        let n = self.stats.opens.fetch_add(1, Ordering::Relaxed) + 1;
+        for r in &self.rules {
+            if let FaultRule::FailNthOpen(at) = r {
+                if n >= *at {
+                    self.hit();
+                    return Err(Error::other("injected fault: open failed"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn before_write(&mut self, len: usize) -> WriteDecision {
+        use std::sync::atomic::Ordering;
+        let before = self.stats.bytes_written.load(Ordering::Relaxed);
+        self.stats.writes.fetch_add(1, Ordering::Relaxed);
+        for r in &self.rules {
+            if let FaultRule::DiskFullAfter(budget) = r {
+                if before >= *budget {
+                    self.hit();
+                    return WriteDecision::Fail(disk_full());
+                }
+                if before + len as u64 > *budget {
+                    // Crossing the boundary: tear somewhere inside what
+                    // the budget still allows, then go read-only-disk.
+                    let room = (*budget - before) as usize;
+                    let torn = if room == 0 { 0 } else { (self.next_rand() % room as u64) as usize };
+                    self.stats.bytes_written.fetch_add(torn as u64, Ordering::Relaxed);
+                    // Pin the budget as spent so every later write fails.
+                    self.stats.bytes_written.fetch_max(*budget, Ordering::Relaxed);
+                    self.hit();
+                    return WriteDecision::TornAfter(torn);
+                }
+            }
+        }
+        self.stats.bytes_written.fetch_add(len as u64, Ordering::Relaxed);
+        WriteDecision::Pass
+    }
+
+    fn before_sync(&mut self) -> Result<()> {
+        use std::sync::atomic::Ordering;
+        let n = self.stats.syncs.fetch_add(1, Ordering::Relaxed) + 1;
+        for r in &self.rules {
+            if let FaultRule::FailNthSync(at) = r {
+                if n >= *at {
+                    self.hit();
+                    return Err(Error::other("injected fault: fsync failed"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn before_rename(&mut self, _from: &Path, _to: &Path) -> Result<()> {
+        use std::sync::atomic::Ordering;
+        let n = self.stats.renames.fetch_add(1, Ordering::Relaxed) + 1;
+        for r in &self.rules {
+            if let FaultRule::FailNthRename(at) = r {
+                if n >= *at {
+                    self.hit();
+                    return Err(Error::other("injected fault: rename failed"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passthrough_write_reaches_the_writer() {
+        let mut buf = Vec::new();
+        write_all(&mut buf, b"records").unwrap();
+        assert_eq!(buf, b"records");
+    }
+
+    #[cfg(feature = "fault-injection")]
+    #[test]
+    fn injector_is_deterministic_per_seed() {
+        // Same seed + same call sequence → identical torn offsets.
+        let mut torn = Vec::new();
+        for _ in 0..2 {
+            let mut inj = FaultInjector::new(99, vec![FaultRule::DiskFullAfter(10)]);
+            match inj.before_write(64) {
+                WriteDecision::TornAfter(n) => torn.push(n),
+                _ => panic!("boundary-crossing write must tear"),
+            }
+            assert!(matches!(inj.before_write(1), WriteDecision::Fail(_)), "disk stays full");
+        }
+        assert_eq!(torn[0], torn[1]);
+        assert!(torn[0] < 10, "tear fits in the remaining budget");
+    }
+
+    #[cfg(feature = "fault-injection")]
+    #[test]
+    fn nth_sync_rule_counts_exactly() {
+        let mut inj = FaultInjector::new(1, vec![FaultRule::FailNthSync(3)]);
+        let stats = inj.stats();
+        assert!(inj.before_sync().is_ok());
+        assert!(inj.before_sync().is_ok());
+        assert!(inj.before_sync().is_err(), "third sync fails");
+        assert!(inj.before_sync().is_err(), "and the device stays failed");
+        assert_eq!(stats.syncs.load(std::sync::atomic::Ordering::Relaxed), 4);
+        assert_eq!(stats.injected.load(std::sync::atomic::Ordering::Relaxed), 2);
+    }
+}

@@ -27,6 +27,7 @@
 //! that survives only in a lost directory entry saved nothing.
 
 pub mod checkpoint;
+pub mod io;
 pub mod recovery;
 pub mod wal;
 
@@ -47,7 +48,7 @@ pub fn sync_dir(dir: &std::path::Path) -> Result<()> {
         use anyhow::Context;
         let f = std::fs::File::open(dir)
             .with_context(|| format!("opening directory {dir:?} for fsync"))?;
-        f.sync_all()
+        io::sync_all(&f)
             .with_context(|| format!("fsyncing directory {dir:?}"))?;
     }
     #[cfg(not(unix))]

@@ -30,7 +30,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use super::{crc32, FsyncPolicy};
+use super::{crc32, io, FsyncPolicy};
 use crate::util::bytes::{put_f32, put_u32, put_u64};
 
 /// First payload byte of every record.
@@ -308,11 +308,9 @@ impl WalWriter {
         std::fs::create_dir_all(wal_dir(data_dir))
             .with_context(|| format!("creating WAL dir under {data_dir:?}"))?;
         let path = segment_path(data_dir, shard, next_seq);
-        let file = OpenOptions::new()
-            .write(true)
-            .create(true)
-            .truncate(true)
-            .open(&path)
+        let mut opts = OpenOptions::new();
+        opts.write(true).create(true).truncate(true);
+        let file = io::open(&opts, &path)
             .with_context(|| format!("opening WAL segment {path:?}"))?;
         // Make the new directory entry durable: syncing record bytes into
         // a file whose entry is lost on power failure durably saves nothing.
@@ -343,9 +341,9 @@ impl WalWriter {
         let seq = self.next_seq;
         self.scratch.clear();
         encode_payload_into(&mut self.scratch, seq, op, vec);
-        self.file.write_all(&(self.scratch.len() as u32).to_le_bytes())?;
-        self.file.write_all(&crc32(&self.scratch).to_le_bytes())?;
-        self.file.write_all(&self.scratch)?;
+        io::write_all(&mut self.file, &(self.scratch.len() as u32).to_le_bytes())?;
+        io::write_all(&mut self.file, &crc32(&self.scratch).to_le_bytes())?;
+        io::write_all(&mut self.file, &self.scratch)?;
         self.next_seq += 1;
         self.seg_bytes += 8 + self.scratch.len() as u64;
         self.seg_records += 1;
@@ -370,7 +368,7 @@ impl WalWriter {
     /// per-append policy.
     pub fn sync(&mut self) -> Result<()> {
         self.file.flush()?;
-        self.file.get_ref().sync_data()?;
+        io::sync_data(self.file.get_ref())?;
         self.pending_sync = 0;
         Ok(())
     }
@@ -384,11 +382,9 @@ impl WalWriter {
         }
         self.sync()?;
         let path = segment_path(&self.data_dir, self.shard, self.next_seq);
-        let file = OpenOptions::new()
-            .write(true)
-            .create(true)
-            .truncate(true)
-            .open(&path)
+        let mut opts = OpenOptions::new();
+        opts.write(true).create(true).truncate(true);
+        let file = io::open(&opts, &path)
             .with_context(|| format!("rotating to WAL segment {path:?}"))?;
         super::sync_dir(&wal_dir(&self.data_dir))?;
         self.file = BufWriter::new(file);

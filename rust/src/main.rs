@@ -21,7 +21,7 @@ use sublinear_sketch::lsh::pstable::PStableLsh;
 use sublinear_sketch::lsh::srp::SrpLsh;
 use sublinear_sketch::metrics;
 use sublinear_sketch::metrics::latency::{LatencyRecorder, Throughput};
-use sublinear_sketch::net::{SketchClient, WireServer};
+use sublinear_sketch::net::{ClientOptions, SketchClient, WireServer};
 use sublinear_sketch::sketch::ann::{SAnn, SAnnConfig};
 use sublinear_sketch::sketch::SwAkde;
 use sublinear_sketch::util::rng::Rng;
@@ -43,6 +43,7 @@ USAGE:
                 [--addr-file PATH] [--use-pjrt] [--data-dir DIR]
                 [--fsync always|off|every:N] [--checkpoint-every N]
                 [--checkpoint-secs T]
+                [--on-durability-loss degrade|read_only|abort]
       Serve the coordinator over TCP (length-prefixed binary protocol,
       see rust/src/net/frame.rs). --listen 127.0.0.1:0 picks a free
       port; the bound address is printed and, with --addr-file, written
@@ -58,17 +59,28 @@ USAGE:
       --checkpoint-secs seconds, or on a client Checkpoint frame), and
       a restart on the same --data-dir recovers checkpoint + WAL replay
       instead of needing the stream again.
+      --on-durability-loss (or [service] on_durability_loss) picks what
+      a shard does when its WAL fails mid-stream: `degrade` (default)
+      keeps serving loudly undurable, `read_only` refuses further
+      writes on the failed shard while reads keep serving, `abort`
+      fail-stops the shard thread. Health is surfaced per shard in
+      Stats and summarized in the Hello handshake (protocol v3).
   sketchd client --connect HOST:PORT [--n 10000] [--queries 256]
                  [--batch 64] [--connections 1] [--seed 42]
+                 [--timeout-ms 5000] [--retries 2]
                  [--checkpoint] [--shutdown]
       Load generator: streams --n random inserts in --batch-sized
       batches over --connections sockets, then issues batched ANN + KDE
       queries (drawn from the inserted points) and reports throughput
       and p50/p99 latency. --checkpoint cuts a durable checkpoint after
-      the load; --shutdown stops the server afterwards.
+      the load; --shutdown stops the server afterwards. --timeout-ms
+      bounds connect and every socket read/write (0 = no deadline);
+      --retries gives idempotent requests (queries, stats) that many
+      reconnect-and-resend attempts with jittered backoff.
   sketchd client --connect HOST:PORT --query-load [--n 10000]
                  [--queries 2048] [--batch 1] [--connections 8]
-                 [--seed 42] [--shutdown]
+                 [--seed 42] [--timeout-ms 5000] [--retries 2]
+                 [--shutdown]
       Query-plane load: seed --n points over one connection, then drive
       --queries ANN + KDE queries split across --connections concurrent
       sockets (batch size --batch; the default 1 exercises the server's
@@ -400,6 +412,10 @@ fn cmd_serve_wire(args: &Args) -> Result<()> {
         let t = args.get_u64("checkpoint-secs", 0)?;
         svc_cfg.checkpoint_every_secs = (t > 0).then_some(t);
     }
+    if let Some(policy) = args.flag("on-durability-loss") {
+        svc_cfg.on_durability_loss =
+            sublinear_sketch::coordinator::DurabilityLossPolicy::parse(policy)?;
+    }
 
     let (handle, join) = SketchService::spawn(svc_cfg.clone())?;
     let server = WireServer::bind(listen, handle.clone())?;
@@ -434,6 +450,12 @@ fn cmd_serve_wire(args: &Args) -> Result<()> {
         "[serve] shutdown complete: inserts={} shed={} stored={} ann_q={} kde_q={}",
         stats.inserts, stats.shed, stats.stored_points, stats.ann_queries, stats.kde_queries
     );
+    if stats.wal_errors > 0 || stats.refused_writes > 0 {
+        println!(
+            "[serve] durability incidents: wal_errors={} refused_writes={} health={:?}",
+            stats.wal_errors, stats.refused_writes, stats.health
+        );
+    }
     Ok(())
 }
 
@@ -448,14 +470,23 @@ struct LoadResult {
     kde_lat: LatencyRecorder,
 }
 
+/// `--timeout-ms`/`--retries` → socket deadlines + idempotent-retry
+/// budget for every load-generator connection.
+fn client_opts(args: &Args) -> Result<ClientOptions> {
+    let timeout_ms = args.get_u64("timeout-ms", 5_000)?;
+    let retries = args.get_u64("retries", 2)? as u32;
+    Ok(ClientOptions::from_cli(timeout_ms, retries))
+}
+
 fn run_load(
     addr: &str,
     n: usize,
     n_queries: usize,
     batch: usize,
     seed: u64,
+    opts: ClientOptions,
 ) -> Result<LoadResult> {
-    let mut client = SketchClient::connect(addr)?;
+    let mut client = SketchClient::connect_with(addr, opts)?;
     let dim = client.dim();
     let mut rng = Rng::new(seed);
     let mut queries: Vec<Vec<f32>> = Vec::with_capacity(n_queries);
@@ -534,10 +565,11 @@ fn run_query_load(args: &Args, addr: &str) -> Result<()> {
     let batch = args.get_usize("batch", 1)?.max(1);
     let conns = args.get_usize("connections", 8)?.max(1);
     let seed = args.get_u64("seed", 42)?;
+    let opts = client_opts(args)?;
 
     // Seed the sketch so the query phase has answers to find; queries
     // are drawn from the inserted points.
-    let mut feeder = SketchClient::connect(addr)?;
+    let mut feeder = SketchClient::connect_with(addr, opts)?;
     let dim = feeder.dim();
     let mut rng = Rng::new(seed);
     let pts: Vec<Vec<f32>> = (0..n)
@@ -559,9 +591,10 @@ fn run_query_load(args: &Args, addr: &str) -> Result<()> {
             let addr = addr.to_string();
             let pts = std::sync::Arc::clone(&pts);
             let q_per = n_queries / conns + usize::from(t < n_queries % conns);
+            let opts = ClientOptions { seed: opts.seed ^ (t as u64 + 1), ..opts };
             std::thread::spawn(
                 move || -> Result<(usize, usize, u64, LatencyRecorder, LatencyRecorder)> {
-                    let mut c = SketchClient::connect(&addr)?;
+                    let mut c = SketchClient::connect_with(&addr, opts)?;
                     let mut ann_lat = LatencyRecorder::new();
                     let mut kde_lat = LatencyRecorder::new();
                     let (mut answered, mut issued) = (0usize, 0usize);
@@ -625,14 +658,16 @@ fn run_query_load(args: &Args, addr: &str) -> Result<()> {
 /// `client`: wire client + load generator (one thread per connection).
 fn cmd_client(args: &Args) -> Result<()> {
     let addr = args.require("connect")?.to_string();
+    let opts = client_opts(args)?;
 
     // Probe connection: validates the handshake and reports the shape.
-    let probe = SketchClient::connect(&addr)?;
+    let probe = SketchClient::connect_with(&addr, opts)?;
     println!(
-        "[client] connected to {addr} dim={} shards={} replicas={} (protocol v{})",
+        "[client] connected to {addr} dim={} shards={} replicas={} health={} (protocol v{})",
         probe.dim(),
         probe.shards(),
         probe.replicas(),
+        probe.server_health(),
         sublinear_sketch::net::PROTOCOL_VERSION
     );
     drop(probe);
@@ -651,8 +686,9 @@ fn cmd_client(args: &Args) -> Result<()> {
                 let addr = addr.clone();
                 let per = n / conns + usize::from(t < n % conns);
                 let q_per = n_queries / conns + usize::from(t < n_queries % conns);
+                let opts = ClientOptions { seed: opts.seed ^ (t as u64 + 1), ..opts };
                 std::thread::spawn(move || {
-                    run_load(&addr, per, q_per, batch, seed ^ (0x9E37 * (t as u64 + 1)))
+                    run_load(&addr, per, q_per, batch, seed ^ (0x9E37 * (t as u64 + 1)), opts)
                 })
             })
             .collect();
@@ -686,7 +722,7 @@ fn cmd_client(args: &Args) -> Result<()> {
         println!("[client] total {:.0} ops/s wall", wall.per_second());
     }
 
-    let mut c = SketchClient::connect(&addr)?;
+    let mut c = SketchClient::connect_with(&addr, opts)?;
     let st = c.stats()?;
     println!(
         "[client] server stats: inserts={} shed={} stored={} ann_q={} kde_q={} sketch={:.2}MB",
@@ -697,6 +733,12 @@ fn cmd_client(args: &Args) -> Result<()> {
         st.kde_queries,
         st.sketch_bytes as f64 / 1048576.0
     );
+    if st.wal_errors > 0 || st.refused_writes > 0 || st.health.iter().any(|&h| h != 0) {
+        println!(
+            "[client] server degraded: health={:?} wal_errors={} refused_writes={}",
+            st.health, st.wal_errors, st.refused_writes
+        );
+    }
     if args.has("checkpoint") {
         let points = c.checkpoint()?;
         println!("[client] checkpoint cut, covering {points} points");

@@ -3,11 +3,22 @@
 //! One request in flight per connection (the server answers in order);
 //! for pipelined load, open several clients — the server runs one reader
 //! thread per connection and the shard mailboxes do the fan-in.
+//!
+//! Resilience: [`ClientOptions`] bounds every socket operation (connect,
+//! read, write) with one deadline, so a hung or partitioned server costs
+//! a timely error instead of a stuck caller. Idempotent requests
+//! (queries and stats) additionally retry across a bounded number of
+//! reconnects with deterministic jittered exponential backoff — a
+//! transport fault mid-exchange desyncs the request/response stream, so
+//! a retry always reconnects and re-handshakes before resending. A
+//! `Response::Error` from the server is never retried: the server
+//! answered, the answer was "no".
 
 use std::io::{BufReader, BufWriter};
-use std::net::{TcpStream, ToSocketAddrs};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::Duration;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::{AnnAnswer, ServiceStats};
 
@@ -16,41 +27,124 @@ use super::frame::{
     read_frame, write_frame, Request, Response, PROTOCOL_VERSION,
 };
 
+/// Socket deadlines and retry budget for a [`SketchClient`].
+#[derive(Clone, Copy, Debug)]
+pub struct ClientOptions {
+    /// Deadline for connect and for each read/write on the socket.
+    /// `None` blocks forever (the pre-deadline behavior).
+    pub timeout: Option<Duration>,
+    /// How many reconnect-and-resend attempts an idempotent request gets
+    /// after its first transport failure. Non-idempotent requests
+    /// (inserts, deletes, control frames) never retry.
+    pub retries: u32,
+    /// Base delay of the exponential backoff between retries (doubles
+    /// each attempt, plus up to +50% deterministic jitter).
+    pub backoff: Duration,
+    /// Seed of the jitter sequence (deterministic for reproducible runs;
+    /// vary per client to avoid synchronized retry storms).
+    pub seed: u64,
+}
+
+impl Default for ClientOptions {
+    fn default() -> Self {
+        ClientOptions {
+            timeout: None,
+            retries: 0,
+            backoff: Duration::from_millis(50),
+            seed: 0x5EED_CAFE,
+        }
+    }
+}
+
+impl ClientOptions {
+    /// CLI mapping: `timeout_ms == 0` means "no deadline".
+    pub fn from_cli(timeout_ms: u64, retries: u32) -> Self {
+        ClientOptions {
+            timeout: (timeout_ms > 0).then(|| Duration::from_millis(timeout_ms)),
+            retries,
+            ..ClientOptions::default()
+        }
+    }
+}
+
 /// A connected sketchd client (handshake done, dim known).
 pub struct SketchClient {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
     buf: Vec<u8>,
+    addr: SocketAddr,
+    opts: ClientOptions,
+    jitter: u64,
     dim: usize,
     shards: usize,
     replicas: usize,
+    health: u8,
 }
 
 impl SketchClient {
-    /// Connect and handshake; fails on a protocol-version mismatch.
+    /// Connect and handshake with default options (no deadlines, no
+    /// retries); fails on a protocol-version mismatch.
     pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Self> {
-        let stream = TcpStream::connect(addr)?;
+        Self::connect_with(addr, ClientOptions::default())
+    }
+
+    /// Connect and handshake with explicit deadlines/retries. Tries each
+    /// resolved address once, under the connect deadline.
+    pub fn connect_with<A: ToSocketAddrs>(addr: A, opts: ClientOptions) -> Result<Self> {
+        let mut last: Option<anyhow::Error> = None;
+        for a in addr.to_socket_addrs()? {
+            match Self::open(a, opts) {
+                Ok(c) => return Ok(c),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.unwrap_or_else(|| anyhow!("address resolved to nothing")))
+    }
+
+    fn open(addr: SocketAddr, opts: ClientOptions) -> Result<Self> {
+        let stream = match opts.timeout {
+            Some(t) => TcpStream::connect_timeout(&addr, t)?,
+            None => TcpStream::connect(addr)?,
+        };
         stream.set_nodelay(true).ok();
+        stream.set_read_timeout(opts.timeout)?;
+        stream.set_write_timeout(opts.timeout)?;
         let mut client = SketchClient {
             reader: BufReader::new(stream.try_clone()?),
             writer: BufWriter::new(stream),
             buf: Vec::new(),
+            addr,
+            opts,
+            jitter: opts.seed | 1,
             dim: 0,
             shards: 0,
             replicas: 1,
+            health: 0,
         };
         match client.call(&Request::Hello)? {
-            Response::Hello { version, dim, shards, replicas } => {
+            Response::Hello { version, dim, shards, replicas, health } => {
                 if version != PROTOCOL_VERSION {
                     bail!("server speaks protocol {version}, this build {PROTOCOL_VERSION}");
                 }
                 client.dim = dim as usize;
                 client.shards = shards as usize;
                 client.replicas = (replicas as usize).max(1);
+                client.health = health;
             }
             other => bail!("handshake got {other:?}"),
         }
         Ok(client)
+    }
+
+    /// Drop the (possibly desynced) stream and open a fresh connection
+    /// to the same address, re-handshaking. Keeps the jitter sequence so
+    /// backoff stays deterministic across the client's lifetime.
+    fn reconnect(&mut self) -> Result<()> {
+        let jitter = self.jitter;
+        let mut fresh = Self::open(self.addr, self.opts)?;
+        fresh.jitter = jitter;
+        *self = fresh;
+        Ok(())
     }
 
     /// Vector dimensionality of the remote service.
@@ -67,21 +161,64 @@ impl SketchClient {
         self.replicas
     }
 
+    /// Worst shard health the server reported at handshake
+    /// (`ShardHealth as u8`: 0 healthy, 1 durability-degraded,
+    /// 2 read-only). A snapshot from connect time, not live.
+    pub fn server_health(&self) -> u8 {
+        self.health
+    }
+
+    /// One exchange; errors here are TRANSPORT errors (socket, framing,
+    /// decode) — a decoded `Response::Error` is returned as `Ok`.
+    fn exchange(&mut self, payload: &[u8]) -> Result<Response> {
+        write_frame(&mut self.writer, payload)?;
+        if !read_frame(&mut self.reader, &mut self.buf)? {
+            bail!("server closed the connection");
+        }
+        Response::decode(&self.buf)
+    }
+
     fn call(&mut self, req: &Request) -> Result<Response> {
         self.call_raw(&req.encode())
     }
 
     /// One request/response exchange from an already-encoded payload
-    /// (the borrowed-encoder hot path: no owned `Request` clone).
+    /// (the borrowed-encoder hot path: no owned `Request` clone). No
+    /// retries — the non-idempotent path.
     fn call_raw(&mut self, payload: &[u8]) -> Result<Response> {
-        write_frame(&mut self.writer, payload)?;
-        if !read_frame(&mut self.reader, &mut self.buf)? {
-            bail!("server closed the connection");
-        }
-        match Response::decode(&self.buf)? {
+        match self.exchange(payload)? {
             Response::Error(msg) => bail!("server error: {msg}"),
             resp => Ok(resp),
         }
+    }
+
+    /// Idempotent exchange: transport failures reconnect (the stream is
+    /// desynced once a frame went missing) and resend, up to
+    /// `opts.retries` times with jittered exponential backoff. Server
+    /// `Error` replies fail immediately — they are answers, not faults.
+    fn call_retry(&mut self, payload: &[u8]) -> Result<Response> {
+        let mut err = match self.exchange(payload) {
+            Ok(Response::Error(msg)) => bail!("server error: {msg}"),
+            Ok(resp) => return Ok(resp),
+            Err(e) => e,
+        };
+        for attempt in 1..=self.opts.retries {
+            std::thread::sleep(self.backoff_delay(attempt));
+            let res = match self.reconnect() {
+                Ok(()) => self.exchange(payload),
+                Err(e) => Err(e),
+            };
+            match res {
+                Ok(Response::Error(msg)) => bail!("server error: {msg}"),
+                Ok(resp) => return Ok(resp),
+                Err(e) => err = e,
+            }
+        }
+        Err(err.context(format!("after {} retries", self.opts.retries)))
+    }
+
+    fn backoff_delay(&mut self, attempt: u32) -> Duration {
+        backoff_delay(&mut self.jitter, self.opts.backoff, attempt)
     }
 
     /// Offer one point; true iff it was accepted (not shed).
@@ -108,17 +245,19 @@ impl SketchClient {
         }
     }
 
-    /// Batched (c, r)-ANN; answers align with `queries`.
+    /// Batched (c, r)-ANN; answers align with `queries`. Idempotent —
+    /// retried under the client's retry budget.
     pub fn ann_query(&mut self, queries: &[Vec<f32>]) -> Result<Vec<Option<AnnAnswer>>> {
-        match self.call_raw(&encode_ann_query(queries))? {
+        match self.call_retry(&encode_ann_query(queries))? {
             Response::AnnAnswers(answers) => Ok(answers),
             other => bail!("ann_query got {other:?}"),
         }
     }
 
-    /// Batched sliding-window KDE: (kernel sums, densities).
+    /// Batched sliding-window KDE: (kernel sums, densities). Idempotent —
+    /// retried under the client's retry budget.
     pub fn kde_query(&mut self, queries: &[Vec<f32>]) -> Result<(Vec<f64>, Vec<f64>)> {
-        match self.call_raw(&encode_kde_query(queries))? {
+        match self.call_retry(&encode_kde_query(queries))? {
             Response::KdeAnswers { sums, densities } => Ok((sums, densities)),
             other => bail!("kde_query got {other:?}"),
         }
@@ -145,8 +284,9 @@ impl SketchClient {
     }
 
     /// Aggregate service statistics (drains mailboxes server-side).
+    /// Idempotent — retried under the client's retry budget.
     pub fn stats(&mut self) -> Result<ServiceStats> {
-        match self.call(&Request::Stats)? {
+        match self.call_retry(&Request::Stats.encode())? {
             Response::Stats(st) => Ok(st),
             other => bail!("stats got {other:?}"),
         }
@@ -175,5 +315,54 @@ impl SketchClient {
             Response::Ack { .. } => Ok(()),
             other => bail!("shutdown got {other:?}"),
         }
+    }
+}
+
+/// Backoff for the given attempt (1-based): `base × 2^(attempt−1)`,
+/// capped at ×64, plus up to +50% jitter from the xorshift state in
+/// `jitter` (advanced in place — deterministic per seed).
+fn backoff_delay(jitter: &mut u64, base: Duration, attempt: u32) -> Duration {
+    let mut x = (*jitter).max(1);
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    *jitter = x;
+    let base = base.saturating_mul(1 << (attempt - 1).min(6));
+    let span = (base.as_nanos() as u64).max(1);
+    base + Duration::from_nanos((x % span) / 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn options_from_cli_maps_zero_timeout_to_none() {
+        let o = ClientOptions::from_cli(0, 3);
+        assert!(o.timeout.is_none());
+        assert_eq!(o.retries, 3);
+        let o = ClientOptions::from_cli(250, 0);
+        assert_eq!(o.timeout, Some(Duration::from_millis(250)));
+        assert_eq!(o.retries, 0);
+    }
+
+    #[test]
+    fn backoff_grows_and_jitters_deterministically() {
+        let base = Duration::from_millis(10);
+        let (mut ja, mut jb) = (7u64, 7u64);
+        for attempt in 1..=4 {
+            let da = backoff_delay(&mut ja, base, attempt);
+            let db = backoff_delay(&mut jb, base, attempt);
+            assert_eq!(da, db, "same seed, same sequence");
+            let floor = base * (1 << (attempt - 1));
+            assert!(da >= floor, "attempt {attempt}: {da:?} < {floor:?}");
+            assert!(da <= floor + floor / 2, "attempt {attempt}: jitter > +50% ({da:?})");
+        }
+        // Different seeds desynchronize (no retry storms in lockstep).
+        let (mut jc, mut jd) = (1u64, 2u64);
+        assert_ne!(
+            backoff_delay(&mut jc, base, 1),
+            backoff_delay(&mut jd, base, 1)
+        );
     }
 }

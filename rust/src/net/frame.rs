@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! frame   := u32 LE payload length | payload
-//! payload := u8 version (=2) | u8 opcode | body
+//! payload := u8 version (=3) | u8 opcode | body
 //! ```
 //!
 //! All integers are little-endian; floats are IEEE-754 bit patterns, so a
@@ -26,8 +26,10 @@ use anyhow::{bail, Result};
 use crate::coordinator::{AnnAnswer, ServiceStats};
 
 /// Protocol version (first payload byte of every frame). v2 added the
-/// replica count to `Hello` and per-replica read depths to `Stats`.
-pub const PROTOCOL_VERSION: u8 = 2;
+/// replica count to `Hello` and per-replica read depths to `Stats`; v3
+/// added durability health to both (worst-shard byte in `Hello`, the
+/// per-shard health vector plus `wal_errors`/`refused_writes` in `Stats`).
+pub const PROTOCOL_VERSION: u8 = 3;
 
 /// Hard cap on one frame's payload (64 MiB).
 pub const MAX_FRAME_BYTES: usize = 1 << 26;
@@ -79,7 +81,16 @@ pub enum Request {
 /// Server → client frames.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Response {
-    Hello { version: u8, dim: u32, shards: u32, replicas: u32 },
+    Hello {
+        version: u8,
+        dim: u32,
+        shards: u32,
+        replicas: u32,
+        /// Worst shard health at handshake time (`ShardHealth as u8`:
+        /// 0 healthy, 1 durability-degraded, 2 read-only) — a client
+        /// learns at connect whether writes will be refused.
+        health: u8,
+    },
     /// Insert/InsertBatch/Flush/Shutdown: points accepted (0 for the
     /// control frames).
     Ack { accepted: u64 },
@@ -109,6 +120,10 @@ fn put_stats(out: &mut Vec<u8>, st: &ServiceStats) {
     for &d in &st.replica_depths {
         put_u32(out, d);
     }
+    put_u32(out, st.health.len() as u32);
+    out.extend_from_slice(&st.health);
+    put_u64(out, st.wal_errors);
+    put_u64(out, st.refused_writes);
 }
 
 fn read_stats(c: &mut Cursor) -> Result<ServiceStats> {
@@ -122,12 +137,19 @@ fn read_stats(c: &mut Cursor) -> Result<ServiceStats> {
         sketch_bytes: c.u64()? as usize,
         replicas: c.u32()?,
         replica_depths: Vec::new(),
+        health: Vec::new(),
+        wal_errors: 0,
+        refused_writes: 0,
     };
     let n = c.count(4)?;
     st.replica_depths.reserve(n.min(DECODE_PREALLOC_CAP));
     for _ in 0..n {
         st.replica_depths.push(c.u32()?);
     }
+    let n = c.count(1)?;
+    st.health = c.take(n)?.to_vec();
+    st.wal_errors = c.u64()?;
+    st.refused_writes = c.u64()?;
     Ok(st)
 }
 
@@ -233,12 +255,13 @@ impl Request {
 impl Response {
     pub fn encode(&self) -> Vec<u8> {
         match self {
-            Response::Hello { version, dim, shards, replicas } => {
+            Response::Hello { version, dim, shards, replicas, health } => {
                 let mut out = payload(op::R_HELLO);
                 out.push(*version);
                 put_u32(&mut out, *dim);
                 put_u32(&mut out, *shards);
                 put_u32(&mut out, *replicas);
+                out.push(*health);
                 out
             }
             Response::Ack { accepted } => {
@@ -311,6 +334,7 @@ impl Response {
                 dim: c.u32()?,
                 shards: c.u32()?,
                 replicas: c.u32()?,
+                health: c.u8()?,
             },
             op::R_ACK => Response::Ack { accepted: c.u64()? },
             op::R_DELETED => Response::Deleted { removed: c.u8()? != 0 },
@@ -528,6 +552,7 @@ mod tests {
                 dim: g.usize_in(1, 1024) as u32,
                 shards: g.usize_in(1, 64) as u32,
                 replicas: g.usize_in(1, 8) as u32,
+                health: g.usize_in(0, 2) as u8,
             },
             1 => Response::Ack { accepted: g.usize_in(0, 1 << 20) as u64 },
             2 => Response::Deleted { removed: g.bool() },
@@ -565,6 +590,9 @@ mod tests {
                 replica_depths: (0..g.size(0, 16))
                     .map(|_| g.usize_in(0, 1 << 10) as u32)
                     .collect(),
+                health: (0..g.size(0, 16)).map(|_| g.usize_in(0, 2) as u8).collect(),
+                wal_errors: g.usize_in(0, 1 << 20) as u64,
+                refused_writes: g.usize_in(0, 1 << 20) as u64,
             }),
             6 => Response::Checkpointed { points: g.usize_in(0, 1 << 40) as u64 },
             _ => Response::Error("frame \u{1F980} error".to_string()),

@@ -484,6 +484,7 @@ fn dispatch(req: Request, handle: &ServiceHandle, coalescer: &QueryCoalescer) ->
             dim: handle.dim() as u32,
             shards: handle.shards() as u32,
             replicas: handle.replicas() as u32,
+            health: handle.health_worst() as u8,
         },
         Request::Insert(x) => {
             if let Err(resp) = check_vectors(handle, std::slice::from_ref(&x)) {

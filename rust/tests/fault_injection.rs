@@ -1,0 +1,346 @@
+//! Chaos suite (requires `--features fault-injection`): scripted disk
+//! faults driven through the `durability::io` seam, exercised against the
+//! public `ServiceHandle` surface. Each scenario pins one leg of the
+//! degraded-mode contract: a durability loss is NEVER silent (flush and
+//! checkpoint keep failing, stats carry the health vector), reads keep
+//! serving under `degrade`/`read_only`, `abort` is fail-stop, a torn WAL
+//! tail recovers to the synced prefix, and a killed replica heals back to
+//! bit-identical state without a process restart.
+//!
+//! The injector is process-global, so every test that installs one holds
+//! [`FaultScope`] — a lock that also removes the injector on drop, even
+//! when an assertion panics mid-test.
+
+use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use sublinear_sketch::coordinator::{
+    DurabilityLossPolicy, ServiceConfig, ServiceHandle, SketchService,
+};
+use sublinear_sketch::durability::io::{self, FaultInjector, FaultRule};
+use sublinear_sketch::util::rng::Rng;
+
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+/// Serializes injector-owning tests and guarantees the process-global
+/// injector is removed when the test ends (or dies on an assertion).
+struct FaultScope(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+impl FaultScope {
+    fn acquire() -> Self {
+        // A poisoned lock just means an earlier test failed; the guard
+        // below still clears the injector it left behind.
+        let guard = FAULT_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        io::clear();
+        FaultScope(guard)
+    }
+
+    /// Arm the injector. Call AFTER `SketchService::spawn`: startup does
+    /// its own WAL opens and directory syncs, which the script must not
+    /// count against the running service's fault budget.
+    fn install(&self, inj: FaultInjector) {
+        io::install(Box::new(inj));
+    }
+
+    /// Disarm mid-test (the disk "comes back", e.g. before a restart).
+    fn lift(&self) {
+        io::clear();
+    }
+}
+
+impl Drop for FaultScope {
+    fn drop(&mut self) {
+        io::clear();
+    }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "sketchd_fault_{tag}_{}_{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// η = 0 (store everything), 2 shards, hash routing — the same stream
+/// through two services builds bit-identical state (recovery.rs idiom).
+fn cfg(data_dir: Option<PathBuf>, policy: DurabilityLossPolicy) -> ServiceConfig {
+    let mut cfg = ServiceConfig::default_for(8, 4_000);
+    cfg.shards = 2;
+    cfg.ann.eta = 0.0;
+    cfg.kde.rows = 8;
+    cfg.kde.window = 400;
+    cfg.data_dir = data_dir;
+    cfg.on_durability_loss = policy;
+    cfg
+}
+
+fn points(n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    let centers: Vec<Vec<f32>> = (0..8)
+        .map(|_| (0..8).map(|_| rng.gaussian_f32() * 2.0).collect())
+        .collect();
+    (0..n)
+        .map(|_| {
+            let c = &centers[rng.below(8) as usize];
+            c.iter().map(|v| v + rng.gaussian_f32() * 0.1).collect()
+        })
+        .collect()
+}
+
+fn crash(handle: ServiceHandle, join: std::thread::JoinHandle<()>) {
+    drop(handle);
+    join.join().unwrap();
+}
+
+#[test]
+fn failed_fsync_degrades_but_keeps_serving() {
+    let scope = FaultScope::acquire();
+    let dir = tmp_dir("degrade");
+    let pts = points(300, 11);
+    let queries = pts[..24].to_vec();
+
+    let (h, join) =
+        SketchService::spawn(cfg(Some(dir.clone()), DurabilityLossPolicy::Degrade)).unwrap();
+    assert_eq!(h.insert_batch(pts.clone()), 300);
+    h.flush().unwrap();
+    let baseline = h.query_batch(queries.clone()).unwrap();
+    assert_eq!(h.health_vector(), vec![0, 0], "healthy before the fault");
+
+    // The disk dies: the next fsync (and every later one) fails.
+    scope.install(FaultInjector::new(7, vec![FaultRule::FailNthSync(1)]));
+    let err = h.flush().unwrap_err().to_string();
+    assert!(err.contains("flush barrier failed"), "{err}");
+
+    // The loss is loud and visible, never a silent ack.
+    let st = h.stats().unwrap();
+    assert_eq!(st.health, vec![1, 1], "both shards DurabilityDegraded");
+    assert!(st.wal_errors >= 1, "{st:?}");
+    assert_eq!(st.refused_writes, 0, "degrade does not refuse writes");
+
+    // Degraded-mode serving: reads are untouched, writes still land.
+    assert_eq!(h.query_batch(queries.clone()).unwrap(), baseline);
+    assert_eq!(h.insert_batch(points(40, 12)), 40);
+    let st = h.stats().unwrap();
+    assert_eq!(st.stored_points as u64 + st.shed, st.inserts, "{st:?}");
+
+    // Durability is NOT quietly restored: flush keeps failing...
+    let err = h.flush().unwrap_err().to_string();
+    assert!(err.contains("after an earlier durability failure"), "{err}");
+    // ...and a checkpoint refuses to seal over the hole in the log.
+    let err = h.checkpoint().unwrap_err().to_string();
+    assert!(err.contains("refusing to checkpoint past a hole"), "{err}");
+
+    h.shutdown();
+    join.join().unwrap();
+    drop(scope);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn disk_full_torn_tail_recovers_to_the_synced_prefix() {
+    let scope = FaultScope::acquire();
+    let dir = tmp_dir("disk_full");
+    let pts = points(300, 21);
+    let queries = pts[..24].to_vec();
+    let mk = || cfg(Some(dir.clone()), DurabilityLossPolicy::Degrade);
+
+    // Phase 1: 150 points land durably (flushed = applied AND synced).
+    let (h, join) = SketchService::spawn(mk()).unwrap();
+    assert_eq!(h.insert_batch(pts[..150].to_vec()), 150);
+    h.flush().unwrap();
+
+    // Phase 2: the disk fills mid-ingest. The append that crosses the
+    // budget is TORN at a seeded offset (the shape a real crash leaves),
+    // and every later write fails with ENOSPC.
+    scope.install(FaultInjector::new(99, vec![FaultRule::DiskFullAfter(256)]));
+    assert_eq!(h.insert_batch(pts[150..].to_vec()), 300 - 150);
+    assert!(h.flush().is_err(), "no clean sync barrier on a full disk");
+    let st = h.stats().unwrap();
+    assert!(st.wal_errors >= 1, "{st:?}");
+    assert_eq!(st.health, vec![1, 1], "both shards degraded by the barrier");
+    crash(h, join);
+
+    // Phase 3: the disk "comes back"; restart on the same data_dir. The
+    // torn tail must be tolerated and the synced prefix must be intact.
+    scope.lift();
+    let (rec, rec_join) = SketchService::spawn(mk()).unwrap();
+    let st = rec.stats().unwrap();
+    assert_eq!(st.health, vec![0, 0], "a restart starts clean");
+    assert!(st.inserts >= 150, "the flushed prefix must survive: {st:?}");
+    assert_eq!(st.stored_points as u64 + st.shed, st.inserts, "{st:?}");
+
+    // The recovered service is fully live: reads answer, and new writes
+    // are durable again (flush + checkpoint both succeed).
+    assert_eq!(rec.query_batch(queries).unwrap().len(), 24);
+    assert_eq!(rec.insert_batch(points(50, 22)), 50);
+    rec.flush().unwrap();
+    rec.checkpoint().unwrap();
+    rec.shutdown();
+    rec_join.join().unwrap();
+    drop(scope);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn read_only_policy_refuses_writes_but_serves_reads() {
+    let scope = FaultScope::acquire();
+    let dir = tmp_dir("read_only");
+    let pts = points(200, 31);
+    let queries = pts[..24].to_vec();
+
+    let (h, join) =
+        SketchService::spawn(cfg(Some(dir.clone()), DurabilityLossPolicy::ReadOnly)).unwrap();
+    assert_eq!(h.insert_batch(pts.clone()), 200);
+    h.flush().unwrap();
+    let baseline = h.query_batch(queries.clone()).unwrap();
+
+    scope.install(FaultInjector::new(5, vec![FaultRule::FailNthSync(1)]));
+    assert!(h.flush().is_err());
+    let st = h.stats().unwrap();
+    assert_eq!(st.health, vec![2, 2], "both shards ReadOnly");
+
+    // Writes are refused AT THE ADMISSION DOOR (all replicas see the same
+    // truncated command stream), counted so accounting still reconciles.
+    assert_eq!(h.insert_batch(points(40, 32)), 0, "no write is accepted");
+    assert!(!h.delete(pts[0].clone()), "a delete is a write");
+    let st = h.stats().unwrap();
+    assert_eq!(st.refused_writes, 41, "40 batch points + 1 delete: {st:?}");
+    assert_eq!(st.deletes, 0, "a refused delete never counts");
+    assert_eq!(st.stored_points as u64 + st.shed, st.inserts, "{st:?}");
+    assert_eq!(st.stored_points, 200, "state is frozen at the fault point");
+
+    // Reads are bit-identical to the pre-fault answers.
+    assert_eq!(h.query_batch(queries).unwrap(), baseline);
+
+    h.shutdown();
+    join.join().unwrap();
+    drop(scope);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn abort_policy_is_fail_stop() {
+    let scope = FaultScope::acquire();
+    let dir = tmp_dir("abort");
+    let mut c = cfg(Some(dir.clone()), DurabilityLossPolicy::Abort);
+    c.shards = 1; // one shard so the panic's blast radius is deterministic
+
+    let (h, join) = SketchService::spawn(c).unwrap();
+    let pts = points(100, 41);
+    assert_eq!(h.insert_batch(pts.clone()), 100);
+    h.flush().unwrap();
+
+    scope.install(FaultInjector::new(3, vec![FaultRule::FailNthSync(1)]));
+    // The operator asked for fail-stop: the shard thread panics instead
+    // of serving past a durability hole, and the barrier reports it.
+    let err = h.flush().unwrap_err().to_string();
+    assert!(err.contains("flush barrier failed"), "{err}");
+    // Reads now fail loudly — never a silently partial answer.
+    assert!(h.query_batch(vec![pts[0].clone()]).is_err());
+
+    h.shutdown();
+    join.join().unwrap();
+    drop(scope);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn killed_replica_heals_from_the_primary_bit_identically() {
+    // No injector (and no durability I/O): replica supervision is pure
+    // thread/state machinery, so this test runs lock-free alongside the
+    // injector-owning ones.
+    let pts = points(400, 51);
+    let queries = pts[..32].to_vec();
+    let mk = |replicas: usize| {
+        let mut c = cfg(None, DurabilityLossPolicy::Degrade);
+        c.shards = 1;
+        c.replicas = replicas;
+        c
+    };
+
+    // Un-replicated twin: the reference answers.
+    let (twin, twin_join) = SketchService::spawn(mk(1)).unwrap();
+    assert_eq!(twin.insert_batch(pts.clone()), 400);
+    twin.flush().unwrap();
+
+    let (h, join) = SketchService::spawn(mk(2)).unwrap();
+    assert_eq!(h.insert_batch(pts.clone()), 400);
+    h.flush().unwrap();
+    let want = twin.query_batch(queries.clone()).unwrap();
+    for _ in 0..3 {
+        assert_eq!(h.query_batch(queries.clone()).unwrap(), want, "pre-crash parity");
+    }
+
+    // Kill the secondary, then wait until the death is OBSERVABLE (its
+    // mailbox closed): a crash command into a closed mailbox returns
+    // false. Polling must outpace the supervisor's heal tick so the loop
+    // exits inside the dead window rather than re-killing a healed copy.
+    assert!(h.crash_replica(0, 1), "crash command delivered");
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while h.crash_replica(0, 1) {
+        assert!(Instant::now() < deadline, "replica never died");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // Writes during the outage miss the dead copy; the heal must fold
+    // them in (the clone image is cut from the primary's LIVE state).
+    let more = points(60, 52);
+    assert_eq!(twin.insert_batch(more.clone()), 60);
+    assert_eq!(h.insert_batch(more), 60);
+    twin.flush().unwrap();
+    h.flush().unwrap();
+    let want = twin.query_batch(queries.clone()).unwrap();
+    let (want_sums, want_dens) = twin.kde_batch(queries.clone()).unwrap();
+
+    // Reads keep serving through the detection→heal window (failover to
+    // the primary), and the heal is detected by a read LANDING on the
+    // replaced mailbox — only a freshly installed copy can accept one
+    // after sends to the dead slot started failing.
+    let base = h.replica_reads(0)[1];
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        assert_eq!(h.query_batch(queries.clone()).unwrap(), want, "serving through outage");
+        if h.replica_reads(0)[1] > base {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "supervisor never healed the replica"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // The healed copy answers bit-identically (several rounds so the
+    // least-loaded picker exercises both copies) and stays in lockstep
+    // under post-heal writes.
+    for _ in 0..6 {
+        assert_eq!(h.query_batch(queries.clone()).unwrap(), want);
+        let (sums, dens) = h.kde_batch(queries.clone()).unwrap();
+        assert_eq!(sums, want_sums);
+        assert_eq!(dens, want_dens);
+    }
+    let tail = points(50, 53);
+    assert_eq!(twin.insert_batch(tail.clone()), 50);
+    assert_eq!(h.insert_batch(tail), 50);
+    twin.flush().unwrap();
+    h.flush().unwrap();
+    let want = twin.query_batch(queries.clone()).unwrap();
+    for _ in 0..4 {
+        assert_eq!(h.query_batch(queries.clone()).unwrap(), want, "post-heal lockstep");
+    }
+
+    let st = h.stats().unwrap();
+    assert_eq!(st.stored_points as u64 + st.shed, st.inserts, "{st:?}");
+
+    h.shutdown();
+    join.join().unwrap();
+    twin.shutdown();
+    twin_join.join().unwrap();
+}

@@ -3,12 +3,14 @@
 //! in-process with the same seed — identical ANN answers, identical KDE
 //! sums, and point-denominated stats that reconcile with the stream.
 
+use std::net::{Shutdown, TcpListener, TcpStream};
 use std::thread;
+use std::time::{Duration, Instant};
 
 use sublinear_sketch::coordinator::{
     KdeKernel, Overload, ServiceConfig, SketchService,
 };
-use sublinear_sketch::net::{SketchClient, WireServer};
+use sublinear_sketch::net::{ClientOptions, SketchClient, WireServer};
 use sublinear_sketch::util::rng::Rng;
 
 fn wire_cfg(dim: usize, n: usize) -> ServiceConfig {
@@ -127,6 +129,13 @@ fn run_wire_vs_local(cfg: ServiceConfig) {
         "inserts must equal stored + shed (points): {st:?}"
     );
     assert_eq!(accepted, 1200 - st.shed, "acks reconcile with shed");
+
+    // Protocol v3: per-shard durability health travels in the handshake
+    // (worst-shard summary) and in Stats (full vector + incident counts).
+    assert_eq!(stack.client.server_health(), 0, "handshake says Healthy");
+    assert_eq!(st.health, vec![0; 3], "per-shard health vector: {st:?}");
+    assert_eq!(st.wal_errors, 0);
+    assert_eq!(st.refused_writes, 0);
 
     stack.teardown();
 }
@@ -334,6 +343,92 @@ fn coalesced_singleton_queries_match_in_process() {
     srv_join.join().unwrap().unwrap();
     handle.shutdown();
     svc_join.join().unwrap();
+}
+
+#[test]
+fn client_deadline_bounds_a_hung_server() {
+    // A listener that accepts via its backlog but never answers the
+    // handshake: with a deadline configured the client must error out
+    // instead of blocking forever on the dead read.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let opts = ClientOptions {
+        timeout: Some(Duration::from_millis(200)),
+        retries: 0,
+        ..ClientOptions::default()
+    };
+    let t0 = Instant::now();
+    let res = SketchClient::connect_with(addr, opts);
+    assert!(res.is_err(), "a silent server must not look connected");
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "the deadline must bound the hang, waited {:?}",
+        t0.elapsed()
+    );
+    drop(listener);
+}
+
+/// Shuttle bytes both ways between two sockets until either side closes.
+fn pump(a: TcpStream, b: TcpStream) -> (thread::JoinHandle<()>, thread::JoinHandle<()>) {
+    let (mut a2, mut b2) = (a.try_clone().unwrap(), b.try_clone().unwrap());
+    let (mut a, mut b) = (a, b);
+    let fwd = thread::spawn(move || {
+        let _ = std::io::copy(&mut a, &mut b);
+        let _ = b.shutdown(Shutdown::Both);
+    });
+    let rev = thread::spawn(move || {
+        let _ = std::io::copy(&mut b2, &mut a2);
+        let _ = a2.shutdown(Shutdown::Both);
+    });
+    (fwd, rev)
+}
+
+#[test]
+fn idempotent_calls_retry_across_a_dropped_connection() {
+    // A proxy sits between client and server. Connection 1 carries the
+    // handshake, then the test cuts it; the client's next idempotent call
+    // must detect the transport fault, reconnect (fresh handshake —
+    // the one-request-one-response stream is desynced), and succeed on
+    // connection 2 without surfacing an error to the caller.
+    let stack = start_stack(wire_cfg(8, 1_000));
+    let backend = stack.addr;
+    let proxy = TcpListener::bind("127.0.0.1:0").unwrap();
+    let paddr = proxy.local_addr().unwrap();
+    let (cut_tx, cut_rx) = std::sync::mpsc::channel::<()>();
+    let (down_tx, down_rx) = std::sync::mpsc::channel::<()>();
+    let proxy_join = thread::spawn(move || {
+        // Connection 1: pass bytes until the test orders the cut.
+        let (c1, _) = proxy.accept().unwrap();
+        let u1 = TcpStream::connect(backend).unwrap();
+        let pumps = pump(c1.try_clone().unwrap(), u1.try_clone().unwrap());
+        cut_rx.recv().unwrap();
+        let _ = c1.shutdown(Shutdown::Both);
+        let _ = u1.shutdown(Shutdown::Both);
+        pumps.0.join().unwrap();
+        pumps.1.join().unwrap();
+        down_tx.send(()).unwrap();
+        // Connection 2: the retry; pass through until the client leaves.
+        let (c2, _) = proxy.accept().unwrap();
+        let u2 = TcpStream::connect(backend).unwrap();
+        let pumps = pump(c2, u2);
+        pumps.0.join().unwrap();
+        pumps.1.join().unwrap();
+    });
+
+    let opts = ClientOptions {
+        timeout: Some(Duration::from_secs(10)),
+        retries: 2,
+        ..ClientOptions::default()
+    };
+    let mut c = SketchClient::connect_with(paddr, opts).unwrap();
+    assert_eq!(c.dim(), 8, "handshake rode connection 1");
+    cut_tx.send(()).unwrap();
+    down_rx.recv().unwrap(); // connection 1 is fully dead
+    let st = c.stats().unwrap(); // transport fault → reconnect → retried
+    assert_eq!(st.inserts, 0);
+    drop(c);
+    proxy_join.join().unwrap();
+    stack.teardown();
 }
 
 #[test]
