@@ -6,9 +6,9 @@
 //! subsampling by design: S-ANN *is* a sampler and RACE/SW-AKDE are
 //! population estimators).
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
-use std::sync::Arc;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use crate::util::sync::Arc;
 
 /// Overload policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -34,6 +34,10 @@ pub enum OfferOutcome {
 }
 
 /// Sender side of a bounded queue with shedding statistics.
+///
+/// Both counters are `Relaxed`-only diagnostics: the channel itself is
+/// the synchronization (a `Sent` outcome happens-before the receiver's
+/// `recv` of that element), and nothing branches on these counts.
 pub struct BoundedSender<T> {
     tx: SyncSender<T>,
     policy: Overload,
@@ -54,7 +58,7 @@ impl<T> Clone for BoundedSender<T> {
 
 /// Create a bounded channel with the given capacity and overload policy.
 pub fn bounded<T>(cap: usize, policy: Overload) -> (BoundedSender<T>, Receiver<T>) {
-    let (tx, rx) = std::sync::mpsc::sync_channel(cap);
+    let (tx, rx) = crate::util::sync::mpsc::sync_channel(cap);
     (
         BoundedSender {
             tx,

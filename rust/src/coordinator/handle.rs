@@ -32,9 +32,9 @@
 //! [`SketchService`]: super::server::SketchService
 //! [`Overload`]: super::backpressure::Overload
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Sender};
-use std::sync::Arc;
+use crate::util::sync::atomic::{AtomicUsize, Ordering};
+use crate::util::sync::mpsc::{channel, Sender};
+use crate::util::sync::Arc;
 
 use anyhow::{anyhow, Result};
 

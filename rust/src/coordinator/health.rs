@@ -12,7 +12,7 @@
 //! round-trip. Replicas of one shard share the shard's cell — only the
 //! primary owns the WAL, so only the primary publishes.
 
-use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use crate::util::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 
 use anyhow::{bail, Result};
 
@@ -93,10 +93,35 @@ impl std::fmt::Display for DurabilityLossPolicy {
 /// Lock-free per-shard health vector plus failure counters, shared as an
 /// `Arc` between the shard primaries (writers) and every stats/serving
 /// path (readers).
+///
+/// # Memory-ordering contract
+///
+/// The `cells` are the only atomics in this crate that gate *behavior*
+/// on another thread (a `ReadOnly` cell makes `ReplicaSet::offer_write`
+/// refuse the write), so they are the only ones that carry more than
+/// `Relaxed`. The counters are pure stats.
 #[derive(Debug)]
 pub struct HealthBoard {
+    /// One `ShardHealth as u8` per shard. Written by `escalate`
+    /// (`AcqRel` `fetch_max`), read by `get`/`vector`/`worst`
+    /// (`Acquire`). The Release half publishes everything the failing
+    /// shard thread did *before* escalating — in particular the
+    /// `Relaxed` `wal_errors` increment that `shard.rs` performs first
+    /// in program order — to any thread whose Acquire load observes the
+    /// new state; an admission door that sees `ReadOnly` therefore also
+    /// sees a `wal_errors` count that explains it. The Acquire half of
+    /// the RMW orders a later escalation after the state it is
+    /// escalating from. Monotonicity itself needs no ordering — it is
+    /// the `max` in `fetch_max`, which is atomic at any `Ordering`.
     cells: Vec<AtomicU8>,
+    /// WAL/checkpoint failures since startup. `Relaxed`: a diagnostic
+    /// counter that no control path branches on; cross-thread
+    /// visibility piggybacks on the `cells` Release as described above,
+    /// and exact reconciliation is only asserted at quiescence.
     wal_errors: AtomicU64,
+    /// Points refused by `ReadOnly` shards. `Relaxed`: stat only,
+    /// folded into `Stats` replies; reconciled against `shed`/`inserts`
+    /// only after the writers are joined or the mailboxes drained.
     refused_writes: AtomicU64,
 }
 
@@ -218,5 +243,70 @@ mod tests {
         b.record_refused_writes(64);
         assert_eq!(b.wal_errors(), 2);
         assert_eq!(b.refused_writes(), 64);
+    }
+
+    /// Every (from, to) pair of the state machine: `escalate` reports a
+    /// transition exactly when `to` is strictly worse, and the resident
+    /// state afterwards is `max(from, to)` — never a downgrade.
+    #[test]
+    fn every_transition_edge() {
+        use ShardHealth::{DurabilityDegraded, Healthy, ReadOnly};
+        let all = [Healthy, DurabilityDegraded, ReadOnly];
+        for &from in &all {
+            for &to in &all {
+                let b = HealthBoard::new(1);
+                if from > Healthy {
+                    assert!(b.escalate(0, from), "seeding {from} from fresh must fire");
+                }
+                let fired = b.escalate(0, to);
+                assert_eq!(fired, to > from, "edge {from} -> {to}");
+                assert_eq!(b.get(0), from.max(to), "state after {from} -> {to}");
+            }
+        }
+    }
+
+    /// The wire byte for each state is its severity rank — the protocol
+    /// relies on `max` over raw bytes agreeing with `max` over states.
+    #[test]
+    fn wire_bytes_are_severity_ranks() {
+        assert_eq!(ShardHealth::Healthy.as_u8(), 0);
+        assert_eq!(ShardHealth::DurabilityDegraded.as_u8(), 1);
+        assert_eq!(ShardHealth::ReadOnly.as_u8(), 2);
+        // from_u8 is total: every byte maps to some state, unknowns to
+        // Healthy (a newer peer's state must not wedge an older reader).
+        for v in 0u8..=255 {
+            let _ = ShardHealth::from_u8(v);
+        }
+        assert_eq!(ShardHealth::from_u8(3), ShardHealth::Healthy);
+    }
+
+    /// `worst()` is the max cell under every mixed vector, and agrees
+    /// with the byte-wise max of `vector()` (the encoding Hello ships).
+    #[test]
+    fn worst_shard_tracks_the_max_cell() {
+        let b = HealthBoard::new(4);
+        assert_eq!(b.worst(), ShardHealth::Healthy, "all-healthy board");
+        b.escalate(2, ShardHealth::DurabilityDegraded);
+        assert_eq!(b.worst(), ShardHealth::DurabilityDegraded);
+        b.escalate(0, ShardHealth::ReadOnly);
+        assert_eq!(b.worst(), ShardHealth::ReadOnly);
+        b.escalate(3, ShardHealth::DurabilityDegraded);
+        let v = b.vector();
+        assert_eq!(v, vec![2, 0, 1, 1]);
+        assert_eq!(
+            v.iter().copied().max().map(ShardHealth::from_u8),
+            Some(b.worst()),
+            "byte-wise max IS the worst state"
+        );
+    }
+
+    /// A zero-shard board clamps to one cell (the constructor's
+    /// `.max(1)`) so `worst()` stays total.
+    #[test]
+    fn empty_board_still_answers() {
+        let b = HealthBoard::new(0);
+        assert_eq!(b.shards(), 1);
+        assert_eq!(b.worst(), ShardHealth::Healthy);
+        assert_eq!(b.vector(), vec![0]);
     }
 }

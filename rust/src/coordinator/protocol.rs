@@ -2,8 +2,8 @@
 //! they produce. Channels are attached at the server layer; these types
 //! stay plain data so they can be logged, tested and replayed.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::Arc;
 
 /// A batch of query vectors shared across shards without copying.
 pub type QueryBatch = Arc<Vec<Vec<f32>>>;
@@ -76,15 +76,38 @@ pub struct ServiceStats {
 /// shard mailboxes, so the counts must live behind an `Arc`, not behind
 /// `&mut self`). All counters are point-denominated.
 ///
+/// # Memory-ordering contract
+///
+/// Every field is a pure statistic: incremented on the hot path, read
+/// only by `snapshot()` for a `Stats` reply, and never used to make a
+/// control decision or to publish other memory. No load of one counter
+/// synchronizes-with any store of another — the reconciliation
+/// invariant `inserts == stored + shed + refused` is checked after the
+/// involved threads are *joined* (tests) or quiesced (a drained
+/// mailbox), where the happens-before edge comes from the join/channel,
+/// not from the counters. `Relaxed` therefore suffices on every
+/// operation, and the xtask `relaxed-allowlist` lint pins exactly these
+/// fields as the ones allowed to use it. A snapshot taken mid-traffic
+/// may be internally skewed (counters read one at a time); that is
+/// inherent to per-field atomics and documented at the wire level.
+///
 /// [`SketchService`]: super::server::SketchService
 /// [`ServiceHandle`]: super::handle::ServiceHandle
 #[derive(Debug, Default)]
 pub struct ServiceCounters {
+    /// Points *provisionally* accepted at the front door (`Relaxed`:
+    /// stat only; rolled back via [`ServiceCounters::sub`] when the
+    /// offer turns out to be `Disconnected`).
     pub inserts: AtomicU64,
+    /// Acknowledged turnstile deletions (`Relaxed`: stat only, bumped
+    /// after the shard's ack — the ack channel provides the ordering).
     pub deletes: AtomicU64,
+    /// ANN queries admitted (`Relaxed`: stat only).
     pub ann_queries: AtomicU64,
+    /// KDE queries admitted (`Relaxed`: stat only).
     pub kde_queries: AtomicU64,
-    /// Points dropped by `Overload::Shed` (never commands).
+    /// Points dropped by `Overload::Shed` (never commands). `Relaxed`:
+    /// stat only; reconciled against `inserts` only at quiescence.
     pub shed_points: AtomicU64,
 }
 

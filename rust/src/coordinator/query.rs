@@ -22,8 +22,8 @@
 //! surviving shards would silently drop every point the dead shard owns,
 //! which is indistinguishable from "no near neighbor" to the caller.
 
-use std::sync::mpsc::channel;
-use std::sync::Arc;
+use crate::util::sync::mpsc::channel;
+use crate::util::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -142,7 +142,7 @@ mod tests {
     use super::*;
     use std::time::Duration;
 
-    fn fake_shard(rx: std::sync::mpsc::Receiver<ShardCmd>) -> std::thread::JoinHandle<()> {
+    fn fake_shard(rx: crate::util::sync::mpsc::Receiver<ShardCmd>) -> std::thread::JoinHandle<()> {
         std::thread::spawn(move || {
             while let Ok(cmd) = rx.recv() {
                 match cmd {

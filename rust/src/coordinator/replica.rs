@@ -40,9 +40,9 @@
 //!
 //! [`Shard`]: super::shard::Shard
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::channel;
-use std::sync::{Arc, Mutex, RwLock};
+use crate::util::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::util::sync::mpsc::channel;
+use crate::util::sync::{lock_unpoisoned, read_unpoisoned, write_unpoisoned, Arc, Mutex, RwLock};
 
 use super::backpressure::{BoundedSender, OfferOutcome};
 use super::health::{HealthBoard, ShardHealth};
@@ -50,6 +50,14 @@ use super::shard::ShardCmd;
 
 /// Decrements its replica's in-flight read gauge on drop. Hold it until
 /// the read's reply has been received (or abandoned).
+///
+/// `Relaxed` on the decrement (and on every other `depth` operation):
+/// the gauge is a load-balancing heuristic the picker scans, never a
+/// capability — a momentarily stale depth routes a read suboptimally,
+/// nothing more. The never-negative/paired-release invariants are
+/// structural (acquire+release live in one function, release in `Drop`)
+/// and are model-checked in `tests/loom_models.rs`, not enforced by
+/// ordering.
 pub struct ReadGuard {
     depth: Arc<AtomicUsize>,
 }
@@ -69,11 +77,17 @@ impl Drop for ReadGuard {
 /// being rebuilt.
 pub struct ReplicaSet {
     slots: Vec<Arc<RwLock<BoundedSender<ShardCmd>>>>,
-    /// In-flight reads per replica (gauge; see [`ReadGuard`]).
+    /// In-flight reads per replica (gauge; see [`ReadGuard`] for why
+    /// `Relaxed` suffices on every operation).
     depth: Vec<Arc<AtomicUsize>>,
     /// Cumulative reads routed per replica (diagnostics + picker tests).
+    /// `Relaxed`: a stat no control path branches on; tests assert it
+    /// only after joining the reader threads.
     reads: Vec<Arc<AtomicU64>>,
     /// Round-robin cursor for tie-breaks, shared across clones.
+    /// `Relaxed`: only the `fetch_add`'s atomicity matters (distinct
+    /// starting offsets) — any interleaving of cursor values is a valid
+    /// rotation.
     rr: Arc<AtomicUsize>,
     /// Serializes write fan-out so every replica applies the same order.
     write_order: Arc<Mutex<()>>,
@@ -137,13 +151,13 @@ impl ReplicaSet {
     /// Cloned out of its slot so the caller never holds the slot lock
     /// across a blocking send.
     pub fn primary(&self) -> BoundedSender<ShardCmd> {
-        self.slots[0].read().unwrap().clone()
+        read_unpoisoned(&self.slots[0]).clone()
     }
 
     /// Every replica's mailbox (barriers and shutdown fan out to all),
     /// cloned out of their slots.
     pub fn txs(&self) -> Vec<BoundedSender<ShardCmd>> {
-        self.slots.iter().map(|s| s.read().unwrap().clone()).collect()
+        self.slots.iter().map(|s| read_unpoisoned(s).clone()).collect()
     }
 
     /// Swap replica `r`'s mailbox for a freshly healed copy's and reset
@@ -152,7 +166,7 @@ impl ReplicaSet {
     /// this set routes through the shared slot, so the healed replica
     /// serves planes and handles built before the crash.
     pub fn install(&self, r: usize, tx: BoundedSender<ShardCmd>) {
-        *self.slots[r].write().unwrap() = tx;
+        *write_unpoisoned(&self.slots[r]) = tx;
         self.depth[r].store(0, Ordering::Relaxed);
     }
 
@@ -161,7 +175,7 @@ impl ReplicaSet {
     /// so no write can land between the image and the installed mailbox
     /// — the one interleaving that would diverge the healed copy.
     pub fn with_writes_blocked<T>(&self, f: impl FnOnce() -> T) -> T {
-        let _order = self.write_order.lock().unwrap();
+        let _order = lock_unpoisoned(&self.write_order);
         f()
     }
 
@@ -172,7 +186,7 @@ impl ReplicaSet {
     /// ships exists only under this feature.
     #[cfg(feature = "fault-injection")]
     pub fn crash_replica(&self, r: usize) -> bool {
-        self.slots[r].read().unwrap().force(ShardCmd::Crash)
+        read_unpoisoned(&self.slots[r]).force(ShardCmd::Crash)
     }
 
     /// Current in-flight read depth per replica.
@@ -223,7 +237,7 @@ impl ReplicaSet {
             let i = (first + k) % n;
             let depth = Arc::clone(&self.depth[i]);
             depth.fetch_add(1, Ordering::Relaxed);
-            let sent = self.slots[i].read().unwrap().force_or_return(cmd);
+            let sent = read_unpoisoned(&self.slots[i]).force_or_return(cmd);
             match sent {
                 Ok(()) => {
                     self.reads[i].fetch_add(1, Ordering::Relaxed);
@@ -261,7 +275,7 @@ impl ReplicaSet {
             let primary = self.primary();
             return primary.offer_outcome(cmd);
         }
-        let _order = self.write_order.lock().unwrap();
+        let _order = lock_unpoisoned(&self.write_order);
         let copies: Vec<ShardCmd> = (1..self.slots.len())
             .map(|_| {
                 cmd.clone_write()
@@ -275,7 +289,7 @@ impl ReplicaSet {
                     // mid-shutdown) simply misses the write: the healer
                     // rebuilds it from the primary's live state, which
                     // includes this command.
-                    let _ = slot.read().unwrap().force(c);
+                    let _ = read_unpoisoned(slot).force(c);
                 }
                 OfferOutcome::Sent
             }
@@ -302,7 +316,7 @@ impl ReplicaSet {
             }
             return None;
         }
-        let order = (self.slots.len() > 1).then(|| self.write_order.lock().unwrap());
+        let order = (self.slots.len() > 1).then(|| lock_unpoisoned(&self.write_order));
         let (ptx, prx) = channel();
         if !self.primary().force(ShardCmd::Delete(x.clone(), ptx)) {
             return None;
@@ -310,7 +324,7 @@ impl ReplicaSet {
         let mut secondary_acks = Vec::with_capacity(self.slots.len().saturating_sub(1));
         for slot in &self.slots[1..] {
             let (rtx, rrx) = channel();
-            if slot.read().unwrap().force(ShardCmd::Delete(x.clone(), rtx)) {
+            if read_unpoisoned(slot).force(ShardCmd::Delete(x.clone(), rtx)) {
                 secondary_acks.push(rrx);
             }
         }
@@ -330,8 +344,8 @@ mod tests {
     use super::super::backpressure::{bounded, Overload};
     use super::super::protocol::ShardAnnResult;
     use super::*;
-    use std::sync::mpsc::Receiver;
-    use std::sync::Arc;
+    use crate::util::sync::mpsc::Receiver;
+    use crate::util::sync::Arc;
 
     fn set_of(caps: &[(usize, Overload)]) -> (ReplicaSet, Vec<Receiver<ShardCmd>>) {
         let (txs, rxs): (Vec<_>, Vec<_>) =
@@ -340,7 +354,7 @@ mod tests {
     }
 
     fn ann_read(set: &ReplicaSet) -> Option<ReadGuard> {
-        let (tx, _rx) = std::sync::mpsc::channel();
+        let (tx, _rx) = crate::util::sync::mpsc::channel();
         set.read(ShardCmd::AnnBatch(Arc::new(Vec::new()), tx))
     }
 
@@ -569,7 +583,7 @@ mod tests {
             }
         });
         let set = ReplicaSet::new(vec![tx]);
-        let (rtx, rrx) = std::sync::mpsc::channel();
+        let (rtx, rrx) = crate::util::sync::mpsc::channel();
         let guard = set
             .read(ShardCmd::AnnBatch(Arc::new(vec![vec![0.0; 4]]), rtx))
             .unwrap();

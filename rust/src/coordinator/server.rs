@@ -12,8 +12,8 @@
 //! ```
 
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
-use std::sync::Arc;
+use crate::util::sync::mpsc::{channel, Receiver, RecvTimeoutError};
+use crate::util::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -397,8 +397,25 @@ impl SketchService {
         let dim = self.cfg.dim;
         let m = pts.len();
         ServiceCounters::add(&self.counters.inserts, m as u64);
+        let Some(exec) = self.executor.as_mut() else {
+            // Points can only accumulate in `pending_ingest` on the PJRT
+            // path, so this arm is unreachable today — but an unwrap here
+            // would turn a future call-order bug into a panic that drops
+            // the flushed points on the floor. Ship them natively instead:
+            // same accounting as `ship_native_batch`, batched hashing on
+            // the shard thread.
+            match self.shards[si].set.offer_write(ShardCmd::InsertBatch(pts)) {
+                OfferOutcome::Sent => {}
+                OfferOutcome::Shed => {
+                    ServiceCounters::add(&self.counters.shed_points, m as u64)
+                }
+                OfferOutcome::Disconnected => {
+                    ServiceCounters::sub(&self.counters.inserts, m as u64)
+                }
+            }
+            return;
+        };
         let flat: Vec<f32> = pts.iter().flatten().copied().collect();
-        let exec = self.executor.as_mut().unwrap();
         let (proj, bias, w, k, l) = &self.shards[si].hash_params;
         let ann_slots = exec.pstable_hash_tiled(dim, &flat, proj, bias, 1.0 / *w).ok();
         let (kproj, kbias, kw, kh, kernel) = &self.shards[si].kde_params;
@@ -497,7 +514,9 @@ impl SketchService {
         for (si, s) in self.shards.iter().enumerate() {
             let (tx, rx) = channel();
             let (proj, bias, w, k, l) = &s.hash_params;
-            let exec = self.executor.as_mut().unwrap();
+            let Some(exec) = self.executor.as_mut() else {
+                bail!("PJRT query path reached without an executor (routing bug)");
+            };
             let keys = exec
                 .pstable_hash_tiled(dim, &flat_q, proj, bias, 1.0 / *w)
                 .ok()
@@ -552,7 +571,9 @@ impl SketchService {
             return Ok(vec![None; n]);
         }
         let t_gather = t0.elapsed();
-        let exec = self.executor.as_mut().unwrap();
+        let Some(exec) = self.executor.as_mut() else {
+            bail!("PJRT re-rank reached without an executor (routing bug)");
+        };
         let p = pool_flat.len() / dim;
         let dists = match exec.dist_matrix_tiled(dim, &flat_q, &pool_flat) {
             Ok(d) => d,
@@ -847,7 +868,7 @@ impl SketchService {
     /// own state (PJRT queries, stats, flush, checkpoint) travels over
     /// `cmd_tx` and must be drained by [`Self::run_cmd_loop`] on the
     /// thread that owns the service.
-    pub fn handle(&self, cmd_tx: std::sync::mpsc::Sender<ServiceCmd>) -> ServiceHandle {
+    pub fn handle(&self, cmd_tx: crate::util::sync::mpsc::Sender<ServiceCmd>) -> ServiceHandle {
         ServiceHandle::new(
             self.shards.iter().map(|s| s.set.clone()).collect(),
             self.cfg.route,

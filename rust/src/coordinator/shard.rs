@@ -7,8 +7,8 @@
 //! cross-thread sequencing), points shed at the mailbox never reach the
 //! log, and the recorded sampler decision makes replay deterministic.
 
-use std::sync::mpsc::{Receiver, Sender};
-use std::sync::Arc;
+use crate::util::sync::mpsc::{Receiver, Sender};
+use crate::util::sync::Arc;
 
 use crate::coordinator::health::{DurabilityLossPolicy, HealthBoard, ShardHealth};
 use crate::durability::wal::{WalOp, WalRecord, WalWriter};
@@ -595,8 +595,8 @@ impl Shard {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::channel;
-    use std::sync::Arc;
+    use crate::util::sync::mpsc::channel;
+    use crate::util::sync::Arc;
 
     fn mk_shard() -> Shard {
         let ann_cfg = SAnnConfig {

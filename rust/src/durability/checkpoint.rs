@@ -32,7 +32,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use super::{crc32, io, sync_dir};
-use crate::util::bytes::{put_u32, put_u64, Reader};
+use crate::util::bytes::{put_u32, put_u64, u32_le_at, Reader};
 
 const MAGIC: &[u8; 8] = b"SKCKPT01";
 
@@ -100,8 +100,7 @@ impl CheckpointData {
             bail!("not a checkpoint file (bad magic)");
         }
         let body = &bytes[..bytes.len() - 4];
-        let want_crc =
-            u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+        let want_crc = u32_le_at(bytes, bytes.len() - 4)?;
         if crc32(body) != want_crc {
             bail!("checkpoint CRC mismatch");
         }

@@ -56,25 +56,26 @@ pub trait Io: Send {
 }
 
 #[cfg(feature = "fault-injection")]
-static INJECTOR: std::sync::Mutex<Option<Box<dyn Io>>> = std::sync::Mutex::new(None);
+static INJECTOR: crate::util::sync::Mutex<Option<Box<dyn Io>>> =
+    crate::util::sync::Mutex::new(None);
 
 /// Install a process-global injector; returns the one it replaced.
 /// Faults are process-global state — tests that install one must
 /// serialize on their own lock and [`clear`] when done.
 #[cfg(feature = "fault-injection")]
 pub fn install(io: Box<dyn Io>) -> Option<Box<dyn Io>> {
-    INJECTOR.lock().unwrap().replace(io)
+    crate::util::sync::lock_unpoisoned(&INJECTOR).replace(io)
 }
 
 /// Remove the installed injector (subsequent calls pass through).
 #[cfg(feature = "fault-injection")]
 pub fn clear() -> Option<Box<dyn Io>> {
-    INJECTOR.lock().unwrap().take()
+    crate::util::sync::lock_unpoisoned(&INJECTOR).take()
 }
 
 #[cfg(feature = "fault-injection")]
 fn with_injector<T>(default: T, f: impl FnOnce(&mut dyn Io) -> T) -> T {
-    match INJECTOR.lock().unwrap().as_mut() {
+    match crate::util::sync::lock_unpoisoned(&INJECTOR).as_mut() {
         Some(io) => f(io.as_mut()),
         None => default,
     }
@@ -152,12 +153,12 @@ pub enum FaultRule {
 #[cfg(feature = "fault-injection")]
 #[derive(Debug, Default)]
 pub struct FaultStats {
-    pub syncs: std::sync::atomic::AtomicU64,
-    pub writes: std::sync::atomic::AtomicU64,
-    pub bytes_written: std::sync::atomic::AtomicU64,
-    pub renames: std::sync::atomic::AtomicU64,
-    pub opens: std::sync::atomic::AtomicU64,
-    pub injected: std::sync::atomic::AtomicU64,
+    pub syncs: crate::util::sync::atomic::AtomicU64,
+    pub writes: crate::util::sync::atomic::AtomicU64,
+    pub bytes_written: crate::util::sync::atomic::AtomicU64,
+    pub renames: crate::util::sync::atomic::AtomicU64,
+    pub opens: crate::util::sync::atomic::AtomicU64,
+    pub injected: crate::util::sync::atomic::AtomicU64,
 }
 
 /// Deterministic, rule-driven [`Io`]: replays the same failures for the
@@ -166,7 +167,7 @@ pub struct FaultStats {
 #[cfg(feature = "fault-injection")]
 pub struct FaultInjector {
     rules: Vec<FaultRule>,
-    stats: std::sync::Arc<FaultStats>,
+    stats: crate::util::sync::Arc<FaultStats>,
     rng_state: u64,
 }
 
@@ -175,14 +176,14 @@ impl FaultInjector {
     pub fn new(seed: u64, rules: Vec<FaultRule>) -> Self {
         FaultInjector {
             rules,
-            stats: std::sync::Arc::new(FaultStats::default()),
+            stats: crate::util::sync::Arc::new(FaultStats::default()),
             rng_state: seed | 1,
         }
     }
 
     /// Handle onto the live counters (clone before [`install`]).
-    pub fn stats(&self) -> std::sync::Arc<FaultStats> {
-        std::sync::Arc::clone(&self.stats)
+    pub fn stats(&self) -> crate::util::sync::Arc<FaultStats> {
+        crate::util::sync::Arc::clone(&self.stats)
     }
 
     fn next_rand(&mut self) -> u64 {
@@ -196,7 +197,7 @@ impl FaultInjector {
     }
 
     fn hit(&self) {
-        use std::sync::atomic::Ordering;
+        use crate::util::sync::atomic::Ordering;
         self.stats.injected.fetch_add(1, Ordering::Relaxed);
     }
 }
@@ -204,7 +205,7 @@ impl FaultInjector {
 #[cfg(feature = "fault-injection")]
 impl Io for FaultInjector {
     fn before_open(&mut self, _path: &Path) -> Result<()> {
-        use std::sync::atomic::Ordering;
+        use crate::util::sync::atomic::Ordering;
         let n = self.stats.opens.fetch_add(1, Ordering::Relaxed) + 1;
         for r in &self.rules {
             if let FaultRule::FailNthOpen(at) = r {
@@ -218,7 +219,7 @@ impl Io for FaultInjector {
     }
 
     fn before_write(&mut self, len: usize) -> WriteDecision {
-        use std::sync::atomic::Ordering;
+        use crate::util::sync::atomic::Ordering;
         let before = self.stats.bytes_written.load(Ordering::Relaxed);
         self.stats.writes.fetch_add(1, Ordering::Relaxed);
         for r in &self.rules {
@@ -245,7 +246,7 @@ impl Io for FaultInjector {
     }
 
     fn before_sync(&mut self) -> Result<()> {
-        use std::sync::atomic::Ordering;
+        use crate::util::sync::atomic::Ordering;
         let n = self.stats.syncs.fetch_add(1, Ordering::Relaxed) + 1;
         for r in &self.rules {
             if let FaultRule::FailNthSync(at) = r {
@@ -259,7 +260,7 @@ impl Io for FaultInjector {
     }
 
     fn before_rename(&mut self, _from: &Path, _to: &Path) -> Result<()> {
-        use std::sync::atomic::Ordering;
+        use crate::util::sync::atomic::Ordering;
         let n = self.stats.renames.fetch_add(1, Ordering::Relaxed) + 1;
         for r in &self.rules {
             if let FaultRule::FailNthRename(at) = r {
@@ -310,7 +311,7 @@ mod tests {
         assert!(inj.before_sync().is_ok());
         assert!(inj.before_sync().is_err(), "third sync fails");
         assert!(inj.before_sync().is_err(), "and the device stays failed");
-        assert_eq!(stats.syncs.load(std::sync::atomic::Ordering::Relaxed), 4);
-        assert_eq!(stats.injected.load(std::sync::atomic::Ordering::Relaxed), 2);
+        assert_eq!(stats.syncs.load(crate::util::sync::atomic::Ordering::Relaxed), 4);
+        assert_eq!(stats.injected.load(crate::util::sync::atomic::Ordering::Relaxed), 2);
     }
 }

@@ -31,7 +31,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use super::{crc32, io, FsyncPolicy};
-use crate::util::bytes::{put_f32, put_u32, put_u64};
+use crate::util::bytes::{put_f32, put_u32, put_u64, u32_le_at, u64_le_at};
 
 /// First payload byte of every record.
 pub const WAL_VERSION: u8 = 1;
@@ -43,9 +43,9 @@ pub const MAX_RECORD_BYTES: usize = 1 << 23;
 pub const DEFAULT_SEGMENT_BYTES: u64 = 16 << 20;
 
 mod op {
-    pub const INSERT_RETAINED: u8 = 1;
-    pub const INSERT_DROPPED: u8 = 2;
-    pub const DELETE: u8 = 3;
+    pub(super) const INSERT_RETAINED: u8 = 1;
+    pub(super) const INSERT_DROPPED: u8 = 2;
+    pub(super) const DELETE: u8 = 3;
 }
 
 /// A logged, applied mutation.
@@ -106,11 +106,11 @@ impl WalRecord {
         if bytes.len() < 8 {
             bail!("WAL record header truncated ({} bytes)", bytes.len());
         }
-        let len = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+        let len = u32_le_at(bytes, 0)? as usize;
         if len == 0 || len > MAX_RECORD_BYTES {
             bail!("WAL record payload of {len} bytes outside (0, {MAX_RECORD_BYTES}]");
         }
-        let want_crc = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        let want_crc = u32_le_at(bytes, 4)?;
         if bytes.len() < 8 + len {
             bail!("WAL record truncated: header claims {len} payload bytes");
         }
@@ -130,8 +130,8 @@ impl WalRecord {
             op::DELETE => WalOp::Delete,
             other => bail!("unknown WAL op {other}"),
         };
-        let seq = u64::from_le_bytes(payload[2..10].try_into().unwrap());
-        let dim = u32::from_le_bytes(payload[10..14].try_into().unwrap()) as usize;
+        let seq = u64_le_at(payload, 2)?;
+        let dim = u32_le_at(payload, 10)? as usize;
         if dim == 0 {
             bail!("WAL record has a zero-dimensional vector");
         }
@@ -146,7 +146,7 @@ impl WalRecord {
         }
         let vec: Vec<f32> = payload[14..]
             .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
         Ok((WalRecord { seq, op: walop, vec }, 8 + len))
     }

@@ -8,6 +8,9 @@
 //! through PJRT. See DESIGN.md for the system inventory and EXPERIMENTS.md
 //! for the paper-vs-measured record.
 
+#![forbid(unsafe_code)]
+#![deny(rust_2018_idioms, unreachable_pub)]
+
 pub mod baselines;
 pub mod bench_support;
 pub mod cli;

@@ -584,12 +584,12 @@ fn run_query_load(args: &Args, addr: &str) -> Result<()> {
         "[client] query-load: seeded {n} pts; {conns} connection(s) sharing {n_queries} queries (batch={batch})"
     );
 
-    let pts = std::sync::Arc::new(pts);
+    let pts = sublinear_sketch::util::sync::Arc::new(pts);
     let mut wall = Throughput::new();
     let workers: Vec<_> = (0..conns)
         .map(|t| {
             let addr = addr.to_string();
-            let pts = std::sync::Arc::clone(&pts);
+            let pts = sublinear_sketch::util::sync::Arc::clone(&pts);
             let q_per = n_queries / conns + usize::from(t < n_queries % conns);
             let opts = ClientOptions { seed: opts.seed ^ (t as u64 + 1), ..opts };
             std::thread::spawn(

@@ -40,25 +40,25 @@ pub const MAX_FRAME_BYTES: usize = 1 << 26;
 const DECODE_PREALLOC_CAP: usize = 4096;
 
 mod op {
-    pub const HELLO: u8 = 1;
-    pub const INSERT: u8 = 2;
-    pub const INSERT_BATCH: u8 = 3;
-    pub const DELETE: u8 = 4;
-    pub const ANN_QUERY: u8 = 5;
-    pub const KDE_QUERY: u8 = 6;
-    pub const STATS: u8 = 7;
-    pub const FLUSH: u8 = 8;
-    pub const SHUTDOWN: u8 = 9;
-    pub const CHECKPOINT: u8 = 10;
+    pub(super) const HELLO: u8 = 1;
+    pub(super) const INSERT: u8 = 2;
+    pub(super) const INSERT_BATCH: u8 = 3;
+    pub(super) const DELETE: u8 = 4;
+    pub(super) const ANN_QUERY: u8 = 5;
+    pub(super) const KDE_QUERY: u8 = 6;
+    pub(super) const STATS: u8 = 7;
+    pub(super) const FLUSH: u8 = 8;
+    pub(super) const SHUTDOWN: u8 = 9;
+    pub(super) const CHECKPOINT: u8 = 10;
 
-    pub const R_HELLO: u8 = 128;
-    pub const R_ACK: u8 = 129;
-    pub const R_DELETED: u8 = 130;
-    pub const R_ANN: u8 = 131;
-    pub const R_KDE: u8 = 132;
-    pub const R_STATS: u8 = 133;
-    pub const R_ERROR: u8 = 134;
-    pub const R_CHECKPOINT: u8 = 135;
+    pub(super) const R_HELLO: u8 = 128;
+    pub(super) const R_ACK: u8 = 129;
+    pub(super) const R_DELETED: u8 = 130;
+    pub(super) const R_ANN: u8 = 131;
+    pub(super) const R_KDE: u8 = 132;
+    pub(super) const R_STATS: u8 = 133;
+    pub(super) const R_ERROR: u8 = 134;
+    pub(super) const R_CHECKPOINT: u8 = 135;
 }
 
 /// Client → server frames.
@@ -126,7 +126,7 @@ fn put_stats(out: &mut Vec<u8>, st: &ServiceStats) {
     put_u64(out, st.refused_writes);
 }
 
-fn read_stats(c: &mut Cursor) -> Result<ServiceStats> {
+fn read_stats(c: &mut Cursor<'_>) -> Result<ServiceStats> {
     let mut st = ServiceStats {
         inserts: c.u64()?,
         deletes: c.u64()?,

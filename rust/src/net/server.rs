@@ -17,10 +17,11 @@
 
 use std::io::{BufReader, BufWriter};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+use crate::util::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use crate::util::sync::mpsc::{channel, RecvTimeoutError, Sender};
+use crate::util::sync::{lock_unpoisoned, Arc, Mutex};
 
 use anyhow::{Context, Result};
 
@@ -58,12 +59,26 @@ const PARK_POLL: Duration = Duration::from_micros(100);
 /// in flight the deadline is 0: a parked query self-flushes immediately
 /// instead of stranding, preserving the zero-added-latency floor for
 /// idle traffic.
+///
+/// # Memory-ordering contract
+///
+/// All three atomics are heuristic gauges feeding a *deadline length*,
+/// never a correctness decision: a stale read makes a parked query wait
+/// a little longer or flush a little earlier, and the park loop's
+/// `PARK_POLL` re-check bounds the damage either way. No gauge
+/// publishes other memory, so every operation is `Relaxed`.
 pub struct LoadAwareWait {
     cap: Duration,
+    /// Scatters currently executing (`Relaxed` gauge; pairing of the
+    /// increment/decrement is structural — both live in
+    /// `CoalescingLane::run_tracked` — and model-checked under loom).
     in_flight: AtomicUsize,
-    /// EWMA of the arrival rate (arrivals/sec; f64 bits).
+    /// EWMA of the arrival rate (arrivals/sec; f64 bits). `Relaxed`,
+    /// and the read-modify-write below is deliberately non-atomic as a
+    /// whole: a lost update skews the estimate by one sample.
     rate_bits: AtomicU64,
-    /// Nanos since `base` of the most recent arrival.
+    /// Nanos since `base` of the most recent arrival. `Relaxed`: feeds
+    /// only the EWMA's inter-arrival delta.
     last_arrival_ns: AtomicU64,
     base: Instant,
 }
@@ -203,72 +218,86 @@ impl<T> Lane<T> {
 /// errors every query in the batch rather than answering partially.
 pub struct QueryCoalescer {
     handle: ServiceHandle,
-    policy: BatchPolicy,
-    load: LoadAwareWait,
-    ann: Mutex<Lane<PendingAnn>>,
-    kde: Mutex<Lane<PendingKde>>,
+    core: Arc<CoalescerCore>,
+    ann: CoalescingLane<PendingAnn>,
+    kde: CoalescingLane<PendingKde>,
 }
 
-impl QueryCoalescer {
-    pub fn new(handle: ServiceHandle, policy: BatchPolicy) -> Self {
-        QueryCoalescer {
-            handle,
-            policy,
-            load: LoadAwareWait::new(policy.max_wait),
-            ann: Mutex::new(Lane { pending: Batcher::new(policy), in_flight: false }),
-            kde: Mutex::new(Lane { pending: Batcher::new(policy), in_flight: false }),
-        }
+/// The knobs one coalescer's lanes share: the batch policy and the
+/// load gauge every lane's straggler deadline is scaled by (both lanes
+/// feed ONE gauge — a KDE scatter in flight is load an ANN straggler
+/// should wait out too).
+pub struct CoalescerCore {
+    policy: BatchPolicy,
+    load: LoadAwareWait,
+}
+
+impl CoalescerCore {
+    pub fn new(policy: BatchPolicy) -> Self {
+        CoalescerCore { policy, load: LoadAwareWait::new(policy.max_wait) }
     }
 
     /// Live load signals (observability + tests).
     pub fn load(&self) -> &LoadAwareWait {
         &self.load
     }
+}
+
+/// One lane of the coalescer, generic over the pending-query type AND
+/// the runner — the ONE admission/wait/self-flush protocol lives here,
+/// shared by the ANN and KDE lanes so a change to the coalescing rules
+/// can't diverge them, and parametrized so the loom model in
+/// `tests/loom_models.rs` can drive the real protocol with a recording
+/// runner instead of a full `ServiceHandle`.
+pub struct CoalescingLane<T> {
+    core: Arc<CoalescerCore>,
+    lane: Mutex<Lane<T>>,
+}
+
+impl<T> CoalescingLane<T> {
+    pub fn new(core: Arc<CoalescerCore>) -> Self {
+        CoalescingLane {
+            lane: Mutex::new(Lane { pending: Batcher::new(core.policy), in_flight: false }),
+            core,
+        }
+    }
 
     /// Run one batch with the in-flight scatter gauge held — the gauge
     /// is what scales every parked query's deadline.
-    fn run_tracked<T>(&self, batch: Vec<T>, run: &impl Fn(&Self, Vec<T>)) {
-        self.load.scatter_started();
-        run(self, batch);
-        self.load.scatter_finished();
+    fn run_tracked(&self, batch: Vec<T>, run: &impl Fn(Vec<T>)) {
+        self.core.load.scatter_started();
+        run(batch);
+        self.core.load.scatter_finished();
     }
 
-    /// One ANN query, possibly answered as part of a coalesced batch.
-    pub fn ann_one(&self, q: Vec<f32>) -> Result<Option<AnnAnswer>, String> {
-        self.one_shot(&self.ann, |reply| PendingAnn { q, reply }, Self::run_ann)
-    }
-
-    /// One KDE query → (kernel sum, density), possibly coalesced.
-    pub fn kde_one(&self, q: Vec<f32>) -> Result<(f64, f64), String> {
-        self.one_shot(&self.kde, |reply| PendingKde { q, reply }, Self::run_kde)
-    }
-
-    /// The ONE admission/wait/self-flush protocol, shared by both lanes
-    /// so a future change to the coalescing rules can't diverge them.
-    fn one_shot<T, R>(
+    /// Admit one query, run or park per the group-commit model, and
+    /// block until its reply arrives. `make` builds the pending entry
+    /// around the reply sender; `run` executes a batch (every entry's
+    /// reply MUST be sent — the module-level runners uphold this on
+    /// both the success and error paths).
+    pub fn one_shot<R>(
         &self,
-        lane: &Mutex<Lane<T>>,
         make: impl FnOnce(Sender<Result<R, String>>) -> T,
-        run: impl Fn(&Self, Vec<T>),
+        run: impl Fn(Vec<T>),
     ) -> Result<R, String> {
-        self.load.note_arrival();
+        self.core.load.note_arrival();
         let (tx, rx) = channel();
         let admission = {
-            let mut l = lane.lock().unwrap();
+            let mut l = lock_unpoisoned(&self.lane);
             // The straggler deadline is pinned at admission from the
             // CURRENT load — under pileup it stretches toward the cap
             // (bigger pickups), when traffic thins it collapses to ~0.
-            l.admit(make(tx), self.load.current())
+            l.admit(make(tx), self.core.load.current())
         };
         if let Admission::Run { batch, lead } = admission {
             self.run_tracked(batch, &run);
             if lead {
-                lane.lock().unwrap().in_flight = false;
+                lock_unpoisoned(&self.lane).in_flight = false;
             }
             // Our reply was sent by the runner; fall through to collect it.
         }
         loop {
-            match rx.recv_timeout(self.policy.max_wait.min(PARK_POLL)) {
+            match rx.recv_timeout(self.core.policy.max_wait.min(PARK_POLL)) {
                 Ok(res) => return res,
                 Err(RecvTimeoutError::Timeout) => {
                     // Parked with the deadline expired — or with the
@@ -276,8 +305,8 @@ impl QueryCoalescer {
                     // lead: take whatever accumulated (ours included)
                     // ourselves.
                     let due = {
-                        let mut l = lane.lock().unwrap();
-                        if l.pending.deadline_due() || self.load.idle() {
+                        let mut l = lock_unpoisoned(&self.lane);
+                        if l.pending.deadline_due() || self.core.load.idle() {
                             l.pending.flush()
                         } else {
                             Vec::new()
@@ -293,41 +322,70 @@ impl QueryCoalescer {
             }
         }
     }
+}
 
-    fn run_ann(&self, batch: Vec<PendingAnn>) {
-        let (qs, replies): (Vec<_>, Vec<_>) =
-            batch.into_iter().map(|p| (p.q, p.reply)).unzip();
-        match self.handle.query_batch(qs) {
-            Ok(answers) => {
-                for (reply, ans) in replies.into_iter().zip(answers) {
-                    let _ = reply.send(Ok(ans));
-                }
-            }
-            Err(e) => {
-                let msg = e.to_string();
-                for reply in replies {
-                    let _ = reply.send(Err(msg.clone()));
-                }
-            }
+impl QueryCoalescer {
+    pub fn new(handle: ServiceHandle, policy: BatchPolicy) -> Self {
+        let core = Arc::new(CoalescerCore::new(policy));
+        QueryCoalescer {
+            handle,
+            ann: CoalescingLane::new(Arc::clone(&core)),
+            kde: CoalescingLane::new(Arc::clone(&core)),
+            core,
         }
     }
 
-    fn run_kde(&self, batch: Vec<PendingKde>) {
-        let (qs, replies): (Vec<_>, Vec<_>) =
-            batch.into_iter().map(|p| (p.q, p.reply)).unzip();
-        match self.handle.kde_batch(qs) {
-            Ok((sums, densities)) => {
-                for (reply, (s, d)) in
-                    replies.into_iter().zip(sums.into_iter().zip(densities))
-                {
-                    let _ = reply.send(Ok((s, d)));
-                }
+    /// Live load signals (observability + tests).
+    pub fn load(&self) -> &LoadAwareWait {
+        self.core.load()
+    }
+
+    /// One ANN query, possibly answered as part of a coalesced batch.
+    pub fn ann_one(&self, q: Vec<f32>) -> Result<Option<AnnAnswer>, String> {
+        self.ann
+            .one_shot(|reply| PendingAnn { q, reply }, |batch| run_ann(&self.handle, batch))
+    }
+
+    /// One KDE query → (kernel sum, density), possibly coalesced.
+    pub fn kde_one(&self, q: Vec<f32>) -> Result<(f64, f64), String> {
+        self.kde
+            .one_shot(|reply| PendingKde { q, reply }, |batch| run_kde(&self.handle, batch))
+    }
+}
+
+fn run_ann(handle: &ServiceHandle, batch: Vec<PendingAnn>) {
+    let (qs, replies): (Vec<_>, Vec<_>) =
+        batch.into_iter().map(|p| (p.q, p.reply)).unzip();
+    match handle.query_batch(qs) {
+        Ok(answers) => {
+            for (reply, ans) in replies.into_iter().zip(answers) {
+                let _ = reply.send(Ok(ans));
             }
-            Err(e) => {
-                let msg = e.to_string();
-                for reply in replies {
-                    let _ = reply.send(Err(msg.clone()));
-                }
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            for reply in replies {
+                let _ = reply.send(Err(msg.clone()));
+            }
+        }
+    }
+}
+
+fn run_kde(handle: &ServiceHandle, batch: Vec<PendingKde>) {
+    let (qs, replies): (Vec<_>, Vec<_>) =
+        batch.into_iter().map(|p| (p.q, p.reply)).unzip();
+    match handle.kde_batch(qs) {
+        Ok((sums, densities)) => {
+            for (reply, (s, d)) in
+                replies.into_iter().zip(sums.into_iter().zip(densities))
+            {
+                let _ = reply.send(Ok((s, d)));
+            }
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            for reply in replies {
+                let _ = reply.send(Err(msg.clone()));
             }
         }
     }
@@ -381,7 +439,11 @@ impl WireServer {
         let addr = self.local_addr()?;
         let mut conn_id = 0usize;
         for stream in self.listener.incoming() {
-            if self.stop.load(Ordering::SeqCst) {
+            // Acquire pairs with the Release store in `serve_conn`'s
+            // shutdown arm (audit: was SeqCst — nothing here needs a
+            // total order across unrelated atomics, only to observe the
+            // flag and anything the storing thread wrote before it).
+            if self.stop.load(Ordering::Acquire) {
                 break;
             }
             let stream = match stream {
@@ -426,7 +488,9 @@ fn serve_conn(
                 let resp = dispatch(req, &handle, &coalescer);
                 write_frame(&mut writer, &resp.encode())?;
                 if is_shutdown {
-                    stop.store(true, Ordering::SeqCst);
+                    // Release pairs with the Acquire load in `run`'s
+                    // accept loop (see the audit note there).
+                    stop.store(true, Ordering::Release);
                     // Poke the blocking accept() so run() observes `stop`.
                     // A wildcard bind (0.0.0.0/::) is not connectable on
                     // every platform — poke via the matching loopback.
@@ -477,6 +541,16 @@ fn check_vectors(handle: &ServiceHandle, vs: &[Vec<f32>]) -> Result<(), Response
     Ok(())
 }
 
+/// Take the query out of a singleton batch (the coalesced path), `None`
+/// for real batches — which scatter directly from the connection thread.
+fn single_query(qs: &mut Vec<Vec<f32>>) -> Option<Vec<f32>> {
+    if qs.len() == 1 {
+        qs.pop()
+    } else {
+        None
+    }
+}
+
 fn dispatch(req: Request, handle: &ServiceHandle, coalescer: &QueryCoalescer) -> Response {
     match req {
         Request::Hello => Response::Hello {
@@ -510,8 +584,8 @@ fn dispatch(req: Request, handle: &ServiceHandle, coalescer: &QueryCoalescer) ->
             }
             // Singletons coalesce across connections; real batches are
             // already amortized and scatter directly from this thread.
-            if qs.len() == 1 {
-                match coalescer.ann_one(qs.pop().expect("len checked")) {
+            if let Some(q) = single_query(&mut qs) {
+                match coalescer.ann_one(q) {
                     Ok(ans) => Response::AnnAnswers(vec![ans]),
                     Err(e) => Response::Error(e),
                 }
@@ -526,8 +600,8 @@ fn dispatch(req: Request, handle: &ServiceHandle, coalescer: &QueryCoalescer) ->
             if let Err(resp) = check_vectors(handle, &qs) {
                 return resp;
             }
-            if qs.len() == 1 {
-                match coalescer.kde_one(qs.pop().expect("len checked")) {
+            if let Some(q) = single_query(&mut qs) {
+                match coalescer.kde_one(q) {
                     Ok((s, d)) => {
                         Response::KdeAnswers { sums: vec![s], densities: vec![d] }
                     }

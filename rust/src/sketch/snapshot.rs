@@ -229,7 +229,7 @@ fn save_bounded_hasher(out: &mut Vec<u8>, h: &BoundedHasher) {
 /// Read + validate a bounded-hasher shape. Returns a hasher whose
 /// constructor asserts are all guaranteed to hold (the validation here is
 /// strictly stronger), so hostile headers error instead of panicking.
-fn load_bounded_hasher(r: &mut Reader) -> Result<BoundedHasher> {
+fn load_bounded_hasher(r: &mut Reader<'_>) -> Result<BoundedHasher> {
     let map = r.u8()?;
     let p = r.u64()?;
     let rows = r.u64()?;
@@ -313,7 +313,7 @@ fn save_eh(out: &mut Vec<u8>, eh: &ExpHistogram) {
     }
 }
 
-fn load_eh(r: &mut Reader, eps: f64, window: u64) -> Result<ExpHistogram> {
+fn load_eh(r: &mut Reader<'_>, eps: f64, window: u64) -> Result<ExpHistogram> {
     let last_ts = r.u64()?;
     let n_levels = r.u32()? as usize;
     if n_levels > 63 {

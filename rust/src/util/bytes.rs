@@ -34,6 +34,27 @@ pub fn put_f64(out: &mut Vec<u8>, v: f64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
+/// Fixed-width little-endian read at an offset, validated against the
+/// bytes present. The unwrap-free primitive the WAL and checkpoint
+/// decoders frame-check with (slice-pattern matching instead of
+/// `try_into().unwrap()` — corrupt input must error, never panic).
+pub fn u32_le_at(b: &[u8], at: usize) -> Result<u32> {
+    match b.get(at..).and_then(|s| s.get(..4)) {
+        Some(&[x0, x1, x2, x3]) => Ok(u32::from_le_bytes([x0, x1, x2, x3])),
+        _ => bail!("truncated u32 at byte {at}"),
+    }
+}
+
+/// [`u32_le_at`], eight bytes wide.
+pub fn u64_le_at(b: &[u8], at: usize) -> Result<u64> {
+    match b.get(at..).and_then(|s| s.get(..8)) {
+        Some(&[x0, x1, x2, x3, x4, x5, x6, x7]) => {
+            Ok(u64::from_le_bytes([x0, x1, x2, x3, x4, x5, x6, x7]))
+        }
+        _ => bail!("truncated u64 at byte {at}"),
+    }
+}
+
 /// Cursor over untrusted input: every read is validated against the
 /// bytes present BEFORE any slicing or allocation.
 pub struct Reader<'a> {
@@ -118,6 +139,17 @@ mod tests {
         assert_eq!(r.u64().unwrap(), 7);
         assert!(r.u8().is_err(), "past the end");
         r.finish().unwrap();
+    }
+
+    #[test]
+    fn offset_reads_validate_bounds() {
+        let mut bytes = Vec::new();
+        put_u32(&mut bytes, 0xDEAD_BEEF);
+        put_u64(&mut bytes, 42);
+        assert_eq!(u32_le_at(&bytes, 0).unwrap(), 0xDEAD_BEEF);
+        assert_eq!(u64_le_at(&bytes, 4).unwrap(), 42);
+        assert!(u32_le_at(&bytes, 9).is_err(), "only 3 bytes left");
+        assert!(u64_le_at(&bytes, usize::MAX).is_err(), "offset past the end");
     }
 
     #[test]

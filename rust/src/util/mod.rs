@@ -5,6 +5,7 @@ pub mod json;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 
 /// Lanes of the unrolled reductions below. Eight f32 accumulators break
 /// the sequential-FMA dependency chain so LLVM can keep the loop in SIMD

@@ -1,0 +1,102 @@
+//! The crate's single synchronization facade.
+//!
+//! Every concurrent module imports its primitives from here instead of
+//! from `std::sync` (enforced by `cargo run -p xtask -- lint`, lint
+//! `sync-facade`). Under a normal build the re-exports are exactly
+//! `std::sync`; under `RUSTFLAGS="--cfg loom"` they swap to
+//! `loom::sync`, so the loom models in `tests/loom_models.rs` exercise
+//! the *same* `ReplicaSet`/`HealthBoard`/coalescer code the server runs,
+//! with preemption points injected at every atomic and lock operation.
+//!
+//! Channels are the one deliberate exception: loom does not model
+//! `mpsc` (neither the real crate nor the vendored stub), so [`mpsc`]
+//! is pinned to std under every cfg and the models treat mailboxes as
+//! opaque. The interleavings under test are the ones *around* the
+//! channels — admission gates, depth gauges, health escalation — which
+//! is where the hand-rolled atomics live.
+
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex, RwLock, Weak};
+
+#[cfg(loom)]
+pub use loom::sync::{Arc, Condvar, Mutex, RwLock, Weak};
+
+// Guard and error types are std's under both cfgs: the vendored loom
+// wraps std primitives and hands back their guards unchanged.
+pub use std::sync::{
+    LockResult, MutexGuard, PoisonError, RwLockReadGuard, RwLockWriteGuard, TryLockError,
+};
+
+pub mod atomic {
+    //! Atomic types + `Ordering`, cfg-switched like the lock types.
+    #[cfg(not(loom))]
+    pub use std::sync::atomic::{
+        AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering,
+    };
+
+    #[cfg(loom)]
+    pub use loom::sync::atomic::{
+        AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering,
+    };
+}
+
+pub mod mpsc {
+    //! Std channels under every cfg (loom does not model them).
+    pub use std::sync::mpsc::*;
+}
+
+/// Lock a mutex, recovering from poisoning. Every mutex in this crate
+/// guards plain data whose invariants hold between operations (pending
+/// query batches, a fan-out order token, an injected-fault slot), so a
+/// panic on another thread mid-critical-section cannot leave torn state
+/// worth refusing — propagating the poison would only convert one
+/// thread's panic into a crate-wide denial of service.
+pub fn lock_unpoisoned<T: ?Sized>(mutex: &Mutex<T>) -> MutexGuard<'_, T> {
+    match mutex.lock() {
+        Ok(guard) => guard,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// [`lock_unpoisoned`], for read-locking an `RwLock`.
+pub fn read_unpoisoned<T: ?Sized>(lock: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    match lock.read() {
+        Ok(guard) => guard,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// [`lock_unpoisoned`], for write-locking an `RwLock`.
+pub fn write_unpoisoned<T: ?Sized>(lock: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    match lock.write() {
+        Ok(guard) => guard,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lock_unpoisoned_recovers_after_a_panicking_holder() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock();
+            panic!("poison the lock");
+        })
+        .join();
+        assert_eq!(*lock_unpoisoned(&m), 7, "data survives the poison");
+        *lock_unpoisoned(&m) = 8;
+        assert_eq!(*lock_unpoisoned(&m), 8);
+    }
+
+    #[test]
+    fn rwlock_helpers_round_trip() {
+        let l = RwLock::new(vec![1, 2, 3]);
+        assert_eq!(read_unpoisoned(&l).len(), 3);
+        write_unpoisoned(&l).push(4);
+        assert_eq!(read_unpoisoned(&l).len(), 4);
+    }
+}

@@ -1,0 +1,290 @@
+//! Loom models for the replicated query plane. Compiled ONLY under
+//! `RUSTFLAGS="--cfg loom"` (the `loom` CI job); under a normal
+//! `cargo test` this file is empty and the target trivially passes.
+//!
+//! Each model re-runs a small concurrent scenario across many schedules
+//! (the vendored `loom` stub randomizes interleavings with seeded
+//! yields; `LOOM_ITERS` controls the schedule count) and asserts an
+//! invariant the production code relies on structurally rather than
+//! through memory ordering — exactly the class of bug `Relaxed` stats
+//! and gauge counters can hide:
+//!
+//! 1. `HealthBoard` severity never regresses under racing reporters.
+//! 2. The replica read-depth gauge never wraps and releases once.
+//! 3. Overload shedding is decided once, by the primary — secondaries
+//!    mirror the kept command sequence exactly.
+//! 4. The query coalescer neither loses nor duplicates a query.
+//! 5. `inserts == stored + shed` reconciles at quiescence even with a
+//!    mid-stream `ReadOnly` escalation.
+//! 6. The scatter in-flight gauge pairs start/finish exactly.
+
+#![cfg(loom)]
+
+use std::time::Duration;
+
+use sublinear_sketch::coordinator::protocol::ShardAnnResult;
+use sublinear_sketch::coordinator::shard::ShardCmd;
+use sublinear_sketch::coordinator::{
+    bounded, BatchPolicy, HealthBoard, OfferOutcome, Overload, ReplicaSet, ServiceCounters,
+    ShardHealth,
+};
+use sublinear_sketch::net::server::{CoalescerCore, CoalescingLane, LoadAwareWait};
+use sublinear_sketch::util::sync::mpsc::{channel, Receiver, Sender};
+use sublinear_sketch::util::sync::{lock_unpoisoned, Arc, Mutex};
+
+fn drained_inserts(rx: &Receiver<ShardCmd>) -> Vec<Vec<f32>> {
+    let mut out = Vec::new();
+    while let Ok(cmd) = rx.try_recv() {
+        if let ShardCmd::Insert(x) = cmd {
+            out.push(x);
+        }
+    }
+    out
+}
+
+#[test]
+fn health_board_is_monotone_under_racing_reporters() {
+    loom::model(|| {
+        let board = Arc::new(HealthBoard::new(2));
+        let reporters: Vec<_> = [
+            (0usize, ShardHealth::Degraded),
+            (0, ShardHealth::ReadOnly),
+            (1, ShardHealth::Degraded),
+        ]
+        .into_iter()
+        .map(|(shard, to)| {
+            let board = Arc::clone(&board);
+            loom::thread::spawn(move || board.escalate(shard, to))
+        })
+        .collect();
+        let observer = {
+            let board = Arc::clone(&board);
+            loom::thread::spawn(move || {
+                let mut last = [0u8; 2];
+                for _ in 0..8 {
+                    for (shard, seen) in last.iter_mut().enumerate() {
+                        let now = board.get(shard).as_u8();
+                        assert!(now >= *seen, "shard {shard} health regressed");
+                        *seen = now;
+                    }
+                }
+            })
+        };
+        for r in reporters {
+            r.join().unwrap();
+        }
+        observer.join().unwrap();
+        assert_eq!(board.get(0), ShardHealth::ReadOnly);
+        assert_eq!(board.get(1), ShardHealth::Degraded);
+        assert_eq!(board.worst(), ShardHealth::ReadOnly);
+    });
+}
+
+#[test]
+fn read_gauge_never_wraps_and_releases_exactly_once() {
+    const READERS: usize = 3;
+    loom::model(|| {
+        let (txs, rxs): (Vec<_>, Vec<_>) =
+            (0..2).map(|_| bounded::<ShardCmd>(8, Overload::Block)).unzip();
+        let echoes: Vec<_> = rxs
+            .into_iter()
+            .map(|rx| {
+                loom::thread::spawn(move || {
+                    while let Ok(cmd) = rx.recv() {
+                        match cmd {
+                            ShardCmd::AnnBatch(batch, reply) => {
+                                let _ = reply.send(ShardAnnResult {
+                                    best: vec![None; batch.len()],
+                                    scanned: 0,
+                                });
+                            }
+                            ShardCmd::Shutdown => break,
+                            _ => {}
+                        }
+                    }
+                })
+            })
+            .collect();
+        let set = Arc::new(ReplicaSet::new(txs));
+        let readers: Vec<_> = (0..READERS)
+            .map(|_| {
+                let set = Arc::clone(&set);
+                loom::thread::spawn(move || {
+                    let (tx, rx) = channel();
+                    let guard = set
+                        .read(ShardCmd::AnnBatch(Arc::new(vec![vec![0.0; 2]]), tx))
+                        .expect("both replicas are live");
+                    let _ = rx.recv();
+                    drop(guard);
+                })
+            })
+            .collect();
+        // Sampling observer: the gauge is a usize — a double-release
+        // would wrap it to ~usize::MAX, a leak would strand it above 0.
+        for _ in 0..8 {
+            for depth in set.depths() {
+                assert!(depth <= READERS, "depth gauge wrapped: {depth}");
+            }
+        }
+        for r in readers {
+            r.join().unwrap();
+        }
+        assert_eq!(set.depths(), vec![0, 0], "every guard released exactly once");
+        for tx in set.txs() {
+            let _ = tx.force(ShardCmd::Shutdown);
+        }
+        for e in echoes {
+            e.join().unwrap();
+        }
+    });
+}
+
+#[test]
+fn replica_shed_is_decided_once_by_the_primary() {
+    loom::model(|| {
+        // Primary queue holds ONE command and sheds; the secondary has
+        // headroom (its mailbox is `force`d, so it must never block here
+        // or shed independently).
+        let (ptx, prx) = bounded::<ShardCmd>(1, Overload::Shed);
+        let (stx, srx) = bounded::<ShardCmd>(8, Overload::Shed);
+        let set = Arc::new(ReplicaSet::new(vec![ptx, stx]));
+        let writers: Vec<_> = (0..2)
+            .map(|w| {
+                let set = Arc::clone(&set);
+                loom::thread::spawn(move || set.offer_write(ShardCmd::Insert(vec![w as f32])))
+            })
+            .collect();
+        let outcomes: Vec<OfferOutcome> = writers.into_iter().map(|w| w.join().unwrap()).collect();
+        let kept = drained_inserts(&prx);
+        let mirrored = drained_inserts(&srx);
+        assert_eq!(kept, mirrored, "secondary must mirror the primary's kept sequence");
+        let sent = outcomes.iter().filter(|&&o| o == OfferOutcome::Sent).count();
+        let shed = outcomes.iter().filter(|&&o| o == OfferOutcome::Shed).count();
+        assert_eq!(sent, kept.len(), "Sent outcomes match commands in the primary queue");
+        assert_eq!(sent + shed, 2, "no outcome lost");
+    });
+}
+
+#[test]
+fn coalescer_neither_loses_nor_duplicates_queries() {
+    const QUERIES: usize = 3;
+    type Entry = (usize, Sender<Result<usize, String>>);
+    loom::model(|| {
+        let core = Arc::new(CoalescerCore::new(BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+        }));
+        let lane: Arc<CoalescingLane<Entry>> = Arc::new(CoalescingLane::new(core));
+        let executed: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+        let submitters: Vec<_> = (0..QUERIES)
+            .map(|id| {
+                let lane = Arc::clone(&lane);
+                let executed = Arc::clone(&executed);
+                loom::thread::spawn(move || {
+                    lane.one_shot(
+                        |reply| (id, reply),
+                        |batch: Vec<Entry>| {
+                            let mut log = lock_unpoisoned(&executed);
+                            for (qid, reply) in batch {
+                                log.push(qid);
+                                let _ = reply.send(Ok(qid));
+                            }
+                        },
+                    )
+                })
+            })
+            .collect();
+        for (id, s) in submitters.into_iter().enumerate() {
+            assert_eq!(s.join().unwrap(), Ok(id), "each query receives its own answer");
+        }
+        let mut log = lock_unpoisoned(&executed).clone();
+        log.sort_unstable();
+        let want: Vec<usize> = (0..QUERIES).collect();
+        assert_eq!(log, want, "every query executed exactly once — none lost, none doubled");
+    });
+}
+
+#[test]
+fn counters_reconcile_under_concurrent_ingest_and_read_only_escalation() {
+    const PER_WRITER: usize = 2;
+    loom::model(|| {
+        let board = Arc::new(HealthBoard::new(1));
+        // Primary sheds past 2 queued commands; the secondary's mailbox
+        // must hold every point the primary can keep (`force` blocks
+        // when full, which would deadlock the fan-out here).
+        let (ptx, prx) = bounded::<ShardCmd>(2, Overload::Shed);
+        let (stx, srx) = bounded::<ShardCmd>(8, Overload::Shed);
+        let mut set = ReplicaSet::new(vec![ptx, stx]);
+        set.set_health(0, Arc::clone(&board));
+        let set = Arc::new(set);
+        let counters = Arc::new(ServiceCounters::default());
+        let writers: Vec<_> = (0..2)
+            .map(|w| {
+                let set = Arc::clone(&set);
+                let counters = Arc::clone(&counters);
+                loom::thread::spawn(move || {
+                    for j in 0..PER_WRITER {
+                        // Mirrors the service ingest accounting: count
+                        // the point first, then reclassify on the offer
+                        // outcome (shed → shed_points, dead → rollback).
+                        ServiceCounters::add(&counters.inserts, 1);
+                        let point = vec![(w * PER_WRITER + j) as f32];
+                        match set.offer_write(ShardCmd::Insert(point)) {
+                            OfferOutcome::Sent => {}
+                            OfferOutcome::Shed => ServiceCounters::add(&counters.shed_points, 1),
+                            OfferOutcome::Disconnected => {
+                                ServiceCounters::sub(&counters.inserts, 1)
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        let escalator = {
+            let board = Arc::clone(&board);
+            loom::thread::spawn(move || {
+                board.escalate(0, ShardHealth::ReadOnly);
+            })
+        };
+        for w in writers {
+            w.join().unwrap();
+        }
+        escalator.join().unwrap();
+        let kept = drained_inserts(&prx);
+        let mirrored = drained_inserts(&srx);
+        assert_eq!(kept, mirrored, "replicas saw identical command streams");
+        let snap = counters.snapshot();
+        assert_eq!(
+            snap.inserts,
+            kept.len() as u64 + snap.shed,
+            "inserts == stored + shed at quiescence"
+        );
+        assert!(
+            board.refused_writes() <= snap.shed,
+            "refused writes are a breakdown of shed, never extra"
+        );
+    });
+}
+
+#[test]
+fn scatter_gauge_pairs_exactly() {
+    loom::model(|| {
+        let load = Arc::new(LoadAwareWait::new(Duration::from_millis(2)));
+        let workers: Vec<_> = (0..2)
+            .map(|_| {
+                let load = Arc::clone(&load);
+                loom::thread::spawn(move || {
+                    load.note_arrival();
+                    load.scatter_started();
+                    assert!(!load.idle(), "own scatter is in flight");
+                    load.scatter_finished();
+                })
+            })
+            .collect();
+        for w in workers {
+            w.join().unwrap();
+        }
+        assert!(load.idle(), "all scatters finished");
+        assert_eq!(load.current(), Duration::ZERO, "an idle plane never delays a straggler");
+    });
+}

@@ -1,0 +1,47 @@
+//! Vendored stand-in for [tokio-rs/loom](https://github.com/tokio-rs/loom).
+//!
+//! The build environment is fully offline (no crates.io), so the real
+//! loom cannot be a dependency. This crate keeps the *API shape* the
+//! repo's models are written against — `loom::model`, `loom::sync::*`,
+//! `loom::sync::atomic::*`, `loom::thread` — but implements a much
+//! simpler checker: every model closure is rerun `LOOM_ITERS` times
+//! (default 128) under a seeded xorshift scheduler that injects
+//! preemption points (`yield_now`, occasionally a short sleep) before
+//! every atomic and lock operation. That randomizes OS-level
+//! interleavings aggressively enough to catch lost-wakeup, double-release
+//! and ordering bugs that a single lucky schedule hides, while staying
+//! fast enough for CI.
+//!
+//! Divergences from real loom, all deliberate:
+//!
+//! - **Not exhaustive.** Real loom enumerates all interleavings under a
+//!   bounded number of preemptions (CDSChecker-style, with DPOR). This
+//!   stub samples schedules; a bug can survive a run. CI compensates
+//!   with iteration counts well above the defaults.
+//! - **No C11 weak-memory simulation.** Atomics here are the host's
+//!   atomics, so an x86 CI host will not surface orderings that only a
+//!   weaker architecture (or real loom's model) would produce. The repo
+//!   pairs these models with a ThreadSanitizer job for the data-race
+//!   half of that gap.
+//! - **`const fn new` on atomics and locks.** Real loom's types
+//!   allocate tracking state and cannot sit in `static`s; these wrappers
+//!   can, so `durability::io`'s `static INJECTOR` keeps working under
+//!   `--cfg loom`.
+//! - **Std channels.** Real loom does not model `mpsc` at all; the
+//!   `util::sync` facade pins channels to std under every cfg, and the
+//!   models treat them as opaque mailboxes.
+//!
+//! Swapping the real crate in (networked toolchain): replace the
+//! `[target.'cfg(loom)'.dependencies]` path entry in rust/Cargo.toml
+//! with `loom = "0.7"` and delete this directory. Models that only use
+//! `model`, `thread::spawn`, `sync::*` and `sync::atomic::*` (all of
+//! ours) compile against both, except that real loom rejects statics
+//! and `Instant`-based timeouts inside models — the affected models are
+//! annotated at their definition sites in `tests/loom_models.rs`.
+
+pub mod model;
+pub mod sched;
+pub mod sync;
+pub mod thread;
+
+pub use model::model;

@@ -1,0 +1,32 @@
+//! The model driver: rerun the closure under fresh scheduler seeds.
+
+/// Iterations per model when `LOOM_ITERS` is unset. Each of the repo's
+/// models spawns 2–4 threads and runs in well under a millisecond, so
+/// this default keeps `cargo test --cfg loom` interactive; CI raises it.
+const DEFAULT_ITERS: u64 = 128;
+
+/// Run `f` repeatedly under the randomized scheduler. Panics propagate
+/// out of the first failing iteration (the standard loom contract: a
+/// model fails by asserting).
+///
+/// Environment knobs:
+/// - `LOOM_ITERS`: iteration count (default 128).
+/// - `LOOM_MAX_PREEMPTIONS`: accepted for CLI compatibility with real
+///   loom and intentionally ignored — this stub has no preemption
+///   budget; the scheduler hook fires throughout every iteration.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let iters = std::env::var("LOOM_ITERS")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(DEFAULT_ITERS);
+    for i in 0..iters {
+        crate::sched::begin_iteration(
+            0x5EED_0BAD_CAFE_F00D ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        f();
+    }
+}

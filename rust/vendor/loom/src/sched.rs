@@ -1,0 +1,54 @@
+//! The randomized scheduler: a per-thread xorshift64 stream, seeded per
+//! model iteration, that decides at every sync operation whether to
+//! inject a preemption point. Determinism is best-effort (thread seeds
+//! depend on spawn order, and the OS still owns the actual schedule);
+//! the point is *diversity* across iterations, not replayability.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Seed of the current model iteration (set by [`begin_iteration`]).
+static ITER_SEED: AtomicU64 = AtomicU64::new(0x5EED_0BAD_CAFE_F00D);
+
+/// Salt handed to each thread the first time it draws randomness, so
+/// sibling threads walk different streams of the same iteration.
+static SPAWN_SALT: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static RNG: Cell<u64> = const { Cell::new(0) };
+}
+
+fn next_u64() -> u64 {
+    RNG.with(|cell| {
+        let mut x = cell.get();
+        if x == 0 {
+            let salt = SPAWN_SALT.fetch_add(0x9E37_79B9_7F4A_7C15, Ordering::Relaxed);
+            x = (ITER_SEED.load(Ordering::Relaxed) ^ salt) | 1;
+        }
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        cell.set(x);
+        x
+    })
+}
+
+/// Reset the iteration seed and this (the model-driver) thread's stream.
+pub(crate) fn begin_iteration(seed: u64) {
+    ITER_SEED.store(seed | 1, Ordering::Relaxed);
+    RNG.with(|cell| cell.set(seed | 1));
+}
+
+/// Maybe preempt: called before every atomic and lock operation. A ~25%
+/// yield rate keeps threads interleaving at sub-statement granularity;
+/// the rare short sleep lets a descheduled sibling take several steps,
+/// which is what surfaces multi-operation windows (check-then-act races).
+pub fn hook() {
+    let r = next_u64();
+    if r & 0b11 == 0 {
+        std::thread::yield_now();
+    }
+    if r & 0xFF == 0 {
+        std::thread::sleep(std::time::Duration::from_micros(r >> 56 & 0x1F));
+    }
+}

@@ -1,0 +1,186 @@
+//! `loom::sync`: thin wrappers over `std::sync` that call
+//! [`crate::sched::hook`] before every operation, plus re-exports for
+//! the types that need no instrumentation. Guard and error types are
+//! std's own, so code written against the `util::sync` facade sees the
+//! same signatures under both cfgs.
+
+pub use std::sync::{
+    Arc, Condvar, LockResult, MutexGuard, PoisonError, RwLockReadGuard, RwLockWriteGuard,
+    TryLockError, TryLockResult, Weak,
+};
+
+pub mod mpsc {
+    //! Real loom does not model channels; neither does this stub.
+    pub use std::sync::mpsc::*;
+}
+
+/// Preemption-instrumented `std::sync::Mutex`. `const fn new` keeps
+/// `static` mutexes working under `--cfg loom` (a divergence from real
+/// loom, which tracks locks per model execution).
+#[derive(Debug, Default)]
+pub struct Mutex<T: ?Sized>(std::sync::Mutex<T>);
+
+impl<T> Mutex<T> {
+    pub const fn new(value: T) -> Self {
+        Mutex(std::sync::Mutex::new(value))
+    }
+
+    pub fn into_inner(self) -> LockResult<T> {
+        self.0.into_inner()
+    }
+}
+
+impl<T: ?Sized> Mutex<T> {
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        crate::sched::hook();
+        self.0.lock()
+    }
+
+    pub fn try_lock(&self) -> TryLockResult<MutexGuard<'_, T>> {
+        crate::sched::hook();
+        self.0.try_lock()
+    }
+
+    pub fn get_mut(&mut self) -> LockResult<&mut T> {
+        self.0.get_mut()
+    }
+}
+
+/// Preemption-instrumented `std::sync::RwLock`.
+#[derive(Debug, Default)]
+pub struct RwLock<T: ?Sized>(std::sync::RwLock<T>);
+
+impl<T> RwLock<T> {
+    pub const fn new(value: T) -> Self {
+        RwLock(std::sync::RwLock::new(value))
+    }
+
+    pub fn into_inner(self) -> LockResult<T> {
+        self.0.into_inner()
+    }
+}
+
+impl<T: ?Sized> RwLock<T> {
+    pub fn read(&self) -> LockResult<RwLockReadGuard<'_, T>> {
+        crate::sched::hook();
+        self.0.read()
+    }
+
+    pub fn write(&self) -> LockResult<RwLockWriteGuard<'_, T>> {
+        crate::sched::hook();
+        self.0.write()
+    }
+
+    pub fn try_read(&self) -> TryLockResult<RwLockReadGuard<'_, T>> {
+        crate::sched::hook();
+        self.0.try_read()
+    }
+
+    pub fn try_write(&self) -> TryLockResult<RwLockWriteGuard<'_, T>> {
+        crate::sched::hook();
+        self.0.try_write()
+    }
+
+    pub fn get_mut(&mut self) -> LockResult<&mut T> {
+        self.0.get_mut()
+    }
+}
+
+pub mod atomic {
+    //! Preemption-instrumented atomics. Operations delegate to the
+    //! host's atomics (no weak-memory simulation — see the crate docs),
+    //! so the requested `Ordering` is honored by hardware, and the hook
+    //! in front of each call is what diversifies interleavings.
+    pub use std::sync::atomic::Ordering;
+
+    macro_rules! int_atomic {
+        ($name:ident, $std:ident, $t:ty) => {
+            #[derive(Debug, Default)]
+            pub struct $name(std::sync::atomic::$std);
+
+            impl $name {
+                pub const fn new(value: $t) -> Self {
+                    $name(std::sync::atomic::$std::new(value))
+                }
+
+                pub fn load(&self, order: Ordering) -> $t {
+                    crate::sched::hook();
+                    self.0.load(order)
+                }
+
+                pub fn store(&self, value: $t, order: Ordering) {
+                    crate::sched::hook();
+                    self.0.store(value, order)
+                }
+
+                pub fn swap(&self, value: $t, order: Ordering) -> $t {
+                    crate::sched::hook();
+                    self.0.swap(value, order)
+                }
+
+                pub fn fetch_add(&self, value: $t, order: Ordering) -> $t {
+                    crate::sched::hook();
+                    self.0.fetch_add(value, order)
+                }
+
+                pub fn fetch_sub(&self, value: $t, order: Ordering) -> $t {
+                    crate::sched::hook();
+                    self.0.fetch_sub(value, order)
+                }
+
+                pub fn fetch_max(&self, value: $t, order: Ordering) -> $t {
+                    crate::sched::hook();
+                    self.0.fetch_max(value, order)
+                }
+
+                pub fn compare_exchange(
+                    &self,
+                    current: $t,
+                    new: $t,
+                    success: Ordering,
+                    failure: Ordering,
+                ) -> Result<$t, $t> {
+                    crate::sched::hook();
+                    self.0.compare_exchange(current, new, success, failure)
+                }
+
+                pub fn into_inner(self) -> $t {
+                    self.0.into_inner()
+                }
+            }
+        };
+    }
+
+    int_atomic!(AtomicU8, AtomicU8, u8);
+    int_atomic!(AtomicU32, AtomicU32, u32);
+    int_atomic!(AtomicU64, AtomicU64, u64);
+    int_atomic!(AtomicUsize, AtomicUsize, usize);
+
+    #[derive(Debug, Default)]
+    pub struct AtomicBool(std::sync::atomic::AtomicBool);
+
+    impl AtomicBool {
+        pub const fn new(value: bool) -> Self {
+            AtomicBool(std::sync::atomic::AtomicBool::new(value))
+        }
+
+        pub fn load(&self, order: Ordering) -> bool {
+            crate::sched::hook();
+            self.0.load(order)
+        }
+
+        pub fn store(&self, value: bool, order: Ordering) {
+            crate::sched::hook();
+            self.0.store(value, order)
+        }
+
+        pub fn swap(&self, value: bool, order: Ordering) -> bool {
+            crate::sched::hook();
+            self.0.swap(value, order)
+        }
+
+        pub fn into_inner(self) -> bool {
+            self.0.into_inner()
+        }
+    }
+}

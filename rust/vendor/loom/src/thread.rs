@@ -1,0 +1,16 @@
+//! `loom::thread`: std threads with one preemption point injected at
+//! the top of every spawned closure (so a spawner that races its child
+//! does not always win the first step).
+
+pub use std::thread::{current, park, sleep, yield_now, JoinHandle};
+
+pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    std::thread::spawn(move || {
+        crate::sched::hook();
+        f()
+    })
+}

@@ -1,0 +1,477 @@
+//! The four lints. All of them run on comment/literal-stripped source
+//! with `#[cfg(test)] mod` blocks removed (see [`crate::strip`]) — they
+//! police runtime code, not tests; `no-unwrap`'s whole point is that
+//! test code MAY unwrap while the serving path must not.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use crate::strip;
+
+/// Atomic fields allowed to use `Ordering::Relaxed`: the pure-stat
+/// counters and load gauges whose contracts are documented at each
+/// declaration site (`coordinator/protocol.rs`, `coordinator/health.rs`,
+/// `coordinator/replica.rs`, `durability/io.rs`, `net/server.rs`) —
+/// incremented on the hot path, read for snapshots or heuristics, never
+/// used to publish other memory or gate correctness. Everything else
+/// must pick an explicit stronger ordering and document the pairing.
+/// `d` and `r` are the iteration bindings over the replica `depth` and
+/// `reads` gauge vectors in `coordinator/replica.rs`.
+const RELAXED_ALLOWLIST: &[&str] = &[
+    "ann_queries",
+    "bytes_written",
+    "counter",
+    "d",
+    "deletes",
+    "depth",
+    "in_flight",
+    "injected",
+    "inserts",
+    "kde_queries",
+    "last_arrival_ns",
+    "opens",
+    "r",
+    "rate_bits",
+    "reads",
+    "refused_writes",
+    "renames",
+    "rr",
+    "rr_next",
+    "sent",
+    "shed",
+    "shed_points",
+    "syncs",
+    "wal_errors",
+    "writes",
+];
+
+/// Method names whose nearest preceding `.name(` attributes an
+/// `Ordering::Relaxed` argument to an atomic field.
+const ATOMIC_METHODS: &[&str] = &[
+    "compare_exchange",
+    "compare_exchange_weak",
+    "fetch_add",
+    "fetch_and",
+    "fetch_max",
+    "fetch_min",
+    "fetch_nand",
+    "fetch_or",
+    "fetch_sub",
+    "fetch_update",
+    "fetch_xor",
+    "load",
+    "store",
+    "swap",
+];
+
+/// One finding, formatted `file:line: [lint] message`.
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub lint: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.lint, self.msg)
+    }
+}
+
+struct SourceFile {
+    rel: String,
+    text: String,
+}
+
+/// Run every lint over `<root>/src`, returning findings sorted by file
+/// and line. `root` is the crate root — the directory holding `src/`.
+pub fn run_all(root: &Path) -> io::Result<Vec<Violation>> {
+    let mut files = Vec::new();
+    collect(root, &root.join("src"), &mut files)?;
+    files.sort_by(|a, b| a.rel.cmp(&b.rel));
+    let mut out = Vec::new();
+    for f in &files {
+        sync_facade(f, &mut out);
+        relaxed_allowlist(f, &mut out);
+        no_unwrap(f, &mut out);
+    }
+    frame_parity(&files, &mut out);
+    out.sort_by(|a, b| (a.file.as_str(), a.line).cmp(&(b.file.as_str(), b.line)));
+    Ok(out)
+}
+
+fn collect(root: &Path, dir: &Path, out: &mut Vec<SourceFile>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect(root, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let raw = fs::read_to_string(&path)?;
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            out.push(SourceFile { rel, text: strip::strip_test_mods(&strip::strip(&raw)) });
+        }
+    }
+    Ok(())
+}
+
+fn is_ident(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+fn line_of(text: &str, pos: usize) -> usize {
+    text.as_bytes()[..pos].iter().filter(|&&c| c == b'\n').count() + 1
+}
+
+/// Byte offsets of `needle` in `text` where the match neither continues
+/// an identifier on the left nor runs into one on the right.
+fn ident_bounded(text: &str, needle: &str) -> Vec<usize> {
+    let b = text.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(rel) = text[from..].find(needle) {
+        let pos = from + rel;
+        from = pos + 1;
+        let left_ok = pos == 0 || !is_ident(b[pos - 1]);
+        let end = pos + needle.len();
+        let right_ok = end >= b.len() || !is_ident(b[end]);
+        if left_ok && right_ok {
+            out.push(pos);
+        }
+    }
+    out
+}
+
+/// `sync-facade`: every runtime use of the standard (or loom) sync
+/// primitives must go through `crate::util::sync`, the single
+/// `cfg(loom)` switch point — a direct `std::sync` path anywhere else
+/// silently opts that code out of the loom models.
+fn sync_facade(f: &SourceFile, out: &mut Vec<Violation>) {
+    if f.rel == "src/util/sync.rs" {
+        return;
+    }
+    for needle in ["std::sync", "core::sync", "loom::sync"] {
+        for pos in ident_bounded(&f.text, needle) {
+            out.push(Violation {
+                file: f.rel.clone(),
+                line: line_of(&f.text, pos),
+                lint: "sync-facade",
+                msg: format!("`{needle}` referenced outside the facade; use `crate::util::sync`"),
+            });
+        }
+    }
+}
+
+/// `relaxed-allowlist`: `Ordering::Relaxed` is reserved for the
+/// documented stats counters; any other atomic must justify an explicit
+/// stronger ordering at its declaration site.
+fn relaxed_allowlist(f: &SourceFile, out: &mut Vec<Violation>) {
+    for pos in ident_bounded(&f.text, "Ordering::Relaxed") {
+        match attribute(&f.text, pos) {
+            Some(field) if RELAXED_ALLOWLIST.contains(&field.as_str()) => {}
+            Some(field) => out.push(Violation {
+                file: f.rel.clone(),
+                line: line_of(&f.text, pos),
+                lint: "relaxed-allowlist",
+                msg: format!("`{field}` uses Ordering::Relaxed but is not an allowlisted counter"),
+            }),
+            None => out.push(Violation {
+                file: f.rel.clone(),
+                line: line_of(&f.text, pos),
+                lint: "relaxed-allowlist",
+                msg: "Ordering::Relaxed not attributable to an atomic field".to_string(),
+            }),
+        }
+    }
+}
+
+/// The receiver field of the atomic call this `Ordering::Relaxed` is an
+/// argument of: the nearest preceding `.method(` among the atomic ops,
+/// then the identifier before that dot — walking back over one
+/// `[index]` group, so `self.depth[i].fetch_add(..)` resolves to
+/// `depth`.
+fn attribute(text: &str, relaxed_pos: usize) -> Option<String> {
+    let b = text.as_bytes();
+    let mut win_start = relaxed_pos.saturating_sub(240);
+    while !text.is_char_boundary(win_start) {
+        win_start -= 1;
+    }
+    let mut best: Option<usize> = None;
+    for m in ATOMIC_METHODS {
+        let pat = format!(".{m}(");
+        let mut from = win_start;
+        while let Some(rel) = text[from..relaxed_pos].find(&pat) {
+            let p = from + rel;
+            best = Some(best.map_or(p, |q| q.max(p)));
+            from = p + 1;
+        }
+    }
+    let dot = best?;
+    let mut k = dot;
+    while k > win_start {
+        k -= 1;
+        if b[k].is_ascii_whitespace() {
+            continue;
+        }
+        if b[k] == b']' {
+            let mut depth = 1usize;
+            while k > win_start && depth > 0 {
+                k -= 1;
+                match b[k] {
+                    b']' => depth += 1,
+                    b'[' => depth -= 1,
+                    _ => {}
+                }
+            }
+            continue;
+        }
+        break;
+    }
+    let end = k + 1;
+    let mut start = end;
+    while start > 0 && is_ident(b[start - 1]) {
+        start -= 1;
+    }
+    if start == end {
+        return None;
+    }
+    Some(text[start..end].to_string())
+}
+
+/// `no-unwrap`: the connection loop, service loop, and durability stack
+/// must degrade, not panic — a poisoned lock, short frame, or corrupt
+/// image on one request must never take down the process.
+fn no_unwrap(f: &SourceFile, out: &mut Vec<Violation>) {
+    let scoped = f.rel == "src/net/server.rs"
+        || f.rel == "src/coordinator/server.rs"
+        || f.rel.starts_with("src/durability/");
+    if !scoped {
+        return;
+    }
+    for needle in [".unwrap()", ".expect("] {
+        let mut from = 0usize;
+        while let Some(rel) = f.text[from..].find(needle) {
+            let pos = from + rel;
+            from = pos + 1;
+            out.push(Violation {
+                file: f.rel.clone(),
+                line: line_of(&f.text, pos),
+                lint: "no-unwrap",
+                msg: format!("`{needle}..` in non-test server/durability code; handle the error"),
+            });
+        }
+    }
+}
+
+/// `frame-parity`: every wire opcode and frame variant must be wired
+/// through all of its layers — encoder, decoder, and (for requests) the
+/// server dispatch — so a new frame cannot half-exist. Token-level:
+/// references must use the `op::NAME` / `Request::Variant` qualified
+/// forms, which is how `net/frame.rs` and `net/server.rs` are written.
+fn frame_parity(files: &[SourceFile], out: &mut Vec<Violation>) {
+    let Some(frame) = files.iter().find(|f| f.rel == "src/net/frame.rs") else {
+        return; // trees without a net layer have nothing to check
+    };
+    if let Some((lo, hi)) = block_after(&frame.text, "mod op") {
+        for (name, pos) in consts_in(&frame.text[lo..hi]) {
+            let refs = ident_bounded(&frame.text, &format!("op::{name}")).len();
+            if refs < 2 {
+                out.push(Violation {
+                    file: frame.rel.clone(),
+                    line: line_of(&frame.text, lo + pos),
+                    lint: "frame-parity",
+                    msg: format!(
+                        "opcode `{name}` needs an encoder and a decoder \
+                         (found {refs} `op::{name}` reference(s))"
+                    ),
+                });
+            }
+        }
+    } else {
+        out.push(Violation {
+            file: frame.rel.clone(),
+            line: 1,
+            lint: "frame-parity",
+            msg: "no `mod op { .. }` opcode table found".to_string(),
+        });
+    }
+    let server = files.iter().find(|f| f.rel == "src/net/server.rs");
+    for enum_name in ["Request", "Response"] {
+        let Some((lo, hi)) = block_after(&frame.text, &format!("enum {enum_name}")) else {
+            out.push(Violation {
+                file: frame.rel.clone(),
+                line: 1,
+                lint: "frame-parity",
+                msg: format!("no `enum {enum_name}` found"),
+            });
+            continue;
+        };
+        for (variant, pos) in variants_in(&frame.text[lo..hi]) {
+            let qualified = format!("{enum_name}::{variant}");
+            let refs = ident_bounded(&frame.text, &qualified).len();
+            if refs < 2 {
+                out.push(Violation {
+                    file: frame.rel.clone(),
+                    line: line_of(&frame.text, lo + pos),
+                    lint: "frame-parity",
+                    msg: format!(
+                        "variant `{qualified}` needs an encode arm and a decode \
+                         constructor (found {refs} reference(s))"
+                    ),
+                });
+            }
+            if enum_name == "Request" {
+                let dispatched =
+                    server.is_some_and(|s| !ident_bounded(&s.text, &qualified).is_empty());
+                if !dispatched {
+                    out.push(Violation {
+                        file: frame.rel.clone(),
+                        line: line_of(&frame.text, lo + pos),
+                        lint: "frame-parity",
+                        msg: format!(
+                            "request `{qualified}` has no dispatch arm in src/net/server.rs"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Byte range (exclusive of the braces) of the `{ .. }` block opening
+/// right after the ident-bounded `header` token sequence.
+fn block_after(text: &str, header: &str) -> Option<(usize, usize)> {
+    let b = text.as_bytes();
+    for pos in ident_bounded(text, header) {
+        let open = pos + text[pos..].find('{')?;
+        let between = &text[pos + header.len()..open];
+        if between.contains(';') || between.contains('}') {
+            continue; // not this occurrence's block
+        }
+        let mut depth = 0usize;
+        let mut k = open;
+        while k < b.len() {
+            match b[k] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some((open + 1, k));
+                    }
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        return None;
+    }
+    None
+}
+
+/// `const NAME` declarations in a stripped block: `(name, offset)`.
+fn consts_in(block: &str) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for pos in ident_bounded(block, "const") {
+        let rest = &block[pos + "const".len()..];
+        let skip = rest.len() - rest.trim_start().len();
+        let start = pos + "const".len() + skip;
+        let end = start + block[start..].bytes().take_while(|&c| is_ident(c)).count();
+        if end > start {
+            out.push((block[start..end].to_string(), pos));
+        }
+    }
+    out
+}
+
+/// Variant names of a stripped enum body: the first identifier of each
+/// top-level comma-separated segment (attributes skipped).
+fn variants_in(block: &str) -> Vec<(String, usize)> {
+    let b = block.as_bytes();
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut seg_start = 0usize;
+    let mut i = 0usize;
+    while i <= b.len() {
+        let c = if i == b.len() { b',' } else { b[i] };
+        match c {
+            b'(' | b'[' | b'{' => depth += 1,
+            b')' | b']' | b'}' => depth = depth.saturating_sub(1),
+            b',' if depth == 0 => {
+                if let Some((name, off)) = first_ident(&block[seg_start..i]) {
+                    out.push((name, seg_start + off));
+                }
+                seg_start = i + 1;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    out
+}
+
+/// First identifier of a variant segment, skipping whitespace and
+/// `#[..]` attributes.
+fn first_ident(seg: &str) -> Option<(String, usize)> {
+    let b = seg.as_bytes();
+    let mut i = 0usize;
+    loop {
+        while i < b.len() && b[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        if i + 1 < b.len() && b[i] == b'#' && b[i + 1] == b'[' {
+            let mut depth = 0usize;
+            while i < b.len() {
+                match b[i] {
+                    b'[' => depth += 1,
+                    b']' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            i += 1;
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                i += 1;
+            }
+        } else {
+            break;
+        }
+    }
+    let start = i;
+    while i < b.len() && is_ident(b[i]) {
+        i += 1;
+    }
+    (i > start && !b[start].is_ascii_digit()).then(|| (seg[start..i].to_string(), start))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relaxed_attribution_walks_back_over_indexing() {
+        let text = "self.depth[best * 2].fetch_add(1, Ordering::Relaxed);";
+        let pos = text.find("Ordering::Relaxed").unwrap();
+        assert_eq!(attribute(text, pos).as_deref(), Some("depth"));
+    }
+
+    #[test]
+    fn relaxed_attribution_picks_the_nearest_call() {
+        let text = "a.load(Ordering::Acquire).max(bad.load(Ordering::Relaxed))";
+        let pos = text.rfind("Ordering::Relaxed").unwrap();
+        assert_eq!(attribute(text, pos).as_deref(), Some("bad"));
+    }
+
+    #[test]
+    fn enum_variants_parse_tuple_and_struct_forms() {
+        let block = "\n    Hello,\n    Insert(Vec<f32>),\n    Ack { accepted: u64 },\n";
+        let names: Vec<String> = variants_in(block).into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, ["Hello", "Insert", "Ack"]);
+    }
+}

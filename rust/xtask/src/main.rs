@@ -1,0 +1,66 @@
+//! Repo-specific static analysis, run as `cargo run -p xtask -- lint`.
+//!
+//! Four lints, each pinning an invariant the concurrency work in the
+//! query plane relies on (see `EXPERIMENTS.md` §Static analysis):
+//!
+//! - `sync-facade` — no `std::sync` (or `core::sync`/`loom::sync`) path
+//!   outside `src/util/sync.rs`, the single `cfg(loom)` switch point.
+//! - `frame-parity` — every wire opcode and frame variant is wired
+//!   through encoder, decoder, and (for requests) the server dispatch.
+//! - `relaxed-allowlist` — `Ordering::Relaxed` only on the documented
+//!   stats counters; anything else must choose a real ordering.
+//! - `no-unwrap` — no `.unwrap()`/`.expect(..)` in non-test code of the
+//!   connection loop, service loop, and durability stack.
+//!
+//! `cargo run -p xtask -- lint --self-test` runs the lints against
+//! fixture trees seeded with one of each violation, proving every lint
+//! actually fires (the same fixtures run under `cargo test -p xtask`).
+
+mod lints;
+mod selftest;
+mod strip;
+
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") if args.iter().any(|a| a == "--self-test") => match selftest::run() {
+            Ok(n) => {
+                println!("xtask self-test: all {n} seeded violations detected, clean tree quiet");
+                ExitCode::SUCCESS
+            }
+            Err(e) => {
+                eprintln!("xtask self-test FAILED: {e}");
+                ExitCode::FAILURE
+            }
+        },
+        Some("lint") => {
+            let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+                .parent()
+                .expect("xtask lives one level under the crate root");
+            match lints::run_all(root) {
+                Ok(v) if v.is_empty() => {
+                    println!("xtask lint: clean");
+                    ExitCode::SUCCESS
+                }
+                Ok(v) => {
+                    for violation in &v {
+                        eprintln!("{violation}");
+                    }
+                    eprintln!("xtask lint: {} violation(s)", v.len());
+                    ExitCode::FAILURE
+                }
+                Err(e) => {
+                    eprintln!("xtask lint: i/o error: {e}");
+                    ExitCode::FAILURE
+                }
+            }
+        }
+        _ => {
+            eprintln!("usage: cargo run -p xtask -- lint [--self-test]");
+            ExitCode::FAILURE
+        }
+    }
+}

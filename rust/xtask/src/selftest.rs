@@ -1,0 +1,258 @@
+//! Seeded-violation fixtures: prove each lint FIRES on a tree built to
+//! violate it and stays quiet on a compliant tree. A lint that can
+//! never fire is worse than no lint — it reads as a guarantee.
+
+use std::fs;
+use std::path::Path;
+
+use crate::lints;
+
+const FACADE: &str = "
+pub use std::sync::{Arc, Mutex};
+";
+
+const GOOD_FRAME: &str = "
+mod op {
+    pub(super) const PING: u8 = 1;
+    pub(super) const R_PONG: u8 = 128;
+}
+
+pub enum Request {
+    Ping,
+}
+
+pub enum Response {
+    Pong,
+}
+
+pub fn encode(req: &Request) -> u8 {
+    match req {
+        Request::Ping => op::PING,
+    }
+}
+
+pub fn decode(byte: u8) -> Option<Request> {
+    (byte == op::PING).then_some(Request::Ping)
+}
+
+pub fn encode_resp(resp: &Response) -> u8 {
+    match resp {
+        Response::Pong => op::R_PONG,
+    }
+}
+
+pub fn decode_resp(byte: u8) -> Option<Response> {
+    (byte == op::R_PONG).then_some(Response::Pong)
+}
+";
+
+const GOOD_SERVER: &str = "
+pub fn dispatch(req: super::frame::Request) {
+    match req {
+        super::frame::Request::Ping => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrapping_in_tests_is_fine() {
+        Some(1).unwrap();
+    }
+}
+";
+
+const GOOD_STATS: &str = "
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+
+pub struct Counters {
+    pub inserts: AtomicU64,
+}
+
+impl Counters {
+    pub fn bump(&self) {
+        self.inserts.fetch_add(1, Ordering::Relaxed);
+    }
+}
+";
+
+/// `Ghost` has no encode arm, no decode constructor, and no dispatch
+/// arm; `ORPHAN` is a dead opcode byte.
+const BAD_FRAME: &str = "
+mod op {
+    pub(super) const PING: u8 = 1;
+    pub(super) const ORPHAN: u8 = 9;
+}
+
+pub enum Request {
+    Ping,
+    Ghost,
+}
+
+pub enum Response {
+    Pong,
+}
+
+pub fn encode(req: &Request) -> u8 {
+    match req {
+        Request::Ping => op::PING,
+        _ => 0,
+    }
+}
+
+pub fn decode(byte: u8) -> Option<Request> {
+    (byte == op::PING).then_some(Request::Ping)
+}
+
+pub fn encode_resp(resp: &Response) -> u8 {
+    match resp {
+        Response::Pong => 2,
+    }
+}
+
+pub fn decode_resp(byte: u8) -> Option<Response> {
+    (byte == 2).then_some(Response::Pong)
+}
+";
+
+/// One non-test `.unwrap()`; the `.expect` in the test mod must NOT
+/// count.
+const BAD_SERVER: &str = "
+pub fn dispatch(req: super::frame::Request) -> u8 {
+    match req {
+        super::frame::Request::Ping => Some(1).unwrap(),
+        _ => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrapping_in_tests_is_fine() {
+        None::<u8>.expect(\"must not fire the lint\");
+    }
+}
+";
+
+const BAD_STATS: &str = "
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+
+pub struct Counters {
+    pub inserts: AtomicU64,
+    sneaky: AtomicU64,
+}
+
+impl Counters {
+    pub fn bump(&self) {
+        self.inserts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn sneak(&self) -> u64 {
+        self.sneaky.load(Ordering::Relaxed)
+    }
+}
+";
+
+const BAD_SYNC_USER: &str = "
+use std::sync::Mutex;
+
+pub fn hold(_m: &Mutex<()>) {}
+";
+
+const BAD_IO: &str = "
+pub fn open() -> std::fs::File {
+    std::fs::File::open(\"wal\").expect(\"durability must not panic\")
+}
+";
+
+/// Build both fixture trees under a scratch directory, lint them, and
+/// check the findings. Returns the number of seeded violations.
+pub fn run() -> Result<usize, String> {
+    let base = std::env::temp_dir().join(format!("xtask-selftest-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&base);
+    let result = check(&base);
+    let _ = fs::remove_dir_all(&base);
+    result
+}
+
+fn check(base: &Path) -> Result<usize, String> {
+    let good = base.join("good");
+    write_tree(
+        &good,
+        &[
+            ("src/util/sync.rs", FACADE),
+            ("src/net/frame.rs", GOOD_FRAME),
+            ("src/net/server.rs", GOOD_SERVER),
+            ("src/stats.rs", GOOD_STATS),
+        ],
+    )
+    .map_err(|e| e.to_string())?;
+    let v = lints::run_all(&good).map_err(|e| e.to_string())?;
+    if !v.is_empty() {
+        return Err(format!("compliant tree raised {} violation(s); first: {}", v.len(), v[0]));
+    }
+
+    let bad = base.join("bad");
+    write_tree(
+        &bad,
+        &[
+            ("src/util/sync.rs", FACADE),
+            ("src/net/frame.rs", BAD_FRAME),
+            ("src/net/server.rs", BAD_SERVER),
+            ("src/stats.rs", BAD_STATS),
+            ("src/ingest.rs", BAD_SYNC_USER),
+            ("src/durability/io.rs", BAD_IO),
+        ],
+    )
+    .map_err(|e| e.to_string())?;
+    let v = lints::run_all(&bad).map_err(|e| e.to_string())?;
+    let expected: &[(&str, &str, &str)] = &[
+        ("sync-facade", "src/ingest.rs", "std::sync"),
+        ("frame-parity", "src/net/frame.rs", "ORPHAN"),
+        ("frame-parity", "src/net/frame.rs", "decode constructor"),
+        ("frame-parity", "src/net/frame.rs", "dispatch"),
+        ("relaxed-allowlist", "src/stats.rs", "sneaky"),
+        ("no-unwrap", "src/net/server.rs", ".unwrap()"),
+        ("no-unwrap", "src/durability/io.rs", ".expect("),
+    ];
+    for (lint, file, frag) in expected {
+        if !v.iter().any(|x| x.lint == *lint && x.file == *file && x.msg.contains(frag)) {
+            return Err(format!(
+                "seeded `{lint}` violation in {file} (msg containing {frag:?}) did not fire; got: {}",
+                render(&v)
+            ));
+        }
+    }
+    if v.len() != expected.len() {
+        return Err(format!(
+            "expected exactly {} violations, got {}: {}",
+            expected.len(),
+            v.len(),
+            render(&v)
+        ));
+    }
+    Ok(expected.len())
+}
+
+fn render(v: &[lints::Violation]) -> String {
+    v.iter().map(ToString::to_string).collect::<Vec<_>>().join("; ")
+}
+
+fn write_tree(root: &Path, files: &[(&str, &str)]) -> std::io::Result<()> {
+    for (rel, content) in files {
+        let path = root.join(rel);
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(&path, content)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn seeded_violations_all_fire_and_clean_tree_is_quiet() {
+        super::run().unwrap();
+    }
+}

@@ -1,0 +1,293 @@
+//! A minimal Rust lexer for lint purposes: replaces comments and
+//! string/char literals with spaces — newlines survive, so byte offsets
+//! in the stripped text map to the same line numbers as the original —
+//! and can additionally blank out `#[cfg(test)] mod … { … }` blocks.
+//!
+//! Hand-rolled because the build environment vendors no parser crates
+//! (`syn`/`proc-macro2` are unavailable offline). The lexer understands
+//! exactly as much Rust as the lints need: line comments, nested block
+//! comments, string escapes, raw/byte strings (`r#".."#`, `b".."`,
+//! `br#".."#`), and the char-literal vs lifetime ambiguity (`'q'` is a
+//! literal to blank, `'a` in `&'a str` is a lifetime to keep).
+
+fn is_ident(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+/// True when position `i` does not continue an identifier, so a literal
+/// prefix like `r"` or `b'` can start here (`hdr"` cannot).
+fn at_ident_boundary(b: &[u8], i: usize) -> bool {
+    i == 0 || !is_ident(b[i - 1])
+}
+
+fn utf8_len(lead: u8) -> usize {
+    match lead {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+/// Append `b[from..to]` blanked: every byte becomes a space except
+/// newlines, which survive so line numbers stay stable.
+fn blank(out: &mut Vec<u8>, b: &[u8], from: usize, to: usize) {
+    for &c in &b[from..to.min(b.len())] {
+        out.push(if c == b'\n' { b'\n' } else { b' ' });
+    }
+}
+
+/// End (exclusive) of a raw string starting at `i` (`r".."`, `r#".."#`,
+/// `br".."`, any hash depth), if one starts there.
+fn raw_string_end(b: &[u8], i: usize) -> Option<usize> {
+    let mut j = i;
+    if j < b.len() && b[j] == b'b' {
+        j += 1;
+    }
+    if j >= b.len() || b[j] != b'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while j < b.len() && b[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= b.len() || b[j] != b'"' {
+        return None;
+    }
+    j += 1;
+    while j < b.len() {
+        if b[j] == b'"'
+            && b.len() - j > hashes
+            && b[j + 1..j + 1 + hashes].iter().all(|&c| c == b'#')
+        {
+            return Some(j + 1 + hashes);
+        }
+        j += 1;
+    }
+    Some(b.len())
+}
+
+/// End (exclusive) of the plain string whose opening quote is `b[i]`.
+fn string_end(b: &[u8], i: usize) -> usize {
+    let mut j = i + 1;
+    while j < b.len() {
+        match b[j] {
+            b'\\' => j += 2,
+            b'"' => return j + 1,
+            _ => j += 1,
+        }
+    }
+    b.len()
+}
+
+/// End (exclusive) of the char literal whose opening quote is `b[i]`.
+fn char_end(b: &[u8], i: usize) -> usize {
+    let mut j = i + 1;
+    while j < b.len() {
+        match b[j] {
+            b'\\' => j += 2,
+            b'\'' => return j + 1,
+            _ => j += 1,
+        }
+    }
+    b.len()
+}
+
+/// Replace comments and literals (delimiters included) with spaces;
+/// everything else is copied verbatim.
+pub fn strip(src: &str) -> String {
+    let b = src.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+            let mut j = i;
+            while j < b.len() && b[j] != b'\n' {
+                j += 1;
+            }
+            blank(&mut out, b, i, j);
+            i = j;
+        } else if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < b.len() && depth > 0 {
+                if b[j] == b'/' && j + 1 < b.len() && b[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && j + 1 < b.len() && b[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, b, i, j);
+            i = j;
+        } else if c == b'"' {
+            let j = string_end(b, i);
+            blank(&mut out, b, i, j);
+            i = j;
+        } else if (c == b'r' || c == b'b') && at_ident_boundary(b, i) {
+            if let Some(j) = raw_string_end(b, i) {
+                blank(&mut out, b, i, j);
+                i = j;
+            } else if c == b'b' && i + 1 < b.len() && b[i + 1] == b'"' {
+                let j = string_end(b, i + 1);
+                blank(&mut out, b, i, j);
+                i = j;
+            } else if c == b'b' && i + 1 < b.len() && b[i + 1] == b'\'' {
+                let j = char_end(b, i + 1);
+                blank(&mut out, b, i, j);
+                i = j;
+            } else {
+                out.push(c);
+                i += 1;
+            }
+        } else if c == b'\'' {
+            if i + 1 < b.len() && b[i + 1] == b'\\' {
+                let j = char_end(b, i);
+                blank(&mut out, b, i, j);
+                i = j;
+            } else if i + 1 < b.len() {
+                // `'q'` is a char literal; `'a` with no closing quote
+                // right after one character is a lifetime.
+                let n = utf8_len(b[i + 1]);
+                if i + 1 + n < b.len() && b[i + 1 + n] == b'\'' {
+                    blank(&mut out, b, i, i + 2 + n);
+                    i += 2 + n;
+                } else {
+                    out.push(c);
+                    i += 1;
+                }
+            } else {
+                out.push(c);
+                i += 1;
+            }
+        } else {
+            out.push(c);
+            i += 1;
+        }
+    }
+    String::from_utf8(out).expect("stripping preserves utf-8")
+}
+
+/// Blank out every `#[cfg(test)] mod … { … }` block (any further
+/// attributes between the cfg and the `mod` keyword are skipped). Call
+/// on [`strip`] output: comments and strings are already spaces, so the
+/// brace counting is exact.
+pub fn strip_test_mods(src: &str) -> String {
+    let b = src.as_bytes();
+    let mut out = b.to_vec();
+    let mut from = 0usize;
+    while let Some(rel) = src[from..].find("#[cfg(test)]") {
+        let start = from + rel;
+        from = start + 1;
+        let mut j = start + "#[cfg(test)]".len();
+        loop {
+            while j < b.len() && b[j].is_ascii_whitespace() {
+                j += 1;
+            }
+            if j + 1 < b.len() && b[j] == b'#' && b[j + 1] == b'[' {
+                let mut depth = 0usize;
+                while j < b.len() {
+                    match b[j] {
+                        b'[' => depth += 1,
+                        b']' => {
+                            depth -= 1;
+                            if depth == 0 {
+                                j += 1;
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+            } else {
+                break;
+            }
+        }
+        if !src[j..].starts_with("mod") {
+            continue; // cfg(test) on something other than a module
+        }
+        let Some(open_rel) = src[j..].find('{') else {
+            continue;
+        };
+        let open = j + open_rel;
+        if src[j..open].contains(';') {
+            continue; // `mod x;` file module — nothing inline to blank
+        }
+        let mut depth = 0usize;
+        let mut k = open;
+        while k < b.len() {
+            match b[k] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        let end = (k + 1).min(b.len());
+        for slot in out[start..end].iter_mut() {
+            if *slot != b'\n' {
+                *slot = b' ';
+            }
+        }
+        from = end;
+    }
+    String::from_utf8(out).expect("blanking preserves utf-8")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_blanked() {
+        let src = "let a = \"std::sync\"; // std::sync\n/* std::sync /* nested */ */ let b = 1;";
+        let s = strip(src);
+        assert!(!s.contains("std::sync"));
+        assert!(s.contains("let a ="));
+        assert!(s.contains("let b = 1;"));
+        assert_eq!(s.matches('\n').count(), src.matches('\n').count());
+        assert_eq!(s.len(), src.len(), "offsets must be stable");
+    }
+
+    #[test]
+    fn raw_and_byte_strings_are_blanked() {
+        let src = r###"let x = r#"AAA " BBB"#; let y = b"CCC"; let z = br"DDD"; keep"###;
+        let s = strip(src);
+        for gone in ["AAA", "BBB", "CCC", "DDD"] {
+            assert!(!s.contains(gone), "{gone} should be blanked");
+        }
+        assert!(s.contains("keep"));
+    }
+
+    #[test]
+    fn lifetimes_survive_char_literals_do_not() {
+        let src = "fn f<'a>(x: &'a str) -> char { let c = 'q'; let n = '\\n'; c }";
+        let s = strip(src);
+        assert!(s.contains("<'a>"));
+        assert!(s.contains("&'a str"));
+        assert!(!s.contains('q'));
+        assert!(!s.contains("\\n"));
+    }
+
+    #[test]
+    fn test_mods_are_blanked() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn f() { x.unwrap(); }\n}\nfn after() {}\n";
+        let s = strip_test_mods(&strip(src));
+        assert!(!s.contains("unwrap"));
+        assert!(s.contains("fn live"));
+        assert!(s.contains("fn after"));
+        assert_eq!(s.matches('\n').count(), src.matches('\n').count());
+    }
+}
