@@ -9,6 +9,7 @@
 #   smoke.sh replica     --replicas 2 vs --replicas 1: bit-identical answers
 #   smoke.sh durability  checkpoint, kill -9, recover, keep serving
 #   smoke.sh chaos       kill -9 mid-ingest x3 rounds, recover every time
+#   smoke.sh metrics     query load, then scrape + Metrics op: key series nonzero
 #
 # Run from the rust/ directory (or set BIN). Fails fast; server logs are
 # dumped on any boot failure.
@@ -153,14 +154,73 @@ smoke_chaos() {
   await_clean_shutdown
 }
 
+# scrape MADDR OUT — fetch the Prometheus text body from the metrics
+# endpoint, via curl when available, else bash's /dev/tcp.
+scrape() {
+  local maddr=$1 out=$2
+  if command -v curl >/dev/null 2>&1; then
+    curl -sS "http://${maddr}/metrics" > "$out"
+  else
+    exec 3<>"/dev/tcp/${maddr%:*}/${maddr#*:}"
+    printf 'GET /metrics HTTP/1.0\r\n\r\n' >&3
+    cat <&3 > "$out"
+    exec 3>&- 3<&-
+  fi
+}
+
+# Metrics smoke: boot with the scrape endpoint, drive singleton query
+# load through the coalescer, then assert the key series are present and
+# nonzero BOTH via an HTTP scrape and via the wire Metrics op — a single
+# query load must light up every stage histogram of the read path.
+smoke_metrics() {
+  local maddr_file="$TMP/sketchd_metrics.maddr" maddr
+  rm -f "$maddr_file"
+  serve_bg metrics --dim 16 --n 50000 --shards 4 \
+    --metrics-listen 127.0.0.1:0 --metrics-addr-file "$maddr_file" \
+    --slow-query-ms 500
+  for _ in $(seq 1 50); do
+    [ -s "$maddr_file" ] && break
+    sleep 0.2
+  done
+  [ -s "$maddr_file" ] \
+    || { echo "::error::metrics address file never appeared"; cat "$SERVE_LOG"; exit 1; }
+  maddr=$(cat "$maddr_file")
+  grep -q 'metrics on' "$SERVE_LOG"
+
+  "$BIN" client --connect "$ADDR" --query-load \
+    --n 4000 --queries 512 --batch 1 --connections 4 \
+    | tee "$TMP/client_metrics.log"
+  grep -E 'ann: answered [1-9][0-9]*/512' "$TMP/client_metrics.log"
+
+  scrape "$maddr" "$TMP/metrics_scrape.txt"
+  "$BIN" client --connect "$ADDR" --metrics > "$TMP/metrics_op.txt"
+  for body in "$TMP/metrics_scrape.txt" "$TMP/metrics_op.txt"; do
+    grep -E 'sketchd_inserts_total [1-9]' "$body"
+    grep -E 'sketchd_ann_queries_total [1-9]' "$body"
+    grep -E 'sketchd_trace_ids_total [1-9]' "$body"
+    grep -E 'sketchd_stored_points [1-9]' "$body"
+    for stage in coalesce_wait scatter shard_service merge; do
+      grep -E "sketchd_stage_${stage}_us_count [1-9]" "$body" \
+        || { echo "::error::stage_${stage} recorded nothing in $body"; cat "$body"; exit 1; }
+    done
+    grep -E 'sketchd_op_ann_us_count [1-9]' "$body"
+    grep -E 'sketchd_op_insert_us_count [1-9]' "$body"
+  done
+
+  "$BIN" client --connect "$ADDR" --n 1 --queries 1 --batch 1 --shutdown \
+    > "$TMP/client_metrics_shutdown.log"
+  await_clean_shutdown
+}
+
 case "${1:-}" in
   wire)       smoke_wire ;;
   qplane)     smoke_qplane ;;
   replica)    smoke_replica ;;
   durability) smoke_durability ;;
   chaos)      smoke_chaos ;;
+  metrics)    smoke_metrics ;;
   *)
-    echo "usage: smoke.sh wire|qplane|replica|durability|chaos" >&2
+    echo "usage: smoke.sh wire|qplane|replica|durability|chaos|metrics" >&2
     exit 2
     ;;
 esac

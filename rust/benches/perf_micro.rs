@@ -338,6 +338,31 @@ fn main() {
         record(&mut table, &mut json, "batcher.push", ns, "max_batch=64");
     }
 
+    // ---- metrics registry (the observability tax) ---------------------
+    // Every wire op and query stage pays one histogram record; the
+    // registry's claim is that this is an uncontended-mutex t-digest
+    // insert, cheap enough to sit on the dispatch hot path.
+    {
+        use sublinear_sketch::metrics::registry::Registry;
+        let reg = Registry::new();
+        let ns = time_ns(1000, 2_000_000, || {
+            reg.inserts.add(1);
+        });
+        record(&mut table, &mut json, "metrics.counter_add", ns, "Relaxed fetch_add");
+        let mut i = 0u64;
+        let ns = time_ns(200, 500_000, || {
+            reg.op_ann.record_us((i % 1_000) as f64 + 1.0);
+            i += 1;
+        });
+        record(
+            &mut table,
+            &mut json,
+            "metrics.record",
+            ns,
+            "t-digest histogram, uncontended lock",
+        );
+    }
+
     // ---- PJRT executor (artifact call overhead + hash batch) ----------
     if sublinear_sketch::runtime::Manifest::default_dir().join("manifest.json").exists() {
         match sublinear_sketch::runtime::Executor::from_default_dir() {

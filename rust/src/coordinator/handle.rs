@@ -24,14 +24,15 @@
 //!   ship over an unbounded control channel to the owning thread
 //!   ([`SketchService::run_cmd_loop`]) and block on a per-request reply.
 //!
-//! All counting is shared through [`ServiceCounters`], point-denominated.
-//! Only genuine overload ([`OfferOutcome::Shed`]) counts as shed; a
-//! disconnected mailbox (service shutting down) is a failed offer but
-//! never a shed point.
+//! All counting is shared through the metrics [`Registry`],
+//! point-denominated. Only genuine overload ([`OfferOutcome::Shed`])
+//! counts as shed; a disconnected mailbox (service shutting down) is a
+//! failed offer but never a shed point.
 //!
 //! [`SketchService`]: super::server::SketchService
 //! [`Overload`]: super::backpressure::Overload
 
+use crate::metrics::registry::Registry;
 use crate::util::sync::atomic::{AtomicUsize, Ordering};
 use crate::util::sync::mpsc::{channel, Sender};
 use crate::util::sync::Arc;
@@ -40,7 +41,7 @@ use anyhow::{anyhow, Result};
 
 use super::backpressure::OfferOutcome;
 use super::health::{HealthBoard, ShardHealth};
-use super::protocol::{AnnAnswer, ServiceCounters, ServiceStats};
+use super::protocol::{AnnAnswer, ServiceStats};
 use super::query::QueryPlane;
 use super::replica::ReplicaSet;
 use super::router::{hash_vector, RoutePolicy};
@@ -57,7 +58,7 @@ use super::NATIVE_BATCH_ROWS;
 /// are un-counted from `inserts` so `inserts == stored + shed` stays
 /// exact even when shards die.
 pub(super) fn ship_native_batch(
-    counters: &ServiceCounters,
+    registry: &Registry,
     per_shard: Vec<Vec<Vec<f32>>>,
     mut offer: impl FnMut(usize, Vec<Vec<f32>>) -> OfferOutcome,
 ) -> usize {
@@ -67,17 +68,13 @@ pub(super) fn ship_native_batch(
             let tail = pts.split_off(pts.len().min(NATIVE_BATCH_ROWS));
             let chunk = std::mem::replace(&mut pts, tail);
             let m = chunk.len();
-            ServiceCounters::add(&counters.inserts, m as u64);
+            registry.inserts.add(m as u64);
             match offer(s, chunk) {
                 OfferOutcome::Sent => ok += m,
-                OfferOutcome::Shed => {
-                    ServiceCounters::add(&counters.shed_points, m as u64)
-                }
+                OfferOutcome::Shed => registry.shed(m as u64),
                 // Not overload: the points never entered the service —
                 // un-count them so inserts == stored + shed stays exact.
-                OfferOutcome::Disconnected => {
-                    ServiceCounters::sub(&counters.inserts, m as u64)
-                }
+                OfferOutcome::Disconnected => registry.inserts.sub(m as u64),
             }
         }
     }
@@ -125,7 +122,7 @@ pub struct ServiceHandle {
     /// Round-robin cursor shared across clones so the partition stays
     /// balanced no matter which connection inserts.
     rr_next: Arc<AtomicUsize>,
-    counters: Arc<ServiceCounters>,
+    registry: Arc<Registry>,
     /// Per-shard durability health, read lock-free (no service-thread
     /// round-trip) for Hello and degraded-mode serving decisions.
     board: Arc<HealthBoard>,
@@ -145,7 +142,7 @@ impl Clone for ServiceHandle {
             sets: self.sets.clone(),
             route: self.route,
             rr_next: Arc::clone(&self.rr_next),
-            counters: Arc::clone(&self.counters),
+            registry: Arc::clone(&self.registry),
             board: Arc::clone(&self.board),
             cmd_tx: self.cmd_tx.clone(),
             plane: self.plane.clone(),
@@ -163,17 +160,17 @@ impl ServiceHandle {
         route: RoutePolicy,
         dim: usize,
         shards: usize,
-        counters: Arc<ServiceCounters>,
+        registry: Arc<Registry>,
         board: Arc<HealthBoard>,
         cmd_tx: Sender<ServiceCmd>,
         use_pjrt: bool,
     ) -> Self {
-        let plane = QueryPlane::new(sets.clone(), Arc::clone(&counters));
+        let plane = QueryPlane::new(sets.clone(), Arc::clone(&registry));
         ServiceHandle {
             sets,
             route,
             rr_next: Arc::new(AtomicUsize::new(0)),
-            counters,
+            registry,
             board,
             cmd_tx,
             plane,
@@ -186,6 +183,13 @@ impl ServiceHandle {
     /// Vector dimensionality the service was configured with.
     pub fn dim(&self) -> usize {
         self.dim
+    }
+
+    /// The shared metrics registry every clone records into (the wire
+    /// dispatch layer reads per-op histograms and the slow-query
+    /// threshold off it, and serves `Metrics` snapshots from it).
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
     }
 
     /// Per-shard durability health vector (`ShardHealth as u8` each),
@@ -240,15 +244,15 @@ impl ServiceHandle {
     /// instead of inventing overload.
     pub fn insert(&self, x: Vec<f32>) -> bool {
         let s = self.route(&x);
-        ServiceCounters::add(&self.counters.inserts, 1);
+        self.registry.inserts.add(1);
         match self.sets[s].offer_write(ShardCmd::Insert(x)) {
             OfferOutcome::Sent => true,
             OfferOutcome::Shed => {
-                ServiceCounters::add(&self.counters.shed_points, 1);
+                self.registry.shed(1);
                 false
             }
             OfferOutcome::Disconnected => {
-                ServiceCounters::sub(&self.counters.inserts, 1);
+                self.registry.inserts.sub(1);
                 false
             }
         }
@@ -262,7 +266,7 @@ impl ServiceHandle {
         for x in batch {
             per_shard[self.route(&x)].push(x);
         }
-        ship_native_batch(&self.counters, per_shard, |s, chunk| {
+        ship_native_batch(&self.registry, per_shard, |s, chunk| {
             self.sets[s].offer_write(ShardCmd::InsertBatch(chunk))
         })
     }
@@ -283,7 +287,7 @@ impl ServiceHandle {
         };
         match self.sets[s].delete(x) {
             Some(removed) => {
-                ServiceCounters::add(&self.counters.deletes, 1);
+                self.registry.deletes.add(1);
                 removed
             }
             None => false,
@@ -431,7 +435,7 @@ mod tests {
     /// error immediately instead of reaching the fake shard.
     fn bare_handle(
         shard_txs: Vec<super::super::backpressure::BoundedSender<ShardCmd>>,
-        counters: Arc<ServiceCounters>,
+        registry: Arc<Registry>,
     ) -> ServiceHandle {
         let (cmd_tx, cmd_rx) = channel::<ServiceCmd>();
         drop(cmd_rx);
@@ -441,7 +445,7 @@ mod tests {
             RoutePolicy::HashVector,
             4,
             shards,
-            counters,
+            registry,
             Arc::new(super::super::health::HealthBoard::new(shards)),
             cmd_tx,
             false,
@@ -463,8 +467,8 @@ mod tests {
         // deliver batch 2 before batch 1's reply, and the recv_timeout
         // below turns that into a clean failure instead of a hang.
         let (tx, rx) = bounded::<ShardCmd>(16, Overload::Block);
-        let counters = Arc::new(ServiceCounters::default());
-        let handle = bare_handle(vec![tx], Arc::clone(&counters));
+        let registry = Arc::new(Registry::new());
+        let handle = bare_handle(vec![tx], Arc::clone(&registry));
 
         let shard = std::thread::spawn(move || {
             let mut pending = Vec::new();
@@ -490,7 +494,7 @@ mod tests {
         );
         assert_eq!(q1.join().unwrap(), vec![None]);
         assert_eq!(q2.join().unwrap(), vec![None]);
-        assert_eq!(counters.snapshot().ann_queries, 2);
+        assert_eq!(registry.ann_queries.get(), 2);
     }
 
     #[test]
@@ -524,7 +528,7 @@ mod tests {
                 }
             }
         });
-        let handle = bare_handle(vec![tx0, tx1], Arc::new(ServiceCounters::default()));
+        let handle = bare_handle(vec![tx0, tx1], Arc::new(Registry::new()));
         let err = handle.query_batch(vec![vec![0.0; 4]]).unwrap_err().to_string();
         assert!(err.contains("shard 1"), "{err}");
         let err = handle.kde_batch(vec![vec![0.0; 4]]).unwrap_err().to_string();
@@ -544,12 +548,12 @@ mod tests {
         // zero here) reconciles even with dead shards.
         let (tx, rx) = bounded::<ShardCmd>(4, Overload::Shed);
         drop(rx);
-        let counters = Arc::new(ServiceCounters::default());
-        let handle = bare_handle(vec![tx], Arc::clone(&counters));
+        let registry = Arc::new(Registry::new());
+        let handle = bare_handle(vec![tx], Arc::clone(&registry));
         assert!(!handle.insert(vec![0.5; 4]));
         assert_eq!(handle.insert_batch(vec![vec![0.5; 4]; 10]), 0);
         assert!(!handle.delete(vec![0.5; 4]));
-        let st = counters.snapshot();
+        let st = ServiceStats::from_registry(&registry);
         assert_eq!(st.inserts, 0, "disconnected offers roll back their count");
         assert_eq!(st.shed, 0, "a dead mailbox must not masquerade as overload");
         assert_eq!(st.deletes, 0, "unacknowledged deletes must not count");

@@ -23,7 +23,7 @@ pub use backpressure::{bounded, BoundedSender, OfferOutcome, Overload};
 pub use batcher::{BatchPolicy, Batcher};
 pub use handle::{ServiceCmd, ServiceHandle};
 pub use health::{DurabilityLossPolicy, HealthBoard, ShardHealth};
-pub use protocol::{AnnAnswer, ServiceCounters, ServiceStats};
+pub use protocol::{AnnAnswer, ServiceStats};
 pub use query::QueryPlane;
 pub use replica::{ReadGuard, ReplicaSet};
 pub use router::{RoutePolicy, Router};

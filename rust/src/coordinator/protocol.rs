@@ -2,7 +2,7 @@
 //! they produce. Channels are attached at the server layer; these types
 //! stay plain data so they can be logged, tested and replayed.
 
-use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::metrics::registry::Registry;
 use crate::util::sync::Arc;
 
 /// A batch of query vectors shared across shards without copying.
@@ -71,84 +71,25 @@ pub struct ServiceStats {
     pub refused_writes: u64,
 }
 
-/// Live service counters, shared between the owning [`SketchService`] and
-/// every [`ServiceHandle`] clone (connection threads ingest directly into
-/// shard mailboxes, so the counts must live behind an `Arc`, not behind
-/// `&mut self`). All counters are point-denominated.
-///
-/// # Memory-ordering contract
-///
-/// Every field is a pure statistic: incremented on the hot path, read
-/// only by `snapshot()` for a `Stats` reply, and never used to make a
-/// control decision or to publish other memory. No load of one counter
-/// synchronizes-with any store of another — the reconciliation
-/// invariant `inserts == stored + shed + refused` is checked after the
-/// involved threads are *joined* (tests) or quiesced (a drained
-/// mailbox), where the happens-before edge comes from the join/channel,
-/// not from the counters. `Relaxed` therefore suffices on every
-/// operation, and the xtask `relaxed-allowlist` lint pins exactly these
-/// fields as the ones allowed to use it. A snapshot taken mid-traffic
-/// may be internally skewed (counters read one at a time); that is
-/// inherent to per-field atomics and documented at the wire level.
-///
-/// [`SketchService`]: super::server::SketchService
-/// [`ServiceHandle`]: super::handle::ServiceHandle
-#[derive(Debug, Default)]
-pub struct ServiceCounters {
-    /// Points *provisionally* accepted at the front door (`Relaxed`:
-    /// stat only; rolled back via [`ServiceCounters::sub`] when the
-    /// offer turns out to be `Disconnected`).
-    pub inserts: AtomicU64,
-    /// Acknowledged turnstile deletions (`Relaxed`: stat only, bumped
-    /// after the shard's ack — the ack channel provides the ordering).
-    pub deletes: AtomicU64,
-    /// ANN queries admitted (`Relaxed`: stat only).
-    pub ann_queries: AtomicU64,
-    /// KDE queries admitted (`Relaxed`: stat only).
-    pub kde_queries: AtomicU64,
-    /// Points dropped by `Overload::Shed` (never commands). `Relaxed`:
-    /// stat only; reconciled against `inserts` only at quiescence.
-    pub shed_points: AtomicU64,
-}
-
-impl ServiceCounters {
-    pub fn add(counter: &AtomicU64, n: u64) {
-        counter.fetch_add(n, Ordering::Relaxed);
-    }
-
-    /// Roll back a provisional count (a point is counted in `inserts`
-    /// BEFORE it is offered; an offer that fails because the mailbox is
-    /// disconnected — not overload — un-counts it, so
-    /// `inserts == stored + shed` reconciles exactly even when shards
-    /// die while the service is up).
-    pub fn sub(counter: &AtomicU64, n: u64) {
-        counter.fetch_sub(n, Ordering::Relaxed);
-    }
-
-    pub fn shed(&self) -> u64 {
-        self.shed_points.load(Ordering::Relaxed)
-    }
-
-    /// Overwrite every counter (recovery restore: checkpoint-resident
-    /// values plus whatever WAL replay re-applied on top).
-    pub fn restore(&self, inserts: u64, deletes: u64, ann_queries: u64, kde_queries: u64, shed: u64) {
-        self.inserts.store(inserts, Ordering::Relaxed);
-        self.deletes.store(deletes, Ordering::Relaxed);
-        self.ann_queries.store(ann_queries, Ordering::Relaxed);
-        self.kde_queries.store(kde_queries, Ordering::Relaxed);
-        self.shed_points.store(shed, Ordering::Relaxed);
-    }
-
-    /// Stats snapshot of the counters alone (shard-resident fields —
-    /// `stored_points`, `sketch_bytes`, `replicas`, `replica_depths` —
-    /// are filled in by the service).
-    pub fn snapshot(&self) -> ServiceStats {
+impl ServiceStats {
+    /// Counter-only snapshot from the [`Registry`] series the serving
+    /// path records into (shard-resident fields — `stored_points`,
+    /// `sketch_bytes`, `replicas`, `replica_depths` — are filled in by
+    /// the service). This replaces the old `ServiceCounters::snapshot`:
+    /// the live counters now live in `metrics::registry`, shared between
+    /// the owning `SketchService` and every `ServiceHandle` clone via
+    /// the registry `Arc`, with the same `Relaxed` per-field contract
+    /// (the reconciliation invariant `inserts == stored + shed +
+    /// refused` is still only checked at quiescence, where the
+    /// happens-before edge comes from a join or a drained mailbox, not
+    /// from the counters).
+    pub fn from_registry(reg: &Registry) -> ServiceStats {
         ServiceStats {
-            inserts: self.inserts.load(Ordering::Relaxed),
-            deletes: self.deletes.load(Ordering::Relaxed),
-            ann_queries: self.ann_queries.load(Ordering::Relaxed),
-            kde_queries: self.kde_queries.load(Ordering::Relaxed),
-            shed: self.shed_points.load(Ordering::Relaxed),
+            inserts: reg.inserts.get(),
+            deletes: reg.deletes.get(),
+            ann_queries: reg.ann_queries.get(),
+            kde_queries: reg.kde_queries.get(),
+            shed: reg.shed_points.get(),
             stored_points: 0,
             sketch_bytes: 0,
             replicas: 0,
@@ -233,18 +174,18 @@ mod tests {
     }
 
     #[test]
-    fn counters_snapshot_reads_all_fields() {
-        let c = ServiceCounters::default();
-        ServiceCounters::add(&c.inserts, 100);
-        ServiceCounters::add(&c.shed_points, 7);
-        ServiceCounters::add(&c.ann_queries, 3);
-        let st = c.snapshot();
+    fn stats_from_registry_reads_all_counter_fields() {
+        let reg = Registry::new();
+        reg.inserts.add(100);
+        reg.shed(7);
+        reg.ann_queries.add(3);
+        let st = ServiceStats::from_registry(&reg);
         assert_eq!(st.inserts, 100);
         assert_eq!(st.shed, 7);
         assert_eq!(st.ann_queries, 3);
         assert_eq!(st.deletes, 0);
         assert_eq!(st.stored_points, 0, "shard fields left for the service");
-        assert_eq!(c.shed(), 7);
+        assert_eq!(reg.shed_points.get(), 7);
     }
 
     #[test]

@@ -22,33 +22,48 @@
 //! surviving shards would silently drop every point the dead shard owns,
 //! which is indistinguishable from "no near neighbor" to the caller.
 
+use std::time::Instant;
+
+use crate::metrics::registry::Registry;
 use crate::util::sync::mpsc::channel;
 use crate::util::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use super::protocol::{kde_densities, merge_ann, merge_kde, AnnAnswer, ServiceCounters};
+use super::protocol::{kde_densities, merge_ann, merge_kde, AnnAnswer};
 use super::replica::ReplicaSet;
 use super::shard::ShardCmd;
 
 /// Cloneable, `Send` scatter/gather front over the shard replica sets.
+///
+/// Every batch records its stage timings into the shared registry:
+/// `stage_scatter` (replica pick + mailbox send, whole batch),
+/// `stage_shard_service` (per shard: mailbox dwell + sketch scan until
+/// the reply lands — the slowest shard gates the batch), and
+/// `stage_merge` (global min / kernel-sum reduce).
 pub struct QueryPlane {
     sets: Vec<ReplicaSet>,
-    counters: Arc<ServiceCounters>,
+    registry: Arc<Registry>,
 }
 
 impl Clone for QueryPlane {
     fn clone(&self) -> Self {
         QueryPlane {
             sets: self.sets.clone(),
-            counters: Arc::clone(&self.counters),
+            registry: Arc::clone(&self.registry),
         }
     }
 }
 
 impl QueryPlane {
-    pub(super) fn new(sets: Vec<ReplicaSet>, counters: Arc<ServiceCounters>) -> Self {
-        QueryPlane { sets, counters }
+    pub(super) fn new(sets: Vec<ReplicaSet>, registry: Arc<Registry>) -> Self {
+        QueryPlane { sets, registry }
+    }
+
+    /// The metrics registry this plane records into (shared with the
+    /// service and every handle clone).
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
     }
 
     /// Number of shards this plane scatters over.
@@ -71,7 +86,7 @@ impl QueryPlane {
     /// module docs for why a partial merge is never returned.
     pub fn ann_batch(&self, queries: Vec<Vec<f32>>) -> Result<Vec<Option<AnnAnswer>>> {
         let n = queries.len();
-        ServiceCounters::add(&self.counters.ann_queries, n as u64);
+        self.registry.ann_queries.add(n as u64);
         if n == 0 {
             return Ok(Vec::new());
         }
@@ -79,6 +94,7 @@ impl QueryPlane {
         // Scatter to ALL shards before gathering anything, so every shard
         // works the batch at the same time. The read guards keep the
         // picked replicas' depth gauges raised until their replies land.
+        let t_scatter = Instant::now();
         let mut pending = Vec::with_capacity(self.sets.len());
         for (si, set) in self.sets.iter().enumerate() {
             let (rtx, rrx) = channel();
@@ -87,17 +103,23 @@ impl QueryPlane {
             };
             pending.push((rrx, guard));
         }
+        self.registry.stage_scatter.record(t_scatter.elapsed());
         let mut partials = Vec::with_capacity(pending.len());
         for (si, (rrx, guard)) in pending.into_iter().enumerate() {
+            let t_shard = Instant::now();
             match rrx.recv() {
                 Ok(part) => {
                     drop(guard);
+                    self.registry.stage_shard_service.record(t_shard.elapsed());
                     partials.push(part);
                 }
                 Err(_) => bail!("ANN query failed: shard {si} died mid-query"),
             }
         }
-        Ok(merge_ann(&partials, n))
+        let t_merge = Instant::now();
+        let merged = merge_ann(&partials, n);
+        self.registry.stage_merge.record(t_merge.elapsed());
+        Ok(merged)
     }
 
     /// Batched sliding-window KDE (summed kernel estimates, densities),
@@ -106,11 +128,12 @@ impl QueryPlane {
     /// would silently bias every estimate low, so it is an error.
     pub fn kde_batch(&self, queries: Vec<Vec<f32>>) -> Result<(Vec<f64>, Vec<f64>)> {
         let n = queries.len();
-        ServiceCounters::add(&self.counters.kde_queries, n as u64);
+        self.registry.kde_queries.add(n as u64);
         if n == 0 {
             return Ok((Vec::new(), Vec::new()));
         }
         let batch = Arc::new(queries);
+        let t_scatter = Instant::now();
         let mut pending = Vec::with_capacity(self.sets.len());
         for (si, set) in self.sets.iter().enumerate() {
             let (rtx, rrx) = channel();
@@ -119,18 +142,23 @@ impl QueryPlane {
             };
             pending.push((rrx, guard));
         }
+        self.registry.stage_scatter.record(t_scatter.elapsed());
         let mut partials = Vec::with_capacity(pending.len());
         for (si, (rrx, guard)) in pending.into_iter().enumerate() {
+            let t_shard = Instant::now();
             match rrx.recv() {
                 Ok(part) => {
                     drop(guard);
+                    self.registry.stage_shard_service.record(t_shard.elapsed());
                     partials.push(part);
                 }
                 Err(_) => bail!("KDE query failed: shard {si} died mid-query"),
             }
         }
+        let t_merge = Instant::now();
         let (sums, pop) = merge_kde(&partials, n);
         let density = kde_densities(&sums, pop);
+        self.registry.stage_merge.record(t_merge.elapsed());
         Ok((sums, density))
     }
 }
@@ -172,30 +200,33 @@ mod tests {
     #[test]
     fn empty_batches_short_circuit() {
         let (tx, _rx) = bounded(4, Overload::Block);
-        let plane = QueryPlane::new(vec![single(tx)], Arc::new(ServiceCounters::default()));
+        let plane = QueryPlane::new(vec![single(tx)], Arc::new(Registry::new()));
         assert!(plane.ann_batch(Vec::new()).unwrap().is_empty());
         let (s, d) = plane.kde_batch(Vec::new()).unwrap();
         assert!(s.is_empty() && d.is_empty());
     }
 
     #[test]
-    fn healthy_shards_answer_and_count() {
+    fn healthy_shards_answer_count_and_record_stages() {
         let (tx0, rx0) = bounded(4, Overload::Block);
         let (tx1, rx1) = bounded(4, Overload::Block);
         let (j0, j1) = (fake_shard(rx0), fake_shard(rx1));
-        let counters = Arc::new(ServiceCounters::default());
+        let registry = Arc::new(Registry::new());
         let plane = QueryPlane::new(
             vec![single(tx0.clone()), single(tx1.clone())],
-            Arc::clone(&counters),
+            Arc::clone(&registry),
         );
         let ans = plane.ann_batch(vec![vec![0.0; 4], vec![1.0; 4]]).unwrap();
         assert_eq!(ans, vec![None, None]);
         let (sums, dens) = plane.kde_batch(vec![vec![0.0; 4]]).unwrap();
         assert_eq!(sums, vec![2.0], "kernel sums add across the partition");
         assert_eq!(dens, vec![2.0 / 20.0]);
-        let st = counters.snapshot();
-        assert_eq!(st.ann_queries, 2);
-        assert_eq!(st.kde_queries, 1);
+        assert_eq!(registry.ann_queries.get(), 2);
+        assert_eq!(registry.kde_queries.get(), 1);
+        // Each batch records scatter/merge once, shard-service per shard.
+        assert_eq!(registry.stage_scatter.count(), 2);
+        assert_eq!(registry.stage_merge.count(), 2);
+        assert_eq!(registry.stage_shard_service.count(), 4);
         assert!(tx0.force(ShardCmd::Shutdown));
         assert!(tx1.force(ShardCmd::Shutdown));
         j0.join().unwrap();
@@ -211,7 +242,7 @@ mod tests {
         let (tx1, rx1) = bounded(8, Overload::Block);
         let (j0, j1) = (fake_shard(rx0), fake_shard(rx1));
         let set = ReplicaSet::new(vec![tx0.clone(), tx1.clone()]);
-        let plane = QueryPlane::new(vec![set.clone()], Arc::new(ServiceCounters::default()));
+        let plane = QueryPlane::new(vec![set.clone()], Arc::new(Registry::new()));
         for _ in 0..4 {
             let ans = plane.ann_batch(vec![vec![0.0; 4]]).unwrap();
             assert_eq!(ans, vec![None]);
@@ -233,8 +264,7 @@ mod tests {
         let (tx1, rx1) = bounded::<ShardCmd>(4, Overload::Block);
         drop(rx1);
         let j0 = fake_shard(rx0);
-        let counters = Arc::new(ServiceCounters::default());
-        let plane = QueryPlane::new(vec![single(tx0.clone()), single(tx1)], counters);
+        let plane = QueryPlane::new(vec![single(tx0.clone()), single(tx1)], Arc::new(Registry::new()));
         let err = plane.ann_batch(vec![vec![0.0; 4]]).unwrap_err().to_string();
         assert!(err.contains("shard 1"), "{err}");
         let err = plane.kde_batch(vec![vec![0.0; 4]]).unwrap_err().to_string();
@@ -257,7 +287,7 @@ mod tests {
                 }
             }
         });
-        let plane = QueryPlane::new(vec![single(tx.clone())], Arc::new(ServiceCounters::default()));
+        let plane = QueryPlane::new(vec![single(tx.clone())], Arc::new(Registry::new()));
         let err = plane.ann_batch(vec![vec![0.0; 4]]).unwrap_err().to_string();
         assert!(err.contains("died mid-query"), "{err}");
         assert!(tx.force(ShardCmd::Shutdown));

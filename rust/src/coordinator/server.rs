@@ -20,13 +20,15 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use crate::durability::{checkpoint, recovery, wal, FsyncPolicy};
+use crate::metrics::registry::Registry;
+use crate::obs::log;
 use crate::runtime::Executor;
 use crate::sketch::ann::SAnnConfig;
 
 use super::backpressure::{bounded, OfferOutcome, Overload};
 use super::handle::{ServiceCmd, ServiceHandle};
 use super::health::{DurabilityLossPolicy, HealthBoard};
-use super::protocol::{AnnAnswer, ServiceCounters, ServiceStats};
+use super::protocol::{AnnAnswer, ServiceStats};
 use super::query::QueryPlane;
 use super::replica::ReplicaSet;
 use super::router::{RoutePolicy, Router};
@@ -137,17 +139,17 @@ pub struct SketchService {
     /// exact code every `ServiceHandle` clone runs — including the
     /// no-partial-answers degradation contract.
     plane: QueryPlane,
-    /// Point-denominated live counters, shared with every
-    /// [`ServiceHandle`] so connection threads and the owning thread
-    /// account into one place.
-    counters: Arc<ServiceCounters>,
+    /// The metrics registry: point-denominated counters, stage/op latency
+    /// histograms, and sketch gauges — shared with every [`ServiceHandle`]
+    /// so connection threads and the owning thread account into one place.
+    registry: Arc<Registry>,
     /// Per-shard pending ingest (batched PJRT path): points accumulate
     /// until a shard's buffer fills one artifact batch, so the hash GEMM
     /// runs at full utilization instead of padding 16 rows to 256.
     pending_ingest: Vec<Vec<Vec<f32>>>,
     /// Epoch of the newest checkpoint (recovered or cut by this process).
     ckpt_epoch: u64,
-    /// `counters.inserts` at the last checkpoint (points-based trigger).
+    /// `registry.inserts` at the last checkpoint (points-based trigger).
     inserts_at_ckpt: u64,
     /// When the last checkpoint was cut (time-based trigger).
     last_ckpt_time: Instant,
@@ -179,7 +181,7 @@ impl SketchService {
             Some(dir) => Some(recovery::recover(dir, cfg.dim, cfg.shards)?),
             None => None,
         };
-        let counters = Arc::new(ServiceCounters::default());
+        let registry = Arc::new(Registry::new());
         let board = Arc::new(HealthBoard::new(cfg.shards));
         let (mut replayed_inserts, mut replayed_deletes) = (0u64, 0u64);
         let mut shards = Vec::with_capacity(cfg.shards);
@@ -237,22 +239,27 @@ impl SketchService {
                             path.display()
                         );
                     }
-                    eprintln!(
-                        "[shard-{i}] torn WAL tail after seq {} ({} replayed) — \
-                         truncating {} at byte {off}",
-                        report.last_seq,
-                        report.applied,
-                        path.display()
+                    log::warn(
+                        "coordinator::server",
+                        "torn WAL tail; truncating",
+                        crate::kv!(
+                            shard = i,
+                            last_seq = report.last_seq,
+                            replayed = report.applied,
+                            segment = path.display(),
+                            offset = off
+                        ),
                     );
                     wal::truncate_segment(path, *off)?;
                 }
-                let writer = wal::WalWriter::open(
+                let mut writer = wal::WalWriter::open(
                     dir,
                     i,
                     report.last_seq.max(rs.hwm) + 1,
                     cfg.fsync,
                     wal::DEFAULT_SEGMENT_BYTES,
                 )?;
+                writer.set_fsync_observer(Arc::clone(&registry));
                 // The WAL logs once per SHARD: only the primary appends.
                 members[0].attach_wal(writer);
             }
@@ -283,7 +290,7 @@ impl SketchService {
         }
         let ckpt_epoch = recovered.as_ref().map_or(0, |r| r.epoch);
         if let Some(rec) = &recovered {
-            counters.restore(
+            registry.restore(
                 rec.counters[0] + replayed_inserts,
                 rec.counters[1] + replayed_deletes,
                 rec.counters[2],
@@ -294,10 +301,10 @@ impl SketchService {
         let executor = if cfg.use_pjrt { Some(Executor::from_default_dir()?) } else { None };
         let router = Router::new(cfg.route, cfg.shards);
         let pending_ingest = vec![Vec::new(); cfg.shards];
-        let inserts_at_ckpt = counters.snapshot().inserts;
+        let inserts_at_ckpt = registry.inserts.get();
         let plane = QueryPlane::new(
             shards.iter().map(|s| s.set.clone()).collect(),
-            Arc::clone(&counters),
+            Arc::clone(&registry),
         );
         Ok(SketchService {
             cfg,
@@ -305,7 +312,7 @@ impl SketchService {
             router,
             executor,
             plane,
-            counters,
+            registry,
             pending_ingest,
             ckpt_epoch,
             inserts_at_ckpt,
@@ -323,15 +330,15 @@ impl SketchService {
     /// — a disconnected mailbox rolls back its insert count instead.
     pub fn insert(&mut self, x: Vec<f32>) -> bool {
         let shard = self.router.route(&x);
-        ServiceCounters::add(&self.counters.inserts, 1);
+        self.registry.inserts.add(1);
         match self.shards[shard].set.offer_write(ShardCmd::Insert(x)) {
             OfferOutcome::Sent => true,
             OfferOutcome::Shed => {
-                ServiceCounters::add(&self.counters.shed_points, 1);
+                self.registry.shed(1);
                 false
             }
             OfferOutcome::Disconnected => {
-                ServiceCounters::sub(&self.counters.inserts, 1);
+                self.registry.inserts.sub(1);
                 false
             }
         }
@@ -359,7 +366,7 @@ impl SketchService {
             // overload drops at most one kernel-batch worth of points, and
             // queue_cap keeps its per-point meaning within a factor of the
             // batch size.
-            return super::handle::ship_native_batch(&self.counters, per_shard, |s, chunk| {
+            return super::handle::ship_native_batch(&self.registry, per_shard, |s, chunk| {
                 self.shards[s].set.offer_write(ShardCmd::InsertBatch(chunk))
             });
         }
@@ -370,7 +377,7 @@ impl SketchService {
         // delta, so `ok == batch.len()` holds exactly as on the native
         // path whenever nothing sheds.
         let offered = batch.len();
-        let shed_before = self.counters.shed();
+        let shed_before = self.registry.shed_points.get();
         for x in batch {
             let s = self.router.route(&x);
             self.pending_ingest[s].push(x);
@@ -378,7 +385,7 @@ impl SketchService {
                 self.flush_shard_ingest(s);
             }
         }
-        let shed_during = self.counters.shed() - shed_before;
+        let shed_during = self.registry.shed_points.get() - shed_before;
         offered.saturating_sub(shed_during as usize)
     }
 
@@ -396,7 +403,7 @@ impl SketchService {
         }
         let dim = self.cfg.dim;
         let m = pts.len();
-        ServiceCounters::add(&self.counters.inserts, m as u64);
+        self.registry.inserts.add(m as u64);
         let Some(exec) = self.executor.as_mut() else {
             // Points can only accumulate in `pending_ingest` on the PJRT
             // path, so this arm is unreachable today — but an unwrap here
@@ -406,12 +413,8 @@ impl SketchService {
             // the shard thread.
             match self.shards[si].set.offer_write(ShardCmd::InsertBatch(pts)) {
                 OfferOutcome::Sent => {}
-                OfferOutcome::Shed => {
-                    ServiceCounters::add(&self.counters.shed_points, m as u64)
-                }
-                OfferOutcome::Disconnected => {
-                    ServiceCounters::sub(&self.counters.inserts, m as u64)
-                }
+                OfferOutcome::Shed => self.registry.shed(m as u64),
+                OfferOutcome::Disconnected => self.registry.inserts.sub(m as u64),
             }
             return;
         };
@@ -441,12 +444,8 @@ impl SketchService {
                     .collect();
                 match self.shards[si].set.offer_write(ShardCmd::InsertBatchSlots(items)) {
                     OfferOutcome::Sent => {}
-                    OfferOutcome::Shed => {
-                        ServiceCounters::add(&self.counters.shed_points, m as u64)
-                    }
-                    OfferOutcome::Disconnected => {
-                        ServiceCounters::sub(&self.counters.inserts, m as u64)
-                    }
+                    OfferOutcome::Shed => self.registry.shed(m as u64),
+                    OfferOutcome::Disconnected => self.registry.inserts.sub(m as u64),
                 }
             }
             _ => {
@@ -454,12 +453,8 @@ impl SketchService {
                 for x in pts {
                     match self.shards[si].set.offer_write(ShardCmd::Insert(x)) {
                         OfferOutcome::Sent => {}
-                        OfferOutcome::Shed => {
-                            ServiceCounters::add(&self.counters.shed_points, 1)
-                        }
-                        OfferOutcome::Disconnected => {
-                            ServiceCounters::sub(&self.counters.inserts, 1)
-                        }
+                        OfferOutcome::Shed => self.registry.shed(1),
+                        OfferOutcome::Disconnected => self.registry.inserts.sub(1),
                     }
                 }
             }
@@ -476,7 +471,7 @@ impl SketchService {
         };
         match self.shards[shard].set.delete(x) {
             Some(removed) => {
-                ServiceCounters::add(&self.counters.deletes, 1);
+                self.registry.deletes.add(1);
                 removed
             }
             None => false,
@@ -492,7 +487,7 @@ impl SketchService {
             return self.plane.ann_batch(queries);
         }
         let n = queries.len();
-        ServiceCounters::add(&self.counters.ann_queries, n as u64);
+        self.registry.ann_queries.add(n as u64);
         if n == 0 {
             return Ok(Vec::new());
         }
@@ -502,7 +497,6 @@ impl SketchService {
     fn query_batch_pjrt(&mut self, batch: Arc<Vec<Vec<f32>>>) -> Result<Vec<Option<AnnAnswer>>> {
         let n = batch.len();
         let dim = self.cfg.dim;
-        let trace = std::env::var_os("SKETCH_TRACE").is_some();
         let t0 = std::time::Instant::now();
         // Hash the whole batch per shard through the PJRT artifact (one
         // projection GEMM per shard, §Perf iteration 4), then scatter the
@@ -579,11 +573,23 @@ impl SketchService {
             Ok(d) => d,
             Err(_) => crate::runtime::native::dist_matrix(dim, &flat_q, &pool_flat),
         };
-        if trace {
-            eprintln!(
-                "[trace] batch n={n} pool={p} gather={:.1}ms rerank={:.1}ms",
-                t_gather.as_secs_f64() * 1e3,
-                (t0.elapsed() - t_gather).as_secs_f64() * 1e3
+        // On the PJRT path the scatter and per-shard service are one
+        // interleaved gather (the candidate recv loop above), so the
+        // whole pre-rerank span lands in `stage_shard_service`; the
+        // distance GEMM is the rerank stage proper.
+        let t_rerank = t0.elapsed() - t_gather;
+        self.registry.stage_shard_service.record(t_gather);
+        self.registry.stage_rerank.record(t_rerank);
+        if log::enabled(log::Level::Debug) {
+            log::debug(
+                "coordinator::server",
+                "pjrt batch reranked",
+                crate::kv!(
+                    n = n,
+                    pool = p,
+                    gather_us = t_gather.as_micros(),
+                    rerank_us = t_rerank.as_micros()
+                ),
             );
         }
         let r2 = (self.cfg.ann.c * self.cfg.ann.r) as f32;
@@ -660,6 +666,8 @@ impl SketchService {
     /// points); the equality is exact once ingest quiesces.
     pub fn stats(&mut self) -> ServiceStats {
         let (mut stored, mut bytes) = (0usize, 0usize);
+        let (mut occupied, mut eh_buckets) = (0usize, 0usize);
+        let (mut window_pop, mut seen, mut kept) = (0u64, 0u64, 0u64);
         // Primary replicas only: every copy holds the same points, so
         // summing across replicas would double-count the partition
         // (sketch_bytes deliberately reports ONE copy's footprint; the
@@ -670,10 +678,24 @@ impl SketchService {
                 if let Ok(st) = rx.recv() {
                     stored += st.stored;
                     bytes += st.sketch_bytes;
+                    occupied += st.kde_occupied_cells;
+                    eh_buckets += st.eh_buckets;
+                    window_pop += st.window_population;
+                    seen += st.sampler_seen;
+                    kept += st.sampler_kept;
                 }
             }
         }
-        let mut out = self.counters.snapshot();
+        // Refresh the sketch gauges from the same drain, so a metrics
+        // snapshot taken after any stats poll carries live occupancy.
+        self.registry.stored_points.set(stored as u64);
+        self.registry.sketch_bytes.set(bytes as u64);
+        self.registry.race_occupied_cells.set(occupied as u64);
+        self.registry.eh_buckets.set(eh_buckets as u64);
+        self.registry.window_population.set(window_pop);
+        self.registry.sampler_seen.set(seen);
+        self.registry.sampler_kept.set(kept);
+        let mut out = ServiceStats::from_registry(&self.registry);
         out.stored_points = stored;
         out.sketch_bytes = bytes;
         out.replicas = self.cfg.replicas as u32;
@@ -706,6 +728,7 @@ impl SketchService {
         let Some(dir) = self.cfg.data_dir.clone() else {
             bail!("durability is disabled (start the service with a data_dir)");
         };
+        let t_ckpt = Instant::now();
         self.flush_ingest();
         let mut shard_ckpts = Vec::with_capacity(self.shards.len());
         for (i, s) in self.shards.iter().enumerate() {
@@ -728,7 +751,7 @@ impl SketchService {
                 swakde: snap.swakde,
             });
         }
-        let counters = self.counters.snapshot();
+        let counters = ServiceStats::from_registry(&self.registry);
         // The stored insert/delete counters derive from the per-shard
         // APPLIED counts (captured in the same instant as each shard's
         // hwm), not the global offer-time counters — connection threads
@@ -753,7 +776,11 @@ impl SketchService {
         // Only after the rename is durable do the sealed segments die.
         for (i, sc) in data.shards.iter().enumerate() {
             if let Err(e) = wal::gc_segments(&dir, i, sc.hwm) {
-                eprintln!("[service] WAL GC for shard {i} failed (will retry next checkpoint): {e}");
+                log::warn(
+                    "coordinator::server",
+                    "WAL GC failed (will retry next checkpoint)",
+                    crate::kv!(shard = i, err = e),
+                );
             }
         }
         self.ckpt_epoch = data.epoch;
@@ -764,6 +791,7 @@ impl SketchService {
         let covered = data.counters[0];
         self.inserts_at_ckpt = covered;
         self.last_ckpt_time = Instant::now();
+        self.registry.checkpoint_duration.record(t_ckpt.elapsed());
         Ok(covered)
     }
 
@@ -771,7 +799,7 @@ impl SketchService {
     /// due. Time-based triggers only fire if new points arrived — an idle
     /// service must not rewrite identical checkpoints forever.
     fn maybe_background_checkpoint(&mut self) {
-        let inserts = self.counters.snapshot().inserts;
+        let inserts = self.registry.inserts.get();
         let new_points = inserts.saturating_sub(self.inserts_at_ckpt);
         let due_points = self
             .cfg
@@ -782,7 +810,11 @@ impl SketchService {
         });
         if due_points || due_time {
             if let Err(e) = self.checkpoint() {
-                eprintln!("[service] background checkpoint failed: {e}");
+                log::warn(
+                    "coordinator::server",
+                    "background checkpoint failed",
+                    crate::kv!(err = e),
+                );
                 // Push the next attempt a full interval out instead of
                 // hot-looping on a persistent error.
                 self.last_ckpt_time = Instant::now();
@@ -805,9 +837,10 @@ impl SketchService {
                     .is_some_and(|j| j.is_finished());
                 if dead {
                     if let Err(e) = self.heal_replica(i, r) {
-                        eprintln!(
-                            "[service] shard {i} replica {r} died and could not be healed \
-                             (will retry): {e}"
+                        log::error(
+                            "coordinator::server",
+                            "replica died and could not be healed (will retry)",
+                            crate::kv!(shard = i, replica = r, err = e),
                         );
                     }
                 }
@@ -858,7 +891,11 @@ impl SketchService {
         })?;
         let old = std::mem::replace(&mut self.shards[i].joins[r], new_join);
         let _ = old.join(); // reap the panicked thread (Err is expected)
-        eprintln!("[service] healed shard {i} replica {r} from the primary's live state");
+        log::info(
+            "coordinator::server",
+            "healed replica from the primary's live state",
+            crate::kv!(shard = i, replica = r),
+        );
         Ok(())
     }
 
@@ -874,7 +911,7 @@ impl SketchService {
             self.cfg.route,
             self.cfg.dim,
             self.cfg.shards,
-            Arc::clone(&self.counters),
+            Arc::clone(&self.registry),
             Arc::clone(&self.board),
             cmd_tx,
             self.cfg.use_pjrt,

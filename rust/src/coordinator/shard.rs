@@ -175,6 +175,16 @@ pub struct ShardStats {
     pub deleted: u64,
     pub sketch_bytes: usize,
     pub kde_occupied_cells: usize,
+    /// Live EH buckets across the SW-AKDE rows (compaction health: grows
+    /// logarithmically with the window when the ε-merge is keeping up).
+    pub eh_buckets: usize,
+    /// Estimated points inside the sliding window right now.
+    pub window_population: u64,
+    /// S-ANN sampler offers since startup (denominator of the keep rate).
+    pub sampler_seen: u64,
+    /// S-ANN sampler keeps since startup; the eviction/thinning rate is
+    /// `1 - kept/seen`.
+    pub sampler_kept: u64,
 }
 
 /// The state each shard thread owns.
@@ -275,9 +285,16 @@ impl Shard {
         };
         if self.health < to {
             self.health = to;
-            eprintln!(
-                "[shard-{}] {what} failed; shard is now {} (policy {}): {err}",
-                self.index, self.health, self.policy
+            crate::obs::log::error(
+                "coordinator::shard",
+                "durability lost",
+                crate::kv!(
+                    shard = self.index,
+                    what = what,
+                    now = self.health,
+                    policy = self.policy,
+                    err = err
+                ),
             );
         }
         if let Some(b) = &self.board {
@@ -541,6 +558,10 @@ impl Shard {
                 self.stats.stored = self.ann.stored();
                 self.stats.sketch_bytes = self.ann.memory_bytes() + self.kde.memory_bytes();
                 self.stats.kde_occupied_cells = self.kde.occupied_cells();
+                self.stats.eh_buckets = self.kde.eh_buckets();
+                self.stats.window_population = self.kde.population().round() as u64;
+                self.stats.sampler_seen = self.ann.sampler_seen();
+                self.stats.sampler_kept = self.ann.sampler_kept();
                 let _ = reply.send(self.stats.clone());
             }
             ShardCmd::SyncWal(reply) => {

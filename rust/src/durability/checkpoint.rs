@@ -207,7 +207,11 @@ pub fn load_latest(data_dir: &Path) -> Result<Option<CheckpointData>> {
         match CheckpointData::decode(&bytes) {
             Ok(data) => return Ok(Some(data)),
             Err(e) => {
-                eprintln!("[durability] skipping invalid checkpoint epoch {epoch}: {e}");
+                crate::obs::log::warn(
+                    "durability::checkpoint",
+                    "skipping invalid checkpoint",
+                    crate::kv!(epoch = epoch, err = e),
+                );
             }
         }
     }

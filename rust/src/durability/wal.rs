@@ -290,6 +290,11 @@ pub struct WalWriter {
     /// Payload scratch reused across appends: the per-record hot path
     /// allocates nothing in steady state.
     scratch: Vec<u8>,
+    /// Optional metrics registry: when wired (the service does this at
+    /// startup), every `sync` records its wall time into the shared
+    /// `wal_fsync` histogram. Tests and standalone writers run
+    /// unobserved.
+    registry: Option<crate::util::sync::Arc<crate::metrics::registry::Registry>>,
 }
 
 impl WalWriter {
@@ -326,7 +331,17 @@ impl WalWriter {
             pending_sync: 0,
             next_seq,
             scratch: Vec::new(),
+            registry: None,
         })
+    }
+
+    /// Record every future [`Self::sync`]'s wall time into the shared
+    /// registry's `wal_fsync` histogram.
+    pub fn set_fsync_observer(
+        &mut self,
+        registry: crate::util::sync::Arc<crate::metrics::registry::Registry>,
+    ) {
+        self.registry = Some(registry);
     }
 
     /// Highest sequence number assigned so far (0 before the first append).
@@ -367,9 +382,13 @@ impl WalWriter {
     /// barriers (service flush, checkpoints) call this regardless of the
     /// per-append policy.
     pub fn sync(&mut self) -> Result<()> {
+        let t = std::time::Instant::now();
         self.file.flush()?;
         io::sync_data(self.file.get_ref())?;
         self.pending_sync = 0;
+        if let Some(reg) = &self.registry {
+            reg.wal_fsync.record(t.elapsed());
+        }
         Ok(())
     }
 

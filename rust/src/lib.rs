@@ -22,6 +22,7 @@ pub mod durability;
 pub mod lsh;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod runtime;
 pub mod sketch;
 pub mod storage;

@@ -44,6 +44,9 @@ USAGE:
                 [--fsync always|off|every:N] [--checkpoint-every N]
                 [--checkpoint-secs T]
                 [--on-durability-loss degrade|read_only|abort]
+                [--metrics-listen HOST:PORT] [--metrics-addr-file PATH]
+                [--slow-query-ms N] [--log-level error|warn|info|debug]
+                [--log-file PATH]
       Serve the coordinator over TCP (length-prefixed binary protocol,
       see rust/src/net/frame.rs). --listen 127.0.0.1:0 picks a free
       port; the bound address is printed and, with --addr-file, written
@@ -65,6 +68,14 @@ USAGE:
       writes on the failed shard while reads keep serving, `abort`
       fail-stops the shard thread. Health is surfaced per shard in
       Stats and summarized in the Hello handshake (protocol v3).
+      Observability (protocol v4): --metrics-listen binds a plaintext
+      Prometheus scrape endpoint on its own port (127.0.0.1:0 picks a
+      free one; the bound address is printed and, with
+      --metrics-addr-file, written to PATH). --slow-query-ms N logs a
+      structured warning for any wire op slower than N ms, tagged with
+      its trace id. Serving-path diagnostics are JSON lines on stderr
+      (or --log-file PATH); --log-level or SKETCHD_LOG=error|warn|
+      info|debug sets the threshold (default info).
   sketchd client --connect HOST:PORT [--n 10000] [--queries 256]
                  [--batch 64] [--connections 1] [--seed 42]
                  [--timeout-ms 5000] [--retries 2]
@@ -86,6 +97,11 @@ USAGE:
       sockets (batch size --batch; the default 1 exercises the server's
       cross-connection query coalescer). Per-call latencies merge into
       one QPS/p50/p99 report across all connections.
+  sketchd client --connect HOST:PORT --metrics
+                 [--timeout-ms 5000] [--retries 2]
+      Fetch the server's metrics snapshot over the wire (Metrics op,
+      protocol v4) and print it in Prometheus text exposition format —
+      the same body the --metrics-listen scrape endpoint serves.
 ";
 
 fn main() -> Result<()> {
@@ -381,6 +397,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// connections until a client sends a Shutdown frame.
 fn cmd_serve_wire(args: &Args) -> Result<()> {
     let listen = args.require("listen")?;
+    // Install the structured logger before the service spawns so that
+    // recovery/WAL diagnostics land in the configured sink too.
+    let log_level = args
+        .flag("log-level")
+        .map(sublinear_sketch::obs::log::Level::parse);
+    sublinear_sketch::obs::log::init(
+        log_level,
+        args.flag("log-file").map(std::path::Path::new),
+    )?;
     let dim = args.get_usize("dim", 32)?;
     let n = args.get_usize("n", 100_000)?;
     let config = match args.flag("config") {
@@ -418,6 +443,10 @@ fn cmd_serve_wire(args: &Args) -> Result<()> {
     }
 
     let (handle, join) = SketchService::spawn(svc_cfg.clone())?;
+    let slow_ms = args.get_u64("slow-query-ms", 0)?;
+    if slow_ms > 0 {
+        handle.registry().slow_query_us.set(slow_ms.saturating_mul(1000));
+    }
     let server = WireServer::bind(listen, handle.clone())?;
     let addr = server.local_addr()?;
     // Wire ingest hashes shard-side (native batched kernels) — a PJRT
@@ -439,6 +468,17 @@ fn cmd_serve_wire(args: &Args) -> Result<()> {
     }
     if let Some(path) = args.flag("addr-file") {
         std::fs::write(path, addr.to_string())?;
+    }
+    if let Some(maddr) = args.flag("metrics-listen") {
+        let scraper = sublinear_sketch::net::MetricsListener::bind(maddr, handle.clone())?;
+        let bound = scraper.local_addr()?;
+        println!("[serve] metrics on {bound} (Prometheus text exposition)");
+        if let Some(path) = args.flag("metrics-addr-file") {
+            std::fs::write(path, bound.to_string())?;
+        }
+        std::thread::Builder::new()
+            .name("metrics-listener".into())
+            .spawn(move || scraper.run())?;
     }
     server.run()?;
     println!("[serve] shutdown requested, draining");
@@ -671,6 +711,15 @@ fn cmd_client(args: &Args) -> Result<()> {
         sublinear_sketch::net::PROTOCOL_VERSION
     );
     drop(probe);
+
+    if args.has("metrics") {
+        // Snapshot-only mode: fetch the registry over the wire and print
+        // the same Prometheus text body the scrape endpoint serves.
+        let mut c = SketchClient::connect_with(&addr, opts)?;
+        let snap = c.metrics()?;
+        print!("{}", snap.to_prometheus());
+        return Ok(());
+    }
 
     if args.has("query-load") {
         run_query_load(args, &addr)?;

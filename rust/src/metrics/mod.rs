@@ -2,6 +2,7 @@
 //! compression rate, and latency/throughput accounting.
 
 pub mod latency;
+pub mod registry;
 pub mod tdigest;
 
 use crate::baselines::ExactNn;

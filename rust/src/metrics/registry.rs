@@ -1,0 +1,467 @@
+//! Process-wide metrics registry: named counters, gauges, and
+//! t-digest-backed latency histograms.
+//!
+//! The registry replaces the old `ServiceCounters` struct with a fixed
+//! catalog of named series that every tier of the serving stack records
+//! into: the wire dispatch layer (per-op latency), the query plane
+//! (per-stage latency), the shards (sketch-layer gauges), and the
+//! durability layer (fsync/checkpoint histograms). Reads are
+//! snapshot-on-demand — [`Registry::snapshot`] walks the catalog once
+//! and returns an owned [`MetricsSnapshot`] that can be encoded on the
+//! wire (`Metrics` op) or rendered as Prometheus text exposition
+//! ([`MetricsSnapshot::to_prometheus`]).
+//!
+//! # Memory-ordering contract
+//!
+//! Counter and gauge loads/stores are `Relaxed` (names `counter` and
+//! `gauge` are on the xtask ordering allowlist): each series is an
+//! independent monotone tally or level with no cross-series invariant
+//! that acquire/release could strengthen. A snapshot is therefore a
+//! *per-series*-atomic view, not a cross-series-consistent cut — the
+//! reconciliation tests tolerate this by quiescing writers before
+//! asserting identities like `inserts == stored + shed`. Histograms
+//! hide behind a `Mutex` because the t-digest itself is not a
+//! concurrent structure; the hot path pays one uncontended lock per
+//! record, which `perf_micro` tracks as `metrics.record`.
+
+use std::time::Duration;
+
+use crate::metrics::tdigest::TDigest;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{lock_unpoisoned, Mutex};
+
+/// A monotone (well, mostly — recovery may `store`) event tally.
+#[derive(Debug, Default)]
+pub struct Counter {
+    counter: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&self, n: u64) {
+        self.counter.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Compensate an optimistic `add` (e.g. an insert later refused by
+    /// a read-only shard). Saturation is not a concern: every `sub`
+    /// pairs with a prior `add` on the same series.
+    pub fn sub(&self, n: u64) {
+        self.counter.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.counter.load(Ordering::Relaxed)
+    }
+
+    /// Overwrite the tally, used only when restoring counters from a
+    /// checkpoint during recovery (before any traffic is admitted).
+    pub fn store(&self, v: u64) {
+        self.counter.store(v, Ordering::Relaxed);
+    }
+
+    /// Atomically mint the next id from this series (used for trace
+    /// ids). Starts at 1 so id 0 can mean "client supplied none".
+    pub fn next(&self) -> u64 {
+        self.counter.fetch_add(1, Ordering::Relaxed) + 1
+    }
+}
+
+/// An instantaneous level (occupancy, population, size). Unlike a
+/// counter it is expected to move both ways.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    gauge: AtomicU64,
+}
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set(&self, v: u64) {
+        self.gauge.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.gauge.load(Ordering::Relaxed)
+    }
+
+    pub fn add(&self, n: u64) {
+        self.gauge.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Paired with a prior `add`; the loom model
+    /// `registry_gauge_pairing_under_racing_readers` checks that racing
+    /// readers never observe a wrapped (underflowed) level as long as
+    /// every `sub` follows its `add` on the same thread.
+    pub fn sub(&self, n: u64) {
+        self.gauge.fetch_sub(n, Ordering::Relaxed);
+    }
+}
+
+/// Interior state of a [`Histogram`]: the digest plus exact count/sum
+/// (the digest's own count is an f64 and its sum is approximate).
+#[derive(Debug)]
+struct HistoInner {
+    digest: TDigest,
+    count: u64,
+    sum_us: f64,
+}
+
+/// A latency histogram backed by [`TDigest`]. All values are recorded
+/// in microseconds.
+#[derive(Debug)]
+pub struct Histogram {
+    inner: Mutex<HistoInner>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            inner: Mutex::new(HistoInner {
+                digest: TDigest::default(),
+                count: 0,
+                sum_us: 0.0,
+            }),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.record_us(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn record_us(&self, us: f64) {
+        if !us.is_finite() {
+            return;
+        }
+        let mut inner = lock_unpoisoned(&self.inner);
+        inner.digest.add(us);
+        inner.count += 1;
+        inner.sum_us += us;
+    }
+
+    pub fn count(&self) -> u64 {
+        lock_unpoisoned(&self.inner).count
+    }
+
+    /// Fold `other` into `self` (replica/shard roll-up). Clones the
+    /// other side's digest under its lock first so the two locks are
+    /// never held together.
+    pub fn merge(&self, other: &Histogram) {
+        let (digest, count, sum_us) = {
+            let o = lock_unpoisoned(&other.inner);
+            (o.digest.clone(), o.count, o.sum_us)
+        };
+        let mut inner = lock_unpoisoned(&self.inner);
+        inner.digest.merge(&digest);
+        inner.count += count;
+        inner.sum_us += sum_us;
+    }
+
+    pub fn snapshot(&self) -> HistoSnapshot {
+        let mut inner = lock_unpoisoned(&self.inner);
+        if inner.count == 0 {
+            return HistoSnapshot::default();
+        }
+        let count = inner.count;
+        let sum_us = inner.sum_us;
+        let p50_us = inner.digest.quantile(0.5);
+        let p90_us = inner.digest.quantile(0.9);
+        let p99_us = inner.digest.quantile(0.99);
+        let max_us = inner.digest.quantile(1.0);
+        HistoSnapshot {
+            count,
+            sum_us,
+            p50_us,
+            p90_us,
+            p99_us,
+            max_us,
+        }
+    }
+}
+
+/// Point-in-time summary of one histogram series.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HistoSnapshot {
+    pub count: u64,
+    pub sum_us: f64,
+    pub p50_us: f64,
+    pub p90_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+}
+
+/// The fixed series catalog. Static registration: every series the
+/// server exports is a named field here, so the snapshot order is
+/// stable, lookups are field accesses (no hashing on the hot path),
+/// and a missing series is a compile error rather than a silent gap.
+#[derive(Debug, Default)]
+pub struct Registry {
+    // -- service counters (the old `ServiceCounters` fields) --
+    pub inserts: Counter,
+    pub deletes: Counter,
+    pub ann_queries: Counter,
+    pub kde_queries: Counter,
+    pub shed_points: Counter,
+    /// Trace ids minted server-side ([`Counter::next`]); also the tally
+    /// of traced requests that arrived without a client-supplied id.
+    pub trace_ids: Counter,
+
+    // -- per-stage query-path histograms (µs) --
+    pub stage_coalesce_wait: Histogram,
+    pub stage_scatter: Histogram,
+    pub stage_shard_service: Histogram,
+    pub stage_merge: Histogram,
+    pub stage_rerank: Histogram,
+
+    // -- per-op wire dispatch histograms (µs) --
+    pub op_insert: Histogram,
+    pub op_ann: Histogram,
+    pub op_kde: Histogram,
+    pub op_checkpoint: Histogram,
+
+    // -- durability histograms (µs) --
+    pub wal_fsync: Histogram,
+    pub checkpoint_duration: Histogram,
+
+    // -- sketch-layer and service gauges --
+    pub stored_points: Gauge,
+    pub sketch_bytes: Gauge,
+    pub race_occupied_cells: Gauge,
+    pub eh_buckets: Gauge,
+    pub window_population: Gauge,
+    pub sampler_seen: Gauge,
+    pub sampler_kept: Gauge,
+    /// Slow-query log threshold in µs; 0 disables the slow-query log.
+    /// A config knob lives here so the dispatch layer reads one atomic
+    /// instead of threading another field through every constructor.
+    pub slow_query_us: Gauge,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Point-denominated shed accounting (a shed batch sheds all its
+    /// points, not one event).
+    pub fn shed(&self, points: u64) {
+        self.shed_points.add(points);
+    }
+
+    /// Restore the service counters from a checkpoint during recovery.
+    pub fn restore(&self, inserts: u64, deletes: u64, ann: u64, kde: u64, shed: u64) {
+        self.inserts.store(inserts);
+        self.deletes.store(deletes);
+        self.ann_queries.store(ann);
+        self.kde_queries.store(kde);
+        self.shed_points.store(shed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            counters: vec![
+                ("inserts".to_string(), self.inserts.get()),
+                ("deletes".to_string(), self.deletes.get()),
+                ("ann_queries".to_string(), self.ann_queries.get()),
+                ("kde_queries".to_string(), self.kde_queries.get()),
+                ("shed_points".to_string(), self.shed_points.get()),
+                ("trace_ids".to_string(), self.trace_ids.get()),
+            ],
+            gauges: vec![
+                ("stored_points".to_string(), self.stored_points.get()),
+                ("sketch_bytes".to_string(), self.sketch_bytes.get()),
+                (
+                    "race_occupied_cells".to_string(),
+                    self.race_occupied_cells.get(),
+                ),
+                ("eh_buckets".to_string(), self.eh_buckets.get()),
+                ("window_population".to_string(), self.window_population.get()),
+                ("sampler_seen".to_string(), self.sampler_seen.get()),
+                ("sampler_kept".to_string(), self.sampler_kept.get()),
+            ],
+            histograms: vec![
+                (
+                    "stage_coalesce_wait".to_string(),
+                    self.stage_coalesce_wait.snapshot(),
+                ),
+                ("stage_scatter".to_string(), self.stage_scatter.snapshot()),
+                (
+                    "stage_shard_service".to_string(),
+                    self.stage_shard_service.snapshot(),
+                ),
+                ("stage_merge".to_string(), self.stage_merge.snapshot()),
+                ("stage_rerank".to_string(), self.stage_rerank.snapshot()),
+                ("op_insert".to_string(), self.op_insert.snapshot()),
+                ("op_ann".to_string(), self.op_ann.snapshot()),
+                ("op_kde".to_string(), self.op_kde.snapshot()),
+                ("op_checkpoint".to_string(), self.op_checkpoint.snapshot()),
+                ("wal_fsync".to_string(), self.wal_fsync.snapshot()),
+                (
+                    "checkpoint_duration".to_string(),
+                    self.checkpoint_duration.snapshot(),
+                ),
+            ],
+        }
+    }
+}
+
+/// An owned point-in-time view of every series, in catalog order. This
+/// is what crosses the wire (`Response::Metrics`) and what renders to
+/// Prometheus text. Series names travel with the values so a v4 client
+/// can print a snapshot from a future server without a schema update.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, u64)>,
+    pub histograms: Vec<(String, HistoSnapshot)>,
+}
+
+impl MetricsSnapshot {
+    /// Prometheus text exposition (v0.0.4). Counters become
+    /// `sketchd_<name>_total`, gauges `sketchd_<name>`, histograms
+    /// summary-style `sketchd_<name>_us{quantile=...}` plus `_sum` and
+    /// `_count` series — the shape promtool expects from a summary.
+    pub fn to_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            let _ = writeln!(out, "# TYPE sketchd_{name}_total counter");
+            let _ = writeln!(out, "sketchd_{name}_total {v}");
+        }
+        for (name, v) in &self.gauges {
+            let _ = writeln!(out, "# TYPE sketchd_{name} gauge");
+            let _ = writeln!(out, "sketchd_{name} {v}");
+        }
+        for (name, h) in &self.histograms {
+            let _ = writeln!(out, "# TYPE sketchd_{name}_us summary");
+            let _ = writeln!(out, "sketchd_{name}_us{{quantile=\"0.5\"}} {}", h.p50_us);
+            let _ = writeln!(out, "sketchd_{name}_us{{quantile=\"0.9\"}} {}", h.p90_us);
+            let _ = writeln!(out, "sketchd_{name}_us{{quantile=\"0.99\"}} {}", h.p99_us);
+            let _ = writeln!(out, "sketchd_{name}_us_sum {}", h.sum_us);
+            let _ = writeln!(out, "sketchd_{name}_us_count {}", h.count);
+        }
+        out
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_add_sub_store_round_trip() {
+        let r = Registry::new();
+        r.inserts.add(10);
+        r.inserts.sub(3);
+        assert_eq!(r.inserts.get(), 7);
+        r.restore(100, 5, 2, 1, 9);
+        assert_eq!(r.inserts.get(), 100);
+        assert_eq!(r.deletes.get(), 5);
+        assert_eq!(r.ann_queries.get(), 2);
+        assert_eq!(r.kde_queries.get(), 1);
+        assert_eq!(r.shed_points.get(), 9);
+    }
+
+    #[test]
+    fn trace_ids_start_at_one_and_are_unique() {
+        let c = Counter::new();
+        let a = c.next();
+        let b = c.next();
+        assert_eq!(a, 1, "id 0 is reserved for 'client supplied none'");
+        assert_eq!(b, 2);
+        assert_eq!(c.get(), 2);
+    }
+
+    #[test]
+    fn gauge_pairing_holds_single_threaded() {
+        let g = Gauge::new();
+        for _ in 0..100 {
+            g.add(1);
+        }
+        for _ in 0..40 {
+            g.sub(1);
+        }
+        assert_eq!(g.get(), 60);
+    }
+
+    #[test]
+    fn histogram_snapshot_orders_quantiles() {
+        let h = Histogram::new();
+        for us in 1..=1000 {
+            h.record_us(us as f64);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 1000);
+        assert!((s.sum_us - 500_500.0).abs() < 1e-6);
+        assert!(s.p50_us <= s.p90_us, "p50 {} > p90 {}", s.p50_us, s.p90_us);
+        assert!(s.p90_us <= s.p99_us, "p90 {} > p99 {}", s.p90_us, s.p99_us);
+        assert!(s.p99_us <= s.max_us, "p99 {} > max {}", s.p99_us, s.max_us);
+        assert!((s.max_us - 1000.0).abs() < 1e-6, "max pins the largest observation");
+        assert!((s.p50_us - 500.0).abs() < 25.0, "p50 {} far from 500", s.p50_us);
+    }
+
+    #[test]
+    fn empty_histogram_snapshot_is_zeroed() {
+        let h = Histogram::new();
+        assert_eq!(h.snapshot(), HistoSnapshot::default());
+    }
+
+    #[test]
+    fn histogram_merge_parity_with_single_stream() {
+        // Recording a stream into one histogram and recording its two
+        // halves into separate histograms then merging must agree on
+        // count/sum exactly and on quantiles within digest error.
+        let whole = Histogram::new();
+        let left = Histogram::new();
+        let right = Histogram::new();
+        for i in 0..2000u64 {
+            let us = (i * 37 % 997) as f64 + 1.0;
+            whole.record_us(us);
+            if i % 2 == 0 {
+                left.record_us(us);
+            } else {
+                right.record_us(us);
+            }
+        }
+        left.merge(&right);
+        let a = whole.snapshot();
+        let b = left.snapshot();
+        assert_eq!(a.count, b.count);
+        assert!((a.sum_us - b.sum_us).abs() < 1e-6);
+        for (qa, qb) in [(a.p50_us, b.p50_us), (a.p90_us, b.p90_us), (a.p99_us, b.p99_us)] {
+            let spread = (qa - qb).abs() / qa.max(1.0);
+            assert!(spread < 0.05, "merged quantile drifted: {qa} vs {qb}");
+        }
+        assert!((a.max_us - b.max_us).abs() < 1e-6, "max is exact under merge");
+    }
+
+    #[test]
+    fn snapshot_names_are_stable_and_prometheus_renders_them() {
+        let r = Registry::new();
+        r.inserts.add(3);
+        r.stored_points.set(3);
+        r.op_ann.record_us(120.0);
+        let snap = r.snapshot();
+        assert!(snap.counters.iter().any(|(n, v)| n == "inserts" && *v == 3));
+        assert!(snap.gauges.iter().any(|(n, v)| n == "stored_points" && *v == 3));
+        assert!(snap
+            .histograms
+            .iter()
+            .any(|(n, h)| n == "op_ann" && h.count == 1));
+        let text = snap.to_prometheus();
+        assert!(text.contains("sketchd_inserts_total 3"));
+        assert!(text.contains("sketchd_stored_points 3"));
+        assert!(text.contains("sketchd_op_ann_us_count 1"));
+        assert!(text.contains("# TYPE sketchd_op_ann_us summary"));
+    }
+}

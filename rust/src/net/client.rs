@@ -21,10 +21,11 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::{AnnAnswer, ServiceStats};
+use crate::metrics::registry::MetricsSnapshot;
 
 use super::frame::{
-    encode_ann_query, encode_delete, encode_insert, encode_insert_batch, encode_kde_query,
-    read_frame, write_frame, Request, Response, PROTOCOL_VERSION,
+    encode_ann_query, encode_ann_query_traced, encode_delete, encode_insert, encode_insert_batch,
+    encode_kde_query, read_frame, write_frame, Request, Response, PROTOCOL_VERSION,
 };
 
 /// Socket deadlines and retry budget for a [`SketchClient`].
@@ -263,6 +264,20 @@ impl SketchClient {
         }
     }
 
+    /// [`Self::ann_query`] with a caller-chosen trace id: the server
+    /// stamps its slow-query log with this id, so a client can tie its
+    /// own latency record to the server's stage breakdown (v4).
+    pub fn ann_query_traced(
+        &mut self,
+        queries: &[Vec<f32>],
+        trace: u64,
+    ) -> Result<Vec<Option<AnnAnswer>>> {
+        match self.call_retry(&encode_ann_query_traced(queries, trace))? {
+            Response::AnnAnswers(answers) => Ok(answers),
+            other => bail!("ann_query got {other:?}"),
+        }
+    }
+
     /// One ANN query. Server-side, singletons from concurrent
     /// connections coalesce into shared scatters — this is the request
     /// shape the query-load generator drives.
@@ -289,6 +304,15 @@ impl SketchClient {
         match self.call_retry(&Request::Stats.encode())? {
             Response::Stats(st) => Ok(st),
             other => bail!("stats got {other:?}"),
+        }
+    }
+
+    /// Full named-series metrics snapshot (counters, gauges, stage and
+    /// per-op histograms). Idempotent — retried under the retry budget.
+    pub fn metrics(&mut self) -> Result<MetricsSnapshot> {
+        match self.call_retry(&Request::Metrics.encode())? {
+            Response::Metrics(m) => Ok(m),
+            other => bail!("metrics got {other:?}"),
         }
     }
 

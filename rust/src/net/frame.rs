@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! frame   := u32 LE payload length | payload
-//! payload := u8 version (=3) | u8 opcode | body
+//! payload := u8 version (=4) | u8 opcode | body
 //! ```
 //!
 //! All integers are little-endian; floats are IEEE-754 bit patterns, so a
@@ -24,12 +24,16 @@ use std::io::{Read, Write};
 use anyhow::{bail, Result};
 
 use crate::coordinator::{AnnAnswer, ServiceStats};
+use crate::metrics::registry::{HistoSnapshot, MetricsSnapshot};
 
 /// Protocol version (first payload byte of every frame). v2 added the
 /// replica count to `Hello` and per-replica read depths to `Stats`; v3
 /// added durability health to both (worst-shard byte in `Hello`, the
-/// per-shard health vector plus `wal_errors`/`refused_writes` in `Stats`).
-pub const PROTOCOL_VERSION: u8 = 3;
+/// per-shard health vector plus `wal_errors`/`refused_writes` in `Stats`);
+/// v4 added a client-suppliable u64 trace id to `AnnQuery`/`KdeQuery`
+/// (0 = "mint one for me") and the `Metrics` op, whose reply carries a
+/// full named-series [`MetricsSnapshot`].
+pub const PROTOCOL_VERSION: u8 = 4;
 
 /// Hard cap on one frame's payload (64 MiB).
 pub const MAX_FRAME_BYTES: usize = 1 << 26;
@@ -50,6 +54,7 @@ mod op {
     pub(super) const FLUSH: u8 = 8;
     pub(super) const SHUTDOWN: u8 = 9;
     pub(super) const CHECKPOINT: u8 = 10;
+    pub(super) const METRICS: u8 = 11;
 
     pub(super) const R_HELLO: u8 = 128;
     pub(super) const R_ACK: u8 = 129;
@@ -59,6 +64,7 @@ mod op {
     pub(super) const R_STATS: u8 = 133;
     pub(super) const R_ERROR: u8 = 134;
     pub(super) const R_CHECKPOINT: u8 = 135;
+    pub(super) const R_METRICS: u8 = 136;
 }
 
 /// Client → server frames.
@@ -69,9 +75,14 @@ pub enum Request {
     Insert(Vec<f32>),
     InsertBatch(Vec<Vec<f32>>),
     Delete(Vec<f32>),
-    AnnQuery(Vec<Vec<f32>>),
-    KdeQuery(Vec<Vec<f32>>),
+    /// `trace` 0 means "server, mint me a trace id"; any other value is
+    /// echoed into the server's slow-query log so a client can correlate
+    /// its own records with the server's stage timings (v4).
+    AnnQuery { queries: Vec<Vec<f32>>, trace: u64 },
+    KdeQuery { queries: Vec<Vec<f32>>, trace: u64 },
     Stats,
+    /// Fetch the full metrics snapshot (every named series, v4).
+    Metrics,
     Flush,
     /// Cut a durable whole-service checkpoint (WAL + sketch images).
     Checkpoint,
@@ -98,6 +109,9 @@ pub enum Response {
     AnnAnswers(Vec<Option<AnnAnswer>>),
     KdeAnswers { sums: Vec<f64>, densities: Vec<f64> },
     Stats(ServiceStats),
+    /// The full named-series snapshot (v4); the text rendering is
+    /// [`MetricsSnapshot::to_prometheus`], this frame is the binary one.
+    Metrics(MetricsSnapshot),
     /// Checkpoint cut; `points` is how many inserts it covers.
     Checkpointed { points: u64 },
     Error(String),
@@ -153,6 +167,84 @@ fn read_stats(c: &mut Cursor<'_>) -> Result<ServiceStats> {
     Ok(st)
 }
 
+/// The one string codec every frame shares (`Error`, metrics series
+/// names): u32 length | bytes, length validated against bytes present.
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    let b = s.as_bytes();
+    put_u32(out, b.len() as u32);
+    out.extend_from_slice(b);
+}
+
+fn read_str(c: &mut Cursor<'_>) -> Result<String> {
+    let n = c.count(1)?;
+    Ok(String::from_utf8_lossy(c.take(n)?).into_owned())
+}
+
+/// [`put_stats`]-style single field list for [`MetricsSnapshot`]: the
+/// encoder and decoder are adjacent and share this ordering, so a v4
+/// metrics field cannot drift between them. Histogram quantiles travel
+/// as IEEE-754 bit patterns (same discipline as KDE answers), so a
+/// snapshot round-trips bit-exact.
+fn put_histo(out: &mut Vec<u8>, h: &HistoSnapshot) {
+    put_u64(out, h.count);
+    for x in [h.sum_us, h.p50_us, h.p90_us, h.p99_us, h.max_us] {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn read_histo(c: &mut Cursor<'_>) -> Result<HistoSnapshot> {
+    Ok(HistoSnapshot {
+        count: c.u64()?,
+        sum_us: c.f64()?,
+        p50_us: c.f64()?,
+        p90_us: c.f64()?,
+        p99_us: c.f64()?,
+        max_us: c.f64()?,
+    })
+}
+
+fn put_metrics(out: &mut Vec<u8>, m: &MetricsSnapshot) {
+    put_u32(out, m.counters.len() as u32);
+    for (name, v) in &m.counters {
+        put_str(out, name);
+        put_u64(out, *v);
+    }
+    put_u32(out, m.gauges.len() as u32);
+    for (name, v) in &m.gauges {
+        put_str(out, name);
+        put_u64(out, *v);
+    }
+    put_u32(out, m.histograms.len() as u32);
+    for (name, h) in &m.histograms {
+        put_str(out, name);
+        put_histo(out, h);
+    }
+}
+
+fn read_metrics(c: &mut Cursor<'_>) -> Result<MetricsSnapshot> {
+    // Min item bytes: name length prefix (4) + u64 value (8) for the
+    // scalar series, + 5 f64 quantile fields for histograms.
+    let n = c.count(12)?;
+    let mut counters = Vec::with_capacity(n.min(DECODE_PREALLOC_CAP));
+    for _ in 0..n {
+        let name = read_str(c)?;
+        counters.push((name, c.u64()?));
+    }
+    let n = c.count(12)?;
+    let mut gauges = Vec::with_capacity(n.min(DECODE_PREALLOC_CAP));
+    for _ in 0..n {
+        let name = read_str(c)?;
+        gauges.push((name, c.u64()?));
+    }
+    let n = c.count(52)?;
+    let mut histograms = Vec::with_capacity(n.min(DECODE_PREALLOC_CAP));
+    for _ in 0..n {
+        let name = read_str(c)?;
+        histograms.push((name, read_histo(c)?));
+    }
+    Ok(MetricsSnapshot { counters, gauges, histograms })
+}
+
 // ---------------------------------------------------------------- encode
 
 fn put_u32(out: &mut Vec<u8>, v: u32) {
@@ -193,6 +285,13 @@ fn encode_vecs_req(opcode: u8, vs: &[Vec<f32>]) -> Vec<u8> {
     out
 }
 
+fn encode_traced_vecs_req(opcode: u8, vs: &[Vec<f32>], trace: u64) -> Vec<u8> {
+    let mut out = payload(opcode);
+    put_u64(&mut out, trace);
+    put_vecs(&mut out, vs);
+    out
+}
+
 /// Borrowed request encoders — the client hot path frames payloads
 /// without first cloning them into an owned [`Request`].
 pub fn encode_insert(v: &[f32]) -> Vec<u8> {
@@ -208,11 +307,20 @@ pub fn encode_delete(v: &[f32]) -> Vec<u8> {
 }
 
 pub fn encode_ann_query(vs: &[Vec<f32>]) -> Vec<u8> {
-    encode_vecs_req(op::ANN_QUERY, vs)
+    encode_ann_query_traced(vs, 0)
+}
+
+/// v4: carry a client-chosen trace id (0 = server mints one).
+pub fn encode_ann_query_traced(vs: &[Vec<f32>], trace: u64) -> Vec<u8> {
+    encode_traced_vecs_req(op::ANN_QUERY, vs, trace)
 }
 
 pub fn encode_kde_query(vs: &[Vec<f32>]) -> Vec<u8> {
-    encode_vecs_req(op::KDE_QUERY, vs)
+    encode_kde_query_traced(vs, 0)
+}
+
+pub fn encode_kde_query_traced(vs: &[Vec<f32>], trace: u64) -> Vec<u8> {
+    encode_traced_vecs_req(op::KDE_QUERY, vs, trace)
 }
 
 impl Request {
@@ -222,9 +330,10 @@ impl Request {
             Request::Insert(v) => encode_insert(v),
             Request::InsertBatch(vs) => encode_insert_batch(vs),
             Request::Delete(v) => encode_delete(v),
-            Request::AnnQuery(vs) => encode_ann_query(vs),
-            Request::KdeQuery(vs) => encode_kde_query(vs),
+            Request::AnnQuery { queries, trace } => encode_ann_query_traced(queries, *trace),
+            Request::KdeQuery { queries, trace } => encode_kde_query_traced(queries, *trace),
             Request::Stats => payload(op::STATS),
+            Request::Metrics => payload(op::METRICS),
             Request::Flush => payload(op::FLUSH),
             Request::Checkpoint => payload(op::CHECKPOINT),
             Request::Shutdown => payload(op::SHUTDOWN),
@@ -239,9 +348,16 @@ impl Request {
             op::INSERT => Request::Insert(c.vec_f32()?),
             op::INSERT_BATCH => Request::InsertBatch(c.vecs()?),
             op::DELETE => Request::Delete(c.vec_f32()?),
-            op::ANN_QUERY => Request::AnnQuery(c.vecs()?),
-            op::KDE_QUERY => Request::KdeQuery(c.vecs()?),
+            op::ANN_QUERY => {
+                let trace = c.u64()?;
+                Request::AnnQuery { queries: c.vecs()?, trace }
+            }
+            op::KDE_QUERY => {
+                let trace = c.u64()?;
+                Request::KdeQuery { queries: c.vecs()?, trace }
+            }
             op::STATS => Request::Stats,
+            op::METRICS => Request::Metrics,
             op::FLUSH => Request::Flush,
             op::CHECKPOINT => Request::Checkpoint,
             op::SHUTDOWN => Request::Shutdown,
@@ -310,6 +426,11 @@ impl Response {
                 put_stats(&mut out, st);
                 out
             }
+            Response::Metrics(m) => {
+                let mut out = payload(op::R_METRICS);
+                put_metrics(&mut out, m);
+                out
+            }
             Response::Checkpointed { points } => {
                 let mut out = payload(op::R_CHECKPOINT);
                 put_u64(&mut out, *points);
@@ -317,9 +438,7 @@ impl Response {
             }
             Response::Error(msg) => {
                 let mut out = payload(op::R_ERROR);
-                let b = msg.as_bytes();
-                put_u32(&mut out, b.len() as u32);
-                out.extend_from_slice(b);
+                put_str(&mut out, msg);
                 out
             }
         }
@@ -367,12 +486,9 @@ impl Response {
                 Response::KdeAnswers { sums, densities }
             }
             op::R_STATS => Response::Stats(read_stats(&mut c)?),
+            op::R_METRICS => Response::Metrics(read_metrics(&mut c)?),
             op::R_CHECKPOINT => Response::Checkpointed { points: c.u64()? },
-            op::R_ERROR => {
-                let n = c.count(1)?;
-                let raw = c.take(n)?;
-                Response::Error(String::from_utf8_lossy(raw).into_owned())
-            }
+            op::R_ERROR => Response::Error(read_str(&mut c)?),
             other => bail!("unknown response opcode {other}"),
         };
         c.finish()?;
@@ -529,24 +645,57 @@ mod tests {
     }
 
     fn gen_request(g: &mut Gen) -> Request {
-        let pick = g.usize_in(0, 9);
+        let pick = g.usize_in(0, 10);
         let dim = g.usize_in(1, 64);
         match pick {
             0 => Request::Hello,
             1 => Request::Insert(gen_vec(g, dim)),
             2 => Request::InsertBatch(gen_vecs(g)),
             3 => Request::Delete(gen_vec(g, dim)),
-            4 => Request::AnnQuery(gen_vecs(g)),
-            5 => Request::KdeQuery(gen_vecs(g)),
+            4 => Request::AnnQuery {
+                queries: gen_vecs(g),
+                trace: g.usize_in(0, 1 << 40) as u64,
+            },
+            5 => Request::KdeQuery {
+                queries: gen_vecs(g),
+                trace: g.usize_in(0, 1 << 40) as u64,
+            },
             6 => Request::Stats,
             7 => Request::Flush,
             8 => Request::Checkpoint,
+            9 => Request::Metrics,
             _ => Request::Shutdown,
         }
     }
 
+    fn gen_metrics(g: &mut Gen) -> MetricsSnapshot {
+        let series = |g: &mut Gen, prefix: &str, max: usize| -> Vec<(String, u64)> {
+            (0..g.size(0, max))
+                .map(|i| (format!("{prefix}_{i}"), g.usize_in(0, 1 << 40) as u64))
+                .collect()
+        };
+        let counters = series(g, "ctr", 8);
+        let gauges = series(g, "gauge", 8);
+        let histograms = (0..g.size(0, 6))
+            .map(|i| {
+                (
+                    format!("histo_{i}"),
+                    HistoSnapshot {
+                        count: g.usize_in(0, 1 << 30) as u64,
+                        sum_us: g.f64_in(0.0, 1e12),
+                        p50_us: g.f64_in(0.0, 1e6),
+                        p90_us: g.f64_in(0.0, 1e6),
+                        p99_us: g.f64_in(0.0, 1e6),
+                        max_us: g.f64_in(0.0, 1e6),
+                    },
+                )
+            })
+            .collect();
+        MetricsSnapshot { counters, gauges, histograms }
+    }
+
     fn gen_response(g: &mut Gen) -> Response {
-        match g.usize_in(0, 7) {
+        match g.usize_in(0, 8) {
             0 => Response::Hello {
                 version: PROTOCOL_VERSION,
                 dim: g.usize_in(1, 1024) as u32,
@@ -595,6 +744,7 @@ mod tests {
                 refused_writes: g.usize_in(0, 1 << 20) as u64,
             }),
             6 => Response::Checkpointed { points: g.usize_in(0, 1 << 40) as u64 },
+            7 => Response::Metrics(gen_metrics(g)),
             _ => Response::Error("frame \u{1F980} error".to_string()),
         }
     }
@@ -703,6 +853,59 @@ mod tests {
             let _ = Response::decode(&junk);
             Ok(())
         });
+    }
+
+    #[test]
+    fn metrics_op_roundtrips_and_survives_fuzzing() {
+        // Exact roundtrip of a populated snapshot straight off a live
+        // registry — encoder and decoder share put_metrics/read_metrics,
+        // so a field added to one side breaks this immediately.
+        let reg = crate::metrics::registry::Registry::new();
+        reg.inserts.add(42);
+        reg.stored_points.set(40);
+        reg.op_ann.record_us(133.7);
+        reg.stage_merge.record_us(9.5);
+        let resp = Response::Metrics(reg.snapshot());
+        assert_eq!(Response::decode(&resp.encode()).unwrap(), resp);
+        assert_eq!(Request::decode(&Request::Metrics.encode()).unwrap(), Request::Metrics);
+
+        // Hostile input: 1-byte mutations of a real snapshot frame and
+        // arbitrary junk must decode to a clean result, never a panic or
+        // a claim-driven allocation.
+        check("metrics_frame_mutation", 150, |g| {
+            let base = if g.bool() {
+                Response::Metrics(gen_metrics(g)).encode()
+            } else {
+                Request::Metrics.encode()
+            };
+            let mut m = base.clone();
+            let i = g.usize_in(0, m.len() - 1);
+            m[i] ^= g.usize_in(1, 255) as u8;
+            let _ = Request::decode(&m);
+            let _ = Response::decode(&m);
+            let junk: Vec<u8> = (0..g.size(0, 64)).map(|_| g.rng.next_u64() as u8).collect();
+            let _ = Request::decode(&junk);
+            let _ = Response::decode(&junk);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn traced_query_carries_the_trace_id() {
+        let qs = vec![vec![1.0f32, 2.0]];
+        let enc = encode_ann_query_traced(&qs, 0xDEAD_BEEF);
+        match Request::decode(&enc).unwrap() {
+            Request::AnnQuery { queries, trace } => {
+                assert_eq!(queries, qs);
+                assert_eq!(trace, 0xDEAD_BEEF);
+            }
+            other => panic!("decoded {other:?}"),
+        }
+        // The untraced encoder writes trace 0 ("mint one for me").
+        match Request::decode(&encode_kde_query(&qs)).unwrap() {
+            Request::KdeQuery { trace, .. } => assert_eq!(trace, 0),
+            other => panic!("decoded {other:?}"),
+        }
     }
 
     #[test]

@@ -21,4 +21,4 @@ pub mod server;
 
 pub use client::{ClientOptions, SketchClient};
 pub use frame::{Request, Response, MAX_FRAME_BYTES, PROTOCOL_VERSION};
-pub use server::{LoadAwareWait, QueryCoalescer, WireServer};
+pub use server::{LoadAwareWait, MetricsListener, QueryCoalescer, WireServer};

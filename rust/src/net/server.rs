@@ -26,6 +26,8 @@ use crate::util::sync::{lock_unpoisoned, Arc, Mutex};
 use anyhow::{Context, Result};
 
 use crate::coordinator::{AnnAnswer, BatchPolicy, Batcher, ServiceHandle};
+use crate::metrics::registry::Registry;
+use crate::obs::log;
 
 use super::frame::{read_frame, write_frame, Request, Response, PROTOCOL_VERSION};
 
@@ -230,16 +232,42 @@ pub struct QueryCoalescer {
 pub struct CoalescerCore {
     policy: BatchPolicy,
     load: LoadAwareWait,
+    /// Shared metrics registry; when wired, every flush-initiating
+    /// thread records its admission→scatter-start delay into
+    /// `stage_coalesce_wait`. `None` keeps the loom model (which drives
+    /// the lane protocol with a recording runner) registry-free.
+    registry: Option<Arc<Registry>>,
 }
 
 impl CoalescerCore {
     pub fn new(policy: BatchPolicy) -> Self {
-        CoalescerCore { policy, load: LoadAwareWait::new(policy.max_wait) }
+        CoalescerCore {
+            policy,
+            load: LoadAwareWait::new(policy.max_wait),
+            registry: None,
+        }
+    }
+
+    /// Wire the shared registry (builder-style; the wire server does
+    /// this, tests and models may not).
+    pub fn with_registry(mut self, registry: Arc<Registry>) -> Self {
+        self.registry = Some(registry);
+        self
     }
 
     /// Live load signals (observability + tests).
     pub fn load(&self) -> &LoadAwareWait {
         &self.load
+    }
+
+    /// One sample per flush: the initiating thread's wait between lane
+    /// admission and scatter start (parked entries picked up by that
+    /// flush waited at most as long as the batch's oldest entry; the
+    /// initiator's wait is the recorded proxy).
+    fn observe_coalesce_wait(&self, waited: Duration) {
+        if let Some(reg) = &self.registry {
+            reg.stage_coalesce_wait.record(waited);
+        }
     }
 }
 
@@ -280,6 +308,7 @@ impl<T> CoalescingLane<T> {
         make: impl FnOnce(Sender<Result<R, String>>) -> T,
         run: impl Fn(Vec<T>),
     ) -> Result<R, String> {
+        let admitted = Instant::now();
         self.core.load.note_arrival();
         let (tx, rx) = channel();
         let admission = {
@@ -290,6 +319,7 @@ impl<T> CoalescingLane<T> {
             l.admit(make(tx), self.core.load.current())
         };
         if let Admission::Run { batch, lead } = admission {
+            self.core.observe_coalesce_wait(admitted.elapsed());
             self.run_tracked(batch, &run);
             if lead {
                 lock_unpoisoned(&self.lane).in_flight = false;
@@ -313,6 +343,7 @@ impl<T> CoalescingLane<T> {
                         }
                     };
                     if !due.is_empty() {
+                        self.core.observe_coalesce_wait(admitted.elapsed());
                         self.run_tracked(due, &run);
                     }
                 }
@@ -326,7 +357,9 @@ impl<T> CoalescingLane<T> {
 
 impl QueryCoalescer {
     pub fn new(handle: ServiceHandle, policy: BatchPolicy) -> Self {
-        let core = Arc::new(CoalescerCore::new(policy));
+        let core = Arc::new(
+            CoalescerCore::new(policy).with_registry(Arc::clone(handle.registry())),
+        );
         QueryCoalescer {
             handle,
             ann: CoalescingLane::new(Arc::clone(&core)),
@@ -460,7 +493,7 @@ impl WireServer {
             let _ = std::thread::Builder::new()
                 .name(format!("wire-conn-{conn_id}"))
                 .spawn(move || {
-                    let _ = serve_conn(stream, handle, coalescer, stop, addr);
+                    let _ = serve_conn(stream, handle, coalescer, stop, addr, conn_id);
                 });
         }
         Ok(())
@@ -473,6 +506,7 @@ fn serve_conn(
     coalescer: Arc<QueryCoalescer>,
     stop: Arc<AtomicBool>,
     server_addr: SocketAddr,
+    conn_id: usize,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
@@ -483,9 +517,17 @@ fn serve_conn(
             return Ok(()); // peer closed
         }
         match Request::decode(&buf) {
-            Ok(req) => {
+            Ok(mut req) => {
                 let is_shutdown = matches!(req, Request::Shutdown);
+                // Mint a trace id right after decode when the client
+                // supplied none; op metadata is captured before dispatch
+                // consumes the request.
+                let traced = trace_request(&mut req, handle.registry());
+                let t_op = Instant::now();
                 let resp = dispatch(req, &handle, &coalescer);
+                if let Some((op, batch, trace)) = traced {
+                    observe_op(handle.registry(), op, batch, trace, conn_id, t_op.elapsed());
+                }
                 write_frame(&mut writer, &resp.encode())?;
                 if is_shutdown {
                     // Release pairs with the Acquire load in `run`'s
@@ -551,6 +593,61 @@ fn single_query(qs: &mut Vec<Vec<f32>>) -> Option<Vec<f32>> {
     }
 }
 
+/// Pre-dispatch observability for the ops that carry a latency
+/// histogram: returns `(op name, batch size, trace id)` and mints a
+/// server-side trace id for traced queries that arrived without one
+/// (`trace == 0` on the wire means "server assigns").
+fn trace_request(req: &mut Request, registry: &Registry) -> Option<(&'static str, usize, u64)> {
+    match req {
+        Request::Insert(_) => Some(("insert", 1, 0)),
+        Request::InsertBatch(vs) => Some(("insert", vs.len(), 0)),
+        Request::AnnQuery { queries, trace } => {
+            if *trace == 0 {
+                *trace = registry.trace_ids.next();
+            }
+            Some(("ann", queries.len(), *trace))
+        }
+        Request::KdeQuery { queries, trace } => {
+            if *trace == 0 {
+                *trace = registry.trace_ids.next();
+            }
+            Some(("kde", queries.len(), *trace))
+        }
+        Request::Checkpoint => Some(("checkpoint", 0, 0)),
+        _ => None,
+    }
+}
+
+/// Post-dispatch observability: record the op's wall time into its
+/// dispatch-layer histogram (so p50/p99 no longer depend on any client's
+/// recorder) and emit the slow-query log line when a threshold is set
+/// (`--slow-query-ms`, carried as the `slow_query_us` registry gauge).
+fn observe_op(
+    registry: &Registry,
+    op: &'static str,
+    batch: usize,
+    trace: u64,
+    conn_id: usize,
+    elapsed: Duration,
+) {
+    let histo = match op {
+        "insert" => &registry.op_insert,
+        "ann" => &registry.op_ann,
+        "kde" => &registry.op_kde,
+        _ => &registry.op_checkpoint,
+    };
+    histo.record(elapsed);
+    let threshold_us = registry.slow_query_us.get();
+    let us = elapsed.as_micros() as u64;
+    if threshold_us > 0 && us >= threshold_us {
+        log::warn(
+            "net::server",
+            "slow query",
+            crate::kv!(op = op, trace = trace, conn = conn_id, batch = batch, us = us),
+        );
+    }
+}
+
 fn dispatch(req: Request, handle: &ServiceHandle, coalescer: &QueryCoalescer) -> Response {
     match req {
         Request::Hello => Response::Hello {
@@ -578,7 +675,7 @@ fn dispatch(req: Request, handle: &ServiceHandle, coalescer: &QueryCoalescer) ->
             }
             Response::Deleted { removed: handle.delete(x) }
         }
-        Request::AnnQuery(mut qs) => {
+        Request::AnnQuery { queries: mut qs, trace: _ } => {
             if let Err(resp) = check_vectors(handle, &qs) {
                 return resp;
             }
@@ -596,7 +693,7 @@ fn dispatch(req: Request, handle: &ServiceHandle, coalescer: &QueryCoalescer) ->
                 }
             }
         }
-        Request::KdeQuery(mut qs) => {
+        Request::KdeQuery { queries: mut qs, trace: _ } => {
             if let Err(resp) = check_vectors(handle, &qs) {
                 return resp;
             }
@@ -618,6 +715,14 @@ fn dispatch(req: Request, handle: &ServiceHandle, coalescer: &QueryCoalescer) ->
             Ok(st) => Response::Stats(st),
             Err(e) => Response::Error(e.to_string()),
         },
+        Request::Metrics => {
+            // Drain shard stats first so the sketch gauges in the
+            // snapshot are live, not whatever the last poll left behind.
+            // A failed drain (service shutting down) still returns the
+            // counters/histograms, which live in the shared registry.
+            let _ = handle.stats();
+            Response::Metrics(handle.registry().snapshot())
+        }
         Request::Flush => match handle.flush() {
             Ok(()) => Response::Ack { accepted: 0 },
             Err(e) => Response::Error(e.to_string()),
@@ -628,6 +733,86 @@ fn dispatch(req: Request, handle: &ServiceHandle, coalescer: &QueryCoalescer) ->
         },
         Request::Shutdown => Response::Ack { accepted: 0 },
     }
+}
+
+/// A plaintext telemetry plane: binds its own port and answers every
+/// connection with one Prometheus text-exposition snapshot (HTTP/1.0,
+/// `Connection: close`), reusing the same thread-per-connection shape as
+/// [`WireServer`]. Scrapers (curl, Prometheus) point at it directly; the
+/// binary protocol's `Metrics` op serves the same snapshot to sketchd
+/// clients.
+pub struct MetricsListener {
+    listener: TcpListener,
+    handle: ServiceHandle,
+}
+
+impl MetricsListener {
+    pub fn bind<A: ToSocketAddrs + std::fmt::Debug>(
+        addr: A,
+        handle: ServiceHandle,
+    ) -> Result<Self> {
+        let listener = TcpListener::bind(&addr)
+            .with_context(|| format!("binding metrics listener {addr:?}"))?;
+        Ok(MetricsListener { listener, handle })
+    }
+
+    /// The actually-bound address (resolves `:0` ephemeral ports).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Accept and answer scrapes until the process exits. Runs on its
+    /// own (detached) thread: each scrape drains shard stats through the
+    /// service handle, so a hung service degrades scrapes to the last
+    /// refreshed gauges instead of blocking the accept loop.
+    pub fn run(self) {
+        let mut scrape_id = 0usize;
+        for stream in self.listener.incoming() {
+            let stream = match stream {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            scrape_id += 1;
+            let handle = self.handle.clone();
+            let _ = std::thread::Builder::new()
+                .name(format!("metrics-scrape-{scrape_id}"))
+                .spawn(move || {
+                    let _ = serve_scrape(stream, &handle);
+                });
+        }
+    }
+}
+
+/// Answer one scrape connection: consume the request head (tolerating
+/// both bare-TCP probes and HTTP GETs), refresh the sketch gauges, and
+/// write the snapshot as an HTTP/1.0 response.
+fn serve_scrape(stream: TcpStream, handle: &ServiceHandle) -> std::io::Result<()> {
+    use std::io::{BufRead, Write};
+    stream.set_read_timeout(Some(Duration::from_millis(500))).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    // Drain header lines until the blank separator, EOF, or timeout —
+    // bounded so a hostile peer cannot feed an endless head.
+    let mut line = String::new();
+    for _ in 0..64 {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) if line == "\r\n" || line == "\n" => break,
+            Ok(_) => continue,
+            Err(_) => break, // timeout or reset: answer anyway
+        }
+    }
+    let _ = handle.stats(); // refresh gauges; best-effort by design
+    let body = handle.registry().snapshot().to_prometheus();
+    let mut writer = BufWriter::new(stream);
+    write!(
+        writer,
+        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )?;
+    writer.write_all(body.as_bytes())?;
+    writer.flush()
 }
 
 #[cfg(test)]

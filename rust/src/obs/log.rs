@@ -1,0 +1,265 @@
+//! Structured leveled logging: one JSON object per line, to stderr or a
+//! `--log-file`.
+//!
+//! The serving and durability paths call [`error`]/[`warn`]/[`info`]/
+//! [`debug`] instead of `eprintln!` (enforced by the xtask
+//! `no-raw-print` lint), so operational output is machine-parseable and
+//! level-filterable. The sink is a process-wide write-once
+//! [`OnceLock`]: `sketchd serve` calls [`init`] during boot; library
+//! users and tests that never call it get a lazy default (stderr,
+//! level from `SKETCHD_LOG`, `info` if unset).
+//!
+//! A line looks like:
+//!
+//! ```json
+//! {"ts_ms":1754556000123,"level":"warn","target":"durability","msg":"torn WAL tail","shard":"3","dropped":"17"}
+//! ```
+//!
+//! Keys `ts_ms`/`level`/`target`/`msg` are always present and first;
+//! caller-supplied key/value pairs follow in argument order. Values are
+//! JSON strings (callers format numbers themselves) so the writer never
+//! needs to guess types.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::Path;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::util::sync::{lock_unpoisoned, Mutex, OnceLock};
+
+/// Severity, ordered so `level <= sink.level` means "emit".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error,
+    Warn,
+    Info,
+    Debug,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    /// Parse a `SKETCHD_LOG` value; unknown strings land on `Info` so a
+    /// typo loosens nothing and silences nothing important.
+    pub fn parse(s: &str) -> Level {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" | "warning" => Level::Warn,
+            "debug" | "trace" => Level::Debug,
+            _ => Level::Info,
+        }
+    }
+}
+
+struct Sink {
+    level: Level,
+    /// `None` = stderr. The file is behind a mutex so concurrent
+    /// connection threads emit whole lines, never interleaved bytes.
+    file: Option<Mutex<File>>,
+}
+
+static SINK: OnceLock<Sink> = OnceLock::new();
+
+fn env_level() -> Level {
+    match std::env::var("SKETCHD_LOG") {
+        Ok(v) => Level::parse(&v),
+        Err(_) => Level::Info,
+    }
+}
+
+fn sink() -> &'static Sink {
+    SINK.get_or_init(|| Sink {
+        level: env_level(),
+        file: None,
+    })
+}
+
+/// Configure the process sink. Call once, before serving traffic; a
+/// second call (or a call after the lazy default was taken) is a no-op
+/// returning `false` — the first configuration wins, matching
+/// `OnceLock` semantics. `level: None` defers to `SKETCHD_LOG`.
+pub fn init(level: Option<Level>, file: Option<&Path>) -> std::io::Result<bool> {
+    let file = match file {
+        Some(path) => Some(Mutex::new(
+            OpenOptions::new().create(true).append(true).open(path)?,
+        )),
+        None => None,
+    };
+    Ok(SINK
+        .set(Sink {
+            level: level.unwrap_or_else(env_level),
+            file,
+        })
+        .is_ok())
+}
+
+/// Would a record at `level` be emitted? Lets callers skip formatting
+/// work (e.g. per-query debug lines) when the sink is quieter.
+pub fn enabled(level: Level) -> bool {
+    level <= sink().level
+}
+
+pub fn error(target: &str, msg: &str, kv: &[(&str, String)]) {
+    emit(Level::Error, target, msg, kv);
+}
+
+pub fn warn(target: &str, msg: &str, kv: &[(&str, String)]) {
+    emit(Level::Warn, target, msg, kv);
+}
+
+pub fn info(target: &str, msg: &str, kv: &[(&str, String)]) {
+    emit(Level::Info, target, msg, kv);
+}
+
+pub fn debug(target: &str, msg: &str, kv: &[(&str, String)]) {
+    emit(Level::Debug, target, msg, kv);
+}
+
+fn emit(level: Level, target: &str, msg: &str, kv: &[(&str, String)]) {
+    let s = sink();
+    if level > s.level {
+        return;
+    }
+    let line = render(level, target, msg, kv);
+    match &s.file {
+        Some(file) => {
+            let mut f = lock_unpoisoned(file);
+            // A full disk must not take the serving path down with it.
+            let _ = f.write_all(line.as_bytes());
+        }
+        None => {
+            let mut err = std::io::stderr().lock();
+            let _ = err.write_all(line.as_bytes());
+        }
+    }
+}
+
+fn render(level: Level, target: &str, msg: &str, kv: &[(&str, String)]) -> String {
+    use std::fmt::Write as _;
+    let ts_ms = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis())
+        .unwrap_or(0);
+    let mut line = String::with_capacity(96 + 24 * kv.len());
+    let _ = write!(
+        line,
+        "{{\"ts_ms\":{ts_ms},\"level\":\"{}\",\"target\":\"{}\",\"msg\":\"{}\"",
+        level.as_str(),
+        escape(target),
+        escape(msg)
+    );
+    for (k, v) in kv {
+        let _ = write!(line, ",\"{}\":\"{}\"", escape(k), escape(v));
+    }
+    line.push_str("}\n");
+    line
+}
+
+/// JSON string escaping for the keys/values we emit (quotes, backslash,
+/// and control characters; everything else passes through as UTF-8).
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                use std::fmt::Write as _;
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Format a `key=value` pair for the `kv` slice tersely at call sites.
+#[macro_export]
+macro_rules! kv {
+    ($($k:ident = $v:expr),* $(,)?) => {
+        &[$((stringify!($k), format!("{}", $v))),*]
+    };
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parse_and_order() {
+        assert_eq!(Level::parse("DEBUG"), Level::Debug);
+        assert_eq!(Level::parse("warn"), Level::Warn);
+        assert_eq!(Level::parse("warning"), Level::Warn);
+        assert_eq!(Level::parse("error"), Level::Error);
+        assert_eq!(Level::parse("nonsense"), Level::Info);
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn render_produces_parseable_json_shape() {
+        let line = render(
+            Level::Warn,
+            "durability",
+            "torn \"tail\"",
+            kv![shard = 3, dropped = 17],
+        );
+        assert!(line.starts_with("{\"ts_ms\":"));
+        assert!(line.ends_with("}\n"));
+        assert!(line.contains("\"level\":\"warn\""));
+        assert!(line.contains("\"target\":\"durability\""));
+        assert!(line.contains("\"msg\":\"torn \\\"tail\\\"\""));
+        assert!(line.contains("\"shard\":\"3\""));
+        assert!(line.contains("\"dropped\":\"17\""));
+    }
+
+    #[test]
+    fn escape_handles_controls_and_backslashes() {
+        assert_eq!(escape("a\\b"), "a\\\\b");
+        assert_eq!(escape("a\nb"), "a\\nb");
+        assert_eq!(escape("a\u{1}b"), "a\\u0001b");
+        assert_eq!(escape("plain"), "plain");
+    }
+
+    #[test]
+    fn init_to_file_writes_json_lines() {
+        // The global sink is process-wide; this test may lose the
+        // OnceLock race to another test's lazy default, so assert on
+        // the return contract rather than global state, and exercise
+        // the file writer through a private Sink directly.
+        let dir = std::env::temp_dir().join(format!("sketchd_log_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("mkdir");
+        let path = dir.join("obs.log");
+        let sink = Sink {
+            level: Level::Info,
+            file: Some(Mutex::new(
+                OpenOptions::new()
+                    .create(true)
+                    .append(true)
+                    .open(&path)
+                    .expect("open log file"),
+            )),
+        };
+        let line = render(Level::Info, "serve", "listening", kv![addr = "127.0.0.1:0"]);
+        if let Some(file) = &sink.file {
+            lock_unpoisoned(file)
+                .write_all(line.as_bytes())
+                .expect("write");
+        }
+        let got = std::fs::read_to_string(&path).expect("read back");
+        assert!(got.contains("\"msg\":\"listening\""));
+        assert!(got.contains("\"addr\":\"127.0.0.1:0\""));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,9 @@
+//! Observability: the structured logger ([`log`]) that replaces the
+//! serving stack's raw `eprintln!` sites (the `metrics::registry`
+//! series catalog is the numeric half of the same plane).
+//!
+//! This module is deliberately *outside* the `no-raw-print` lint scope
+//! (`net/`, `coordinator/`, `durability/`): it is the one place allowed
+//! to write the process's stderr directly.
+
+pub mod log;

@@ -134,6 +134,17 @@ impl SAnn {
         self.sampler.keep()
     }
 
+    /// Stream elements offered to the Bernoulli sampler so far
+    /// (observability: the eviction rate is `1 - kept/seen`).
+    pub fn sampler_seen(&self) -> u64 {
+        self.sampler.seen()
+    }
+
+    /// Sampler decisions that retained the element.
+    pub fn sampler_kept(&self) -> u64 {
+        self.sampler.kept()
+    }
+
     /// Offer a stream element; returns the id if it was retained.
     pub fn insert(&mut self, x: &[f32]) -> Option<u32> {
         if !self.sampler.keep() {

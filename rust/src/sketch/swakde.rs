@@ -376,6 +376,12 @@ impl SwAkde {
         self.cells.iter().filter(|c| c.is_some()).count()
     }
 
+    /// Buckets currently held by the window-population EH
+    /// (observability: tracks the O(log w / ε) bucket bound of §4).
+    pub fn eh_buckets(&self) -> usize {
+        self.pop.num_buckets()
+    }
+
     /// Resident bytes: grid slots + live EH structures (+ population EH).
     pub fn memory_bytes(&self) -> usize {
         std::mem::size_of::<Self>()

@@ -45,6 +45,12 @@ pub mod mpsc {
     pub use std::sync::mpsc::*;
 }
 
+// `OnceLock` is pinned to std under both cfgs, like `mpsc`: the vendored
+// loom does not model it, and its one consumer (the `obs::log` global
+// sink) is write-once process configuration, not a racing interleaving
+// the models need to explore.
+pub use std::sync::OnceLock;
+
 /// Lock a mutex, recovering from poisoning. Every mutex in this crate
 /// guards plain data whose invariants hold between operations (pending
 /// query batches, a fan-out order token, an injected-fault slot), so a

@@ -14,9 +14,11 @@
 //! 3. Overload shedding is decided once, by the primary — secondaries
 //!    mirror the kept command sequence exactly.
 //! 4. The query coalescer neither loses nor duplicates a query.
-//! 5. `inserts == stored + shed` reconciles at quiescence even with a
-//!    mid-stream `ReadOnly` escalation.
+//! 5. `inserts == stored + shed` reconciles at quiescence (through the
+//!    metrics registry) even with a mid-stream `ReadOnly` escalation.
 //! 6. The scatter in-flight gauge pairs start/finish exactly.
+//! 7. A registry snapshot racing paired gauge add/sub never observes a
+//!    wrapped (underflowed) level.
 
 #![cfg(loom)]
 
@@ -25,9 +27,10 @@ use std::time::Duration;
 use sublinear_sketch::coordinator::protocol::ShardAnnResult;
 use sublinear_sketch::coordinator::shard::ShardCmd;
 use sublinear_sketch::coordinator::{
-    bounded, BatchPolicy, HealthBoard, OfferOutcome, Overload, ReplicaSet, ServiceCounters,
+    bounded, BatchPolicy, HealthBoard, OfferOutcome, Overload, ReplicaSet, ServiceStats,
     ShardHealth,
 };
+use sublinear_sketch::metrics::registry::Registry;
 use sublinear_sketch::net::server::{CoalescerCore, CoalescingLane, LoadAwareWait};
 use sublinear_sketch::util::sync::mpsc::{channel, Receiver, Sender};
 use sublinear_sketch::util::sync::{lock_unpoisoned, Arc, Mutex};
@@ -47,9 +50,9 @@ fn health_board_is_monotone_under_racing_reporters() {
     loom::model(|| {
         let board = Arc::new(HealthBoard::new(2));
         let reporters: Vec<_> = [
-            (0usize, ShardHealth::Degraded),
+            (0usize, ShardHealth::DurabilityDegraded),
             (0, ShardHealth::ReadOnly),
-            (1, ShardHealth::Degraded),
+            (1, ShardHealth::DurabilityDegraded),
         ]
         .into_iter()
         .map(|(shard, to)| {
@@ -75,7 +78,7 @@ fn health_board_is_monotone_under_racing_reporters() {
         }
         observer.join().unwrap();
         assert_eq!(board.get(0), ShardHealth::ReadOnly);
-        assert_eq!(board.get(1), ShardHealth::Degraded);
+        assert_eq!(board.get(1), ShardHealth::DurabilityDegraded);
         assert_eq!(board.worst(), ShardHealth::ReadOnly);
     });
 }
@@ -217,24 +220,22 @@ fn counters_reconcile_under_concurrent_ingest_and_read_only_escalation() {
         let mut set = ReplicaSet::new(vec![ptx, stx]);
         set.set_health(0, Arc::clone(&board));
         let set = Arc::new(set);
-        let counters = Arc::new(ServiceCounters::default());
+        let registry = Arc::new(Registry::new());
         let writers: Vec<_> = (0..2)
             .map(|w| {
                 let set = Arc::clone(&set);
-                let counters = Arc::clone(&counters);
+                let registry = Arc::clone(&registry);
                 loom::thread::spawn(move || {
                     for j in 0..PER_WRITER {
                         // Mirrors the service ingest accounting: count
                         // the point first, then reclassify on the offer
                         // outcome (shed → shed_points, dead → rollback).
-                        ServiceCounters::add(&counters.inserts, 1);
+                        registry.inserts.add(1);
                         let point = vec![(w * PER_WRITER + j) as f32];
                         match set.offer_write(ShardCmd::Insert(point)) {
                             OfferOutcome::Sent => {}
-                            OfferOutcome::Shed => ServiceCounters::add(&counters.shed_points, 1),
-                            OfferOutcome::Disconnected => {
-                                ServiceCounters::sub(&counters.inserts, 1)
-                            }
+                            OfferOutcome::Shed => registry.shed(1),
+                            OfferOutcome::Disconnected => registry.inserts.sub(1),
                         }
                     }
                 })
@@ -253,7 +254,7 @@ fn counters_reconcile_under_concurrent_ingest_and_read_only_escalation() {
         let kept = drained_inserts(&prx);
         let mirrored = drained_inserts(&srx);
         assert_eq!(kept, mirrored, "replicas saw identical command streams");
-        let snap = counters.snapshot();
+        let snap = ServiceStats::from_registry(&registry);
         assert_eq!(
             snap.inserts,
             kept.len() as u64 + snap.shed,
@@ -286,5 +287,51 @@ fn scatter_gauge_pairs_exactly() {
         }
         assert!(load.idle(), "all scatters finished");
         assert_eq!(load.current(), Duration::ZERO, "an idle plane never delays a straggler");
+    });
+}
+
+#[test]
+fn registry_gauge_pairing_under_racing_readers() {
+    const WRITERS: usize = 2;
+    loom::model(|| {
+        let registry = Arc::new(Registry::new());
+        let writers: Vec<_> = (0..WRITERS)
+            .map(|_| {
+                let registry = Arc::clone(&registry);
+                loom::thread::spawn(move || {
+                    // The in-flight pattern every gauge user follows:
+                    // add on entry, sub on exit, same thread.
+                    registry.stored_points.add(1);
+                    registry.inserts.add(1);
+                    registry.stored_points.sub(1);
+                })
+            })
+            .collect();
+        let reader = {
+            let registry = Arc::clone(&registry);
+            loom::thread::spawn(move || {
+                for _ in 0..4 {
+                    // Full snapshot path: a wrapped gauge would show up
+                    // as a number near u64::MAX, far above WRITERS.
+                    let snap = registry.snapshot();
+                    let stored = snap
+                        .gauges
+                        .iter()
+                        .find(|(n, _)| n == "stored_points")
+                        .map(|(_, v)| *v)
+                        .expect("stored_points is in the catalog");
+                    assert!(
+                        stored <= WRITERS as u64,
+                        "gauge wrapped under racing readers: {stored}"
+                    );
+                }
+            })
+        };
+        for w in writers {
+            w.join().unwrap();
+        }
+        reader.join().unwrap();
+        assert_eq!(registry.stored_points.get(), 0, "every sub paired with its add");
+        assert_eq!(registry.inserts.get(), WRITERS as u64, "no counter increment lost");
     });
 }

@@ -1,0 +1,325 @@
+//! End-to-end observability: the metrics registry as seen over the wire
+//! (`Metrics` op, protocol v4), per-stage query tracing, the Prometheus
+//! scrape endpoint, and the counter-reconciliation identities the
+//! registry must preserve under concurrent load.
+
+use std::io::{Read as _, Write as _};
+use std::net::TcpStream;
+use std::thread;
+use std::time::Duration;
+
+use sublinear_sketch::coordinator::{KdeKernel, ServiceConfig, SketchService};
+use sublinear_sketch::metrics::registry::{Histogram, MetricsSnapshot};
+use sublinear_sketch::net::{MetricsListener, SketchClient, WireServer};
+use sublinear_sketch::util::rng::Rng;
+
+fn obs_cfg(dim: usize, n: usize) -> ServiceConfig {
+    let mut cfg = ServiceConfig::default_for(dim, n);
+    cfg.shards = 3;
+    cfg.ann.eta = 0.0;
+    cfg.kde.rows = 16;
+    cfg.kde.p = 3;
+    cfg.kde.kernel = KdeKernel::Angular;
+    cfg.kde.window = 600;
+    cfg
+}
+
+fn cluster_points(rng: &mut Rng, n: usize, dim: usize) -> Vec<Vec<f32>> {
+    let centers: Vec<Vec<f32>> = (0..16)
+        .map(|_| (0..dim).map(|_| rng.gaussian_f32() * 3.0).collect())
+        .collect();
+    (0..n)
+        .map(|_| {
+            let c = &centers[rng.below(16) as usize];
+            c.iter().map(|v| v + rng.gaussian_f32() * 0.1).collect()
+        })
+        .collect()
+}
+
+struct Stack {
+    client: SketchClient,
+    addr: std::net::SocketAddr,
+    srv_join: thread::JoinHandle<anyhow::Result<()>>,
+    handle: sublinear_sketch::coordinator::ServiceHandle,
+    svc_join: thread::JoinHandle<()>,
+}
+
+fn start_stack(cfg: ServiceConfig) -> Stack {
+    let (handle, svc_join) = SketchService::spawn(cfg).unwrap();
+    let server = WireServer::bind("127.0.0.1:0", handle.clone()).unwrap();
+    let addr = server.local_addr().unwrap();
+    let srv_join = thread::spawn(move || server.run());
+    let client = SketchClient::connect(addr).unwrap();
+    Stack { client, addr, srv_join, handle, svc_join }
+}
+
+impl Stack {
+    fn teardown(mut self) {
+        self.client.shutdown_server().unwrap();
+        drop(self.client);
+        self.srv_join.join().unwrap().unwrap();
+        self.handle.shutdown();
+        self.svc_join.join().unwrap();
+    }
+}
+
+fn counter(snap: &MetricsSnapshot, name: &str) -> u64 {
+    snap.counters
+        .iter()
+        .find(|(n, _)| n == name)
+        .map(|(_, v)| *v)
+        .unwrap_or_else(|| panic!("counter {name} missing from snapshot"))
+}
+
+fn gauge(snap: &MetricsSnapshot, name: &str) -> u64 {
+    snap.gauges
+        .iter()
+        .find(|(n, _)| n == name)
+        .map(|(_, v)| *v)
+        .unwrap_or_else(|| panic!("gauge {name} missing from snapshot"))
+}
+
+fn histo_count(snap: &MetricsSnapshot, name: &str) -> u64 {
+    snap.histograms
+        .iter()
+        .find(|(n, _)| n == name)
+        .map(|(_, h)| h.count)
+        .unwrap_or_else(|| panic!("histogram {name} missing from snapshot"))
+}
+
+/// The acceptance path: a single singleton wire query must light up the
+/// whole stage breakdown — coalesce-wait, scatter, shard service, and
+/// merge all record at least one sample, retrievable over the wire via
+/// the `Metrics` op and renderable as Prometheus text.
+#[test]
+fn single_wire_query_produces_a_stage_breakdown() {
+    let mut rng = Rng::new(31337);
+    let pts = cluster_points(&mut rng, 600, 8);
+    let mut stack = start_stack(obs_cfg(8, 2_000));
+    for chunk in pts.chunks(100) {
+        stack.client.insert_batch(chunk).unwrap();
+    }
+    stack.client.flush().unwrap();
+
+    // Exactly one singleton ANN query: routed through the coalescer, so
+    // every stage of the read path runs once.
+    let ans = stack.client.ann_query_one(&pts[0]).unwrap();
+    assert!(ans.is_some(), "a stored point must be its own neighbor");
+
+    let snap = stack.client.metrics().unwrap();
+    for stage in [
+        "stage_coalesce_wait",
+        "stage_scatter",
+        "stage_shard_service",
+        "stage_merge",
+    ] {
+        assert!(
+            histo_count(&snap, stage) >= 1,
+            "{stage} recorded nothing after a wire query: {snap:?}"
+        );
+    }
+    assert!(histo_count(&snap, "op_ann") >= 1, "dispatch-layer ANN histogram empty");
+    assert_eq!(
+        histo_count(&snap, "op_insert"),
+        6,
+        "dispatch-layer insert histogram counts one sample per wire call"
+    );
+    assert_eq!(counter(&snap, "inserts"), 600);
+    assert_eq!(counter(&snap, "ann_queries"), 1);
+
+    // The Metrics op refreshes gauges from a live Stats drain first.
+    assert!(gauge(&snap, "stored_points") > 0, "stored_points gauge not refreshed");
+    assert!(gauge(&snap, "sketch_bytes") > 0, "sketch_bytes gauge not refreshed");
+    assert!(gauge(&snap, "sampler_seen") > 0, "sampler_seen gauge not refreshed");
+    assert!(
+        gauge(&snap, "sampler_seen") >= gauge(&snap, "sampler_kept"),
+        "eviction rate 1 - kept/seen must stay in [0, 1]"
+    );
+
+    let text = snap.to_prometheus();
+    for needle in [
+        "# TYPE sketchd_inserts_total counter",
+        "sketchd_inserts_total 600",
+        "# TYPE sketchd_stored_points gauge",
+        "# TYPE sketchd_stage_scatter_us summary",
+        "sketchd_stage_scatter_us_count ",
+        "sketchd_op_ann_us_count ",
+    ] {
+        assert!(text.contains(needle), "scrape body missing {needle:?}:\n{text}");
+    }
+    stack.teardown();
+}
+
+/// Server-side trace minting: a v4 query frame with trace id 0 mints a
+/// fresh id (counted in `trace_ids`); a client-supplied id is passed
+/// through without minting. Traced and untraced queries must answer
+/// identically.
+#[test]
+fn trace_ids_mint_only_when_the_client_supplies_none() {
+    let mut rng = Rng::new(99);
+    let pts = cluster_points(&mut rng, 300, 8);
+    let mut stack = start_stack(obs_cfg(8, 1_000));
+    for chunk in pts.chunks(100) {
+        stack.client.insert_batch(chunk).unwrap();
+    }
+    stack.client.flush().unwrap();
+
+    let untraced = stack.client.ann_query(&pts[..4]).unwrap();
+    let snap = stack.client.metrics().unwrap();
+    assert_eq!(counter(&snap, "trace_ids"), 1, "one untraced query mints one id");
+
+    let traced = stack.client.ann_query_traced(&pts[..4], 0xDEAD_BEEF).unwrap();
+    assert_eq!(traced, untraced, "a trace id must not change the answer");
+    let snap = stack.client.metrics().unwrap();
+    assert_eq!(
+        counter(&snap, "trace_ids"),
+        1,
+        "client-supplied ids are passed through, not minted over"
+    );
+    stack.teardown();
+}
+
+/// The reconciliation identity `inserts == stored + shed +
+/// refused_writes` must hold at quiescence when read through a registry
+/// snapshot, even with concurrent writers and readers racing the
+/// Relaxed counters mid-flight.
+#[test]
+fn counters_reconcile_via_registry_snapshot_under_concurrent_load() {
+    let stack = start_stack(obs_cfg(8, 10_000));
+    let writers: Vec<_> = (0..3)
+        .map(|t| {
+            let addr = stack.addr;
+            thread::spawn(move || {
+                let mut c = SketchClient::connect(addr).unwrap();
+                let mut rng = Rng::new(7_000 + t);
+                let pts: Vec<Vec<f32>> = (0..400)
+                    .map(|_| (0..8).map(|_| rng.gaussian_f32()).collect())
+                    .collect();
+                for chunk in pts.chunks(50) {
+                    c.insert_batch(chunk).unwrap();
+                }
+                pts
+            })
+        })
+        .collect();
+    let readers: Vec<_> = (0..2)
+        .map(|t| {
+            let addr = stack.addr;
+            thread::spawn(move || {
+                let mut c = SketchClient::connect(addr).unwrap();
+                let mut rng = Rng::new(8_000 + t);
+                for _ in 0..30 {
+                    let q: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
+                    c.ann_query_one(&q).unwrap();
+                    c.kde_query_one(&q).unwrap();
+                    // Mid-flight snapshots must never see wrapped values.
+                    let snap = c.metrics().unwrap();
+                    assert!(
+                        counter(&snap, "inserts") <= 1_200,
+                        "inserts counter overshot the stream"
+                    );
+                }
+            })
+        })
+        .collect();
+    let mut offered = 0u64;
+    let mut q_client = SketchClient::connect(stack.addr).unwrap();
+    for w in writers {
+        offered += w.join().unwrap().len() as u64;
+    }
+    for r in readers {
+        r.join().unwrap();
+    }
+    q_client.flush().unwrap();
+
+    let snap = q_client.metrics().unwrap();
+    let st = q_client.stats().unwrap();
+    assert_eq!(counter(&snap, "inserts"), offered);
+    assert_eq!(
+        counter(&snap, "inserts"),
+        gauge(&snap, "stored_points") + counter(&snap, "shed_points") + st.refused_writes,
+        "inserts == stored + shed + refused_writes at quiescence: {snap:?}"
+    );
+    assert_eq!(counter(&snap, "ann_queries"), 60);
+    assert_eq!(counter(&snap, "kde_queries"), 60);
+    assert_eq!(st.inserts, counter(&snap, "inserts"), "Stats and Metrics agree");
+    drop(q_client);
+    stack.teardown();
+}
+
+/// Shard roll-up parity: recording a stream into one histogram must
+/// agree with sharding it across N histograms and merging — count and
+/// sum exactly, quantiles within t-digest error — independent of merge
+/// order.
+#[test]
+fn histogram_merge_parity_across_shards() {
+    const SHARDS: usize = 4;
+    let whole = Histogram::new();
+    let shards: Vec<Histogram> = (0..SHARDS).map(|_| Histogram::new()).collect();
+    for i in 0..4_000u64 {
+        let us = (i * 241 % 4_093) as f64 + 0.5;
+        whole.record_us(us);
+        shards[(i as usize) % SHARDS].record_us(us);
+    }
+    // Merge in a non-sequential order to catch order dependence.
+    let rollup = Histogram::new();
+    for idx in [2usize, 0, 3, 1] {
+        rollup.merge(&shards[idx]);
+    }
+    let a = whole.snapshot();
+    let b = rollup.snapshot();
+    assert_eq!(a.count, b.count, "merge must preserve exact counts");
+    assert!((a.sum_us - b.sum_us).abs() < 1e-6, "merge must preserve exact sums");
+    for (qa, qb) in [(a.p50_us, b.p50_us), (a.p90_us, b.p90_us), (a.p99_us, b.p99_us)] {
+        let spread = (qa - qb).abs() / qa.max(1.0);
+        assert!(spread < 0.05, "rolled-up quantile drifted: {qa} vs {qb}");
+    }
+    assert!((a.max_us - b.max_us).abs() < 1e-6, "max is exact under merge");
+}
+
+/// Read everything the scrape socket sends until EOF.
+fn scrape(addr: std::net::SocketAddr) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    s.write_all(b"GET /metrics HTTP/1.0\r\nHost: test\r\n\r\n").unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+/// The plaintext scrape endpoint: an HTTP/1.0 GET gets a 200 with the
+/// Prometheus text body; a bare-TCP probe that connects and hangs up
+/// must not wedge the listener.
+#[test]
+fn scrape_endpoint_serves_prometheus_text() {
+    let mut rng = Rng::new(2024);
+    let pts = cluster_points(&mut rng, 400, 8);
+    let mut stack = start_stack(obs_cfg(8, 1_000));
+    let scraper = MetricsListener::bind("127.0.0.1:0", stack.handle.clone()).unwrap();
+    let scrape_addr = scraper.local_addr().unwrap();
+    thread::spawn(move || scraper.run());
+
+    for chunk in pts.chunks(100) {
+        stack.client.insert_batch(chunk).unwrap();
+    }
+    stack.client.flush().unwrap();
+    stack.client.ann_query_one(&pts[0]).unwrap();
+
+    // Probe: connect and close without sending a request.
+    drop(TcpStream::connect(scrape_addr).unwrap());
+
+    let body = scrape(scrape_addr);
+    assert!(body.starts_with("HTTP/1.0 200 OK\r\n"), "status line: {body:.120}");
+    assert!(
+        body.contains("Content-Type: text/plain; version=0.0.4"),
+        "exposition content type missing"
+    );
+    assert!(body.contains("sketchd_inserts_total 400"), "{body}");
+    assert!(body.contains("sketchd_stored_points "), "{body}");
+    assert!(body.contains("sketchd_stage_scatter_us_count "), "{body}");
+
+    // The endpoint keeps serving after both a probe and a scrape.
+    let again = scrape(scrape_addr);
+    assert!(again.contains("sketchd_inserts_total 400"));
+    stack.teardown();
+}

@@ -1,6 +1,6 @@
 //! Repo-specific static analysis, run as `cargo run -p xtask -- lint`.
 //!
-//! Four lints, each pinning an invariant the concurrency work in the
+//! Five lints, each pinning an invariant the concurrency work in the
 //! query plane relies on (see `EXPERIMENTS.md` §Static analysis):
 //!
 //! - `sync-facade` — no `std::sync` (or `core::sync`/`loom::sync`) path
@@ -11,6 +11,9 @@
 //!   stats counters; anything else must choose a real ordering.
 //! - `no-unwrap` — no `.unwrap()`/`.expect(..)` in non-test code of the
 //!   connection loop, service loop, and durability stack.
+//! - `no-raw-print` — no `println!`/`eprintln!` in `net/`,
+//!   `coordinator/`, or `durability/`; serving-path diagnostics go
+//!   through the structured logger (`obs::log`).
 //!
 //! `cargo run -p xtask -- lint --self-test` runs the lints against
 //! fixture trees seeded with one of each violation, proving every lint
