@@ -10,6 +10,7 @@
 #   smoke.sh durability  checkpoint, kill -9, recover, keep serving
 #   smoke.sh chaos       kill -9 mid-ingest x3 rounds, recover every time
 #   smoke.sh metrics     query load, then scrape + Metrics op: key series nonzero
+#   smoke.sh route       2 nodes behind `route`: ANN checksum == single process
 #
 # Run from the rust/ directory (or set BIN). Fails fast; server logs are
 # dumped on any boot failure.
@@ -154,6 +155,69 @@ smoke_chaos() {
   await_clean_shutdown
 }
 
+# Multi-node smoke: the SAME seeded query load against (a) one process
+# holding 4 shards and (b) two 2-shard nodes behind a `sketchd route`
+# front-end must produce the SAME order-independent ANN checksum —
+# scatter/gather over raw per-shard partials is exact, not approximate.
+# Parity preconditions: same seed everywhere, contiguous --shard-base
+# ranges, and per-node --n sized so per-shard capacity matches the
+# single process (20000/4 == 10000/2). One client Shutdown to the
+# router must cascade: all three processes drain and exit cleanly.
+smoke_route() {
+  serve_bg route_single --dim 16 --n 20000 --shards 4
+  "$BIN" client --connect "$ADDR" --query-load --seed 99 \
+    --n 4000 --queries 1024 --batch 1 --connections 4 --shutdown \
+    | tee "$TMP/client_route_single.log"
+  grep -E 'ann: answered [1-9][0-9]*/1024' "$TMP/client_route_single.log"
+  local want
+  want=$(grep -oE 'ann checksum=[0-9a-f]+' "$TMP/client_route_single.log")
+  await_clean_shutdown
+
+  serve_bg route_n0 --dim 16 --n 10000 --shards 2 --shard-base 0
+  local a0=$ADDR p0=$SERVE_PID l0=$SERVE_LOG
+  serve_bg route_n1 --dim 16 --n 10000 --shards 2 --shard-base 2
+  local a1=$ADDR p1=$SERVE_PID l1=$SERVE_LOG
+
+  local raddr_file="$TMP/sketchd_route.addr" rlog="$TMP/sketchd_route.log" rpid
+  rm -f "$raddr_file"
+  "$BIN" route --listen 127.0.0.1:0 --addr-file "$raddr_file" \
+    --nodes "$a0,$a1" --retries 2 > "$rlog" 2>&1 &
+  rpid=$!
+  for _ in $(seq 1 100); do
+    [ -s "$raddr_file" ] && break
+    sleep 0.2
+  done
+  if ! [ -s "$raddr_file" ]; then
+    echo "::error::router never wrote its address file"
+    cat "$rlog" "$l0" "$l1"
+    exit 1
+  fi
+  grep -E 'shards=4 over 2 node' "$rlog"
+
+  "$BIN" client --connect "$(cat "$raddr_file")" --query-load --seed 99 \
+    --n 4000 --queries 1024 --batch 1 --connections 4 --shutdown \
+    | tee "$TMP/client_route_multi.log"
+  grep -E 'ann: answered [1-9][0-9]*/1024' "$TMP/client_route_multi.log"
+  local got
+  got=$(grep -oE 'ann checksum=[0-9a-f]+' "$TMP/client_route_multi.log")
+
+  echo "single ${want} | routed ${got}"
+  if [ "$want" != "$got" ] || [ -z "$want" ]; then
+    echo "::error::routed answers diverged from the single-process reference"
+    exit 1
+  fi
+
+  # One Shutdown, three clean exits: router drains first, its cascade
+  # reaches both nodes, and every log reports a clean drain.
+  wait "$rpid"
+  cat "$rlog"
+  grep -q 'shutdown complete' "$rlog"
+  wait "$p0"
+  wait "$p1"
+  grep -q 'shutdown complete' "$l0"
+  grep -q 'shutdown complete' "$l1"
+}
+
 # scrape MADDR OUT — fetch the Prometheus text body from the metrics
 # endpoint, via curl when available, else bash's /dev/tcp.
 scrape() {
@@ -219,8 +283,9 @@ case "${1:-}" in
   durability) smoke_durability ;;
   chaos)      smoke_chaos ;;
   metrics)    smoke_metrics ;;
+  route)      smoke_route ;;
   *)
-    echo "usage: smoke.sh wire|qplane|replica|durability|chaos|metrics" >&2
+    echo "usage: smoke.sh wire|qplane|replica|durability|chaos|metrics|route" >&2
     exit 2
     ;;
 esac

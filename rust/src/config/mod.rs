@@ -126,6 +126,7 @@ impl Config {
         Ok(ServiceConfig {
             dim,
             shards: self.usize("service", "shards", 4).max(1),
+            shard_base: self.usize("service", "shard_base", 0),
             replicas: self.usize("service", "replicas", 1).max(1),
             route,
             queue_cap: self.usize("service", "queue_cap", 1024).max(1),

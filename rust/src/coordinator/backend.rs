@@ -1,0 +1,581 @@
+//! `ShardBackend` — the topology seam of the read/write core.
+//!
+//! The scatter/gather/merge glue in [`super::query::QueryPlane`] and the
+//! ingest fan-out in [`super::handle::ServiceHandle`] used to be welded
+//! to in-process mailboxes (`ReplicaSet::read(ShardCmd::AnnBatch…)`), so
+//! nothing built on them could cross a process boundary. This trait is
+//! the cut: a backend owns some contiguous range of the global shard
+//! space and knows how to scatter a batch into it, collect typed
+//! partials back out, accept ingest, and report health — and NOTHING
+//! above it sees a mailbox or a socket.
+//!
+//! Two implementations:
+//!
+//! - [`LocalBackend`]: one shard's [`ReplicaSet`] mailboxes, exactly the
+//!   in-process path the plane ran before the trait existed. One global
+//!   shard per backend, replies collected off the shard's reply channel.
+//! - [`RemoteBackend`]: a pooled [`SketchClient`] to another `sketchd`
+//!   process. One backend covers ALL of that node's shards; queries go
+//!   out as protocol-v5 `AnnPartial`/`KdePartial` ops and come back as
+//!   RAW per-shard partials (never node-side merges — f64 kernel sums
+//!   are not associative, so pre-merging would break the bit-parity
+//!   guarantee between a routed deployment and a single process).
+//!
+//! The degradation contract crosses the seam intact: a backend that
+//! cannot be scattered to returns `None`, a backend that dies mid-query
+//! surfaces an `Err` from [`Pending::collect`], and in both cases the
+//! error NAMES the backend (`shard 3` / `node 10.0.0.2:4444`) so a
+//! partial merge is never silently returned.
+
+use crate::net::client::{ClientOptions, SketchClient};
+use crate::obs::log;
+use crate::util::sync::mpsc::{channel, Receiver, Sender};
+use crate::util::sync::{lock_unpoisoned, Arc, Mutex};
+
+use super::backpressure::OfferOutcome;
+use super::health::HealthBoard;
+use super::protocol::{QueryBatch, ServiceStats, ShardAnnResult, ShardKdeResult};
+use super::replica::{ReadGuard, ReplicaSet};
+use super::shard::ShardCmd;
+
+/// Fate of one offered ingest chunk, point-denominated. Unlike the
+/// mailbox-level [`OfferOutcome`] this can report a PARTIAL accept: a
+/// remote node applies its own overload policy per point, so a chunk of
+/// 64 may come back 60 accepted / 4 shed. `Disconnected` means the
+/// points never entered any service — callers roll back their
+/// provisional insert count, exactly like a closed local mailbox.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IngestOutcome {
+    Accepted { accepted: usize, shed: usize },
+    Disconnected,
+}
+
+/// An in-flight scatter to one backend. Local replies keep the picked
+/// replica's read-depth guard raised until collected; remote replies are
+/// a worker-pool future. Either way [`Pending::collect`] yields the
+/// backend's partials IN GLOBAL SHARD ORDER (a local backend is one
+/// shard; a remote node returns its shards in its own flat order).
+pub enum Pending<T> {
+    Local { rx: Receiver<T>, guard: ReadGuard },
+    Remote { rx: Receiver<Result<Vec<T>, String>> },
+}
+
+impl<T> Pending<T> {
+    /// Block for the backend's partials. `name` is the backend's
+    /// [`ShardBackend::name`], used verbatim in death errors so the
+    /// caller's degradation message names who died.
+    pub fn collect(self, name: &str) -> Result<Vec<T>, String> {
+        match self {
+            Pending::Local { rx, guard } => match rx.recv() {
+                Ok(part) => {
+                    drop(guard);
+                    Ok(vec![part])
+                }
+                Err(_) => Err(format!("{name} died mid-query")),
+            },
+            Pending::Remote { rx } => match rx.recv() {
+                Ok(res) => res,
+                Err(_) => Err(format!("{name} died mid-query")),
+            },
+        }
+    }
+}
+
+/// One topology-aware member of the query/ingest fan-out. Everything
+/// above this trait (plane, handle, merge) is topology-blind.
+pub trait ShardBackend: Send + Sync {
+    /// Human name used in degradation errors: `"shard 2"` for a local
+    /// backend, `"node HOST:PORT"` for a remote one.
+    fn name(&self) -> String;
+    /// Global shards this backend serves (1 for local, N for a node).
+    fn shards(&self) -> usize;
+    /// Read replicas behind this backend.
+    fn replicas(&self) -> usize;
+    /// Health of each served shard (`ShardHealth as u8`), length
+    /// [`Self::shards`].
+    fn health(&self) -> Vec<u8>;
+    /// Scatter an ANN batch; `None` iff the backend is unreachable
+    /// (dead mailboxes / worker pool gone).
+    fn scatter_ann(&self, batch: &QueryBatch, trace: u64) -> Option<Pending<ShardAnnResult>>;
+    /// Scatter a KDE batch; same contract as [`Self::scatter_ann`].
+    fn scatter_kde(&self, batch: &QueryBatch, trace: u64) -> Option<Pending<ShardKdeResult>>;
+    /// Offer one pre-routed ingest chunk (every point in it belongs to
+    /// this backend). Blocking, point-denominated accounting.
+    fn offer(&self, chunk: Vec<Vec<f32>>) -> IngestOutcome;
+    /// Turnstile delete of one pre-routed point. `None` = unreachable,
+    /// `Some(removed)` = acknowledged.
+    fn delete(&self, x: Vec<f32>) -> Option<bool>;
+}
+
+/// One in-process shard (its replica set), behind the trait. `index` is
+/// the shard's GLOBAL index — on a multi-node member it already includes
+/// the node's `--shard-base`, so error messages and health cells line up
+/// with what a single-process deployment of the same total would say.
+pub struct LocalBackend {
+    index: usize,
+    set: ReplicaSet,
+    board: Option<Arc<HealthBoard>>,
+    /// The board is indexed by LOCAL shard number (durability and
+    /// supervision never left the process), which differs from `index`
+    /// exactly by the node's shard base.
+    local_index: usize,
+}
+
+impl LocalBackend {
+    pub fn new(index: usize, set: ReplicaSet) -> Self {
+        LocalBackend { index, set, board: None, local_index: index }
+    }
+
+    /// Attach the owning service's health board so [`ShardBackend::health`]
+    /// reads live durability state. `local_index` is the board cell.
+    pub fn with_board(mut self, local_index: usize, board: Arc<HealthBoard>) -> Self {
+        self.local_index = local_index;
+        self.board = Some(board);
+        self
+    }
+
+    pub fn set(&self) -> &ReplicaSet {
+        &self.set
+    }
+}
+
+impl ShardBackend for LocalBackend {
+    fn name(&self) -> String {
+        format!("shard {}", self.index)
+    }
+
+    fn shards(&self) -> usize {
+        1
+    }
+
+    fn replicas(&self) -> usize {
+        self.set.replicas()
+    }
+
+    fn health(&self) -> Vec<u8> {
+        match &self.board {
+            Some(b) => vec![b.get(self.local_index).as_u8()],
+            None => vec![0],
+        }
+    }
+
+    fn scatter_ann(&self, batch: &QueryBatch, _trace: u64) -> Option<Pending<ShardAnnResult>> {
+        let (rtx, rrx) = channel();
+        let guard = self.set.read(ShardCmd::AnnBatch(Arc::clone(batch), rtx))?;
+        Some(Pending::Local { rx: rrx, guard })
+    }
+
+    fn scatter_kde(&self, batch: &QueryBatch, _trace: u64) -> Option<Pending<ShardKdeResult>> {
+        let (rtx, rrx) = channel();
+        let guard = self.set.read(ShardCmd::KdeBatch(Arc::clone(batch), rtx))?;
+        Some(Pending::Local { rx: rrx, guard })
+    }
+
+    fn offer(&self, mut chunk: Vec<Vec<f32>>) -> IngestOutcome {
+        let m = chunk.len();
+        // A singleton chunk ships as the same `Insert` command it always
+        // did (single inserts and 1-point batch chunks build identical
+        // shard state; keeping the command stream unchanged keeps every
+        // replica/WAL byte unchanged too).
+        let cmd = if m == 1 {
+            ShardCmd::Insert(chunk.swap_remove(0))
+        } else {
+            ShardCmd::InsertBatch(chunk)
+        };
+        match self.set.offer_write(cmd) {
+            OfferOutcome::Sent => IngestOutcome::Accepted { accepted: m, shed: 0 },
+            OfferOutcome::Shed => IngestOutcome::Accepted { accepted: 0, shed: m },
+            OfferOutcome::Disconnected => IngestOutcome::Disconnected,
+        }
+    }
+
+    fn delete(&self, x: Vec<f32>) -> Option<bool> {
+        self.set.delete(x)
+    }
+}
+
+/// Wrap per-shard replica sets as trait objects: the standard local
+/// topology (one [`LocalBackend`] per shard, global index `base + i`).
+/// The board, when given, is indexed by LOCAL shard number.
+pub fn local_backends(
+    sets: Vec<ReplicaSet>,
+    base: usize,
+    board: Option<&Arc<HealthBoard>>,
+) -> Vec<Arc<dyn ShardBackend>> {
+    sets.into_iter()
+        .enumerate()
+        .map(|(i, set)| {
+            let be = LocalBackend::new(base + i, set);
+            let be = match board {
+                Some(b) => be.with_board(i, Arc::clone(b)),
+                None => be,
+            };
+            Arc::new(be) as Arc<dyn ShardBackend>
+        })
+        .collect()
+}
+
+/// A worker-pool request to one remote node. Queries carry the trace id
+/// across the hop (protocol v5) so both tiers' stage histograms and
+/// slow-query logs correlate on one id.
+enum Job {
+    Ann(QueryBatch, u64, Sender<Result<Vec<ShardAnnResult>, String>>),
+    Kde(QueryBatch, u64, Sender<Result<Vec<ShardKdeResult>, String>>),
+    Insert(Vec<Vec<f32>>, Sender<Result<u64, String>>),
+    Delete(Vec<f32>, Sender<Result<bool, String>>),
+    Stats(Sender<Result<ServiceStats, String>>),
+    Flush(Sender<Result<(), String>>),
+    Checkpoint(Sender<Result<u64, String>>),
+    ShutdownNode(Sender<Result<(), String>>),
+}
+
+/// One remote `sketchd serve` process, behind the trait: a shared job
+/// queue drained by `pool` worker threads, each owning one lazily
+/// (re)connected [`SketchClient`]. Queries ride the client's idempotent
+/// retry loop (reconnect + re-handshake + jittered backoff, PR 6), so a
+/// node restart mid-load costs a reconnect, not an error; inserts are
+/// NOT idempotent and never retry — an ambiguous outcome surfaces as
+/// [`IngestOutcome::Disconnected`].
+pub struct RemoteBackend {
+    addr: String,
+    dim: usize,
+    shards: usize,
+    shard_base: u64,
+    replicas: usize,
+    /// Worst-shard health from the handshake, one cell per served shard
+    /// (a point-in-time seed for the router's board, not a live read).
+    health: Vec<u8>,
+    jobs: Sender<Job>,
+}
+
+impl RemoteBackend {
+    /// Probe `addr` (one handshake, fail fast on an unreachable or
+    /// protocol-mismatched node), then stand up `pool` workers.
+    pub fn connect(addr: &str, opts: ClientOptions, pool: usize) -> anyhow::Result<Arc<Self>> {
+        let probe = SketchClient::connect_with(addr, opts)?;
+        let (dim, shards, replicas) = (probe.dim(), probe.shards(), probe.replicas());
+        let shard_base = probe.shard_base();
+        let health = vec![probe.server_health(); shards];
+        drop(probe);
+        let (jobs, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        for i in 0..pool.max(1) {
+            let (a, o, q) = (addr.to_string(), opts, Arc::clone(&rx));
+            std::thread::Builder::new()
+                .name(format!("remote-w{i}"))
+                .spawn(move || worker(&a, &o, &q))?;
+        }
+        Ok(Arc::new(RemoteBackend {
+            addr: addr.to_string(),
+            dim,
+            shards,
+            shard_base,
+            replicas,
+            health,
+            jobs,
+        }))
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// First global shard index this node serves (from its v5 Hello).
+    pub fn shard_base(&self) -> u64 {
+        self.shard_base
+    }
+
+    fn call_node<T>(&self, make: impl FnOnce(Sender<Result<T, String>>) -> Job) -> Result<T, String> {
+        let (tx, rx) = channel();
+        self.jobs
+            .send(make(tx))
+            .map_err(|_| format!("node {}: worker pool is gone", self.addr))?;
+        rx.recv()
+            .map_err(|_| format!("node {} died mid-call", self.addr))?
+    }
+
+    /// The node's own aggregate stats (its counters, its shards).
+    pub fn stats(&self) -> Result<ServiceStats, String> {
+        self.call_node(Job::Stats)
+    }
+
+    /// Flush barrier on the node.
+    pub fn flush(&self) -> Result<(), String> {
+        self.call_node(Job::Flush)
+    }
+
+    /// Cut a checkpoint on the node; returns covered points.
+    pub fn checkpoint(&self) -> Result<u64, String> {
+        self.call_node(Job::Checkpoint)
+    }
+
+    /// Ask the node's server to shut down (cascaded from `sketchd route`).
+    pub fn shutdown_node(&self) -> Result<(), String> {
+        self.call_node(Job::ShutdownNode)
+    }
+}
+
+impl ShardBackend for RemoteBackend {
+    fn name(&self) -> String {
+        format!("node {}", self.addr)
+    }
+
+    fn shards(&self) -> usize {
+        self.shards
+    }
+
+    fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    fn health(&self) -> Vec<u8> {
+        self.health.clone()
+    }
+
+    fn scatter_ann(&self, batch: &QueryBatch, trace: u64) -> Option<Pending<ShardAnnResult>> {
+        let (tx, rx) = channel();
+        self.jobs.send(Job::Ann(Arc::clone(batch), trace, tx)).ok()?;
+        Some(Pending::Remote { rx })
+    }
+
+    fn scatter_kde(&self, batch: &QueryBatch, trace: u64) -> Option<Pending<ShardKdeResult>> {
+        let (tx, rx) = channel();
+        self.jobs.send(Job::Kde(Arc::clone(batch), trace, tx)).ok()?;
+        Some(Pending::Remote { rx })
+    }
+
+    fn offer(&self, chunk: Vec<Vec<f32>>) -> IngestOutcome {
+        let m = chunk.len();
+        let (tx, rx) = channel();
+        if self.jobs.send(Job::Insert(chunk, tx)).is_err() {
+            return IngestOutcome::Disconnected;
+        }
+        match rx.recv() {
+            Ok(Ok(accepted)) => {
+                let accepted = (accepted as usize).min(m);
+                IngestOutcome::Accepted { accepted, shed: m - accepted }
+            }
+            Ok(Err(e)) => {
+                log::warn(
+                    "coordinator::backend",
+                    "ingest chunk lost to a node failure",
+                    crate::kv!(node = self.addr, points = m, err = e),
+                );
+                IngestOutcome::Disconnected
+            }
+            Err(_) => IngestOutcome::Disconnected,
+        }
+    }
+
+    fn delete(&self, x: Vec<f32>) -> Option<bool> {
+        self.call_node(|tx| Job::Delete(x, tx)).ok()
+    }
+}
+
+/// Worker loop: drain the shared job queue with one owned client,
+/// reconnecting lazily. Transport errors drop the connection so the next
+/// job dials fresh; the error string always names the node.
+fn worker(addr: &str, opts: &ClientOptions, jobs: &Mutex<Receiver<Job>>) {
+    let mut client: Option<SketchClient> = None;
+    loop {
+        let job = match lock_unpoisoned(jobs).recv() {
+            Ok(job) => job,
+            Err(_) => break, // backend dropped: pool drains and exits
+        };
+        match job {
+            Job::Ann(batch, trace, reply) => {
+                let res = with_client(addr, opts, &mut client, |c| c.ann_partial(&batch, trace));
+                let _ = reply.send(res);
+            }
+            Job::Kde(batch, trace, reply) => {
+                let res = with_client(addr, opts, &mut client, |c| c.kde_partial(&batch, trace));
+                let _ = reply.send(res);
+            }
+            Job::Insert(chunk, reply) => {
+                let res = with_client(addr, opts, &mut client, |c| c.insert_batch(&chunk));
+                let _ = reply.send(res);
+            }
+            Job::Delete(x, reply) => {
+                let res = with_client(addr, opts, &mut client, |c| c.delete(&x));
+                let _ = reply.send(res);
+            }
+            Job::Stats(reply) => {
+                let res = with_client(addr, opts, &mut client, SketchClient::stats);
+                let _ = reply.send(res);
+            }
+            Job::Flush(reply) => {
+                let res = with_client(addr, opts, &mut client, SketchClient::flush);
+                let _ = reply.send(res);
+            }
+            Job::Checkpoint(reply) => {
+                let res = with_client(addr, opts, &mut client, SketchClient::checkpoint);
+                let _ = reply.send(res);
+            }
+            Job::ShutdownNode(reply) => {
+                let res = with_client(addr, opts, &mut client, SketchClient::shutdown_server);
+                // The node closes the socket on shutdown; this client is
+                // done either way.
+                client = None;
+                let _ = reply.send(res);
+            }
+        }
+    }
+}
+
+fn with_client<T>(
+    addr: &str,
+    opts: &ClientOptions,
+    client: &mut Option<SketchClient>,
+    f: impl FnOnce(&mut SketchClient) -> anyhow::Result<T>,
+) -> Result<T, String> {
+    if client.is_none() {
+        match SketchClient::connect_with(addr, *opts) {
+            Ok(c) => *client = Some(c),
+            Err(e) => return Err(format!("node {addr} is down (refusing a partial answer): {e}")),
+        }
+    }
+    let Some(c) = client.as_mut() else {
+        return Err(format!("node {addr} is down (refusing a partial answer)"));
+    };
+    match f(c) {
+        Ok(v) => Ok(v),
+        Err(e) => {
+            // The client's own retry loop already reconnected for
+            // idempotent ops; an error surfacing here means the node is
+            // genuinely gone (or replied `Error`). Drop the connection so
+            // the next job dials fresh instead of reusing a dead socket.
+            *client = None;
+            Err(format!("node {addr}: {e}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::backpressure::{bounded, Overload};
+    use super::*;
+    use std::time::Duration;
+
+    fn fake_shard(
+        rx: crate::util::sync::mpsc::Receiver<ShardCmd>,
+    ) -> std::thread::JoinHandle<()> {
+        std::thread::spawn(move || {
+            while let Ok(cmd) = rx.recv() {
+                match cmd {
+                    ShardCmd::AnnBatch(batch, reply) => {
+                        let _ = reply.send(ShardAnnResult {
+                            best: vec![None; batch.len()],
+                            scanned: 0,
+                        });
+                    }
+                    ShardCmd::KdeBatch(batch, reply) => {
+                        let _ = reply.send(ShardKdeResult {
+                            kernel_sums: vec![1.0; batch.len()],
+                            population: 10,
+                        });
+                    }
+                    ShardCmd::Shutdown => break,
+                    _ => {}
+                }
+            }
+        })
+    }
+
+    #[test]
+    fn local_backend_collects_one_partial_and_releases_the_guard() {
+        let (tx, rx) = bounded(4, Overload::Block);
+        let j = fake_shard(rx);
+        let set = ReplicaSet::new(vec![tx.clone()]);
+        let be = LocalBackend::new(3, set.clone());
+        assert_eq!(be.name(), "shard 3");
+        assert_eq!(be.shards(), 1);
+        let batch: QueryBatch = Arc::new(vec![vec![0.0; 4], vec![1.0; 4]]);
+        let parts = be.scatter_ann(&batch, 0).unwrap().collect(&be.name()).unwrap();
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0].best, vec![None, None]);
+        let parts = be.scatter_kde(&batch, 7).unwrap().collect(&be.name()).unwrap();
+        assert_eq!(parts[0].kernel_sums, vec![1.0, 1.0]);
+        assert_eq!(set.depths(), vec![0], "guards released after collect");
+        assert!(tx.force(ShardCmd::Shutdown));
+        j.join().unwrap();
+    }
+
+    #[test]
+    fn local_backend_dead_mailbox_refuses_to_scatter() {
+        let (tx, rx) = bounded::<ShardCmd>(4, Overload::Block);
+        drop(rx);
+        let be = LocalBackend::new(1, ReplicaSet::new(vec![tx]));
+        let batch: QueryBatch = Arc::new(vec![vec![0.0; 4]]);
+        assert!(be.scatter_ann(&batch, 0).is_none());
+        assert!(be.scatter_kde(&batch, 0).is_none());
+        assert_eq!(be.offer(vec![vec![0.0; 4]]), IngestOutcome::Disconnected);
+        assert!(be.delete(vec![0.0; 4]).is_none());
+    }
+
+    #[test]
+    fn local_backend_mid_query_death_names_the_shard() {
+        // The shard accepts the scatter, then drops the reply channel
+        // without answering (thread death between recv and send).
+        let (tx, rx) = bounded(4, Overload::Block);
+        let j = std::thread::spawn(move || {
+            while let Ok(cmd) = rx.recv_timeout(Duration::from_secs(10)) {
+                match cmd {
+                    ShardCmd::AnnBatch(_, reply) => drop(reply),
+                    ShardCmd::Shutdown => break,
+                    _ => {}
+                }
+            }
+        });
+        let be = LocalBackend::new(0, ReplicaSet::new(vec![tx.clone()]));
+        let batch: QueryBatch = Arc::new(vec![vec![0.0; 4]]);
+        let err = be.scatter_ann(&batch, 0).unwrap().collect(&be.name()).unwrap_err();
+        assert!(err.contains("shard 0 died mid-query"), "{err}");
+        assert!(tx.force(ShardCmd::Shutdown));
+        j.join().unwrap();
+    }
+
+    #[test]
+    fn replicated_backend_spreads_reads_and_answers_identically() {
+        // One shard, two replicas: sequential singleton scatters must
+        // round-robin across the copies (equal depth) and answer the
+        // same regardless of which replica served.
+        let (tx0, rx0) = bounded(8, Overload::Block);
+        let (tx1, rx1) = bounded(8, Overload::Block);
+        let (j0, j1) = (fake_shard(rx0), fake_shard(rx1));
+        let set = ReplicaSet::new(vec![tx0.clone(), tx1.clone()]);
+        let be = LocalBackend::new(0, set.clone());
+        assert_eq!(be.replicas(), 2);
+        let batch: QueryBatch = Arc::new(vec![vec![0.0; 4]]);
+        for _ in 0..4 {
+            let parts = be.scatter_ann(&batch, 0).unwrap().collect(&be.name()).unwrap();
+            assert_eq!(parts[0].best, vec![None]);
+        }
+        assert_eq!(set.reads_served(), vec![2, 2], "reads alternate on ties");
+        assert_eq!(set.depths(), vec![0, 0], "guards released after collect");
+        assert!(tx0.force(ShardCmd::Shutdown));
+        assert!(tx1.force(ShardCmd::Shutdown));
+        j0.join().unwrap();
+        j1.join().unwrap();
+    }
+
+    #[test]
+    fn local_backend_offer_is_point_denominated() {
+        let (tx, rx) = bounded(16, Overload::Block);
+        let j = fake_shard(rx);
+        let be = LocalBackend::new(0, ReplicaSet::new(vec![tx.clone()]));
+        assert_eq!(
+            be.offer(vec![vec![0.0; 4]; 3]),
+            IngestOutcome::Accepted { accepted: 3, shed: 0 }
+        );
+        assert_eq!(
+            be.offer(vec![vec![0.0; 4]]),
+            IngestOutcome::Accepted { accepted: 1, shed: 0 }
+        );
+        assert!(tx.force(ShardCmd::Shutdown));
+        j.join().unwrap();
+    }
+}

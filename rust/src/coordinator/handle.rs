@@ -1,80 +1,81 @@
 //! `ServiceHandle` — the concurrency seam between connection threads and
-//! the owning [`SketchService`] thread.
+//! the data plane, now topology-agnostic.
 //!
-//! The service itself is `&mut self` everywhere and its PJRT executor is
-//! pinned to one thread, so N connection threads cannot call it directly.
-//! Instead a handle splits the API by what it needs:
+//! A handle fronts a list of [`ShardBackend`]s (one [`LocalBackend`] per
+//! shard of an in-process service, or one [`RemoteBackend`] per member
+//! node under `sketchd route`) and splits the API by what it needs:
 //!
-//! - **Ingest / deletes** touch only the router policy and the per-shard
-//!   [`ReplicaSet`]s, both cloneable — so they run ON the calling thread
-//!   and go straight into the per-shard bounded queues (inserts under the
-//!   configured [`Overload`] policy, fanned out to every replica;
-//!   deletes `force`d to all replicas and counted on the primary's
-//!   acknowledgement — the copy that applies and WAL-logs the delete
-//!   is the one whose ack means it happened). A query can therefore
-//!   never sit behind a backlog of
-//!   queued inserts: backpressure lives in the shard mailboxes, not in a
-//!   service-wide command queue.
+//! - **Ingest / deletes** touch only the router policy and the backends,
+//!   both cloneable — so they run ON the calling thread and go straight
+//!   into the per-shard bounded queues (or out the member-node sockets).
+//!   A query can therefore never sit behind a backlog of queued inserts:
+//!   backpressure lives in the backends, not in a service-wide command
+//!   queue.
 //! - **Native ANN/KDE queries** run ON the calling thread too, through a
-//!   [`QueryPlane`] clone (scatter to shard mailboxes, gather, merge) —
-//!   K connection threads read concurrently, limited by the shard
-//!   threads, not by a single service-wide reader.
-//! - **PJRT queries, stats, flush, checkpoint** need the service's own
-//!   state (the thread-pinned executor, pending-ingest buffers), so they
-//!   ship over an unbounded control channel to the owning thread
-//!   ([`SketchService::run_cmd_loop`]) and block on a per-request reply.
+//!   [`QueryPlane`] clone (scatter to backends, collect, merge) — K
+//!   connection threads read concurrently, limited by the shards, not by
+//!   a single service-wide reader.
+//! - **PJRT queries, stats, flush, checkpoint** need an owner: on a
+//!   single-process service they ship over an unbounded control channel
+//!   to the owning thread ([`SketchService::run_cmd_loop`]); on a routed
+//!   front-end control ops fan out to every member node and merge.
 //!
 //! All counting is shared through the metrics [`Registry`],
-//! point-denominated. Only genuine overload ([`OfferOutcome::Shed`])
-//! counts as shed; a disconnected mailbox (service shutting down) is a
-//! failed offer but never a shed point.
+//! point-denominated. Only genuine overload counts as shed; a
+//! disconnected backend (service shutting down, node gone) is a failed
+//! offer but never a shed point.
 //!
 //! [`SketchService`]: super::server::SketchService
-//! [`Overload`]: super::backpressure::Overload
+//! [`LocalBackend`]: super::backend::LocalBackend
+//! [`RemoteBackend`]: super::backend::RemoteBackend
 
 use crate::metrics::registry::Registry;
+use crate::obs::log;
 use crate::util::sync::atomic::{AtomicUsize, Ordering};
 use crate::util::sync::mpsc::{channel, Sender};
 use crate::util::sync::Arc;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
-use super::backpressure::OfferOutcome;
+use super::backend::{local_backends, IngestOutcome, RemoteBackend, ShardBackend};
 use super::health::{HealthBoard, ShardHealth};
-use super::protocol::{AnnAnswer, ServiceStats};
+use super::protocol::{AnnAnswer, ServiceStats, ShardAnnResult, ShardKdeResult};
 use super::query::QueryPlane;
 use super::replica::ReplicaSet;
 use super::router::{hash_vector, RoutePolicy};
-use super::shard::ShardCmd;
 use super::NATIVE_BATCH_ROWS;
 
-/// The ONE native batched-ingest core, shared by `SketchService`'s batch
-/// path and [`ServiceHandle::insert_batch`] so the wire ⇔ in-process
-/// state-parity guarantee is structural, not copy-maintained: identical
-/// chunking ([`NATIVE_BATCH_ROWS`]), identical point-denominated
-/// counting. `offer(shard, chunk)` reports the chunk's fate: only a
-/// genuine `Shed` counts as shed points — a `Disconnected` mailbox
-/// (service shutting down) is neither accepted nor shed, and its points
-/// are un-counted from `inserts` so `inserts == stored + shed` stays
-/// exact even when shards die.
+/// The ONE batched-ingest core, shared by `SketchService`'s batch path,
+/// [`ServiceHandle::insert_batch`], and the router fan-out, so the wire
+/// ⇔ in-process state-parity guarantee is structural, not
+/// copy-maintained: identical chunking ([`NATIVE_BATCH_ROWS`]),
+/// identical point-denominated counting. `offer(backend, chunk)` reports
+/// the chunk's fate: accepted and shed points count where they landed —
+/// a [`IngestOutcome::Disconnected`] backend's points never entered the
+/// service and are un-counted from `inserts`, so `inserts == stored +
+/// shed` stays exact even when backends die.
 pub(super) fn ship_native_batch(
     registry: &Registry,
-    per_shard: Vec<Vec<Vec<f32>>>,
-    mut offer: impl FnMut(usize, Vec<Vec<f32>>) -> OfferOutcome,
+    per_backend: Vec<Vec<Vec<f32>>>,
+    mut offer: impl FnMut(usize, Vec<Vec<f32>>) -> IngestOutcome,
 ) -> usize {
     let mut ok = 0;
-    for (s, mut pts) in per_shard.into_iter().enumerate() {
+    for (s, mut pts) in per_backend.into_iter().enumerate() {
         while !pts.is_empty() {
             let tail = pts.split_off(pts.len().min(NATIVE_BATCH_ROWS));
             let chunk = std::mem::replace(&mut pts, tail);
             let m = chunk.len();
             registry.inserts.add(m as u64);
             match offer(s, chunk) {
-                OfferOutcome::Sent => ok += m,
-                OfferOutcome::Shed => registry.shed(m as u64),
+                IngestOutcome::Accepted { accepted, shed } => {
+                    ok += accepted;
+                    if shed > 0 {
+                        registry.shed(shed as u64);
+                    }
+                }
                 // Not overload: the points never entered the service —
                 // un-count them so inserts == stored + shed stays exact.
-                OfferOutcome::Disconnected => registry.inserts.sub(m as u64),
+                IngestOutcome::Disconnected => registry.inserts.sub(m as u64),
             }
         }
     }
@@ -101,7 +102,25 @@ pub enum ServiceCmd {
     Shutdown,
 }
 
-/// Cloneable, `Send` front to one running [`SketchService`].
+/// Who answers the control plane: the owning thread of one in-process
+/// service, or a fan-out over member nodes (stats merge, flush and
+/// checkpoint barrier every node, shutdown cascades).
+enum Control {
+    Service(Sender<ServiceCmd>),
+    Fanout(Vec<Arc<RemoteBackend>>),
+}
+
+impl Clone for Control {
+    fn clone(&self) -> Self {
+        match self {
+            Control::Service(tx) => Control::Service(tx.clone()),
+            Control::Fanout(nodes) => Control::Fanout(nodes.clone()),
+        }
+    }
+}
+
+/// Cloneable, `Send` front to one running [`SketchService`] — or, built
+/// via [`ServiceHandle::for_router`], to a whole fleet of them.
 ///
 /// Routing caveat: under `RoutePolicy::RoundRobin` the handle's shared
 /// cursor is independent of the service's own `Router` cursor, so mixing
@@ -117,6 +136,13 @@ pub enum ServiceCmd {
 ///
 /// [`SketchService`]: super::server::SketchService
 pub struct ServiceHandle {
+    backends: Vec<Arc<dyn ShardBackend>>,
+    /// First global shard of each backend (prefix sums of their sizes):
+    /// `backend_of` maps a routed global shard to its owner.
+    bases: Vec<usize>,
+    /// The raw replica sets behind local backends (empty on a router
+    /// handle) — kept for the fault-injection crash/heal hooks, which
+    /// are inherently in-process.
     sets: Vec<ReplicaSet>,
     route: RoutePolicy,
     /// Round-robin cursor shared across clones so the partition stays
@@ -124,31 +150,41 @@ pub struct ServiceHandle {
     rr_next: Arc<AtomicUsize>,
     registry: Arc<Registry>,
     /// Per-shard durability health, read lock-free (no service-thread
-    /// round-trip) for Hello and degraded-mode serving decisions.
+    /// round-trip) for Hello and degraded-mode serving decisions. On a
+    /// router this is seeded from member handshakes and refreshed by
+    /// stats polls.
     board: Arc<HealthBoard>,
-    cmd_tx: Sender<ServiceCmd>,
-    /// Calling-thread native read path (scatter/gather/merge).
+    control: Control,
+    /// Calling-thread native read path (scatter/collect/merge).
     plane: QueryPlane,
     /// When true, queries must run on the owning thread (the PJRT
-    /// executor is pinned there), so they travel over `cmd_tx`.
+    /// executor is pinned there), so they travel over the control
+    /// channel.
     use_pjrt: bool,
     dim: usize,
+    /// Total GLOBAL shards behind this handle.
     shards: usize,
+    /// First global shard this handle's process serves (nonzero only on
+    /// a member node of a routed deployment; advertised in Hello).
+    shard_base: usize,
 }
 
 impl Clone for ServiceHandle {
     fn clone(&self) -> Self {
         ServiceHandle {
+            backends: self.backends.clone(),
+            bases: self.bases.clone(),
             sets: self.sets.clone(),
             route: self.route,
             rr_next: Arc::clone(&self.rr_next),
             registry: Arc::clone(&self.registry),
             board: Arc::clone(&self.board),
-            cmd_tx: self.cmd_tx.clone(),
+            control: self.control.clone(),
             plane: self.plane.clone(),
             use_pjrt: self.use_pjrt,
             dim: self.dim,
             shards: self.shards,
+            shard_base: self.shard_base,
         }
     }
 }
@@ -160,23 +196,72 @@ impl ServiceHandle {
         route: RoutePolicy,
         dim: usize,
         shards: usize,
+        shard_base: usize,
         registry: Arc<Registry>,
         board: Arc<HealthBoard>,
         cmd_tx: Sender<ServiceCmd>,
         use_pjrt: bool,
     ) -> Self {
-        let plane = QueryPlane::new(sets.clone(), Arc::clone(&registry));
+        let backends = local_backends(sets.clone(), shard_base, Some(&board));
+        let bases = (0..backends.len()).collect();
+        let plane = QueryPlane::new(backends.clone(), Arc::clone(&registry));
         ServiceHandle {
+            backends,
+            bases,
             sets,
             route,
             rr_next: Arc::new(AtomicUsize::new(0)),
             registry,
             board,
-            cmd_tx,
+            control: Control::Service(cmd_tx),
             plane,
             use_pjrt,
             dim,
             shards,
+            shard_base,
+        }
+    }
+
+    /// A front-end handle over member nodes: the same plane, the same
+    /// merge folds, the same degradation contract — backends happen to
+    /// be remote. The health board is seeded from each node's handshake
+    /// (cells in member order = global shard order) and refreshed on
+    /// stats polls.
+    pub fn for_router(
+        nodes: Vec<Arc<RemoteBackend>>,
+        route: RoutePolicy,
+        dim: usize,
+        registry: Arc<Registry>,
+    ) -> Self {
+        let backends: Vec<Arc<dyn ShardBackend>> = nodes
+            .iter()
+            .map(|n| Arc::clone(n) as Arc<dyn ShardBackend>)
+            .collect();
+        let mut bases = Vec::with_capacity(backends.len());
+        let mut shards = 0usize;
+        for b in &backends {
+            bases.push(shards);
+            shards += b.shards();
+        }
+        let board = Arc::new(HealthBoard::new(shards));
+        for (i, h) in backends.iter().flat_map(|b| b.health()).enumerate() {
+            board.escalate(i, ShardHealth::from_u8(h));
+        }
+        let plane = QueryPlane::new(backends.clone(), Arc::clone(&registry));
+        ServiceHandle {
+            backends,
+            bases,
+            sets: Vec::new(),
+            route,
+            rr_next: Arc::new(AtomicUsize::new(0)),
+            registry,
+            board,
+            control: Control::Fanout(nodes),
+            plane,
+            use_pjrt: false,
+            dim,
+            shards,
+            shard_base: 0,
         }
     }
 
@@ -203,13 +288,20 @@ impl ServiceHandle {
         self.board.worst()
     }
 
+    /// Total GLOBAL shards behind this handle.
     pub fn shards(&self) -> usize {
         self.shards
     }
 
+    /// First global shard this process serves (v5 Hello advertisement;
+    /// 0 everywhere except member nodes booted with `--shard-base`).
+    pub fn shard_base(&self) -> usize {
+        self.shard_base
+    }
+
     /// Replicas per shard (R) the service was configured with.
     pub fn replicas(&self) -> usize {
-        self.sets.first().map_or(1, ReplicaSet::replicas)
+        self.plane.replicas()
     }
 
     /// Fault-injection hook: panic one replica thread of one shard via
@@ -228,30 +320,41 @@ impl ServiceHandle {
         self.sets[shard].reads_served()
     }
 
+    /// Route one vector to a GLOBAL shard. On a member node "global"
+    /// spans only its local shards — but because shard counts divide
+    /// evenly and ranges are contiguous, `h % S_node` lands each point
+    /// on exactly the shard `h % S_total` names globally (see
+    /// EXPERIMENTS.md §Multi-node for the congruence argument).
     fn route(&self, x: &[f32]) -> usize {
         match self.route {
-            RoutePolicy::HashVector => hash_vector(x) as usize % self.sets.len(),
+            RoutePolicy::HashVector => hash_vector(x) as usize % self.shards,
             RoutePolicy::RoundRobin => {
-                self.rr_next.fetch_add(1, Ordering::Relaxed) % self.sets.len()
+                self.rr_next.fetch_add(1, Ordering::Relaxed) % self.shards
             }
         }
     }
 
+    /// Which backend owns global shard `g`.
+    fn backend_of(&self, g: usize) -> usize {
+        self.bases.partition_point(|&b| b <= g).saturating_sub(1)
+    }
+
     /// Offer one stream element under the overload policy. Returns false
     /// if it was not delivered. Only a genuine shed (queue full) counts
-    /// toward the shed statistic — a disconnected mailbox (service
-    /// shutting down) fails the offer and rolls back its insert count
-    /// instead of inventing overload.
+    /// toward the shed statistic — a disconnected backend (service
+    /// shutting down, node gone) fails the offer and rolls back its
+    /// insert count instead of inventing overload.
     pub fn insert(&self, x: Vec<f32>) -> bool {
-        let s = self.route(&x);
+        let be = &self.backends[self.backend_of(self.route(&x))];
         self.registry.inserts.add(1);
-        match self.sets[s].offer_write(ShardCmd::Insert(x)) {
-            OfferOutcome::Sent => true,
-            OfferOutcome::Shed => {
-                self.registry.shed(1);
-                false
+        match be.offer(vec![x]) {
+            IngestOutcome::Accepted { accepted, shed } => {
+                if shed > 0 {
+                    self.registry.shed(shed as u64);
+                }
+                accepted == 1
             }
-            OfferOutcome::Disconnected => {
+            IngestOutcome::Disconnected => {
                 self.registry.inserts.sub(1);
                 false
             }
@@ -262,12 +365,12 @@ impl ServiceHandle {
     /// service's native `insert_batch` path runs, so chunk boundaries and
     /// accounting are identical by construction. Returns accepted points.
     pub fn insert_batch(&self, batch: Vec<Vec<f32>>) -> usize {
-        let mut per_shard: Vec<Vec<Vec<f32>>> = vec![Vec::new(); self.sets.len()];
+        let mut per_backend: Vec<Vec<Vec<f32>>> = vec![Vec::new(); self.backends.len()];
         for x in batch {
-            per_shard[self.route(&x)].push(x);
+            per_backend[self.backend_of(self.route(&x))].push(x);
         }
-        ship_native_batch(&self.registry, per_shard, |s, chunk| {
-            self.sets[s].offer_write(ShardCmd::InsertBatch(chunk))
+        ship_native_batch(&self.registry, per_backend, |s, chunk| {
+            self.backends[s].offer(chunk)
         })
     }
 
@@ -275,17 +378,17 @@ impl ServiceHandle {
     /// overload policy like every command carrying a reply channel.
     ///
     /// The `deletes` counter tracks commands the owning shard actually
-    /// ACKNOWLEDGED: a force into a dead mailbox, or a shard dying before
+    /// ACKNOWLEDGED: a force into a dead backend, or a shard dying before
     /// the ack, does not count — otherwise the counter drifts above the
     /// applied work and never reconciles with recovered state.
     pub fn delete(&self, x: Vec<f32>) -> bool {
-        let Some(s) = (match self.route {
-            RoutePolicy::HashVector => Some(hash_vector(&x) as usize % self.sets.len()),
+        let Some(g) = (match self.route {
+            RoutePolicy::HashVector => Some(hash_vector(&x) as usize % self.shards),
             RoutePolicy::RoundRobin => None,
         }) else {
             return false;
         };
-        match self.sets[s].delete(x) {
+        match self.backends[self.backend_of(g)].delete(x) {
             Some(removed) => {
                 self.registry.deletes.add(1);
                 removed
@@ -295,8 +398,11 @@ impl ServiceHandle {
     }
 
     fn call<T>(&self, make: impl FnOnce(Sender<T>) -> ServiceCmd) -> Result<T> {
+        let Control::Service(cmd_tx) = &self.control else {
+            bail!("router handles fan control ops out; no owning thread to call");
+        };
         let (tx, rx) = channel();
-        self.cmd_tx
+        cmd_tx
             .send(make(tx))
             .map_err(|_| anyhow!("service thread is gone"))?;
         rx.recv()
@@ -304,17 +410,27 @@ impl ServiceHandle {
     }
 
     /// Batched (c, r)-ANN. On a native service this executes the whole
-    /// scatter/gather/merge ON the calling thread via the [`QueryPlane`]
+    /// scatter/collect/merge ON the calling thread via the [`QueryPlane`]
     /// — concurrent across handles/connections, never serialized through
     /// the owning thread. On a PJRT service the batch travels to the
-    /// owning thread, where the executor lives. Either way a dead shard
-    /// is an error, never a silently partial answer.
+    /// owning thread, where the executor lives. Either way a dead
+    /// backend is an error, never a silently partial answer.
     pub fn query_batch(&self, queries: Vec<Vec<f32>>) -> Result<Vec<Option<AnnAnswer>>> {
+        self.query_batch_traced(queries, 0)
+    }
+
+    /// [`Self::query_batch`] with the wire trace id carried to every
+    /// backend (and across the router→node hop on a fanned deployment).
+    pub fn query_batch_traced(
+        &self,
+        queries: Vec<Vec<f32>>,
+        trace: u64,
+    ) -> Result<Vec<Option<AnnAnswer>>> {
         if self.use_pjrt {
             self.call(|tx| ServiceCmd::Ann(queries, tx))?
                 .map_err(|e| anyhow!("ANN query failed: {e}"))
         } else {
-            self.plane.ann_batch(queries)
+            self.plane.ann_batch_traced(queries, trace)
         }
     }
 
@@ -322,39 +438,137 @@ impl ServiceHandle {
     /// the calling thread: KDE reads never touch the PJRT executor, so
     /// even on a PJRT service they scatter straight from here.
     pub fn kde_batch(&self, queries: Vec<Vec<f32>>) -> Result<(Vec<f64>, Vec<f64>)> {
-        self.plane.kde_batch(queries)
+        self.kde_batch_traced(queries, 0)
     }
 
-    /// Aggregate statistics (drains shard mailboxes first).
+    /// [`Self::kde_batch`] with the wire trace id carried through.
+    pub fn kde_batch_traced(
+        &self,
+        queries: Vec<Vec<f32>>,
+        trace: u64,
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        self.plane.kde_batch_traced(queries, trace)
+    }
+
+    /// RAW per-shard ANN partials in global shard order (the v5
+    /// `AnnPartial` op's spine): what a front-end merges is exactly what
+    /// an in-process plane would merge. PJRT re-rank never applies here
+    /// — partials are a native-path contract.
+    pub fn ann_partials(
+        &self,
+        queries: Vec<Vec<f32>>,
+        trace: u64,
+    ) -> Result<Vec<ShardAnnResult>> {
+        self.plane.ann_partials(queries, trace)
+    }
+
+    /// RAW per-shard KDE partials in global shard order (`KdePartial`).
+    pub fn kde_partials(
+        &self,
+        queries: Vec<Vec<f32>>,
+        trace: u64,
+    ) -> Result<Vec<ShardKdeResult>> {
+        self.plane.kde_partials(queries, trace)
+    }
+
+    /// Aggregate statistics. Single service: drains shard mailboxes on
+    /// the owning thread. Router: polls every member, merges the
+    /// shard-resident fields in member order (= global shard order),
+    /// reports the router's OWN counters (each member also counted the
+    /// fanned ops; summing would double-count), and refreshes the
+    /// router's occupancy gauges + health board from the merge.
     pub fn stats(&self) -> Result<ServiceStats> {
-        self.call(ServiceCmd::Stats)
+        match &self.control {
+            Control::Service(_) => self.call(ServiceCmd::Stats),
+            Control::Fanout(nodes) => {
+                let mut parts = Vec::with_capacity(nodes.len());
+                for n in nodes {
+                    parts.push(n.stats().map_err(|e| anyhow!("stats failed: {e}"))?);
+                }
+                let mut out = ServiceStats::merged(&parts);
+                let own = ServiceStats::from_registry(&self.registry);
+                out.inserts = own.inserts;
+                out.deletes = own.deletes;
+                out.ann_queries = own.ann_queries;
+                out.kde_queries = own.kde_queries;
+                out.shed = own.shed;
+                self.registry.stored_points.set(out.stored_points as u64);
+                self.registry.sketch_bytes.set(out.sketch_bytes as u64);
+                for (i, &h) in out.health.iter().enumerate() {
+                    if i < self.shards {
+                        self.board.escalate(i, ShardHealth::from_u8(h));
+                    }
+                }
+                Ok(out)
+            }
+        }
     }
 
     /// Barrier: all inserts offered BEFORE this call (from this thread)
     /// are applied when it returns Ok — and, on a durable service, synced
     /// to the WAL (a sync failure surfaces here, never as a silent ack).
+    /// On a router the barrier spans every member node.
     pub fn flush(&self) -> Result<()> {
-        self.call(ServiceCmd::Flush)?
-            .map_err(|e| anyhow!("flush failed: {e}"))
+        match &self.control {
+            Control::Service(_) => self
+                .call(ServiceCmd::Flush)?
+                .map_err(|e| anyhow!("flush failed: {e}")),
+            Control::Fanout(nodes) => {
+                for n in nodes {
+                    n.flush().map_err(|e| anyhow!("flush failed: {e}"))?;
+                }
+                Ok(())
+            }
+        }
     }
 
     /// Cut a whole-service checkpoint (durable services only). Returns
-    /// the number of points the checkpoint covers.
+    /// the number of points the checkpoint covers; on a router, the sum
+    /// over members (each checkpoints its own durability root).
     pub fn checkpoint(&self) -> Result<u64> {
-        self.call(ServiceCmd::Checkpoint)?
-            .map_err(|e| anyhow!("checkpoint failed: {e}"))
+        match &self.control {
+            Control::Service(_) => self
+                .call(ServiceCmd::Checkpoint)?
+                .map_err(|e| anyhow!("checkpoint failed: {e}")),
+            Control::Fanout(nodes) => {
+                let mut covered = 0u64;
+                for n in nodes {
+                    covered += n.checkpoint().map_err(|e| anyhow!("checkpoint failed: {e}"))?;
+                }
+                Ok(covered)
+            }
+        }
     }
 
     /// Ask the owning thread to shut the service down (idempotent,
-    /// best-effort: a missing service thread is already shut down).
+    /// best-effort: a missing service thread is already shut down). On a
+    /// router the shutdown CASCADES: every member node is asked to shut
+    /// down too, so one client `Shutdown` tears the whole deployment
+    /// down cleanly.
     pub fn shutdown(&self) {
-        let _ = self.cmd_tx.send(ServiceCmd::Shutdown);
+        match &self.control {
+            Control::Service(cmd_tx) => {
+                let _ = cmd_tx.send(ServiceCmd::Shutdown);
+            }
+            Control::Fanout(nodes) => {
+                for n in nodes {
+                    if let Err(e) = n.shutdown_node() {
+                        log::warn(
+                            "coordinator::handle",
+                            "member node did not acknowledge shutdown",
+                            crate::kv!(node = n.addr(), err = e),
+                        );
+                    }
+                }
+            }
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::super::server::{ServiceConfig, SketchService};
+    use super::super::shard::ShardCmd;
     use super::*;
     use crate::util::rng::Rng;
 
@@ -445,6 +659,7 @@ mod tests {
             RoutePolicy::HashVector,
             4,
             shards,
+            0,
             registry,
             Arc::new(super::super::health::HealthBoard::new(shards)),
             cmd_tx,

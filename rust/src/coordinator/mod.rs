@@ -3,6 +3,7 @@
 //! calling-thread read path ([`query::QueryPlane`]), and an optional
 //! PJRT re-rank stage. See DESIGN.md §1 for the layer diagram.
 
+pub mod backend;
 pub mod backpressure;
 pub mod batcher;
 pub mod handle;
@@ -13,19 +14,22 @@ pub mod replica;
 pub mod router;
 pub mod server;
 pub mod shard;
+pub mod topology;
 
 /// Points per native `InsertBatch` command. One definition shared by the
 /// service's batch path and `ServiceHandle` ingest: identical chunking is
 /// part of the wire ⇔ in-process state-parity guarantee.
 pub(crate) const NATIVE_BATCH_ROWS: usize = 64;
 
+pub use backend::{IngestOutcome, LocalBackend, Pending, RemoteBackend, ShardBackend};
 pub use backpressure::{bounded, BoundedSender, OfferOutcome, Overload};
 pub use batcher::{BatchPolicy, Batcher};
 pub use handle::{ServiceCmd, ServiceHandle};
 pub use health::{DurabilityLossPolicy, HealthBoard, ShardHealth};
-pub use protocol::{AnnAnswer, ServiceStats};
+pub use protocol::{AnnAnswer, ServiceStats, ShardAnnResult, ShardKdeResult};
 pub use query::QueryPlane;
 pub use replica::{ReadGuard, ReplicaSet};
 pub use router::{RoutePolicy, Router};
 pub use server::{ServiceConfig, SketchService};
 pub use shard::{KdeKernel, KdeShardConfig};
+pub use topology::Topology;

@@ -17,8 +17,10 @@ pub struct AnnAnswer {
     pub dist: f32,
 }
 
-/// Per-shard partial result for one query batch.
-#[derive(Clone, Debug, Default)]
+/// Per-shard partial result for one query batch. Crosses the wire raw
+/// (protocol v5 `AnnPartial`) so a multi-node front-end merges exactly
+/// what an in-process plane merges.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct ShardAnnResult {
     /// One entry per query: best candidate on this shard, if any.
     pub best: Vec<Option<AnnAnswer>>,
@@ -27,8 +29,11 @@ pub struct ShardAnnResult {
 }
 
 /// Per-shard partial KDE result: un-normalized kernel sums per query plus
-/// the shard's live window population.
-#[derive(Clone, Debug, Default)]
+/// the shard's live window population. Crosses the wire raw (protocol v5
+/// `KdePartial`): f64 addition is not associative, so only the front-end
+/// folds — in global shard order — keeping routed KDE bit-identical to a
+/// single process.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct ShardKdeResult {
     pub kernel_sums: Vec<f64>,
     pub population: u64,
@@ -98,6 +103,33 @@ impl ServiceStats {
             wal_errors: 0,
             refused_writes: 0,
         }
+    }
+
+    /// Merge the SHARD-RESIDENT fields of member-node stats for a
+    /// multi-node front-end: stored points, sketch bytes, WAL errors and
+    /// refused writes sum across the partition; health vectors and
+    /// replica depths concatenate in member order (= global shard
+    /// order); `replicas` reports the smallest member's R (the
+    /// availability floor). The COUNTER fields (inserts, queries, shed)
+    /// are left zero — a router reports its own counters via
+    /// [`Self::from_registry`], because every member also counted the
+    /// same fanned-out operations and summing would multiply them.
+    pub fn merged(parts: &[ServiceStats]) -> ServiceStats {
+        let mut out = ServiceStats::default();
+        for p in parts {
+            out.stored_points += p.stored_points;
+            out.sketch_bytes += p.sketch_bytes;
+            out.wal_errors += p.wal_errors;
+            out.refused_writes += p.refused_writes;
+            out.replica_depths.extend_from_slice(&p.replica_depths);
+            out.health.extend_from_slice(&p.health);
+            out.replicas = if out.replicas == 0 {
+                p.replicas
+            } else {
+                out.replicas.min(p.replicas.max(1))
+            };
+        }
+        out
     }
 }
 
@@ -186,6 +218,39 @@ mod tests {
         assert_eq!(st.deletes, 0);
         assert_eq!(st.stored_points, 0, "shard fields left for the service");
         assert_eq!(reg.shed_points.get(), 7);
+    }
+
+    #[test]
+    fn merged_stats_sum_shard_fields_and_skip_counters() {
+        let a = ServiceStats {
+            inserts: 100,
+            stored_points: 40,
+            sketch_bytes: 1000,
+            replicas: 2,
+            replica_depths: vec![0, 1],
+            health: vec![0, 0],
+            wal_errors: 1,
+            refused_writes: 3,
+            ..ServiceStats::default()
+        };
+        let b = ServiceStats {
+            inserts: 50,
+            stored_points: 20,
+            sketch_bytes: 500,
+            replicas: 1,
+            replica_depths: vec![2],
+            health: vec![1],
+            ..ServiceStats::default()
+        };
+        let m = ServiceStats::merged(&[a, b]);
+        assert_eq!(m.stored_points, 60);
+        assert_eq!(m.sketch_bytes, 1500);
+        assert_eq!(m.wal_errors, 1);
+        assert_eq!(m.refused_writes, 3);
+        assert_eq!(m.replica_depths, vec![0, 1, 2]);
+        assert_eq!(m.health, vec![0, 0, 1], "member order = shard order");
+        assert_eq!(m.replicas, 1, "availability floor across members");
+        assert_eq!(m.inserts, 0, "counters belong to the router's registry");
     }
 
     #[test]

@@ -1,63 +1,72 @@
-//! `QueryPlane` — the cloneable native read path of the service.
+//! `QueryPlane` — the cloneable scatter/gather/merge read path.
 //!
-//! Shards answer `AnnBatch`/`KdeBatch` independently; the only thing the
-//! native read path ever needed from the owning thread was the scatter/
-//! gather/merge glue. This type IS that glue, detached: it holds clones
-//! of the per-shard [`ReplicaSet`]s plus the shared counters, so any
-//! thread (every wire connection, every `ServiceHandle` clone) can
+//! The plane is TOPOLOGY-BLIND: it scatters a batch over a list of
+//! [`ShardBackend`]s, collects each backend's typed partials, and merges
+//! them — without ever seeing a mailbox, a `ShardCmd`, or a socket. The
+//! backends own the topology: a single-process service hands the plane
+//! one [`LocalBackend`] per shard (the exact in-process path this module
+//! ran before the trait existed), and `sketchd route` hands it one
+//! [`RemoteBackend`] per member node. Because the sketches are linear
+//! (RACE rows and SW-AKDE counters merge by summation), the merge over
+//! remote partials is the SAME `merge_ann`/`merge_kde` fold as the
+//! in-process merge — backends return raw per-shard partials in global
+//! shard order, so a routed deployment answers bit-identically to a
+//! single process fed the same stream.
+//!
+//! Any thread (every wire connection, every `ServiceHandle` clone) can
 //! execute a whole ANN or KDE batch on the calling thread — concurrently
 //! with every other reader, without a hop through the service-owning
 //! thread. The owning thread keeps only what genuinely must stay pinned
 //! there: the PJRT executor (re-rank path) and control ops (stats,
 //! flush, checkpoint).
 //!
-//! With replicas (`R > 1`) each shard's scatter lands on that shard's
-//! least-loaded replica (in-flight read depth, ties round-robin) — the
-//! replicas hold bit-identical state, so WHICH copy answers never
-//! changes the answer, only who pays for it.
-//!
 //! Degradation contract: a partial answer is an ERROR, never a result.
-//! If any shard's picked replica is unreachable (scatter fails) or dies
-//! before replying (gather fails), the batch returns `Err` — merging the
-//! surviving shards would silently drop every point the dead shard owns,
+//! If any backend is unreachable (scatter fails) or dies before replying
+//! (collect fails), the batch returns `Err` NAMING the backend — merging
+//! the survivors would silently drop every point the dead backend owns,
 //! which is indistinguishable from "no near neighbor" to the caller.
+//!
+//! [`LocalBackend`]: super::backend::LocalBackend
+//! [`RemoteBackend`]: super::backend::RemoteBackend
 
 use std::time::Instant;
 
 use crate::metrics::registry::Registry;
-use crate::util::sync::mpsc::channel;
 use crate::util::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use super::protocol::{kde_densities, merge_ann, merge_kde, AnnAnswer};
-use super::replica::ReplicaSet;
-use super::shard::ShardCmd;
+use super::backend::ShardBackend;
+use super::protocol::{
+    kde_densities, merge_ann, merge_kde, AnnAnswer, ShardAnnResult, ShardKdeResult,
+};
 
-/// Cloneable, `Send` scatter/gather front over the shard replica sets.
+/// Cloneable, `Send` scatter/gather front over a set of shard backends.
 ///
 /// Every batch records its stage timings into the shared registry:
-/// `stage_scatter` (replica pick + mailbox send, whole batch),
-/// `stage_shard_service` (per shard: mailbox dwell + sketch scan until
-/// the reply lands — the slowest shard gates the batch), and
-/// `stage_merge` (global min / kernel-sum reduce).
+/// `stage_scatter` (backend dispatch, whole batch), `stage_shard_service`
+/// (per backend: dwell + service until its partials land — the slowest
+/// backend gates the batch), and `stage_merge` (global min / kernel-sum
+/// reduce). On a routed deployment the member nodes record their own
+/// stage histograms under the SAME trace id, carried by the v5 partial
+/// ops.
 pub struct QueryPlane {
-    sets: Vec<ReplicaSet>,
+    backends: Vec<Arc<dyn ShardBackend>>,
     registry: Arc<Registry>,
 }
 
 impl Clone for QueryPlane {
     fn clone(&self) -> Self {
         QueryPlane {
-            sets: self.sets.clone(),
+            backends: self.backends.clone(),
             registry: Arc::clone(&self.registry),
         }
     }
 }
 
 impl QueryPlane {
-    pub(super) fn new(sets: Vec<ReplicaSet>, registry: Arc<Registry>) -> Self {
-        QueryPlane { sets, registry }
+    pub fn new(backends: Vec<Arc<dyn ShardBackend>>, registry: Arc<Registry>) -> Self {
+        QueryPlane { backends, registry }
     }
 
     /// The metrics registry this plane records into (shared with the
@@ -66,55 +75,117 @@ impl QueryPlane {
         &self.registry
     }
 
-    /// Number of shards this plane scatters over.
+    /// Total GLOBAL shards behind this plane (local backends serve one
+    /// each; a remote node serves its whole range).
     pub fn shards(&self) -> usize {
-        self.sets.len()
+        self.backends.iter().map(|b| b.shards()).sum()
     }
 
     /// Replicas per shard (R).
     pub fn replicas(&self) -> usize {
-        self.sets.first().map_or(1, ReplicaSet::replicas)
+        self.backends.first().map_or(1, |b| b.replicas())
     }
 
-    /// Batched (c, r)-ANN, executed entirely on the calling thread:
-    /// scatter `AnnBatch` to one replica of every shard, gather the
-    /// per-shard bests, keep the global minimum per query. Answers are
-    /// bit-identical to the pre-extraction `SketchService::query_batch`
-    /// native path — and to any other replica choice.
+    /// Scatter an ANN batch and return the RAW per-shard partials in
+    /// global shard order, unmerged — what a front-end needs to merge
+    /// exactly what an in-process plane would merge. Counts the batch
+    /// and records scatter/shard-service stages; the merge stage belongs
+    /// to whoever folds the partials.
     ///
-    /// Errors iff any shard is unreachable or dies mid-query — see the
-    /// module docs for why a partial merge is never returned.
-    pub fn ann_batch(&self, queries: Vec<Vec<f32>>) -> Result<Vec<Option<AnnAnswer>>> {
+    /// Errors iff any backend is unreachable or dies mid-query — see the
+    /// module docs for why a partial set is never returned.
+    pub fn ann_partials(
+        &self,
+        queries: Vec<Vec<f32>>,
+        trace: u64,
+    ) -> Result<Vec<ShardAnnResult>> {
         let n = queries.len();
         self.registry.ann_queries.add(n as u64);
         if n == 0 {
             return Ok(Vec::new());
         }
         let batch = Arc::new(queries);
-        // Scatter to ALL shards before gathering anything, so every shard
-        // works the batch at the same time. The read guards keep the
-        // picked replicas' depth gauges raised until their replies land.
+        // Scatter to ALL backends before collecting anything, so every
+        // shard works the batch at the same time.
         let t_scatter = Instant::now();
-        let mut pending = Vec::with_capacity(self.sets.len());
-        for (si, set) in self.sets.iter().enumerate() {
-            let (rtx, rrx) = channel();
-            let Some(guard) = set.read(ShardCmd::AnnBatch(Arc::clone(&batch), rtx)) else {
-                bail!("ANN query failed: shard {si} is down (refusing a partial answer)");
+        let mut pending = Vec::with_capacity(self.backends.len());
+        for be in &self.backends {
+            let Some(p) = be.scatter_ann(&batch, trace) else {
+                bail!(
+                    "ANN query failed: {} is down (refusing a partial answer)",
+                    be.name()
+                );
             };
-            pending.push((rrx, guard));
+            pending.push(p);
         }
         self.registry.stage_scatter.record(t_scatter.elapsed());
-        let mut partials = Vec::with_capacity(pending.len());
-        for (si, (rrx, guard)) in pending.into_iter().enumerate() {
+        let mut partials = Vec::with_capacity(self.backends.len());
+        for (be, p) in self.backends.iter().zip(pending) {
             let t_shard = Instant::now();
-            match rrx.recv() {
-                Ok(part) => {
-                    drop(guard);
+            match p.collect(&be.name()) {
+                Ok(parts) => {
                     self.registry.stage_shard_service.record(t_shard.elapsed());
-                    partials.push(part);
+                    partials.extend(parts);
                 }
-                Err(_) => bail!("ANN query failed: shard {si} died mid-query"),
+                Err(e) => bail!("ANN query failed: {e}"),
             }
+        }
+        Ok(partials)
+    }
+
+    /// KDE twin of [`Self::ann_partials`]: raw kernel sums + population
+    /// per shard, in global shard order, unmerged.
+    pub fn kde_partials(
+        &self,
+        queries: Vec<Vec<f32>>,
+        trace: u64,
+    ) -> Result<Vec<ShardKdeResult>> {
+        let n = queries.len();
+        self.registry.kde_queries.add(n as u64);
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let batch = Arc::new(queries);
+        let t_scatter = Instant::now();
+        let mut pending = Vec::with_capacity(self.backends.len());
+        for be in &self.backends {
+            let Some(p) = be.scatter_kde(&batch, trace) else {
+                bail!(
+                    "KDE query failed: {} is down (refusing a partial answer)",
+                    be.name()
+                );
+            };
+            pending.push(p);
+        }
+        self.registry.stage_scatter.record(t_scatter.elapsed());
+        let mut partials = Vec::with_capacity(self.backends.len());
+        for (be, p) in self.backends.iter().zip(pending) {
+            let t_shard = Instant::now();
+            match p.collect(&be.name()) {
+                Ok(parts) => {
+                    self.registry.stage_shard_service.record(t_shard.elapsed());
+                    partials.extend(parts);
+                }
+                Err(e) => bail!("KDE query failed: {e}"),
+            }
+        }
+        Ok(partials)
+    }
+
+    /// Batched (c, r)-ANN with the trace id carried to every backend:
+    /// scatter, collect per-shard bests, keep the global minimum per
+    /// query. Answers are bit-identical regardless of topology — the
+    /// partials arrive in global shard order, so the merge fold visits
+    /// shards exactly as an in-process plane would.
+    pub fn ann_batch_traced(
+        &self,
+        queries: Vec<Vec<f32>>,
+        trace: u64,
+    ) -> Result<Vec<Option<AnnAnswer>>> {
+        let n = queries.len();
+        let partials = self.ann_partials(queries, trace)?;
+        if n == 0 {
+            return Ok(Vec::new());
         }
         let t_merge = Instant::now();
         let merged = merge_ann(&partials, n);
@@ -122,38 +193,26 @@ impl QueryPlane {
         Ok(merged)
     }
 
-    /// Batched sliding-window KDE (summed kernel estimates, densities),
-    /// executed entirely on the calling thread. Same degradation
-    /// contract as [`Self::ann_batch`]: a missing shard's kernel mass
-    /// would silently bias every estimate low, so it is an error.
-    pub fn kde_batch(&self, queries: Vec<Vec<f32>>) -> Result<(Vec<f64>, Vec<f64>)> {
+    /// [`Self::ann_batch_traced`] with no caller-supplied trace id.
+    pub fn ann_batch(&self, queries: Vec<Vec<f32>>) -> Result<Vec<Option<AnnAnswer>>> {
+        self.ann_batch_traced(queries, 0)
+    }
+
+    /// Batched sliding-window KDE (summed kernel estimates, densities)
+    /// with the trace id carried to every backend. Same degradation
+    /// contract as ANN: a missing backend's kernel mass would silently
+    /// bias every estimate low, so it is an error. The kernel-sum fold
+    /// runs over per-shard partials in global shard order — f64 addition
+    /// is not associative, so this ordering IS the bit-parity guarantee.
+    pub fn kde_batch_traced(
+        &self,
+        queries: Vec<Vec<f32>>,
+        trace: u64,
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
         let n = queries.len();
-        self.registry.kde_queries.add(n as u64);
+        let partials = self.kde_partials(queries, trace)?;
         if n == 0 {
             return Ok((Vec::new(), Vec::new()));
-        }
-        let batch = Arc::new(queries);
-        let t_scatter = Instant::now();
-        let mut pending = Vec::with_capacity(self.sets.len());
-        for (si, set) in self.sets.iter().enumerate() {
-            let (rtx, rrx) = channel();
-            let Some(guard) = set.read(ShardCmd::KdeBatch(Arc::clone(&batch), rtx)) else {
-                bail!("KDE query failed: shard {si} is down (refusing a partial answer)");
-            };
-            pending.push((rrx, guard));
-        }
-        self.registry.stage_scatter.record(t_scatter.elapsed());
-        let mut partials = Vec::with_capacity(pending.len());
-        for (si, (rrx, guard)) in pending.into_iter().enumerate() {
-            let t_shard = Instant::now();
-            match rrx.recv() {
-                Ok(part) => {
-                    drop(guard);
-                    self.registry.stage_shard_service.record(t_shard.elapsed());
-                    partials.push(part);
-                }
-                Err(_) => bail!("KDE query failed: shard {si} died mid-query"),
-            }
         }
         let t_merge = Instant::now();
         let (sums, pop) = merge_kde(&partials, n);
@@ -161,61 +220,129 @@ impl QueryPlane {
         self.registry.stage_merge.record(t_merge.elapsed());
         Ok((sums, density))
     }
+
+    /// [`Self::kde_batch_traced`] with no caller-supplied trace id.
+    pub fn kde_batch(&self, queries: Vec<Vec<f32>>) -> Result<(Vec<f64>, Vec<f64>)> {
+        self.kde_batch_traced(queries, 0)
+    }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::super::backpressure::{bounded, BoundedSender, Overload};
-    use super::super::protocol::{ShardAnnResult, ShardKdeResult};
+    use super::super::backend::Pending;
+    use super::super::protocol::QueryBatch;
     use super::*;
-    use std::time::Duration;
+    use crate::util::sync::atomic::{AtomicU64, Ordering};
+    use crate::util::sync::mpsc::channel;
 
-    fn fake_shard(rx: crate::util::sync::mpsc::Receiver<ShardCmd>) -> std::thread::JoinHandle<()> {
-        std::thread::spawn(move || {
-            while let Ok(cmd) = rx.recv() {
-                match cmd {
-                    ShardCmd::AnnBatch(batch, reply) => {
-                        let _ = reply.send(ShardAnnResult {
-                            best: vec![None; batch.len()],
-                            scanned: 0,
-                        });
-                    }
-                    ShardCmd::KdeBatch(batch, reply) => {
-                        let _ = reply.send(ShardKdeResult {
-                            kernel_sums: vec![1.0; batch.len()],
-                            population: 10,
-                        });
-                    }
-                    ShardCmd::Shutdown => break,
-                    _ => {}
-                }
-            }
-        })
+    const TRACE_ORD: Ordering = Ordering::SeqCst;
+
+    /// Trait-level fake: no mailboxes, no threads. `Dead` refuses the
+    /// scatter; `Dying` accepts it and never answers.
+    enum Mode {
+        Healthy,
+        Dead,
+        Dying,
     }
 
-    fn single(tx: BoundedSender<ShardCmd>) -> ReplicaSet {
-        ReplicaSet::new(vec![tx])
+    struct FakeBackend {
+        name: String,
+        shards: usize,
+        mode: Mode,
+        last_trace: AtomicU64,
+    }
+
+    impl FakeBackend {
+        fn healthy(index: usize) -> Self {
+            FakeBackend {
+                name: format!("shard {index}"),
+                shards: 1,
+                mode: Mode::Healthy,
+                last_trace: AtomicU64::new(0),
+            }
+        }
+    }
+
+    impl ShardBackend for FakeBackend {
+        fn name(&self) -> String {
+            self.name.clone()
+        }
+
+        fn shards(&self) -> usize {
+            self.shards
+        }
+
+        fn replicas(&self) -> usize {
+            1
+        }
+
+        fn health(&self) -> Vec<u8> {
+            vec![0; self.shards]
+        }
+
+        fn scatter_ann(&self, batch: &QueryBatch, trace: u64) -> Option<Pending<ShardAnnResult>> {
+            self.last_trace.store(trace, TRACE_ORD);
+            let (tx, rx) = channel();
+            match self.mode {
+                Mode::Healthy => {
+                    let part = ShardAnnResult { best: vec![None; batch.len()], scanned: 0 };
+                    let _ = tx.send(Ok(vec![part; self.shards]));
+                }
+                Mode::Dead => return None,
+                Mode::Dying => drop(tx),
+            }
+            Some(Pending::Remote { rx })
+        }
+
+        fn scatter_kde(&self, batch: &QueryBatch, trace: u64) -> Option<Pending<ShardKdeResult>> {
+            self.last_trace.store(trace, TRACE_ORD);
+            let (tx, rx) = channel();
+            match self.mode {
+                Mode::Healthy => {
+                    let part =
+                        ShardKdeResult { kernel_sums: vec![1.0; batch.len()], population: 10 };
+                    let _ = tx.send(Ok(vec![part; self.shards]));
+                }
+                Mode::Dead => return None,
+                Mode::Dying => drop(tx),
+            }
+            Some(Pending::Remote { rx })
+        }
+
+        fn offer(&self, _chunk: Vec<Vec<f32>>) -> super::super::backend::IngestOutcome {
+            super::super::backend::IngestOutcome::Disconnected
+        }
+
+        fn delete(&self, _x: Vec<f32>) -> Option<bool> {
+            None
+        }
+    }
+
+    fn plane_of(backends: Vec<FakeBackend>) -> (QueryPlane, Arc<Registry>) {
+        let registry = Arc::new(Registry::new());
+        let plane = QueryPlane::new(
+            backends
+                .into_iter()
+                .map(|b| Arc::new(b) as Arc<dyn ShardBackend>)
+                .collect(),
+            Arc::clone(&registry),
+        );
+        (plane, registry)
     }
 
     #[test]
     fn empty_batches_short_circuit() {
-        let (tx, _rx) = bounded(4, Overload::Block);
-        let plane = QueryPlane::new(vec![single(tx)], Arc::new(Registry::new()));
+        let (plane, registry) = plane_of(vec![FakeBackend::healthy(0)]);
         assert!(plane.ann_batch(Vec::new()).unwrap().is_empty());
         let (s, d) = plane.kde_batch(Vec::new()).unwrap();
         assert!(s.is_empty() && d.is_empty());
+        assert_eq!(registry.stage_scatter.count(), 0, "nothing scattered");
+        assert_eq!(registry.stage_merge.count(), 0, "nothing merged");
     }
 
     #[test]
-    fn healthy_shards_answer_count_and_record_stages() {
-        let (tx0, rx0) = bounded(4, Overload::Block);
-        let (tx1, rx1) = bounded(4, Overload::Block);
-        let (j0, j1) = (fake_shard(rx0), fake_shard(rx1));
-        let registry = Arc::new(Registry::new());
-        let plane = QueryPlane::new(
-            vec![single(tx0.clone()), single(tx1.clone())],
-            Arc::clone(&registry),
-        );
+    fn healthy_backends_answer_count_and_record_stages() {
+        let (plane, registry) = plane_of(vec![FakeBackend::healthy(0), FakeBackend::healthy(1)]);
         let ans = plane.ann_batch(vec![vec![0.0; 4], vec![1.0; 4]]).unwrap();
         assert_eq!(ans, vec![None, None]);
         let (sums, dens) = plane.kde_batch(vec![vec![0.0; 4]]).unwrap();
@@ -223,74 +350,80 @@ mod tests {
         assert_eq!(dens, vec![2.0 / 20.0]);
         assert_eq!(registry.ann_queries.get(), 2);
         assert_eq!(registry.kde_queries.get(), 1);
-        // Each batch records scatter/merge once, shard-service per shard.
+        // Each batch records scatter/merge once, shard-service per backend.
         assert_eq!(registry.stage_scatter.count(), 2);
         assert_eq!(registry.stage_merge.count(), 2);
         assert_eq!(registry.stage_shard_service.count(), 4);
-        assert!(tx0.force(ShardCmd::Shutdown));
-        assert!(tx1.force(ShardCmd::Shutdown));
-        j0.join().unwrap();
-        j1.join().unwrap();
     }
 
     #[test]
-    fn replicated_shard_spreads_reads_and_answers_identically() {
-        // One shard, two replicas: sequential singleton batches must
-        // round-robin across the copies (equal depth) and answer the
-        // same regardless of which replica served.
-        let (tx0, rx0) = bounded(8, Overload::Block);
-        let (tx1, rx1) = bounded(8, Overload::Block);
-        let (j0, j1) = (fake_shard(rx0), fake_shard(rx1));
-        let set = ReplicaSet::new(vec![tx0.clone(), tx1.clone()]);
-        let plane = QueryPlane::new(vec![set.clone()], Arc::new(Registry::new()));
-        for _ in 0..4 {
-            let ans = plane.ann_batch(vec![vec![0.0; 4]]).unwrap();
-            assert_eq!(ans, vec![None]);
-        }
-        assert_eq!(set.reads_served(), vec![2, 2], "reads alternate on ties");
-        assert_eq!(set.depths(), vec![0, 0], "guards released after gather");
-        assert!(tx0.force(ShardCmd::Shutdown));
-        assert!(tx1.force(ShardCmd::Shutdown));
-        j0.join().unwrap();
-        j1.join().unwrap();
+    fn multi_shard_backend_partials_flatten_in_order() {
+        // One backend serving 3 global shards (a remote node) returns 3
+        // partials from one collect; the plane must merge all of them.
+        let node = FakeBackend {
+            name: "node 127.0.0.1:7070".into(),
+            shards: 3,
+            mode: Mode::Healthy,
+            last_trace: AtomicU64::new(0),
+        };
+        let (plane, _) = plane_of(vec![node]);
+        assert_eq!(plane.shards(), 3);
+        let (sums, dens) = plane.kde_batch(vec![vec![0.0; 4]]).unwrap();
+        assert_eq!(sums, vec![3.0], "three shards' kernel mass");
+        assert_eq!(dens, vec![3.0 / 30.0]);
     }
 
     #[test]
-    fn dead_shard_is_an_error_not_a_partial_answer() {
-        // Shard 0 is healthy and WOULD answer; shard 1's mailbox is
-        // closed. The pre-fix behavior merged shard 0 alone and returned
-        // it as a complete answer — now the whole batch must error.
-        let (tx0, rx0) = bounded(4, Overload::Block);
-        let (tx1, rx1) = bounded::<ShardCmd>(4, Overload::Block);
-        drop(rx1);
-        let j0 = fake_shard(rx0);
-        let plane = QueryPlane::new(vec![single(tx0.clone()), single(tx1)], Arc::new(Registry::new()));
+    fn trace_id_reaches_every_backend() {
+        let (b0, b1) = (
+            Arc::new(FakeBackend::healthy(0)),
+            Arc::new(FakeBackend::healthy(1)),
+        );
+        let plane = QueryPlane::new(
+            vec![
+                Arc::clone(&b0) as Arc<dyn ShardBackend>,
+                Arc::clone(&b1) as Arc<dyn ShardBackend>,
+            ],
+            Arc::new(Registry::new()),
+        );
+        plane.ann_batch_traced(vec![vec![0.0; 4]], 0xBEEF).unwrap();
+        assert_eq!(b0.last_trace.load(TRACE_ORD), 0xBEEF);
+        assert_eq!(b1.last_trace.load(TRACE_ORD), 0xBEEF);
+        plane.kde_batch_traced(vec![vec![0.0; 4]], 0xF00D).unwrap();
+        assert_eq!(b0.last_trace.load(TRACE_ORD), 0xF00D);
+        assert_eq!(b1.last_trace.load(TRACE_ORD), 0xF00D);
+    }
+
+    #[test]
+    fn dead_backend_is_an_error_not_a_partial_answer() {
+        // Backend 0 is healthy and WOULD answer; backend 1 refuses the
+        // scatter. The whole batch must error, naming the dead one.
+        let dead = FakeBackend {
+            name: "shard 1".into(),
+            shards: 1,
+            mode: Mode::Dead,
+            last_trace: AtomicU64::new(0),
+        };
+        let (plane, _) = plane_of(vec![FakeBackend::healthy(0), dead]);
         let err = plane.ann_batch(vec![vec![0.0; 4]]).unwrap_err().to_string();
         assert!(err.contains("shard 1"), "{err}");
         let err = plane.kde_batch(vec![vec![0.0; 4]]).unwrap_err().to_string();
         assert!(err.contains("shard 1"), "{err}");
-        assert!(tx0.force(ShardCmd::Shutdown));
-        j0.join().unwrap();
     }
 
     #[test]
-    fn shard_dying_mid_query_is_an_error() {
-        // The shard accepts the scatter, then drops the reply channel
+    fn backend_dying_mid_query_is_an_error() {
+        // The backend accepts the scatter, then drops the reply channel
         // without answering (thread death between recv and send).
-        let (tx, rx) = bounded(4, Overload::Block);
-        let j = std::thread::spawn(move || {
-            while let Ok(cmd) = rx.recv_timeout(Duration::from_secs(10)) {
-                match cmd {
-                    ShardCmd::AnnBatch(_, reply) => drop(reply),
-                    ShardCmd::Shutdown => break,
-                    _ => {}
-                }
-            }
-        });
-        let plane = QueryPlane::new(vec![single(tx.clone())], Arc::new(Registry::new()));
+        let dying = FakeBackend {
+            name: "node 10.0.0.2:4444".into(),
+            shards: 2,
+            mode: Mode::Dying,
+            last_trace: AtomicU64::new(0),
+        };
+        let (plane, _) = plane_of(vec![dying]);
         let err = plane.ann_batch(vec![vec![0.0; 4]]).unwrap_err().to_string();
         assert!(err.contains("died mid-query"), "{err}");
-        assert!(tx.force(ShardCmd::Shutdown));
-        j.join().unwrap();
+        assert!(err.contains("node 10.0.0.2:4444"), "{err}");
     }
 }

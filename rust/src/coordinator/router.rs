@@ -5,6 +5,11 @@
 //! shard that holds the point, so hashing the vector's bytes is the
 //! default. Round-robin is available for pure insert-only workloads where
 //! per-shard balance matters more than delete-addressability.
+//!
+//! In a multi-node deployment the same hash picks a *global* shard and
+//! [`super::topology`] maps that shard to the owning node (rendezvous
+//! hashing when nodes don't advertise contiguous ranges), so inserts and
+//! deletes co-route across the router hop exactly as they do in-process.
 
 /// Routing policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

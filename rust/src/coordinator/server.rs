@@ -25,6 +25,7 @@ use crate::obs::log;
 use crate::runtime::Executor;
 use crate::sketch::ann::SAnnConfig;
 
+use super::backend::{local_backends, IngestOutcome};
 use super::backpressure::{bounded, OfferOutcome, Overload};
 use super::handle::{ServiceCmd, ServiceHandle};
 use super::health::{DurabilityLossPolicy, HealthBoard};
@@ -52,6 +53,14 @@ pub struct ServiceConfig {
     pub ann: SAnnConfig,
     pub kde: KdeShardConfig,
     pub seed: u64,
+    /// First GLOBAL shard index this process serves (0 standalone). A
+    /// member node of a routed deployment is booted with the base of its
+    /// contiguous range so shard construction (index, seed) and answer
+    /// ids are GLOBAL: the front-end's merge of member partials is then
+    /// bit-identical to one process serving the whole range. Durability
+    /// paths (WAL files, checkpoint images, health board) stay keyed by
+    /// LOCAL index — a node's data_dir is its own.
+    pub shard_base: usize,
     /// Re-rank gathered candidates through the PJRT artifact when true;
     /// pure-native otherwise.
     pub use_pjrt: bool,
@@ -103,6 +112,7 @@ impl ServiceConfig {
                 window: 1024,
             },
             seed: 42,
+            shard_base: 0,
             use_pjrt: false,
             data_dir: None,
             fsync: FsyncPolicy::default(),
@@ -194,10 +204,15 @@ impl SketchService {
             // a function of the mutation sequence alone, so R copies fed
             // identical mailbox orders answer bit-identically — and
             // identically to an R=1 shard.
+            // Index and seed are GLOBAL (base + i): on a member node of a
+            // routed deployment, shard g must be byte-identical to shard g
+            // of a single process serving every range — same projections,
+            // same sampler stream, same answer ids.
+            let g = cfg.shard_base + i;
             let mut members: Vec<Shard> = (0..cfg.replicas)
                 .map(|_| {
                     let ann_cfg = SAnnConfig { n_max: per_shard_n, ..cfg.ann.clone() };
-                    Shard::new(i, ann_cfg, &kde_cfg, cfg.seed ^ 0xD1E5 ^ i as u64)
+                    Shard::new(g, ann_cfg, &kde_cfg, cfg.seed ^ 0xD1E5 ^ g as u64)
                 })
                 .collect();
             if let (Some(dir), Some(rec)) = (&cfg.data_dir, recovered.as_mut()) {
@@ -303,7 +318,11 @@ impl SketchService {
         let pending_ingest = vec![Vec::new(); cfg.shards];
         let inserts_at_ckpt = registry.inserts.get();
         let plane = QueryPlane::new(
-            shards.iter().map(|s| s.set.clone()).collect(),
+            local_backends(
+                shards.iter().map(|s| s.set.clone()).collect(),
+                cfg.shard_base,
+                Some(&board),
+            ),
             Arc::clone(&registry),
         );
         Ok(SketchService {
@@ -367,7 +386,12 @@ impl SketchService {
             // queue_cap keeps its per-point meaning within a factor of the
             // batch size.
             return super::handle::ship_native_batch(&self.registry, per_shard, |s, chunk| {
-                self.shards[s].set.offer_write(ShardCmd::InsertBatch(chunk))
+                let m = chunk.len();
+                match self.shards[s].set.offer_write(ShardCmd::InsertBatch(chunk)) {
+                    OfferOutcome::Sent => IngestOutcome::Accepted { accepted: m, shed: 0 },
+                    OfferOutcome::Shed => IngestOutcome::Accepted { accepted: 0, shed: m },
+                    OfferOutcome::Disconnected => IngestOutcome::Disconnected,
+                }
             });
         }
         // Route into per-shard pending buffers; flush a shard only when a
@@ -553,7 +577,9 @@ impl SketchService {
                     drop(guard);
                     let base = pool_meta.len();
                     pool_flat.extend_from_slice(&cands.pool);
-                    pool_meta.extend(cands.ids.iter().map(|&id| (si, id)));
+                    // GLOBAL shard id in the answer, like the native path.
+                    let g = self.cfg.shard_base + si;
+                    pool_meta.extend(cands.ids.iter().map(|&id| (g, id)));
                     for (qi, idxs) in cands.per_query.into_iter().enumerate() {
                         per_query[qi].extend(idxs.into_iter().map(|s| base + s as usize));
                     }
@@ -867,6 +893,8 @@ impl SketchService {
         };
         let set = self.shards[i].set.clone();
         let (queue_cap, overload, seed) = (self.cfg.queue_cap, self.cfg.overload, self.cfg.seed);
+        // Same GLOBAL index/seed the replica was originally built with.
+        let g = self.cfg.shard_base + i;
         let new_join = set.with_writes_blocked(|| -> Result<JoinHandle<()>> {
             let (ctx, crx) = channel();
             if !set.primary().force(ShardCmd::CloneState(ctx)) {
@@ -875,7 +903,7 @@ impl SketchService {
             let img = crx
                 .recv()
                 .map_err(|_| anyhow!("shard {i} primary died during the clone cut"))?;
-            let mut shard = Shard::new(i, ann_cfg, &kde_cfg, seed ^ 0xD1E5 ^ i as u64);
+            let mut shard = Shard::new(g, ann_cfg, &kde_cfg, seed ^ 0xD1E5 ^ g as u64);
             shard.restore_state(
                 load_sann(&img.sann)?,
                 load_swakde(&img.swakde)?,
@@ -911,6 +939,7 @@ impl SketchService {
             self.cfg.route,
             self.cfg.dim,
             self.cfg.shards,
+            self.cfg.shard_base,
             Arc::clone(&self.registry),
             Arc::clone(&self.board),
             cmd_tx,

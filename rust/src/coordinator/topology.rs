@@ -1,0 +1,227 @@
+//! Multi-node topology: which node owns each global shard.
+//!
+//! A routed deployment splits the global shard space `0..total` into
+//! contiguous per-node ranges (`--shard-base` on each node). The router
+//! keeps insert/delete routing identical to the single-process service:
+//! `hash_vector(x) % total` picks a *global* shard, and the topology maps
+//! that shard to the node whose range contains it. Because the global
+//! shard count and the hash are the same on both sides, a routed
+//! deployment and a single process fed the same stream place every point
+//! in the same global shard — the foundation of the bit-identical
+//! merge guarantee (see `EXPERIMENTS.md` §Multi-node).
+//!
+//! When nodes do not advertise distinct contiguous bases the router falls
+//! back to rendezvous (HRW) hashing over the node names to fix a
+//! deterministic order: every router given the same node set derives the
+//! same assignment, no matter how the `--nodes` list was typed. HRW also
+//! gives minimal relocation — growing a cluster from N to N+1 nodes
+//! re-homes only ~1/(N+1) of the keys (property-tested below).
+//!
+//! Insert-side policy (partition + delete co-routing) lives in
+//! [`super::router`]; this module only decides node placement.
+
+/// Rendezvous (HRW) score of `node` for `key`.
+///
+/// FNV-1a over the node name seeds a per-node hash; the key is then mixed
+/// in with a splitmix64 finalizer so nearby keys decorrelate.
+fn hrw_score(node: &str, key: u64) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in node.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    let mut z = h ^ key.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z ^= z >> 30;
+    z = z.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z ^= z >> 27;
+    z = z.wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Index of the rendezvous winner among `nodes` for `key`.
+///
+/// Every caller with the same node set agrees on the winner, and adding a
+/// node only steals the keys that node now wins — no other key moves.
+pub fn hrw_node<S: AsRef<str>>(key: u64, nodes: &[S]) -> usize {
+    assert!(!nodes.is_empty(), "hrw_node needs at least one node");
+    let mut best = 0usize;
+    let mut best_score = hrw_score(nodes[0].as_ref(), key);
+    for (i, n) in nodes.iter().enumerate().skip(1) {
+        let s = hrw_score(n.as_ref(), key);
+        if s > best_score {
+            best = i;
+            best_score = s;
+        }
+    }
+    best
+}
+
+/// Contiguous per-node shard ranges covering `0..total`.
+///
+/// Ranges are stored in global shard order: `ranges[k]` is `(base, count)`
+/// for the k-th node along the shard axis.
+pub struct Topology {
+    ranges: Vec<(usize, usize)>,
+    total: usize,
+}
+
+impl Topology {
+    /// Build from node-advertised `(shard_base, shard_count)` pairs.
+    ///
+    /// Returns the topology plus the permutation that sorts the input
+    /// into global shard order (`order[k]` = input index of the k-th
+    /// range). `None` if the ranges do not tile `0..total` exactly —
+    /// overlapping bases, gaps, or an empty node.
+    pub fn from_advertised(advertised: &[(usize, usize)]) -> Option<(Topology, Vec<usize>)> {
+        if advertised.is_empty() || advertised.iter().any(|&(_, c)| c == 0) {
+            return None;
+        }
+        let mut order: Vec<usize> = (0..advertised.len()).collect();
+        order.sort_by_key(|&i| advertised[i].0);
+        let mut next = 0usize;
+        let mut ranges = Vec::with_capacity(advertised.len());
+        for &i in &order {
+            let (base, count) = advertised[i];
+            if base != next {
+                return None;
+            }
+            ranges.push((base, count));
+            next = base + count;
+        }
+        Some((Topology { ranges, total: next }, order))
+    }
+
+    /// Deterministic fallback when nodes do not advertise usable bases:
+    /// order nodes by rendezvous score of their names and assign
+    /// contiguous ranges in that order. Any router given the same node
+    /// set (in any listing order) derives the same assignment.
+    ///
+    /// Returns the topology plus the permutation into global shard order.
+    pub fn by_rendezvous<S: AsRef<str>>(names: &[S], counts: &[usize]) -> (Topology, Vec<usize>) {
+        assert_eq!(names.len(), counts.len());
+        assert!(!names.is_empty(), "topology needs at least one node");
+        let mut order: Vec<usize> = (0..names.len()).collect();
+        // Stable total order on (score, name) so duplicate scores cannot
+        // make two routers disagree.
+        order.sort_by(|&a, &b| {
+            let (sa, sb) = (hrw_score(names[a].as_ref(), 0), hrw_score(names[b].as_ref(), 0));
+            sb.cmp(&sa).then_with(|| names[a].as_ref().cmp(names[b].as_ref()))
+        });
+        let mut next = 0usize;
+        let mut ranges = Vec::with_capacity(names.len());
+        for &i in &order {
+            assert!(counts[i] > 0, "every node must own at least one shard");
+            ranges.push((next, counts[i]));
+            next += counts[i];
+        }
+        (Topology { ranges, total: next }, order)
+    }
+
+    /// Total global shards across the deployment.
+    pub fn total_shards(&self) -> usize {
+        self.total
+    }
+
+    /// Per-node `(base, count)` ranges in global shard order.
+    pub fn ranges(&self) -> &[(usize, usize)] {
+        &self.ranges
+    }
+
+    /// Backend (in global order) owning global shard `g`.
+    pub fn backend_for_shard(&self, g: usize) -> usize {
+        assert!(g < self.total, "shard {g} out of range 0..{}", self.total);
+        self.ranges.partition_point(|&(base, _)| base <= g).saturating_sub(1)
+    }
+
+    /// Backend owning the shard that `hash_vector(x)` routes to.
+    pub fn backend_for_hash(&self, h: u64) -> usize {
+        self.backend_for_shard(h as usize % self.total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::hash_vector;
+
+    #[test]
+    fn growing_by_one_node_relocates_about_one_over_n_plus_one() {
+        for n in [2usize, 4, 7] {
+            let before: Vec<String> = (0..n).map(|i| format!("node-{i}:7600")).collect();
+            let mut after = before.clone();
+            after.push(format!("node-{n}:7600"));
+            let keys = 20_000u64;
+            let mut moved = 0usize;
+            for k in 0..keys {
+                let a = hrw_node(k, &before);
+                let b = hrw_node(k, &after);
+                if a != b {
+                    moved += 1;
+                    // HRW minimality: a key only moves TO the new node.
+                    assert_eq!(b, n, "key {k} moved between surviving nodes");
+                }
+            }
+            let expect = keys as f64 / (n as f64 + 1.0);
+            let frac = moved as f64 / expect;
+            assert!(
+                (0.8..1.2).contains(&frac),
+                "n={n}: moved {moved}, expected ~{expect:.0}"
+            );
+        }
+    }
+
+    #[test]
+    fn delete_co_routes_with_insert_across_nodes() {
+        let (topo, _) = Topology::by_rendezvous(&["a:1", "b:2", "c:3"], &[2, 2, 2]);
+        let mut rng = crate::util::rng::Rng::new(9);
+        for _ in 0..200 {
+            let x: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
+            let h = hash_vector(&x);
+            let shard = h as usize % topo.total_shards();
+            let node = topo.backend_for_hash(h);
+            // Re-deriving from the same bytes (the delete path) must land
+            // on the same global shard and the same node.
+            assert_eq!(hash_vector(&x) as usize % topo.total_shards(), shard);
+            assert_eq!(topo.backend_for_hash(hash_vector(&x)), node);
+            let (base, count) = topo.ranges()[node];
+            assert!((base..base + count).contains(&shard));
+        }
+    }
+
+    #[test]
+    fn advertised_ranges_must_tile_the_shard_space() {
+        // Out-of-order advertisement sorts into global order.
+        let (topo, order) = Topology::from_advertised(&[(2, 2), (0, 2)]).expect("contiguous");
+        assert_eq!(order, vec![1, 0]);
+        assert_eq!(topo.ranges(), &[(0, 2), (2, 2)]);
+        assert_eq!(topo.total_shards(), 4);
+        assert_eq!(topo.backend_for_shard(1), 0);
+        assert_eq!(topo.backend_for_shard(2), 1);
+        // Gap, overlap, duplicate base, empty node, empty set: all rejected.
+        assert!(Topology::from_advertised(&[(0, 2), (3, 2)]).is_none());
+        assert!(Topology::from_advertised(&[(0, 3), (2, 2)]).is_none());
+        assert!(Topology::from_advertised(&[(0, 2), (0, 2)]).is_none());
+        assert!(Topology::from_advertised(&[(0, 2), (2, 0)]).is_none());
+        assert!(Topology::from_advertised(&[]).is_none());
+    }
+
+    #[test]
+    fn rendezvous_assignment_ignores_listing_order() {
+        let names = ["alpha:7600", "beta:7600", "gamma:7600"];
+        let shuffled = ["gamma:7600", "alpha:7600", "beta:7600"];
+        let (t1, o1) = Topology::by_rendezvous(&names, &[2, 2, 2]);
+        let (t2, o2) = Topology::by_rendezvous(&shuffled, &[2, 2, 2]);
+        // Same name -> same (base, count) regardless of input order.
+        let assign = |names: &[&str], t: &Topology, o: &[usize]| {
+            let mut v: Vec<(String, (usize, usize))> = o
+                .iter()
+                .zip(t.ranges())
+                .map(|(&i, &r)| (names[i].to_string(), r))
+                .collect();
+            v.sort();
+            v
+        };
+        assert_eq!(assign(&names, &t1, &o1), assign(&shuffled, &t2, &o2));
+        assert_eq!(t1.total_shards(), 6);
+    }
+}

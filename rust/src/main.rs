@@ -6,6 +6,7 @@
 //!   kde   [--dataset --rows ...] one sliding-window KDE run with metrics
 //!   serve [--n --shards ...]     demo serving loop over a synthetic stream
 //!   serve --listen ADDR          TCP wire server (net::frame protocol)
+//!   route --listen ADDR --nodes  multi-node scatter/gather front-end
 //!   client --connect ADDR        wire client + load generator
 //!
 //! Every experiment-grade sweep lives in `cargo bench` targets (see
@@ -46,7 +47,7 @@ USAGE:
                 [--on-durability-loss degrade|read_only|abort]
                 [--metrics-listen HOST:PORT] [--metrics-addr-file PATH]
                 [--slow-query-ms N] [--log-level error|warn|info|debug]
-                [--log-file PATH]
+                [--log-file PATH] [--shard-base N]
       Serve the coordinator over TCP (length-prefixed binary protocol,
       see rust/src/net/frame.rs). --listen 127.0.0.1:0 picks a free
       port; the bound address is printed and, with --addr-file, written
@@ -76,6 +77,31 @@ USAGE:
       its trace id. Serving-path diagnostics are JSON lines on stderr
       (or --log-file PATH); --log-level or SKETCHD_LOG=error|warn|
       info|debug sets the threshold (default info).
+      --shard-base N (or [service] shard_base) offsets this node's
+      global shard ids — shard i here is global shard N+i, with seeds,
+      answer labels, and metrics to match. Protocol v5 advertises it in
+      the Hello handshake so a route front-end can assemble the nodes
+      into one global shard space. Durability paths stay local (WAL
+      dirs, health cells keyed 0..shards as before).
+  sketchd route --listen HOST:PORT --nodes HOST:PORT,HOST:PORT[,...]
+                [--pool 2] [--timeout-ms 5000] [--retries 2]
+                [--addr-file PATH] [--metrics-listen HOST:PORT]
+                [--metrics-addr-file PATH] [--slow-query-ms N]
+                [--log-level error|warn|info|debug] [--log-file PATH]
+      Multi-node front-end: serves the SAME wire protocol as `serve`,
+      scattering inserts/deletes by global shard hash and queries as
+      protocol-v5 partial ops (AnnPartial/KdePartial) across the
+      --nodes servers, then merging the raw per-shard partials exactly
+      like the in-process query plane — answers are bit-identical to a
+      single-process service with the same total shard count fed the
+      same stream. Nodes are assembled in advertised --shard-base
+      order when their ranges tile the shard space contiguously;
+      otherwise the router warns and falls back to a deterministic
+      rendezvous-hash order. A downed node fails queries loudly
+      (naming the node) instead of answering from survivors; --retries
+      gives idempotent ops a reconnect budget per pooled connection
+      (--pool sockets per node). A client Shutdown frame stops the
+      router and cascades shutdown to every node.
   sketchd client --connect HOST:PORT [--n 10000] [--queries 256]
                  [--batch 64] [--connections 1] [--seed 42]
                  [--timeout-ms 5000] [--retries 2]
@@ -116,6 +142,7 @@ fn main() -> Result<()> {
         Some("kde") => cmd_kde(&args),
         Some("serve") if args.has("listen") => cmd_serve_wire(&args),
         Some("serve") => cmd_serve(&args),
+        Some("route") => cmd_route(&args),
         Some("client") => cmd_client(&args),
         _ => {
             print!("{USAGE}");
@@ -415,6 +442,7 @@ fn cmd_serve_wire(args: &Args) -> Result<()> {
     let mut svc_cfg = config.service(dim, n)?;
     svc_cfg.shards = args.get_usize("shards", svc_cfg.shards)?;
     svc_cfg.replicas = args.get_usize("replicas", svc_cfg.replicas)?.max(1);
+    svc_cfg.shard_base = args.get_usize("shard-base", svc_cfg.shard_base)?;
     svc_cfg.use_pjrt = svc_cfg.use_pjrt || args.has("use-pjrt");
     if args.has("eta") {
         svc_cfg.ann.eta = args.get_f64("eta", svc_cfg.ann.eta)?;
@@ -496,6 +524,115 @@ fn cmd_serve_wire(args: &Args) -> Result<()> {
             stats.wal_errors, stats.refused_writes, stats.health
         );
     }
+    Ok(())
+}
+
+/// `route`: the multi-node scatter/gather front-end. One pooled
+/// [`RemoteBackend`] per node, assembled into global shard order, behind
+/// the SAME [`ServiceHandle`] + [`WireServer`] stack the single-process
+/// server uses — queries scatter as protocol-v5 partial ops and merge
+/// through the identical `merge_ann`/`merge_kde` fold, so answers are
+/// bit-identical to one process holding every shard.
+///
+/// [`RemoteBackend`]: sublinear_sketch::coordinator::RemoteBackend
+/// [`ServiceHandle`]: sublinear_sketch::coordinator::ServiceHandle
+fn cmd_route(args: &Args) -> Result<()> {
+    use sublinear_sketch::coordinator::{
+        RemoteBackend, RoutePolicy, ServiceHandle, ShardBackend, Topology,
+    };
+    use sublinear_sketch::util::sync::Arc;
+
+    let listen = args.require("listen")?;
+    let log_level = args
+        .flag("log-level")
+        .map(sublinear_sketch::obs::log::Level::parse);
+    sublinear_sketch::obs::log::init(
+        log_level,
+        args.flag("log-file").map(std::path::Path::new),
+    )?;
+    let addrs: Vec<String> = args
+        .require("nodes")?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    anyhow::ensure!(!addrs.is_empty(), "--nodes needs at least one HOST:PORT");
+    let opts = client_opts(args)?;
+    let pool = args.get_usize("pool", 2)?.max(1);
+
+    // Fail fast: every node must be reachable and shape-compatible
+    // before the router binds its own listener.
+    let mut nodes = Vec::with_capacity(addrs.len());
+    for a in &addrs {
+        nodes.push(RemoteBackend::connect(a, opts, pool)?);
+    }
+    let dim = nodes[0].dim();
+    for nb in &nodes[1..] {
+        anyhow::ensure!(
+            nb.dim() == dim,
+            "node {} serves dim {} but node {} serves dim {dim}",
+            nb.addr(),
+            nb.dim(),
+            nodes[0].addr()
+        );
+    }
+    // Global shard order: trust advertised --shard-base ranges when they
+    // tile the shard space; otherwise fall back to rendezvous order.
+    let advertised: Vec<(usize, usize)> = nodes
+        .iter()
+        .map(|nb| (nb.shard_base() as usize, nb.shards()))
+        .collect();
+    let order = match Topology::from_advertised(&advertised) {
+        Some((_, order)) => order,
+        None => {
+            println!(
+                "[route] warning: node --shard-base ranges do not tile the shard \
+                 space; falling back to rendezvous order (answers will not be \
+                 bit-comparable to a single-process service)"
+            );
+            let counts: Vec<usize> = nodes.iter().map(|nb| nb.shards()).collect();
+            Topology::by_rendezvous(&addrs, &counts).1
+        }
+    };
+    let nodes: Vec<_> = order.into_iter().map(|i| Arc::clone(&nodes[i])).collect();
+
+    let registry = Arc::new(sublinear_sketch::metrics::registry::Registry::new());
+    let slow_ms = args.get_u64("slow-query-ms", 0)?;
+    if slow_ms > 0 {
+        registry.slow_query_us.set(slow_ms.saturating_mul(1000));
+    }
+    let handle =
+        ServiceHandle::for_router(nodes, RoutePolicy::HashVector, dim, Arc::clone(&registry));
+    let server = WireServer::bind(listen, handle.clone())?;
+    let addr = server.local_addr()?;
+    println!(
+        "[route] listening on {addr} dim={dim} shards={} over {} node(s): {}",
+        handle.shards(),
+        addrs.len(),
+        addrs.join(",")
+    );
+    if let Some(path) = args.flag("addr-file") {
+        std::fs::write(path, addr.to_string())?;
+    }
+    if let Some(maddr) = args.flag("metrics-listen") {
+        let scraper = sublinear_sketch::net::MetricsListener::bind(maddr, handle.clone())?;
+        let bound = scraper.local_addr()?;
+        println!("[route] metrics on {bound} (Prometheus text exposition)");
+        if let Some(path) = args.flag("metrics-addr-file") {
+            std::fs::write(path, bound.to_string())?;
+        }
+        std::thread::Builder::new()
+            .name("metrics-listener".into())
+            .spawn(move || scraper.run())?;
+    }
+    server.run()?;
+    println!("[route] shutdown requested, cascading to nodes");
+    let stats = handle.stats().unwrap_or_default();
+    handle.shutdown();
+    println!(
+        "[route] shutdown complete: inserts={} shed={} stored={} ann_q={} kde_q={}",
+        stats.inserts, stats.shed, stats.stored_points, stats.ann_queries, stats.kde_queries
+    );
     Ok(())
 }
 

@@ -20,12 +20,13 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::coordinator::{AnnAnswer, ServiceStats};
+use crate::coordinator::{AnnAnswer, ServiceStats, ShardAnnResult, ShardKdeResult};
 use crate::metrics::registry::MetricsSnapshot;
 
 use super::frame::{
-    encode_ann_query, encode_ann_query_traced, encode_delete, encode_insert, encode_insert_batch,
-    encode_kde_query, read_frame, write_frame, Request, Response, PROTOCOL_VERSION,
+    encode_ann_partial, encode_ann_query, encode_ann_query_traced, encode_delete, encode_insert,
+    encode_insert_batch, encode_kde_partial, encode_kde_query, read_frame, write_frame, Request,
+    Response, PROTOCOL_VERSION,
 };
 
 /// Socket deadlines and retry budget for a [`SketchClient`].
@@ -80,6 +81,7 @@ pub struct SketchClient {
     shards: usize,
     replicas: usize,
     health: u8,
+    shard_base: u64,
 }
 
 impl SketchClient {
@@ -121,9 +123,10 @@ impl SketchClient {
             shards: 0,
             replicas: 1,
             health: 0,
+            shard_base: 0,
         };
         match client.call(&Request::Hello)? {
-            Response::Hello { version, dim, shards, replicas, health } => {
+            Response::Hello { version, dim, shards, replicas, health, shard_base } => {
                 if version != PROTOCOL_VERSION {
                     bail!("server speaks protocol {version}, this build {PROTOCOL_VERSION}");
                 }
@@ -131,6 +134,7 @@ impl SketchClient {
                 client.shards = shards as usize;
                 client.replicas = (replicas as usize).max(1);
                 client.health = health;
+                client.shard_base = shard_base;
             }
             other => bail!("handshake got {other:?}"),
         }
@@ -167,6 +171,12 @@ impl SketchClient {
     /// 2 read-only). A snapshot from connect time, not live.
     pub fn server_health(&self) -> u8 {
         self.health
+    }
+
+    /// First GLOBAL shard the server serves (v5 Hello): nonzero only on
+    /// member nodes of a routed deployment booted with `--shard-base`.
+    pub fn shard_base(&self) -> u64 {
+        self.shard_base
     }
 
     /// One exchange; errors here are TRANSPORT errors (socket, framing,
@@ -275,6 +285,36 @@ impl SketchClient {
         match self.call_retry(&encode_ann_query_traced(queries, trace))? {
             Response::AnnAnswers(answers) => Ok(answers),
             other => bail!("ann_query got {other:?}"),
+        }
+    }
+
+    /// v5 scatter/gather: RAW per-shard ANN partials in the node's
+    /// global shard order, trace id propagated across the hop. This is
+    /// the router's query primitive — a front-end merges partials from
+    /// every member exactly once. Idempotent — retried under the
+    /// client's retry budget.
+    pub fn ann_partial(
+        &mut self,
+        queries: &[Vec<f32>],
+        trace: u64,
+    ) -> Result<Vec<ShardAnnResult>> {
+        match self.call_retry(&encode_ann_partial(queries, trace))? {
+            Response::AnnPartials(parts) => Ok(parts),
+            other => bail!("ann_partial got {other:?}"),
+        }
+    }
+
+    /// v5 scatter/gather: RAW per-shard KDE partials (kernel sums +
+    /// window population, no division — the merging tier folds).
+    /// Idempotent — retried under the client's retry budget.
+    pub fn kde_partial(
+        &mut self,
+        queries: &[Vec<f32>],
+        trace: u64,
+    ) -> Result<Vec<ShardKdeResult>> {
+        match self.call_retry(&encode_kde_partial(queries, trace))? {
+            Response::KdePartials(parts) => Ok(parts),
+            other => bail!("kde_partial got {other:?}"),
         }
     }
 

@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! frame   := u32 LE payload length | payload
-//! payload := u8 version (=4) | u8 opcode | body
+//! payload := u8 version (=5) | u8 opcode | body
 //! ```
 //!
 //! All integers are little-endian; floats are IEEE-754 bit patterns, so a
@@ -23,7 +23,7 @@ use std::io::{Read, Write};
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::{AnnAnswer, ServiceStats};
+use crate::coordinator::{AnnAnswer, ServiceStats, ShardAnnResult, ShardKdeResult};
 use crate::metrics::registry::{HistoSnapshot, MetricsSnapshot};
 
 /// Protocol version (first payload byte of every frame). v2 added the
@@ -32,8 +32,13 @@ use crate::metrics::registry::{HistoSnapshot, MetricsSnapshot};
 /// per-shard health vector plus `wal_errors`/`refused_writes` in `Stats`);
 /// v4 added a client-suppliable u64 trace id to `AnnQuery`/`KdeQuery`
 /// (0 = "mint one for me") and the `Metrics` op, whose reply carries a
-/// full named-series [`MetricsSnapshot`].
-pub const PROTOCOL_VERSION: u8 = 4;
+/// full named-series [`MetricsSnapshot`]; v5 added the scatter/gather
+/// ops `AnnPartial`/`KdePartial` (RAW per-shard partials for a
+/// multi-node front-end to merge — f64 folds only happen at the
+/// merging tier, so a routed answer stays bit-identical to an
+/// in-process one) and the node's first global shard (`shard_base`) to
+/// `Hello`.
+pub const PROTOCOL_VERSION: u8 = 5;
 
 /// Hard cap on one frame's payload (64 MiB).
 pub const MAX_FRAME_BYTES: usize = 1 << 26;
@@ -55,6 +60,8 @@ mod op {
     pub(super) const SHUTDOWN: u8 = 9;
     pub(super) const CHECKPOINT: u8 = 10;
     pub(super) const METRICS: u8 = 11;
+    pub(super) const ANN_PARTIAL: u8 = 12;
+    pub(super) const KDE_PARTIAL: u8 = 13;
 
     pub(super) const R_HELLO: u8 = 128;
     pub(super) const R_ACK: u8 = 129;
@@ -65,6 +72,8 @@ mod op {
     pub(super) const R_ERROR: u8 = 134;
     pub(super) const R_CHECKPOINT: u8 = 135;
     pub(super) const R_METRICS: u8 = 136;
+    pub(super) const R_ANN_PARTIAL: u8 = 137;
+    pub(super) const R_KDE_PARTIAL: u8 = 138;
 }
 
 /// Client → server frames.
@@ -80,6 +89,15 @@ pub enum Request {
     /// its own records with the server's stage timings (v4).
     AnnQuery { queries: Vec<Vec<f32>>, trace: u64 },
     KdeQuery { queries: Vec<Vec<f32>>, trace: u64 },
+    /// v5 scatter/gather: answer with RAW per-shard ANN partials (in
+    /// global shard order) instead of the merged answer, so a routing
+    /// front-end can fold partials from many nodes exactly once. The
+    /// trace id propagates across the hop — both tiers log the same id.
+    AnnPartial { queries: Vec<Vec<f32>>, trace: u64 },
+    /// v5 scatter/gather: RAW per-shard KDE partials (kernel sums +
+    /// window population, no division) — f64 addition is not
+    /// associative, so only the merging tier folds.
+    KdePartial { queries: Vec<Vec<f32>>, trace: u64 },
     Stats,
     /// Fetch the full metrics snapshot (every named series, v4).
     Metrics,
@@ -101,6 +119,11 @@ pub enum Response {
         /// 0 healthy, 1 durability-degraded, 2 read-only) — a client
         /// learns at connect whether writes will be refused.
         health: u8,
+        /// First GLOBAL shard this node serves (v5): a routing
+        /// front-end orders member nodes by their advertised
+        /// contiguous ranges so its partial merge folds in global
+        /// shard order. 0 on standalone services.
+        shard_base: u64,
     },
     /// Insert/InsertBatch/Flush/Shutdown: points accepted (0 for the
     /// control frames).
@@ -108,6 +131,13 @@ pub enum Response {
     Deleted { removed: bool },
     AnnAnswers(Vec<Option<AnnAnswer>>),
     KdeAnswers { sums: Vec<f64>, densities: Vec<f64> },
+    /// RAW per-shard ANN partials in this node's global shard order
+    /// (v5 reply to `AnnPartial`). Answer shard ids are GLOBAL.
+    AnnPartials(Vec<ShardAnnResult>),
+    /// RAW per-shard KDE partials (v5 reply to `KdePartial`): kernel
+    /// sums as IEEE-754 bit patterns plus each shard's live window
+    /// population — bit-exact across the hop.
+    KdePartials(Vec<ShardKdeResult>),
     Stats(ServiceStats),
     /// The full named-series snapshot (v4); the text rendering is
     /// [`MetricsSnapshot::to_prometheus`], this frame is the binary one.
@@ -165,6 +195,32 @@ fn read_stats(c: &mut Cursor<'_>) -> Result<ServiceStats> {
     st.wal_errors = c.u64()?;
     st.refused_writes = c.u64()?;
     Ok(st)
+}
+
+/// The one optional-ANN-answer codec (`AnnAnswers` and v5
+/// `AnnPartials` share it): u8 tag 0 = none, 1 = `shard | id | dist`.
+fn put_ann_opt(out: &mut Vec<u8>, a: &Option<AnnAnswer>) {
+    match a {
+        None => out.push(0),
+        Some(a) => {
+            out.push(1);
+            put_u32(out, a.shard as u32);
+            put_u32(out, a.id);
+            out.extend_from_slice(&a.dist.to_le_bytes());
+        }
+    }
+}
+
+fn read_ann_opt(c: &mut Cursor<'_>) -> Result<Option<AnnAnswer>> {
+    match c.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(AnnAnswer {
+            shard: c.u32()? as usize,
+            id: c.u32()?,
+            dist: c.f32()?,
+        })),
+        t => bail!("bad ANN answer tag {t}"),
+    }
 }
 
 /// The one string codec every frame shares (`Error`, metrics series
@@ -323,6 +379,16 @@ pub fn encode_kde_query_traced(vs: &[Vec<f32>], trace: u64) -> Vec<u8> {
     encode_traced_vecs_req(op::KDE_QUERY, vs, trace)
 }
 
+/// v5: ask for RAW per-shard ANN partials (a front-end merges them).
+pub fn encode_ann_partial(vs: &[Vec<f32>], trace: u64) -> Vec<u8> {
+    encode_traced_vecs_req(op::ANN_PARTIAL, vs, trace)
+}
+
+/// v5: ask for RAW per-shard KDE partials (sums + population, unfolded).
+pub fn encode_kde_partial(vs: &[Vec<f32>], trace: u64) -> Vec<u8> {
+    encode_traced_vecs_req(op::KDE_PARTIAL, vs, trace)
+}
+
 impl Request {
     pub fn encode(&self) -> Vec<u8> {
         match self {
@@ -332,6 +398,8 @@ impl Request {
             Request::Delete(v) => encode_delete(v),
             Request::AnnQuery { queries, trace } => encode_ann_query_traced(queries, *trace),
             Request::KdeQuery { queries, trace } => encode_kde_query_traced(queries, *trace),
+            Request::AnnPartial { queries, trace } => encode_ann_partial(queries, *trace),
+            Request::KdePartial { queries, trace } => encode_kde_partial(queries, *trace),
             Request::Stats => payload(op::STATS),
             Request::Metrics => payload(op::METRICS),
             Request::Flush => payload(op::FLUSH),
@@ -356,6 +424,14 @@ impl Request {
                 let trace = c.u64()?;
                 Request::KdeQuery { queries: c.vecs()?, trace }
             }
+            op::ANN_PARTIAL => {
+                let trace = c.u64()?;
+                Request::AnnPartial { queries: c.vecs()?, trace }
+            }
+            op::KDE_PARTIAL => {
+                let trace = c.u64()?;
+                Request::KdePartial { queries: c.vecs()?, trace }
+            }
             op::STATS => Request::Stats,
             op::METRICS => Request::Metrics,
             op::FLUSH => Request::Flush,
@@ -371,13 +447,14 @@ impl Request {
 impl Response {
     pub fn encode(&self) -> Vec<u8> {
         match self {
-            Response::Hello { version, dim, shards, replicas, health } => {
+            Response::Hello { version, dim, shards, replicas, health, shard_base } => {
                 let mut out = payload(op::R_HELLO);
                 out.push(*version);
                 put_u32(&mut out, *dim);
                 put_u32(&mut out, *shards);
                 put_u32(&mut out, *replicas);
                 out.push(*health);
+                put_u64(&mut out, *shard_base);
                 out
             }
             Response::Ack { accepted } => {
@@ -394,15 +471,7 @@ impl Response {
                 let mut out = payload(op::R_ANN);
                 put_u32(&mut out, answers.len() as u32);
                 for a in answers {
-                    match a {
-                        None => out.push(0),
-                        Some(a) => {
-                            out.push(1);
-                            put_u32(&mut out, a.shard as u32);
-                            put_u32(&mut out, a.id);
-                            out.extend_from_slice(&a.dist.to_le_bytes());
-                        }
-                    }
+                    put_ann_opt(&mut out, a);
                 }
                 out
             }
@@ -418,6 +487,30 @@ impl Response {
                 }
                 for &d in densities {
                     out.extend_from_slice(&d.to_le_bytes());
+                }
+                out
+            }
+            Response::AnnPartials(parts) => {
+                let mut out = payload(op::R_ANN_PARTIAL);
+                put_u32(&mut out, parts.len() as u32);
+                for p in parts {
+                    put_u32(&mut out, p.best.len() as u32);
+                    for a in &p.best {
+                        put_ann_opt(&mut out, a);
+                    }
+                    put_u64(&mut out, p.scanned as u64);
+                }
+                out
+            }
+            Response::KdePartials(parts) => {
+                let mut out = payload(op::R_KDE_PARTIAL);
+                put_u32(&mut out, parts.len() as u32);
+                for p in parts {
+                    put_u32(&mut out, p.kernel_sums.len() as u32);
+                    for &s in &p.kernel_sums {
+                        out.extend_from_slice(&s.to_le_bytes());
+                    }
+                    put_u64(&mut out, p.population);
                 }
                 out
             }
@@ -454,6 +547,7 @@ impl Response {
                 shards: c.u32()?,
                 replicas: c.u32()?,
                 health: c.u8()?,
+                shard_base: c.u64()?,
             },
             op::R_ACK => Response::Ack { accepted: c.u64()? },
             op::R_DELETED => Response::Deleted { removed: c.u8()? != 0 },
@@ -461,17 +555,36 @@ impl Response {
                 let n = c.count(1)?;
                 let mut answers = Vec::with_capacity(n.min(DECODE_PREALLOC_CAP));
                 for _ in 0..n {
-                    answers.push(match c.u8()? {
-                        0 => None,
-                        1 => Some(AnnAnswer {
-                            shard: c.u32()? as usize,
-                            id: c.u32()?,
-                            dist: c.f32()?,
-                        }),
-                        t => bail!("bad ANN answer tag {t}"),
-                    });
+                    answers.push(read_ann_opt(&mut c)?);
                 }
                 Response::AnnAnswers(answers)
+            }
+            op::R_ANN_PARTIAL => {
+                // Min item bytes per shard: u32 answer count + u64 scanned.
+                let n = c.count(12)?;
+                let mut parts = Vec::with_capacity(n.min(DECODE_PREALLOC_CAP));
+                for _ in 0..n {
+                    let m = c.count(1)?;
+                    let mut best = Vec::with_capacity(m.min(DECODE_PREALLOC_CAP));
+                    for _ in 0..m {
+                        best.push(read_ann_opt(&mut c)?);
+                    }
+                    parts.push(ShardAnnResult { best, scanned: c.u64()? as usize });
+                }
+                Response::AnnPartials(parts)
+            }
+            op::R_KDE_PARTIAL => {
+                let n = c.count(12)?;
+                let mut parts = Vec::with_capacity(n.min(DECODE_PREALLOC_CAP));
+                for _ in 0..n {
+                    let m = c.count(8)?;
+                    let mut kernel_sums = Vec::with_capacity(m.min(DECODE_PREALLOC_CAP));
+                    for _ in 0..m {
+                        kernel_sums.push(c.f64()?);
+                    }
+                    parts.push(ShardKdeResult { kernel_sums, population: c.u64()? });
+                }
+                Response::KdePartials(parts)
             }
             op::R_KDE => {
                 let n = c.count(16)?;
@@ -645,7 +758,7 @@ mod tests {
     }
 
     fn gen_request(g: &mut Gen) -> Request {
-        let pick = g.usize_in(0, 10);
+        let pick = g.usize_in(0, 12);
         let dim = g.usize_in(1, 64);
         match pick {
             0 => Request::Hello,
@@ -664,7 +777,34 @@ mod tests {
             7 => Request::Flush,
             8 => Request::Checkpoint,
             9 => Request::Metrics,
+            10 => Request::AnnPartial {
+                queries: gen_vecs(g),
+                trace: g.usize_in(0, 1 << 40) as u64,
+            },
+            11 => Request::KdePartial {
+                queries: gen_vecs(g),
+                trace: g.usize_in(0, 1 << 40) as u64,
+            },
             _ => Request::Shutdown,
+        }
+    }
+
+    fn gen_ann_partial(g: &mut Gen) -> ShardAnnResult {
+        ShardAnnResult {
+            best: (0..g.size(0, 12))
+                .map(|_| {
+                    if g.bool() {
+                        Some(crate::coordinator::AnnAnswer {
+                            shard: g.usize_in(0, 63),
+                            id: g.usize_in(0, 1 << 20) as u32,
+                            dist: g.f64_in(0.0, 100.0) as f32,
+                        })
+                    } else {
+                        None
+                    }
+                })
+                .collect(),
+            scanned: g.usize_in(0, 1 << 20),
         }
     }
 
@@ -695,13 +835,14 @@ mod tests {
     }
 
     fn gen_response(g: &mut Gen) -> Response {
-        match g.usize_in(0, 8) {
+        match g.usize_in(0, 10) {
             0 => Response::Hello {
                 version: PROTOCOL_VERSION,
                 dim: g.usize_in(1, 1024) as u32,
                 shards: g.usize_in(1, 64) as u32,
                 replicas: g.usize_in(1, 8) as u32,
                 health: g.usize_in(0, 2) as u8,
+                shard_base: g.usize_in(0, 60) as u64,
             },
             1 => Response::Ack { accepted: g.usize_in(0, 1 << 20) as u64 },
             2 => Response::Deleted { removed: g.bool() },
@@ -745,6 +886,17 @@ mod tests {
             }),
             6 => Response::Checkpointed { points: g.usize_in(0, 1 << 40) as u64 },
             7 => Response::Metrics(gen_metrics(g)),
+            8 => Response::AnnPartials(
+                (0..g.size(0, 6)).map(|_| gen_ann_partial(g)).collect(),
+            ),
+            9 => Response::KdePartials(
+                (0..g.size(0, 6))
+                    .map(|_| ShardKdeResult {
+                        kernel_sums: (0..g.size(0, 12)).map(|_| g.f64_in(0.0, 1e6)).collect(),
+                        population: g.usize_in(0, 1 << 30) as u64,
+                    })
+                    .collect(),
+            ),
             _ => Response::Error("frame \u{1F980} error".to_string()),
         }
     }
@@ -877,6 +1029,65 @@ mod tests {
                 Response::Metrics(gen_metrics(g)).encode()
             } else {
                 Request::Metrics.encode()
+            };
+            let mut m = base.clone();
+            let i = g.usize_in(0, m.len() - 1);
+            m[i] ^= g.usize_in(1, 255) as u8;
+            let _ = Request::decode(&m);
+            let _ = Response::decode(&m);
+            let junk: Vec<u8> = (0..g.size(0, 64)).map(|_| g.rng.next_u64() as u8).collect();
+            let _ = Request::decode(&junk);
+            let _ = Response::decode(&junk);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn partial_ops_roundtrip_and_survive_fuzzing() {
+        // Exact roundtrip of the v5 scatter/gather ops: a partial reply
+        // carries f64 sums and f32 distances as bit patterns, so what the
+        // router decodes is byte-for-byte what the node computed.
+        let req = Request::AnnPartial { queries: vec![vec![1.0, 2.0]], trace: 7 };
+        assert_eq!(Request::decode(&req.encode()).unwrap(), req);
+        let req = Request::KdePartial { queries: vec![vec![0.5; 3]], trace: 0 };
+        assert_eq!(Request::decode(&req.encode()).unwrap(), req);
+        let resp = Response::AnnPartials(vec![
+            ShardAnnResult {
+                best: vec![
+                    Some(AnnAnswer { shard: 3, id: 9, dist: 0.125 }),
+                    None,
+                ],
+                scanned: 17,
+            },
+            ShardAnnResult { best: vec![None, None], scanned: 0 },
+        ]);
+        assert_eq!(Response::decode(&resp.encode()).unwrap(), resp);
+        let resp = Response::KdePartials(vec![ShardKdeResult {
+            kernel_sums: vec![1.0 / 3.0, f64::MIN_POSITIVE],
+            population: 41,
+        }]);
+        assert_eq!(Response::decode(&resp.encode()).unwrap(), resp);
+        // The traced request layout matches the v4 query ops: trace id
+        // BEFORE the vectors.
+        match Request::decode(&encode_ann_partial(&[vec![1.0f32]], 0xBEEF)).unwrap() {
+            Request::AnnPartial { trace, .. } => assert_eq!(trace, 0xBEEF),
+            other => panic!("decoded {other:?}"),
+        }
+        // Hostile input: 1-byte mutations and junk never panic and never
+        // allocate off the claim alone.
+        check("partial_frame_mutation", 150, |g| {
+            let base = match g.usize_in(0, 3) {
+                0 => Request::AnnPartial { queries: gen_vecs(g), trace: 1 }.encode(),
+                1 => Request::KdePartial { queries: gen_vecs(g), trace: 2 }.encode(),
+                2 => Response::AnnPartials(
+                    (0..g.size(0, 4)).map(|_| gen_ann_partial(g)).collect(),
+                )
+                .encode(),
+                _ => Response::KdePartials(vec![ShardKdeResult {
+                    kernel_sums: (0..g.size(0, 8)).map(|_| g.f64_in(0.0, 1e6)).collect(),
+                    population: 9,
+                }])
+                .encode(),
             };
             let mut m = base.clone();
             let i = g.usize_in(0, m.len() - 1);

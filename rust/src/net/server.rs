@@ -613,6 +613,18 @@ fn trace_request(req: &mut Request, registry: &Registry) -> Option<(&'static str
             }
             Some(("kde", queries.len(), *trace))
         }
+        Request::AnnPartial { queries, trace } => {
+            if *trace == 0 {
+                *trace = registry.trace_ids.next();
+            }
+            Some(("ann_partial", queries.len(), *trace))
+        }
+        Request::KdePartial { queries, trace } => {
+            if *trace == 0 {
+                *trace = registry.trace_ids.next();
+            }
+            Some(("kde_partial", queries.len(), *trace))
+        }
         Request::Checkpoint => Some(("checkpoint", 0, 0)),
         _ => None,
     }
@@ -632,8 +644,10 @@ fn observe_op(
 ) {
     let histo = match op {
         "insert" => &registry.op_insert,
-        "ann" => &registry.op_ann,
-        "kde" => &registry.op_kde,
+        // Partial ops are the same read path minus the merge; they share
+        // the query histograms so a routed node's p99 stays comparable.
+        "ann" | "ann_partial" => &registry.op_ann,
+        "kde" | "kde_partial" => &registry.op_kde,
         _ => &registry.op_checkpoint,
     };
     histo.record(elapsed);
@@ -656,6 +670,7 @@ fn dispatch(req: Request, handle: &ServiceHandle, coalescer: &QueryCoalescer) ->
             shards: handle.shards() as u32,
             replicas: handle.replicas() as u32,
             health: handle.health_worst() as u8,
+            shard_base: handle.shard_base() as u64,
         },
         Request::Insert(x) => {
             if let Err(resp) = check_vectors(handle, std::slice::from_ref(&x)) {
@@ -675,25 +690,26 @@ fn dispatch(req: Request, handle: &ServiceHandle, coalescer: &QueryCoalescer) ->
             }
             Response::Deleted { removed: handle.delete(x) }
         }
-        Request::AnnQuery { queries: mut qs, trace: _ } => {
+        Request::AnnQuery { queries: mut qs, trace } => {
             if let Err(resp) = check_vectors(handle, &qs) {
                 return resp;
             }
             // Singletons coalesce across connections; real batches are
-            // already amortized and scatter directly from this thread.
+            // already amortized and scatter directly from this thread,
+            // carrying the wire trace id into the stage histograms.
             if let Some(q) = single_query(&mut qs) {
                 match coalescer.ann_one(q) {
                     Ok(ans) => Response::AnnAnswers(vec![ans]),
                     Err(e) => Response::Error(e),
                 }
             } else {
-                match handle.query_batch(qs) {
+                match handle.query_batch_traced(qs, trace) {
                     Ok(answers) => Response::AnnAnswers(answers),
                     Err(e) => Response::Error(e.to_string()),
                 }
             }
         }
-        Request::KdeQuery { queries: mut qs, trace: _ } => {
+        Request::KdeQuery { queries: mut qs, trace } => {
             if let Err(resp) = check_vectors(handle, &qs) {
                 return resp;
             }
@@ -705,10 +721,30 @@ fn dispatch(req: Request, handle: &ServiceHandle, coalescer: &QueryCoalescer) ->
                     Err(e) => Response::Error(e),
                 }
             } else {
-                match handle.kde_batch(qs) {
+                match handle.kde_batch_traced(qs, trace) {
                     Ok((sums, densities)) => Response::KdeAnswers { sums, densities },
                     Err(e) => Response::Error(e.to_string()),
                 }
+            }
+        }
+        Request::AnnPartial { queries: qs, trace } => {
+            if let Err(resp) = check_vectors(handle, &qs) {
+                return resp;
+            }
+            // Partials never coalesce: a front-end already batches, and
+            // the reply must carry THIS request's shards only.
+            match handle.ann_partials(qs, trace) {
+                Ok(parts) => Response::AnnPartials(parts),
+                Err(e) => Response::Error(e.to_string()),
+            }
+        }
+        Request::KdePartial { queries: qs, trace } => {
+            if let Err(resp) = check_vectors(handle, &qs) {
+                return resp;
+            }
+            match handle.kde_partials(qs, trace) {
+                Ok(parts) => Response::KdePartials(parts),
+                Err(e) => Response::Error(e.to_string()),
             }
         }
         Request::Stats => match handle.stats() {

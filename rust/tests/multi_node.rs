@@ -1,0 +1,279 @@
+//! Multi-node scatter/gather: a `route` front-end over two remote
+//! sketchd nodes must be indistinguishable from one process holding
+//! every shard — bit-identical ANN answers and KDE sums for the same
+//! seeded stream — and must degrade LOUDLY (naming the dead node) when
+//! a member goes down, with PR 6's idempotent-retry semantics holding
+//! across the router hop.
+//!
+//! Parity preconditions (also enforced by `sketchd route` + the CI
+//! smoke): every node runs the same seed, `--shard-base` ranges tile
+//! the global shard space contiguously with equal-sized nodes, and each
+//! node's `n` / KDE window are the per-node slice of the single-process
+//! totals (the service divides both by its LOCAL shard count).
+
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::Mutex;
+use std::thread;
+use std::time::Duration;
+
+use sublinear_sketch::coordinator::{
+    KdeKernel, RemoteBackend, RoutePolicy, ServiceConfig, ServiceHandle, ShardBackend,
+    SketchService,
+};
+use sublinear_sketch::metrics::registry::Registry;
+use sublinear_sketch::net::{ClientOptions, SketchClient, WireServer};
+use sublinear_sketch::util::rng::Rng;
+use sublinear_sketch::util::sync::Arc;
+
+const DIM: usize = 8;
+
+/// Node config: `shards` local shards starting at global `base`, sized
+/// so that per-shard capacity and window match a 4-shard single process
+/// with `n_total = 2 * n_max` and `window_total = 2 * window`.
+fn node_cfg(shards: usize, base: usize, n_max: usize, window: u64) -> ServiceConfig {
+    let mut cfg = ServiceConfig::default_for(DIM, n_max);
+    cfg.shards = shards;
+    cfg.shard_base = base;
+    cfg.ann.eta = 0.0;
+    cfg.kde.rows = 16;
+    cfg.kde.p = 3;
+    cfg.kde.kernel = KdeKernel::Angular;
+    cfg.kde.window = window;
+    cfg
+}
+
+fn cluster_points(rng: &mut Rng, n: usize) -> Vec<Vec<f32>> {
+    let centers: Vec<Vec<f32>> = (0..16)
+        .map(|_| (0..DIM).map(|_| rng.gaussian_f32() * 3.0).collect())
+        .collect();
+    (0..n)
+        .map(|_| {
+            let c = &centers[rng.below(16) as usize];
+            c.iter().map(|v| v + rng.gaussian_f32() * 0.1).collect()
+        })
+        .collect()
+}
+
+/// One sketchd node: service thread + wire accept thread.
+struct Node {
+    addr: SocketAddr,
+    srv_join: thread::JoinHandle<anyhow::Result<()>>,
+    handle: ServiceHandle,
+    svc_join: thread::JoinHandle<()>,
+}
+
+fn start_node(cfg: ServiceConfig) -> Node {
+    let (handle, svc_join) = SketchService::spawn(cfg).unwrap();
+    let server = WireServer::bind("127.0.0.1:0", handle.clone()).unwrap();
+    let addr = server.local_addr().unwrap();
+    let srv_join = thread::spawn(move || server.run());
+    Node { addr, srv_join, handle, svc_join }
+}
+
+impl Node {
+    /// Join after a Shutdown frame reached the node (e.g. a router
+    /// cascade): accept loop first, then the owning service thread.
+    fn join(self) {
+        self.srv_join.join().unwrap().unwrap();
+        self.handle.shutdown();
+        self.svc_join.join().unwrap();
+    }
+}
+
+fn remote(addr: SocketAddr, retries: u32) -> Arc<RemoteBackend> {
+    let opts = ClientOptions {
+        timeout: Some(Duration::from_secs(10)),
+        retries,
+        ..ClientOptions::default()
+    };
+    RemoteBackend::connect(&addr.to_string(), opts, 1).unwrap()
+}
+
+fn router(nodes: Vec<Arc<RemoteBackend>>) -> ServiceHandle {
+    let dim = nodes[0].dim();
+    ServiceHandle::for_router(nodes, RoutePolicy::HashVector, dim, Arc::new(Registry::new()))
+}
+
+#[test]
+fn router_over_two_nodes_matches_single_process_bitwise() {
+    let mut rng = Rng::new(4242);
+    let pts = cluster_points(&mut rng, 1600);
+    let queries = pts[..64].to_vec();
+
+    // Single-process reference: 4 shards, the full stream.
+    let (local, local_join) = SketchService::spawn(node_cfg(4, 0, 2_000, 600)).unwrap();
+    for chunk in pts.chunks(100) {
+        assert_eq!(local.insert_batch(chunk.to_vec()), chunk.len());
+    }
+    local.flush().unwrap();
+    let want_ann = local.query_batch(queries.clone()).unwrap();
+    let (want_sums, want_dens) = local.kde_batch(queries.clone()).unwrap();
+    local.shutdown();
+    local_join.join().unwrap();
+    let hits = want_ann.iter().filter(|a| a.is_some()).count();
+    assert!(hits >= 60, "sanity: clustered queries must hit ({hits}/64)");
+
+    // Routed twin: two 2-shard nodes covering global shards 0-1 and 2-3,
+    // behind a route front-end serving the SAME wire protocol.
+    let n0 = start_node(node_cfg(2, 0, 1_000, 300));
+    let n1 = start_node(node_cfg(2, 2, 1_000, 300));
+    let (b0, b1) = (remote(n0.addr, 2), remote(n1.addr, 2));
+    assert_eq!(b0.shard_base(), 0, "v5 Hello advertises the base");
+    assert_eq!(b1.shard_base(), 2);
+    assert_eq!(b0.shards(), 2);
+    let rh = router(vec![b0, b1]);
+    assert_eq!(rh.shards(), 4, "router spans the global shard space");
+
+    let server = WireServer::bind("127.0.0.1:0", rh.clone()).unwrap();
+    let raddr = server.local_addr().unwrap();
+    let srv_join = thread::spawn(move || server.run());
+    let mut c = SketchClient::connect(raddr).unwrap();
+    assert_eq!(c.dim(), DIM);
+    assert_eq!(c.shards(), 4, "handshake reports the merged deployment");
+    let mut accepted = 0u64;
+    for chunk in pts.chunks(100) {
+        accepted += c.insert_batch(chunk).unwrap();
+    }
+    assert_eq!(accepted, 1600, "both nodes accepted their slices");
+    c.flush().unwrap();
+
+    let got_ann = c.ann_query(&queries).unwrap();
+    assert_eq!(got_ann, want_ann, "routed ANN answers (incl. GLOBAL shard ids) must be bit-identical");
+    let (got_sums, got_dens) = c.kde_query(&queries).unwrap();
+    assert_eq!(got_sums, want_sums, "routed KDE kernel sums must be bit-identical");
+    assert_eq!(got_dens, want_dens);
+
+    // Merged stats: router-side counters + node-resident shard fields.
+    let st = c.stats().unwrap();
+    assert_eq!(st.inserts, 1600, "router counts the fanned stream once");
+    assert_eq!(st.stored_points as u64 + st.shed, 1600);
+    assert_eq!(st.health, vec![0; 4], "per-shard health concatenates in global order");
+    assert_eq!(st.replica_depths.len(), 4);
+
+    c.shutdown_server().unwrap();
+    drop(c);
+    srv_join.join().unwrap().unwrap();
+    rh.shutdown(); // cascades Shutdown to both nodes
+    n0.join();
+    n1.join();
+}
+
+#[test]
+fn downed_node_fails_queries_loudly_with_its_name() {
+    let n0 = start_node(node_cfg(2, 0, 1_000, 300));
+    let n1 = start_node(node_cfg(2, 2, 1_000, 300));
+    let dead_addr = n1.addr;
+    // retries=0: the transport fault surfaces on the first call instead
+    // of burning the reconnect budget — the contract under test is the
+    // loud error, not the retry.
+    let rh = router(vec![remote(n0.addr, 0), remote(n1.addr, 0)]);
+
+    let mut rng = Rng::new(77);
+    let pts = cluster_points(&mut rng, 400);
+    let queries = pts[..16].to_vec();
+    assert_eq!(rh.insert_batch(pts.clone()), 400);
+    rh.flush().unwrap();
+    assert!(rh.query_batch(queries.clone()).is_ok(), "healthy baseline");
+
+    // Kill node 1 out from under the router.
+    let mut killer = SketchClient::connect(dead_addr).unwrap();
+    killer.shutdown_server().unwrap();
+    drop(killer);
+    n1.join();
+
+    // First failure: the in-flight connection dies mid-call.
+    let e1 = rh.query_batch(queries.clone()).unwrap_err().to_string();
+    assert!(e1.contains("ANN query failed"), "{e1}");
+    assert!(e1.contains(&format!("node {dead_addr}")), "must name the node: {e1}");
+    // Steady state: reconnect is refused — the dead-shard contract,
+    // one tier up: no silent merge of the surviving node's partials.
+    let e2 = rh.query_batch(queries.clone()).unwrap_err().to_string();
+    assert!(
+        e2.contains(&format!("node {dead_addr} is down (refusing a partial answer)")),
+        "{e2}"
+    );
+    let e3 = rh.kde_batch(queries).unwrap_err().to_string();
+    assert!(e3.contains("KDE query failed"), "{e3}");
+    assert!(e3.contains(&format!("node {dead_addr}")), "{e3}");
+
+    rh.shutdown(); // node 1 is already gone (logged warn); node 0 exits
+    n0.join();
+}
+
+/// Shuttle bytes both ways between two sockets until either side closes.
+fn pump(a: TcpStream, b: TcpStream) {
+    let (mut a2, mut b2) = (a.try_clone().unwrap(), b.try_clone().unwrap());
+    let (mut a, mut b) = (a, b);
+    thread::spawn(move || {
+        let _ = std::io::copy(&mut a, &mut b);
+        let _ = b.shutdown(Shutdown::Both);
+    });
+    thread::spawn(move || {
+        let _ = std::io::copy(&mut b2, &mut a2);
+        let _ = a2.shutdown(Shutdown::Both);
+    });
+}
+
+type LiveConns = Arc<Mutex<Vec<TcpStream>>>;
+
+/// A cuttable proxy: every accepted connection pumps to `backend`; `cut`
+/// severs everything currently live, and later connects pass through
+/// again — a transient router→node transport fault.
+fn start_proxy(backend: SocketAddr) -> (SocketAddr, LiveConns) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let live: LiveConns = Arc::new(Mutex::new(Vec::new()));
+    let l2 = Arc::clone(&live);
+    thread::spawn(move || {
+        for s in listener.incoming() {
+            let Ok(s) = s else { break };
+            let Ok(u) = TcpStream::connect(backend) else { break };
+            {
+                let mut g = l2.lock().unwrap();
+                g.push(s.try_clone().unwrap());
+                g.push(u.try_clone().unwrap());
+            }
+            pump(s, u);
+        }
+    });
+    (addr, live)
+}
+
+fn cut(live: &LiveConns) {
+    for s in live.lock().unwrap().drain(..) {
+        let _ = s.shutdown(Shutdown::Both);
+    }
+}
+
+#[test]
+fn idempotent_queries_retry_across_the_router_hop() {
+    // Node 0 sits behind a cuttable proxy; node 1 is direct. After the
+    // cut, the pooled client's next idempotent call must detect the
+    // transport fault, reconnect through the proxy, and return answers
+    // bit-identical to the pre-cut baseline — PR 6's retry contract,
+    // one tier up.
+    let n0 = start_node(node_cfg(2, 0, 1_000, 300));
+    let n1 = start_node(node_cfg(2, 2, 1_000, 300));
+    let (paddr, live) = start_proxy(n0.addr);
+    let rh = router(vec![remote(paddr, 2), remote(n1.addr, 2)]);
+
+    let mut rng = Rng::new(909);
+    let pts = cluster_points(&mut rng, 600);
+    let queries = pts[..32].to_vec();
+    assert_eq!(rh.insert_batch(pts.clone()), 600);
+    rh.flush().unwrap();
+    let want_ann = rh.query_batch(queries.clone()).unwrap();
+    let (want_sums, want_dens) = rh.kde_batch(queries.clone()).unwrap();
+
+    cut(&live);
+
+    let got_ann = rh.query_batch(queries.clone()).unwrap();
+    assert_eq!(got_ann, want_ann, "retried answers must be bit-identical");
+    let (got_sums, got_dens) = rh.kde_batch(queries).unwrap();
+    assert_eq!(got_sums, want_sums);
+    assert_eq!(got_dens, want_dens);
+
+    rh.shutdown(); // cascades through the (reconnected) proxy + direct node
+    n0.join();
+    n1.join();
+}

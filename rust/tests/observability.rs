@@ -277,6 +277,119 @@ fn histogram_merge_parity_across_shards() {
     assert!((a.max_us - b.max_us).abs() < 1e-6, "max is exact under merge");
 }
 
+/// Protocol v5 two-tier tracing: a routed deployment must carry ONE
+/// trace id across the router→node hop — stage histograms record on
+/// both tiers under that id, the node never mints its own (the router
+/// always forwards a nonzero id), and the slow-query log fires on
+/// whichever tier holds the threshold, tagged with the shared id.
+#[test]
+fn trace_and_slow_query_span_both_tiers_of_a_routed_deployment() {
+    use sublinear_sketch::coordinator::{RemoteBackend, RoutePolicy, ServiceHandle};
+    use sublinear_sketch::metrics::registry::Registry;
+    use sublinear_sketch::net::ClientOptions;
+    use sublinear_sketch::obs::log;
+    use sublinear_sketch::util::sync::Arc;
+
+    // Capture structured logs in a file. If another test in this binary
+    // already took the global sink, the log-line pins are skipped (the
+    // trace-propagation and histogram pins below still run).
+    let log_path = std::env::temp_dir()
+        .join(format!("sketchd-obs-slow-{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&log_path);
+    let captured = log::init(Some(log::Level::Warn), Some(&log_path)).unwrap();
+
+    let mut rng = Rng::new(606);
+    let pts = cluster_points(&mut rng, 300, 8);
+
+    // Node tier (one 3-shard member) + a router tier scattering to it.
+    let node = start_stack(obs_cfg(8, 1_000));
+    drop(node.client);
+    let opts = ClientOptions {
+        timeout: Some(Duration::from_secs(10)),
+        retries: 2,
+        ..ClientOptions::default()
+    };
+    let backend = RemoteBackend::connect(&node.addr.to_string(), opts, 1).unwrap();
+    let router_reg = Arc::new(Registry::new());
+    let rh = ServiceHandle::for_router(
+        vec![backend],
+        RoutePolicy::HashVector,
+        8,
+        Arc::clone(&router_reg),
+    );
+    let rsrv = WireServer::bind("127.0.0.1:0", rh.clone()).unwrap();
+    let raddr = rsrv.local_addr().unwrap();
+    let rjoin = thread::spawn(move || rsrv.run());
+    let mut rc = SketchClient::connect(raddr).unwrap();
+    for chunk in pts.chunks(100) {
+        rc.insert_batch(chunk).unwrap();
+    }
+    rc.flush().unwrap();
+
+    // Client-supplied trace, batch ≥ 2: the coalescer only takes
+    // singletons, so the batch scatters directly, carrying the id into
+    // the stage histograms on BOTH tiers.
+    let ans = rc.ann_query_traced(&pts[..4], 0xBEEF).unwrap();
+    assert!(ans.iter().any(|a| a.is_some()));
+    let rsnap = router_reg.snapshot();
+    let nsnap = node.handle.registry().snapshot();
+    assert_eq!(counter(&rsnap, "trace_ids"), 0, "router passes a client id through");
+    assert_eq!(counter(&nsnap, "trace_ids"), 0, "node rides the router's id — never mints");
+    for (snap, stage, tier) in [
+        (&rsnap, "stage_scatter", "router"),
+        (&rsnap, "stage_shard_service", "router"),
+        (&rsnap, "stage_merge", "router"),
+        (&nsnap, "stage_scatter", "node"),
+        (&nsnap, "stage_shard_service", "node"),
+    ] {
+        assert!(histo_count(snap, stage) >= 1, "{tier} {stage} recorded nothing");
+    }
+    assert!(
+        histo_count(&nsnap, "op_ann") >= 1,
+        "AnnPartial must land in the node's op_ann histogram"
+    );
+
+    // Untraced: the ROUTER mints exactly once; the node still never
+    // mints, because the hop always carries the minted id.
+    rc.ann_query(&pts[..4]).unwrap();
+    assert_eq!(counter(&router_reg.snapshot(), "trace_ids"), 1);
+    assert_eq!(counter(&node.handle.registry().snapshot(), "trace_ids"), 0);
+
+    // --slow-query-ms fires on whichever tier is slow: first only the
+    // node holds a (1µs, i.e. always-firing) threshold, then only the
+    // router. Distinct trace ids tag which query tripped which tier.
+    node.handle.registry().slow_query_us.set(1);
+    rc.ann_query_traced(&pts[..4], 0xFACE).unwrap();
+    node.handle.registry().slow_query_us.set(0);
+    router_reg.slow_query_us.set(1);
+    rc.ann_query_traced(&pts[..4], 0xF00D).unwrap();
+    router_reg.slow_query_us.set(0);
+    if captured {
+        let body = std::fs::read_to_string(&log_path).unwrap();
+        let node_line = body
+            .lines()
+            .find(|l| l.contains("\"trace\":\"64206\"")) // 0xFACE
+            .expect("node-tier slow-query line missing");
+        assert!(node_line.contains("slow query"), "{node_line}");
+        assert!(node_line.contains("ann_partial"), "node tier logs the partial op: {node_line}");
+        let router_line = body
+            .lines()
+            .find(|l| l.contains("\"trace\":\"61453\"")) // 0xF00D
+            .expect("router-tier slow-query line missing");
+        assert!(router_line.contains("slow query"), "{router_line}");
+        assert!(router_line.contains("\"op\":\"ann\""), "{router_line}");
+    }
+
+    rc.shutdown_server().unwrap();
+    drop(rc);
+    rjoin.join().unwrap().unwrap();
+    rh.shutdown(); // cascades Shutdown to the node's wire tier
+    node.srv_join.join().unwrap().unwrap();
+    node.handle.shutdown();
+    node.svc_join.join().unwrap();
+    let _ = std::fs::remove_file(&log_path);
+}
+
 /// Read everything the scrape socket sends until EOF.
 fn scrape(addr: std::net::SocketAddr) -> String {
     let mut s = TcpStream::connect(addr).unwrap();

@@ -14,35 +14,49 @@ pub use std::sync::{Arc, Mutex};
 const GOOD_FRAME: &str = "
 mod op {
     pub(super) const PING: u8 = 1;
+    pub(super) const ANN_PARTIAL: u8 = 12;
     pub(super) const R_PONG: u8 = 128;
+    pub(super) const R_ANN_PARTIAL: u8 = 137;
 }
 
 pub enum Request {
     Ping,
+    AnnPartial,
 }
 
 pub enum Response {
     Pong,
+    AnnPartials,
 }
 
 pub fn encode(req: &Request) -> u8 {
     match req {
         Request::Ping => op::PING,
+        Request::AnnPartial => op::ANN_PARTIAL,
     }
 }
 
 pub fn decode(byte: u8) -> Option<Request> {
-    (byte == op::PING).then_some(Request::Ping)
+    match byte {
+        op::PING => Some(Request::Ping),
+        op::ANN_PARTIAL => Some(Request::AnnPartial),
+        _ => None,
+    }
 }
 
 pub fn encode_resp(resp: &Response) -> u8 {
     match resp {
         Response::Pong => op::R_PONG,
+        Response::AnnPartials => op::R_ANN_PARTIAL,
     }
 }
 
 pub fn decode_resp(byte: u8) -> Option<Response> {
-    (byte == op::R_PONG).then_some(Response::Pong)
+    match byte {
+        op::R_PONG => Some(Response::Pong),
+        op::R_ANN_PARTIAL => Some(Response::AnnPartials),
+        _ => None,
+    }
 }
 ";
 
@@ -50,6 +64,7 @@ const GOOD_SERVER: &str = "
 pub fn dispatch(req: super::frame::Request) {
     match req {
         super::frame::Request::Ping => {}
+        super::frame::Request::AnnPartial => {}
     }
 }
 
@@ -77,15 +92,19 @@ impl Counters {
 ";
 
 /// `Ghost` has no encode arm, no decode constructor, and no dispatch
-/// arm; `ORPHAN` is a dead opcode byte.
+/// arm; `ORPHAN` is a dead opcode byte; `AnnPartial` is the v5 trap —
+/// fully wired through encode AND decode but never dispatched, the
+/// exact drift mode a new partial op introduces.
 const BAD_FRAME: &str = "
 mod op {
     pub(super) const PING: u8 = 1;
+    pub(super) const ANN_PARTIAL: u8 = 12;
     pub(super) const ORPHAN: u8 = 9;
 }
 
 pub enum Request {
     Ping,
+    AnnPartial,
     Ghost,
 }
 
@@ -96,12 +115,17 @@ pub enum Response {
 pub fn encode(req: &Request) -> u8 {
     match req {
         Request::Ping => op::PING,
+        Request::AnnPartial => op::ANN_PARTIAL,
         _ => 0,
     }
 }
 
 pub fn decode(byte: u8) -> Option<Request> {
-    (byte == op::PING).then_some(Request::Ping)
+    match byte {
+        op::PING => Some(Request::Ping),
+        op::ANN_PARTIAL => Some(Request::AnnPartial),
+        _ => None,
+    }
 }
 
 pub fn encode_resp(resp: &Response) -> u8 {
@@ -213,7 +237,8 @@ fn check(base: &Path) -> Result<usize, String> {
         ("sync-facade", "src/ingest.rs", "std::sync"),
         ("frame-parity", "src/net/frame.rs", "ORPHAN"),
         ("frame-parity", "src/net/frame.rs", "decode constructor"),
-        ("frame-parity", "src/net/frame.rs", "dispatch"),
+        ("frame-parity", "src/net/frame.rs", "`Request::Ghost` has no dispatch arm"),
+        ("frame-parity", "src/net/frame.rs", "`Request::AnnPartial` has no dispatch arm"),
         ("relaxed-allowlist", "src/stats.rs", "sneaky"),
         ("no-unwrap", "src/net/server.rs", ".unwrap()"),
         ("no-unwrap", "src/durability/io.rs", ".expect("),
