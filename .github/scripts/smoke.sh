@@ -11,6 +11,7 @@
 #   smoke.sh chaos       kill -9 mid-ingest x3 rounds, recover every time
 #   smoke.sh metrics     query load, then scrape + Metrics op: key series nonzero
 #   smoke.sh route       2 nodes behind `route`: ANN checksum == single process
+#   smoke.sh tenants     2 collections in 1 process == 2 single-tenant twins
 #
 # Run from the rust/ directory (or set BIN). Fails fast; server logs are
 # dumped on any boot failure.
@@ -218,6 +219,77 @@ smoke_route() {
   grep -q 'shutdown complete' "$l1"
 }
 
+# Multi-tenant smoke (protocol v6): two named collections with different
+# dims hosted in ONE process must answer the SAME seeded query loads
+# with the SAME order-independent ANN checksums as two isolated
+# single-tenant servers whose geometry matches the collection specs
+# (dim/shards/n_max/eta from the spec; everything else defaults) — and
+# the loads run INTERLEAVED, two concurrent clients against the one
+# process, so cross-tenant bleed would show up as a checksum mismatch.
+# One client Shutdown tears the whole registry down cleanly.
+smoke_tenants() {
+  # Twin A: the `alpha` collection's geometry as a standalone process.
+  local want_a want_b
+  serve_bg tenants_twin_a --dim 16 --n 60000 --shards 4 --eta 0.0
+  "$BIN" client --connect "$ADDR" --query-load --seed 501 \
+    --n 3000 --queries 512 --batch 1 --connections 2 --shutdown \
+    | tee "$TMP/client_tenants_twin_a.log"
+  grep -E 'ann: answered [1-9][0-9]*/512' "$TMP/client_tenants_twin_a.log"
+  want_a=$(grep -oE 'ann checksum=[0-9a-f]+' "$TMP/client_tenants_twin_a.log")
+  await_clean_shutdown
+
+  # Twin B: the `beta` collection's geometry (different dim).
+  serve_bg tenants_twin_b --dim 8 --n 60000 --shards 4 --eta 0.0
+  "$BIN" client --connect "$ADDR" --query-load --seed 502 \
+    --n 3000 --queries 512 --batch 1 --connections 2 --shutdown \
+    | tee "$TMP/client_tenants_twin_b.log"
+  grep -E 'ann: answered [1-9][0-9]*/512' "$TMP/client_tenants_twin_b.log"
+  want_b=$(grep -oE 'ann checksum=[0-9a-f]+' "$TMP/client_tenants_twin_b.log")
+  await_clean_shutdown
+
+  # One process: a 2-shard default tenant (deliberately different
+  # geometry) plus alpha and beta boot-created at the twins' specs.
+  serve_bg tenants_multi --dim 16 --n 50000 --shards 2 \
+    --collections alpha:16:60000:0.0,beta:8:60000:0.0
+  grep -E 'collection alpha id=1 dim=16 n_max=60000' "$SERVE_LOG"
+  grep -E 'collection beta id=2 dim=8 n_max=60000' "$SERVE_LOG"
+
+  # Interleaved per-tenant load: both clients run concurrently.
+  local apid bpid
+  "$BIN" client --connect "$ADDR" --query-load --collection alpha \
+    --seed 501 --n 3000 --queries 512 --batch 1 --connections 2 \
+    > "$TMP/client_tenants_alpha.log" 2>&1 &
+  apid=$!
+  "$BIN" client --connect "$ADDR" --query-load --collection beta \
+    --seed 502 --n 3000 --queries 512 --batch 1 --connections 2 \
+    > "$TMP/client_tenants_beta.log" 2>&1 &
+  bpid=$!
+  wait "$apid" || { cat "$TMP/client_tenants_alpha.log"; exit 1; }
+  wait "$bpid" || { cat "$TMP/client_tenants_beta.log"; exit 1; }
+  cat "$TMP/client_tenants_alpha.log" "$TMP/client_tenants_beta.log"
+  grep -E 'ann: answered [1-9][0-9]*/512' "$TMP/client_tenants_alpha.log"
+  grep -E 'ann: answered [1-9][0-9]*/512' "$TMP/client_tenants_beta.log"
+  local got_a got_b
+  got_a=$(grep -oE 'ann checksum=[0-9a-f]+' "$TMP/client_tenants_alpha.log")
+  got_b=$(grep -oE 'ann checksum=[0-9a-f]+' "$TMP/client_tenants_beta.log")
+
+  echo "alpha: twin ${want_a} | hosted ${got_a}"
+  echo "beta:  twin ${want_b} | hosted ${got_b}"
+  if [ "$want_a" != "$got_a" ] || [ -z "$want_a" ]; then
+    echo "::error::collection alpha diverged from its single-tenant twin"
+    exit 1
+  fi
+  if [ "$want_b" != "$got_b" ] || [ -z "$want_b" ]; then
+    echo "::error::collection beta diverged from its single-tenant twin"
+    exit 1
+  fi
+
+  # One Shutdown: the registry (default + alpha + beta) drains cleanly.
+  "$BIN" client --connect "$ADDR" --n 1 --queries 1 --batch 1 --shutdown \
+    > "$TMP/client_tenants_shutdown.log"
+  await_clean_shutdown
+}
+
 # scrape MADDR OUT — fetch the Prometheus text body from the metrics
 # endpoint, via curl when available, else bash's /dev/tcp.
 scrape() {
@@ -284,8 +356,9 @@ case "${1:-}" in
   chaos)      smoke_chaos ;;
   metrics)    smoke_metrics ;;
   route)      smoke_route ;;
+  tenants)    smoke_tenants ;;
   *)
-    echo "usage: smoke.sh wire|qplane|replica|durability|chaos|metrics|route" >&2
+    echo "usage: smoke.sh wire|qplane|replica|durability|chaos|metrics|route|tenants" >&2
     exit 2
     ;;
 esac

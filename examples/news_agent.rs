@@ -59,17 +59,26 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
 
-    let mut cfg = ServiceConfig::default_for(dim, n);
-    cfg.shards = args.get_usize("shards", 4)?;
-    cfg.ann.eta = args.get_f64("eta", 0.35)?;
-    cfg.ann.r = 0.6; // L2 radius on the unit sphere (theta ~ 35 deg)
-    cfg.ann.c = 2.0;
-    cfg.ann.w = 2.4;
-    cfg.kde.kernel = KdeKernel::Angular;
-    cfg.kde.rows = 64;
-    cfg.kde.p = 4;
-    cfg.kde.window = window;
-    cfg.use_pjrt = use_pjrt;
+    // Geometry tuned for unit-sphere embeddings; built (and validated)
+    // through the builder, so a bad flag combination is a typed
+    // ConfigError here instead of a panic mid-stream.
+    let defaults = ServiceConfig::default_for(dim, n);
+    let mut ann = defaults.ann;
+    ann.r = 0.6; // L2 radius on the unit sphere (theta ~ 35 deg)
+    ann.c = 2.0;
+    ann.w = 2.4;
+    let mut kde = defaults.kde;
+    kde.kernel = KdeKernel::Angular;
+    kde.rows = 64;
+    kde.p = 4;
+    let cfg = ServiceConfig::builder(dim, n)
+        .shards(args.get_usize("shards", 4)?)
+        .ann(ann)
+        .eta(args.get_f64("eta", 0.35)?)
+        .kde(kde)
+        .window(window)
+        .use_pjrt(use_pjrt)
+        .build()?;
     println!(
         "dim={dim} n={n} shards={} eta={} window={window} pjrt={use_pjrt}",
         cfg.shards, cfg.ann.eta

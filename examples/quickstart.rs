@@ -1,9 +1,11 @@
-//! Quickstart: the two sketches in ~60 lines.
+//! Quickstart: the two sketches — and the sharded service over them —
+//! in ~80 lines.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
+use sublinear_sketch::coordinator::{ServiceConfig, SketchService};
 use sublinear_sketch::lsh::srp::SrpLsh;
 use sublinear_sketch::sketch::ann::{SAnn, SAnnConfig};
 use sublinear_sketch::sketch::SwAkde;
@@ -81,4 +83,29 @@ fn main() {
         kde.occupied_cells(),
         (1000 * dim * 4) as f64 / 1024.0,
     );
+
+    // ------------------------------------------------------- the service
+    // Both sketches behind one thread-per-shard coordinator. Configs are
+    // built (and validated) through the builder: an invalid combination
+    // — zero shards, eta outside [0,1], a checkpoint cadence with no
+    // data_dir — is a typed ConfigError here, not a panic at serve time.
+    // (Over the wire, one process hosts many such services as named
+    // collections; see examples/remote_client.rs.)
+    let cfg = ServiceConfig::builder(dim, 20_000)
+        .shards(2)
+        .eta(0.4)
+        .window(1_000)
+        .build()
+        .expect("valid service config");
+    let mut svc = SketchService::start(cfg).expect("service starts");
+    svc.insert_batch(stream.clone());
+    svc.flush().expect("flush");
+    let stats = svc.stats();
+    println!(
+        "service: {} inserts across 2 shards, {} stored, sketch {:.1} KiB",
+        stats.inserts,
+        stats.stored_points,
+        stats.sketch_bytes as f64 / 1024.0,
+    );
+    svc.shutdown();
 }

@@ -1,37 +1,48 @@
-//! Remote serving in ~50 lines: boot a wire server in-process, then talk
-//! to it over real TCP exactly like a network client would. (Like the
-//! other files in this directory, this is a reference listing outside the
-//! Cargo package — the same flow is compiled and executed end-to-end by
-//! `rust/tests/net_wire.rs` and the `sketchd serve/client` CLI.)
+//! Remote serving in ~60 lines: boot a multi-tenant wire server
+//! in-process, then talk to it over real TCP exactly like a network
+//! client would. (Like the other files in this directory, this is a
+//! reference listing outside the Cargo package — the same flow is
+//! compiled and executed end-to-end by `rust/tests/net_wire.rs`,
+//! `rust/tests/multi_tenant.rs`, and the `sketchd serve/client` CLI.)
 //!
 //! In production the two halves live in different processes (or hosts),
 //! and `--data-dir` makes the server durable — a crash (`kill -9`
-//! included) recovers checkpoint + WAL instead of replaying the stream:
+//! included) recovers checkpoint + WAL instead of replaying the stream,
+//! including every named collection recorded in the manifest:
 //!
 //! ```bash
 //! sketchd serve --listen 0.0.0.0:7171 --dim 16 \
-//!               --data-dir /var/lib/sketchd --checkpoint-every 100000
-//! sketchd client --connect host:7171 --n 100000 --checkpoint
+//!               --data-dir /var/lib/sketchd --checkpoint-every 100000 \
+//!               --collections news:16,turnstile:8
+//! sketchd client --connect host:7171 --collection news --n 100000 --checkpoint
 //! ```
 
-use sublinear_sketch::coordinator::{ServiceConfig, SketchService};
+use sublinear_sketch::coordinator::{CollectionSpec, ServiceConfig, Tenants};
 use sublinear_sketch::net::{SketchClient, WireServer};
 use sublinear_sketch::util::rng::Rng;
+use sublinear_sketch::util::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let dim = 16;
 
     // ------------------------------------------------------- server side
-    // The service runs on its own thread (SketchService::spawn); the
-    // wire server accepts connections and feeds it through a handle.
-    let mut cfg = ServiceConfig::default_for(dim, 100_000);
-    cfg.ann.eta = 0.0; // serving default: store everything
-    // Durable serving: WAL + checkpoints under data_dir. On a restart
-    // with the same directory, spawn() recovers the sketch state instead
-    // of needing the stream again.
-    cfg.data_dir = Some(std::env::temp_dir().join("sketchd_example"));
-    let (handle, svc_join) = SketchService::spawn(cfg)?;
-    let server = WireServer::bind("127.0.0.1:0", handle.clone())?;
+    // The base config is built (and validated) through the builder:
+    // defaults < config file < explicit setters, last write wins, and
+    // an invalid combination is a typed ConfigError here instead of a
+    // panic at serve time.
+    let cfg = ServiceConfig::builder(dim, 100_000)
+        .eta(0.0) // serving default: store everything
+        // Durable serving: WAL + checkpoints under data_dir. On a
+        // restart with the same directory, the registry recovers every
+        // collection instead of needing the streams again.
+        .data_dir(Some(std::env::temp_dir().join("sketchd_example")))
+        .build()?;
+    // The tenant registry hosts the default collection (id 0, the base
+    // config) plus any named collections; each is a fully isolated
+    // shard set with its own metrics and its own data_dir/<name>/.
+    let tenants = Arc::new(Tenants::open(cfg)?);
+    tenants.create("news", &CollectionSpec::for_dim(dim as u32, 50_000))?;
+    let server = WireServer::bind_tenants("127.0.0.1:0", Arc::clone(&tenants))?;
     let addr = server.local_addr()?;
     let srv_join = std::thread::spawn(move || server.run());
     println!("serving on {addr}");
@@ -39,6 +50,12 @@ fn main() -> anyhow::Result<()> {
     // ------------------------------------------------------- client side
     let mut client = SketchClient::connect(addr)?;
     println!("handshake: dim={} shards={}", client.dim(), client.shards());
+    for info in client.list_collections()? {
+        println!("collection {} (id {}, dim {})", info.name, info.id, info.dim);
+    }
+
+    // A collection handle carries the id; per-tenant ops read naturally.
+    let mut news = client.collection("news")?;
 
     // Stream a clustered dataset over the wire in batches.
     let mut rng = Rng::new(7);
@@ -48,25 +65,25 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let mut accepted = 0;
     for chunk in pts.chunks(64) {
-        accepted += client.insert_batch(chunk)?;
+        accepted += news.insert_batch(chunk)?;
     }
-    client.flush()?; // barrier: everything above is applied
+    news.flush()?; // barrier: everything above is applied
     println!("accepted {accepted}/{} points", pts.len());
 
     // Batched ANN + sliding-window KDE, answered by the remote sketches.
     let queries = &pts[..8];
-    for (i, ans) in client.ann_query(queries)?.iter().enumerate() {
+    for (i, ans) in news.ann(queries)?.iter().enumerate() {
         match ans {
             Some(a) => println!("q{i}: shard {} id {} dist {:.4}", a.shard, a.id, a.dist),
             None => println!("q{i}: no r-near neighbor"),
         }
     }
-    let (sums, densities) = client.kde_query(queries)?;
+    let (sums, densities) = news.kde(queries)?;
     println!("kde sums[0]={:.2} density[0]={:.4}", sums[0], densities[0]);
 
-    let st = client.stats()?;
+    let st = news.stats()?;
     println!(
-        "server: inserts={} stored={} shed={} sketch={:.2}MB",
+        "news: inserts={} stored={} shed={} sketch={:.2}MB",
         st.inserts,
         st.stored_points,
         st.shed,
@@ -75,14 +92,25 @@ fn main() -> anyhow::Result<()> {
 
     // Cut a durable checkpoint over the wire: after this, a server crash
     // recovers everything above from data_dir (checkpoint + WAL replay).
-    let covered = client.checkpoint()?;
+    let covered = news.checkpoint()?;
     println!("checkpoint cut, covering {covered} points");
+
+    // ------------------------------------------- legacy (v5-era) client
+    // The flat methods still compile for one release — deprecated shims
+    // that address the DEFAULT collection (id 0), exactly what a v5
+    // client's frames decode to. New code should use collection handles.
+    #[allow(deprecated)]
+    {
+        client.insert_batch(&pts[..64])?;
+        client.flush()?;
+        let st = client.stats()?;
+        println!("default collection (legacy API): inserts={}", st.inserts);
+    }
 
     // ------------------------------------------------------- teardown
     client.shutdown_server()?;
     drop(client);
     srv_join.join().unwrap()?;
-    handle.shutdown();
-    svc_join.join().unwrap();
+    tenants.shutdown();
     Ok(())
 }

@@ -95,6 +95,57 @@ impl Args {
             .cloned()
             .unwrap_or_else(|| default.to_string())
     }
+
+    /// Hard-error on any flag/switch not in `known`. The old behavior —
+    /// silently ignoring a typo like `--replica 2` and serving with the
+    /// default — cost real debugging time; an unknown flag now fails
+    /// fast with a "did you mean" hint when a known flag is close.
+    pub fn validate_known(&self, known: &[&str]) -> anyhow::Result<()> {
+        for name in self
+            .flags
+            .keys()
+            .map(String::as_str)
+            .chain(self.switches.iter().map(String::as_str))
+        {
+            if known.contains(&name) {
+                continue;
+            }
+            let hint = closest_flag(name, known)
+                .map(|k| format!(" (did you mean --{k}?)"))
+                .unwrap_or_default();
+            anyhow::bail!("unknown flag --{name}{hint}");
+        }
+        Ok(())
+    }
+}
+
+/// The known flag closest to `name` by edit distance, when close enough
+/// to plausibly be a typo (distance ≤ 2, or ≤ 3 for long names).
+fn closest_flag<'a>(name: &str, known: &[&'a str]) -> Option<&'a str> {
+    let cap = if name.len() >= 8 { 3 } else { 2 };
+    known
+        .iter()
+        .map(|k| (edit_distance(name, k), *k))
+        .filter(|&(d, _)| d <= cap)
+        .min_by_key(|&(d, _)| d)
+        .map(|(_, k)| k)
+}
+
+/// Levenshtein distance, O(|a|·|b|) with a rolling row — flag names are
+/// short, so no banding needed.
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for (i, ca) in a.iter().enumerate() {
+        let mut row = vec![i + 1];
+        for (j, cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            row.push(sub.min(prev[j + 1] + 1).min(row[j] + 1));
+        }
+        prev = row;
+    }
+    prev[b.len()]
 }
 
 #[cfg(test)]
@@ -157,5 +208,34 @@ mod tests {
         let a = parse("s --verbose --n 3");
         assert!(a.has("verbose"));
         assert_eq!(a.get_usize("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn unknown_flag_is_a_hard_error_with_a_hint() {
+        // The motivating bug: `--replica 2` (singular) was silently
+        // ignored and the server ran with the default replica count.
+        let a = parse("serve --listen 127.0.0.1:0 --replica 2");
+        let err = a.validate_known(&["listen", "replicas", "shards"]).unwrap_err().to_string();
+        assert!(err.contains("--replica"), "{err}");
+        assert!(err.contains("did you mean --replicas"), "{err}");
+        // Switches are validated too, not just valued flags.
+        let a = parse("serve --use-pjtr");
+        let err = a.validate_known(&["use-pjrt"]).unwrap_err().to_string();
+        assert!(err.contains("did you mean --use-pjrt"), "{err}");
+        // Valid invocations pass.
+        let a = parse("serve --listen 127.0.0.1:0 --replicas 2");
+        a.validate_known(&["listen", "replicas"]).unwrap();
+        // Nothing close: no misleading hint.
+        let a = parse("serve --zzzzzzz 1");
+        let err = a.validate_known(&["listen", "replicas"]).unwrap_err().to_string();
+        assert!(!err.contains("did you mean"), "{err}");
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("replica", "replicas"), 1);
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+        assert_eq!(edit_distance("same", "same"), 0);
     }
 }

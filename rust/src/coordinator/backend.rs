@@ -37,6 +37,7 @@ use super::health::HealthBoard;
 use super::protocol::{QueryBatch, ServiceStats, ShardAnnResult, ShardKdeResult};
 use super::replica::{ReadGuard, ReplicaSet};
 use super::shard::ShardCmd;
+use super::tenants::{CollectionInfo, CollectionSpec};
 
 /// Fate of one offered ingest chunk, point-denominated. Unlike the
 /// mailbox-level [`OfferOutcome`] this can report a PARTIAL accept: a
@@ -83,6 +84,13 @@ impl<T> Pending<T> {
 
 /// One topology-aware member of the query/ingest fan-out. Everything
 /// above this trait (plane, handle, merge) is topology-blind.
+///
+/// Every data-plane method carries the COLLECTION id first (protocol
+/// v6): a [`LocalBackend`] ignores it — its shard mailboxes belong to
+/// exactly one collection's service, resolved before the call — while a
+/// [`RemoteBackend`] forwards it over the wire, so a routed front-end
+/// addresses the right tenant on every member node. Collection 0 is the
+/// default collection (the only one v5 frames can name).
 pub trait ShardBackend: Send + Sync {
     /// Human name used in degradation errors: `"shard 2"` for a local
     /// backend, `"node HOST:PORT"` for a remote one.
@@ -94,17 +102,28 @@ pub trait ShardBackend: Send + Sync {
     /// Health of each served shard (`ShardHealth as u8`), length
     /// [`Self::shards`].
     fn health(&self) -> Vec<u8>;
-    /// Scatter an ANN batch; `None` iff the backend is unreachable
-    /// (dead mailboxes / worker pool gone).
-    fn scatter_ann(&self, batch: &QueryBatch, trace: u64) -> Option<Pending<ShardAnnResult>>;
+    /// Scatter an ANN batch into collection `coll`; `None` iff the
+    /// backend is unreachable (dead mailboxes / worker pool gone).
+    fn scatter_ann(
+        &self,
+        coll: u32,
+        batch: &QueryBatch,
+        trace: u64,
+    ) -> Option<Pending<ShardAnnResult>>;
     /// Scatter a KDE batch; same contract as [`Self::scatter_ann`].
-    fn scatter_kde(&self, batch: &QueryBatch, trace: u64) -> Option<Pending<ShardKdeResult>>;
+    fn scatter_kde(
+        &self,
+        coll: u32,
+        batch: &QueryBatch,
+        trace: u64,
+    ) -> Option<Pending<ShardKdeResult>>;
     /// Offer one pre-routed ingest chunk (every point in it belongs to
-    /// this backend). Blocking, point-denominated accounting.
-    fn offer(&self, chunk: Vec<Vec<f32>>) -> IngestOutcome;
-    /// Turnstile delete of one pre-routed point. `None` = unreachable,
-    /// `Some(removed)` = acknowledged.
-    fn delete(&self, x: Vec<f32>) -> Option<bool>;
+    /// this backend) to collection `coll`. Blocking, point-denominated
+    /// accounting.
+    fn offer(&self, coll: u32, chunk: Vec<Vec<f32>>) -> IngestOutcome;
+    /// Turnstile delete of one pre-routed point from collection `coll`.
+    /// `None` = unreachable, `Some(removed)` = acknowledged.
+    fn delete(&self, coll: u32, x: Vec<f32>) -> Option<bool>;
 }
 
 /// One in-process shard (its replica set), behind the trait. `index` is
@@ -159,19 +178,31 @@ impl ShardBackend for LocalBackend {
         }
     }
 
-    fn scatter_ann(&self, batch: &QueryBatch, _trace: u64) -> Option<Pending<ShardAnnResult>> {
+    // The collection id is resolved to a service (and thus to these
+    // mailboxes) BEFORE the scatter, so local backends ignore it.
+    fn scatter_ann(
+        &self,
+        _coll: u32,
+        batch: &QueryBatch,
+        _trace: u64,
+    ) -> Option<Pending<ShardAnnResult>> {
         let (rtx, rrx) = channel();
         let guard = self.set.read(ShardCmd::AnnBatch(Arc::clone(batch), rtx))?;
         Some(Pending::Local { rx: rrx, guard })
     }
 
-    fn scatter_kde(&self, batch: &QueryBatch, _trace: u64) -> Option<Pending<ShardKdeResult>> {
+    fn scatter_kde(
+        &self,
+        _coll: u32,
+        batch: &QueryBatch,
+        _trace: u64,
+    ) -> Option<Pending<ShardKdeResult>> {
         let (rtx, rrx) = channel();
         let guard = self.set.read(ShardCmd::KdeBatch(Arc::clone(batch), rtx))?;
         Some(Pending::Local { rx: rrx, guard })
     }
 
-    fn offer(&self, mut chunk: Vec<Vec<f32>>) -> IngestOutcome {
+    fn offer(&self, _coll: u32, mut chunk: Vec<Vec<f32>>) -> IngestOutcome {
         let m = chunk.len();
         // A singleton chunk ships as the same `Insert` command it always
         // did (single inserts and 1-point batch chunks build identical
@@ -189,7 +220,7 @@ impl ShardBackend for LocalBackend {
         }
     }
 
-    fn delete(&self, x: Vec<f32>) -> Option<bool> {
+    fn delete(&self, _coll: u32, x: Vec<f32>) -> Option<bool> {
         self.set.delete(x)
     }
 }
@@ -216,16 +247,21 @@ pub fn local_backends(
 }
 
 /// A worker-pool request to one remote node. Queries carry the trace id
-/// across the hop (protocol v5) so both tiers' stage histograms and
-/// slow-query logs correlate on one id.
+/// across the hop so both tiers' stage histograms and slow-query logs
+/// correlate on one id; every collection-scoped op carries the
+/// collection id (protocol v6) so a routed front-end addresses the
+/// right tenant on the node.
 enum Job {
-    Ann(QueryBatch, u64, Sender<Result<Vec<ShardAnnResult>, String>>),
-    Kde(QueryBatch, u64, Sender<Result<Vec<ShardKdeResult>, String>>),
-    Insert(Vec<Vec<f32>>, Sender<Result<u64, String>>),
-    Delete(Vec<f32>, Sender<Result<bool, String>>),
-    Stats(Sender<Result<ServiceStats, String>>),
-    Flush(Sender<Result<(), String>>),
-    Checkpoint(Sender<Result<u64, String>>),
+    Ann(u32, QueryBatch, u64, Sender<Result<Vec<ShardAnnResult>, String>>),
+    Kde(u32, QueryBatch, u64, Sender<Result<Vec<ShardKdeResult>, String>>),
+    Insert(u32, Vec<Vec<f32>>, Sender<Result<u64, String>>),
+    Delete(u32, Vec<f32>, Sender<Result<bool, String>>),
+    Stats(u32, Sender<Result<ServiceStats, String>>),
+    Flush(u32, Sender<Result<(), String>>),
+    Checkpoint(u32, Sender<Result<u64, String>>),
+    CreateCollection(String, CollectionSpec, Sender<Result<CollectionInfo, String>>),
+    DropCollection(String, Sender<Result<(), String>>),
+    ListCollections(Sender<Result<Vec<CollectionInfo>, String>>),
     ShutdownNode(Sender<Result<(), String>>),
 }
 
@@ -298,19 +334,43 @@ impl RemoteBackend {
             .map_err(|_| format!("node {} died mid-call", self.addr))?
     }
 
-    /// The node's own aggregate stats (its counters, its shards).
-    pub fn stats(&self) -> Result<ServiceStats, String> {
-        self.call_node(Job::Stats)
+    /// The node's own aggregate stats for one collection (its counters,
+    /// its shards).
+    pub fn stats(&self, coll: u32) -> Result<ServiceStats, String> {
+        self.call_node(|tx| Job::Stats(coll, tx))
     }
 
-    /// Flush barrier on the node.
-    pub fn flush(&self) -> Result<(), String> {
-        self.call_node(Job::Flush)
+    /// Flush barrier for one collection on the node.
+    pub fn flush(&self, coll: u32) -> Result<(), String> {
+        self.call_node(|tx| Job::Flush(coll, tx))
     }
 
-    /// Cut a checkpoint on the node; returns covered points.
-    pub fn checkpoint(&self) -> Result<u64, String> {
-        self.call_node(Job::Checkpoint)
+    /// Cut a checkpoint of one collection on the node; returns covered
+    /// points.
+    pub fn checkpoint(&self, coll: u32) -> Result<u64, String> {
+        self.call_node(|tx| Job::Checkpoint(coll, tx))
+    }
+
+    /// Create a named collection on the node (`sketchd route` fans this
+    /// out so every member hosts every collection).
+    pub fn create_collection(
+        &self,
+        name: &str,
+        spec: &CollectionSpec,
+    ) -> Result<CollectionInfo, String> {
+        let (name, spec) = (name.to_string(), spec.clone());
+        self.call_node(|tx| Job::CreateCollection(name, spec, tx))
+    }
+
+    /// Drop a named collection on the node.
+    pub fn drop_collection(&self, name: &str) -> Result<(), String> {
+        let name = name.to_string();
+        self.call_node(|tx| Job::DropCollection(name, tx))
+    }
+
+    /// The node's collection listing.
+    pub fn list_collections(&self) -> Result<Vec<CollectionInfo>, String> {
+        self.call_node(Job::ListCollections)
     }
 
     /// Ask the node's server to shut down (cascaded from `sketchd route`).
@@ -336,22 +396,32 @@ impl ShardBackend for RemoteBackend {
         self.health.clone()
     }
 
-    fn scatter_ann(&self, batch: &QueryBatch, trace: u64) -> Option<Pending<ShardAnnResult>> {
+    fn scatter_ann(
+        &self,
+        coll: u32,
+        batch: &QueryBatch,
+        trace: u64,
+    ) -> Option<Pending<ShardAnnResult>> {
         let (tx, rx) = channel();
-        self.jobs.send(Job::Ann(Arc::clone(batch), trace, tx)).ok()?;
+        self.jobs.send(Job::Ann(coll, Arc::clone(batch), trace, tx)).ok()?;
         Some(Pending::Remote { rx })
     }
 
-    fn scatter_kde(&self, batch: &QueryBatch, trace: u64) -> Option<Pending<ShardKdeResult>> {
+    fn scatter_kde(
+        &self,
+        coll: u32,
+        batch: &QueryBatch,
+        trace: u64,
+    ) -> Option<Pending<ShardKdeResult>> {
         let (tx, rx) = channel();
-        self.jobs.send(Job::Kde(Arc::clone(batch), trace, tx)).ok()?;
+        self.jobs.send(Job::Kde(coll, Arc::clone(batch), trace, tx)).ok()?;
         Some(Pending::Remote { rx })
     }
 
-    fn offer(&self, chunk: Vec<Vec<f32>>) -> IngestOutcome {
+    fn offer(&self, coll: u32, chunk: Vec<Vec<f32>>) -> IngestOutcome {
         let m = chunk.len();
         let (tx, rx) = channel();
-        if self.jobs.send(Job::Insert(chunk, tx)).is_err() {
+        if self.jobs.send(Job::Insert(coll, chunk, tx)).is_err() {
             return IngestOutcome::Disconnected;
         }
         match rx.recv() {
@@ -371,8 +441,8 @@ impl ShardBackend for RemoteBackend {
         }
     }
 
-    fn delete(&self, x: Vec<f32>) -> Option<bool> {
-        self.call_node(|tx| Job::Delete(x, tx)).ok()
+    fn delete(&self, coll: u32, x: Vec<f32>) -> Option<bool> {
+        self.call_node(|tx| Job::Delete(coll, x, tx)).ok()
     }
 }
 
@@ -387,32 +457,48 @@ fn worker(addr: &str, opts: &ClientOptions, jobs: &Mutex<Receiver<Job>>) {
             Err(_) => break, // backend dropped: pool drains and exits
         };
         match job {
-            Job::Ann(batch, trace, reply) => {
-                let res = with_client(addr, opts, &mut client, |c| c.ann_partial(&batch, trace));
+            Job::Ann(coll, batch, trace, reply) => {
+                let res =
+                    with_client(addr, opts, &mut client, |c| c.ann_partial(coll, &batch, trace));
                 let _ = reply.send(res);
             }
-            Job::Kde(batch, trace, reply) => {
-                let res = with_client(addr, opts, &mut client, |c| c.kde_partial(&batch, trace));
+            Job::Kde(coll, batch, trace, reply) => {
+                let res =
+                    with_client(addr, opts, &mut client, |c| c.kde_partial(coll, &batch, trace));
                 let _ = reply.send(res);
             }
-            Job::Insert(chunk, reply) => {
-                let res = with_client(addr, opts, &mut client, |c| c.insert_batch(&chunk));
+            Job::Insert(coll, chunk, reply) => {
+                let res =
+                    with_client(addr, opts, &mut client, |c| c.insert_batch_in(coll, &chunk));
                 let _ = reply.send(res);
             }
-            Job::Delete(x, reply) => {
-                let res = with_client(addr, opts, &mut client, |c| c.delete(&x));
+            Job::Delete(coll, x, reply) => {
+                let res = with_client(addr, opts, &mut client, |c| c.delete_in(coll, &x));
                 let _ = reply.send(res);
             }
-            Job::Stats(reply) => {
-                let res = with_client(addr, opts, &mut client, SketchClient::stats);
+            Job::Stats(coll, reply) => {
+                let res = with_client(addr, opts, &mut client, |c| c.stats_in(coll));
                 let _ = reply.send(res);
             }
-            Job::Flush(reply) => {
-                let res = with_client(addr, opts, &mut client, SketchClient::flush);
+            Job::Flush(coll, reply) => {
+                let res = with_client(addr, opts, &mut client, |c| c.flush_in(coll));
                 let _ = reply.send(res);
             }
-            Job::Checkpoint(reply) => {
-                let res = with_client(addr, opts, &mut client, SketchClient::checkpoint);
+            Job::Checkpoint(coll, reply) => {
+                let res = with_client(addr, opts, &mut client, |c| c.checkpoint_in(coll));
+                let _ = reply.send(res);
+            }
+            Job::CreateCollection(name, spec, reply) => {
+                let res =
+                    with_client(addr, opts, &mut client, |c| c.create_collection(&name, &spec));
+                let _ = reply.send(res);
+            }
+            Job::DropCollection(name, reply) => {
+                let res = with_client(addr, opts, &mut client, |c| c.drop_collection(&name));
+                let _ = reply.send(res);
+            }
+            Job::ListCollections(reply) => {
+                let res = with_client(addr, opts, &mut client, SketchClient::list_collections);
                 let _ = reply.send(res);
             }
             Job::ShutdownNode(reply) => {
@@ -494,10 +580,10 @@ mod tests {
         assert_eq!(be.name(), "shard 3");
         assert_eq!(be.shards(), 1);
         let batch: QueryBatch = Arc::new(vec![vec![0.0; 4], vec![1.0; 4]]);
-        let parts = be.scatter_ann(&batch, 0).unwrap().collect(&be.name()).unwrap();
+        let parts = be.scatter_ann(0, &batch, 0).unwrap().collect(&be.name()).unwrap();
         assert_eq!(parts.len(), 1);
         assert_eq!(parts[0].best, vec![None, None]);
-        let parts = be.scatter_kde(&batch, 7).unwrap().collect(&be.name()).unwrap();
+        let parts = be.scatter_kde(0, &batch, 7).unwrap().collect(&be.name()).unwrap();
         assert_eq!(parts[0].kernel_sums, vec![1.0, 1.0]);
         assert_eq!(set.depths(), vec![0], "guards released after collect");
         assert!(tx.force(ShardCmd::Shutdown));
@@ -510,10 +596,10 @@ mod tests {
         drop(rx);
         let be = LocalBackend::new(1, ReplicaSet::new(vec![tx]));
         let batch: QueryBatch = Arc::new(vec![vec![0.0; 4]]);
-        assert!(be.scatter_ann(&batch, 0).is_none());
-        assert!(be.scatter_kde(&batch, 0).is_none());
-        assert_eq!(be.offer(vec![vec![0.0; 4]]), IngestOutcome::Disconnected);
-        assert!(be.delete(vec![0.0; 4]).is_none());
+        assert!(be.scatter_ann(0, &batch, 0).is_none());
+        assert!(be.scatter_kde(0, &batch, 0).is_none());
+        assert_eq!(be.offer(0, vec![vec![0.0; 4]]), IngestOutcome::Disconnected);
+        assert!(be.delete(0, vec![0.0; 4]).is_none());
     }
 
     #[test]
@@ -532,7 +618,7 @@ mod tests {
         });
         let be = LocalBackend::new(0, ReplicaSet::new(vec![tx.clone()]));
         let batch: QueryBatch = Arc::new(vec![vec![0.0; 4]]);
-        let err = be.scatter_ann(&batch, 0).unwrap().collect(&be.name()).unwrap_err();
+        let err = be.scatter_ann(0, &batch, 0).unwrap().collect(&be.name()).unwrap_err();
         assert!(err.contains("shard 0 died mid-query"), "{err}");
         assert!(tx.force(ShardCmd::Shutdown));
         j.join().unwrap();
@@ -551,7 +637,7 @@ mod tests {
         assert_eq!(be.replicas(), 2);
         let batch: QueryBatch = Arc::new(vec![vec![0.0; 4]]);
         for _ in 0..4 {
-            let parts = be.scatter_ann(&batch, 0).unwrap().collect(&be.name()).unwrap();
+            let parts = be.scatter_ann(0, &batch, 0).unwrap().collect(&be.name()).unwrap();
             assert_eq!(parts[0].best, vec![None]);
         }
         assert_eq!(set.reads_served(), vec![2, 2], "reads alternate on ties");
@@ -568,11 +654,11 @@ mod tests {
         let j = fake_shard(rx);
         let be = LocalBackend::new(0, ReplicaSet::new(vec![tx.clone()]));
         assert_eq!(
-            be.offer(vec![vec![0.0; 4]; 3]),
+            be.offer(0, vec![vec![0.0; 4]; 3]),
             IngestOutcome::Accepted { accepted: 3, shed: 0 }
         );
         assert_eq!(
-            be.offer(vec![vec![0.0; 4]]),
+            be.offer(0, vec![vec![0.0; 4]]),
             IngestOutcome::Accepted { accepted: 1, shed: 0 }
         );
         assert!(tx.force(ShardCmd::Shutdown));

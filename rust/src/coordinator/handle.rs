@@ -339,15 +339,24 @@ impl ServiceHandle {
         self.bases.partition_point(|&b| b <= g).saturating_sub(1)
     }
 
-    /// Offer one stream element under the overload policy. Returns false
-    /// if it was not delivered. Only a genuine shed (queue full) counts
-    /// toward the shed statistic — a disconnected backend (service
-    /// shutting down, node gone) fails the offer and rolls back its
-    /// insert count instead of inventing overload.
+    /// Offer one stream element to the DEFAULT collection — see
+    /// [`Self::insert_in`].
     pub fn insert(&self, x: Vec<f32>) -> bool {
+        self.insert_in(0, x)
+    }
+
+    /// Offer one stream element of collection `coll` under the overload
+    /// policy. Returns false if it was not delivered. Only a genuine
+    /// shed (queue full) counts toward the shed statistic — a
+    /// disconnected backend (service shutting down, node gone) fails the
+    /// offer and rolls back its insert count instead of inventing
+    /// overload. On a single-service handle the collection was resolved
+    /// BEFORE this call (local backends ignore the id); on a router it
+    /// crosses the wire to the member nodes.
+    pub fn insert_in(&self, coll: u32, x: Vec<f32>) -> bool {
         let be = &self.backends[self.backend_of(self.route(&x))];
         self.registry.inserts.add(1);
-        match be.offer(vec![x]) {
+        match be.offer(coll, vec![x]) {
             IngestOutcome::Accepted { accepted, shed } => {
                 if shed > 0 {
                     self.registry.shed(shed as u64);
@@ -361,17 +370,29 @@ impl ServiceHandle {
         }
     }
 
+    /// Batched ingest into the DEFAULT collection — see
+    /// [`Self::insert_batch_in`].
+    pub fn insert_batch(&self, batch: Vec<Vec<f32>>) -> usize {
+        self.insert_batch_in(0, batch)
+    }
+
     /// Batched ingest through [`ship_native_batch`] — the same core the
     /// service's native `insert_batch` path runs, so chunk boundaries and
     /// accounting are identical by construction. Returns accepted points.
-    pub fn insert_batch(&self, batch: Vec<Vec<f32>>) -> usize {
+    pub fn insert_batch_in(&self, coll: u32, batch: Vec<Vec<f32>>) -> usize {
         let mut per_backend: Vec<Vec<Vec<f32>>> = vec![Vec::new(); self.backends.len()];
         for x in batch {
             per_backend[self.backend_of(self.route(&x))].push(x);
         }
         ship_native_batch(&self.registry, per_backend, |s, chunk| {
-            self.backends[s].offer(chunk)
+            self.backends[s].offer(coll, chunk)
         })
+    }
+
+    /// Turnstile deletion from the DEFAULT collection — see
+    /// [`Self::delete_in`].
+    pub fn delete(&self, x: Vec<f32>) -> bool {
+        self.delete_in(0, x)
     }
 
     /// Turnstile deletion (HashVector routing only); forced past the
@@ -381,14 +402,14 @@ impl ServiceHandle {
     /// ACKNOWLEDGED: a force into a dead backend, or a shard dying before
     /// the ack, does not count — otherwise the counter drifts above the
     /// applied work and never reconciles with recovered state.
-    pub fn delete(&self, x: Vec<f32>) -> bool {
+    pub fn delete_in(&self, coll: u32, x: Vec<f32>) -> bool {
         let Some(g) = (match self.route {
             RoutePolicy::HashVector => Some(hash_vector(&x) as usize % self.shards),
             RoutePolicy::RoundRobin => None,
         }) else {
             return false;
         };
-        match self.backends[self.backend_of(g)].delete(x) {
+        match self.backends[self.backend_of(g)].delete(coll, x) {
             Some(removed) => {
                 self.registry.deletes.add(1);
                 removed
@@ -409,12 +430,13 @@ impl ServiceHandle {
             .map_err(|_| anyhow!("service thread dropped the reply"))
     }
 
-    /// Batched (c, r)-ANN. On a native service this executes the whole
-    /// scatter/collect/merge ON the calling thread via the [`QueryPlane`]
-    /// — concurrent across handles/connections, never serialized through
-    /// the owning thread. On a PJRT service the batch travels to the
-    /// owning thread, where the executor lives. Either way a dead
-    /// backend is an error, never a silently partial answer.
+    /// Batched (c, r)-ANN against the DEFAULT collection. On a native
+    /// service this executes the whole scatter/collect/merge ON the
+    /// calling thread via the [`QueryPlane`] — concurrent across
+    /// handles/connections, never serialized through the owning thread.
+    /// On a PJRT service the batch travels to the owning thread, where
+    /// the executor lives. Either way a dead backend is an error, never
+    /// a silently partial answer.
     pub fn query_batch(&self, queries: Vec<Vec<f32>>) -> Result<Vec<Option<AnnAnswer>>> {
         self.query_batch_traced(queries, 0)
     }
@@ -426,17 +448,31 @@ impl ServiceHandle {
         queries: Vec<Vec<f32>>,
         trace: u64,
     ) -> Result<Vec<Option<AnnAnswer>>> {
+        self.query_batch_traced_in(0, queries, trace)
+    }
+
+    /// [`Self::query_batch_traced`] against collection `coll`. The PJRT
+    /// re-rank path only exists behind a single-service control channel,
+    /// where the collection was resolved before this call — so the id is
+    /// only forwarded on the native plane.
+    pub fn query_batch_traced_in(
+        &self,
+        coll: u32,
+        queries: Vec<Vec<f32>>,
+        trace: u64,
+    ) -> Result<Vec<Option<AnnAnswer>>> {
         if self.use_pjrt {
             self.call(|tx| ServiceCmd::Ann(queries, tx))?
                 .map_err(|e| anyhow!("ANN query failed: {e}"))
         } else {
-            self.plane.ann_batch_traced(queries, trace)
+            self.plane.ann_batch_traced(coll, queries, trace)
         }
     }
 
-    /// Batched sliding-window KDE (kernel sums, densities), always on
-    /// the calling thread: KDE reads never touch the PJRT executor, so
-    /// even on a PJRT service they scatter straight from here.
+    /// Batched sliding-window KDE (kernel sums, densities) against the
+    /// DEFAULT collection, always on the calling thread: KDE reads never
+    /// touch the PJRT executor, so even on a PJRT service they scatter
+    /// straight from here.
     pub fn kde_batch(&self, queries: Vec<Vec<f32>>) -> Result<(Vec<f64>, Vec<f64>)> {
         self.kde_batch_traced(queries, 0)
     }
@@ -447,28 +483,41 @@ impl ServiceHandle {
         queries: Vec<Vec<f32>>,
         trace: u64,
     ) -> Result<(Vec<f64>, Vec<f64>)> {
-        self.plane.kde_batch_traced(queries, trace)
+        self.kde_batch_traced_in(0, queries, trace)
     }
 
-    /// RAW per-shard ANN partials in global shard order (the v5
+    /// [`Self::kde_batch_traced`] against collection `coll`.
+    pub fn kde_batch_traced_in(
+        &self,
+        coll: u32,
+        queries: Vec<Vec<f32>>,
+        trace: u64,
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        self.plane.kde_batch_traced(coll, queries, trace)
+    }
+
+    /// RAW per-shard ANN partials in global shard order (the wire
     /// `AnnPartial` op's spine): what a front-end merges is exactly what
     /// an in-process plane would merge. PJRT re-rank never applies here
-    /// — partials are a native-path contract.
+    /// — partials are a native-path contract. The collection id crosses
+    /// the router→node hop (protocol v6); v5 frames decode as 0.
     pub fn ann_partials(
         &self,
+        coll: u32,
         queries: Vec<Vec<f32>>,
         trace: u64,
     ) -> Result<Vec<ShardAnnResult>> {
-        self.plane.ann_partials(queries, trace)
+        self.plane.ann_partials(coll, queries, trace)
     }
 
     /// RAW per-shard KDE partials in global shard order (`KdePartial`).
     pub fn kde_partials(
         &self,
+        coll: u32,
         queries: Vec<Vec<f32>>,
         trace: u64,
     ) -> Result<Vec<ShardKdeResult>> {
-        self.plane.kde_partials(queries, trace)
+        self.plane.kde_partials(coll, queries, trace)
     }
 
     /// Aggregate statistics. Single service: drains shard mailboxes on
@@ -478,12 +527,19 @@ impl ServiceHandle {
     /// fanned ops; summing would double-count), and refreshes the
     /// router's occupancy gauges + health board from the merge.
     pub fn stats(&self) -> Result<ServiceStats> {
+        self.stats_in(0)
+    }
+
+    /// [`Self::stats`] for collection `coll` (meaningful on a router,
+    /// where the id is forwarded to every member node; a single-service
+    /// handle already IS one collection and ignores it).
+    pub fn stats_in(&self, coll: u32) -> Result<ServiceStats> {
         match &self.control {
             Control::Service(_) => self.call(ServiceCmd::Stats),
             Control::Fanout(nodes) => {
                 let mut parts = Vec::with_capacity(nodes.len());
                 for n in nodes {
-                    parts.push(n.stats().map_err(|e| anyhow!("stats failed: {e}"))?);
+                    parts.push(n.stats(coll).map_err(|e| anyhow!("stats failed: {e}"))?);
                 }
                 let mut out = ServiceStats::merged(&parts);
                 let own = ServiceStats::from_registry(&self.registry);
@@ -509,13 +565,18 @@ impl ServiceHandle {
     /// to the WAL (a sync failure surfaces here, never as a silent ack).
     /// On a router the barrier spans every member node.
     pub fn flush(&self) -> Result<()> {
+        self.flush_in(0)
+    }
+
+    /// [`Self::flush`] for collection `coll` (forwarded on a router).
+    pub fn flush_in(&self, coll: u32) -> Result<()> {
         match &self.control {
             Control::Service(_) => self
                 .call(ServiceCmd::Flush)?
                 .map_err(|e| anyhow!("flush failed: {e}")),
             Control::Fanout(nodes) => {
                 for n in nodes {
-                    n.flush().map_err(|e| anyhow!("flush failed: {e}"))?;
+                    n.flush(coll).map_err(|e| anyhow!("flush failed: {e}"))?;
                 }
                 Ok(())
             }
@@ -526,6 +587,12 @@ impl ServiceHandle {
     /// the number of points the checkpoint covers; on a router, the sum
     /// over members (each checkpoints its own durability root).
     pub fn checkpoint(&self) -> Result<u64> {
+        self.checkpoint_in(0)
+    }
+
+    /// [`Self::checkpoint`] for collection `coll` (forwarded on a
+    /// router; each member cuts the named collection's own subtree).
+    pub fn checkpoint_in(&self, coll: u32) -> Result<u64> {
         match &self.control {
             Control::Service(_) => self
                 .call(ServiceCmd::Checkpoint)?
@@ -533,11 +600,75 @@ impl ServiceHandle {
             Control::Fanout(nodes) => {
                 let mut covered = 0u64;
                 for n in nodes {
-                    covered += n.checkpoint().map_err(|e| anyhow!("checkpoint failed: {e}"))?;
+                    covered +=
+                        n.checkpoint(coll).map_err(|e| anyhow!("checkpoint failed: {e}"))?;
                 }
                 Ok(covered)
             }
         }
+    }
+
+    /// True when this handle fans out to member nodes (`sketchd route`):
+    /// the wire dispatch then forwards collection ids through this
+    /// handle instead of resolving them against a local tenant registry.
+    pub fn is_fanout(&self) -> bool {
+        matches!(self.control, Control::Fanout(_))
+    }
+
+    /// Router fan-out of `CreateCollection`: every member node must host
+    /// the collection for partials to resolve. Returns the info from the
+    /// FIRST node (ids are deterministic — every node allocates from the
+    /// same monotonic sequence over the same create order — and the
+    /// answer is validated against the rest so divergence is loud).
+    pub fn create_collection_fanout(
+        &self,
+        name: &str,
+        spec: &super::tenants::CollectionSpec,
+    ) -> Result<super::tenants::CollectionInfo> {
+        let Control::Fanout(nodes) = &self.control else {
+            bail!("create_collection_fanout is a router-only operation");
+        };
+        let mut first: Option<super::tenants::CollectionInfo> = None;
+        for n in nodes {
+            let info = n
+                .create_collection(name, spec)
+                .map_err(|e| anyhow!("create collection failed: {e}"))?;
+            match &first {
+                None => first = Some(info),
+                Some(f) if f.id != info.id => bail!(
+                    "member nodes disagree on the id of collection {name:?} \
+                     ({} vs {}): was a create applied to only part of the fleet?",
+                    f.id,
+                    info.id
+                ),
+                Some(_) => {}
+            }
+        }
+        first.ok_or_else(|| anyhow!("router has no member nodes"))
+    }
+
+    /// Router fan-out of `DropCollection` (all members, first error wins).
+    pub fn drop_collection_fanout(&self, name: &str) -> Result<()> {
+        let Control::Fanout(nodes) = &self.control else {
+            bail!("drop_collection_fanout is a router-only operation");
+        };
+        for n in nodes {
+            n.drop_collection(name)
+                .map_err(|e| anyhow!("drop collection failed: {e}"))?;
+        }
+        Ok(())
+    }
+
+    /// Router `ListCollections`: the first member's listing (members are
+    /// kept in lockstep by the fan-out create/drop above).
+    pub fn list_collections_fanout(&self) -> Result<Vec<super::tenants::CollectionInfo>> {
+        let Control::Fanout(nodes) = &self.control else {
+            bail!("list_collections_fanout is a router-only operation");
+        };
+        let Some(n) = nodes.first() else {
+            bail!("router has no member nodes");
+        };
+        n.list_collections().map_err(|e| anyhow!("list collections failed: {e}"))
     }
 
     /// Ask the owning thread to shut the service down (idempotent,

@@ -14,6 +14,7 @@ pub mod replica;
 pub mod router;
 pub mod server;
 pub mod shard;
+pub mod tenants;
 pub mod topology;
 
 /// Points per native `InsertBatch` command. One definition shared by the
@@ -30,6 +31,7 @@ pub use protocol::{AnnAnswer, ServiceStats, ShardAnnResult, ShardKdeResult};
 pub use query::QueryPlane;
 pub use replica::{ReadGuard, ReplicaSet};
 pub use router::{RoutePolicy, Router};
-pub use server::{ServiceConfig, SketchService};
+pub use server::{ConfigError, ServiceConfig, ServiceConfigBuilder, SketchService};
 pub use shard::{KdeKernel, KdeShardConfig};
+pub use tenants::{tenant_config, CollectionInfo, CollectionSpec, Tenants, DEFAULT_COLLECTION};
 pub use topology::Topology;

@@ -96,6 +96,7 @@ impl QueryPlane {
     /// module docs for why a partial set is never returned.
     pub fn ann_partials(
         &self,
+        coll: u32,
         queries: Vec<Vec<f32>>,
         trace: u64,
     ) -> Result<Vec<ShardAnnResult>> {
@@ -110,7 +111,7 @@ impl QueryPlane {
         let t_scatter = Instant::now();
         let mut pending = Vec::with_capacity(self.backends.len());
         for be in &self.backends {
-            let Some(p) = be.scatter_ann(&batch, trace) else {
+            let Some(p) = be.scatter_ann(coll, &batch, trace) else {
                 bail!(
                     "ANN query failed: {} is down (refusing a partial answer)",
                     be.name()
@@ -137,6 +138,7 @@ impl QueryPlane {
     /// per shard, in global shard order, unmerged.
     pub fn kde_partials(
         &self,
+        coll: u32,
         queries: Vec<Vec<f32>>,
         trace: u64,
     ) -> Result<Vec<ShardKdeResult>> {
@@ -149,7 +151,7 @@ impl QueryPlane {
         let t_scatter = Instant::now();
         let mut pending = Vec::with_capacity(self.backends.len());
         for be in &self.backends {
-            let Some(p) = be.scatter_kde(&batch, trace) else {
+            let Some(p) = be.scatter_kde(coll, &batch, trace) else {
                 bail!(
                     "KDE query failed: {} is down (refusing a partial answer)",
                     be.name()
@@ -179,11 +181,12 @@ impl QueryPlane {
     /// shards exactly as an in-process plane would.
     pub fn ann_batch_traced(
         &self,
+        coll: u32,
         queries: Vec<Vec<f32>>,
         trace: u64,
     ) -> Result<Vec<Option<AnnAnswer>>> {
         let n = queries.len();
-        let partials = self.ann_partials(queries, trace)?;
+        let partials = self.ann_partials(coll, queries, trace)?;
         if n == 0 {
             return Ok(Vec::new());
         }
@@ -193,9 +196,10 @@ impl QueryPlane {
         Ok(merged)
     }
 
-    /// [`Self::ann_batch_traced`] with no caller-supplied trace id.
+    /// [`Self::ann_batch_traced`] against the default collection with no
+    /// caller-supplied trace id.
     pub fn ann_batch(&self, queries: Vec<Vec<f32>>) -> Result<Vec<Option<AnnAnswer>>> {
-        self.ann_batch_traced(queries, 0)
+        self.ann_batch_traced(0, queries, 0)
     }
 
     /// Batched sliding-window KDE (summed kernel estimates, densities)
@@ -206,11 +210,12 @@ impl QueryPlane {
     /// is not associative, so this ordering IS the bit-parity guarantee.
     pub fn kde_batch_traced(
         &self,
+        coll: u32,
         queries: Vec<Vec<f32>>,
         trace: u64,
     ) -> Result<(Vec<f64>, Vec<f64>)> {
         let n = queries.len();
-        let partials = self.kde_partials(queries, trace)?;
+        let partials = self.kde_partials(coll, queries, trace)?;
         if n == 0 {
             return Ok((Vec::new(), Vec::new()));
         }
@@ -221,9 +226,10 @@ impl QueryPlane {
         Ok((sums, density))
     }
 
-    /// [`Self::kde_batch_traced`] with no caller-supplied trace id.
+    /// [`Self::kde_batch_traced`] against the default collection with no
+    /// caller-supplied trace id.
     pub fn kde_batch(&self, queries: Vec<Vec<f32>>) -> Result<(Vec<f64>, Vec<f64>)> {
-        self.kde_batch_traced(queries, 0)
+        self.kde_batch_traced(0, queries, 0)
     }
 }
 
@@ -250,6 +256,7 @@ mod tests {
         shards: usize,
         mode: Mode,
         last_trace: AtomicU64,
+        last_coll: AtomicU64,
     }
 
     impl FakeBackend {
@@ -259,6 +266,7 @@ mod tests {
                 shards: 1,
                 mode: Mode::Healthy,
                 last_trace: AtomicU64::new(0),
+                last_coll: AtomicU64::new(u64::MAX),
             }
         }
     }
@@ -280,8 +288,14 @@ mod tests {
             vec![0; self.shards]
         }
 
-        fn scatter_ann(&self, batch: &QueryBatch, trace: u64) -> Option<Pending<ShardAnnResult>> {
+        fn scatter_ann(
+            &self,
+            coll: u32,
+            batch: &QueryBatch,
+            trace: u64,
+        ) -> Option<Pending<ShardAnnResult>> {
             self.last_trace.store(trace, TRACE_ORD);
+            self.last_coll.store(coll as u64, TRACE_ORD);
             let (tx, rx) = channel();
             match self.mode {
                 Mode::Healthy => {
@@ -294,8 +308,14 @@ mod tests {
             Some(Pending::Remote { rx })
         }
 
-        fn scatter_kde(&self, batch: &QueryBatch, trace: u64) -> Option<Pending<ShardKdeResult>> {
+        fn scatter_kde(
+            &self,
+            coll: u32,
+            batch: &QueryBatch,
+            trace: u64,
+        ) -> Option<Pending<ShardKdeResult>> {
             self.last_trace.store(trace, TRACE_ORD);
+            self.last_coll.store(coll as u64, TRACE_ORD);
             let (tx, rx) = channel();
             match self.mode {
                 Mode::Healthy => {
@@ -309,11 +329,11 @@ mod tests {
             Some(Pending::Remote { rx })
         }
 
-        fn offer(&self, _chunk: Vec<Vec<f32>>) -> super::super::backend::IngestOutcome {
+        fn offer(&self, _coll: u32, _chunk: Vec<Vec<f32>>) -> super::super::backend::IngestOutcome {
             super::super::backend::IngestOutcome::Disconnected
         }
 
-        fn delete(&self, _x: Vec<f32>) -> Option<bool> {
+        fn delete(&self, _coll: u32, _x: Vec<f32>) -> Option<bool> {
             None
         }
     }
@@ -365,6 +385,7 @@ mod tests {
             shards: 3,
             mode: Mode::Healthy,
             last_trace: AtomicU64::new(0),
+            last_coll: AtomicU64::new(u64::MAX),
         };
         let (plane, _) = plane_of(vec![node]);
         assert_eq!(plane.shards(), 3);
@@ -386,12 +407,39 @@ mod tests {
             ],
             Arc::new(Registry::new()),
         );
-        plane.ann_batch_traced(vec![vec![0.0; 4]], 0xBEEF).unwrap();
+        plane.ann_batch_traced(0, vec![vec![0.0; 4]], 0xBEEF).unwrap();
         assert_eq!(b0.last_trace.load(TRACE_ORD), 0xBEEF);
         assert_eq!(b1.last_trace.load(TRACE_ORD), 0xBEEF);
-        plane.kde_batch_traced(vec![vec![0.0; 4]], 0xF00D).unwrap();
+        plane.kde_batch_traced(0, vec![vec![0.0; 4]], 0xF00D).unwrap();
         assert_eq!(b0.last_trace.load(TRACE_ORD), 0xF00D);
         assert_eq!(b1.last_trace.load(TRACE_ORD), 0xF00D);
+    }
+
+    #[test]
+    fn collection_id_reaches_every_backend() {
+        let (b0, b1) = (
+            Arc::new(FakeBackend::healthy(0)),
+            Arc::new(FakeBackend::healthy(1)),
+        );
+        let plane = QueryPlane::new(
+            vec![
+                Arc::clone(&b0) as Arc<dyn ShardBackend>,
+                Arc::clone(&b1) as Arc<dyn ShardBackend>,
+            ],
+            Arc::new(Registry::new()),
+        );
+        plane.ann_batch_traced(7, vec![vec![0.0; 4]], 0).unwrap();
+        assert_eq!(b0.last_coll.load(TRACE_ORD), 7);
+        assert_eq!(b1.last_coll.load(TRACE_ORD), 7);
+        plane.kde_batch_traced(9, vec![vec![0.0; 4]], 0).unwrap();
+        assert_eq!(b0.last_coll.load(TRACE_ORD), 9);
+        assert_eq!(b1.last_coll.load(TRACE_ORD), 9);
+        plane.ann_batch(vec![vec![0.0; 4]]).unwrap();
+        assert_eq!(
+            b0.last_coll.load(TRACE_ORD),
+            0,
+            "convenience ops address the default collection"
+        );
     }
 
     #[test]
@@ -403,6 +451,7 @@ mod tests {
             shards: 1,
             mode: Mode::Dead,
             last_trace: AtomicU64::new(0),
+            last_coll: AtomicU64::new(u64::MAX),
         };
         let (plane, _) = plane_of(vec![FakeBackend::healthy(0), dead]);
         let err = plane.ann_batch(vec![vec![0.0; 4]]).unwrap_err().to_string();
@@ -420,6 +469,7 @@ mod tests {
             shards: 2,
             mode: Mode::Dying,
             last_trace: AtomicU64::new(0),
+            last_coll: AtomicU64::new(u64::MAX),
         };
         let (plane, _) = plane_of(vec![dying]);
         let err = plane.ann_batch(vec![vec![0.0; 4]]).unwrap_err().to_string();

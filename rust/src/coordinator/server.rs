@@ -82,7 +82,238 @@ pub struct ServiceConfig {
     pub on_durability_loss: DurabilityLossPolicy,
 }
 
+/// Typed validation failure from [`ServiceConfigBuilder::build`]. Each
+/// variant names the rejected knob (and carries the offending value), so
+/// callers — the CLI, `CreateCollection` over the wire — can report
+/// exactly which part of a config is bad instead of a stringly blob.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ConfigError {
+    /// `dim` must be ≥ 1 (a zero-dimensional stream has no geometry).
+    ZeroDim,
+    /// `shards` must be ≥ 1.
+    ZeroShards,
+    /// `replicas` must be ≥ 1 (R counts copies, not spares).
+    ZeroReplicas,
+    /// `queue_cap` must be ≥ 1 (a zero-depth mailbox admits nothing).
+    ZeroQueueCap,
+    /// `ann.n_max` must be ≥ 1 (the sketch sizes itself off it).
+    ZeroNMax,
+    /// `ann.eta` must lie in [0, 1].
+    BadEta(f64),
+    /// `ann.c` must be > 1 (the approximation factor).
+    BadApproxC(f64),
+    /// `ann.r` and `ann.w` must be positive.
+    NonPositiveRadius { r: f64, w: f64 },
+    /// `kde.eps_eh` must lie in (0, 1].
+    BadEpsEh(f64),
+    /// `kde.rows`, `kde.p` and `kde.window` must all be ≥ 1.
+    ZeroKdeShape,
+    /// A durability knob (named in the payload) was set without a
+    /// `data_dir` — fsync cadence and checkpoint triggers act on a WAL
+    /// that would not exist, which is a config contradiction, not a
+    /// default to silently ignore.
+    DurabilityWithoutDataDir(&'static str),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::ZeroDim => write!(f, "dim must be >= 1"),
+            ConfigError::ZeroShards => write!(f, "shards must be >= 1"),
+            ConfigError::ZeroReplicas => write!(f, "replicas must be >= 1"),
+            ConfigError::ZeroQueueCap => write!(f, "queue_cap must be >= 1"),
+            ConfigError::ZeroNMax => write!(f, "ann.n_max must be >= 1"),
+            ConfigError::BadEta(v) => write!(f, "ann.eta must be in [0,1], got {v}"),
+            ConfigError::BadApproxC(v) => write!(f, "ann.c must be > 1, got {v}"),
+            ConfigError::NonPositiveRadius { r, w } => {
+                write!(f, "ann.r and ann.w must be positive, got r={r} w={w}")
+            }
+            ConfigError::BadEpsEh(v) => write!(f, "kde.eps_eh must be in (0,1], got {v}"),
+            ConfigError::ZeroKdeShape => {
+                write!(f, "kde.rows, kde.p and kde.window must all be >= 1")
+            }
+            ConfigError::DurabilityWithoutDataDir(knob) => {
+                write!(f, "{knob} was set but data_dir is unset (nothing to make durable)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// Validating builder over [`ServiceConfig`]. Starts from
+/// [`ServiceConfig::default_for`] (or any existing config via
+/// [`ServiceConfig::to_builder`] — which is how CLI flags overlay a
+/// loaded file: defaults < file < flags, last setter wins) and checks
+/// every cross-field constraint in [`Self::build`], so an invalid combo
+/// is a typed [`ConfigError`] at construction time instead of a panic
+/// or a silently clamped value at serve time.
+#[derive(Clone, Debug)]
+pub struct ServiceConfigBuilder {
+    cfg: ServiceConfig,
+}
+
+impl ServiceConfigBuilder {
+    pub fn shards(mut self, n: usize) -> Self {
+        self.cfg.shards = n;
+        self
+    }
+
+    pub fn replicas(mut self, r: usize) -> Self {
+        self.cfg.replicas = r;
+        self
+    }
+
+    pub fn route(mut self, route: RoutePolicy) -> Self {
+        self.cfg.route = route;
+        self
+    }
+
+    pub fn queue_cap(mut self, cap: usize) -> Self {
+        self.cfg.queue_cap = cap;
+        self
+    }
+
+    pub fn overload(mut self, policy: Overload) -> Self {
+        self.cfg.overload = policy;
+        self
+    }
+
+    pub fn eta(mut self, eta: f64) -> Self {
+        self.cfg.ann.eta = eta;
+        self
+    }
+
+    pub fn ann(mut self, ann: SAnnConfig) -> Self {
+        self.cfg.ann = ann;
+        self
+    }
+
+    pub fn kde(mut self, kde: KdeShardConfig) -> Self {
+        self.cfg.kde = kde;
+        self
+    }
+
+    /// Whole-service sliding-window size (split across shards at start).
+    pub fn window(mut self, window: u64) -> Self {
+        self.cfg.kde.window = window;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    pub fn shard_base(mut self, base: usize) -> Self {
+        self.cfg.shard_base = base;
+        self
+    }
+
+    pub fn use_pjrt(mut self, yes: bool) -> Self {
+        self.cfg.use_pjrt = yes;
+        self
+    }
+
+    pub fn data_dir(mut self, dir: Option<PathBuf>) -> Self {
+        self.cfg.data_dir = dir;
+        self
+    }
+
+    pub fn fsync(mut self, policy: FsyncPolicy) -> Self {
+        self.cfg.fsync = policy;
+        self
+    }
+
+    pub fn checkpoint_every_points(mut self, n: Option<u64>) -> Self {
+        self.cfg.checkpoint_every_points = n;
+        self
+    }
+
+    pub fn checkpoint_every_secs(mut self, secs: Option<u64>) -> Self {
+        self.cfg.checkpoint_every_secs = secs;
+        self
+    }
+
+    pub fn on_durability_loss(mut self, policy: DurabilityLossPolicy) -> Self {
+        self.cfg.on_durability_loss = policy;
+        self
+    }
+
+    /// Validate every field and cross-field constraint; the first
+    /// violation wins (ordered roughly most- to least-structural).
+    pub fn build(self) -> Result<ServiceConfig, ConfigError> {
+        let cfg = self.cfg;
+        if cfg.dim == 0 || cfg.ann.dim == 0 {
+            return Err(ConfigError::ZeroDim);
+        }
+        if cfg.shards == 0 {
+            return Err(ConfigError::ZeroShards);
+        }
+        if cfg.replicas == 0 {
+            return Err(ConfigError::ZeroReplicas);
+        }
+        if cfg.queue_cap == 0 {
+            return Err(ConfigError::ZeroQueueCap);
+        }
+        if cfg.ann.n_max == 0 {
+            return Err(ConfigError::ZeroNMax);
+        }
+        if !(0.0..=1.0).contains(&cfg.ann.eta) {
+            return Err(ConfigError::BadEta(cfg.ann.eta));
+        }
+        if cfg.ann.c <= 1.0 {
+            return Err(ConfigError::BadApproxC(cfg.ann.c));
+        }
+        if cfg.ann.r <= 0.0 || cfg.ann.w <= 0.0 {
+            return Err(ConfigError::NonPositiveRadius { r: cfg.ann.r, w: cfg.ann.w });
+        }
+        if cfg.kde.eps_eh <= 0.0 || cfg.kde.eps_eh > 1.0 {
+            return Err(ConfigError::BadEpsEh(cfg.kde.eps_eh));
+        }
+        if cfg.kde.rows == 0 || cfg.kde.p == 0 || cfg.kde.window == 0 {
+            return Err(ConfigError::ZeroKdeShape);
+        }
+        if cfg.data_dir.is_none() {
+            if cfg.fsync != FsyncPolicy::default() {
+                return Err(ConfigError::DurabilityWithoutDataDir("fsync"));
+            }
+            if cfg.checkpoint_every_points.is_some() {
+                return Err(ConfigError::DurabilityWithoutDataDir("checkpoint_every_points"));
+            }
+            if cfg.checkpoint_every_secs.is_some() {
+                return Err(ConfigError::DurabilityWithoutDataDir("checkpoint_every_secs"));
+            }
+        }
+        Ok(cfg)
+    }
+}
+
 impl ServiceConfig {
+    /// Start building from the defaults for a dim-`dim` stream of up to
+    /// `n_max` points. Precedence when layering sources: these defaults,
+    /// then anything loaded from a file (see [`ServiceConfig::to_builder`]
+    /// on a [`crate::config::Config`]-produced config), then explicit
+    /// setter calls — the LAST write to a knob wins, so CLI flags applied
+    /// after a file overlay it.
+    pub fn builder(dim: usize, n_max: usize) -> ServiceConfigBuilder {
+        ServiceConfigBuilder { cfg: ServiceConfig::default_for(dim, n_max) }
+    }
+
+    /// Re-open any existing config as a builder — the file→flags overlay
+    /// path: `Config::load(..)?.service(..)?.to_builder().shards(8).build()?`.
+    pub fn to_builder(self) -> ServiceConfigBuilder {
+        ServiceConfigBuilder { cfg: self }
+    }
+
+    /// Load `[service]`/`[ann]`/`[kde]` sections from a config file and
+    /// validate the result through the builder. CLI flags belong ON TOP:
+    /// call `.to_builder()` on the result, apply setters, re-`build()`.
+    pub fn from_file(path: &std::path::Path, dim: usize, n_max: usize) -> Result<ServiceConfig> {
+        let cfg = crate::config::Config::load(path)?.service(dim, n_max)?;
+        cfg.to_builder().build().map_err(anyhow::Error::from)
+    }
+
     /// Reasonable defaults for a dim-`d` stream of up to `n` points.
     pub fn default_for(dim: usize, n: usize) -> Self {
         ServiceConfig {
@@ -1065,12 +1296,15 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn small_cfg() -> ServiceConfig {
-        let mut cfg = ServiceConfig::default_for(8, 1000);
-        cfg.shards = 2;
-        cfg.ann.eta = 0.0;
-        cfg.kde.rows = 8;
-        cfg.kde.window = 200;
-        cfg
+        let mut kde = ServiceConfig::default_for(8, 1000).kde;
+        kde.rows = 8;
+        kde.window = 200;
+        ServiceConfig::builder(8, 1000)
+            .shards(2)
+            .eta(0.0)
+            .kde(kde)
+            .build()
+            .expect("small_cfg is valid")
     }
 
     #[test]

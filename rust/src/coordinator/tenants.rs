@@ -1,0 +1,571 @@
+//! Named collections: one `sketchd` process, many independent tenants.
+//!
+//! The paper's compactness results (`O(n^{1+ρ-η})` for S-ANN, polylog
+//! per SW-AKDE window) mean a single process has room for many
+//! workloads, so the serving layer grows a registry of them. Each
+//! collection is a full [`SketchService`] of its own — its own
+//! [`ServiceConfig`] (dim, shards, replicas, LSH params, overload
+//! policy), its own metrics [`Registry`] (per-tenant point accounting:
+//! `inserts == stored + shed + refused` reconciles per collection, not
+//! just per process), its own `data_dir/<name>/` subtree under the
+//! existing WAL/checkpoint discipline — so tenancy adds NO new sharing:
+//! isolation is by construction, and a collection answers bit-identically
+//! to a single-tenant process with the same config (pinned by
+//! `tests/multi_tenant.rs`).
+//!
+//! Collection id 0 is the DEFAULT collection: it runs the process's own
+//! base config directly on the ROOT data dir, which is exactly the
+//! layout a pre-tenancy (protocol v5) server wrote — so old data dirs
+//! recover unchanged and v5 clients, whose frames decode as collection
+//! 0, keep their semantics bit-for-bit. Named collections live in the
+//! durable [`Manifest`] and are rehydrated on startup, each through the
+//! same recovery path a single-tenant service uses.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::durability::manifest::{Manifest, ManifestEntry};
+use crate::metrics::registry::Registry;
+use crate::obs::log;
+use crate::sketch::ann::SAnnConfig;
+use crate::util::sync::{lock_unpoisoned, Arc, Mutex};
+
+use super::backpressure::Overload;
+use super::handle::ServiceHandle;
+use super::server::{ConfigError, ServiceConfig, SketchService};
+
+/// Reserved name (and id 0) of the collection every v5 frame addresses.
+pub const DEFAULT_COLLECTION: &str = "default";
+
+/// Wire-visible shape of a collection: everything `CreateCollection`
+/// lets a client choose, everything the manifest persists. Field order
+/// here is the wire order (`net::frame::put_spec`/`read_spec`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CollectionSpec {
+    pub dim: u32,
+    pub shards: u32,
+    pub replicas: u32,
+    /// Sketch capacity (points) the S-ANN structure sizes itself for.
+    pub n_max: u64,
+    /// Whole-collection sliding-window size for SW-AKDE.
+    pub window: u64,
+    /// S-ANN subsampling exponent η ∈ [0, 1].
+    pub eta: f64,
+    /// Overload policy: 0 = block, 1 = shed.
+    pub overload: u8,
+    pub seed: u64,
+}
+
+impl CollectionSpec {
+    /// Defaults matching [`ServiceConfig::default_for`] — what a client
+    /// that only knows its dimensionality should send.
+    pub fn for_dim(dim: u32, n_max: u64) -> Self {
+        CollectionSpec {
+            dim,
+            shards: 4,
+            replicas: 1,
+            n_max,
+            window: 1024,
+            eta: 0.5,
+            overload: 0,
+            seed: 42,
+        }
+    }
+}
+
+/// What `ListCollections` reports per collection.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CollectionInfo {
+    pub id: u32,
+    pub name: String,
+    pub dim: u32,
+    pub shards: u32,
+    pub replicas: u32,
+}
+
+/// Derive the full per-tenant [`ServiceConfig`] a spec denotes, layered
+/// on the process's base config: geometry and stream knobs come from the
+/// SPEC (dim, shards, replicas, n_max, window, eta, overload, seed),
+/// operator policy comes from the BASE (route, queue depth, kde kernel
+/// shape, fsync cadence, checkpoint triggers, durability-loss policy).
+/// Durability knobs only carry over when the collection actually has a
+/// `data_dir` — an ephemeral tenant under a durable base must not trip
+/// [`ConfigError::DurabilityWithoutDataDir`].
+///
+/// This function is the tenant-isolation contract: a standalone
+/// single-tenant process spawned from the same derivation (with its own
+/// dir) is bit-identical to the hosted collection, because the config IS
+/// the behavior. `tests/multi_tenant.rs` pins exactly that.
+pub fn tenant_config(
+    base: &ServiceConfig,
+    spec: &CollectionSpec,
+    data_dir: Option<PathBuf>,
+) -> Result<ServiceConfig, ConfigError> {
+    let dim = spec.dim as usize;
+    let n_max = spec.n_max as usize;
+    let durable = data_dir.is_some();
+    let mut b = ServiceConfig::builder(dim, n_max)
+        .shards(spec.shards as usize)
+        .replicas(spec.replicas as usize)
+        .route(base.route)
+        .queue_cap(base.queue_cap)
+        .overload(if spec.overload == 1 { Overload::Shed } else { Overload::Block })
+        .ann(SAnnConfig {
+            dim,
+            n_max,
+            eta: spec.eta,
+            ..base.ann.clone()
+        })
+        .kde(base.kde.clone())
+        .window(spec.window)
+        .seed(spec.seed)
+        .on_durability_loss(base.on_durability_loss)
+        .data_dir(data_dir);
+    if durable {
+        b = b
+            .fsync(base.fsync)
+            .checkpoint_every_points(base.checkpoint_every_points)
+            .checkpoint_every_secs(base.checkpoint_every_secs);
+    }
+    b.build()
+}
+
+/// One live tenant: its spec, its running service's handle, and the
+/// owning thread to join on drop/shutdown.
+struct Tenant {
+    name: String,
+    spec: CollectionSpec,
+    handle: ServiceHandle,
+    join: Option<JoinHandle<()>>,
+}
+
+struct Inner {
+    /// Monotonic; ids are NEVER reused across create/drop cycles, so a
+    /// stale client holding a dropped id gets "unknown collection",
+    /// never another tenant's data.
+    next_id: u32,
+    by_name: BTreeMap<String, u32>,
+    tenants: BTreeMap<u32, Tenant>,
+}
+
+/// The registry of per-tenant shard sets one process serves. Cheap to
+/// share (`Arc`); the lock guards only the maps — every data-plane op
+/// runs on a cloned [`ServiceHandle`] outside it.
+pub struct Tenants {
+    base: ServiceConfig,
+    /// Root data dir; named collections live in `<root>/<name>/`,
+    /// the default collection and the manifest at the root itself.
+    root: Option<PathBuf>,
+    inner: Mutex<Inner>,
+}
+
+impl Tenants {
+    /// Boot the default collection from `base` (recovering the root data
+    /// dir exactly as a single-tenant server would), then rehydrate
+    /// every named collection in the manifest through the same per-dir
+    /// recovery path. Fails if ANY tenant fails to recover — a silently
+    /// absent tenant is data loss, not degraded service.
+    pub fn open(base: ServiceConfig) -> Result<Tenants> {
+        let root = base.data_dir.clone();
+        let (handle, join) = SketchService::spawn(base.clone())?;
+        let mut inner = Inner {
+            next_id: 1,
+            by_name: BTreeMap::new(),
+            tenants: BTreeMap::new(),
+        };
+        inner.by_name.insert(DEFAULT_COLLECTION.to_string(), 0);
+        inner.tenants.insert(
+            0,
+            Tenant {
+                name: DEFAULT_COLLECTION.to_string(),
+                spec: CollectionSpec {
+                    dim: base.dim as u32,
+                    shards: base.shards as u32,
+                    replicas: base.replicas as u32,
+                    n_max: base.ann.n_max as u64,
+                    window: base.kde.window,
+                    eta: base.ann.eta,
+                    overload: if base.overload == Overload::Shed { 1 } else { 0 },
+                    seed: base.seed,
+                },
+                handle,
+                join: Some(join),
+            },
+        );
+        let tenants = Tenants { base, root, inner: Mutex::new(inner) };
+        if let Some(root) = tenants.root.clone() {
+            let manifest = Manifest::load(&root)?;
+            let mut inner = lock_unpoisoned(&tenants.inner);
+            inner.next_id = manifest.next_id;
+            for e in manifest.entries {
+                let cfg = tenant_config(&tenants.base, &e.spec, Some(root.join(&e.name)))
+                    .map_err(|err| {
+                        anyhow!("collection {:?}: invalid manifest spec: {err}", e.name)
+                    })?;
+                let (handle, join) = SketchService::spawn(cfg)
+                    .map_err(|err| anyhow!("collection {:?} failed to recover: {err}", e.name))?;
+                log::info(
+                    "coordinator::tenants",
+                    "recovered named collection",
+                    crate::kv!(name = e.name, id = e.id, dim = e.spec.dim),
+                );
+                inner.by_name.insert(e.name.clone(), e.id);
+                inner.tenants.insert(
+                    e.id,
+                    Tenant { name: e.name, spec: e.spec, handle, join: Some(join) },
+                );
+            }
+        }
+        Ok(tenants)
+    }
+
+    /// The process's base config (named tenants derive from it).
+    pub fn base(&self) -> &ServiceConfig {
+        &self.base
+    }
+
+    /// Handle for a collection id, if it exists. Cloning the handle is
+    /// the cheap, lock-free-data-plane way to use it: the registry lock
+    /// is held only for the map lookup.
+    pub fn resolve(&self, coll: u32) -> Option<ServiceHandle> {
+        let inner = lock_unpoisoned(&self.inner);
+        inner.tenants.get(&coll).map(|t| t.handle.clone())
+    }
+
+    /// Resolve a collection by name.
+    pub fn resolve_name(&self, name: &str) -> Option<(u32, ServiceHandle)> {
+        let inner = lock_unpoisoned(&self.inner);
+        let id = *inner.by_name.get(name)?;
+        inner.tenants.get(&id).map(|t| (id, t.handle.clone()))
+    }
+
+    /// The default collection's handle (always present).
+    pub fn default_handle(&self) -> ServiceHandle {
+        let inner = lock_unpoisoned(&self.inner);
+        match inner.tenants.get(&0) {
+            Some(t) => t.handle.clone(),
+            // Unreachable by construction (open() always seeds id 0 and
+            // nothing removes it); keep a diagnosable panic over UB.
+            None => unreachable!("default collection is never dropped"),
+        }
+    }
+
+    /// Create a named collection: validate, spawn its service, persist
+    /// the manifest, and only then publish it to the maps — so a
+    /// manifest-write failure leaves no half-created tenant behind.
+    pub fn create(&self, name: &str, spec: &CollectionSpec) -> Result<CollectionInfo> {
+        validate_name(name)?;
+        if spec.overload > 1 {
+            bail!("overload must be 0 (block) or 1 (shed), got {}", spec.overload);
+        }
+        // Reserve the id under the lock, but spawn OUTSIDE it: recovery
+        // of a large dir must not block the data plane of other tenants.
+        let id = {
+            let mut inner = lock_unpoisoned(&self.inner);
+            if inner.by_name.contains_key(name) {
+                bail!("collection {name:?} already exists");
+            }
+            let id = inner.next_id;
+            inner.next_id += 1;
+            id
+        };
+        let dir = self.root.as_ref().map(|r| r.join(name));
+        let cfg = tenant_config(&self.base, spec, dir)?;
+        let (handle, join) = SketchService::spawn(cfg)?;
+        let mut inner = lock_unpoisoned(&self.inner);
+        if inner.by_name.contains_key(name) {
+            // Lost a create race for the same name; back out our spawn.
+            drop(inner);
+            handle.shutdown();
+            let _ = join.join();
+            bail!("collection {name:?} already exists");
+        }
+        inner.by_name.insert(name.to_string(), id);
+        inner.tenants.insert(
+            id,
+            Tenant { name: name.to_string(), spec: spec.clone(), handle, join: Some(join) },
+        );
+        if let Some(root) = &self.root {
+            if let Err(e) = self.persist_locked(&inner, root) {
+                // Unpublish: a collection the manifest cannot record
+                // would vanish on restart while looking durable now.
+                let t = inner.tenants.remove(&id);
+                inner.by_name.remove(name);
+                drop(inner);
+                if let Some(mut t) = t {
+                    t.handle.shutdown();
+                    if let Some(j) = t.join.take() {
+                        let _ = j.join();
+                    }
+                }
+                return Err(e);
+            }
+        }
+        log::info(
+            "coordinator::tenants",
+            "created collection",
+            crate::kv!(name = name, id = id, dim = spec.dim, shards = spec.shards),
+        );
+        Ok(CollectionInfo {
+            id,
+            name: name.to_string(),
+            dim: spec.dim,
+            shards: spec.shards,
+            replicas: spec.replicas,
+        })
+    }
+
+    /// Drop a named collection: unpublish, stop its service, delete its
+    /// subtree, persist the manifest. The default collection cannot be
+    /// dropped (v5 clients depend on its existence).
+    pub fn drop_collection(&self, name: &str) -> Result<()> {
+        if name == DEFAULT_COLLECTION {
+            bail!("the default collection cannot be dropped");
+        }
+        let mut t = {
+            let mut inner = lock_unpoisoned(&self.inner);
+            let Some(id) = inner.by_name.remove(name) else {
+                bail!("unknown collection {name:?}");
+            };
+            let t = inner.tenants.remove(&id);
+            if let Some(root) = &self.root {
+                self.persist_locked(&inner, root)?;
+            }
+            t
+        };
+        if let Some(t) = t.as_mut() {
+            t.handle.shutdown();
+            if let Some(j) = t.join.take() {
+                let _ = j.join();
+            }
+        }
+        if let Some(root) = &self.root {
+            let dir = root.join(name);
+            if let Err(e) = std::fs::remove_dir_all(&dir) {
+                if e.kind() != std::io::ErrorKind::NotFound {
+                    log::warn(
+                        "coordinator::tenants",
+                        "dropped collection's data dir was not fully removed",
+                        crate::kv!(dir = dir.display(), err = e),
+                    );
+                }
+            }
+        }
+        log::info("coordinator::tenants", "dropped collection", crate::kv!(name = name));
+        Ok(())
+    }
+
+    /// Every collection, default first, then by id.
+    pub fn list(&self) -> Vec<CollectionInfo> {
+        let inner = lock_unpoisoned(&self.inner);
+        inner
+            .tenants
+            .iter()
+            .map(|(&id, t)| CollectionInfo {
+                id,
+                name: t.name.clone(),
+                dim: t.spec.dim,
+                shards: t.spec.shards,
+                replicas: t.spec.replicas,
+            })
+            .collect()
+    }
+
+    /// Per-tenant metrics registries `(name, registry)`, default first —
+    /// the scrape endpoint renders the default unprefixed (v5 dashboards
+    /// keep working) and each named tenant under a name prefix.
+    pub fn registries(&self) -> Vec<(String, Arc<Registry>)> {
+        let inner = lock_unpoisoned(&self.inner);
+        inner
+            .tenants
+            .values()
+            .map(|t| (t.name.clone(), Arc::clone(t.handle.registry())))
+            .collect()
+    }
+
+    /// Tear every tenant down WITHOUT a shutdown command: handles are
+    /// dropped (mailboxes disconnect; shard threads exit on their own,
+    /// cutting no final checkpoint) and the owning threads joined. As
+    /// far as the on-disk state goes this is a `kill -9` — a reopen of
+    /// the same data dir must recover from checkpoint + WAL tail alone.
+    /// Crash-recovery tests use it; a server has no reason to.
+    pub fn crash(&self) {
+        let tenants: Vec<Tenant> = {
+            let mut inner = lock_unpoisoned(&self.inner);
+            let ids: Vec<u32> = inner.tenants.keys().copied().collect();
+            ids.into_iter().filter_map(|id| inner.tenants.remove(&id)).collect()
+        };
+        for t in tenants {
+            let Tenant { handle, mut join, .. } = t;
+            drop(handle);
+            if let Some(j) = join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+
+    /// Shut every tenant down and join their owning threads. Idempotent.
+    pub fn shutdown(&self) {
+        let tenants: Vec<Tenant> = {
+            let mut inner = lock_unpoisoned(&self.inner);
+            let ids: Vec<u32> = inner.tenants.keys().copied().collect();
+            ids.into_iter().filter_map(|id| inner.tenants.remove(&id)).collect()
+        };
+        for mut t in tenants {
+            t.handle.shutdown();
+            if let Some(j) = t.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+
+    fn persist_locked(&self, inner: &Inner, root: &std::path::Path) -> Result<()> {
+        let manifest = Manifest {
+            next_id: inner.next_id,
+            entries: inner
+                .tenants
+                .iter()
+                .filter(|(&id, _)| id != 0)
+                .map(|(&id, t)| ManifestEntry {
+                    id,
+                    name: t.name.clone(),
+                    spec: t.spec.clone(),
+                })
+                .collect(),
+        };
+        manifest.store(root)
+    }
+}
+
+/// Collection names are path components (each names a `data_dir`
+/// subtree) and metric-name prefixes, so the alphabet is tight:
+/// `[A-Za-z0-9_]` first, `[A-Za-z0-9_-]` after, at most 64 chars. The
+/// leading character rule keeps names disjoint from the root dir's own
+/// `wal-*`/`checkpoint-*` files and from dotfiles.
+pub fn validate_name(name: &str) -> Result<()> {
+    if name.is_empty() || name.len() > 64 {
+        bail!("collection name must be 1..=64 characters");
+    }
+    if name == DEFAULT_COLLECTION {
+        bail!("{DEFAULT_COLLECTION:?} is reserved for the default collection");
+    }
+    let mut chars = name.chars();
+    let ok_first = chars
+        .next()
+        .is_some_and(|c| c.is_ascii_alphanumeric() || c == '_');
+    if !ok_first || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-') {
+        bail!(
+            "collection name {name:?} is invalid: [A-Za-z0-9_] first, \
+             then [A-Za-z0-9_-] only"
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_cfg() -> ServiceConfig {
+        ServiceConfig::builder(6, 500)
+            .shards(2)
+            .eta(0.0)
+            .window(200)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn name_validation_guards_the_filesystem() {
+        assert!(validate_name("news").is_ok());
+        assert!(validate_name("turnstile-9").is_ok());
+        assert!(validate_name("_x").is_ok());
+        assert!(validate_name("").is_err());
+        assert!(validate_name("default").is_err(), "reserved");
+        assert!(validate_name("-leading-dash").is_err());
+        assert!(validate_name("has/slash").is_err());
+        assert!(validate_name("has space").is_err());
+        assert!(validate_name("..").is_err());
+        assert!(validate_name(&"x".repeat(65)).is_err());
+    }
+
+    #[test]
+    fn create_list_drop_roundtrip() {
+        let tenants = Tenants::open(base_cfg()).unwrap();
+        assert_eq!(tenants.list().len(), 1, "default collection only");
+        let info = tenants.create("news", &CollectionSpec::for_dim(4, 100)).unwrap();
+        assert_eq!(info.id, 1);
+        assert_eq!(info.dim, 4);
+        let err = tenants
+            .create("news", &CollectionSpec::for_dim(4, 100))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("already exists"), "{err}");
+        let names: Vec<String> = tenants.list().into_iter().map(|c| c.name).collect();
+        assert_eq!(names, vec!["default".to_string(), "news".to_string()]);
+        // Per-tenant handles have the per-tenant dim.
+        assert_eq!(tenants.resolve(0).unwrap().dim(), 6);
+        assert_eq!(tenants.resolve(1).unwrap().dim(), 4);
+        assert!(tenants.resolve(2).is_none());
+        tenants.drop_collection("news").unwrap();
+        assert!(tenants.resolve(1).is_none(), "dropped ids never resolve again");
+        assert!(tenants.drop_collection("news").is_err());
+        assert!(tenants.drop_collection("default").is_err());
+        // Ids are never reused.
+        let again = tenants.create("news", &CollectionSpec::for_dim(4, 100)).unwrap();
+        assert_eq!(again.id, 2);
+        tenants.shutdown();
+    }
+
+    #[test]
+    fn invalid_specs_are_typed_errors_not_panics() {
+        let tenants = Tenants::open(base_cfg()).unwrap();
+        let mut spec = CollectionSpec::for_dim(4, 100);
+        spec.shards = 0;
+        assert!(tenants.create("bad", &spec).is_err());
+        let mut spec = CollectionSpec::for_dim(0, 100);
+        spec.dim = 0;
+        assert!(tenants.create("bad", &spec).is_err());
+        let mut spec = CollectionSpec::for_dim(4, 100);
+        spec.eta = 1.5;
+        assert!(tenants.create("bad", &spec).is_err());
+        let mut spec = CollectionSpec::for_dim(4, 100);
+        spec.overload = 9;
+        assert!(tenants.create("bad", &spec).is_err());
+        assert_eq!(tenants.list().len(), 1, "failed creates leave no tenant behind");
+        tenants.shutdown();
+    }
+
+    #[test]
+    fn named_collections_survive_reopen() {
+        let root = std::env::temp_dir().join(format!(
+            "sketchd-tenants-reopen-{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&root).ok();
+        let mut base = base_cfg();
+        base.data_dir = Some(root.clone());
+        {
+            let tenants = Tenants::open(base.clone()).unwrap();
+            tenants.create("news", &CollectionSpec::for_dim(4, 100)).unwrap();
+            let h = tenants.resolve(1).unwrap();
+            assert!(h.insert(vec![0.5; 4]));
+            h.flush().unwrap();
+            tenants.shutdown();
+        }
+        {
+            let tenants = Tenants::open(base).unwrap();
+            let listed = tenants.list();
+            assert_eq!(listed.len(), 2, "manifest rehydrates named tenants");
+            assert_eq!(listed[1].name, "news");
+            assert_eq!(listed[1].id, 1);
+            let st = tenants.resolve(1).unwrap().stats().unwrap();
+            assert_eq!(st.stored_points, 1, "eta=0 stores all; WAL replay recovered it");
+            tenants.shutdown();
+        }
+        std::fs::remove_dir_all(&root).ok();
+    }
+}

@@ -1,0 +1,256 @@
+//! The collection manifest — the durable registry of named collections.
+//!
+//! Multi-tenant recovery needs one more fact than the per-collection
+//! WAL/checkpoint pair can carry: *which collections exist at all*, and
+//! with what shape (dim, shards, replicas, sketch params). That lives
+//! here, as `collections.manifest` at the ROOT of the data dir, in the
+//! same TOML subset the experiment configs use ([`ConfigFile`]): one
+//! top-level `next_id` counter plus one `[name]` section per named
+//! collection. The default collection (id 0) is NOT listed — it is
+//! implied by the service's own config and keeps the root-dir layout a
+//! v5 single-tenant server would have written, so pre-tenancy data dirs
+//! recover unchanged.
+//!
+//! Writes are atomic in the WAL sense: temp file in the same directory,
+//! fsync, rename over the live name, fsync the directory. A crash
+//! between `CreateCollection` being acked and its first WAL append can
+//! therefore never lose the collection's *existence*, and a torn write
+//! can never produce a half-parsed manifest (the old file survives the
+//! rename intact).
+//!
+//! Collection ids are never reused: `next_id` is monotonic across
+//! create/drop cycles, so a stale client holding a dropped collection's
+//! id gets "unknown collection", never someone else's data.
+
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::file::ConfigFile;
+use crate::coordinator::CollectionSpec;
+
+use super::sync_dir;
+
+/// Manifest file name, directly under the root data dir (sibling of the
+/// default collection's `wal-*` / `checkpoint-*` files).
+pub const MANIFEST_FILE: &str = "collections.manifest";
+
+/// One named collection's durable identity + shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ManifestEntry {
+    pub id: u32,
+    pub name: String,
+    pub spec: CollectionSpec,
+}
+
+/// Everything the tenant registry must rehydrate on restart.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    /// Next collection id to hand out (ids are never reused).
+    pub next_id: u32,
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Default for Manifest {
+    fn default() -> Self {
+        // Id 0 is the default collection, so named ids start at 1.
+        Manifest { next_id: 1, entries: Vec::new() }
+    }
+}
+
+impl Manifest {
+    /// Load the manifest from `root`, or the empty default if none was
+    /// ever written (a fresh dir, or a v5 single-tenant dir).
+    pub fn load(root: &Path) -> Result<Manifest> {
+        let path = root.join(MANIFEST_FILE);
+        let src = match fs::read_to_string(&path) {
+            Ok(s) => s,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(Manifest::default())
+            }
+            Err(e) => return Err(e).context(format!("reading {}", path.display())),
+        };
+        let f = ConfigFile::parse(&src).context(format!("parsing {}", path.display()))?;
+        let next_id: u32 = f
+            .get("", "next_id")
+            .context("manifest is missing top-level next_id")?
+            .parse()
+            .context("manifest next_id is not a u32")?;
+        let mut entries = Vec::new();
+        for name in f.sections() {
+            if name.is_empty() {
+                continue; // the top-level pseudo-section holding next_id
+            }
+            entries.push(ManifestEntry {
+                id: section_u32(&f, name, "id")?,
+                name: name.to_string(),
+                spec: CollectionSpec {
+                    dim: section_u32(&f, name, "dim")?,
+                    shards: section_u32(&f, name, "shards")?,
+                    replicas: section_u32(&f, name, "replicas")?,
+                    n_max: section_u64(&f, name, "n_max")?,
+                    window: section_u64(&f, name, "window")?,
+                    eta: section_f64(&f, name, "eta")?,
+                    overload: match f.get(name, "overload") {
+                        Some("shed") => 1,
+                        Some("block") | None => 0,
+                        Some(other) => {
+                            bail!("collection [{name}]: overload must be block|shed, got {other}")
+                        }
+                    },
+                    seed: section_u64(&f, name, "seed")?,
+                },
+            });
+        }
+        for e in &entries {
+            if e.id == 0 {
+                bail!("collection [{}]: id 0 is reserved for the default collection", e.name);
+            }
+            if e.id >= next_id {
+                bail!("collection [{}]: id {} >= next_id {next_id}", e.name, e.id);
+            }
+        }
+        Ok(Manifest { next_id, entries })
+    }
+
+    /// Atomically replace the manifest at `root` (temp + fsync + rename
+    /// + dir fsync). The previous manifest survives any crash intact.
+    pub fn store(&self, root: &Path) -> Result<()> {
+        let mut body = String::new();
+        body.push_str("# Named-collection registry; rewritten atomically on every\n");
+        body.push_str("# create/drop. The default collection (id 0) is implicit.\n");
+        body.push_str(&format!("next_id = {}\n", self.next_id));
+        for e in &self.entries {
+            body.push_str(&format!(
+                "\n[{}]\nid = {}\ndim = {}\nshards = {}\nreplicas = {}\nn_max = {}\n\
+                 window = {}\neta = {}\noverload = \"{}\"\nseed = {}\n",
+                e.name,
+                e.id,
+                e.spec.dim,
+                e.spec.shards,
+                e.spec.replicas,
+                e.spec.n_max,
+                e.spec.window,
+                e.spec.eta,
+                if e.spec.overload == 1 { "shed" } else { "block" },
+                e.spec.seed,
+            ));
+        }
+        fs::create_dir_all(root).context(format!("creating {}", root.display()))?;
+        let tmp = root.join(format!("{MANIFEST_FILE}.tmp"));
+        let live = root.join(MANIFEST_FILE);
+        {
+            let mut f =
+                fs::File::create(&tmp).context(format!("creating {}", tmp.display()))?;
+            f.write_all(body.as_bytes())
+                .context(format!("writing {}", tmp.display()))?;
+            f.sync_all().context(format!("fsyncing {}", tmp.display()))?;
+        }
+        fs::rename(&tmp, &live)
+            .context(format!("renaming {} over {}", tmp.display(), live.display()))?;
+        sync_dir(root)
+    }
+}
+
+fn section_u32(f: &ConfigFile, section: &str, key: &str) -> Result<u32> {
+    f.get(section, key)
+        .with_context(|| format!("collection [{section}] is missing {key}"))?
+        .parse()
+        .with_context(|| format!("collection [{section}]: {key} is not a u32"))
+}
+
+fn section_u64(f: &ConfigFile, section: &str, key: &str) -> Result<u64> {
+    f.get(section, key)
+        .with_context(|| format!("collection [{section}] is missing {key}"))?
+        .parse()
+        .with_context(|| format!("collection [{section}]: {key} is not a u64"))
+}
+
+fn section_f64(f: &ConfigFile, section: &str, key: &str) -> Result<f64> {
+    f.get(section, key)
+        .with_context(|| format!("collection [{section}] is missing {key}"))?
+        .parse()
+        .with_context(|| format!("collection [{section}]: {key} is not an f64"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(dim: u32) -> CollectionSpec {
+        CollectionSpec {
+            dim,
+            shards: 2,
+            replicas: 1,
+            n_max: 1000,
+            window: 256,
+            eta: 0.5,
+            overload: 0,
+            seed: 42,
+        }
+    }
+
+    #[test]
+    fn missing_manifest_is_the_empty_default() {
+        let dir = tempdir("manifest-missing");
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m, Manifest::default());
+        assert_eq!(m.next_id, 1, "named ids start above the default collection's 0");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn roundtrips_entries_and_next_id() {
+        let dir = tempdir("manifest-roundtrip");
+        let mut m = Manifest::default();
+        m.entries.push(ManifestEntry { id: 1, name: "news".into(), spec: spec(16) });
+        let mut shed = spec(8);
+        shed.overload = 1;
+        shed.eta = 0.25;
+        m.entries.push(ManifestEntry { id: 3, name: "turnstile-9".into(), spec: shed });
+        m.next_id = 4;
+        m.store(&dir).unwrap();
+        assert_eq!(Manifest::load(&dir).unwrap(), m);
+        // Overwrite survives (atomic replace, not append).
+        m.entries.pop();
+        m.next_id = 5;
+        m.store(&dir).unwrap();
+        assert_eq!(Manifest::load(&dir).unwrap(), m);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt_ids() {
+        let dir = tempdir("manifest-corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join(MANIFEST_FILE),
+            "next_id = 2\n[x]\nid = 0\ndim = 4\nshards = 1\nreplicas = 1\n\
+             n_max = 10\nwindow = 8\neta = 0.5\noverload = \"block\"\nseed = 1\n",
+        )
+        .unwrap();
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("id 0 is reserved"), "{err}");
+        std::fs::write(
+            dir.join(MANIFEST_FILE),
+            "next_id = 2\n[x]\nid = 7\ndim = 4\nshards = 1\nreplicas = 1\n\
+             n_max = 10\nwindow = 8\neta = 0.5\noverload = \"block\"\nseed = 1\n",
+        )
+        .unwrap();
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains(">= next_id"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn tempdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "sketchd-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+}

@@ -18,6 +18,11 @@
 //!   replay WAL records past its high-water mark; record sequence
 //!   numbers make replay idempotent. Sealed segments are GC'd after the
 //!   next successful checkpoint.
+//! * [`manifest`] — the multi-tenant registry file at the data-dir root:
+//!   which named collections exist, with what shape, under which never-
+//!   reused ids. Each collection keeps its own WAL/checkpoint subtree
+//!   (`<root>/<name>/`) under the exact discipline above; the manifest
+//!   only records existence, atomically (temp + rename + dir fsync).
 //!
 //! Durability points: with `FsyncPolicy::Always` every applied record is
 //! synced before the next command; otherwise flush barriers and every
@@ -28,10 +33,12 @@
 
 pub mod checkpoint;
 pub mod io;
+pub mod manifest;
 pub mod recovery;
 pub mod wal;
 
 pub use checkpoint::CheckpointData;
+pub use manifest::{Manifest, ManifestEntry};
 pub use recovery::Recovered;
 pub use wal::{WalOp, WalRecord, WalWriter};
 

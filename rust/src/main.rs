@@ -16,7 +16,10 @@ use anyhow::Result;
 use sublinear_sketch::baselines::{exact_kde_angular, exact_kde_pstable, ExactNn};
 use sublinear_sketch::cli::Args;
 use sublinear_sketch::config::Config;
-use sublinear_sketch::coordinator::{AnnAnswer, KdeKernel, SketchService};
+use sublinear_sketch::coordinator::{
+    AnnAnswer, CollectionSpec, KdeKernel, ServiceConfig, SketchService, Tenants,
+    DEFAULT_COLLECTION,
+};
 use sublinear_sketch::data::datasets;
 use sublinear_sketch::lsh::pstable::PStableLsh;
 use sublinear_sketch::lsh::srp::SrpLsh;
@@ -48,6 +51,7 @@ USAGE:
                 [--metrics-listen HOST:PORT] [--metrics-addr-file PATH]
                 [--slow-query-ms N] [--log-level error|warn|info|debug]
                 [--log-file PATH] [--shard-base N]
+                [--collections NAME:DIM[:N_MAX[:ETA]],...]
       Serve the coordinator over TCP (length-prefixed binary protocol,
       see rust/src/net/frame.rs). --listen 127.0.0.1:0 picks a free
       port; the bound address is printed and, with --addr-file, written
@@ -83,6 +87,16 @@ USAGE:
       the Hello handshake so a route front-end can assemble the nodes
       into one global shard space. Durability paths stay local (WAL
       dirs, health cells keyed 0..shards as before).
+      Multi-tenancy (protocol v6): the server hosts named COLLECTIONS,
+      each an isolated shard set with its own dim/n_max/eta and its own
+      data_dir/<name>/ subtree under the same WAL + checkpoint
+      discipline. --collections boot-creates them (idempotent against
+      the manifest on restart); clients manage them at runtime with
+      CreateCollection/DropCollection/ListCollections frames. The
+      \"default\" collection (id 0) is the base config's shard set, so
+      v5-shaped requests keep exactly their old semantics. Named
+      tenants export metrics with their name folded into each series
+      (sketchd_NAME_...) on the same scrape endpoint.
   sketchd route --listen HOST:PORT --nodes HOST:PORT,HOST:PORT[,...]
                 [--pool 2] [--timeout-ms 5000] [--retries 2]
                 [--addr-file PATH] [--metrics-listen HOST:PORT]
@@ -104,20 +118,23 @@ USAGE:
       router and cascades shutdown to every node.
   sketchd client --connect HOST:PORT [--n 10000] [--queries 256]
                  [--batch 64] [--connections 1] [--seed 42]
-                 [--timeout-ms 5000] [--retries 2]
+                 [--collection NAME] [--timeout-ms 5000] [--retries 2]
                  [--checkpoint] [--shutdown]
       Load generator: streams --n random inserts in --batch-sized
       batches over --connections sockets, then issues batched ANN + KDE
       queries (drawn from the inserted points) and reports throughput
-      and p50/p99 latency. --checkpoint cuts a durable checkpoint after
-      the load; --shutdown stops the server afterwards. --timeout-ms
-      bounds connect and every socket read/write (0 = no deadline);
-      --retries gives idempotent requests (queries, stats) that many
-      reconnect-and-resend attempts with jittered backoff.
+      and p50/p99 latency. --collection NAME targets a named collection
+      (default \"default\", the v5-compatible id-0 tenant); points are
+      generated at that collection's dim. --checkpoint cuts a durable
+      checkpoint after the load; --shutdown stops the server
+      afterwards. --timeout-ms bounds connect and every socket
+      read/write (0 = no deadline); --retries gives idempotent requests
+      (queries, stats) that many reconnect-and-resend attempts with
+      jittered backoff.
   sketchd client --connect HOST:PORT --query-load [--n 10000]
                  [--queries 2048] [--batch 1] [--connections 8]
-                 [--seed 42] [--timeout-ms 5000] [--retries 2]
-                 [--shutdown]
+                 [--seed 42] [--collection NAME] [--timeout-ms 5000]
+                 [--retries 2] [--shutdown]
       Query-plane load: seed --n points over one connection, then drive
       --queries ANN + KDE queries split across --connections concurrent
       sockets (batch size --batch; the default 1 exercises the server's
@@ -137,19 +154,106 @@ fn main() -> Result<()> {
         return Ok(());
     }
     match args.subcommand.as_deref() {
-        Some("info") => cmd_info(),
-        Some("ann") => cmd_ann(&args),
-        Some("kde") => cmd_kde(&args),
-        Some("serve") if args.has("listen") => cmd_serve_wire(&args),
-        Some("serve") => cmd_serve(&args),
-        Some("route") => cmd_route(&args),
-        Some("client") => cmd_client(&args),
+        Some("info") => {
+            args.validate_known(INFO_FLAGS)?;
+            cmd_info()
+        }
+        Some("ann") => {
+            args.validate_known(ANN_FLAGS)?;
+            cmd_ann(&args)
+        }
+        Some("kde") => {
+            args.validate_known(KDE_FLAGS)?;
+            cmd_kde(&args)
+        }
+        Some("serve") if args.has("listen") => {
+            args.validate_known(SERVE_WIRE_FLAGS)?;
+            cmd_serve_wire(&args)
+        }
+        Some("serve") => {
+            args.validate_known(SERVE_FLAGS)?;
+            cmd_serve(&args)
+        }
+        Some("route") => {
+            args.validate_known(ROUTE_FLAGS)?;
+            cmd_route(&args)
+        }
+        Some("client") => {
+            args.validate_known(CLIENT_FLAGS)?;
+            cmd_client(&args)
+        }
         _ => {
             print!("{USAGE}");
             Ok(())
         }
     }
 }
+
+/// Known flags per subcommand: anything else is a hard error with a
+/// "did you mean" hint (see `Args::validate_known` — silently ignoring
+/// a typo like `--replica 2` used to serve with the default).
+const INFO_FLAGS: &[&str] = &["help"];
+const ANN_FLAGS: &[&str] =
+    &["help", "dataset", "n", "queries", "eta", "r", "c", "w", "seed", "l-cap"];
+const KDE_FLAGS: &[&str] = &[
+    "help", "dataset", "n", "queries", "kernel", "rows", "p", "window", "eps", "seed", "width",
+    "range",
+];
+const SERVE_FLAGS: &[&str] = &["help", "n", "shards", "batch", "config", "use-pjrt", "seed"];
+const SERVE_WIRE_FLAGS: &[&str] = &[
+    "help",
+    "listen",
+    "dim",
+    "n",
+    "shards",
+    "replicas",
+    "eta",
+    "config",
+    "addr-file",
+    "use-pjrt",
+    "data-dir",
+    "fsync",
+    "checkpoint-every",
+    "checkpoint-secs",
+    "on-durability-loss",
+    "metrics-listen",
+    "metrics-addr-file",
+    "slow-query-ms",
+    "log-level",
+    "log-file",
+    "shard-base",
+    "collections",
+];
+const ROUTE_FLAGS: &[&str] = &[
+    "help",
+    "listen",
+    "nodes",
+    "pool",
+    "timeout-ms",
+    "retries",
+    "addr-file",
+    "metrics-listen",
+    "metrics-addr-file",
+    "slow-query-ms",
+    "log-level",
+    "log-file",
+];
+const CLIENT_FLAGS: &[&str] = &[
+    "help",
+    "connect",
+    "n",
+    "queries",
+    "batch",
+    "connections",
+    "seed",
+    "timeout-ms",
+    "retries",
+    "checkpoint",
+    "shutdown",
+    "query-load",
+    "metrics",
+    "collection",
+];
 
 fn cmd_info() -> Result<()> {
     println!("platform: {}", sublinear_sketch::runtime::platform_name()?);
@@ -357,10 +461,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let ds = datasets::news_like(n + 512, args.get_u64("seed", 42)?);
     let dim = ds.dim;
     let (stream, queries) = ds.split_queries(512);
-    let mut svc_cfg = config.service(dim, stream.len())?;
-    svc_cfg.shards = args.get_usize("shards", svc_cfg.shards)?;
-    svc_cfg.use_pjrt = svc_cfg.use_pjrt || args.has("use-pjrt");
-    svc_cfg.kde.kernel = KdeKernel::Angular;
+    // Config precedence: built-in defaults < --config file < flags.
+    let file_cfg = config.service(dim, stream.len())?;
+    let mut kde = file_cfg.kde.clone();
+    kde.kernel = KdeKernel::Angular;
+    let mut builder = file_cfg.to_builder().kde(kde);
+    if args.has("shards") {
+        builder = builder.shards(args.get_usize("shards", 0)?);
+    }
+    if args.has("use-pjrt") {
+        builder = builder.use_pjrt(true);
+    }
+    let svc_cfg = builder.build()?;
     let batch = args.get_usize("batch", 64)?;
 
     println!(
@@ -435,47 +547,100 @@ fn cmd_serve_wire(args: &Args) -> Result<()> {
     )?;
     let dim = args.get_usize("dim", 32)?;
     let n = args.get_usize("n", 100_000)?;
-    let config = match args.flag("config") {
-        Some(path) => Config::load(std::path::Path::new(path))?,
-        None => Config::empty(),
+    // Config precedence (documented contract): built-in defaults
+    // < --config file < explicit flags. The builder starts from
+    // whichever of the first two applies and each present flag
+    // overwrites its field; `build()` then validates the final combo
+    // with typed errors instead of a panic deep in the service.
+    let mut builder = match args.flag("config") {
+        Some(path) => Config::load(std::path::Path::new(path))?.service(dim, n)?.to_builder(),
+        None => ServiceConfig::builder(dim, n),
     };
-    let mut svc_cfg = config.service(dim, n)?;
-    svc_cfg.shards = args.get_usize("shards", svc_cfg.shards)?;
-    svc_cfg.replicas = args.get_usize("replicas", svc_cfg.replicas)?.max(1);
-    svc_cfg.shard_base = args.get_usize("shard-base", svc_cfg.shard_base)?;
-    svc_cfg.use_pjrt = svc_cfg.use_pjrt || args.has("use-pjrt");
+    if args.has("shards") {
+        builder = builder.shards(args.get_usize("shards", 0)?);
+    }
+    if args.has("replicas") {
+        builder = builder.replicas(args.get_usize("replicas", 1)?);
+    }
+    if args.has("shard-base") {
+        builder = builder.shard_base(args.get_usize("shard-base", 0)?);
+    }
+    if args.has("use-pjrt") {
+        builder = builder.use_pjrt(true);
+    }
     if args.has("eta") {
-        svc_cfg.ann.eta = args.get_f64("eta", svc_cfg.ann.eta)?;
+        builder = builder.eta(args.get_f64("eta", 0.0)?);
     } else if args.flag("config").is_none() {
         // Serving default: store everything (η = 0) so remote inserts are
         // queryable; opt into sublinear sampling with --eta or [ann] eta.
-        svc_cfg.ann.eta = 0.0;
+        builder = builder.eta(0.0);
     }
     if let Some(dir) = args.flag("data-dir") {
-        svc_cfg.data_dir = Some(std::path::PathBuf::from(dir));
+        builder = builder.data_dir(Some(std::path::PathBuf::from(dir)));
     }
     if let Some(mode) = args.flag("fsync") {
-        svc_cfg.fsync = sublinear_sketch::durability::FsyncPolicy::parse(mode)?;
+        builder = builder.fsync(sublinear_sketch::durability::FsyncPolicy::parse(mode)?);
     }
     if args.has("checkpoint-every") {
         let n = args.get_u64("checkpoint-every", 0)?;
-        svc_cfg.checkpoint_every_points = (n > 0).then_some(n);
+        builder = builder.checkpoint_every_points((n > 0).then_some(n));
     }
     if args.has("checkpoint-secs") {
         let t = args.get_u64("checkpoint-secs", 0)?;
-        svc_cfg.checkpoint_every_secs = (t > 0).then_some(t);
+        builder = builder.checkpoint_every_secs((t > 0).then_some(t));
     }
     if let Some(policy) = args.flag("on-durability-loss") {
-        svc_cfg.on_durability_loss =
-            sublinear_sketch::coordinator::DurabilityLossPolicy::parse(policy)?;
+        let policy = sublinear_sketch::coordinator::DurabilityLossPolicy::parse(policy)?;
+        builder = builder.on_durability_loss(policy);
     }
+    let svc_cfg = builder.build()?;
 
-    let (handle, join) = SketchService::spawn(svc_cfg.clone())?;
+    // The tenant registry boots the default collection from the base
+    // config (recovering the root data dir) and rehydrates every named
+    // collection recorded in the manifest.
+    let tenants = sublinear_sketch::util::sync::Arc::new(Tenants::open(svc_cfg.clone())?);
+    let handle = tenants.default_handle();
+    // Boot-time named collections: --collections NAME:DIM[:N_MAX[:ETA]],...
+    // (idempotent against the manifest — a recovered collection is
+    // reported, not recreated).
+    if let Some(list) = args.flag("collections") {
+        for part in list.split(',').filter(|s| !s.is_empty()) {
+            let mut it = part.split(':');
+            let cname = it.next().unwrap_or_default();
+            let cdim: u32 = it
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("--collections entry {part:?} needs NAME:DIM"))?
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--collections entry {part:?}: bad DIM"))?;
+            let cn: u64 = match it.next() {
+                Some(v) => v
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--collections entry {part:?}: bad N_MAX"))?,
+                None => n as u64,
+            };
+            let mut spec = CollectionSpec::for_dim(cdim, cn);
+            if let Some(v) = it.next() {
+                spec.eta = v
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--collections entry {part:?}: bad ETA"))?;
+            }
+            if tenants.resolve_name(cname).is_some() {
+                println!("[serve] collection {cname} already exists (recovered)");
+                continue;
+            }
+            let info = tenants.create(cname, &spec)?;
+            println!(
+                "[serve] collection {cname} id={} dim={cdim} n_max={cn} eta={}",
+                info.id, spec.eta
+            );
+        }
+    }
     let slow_ms = args.get_u64("slow-query-ms", 0)?;
     if slow_ms > 0 {
         handle.registry().slow_query_us.set(slow_ms.saturating_mul(1000));
     }
-    let server = WireServer::bind(listen, handle.clone())?;
+    let server =
+        WireServer::bind_tenants(listen, sublinear_sketch::util::sync::Arc::clone(&tenants))?;
     let addr = server.local_addr()?;
     // Wire ingest hashes shard-side (native batched kernels) — a PJRT
     // executor on the owning thread accelerates the query path only.
@@ -498,7 +663,10 @@ fn cmd_serve_wire(args: &Args) -> Result<()> {
         std::fs::write(path, addr.to_string())?;
     }
     if let Some(maddr) = args.flag("metrics-listen") {
-        let scraper = sublinear_sketch::net::MetricsListener::bind(maddr, handle.clone())?;
+        let scraper = sublinear_sketch::net::MetricsListener::bind_tenants(
+            maddr,
+            sublinear_sketch::util::sync::Arc::clone(&tenants),
+        )?;
         let bound = scraper.local_addr()?;
         println!("[serve] metrics on {bound} (Prometheus text exposition)");
         if let Some(path) = args.flag("metrics-addr-file") {
@@ -511,9 +679,7 @@ fn cmd_serve_wire(args: &Args) -> Result<()> {
     server.run()?;
     println!("[serve] shutdown requested, draining");
     let stats = handle.stats().unwrap_or_default();
-    handle.shutdown();
-    join.join()
-        .map_err(|_| anyhow::anyhow!("service thread panicked"))?;
+    tenants.shutdown();
     println!(
         "[serve] shutdown complete: inserts={} shed={} stored={} ann_q={} kde_q={}",
         stats.inserts, stats.shed, stats.stored_points, stats.ann_queries, stats.kde_queries
@@ -657,6 +823,7 @@ fn client_opts(args: &Args) -> Result<ClientOptions> {
 
 fn run_load(
     addr: &str,
+    coll_name: &str,
     n: usize,
     n_queries: usize,
     batch: usize,
@@ -664,7 +831,10 @@ fn run_load(
     opts: ClientOptions,
 ) -> Result<LoadResult> {
     let mut client = SketchClient::connect_with(addr, opts)?;
-    let dim = client.dim();
+    // One collection handle per connection: `--collection` targets a
+    // named tenant, the default name keeps v5 semantics (id 0).
+    let mut coll = client.collection(coll_name)?;
+    let dim = coll.dim();
     let mut rng = Rng::new(seed);
     let mut queries: Vec<Vec<f32>> = Vec::with_capacity(n_queries);
     let mut accepted = 0u64;
@@ -681,10 +851,10 @@ fn run_load(
             }
         }
         offered += m as u64;
-        accepted += client.insert_batch(&pts)?;
+        accepted += coll.insert_batch(&pts)?;
         left -= m;
     }
-    client.flush()?;
+    coll.flush()?;
     let mut out = LoadResult {
         offered,
         accepted,
@@ -697,13 +867,13 @@ fn run_load(
     for chunk in queries.chunks(batch.max(1)) {
         let answers = {
             let t0 = std::time::Instant::now();
-            let a = client.ann_query(chunk)?;
+            let a = coll.ann(chunk)?;
             out.ann_lat.record(t0.elapsed());
             a
         };
         out.answered += answers.iter().filter(|a| a.is_some()).count();
         let t0 = std::time::Instant::now();
-        let (_sums, densities) = client.kde_query(chunk)?;
+        let (_sums, densities) = coll.kde(chunk)?;
         out.kde_lat.record(t0.elapsed());
         out.kde_density_sum += densities.iter().sum::<f64>();
     }
@@ -742,20 +912,22 @@ fn run_query_load(args: &Args, addr: &str) -> Result<()> {
     let batch = args.get_usize("batch", 1)?.max(1);
     let conns = args.get_usize("connections", 8)?.max(1);
     let seed = args.get_u64("seed", 42)?;
+    let coll_name = args.get_str("collection", DEFAULT_COLLECTION);
     let opts = client_opts(args)?;
 
     // Seed the sketch so the query phase has answers to find; queries
     // are drawn from the inserted points.
     let mut feeder = SketchClient::connect_with(addr, opts)?;
-    let dim = feeder.dim();
+    let mut fcoll = feeder.collection(&coll_name)?;
+    let dim = fcoll.dim();
     let mut rng = Rng::new(seed);
     let pts: Vec<Vec<f32>> = (0..n)
         .map(|_| (0..dim).map(|_| rng.gaussian_f32()).collect())
         .collect();
     for chunk in pts.chunks(256) {
-        feeder.insert_batch(chunk)?;
+        fcoll.insert_batch(chunk)?;
     }
-    feeder.flush()?;
+    fcoll.flush()?;
     drop(feeder);
     println!(
         "[client] query-load: seeded {n} pts; {conns} connection(s) sharing {n_queries} queries (batch={batch})"
@@ -766,12 +938,14 @@ fn run_query_load(args: &Args, addr: &str) -> Result<()> {
     let workers: Vec<_> = (0..conns)
         .map(|t| {
             let addr = addr.to_string();
+            let coll_name = coll_name.clone();
             let pts = sublinear_sketch::util::sync::Arc::clone(&pts);
             let q_per = n_queries / conns + usize::from(t < n_queries % conns);
             let opts = ClientOptions { seed: opts.seed ^ (t as u64 + 1), ..opts };
             std::thread::spawn(
                 move || -> Result<(usize, usize, u64, LatencyRecorder, LatencyRecorder)> {
                     let mut c = SketchClient::connect_with(&addr, opts)?;
+                    let mut coll = c.collection(&coll_name)?;
                     let mut ann_lat = LatencyRecorder::new();
                     let mut kde_lat = LatencyRecorder::new();
                     let (mut answered, mut issued) = (0usize, 0usize);
@@ -781,19 +955,19 @@ fn run_query_load(args: &Args, addr: &str) -> Result<()> {
                         let m = batch.min(q_per - issued);
                         if m == 1 {
                             let q = &pts[i % pts.len()];
-                            let ans = ann_lat.time(|| c.ann_query_one(q))?;
+                            let ans = ann_lat.time(|| coll.ann_one(q))?;
                             answered += usize::from(ans.is_some());
                             fold_ann_checksum(&mut checksum, &ans);
-                            kde_lat.time(|| c.kde_query_one(q))?;
+                            kde_lat.time(|| coll.kde_one(q))?;
                         } else {
                             let chunk: Vec<Vec<f32>> =
                                 (0..m).map(|j| pts[(i + j) % pts.len()].clone()).collect();
-                            let ans = ann_lat.time(|| c.ann_query(&chunk))?;
+                            let ans = ann_lat.time(|| coll.ann(&chunk))?;
                             answered += ans.iter().filter(|a| a.is_some()).count();
                             for a in &ans {
                                 fold_ann_checksum(&mut checksum, a);
                             }
-                            kde_lat.time(|| c.kde_query(&chunk))?;
+                            kde_lat.time(|| coll.kde(&chunk))?;
                         }
                         issued += m;
                         i = i.wrapping_add(m * 37 + 1);
@@ -836,6 +1010,7 @@ fn run_query_load(args: &Args, addr: &str) -> Result<()> {
 fn cmd_client(args: &Args) -> Result<()> {
     let addr = args.require("connect")?.to_string();
     let opts = client_opts(args)?;
+    let coll_name = args.get_str("collection", DEFAULT_COLLECTION);
 
     // Probe connection: validates the handshake and reports the shape.
     let probe = SketchClient::connect_with(&addr, opts)?;
@@ -870,11 +1045,20 @@ fn cmd_client(args: &Args) -> Result<()> {
         let workers: Vec<_> = (0..conns)
             .map(|t| {
                 let addr = addr.clone();
+                let coll_name = coll_name.clone();
                 let per = n / conns + usize::from(t < n % conns);
                 let q_per = n_queries / conns + usize::from(t < n_queries % conns);
                 let opts = ClientOptions { seed: opts.seed ^ (t as u64 + 1), ..opts };
                 std::thread::spawn(move || {
-                    run_load(&addr, per, q_per, batch, seed ^ (0x9E37 * (t as u64 + 1)), opts)
+                    run_load(
+                        &addr,
+                        &coll_name,
+                        per,
+                        q_per,
+                        batch,
+                        seed ^ (0x9E37 * (t as u64 + 1)),
+                        opts,
+                    )
                 })
             })
             .collect();
@@ -909,7 +1093,8 @@ fn cmd_client(args: &Args) -> Result<()> {
     }
 
     let mut c = SketchClient::connect_with(&addr, opts)?;
-    let st = c.stats()?;
+    let mut coll = c.collection(&coll_name)?;
+    let st = coll.stats()?;
     println!(
         "[client] server stats: inserts={} shed={} stored={} ann_q={} kde_q={} sketch={:.2}MB",
         st.inserts,
@@ -926,7 +1111,7 @@ fn cmd_client(args: &Args) -> Result<()> {
         );
     }
     if args.has("checkpoint") {
-        let points = c.checkpoint()?;
+        let points = coll.checkpoint()?;
         println!("[client] checkpoint cut, covering {points} points");
     }
     if args.has("shutdown") {

@@ -352,6 +352,36 @@ impl MetricsSnapshot {
         }
         out
     }
+
+    /// The same snapshot with every series name prefixed `<tenant>_…`.
+    /// Multi-tenant serving publishes each named collection's registry
+    /// under its (sanitized) name; the default collection stays
+    /// unprefixed, so single-tenant dashboards keep working unchanged.
+    pub fn prefixed(mut self, tenant: &str) -> MetricsSnapshot {
+        // Collection names allow '-', Prometheus metric names don't.
+        let p: String = tenant
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+            .collect();
+        for (name, _) in &mut self.counters {
+            *name = format!("{p}_{name}");
+        }
+        for (name, _) in &mut self.gauges {
+            *name = format!("{p}_{name}");
+        }
+        for (name, _) in &mut self.histograms {
+            *name = format!("{p}_{name}");
+        }
+        self
+    }
+
+    /// Append another snapshot's series (used to fold per-tenant
+    /// registries into the one snapshot the `Metrics` op returns).
+    pub fn merge(&mut self, other: MetricsSnapshot) {
+        self.counters.extend(other.counters);
+        self.gauges.extend(other.gauges);
+        self.histograms.extend(other.histograms);
+    }
 }
 
 #[cfg(all(test, not(loom)))]
@@ -380,6 +410,21 @@ mod tests {
         assert_eq!(a, 1, "id 0 is reserved for 'client supplied none'");
         assert_eq!(b, 2);
         assert_eq!(c.get(), 2);
+    }
+
+    #[test]
+    fn prefixed_merge_folds_tenants_into_one_exposition() {
+        let a = Registry::new();
+        a.inserts.add(3);
+        let b = Registry::new();
+        b.inserts.add(7);
+        let mut snap = a.snapshot();
+        snap.merge(b.snapshot().prefixed("tenant-b"));
+        let text = snap.to_prometheus();
+        assert!(text.contains("sketchd_inserts_total 3"), "{text}");
+        // '-' is not a legal Prometheus name char — sanitized to '_'.
+        assert!(text.contains("sketchd_tenant_b_inserts_total 7"), "{text}");
+        assert!(!text.contains("tenant-b"), "{text}");
     }
 
     #[test]

@@ -4,6 +4,13 @@
 //! for pipelined load, open several clients — the server runs one reader
 //! thread per connection and the shard mailboxes do the fan-in.
 //!
+//! Multi-tenancy (v6): every data-plane request is scoped to a
+//! collection id. The ergonomic surface is [`SketchClient::collection`],
+//! which resolves a name to a [`Collection`] handle once and stamps the
+//! id on every call; the flat pre-v6 methods survive as deprecated
+//! shims against the default collection (id 0), so v5-era call sites
+//! keep compiling and keep their exact semantics.
+//!
 //! Resilience: [`ClientOptions`] bounds every socket operation (connect,
 //! read, write) with one deadline, so a hung or partitioned server costs
 //! a timely error instead of a stuck caller. Idempotent requests
@@ -20,7 +27,10 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::coordinator::{AnnAnswer, ServiceStats, ShardAnnResult, ShardKdeResult};
+use crate::coordinator::{
+    AnnAnswer, CollectionInfo, CollectionSpec, ServiceStats, ShardAnnResult, ShardKdeResult,
+    DEFAULT_COLLECTION,
+};
 use crate::metrics::registry::MetricsSnapshot;
 
 use super::frame::{
@@ -152,7 +162,9 @@ impl SketchClient {
         Ok(())
     }
 
-    /// Vector dimensionality of the remote service.
+    /// Vector dimensionality of the remote service's DEFAULT collection
+    /// (named collections each carry their own dim — see
+    /// [`Collection::dim`] after [`Self::collection`]).
     pub fn dim(&self) -> usize {
         self.dim
     }
@@ -232,144 +244,266 @@ impl SketchClient {
         backoff_delay(&mut self.jitter, self.opts.backoff, attempt)
     }
 
-    /// Offer one point; true iff it was accepted (not shed).
-    pub fn insert(&mut self, x: &[f32]) -> Result<bool> {
-        match self.call_raw(&encode_insert(x))? {
+    // ---- collection-scoped core (v6) -------------------------------
+
+    /// Offer one point to collection `coll`; true iff accepted.
+    pub fn insert_in(&mut self, coll: u32, x: &[f32]) -> Result<bool> {
+        match self.call_raw(&encode_insert(coll, x))? {
             Response::Ack { accepted } => Ok(accepted == 1),
             other => bail!("insert got {other:?}"),
         }
     }
 
-    /// Offer a batch; returns the number of points accepted.
-    pub fn insert_batch(&mut self, batch: &[Vec<f32>]) -> Result<u64> {
-        match self.call_raw(&encode_insert_batch(batch))? {
+    /// Offer a batch to collection `coll`; returns points accepted.
+    pub fn insert_batch_in(&mut self, coll: u32, batch: &[Vec<f32>]) -> Result<u64> {
+        match self.call_raw(&encode_insert_batch(coll, batch))? {
             Response::Ack { accepted } => Ok(accepted),
             other => bail!("insert_batch got {other:?}"),
         }
     }
 
-    /// Turnstile delete; true iff a stored copy was removed.
-    pub fn delete(&mut self, x: &[f32]) -> Result<bool> {
-        match self.call_raw(&encode_delete(x))? {
+    /// Turnstile delete in collection `coll`; true iff a copy was removed.
+    pub fn delete_in(&mut self, coll: u32, x: &[f32]) -> Result<bool> {
+        match self.call_raw(&encode_delete(coll, x))? {
             Response::Deleted { removed } => Ok(removed),
             other => bail!("delete got {other:?}"),
         }
     }
 
-    /// Batched (c, r)-ANN; answers align with `queries`. Idempotent —
-    /// retried under the client's retry budget.
-    pub fn ann_query(&mut self, queries: &[Vec<f32>]) -> Result<Vec<Option<AnnAnswer>>> {
-        match self.call_retry(&encode_ann_query(queries))? {
+    /// Batched (c, r)-ANN against collection `coll`; answers align with
+    /// `queries`. Idempotent — retried under the retry budget.
+    pub fn ann_query_in(
+        &mut self,
+        coll: u32,
+        queries: &[Vec<f32>],
+    ) -> Result<Vec<Option<AnnAnswer>>> {
+        match self.call_retry(&encode_ann_query(coll, queries))? {
             Response::AnnAnswers(answers) => Ok(answers),
             other => bail!("ann_query got {other:?}"),
         }
     }
 
-    /// Batched sliding-window KDE: (kernel sums, densities). Idempotent —
-    /// retried under the client's retry budget.
-    pub fn kde_query(&mut self, queries: &[Vec<f32>]) -> Result<(Vec<f64>, Vec<f64>)> {
-        match self.call_retry(&encode_kde_query(queries))? {
+    /// [`Self::ann_query_in`] with a caller-chosen trace id: the server
+    /// stamps its slow-query log with this id, so a client can tie its
+    /// own latency record to the server's stage breakdown (v4).
+    pub fn ann_query_traced_in(
+        &mut self,
+        coll: u32,
+        queries: &[Vec<f32>],
+        trace: u64,
+    ) -> Result<Vec<Option<AnnAnswer>>> {
+        match self.call_retry(&encode_ann_query_traced(coll, queries, trace))? {
+            Response::AnnAnswers(answers) => Ok(answers),
+            other => bail!("ann_query got {other:?}"),
+        }
+    }
+
+    /// Batched sliding-window KDE against collection `coll`:
+    /// (kernel sums, densities). Idempotent — retried.
+    pub fn kde_query_in(
+        &mut self,
+        coll: u32,
+        queries: &[Vec<f32>],
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        match self.call_retry(&encode_kde_query(coll, queries))? {
             Response::KdeAnswers { sums, densities } => Ok((sums, densities)),
             other => bail!("kde_query got {other:?}"),
         }
     }
 
-    /// [`Self::ann_query`] with a caller-chosen trace id: the server
-    /// stamps its slow-query log with this id, so a client can tie its
-    /// own latency record to the server's stage breakdown (v4).
-    pub fn ann_query_traced(
-        &mut self,
-        queries: &[Vec<f32>],
-        trace: u64,
-    ) -> Result<Vec<Option<AnnAnswer>>> {
-        match self.call_retry(&encode_ann_query_traced(queries, trace))? {
-            Response::AnnAnswers(answers) => Ok(answers),
-            other => bail!("ann_query got {other:?}"),
-        }
-    }
-
-    /// v5 scatter/gather: RAW per-shard ANN partials in the node's
-    /// global shard order, trace id propagated across the hop. This is
-    /// the router's query primitive — a front-end merges partials from
-    /// every member exactly once. Idempotent — retried under the
-    /// client's retry budget.
+    /// v5/v6 scatter/gather: RAW per-shard ANN partials of collection
+    /// `coll` in the node's global shard order, trace id propagated
+    /// across the hop. This is the router's query primitive — a
+    /// front-end merges partials from every member exactly once.
+    /// Idempotent — retried under the client's retry budget.
     pub fn ann_partial(
         &mut self,
+        coll: u32,
         queries: &[Vec<f32>],
         trace: u64,
     ) -> Result<Vec<ShardAnnResult>> {
-        match self.call_retry(&encode_ann_partial(queries, trace))? {
+        match self.call_retry(&encode_ann_partial(coll, queries, trace))? {
             Response::AnnPartials(parts) => Ok(parts),
             other => bail!("ann_partial got {other:?}"),
         }
     }
 
-    /// v5 scatter/gather: RAW per-shard KDE partials (kernel sums +
-    /// window population, no division — the merging tier folds).
-    /// Idempotent — retried under the client's retry budget.
+    /// v5/v6 scatter/gather: RAW per-shard KDE partials of collection
+    /// `coll` (kernel sums + window population, no division — the
+    /// merging tier folds). Idempotent — retried.
     pub fn kde_partial(
         &mut self,
+        coll: u32,
         queries: &[Vec<f32>],
         trace: u64,
     ) -> Result<Vec<ShardKdeResult>> {
-        match self.call_retry(&encode_kde_partial(queries, trace))? {
+        match self.call_retry(&encode_kde_partial(coll, queries, trace))? {
             Response::KdePartials(parts) => Ok(parts),
             other => bail!("kde_partial got {other:?}"),
         }
     }
 
-    /// One ANN query. Server-side, singletons from concurrent
-    /// connections coalesce into shared scatters — this is the request
-    /// shape the query-load generator drives.
-    pub fn ann_query_one(&mut self, q: &[f32]) -> Result<Option<AnnAnswer>> {
-        let mut answers = self.ann_query(&[q.to_vec()])?;
-        match answers.pop() {
-            Some(a) if answers.is_empty() => Ok(a),
-            _ => bail!("ann_query_one expected exactly one answer"),
-        }
-    }
-
-    /// One KDE query → (kernel sum, density).
-    pub fn kde_query_one(&mut self, q: &[f32]) -> Result<(f64, f64)> {
-        let (sums, dens) = self.kde_query(&[q.to_vec()])?;
-        match (sums.as_slice(), dens.as_slice()) {
-            (&[s], &[d]) => Ok((s, d)),
-            _ => bail!("kde_query_one expected exactly one answer"),
-        }
-    }
-
-    /// Aggregate service statistics (drains mailboxes server-side).
-    /// Idempotent — retried under the client's retry budget.
-    pub fn stats(&mut self) -> Result<ServiceStats> {
-        match self.call_retry(&Request::Stats.encode())? {
+    /// Aggregate statistics of collection `coll` (drains mailboxes
+    /// server-side). Idempotent — retried under the retry budget.
+    pub fn stats_in(&mut self, coll: u32) -> Result<ServiceStats> {
+        match self.call_retry(&Request::Stats { coll }.encode())? {
             Response::Stats(st) => Ok(st),
             other => bail!("stats got {other:?}"),
         }
     }
 
-    /// Full named-series metrics snapshot (counters, gauges, stage and
-    /// per-op histograms). Idempotent — retried under the retry budget.
-    pub fn metrics(&mut self) -> Result<MetricsSnapshot> {
-        match self.call_retry(&Request::Metrics.encode())? {
-            Response::Metrics(m) => Ok(m),
-            other => bail!("metrics got {other:?}"),
-        }
-    }
-
-    /// Barrier: everything this connection inserted is applied on return.
-    pub fn flush(&mut self) -> Result<()> {
-        match self.call(&Request::Flush)? {
+    /// Barrier on collection `coll`: everything this connection inserted
+    /// into it is applied on return.
+    pub fn flush_in(&mut self, coll: u32) -> Result<()> {
+        match self.call(&Request::Flush { coll })? {
             Response::Ack { .. } => Ok(()),
             other => bail!("flush got {other:?}"),
         }
     }
 
-    /// Cut a durable whole-service checkpoint on the server (requires it
-    /// to run with `--data-dir`). Returns the points it covers.
-    pub fn checkpoint(&mut self) -> Result<u64> {
-        match self.call(&Request::Checkpoint)? {
+    /// Cut a durable checkpoint of collection `coll` on the server
+    /// (requires `--data-dir`). Returns the points it covers.
+    pub fn checkpoint_in(&mut self, coll: u32) -> Result<u64> {
+        match self.call(&Request::Checkpoint { coll })? {
             Response::Checkpointed { points } => Ok(points),
             other => bail!("checkpoint got {other:?}"),
+        }
+    }
+
+    // ---- collection management (v6) --------------------------------
+
+    /// Create a named collection with its own geometry; returns its
+    /// assigned id. Names are `[A-Za-z0-9_-]`, 1–64 chars, first char
+    /// alphanumeric or `_`; `"default"` is reserved.
+    pub fn create_collection(&mut self, name: &str, spec: &CollectionSpec) -> Result<CollectionInfo> {
+        let req = Request::CreateCollection { name: name.to_string(), spec: spec.clone() };
+        match self.call(&req)? {
+            Response::Collections(mut cols) => {
+                cols.pop().ok_or_else(|| anyhow!("create_collection got an empty listing"))
+            }
+            other => bail!("create_collection got {other:?}"),
+        }
+    }
+
+    /// Drop a named collection and its on-disk subtree. The default
+    /// collection cannot be dropped.
+    pub fn drop_collection(&mut self, name: &str) -> Result<()> {
+        match self.call(&Request::DropCollection { name: name.to_string() })? {
+            Response::Ack { .. } => Ok(()),
+            other => bail!("drop_collection got {other:?}"),
+        }
+    }
+
+    /// Every live collection, default included. Idempotent — retried.
+    pub fn list_collections(&mut self) -> Result<Vec<CollectionInfo>> {
+        match self.call_retry(&Request::ListCollections.encode())? {
+            Response::Collections(cols) => Ok(cols),
+            other => bail!("list_collections got {other:?}"),
+        }
+    }
+
+    /// Resolve `name` to a [`Collection`] handle (one `ListCollections`
+    /// round trip; `"default"` short-circuits to id 0). The handle
+    /// borrows this client — drop it to get the client back.
+    pub fn collection(&mut self, name: &str) -> Result<Collection<'_>> {
+        if name == DEFAULT_COLLECTION {
+            return Ok(self.default_collection());
+        }
+        let info = self
+            .list_collections()?
+            .into_iter()
+            .find(|c| c.name == name)
+            .ok_or_else(|| anyhow!("no collection named {name:?} on the server"))?;
+        Ok(Collection { dim: info.dim as usize, id: info.id, client: self })
+    }
+
+    /// The default collection (id 0) — what every v5 client talked to.
+    pub fn default_collection(&mut self) -> Collection<'_> {
+        let dim = self.dim;
+        Collection { dim, id: 0, client: self }
+    }
+
+    // ---- deprecated flat shims (pre-v6 surface, default collection) --
+
+    /// Offer one point; true iff it was accepted (not shed).
+    #[deprecated(note = "use `default_collection().insert(..)` or a named `collection(..)` handle")]
+    pub fn insert(&mut self, x: &[f32]) -> Result<bool> {
+        self.insert_in(0, x)
+    }
+
+    /// Offer a batch; returns the number of points accepted.
+    #[deprecated(note = "use `default_collection().insert_batch(..)` or a named handle")]
+    pub fn insert_batch(&mut self, batch: &[Vec<f32>]) -> Result<u64> {
+        self.insert_batch_in(0, batch)
+    }
+
+    /// Turnstile delete; true iff a stored copy was removed.
+    #[deprecated(note = "use `default_collection().delete(..)` or a named handle")]
+    pub fn delete(&mut self, x: &[f32]) -> Result<bool> {
+        self.delete_in(0, x)
+    }
+
+    /// Batched (c, r)-ANN; answers align with `queries`.
+    #[deprecated(note = "use `default_collection().ann(..)` or a named handle")]
+    pub fn ann_query(&mut self, queries: &[Vec<f32>]) -> Result<Vec<Option<AnnAnswer>>> {
+        self.ann_query_in(0, queries)
+    }
+
+    /// Batched sliding-window KDE: (kernel sums, densities).
+    #[deprecated(note = "use `default_collection().kde(..)` or a named handle")]
+    pub fn kde_query(&mut self, queries: &[Vec<f32>]) -> Result<(Vec<f64>, Vec<f64>)> {
+        self.kde_query_in(0, queries)
+    }
+
+    /// Traced batched ANN against the default collection.
+    #[deprecated(note = "use `default_collection().ann_traced(..)` or a named handle")]
+    pub fn ann_query_traced(
+        &mut self,
+        queries: &[Vec<f32>],
+        trace: u64,
+    ) -> Result<Vec<Option<AnnAnswer>>> {
+        self.ann_query_traced_in(0, queries, trace)
+    }
+
+    /// One ANN query against the default collection.
+    #[deprecated(note = "use `default_collection().ann_one(..)` or a named handle")]
+    pub fn ann_query_one(&mut self, q: &[f32]) -> Result<Option<AnnAnswer>> {
+        self.default_collection().ann_one(q)
+    }
+
+    /// One KDE query against the default collection → (sum, density).
+    #[deprecated(note = "use `default_collection().kde_one(..)` or a named handle")]
+    pub fn kde_query_one(&mut self, q: &[f32]) -> Result<(f64, f64)> {
+        self.default_collection().kde_one(q)
+    }
+
+    /// Default-collection statistics.
+    #[deprecated(note = "use `default_collection().stats()` or a named handle")]
+    pub fn stats(&mut self) -> Result<ServiceStats> {
+        self.stats_in(0)
+    }
+
+    /// Default-collection ingest barrier.
+    #[deprecated(note = "use `default_collection().flush()` or a named handle")]
+    pub fn flush(&mut self) -> Result<()> {
+        self.flush_in(0)
+    }
+
+    /// Default-collection durable checkpoint.
+    #[deprecated(note = "use `default_collection().checkpoint()` or a named handle")]
+    pub fn checkpoint(&mut self) -> Result<u64> {
+        self.checkpoint_in(0)
+    }
+
+    // ---- process-scoped ops (not collection-scoped) ----------------
+
+    /// Full named-series metrics snapshot (counters, gauges, stage and
+    /// per-op histograms), all collections included (named tenants'
+    /// series carry a `<name>_` prefix). Idempotent — retried.
+    pub fn metrics(&mut self) -> Result<MetricsSnapshot> {
+        match self.call_retry(&Request::Metrics.encode())? {
+            Response::Metrics(m) => Ok(m),
+            other => bail!("metrics got {other:?}"),
         }
     }
 
@@ -379,6 +513,102 @@ impl SketchClient {
             Response::Ack { .. } => Ok(()),
             other => bail!("shutdown got {other:?}"),
         }
+    }
+}
+
+/// A collection-scoped view of a [`SketchClient`]: same connection, same
+/// deadlines and retry budget, every request stamped with the
+/// collection's id. Obtained from [`SketchClient::collection`] /
+/// [`SketchClient::default_collection`]; borrows the client mutably, so
+/// re-resolve (cheap for `"default"`, one round trip otherwise) when
+/// interleaving tenants on one connection.
+pub struct Collection<'a> {
+    client: &'a mut SketchClient,
+    id: u32,
+    dim: usize,
+}
+
+impl Collection<'_> {
+    /// Wire id of this collection (0 = default).
+    pub fn id(&self) -> u32 {
+        self.id
+    }
+
+    /// Vector dimensionality of THIS collection (named collections may
+    /// differ from the default one's).
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Offer one point; true iff it was accepted (not shed).
+    pub fn insert(&mut self, x: &[f32]) -> Result<bool> {
+        self.client.insert_in(self.id, x)
+    }
+
+    /// Offer a batch; returns the number of points accepted.
+    pub fn insert_batch(&mut self, batch: &[Vec<f32>]) -> Result<u64> {
+        self.client.insert_batch_in(self.id, batch)
+    }
+
+    /// Turnstile delete; true iff a stored copy was removed.
+    pub fn delete(&mut self, x: &[f32]) -> Result<bool> {
+        self.client.delete_in(self.id, x)
+    }
+
+    /// Batched (c, r)-ANN; answers align with `queries`.
+    pub fn ann(&mut self, queries: &[Vec<f32>]) -> Result<Vec<Option<AnnAnswer>>> {
+        self.client.ann_query_in(self.id, queries)
+    }
+
+    /// [`Self::ann`] with a caller-chosen trace id for the server's
+    /// slow-query log.
+    pub fn ann_traced(
+        &mut self,
+        queries: &[Vec<f32>],
+        trace: u64,
+    ) -> Result<Vec<Option<AnnAnswer>>> {
+        self.client.ann_query_traced_in(self.id, queries, trace)
+    }
+
+    /// One ANN query. Server-side, singletons from concurrent
+    /// connections coalesce into shared scatters per collection.
+    pub fn ann_one(&mut self, q: &[f32]) -> Result<Option<AnnAnswer>> {
+        let mut answers = self.ann(&[q.to_vec()])?;
+        match answers.pop() {
+            Some(a) if answers.is_empty() => Ok(a),
+            _ => bail!("ann_one expected exactly one answer"),
+        }
+    }
+
+    /// Batched sliding-window KDE: (kernel sums, densities).
+    pub fn kde(&mut self, queries: &[Vec<f32>]) -> Result<(Vec<f64>, Vec<f64>)> {
+        self.client.kde_query_in(self.id, queries)
+    }
+
+    /// One KDE query → (kernel sum, density).
+    pub fn kde_one(&mut self, q: &[f32]) -> Result<(f64, f64)> {
+        let (sums, dens) = self.kde(&[q.to_vec()])?;
+        match (sums.as_slice(), dens.as_slice()) {
+            (&[s], &[d]) => Ok((s, d)),
+            _ => bail!("kde_one expected exactly one answer"),
+        }
+    }
+
+    /// Aggregate statistics of this collection.
+    pub fn stats(&mut self) -> Result<ServiceStats> {
+        self.client.stats_in(self.id)
+    }
+
+    /// Barrier: everything this connection inserted into this collection
+    /// is applied on return.
+    pub fn flush(&mut self) -> Result<()> {
+        self.client.flush_in(self.id)
+    }
+
+    /// Cut a durable checkpoint of this collection (server must run with
+    /// `--data-dir`). Returns the points it covers.
+    pub fn checkpoint(&mut self) -> Result<u64> {
+        self.client.checkpoint_in(self.id)
     }
 }
 

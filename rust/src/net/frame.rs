@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! frame   := u32 LE payload length | payload
-//! payload := u8 version (=5) | u8 opcode | body
+//! payload := u8 version (5 or 6) | u8 opcode | body
 //! ```
 //!
 //! All integers are little-endian; floats are IEEE-754 bit patterns, so a
@@ -23,7 +23,9 @@ use std::io::{Read, Write};
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::{AnnAnswer, ServiceStats, ShardAnnResult, ShardKdeResult};
+use crate::coordinator::{
+    AnnAnswer, CollectionInfo, CollectionSpec, ServiceStats, ShardAnnResult, ShardKdeResult,
+};
 use crate::metrics::registry::{HistoSnapshot, MetricsSnapshot};
 
 /// Protocol version (first payload byte of every frame). v2 added the
@@ -37,8 +39,19 @@ use crate::metrics::registry::{HistoSnapshot, MetricsSnapshot};
 /// multi-node front-end to merge — f64 folds only happen at the
 /// merging tier, so a routed answer stays bit-identical to an
 /// in-process one) and the node's first global shard (`shard_base`) to
-/// `Hello`.
-pub const PROTOCOL_VERSION: u8 = 5;
+/// `Hello`; v6 added named collections — a u32 collection id LEADS the
+/// body of every ingest/query/flush/checkpoint/stats op, plus
+/// `CreateCollection`/`DropCollection`/`ListCollections` and their
+/// [`Response::Collections`] reply. The decoder still accepts
+/// [`COMPAT_PROTOCOL_VERSION`] frames: a v5 body has no collection id,
+/// so it decodes as collection 0 (the default collection) and an old
+/// client's semantics are preserved byte-for-byte under the old ops.
+pub const PROTOCOL_VERSION: u8 = 6;
+
+/// Oldest version the decoder still accepts. v5 frames carry no
+/// collection id; every collection-scoped op decodes them as
+/// collection 0.
+pub const COMPAT_PROTOCOL_VERSION: u8 = 5;
 
 /// Hard cap on one frame's payload (64 MiB).
 pub const MAX_FRAME_BYTES: usize = 1 << 26;
@@ -62,6 +75,9 @@ mod op {
     pub(super) const METRICS: u8 = 11;
     pub(super) const ANN_PARTIAL: u8 = 12;
     pub(super) const KDE_PARTIAL: u8 = 13;
+    pub(super) const CREATE_COLLECTION: u8 = 14;
+    pub(super) const DROP_COLLECTION: u8 = 15;
+    pub(super) const LIST_COLLECTIONS: u8 = 16;
 
     pub(super) const R_HELLO: u8 = 128;
     pub(super) const R_ACK: u8 = 129;
@@ -74,36 +90,51 @@ mod op {
     pub(super) const R_METRICS: u8 = 136;
     pub(super) const R_ANN_PARTIAL: u8 = 137;
     pub(super) const R_KDE_PARTIAL: u8 = 138;
+    pub(super) const R_COLLECTIONS: u8 = 139;
 }
 
-/// Client → server frames.
+/// Client → server frames. Every collection-scoped op carries `coll`,
+/// the u32 collection id LEADING its body (v6); a v5 frame has no id
+/// byte and decodes as `coll: 0`, the default collection.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
-    /// Handshake: the reply carries protocol version + service shape.
+    /// Handshake: the reply carries protocol version + service shape
+    /// (of the default collection).
     Hello,
-    Insert(Vec<f32>),
-    InsertBatch(Vec<Vec<f32>>),
-    Delete(Vec<f32>),
+    Insert { coll: u32, x: Vec<f32> },
+    InsertBatch { coll: u32, xs: Vec<Vec<f32>> },
+    Delete { coll: u32, x: Vec<f32> },
     /// `trace` 0 means "server, mint me a trace id"; any other value is
     /// echoed into the server's slow-query log so a client can correlate
     /// its own records with the server's stage timings (v4).
-    AnnQuery { queries: Vec<Vec<f32>>, trace: u64 },
-    KdeQuery { queries: Vec<Vec<f32>>, trace: u64 },
+    AnnQuery { coll: u32, queries: Vec<Vec<f32>>, trace: u64 },
+    KdeQuery { coll: u32, queries: Vec<Vec<f32>>, trace: u64 },
     /// v5 scatter/gather: answer with RAW per-shard ANN partials (in
     /// global shard order) instead of the merged answer, so a routing
     /// front-end can fold partials from many nodes exactly once. The
-    /// trace id propagates across the hop — both tiers log the same id.
-    AnnPartial { queries: Vec<Vec<f32>>, trace: u64 },
+    /// trace id propagates across the hop — both tiers log the same id
+    /// — and since v6 so does the collection id.
+    AnnPartial { coll: u32, queries: Vec<Vec<f32>>, trace: u64 },
     /// v5 scatter/gather: RAW per-shard KDE partials (kernel sums +
     /// window population, no division) — f64 addition is not
     /// associative, so only the merging tier folds.
-    KdePartial { queries: Vec<Vec<f32>>, trace: u64 },
-    Stats,
-    /// Fetch the full metrics snapshot (every named series, v4).
+    KdePartial { coll: u32, queries: Vec<Vec<f32>>, trace: u64 },
+    Stats { coll: u32 },
+    /// Fetch the full metrics snapshot (every named series, v4). The
+    /// snapshot is the default collection's registry; named tenants are
+    /// scraped with a name prefix on the HTTP endpoint.
     Metrics,
-    Flush,
-    /// Cut a durable whole-service checkpoint (WAL + sketch images).
-    Checkpoint,
+    Flush { coll: u32 },
+    /// Cut a durable checkpoint of ONE collection (WAL + sketch images
+    /// — a consistent cut per collection).
+    Checkpoint { coll: u32 },
+    /// v6: create a named collection with its own config; replies with
+    /// a one-entry [`Response::Collections`] carrying the assigned id.
+    CreateCollection { name: String, spec: CollectionSpec },
+    /// v6: drop a named collection and its `data_dir/<name>/` subtree.
+    DropCollection { name: String },
+    /// v6: list every live collection (the default one included).
+    ListCollections,
     Shutdown,
 }
 
@@ -144,6 +175,9 @@ pub enum Response {
     Metrics(MetricsSnapshot),
     /// Checkpoint cut; `points` is how many inserts it covers.
     Checkpointed { points: u64 },
+    /// v6 reply to `CreateCollection` (one entry: the new collection)
+    /// and `ListCollections` (every live collection, id order).
+    Collections(Vec<CollectionInfo>),
     Error(String),
 }
 
@@ -301,6 +335,60 @@ fn read_metrics(c: &mut Cursor<'_>) -> Result<MetricsSnapshot> {
     Ok(MetricsSnapshot { counters, gauges, histograms })
 }
 
+/// [`put_stats`]-style single field list for [`CollectionSpec`] (the
+/// `CreateCollection` body after the name): encoder and decoder are
+/// adjacent and share the ordering, so a spec field cannot drift.
+fn put_spec(out: &mut Vec<u8>, s: &CollectionSpec) {
+    put_u32(out, s.dim);
+    put_u32(out, s.shards);
+    put_u32(out, s.replicas);
+    put_u64(out, s.n_max);
+    put_u64(out, s.window);
+    out.extend_from_slice(&s.eta.to_le_bytes());
+    out.push(s.overload);
+    put_u64(out, s.seed);
+}
+
+fn read_spec(c: &mut Cursor<'_>) -> Result<CollectionSpec> {
+    Ok(CollectionSpec {
+        dim: c.u32()?,
+        shards: c.u32()?,
+        replicas: c.u32()?,
+        n_max: c.u64()?,
+        window: c.u64()?,
+        eta: c.f64()?,
+        overload: c.u8()?,
+        seed: c.u64()?,
+    })
+}
+
+fn put_collections(out: &mut Vec<u8>, cols: &[CollectionInfo]) {
+    put_u32(out, cols.len() as u32);
+    for info in cols {
+        put_u32(out, info.id);
+        put_str(out, &info.name);
+        put_u32(out, info.dim);
+        put_u32(out, info.shards);
+        put_u32(out, info.replicas);
+    }
+}
+
+fn read_collections(c: &mut Cursor<'_>) -> Result<Vec<CollectionInfo>> {
+    // Min item bytes: id + name length prefix + dim + shards + replicas.
+    let n = c.count(20)?;
+    let mut cols = Vec::with_capacity(n.min(DECODE_PREALLOC_CAP));
+    for _ in 0..n {
+        cols.push(CollectionInfo {
+            id: c.u32()?,
+            name: read_str(c)?,
+            dim: c.u32()?,
+            shards: c.u32()?,
+            replicas: c.u32()?,
+        });
+    }
+    Ok(cols)
+}
+
 // ---------------------------------------------------------------- encode
 
 fn put_u32(out: &mut Vec<u8>, v: u32) {
@@ -329,81 +417,109 @@ fn payload(opcode: u8) -> Vec<u8> {
     vec![PROTOCOL_VERSION, opcode]
 }
 
-fn encode_vec_req(opcode: u8, v: &[f32]) -> Vec<u8> {
+/// v6 collection-scoped payload: the collection id LEADS the body.
+fn coll_payload(opcode: u8, coll: u32) -> Vec<u8> {
     let mut out = payload(opcode);
+    put_u32(&mut out, coll);
+    out
+}
+
+fn encode_vec_req(opcode: u8, coll: u32, v: &[f32]) -> Vec<u8> {
+    let mut out = coll_payload(opcode, coll);
     put_vec_f32(&mut out, v);
     out
 }
 
-fn encode_vecs_req(opcode: u8, vs: &[Vec<f32>]) -> Vec<u8> {
-    let mut out = payload(opcode);
+fn encode_vecs_req(opcode: u8, coll: u32, vs: &[Vec<f32>]) -> Vec<u8> {
+    let mut out = coll_payload(opcode, coll);
     put_vecs(&mut out, vs);
     out
 }
 
-fn encode_traced_vecs_req(opcode: u8, vs: &[Vec<f32>], trace: u64) -> Vec<u8> {
-    let mut out = payload(opcode);
+fn encode_traced_vecs_req(opcode: u8, coll: u32, vs: &[Vec<f32>], trace: u64) -> Vec<u8> {
+    let mut out = coll_payload(opcode, coll);
     put_u64(&mut out, trace);
     put_vecs(&mut out, vs);
     out
 }
 
 /// Borrowed request encoders — the client hot path frames payloads
-/// without first cloning them into an owned [`Request`].
-pub fn encode_insert(v: &[f32]) -> Vec<u8> {
-    encode_vec_req(op::INSERT, v)
+/// without first cloning them into an owned [`Request`]. `coll` is the
+/// target collection id (0 = the default collection).
+pub fn encode_insert(coll: u32, v: &[f32]) -> Vec<u8> {
+    encode_vec_req(op::INSERT, coll, v)
 }
 
-pub fn encode_insert_batch(vs: &[Vec<f32>]) -> Vec<u8> {
-    encode_vecs_req(op::INSERT_BATCH, vs)
+pub fn encode_insert_batch(coll: u32, vs: &[Vec<f32>]) -> Vec<u8> {
+    encode_vecs_req(op::INSERT_BATCH, coll, vs)
 }
 
-pub fn encode_delete(v: &[f32]) -> Vec<u8> {
-    encode_vec_req(op::DELETE, v)
+pub fn encode_delete(coll: u32, v: &[f32]) -> Vec<u8> {
+    encode_vec_req(op::DELETE, coll, v)
 }
 
-pub fn encode_ann_query(vs: &[Vec<f32>]) -> Vec<u8> {
-    encode_ann_query_traced(vs, 0)
+pub fn encode_ann_query(coll: u32, vs: &[Vec<f32>]) -> Vec<u8> {
+    encode_ann_query_traced(coll, vs, 0)
 }
 
 /// v4: carry a client-chosen trace id (0 = server mints one).
-pub fn encode_ann_query_traced(vs: &[Vec<f32>], trace: u64) -> Vec<u8> {
-    encode_traced_vecs_req(op::ANN_QUERY, vs, trace)
+pub fn encode_ann_query_traced(coll: u32, vs: &[Vec<f32>], trace: u64) -> Vec<u8> {
+    encode_traced_vecs_req(op::ANN_QUERY, coll, vs, trace)
 }
 
-pub fn encode_kde_query(vs: &[Vec<f32>]) -> Vec<u8> {
-    encode_kde_query_traced(vs, 0)
+pub fn encode_kde_query(coll: u32, vs: &[Vec<f32>]) -> Vec<u8> {
+    encode_kde_query_traced(coll, vs, 0)
 }
 
-pub fn encode_kde_query_traced(vs: &[Vec<f32>], trace: u64) -> Vec<u8> {
-    encode_traced_vecs_req(op::KDE_QUERY, vs, trace)
+pub fn encode_kde_query_traced(coll: u32, vs: &[Vec<f32>], trace: u64) -> Vec<u8> {
+    encode_traced_vecs_req(op::KDE_QUERY, coll, vs, trace)
 }
 
 /// v5: ask for RAW per-shard ANN partials (a front-end merges them).
-pub fn encode_ann_partial(vs: &[Vec<f32>], trace: u64) -> Vec<u8> {
-    encode_traced_vecs_req(op::ANN_PARTIAL, vs, trace)
+pub fn encode_ann_partial(coll: u32, vs: &[Vec<f32>], trace: u64) -> Vec<u8> {
+    encode_traced_vecs_req(op::ANN_PARTIAL, coll, vs, trace)
 }
 
 /// v5: ask for RAW per-shard KDE partials (sums + population, unfolded).
-pub fn encode_kde_partial(vs: &[Vec<f32>], trace: u64) -> Vec<u8> {
-    encode_traced_vecs_req(op::KDE_PARTIAL, vs, trace)
+pub fn encode_kde_partial(coll: u32, vs: &[Vec<f32>], trace: u64) -> Vec<u8> {
+    encode_traced_vecs_req(op::KDE_PARTIAL, coll, vs, trace)
 }
 
 impl Request {
     pub fn encode(&self) -> Vec<u8> {
         match self {
             Request::Hello => payload(op::HELLO),
-            Request::Insert(v) => encode_insert(v),
-            Request::InsertBatch(vs) => encode_insert_batch(vs),
-            Request::Delete(v) => encode_delete(v),
-            Request::AnnQuery { queries, trace } => encode_ann_query_traced(queries, *trace),
-            Request::KdeQuery { queries, trace } => encode_kde_query_traced(queries, *trace),
-            Request::AnnPartial { queries, trace } => encode_ann_partial(queries, *trace),
-            Request::KdePartial { queries, trace } => encode_kde_partial(queries, *trace),
-            Request::Stats => payload(op::STATS),
+            Request::Insert { coll, x } => encode_insert(*coll, x),
+            Request::InsertBatch { coll, xs } => encode_insert_batch(*coll, xs),
+            Request::Delete { coll, x } => encode_delete(*coll, x),
+            Request::AnnQuery { coll, queries, trace } => {
+                encode_ann_query_traced(*coll, queries, *trace)
+            }
+            Request::KdeQuery { coll, queries, trace } => {
+                encode_kde_query_traced(*coll, queries, *trace)
+            }
+            Request::AnnPartial { coll, queries, trace } => {
+                encode_ann_partial(*coll, queries, *trace)
+            }
+            Request::KdePartial { coll, queries, trace } => {
+                encode_kde_partial(*coll, queries, *trace)
+            }
+            Request::Stats { coll } => coll_payload(op::STATS, *coll),
             Request::Metrics => payload(op::METRICS),
-            Request::Flush => payload(op::FLUSH),
-            Request::Checkpoint => payload(op::CHECKPOINT),
+            Request::Flush { coll } => coll_payload(op::FLUSH, *coll),
+            Request::Checkpoint { coll } => coll_payload(op::CHECKPOINT, *coll),
+            Request::CreateCollection { name, spec } => {
+                let mut out = payload(op::CREATE_COLLECTION);
+                put_str(&mut out, name);
+                put_spec(&mut out, spec);
+                out
+            }
+            Request::DropCollection { name } => {
+                let mut out = payload(op::DROP_COLLECTION);
+                put_str(&mut out, name);
+                out
+            }
+            Request::ListCollections => payload(op::LIST_COLLECTIONS),
             Request::Shutdown => payload(op::SHUTDOWN),
         }
     }
@@ -413,29 +529,55 @@ impl Request {
         let opcode = c.u8()?;
         let req = match opcode {
             op::HELLO => Request::Hello,
-            op::INSERT => Request::Insert(c.vec_f32()?),
-            op::INSERT_BATCH => Request::InsertBatch(c.vecs()?),
-            op::DELETE => Request::Delete(c.vec_f32()?),
+            op::INSERT => {
+                let coll = c.coll()?;
+                Request::Insert { coll, x: c.vec_f32()? }
+            }
+            op::INSERT_BATCH => {
+                let coll = c.coll()?;
+                Request::InsertBatch { coll, xs: c.vecs()? }
+            }
+            op::DELETE => {
+                let coll = c.coll()?;
+                Request::Delete { coll, x: c.vec_f32()? }
+            }
             op::ANN_QUERY => {
+                let coll = c.coll()?;
                 let trace = c.u64()?;
-                Request::AnnQuery { queries: c.vecs()?, trace }
+                Request::AnnQuery { coll, queries: c.vecs()?, trace }
             }
             op::KDE_QUERY => {
+                let coll = c.coll()?;
                 let trace = c.u64()?;
-                Request::KdeQuery { queries: c.vecs()?, trace }
+                Request::KdeQuery { coll, queries: c.vecs()?, trace }
             }
             op::ANN_PARTIAL => {
+                let coll = c.coll()?;
                 let trace = c.u64()?;
-                Request::AnnPartial { queries: c.vecs()?, trace }
+                Request::AnnPartial { coll, queries: c.vecs()?, trace }
             }
             op::KDE_PARTIAL => {
+                let coll = c.coll()?;
                 let trace = c.u64()?;
-                Request::KdePartial { queries: c.vecs()?, trace }
+                Request::KdePartial { coll, queries: c.vecs()?, trace }
             }
-            op::STATS => Request::Stats,
+            op::STATS => Request::Stats { coll: c.coll()? },
             op::METRICS => Request::Metrics,
-            op::FLUSH => Request::Flush,
-            op::CHECKPOINT => Request::Checkpoint,
+            op::FLUSH => Request::Flush { coll: c.coll()? },
+            op::CHECKPOINT => Request::Checkpoint { coll: c.coll()? },
+            op::CREATE_COLLECTION => {
+                c.require_v6("CreateCollection")?;
+                let name = read_str(&mut c)?;
+                Request::CreateCollection { name, spec: read_spec(&mut c)? }
+            }
+            op::DROP_COLLECTION => {
+                c.require_v6("DropCollection")?;
+                Request::DropCollection { name: read_str(&mut c)? }
+            }
+            op::LIST_COLLECTIONS => {
+                c.require_v6("ListCollections")?;
+                Request::ListCollections
+            }
             op::SHUTDOWN => Request::Shutdown,
             other => bail!("unknown request opcode {other}"),
         };
@@ -529,6 +671,11 @@ impl Response {
                 put_u64(&mut out, *points);
                 out
             }
+            Response::Collections(cols) => {
+                let mut out = payload(op::R_COLLECTIONS);
+                put_collections(&mut out, cols);
+                out
+            }
             Response::Error(msg) => {
                 let mut out = payload(op::R_ERROR);
                 put_str(&mut out, msg);
@@ -601,6 +748,7 @@ impl Response {
             op::R_STATS => Response::Stats(read_stats(&mut c)?),
             op::R_METRICS => Response::Metrics(read_metrics(&mut c)?),
             op::R_CHECKPOINT => Response::Checkpointed { points: c.u64()? },
+            op::R_COLLECTIONS => Response::Collections(read_collections(&mut c)?),
             op::R_ERROR => Response::Error(read_str(&mut c)?),
             other => bail!("unknown response opcode {other}"),
         };
@@ -612,22 +760,49 @@ impl Response {
 // ---------------------------------------------------------------- decode
 
 /// Bounds-checked reader over one frame payload. Verifies the version
-/// byte up front and (via [`Cursor::count`]) that any decoded count fits
-/// in the bytes that are actually present, so a hostile length can never
-/// drive a large allocation.
+/// byte up front (v5 and v6 both accepted, and which one is recorded so
+/// [`Cursor::coll`] knows whether a collection id is present) and — via
+/// [`Cursor::count`] — that any decoded count fits in the bytes that
+/// are actually present, so a hostile length can never drive a large
+/// allocation.
 struct Cursor<'a> {
     b: &'a [u8],
     i: usize,
+    version: u8,
 }
 
 impl<'a> Cursor<'a> {
     fn new(b: &'a [u8]) -> Result<Self> {
-        let mut c = Cursor { b, i: 0 };
+        let mut c = Cursor { b, i: 0, version: PROTOCOL_VERSION };
         let v = c.u8()?;
-        if v != PROTOCOL_VERSION {
-            bail!("protocol version {v} (this build speaks {PROTOCOL_VERSION})");
+        if v != PROTOCOL_VERSION && v != COMPAT_PROTOCOL_VERSION {
+            bail!(
+                "protocol version {v} (this build speaks {PROTOCOL_VERSION}, \
+                 compat down to {COMPAT_PROTOCOL_VERSION})"
+            );
         }
+        c.version = v;
         Ok(c)
+    }
+
+    /// The collection id leading a collection-scoped body: a u32 on v6
+    /// frames, absent on v5 frames — which therefore address collection
+    /// 0, preserving an old client's semantics byte-for-byte.
+    fn coll(&mut self) -> Result<u32> {
+        if self.version >= PROTOCOL_VERSION {
+            self.u32()
+        } else {
+            Ok(0)
+        }
+    }
+
+    /// Ops that did not exist before v6 reject v5 frames outright —
+    /// there is no v5 shape to be compatible with.
+    fn require_v6(&self, what: &str) -> Result<()> {
+        if self.version < PROTOCOL_VERSION {
+            bail!("{what} requires protocol v{PROTOCOL_VERSION} (frame is v{})", self.version);
+        }
+        Ok(())
     }
 
     fn remaining(&self) -> usize {
@@ -757,34 +932,61 @@ mod tests {
         (0..g.size(0, 20)).map(|_| gen_vec(g, dim)).collect()
     }
 
+    fn gen_coll(g: &mut Gen) -> u32 {
+        g.usize_in(0, 1 << 16) as u32
+    }
+
+    fn gen_spec(g: &mut Gen) -> CollectionSpec {
+        CollectionSpec {
+            dim: g.usize_in(1, 1024) as u32,
+            shards: g.usize_in(1, 16) as u32,
+            replicas: g.usize_in(1, 4) as u32,
+            n_max: g.usize_in(1, 1 << 20) as u64,
+            window: g.usize_in(1, 1 << 20) as u64,
+            eta: g.f64_in(0.0, 1.0),
+            overload: g.usize_in(0, 1) as u8,
+            seed: g.usize_in(0, 1 << 40) as u64,
+        }
+    }
+
     fn gen_request(g: &mut Gen) -> Request {
-        let pick = g.usize_in(0, 12);
+        let pick = g.usize_in(0, 15);
         let dim = g.usize_in(1, 64);
         match pick {
             0 => Request::Hello,
-            1 => Request::Insert(gen_vec(g, dim)),
-            2 => Request::InsertBatch(gen_vecs(g)),
-            3 => Request::Delete(gen_vec(g, dim)),
+            1 => Request::Insert { coll: gen_coll(g), x: gen_vec(g, dim) },
+            2 => Request::InsertBatch { coll: gen_coll(g), xs: gen_vecs(g) },
+            3 => Request::Delete { coll: gen_coll(g), x: gen_vec(g, dim) },
             4 => Request::AnnQuery {
+                coll: gen_coll(g),
                 queries: gen_vecs(g),
                 trace: g.usize_in(0, 1 << 40) as u64,
             },
             5 => Request::KdeQuery {
+                coll: gen_coll(g),
                 queries: gen_vecs(g),
                 trace: g.usize_in(0, 1 << 40) as u64,
             },
-            6 => Request::Stats,
-            7 => Request::Flush,
-            8 => Request::Checkpoint,
+            6 => Request::Stats { coll: gen_coll(g) },
+            7 => Request::Flush { coll: gen_coll(g) },
+            8 => Request::Checkpoint { coll: gen_coll(g) },
             9 => Request::Metrics,
             10 => Request::AnnPartial {
+                coll: gen_coll(g),
                 queries: gen_vecs(g),
                 trace: g.usize_in(0, 1 << 40) as u64,
             },
             11 => Request::KdePartial {
+                coll: gen_coll(g),
                 queries: gen_vecs(g),
                 trace: g.usize_in(0, 1 << 40) as u64,
             },
+            12 => Request::CreateCollection {
+                name: format!("coll-{}", g.usize_in(0, 999)),
+                spec: gen_spec(g),
+            },
+            13 => Request::DropCollection { name: format!("coll-{}", g.usize_in(0, 999)) },
+            14 => Request::ListCollections,
             _ => Request::Shutdown,
         }
     }
@@ -835,7 +1037,7 @@ mod tests {
     }
 
     fn gen_response(g: &mut Gen) -> Response {
-        match g.usize_in(0, 10) {
+        match g.usize_in(0, 11) {
             0 => Response::Hello {
                 version: PROTOCOL_VERSION,
                 dim: g.usize_in(1, 1024) as u32,
@@ -897,6 +1099,17 @@ mod tests {
                     })
                     .collect(),
             ),
+            10 => Response::Collections(
+                (0..g.size(0, 8))
+                    .map(|i| CollectionInfo {
+                        id: g.usize_in(0, 1 << 16) as u32,
+                        name: format!("coll-{i}"),
+                        dim: g.usize_in(1, 1024) as u32,
+                        shards: g.usize_in(1, 16) as u32,
+                        replicas: g.usize_in(1, 4) as u32,
+                    })
+                    .collect(),
+            ),
             _ => Response::Error("frame \u{1F980} error".to_string()),
         }
     }
@@ -940,10 +1153,79 @@ mod tests {
 
     #[test]
     fn wrong_version_is_rejected() {
-        let mut bytes = Request::Stats.encode();
+        let mut bytes = Request::Stats { coll: 0 }.encode();
         bytes[0] = 42;
         let err = Request::decode(&bytes).unwrap_err().to_string();
         assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn v5_frames_decode_as_the_default_collection() {
+        // A v5 body has NO collection id: hand-build v5-shaped frames
+        // for every collection-scoped op and require them to decode as
+        // collection 0 with the payload untouched. This is the on-wire
+        // compat contract for old clients.
+        let v5 = |opcode: u8| vec![COMPAT_PROTOCOL_VERSION, opcode];
+        let mut b = v5(super::op::INSERT);
+        put_vec_f32(&mut b, &[1.0, 2.0]);
+        assert_eq!(
+            Request::decode(&b).unwrap(),
+            Request::Insert { coll: 0, x: vec![1.0, 2.0] }
+        );
+        let mut b = v5(super::op::INSERT_BATCH);
+        put_vecs(&mut b, &[vec![0.5; 3]]);
+        assert_eq!(
+            Request::decode(&b).unwrap(),
+            Request::InsertBatch { coll: 0, xs: vec![vec![0.5; 3]] }
+        );
+        let mut b = v5(super::op::DELETE);
+        put_vec_f32(&mut b, &[9.0]);
+        assert_eq!(Request::decode(&b).unwrap(), Request::Delete { coll: 0, x: vec![9.0] });
+        for (opcode, want_trace) in [
+            (super::op::ANN_QUERY, 7u64),
+            (super::op::KDE_QUERY, 8),
+            (super::op::ANN_PARTIAL, 9),
+            (super::op::KDE_PARTIAL, 0),
+        ] {
+            let mut b = v5(opcode);
+            put_u64(&mut b, want_trace);
+            put_vecs(&mut b, &[vec![1.0, 2.0]]);
+            match Request::decode(&b).unwrap() {
+                Request::AnnQuery { coll, trace, .. }
+                | Request::KdeQuery { coll, trace, .. }
+                | Request::AnnPartial { coll, trace, .. }
+                | Request::KdePartial { coll, trace, .. } => {
+                    assert_eq!(coll, 0, "opcode {opcode}");
+                    assert_eq!(trace, want_trace, "opcode {opcode}");
+                }
+                other => panic!("opcode {opcode} decoded {other:?}"),
+            }
+        }
+        assert_eq!(Request::decode(&v5(super::op::STATS)).unwrap(), Request::Stats { coll: 0 });
+        assert_eq!(Request::decode(&v5(super::op::FLUSH)).unwrap(), Request::Flush { coll: 0 });
+        assert_eq!(
+            Request::decode(&v5(super::op::CHECKPOINT)).unwrap(),
+            Request::Checkpoint { coll: 0 }
+        );
+        assert_eq!(Request::decode(&v5(super::op::HELLO)).unwrap(), Request::Hello);
+        assert_eq!(Request::decode(&v5(super::op::SHUTDOWN)).unwrap(), Request::Shutdown);
+    }
+
+    #[test]
+    fn collection_ops_reject_v5_frames() {
+        // The collection-management ops are born in v6; a v5 frame
+        // claiming one is a protocol error, not an empty-name create.
+        for opcode in [
+            super::op::CREATE_COLLECTION,
+            super::op::DROP_COLLECTION,
+            super::op::LIST_COLLECTIONS,
+        ] {
+            let mut b = vec![COMPAT_PROTOCOL_VERSION, opcode];
+            put_str(&mut b, "tenant");
+            put_spec(&mut b, &CollectionSpec::default());
+            let err = Request::decode(&b).unwrap_err().to_string();
+            assert!(err.contains("requires protocol v6"), "opcode {opcode}: {err}");
+        }
     }
 
     #[test]
@@ -956,32 +1238,34 @@ mod tests {
 
     #[test]
     fn hostile_counts_are_rejected_before_allocation() {
-        // Claim 2^32-1 vectors with a 12-byte body.
+        // Claim 2^32-1 vectors with a 12-byte body (after the coll id).
         let mut bytes = vec![PROTOCOL_VERSION, super::op::INSERT_BATCH];
+        bytes.extend_from_slice(&0u32.to_le_bytes()); // coll 0
         bytes.extend_from_slice(&u32::MAX.to_le_bytes());
         bytes.extend_from_slice(&[0u8; 8]);
         let err = Request::decode(&bytes).unwrap_err().to_string();
         assert!(err.contains("exceeds"), "{err}");
-        // Same for a single vector length.
-        let mut bytes = vec![PROTOCOL_VERSION, super::op::INSERT];
+        // Same for a single vector length, on a v5 frame (no coll id) —
+        // the compat path shares the hostile-count guard.
+        let mut bytes = vec![COMPAT_PROTOCOL_VERSION, super::op::INSERT];
         bytes.extend_from_slice(&u32::MAX.to_le_bytes());
         assert!(Request::decode(&bytes).is_err());
     }
 
     #[test]
     fn trailing_bytes_are_rejected() {
-        let mut bytes = Request::Flush.encode();
+        let mut bytes = Request::Flush { coll: 0 }.encode();
         bytes.push(0);
         assert!(Request::decode(&bytes).is_err());
-        let mut bytes = Request::Checkpoint.encode();
+        let mut bytes = Request::Checkpoint { coll: 3 }.encode();
         bytes.push(7);
-        assert!(Request::decode(&bytes).is_err(), "checkpoint takes no body");
+        assert!(Request::decode(&bytes).is_err(), "checkpoint body is the coll id alone");
     }
 
     #[test]
     fn checkpoint_op_roundtrips_and_survives_fuzzing() {
         // Exact roundtrip on both directions of the new op.
-        let req = Request::Checkpoint;
+        let req = Request::Checkpoint { coll: 2 };
         assert_eq!(Request::decode(&req.encode()).unwrap(), req);
         let resp = Response::Checkpointed { points: 987_654_321 };
         assert_eq!(Response::decode(&resp.encode()).unwrap(), resp);
@@ -990,7 +1274,7 @@ mod tests {
         // never an allocation driven by the mutated bytes alone.
         check("checkpoint_frame_mutation", 150, |g| {
             let base = if g.bool() {
-                Request::Checkpoint.encode()
+                Request::Checkpoint { coll: gen_coll(g) }.encode()
             } else {
                 Response::Checkpointed { points: g.usize_in(0, 1 << 40) as u64 }.encode()
             };
@@ -1047,9 +1331,9 @@ mod tests {
         // Exact roundtrip of the v5 scatter/gather ops: a partial reply
         // carries f64 sums and f32 distances as bit patterns, so what the
         // router decodes is byte-for-byte what the node computed.
-        let req = Request::AnnPartial { queries: vec![vec![1.0, 2.0]], trace: 7 };
+        let req = Request::AnnPartial { coll: 1, queries: vec![vec![1.0, 2.0]], trace: 7 };
         assert_eq!(Request::decode(&req.encode()).unwrap(), req);
-        let req = Request::KdePartial { queries: vec![vec![0.5; 3]], trace: 0 };
+        let req = Request::KdePartial { coll: 0, queries: vec![vec![0.5; 3]], trace: 0 };
         assert_eq!(Request::decode(&req.encode()).unwrap(), req);
         let resp = Response::AnnPartials(vec![
             ShardAnnResult {
@@ -1067,18 +1351,23 @@ mod tests {
             population: 41,
         }]);
         assert_eq!(Response::decode(&resp.encode()).unwrap(), resp);
-        // The traced request layout matches the v4 query ops: trace id
-        // BEFORE the vectors.
-        match Request::decode(&encode_ann_partial(&[vec![1.0f32]], 0xBEEF)).unwrap() {
-            Request::AnnPartial { trace, .. } => assert_eq!(trace, 0xBEEF),
+        // The traced request layout matches the v4 query ops: coll id,
+        // then trace id, then the vectors.
+        match Request::decode(&encode_ann_partial(5, &[vec![1.0f32]], 0xBEEF)).unwrap() {
+            Request::AnnPartial { coll, trace, .. } => {
+                assert_eq!(coll, 5);
+                assert_eq!(trace, 0xBEEF);
+            }
             other => panic!("decoded {other:?}"),
         }
         // Hostile input: 1-byte mutations and junk never panic and never
         // allocate off the claim alone.
         check("partial_frame_mutation", 150, |g| {
             let base = match g.usize_in(0, 3) {
-                0 => Request::AnnPartial { queries: gen_vecs(g), trace: 1 }.encode(),
-                1 => Request::KdePartial { queries: gen_vecs(g), trace: 2 }.encode(),
+                0 => Request::AnnPartial { coll: gen_coll(g), queries: gen_vecs(g), trace: 1 }
+                    .encode(),
+                1 => Request::KdePartial { coll: gen_coll(g), queries: gen_vecs(g), trace: 2 }
+                    .encode(),
                 2 => Response::AnnPartials(
                     (0..g.size(0, 4)).map(|_| gen_ann_partial(g)).collect(),
                 )
@@ -1104,32 +1393,95 @@ mod tests {
     #[test]
     fn traced_query_carries_the_trace_id() {
         let qs = vec![vec![1.0f32, 2.0]];
-        let enc = encode_ann_query_traced(&qs, 0xDEAD_BEEF);
+        let enc = encode_ann_query_traced(3, &qs, 0xDEAD_BEEF);
         match Request::decode(&enc).unwrap() {
-            Request::AnnQuery { queries, trace } => {
+            Request::AnnQuery { coll, queries, trace } => {
+                assert_eq!(coll, 3);
                 assert_eq!(queries, qs);
                 assert_eq!(trace, 0xDEAD_BEEF);
             }
             other => panic!("decoded {other:?}"),
         }
         // The untraced encoder writes trace 0 ("mint one for me").
-        match Request::decode(&encode_kde_query(&qs)).unwrap() {
+        match Request::decode(&encode_kde_query(0, &qs)).unwrap() {
             Request::KdeQuery { trace, .. } => assert_eq!(trace, 0),
             other => panic!("decoded {other:?}"),
         }
     }
 
     #[test]
+    fn collection_ops_roundtrip_and_survive_fuzzing() {
+        // Exact roundtrip of the v6 collection-management ops.
+        let spec = CollectionSpec {
+            dim: 24,
+            shards: 2,
+            replicas: 1,
+            n_max: 50_000,
+            window: 4096,
+            eta: 0.5,
+            overload: 1,
+            seed: 99,
+        };
+        let req = Request::CreateCollection { name: "news".into(), spec: spec.clone() };
+        assert_eq!(Request::decode(&req.encode()).unwrap(), req);
+        let req = Request::DropCollection { name: "news".into() };
+        assert_eq!(Request::decode(&req.encode()).unwrap(), req);
+        let req = Request::ListCollections;
+        assert_eq!(Request::decode(&req.encode()).unwrap(), req);
+        let resp = Response::Collections(vec![
+            CollectionInfo { id: 0, name: "default".into(), dim: 16, shards: 4, replicas: 1 },
+            CollectionInfo { id: 3, name: "news".into(), dim: 24, shards: 2, replicas: 1 },
+        ]);
+        assert_eq!(Response::decode(&resp.encode()).unwrap(), resp);
+
+        // Hostile input: 1-byte mutations of real collection frames and
+        // arbitrary junk must decode to a clean result, never a panic or
+        // a claim-driven allocation.
+        check("collection_frame_mutation", 150, |g| {
+            let base = match g.usize_in(0, 3) {
+                0 => Request::CreateCollection {
+                    name: format!("c{}", g.usize_in(0, 99)),
+                    spec: gen_spec(g),
+                }
+                .encode(),
+                1 => Request::DropCollection { name: format!("c{}", g.usize_in(0, 99)) }.encode(),
+                2 => Request::ListCollections.encode(),
+                _ => Response::Collections(
+                    (0..g.size(0, 4))
+                        .map(|i| CollectionInfo {
+                            id: g.usize_in(0, 1 << 16) as u32,
+                            name: format!("c{i}"),
+                            dim: g.usize_in(1, 64) as u32,
+                            shards: g.usize_in(1, 8) as u32,
+                            replicas: g.usize_in(1, 4) as u32,
+                        })
+                        .collect(),
+                )
+                .encode(),
+            };
+            let mut m = base.clone();
+            let i = g.usize_in(0, m.len() - 1);
+            m[i] ^= g.usize_in(1, 255) as u8;
+            let _ = Request::decode(&m);
+            let _ = Response::decode(&m);
+            let junk: Vec<u8> = (0..g.size(0, 64)).map(|_| g.rng.next_u64() as u8).collect();
+            let _ = Request::decode(&junk);
+            let _ = Response::decode(&junk);
+            Ok(())
+        });
+    }
+
+    #[test]
     fn frame_io_roundtrip_and_eof() {
         let mut wire = Vec::new();
         write_frame(&mut wire, &Request::Hello.encode()).unwrap();
-        write_frame(&mut wire, &Request::Stats.encode()).unwrap();
+        write_frame(&mut wire, &Request::Stats { coll: 0 }.encode()).unwrap();
         let mut r = &wire[..];
         let mut buf = Vec::new();
         assert!(read_frame(&mut r, &mut buf).unwrap());
         assert_eq!(Request::decode(&buf).unwrap(), Request::Hello);
         assert!(read_frame(&mut r, &mut buf).unwrap());
-        assert_eq!(Request::decode(&buf).unwrap(), Request::Stats);
+        assert_eq!(Request::decode(&buf).unwrap(), Request::Stats { coll: 0 });
         assert!(!read_frame(&mut r, &mut buf).unwrap(), "clean EOF");
     }
 

@@ -19,6 +19,6 @@ pub mod client;
 pub mod frame;
 pub mod server;
 
-pub use client::{ClientOptions, SketchClient};
-pub use frame::{Request, Response, MAX_FRAME_BYTES, PROTOCOL_VERSION};
+pub use client::{ClientOptions, Collection, SketchClient};
+pub use frame::{Request, Response, COMPAT_PROTOCOL_VERSION, MAX_FRAME_BYTES, PROTOCOL_VERSION};
 pub use server::{LoadAwareWait, MetricsListener, QueryCoalescer, WireServer};

@@ -15,6 +15,7 @@
 //! [`SketchService`]: crate::coordinator::SketchService
 //! [`ServiceHandle`]: crate::coordinator::ServiceHandle
 
+use std::collections::HashMap;
 use std::io::{BufReader, BufWriter};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
@@ -25,8 +26,10 @@ use crate::util::sync::{lock_unpoisoned, Arc, Mutex};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{AnnAnswer, BatchPolicy, Batcher, ServiceHandle};
-use crate::metrics::registry::Registry;
+use crate::coordinator::{
+    AnnAnswer, BatchPolicy, Batcher, CollectionInfo, ServiceHandle, Tenants, DEFAULT_COLLECTION,
+};
+use crate::metrics::registry::{MetricsSnapshot, Registry};
 use crate::obs::log;
 
 use super::frame::{read_frame, write_frame, Request, Response, PROTOCOL_VERSION};
@@ -424,11 +427,120 @@ fn run_kde(handle: &ServiceHandle, batch: Vec<PendingKde>) {
     }
 }
 
-/// A bound listener serving one `SketchService` over TCP.
+/// What the wire dispatch resolves a collection id to: the handle to
+/// execute against, the id to pass DOWN that handle (nonzero only on a
+/// fan-out router, whose member nodes resolve it themselves), the dim
+/// to validate vectors against (`None` on a forwarded id — the member
+/// owning the collection validates), and the coalescer for singleton
+/// queries (absent on forwarded ids: the router cannot coalesce across
+/// collections it does not host).
+struct Resolved {
+    handle: ServiceHandle,
+    coll: u32,
+    dim: Option<usize>,
+    coalescer: Option<Arc<QueryCoalescer>>,
+}
+
+/// The serving mode of a [`WireServer`]: one service (possibly a
+/// fan-out router) answering only the default collection, or a
+/// [`Tenants`] registry answering every named collection.
+pub(crate) enum Tenancy {
+    Single {
+        handle: ServiceHandle,
+        coalescer: Arc<QueryCoalescer>,
+    },
+    Multi {
+        tenants: Arc<Tenants>,
+        /// Cached default-collection handle (id 0): the Hello shape,
+        /// the trace-id mint, and the hot path skip the registry lock.
+        default: ServiceHandle,
+        /// Lazily-built per-collection coalescers (each wraps that
+        /// tenant's own handle, so coalesced singletons stay inside
+        /// their tenant). Entries die with their collection.
+        coalescers: Mutex<HashMap<u32, Arc<QueryCoalescer>>>,
+        policy: BatchPolicy,
+    },
+}
+
+impl Tenancy {
+    fn default_handle(&self) -> &ServiceHandle {
+        match self {
+            Tenancy::Single { handle, .. } => handle,
+            Tenancy::Multi { default, .. } => default,
+        }
+    }
+
+    /// The registry the wire layer itself observes into (trace ids, op
+    /// histograms): the default collection's. Per-tenant point
+    /// accounting lives in each tenant's own registry regardless.
+    fn registry(&self) -> &Registry {
+        self.default_handle().registry()
+    }
+
+    fn resolve(&self, coll: u32) -> Result<Resolved, Response> {
+        match self {
+            Tenancy::Single { handle, coalescer } => {
+                if coll == 0 {
+                    Ok(Resolved {
+                        handle: handle.clone(),
+                        coll: 0,
+                        dim: Some(handle.dim()),
+                        coalescer: Some(Arc::clone(coalescer)),
+                    })
+                } else if handle.is_fanout() {
+                    // A router hosts no collections itself — forward the
+                    // id; the member node owning it validates and serves.
+                    Ok(Resolved { handle: handle.clone(), coll, dim: None, coalescer: None })
+                } else {
+                    Err(Response::Error(format!(
+                        "unknown collection id {coll}: this server hosts only the default \
+                         collection (id 0)"
+                    )))
+                }
+            }
+            Tenancy::Multi { tenants, default, coalescers, policy } => {
+                let handle = if coll == 0 {
+                    default.clone()
+                } else {
+                    match tenants.resolve(coll) {
+                        Some(h) => h,
+                        None => {
+                            return Err(Response::Error(format!(
+                                "unknown collection id {coll}"
+                            )))
+                        }
+                    }
+                };
+                let coalescer = {
+                    let mut m = lock_unpoisoned(coalescers);
+                    Arc::clone(m.entry(coll).or_insert_with(|| {
+                        Arc::new(QueryCoalescer::new(handle.clone(), *policy))
+                    }))
+                };
+                Ok(Resolved {
+                    dim: Some(handle.dim()),
+                    handle,
+                    coll: 0, // a tenant handle IS its collection
+                    coalescer: Some(coalescer),
+                })
+            }
+        }
+    }
+
+    /// Drop a dead collection's coalescer (its lanes wrap a handle
+    /// whose service just shut down).
+    fn forget_coalescer(&self, coll: u32) {
+        if let Tenancy::Multi { coalescers, .. } = self {
+            lock_unpoisoned(coalescers).remove(&coll);
+        }
+    }
+}
+
+/// A bound listener serving one `SketchService` — or a whole
+/// multi-tenant [`Tenants`] registry — over TCP.
 pub struct WireServer {
     listener: TcpListener,
-    handle: ServiceHandle,
-    coalescer: Arc<QueryCoalescer>,
+    tenancy: Arc<Tenancy>,
     stop: Arc<AtomicBool>,
 }
 
@@ -454,8 +566,39 @@ impl WireServer {
         let coalescer = Arc::new(QueryCoalescer::new(handle.clone(), query_policy));
         Ok(WireServer {
             listener,
-            handle,
-            coalescer,
+            tenancy: Arc::new(Tenancy::Single { handle, coalescer }),
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// Bind a MULTI-TENANT server: every collection in `tenants` is
+    /// addressable by its wire id, v5-shaped frames land on the default
+    /// collection, and `CreateCollection`/`DropCollection` mutate the
+    /// registry live.
+    pub fn bind_tenants<A: ToSocketAddrs + std::fmt::Debug>(
+        addr: A,
+        tenants: Arc<Tenants>,
+    ) -> Result<Self> {
+        Self::bind_tenants_with(addr, tenants, default_query_policy())
+    }
+
+    /// [`Self::bind_tenants`] with an explicit coalescing policy.
+    pub fn bind_tenants_with<A: ToSocketAddrs + std::fmt::Debug>(
+        addr: A,
+        tenants: Arc<Tenants>,
+        query_policy: BatchPolicy,
+    ) -> Result<Self> {
+        let listener =
+            TcpListener::bind(&addr).with_context(|| format!("binding {addr:?}"))?;
+        let default = tenants.default_handle();
+        Ok(WireServer {
+            listener,
+            tenancy: Arc::new(Tenancy::Multi {
+                tenants,
+                default,
+                coalescers: Mutex::new(HashMap::new()),
+                policy: query_policy,
+            }),
             stop: Arc::new(AtomicBool::new(false)),
         })
     }
@@ -484,8 +627,7 @@ impl WireServer {
                 Err(_) => continue,
             };
             conn_id += 1;
-            let handle = self.handle.clone();
-            let coalescer = Arc::clone(&self.coalescer);
+            let tenancy = Arc::clone(&self.tenancy);
             let stop = Arc::clone(&self.stop);
             // Reader threads detach: they exit on peer close, and after
             // shutdown the service-side channels report errors instead of
@@ -493,7 +635,7 @@ impl WireServer {
             let _ = std::thread::Builder::new()
                 .name(format!("wire-conn-{conn_id}"))
                 .spawn(move || {
-                    let _ = serve_conn(stream, handle, coalescer, stop, addr, conn_id);
+                    let _ = serve_conn(stream, tenancy, stop, addr, conn_id);
                 });
         }
         Ok(())
@@ -502,8 +644,7 @@ impl WireServer {
 
 fn serve_conn(
     stream: TcpStream,
-    handle: ServiceHandle,
-    coalescer: Arc<QueryCoalescer>,
+    tenancy: Arc<Tenancy>,
     stop: Arc<AtomicBool>,
     server_addr: SocketAddr,
     conn_id: usize,
@@ -522,11 +663,11 @@ fn serve_conn(
                 // Mint a trace id right after decode when the client
                 // supplied none; op metadata is captured before dispatch
                 // consumes the request.
-                let traced = trace_request(&mut req, handle.registry());
+                let traced = trace_request(&mut req, tenancy.registry());
                 let t_op = Instant::now();
-                let resp = dispatch(req, &handle, &coalescer);
+                let resp = dispatch(req, &tenancy);
                 if let Some((op, batch, trace)) = traced {
-                    observe_op(handle.registry(), op, batch, trace, conn_id, t_op.elapsed());
+                    observe_op(tenancy.registry(), op, batch, trace, conn_id, t_op.elapsed());
                 }
                 write_frame(&mut writer, &resp.encode())?;
                 if is_shutdown {
@@ -564,15 +705,18 @@ fn serve_conn(
 /// Validate remote vectors: right dimension, finite coordinates. A NaN
 /// slipped into the pool would be unanswerable AND undeletable (NaN
 /// compares unequal to itself), i.e. unreclaimable memory from untrusted
-/// input — reject it at the edge.
-fn check_vectors(handle: &ServiceHandle, vs: &[Vec<f32>]) -> Result<(), Response> {
-    let dim = handle.dim();
+/// input — reject it at the edge. `dim` is the RESOLVED collection's
+/// dimensionality; `None` (a router forwarding a collection it doesn't
+/// host) skips the dim check — the owning member enforces it.
+fn check_vectors(dim: Option<usize>, vs: &[Vec<f32>]) -> Result<(), Response> {
     for v in vs {
-        if v.len() != dim {
-            return Err(Response::Error(format!(
-                "vector of dim {} against a dim-{dim} service",
-                v.len()
-            )));
+        if let Some(dim) = dim {
+            if v.len() != dim {
+                return Err(Response::Error(format!(
+                    "vector of dim {} against a dim-{dim} collection",
+                    v.len()
+                )));
+            }
         }
         if !v.iter().all(|x| x.is_finite()) {
             return Err(Response::Error(
@@ -599,33 +743,33 @@ fn single_query(qs: &mut Vec<Vec<f32>>) -> Option<Vec<f32>> {
 /// (`trace == 0` on the wire means "server assigns").
 fn trace_request(req: &mut Request, registry: &Registry) -> Option<(&'static str, usize, u64)> {
     match req {
-        Request::Insert(_) => Some(("insert", 1, 0)),
-        Request::InsertBatch(vs) => Some(("insert", vs.len(), 0)),
-        Request::AnnQuery { queries, trace } => {
+        Request::Insert { .. } => Some(("insert", 1, 0)),
+        Request::InsertBatch { xs, .. } => Some(("insert", xs.len(), 0)),
+        Request::AnnQuery { queries, trace, .. } => {
             if *trace == 0 {
                 *trace = registry.trace_ids.next();
             }
             Some(("ann", queries.len(), *trace))
         }
-        Request::KdeQuery { queries, trace } => {
+        Request::KdeQuery { queries, trace, .. } => {
             if *trace == 0 {
                 *trace = registry.trace_ids.next();
             }
             Some(("kde", queries.len(), *trace))
         }
-        Request::AnnPartial { queries, trace } => {
+        Request::AnnPartial { queries, trace, .. } => {
             if *trace == 0 {
                 *trace = registry.trace_ids.next();
             }
             Some(("ann_partial", queries.len(), *trace))
         }
-        Request::KdePartial { queries, trace } => {
+        Request::KdePartial { queries, trace, .. } => {
             if *trace == 0 {
                 *trace = registry.trace_ids.next();
             }
             Some(("kde_partial", queries.len(), *trace))
         }
-        Request::Checkpoint => Some(("checkpoint", 0, 0)),
+        Request::Checkpoint { .. } => Some(("checkpoint", 0, 0)),
         _ => None,
     }
 }
@@ -662,113 +806,253 @@ fn observe_op(
     }
 }
 
-fn dispatch(req: Request, handle: &ServiceHandle, coalescer: &QueryCoalescer) -> Response {
+fn dispatch(req: Request, tenancy: &Tenancy) -> Response {
     match req {
-        Request::Hello => Response::Hello {
-            version: PROTOCOL_VERSION,
-            dim: handle.dim() as u32,
-            shards: handle.shards() as u32,
-            replicas: handle.replicas() as u32,
-            health: handle.health_worst() as u8,
-            shard_base: handle.shard_base() as u64,
-        },
-        Request::Insert(x) => {
-            if let Err(resp) = check_vectors(handle, std::slice::from_ref(&x)) {
-                return resp;
+        Request::Hello => {
+            let handle = tenancy.default_handle();
+            Response::Hello {
+                version: PROTOCOL_VERSION,
+                dim: handle.dim() as u32,
+                shards: handle.shards() as u32,
+                replicas: handle.replicas() as u32,
+                health: handle.health_worst() as u8,
+                shard_base: handle.shard_base() as u64,
             }
-            Response::Ack { accepted: u64::from(handle.insert(x)) }
         }
-        Request::InsertBatch(vs) => {
-            if let Err(resp) = check_vectors(handle, &vs) {
+        Request::Insert { coll, x } => {
+            let r = match tenancy.resolve(coll) {
+                Ok(r) => r,
+                Err(resp) => return resp,
+            };
+            if let Err(resp) = check_vectors(r.dim, std::slice::from_ref(&x)) {
                 return resp;
             }
-            Response::Ack { accepted: handle.insert_batch(vs) as u64 }
+            Response::Ack { accepted: u64::from(r.handle.insert_in(r.coll, x)) }
         }
-        Request::Delete(x) => {
-            if let Err(resp) = check_vectors(handle, std::slice::from_ref(&x)) {
+        Request::InsertBatch { coll, xs } => {
+            let r = match tenancy.resolve(coll) {
+                Ok(r) => r,
+                Err(resp) => return resp,
+            };
+            if let Err(resp) = check_vectors(r.dim, &xs) {
                 return resp;
             }
-            Response::Deleted { removed: handle.delete(x) }
+            Response::Ack { accepted: r.handle.insert_batch_in(r.coll, xs) as u64 }
         }
-        Request::AnnQuery { queries: mut qs, trace } => {
-            if let Err(resp) = check_vectors(handle, &qs) {
+        Request::Delete { coll, x } => {
+            let r = match tenancy.resolve(coll) {
+                Ok(r) => r,
+                Err(resp) => return resp,
+            };
+            if let Err(resp) = check_vectors(r.dim, std::slice::from_ref(&x)) {
                 return resp;
             }
-            // Singletons coalesce across connections; real batches are
-            // already amortized and scatter directly from this thread,
-            // carrying the wire trace id into the stage histograms.
-            if let Some(q) = single_query(&mut qs) {
-                match coalescer.ann_one(q) {
+            Response::Deleted { removed: r.handle.delete_in(r.coll, x) }
+        }
+        Request::AnnQuery { coll, queries: mut qs, trace } => {
+            let r = match tenancy.resolve(coll) {
+                Ok(r) => r,
+                Err(resp) => return resp,
+            };
+            if let Err(resp) = check_vectors(r.dim, &qs) {
+                return resp;
+            }
+            // Singletons coalesce across connections (within their
+            // collection); real batches are already amortized and
+            // scatter directly from this thread, carrying the wire
+            // trace id into the stage histograms.
+            match (single_query(&mut qs), &r.coalescer) {
+                (Some(q), Some(co)) => match co.ann_one(q) {
                     Ok(ans) => Response::AnnAnswers(vec![ans]),
                     Err(e) => Response::Error(e),
-                }
-            } else {
-                match handle.query_batch_traced(qs, trace) {
-                    Ok(answers) => Response::AnnAnswers(answers),
-                    Err(e) => Response::Error(e.to_string()),
+                },
+                (single, _) => {
+                    if let Some(q) = single {
+                        qs.push(q); // forwarded singleton: no coalescer
+                    }
+                    match r.handle.query_batch_traced_in(r.coll, qs, trace) {
+                        Ok(answers) => Response::AnnAnswers(answers),
+                        Err(e) => Response::Error(e.to_string()),
+                    }
                 }
             }
         }
-        Request::KdeQuery { queries: mut qs, trace } => {
-            if let Err(resp) = check_vectors(handle, &qs) {
+        Request::KdeQuery { coll, queries: mut qs, trace } => {
+            let r = match tenancy.resolve(coll) {
+                Ok(r) => r,
+                Err(resp) => return resp,
+            };
+            if let Err(resp) = check_vectors(r.dim, &qs) {
                 return resp;
             }
-            if let Some(q) = single_query(&mut qs) {
-                match coalescer.kde_one(q) {
+            match (single_query(&mut qs), &r.coalescer) {
+                (Some(q), Some(co)) => match co.kde_one(q) {
                     Ok((s, d)) => {
                         Response::KdeAnswers { sums: vec![s], densities: vec![d] }
                     }
                     Err(e) => Response::Error(e),
-                }
-            } else {
-                match handle.kde_batch_traced(qs, trace) {
-                    Ok((sums, densities)) => Response::KdeAnswers { sums, densities },
-                    Err(e) => Response::Error(e.to_string()),
+                },
+                (single, _) => {
+                    if let Some(q) = single {
+                        qs.push(q);
+                    }
+                    match r.handle.kde_batch_traced_in(r.coll, qs, trace) {
+                        Ok((sums, densities)) => Response::KdeAnswers { sums, densities },
+                        Err(e) => Response::Error(e.to_string()),
+                    }
                 }
             }
         }
-        Request::AnnPartial { queries: qs, trace } => {
-            if let Err(resp) = check_vectors(handle, &qs) {
+        Request::AnnPartial { coll, queries: qs, trace } => {
+            let r = match tenancy.resolve(coll) {
+                Ok(r) => r,
+                Err(resp) => return resp,
+            };
+            if let Err(resp) = check_vectors(r.dim, &qs) {
                 return resp;
             }
             // Partials never coalesce: a front-end already batches, and
             // the reply must carry THIS request's shards only.
-            match handle.ann_partials(qs, trace) {
+            match r.handle.ann_partials(r.coll, qs, trace) {
                 Ok(parts) => Response::AnnPartials(parts),
                 Err(e) => Response::Error(e.to_string()),
             }
         }
-        Request::KdePartial { queries: qs, trace } => {
-            if let Err(resp) = check_vectors(handle, &qs) {
+        Request::KdePartial { coll, queries: qs, trace } => {
+            let r = match tenancy.resolve(coll) {
+                Ok(r) => r,
+                Err(resp) => return resp,
+            };
+            if let Err(resp) = check_vectors(r.dim, &qs) {
                 return resp;
             }
-            match handle.kde_partials(qs, trace) {
+            match r.handle.kde_partials(r.coll, qs, trace) {
                 Ok(parts) => Response::KdePartials(parts),
                 Err(e) => Response::Error(e.to_string()),
             }
         }
-        Request::Stats => match handle.stats() {
-            Ok(st) => Response::Stats(st),
-            Err(e) => Response::Error(e.to_string()),
-        },
-        Request::Metrics => {
-            // Drain shard stats first so the sketch gauges in the
-            // snapshot are live, not whatever the last poll left behind.
-            // A failed drain (service shutting down) still returns the
-            // counters/histograms, which live in the shared registry.
-            let _ = handle.stats();
-            Response::Metrics(handle.registry().snapshot())
+        Request::Stats { coll } => {
+            let r = match tenancy.resolve(coll) {
+                Ok(r) => r,
+                Err(resp) => return resp,
+            };
+            match r.handle.stats_in(r.coll) {
+                Ok(st) => Response::Stats(st),
+                Err(e) => Response::Error(e.to_string()),
+            }
         }
-        Request::Flush => match handle.flush() {
-            Ok(()) => Response::Ack { accepted: 0 },
-            Err(e) => Response::Error(e.to_string()),
+        Request::Metrics => Response::Metrics(full_snapshot(tenancy)),
+        Request::Flush { coll } => {
+            let r = match tenancy.resolve(coll) {
+                Ok(r) => r,
+                Err(resp) => return resp,
+            };
+            match r.handle.flush_in(r.coll) {
+                Ok(()) => Response::Ack { accepted: 0 },
+                Err(e) => Response::Error(e.to_string()),
+            }
+        }
+        Request::Checkpoint { coll } => {
+            let r = match tenancy.resolve(coll) {
+                Ok(r) => r,
+                Err(resp) => return resp,
+            };
+            match r.handle.checkpoint_in(r.coll) {
+                Ok(points) => Response::Checkpointed { points },
+                Err(e) => Response::Error(e.to_string()),
+            }
+        }
+        Request::CreateCollection { name, spec } => match tenancy {
+            Tenancy::Multi { tenants, .. } => match tenants.create(&name, &spec) {
+                Ok(info) => Response::Collections(vec![info]),
+                Err(e) => Response::Error(e.to_string()),
+            },
+            Tenancy::Single { handle, .. } if handle.is_fanout() => {
+                match handle.create_collection_fanout(&name, &spec) {
+                    Ok(info) => Response::Collections(vec![info]),
+                    Err(e) => Response::Error(e.to_string()),
+                }
+            }
+            Tenancy::Single { .. } => Response::Error(
+                "this server hosts a single collection (started without a tenant registry)"
+                    .to_string(),
+            ),
         },
-        Request::Checkpoint => match handle.checkpoint() {
-            Ok(points) => Response::Checkpointed { points },
-            Err(e) => Response::Error(e.to_string()),
+        Request::DropCollection { name } => match tenancy {
+            Tenancy::Multi { tenants, .. } => {
+                let id = tenants.resolve_name(&name).map(|(id, _)| id);
+                match tenants.drop_collection(&name) {
+                    Ok(()) => {
+                        if let Some(id) = id {
+                            tenancy.forget_coalescer(id);
+                        }
+                        Response::Ack { accepted: 0 }
+                    }
+                    Err(e) => Response::Error(e.to_string()),
+                }
+            }
+            Tenancy::Single { handle, .. } if handle.is_fanout() => {
+                match handle.drop_collection_fanout(&name) {
+                    Ok(()) => Response::Ack { accepted: 0 },
+                    Err(e) => Response::Error(e.to_string()),
+                }
+            }
+            Tenancy::Single { .. } => Response::Error(
+                "this server hosts a single collection (started without a tenant registry)"
+                    .to_string(),
+            ),
+        },
+        Request::ListCollections => match tenancy {
+            Tenancy::Multi { tenants, .. } => Response::Collections(tenants.list()),
+            Tenancy::Single { handle, .. } if handle.is_fanout() => {
+                match handle.list_collections_fanout() {
+                    Ok(cols) => Response::Collections(cols),
+                    Err(e) => Response::Error(e.to_string()),
+                }
+            }
+            Tenancy::Single { handle, .. } => {
+                // One implicit collection: the default. Listing it keeps
+                // `client.collection("default")` working everywhere.
+                Response::Collections(vec![CollectionInfo {
+                    id: 0,
+                    name: DEFAULT_COLLECTION.to_string(),
+                    dim: handle.dim() as u32,
+                    shards: handle.shards() as u32,
+                    replicas: handle.replicas() as u32,
+                }])
+            }
         },
         Request::Shutdown => Response::Ack { accepted: 0 },
     }
+}
+
+/// The full metrics exposition: the default collection's registry
+/// unprefixed (exactly the single-tenant shape), every named tenant's
+/// registry folded in under a `<name>_` prefix. Each tenant's shard
+/// stats are drained first so sketch gauges are live; a failed drain
+/// (tenant shutting down) still yields its counters.
+fn full_snapshot(tenancy: &Tenancy) -> MetricsSnapshot {
+    match tenancy {
+        Tenancy::Single { handle, .. } => snapshot_of(handle, None),
+        Tenancy::Multi { tenants, default, .. } => snapshot_of(default, Some(tenants)),
+    }
+}
+
+fn snapshot_of(default: &ServiceHandle, tenants: Option<&Tenants>) -> MetricsSnapshot {
+    let _ = default.stats();
+    let mut snap = default.registry().snapshot();
+    if let Some(tenants) = tenants {
+        for info in tenants.list() {
+            if info.id == 0 {
+                continue;
+            }
+            if let Some(h) = tenants.resolve(info.id) {
+                let _ = h.stats();
+                snap.merge(h.registry().snapshot().prefixed(&info.name));
+            }
+        }
+    }
+    snap
 }
 
 /// A plaintext telemetry plane: binds its own port and answers every
@@ -779,7 +1063,23 @@ fn dispatch(req: Request, handle: &ServiceHandle, coalescer: &QueryCoalescer) ->
 /// clients.
 pub struct MetricsListener {
     listener: TcpListener,
-    handle: ServiceHandle,
+    source: ScrapeSource,
+}
+
+/// What a scrape reads: one service's registry, or a whole tenant
+/// registry (default unprefixed + every named collection `<name>_…`).
+enum ScrapeSource {
+    Single(ServiceHandle),
+    Tenants(Arc<Tenants>),
+}
+
+impl ScrapeSource {
+    fn snapshot(&self) -> MetricsSnapshot {
+        match self {
+            ScrapeSource::Single(handle) => snapshot_of(handle, None),
+            ScrapeSource::Tenants(t) => snapshot_of(&t.default_handle(), Some(t)),
+        }
+    }
 }
 
 impl MetricsListener {
@@ -789,7 +1089,17 @@ impl MetricsListener {
     ) -> Result<Self> {
         let listener = TcpListener::bind(&addr)
             .with_context(|| format!("binding metrics listener {addr:?}"))?;
-        Ok(MetricsListener { listener, handle })
+        Ok(MetricsListener { listener, source: ScrapeSource::Single(handle) })
+    }
+
+    /// Bind a scrape endpoint over a multi-tenant registry.
+    pub fn bind_tenants<A: ToSocketAddrs + std::fmt::Debug>(
+        addr: A,
+        tenants: Arc<Tenants>,
+    ) -> Result<Self> {
+        let listener = TcpListener::bind(&addr)
+            .with_context(|| format!("binding metrics listener {addr:?}"))?;
+        Ok(MetricsListener { listener, source: ScrapeSource::Tenants(tenants) })
     }
 
     /// The actually-bound address (resolves `:0` ephemeral ports).
@@ -803,17 +1113,18 @@ impl MetricsListener {
     /// refreshed gauges instead of blocking the accept loop.
     pub fn run(self) {
         let mut scrape_id = 0usize;
+        let source = Arc::new(self.source);
         for stream in self.listener.incoming() {
             let stream = match stream {
                 Ok(s) => s,
                 Err(_) => continue,
             };
             scrape_id += 1;
-            let handle = self.handle.clone();
+            let source = Arc::clone(&source);
             let _ = std::thread::Builder::new()
                 .name(format!("metrics-scrape-{scrape_id}"))
                 .spawn(move || {
-                    let _ = serve_scrape(stream, &handle);
+                    let _ = serve_scrape(stream, &source);
                 });
         }
     }
@@ -822,7 +1133,7 @@ impl MetricsListener {
 /// Answer one scrape connection: consume the request head (tolerating
 /// both bare-TCP probes and HTTP GETs), refresh the sketch gauges, and
 /// write the snapshot as an HTTP/1.0 response.
-fn serve_scrape(stream: TcpStream, handle: &ServiceHandle) -> std::io::Result<()> {
+fn serve_scrape(stream: TcpStream, source: &ScrapeSource) -> std::io::Result<()> {
     use std::io::{BufRead, Write};
     stream.set_read_timeout(Some(Duration::from_millis(500))).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
@@ -838,8 +1149,8 @@ fn serve_scrape(stream: TcpStream, handle: &ServiceHandle) -> std::io::Result<()
             Err(_) => break, // timeout or reset: answer anyway
         }
     }
-    let _ = handle.stats(); // refresh gauges; best-effort by design
-    let body = handle.registry().snapshot().to_prometheus();
+    // `snapshot()` refreshes each tenant's gauges; best-effort by design.
+    let body = source.snapshot().to_prometheus();
     let mut writer = BufWriter::new(stream);
     write!(
         writer,

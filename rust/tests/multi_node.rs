@@ -10,6 +10,10 @@
 //! the global shard space contiguously with equal-sized nodes, and each
 //! node's `n` / KDE window are the per-node slice of the single-process
 //! totals (the service divides both by its LOCAL shard count).
+//!
+//! Uses the deprecated flat client API on purpose: the un-scoped calls
+//! must keep hitting the default collection (id 0) with v5 semantics.
+#![allow(deprecated)]
 
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::Mutex;

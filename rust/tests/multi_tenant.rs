@@ -1,0 +1,451 @@
+//! The multi-tenancy contract, end to end: two named collections hosted
+//! in ONE process — loaded interleaved over the v6 wire through
+//! collection handles — must answer bit-identically to two ISOLATED
+//! single-tenant twin processes fed the same streams, with per-tenant
+//! point accounting (`inserts == stored + shed + refused` per
+//! collection, not just per process). Plus: crash recovery of a shared
+//! data_dir rehydrating every tenant, config precedence
+//! (defaults < file < flags), and the builder's typed rejections.
+
+use std::path::PathBuf;
+use std::thread;
+
+use sublinear_sketch::coordinator::{
+    tenant_config, AnnAnswer, CollectionSpec, ConfigError, ServiceConfig, ServiceHandle,
+    SketchService, Tenants,
+};
+use sublinear_sketch::durability::FsyncPolicy;
+use sublinear_sketch::net::{SketchClient, WireServer};
+use sublinear_sketch::util::rng::Rng;
+use sublinear_sketch::util::sync::Arc;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "sketchd_tenant_{tag}_{}_{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Clustered points so ANN queries mostly hit (same idiom as net_wire).
+fn points(n: usize, dim: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    let centers: Vec<Vec<f32>> = (0..8)
+        .map(|_| (0..dim).map(|_| rng.gaussian_f32() * 2.0).collect())
+        .collect();
+    (0..n)
+        .map(|_| {
+            let c = &centers[rng.below(8) as usize];
+            c.iter().map(|v| v + rng.gaussian_f32() * 0.1).collect()
+        })
+        .collect()
+}
+
+/// η = 0 so every point is stored: the same stream through any two
+/// services with the same derived config builds bit-identical state.
+fn spec(dim: u32, shards: u32, n_max: u64, window: u64, seed: u64) -> CollectionSpec {
+    CollectionSpec {
+        dim,
+        shards,
+        replicas: 1,
+        n_max,
+        window,
+        eta: 0.0,
+        overload: 0,
+        seed,
+    }
+}
+
+fn base_cfg(data_dir: Option<PathBuf>) -> ServiceConfig {
+    ServiceConfig::builder(8, 4_000)
+        .shards(2)
+        .eta(0.0)
+        .window(400)
+        .data_dir(data_dir)
+        .build()
+        .unwrap()
+}
+
+/// An isolated single-tenant twin of a hosted collection: spawned from
+/// the SAME `tenant_config` derivation the registry uses — the
+/// tenant-isolation contract says the hosted collection must be
+/// indistinguishable from this.
+fn spawn_twin(
+    base: &ServiceConfig,
+    spec: &CollectionSpec,
+) -> (ServiceHandle, thread::JoinHandle<()>) {
+    let cfg = tenant_config(base, spec, None).unwrap();
+    SketchService::spawn(cfg).unwrap()
+}
+
+fn assert_twin_parity(
+    twin: &ServiceHandle,
+    got_ann: &[Option<AnnAnswer>],
+    got_kde: &(Vec<f64>, Vec<f64>),
+    queries: &[Vec<f32>],
+) {
+    let want_ann = twin.query_batch(queries.to_vec()).unwrap();
+    assert_eq!(
+        got_ann,
+        &want_ann[..],
+        "hosted ANN answers must be bit-identical to the isolated twin"
+    );
+    assert!(
+        want_ann.iter().filter(|a| a.is_some()).count() >= queries.len() / 2,
+        "sanity: clustered queries must mostly hit"
+    );
+    let (want_sums, want_dens) = twin.kde_batch(queries.to_vec()).unwrap();
+    assert_eq!(got_kde.0, want_sums, "hosted KDE sums must be bit-identical");
+    assert_eq!(got_kde.1, want_dens);
+}
+
+#[test]
+fn two_hosted_collections_match_two_isolated_processes() {
+    let base = base_cfg(None);
+    let spec_a = spec(8, 2, 4_000, 400, 7);
+    let spec_b = spec(4, 3, 2_000, 300, 9); // different dim/shards/window
+    let tenants = Arc::new(Tenants::open(base.clone()).unwrap());
+    tenants.create("alpha", &spec_a).unwrap();
+    tenants.create("beta", &spec_b).unwrap();
+
+    let server = WireServer::bind_tenants("127.0.0.1:0", Arc::clone(&tenants)).unwrap();
+    let addr = server.local_addr().unwrap();
+    let srv_join = thread::spawn(move || server.run());
+
+    let pts_a = points(600, 8, 11);
+    let pts_b = points(500, 4, 22);
+    let queries_a = pts_a[..32].to_vec();
+    let queries_b = pts_b[..32].to_vec();
+
+    // Interleaved load: two connections alternate batches into the two
+    // collections, so both tenants' ingest is concurrently in flight.
+    let mut c1 = SketchClient::connect(addr).unwrap();
+    let mut c2 = SketchClient::connect(addr).unwrap();
+    let names: Vec<String> = c1
+        .list_collections()
+        .unwrap()
+        .into_iter()
+        .map(|c| c.name)
+        .collect();
+    assert_eq!(names, vec!["default", "alpha", "beta"]);
+    let mut ca = c1.collection("alpha").unwrap();
+    let mut cb = c2.collection("beta").unwrap();
+    assert_eq!(ca.dim(), 8);
+    assert_eq!(cb.dim(), 4);
+    let beta_id = cb.id();
+    let (mut acc_a, mut acc_b) = (0u64, 0u64);
+    let mut it_a = pts_a.chunks(100);
+    let mut it_b = pts_b.chunks(100);
+    loop {
+        let (na, nb) = (it_a.next(), it_b.next());
+        if na.is_none() && nb.is_none() {
+            break;
+        }
+        if let Some(chunk) = na {
+            acc_a += ca.insert_batch(chunk).unwrap();
+        }
+        if let Some(chunk) = nb {
+            acc_b += cb.insert_batch(chunk).unwrap();
+        }
+    }
+    ca.flush().unwrap();
+    cb.flush().unwrap();
+    assert_eq!(acc_a, 600);
+    assert_eq!(acc_b, 500);
+
+    let ann_a = ca.ann(&queries_a).unwrap();
+    let kde_a = ca.kde(&queries_a).unwrap();
+    let ann_b = cb.ann(&queries_b).unwrap();
+    let kde_b = cb.kde(&queries_b).unwrap();
+
+    // The isolated twins: one standalone service per spec, same
+    // derivation, same stream, same chunking.
+    let (twin_a, twin_a_join) = spawn_twin(&base, &spec_a);
+    let (twin_b, twin_b_join) = spawn_twin(&base, &spec_b);
+    for chunk in pts_a.chunks(100) {
+        assert_eq!(twin_a.insert_batch(chunk.to_vec()), chunk.len());
+    }
+    for chunk in pts_b.chunks(100) {
+        assert_eq!(twin_b.insert_batch(chunk.to_vec()), chunk.len());
+    }
+    twin_a.flush().unwrap();
+    twin_b.flush().unwrap();
+    assert_twin_parity(&twin_a, &ann_a, &kde_a, &queries_a);
+    assert_twin_parity(&twin_b, &ann_b, &kde_b, &queries_b);
+
+    // Per-tenant accounting: each collection reconciles on ITS OWN
+    // stream — cross-tenant bleed would break one of these identities.
+    let st_a = ca.stats().unwrap();
+    assert_eq!(st_a.inserts, 600, "alpha counts only alpha's stream");
+    assert_eq!(
+        st_a.stored_points as u64 + st_a.shed + st_a.refused_writes,
+        600,
+        "alpha: inserts == stored + shed + refused: {st_a:?}"
+    );
+    assert_eq!(st_a.ann_queries, 32);
+    let st_b = cb.stats().unwrap();
+    assert_eq!(st_b.inserts, 500, "beta counts only beta's stream");
+    assert_eq!(
+        st_b.stored_points as u64 + st_b.shed + st_b.refused_writes,
+        500,
+        "beta: inserts == stored + shed + refused: {st_b:?}"
+    );
+    // The default collection saw none of it.
+    assert_eq!(c1.stats_in(0).unwrap().inserts, 0, "default tenant untouched");
+
+    // Drop beta: its id must never serve again (ids are not reused), and
+    // alpha must be completely unaffected.
+    c2.drop_collection("beta").unwrap();
+    assert!(c2.ann_query_in(beta_id, &queries_b).is_err(), "dropped id is gone");
+    assert!(c2.collection("beta").is_err(), "dropped name is gone");
+    let mut ca1 = c1.collection("alpha").unwrap();
+    assert_eq!(ca1.ann(&queries_a).unwrap(), ann_a, "alpha unaffected by the drop");
+
+    c1.shutdown_server().unwrap();
+    drop(c1);
+    drop(c2);
+    srv_join.join().unwrap().unwrap();
+    tenants.shutdown();
+    twin_a.shutdown();
+    twin_a_join.join().unwrap();
+    twin_b.shutdown();
+    twin_b_join.join().unwrap();
+}
+
+#[test]
+fn crashed_registry_recovers_every_tenant() {
+    let root = tmp_dir("crash");
+    let base = base_cfg(Some(root.clone()));
+    let spec_a = spec(8, 2, 4_000, 400, 7);
+    let spec_b = spec(4, 3, 2_000, 300, 9);
+    let pts_d = points(200, 8, 31);
+    let pts_a = points(300, 8, 32);
+    let pts_b = points(240, 4, 33);
+    let queries_d = pts_d[..24].to_vec();
+    let queries_a = pts_a[..24].to_vec();
+    let queries_b = pts_b[..24].to_vec();
+
+    {
+        let tenants = Tenants::open(base.clone()).unwrap();
+        tenants.create("alpha", &spec_a).unwrap();
+        tenants.create("beta", &spec_b).unwrap();
+        let hd = tenants.default_handle();
+        let ha = tenants.resolve_name("alpha").unwrap().1;
+        let hb = tenants.resolve_name("beta").unwrap().1;
+        // Default tenant: root-dir layout (exactly what a v5 server wrote).
+        assert_eq!(hd.insert_batch(pts_d.clone()), 200);
+        hd.flush().unwrap();
+        // Alpha: checkpoint mid-stream, then a WAL-only tail.
+        assert_eq!(ha.insert_batch(pts_a[..150].to_vec()), 150);
+        ha.flush().unwrap();
+        assert_eq!(ha.checkpoint().unwrap(), 150);
+        assert_eq!(ha.insert_batch(pts_a[150..].to_vec()), 150);
+        ha.flush().unwrap();
+        // Beta: no checkpoint at all — recovery is pure WAL replay.
+        assert_eq!(hb.insert_batch(pts_b.clone()), 240);
+        hb.flush().unwrap();
+        // kill -9: every cloned handle must be gone before crash() joins.
+        drop(hd);
+        drop(ha);
+        drop(hb);
+        tenants.crash();
+    }
+
+    // Reopen the same root: the manifest must rehydrate every tenant
+    // with its original id, through the same per-dir recovery path.
+    let tenants = Tenants::open(base.clone()).unwrap();
+    let listed = tenants.list();
+    let named: Vec<(u32, String)> = listed.iter().map(|c| (c.id, c.name.clone())).collect();
+    assert_eq!(
+        named,
+        vec![
+            (0, "default".to_string()),
+            (1, "alpha".to_string()),
+            (2, "beta".to_string()),
+        ]
+    );
+
+    // Uninterrupted twins for all three tenants.
+    let twin_base = base.clone().to_builder().data_dir(None).build().unwrap();
+    let (twin_d, twin_d_join) = SketchService::spawn(twin_base).unwrap();
+    let (twin_a, twin_a_join) = spawn_twin(&base, &spec_a);
+    let (twin_b, twin_b_join) = spawn_twin(&base, &spec_b);
+    assert_eq!(twin_d.insert_batch(pts_d), 200);
+    assert_eq!(twin_a.insert_batch(pts_a), 300);
+    assert_eq!(twin_b.insert_batch(pts_b), 240);
+    twin_d.flush().unwrap();
+    twin_a.flush().unwrap();
+    twin_b.flush().unwrap();
+
+    let pairs = [
+        (twin_d.clone(), tenants.resolve(0).unwrap(), &queries_d),
+        (twin_a.clone(), tenants.resolve(1).unwrap(), &queries_a),
+        (twin_b.clone(), tenants.resolve(2).unwrap(), &queries_b),
+    ];
+    for (twin, recovered, queries) in &pairs {
+        let got_ann = recovered.query_batch(queries.to_vec()).unwrap();
+        let got_kde = recovered.kde_batch(queries.to_vec()).unwrap();
+        assert_twin_parity(twin, &got_ann, &got_kde, queries);
+        let want = twin.stats().unwrap();
+        let got = recovered.stats().unwrap();
+        assert_eq!(got.inserts, want.inserts, "per-tenant counters survive the crash");
+        assert_eq!(got.stored_points, want.stored_points);
+        assert_eq!(
+            got.stored_points as u64 + got.shed + got.refused_writes,
+            got.inserts,
+            "per-tenant accounting reconciles after recovery: {got:?}"
+        );
+    }
+    drop(pairs);
+
+    // The recovered tenants are live: continued ingest stays in lockstep.
+    let more = points(40, 8, 34);
+    let ra = tenants.resolve(1).unwrap();
+    assert_eq!(twin_a.insert_batch(more.clone()), 40);
+    assert_eq!(ra.insert_batch(more), 40);
+    twin_a.flush().unwrap();
+    ra.flush().unwrap();
+    let got_ann = ra.query_batch(queries_a.clone()).unwrap();
+    let got_kde = ra.kde_batch(queries_a.clone()).unwrap();
+    assert_twin_parity(&twin_a, &got_ann, &got_kde, &queries_a);
+    drop(ra);
+
+    tenants.shutdown();
+    twin_d.shutdown();
+    twin_d_join.join().unwrap();
+    twin_a.shutdown();
+    twin_a_join.join().unwrap();
+    twin_b.shutdown();
+    twin_b_join.join().unwrap();
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn per_tenant_shed_accounting_reconciles() {
+    // A shedding tenant under pressure: the identity must hold on ITS
+    // registry while the default tenant's counters stay at zero.
+    let base = ServiceConfig::builder(8, 50_000)
+        .queue_cap(2)
+        .eta(0.0)
+        .build()
+        .unwrap();
+    let tenants = Tenants::open(base).unwrap();
+    let mut s = spec(8, 1, 50_000, 1024, 7);
+    s.overload = 1; // shed
+    tenants.create("shedder", &s).unwrap();
+    let h = tenants.resolve_name("shedder").unwrap().1;
+    let pts = points(4_000, 8, 44);
+    let mut accepted = 0u64;
+    for chunk in pts.chunks(250) {
+        accepted += h.insert_batch(chunk.to_vec()) as u64;
+    }
+    h.flush().unwrap();
+    let st = h.stats().unwrap();
+    assert_eq!(st.inserts, 4_000);
+    assert_eq!(
+        st.stored_points as u64 + st.shed + st.refused_writes,
+        4_000,
+        "a shed batch must count all its points: {st:?}"
+    );
+    assert_eq!(accepted, 4_000 - st.shed, "acks reconcile with shed");
+    assert_eq!(tenants.default_handle().stats().unwrap().inserts, 0);
+    drop(h);
+    tenants.shutdown();
+}
+
+#[test]
+fn config_precedence_is_defaults_then_file_then_flags() {
+    let dir = tmp_dir("cfg");
+    let path = dir.join("sketchd.toml");
+    std::fs::write(
+        &path,
+        "[service]\nshards = 5\nqueue_cap = 64\n\n[ann]\neta = 0.25\n",
+    )
+    .unwrap();
+
+    // Layer 2: the file overrides defaults; what it omits stays default.
+    let from_file = ServiceConfig::from_file(&path, 8, 1_000).unwrap();
+    assert_eq!(from_file.shards, 5);
+    assert_eq!(from_file.queue_cap, 64);
+    assert_eq!(from_file.ann.eta, 0.25);
+    assert_eq!(from_file.replicas, 1, "file omissions keep defaults");
+
+    // Layer 3: flags overlay the file — last write wins, untouched file
+    // values survive. This is exactly the `serve --config f --shards 7`
+    // path in main.rs.
+    let cfg = from_file.to_builder().shards(7).eta(0.0).build().unwrap();
+    assert_eq!(cfg.shards, 7, "flag beats file");
+    assert_eq!(cfg.ann.eta, 0.0, "flag beats file");
+    assert_eq!(cfg.queue_cap, 64, "untouched file values survive the overlay");
+
+    // Layer 1: no file, no flags — pure defaults.
+    let dflt = ServiceConfig::builder(8, 1_000).build().unwrap();
+    assert_eq!(dflt.shards, 4);
+    assert_eq!(dflt.queue_cap, 1_024);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn builder_rejects_each_bad_combo_with_a_typed_error() {
+    let b = || ServiceConfig::builder(8, 1_000);
+    assert_eq!(
+        ServiceConfig::builder(0, 1_000).build().unwrap_err(),
+        ConfigError::ZeroDim
+    );
+    assert_eq!(b().shards(0).build().unwrap_err(), ConfigError::ZeroShards);
+    assert_eq!(b().replicas(0).build().unwrap_err(), ConfigError::ZeroReplicas);
+    assert_eq!(b().queue_cap(0).build().unwrap_err(), ConfigError::ZeroQueueCap);
+    assert_eq!(
+        ServiceConfig::builder(8, 0).build().unwrap_err(),
+        ConfigError::ZeroNMax
+    );
+    assert_eq!(b().eta(1.5).build().unwrap_err(), ConfigError::BadEta(1.5));
+    assert_eq!(b().eta(-0.1).build().unwrap_err(), ConfigError::BadEta(-0.1));
+
+    let mut ann = ServiceConfig::default_for(8, 1_000).ann;
+    ann.c = 1.0;
+    assert_eq!(b().ann(ann).build().unwrap_err(), ConfigError::BadApproxC(1.0));
+    let mut ann = ServiceConfig::default_for(8, 1_000).ann;
+    ann.r = 0.0;
+    assert_eq!(
+        b().ann(ann).build().unwrap_err(),
+        ConfigError::NonPositiveRadius { r: 0.0, w: 4.0 }
+    );
+
+    let mut kde = ServiceConfig::default_for(8, 1_000).kde;
+    kde.eps_eh = 0.0;
+    assert_eq!(b().kde(kde).build().unwrap_err(), ConfigError::BadEpsEh(0.0));
+    let mut kde = ServiceConfig::default_for(8, 1_000).kde;
+    kde.rows = 0;
+    assert_eq!(b().kde(kde).build().unwrap_err(), ConfigError::ZeroKdeShape);
+    assert_eq!(b().window(0).build().unwrap_err(), ConfigError::ZeroKdeShape);
+
+    // Durability knobs without a data_dir are a contradiction, not a
+    // silently ignored default.
+    assert_eq!(
+        b().fsync(FsyncPolicy::Always).build().unwrap_err(),
+        ConfigError::DurabilityWithoutDataDir("fsync")
+    );
+    assert_eq!(
+        b().checkpoint_every_points(Some(5_000)).build().unwrap_err(),
+        ConfigError::DurabilityWithoutDataDir("checkpoint_every_points")
+    );
+    assert_eq!(
+        b().checkpoint_every_secs(Some(30)).build().unwrap_err(),
+        ConfigError::DurabilityWithoutDataDir("checkpoint_every_secs")
+    );
+    // ... and valid once the data_dir exists.
+    let dir = tmp_dir("builder_ok");
+    let ok = b()
+        .data_dir(Some(dir.clone()))
+        .fsync(FsyncPolicy::Always)
+        .checkpoint_every_points(Some(5_000))
+        .build();
+    assert!(ok.is_ok());
+    std::fs::remove_dir_all(&dir).ok();
+}

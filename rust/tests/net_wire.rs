@@ -2,6 +2,14 @@
 //! serving layer must be indistinguishable from calling `SketchService`
 //! in-process with the same seed — identical ANN answers, identical KDE
 //! sums, and point-denominated stats that reconcile with the stream.
+//!
+//! Deliberately written against the DEPRECATED flat client API
+//! (`insert_batch`/`ann_query`/... without a collection): these tests
+//! double as the v5-compatibility contract — a client that never names
+//! a collection must keep exactly its old semantics against a v6
+//! server (everything lands in the default collection, id 0).
+//! Collection-scoped coverage lives in `tests/multi_tenant.rs`.
+#![allow(deprecated)]
 
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::thread;

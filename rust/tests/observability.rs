@@ -2,6 +2,10 @@
 //! (`Metrics` op, protocol v4), per-stage query tracing, the Prometheus
 //! scrape endpoint, and the counter-reconciliation identities the
 //! registry must preserve under concurrent load.
+//!
+//! Uses the deprecated flat client API on purpose: the un-scoped calls
+//! must keep hitting the default collection (id 0) with v5 semantics.
+#![allow(deprecated)]
 
 use std::io::{Read as _, Write as _};
 use std::net::TcpStream;

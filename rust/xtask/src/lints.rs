@@ -300,10 +300,14 @@ fn no_raw_print(f: &SourceFile, out: &mut Vec<Violation>) {
 }
 
 /// `frame-parity`: every wire opcode and frame variant must be wired
-/// through all of its layers — encoder, decoder, and (for requests) the
-/// server dispatch — so a new frame cannot half-exist. Token-level:
-/// references must use the `op::NAME` / `Request::Variant` qualified
-/// forms, which is how `net/frame.rs` and `net/server.rs` are written.
+/// through all of its layers — encoder, decoder, the server dispatch
+/// (for requests), and the client consumer (for responses) — so a new
+/// frame cannot half-exist. The client leg is what catches the
+/// multi-tenant drift mode: a response like `Response::Collections`
+/// that the server can emit but no `SketchClient` method can interpret.
+/// Token-level: references must use the `op::NAME` / `Request::Variant`
+/// qualified forms, which is how `net/frame.rs`, `net/server.rs`, and
+/// `net/client.rs` are written.
 fn frame_parity(files: &[SourceFile], out: &mut Vec<Violation>) {
     let Some(frame) = files.iter().find(|f| f.rel == "src/net/frame.rs") else {
         return; // trees without a net layer have nothing to check
@@ -332,6 +336,7 @@ fn frame_parity(files: &[SourceFile], out: &mut Vec<Violation>) {
         });
     }
     let server = files.iter().find(|f| f.rel == "src/net/server.rs");
+    let client = files.iter().find(|f| f.rel == "src/net/client.rs");
     for enum_name in ["Request", "Response"] {
         let Some((lo, hi)) = block_after(&frame.text, &format!("enum {enum_name}")) else {
             out.push(Violation {
@@ -366,6 +371,20 @@ fn frame_parity(files: &[SourceFile], out: &mut Vec<Violation>) {
                         lint: "frame-parity",
                         msg: format!(
                             "request `{qualified}` has no dispatch arm in src/net/server.rs"
+                        ),
+                    });
+                }
+            }
+            if enum_name == "Response" {
+                let consumed =
+                    client.is_some_and(|c| !ident_bounded(&c.text, &qualified).is_empty());
+                if !consumed {
+                    out.push(Violation {
+                        file: frame.rel.clone(),
+                        line: line_of(&frame.text, lo + pos),
+                        lint: "frame-parity",
+                        msg: format!(
+                            "response `{qualified}` has no consumer in src/net/client.rs"
                         ),
                     });
                 }

@@ -77,6 +77,15 @@ mod tests {
 }
 ";
 
+const GOOD_CLIENT: &str = "
+pub fn consume(resp: super::frame::Response) -> usize {
+    match resp {
+        super::frame::Response::Pong => 0,
+        super::frame::Response::AnnPartials => 1,
+    }
+}
+";
+
 const GOOD_STATS: &str = "
 use crate::util::sync::atomic::{AtomicU64, Ordering};
 
@@ -94,7 +103,9 @@ impl Counters {
 /// `Ghost` has no encode arm, no decode constructor, and no dispatch
 /// arm; `ORPHAN` is a dead opcode byte; `AnnPartial` is the v5 trap —
 /// fully wired through encode AND decode but never dispatched, the
-/// exact drift mode a new partial op introduces.
+/// exact drift mode a new partial op introduces. `Stale` is the v6
+/// trap, mirrored: a response fully wired through encode AND decode
+/// that no client method ever consumes.
 const BAD_FRAME: &str = "
 mod op {
     pub(super) const PING: u8 = 1;
@@ -110,6 +121,7 @@ pub enum Request {
 
 pub enum Response {
     Pong,
+    Stale,
 }
 
 pub fn encode(req: &Request) -> u8 {
@@ -131,11 +143,27 @@ pub fn decode(byte: u8) -> Option<Request> {
 pub fn encode_resp(resp: &Response) -> u8 {
     match resp {
         Response::Pong => 2,
+        Response::Stale => 3,
     }
 }
 
 pub fn decode_resp(byte: u8) -> Option<Response> {
-    (byte == 2).then_some(Response::Pong)
+    match byte {
+        2 => Some(Response::Pong),
+        3 => Some(Response::Stale),
+        _ => None,
+    }
+}
+";
+
+/// Consumes `Pong` only: the wildcard arm swallows `Stale`, so the
+/// seeded no-consumer violation must still fire.
+const BAD_CLIENT: &str = "
+pub fn consume(resp: super::frame::Response) -> usize {
+    match resp {
+        super::frame::Response::Pong => 0,
+        _ => 1,
+    }
 }
 ";
 
@@ -210,6 +238,7 @@ fn check(base: &Path) -> Result<usize, String> {
             ("src/util/sync.rs", FACADE),
             ("src/net/frame.rs", GOOD_FRAME),
             ("src/net/server.rs", GOOD_SERVER),
+            ("src/net/client.rs", GOOD_CLIENT),
             ("src/stats.rs", GOOD_STATS),
         ],
     )
@@ -226,6 +255,7 @@ fn check(base: &Path) -> Result<usize, String> {
             ("src/util/sync.rs", FACADE),
             ("src/net/frame.rs", BAD_FRAME),
             ("src/net/server.rs", BAD_SERVER),
+            ("src/net/client.rs", BAD_CLIENT),
             ("src/stats.rs", BAD_STATS),
             ("src/ingest.rs", BAD_SYNC_USER),
             ("src/durability/io.rs", BAD_IO),
@@ -239,6 +269,7 @@ fn check(base: &Path) -> Result<usize, String> {
         ("frame-parity", "src/net/frame.rs", "decode constructor"),
         ("frame-parity", "src/net/frame.rs", "`Request::Ghost` has no dispatch arm"),
         ("frame-parity", "src/net/frame.rs", "`Request::AnnPartial` has no dispatch arm"),
+        ("frame-parity", "src/net/frame.rs", "`Response::Stale` has no consumer"),
         ("relaxed-allowlist", "src/stats.rs", "sneaky"),
         ("no-unwrap", "src/net/server.rs", ".unwrap()"),
         ("no-unwrap", "src/durability/io.rs", ".expect("),
